@@ -1,0 +1,88 @@
+//! ESC-50 audio–text retrieval: the paper's 2816-dim concatenation path
+//! (BERT 768 ⊕ PANNs-CNN14 2048).
+//!
+//! Exercises the highest-dimensional embedding the paper evaluates, plans a
+//! reduced dimension, and scores class-consistency of retrieval before and
+//! after OPDR (same-class neighbors are the semantic signal in ESC-50).
+//!
+//! Run: `make artifacts && cargo run --release --example audio_retrieval`
+
+use opdr::data::records::generate_records;
+use opdr::data::DatasetKind;
+use opdr::embed::{embed_records, HashEncoder, ModelKind, RuntimeEncoder};
+use opdr::metrics::Metric;
+use opdr::opdr::Planner;
+use opdr::reduction::{Pca, ReducerKind};
+use opdr::runtime::Engine;
+
+const CLIPS: usize = 400; // of the 2000 in ESC-50
+
+fn main() -> opdr::Result<()> {
+    let records = generate_records(DatasetKind::Esc50, CLIPS, 50);
+    println!("ESC-50-like corpus: {CLIPS} audio clips across 50 classes");
+
+    let engine = Engine::new("artifacts");
+    let set = match &engine {
+        Ok(eng) => {
+            println!("embedding with BERT+PANNs towers via PJRT");
+            embed_records(&RuntimeEncoder::new(eng), ModelKind::BertPanns, &records, "esc50")?
+        }
+        Err(e) => {
+            println!("embedding with hash fallback ({e})");
+            embed_records(&HashEncoder::default(), ModelKind::BertPanns, &records, "esc50")?
+        }
+    };
+    println!("embeddings: {} × {} (BERT 768 ⊕ PANNs 2048)", set.len(), set.dim());
+
+    // Class consistency of full-dim KNN.
+    let k = 5;
+    let consistency = |data: &[f32], dim: usize| -> opdr::Result<f64> {
+        let sets = opdr::knn::knn_indices_all(data, dim, k, Metric::Cosine)?;
+        let mut same = 0usize;
+        let mut total = 0usize;
+        for (i, nb) in sets.iter().enumerate() {
+            for &j in nb {
+                total += 1;
+                if records[i].class == records[j].class {
+                    same += 1;
+                }
+            }
+        }
+        Ok(same as f64 / total as f64)
+    };
+    let full_consistency = consistency(set.data(), set.dim())?;
+    println!("full-dim  ({}): same-class fraction of {k}-NN = {full_consistency:.3}", set.dim());
+
+    // OPDR plan + reduce.
+    let planner =
+        Planner::calibrate(set.data(), set.dim(), k, Metric::Cosine, ReducerKind::Pca, 7)?;
+    let fit = planner.fit();
+    println!(
+        "calibrated closed form: A = {:.3}·ln(n/m) + {:.3} (R² = {:.3})",
+        fit.c0, fit.c1, fit.r_squared
+    );
+    let planned = planner.dim_for_accuracy(0.9, set.len()).min(set.dim());
+    let model = Pca::new().fit(set.data(), set.dim(), planned)?;
+    let reduced = model.project(set.data())?;
+    let red_consistency = consistency(&reduced, planned)?;
+    println!("opdr-reduced ({planned}): same-class fraction of {k}-NN = {red_consistency:.3}");
+
+    let order_acc = opdr::opdr::accuracy(
+        set.data(),
+        set.dim(),
+        &reduced,
+        planned,
+        k,
+        Metric::Cosine,
+    )?;
+    println!(
+        "order-preserving accuracy A_{k} = {order_acc:.3} at {:.1}× compression ({} → {planned})",
+        set.dim() as f64 / planned as f64,
+        set.dim()
+    );
+    assert!(
+        red_consistency > full_consistency - 0.1,
+        "reduction destroyed semantic neighborhoods"
+    );
+    Ok(())
+}

@@ -1,0 +1,166 @@
+//! END-TO-END DRIVER — the full three-layer stack on a realistic workload.
+//!
+//! Pipeline (everything after `make artifacts` is pure Rust + PJRT):
+//!   1. synthesize a Flickr30k-like multimodal corpus (raw text+image records);
+//!   2. embed it through the AOT-compiled CLIP towers (L2/L1 via PJRT);
+//!   3. ingest into the serving coordinator (L3);
+//!   4. OPDR: calibrate → plan dim(Y) for A=0.9 → reduce the collection;
+//!   5. serve a batched query storm at full dim and at reduced dim;
+//!   6. report recall@10, latency percentiles and throughput for both.
+//!
+//! This is the run recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! Run: `make artifacts && cargo run --release --example multimodal_retrieval`
+
+use opdr::config::ServeConfig;
+use opdr::coordinator::Coordinator;
+use opdr::data::records::generate_records;
+use opdr::data::DatasetKind;
+use opdr::embed::{embed_records, Encoder, HashEncoder, ModelKind, RuntimeEncoder};
+use opdr::metrics::Metric;
+use opdr::runtime::Engine;
+use opdr::util::Stopwatch;
+
+const CORPUS: usize = 1500;
+const QUERIES: usize = 400;
+const K: usize = 10;
+
+fn main() -> opdr::Result<()> {
+    // --- 1. Raw multimodal corpus ------------------------------------------
+    let records = generate_records(DatasetKind::Flickr30k, CORPUS, 2026);
+    println!("corpus: {CORPUS} flickr-like image-text records");
+
+    // --- 2. Embed through the AOT towers ------------------------------------
+    let engine = Engine::new("artifacts");
+    let sw = Stopwatch::start();
+    let set = match &engine {
+        Ok(eng) => {
+            let enc = RuntimeEncoder::new(eng);
+            println!("encoder backend: {} (CLIP text+image towers via PJRT)", enc.backend_name());
+            embed_records(&enc, ModelKind::Clip, &records, "flickr")?
+        }
+        Err(e) => {
+            println!("encoder backend: hash-fallback (PJRT unavailable: {e})");
+            embed_records(&HashEncoder::default(), ModelKind::Clip, &records, "flickr")?
+        }
+    };
+    println!(
+        "embedded {} records to {}-dim CLIP vectors in {:.1}s",
+        set.len(),
+        set.dim(),
+        sw.elapsed_secs()
+    );
+
+    // --- 3. Ingest into the coordinator -------------------------------------
+    let cfg = ServeConfig { workers: 4, max_batch: 32, max_wait_ms: 2, ..Default::default() };
+    let coord = Coordinator::start(cfg)?;
+    coord.create_collection("flickr", set.dim(), Metric::SqEuclidean)?;
+    coord.ingest("flickr", set.data().to_vec())?;
+
+    // Ground truth at full dimension for recall scoring.
+    let mut truth = Vec::with_capacity(QUERIES);
+    for qi in 0..QUERIES {
+        truth.push(opdr::knn::knn_indices(
+            set.vector(qi % CORPUS),
+            set.data(),
+            set.dim(),
+            K,
+            Metric::SqEuclidean,
+        )?);
+    }
+
+    // --- 5a. Query storm at FULL dimension -----------------------------------
+    let full = storm(&coord, &set, "full-dim")?;
+
+    // --- 4. OPDR reduction ----------------------------------------------------
+    let sw = Stopwatch::start();
+    let planned = coord.build_reduced("flickr", 0.9, K)?;
+    println!(
+        "\nOPDR: calibrated + planned dim(Y) = {planned} (from {}) in {:.1}s",
+        set.dim(),
+        sw.elapsed_secs()
+    );
+
+    // --- 5b. Query storm at REDUCED dimension ---------------------------------
+    let reduced = storm(&coord, &set, "opdr-reduced")?;
+
+    // --- 6. Report -------------------------------------------------------------
+    let recall = |results: &[Vec<usize>]| -> f64 {
+        let mut hits = 0usize;
+        for (t, got) in truth.iter().zip(results) {
+            let gset: std::collections::HashSet<usize> = got.iter().copied().collect();
+            hits += t.iter().filter(|n| gset.contains(&n.index)).count();
+        }
+        hits as f64 / (truth.len() * K) as f64
+    };
+    println!("\n== end-to-end summary (recall vs full-dim exact KNN) ==");
+    println!(
+        "full-dim    : recall@{K} = {:.3}  p50 = {}  p99 = {}  throughput = {:.0} qps",
+        recall(&full.hits),
+        opdr::util::timer::fmt_duration(full.p50),
+        opdr::util::timer::fmt_duration(full.p99),
+        full.qps
+    );
+    println!(
+        "opdr-reduced: recall@{K} = {:.3}  p50 = {}  p99 = {}  throughput = {:.0} qps",
+        recall(&reduced.hits),
+        opdr::util::timer::fmt_duration(reduced.p50),
+        opdr::util::timer::fmt_duration(reduced.p99),
+        reduced.qps
+    );
+    println!(
+        "speedup = {:.2}×  at recall {:.3}",
+        reduced.qps / full.qps,
+        recall(&reduced.hits)
+    );
+    println!("\n{}", coord.stats()?);
+    coord.shutdown();
+    Ok(())
+}
+
+struct StormResult {
+    hits: Vec<Vec<usize>>,
+    p50: std::time::Duration,
+    p99: std::time::Duration,
+    qps: f64,
+}
+
+fn storm(
+    coord: &Coordinator,
+    set: &opdr::data::EmbeddingSet,
+    label: &str,
+) -> opdr::Result<StormResult> {
+    let sw = Stopwatch::start();
+    let mut latencies = Vec::with_capacity(QUERIES);
+    let mut hits = Vec::with_capacity(QUERIES);
+    // Pipelined submission in windows to exercise the dynamic batcher.
+    let window = 64;
+    let mut qi = 0;
+    while qi < QUERIES {
+        let end = (qi + window).min(QUERIES);
+        let mut rxs = Vec::with_capacity(end - qi);
+        let t0 = Stopwatch::start();
+        for i in qi..end {
+            rxs.push(coord.search_async("flickr", set.vector(i % CORPUS).to_vec(), K)?);
+        }
+        for rx in rxs {
+            let res = rx
+                .recv()
+                .map_err(|_| opdr::OpdrError::coordinator("dropped"))??;
+            hits.push(res.neighbors.iter().map(|n| n.index).collect::<Vec<usize>>());
+        }
+        latencies.push(t0.elapsed_ns() / (end - qi) as f64);
+        qi = end;
+    }
+    let secs = sw.elapsed_secs();
+    let mut sorted = latencies.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p = |q: f64| {
+        std::time::Duration::from_nanos(opdr::util::float::percentile_sorted(&sorted, q) as u64)
+    };
+    println!(
+        "storm [{label}]: {QUERIES} queries in {secs:.2}s ({:.0} qps)",
+        QUERIES as f64 / secs
+    );
+    Ok(StormResult { hits, p50: p(0.5), p99: p(0.99), qps: QUERIES as f64 / secs })
+}

@@ -1,0 +1,43 @@
+//! Planner tour: calibrate the closed-form fit on each of the paper's seven
+//! datasets and print the planned dimensionalities for a range of accuracy
+//! targets — the practical artifact of the paper (`f ∘ g` composition).
+//!
+//! Run: `cargo run --release --example opdr_planner`
+
+use opdr::data::{synth, DatasetKind};
+use opdr::metrics::Metric;
+use opdr::opdr::Planner;
+use opdr::reduction::ReducerKind;
+use opdr::report::Table;
+
+fn main() -> opdr::Result<()> {
+    let m = 120;
+    let dim = 256;
+    let k = 5;
+    let targets = [0.7, 0.8, 0.9, 0.95];
+
+    let mut table = Table::new(&["dataset", "c0", "c1", "R²", "A=0.7", "A=0.8", "A=0.9", "A=0.95"]);
+    for kind in DatasetKind::ALL {
+        let set = synth::generate(kind, m, dim, 42);
+        let planner =
+            Planner::calibrate(set.data(), dim, k, Metric::SqEuclidean, ReducerKind::Pca, 42)?;
+        let fit = planner.fit();
+        let mut row = vec![
+            kind.name().to_string(),
+            format!("{:.3}", fit.c0),
+            format!("{:.3}", fit.c1),
+            format!("{:.3}", fit.r_squared),
+        ];
+        for &t in &targets {
+            row.push(planner.dim_for_accuracy(t, m).min(dim).to_string());
+        }
+        table.row(&row);
+    }
+    println!("planned dim(Y) at m={m}, original dim={dim}, k={k}:");
+    println!("{}", table.render());
+    println!(
+        "reading: structured (materials) sets plan far smaller dims than diverse\n\
+         web corpora at the same accuracy target — the paper's central practical point."
+    );
+    Ok(())
+}

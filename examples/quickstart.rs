@@ -1,0 +1,56 @@
+//! Quickstart: the OPDR recipe in ~40 lines.
+//!
+//! 1. Get embeddings (here: a synthetic materials-science set).
+//! 2. Sweep accuracy vs n/m and fit the closed form A = c0·ln(n/m) + c1.
+//! 3. Invert it: plan dim(Y) for a target accuracy.
+//! 4. Reduce with PCA at the planned dim and verify the measured accuracy.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use opdr::data::{synth, DatasetKind};
+use opdr::metrics::Metric;
+use opdr::opdr::{accuracy, fit_log_model, sweep::SweepConfig, Planner};
+use opdr::reduction::ReducerKind;
+
+fn main() -> opdr::Result<()> {
+    // 1. Embeddings: 120 points, 256-dim (synthetic stand-in for CLIP
+    //    vectors of Materials Project records — see DESIGN.md §1).
+    let set = synth::generate(DatasetKind::MaterialsObservable, 120, 256, 42);
+    println!("dataset: {} ({} vectors, dim {})", set.label(), set.len(), set.dim());
+
+    // 2. Sweep + fit.
+    let cfg = SweepConfig {
+        k: 5,
+        metric: Metric::SqEuclidean,
+        reducer: ReducerKind::Pca,
+        sample_sizes: vec![30, 60, 90],
+        dims_per_m: 10,
+        repeats: 2,
+        seed: 42,
+    };
+    let curve = opdr::opdr::accuracy_curve(&set, &cfg)?;
+    let fit = fit_log_model(curve.points())?;
+    println!(
+        "closed form: A_k = {:.4}·ln(n/m) + {:.4}   (R² = {:.3} over {} sweep points)",
+        fit.c0, fit.c1, fit.r_squared, fit.n_points
+    );
+
+    // 3. Plan dim(Y) for a 0.9 target at m = 90.
+    let planner = Planner::from_fit(fit);
+    let m = 90;
+    let planned = planner.dim_for_accuracy(0.9, m).min(set.dim());
+    println!("planned dim(Y) for A=0.9 at m={m}: {planned}");
+
+    // 4. Reduce and verify.
+    let subset = set.subset(&(0..m).collect::<Vec<_>>())?;
+    let reduced = ReducerKind::Pca.build(0).fit_transform(subset.data(), set.dim(), planned)?;
+    let measured = accuracy(subset.data(), set.dim(), &reduced, planned, cfg.k, cfg.metric)?;
+    println!("measured accuracy at planned dim: {measured:.3} (target 0.9)");
+    println!(
+        "dimension reduction: {} → {} ({:.1}× smaller vectors)",
+        set.dim(),
+        planned,
+        set.dim() as f64 / planned as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,46 @@
+"""Layer-1 Pallas kernel: Gram accumulation XᵀX.
+
+The PCA-fit hot spot: the `covariance` artifact centers columns in the L2
+graph and calls this kernel for the [M, D] → [D, D] accumulation. Tiling is
+the transpose-shaped variant of `projection`: grid over (D/BD, D/BD) output
+tiles with the full M contraction per cell. Working set at M=128, BD=128:
+two 128·128·4 input tiles + one output tile ≈ 200 KiB.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BD = 128
+
+
+def _gram_kernel(xi_ref, xj_ref, o_ref):
+    """One (BD, BD) tile of XᵀX: xiᵀ @ xj over the full M axis."""
+    o_ref[...] = jax.lax.dot_general(
+        xi_ref[...], xj_ref[...], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@jax.jit
+def gram(x):
+    """Tiled XᵀX via pallas_call. x: [M, D] → [D, D]."""
+    m, d = x.shape
+    bd = min(BD, d)
+    assert d % bd == 0, f"D={d} not a multiple of {bd}"
+    grid = (d // bd, d // bd)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            # Column block i (full M rows).
+            pl.BlockSpec((m, bd), lambda i, j: (0, i)),
+            # Column block j.
+            pl.BlockSpec((m, bd), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bd, bd), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d, d), jnp.float32),
+        interpret=True,
+        # x is passed twice so each grid cell can stream two independent
+        # column blocks (i and j) through VMEM.
+    )(x.astype(jnp.float32), x.astype(jnp.float32))

@@ -1,0 +1,110 @@
+"""Layer-1 Pallas kernel: tiled fused pairwise distances.
+
+The query hot spot of the whole system: distances between a query batch
+[Q, D] and the base set [N, D]. TPU-minded design (see DESIGN.md
+§Hardware-Adaptation):
+
+* the N dimension streams through the grid in `BN`-row tiles, so HBM→VMEM
+  traffic is O(Q·D + N·D) instead of O(Q·N·D);
+* squared-Euclidean uses the MXU-friendly expansion ‖q‖² − 2·q·bᵀ + ‖b‖²
+  (one [BQ,D]×[D,BN] matmul per tile — systolic-array work, not lane-wise
+  subtraction);
+* cosine reuses the same matmul with norm corrections;
+* Manhattan has no matmul form: it broadcasts in-register over the tile,
+  which bounds the tile choice (BQ·BN·D elements live in VMEM).
+
+VMEM budget per grid cell at the default artifact shape (Q=32, N=1024,
+D=1024, BQ=32, BN=256, f32):
+  q tile 32·1024·4 = 128 KiB, b tile 256·1024·4 = 1 MiB, out 32 KiB
+  → ≈1.2 MiB ≪ 16 MiB VMEM; manhattan broadcast adds 32·256·1024·4 = 32 MiB
+  which is why manhattan uses BN=64 (8 MiB) instead.
+
+All kernels run with `interpret=True` (the CPU PJRT plugin cannot execute
+Mosaic custom-calls); structure, not interpret-mode wallclock, is what the
+perf pass optimizes at L1.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes (see VMEM budget above).
+BQ = 32
+BN = 256
+BN_MANHATTAN = 64
+
+
+def _sqeuclidean_kernel(q_ref, b_ref, o_ref):
+    """One (BQ, BN) output tile of squared-Euclidean distances."""
+    q = q_ref[...]                                   # [BQ, D]
+    b = b_ref[...]                                   # [BN, D]
+    qn = jnp.sum(q * q, axis=1, keepdims=True)       # [BQ, 1]
+    bn = jnp.sum(b * b, axis=1, keepdims=True).T     # [1, BN]
+    # MXU work: [BQ, D] @ [D, BN].
+    qb = jax.lax.dot_general(
+        q, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    o_ref[...] = jnp.maximum(qn - 2.0 * qb + bn, 0.0)
+
+
+def _cosine_kernel(q_ref, b_ref, o_ref):
+    """One (BQ, BN) tile of cosine distances."""
+    q = q_ref[...]
+    b = b_ref[...]
+    qn = jnp.sqrt(jnp.sum(q * q, axis=1, keepdims=True))
+    bn = jnp.sqrt(jnp.sum(b * b, axis=1, keepdims=True)).T
+    dot = jax.lax.dot_general(
+        q, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    denom = qn * bn
+    cos = jnp.where(denom > 1e-12, dot / jnp.maximum(denom, 1e-12), 0.0)
+    o_ref[...] = 1.0 - cos
+
+
+def _manhattan_kernel(q_ref, b_ref, o_ref):
+    """One (BQ, BN) tile of L1 distances (broadcast, no matmul form)."""
+    q = q_ref[...]                                   # [BQ, D]
+    b = b_ref[...]                                   # [BN, D]
+    o_ref[...] = jnp.sum(jnp.abs(q[:, None, :] - b[None, :, :]), axis=-1)
+
+
+_KERNELS = {
+    "sqeuclidean": (_sqeuclidean_kernel, BN),
+    "cosine": (_cosine_kernel, BN),
+    "manhattan": (_manhattan_kernel, BN_MANHATTAN),
+}
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def pairwise_distances(q, b, metric="sqeuclidean"):
+    """Tiled pairwise distance matrix via pallas_call.
+
+    q: [Q, D], b: [N, D] → [Q, N]. Q must be a multiple of BQ (or smaller
+    than BQ, in which case a single row-tile is used); N must be a multiple
+    of the metric's BN (or smaller).
+    """
+    kernel, bn = _KERNELS[metric]
+    q_rows, d = q.shape
+    n_rows, d2 = b.shape
+    assert d == d2, f"dim mismatch {d} vs {d2}"
+    bq = min(BQ, q_rows)
+    bn = min(bn, n_rows)
+    assert q_rows % bq == 0, f"Q={q_rows} not a multiple of {bq}"
+    assert n_rows % bn == 0, f"N={n_rows} not a multiple of {bn}"
+
+    grid = (q_rows // bq, n_rows // bn)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # Query tile: advance with grid axis 0, full D.
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            # Base tile: advance with grid axis 1 — streams N through VMEM.
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((q_rows, n_rows), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(q.astype(jnp.float32), b.astype(jnp.float32))

@@ -1,0 +1,54 @@
+"""Layer-1 Pallas kernel: tiled dense projection (X @ W).
+
+Used twice in the stack:
+* the `pca_project` artifact (projecting full-dim embeddings into the OPDR
+  space with the fitted PCA components);
+* the output projection of every encoder tower in `model.py`.
+
+Tiling: grid over (M/BM, N/BN) output tiles with the full K-contraction held
+in VMEM per cell — K ≤ 2048 in all our shapes, so a (BM,K)+(K,BN)+(BM,BN)
+working set at BM=BN=128, K=2048 is 128·2048·4 + 2048·128·4 + 128·128·4
+≈ 2.1 MiB ≪ 16 MiB VMEM. On a real MXU this is one 128×128-tile systolic
+pass per K-step; `preferred_element_type=f32` keeps the accumulator in f32
+as bf16 inputs would on TPU.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM = 128
+BN = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (BM, BN) output tile: full-K contraction."""
+    o_ref[...] = jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@jax.jit
+def project(x, w):
+    """Tiled x @ w via pallas_call. x: [M, K], w: [K, N] → [M, N]."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm = min(BM, m)
+    bn = min(BN, n)
+    assert m % bm == 0, f"M={m} not a multiple of {bm}"
+    assert n % bn == 0, f"N={n} not a multiple of {bn}"
+
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), w.astype(jnp.float32))

@@ -1,0 +1,51 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has an exact jnp counterpart here; pytest
+(`python/tests/test_kernels.py`) asserts allclose between the two across a
+hypothesis sweep of shapes. These references are also what the Rust unit
+tests mirror (`rust/src/metrics/pairwise.rs` uses the same matmul expansion),
+so all three layers are comparable term-for-term.
+"""
+
+import jax.numpy as jnp
+
+
+def pairwise_sqeuclidean(q, b):
+    """Squared-Euclidean distance matrix via the matmul expansion.
+
+    d²(x, y) = ‖x‖² − 2·x·y + ‖y‖², floored at 0 against cancellation.
+    q: [Q, D], b: [N, D] → [Q, N].
+    """
+    qn = jnp.sum(q * q, axis=1, keepdims=True)          # [Q, 1]
+    bn = jnp.sum(b * b, axis=1, keepdims=True).T        # [1, N]
+    d = qn - 2.0 * (q @ b.T) + bn
+    return jnp.maximum(d, 0.0)
+
+
+def pairwise_cosine(q, b, eps=1e-12):
+    """Cosine distance 1 − cos(q, b); zero vectors → distance 1."""
+    qn = jnp.sqrt(jnp.sum(q * q, axis=1, keepdims=True))
+    bn = jnp.sqrt(jnp.sum(b * b, axis=1, keepdims=True)).T
+    dot = q @ b.T
+    denom = qn * bn
+    cos = jnp.where(denom > eps, dot / jnp.maximum(denom, eps), 0.0)
+    return 1.0 - cos
+
+
+def pairwise_manhattan(q, b):
+    """L1 distance matrix. q: [Q, D], b: [N, D] → [Q, N]."""
+    return jnp.sum(jnp.abs(q[:, None, :] - b[None, :, :]), axis=-1)
+
+
+def projection(x, w):
+    """Dense projection x @ w. x: [M, D], w: [D, N] → [M, N]."""
+    return x @ w
+
+
+def covariance(x):
+    """Gram accumulation XᵀX. x: [M, D] → [D, D].
+
+    (Column-centering and the 1/(m−1) scale happen on the Rust side /
+    in the model graph; the kernel is the raw accumulation hot spot.)
+    """
+    return x.T @ x

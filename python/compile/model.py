@@ -1,0 +1,194 @@
+"""Layer-2 JAX graphs: encoder towers and retrieval compute.
+
+The paper extracts embeddings with CLIP / ViT / BERT / PANNs. Pretrained
+checkpoints are unavailable offline, so each tower here is a *deterministic,
+fixed-seed* transformer encoder with the real model's output dimensionality
+(CLIP text/image 512 each, BERT/ViT 768, PANNs 2048). The OPDR experiments
+consume embedding geometry, not semantics — different towers produce
+differently-shaped geometry, which is exactly what Figs 7–9 compare (see
+DESIGN.md §1 for the substitution argument).
+
+Every tower's output projection routes through the Layer-1 Pallas projection
+kernel, and the retrieval graphs (`pairwise_topk_*`, `pca_project`,
+`covariance`) are built directly on the Layer-1 kernels, so the AOT artifacts
+exercise the full three-layer composition.
+
+All graphs are shaped for the AOT manifest (see `aot.py`); the Rust runtime
+zero-pads variable-size inputs to these fixed shapes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import covariance as cov_kernel
+from compile.kernels import pairwise as pairwise_kernel
+from compile.kernels import projection as proj_kernel
+
+# ---------------------------------------------------------------------------
+# Fixed input geometry (must match rust/src/data/records.rs).
+# ---------------------------------------------------------------------------
+TEXT_TOKENS, TEXT_FEAT = 32, 64
+IMAGE_PATCHES, IMAGE_FEAT = 64, 64
+AUDIO_MELS, AUDIO_FRAMES = 64, 32
+ENCODER_BATCH = 8
+
+# Retrieval graph geometry (must match the manifest / rust runtime).
+TOPK_Q = 32        # query batch capacity
+TOPK_N = 1024      # base-set capacity
+TOPK_D = 1024      # padded dimension capacity
+TOPK_K = 64        # top-k capacity
+PROJ_B = 64        # projection batch capacity
+COV_M, COV_D = 128, 512
+
+D_MODEL = 128
+N_HEADS = 4
+N_LAYERS = 2
+
+
+# ---------------------------------------------------------------------------
+# Deterministic parameter construction.
+# ---------------------------------------------------------------------------
+def _tower_params(seed, in_feat, out_dim):
+    """Fixed-seed transformer parameters; seed is model-specific so BERT,
+    ViT and the CLIP towers have independent geometries."""
+    key = jax.random.PRNGKey(seed)
+    keys = iter(jax.random.split(key, 6 + 8 * N_LAYERS))
+
+    def dense(k, shape, scale=None):
+        scale = scale if scale is not None else (1.0 / shape[0]) ** 0.5
+        return jax.random.normal(k, shape, jnp.float32) * scale
+
+    params = {
+        "embed": dense(next(keys), (in_feat, D_MODEL)),
+        "pos": dense(next(keys), (512, D_MODEL), scale=0.02),
+        "out": dense(next(keys), (D_MODEL, out_dim)),
+        "layers": [],
+    }
+    for _ in range(N_LAYERS):
+        params["layers"].append(
+            {
+                "wq": dense(next(keys), (D_MODEL, D_MODEL)),
+                "wk": dense(next(keys), (D_MODEL, D_MODEL)),
+                "wv": dense(next(keys), (D_MODEL, D_MODEL)),
+                "wo": dense(next(keys), (D_MODEL, D_MODEL)),
+                "w1": dense(next(keys), (D_MODEL, 4 * D_MODEL)),
+                "w2": dense(next(keys), (4 * D_MODEL, D_MODEL)),
+                # Two spare keys burned to keep the layout stable if gains
+                # are added later.
+                "g1": jnp.ones((D_MODEL,), jnp.float32) + 0.0 * dense(next(keys), (D_MODEL,), scale=0.0),
+                "g2": jnp.ones((D_MODEL,), jnp.float32) + 0.0 * dense(next(keys), (D_MODEL,), scale=0.0),
+            }
+        )
+    return params
+
+
+def _layer_norm(x, gain):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return gain * (x - mean) / jnp.sqrt(var + 1e-6)
+
+
+def _attention(x, layer):
+    """Multi-head self-attention. x: [B, T, D_MODEL]."""
+    b, t, d = x.shape
+    hd = d // N_HEADS
+
+    def split(y):
+        return y.reshape(b, t, N_HEADS, hd).transpose(0, 2, 1, 3)  # [B,H,T,hd]
+
+    q, k, v = split(x @ layer["wq"]), split(x @ layer["wk"]), split(x @ layer["wv"])
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / (hd**0.5)
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", attn, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, d)
+    return out @ layer["wo"]
+
+
+def _encoder_tower(feats, params):
+    """feats: [B, T, F] → [B, out_dim] embedding.
+
+    Transformer encode → mean-pool → Pallas projection kernel.
+    """
+    b, t, _ = feats.shape
+    x = feats @ params["embed"] + params["pos"][:t][None, :, :]
+    for layer in params["layers"]:
+        x = x + _attention(_layer_norm(x, layer["g1"]), layer)
+        h = _layer_norm(x, layer["g2"])
+        x = x + jax.nn.gelu(h @ layer["w1"]) @ layer["w2"]
+    pooled = jnp.mean(x, axis=1)  # [B, D_MODEL]
+    # Layer-1 kernel does the output projection. PROJ kernel wants M % BM == 0
+    # or M < BM; ENCODER_BATCH=8 < 128 so a single row-tile is used.
+    return proj_kernel.project(pooled, params["out"])
+
+
+# Model registry: (seed, tokens, feat, out_dim). Seeds are arbitrary but
+# fixed — they ARE the "pretrained weights" of this reproduction.
+TOWERS = {
+    "clip_text": (101, TEXT_TOKENS, TEXT_FEAT, 512),
+    "clip_image": (102, IMAGE_PATCHES, IMAGE_FEAT, 512),
+    "bert": (103, TEXT_TOKENS, TEXT_FEAT, 768),
+    "vit": (104, IMAGE_PATCHES, IMAGE_FEAT, 768),
+    "panns": (105, AUDIO_MELS, AUDIO_FRAMES, 2048),
+}
+
+
+@functools.lru_cache(maxsize=None)
+def tower_fn(name):
+    """A jit-able `[B, T*F] → [B, out]` function with baked-in parameters."""
+    seed, tokens, feat, out_dim = TOWERS[name]
+    params = _tower_params(seed, feat, out_dim)
+
+    def fn(flat_feats):
+        feats = flat_feats.reshape(flat_feats.shape[0], tokens, feat)
+        return (_encoder_tower(feats, params),)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Retrieval graphs.
+# ---------------------------------------------------------------------------
+def pairwise_topk_fn(metric):
+    """Graph: (queries [Q,D], base [N,D], pad_mask [N]) →
+    (top-k distances [Q,K], top-k indices-as-f32 [Q,K]).
+
+    `pad_mask` is 1.0 on padding rows of the base set; their distances are
+    inflated so padded rows never enter the top-k. Indices are cast to f32 —
+    the runtime interchange is f32-only.
+    """
+
+    def fn(queries, base, pad_mask):
+        dists = pairwise_kernel.pairwise_distances(queries, base, metric=metric)
+        dists = dists + pad_mask[None, :] * jnp.float32(1e30)
+        # NOTE: lax.top_k lowers to the `topk(..., largest=true)` HLO op,
+        # which the crate's XLA 0.5.1 text parser rejects; a full `sort`
+        # (supported since antiquity) + slice is the portable spelling.
+        iota = jax.lax.broadcasted_iota(jnp.int32, dists.shape, 1)
+        sorted_d, sorted_i = jax.lax.sort((dists, iota), dimension=1, num_keys=1)
+        return (
+            jax.lax.slice_in_dim(sorted_d, 0, TOPK_K, axis=1),
+            jax.lax.slice_in_dim(sorted_i, 0, TOPK_K, axis=1).astype(jnp.float32),
+        )
+
+    return fn
+
+
+def pca_project_fn(x, w):
+    """Graph: project a padded batch through padded PCA components.
+
+    x: [PROJ_B, TOPK_D] (rows beyond the live batch zero),
+    w: [TOPK_D, TOPK_D] (columns beyond the target dim zero) → [PROJ_B, TOPK_D].
+    """
+    return (proj_kernel.project(x, w),)
+
+
+def covariance_fn(x):
+    """Graph: column-center then Gram-accumulate. x: [COV_M, COV_D] → [COV_D, COV_D].
+
+    Matches `rust/src/linalg/ops.rs::covariance_matrix` up to the 1/(m−1)
+    scale, which the caller applies (padding rows must be excluded there too).
+    """
+    centered = x - jnp.mean(x, axis=0, keepdims=True)
+    return (cov_kernel.gram(centered),)

@@ -1,0 +1,64 @@
+"""AOT contract tests: HLO-text interchange invariants the Rust side relies on.
+
+These lower *small* graphs only (full artifact lowering is exercised by
+`make artifacts`); what matters here is the format contract:
+  * large constants must be materialized in the text (xla_extension 0.5.1
+    parses the text back — elided constants silently become garbage weights);
+  * no `topk` HLO op (0.5.1's parser predates it; we spell it sort+slice);
+  * the manifest spec strings match the artifact plan shapes.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_large_constants_are_printed():
+    const = jax.random.normal(jax.random.PRNGKey(0), (64, 32), jnp.float32)
+
+    def fn(x):
+        return (x @ const,)
+
+    text = aot.to_hlo_text(fn, aot.spec(4, 64))
+    # The 2048-element weight matrix must appear as a materialized literal,
+    # not an elided "constant(...)" placeholder.
+    assert "..." not in text or "constant({" in text
+    # Heuristic: the text must be large enough to actually contain 2048 floats.
+    assert len(text) > 2048 * 4, f"suspiciously small HLO text ({len(text)} bytes)"
+
+
+def test_no_topk_op_in_retrieval_graphs():
+    fn = model.pairwise_topk_fn("sqeuclidean")
+    text = aot.to_hlo_text(
+        fn,
+        aot.spec(model.TOPK_Q, model.TOPK_D),
+        aot.spec(model.TOPK_N, model.TOPK_D),
+        aot.spec(model.TOPK_N),
+    )
+    assert " topk(" not in text, "topk op present — xla_extension 0.5.1 cannot parse it"
+    assert "sort(" in text, "expected the sort+slice spelling"
+
+
+def test_artifact_plan_shapes_consistent():
+    plan = aot.artifact_plan()
+    names = [p[0] for p in plan]
+    assert len(names) == len(set(names)), "duplicate artifact names"
+    expected = {
+        "clip_text", "clip_image", "bert", "vit", "panns",
+        "pairwise_topk_sqeuclidean", "pairwise_topk_cosine",
+        "pairwise_topk_manhattan", "pca_project", "covariance",
+    }
+    assert set(names) == expected
+    for name, _fn, specs, out_dims in plan:
+        for s in specs:
+            assert all(d > 0 for d in s.shape), f"{name}: bad input shape {s.shape}"
+        for d in out_dims:
+            assert all(x > 0 for x in d), f"{name}: bad output shape {d}"
+
+
+def test_fmt_shape_spec_strings():
+    assert aot.fmt_shape([32, 1024]) == "f32:32x1024"
+    assert aot.fmt_shape([]) == "f32:scalar"

@@ -1,0 +1,148 @@
+"""Kernel-vs-reference correctness: the core L1 signal.
+
+Each Pallas kernel (interpret=True) is checked against its pure-jnp oracle in
+`compile.kernels.ref` — first on fixed shapes matching the AOT artifacts,
+then across a hypothesis sweep of shapes/values.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import covariance, pairwise, projection, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+METRICS = ["sqeuclidean", "cosine", "manhattan"]
+REFS = {
+    "sqeuclidean": ref.pairwise_sqeuclidean,
+    "cosine": ref.pairwise_cosine,
+    "manhattan": ref.pairwise_manhattan,
+}
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Fixed artifact-shaped checks.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("metric", METRICS)
+def test_pairwise_artifact_shape(metric):
+    q = rand(0, 32, 256)
+    b = rand(1, 512, 256)
+    got = pairwise.pairwise_distances(q, b, metric=metric)
+    want = REFS[metric](q, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_projection_artifact_shape():
+    x = rand(2, 128, 512)
+    w = rand(3, 512, 256)
+    np.testing.assert_allclose(
+        projection.project(x, w), ref.projection(x, w), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_covariance_artifact_shape():
+    x = rand(4, 128, 256)
+    np.testing.assert_allclose(covariance.gram(x), ref.covariance(x), rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Metric properties.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("metric", METRICS)
+def test_self_distance_zero(metric):
+    x = rand(5, 32, 64)
+    d = pairwise.pairwise_distances(x, x, metric=metric)
+    np.testing.assert_allclose(jnp.diagonal(d), 0.0, atol=1e-3)
+
+
+def test_sqeuclidean_nonnegative_under_cancellation():
+    base = rand(6, 32, 128)
+    near = base.at[:, 0].add(1e-6)
+    d = pairwise.pairwise_distances(base, near, metric="sqeuclidean")
+    assert (d >= 0.0).all()
+
+
+def test_cosine_zero_vector_distance_one():
+    q = jnp.zeros((32, 64), jnp.float32)
+    b = rand(7, 64, 64)
+    d = pairwise.pairwise_distances(q, b, metric="cosine")
+    np.testing.assert_allclose(d, 1.0, atol=1e-5)
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_zero_padding_invariance(metric):
+    """The runtime pads dims with zeros; distances must be unchanged."""
+    q = rand(8, 32, 64)
+    b = rand(9, 64, 64)
+    qp = jnp.pad(q, ((0, 0), (0, 64)))
+    bp = jnp.pad(b, ((0, 0), (0, 64)))
+    d0 = pairwise.pairwise_distances(q, b, metric=metric)
+    d1 = pairwise.pairwise_distances(qp, bp, metric=metric)
+    np.testing.assert_allclose(d0, d1, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps: shapes and value scales.
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(
+    q_tiles=st.integers(1, 3),
+    n_tiles=st.integers(1, 3),
+    d=st.sampled_from([8, 64, 160]),
+    scale=st.sampled_from([1e-2, 1.0, 1e2]),
+    metric=st.sampled_from(METRICS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pairwise_matches_ref_across_shapes(q_tiles, n_tiles, d, scale, metric, seed):
+    key = jax.random.PRNGKey(seed)
+    kq, kb = jax.random.split(key)
+    q = jax.random.normal(kq, (q_tiles * 32, d), jnp.float32) * scale
+    b = jax.random.normal(kb, (n_tiles * 64, d), jnp.float32) * scale
+    got = pairwise.pairwise_distances(q, b, metric=metric)
+    want = REFS[metric](q, b)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3 * max(1.0, scale**2))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m_tiles=st.integers(1, 2),
+    k=st.sampled_from([16, 128, 384]),
+    n_tiles=st.integers(1, 2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_projection_matches_ref_across_shapes(m_tiles, k, n_tiles, seed):
+    key = jax.random.PRNGKey(seed)
+    kx, kw = jax.random.split(key)
+    x = jax.random.normal(kx, (m_tiles * 128, k), jnp.float32)
+    w = jax.random.normal(kw, (k, n_tiles * 128), jnp.float32)
+    np.testing.assert_allclose(
+        projection.project(x, w), ref.projection(x, w), rtol=1e-3, atol=1e-3
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.sampled_from([8, 64, 200]),
+    d_tiles=st.integers(1, 2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_covariance_matches_ref_across_shapes(m, d_tiles, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (m, d_tiles * 128), jnp.float32)
+    np.testing.assert_allclose(covariance.gram(x), ref.covariance(x), rtol=2e-3, atol=2e-3)
+
+
+def test_bfloat16_inputs_accumulate_in_f32():
+    """MXU-style bf16 inputs: kernel must accept and accumulate in f32."""
+    q = rand(10, 32, 128).astype(jnp.bfloat16)
+    b = rand(11, 64, 128).astype(jnp.bfloat16)
+    got = pairwise.pairwise_distances(q, b, metric="sqeuclidean")
+    assert got.dtype == jnp.float32
+    want = ref.pairwise_sqeuclidean(q.astype(jnp.float32), b.astype(jnp.float32))
+    np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-1)

@@ -1,0 +1,91 @@
+"""Layer-2 graph checks: tower shapes/determinism, retrieval graph semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def feats(seed, tokens, feat):
+    return jax.random.normal(
+        jax.random.PRNGKey(seed), (model.ENCODER_BATCH, tokens * feat), jnp.float32
+    )
+
+
+def test_tower_shapes_and_determinism():
+    for name, (_, tokens, feat, out_dim) in model.TOWERS.items():
+        fn = model.tower_fn(name)
+        x = feats(1, tokens, feat)
+        (out1,) = fn(x)
+        (out2,) = fn(x)
+        assert out1.shape == (model.ENCODER_BATCH, out_dim), name
+        np.testing.assert_array_equal(out1, out2)
+        assert jnp.isfinite(out1).all(), name
+
+
+def test_towers_differ_from_each_other():
+    x = feats(2, model.TEXT_TOKENS, model.TEXT_FEAT)
+    (bert,) = model.tower_fn("bert")(x)
+    (clip_t,) = model.tower_fn("clip_text")(x)
+    # Different output dims already; compare energy distribution of the first
+    # 512 dims to be thorough.
+    assert not np.allclose(np.asarray(bert)[:, :512], np.asarray(clip_t))
+
+
+def test_tower_is_input_sensitive():
+    fn = model.tower_fn("bert")
+    (a,) = fn(feats(3, model.TEXT_TOKENS, model.TEXT_FEAT))
+    (b,) = fn(feats(4, model.TEXT_TOKENS, model.TEXT_FEAT))
+    assert not np.allclose(np.asarray(a), np.asarray(b))
+
+
+def test_pairwise_topk_graph_masks_padding():
+    fn = model.pairwise_topk_fn("sqeuclidean")
+    q = jax.random.normal(jax.random.PRNGKey(5), (model.TOPK_Q, model.TOPK_D), jnp.float32)
+    base = jax.random.normal(jax.random.PRNGKey(6), (model.TOPK_N, model.TOPK_D), jnp.float32)
+    # Mark the last half of the base set as padding.
+    live = model.TOPK_N // 2
+    mask = jnp.concatenate([jnp.zeros((live,)), jnp.ones((model.TOPK_N - live,))]).astype(jnp.float32)
+    dists, idx = fn(q, base, mask)
+    assert dists.shape == (model.TOPK_Q, model.TOPK_K)
+    assert idx.shape == (model.TOPK_Q, model.TOPK_K)
+    # No padded index may appear.
+    assert (idx < live).all(), "padded rows leaked into top-k"
+    # Distances ascending per row.
+    d = np.asarray(dists)
+    assert (np.diff(d, axis=1) >= -1e-4).all()
+
+
+def test_pairwise_topk_graph_exact_against_ref():
+    fn = model.pairwise_topk_fn("sqeuclidean")
+    q = jax.random.normal(jax.random.PRNGKey(7), (model.TOPK_Q, model.TOPK_D), jnp.float32)
+    base = jax.random.normal(jax.random.PRNGKey(8), (model.TOPK_N, model.TOPK_D), jnp.float32)
+    mask = jnp.zeros((model.TOPK_N,), jnp.float32)
+    dists, idx = fn(q, base, mask)
+    full = np.asarray(ref.pairwise_sqeuclidean(q, base))
+    for row in range(0, model.TOPK_Q, 7):
+        want_idx = np.argsort(full[row], kind="stable")[: model.TOPK_K]
+        got_idx = np.asarray(idx[row], dtype=np.int64)
+        # Compare as sets (ties may reorder) and distances as sorted arrays.
+        assert set(got_idx.tolist()) == set(want_idx.tolist())
+        np.testing.assert_allclose(
+            np.sort(np.asarray(dists[row])), np.sort(full[row][want_idx]), rtol=1e-3, atol=1e-3
+        )
+
+
+def test_pca_project_graph_matches_ref():
+    x = jax.random.normal(jax.random.PRNGKey(9), (model.PROJ_B, model.TOPK_D), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(10), (model.TOPK_D, model.TOPK_D), jnp.float32)
+    (out,) = model.pca_project_fn(x, w)
+    np.testing.assert_allclose(out, ref.projection(x, w), rtol=1e-3, atol=1e-2)
+
+
+def test_covariance_graph_centers_before_gram():
+    x = jax.random.normal(jax.random.PRNGKey(11), (model.COV_M, model.COV_D), jnp.float32) + 5.0
+    (out,) = model.covariance_fn(x)
+    xc = x - x.mean(axis=0, keepdims=True)
+    np.testing.assert_allclose(out, ref.covariance(xc), rtol=1e-3, atol=1e-2)

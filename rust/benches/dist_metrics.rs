@@ -1,0 +1,73 @@
+//! Distance-metric robustness (paper setup §Experimental Setup: "three
+//! distance metrics — Euclidean, cosine, and Manhattan").
+//!
+//! Claim reproduced: the accuracy-vs-n/m log trend holds under all three
+//! metrics on the same dataset, with metric-specific constants. Also benches
+//! the per-metric pairwise-distance cost (the serving-relevant difference).
+//!
+//! Run: `cargo bench --bench dist_metrics`
+
+use opdr::bench_support::{section, Bencher};
+use opdr::data::{synth, DatasetKind};
+use opdr::metrics::{pairwise_distances, Metric};
+use opdr::opdr::{fit_log_model, sweep::SweepConfig};
+use opdr::report::{write_csv, Table};
+use opdr::util::Rng;
+
+fn main() {
+    let metrics = [Metric::SqEuclidean, Metric::Euclidean, Metric::Cosine, Metric::Manhattan];
+
+    section("accuracy trend per metric (materials-observable, PCA)");
+    let dim = 256;
+    let set = synth::generate(DatasetKind::MaterialsObservable, 320, dim, 42);
+    let mut table = Table::new(&["metric", "c0", "c1", "R²", "plateau"]);
+    let mut rows = Vec::new();
+    for metric in metrics {
+        let cfg = SweepConfig {
+            metric,
+            sample_sizes: vec![30, 60, 80],
+            dims_per_m: 8,
+            repeats: 2,
+            seed: 42,
+            ..Default::default()
+        };
+        let curve = opdr::opdr::accuracy_curve(&set, &cfg).expect("sweep");
+        let fit = fit_log_model(curve.points()).expect("fit");
+        assert!(fit.c0 > 0.0, "{}: trend must hold", metric.name());
+        table.row(&[
+            metric.name().to_string(),
+            format!("{:.4}", fit.c0),
+            format!("{:.4}", fit.c1),
+            format!("{:.3}", fit.r_squared),
+            format!("{:.3}", curve.plateau_accuracy()),
+        ]);
+        rows.push(vec![
+            metric.name().to_string(),
+            format!("{}", fit.c0),
+            format!("{}", fit.c1),
+            format!("{}", fit.r_squared),
+        ]);
+    }
+    println!("{}", table.render());
+    write_csv("bench_out/dist_metrics.csv", &["metric", "c0", "c1", "r2"], &rows).expect("csv");
+
+    section("pairwise-distance kernel cost per metric (Q=32, N=2048)");
+    let bencher = Bencher::default();
+    let mut rng = Rng::new(7);
+    for d in [64usize, 256, 1024] {
+        let queries = rng.normal_vec_f32(32 * d);
+        let base = rng.normal_vec_f32(2048 * d);
+        for metric in metrics {
+            let (q, b) = (queries.clone(), base.clone());
+            let r = bencher.run_items(&format!("pairwise/d{d}/{}", metric.name()), 32 * 2048, move || {
+                let out = pairwise_distances(&q, &b, d, metric).unwrap();
+                std::hint::black_box(out[0]);
+            });
+            println!("{}", r.summary());
+        }
+    }
+    println!(
+        "\nacceptance: every metric shows the log trend (paper: 'all results\n\
+         suggest the proposed method is highly effective' across metrics)."
+    );
+}

@@ -1,0 +1,102 @@
+//! Figures 1–6 (+ ESC-50): accuracy vs n/m per dataset.
+//!
+//! Paper setup: CLIP embeddings, L2 distance, PCA; materials subsets sweep
+//! m ∈ {10..80}, web corpora m ∈ {10,50,100,150,300}. Prints the binned
+//! series the paper plots, the Eq. (4) fit, and sweep wall-time; writes CSV
+//! under bench_out/.
+//!
+//! Run: `cargo bench --bench fig_datasets`
+
+use opdr::bench_support::{section, Bencher};
+use opdr::data::{synth, DatasetKind};
+use opdr::opdr::{fit_log_model, sweep::SweepConfig};
+use opdr::report::{write_csv, Table};
+use opdr::util::Stopwatch;
+
+fn main() {
+    let figures: [(DatasetKind, &str); 7] = [
+        (DatasetKind::MaterialsObservable, "Figure 1: Observable Material"),
+        (DatasetKind::MaterialsStable, "Figure 2: Stable Material"),
+        (DatasetKind::MaterialsMetal, "Figure 3: Metal Material"),
+        (DatasetKind::MaterialsMagnetic, "Figure 4: Magnetic Material"),
+        (DatasetKind::Flickr30k, "Figure 5: Flickr30k"),
+        (DatasetKind::OmniCorpus, "Figure 6: OmniCorpus"),
+        (DatasetKind::Esc50, "ESC-50 (setup §Data Sets)"),
+    ];
+    let bencher =
+        Bencher { warmup_iters: 0, iters: 2, max_time: std::time::Duration::from_secs(60) };
+    let mut fit_rows = Vec::new();
+
+    for (kind, title) in figures {
+        section(title);
+        let sizes = kind.paper_sample_sizes();
+        let dim = kind.default_embed_dim().min(512); // CLIP-like geometry, capped for CPU
+        let total = sizes.iter().max().unwrap() * 4;
+        let set = synth::generate(kind, total, dim, 42);
+        let cfg = SweepConfig {
+            sample_sizes: sizes.clone(),
+            dims_per_m: 10,
+            repeats: 2,
+            seed: 42,
+            ..Default::default()
+        };
+
+        let sw = Stopwatch::start();
+        let curve = opdr::opdr::accuracy_curve(&set, &cfg).expect("sweep");
+        let sweep_time = sw.elapsed_secs();
+
+        let mut table = Table::new(&["n/m", "accuracy"]);
+        let mut csv_rows = Vec::new();
+        for (r, a) in curve.binned(12) {
+            table.row(&[format!("{r:.4}"), format!("{a:.4}")]);
+            csv_rows.push(vec![format!("{r}"), format!("{a}")]);
+        }
+        println!("{}", table.render());
+        let fit = fit_log_model(curve.points()).expect("fit");
+        println!(
+            "fit: A = {:.4}·ln(n/m) + {:.4}  R² = {:.3}  plateau = {:.3}  ({} pts, sweep {:.1}s)",
+            fit.c0,
+            fit.c1,
+            fit.r_squared,
+            curve.plateau_accuracy(),
+            fit.n_points,
+            sweep_time
+        );
+        write_csv(
+            format!("bench_out/fig_{}.csv", kind.name()),
+            &["ratio", "accuracy"],
+            &csv_rows,
+        )
+        .expect("csv");
+        fit_rows.push(vec![
+            kind.name().to_string(),
+            format!("{:.4}", fit.c0),
+            format!("{:.4}", fit.c1),
+            format!("{:.4}", fit.r_squared),
+            format!("{:.4}", curve.plateau_accuracy()),
+        ]);
+
+        // Micro-bench: one full sweep iteration (the figure's compute cost).
+        let set2 = set.clone();
+        let cfg2 = cfg.clone();
+        let r = bencher.run(&format!("sweep/{}", kind.name()), move || {
+            let c = opdr::opdr::accuracy_curve(&set2, &cfg2).unwrap();
+            std::hint::black_box(c.points().len());
+        });
+        println!("{}", r.summary());
+    }
+
+    section("Eq. (4) fits across datasets");
+    let mut t = Table::new(&["dataset", "c0", "c1", "R²", "plateau"]);
+    for row in &fit_rows {
+        t.row(row);
+    }
+    println!("{}", t.render());
+    write_csv(
+        "bench_out/fig_datasets_fits.csv",
+        &["dataset", "c0", "c1", "r2", "plateau"],
+        &fit_rows,
+    )
+    .expect("csv");
+    println!("acceptance: accuracy rises fast then converges on every dataset (paper Figs 1-6).");
+}

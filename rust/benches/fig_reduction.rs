@@ -1,0 +1,102 @@
+//! Figures 10–12: PCA vs MDS fit lines on materials, Flickr, OmniCorpus.
+//!
+//! Paper claims: PCA is more sensitive to n/m, converges to higher accuracy
+//! faster, and reaches 100% neighborhood preservation on the materials data;
+//! MDS plateaus lower; both follow the log trend. We run classical MDS (the
+//! Torgerson construction) and SMACOF (sklearn-like iterative stress
+//! majorization, the paper's comparator behaviour).
+//!
+//! Run: `cargo bench --bench fig_reduction`
+
+use opdr::bench_support::{section, Bencher};
+use opdr::data::{synth, DatasetKind};
+use opdr::opdr::{fit_log_model, sweep::SweepConfig};
+use opdr::reduction::ReducerKind;
+use opdr::report::{write_csv, Table};
+
+fn main() {
+    let figures: [(DatasetKind, &str); 3] = [
+        (DatasetKind::MaterialsObservable, "Figure 10: PCA vs MDS on Material"),
+        (DatasetKind::Flickr30k, "Figure 11: PCA vs MDS on Flickr"),
+        (DatasetKind::OmniCorpus, "Figure 12: PCA vs MDS on OmniCorpus"),
+    ];
+    let reducers = [ReducerKind::Pca, ReducerKind::ClassicalMds, ReducerKind::Smacof];
+    let bencher = Bencher::quick();
+
+    for (kind, title) in figures {
+        section(title);
+        let dim = 256;
+        let set = synth::generate(kind, 320, dim, 42);
+        let mut table = Table::new(&["reducer", "c0", "c1", "R²", "plateau"]);
+        let mut rows = Vec::new();
+        let mut plateaus = std::collections::HashMap::new();
+        for reducer in reducers {
+            let cfg = SweepConfig {
+                reducer,
+                sample_sizes: vec![30, 60],
+                dims_per_m: 8,
+                repeats: 2,
+                seed: 42,
+                ..Default::default()
+            };
+            let curve = opdr::opdr::accuracy_curve(&set, &cfg).expect("sweep");
+            let fit = fit_log_model(curve.points()).expect("fit");
+            let plateau = curve.plateau_accuracy();
+            plateaus.insert(reducer.name(), plateau);
+            table.row(&[
+                reducer.name().to_string(),
+                format!("{:.4}", fit.c0),
+                format!("{:.4}", fit.c1),
+                format!("{:.3}", fit.r_squared),
+                format!("{plateau:.3}"),
+            ]);
+            rows.push(vec![
+                reducer.name().to_string(),
+                format!("{}", fit.c0),
+                format!("{}", fit.c1),
+                format!("{}", fit.r_squared),
+                format!("{plateau}"),
+            ]);
+        }
+        println!("{}", table.render());
+        println!(
+            "note: classical (Torgerson) MDS on Euclidean distances is mathematically\n\
+             identical to PCA (identical fits above confirm it); `smacof` is the\n\
+             sklearn-like iterative comparator the paper actually plots as 'MDS'."
+        );
+        write_csv(
+            format!("bench_out/fig_reduction_{}.csv", kind.name()),
+            &["reducer", "c0", "c1", "r2", "plateau"],
+            &rows,
+        )
+        .expect("csv");
+
+        // The paper's ordering claim.
+        let pca = plateaus["pca"];
+        let mds = plateaus["mds"].max(plateaus["smacof"]);
+        println!(
+            "PCA plateau {pca:.3} vs best-MDS plateau {mds:.3} → {}",
+            if pca >= mds - 1e-9 { "PCA wins (matches paper)" } else { "UNEXPECTED" }
+        );
+        if kind.is_materials() {
+            println!(
+                "materials peak accuracy (PCA): {pca:.3} (paper: reaches 1.00)"
+            );
+        }
+
+        // Cost comparison at one representative cell (m=60, n=16).
+        let sub = set.subset(&(0..60).collect::<Vec<_>>()).unwrap();
+        for reducer in reducers {
+            let data = sub.data().to_vec();
+            let r = bencher.run(&format!("{}/m60/n16/{}", kind.name(), reducer.name()), move || {
+                let out = reducer.build(0).fit_transform(&data, dim, 16).unwrap();
+                std::hint::black_box(out.len());
+            });
+            println!("{}", r.summary());
+        }
+    }
+    println!(
+        "\nacceptance: PCA ≥ MDS at matched n/m everywhere; PCA hits ~1.0 on\n\
+         materials; the log trend holds for both (paper Figs 10-12)."
+    );
+}

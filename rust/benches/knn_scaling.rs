@@ -1,0 +1,75 @@
+//! Curse-of-dimensionality cost curve: exact KNN cost vs dimensionality.
+//!
+//! The paper's introduction motivates OPDR with the cost of KNN over
+//! high-dimensional concatenated embeddings (BERT 768, ViT 768, CLIP 1024,
+//! BERT⊕PANNs 2816). This bench measures brute-force query cost across that
+//! dimension range — the denominator of every OPDR speedup claim — plus the
+//! IVF-Flat index as the ANN baseline the paper cites (FAISS-style).
+//!
+//! Run: `cargo bench --bench knn_scaling`
+
+use opdr::bench_support::{section, Bencher};
+use opdr::data::{synth, DatasetKind};
+use opdr::knn::IvfFlatIndex;
+use opdr::metrics::Metric;
+use opdr::report::{write_csv, Table};
+use opdr::util::Rng;
+
+fn main() {
+    let n = 20_000;
+    let dims = [32usize, 128, 512, 768, 1024, 2048, 2816];
+    let bencher = Bencher::default();
+    let mut rng = Rng::new(3);
+
+    section(format!("brute-force 10-NN query cost vs dimension (N = {n})").as_str());
+    let mut table = Table::new(&["dim", "mean/query", "queries/s"]);
+    let mut rows = Vec::new();
+    for &d in &dims {
+        let base = rng.normal_vec_f32(n * d);
+        let query = rng.normal_vec_f32(d);
+        let r = bencher.run_items(&format!("brute/d{d}"), 1, {
+            let base = base.clone();
+            let query = query.clone();
+            move || {
+                let out = opdr::knn::knn_indices(&query, &base, d, 10, Metric::SqEuclidean).unwrap();
+                std::hint::black_box(out[0].index);
+            }
+        });
+        let qps = r.throughput().unwrap_or(0.0);
+        table.row(&[
+            d.to_string(),
+            opdr::util::timer::fmt_duration(r.mean()),
+            format!("{qps:.0}"),
+        ]);
+        rows.push(vec![d.to_string(), format!("{}", r.mean().as_nanos()), format!("{qps}")]);
+    }
+    println!("{}", table.render());
+    write_csv("bench_out/knn_scaling.csv", &["dim", "mean_ns", "qps"], &rows).expect("csv");
+
+    section("IVF-Flat (nlist=64) recall/latency trade-off at dim 256");
+    let d = 256;
+    let set = synth::generate(DatasetKind::Flickr30k, 10_000, d, 9);
+    let index = IvfFlatIndex::build(set.data(), d, Metric::SqEuclidean, 64, 8, 1).unwrap();
+    let queries = rng.normal_vec_f32(20 * d);
+    let mut table = Table::new(&["nprobe", "recall@10", "mean/query"]);
+    for nprobe in [1usize, 4, 8, 16, 64] {
+        let recall = index.recall_at_k(&queries, 10, nprobe).unwrap();
+        let q = queries[..d].to_vec();
+        let idx = index.clone();
+        let r = bencher.run(&format!("ivf/nprobe{nprobe}"), move || {
+            let out = idx.search(&q, 10, nprobe).unwrap();
+            std::hint::black_box(out.len());
+        });
+        table.row(&[
+            nprobe.to_string(),
+            format!("{recall:.3}"),
+            opdr::util::timer::fmt_duration(r.mean()),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "\nreading: query cost grows ~linearly in dim — reducing 1024→~30 dims\n\
+         (the planner's typical output at A=0.9) buys an order of magnitude,\n\
+         which is what the serving bench observes end-to-end."
+    );
+}

@@ -1,0 +1,139 @@
+//! Serving benchmark: the paper's motivation quantified end-to-end.
+//!
+//! "Searching for KNN in multimodal data retrieval is computationally
+//! expensive ... high dimensionality presents a challenge for time-sensitive
+//! vision applications" — this bench measures the coordinator's throughput
+//! and latency at full dimensionality vs the OPDR-planned dimension, plus a
+//! dynamic-batcher max-wait ablation and (when artifacts exist) the PJRT
+//! scoring path.
+//!
+//! Run: `cargo bench --bench serving`
+
+use opdr::bench_support::section;
+use opdr::config::ServeConfig;
+use opdr::coordinator::Coordinator;
+use opdr::data::{synth, DatasetKind};
+use opdr::metrics::Metric;
+use opdr::report::{write_csv, Table};
+use opdr::util::Stopwatch;
+
+const N: usize = 3000;
+const DIM: usize = 1024;
+const QUERIES: usize = 600;
+const K: usize = 10;
+
+fn storm(coord: &Coordinator, set: &opdr::data::EmbeddingSet) -> (f64, f64, f64) {
+    // returns (qps, p50_ms, p99_ms) measured per-window
+    let window = 64;
+    let sw = Stopwatch::start();
+    let mut lat = Vec::new();
+    let mut qi = 0;
+    while qi < QUERIES {
+        let end = (qi + window).min(QUERIES);
+        let mut rxs = Vec::new();
+        for i in qi..end {
+            if let Ok(rx) = coord.search_async("s", set.vector(i % N).to_vec(), K) {
+                rxs.push(rx);
+            }
+        }
+        let t0 = Stopwatch::start();
+        for rx in rxs {
+            let _ = rx.recv();
+        }
+        lat.push(t0.elapsed_ns() / window as f64 / 1e6);
+        qi = end;
+    }
+    let secs = sw.elapsed_secs();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (
+        QUERIES as f64 / secs,
+        opdr::util::float::percentile_sorted(&lat, 0.5),
+        opdr::util::float::percentile_sorted(&lat, 0.99),
+    )
+}
+
+fn main() {
+    let set = synth::generate(DatasetKind::Flickr30k, N, DIM, 42);
+    let mut rows = Vec::new();
+
+    section("full-dim vs OPDR-reduced serving (CPU scoring path)");
+    let mut table = Table::new(&["config", "serving dim", "qps", "p50 ms", "p99 ms"]);
+    {
+        let coord = Coordinator::start(ServeConfig::default()).unwrap();
+        coord.create_collection("s", DIM, Metric::SqEuclidean).unwrap();
+        coord.ingest("s", set.data().to_vec()).unwrap();
+        let (qps, p50, p99) = storm(&coord, &set);
+        table.row(&["full".into(), DIM.to_string(), format!("{qps:.0}"), format!("{p50:.2}"), format!("{p99:.2}")]);
+        rows.push(vec!["full".to_string(), DIM.to_string(), format!("{qps}")]);
+
+        for target in [0.8, 0.9, 0.95] {
+            let dim = coord.build_reduced("s", target, K).unwrap();
+            let (qps, p50, p99) = storm(&coord, &set);
+            let label = format!("opdr A={target}");
+            table.row(&[label.clone(), dim.to_string(), format!("{qps:.0}"), format!("{p50:.2}"), format!("{p99:.2}")]);
+            rows.push(vec![label, dim.to_string(), format!("{qps}")]);
+        }
+        coord.shutdown();
+    }
+    println!("{}", table.render());
+    write_csv("bench_out/serving.csv", &["config", "dim", "qps"], &rows).expect("csv");
+
+    section("dynamic batcher: max_wait ablation (reduced collection, A=0.9)");
+    let mut table = Table::new(&["max_wait ms", "max_batch", "qps", "batches", "avg batch"]);
+    for (wait, batch) in [(0u64, 1usize), (1, 16), (2, 32), (8, 64)] {
+        let cfg = ServeConfig {
+            max_wait_ms: wait,
+            max_batch: batch,
+            ..Default::default()
+        };
+        let coord = Coordinator::start(cfg).unwrap();
+        coord.create_collection("s", DIM, Metric::SqEuclidean).unwrap();
+        coord.ingest("s", set.data().to_vec()).unwrap();
+        coord.build_reduced("s", 0.9, K).unwrap();
+        let (qps, _, _) = storm(&coord, &set);
+        let batches = coord.metrics().batches.get();
+        let completed = coord.metrics().completed.get();
+        table.row(&[
+            wait.to_string(),
+            batch.to_string(),
+            format!("{qps:.0}"),
+            batches.to_string(),
+            format!("{:.1}", completed as f64 / batches.max(1) as f64),
+        ]);
+        coord.shutdown();
+    }
+    println!("{}", table.render());
+
+    if std::path::Path::new("artifacts/manifest.toml").exists() {
+        section("PJRT artifact scoring path (pairwise_topk, N≤1024 slice)");
+        // The artifact caps N at 1024; serve a sliced collection both ways.
+        let small = set.subset(&(0..1000).collect::<Vec<_>>()).unwrap();
+        let mut table = Table::new(&["path", "qps", "p50 ms", "p99 ms"]);
+        for use_runtime in [false, true] {
+            let cfg = ServeConfig { use_runtime, max_batch: 32, ..Default::default() };
+            let coord = Coordinator::start(cfg).unwrap();
+            coord.create_collection("s", DIM, Metric::SqEuclidean).unwrap();
+            coord.ingest("s", small.data().to_vec()).unwrap();
+            let sw = Stopwatch::start();
+            let mut lat = Vec::new();
+            for i in 0..200 {
+                let t0 = Stopwatch::start();
+                let _ = coord.search("s", small.vector(i % 1000).to_vec(), K);
+                lat.push(t0.elapsed_ns() / 1e6);
+            }
+            let secs = sw.elapsed_secs();
+            lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            table.row(&[
+                if use_runtime { "pjrt".into() } else { "cpu".to_string() },
+                format!("{:.0}", 200.0 / secs),
+                format!("{:.2}", opdr::util::float::percentile_sorted(&lat, 0.5)),
+                format!("{:.2}", opdr::util::float::percentile_sorted(&lat, 0.99)),
+            ]);
+            coord.shutdown();
+        }
+        println!("{}", table.render());
+        println!("note: the PJRT path runs the interpret-mode Pallas kernel — on CPU this is\na correctness/parity path; real-TPU perf is estimated in DESIGN.md §Perf.");
+    } else {
+        println!("(artifacts missing — skipping PJRT path; run `make artifacts`)");
+    }
+}

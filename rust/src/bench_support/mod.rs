@@ -1,0 +1,170 @@
+//! Mini-criterion: the benchmark harness used by every `benches/` target
+//! (the offline registry has no `criterion`; `Cargo.toml` sets
+//! `harness = false` and targets call [`Bencher`] directly).
+//!
+//! Measures wall time with warmup, reports mean / p50 / p99 / throughput,
+//! and detects obviously unstable runs (coefficient of variation).
+
+use crate::util::float::{mean, percentile_sorted, stddev};
+use crate::util::Stopwatch;
+use std::time::Duration;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Case label.
+    pub name: String,
+    /// Measured iteration times (ns).
+    pub samples_ns: Vec<f64>,
+    /// Optional per-iteration item count (for throughput).
+    pub items_per_iter: Option<u64>,
+}
+
+impl BenchResult {
+    /// Mean iteration time.
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(mean(&self.samples_ns) as u64)
+    }
+
+    /// Percentile of iteration time.
+    pub fn percentile(&self, q: f64) -> Duration {
+        let mut sorted = self.samples_ns.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Duration::from_nanos(percentile_sorted(&sorted, q) as u64)
+    }
+
+    /// Items/sec if an item count was provided.
+    pub fn throughput(&self) -> Option<f64> {
+        let items = self.items_per_iter? as f64;
+        let m = mean(&self.samples_ns);
+        if m <= 0.0 {
+            return None;
+        }
+        Some(items / (m / 1e9))
+    }
+
+    /// Coefficient of variation (stability indicator).
+    pub fn cv(&self) -> f64 {
+        let m = mean(&self.samples_ns);
+        if m <= 0.0 {
+            return 0.0;
+        }
+        stddev(&self.samples_ns) / m
+    }
+
+    /// One summary line.
+    pub fn summary(&self) -> String {
+        let tp = self
+            .throughput()
+            .map(|t| format!("  {:.0} items/s", t))
+            .unwrap_or_default();
+        let flag = if self.cv() > 0.25 { "  [unstable]" } else { "" };
+        format!(
+            "{:<44} mean={:>10}  p50={:>10}  p99={:>10}{}{}",
+            self.name,
+            crate::util::timer::fmt_duration(self.mean()),
+            crate::util::timer::fmt_duration(self.percentile(0.5)),
+            crate::util::timer::fmt_duration(self.percentile(0.99)),
+            tp,
+            flag
+        )
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Bencher {
+    /// Warmup iterations (not recorded).
+    pub warmup_iters: usize,
+    /// Recorded iterations.
+    pub iters: usize,
+    /// Hard cap on total measurement time.
+    pub max_time: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup_iters: 3, iters: 20, max_time: Duration::from_secs(20) }
+    }
+}
+
+impl Bencher {
+    /// Quick preset for expensive end-to-end cases.
+    pub fn quick() -> Self {
+        Bencher { warmup_iters: 1, iters: 5, max_time: Duration::from_secs(30) }
+    }
+
+    /// Run a case; `f` is one measured iteration. Use `std::hint::black_box`
+    /// inside `f` to keep results alive.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        self.run_with_items(name, None, &mut f)
+    }
+
+    /// Run a case with a per-iteration item count for throughput reporting.
+    pub fn run_items<F: FnMut()>(&self, name: &str, items: u64, mut f: F) -> BenchResult {
+        self.run_with_items(name, Some(items), &mut f)
+    }
+
+    fn run_with_items(&self, name: &str, items: Option<u64>, f: &mut dyn FnMut()) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let budget = Stopwatch::start();
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let sw = Stopwatch::start();
+            f();
+            samples.push(sw.elapsed_ns());
+            if budget.elapsed() > self.max_time {
+                break;
+            }
+        }
+        BenchResult { name: name.to_string(), samples_ns: samples, items_per_iter: items }
+    }
+}
+
+/// Print a bench section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_summarizes() {
+        let b = Bencher { warmup_iters: 1, iters: 5, max_time: Duration::from_secs(5) };
+        let r = b.run("sleep", || std::thread::sleep(Duration::from_millis(2)));
+        assert_eq!(r.samples_ns.len(), 5);
+        assert!(r.mean() >= Duration::from_millis(1));
+        assert!(r.summary().contains("sleep"));
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let b = Bencher { warmup_iters: 0, iters: 3, max_time: Duration::from_secs(5) };
+        let r = b.run_items("t", 1000, || std::thread::sleep(Duration::from_millis(1)));
+        let tp = r.throughput().unwrap();
+        // 1000 items per ~1ms → ~1M items/s, allow wide slack.
+        assert!(tp > 100_000.0 && tp < 5_000_000.0, "tp={tp}");
+    }
+
+    #[test]
+    fn max_time_caps_iterations() {
+        let b = Bencher { warmup_iters: 0, iters: 1000, max_time: Duration::from_millis(20) };
+        let r = b.run("capped", || std::thread::sleep(Duration::from_millis(5)));
+        assert!(r.samples_ns.len() < 1000);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let r = BenchResult {
+            name: "x".into(),
+            samples_ns: vec![1e3, 2e3, 3e3, 4e3, 100e3],
+            items_per_iter: None,
+        };
+        assert!(r.percentile(0.5) <= r.percentile(0.99));
+        assert!(r.cv() > 0.5); // outlier-heavy
+    }
+}

@@ -1,0 +1,178 @@
+//! Hand-rolled CLI argument parser (no `clap` in the offline registry).
+//!
+//! Grammar: `opdr <subcommand> [--flag] [--key value] [positional...]`.
+//! Flags may be given as `--key value` or `--key=value`. Unknown flags are
+//! errors so typos fail loudly.
+
+use crate::error::{OpdrError, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, flags, positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-flag token.
+    pub subcommand: String,
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+    positionals: Vec<String>,
+    known_flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Self> {
+        let mut args = Args::default();
+        let mut iter = tokens.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if stripped.is_empty() {
+                    return Err(OpdrError::config("bare `--` not supported"));
+                }
+                if let Some(eq) = stripped.find('=') {
+                    args.flags
+                        .insert(stripped[..eq].to_string(), stripped[eq + 1..].to_string());
+                } else if iter.peek().map_or(false, |next| !next.starts_with("--")) {
+                    let val = iter.next().unwrap();
+                    args.flags.insert(stripped.to_string(), val);
+                } else {
+                    args.bools.push(stripped.to_string());
+                }
+            } else if args.subcommand.is_empty() {
+                args.subcommand = tok;
+            } else {
+                args.positionals.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the process argv.
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// String flag value.
+    pub fn get(&mut self, key: &str) -> Option<&str> {
+        self.known_flags.push(key.to_string());
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// String flag with default.
+    pub fn get_or(&mut self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Integer flag.
+    pub fn get_usize(&mut self, key: &str) -> Result<Option<usize>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|_| OpdrError::config(format!("--{key} expects an integer, got `{s}`"))),
+        }
+    }
+
+    /// Integer flag with default.
+    pub fn get_usize_or(&mut self, key: &str, default: usize) -> Result<usize> {
+        Ok(self.get_usize(key)?.unwrap_or(default))
+    }
+
+    /// u64 flag with default (seeds).
+    pub fn get_u64_or(&mut self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<u64>()
+                .map_err(|_| OpdrError::config(format!("--{key} expects a u64, got `{s}`"))),
+        }
+    }
+
+    /// Float flag with default.
+    pub fn get_f64_or(&mut self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<f64>()
+                .map_err(|_| OpdrError::config(format!("--{key} expects a float, got `{s}`"))),
+        }
+    }
+
+    /// Boolean switch (present without value).
+    pub fn has(&mut self, key: &str) -> bool {
+        self.known_flags.push(key.to_string());
+        self.bools.iter().any(|b| b == key) || self.flags.contains_key(key)
+    }
+
+    /// Positional arguments after the subcommand.
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+
+    /// After reading all expected flags, reject anything unconsumed.
+    pub fn finish(&self) -> Result<()> {
+        for key in self.flags.keys().chain(self.bools.iter()) {
+            if !self.known_flags.iter().any(|k| k == key) {
+                return Err(OpdrError::config(format!("unknown flag --{key}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_flags_positionals() {
+        // NOTE: `--flag value` consumes the next non-flag token, so positionals
+        // go before flags or after a `--key=value` form.
+        let mut a = parse(&["sweep", "--k", "5", "--metric=cosine", "extra", "--verbose"]);
+        assert_eq!(a.subcommand, "sweep");
+        assert_eq!(a.get("k"), Some("5"));
+        assert_eq!(a.get("metric"), Some("cosine"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.positionals(), &["extra".to_string()]);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn typed_getters() {
+        let mut a = parse(&["x", "--n", "12", "--ratio", "0.5", "--seed", "99"]);
+        assert_eq!(a.get_usize_or("n", 1).unwrap(), 12);
+        assert_eq!(a.get_f64_or("ratio", 0.0).unwrap(), 0.5);
+        assert_eq!(a.get_u64_or("seed", 0).unwrap(), 99);
+        assert_eq!(a.get_usize_or("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn bad_types_error() {
+        let mut a = parse(&["x", "--n", "notanum"]);
+        assert!(a.get_usize("n").is_err());
+    }
+
+    #[test]
+    fn unknown_flag_rejected_by_finish() {
+        let mut a = parse(&["x", "--known", "1", "--typo", "2"]);
+        let _ = a.get("known");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn boolean_flag_followed_by_flag() {
+        let mut a = parse(&["x", "--fast", "--k", "3"]);
+        assert!(a.has("fast"));
+        assert_eq!(a.get("k"), Some("3"));
+    }
+
+    #[test]
+    fn empty_args_ok() {
+        let a = parse(&[]);
+        assert!(a.subcommand.is_empty());
+    }
+}

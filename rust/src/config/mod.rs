@@ -1,0 +1,13 @@
+//! Configuration system.
+//!
+//! The offline crate set has no `serde`/`toml`, so [`toml`] implements the
+//! TOML subset the configs need (tables, strings, ints, floats, bools,
+//! homogeneous arrays, comments) and [`schema`] maps parsed values onto typed,
+//! validated config structs used by the CLI, the coordinator and the bench
+//! harness.
+
+pub mod schema;
+pub mod toml;
+
+pub use schema::{ExperimentConfig, ServeConfig, SweepSpec};
+pub use toml::{parse_toml, TomlValue};

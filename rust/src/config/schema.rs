@@ -1,0 +1,378 @@
+//! Typed, validated configuration structs on top of the TOML-subset parser.
+
+use crate::config::toml::{parse_toml, TomlValue};
+use crate::data::DatasetKind;
+use crate::error::{OpdrError, Result};
+use crate::metrics::Metric;
+use crate::reduction::ReducerKind;
+
+/// Specification of an accuracy-vs-n/m sweep (one paper figure).
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    /// Dataset to generate/load.
+    pub dataset: DatasetKind,
+    /// Subset sizes `m` to sweep (paper: {10..80} materials, {10..300} web).
+    pub sample_sizes: Vec<usize>,
+    /// Neighborhood size `k`.
+    pub k: usize,
+    /// Distance metric.
+    pub metric: Metric,
+    /// Dimension-reduction method.
+    pub reducer: ReducerKind,
+    /// Embedding model name ("clip", "bert", "vit", "concat-bert-panns").
+    pub model: String,
+    /// RNG seed.
+    pub seed: u64,
+    /// Number of reduced dims per m: sweep n over this many log-spaced points.
+    pub dims_per_m: usize,
+    /// Repetitions per (m, n) cell, averaged.
+    pub repeats: usize,
+}
+
+impl Default for SweepSpec {
+    fn default() -> Self {
+        SweepSpec {
+            dataset: DatasetKind::MaterialsObservable,
+            sample_sizes: vec![10, 20, 30, 40, 50, 60, 70, 80],
+            k: 5,
+            metric: Metric::SqEuclidean,
+            reducer: ReducerKind::Pca,
+            model: "clip".to_string(),
+            seed: 42,
+            dims_per_m: 12,
+            repeats: 3,
+        }
+    }
+}
+
+impl SweepSpec {
+    /// Validate invariants; call before running a sweep.
+    pub fn validate(&self) -> Result<()> {
+        if self.sample_sizes.is_empty() {
+            return Err(OpdrError::config("sweep: sample_sizes empty"));
+        }
+        if self.k == 0 {
+            return Err(OpdrError::config("sweep: k must be >= 1"));
+        }
+        for &m in &self.sample_sizes {
+            if m <= self.k {
+                return Err(OpdrError::config(format!(
+                    "sweep: sample size m={m} must exceed k={}",
+                    self.k
+                )));
+            }
+        }
+        if self.dims_per_m < 2 {
+            return Err(OpdrError::config("sweep: dims_per_m must be >= 2"));
+        }
+        if self.repeats == 0 {
+            return Err(OpdrError::config("sweep: repeats must be >= 1"));
+        }
+        Ok(())
+    }
+}
+
+/// Experiment config file (`configs/*.toml`): one or more sweeps plus output.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Experiment name (used for output paths).
+    pub name: String,
+    /// Output directory for CSV series.
+    pub out_dir: String,
+    /// The sweeps to run.
+    pub sweeps: Vec<SweepSpec>,
+}
+
+impl ExperimentConfig {
+    /// Parse and validate from TOML text.
+    pub fn from_toml_str(src: &str) -> Result<Self> {
+        let root = parse_toml(src)?;
+        let name = get_str(&root, "name")?.to_string();
+        let out_dir = root
+            .get_path("out_dir")
+            .and_then(|v| v.as_str())
+            .unwrap_or("bench_out")
+            .to_string();
+
+        let sweep_names: Vec<String> = match root.get_path("sweeps") {
+            Some(v) => v
+                .as_array()
+                .ok_or_else(|| OpdrError::config("`sweeps` must be an array"))?
+                .iter()
+                .map(|x| {
+                    x.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| OpdrError::config("`sweeps` entries must be strings"))
+                })
+                .collect::<Result<_>>()?,
+            None => vec!["sweep".to_string()],
+        };
+
+        let mut sweeps = Vec::new();
+        for sname in sweep_names {
+            let table = root
+                .get_path(&sname)
+                .ok_or_else(|| OpdrError::config(format!("missing sweep table [{sname}]")))?;
+            sweeps.push(sweep_from_table(table, &sname)?);
+        }
+        let cfg = ExperimentConfig { name, out_dir, sweeps };
+        for s in &cfg.sweeps {
+            s.validate()?;
+        }
+        Ok(cfg)
+    }
+
+    /// Parse and validate from a file path.
+    pub fn from_file(path: &str) -> Result<Self> {
+        let src = std::fs::read_to_string(path)?;
+        Self::from_toml_str(&src)
+    }
+}
+
+fn sweep_from_table(t: &TomlValue, ctx: &str) -> Result<SweepSpec> {
+    let mut spec = SweepSpec::default();
+    let table = t
+        .as_table()
+        .ok_or_else(|| OpdrError::config(format!("[{ctx}] is not a table")))?;
+    for (key, val) in table {
+        match key.as_str() {
+            "dataset" => {
+                let s = val
+                    .as_str()
+                    .ok_or_else(|| OpdrError::config(format!("[{ctx}] dataset must be a string")))?;
+                spec.dataset = DatasetKind::parse(s)
+                    .ok_or_else(|| OpdrError::config(format!("[{ctx}] unknown dataset `{s}`")))?;
+            }
+            "sample_sizes" => {
+                spec.sample_sizes = val
+                    .as_array()
+                    .ok_or_else(|| OpdrError::config(format!("[{ctx}] sample_sizes must be an array")))?
+                    .iter()
+                    .map(|x| {
+                        x.as_int()
+                            .filter(|&i| i > 0)
+                            .map(|i| i as usize)
+                            .ok_or_else(|| OpdrError::config(format!("[{ctx}] bad sample size")))
+                    })
+                    .collect::<Result<_>>()?;
+            }
+            "k" => spec.k = pos_int(val, ctx, "k")?,
+            "metric" => {
+                let s = val
+                    .as_str()
+                    .ok_or_else(|| OpdrError::config(format!("[{ctx}] metric must be a string")))?;
+                spec.metric = Metric::parse(s)
+                    .ok_or_else(|| OpdrError::config(format!("[{ctx}] unknown metric `{s}`")))?;
+            }
+            "reducer" => {
+                let s = val
+                    .as_str()
+                    .ok_or_else(|| OpdrError::config(format!("[{ctx}] reducer must be a string")))?;
+                spec.reducer = ReducerKind::parse(s)
+                    .ok_or_else(|| OpdrError::config(format!("[{ctx}] unknown reducer `{s}`")))?;
+            }
+            "model" => {
+                spec.model = val
+                    .as_str()
+                    .ok_or_else(|| OpdrError::config(format!("[{ctx}] model must be a string")))?
+                    .to_string();
+            }
+            "seed" => spec.seed = pos_int(val, ctx, "seed")? as u64,
+            "dims_per_m" => spec.dims_per_m = pos_int(val, ctx, "dims_per_m")?,
+            "repeats" => spec.repeats = pos_int(val, ctx, "repeats")?,
+            other => {
+                return Err(OpdrError::config(format!("[{ctx}] unknown key `{other}`")));
+            }
+        }
+    }
+    Ok(spec)
+}
+
+fn pos_int(v: &TomlValue, ctx: &str, key: &str) -> Result<usize> {
+    v.as_int()
+        .filter(|&i| i >= 0)
+        .map(|i| i as usize)
+        .ok_or_else(|| OpdrError::config(format!("[{ctx}] `{key}` must be a non-negative integer")))
+}
+
+fn get_str<'a>(root: &'a TomlValue, key: &str) -> Result<&'a str> {
+    root.get_path(key)
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| OpdrError::config(format!("missing string key `{key}`")))
+}
+
+/// Serving configuration for the coordinator.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Worker threads in the pool.
+    pub workers: usize,
+    /// Dynamic batcher: max requests per batch.
+    pub max_batch: usize,
+    /// Dynamic batcher: max wait before flushing a partial batch.
+    pub max_wait_ms: u64,
+    /// Request queue capacity (backpressure bound).
+    pub queue_capacity: usize,
+    /// Default top-k for searches.
+    pub default_k: usize,
+    /// Use the PJRT accelerated distance path when artifacts are available.
+    pub use_runtime: bool,
+    /// Artifacts directory.
+    pub artifacts_dir: String,
+    /// Collections above this size are served by an IVF index.
+    pub ivf_threshold: usize,
+    /// IVF cells and probes.
+    pub ivf_nlist: usize,
+    /// Number of IVF cells probed per query.
+    pub ivf_nprobe: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            workers: 4,
+            max_batch: 32,
+            max_wait_ms: 2,
+            queue_capacity: 1024,
+            default_k: 10,
+            use_runtime: false,
+            artifacts_dir: "artifacts".to_string(),
+            ivf_threshold: 4096,
+            ivf_nlist: 64,
+            ivf_nprobe: 8,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Parse the `[serve]` table of a TOML doc (all keys optional).
+    pub fn from_toml_str(src: &str) -> Result<Self> {
+        let root = parse_toml(src)?;
+        let mut cfg = ServeConfig::default();
+        if let Some(t) = root.get_path("serve").and_then(|v| v.as_table()) {
+            for (key, val) in t {
+                match key.as_str() {
+                    "workers" => cfg.workers = pos_int(val, "serve", key)?,
+                    "max_batch" => cfg.max_batch = pos_int(val, "serve", key)?,
+                    "max_wait_ms" => cfg.max_wait_ms = pos_int(val, "serve", key)? as u64,
+                    "queue_capacity" => cfg.queue_capacity = pos_int(val, "serve", key)?,
+                    "default_k" => cfg.default_k = pos_int(val, "serve", key)?,
+                    "use_runtime" => {
+                        cfg.use_runtime = val
+                            .as_bool()
+                            .ok_or_else(|| OpdrError::config("serve.use_runtime must be a bool"))?
+                    }
+                    "artifacts_dir" => {
+                        cfg.artifacts_dir = val
+                            .as_str()
+                            .ok_or_else(|| OpdrError::config("serve.artifacts_dir must be a string"))?
+                            .to_string()
+                    }
+                    "ivf_threshold" => cfg.ivf_threshold = pos_int(val, "serve", key)?,
+                    "ivf_nlist" => cfg.ivf_nlist = pos_int(val, "serve", key)?,
+                    "ivf_nprobe" => cfg.ivf_nprobe = pos_int(val, "serve", key)?,
+                    other => {
+                        return Err(OpdrError::config(format!("serve: unknown key `{other}`")))
+                    }
+                }
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Validate invariants.
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            return Err(OpdrError::config("serve.workers must be >= 1"));
+        }
+        if self.max_batch == 0 {
+            return Err(OpdrError::config("serve.max_batch must be >= 1"));
+        }
+        if self.queue_capacity < self.max_batch {
+            return Err(OpdrError::config("serve.queue_capacity must be >= max_batch"));
+        }
+        if self.default_k == 0 {
+            return Err(OpdrError::config("serve.default_k must be >= 1"));
+        }
+        if self.ivf_nprobe > self.ivf_nlist {
+            return Err(OpdrError::config("serve.ivf_nprobe must be <= ivf_nlist"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+name = "fig1"
+out_dir = "bench_out"
+sweeps = ["materials", "flickr"]
+
+[materials]
+dataset = "materials-observable"
+sample_sizes = [10, 20, 30]
+k = 5
+metric = "l2sq"
+reducer = "pca"
+model = "clip"
+seed = 7
+dims_per_m = 8
+repeats = 2
+
+[flickr]
+dataset = "flickr30k"
+sample_sizes = [10, 50]
+k = 5
+"#;
+
+    #[test]
+    fn full_experiment_roundtrip() {
+        let cfg = ExperimentConfig::from_toml_str(DOC).unwrap();
+        assert_eq!(cfg.name, "fig1");
+        assert_eq!(cfg.sweeps.len(), 2);
+        assert_eq!(cfg.sweeps[0].sample_sizes, vec![10, 20, 30]);
+        assert_eq!(cfg.sweeps[0].seed, 7);
+        assert_eq!(cfg.sweeps[1].dataset, DatasetKind::Flickr30k);
+        // Defaults filled for the second sweep.
+        assert_eq!(cfg.sweeps[1].repeats, 3);
+    }
+
+    #[test]
+    fn missing_name_rejected() {
+        assert!(ExperimentConfig::from_toml_str("out_dir = \"x\"").is_err());
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let doc = "name = \"x\"\n[sweep]\nbogus = 1";
+        let e = ExperimentConfig::from_toml_str(doc).unwrap_err();
+        assert!(e.to_string().contains("bogus"));
+    }
+
+    #[test]
+    fn sweep_validation_enforced() {
+        // m <= k invalid.
+        let doc = "name = \"x\"\n[sweep]\nsample_sizes = [3]\nk = 5";
+        assert!(ExperimentConfig::from_toml_str(doc).is_err());
+    }
+
+    #[test]
+    fn serve_config_defaults_and_overrides() {
+        let cfg = ServeConfig::from_toml_str("[serve]\nworkers = 2\nmax_batch = 16").unwrap();
+        assert_eq!(cfg.workers, 2);
+        assert_eq!(cfg.max_batch, 16);
+        assert_eq!(cfg.max_wait_ms, ServeConfig::default().max_wait_ms);
+        // Empty doc = all defaults.
+        let d = ServeConfig::from_toml_str("").unwrap();
+        assert_eq!(d.workers, 4);
+    }
+
+    #[test]
+    fn serve_validation() {
+        assert!(ServeConfig::from_toml_str("[serve]\nworkers = 0").is_err());
+        assert!(ServeConfig::from_toml_str("[serve]\nqueue_capacity = 1\nmax_batch = 32").is_err());
+        assert!(ServeConfig::from_toml_str("[serve]\nivf_nprobe = 100\nivf_nlist = 4").is_err());
+    }
+}

@@ -1,0 +1,304 @@
+//! Minimal TOML-subset parser.
+//!
+//! Supports: `[table]` and `[nested.table]` headers, `key = value` pairs with
+//! string / integer / float / boolean / array values, `#` comments and blank
+//! lines. Unsupported TOML (multi-line strings, inline tables, dates, arrays
+//! of tables) is rejected with a line-numbered error — configs in this repo
+//! stay inside the subset on purpose.
+
+use crate::error::{OpdrError, Result};
+use std::collections::BTreeMap;
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    /// UTF-8 string.
+    Str(String),
+    /// 64-bit integer.
+    Int(i64),
+    /// 64-bit float.
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+    /// Homogeneous-enough array of values.
+    Array(Vec<TomlValue>),
+    /// Nested table.
+    Table(BTreeMap<String, TomlValue>),
+}
+
+impl TomlValue {
+    /// Get `self` as a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    /// Get `self` as an integer.
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    /// Get `self` as a float (ints coerce).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    /// Get `self` as a bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    /// Get `self` as an array slice.
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+    /// Get `self` as a table.
+    pub fn as_table(&self) -> Option<&BTreeMap<String, TomlValue>> {
+        match self {
+            TomlValue::Table(t) => Some(t),
+            _ => None,
+        }
+    }
+    /// Dotted-path lookup ("serve.batch.max_wait_ms").
+    pub fn get_path(&self, path: &str) -> Option<&TomlValue> {
+        let mut cur = self;
+        for part in path.split('.') {
+            cur = cur.as_table()?.get(part)?;
+        }
+        Some(cur)
+    }
+}
+
+/// Parse a TOML-subset document into a root table.
+pub fn parse_toml(src: &str) -> Result<TomlValue> {
+    let mut root: BTreeMap<String, TomlValue> = BTreeMap::new();
+    let mut current_path: Vec<String> = Vec::new();
+
+    for (lineno, raw) in src.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') || line.starts_with("[[") {
+                return Err(err(lineno, "malformed table header"));
+            }
+            let inner = &line[1..line.len() - 1];
+            if inner.is_empty() {
+                return Err(err(lineno, "empty table header"));
+            }
+            current_path = inner.split('.').map(|s| s.trim().to_string()).collect();
+            if current_path.iter().any(|s| s.is_empty()) {
+                return Err(err(lineno, "empty table path segment"));
+            }
+            // Materialize the table.
+            ensure_table(&mut root, &current_path, lineno)?;
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| err(lineno, "expected `key = value`"))?;
+        let key = line[..eq].trim().to_string();
+        if key.is_empty() {
+            return Err(err(lineno, "empty key"));
+        }
+        let value = parse_value(line[eq + 1..].trim(), lineno)?;
+        let table = ensure_table(&mut root, &current_path, lineno)?;
+        if table.insert(key.clone(), value).is_some() {
+            return Err(err(lineno, &format!("duplicate key `{key}`")));
+        }
+    }
+    Ok(TomlValue::Table(root))
+}
+
+fn err(lineno: usize, msg: &str) -> OpdrError {
+    OpdrError::config(format!("line {}: {msg}", lineno + 1))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn ensure_table<'a>(
+    root: &'a mut BTreeMap<String, TomlValue>,
+    path: &[String],
+    lineno: usize,
+) -> Result<&'a mut BTreeMap<String, TomlValue>> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| TomlValue::Table(BTreeMap::new()));
+        cur = match entry {
+            TomlValue::Table(t) => t,
+            _ => return Err(err(lineno, &format!("`{part}` is not a table"))),
+        };
+    }
+    Ok(cur)
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<TomlValue> {
+    if s.is_empty() {
+        return Err(err(lineno, "empty value"));
+    }
+    if s.starts_with('"') {
+        if s.len() < 2 || !s.ends_with('"') {
+            return Err(err(lineno, "unterminated string"));
+        }
+        let inner = &s[1..s.len() - 1];
+        if inner.contains('"') {
+            return Err(err(lineno, "escaped quotes unsupported"));
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            return Err(err(lineno, "unterminated array"));
+        }
+        let inner = s[1..s.len() - 1].trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(vec![]));
+        }
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            items.push(parse_value(part.trim(), lineno)?);
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    let cleaned = s.replace('_', "");
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(err(lineno, &format!("unrecognized value `{s}`")))
+}
+
+/// Split an array body on commas at bracket depth zero.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if depth == 0 && !in_str => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_tables() {
+        let doc = r#"
+# top comment
+name = "opdr"
+threads = 8
+ratio = 0.5
+debug = true
+
+[serve]
+port = 8080
+
+[serve.batch]
+max_wait_ms = 5
+"#;
+        let v = parse_toml(doc).unwrap();
+        assert_eq!(v.get_path("name").unwrap().as_str(), Some("opdr"));
+        assert_eq!(v.get_path("threads").unwrap().as_int(), Some(8));
+        assert_eq!(v.get_path("ratio").unwrap().as_float(), Some(0.5));
+        assert_eq!(v.get_path("debug").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get_path("serve.port").unwrap().as_int(), Some(8080));
+        assert_eq!(v.get_path("serve.batch.max_wait_ms").unwrap().as_int(), Some(5));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let v = parse_toml("ms = [10, 20, 30]\nnames = [\"a\", \"b\"]\nnested = [[1,2],[3]]").unwrap();
+        let ms = v.get_path("ms").unwrap().as_array().unwrap();
+        assert_eq!(ms.len(), 3);
+        assert_eq!(ms[2].as_int(), Some(30));
+        let names = v.get_path("names").unwrap().as_array().unwrap();
+        assert_eq!(names[1].as_str(), Some("b"));
+        let nested = v.get_path("nested").unwrap().as_array().unwrap();
+        assert_eq!(nested[0].as_array().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn int_underscores_and_floats() {
+        let v = parse_toml("big = 1_000_000\nf = 1e-3").unwrap();
+        assert_eq!(v.get_path("big").unwrap().as_int(), Some(1_000_000));
+        assert_eq!(v.get_path("f").unwrap().as_float(), Some(1e-3));
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let v = parse_toml("s = \"a # b\"  # real comment").unwrap();
+        assert_eq!(v.get_path("s").unwrap().as_str(), Some("a # b"));
+    }
+
+    #[test]
+    fn errors_are_line_numbered() {
+        let e = parse_toml("ok = 1\nbroken").unwrap_err();
+        assert!(e.to_string().contains("line 2"), "{e}");
+    }
+
+    #[test]
+    fn rejects_duplicates_and_bad_headers() {
+        assert!(parse_toml("a = 1\na = 2").is_err());
+        assert!(parse_toml("[[arr]]").is_err());
+        assert!(parse_toml("[]").is_err());
+        assert!(parse_toml("[a..b]").is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_values() {
+        assert!(parse_toml("x = nope").is_err());
+        assert!(parse_toml("x = \"unterminated").is_err());
+        assert!(parse_toml("x = [1, 2").is_err());
+    }
+
+    #[test]
+    fn int_coerces_to_float() {
+        let v = parse_toml("x = 3").unwrap();
+        assert_eq!(v.get_path("x").unwrap().as_float(), Some(3.0));
+    }
+}

@@ -1,0 +1,134 @@
+//! Dynamic batcher: vLLM-style collect-with-deadline.
+//!
+//! The scheduler thread drains the request queue into batches bounded by
+//! `max_batch` requests or `max_wait` since the first request of the batch
+//! arrived — whichever comes first. Small under load (latency) and full at
+//! saturation (throughput). Extracted into a pure-ish struct so the policy is
+//! unit-testable without threads.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batch collection policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Max requests per batch.
+    pub max_batch: usize,
+    /// Max time to wait after the first request before flushing.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Outcome of a collect call.
+#[derive(Debug, PartialEq, Eq)]
+pub enum CollectOutcome {
+    /// Got a (non-empty) batch.
+    Batch,
+    /// Queue closed and drained; shut down.
+    Closed,
+}
+
+/// Collect a batch from `rx` according to `policy` into `out` (cleared
+/// first). Blocks for the first item, then drains greedily until the batch is
+/// full or the deadline passes.
+pub fn collect_batch<T>(
+    rx: &Receiver<T>,
+    policy: BatchPolicy,
+    out: &mut Vec<T>,
+) -> CollectOutcome {
+    out.clear();
+    // Block for the first element.
+    match rx.recv() {
+        Ok(item) => out.push(item),
+        Err(_) => return CollectOutcome::Closed,
+    }
+    let deadline = Instant::now() + policy.max_wait;
+    while out.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => out.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => {
+                // Flush what we have; caller sees Closed on the next call.
+                break;
+            }
+        }
+    }
+    CollectOutcome::Batch
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn batches_up_to_max() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let mut out = Vec::new();
+        let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(50) };
+        assert_eq!(collect_batch(&rx, policy, &mut out), CollectOutcome::Batch);
+        assert_eq!(out, vec![0, 1, 2, 3]);
+        assert_eq!(collect_batch(&rx, policy, &mut out), CollectOutcome::Batch);
+        assert_eq!(out, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn flushes_partial_batch_on_deadline() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        let policy = BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(10) };
+        let mut out = Vec::new();
+        let start = Instant::now();
+        assert_eq!(collect_batch(&rx, policy, &mut out), CollectOutcome::Batch);
+        assert_eq!(out, vec![1]);
+        assert!(start.elapsed() >= Duration::from_millis(9));
+        assert!(start.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn closed_empty_queue_reports_closed() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        let mut out = Vec::new();
+        assert_eq!(collect_batch(&rx, BatchPolicy::default(), &mut out), CollectOutcome::Closed);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn disconnect_mid_batch_flushes_items() {
+        let (tx, rx) = channel();
+        tx.send(7).unwrap();
+        tx.send(8).unwrap();
+        drop(tx);
+        let policy = BatchPolicy { max_batch: 10, max_wait: Duration::from_millis(100) };
+        let mut out = Vec::new();
+        assert_eq!(collect_batch(&rx, policy, &mut out), CollectOutcome::Batch);
+        assert_eq!(out, vec![7, 8]);
+        assert_eq!(collect_batch(&rx, policy, &mut out), CollectOutcome::Closed);
+    }
+
+    #[test]
+    fn preserves_arrival_order() {
+        let (tx, rx) = channel();
+        for i in 0..32 {
+            tx.send(i).unwrap();
+        }
+        let mut out = Vec::new();
+        let policy = BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(5) };
+        collect_batch(&rx, policy, &mut out);
+        let sorted: Vec<i32> = { let mut s = out.clone(); s.sort(); s };
+        assert_eq!(out, sorted);
+    }
+}

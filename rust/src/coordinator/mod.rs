@@ -1,0 +1,24 @@
+//! The serving coordinator — Layer 3 of the stack.
+//!
+//! A vLLM-router-style front end for multimodal KNN retrieval:
+//!
+//! * requests enter a **bounded queue** (backpressure: the submit call fails
+//!   fast when the queue is full);
+//! * a **scheduler thread** owns all collection state and the PJRT engine,
+//!   drains the queue through the **dynamic batcher** ([`batcher`]) and
+//!   executes search batches either on the PJRT `pairwise_topk` artifact or
+//!   on the pure-Rust scoring path parallelized over a **worker pool**
+//!   ([`pool`]);
+//! * OPDR is a first-class verb: `BuildReduced` calibrates the planner on the
+//!   collection, picks `dim(Y)` for the requested accuracy and swaps the
+//!   serving copy to the reduced space.
+
+pub mod batcher;
+pub mod pool;
+pub mod server;
+pub mod state;
+
+pub use batcher::{collect_batch, BatchPolicy, CollectOutcome};
+pub use pool::ThreadPool;
+pub use server::{Coordinator, SearchResult};
+pub use state::{Collection, Collections, ReducedState};

@@ -1,0 +1,160 @@
+//! Minimal worker thread pool (no `tokio`/`rayon` offline).
+//!
+//! Fixed worker count, bounded in-flight via the job channel, `scope`-style
+//! chunked parallel map for the scoring hot path.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed-size thread pool.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for ThreadPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ThreadPool").field("workers", &self.workers.len()).finish()
+    }
+}
+
+impl ThreadPool {
+    /// Spawn `size` workers (at least 1).
+    pub fn new(size: usize) -> ThreadPool {
+        let size = size.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..size)
+            .map(|i| {
+                let rx: Arc<Mutex<Receiver<Job>>> = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("opdr-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // channel closed
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers }
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .as_ref()
+            .expect("pool not shut down")
+            .send(Box::new(f))
+            .expect("worker channel open");
+    }
+
+    /// Parallel map over chunks of `0..n`: calls `f(range)` on the pool and
+    /// collects results in submission order. `f` must be cloneable state-free
+    /// work (wrap shared inputs in `Arc`).
+    pub fn map_chunks<R, F>(&self, n: usize, chunk: usize, f: F) -> Vec<R>
+    where
+        R: Send + 'static,
+        F: Fn(std::ops::Range<usize>) -> R + Send + Sync + 'static,
+    {
+        if n == 0 {
+            return vec![];
+        }
+        let chunk = chunk.max(1);
+        let f = Arc::new(f);
+        let (tx, rx) = channel();
+        let mut count = 0usize;
+        let mut start = 0usize;
+        while start < n {
+            let end = (start + chunk).min(n);
+            let tx = tx.clone();
+            let f = Arc::clone(&f);
+            let idx = count;
+            self.execute(move || {
+                let r = f(start..end);
+                let _ = tx.send((idx, r));
+            });
+            count += 1;
+            start = end;
+        }
+        drop(tx);
+        let mut results: Vec<(usize, R)> = rx.iter().collect();
+        results.sort_by_key(|&(i, _)| i);
+        results.into_iter().map(|(_, r)| r).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        // Close the channel; workers exit after draining.
+        self.tx.take();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = channel();
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                let _ = tx.send(());
+            });
+        }
+        drop(tx);
+        let done = rx.iter().count();
+        assert_eq!(done, 100);
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_chunks_ordered_and_complete() {
+        let pool = ThreadPool::new(3);
+        let out = pool.map_chunks(10, 3, |r| r.clone().sum::<usize>());
+        // chunks: 0..3, 3..6, 6..9, 9..10
+        assert_eq!(out, vec![3, 12, 21, 9]);
+    }
+
+    #[test]
+    fn map_chunks_empty() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<usize> = pool.map_chunks(0, 4, |_| 0);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| std::thread::sleep(std::time::Duration::from_millis(5)));
+        drop(pool); // must not hang or panic
+    }
+
+    #[test]
+    fn size_floor_is_one() {
+        assert_eq!(ThreadPool::new(0).size(), 1);
+    }
+}

@@ -1,0 +1,588 @@
+//! The coordinator server: request types, scheduler loop, public handle.
+
+use crate::config::ServeConfig;
+use crate::coordinator::batcher::{collect_batch, BatchPolicy, CollectOutcome};
+use crate::coordinator::pool::ThreadPool;
+use crate::coordinator::state::Collections;
+use crate::error::{OpdrError, Result};
+use crate::knn::Neighbor;
+use crate::metrics::Metric;
+use crate::runtime::Engine;
+use crate::telemetry::Metrics;
+use crate::util::Stopwatch;
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// One search hit list.
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    /// Ranked neighbors (ascending distance).
+    pub neighbors: Vec<Neighbor>,
+    /// Dimensionality the query was scored in (reduced or full).
+    pub scored_dim: usize,
+}
+
+enum Request {
+    Search {
+        collection: String,
+        query: Vec<f32>,
+        k: usize,
+        resp: Sender<Result<SearchResult>>,
+        submitted: Stopwatch,
+    },
+    Admin(AdminOp, Sender<Result<String>>),
+    Shutdown,
+}
+
+enum AdminOp {
+    CreateCollection { name: String, dim: usize, metric: Metric },
+    Ingest { collection: String, vectors: Vec<f32> },
+    BuildReduced { collection: String, target_accuracy: f64, k: usize },
+    BuildIndex { collection: String },
+    Stats,
+}
+
+/// Public handle to a running coordinator. Cloneable; dropping the last
+/// handle does *not* stop the server — call [`Coordinator::shutdown`].
+pub struct Coordinator {
+    tx: SyncSender<Request>,
+    scheduler: Option<JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+    cfg: ServeConfig,
+}
+
+impl std::fmt::Debug for Coordinator {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Coordinator").field("cfg", &self.cfg).finish()
+    }
+}
+
+impl Coordinator {
+    /// Start the coordinator. If `cfg.use_runtime` is set, the scheduler
+    /// thread creates a PJRT [`Engine`] over `cfg.artifacts_dir` and uses the
+    /// `pairwise_topk_*` artifacts for batch scoring where shapes allow;
+    /// otherwise (or on fallback) scoring runs on the worker pool.
+    pub fn start(cfg: ServeConfig) -> Result<Coordinator> {
+        cfg.validate()?;
+        let (tx, rx) = sync_channel::<Request>(cfg.queue_capacity);
+        let metrics = Arc::new(Metrics::new());
+        let m2 = Arc::clone(&metrics);
+        let cfg2 = cfg.clone();
+        let scheduler = std::thread::Builder::new()
+            .name("opdr-scheduler".to_string())
+            .spawn(move || scheduler_loop(rx, cfg2, m2))
+            .map_err(|e| OpdrError::coordinator(format!("spawn scheduler: {e}")))?;
+        Ok(Coordinator { tx, scheduler: Some(scheduler), metrics, cfg })
+    }
+
+    /// Shared metrics (request counters, latency histograms).
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Serving config used at start.
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    fn admin(&self, op: AdminOp) -> Result<String> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        self.tx
+            .send(Request::Admin(op, tx))
+            .map_err(|_| OpdrError::coordinator("coordinator stopped"))?;
+        rx.recv().map_err(|_| OpdrError::coordinator("coordinator dropped response"))?
+    }
+
+    /// Create a collection.
+    pub fn create_collection(&self, name: &str, dim: usize, metric: Metric) -> Result<()> {
+        self.admin(AdminOp::CreateCollection { name: name.into(), dim, metric }).map(|_| ())
+    }
+
+    /// Ingest row-major vectors.
+    pub fn ingest(&self, collection: &str, vectors: Vec<f32>) -> Result<usize> {
+        let r = self.admin(AdminOp::Ingest { collection: collection.into(), vectors })?;
+        r.parse::<usize>()
+            .map_err(|_| OpdrError::coordinator("bad ingest response"))
+    }
+
+    /// Build the OPDR-reduced serving copy for a target accuracy; returns the
+    /// planned dimension.
+    pub fn build_reduced(&self, collection: &str, target_accuracy: f64, k: usize) -> Result<usize> {
+        let r = self.admin(AdminOp::BuildReduced {
+            collection: collection.into(),
+            target_accuracy,
+            k,
+        })?;
+        r.parse::<usize>()
+            .map_err(|_| OpdrError::coordinator("bad build_reduced response"))
+    }
+
+    /// Build the IVF index on the current serving vectors.
+    pub fn build_index(&self, collection: &str) -> Result<()> {
+        self.admin(AdminOp::BuildIndex { collection: collection.into() }).map(|_| ())
+    }
+
+    /// Human-readable stats snapshot.
+    pub fn stats(&self) -> Result<String> {
+        self.admin(AdminOp::Stats)
+    }
+
+    /// Submit a search; blocks for the result. Fails fast with a
+    /// backpressure error when the queue is full.
+    pub fn search(&self, collection: &str, query: Vec<f32>, k: usize) -> Result<SearchResult> {
+        let rx = self.search_async(collection, query, k)?;
+        rx.recv()
+            .map_err(|_| OpdrError::coordinator("coordinator dropped response"))?
+    }
+
+    /// Submit a search; returns the response channel immediately (the caller
+    /// can pipeline many requests — this is what the benches do).
+    pub fn search_async(
+        &self,
+        collection: &str,
+        query: Vec<f32>,
+        k: usize,
+    ) -> Result<Receiver<Result<SearchResult>>> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let req = Request::Search {
+            collection: collection.into(),
+            query,
+            k,
+            resp: tx,
+            submitted: Stopwatch::start(),
+        };
+        match self.tx.try_send(req) {
+            Ok(()) => {
+                self.metrics.requests.inc();
+                Ok(rx)
+            }
+            Err(TrySendError::Full(_)) => {
+                self.metrics.rejected.inc();
+                Err(OpdrError::coordinator("queue full (backpressure)"))
+            }
+            Err(TrySendError::Disconnected(_)) => Err(OpdrError::coordinator("coordinator stopped")),
+        }
+    }
+
+    /// Stop the scheduler and wait for it to exit.
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(h) = self.scheduler.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(h) = self.scheduler.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn scheduler_loop(rx: Receiver<Request>, cfg: ServeConfig, metrics: Arc<Metrics>) {
+    let mut collections = Collections::new();
+    let pool = ThreadPool::new(cfg.workers);
+    // The engine is created lazily so a missing artifacts dir only matters if
+    // runtime execution was requested.
+    let engine: Option<Engine> = if cfg.use_runtime {
+        match Engine::new(&cfg.artifacts_dir) {
+            Ok(e) => Some(e),
+            Err(err) => {
+                eprintln!("[coordinator] runtime disabled: {err}");
+                None
+            }
+        }
+    } else {
+        None
+    };
+
+    let policy = BatchPolicy {
+        max_batch: cfg.max_batch,
+        max_wait: Duration::from_millis(cfg.max_wait_ms),
+    };
+    let mut batch: Vec<Request> = Vec::with_capacity(cfg.max_batch);
+
+    loop {
+        match collect_batch(&rx, policy, &mut batch) {
+            CollectOutcome::Closed => break,
+            CollectOutcome::Batch => {}
+        }
+        // Partition: admin ops execute serially in arrival order relative to
+        // the searches around them would require per-collection versioning;
+        // we keep the simpler (and documented) model: admin ops in a batch
+        // run first, then searches.
+        let mut searches = Vec::new();
+        let mut stop = false;
+        for req in batch.drain(..) {
+            match req {
+                Request::Shutdown => stop = true,
+                Request::Admin(op, resp) => {
+                    let r = handle_admin(op, &mut collections, &cfg, &metrics);
+                    let _ = resp.send(r);
+                }
+                s @ Request::Search { .. } => searches.push(s),
+            }
+        }
+        if !searches.is_empty() {
+            execute_search_batch(searches, &collections, &pool, engine.as_ref(), &cfg, &metrics);
+        }
+        if stop {
+            break;
+        }
+    }
+}
+
+fn handle_admin(
+    op: AdminOp,
+    collections: &mut Collections,
+    cfg: &ServeConfig,
+    metrics: &Metrics,
+) -> Result<String> {
+    match op {
+        AdminOp::CreateCollection { name, dim, metric } => {
+            collections.create(&name, dim, metric)?;
+            Ok("ok".into())
+        }
+        AdminOp::Ingest { collection, vectors } => {
+            let n = collections.get_mut(&collection)?.ingest(&vectors)?;
+            Ok(n.to_string())
+        }
+        AdminOp::BuildReduced { collection, target_accuracy, k } => {
+            let c = collections.get_mut(&collection)?;
+            let r = c.build_reduced(target_accuracy, k, 64, 0xC0DE)?;
+            let dim = r.model.target_dim();
+            // Re-index if the collection is large enough.
+            if c.len() >= cfg.ivf_threshold {
+                c.build_index(cfg.ivf_nlist, 0xC0DE)?;
+            }
+            Ok(dim.to_string())
+        }
+        AdminOp::BuildIndex { collection } => {
+            collections.get_mut(&collection)?.build_index(cfg.ivf_nlist, 0xC0DE)?;
+            Ok("ok".into())
+        }
+        AdminOp::Stats => {
+            let mut out = String::new();
+            for name in collections.names() {
+                let c = collections.get(&name)?;
+                let (_, sdim) = c.serving_vectors();
+                out.push_str(&format!(
+                    "collection {name}: n={} dim={} serving_dim={} indexed={}\n",
+                    c.len(),
+                    c.dim,
+                    sdim,
+                    c.index.is_some()
+                ));
+            }
+            out.push_str(&format!(
+                "requests={} completed={} rejected={} batches={} latency[{}] exec[{}]",
+                metrics.requests.get(),
+                metrics.completed.get(),
+                metrics.rejected.get(),
+                metrics.batches.get(),
+                metrics.latency.summary(),
+                metrics.exec_latency.summary(),
+            ));
+            Ok(out)
+        }
+    }
+}
+
+fn execute_search_batch(
+    searches: Vec<Request>,
+    collections: &Collections,
+    pool: &ThreadPool,
+    engine: Option<&Engine>,
+    cfg: &ServeConfig,
+    metrics: &Metrics,
+) {
+    metrics.batches.inc();
+    let exec_sw = Stopwatch::start();
+
+    // Group by collection so each group scores against one vector set.
+    use std::collections::HashMap;
+    struct Item {
+        query: Vec<f32>,
+        k: usize,
+        resp: Sender<Result<SearchResult>>,
+        submitted: Stopwatch,
+    }
+    let mut groups: HashMap<String, Vec<Item>> = HashMap::new();
+    for req in searches {
+        if let Request::Search { collection, query, k, resp, submitted } = req {
+            groups.entry(collection).or_default().push(Item { query, k, resp, submitted });
+        }
+    }
+
+    for (cname, items) in groups {
+        let coll = match collections.get(&cname) {
+            Ok(c) => c,
+            Err(e) => {
+                let msg = e.to_string();
+                for it in items {
+                    let _ = it.resp.send(Err(OpdrError::coordinator(msg.clone())));
+                    let _ = it.submitted; // latency not recorded for failures
+                }
+                continue;
+            }
+        };
+        let (vecs, sdim) = coll.serving_vectors();
+        metrics.vectors_scored.add((vecs.len() / sdim.max(1)) as u64 * items.len() as u64);
+
+        // Try the PJRT artifact path for eligible groups (no IVF index; the
+        // engine path scores exhaustively).
+        let engine_out = engine.and_then(|eng| {
+            crate::coordinator::server::runtime_batch_search(eng, coll, &items_queries(&items), &items_ks(&items))
+                .ok()
+        });
+
+        if let Some(results) = engine_out {
+            for (it, res) in items.into_iter().zip(results) {
+                metrics.completed.inc();
+                metrics.latency.record(it.submitted.elapsed());
+                let _ = it.resp.send(Ok(res));
+            }
+            continue;
+        }
+
+        // CPU path: project queries, then parallel per-query scoring.
+        let projected: Vec<Result<Vec<f32>>> =
+            items.iter().map(|it| coll.project_query(&it.query)).collect();
+        let n = items.len();
+        let shared: Arc<Vec<(Vec<f32>, usize)>> = Arc::new(
+            projected
+                .iter()
+                .zip(&items)
+                .map(|(p, it)| match p {
+                    Ok(q) => (q.clone(), it.k),
+                    Err(_) => (Vec::new(), it.k),
+                })
+                .collect(),
+        );
+        // Shared snapshot (perf-pass L3-2): built once per serving state, not
+        // per batch — full-dim collections were paying a multi-MB memcpy here.
+        let vecs_arc: Arc<Vec<f32>> = coll.serving_arc();
+        let metric = coll.metric;
+        let has_index = coll.index.is_some();
+        let nprobe = cfg.ivf_nprobe;
+        let results: Vec<Vec<Result<SearchResult>>> = if has_index {
+            // Index search is cheap; do it inline (index isn't Send-shareable
+            // without cloning the whole thing).
+            vec![shared
+                .iter()
+                .map(|(q, k)| {
+                    if q.is_empty() {
+                        Err(OpdrError::shape("query projection failed"))
+                    } else {
+                        coll.search_projected(q, *k, nprobe)
+                            .map(|neighbors| SearchResult { neighbors, scored_dim: sdim })
+                    }
+                })
+                .collect()]
+        } else {
+            let chunk = n.div_ceil(pool.size().max(1)).max(1);
+            pool.map_chunks(n, chunk, move |range| {
+                range
+                    .map(|i| {
+                        let (q, k) = &shared[i];
+                        if q.is_empty() {
+                            return Err(OpdrError::shape("query projection failed"));
+                        }
+                        crate::knn::knn_indices(q, &vecs_arc, sdim, *k, metric)
+                            .map(|neighbors| SearchResult { neighbors, scored_dim: sdim })
+                    })
+                    .collect::<Vec<_>>()
+            })
+        };
+
+        let flat: Vec<Result<SearchResult>> = results.into_iter().flatten().collect();
+        for (it, res) in items.into_iter().zip(flat) {
+            metrics.completed.inc();
+            metrics.latency.record(it.submitted.elapsed());
+            let _ = it.resp.send(res);
+        }
+
+        fn items_queries(items: &[Item]) -> Vec<Vec<f32>> {
+            items.iter().map(|i| i.query.clone()).collect()
+        }
+        fn items_ks(items: &[Item]) -> Vec<usize> {
+            items.iter().map(|i| i.k).collect()
+        }
+    }
+    metrics.exec_latency.record(exec_sw.elapsed());
+}
+
+/// Batch search through the `pairwise_topk_*` PJRT artifact. Returns one
+/// [`SearchResult`] per query. Errors (shape too large for the artifact,
+/// missing artifact) make the caller fall back to the CPU path.
+pub fn runtime_batch_search(
+    engine: &Engine,
+    coll: &crate::coordinator::state::Collection,
+    queries: &[Vec<f32>],
+    ks: &[usize],
+) -> Result<Vec<SearchResult>> {
+    use crate::runtime::ArrayF32;
+    let artifact = match coll.metric {
+        Metric::SqEuclidean | Metric::Euclidean => "pairwise_topk_sqeuclidean",
+        Metric::Cosine => "pairwise_topk_cosine",
+        Metric::Manhattan => "pairwise_topk_manhattan",
+        Metric::NegDot => return Err(OpdrError::runtime("no negdot artifact")),
+    };
+    let spec = engine.manifest().get(artifact)?.clone();
+    // Artifact shapes: queries f32[Q, D], base f32[N, D] → dist f32[Q, K], idx f32[Q, K].
+    let (q_cap, d_cap) = (spec.inputs[0].dims[0], spec.inputs[0].dims[1]);
+    let n_cap = spec.inputs[1].dims[0];
+    let k_cap = spec.outputs[0].dims[1];
+
+    // Perf-pass Runtime-1: the padded base block + mask are cached in the
+    // collection and rebuilt only when the serving state changes.
+    let padded = coll.padded_base(n_cap, d_cap)?;
+    let (n, sdim) = (padded.n, padded.dim);
+    if n == 0 || queries.len() > q_cap {
+        return Err(OpdrError::runtime("batch exceeds artifact capacity"));
+    }
+    if ks.iter().any(|&k| k > k_cap || k > n) {
+        return Err(OpdrError::runtime("k exceeds artifact top-k"));
+    }
+
+    // Project queries into serving space and pad.
+    let mut qblock = vec![0.0f32; queries.len() * sdim];
+    for (i, q) in queries.iter().enumerate() {
+        let p = coll.project_query(q)?;
+        qblock[i * sdim..(i + 1) * sdim].copy_from_slice(&p);
+    }
+    let q_in = ArrayF32::padded_2d(&qblock, queries.len(), sdim, q_cap, d_cap)?;
+
+    let out = engine.execute(artifact, &[q_in, padded.base.clone(), padded.mask.clone()])?;
+    let dists = &out[0];
+    let idxs = &out[1];
+
+    let mut results = Vec::with_capacity(queries.len());
+    for (qi, &k) in ks.iter().enumerate().take(queries.len()) {
+        let mut neighbors = Vec::with_capacity(k);
+        for j in 0..k {
+            let idx = idxs.data[qi * k_cap + j] as usize;
+            let distance = dists.data[qi * k_cap + j];
+            if idx < n {
+                neighbors.push(Neighbor { index: idx, distance });
+            }
+        }
+        results.push(SearchResult { neighbors, scored_dim: sdim });
+    }
+    Ok(results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synth, DatasetKind};
+
+    fn test_cfg() -> ServeConfig {
+        ServeConfig { workers: 2, max_batch: 8, max_wait_ms: 1, use_runtime: false, ..Default::default() }
+    }
+
+    #[test]
+    fn lifecycle_create_ingest_search() {
+        let coord = Coordinator::start(test_cfg()).unwrap();
+        coord.create_collection("c", 16, Metric::SqEuclidean).unwrap();
+        let set = synth::generate(DatasetKind::MaterialsObservable, 50, 16, 1);
+        assert_eq!(coord.ingest("c", set.data().to_vec()).unwrap(), 50);
+
+        let q = set.vector(3).to_vec();
+        let res = coord.search("c", q, 5).unwrap();
+        assert_eq!(res.neighbors.len(), 5);
+        assert_eq!(res.neighbors[0].index, 3); // self is nearest
+        assert_eq!(res.scored_dim, 16);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn search_unknown_collection_errors() {
+        let coord = Coordinator::start(test_cfg()).unwrap();
+        let e = coord.search("missing", vec![0.0; 4], 2);
+        assert!(e.is_err());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn build_reduced_swaps_serving_dim() {
+        let coord = Coordinator::start(test_cfg()).unwrap();
+        coord.create_collection("c", 64, Metric::SqEuclidean).unwrap();
+        let set = synth::generate(DatasetKind::MaterialsObservable, 70, 64, 2);
+        coord.ingest("c", set.data().to_vec()).unwrap();
+        let dim = coord.build_reduced("c", 0.85, 5).unwrap();
+        assert!(dim >= 1 && dim < 64, "planned dim {dim}");
+        let res = coord.search("c", set.vector(0).to_vec(), 3).unwrap();
+        assert_eq!(res.scored_dim, dim);
+        assert_eq!(res.neighbors[0].index, 0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn pipelined_async_searches_all_complete() {
+        let coord = Coordinator::start(test_cfg()).unwrap();
+        coord.create_collection("c", 8, Metric::SqEuclidean).unwrap();
+        let set = synth::generate(DatasetKind::Flickr30k, 40, 8, 3);
+        coord.ingest("c", set.data().to_vec()).unwrap();
+
+        let mut rxs = Vec::new();
+        for i in 0..30 {
+            rxs.push(coord.search_async("c", set.vector(i % 40).to_vec(), 4).unwrap());
+        }
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv().unwrap().unwrap();
+            assert_eq!(r.neighbors[0].index, i % 40);
+        }
+        assert_eq!(coord.metrics().completed.get(), 30);
+        assert!(coord.metrics().batches.get() >= 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let cfg = ServeConfig {
+            workers: 1,
+            max_batch: 2,
+            queue_capacity: 2,
+            max_wait_ms: 50,
+            use_runtime: false,
+            ..Default::default()
+        };
+        let coord = Coordinator::start(cfg).unwrap();
+        coord.create_collection("c", 4, Metric::SqEuclidean).unwrap();
+        // Big enough that scoring takes a moment.
+        let set = synth::generate(DatasetKind::OmniCorpus, 2000, 4, 4);
+        coord.ingest("c", set.data().to_vec()).unwrap();
+        let mut rejected = 0;
+        let mut rxs = Vec::new();
+        for i in 0..200 {
+            match coord.search_async("c", set.vector(i % 100).to_vec(), 2) {
+                Ok(rx) => rxs.push(rx),
+                Err(_) => rejected += 1,
+            }
+        }
+        // Drain accepted ones.
+        for rx in rxs {
+            let _ = rx.recv();
+        }
+        // With a queue of 2 and slow scoring, some must have been rejected.
+        assert!(rejected > 0, "expected backpressure rejections");
+        assert_eq!(coord.metrics().rejected.get(), rejected as u64);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn stats_reports_collections() {
+        let coord = Coordinator::start(test_cfg()).unwrap();
+        coord.create_collection("x", 8, Metric::Cosine).unwrap();
+        let s = coord.stats().unwrap();
+        assert!(s.contains("collection x"), "{s}");
+        assert!(s.contains("requests="));
+        coord.shutdown();
+    }
+}

@@ -1,0 +1,379 @@
+//! Collection state: vectors, fitted reducers, optional ANN index.
+
+use crate::data::EmbeddingSet;
+use crate::error::{OpdrError, Result};
+use crate::knn::{IvfFlatIndex, Neighbor};
+use crate::metrics::Metric;
+use crate::opdr::Planner;
+use crate::reduction::{Pca, PcaModel, ReducerKind};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Zero-padded fixed-shape copy of the serving vectors for the PJRT
+/// `pairwise_topk` artifact (perf-pass Runtime-1: built once per serving
+/// state instead of per batch).
+#[derive(Debug, Clone)]
+pub struct PaddedBase {
+    /// Base block padded to `[n_cap, d_cap]`.
+    pub base: crate::runtime::ArrayF32,
+    /// Padding mask `[n_cap]` (1.0 on dead rows).
+    pub mask: crate::runtime::ArrayF32,
+    /// Live rows.
+    pub n: usize,
+    /// Live dims.
+    pub dim: usize,
+}
+
+/// A named vector collection with optional OPDR-reduced serving copy.
+#[derive(Debug)]
+pub struct Collection {
+    /// Collection name.
+    pub name: String,
+    /// Full-dimensional vectors.
+    pub dim: usize,
+    data: Vec<f32>,
+    /// Serving metric.
+    pub metric: Metric,
+    /// OPDR-reduced serving state, if built.
+    pub reduced: Option<ReducedState>,
+    /// IVF index over the active serving vectors (built past a threshold).
+    pub index: Option<IvfFlatIndex>,
+    /// Shared snapshot of the serving vectors for worker threads (perf-pass
+    /// L3-2: avoids cloning the whole block every batch). Invalidated on
+    /// ingest / build_reduced.
+    serving_cache: Mutex<Option<Arc<Vec<f32>>>>,
+    /// Cached padded block for the PJRT artifact path, keyed by (n_cap, d_cap).
+    padded_cache: Mutex<Option<((usize, usize), Arc<PaddedBase>)>>,
+}
+
+/// The reduced-dimension serving copy plus the model that produced it.
+#[derive(Debug)]
+pub struct ReducedState {
+    /// Fitted projection (also used for query-time projection).
+    pub model: PcaModel,
+    /// Reduced vectors, row-major `n × reduced_dim`.
+    pub data: Vec<f32>,
+    /// The planner fit used to choose the dimension.
+    pub planner: Planner,
+    /// Accuracy target requested.
+    pub target_accuracy: f64,
+}
+
+impl Collection {
+    /// New empty collection.
+    pub fn new(name: impl Into<String>, dim: usize, metric: Metric) -> Result<Self> {
+        if dim == 0 {
+            return Err(OpdrError::shape("collection: dim must be > 0"));
+        }
+        Ok(Collection {
+            name: name.into(),
+            dim,
+            data: Vec::new(),
+            metric,
+            reduced: None,
+            index: None,
+            serving_cache: Mutex::new(None),
+            padded_cache: Mutex::new(None),
+        })
+    }
+
+    /// Number of vectors.
+    pub fn len(&self) -> usize {
+        self.data.len() / self.dim
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Raw full-dimensional vectors.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Append vectors (row-major, multiple of `dim`). Invalidates any reduced
+    /// copy / index (they must be rebuilt).
+    pub fn ingest(&mut self, vectors: &[f32]) -> Result<usize> {
+        if vectors.len() % self.dim != 0 {
+            return Err(OpdrError::shape(format!(
+                "ingest into `{}`: {} floats is not a multiple of dim {}",
+                self.name,
+                vectors.len(),
+                self.dim
+            )));
+        }
+        self.data.extend_from_slice(vectors);
+        self.reduced = None;
+        self.index = None;
+        self.invalidate_caches();
+        Ok(vectors.len() / self.dim)
+    }
+
+    fn invalidate_caches(&self) {
+        *self.serving_cache.lock().unwrap() = None;
+        *self.padded_cache.lock().unwrap() = None;
+    }
+
+    /// Shared snapshot of the serving vectors (built lazily, invalidated on
+    /// state changes). Worker threads score against this without copying.
+    pub fn serving_arc(&self) -> Arc<Vec<f32>> {
+        let mut guard = self.serving_cache.lock().unwrap();
+        if let Some(arc) = guard.as_ref() {
+            return Arc::clone(arc);
+        }
+        let (vecs, _) = self.serving_vectors();
+        let arc = Arc::new(vecs.to_vec());
+        *guard = Some(Arc::clone(&arc));
+        arc
+    }
+
+    /// Cached zero-padded serving block for the PJRT artifact path.
+    pub fn padded_base(&self, n_cap: usize, d_cap: usize) -> Result<Arc<PaddedBase>> {
+        let mut guard = self.padded_cache.lock().unwrap();
+        if let Some((key, arc)) = guard.as_ref() {
+            if *key == (n_cap, d_cap) {
+                return Ok(Arc::clone(arc));
+            }
+        }
+        let (vecs, dim) = self.serving_vectors();
+        let n = vecs.len() / dim.max(1);
+        if n > n_cap || dim > d_cap {
+            return Err(OpdrError::runtime("collection exceeds artifact capacity"));
+        }
+        let base = crate::runtime::ArrayF32::padded_2d(vecs, n, dim, n_cap, d_cap)?;
+        let mut mask = vec![0.0f32; n_cap];
+        for m in mask.iter_mut().skip(n) {
+            *m = 1.0;
+        }
+        let mask = crate::runtime::ArrayF32::new(mask, vec![n_cap])?;
+        let arc = Arc::new(PaddedBase { base, mask, n, dim });
+        *guard = Some(((n_cap, d_cap), Arc::clone(&arc)));
+        Ok(arc)
+    }
+
+    /// Build the OPDR-reduced serving copy: calibrate the planner on (a
+    /// sample of) this collection, choose `dim(Y)` for `target_accuracy`,
+    /// fit PCA at that dimension and project everything.
+    pub fn build_reduced(
+        &mut self,
+        target_accuracy: f64,
+        k: usize,
+        calibration_sample: usize,
+        seed: u64,
+    ) -> Result<&ReducedState> {
+        let n = self.len();
+        if n < k + 2 {
+            return Err(OpdrError::data(format!(
+                "collection `{}` has {n} vectors; need > k+1 = {}",
+                self.name,
+                k + 1
+            )));
+        }
+        // Calibrate on a subsample to bound the sweep cost.
+        let sample_n = calibration_sample.clamp(k + 2, n);
+        let mut rng = crate::util::Rng::new(seed);
+        let idx = rng.sample_indices(n, sample_n);
+        let mut sample = Vec::with_capacity(sample_n * self.dim);
+        for &i in &idx {
+            sample.extend_from_slice(&self.data[i * self.dim..(i + 1) * self.dim]);
+        }
+        let planner =
+            Planner::calibrate(&sample, self.dim, k, self.metric, ReducerKind::Pca, seed)?;
+        let target_dim = planner.dim_for_accuracy(target_accuracy, sample_n).min(self.dim);
+
+        let model = Pca::new().fit(&sample, self.dim, target_dim)?;
+        let data = model.project(&self.data)?;
+        self.reduced = Some(ReducedState { model, data, planner, target_accuracy });
+        self.index = None;
+        self.invalidate_caches();
+        Ok(self.reduced.as_ref().unwrap())
+    }
+
+    /// Build (or rebuild) the IVF index over the active serving vectors.
+    pub fn build_index(&mut self, nlist: usize, seed: u64) -> Result<()> {
+        let (vecs, dim) = self.serving_vectors();
+        if vecs.is_empty() {
+            return Err(OpdrError::data("build_index: empty collection"));
+        }
+        self.index = Some(IvfFlatIndex::build(vecs, dim, self.metric, nlist, 10, seed)?);
+        Ok(())
+    }
+
+    /// The vectors queries are scored against: reduced copy if built, else
+    /// the full-dimensional data.
+    pub fn serving_vectors(&self) -> (&[f32], usize) {
+        match &self.reduced {
+            Some(r) => (&r.data, r.model.target_dim()),
+            None => (&self.data, self.dim),
+        }
+    }
+
+    /// Project a full-dimensional query into the serving space.
+    pub fn project_query(&self, query: &[f32]) -> Result<Vec<f32>> {
+        if query.len() != self.dim {
+            return Err(OpdrError::shape(format!(
+                "query dim {} != collection dim {}",
+                query.len(),
+                self.dim
+            )));
+        }
+        match &self.reduced {
+            Some(r) => r.model.project(query),
+            None => Ok(query.to_vec()),
+        }
+    }
+
+    /// Exact (or IVF-approximate, if indexed) k-NN search for a single
+    /// *already-projected* query.
+    pub fn search_projected(&self, query: &[f32], k: usize, nprobe: usize) -> Result<Vec<Neighbor>> {
+        let (vecs, dim) = self.serving_vectors();
+        if query.len() != dim {
+            return Err(OpdrError::shape("search: projected query dim mismatch"));
+        }
+        if let Some(index) = &self.index {
+            index.search(query, k, nprobe)
+        } else {
+            crate::knn::knn_indices(query, vecs, dim, k, self.metric)
+        }
+    }
+}
+
+/// All collections, keyed by name.
+#[derive(Debug, Default)]
+pub struct Collections {
+    map: HashMap<String, Collection>,
+}
+
+impl Collections {
+    /// Empty registry.
+    pub fn new() -> Self {
+        Collections::default()
+    }
+
+    /// Create a collection; errors if the name exists.
+    pub fn create(&mut self, name: &str, dim: usize, metric: Metric) -> Result<()> {
+        if self.map.contains_key(name) {
+            return Err(OpdrError::coordinator(format!("collection `{name}` already exists")));
+        }
+        self.map.insert(name.to_string(), Collection::new(name, dim, metric)?);
+        Ok(())
+    }
+
+    /// Borrow a collection.
+    pub fn get(&self, name: &str) -> Result<&Collection> {
+        self.map
+            .get(name)
+            .ok_or_else(|| OpdrError::coordinator(format!("no collection `{name}`")))
+    }
+
+    /// Borrow mutably.
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Collection> {
+        self.map
+            .get_mut(name)
+            .ok_or_else(|| OpdrError::coordinator(format!("no collection `{name}`")))
+    }
+
+    /// Names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.map.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Load a generated [`EmbeddingSet`] as a new collection.
+    pub fn create_from_set(&mut self, name: &str, set: &EmbeddingSet, metric: Metric) -> Result<()> {
+        self.create(name, set.dim(), metric)?;
+        self.get_mut(name)?.ingest(set.data())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synth, DatasetKind};
+
+    fn seeded_collection(n: usize, dim: usize) -> Collection {
+        let set = synth::generate(DatasetKind::MaterialsObservable, n, dim, 5);
+        let mut c = Collection::new("test", dim, Metric::SqEuclidean).unwrap();
+        c.ingest(set.data()).unwrap();
+        c
+    }
+
+    #[test]
+    fn ingest_and_len() {
+        let mut c = Collection::new("c", 4, Metric::Euclidean).unwrap();
+        assert_eq!(c.ingest(&[0.0; 12]).unwrap(), 3);
+        assert_eq!(c.len(), 3);
+        assert!(c.ingest(&[0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn build_reduced_and_search() {
+        let mut c = seeded_collection(60, 64);
+        let r = c.build_reduced(0.8, 5, 50, 1).unwrap();
+        let rdim = r.model.target_dim();
+        assert!(rdim >= 1 && rdim <= 64);
+        let (vecs, dim) = c.serving_vectors();
+        assert_eq!(dim, rdim);
+        assert_eq!(vecs.len(), 60 * rdim);
+
+        // Search with a projected query: the top hit for a stored vector's own
+        // full-dim form should be itself.
+        let q_full: Vec<f32> = c.data()[..64].to_vec();
+        let q = c.project_query(&q_full).unwrap();
+        let hits = c.search_projected(&q, 3, 1).unwrap();
+        assert_eq!(hits[0].index, 0);
+    }
+
+    #[test]
+    fn reduced_search_recall_vs_full() {
+        let mut c = seeded_collection(80, 64);
+        // Ground truth in full space.
+        let q: Vec<f32> = c.data()[5 * 64..6 * 64].to_vec();
+        let full = crate::knn::knn_indices(&q, c.data(), 64, 10, Metric::SqEuclidean).unwrap();
+        c.build_reduced(0.9, 10, 60, 2).unwrap();
+        let qp = c.project_query(&q).unwrap();
+        let red = c.search_projected(&qp, 10, 1).unwrap();
+        let full_set: std::collections::HashSet<usize> = full.iter().map(|n| n.index).collect();
+        let hits = red.iter().filter(|n| full_set.contains(&n.index)).count();
+        assert!(hits >= 5, "recall too low: {hits}/10");
+    }
+
+    #[test]
+    fn ingest_invalidates_reduced() {
+        let mut c = seeded_collection(40, 32);
+        c.build_reduced(0.8, 5, 30, 1).unwrap();
+        assert!(c.reduced.is_some());
+        c.ingest(&vec![0.0; 32]).unwrap();
+        assert!(c.reduced.is_none());
+    }
+
+    #[test]
+    fn index_path_used_when_built() {
+        let mut c = seeded_collection(100, 16);
+        c.build_index(8, 3).unwrap();
+        assert!(c.index.is_some());
+        let q: Vec<f32> = c.data()[..16].to_vec();
+        let hits = c.search_projected(&q, 5, 8).unwrap();
+        assert_eq!(hits[0].index, 0);
+    }
+
+    #[test]
+    fn registry_create_get_duplicate() {
+        let mut cs = Collections::new();
+        cs.create("a", 8, Metric::Euclidean).unwrap();
+        assert!(cs.create("a", 8, Metric::Euclidean).is_err());
+        assert!(cs.get("a").is_ok());
+        assert!(cs.get("b").is_err());
+        assert_eq!(cs.names(), vec!["a".to_string()]);
+    }
+
+    #[test]
+    fn too_few_vectors_for_reduce() {
+        let mut c = Collection::new("tiny", 8, Metric::Euclidean).unwrap();
+        c.ingest(&[0.0; 16]).unwrap(); // 2 vectors
+        assert!(c.build_reduced(0.8, 5, 10, 1).is_err());
+    }
+}

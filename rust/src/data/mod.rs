@@ -1,0 +1,224 @@
+//! Multimodal data substrates.
+//!
+//! The paper evaluates on seven datasets (four Materials Project subsets,
+//! Flickr30k, OmniCorpus-037 CC, ESC-50), none of which are available in this
+//! offline environment. Per the substitution rule, [`synth`] generates
+//! synthetic embedding sets whose *geometry* matches each dataset's observed
+//! regime (see DESIGN.md §1), and [`records`] generates the raw multimodal
+//! records (token / patch / spectrogram features) that the [`crate::embed`]
+//! pipeline pushes through the AOT-compiled encoder towers.
+//!
+//! [`store`] is the binary embedding store used to persist extraction results
+//! between pipeline stages.
+
+pub mod records;
+pub mod store;
+pub mod synth;
+
+use crate::error::{OpdrError, Result};
+
+/// The seven evaluation datasets of the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DatasetKind {
+    /// Materials Project "observable" subset (paper: 33,990 points).
+    MaterialsObservable,
+    /// Materials Project "stable" subset (48,884).
+    MaterialsStable,
+    /// Materials Project "metal" subset (72,252).
+    MaterialsMetal,
+    /// Materials Project "magnetic" subset (81,723).
+    MaterialsMagnetic,
+    /// Flickr30k image–text pairs (31,014).
+    Flickr30k,
+    /// OmniCorpus-037 CC image–text pairs (3,878,063; sweeps sample ≤ 300).
+    OmniCorpus,
+    /// ESC-50 audio–text pairs (2,000).
+    Esc50,
+}
+
+impl DatasetKind {
+    /// All datasets, figure order.
+    pub const ALL: [DatasetKind; 7] = [
+        DatasetKind::MaterialsObservable,
+        DatasetKind::MaterialsStable,
+        DatasetKind::MaterialsMetal,
+        DatasetKind::MaterialsMagnetic,
+        DatasetKind::Flickr30k,
+        DatasetKind::OmniCorpus,
+        DatasetKind::Esc50,
+    ];
+
+    /// Parse from a config / CLI string.
+    pub fn parse(s: &str) -> Option<DatasetKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "materials-observable" | "observable" => Some(DatasetKind::MaterialsObservable),
+            "materials-stable" | "stable" => Some(DatasetKind::MaterialsStable),
+            "materials-metal" | "metal" => Some(DatasetKind::MaterialsMetal),
+            "materials-magnetic" | "magnetic" => Some(DatasetKind::MaterialsMagnetic),
+            "flickr30k" | "flickr" => Some(DatasetKind::Flickr30k),
+            "omnicorpus" | "omni" => Some(DatasetKind::OmniCorpus),
+            "esc50" | "esc-50" => Some(DatasetKind::Esc50),
+            _ => None,
+        }
+    }
+
+    /// Canonical name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            DatasetKind::MaterialsObservable => "materials-observable",
+            DatasetKind::MaterialsStable => "materials-stable",
+            DatasetKind::MaterialsMetal => "materials-metal",
+            DatasetKind::MaterialsMagnetic => "materials-magnetic",
+            DatasetKind::Flickr30k => "flickr30k",
+            DatasetKind::OmniCorpus => "omnicorpus",
+            DatasetKind::Esc50 => "esc50",
+        }
+    }
+
+    /// Paper cardinality (full dataset; sweeps use small subsets of this).
+    pub fn paper_cardinality(&self) -> usize {
+        match self {
+            DatasetKind::MaterialsObservable => 33_990,
+            DatasetKind::MaterialsStable => 48_884,
+            DatasetKind::MaterialsMetal => 72_252,
+            DatasetKind::MaterialsMagnetic => 81_723,
+            DatasetKind::Flickr30k => 31_014,
+            DatasetKind::OmniCorpus => 3_878_063,
+            DatasetKind::Esc50 => 2_000,
+        }
+    }
+
+    /// Subset sizes the paper sweeps for this dataset.
+    pub fn paper_sample_sizes(&self) -> Vec<usize> {
+        match self {
+            DatasetKind::Flickr30k | DatasetKind::OmniCorpus => vec![10, 50, 100, 150, 300],
+            DatasetKind::Esc50 => vec![10, 50, 100, 150, 300],
+            _ => vec![10, 20, 30, 40, 50, 60, 70, 80],
+        }
+    }
+
+    /// True for the four Materials Project subsets.
+    pub fn is_materials(&self) -> bool {
+        matches!(
+            self,
+            DatasetKind::MaterialsObservable
+                | DatasetKind::MaterialsStable
+                | DatasetKind::MaterialsMetal
+                | DatasetKind::MaterialsMagnetic
+        )
+    }
+
+    /// Default concatenated embedding dimensionality (CLIP text+image = 1024;
+    /// ESC-50 uses BERT 768 + PANNs 2048 = 2816).
+    pub fn default_embed_dim(&self) -> usize {
+        match self {
+            DatasetKind::Esc50 => 2816,
+            _ => 1024,
+        }
+    }
+}
+
+/// A set of `n` embeddings of dimension `dim`, row-major `f32`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EmbeddingSet {
+    dim: usize,
+    data: Vec<f32>,
+    label: String,
+}
+
+impl EmbeddingSet {
+    /// Build from raw parts.
+    pub fn new(label: impl Into<String>, dim: usize, data: Vec<f32>) -> Result<Self> {
+        if dim == 0 {
+            return Err(OpdrError::shape("EmbeddingSet: dim must be > 0"));
+        }
+        if data.len() % dim != 0 {
+            return Err(OpdrError::shape("EmbeddingSet: data not a multiple of dim"));
+        }
+        Ok(EmbeddingSet { dim, data, label: label.into() })
+    }
+
+    /// Number of vectors.
+    pub fn len(&self) -> usize {
+        self.data.len() / self.dim
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Vector dimensionality.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Row-major payload.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Dataset / pipeline label.
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// The `i`-th vector.
+    pub fn vector(&self, i: usize) -> &[f32] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Subset by indices (copies).
+    pub fn subset(&self, idx: &[usize]) -> Result<EmbeddingSet> {
+        let mut data = Vec::with_capacity(idx.len() * self.dim);
+        for &i in idx {
+            if i >= self.len() {
+                return Err(OpdrError::data(format!("subset: index {i} out of range")));
+            }
+            data.extend_from_slice(self.vector(i));
+        }
+        EmbeddingSet::new(self.label.clone(), self.dim, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for kind in DatasetKind::ALL {
+            assert_eq!(DatasetKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(DatasetKind::parse("unknown"), None);
+    }
+
+    #[test]
+    fn paper_metadata_sane() {
+        assert_eq!(DatasetKind::Esc50.paper_cardinality(), 2000);
+        assert_eq!(DatasetKind::MaterialsObservable.paper_sample_sizes().len(), 8);
+        assert_eq!(DatasetKind::Flickr30k.paper_sample_sizes(), vec![10, 50, 100, 150, 300]);
+        assert!(DatasetKind::MaterialsMetal.is_materials());
+        assert!(!DatasetKind::Flickr30k.is_materials());
+        assert_eq!(DatasetKind::Esc50.default_embed_dim(), 2816);
+        assert_eq!(DatasetKind::Flickr30k.default_embed_dim(), 1024);
+    }
+
+    #[test]
+    fn embedding_set_basics() {
+        let set = EmbeddingSet::new("t", 2, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(set.len(), 2);
+        assert_eq!(set.vector(1), &[3.0, 4.0]);
+        assert!(!set.is_empty());
+        let sub = set.subset(&[1]).unwrap();
+        assert_eq!(sub.len(), 1);
+        assert_eq!(sub.vector(0), &[3.0, 4.0]);
+        assert!(set.subset(&[5]).is_err());
+    }
+
+    #[test]
+    fn embedding_set_validation() {
+        assert!(EmbeddingSet::new("t", 0, vec![]).is_err());
+        assert!(EmbeddingSet::new("t", 3, vec![1.0; 4]).is_err());
+    }
+}

@@ -1,0 +1,141 @@
+//! Raw multimodal records: the inputs of the encoder towers.
+//!
+//! The paper extracts embeddings from image–text (and audio–text) pairs with
+//! CLIP/ViT/BERT/PANNs. We cannot ship those datasets or checkpoints, so each
+//! record here carries synthetic *features* shaped like the real inputs:
+//! token-feature matrices for text, patch-feature matrices for images, and
+//! mel-spectrogram frames for audio. Records from the same latent class share
+//! correlated features, so encoder outputs inherit cluster structure just as
+//! real embeddings do.
+//!
+//! Shapes are fixed to match the AOT artifacts (see `python/compile/aot.py`):
+//! text `T×F = 32×64`, image `P×F = 64×64`, audio `M×T = 64×32`.
+
+use crate::data::DatasetKind;
+use crate::util::Rng;
+
+/// Token count for text inputs.
+pub const TEXT_TOKENS: usize = 32;
+/// Feature width of text token features.
+pub const TEXT_FEAT: usize = 64;
+/// Patch count for image inputs.
+pub const IMAGE_PATCHES: usize = 64;
+/// Feature width of image patch features.
+pub const IMAGE_FEAT: usize = 64;
+/// Mel bands for audio inputs.
+pub const AUDIO_MELS: usize = 64;
+/// Frames for audio inputs.
+pub const AUDIO_FRAMES: usize = 32;
+
+/// One multimodal record: synthetic text + image (and optionally audio)
+/// features plus the latent class that generated it.
+#[derive(Debug, Clone)]
+pub struct MultimodalRecord {
+    /// Latent class id (cluster the record was drawn from).
+    pub class: usize,
+    /// Text token features, row-major `TEXT_TOKENS × TEXT_FEAT`.
+    pub text: Vec<f32>,
+    /// Image patch features, row-major `IMAGE_PATCHES × IMAGE_FEAT`.
+    pub image: Vec<f32>,
+    /// Audio mel features, row-major `AUDIO_MELS × AUDIO_FRAMES`
+    /// (empty for non-audio datasets).
+    pub audio: Vec<f32>,
+}
+
+/// Deterministically generate `n` records for a dataset kind.
+pub fn generate_records(kind: DatasetKind, n: usize, seed: u64) -> Vec<MultimodalRecord> {
+    let spec = crate::data::synth::spec_for(kind);
+    let classes = spec.clusters.max(1);
+    let mut rng = Rng::new(seed ^ 0x5ECD_0001);
+
+    // Per-class prototype features for each modality.
+    let mut proto_rng = rng.fork(10);
+    let text_proto: Vec<f32> = proto_rng.normal_vec_f32(classes * TEXT_TOKENS * TEXT_FEAT);
+    let image_proto: Vec<f32> = proto_rng.normal_vec_f32(classes * IMAGE_PATCHES * IMAGE_FEAT);
+    let audio_proto: Vec<f32> = proto_rng.normal_vec_f32(classes * AUDIO_MELS * AUDIO_FRAMES);
+    let with_audio = kind == DatasetKind::Esc50;
+
+    let weights: Vec<f64> = (0..classes).map(|c| 1.0 / (1.0 + c as f64).sqrt()).collect();
+    let mut point_rng = rng.fork(11);
+    (0..n)
+        .map(|_| {
+            let class = point_rng.categorical(&weights);
+            let jitter = spec.noise as f32 * 3.0 + 0.3;
+            let text = mix(
+                &text_proto[class * TEXT_TOKENS * TEXT_FEAT..(class + 1) * TEXT_TOKENS * TEXT_FEAT],
+                jitter,
+                &mut point_rng,
+            );
+            let image = mix(
+                &image_proto
+                    [class * IMAGE_PATCHES * IMAGE_FEAT..(class + 1) * IMAGE_PATCHES * IMAGE_FEAT],
+                jitter,
+                &mut point_rng,
+            );
+            let audio = if with_audio {
+                mix(
+                    &audio_proto
+                        [class * AUDIO_MELS * AUDIO_FRAMES..(class + 1) * AUDIO_MELS * AUDIO_FRAMES],
+                    jitter,
+                    &mut point_rng,
+                )
+            } else {
+                Vec::new()
+            };
+            MultimodalRecord { class, text, image, audio }
+        })
+        .collect()
+}
+
+fn mix(proto: &[f32], jitter: f32, rng: &mut Rng) -> Vec<f32> {
+    proto.iter().map(|&p| p + jitter * rng.normal() as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_shaped() {
+        let a = generate_records(DatasetKind::Flickr30k, 5, 1);
+        let b = generate_records(DatasetKind::Flickr30k, 5, 1);
+        assert_eq!(a.len(), 5);
+        for (ra, rb) in a.iter().zip(&b) {
+            assert_eq!(ra.class, rb.class);
+            assert_eq!(ra.text, rb.text);
+            assert_eq!(ra.text.len(), TEXT_TOKENS * TEXT_FEAT);
+            assert_eq!(ra.image.len(), IMAGE_PATCHES * IMAGE_FEAT);
+            assert!(ra.audio.is_empty());
+        }
+    }
+
+    #[test]
+    fn esc50_has_audio() {
+        let recs = generate_records(DatasetKind::Esc50, 3, 2);
+        for r in &recs {
+            assert_eq!(r.audio.len(), AUDIO_MELS * AUDIO_FRAMES);
+        }
+    }
+
+    #[test]
+    fn same_class_records_closer_than_cross_class() {
+        let recs = generate_records(DatasetKind::MaterialsObservable, 60, 3);
+        let mut same = Vec::new();
+        let mut diff = Vec::new();
+        for i in 0..recs.len() {
+            for j in (i + 1)..recs.len() {
+                let d = crate::metrics::sq_euclidean(&recs[i].text, &recs[j].text) as f64;
+                if recs[i].class == recs[j].class {
+                    same.push(d);
+                } else {
+                    diff.push(d);
+                }
+            }
+        }
+        if !same.is_empty() && !diff.is_empty() {
+            let ms = crate::util::float::mean(&same);
+            let md = crate::util::float::mean(&diff);
+            assert!(ms < md, "same-class {ms} should be < cross-class {md}");
+        }
+    }
+}

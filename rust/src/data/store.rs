@@ -1,0 +1,150 @@
+//! Binary embedding store.
+//!
+//! Persists [`EmbeddingSet`]s between pipeline stages (extract → reduce →
+//! serve) without `serde`: a small versioned little-endian format.
+//!
+//! Layout: magic `OPDR` | u32 version | u32 label_len | label bytes |
+//! u64 n | u64 dim | n·dim f32 payload.
+
+use crate::data::EmbeddingSet;
+use crate::error::{OpdrError, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"OPDR";
+const VERSION: u32 = 1;
+
+/// Serialize an embedding set to a writer.
+pub fn write_embeddings<W: Write>(set: &EmbeddingSet, w: &mut W) -> Result<()> {
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    let label = set.label().as_bytes();
+    w.write_all(&(label.len() as u32).to_le_bytes())?;
+    w.write_all(label)?;
+    w.write_all(&(set.len() as u64).to_le_bytes())?;
+    w.write_all(&(set.dim() as u64).to_le_bytes())?;
+    for &x in set.data() {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Deserialize an embedding set from a reader.
+pub fn read_embeddings<R: Read>(r: &mut R) -> Result<EmbeddingSet> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(OpdrError::data("store: bad magic"));
+    }
+    let version = read_u32(r)?;
+    if version != VERSION {
+        return Err(OpdrError::data(format!("store: unsupported version {version}")));
+    }
+    let label_len = read_u32(r)? as usize;
+    if label_len > 1 << 20 {
+        return Err(OpdrError::data("store: unreasonable label length"));
+    }
+    let mut label_bytes = vec![0u8; label_len];
+    r.read_exact(&mut label_bytes)?;
+    let label = String::from_utf8(label_bytes)
+        .map_err(|_| OpdrError::data("store: label not UTF-8"))?;
+    let n = read_u64(r)? as usize;
+    let dim = read_u64(r)? as usize;
+    if dim == 0 {
+        return Err(OpdrError::data("store: dim is zero"));
+    }
+    let count = n
+        .checked_mul(dim)
+        .ok_or_else(|| OpdrError::data("store: size overflow"))?;
+    if count > 1 << 31 {
+        return Err(OpdrError::data("store: payload too large"));
+    }
+    let mut data = Vec::with_capacity(count);
+    let mut buf = [0u8; 4];
+    for _ in 0..count {
+        r.read_exact(&mut buf)?;
+        data.push(f32::from_le_bytes(buf));
+    }
+    EmbeddingSet::new(label, dim, data)
+}
+
+/// Save to a file path.
+pub fn save(set: &EmbeddingSet, path: impl AsRef<Path>) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    write_embeddings(set, &mut f)?;
+    f.flush()?;
+    Ok(())
+}
+
+/// Load from a file path.
+pub fn load(path: impl AsRef<Path>) -> Result<EmbeddingSet> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    read_embeddings(&mut f)
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synth, DatasetKind};
+
+    #[test]
+    fn roundtrip_in_memory() {
+        let set = synth::generate(DatasetKind::Esc50, 10, 16, 1);
+        let mut buf = Vec::new();
+        write_embeddings(&set, &mut buf).unwrap();
+        let back = read_embeddings(&mut buf.as_slice()).unwrap();
+        assert_eq!(set, back);
+    }
+
+    #[test]
+    fn roundtrip_via_file() {
+        let set = synth::generate(DatasetKind::Flickr30k, 7, 12, 2);
+        let dir = std::env::temp_dir().join("opdr_store_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("set.opdr");
+        save(&set, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(set, back);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let set = synth::generate(DatasetKind::Flickr30k, 3, 4, 3);
+        let mut buf = Vec::new();
+        write_embeddings(&set, &mut buf).unwrap();
+        // Bad magic.
+        let mut bad = buf.clone();
+        bad[0] = b'X';
+        assert!(read_embeddings(&mut bad.as_slice()).is_err());
+        // Bad version.
+        let mut bad = buf.clone();
+        bad[4] = 99;
+        assert!(read_embeddings(&mut bad.as_slice()).is_err());
+        // Truncated payload.
+        let bad = &buf[..buf.len() - 3];
+        assert!(read_embeddings(&mut &bad[..]).is_err());
+    }
+
+    #[test]
+    fn empty_set_roundtrips() {
+        let set = EmbeddingSet::new("empty", 8, vec![]).unwrap();
+        let mut buf = Vec::new();
+        write_embeddings(&set, &mut buf).unwrap();
+        let back = read_embeddings(&mut buf.as_slice()).unwrap();
+        assert_eq!(back.len(), 0);
+        assert_eq!(back.dim(), 8);
+    }
+}

@@ -1,0 +1,264 @@
+//! Encoder backends: PJRT runtime towers and the pure-Rust stand-in.
+
+use crate::data::records::{
+    MultimodalRecord, AUDIO_FRAMES, AUDIO_MELS, IMAGE_FEAT, IMAGE_PATCHES, TEXT_FEAT, TEXT_TOKENS,
+};
+use crate::embed::ModelKind;
+use crate::error::{OpdrError, Result};
+use crate::runtime::{ArrayF32, Engine};
+use crate::util::Rng;
+
+/// Fixed batch size the encoder artifacts are lowered with.
+pub const ENCODER_BATCH: usize = 8;
+
+/// An embedding backend.
+pub trait Encoder {
+    /// Encode up to [`Encoder::batch_size`] records; returns a row-major
+    /// `len(records) × model.output_dim()` block.
+    fn encode_batch(&self, model: ModelKind, records: &[MultimodalRecord]) -> Result<Vec<f32>>;
+
+    /// Preferred batch size.
+    fn batch_size(&self) -> usize {
+        ENCODER_BATCH
+    }
+
+    /// Backend name for logs.
+    fn backend_name(&self) -> &'static str;
+}
+
+/// PJRT-backed encoder: runs the AOT-lowered JAX towers.
+pub struct RuntimeEncoder<'e> {
+    engine: &'e Engine,
+}
+
+impl<'e> RuntimeEncoder<'e> {
+    /// Wrap an engine (artifacts must include the tower modules).
+    pub fn new(engine: &'e Engine) -> Self {
+        RuntimeEncoder { engine }
+    }
+
+    fn run_tower(
+        &self,
+        artifact: &str,
+        feats: &[f32],
+        per_record: usize,
+        n: usize,
+        out_dim: usize,
+    ) -> Result<Vec<f32>> {
+        // Zero-pad the batch to ENCODER_BATCH records.
+        let mut batch = vec![0.0f32; ENCODER_BATCH * per_record];
+        batch[..n * per_record].copy_from_slice(&feats[..n * per_record]);
+        let input = ArrayF32::new(batch, vec![ENCODER_BATCH, per_record])?;
+        let out = self.engine.execute(artifact, &[input])?;
+        let arr = out
+            .into_iter()
+            .next()
+            .ok_or_else(|| OpdrError::runtime(format!("{artifact}: no output")))?;
+        if arr.shape != vec![ENCODER_BATCH, out_dim] {
+            return Err(OpdrError::runtime(format!(
+                "{artifact}: unexpected output shape {:?}",
+                arr.shape
+            )));
+        }
+        Ok(arr.data[..n * out_dim].to_vec())
+    }
+}
+
+impl Encoder for RuntimeEncoder<'_> {
+    fn encode_batch(&self, model: ModelKind, records: &[MultimodalRecord]) -> Result<Vec<f32>> {
+        let n = records.len();
+        if n == 0 || n > ENCODER_BATCH {
+            return Err(OpdrError::shape(format!(
+                "encode_batch: got {n} records, batch size is {ENCODER_BATCH}"
+            )));
+        }
+        let gather = |f: fn(&MultimodalRecord) -> &[f32], per: usize| -> Result<Vec<f32>> {
+            let mut out = Vec::with_capacity(n * per);
+            for r in records {
+                let feats = f(r);
+                if feats.len() != per {
+                    return Err(OpdrError::shape("encode_batch: record feature size mismatch"));
+                }
+                out.extend_from_slice(feats);
+            }
+            Ok(out)
+        };
+        let text_per = TEXT_TOKENS * TEXT_FEAT;
+        let image_per = IMAGE_PATCHES * IMAGE_FEAT;
+        let audio_per = AUDIO_MELS * AUDIO_FRAMES;
+
+        match model {
+            ModelKind::Clip => {
+                let text = gather(|r| &r.text, text_per)?;
+                let image = gather(|r| &r.image, image_per)?;
+                let t = self.run_tower("clip_text", &text, text_per, n, 512)?;
+                let i = self.run_tower("clip_image", &image, image_per, n, 512)?;
+                Ok(concat_rows(&t, 512, &i, 512, n))
+            }
+            ModelKind::Bert => {
+                let text = gather(|r| &r.text, text_per)?;
+                self.run_tower("bert", &text, text_per, n, 768)
+            }
+            ModelKind::Vit => {
+                let image = gather(|r| &r.image, image_per)?;
+                self.run_tower("vit", &image, image_per, n, 768)
+            }
+            ModelKind::BertPanns => {
+                let text = gather(|r| &r.text, text_per)?;
+                let audio = gather(|r| &r.audio, audio_per)?;
+                let t = self.run_tower("bert", &text, text_per, n, 768)?;
+                let a = self.run_tower("panns", &audio, audio_per, n, 2048)?;
+                Ok(concat_rows(&t, 768, &a, 2048, n))
+            }
+        }
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "pjrt-runtime"
+    }
+}
+
+/// Concatenate two row-major blocks per row: `n×(da+db)`.
+fn concat_rows(a: &[f32], da: usize, b: &[f32], db: usize, n: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(n * (da + db));
+    for i in 0..n {
+        out.extend_from_slice(&a[i * da..(i + 1) * da]);
+        out.extend_from_slice(&b[i * db..(i + 1) * db]);
+    }
+    out
+}
+
+/// Pure-Rust deterministic encoder: per-(model, modality) fixed random
+/// projection followed by `tanh`. Preserves the cluster structure of the raw
+/// records (it is a Lipschitz map), so accuracy-sweep behaviour matches the
+/// runtime towers in shape, which is all Figs 7–9 need.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HashEncoder {
+    /// Extra seed so tests can decorrelate encoders.
+    pub seed: u64,
+}
+
+impl HashEncoder {
+    fn project(&self, feats: &[f32], out_dim: usize, stream: u64) -> Vec<f32> {
+        // The projection matrix is re-derived per call from the stream seed;
+        // deterministic and allocation-bounded (row-at-a-time).
+        let in_dim = feats.len();
+        let mut out = vec![0.0f32; out_dim];
+        let mut rng = Rng::new(self.seed ^ stream);
+        let scale = (1.0 / in_dim as f64).sqrt();
+        // Generate the matrix column-major on the fly: for each input feature,
+        // a pseudo-random row of weights.
+        for (j, &x) in feats.iter().enumerate() {
+            if x == 0.0 {
+                continue;
+            }
+            let mut row_rng = rng.fork(j as u64);
+            for o in out.iter_mut() {
+                *o += x * (row_rng.normal() * scale) as f32;
+            }
+        }
+        for o in out.iter_mut() {
+            *o = o.tanh();
+        }
+        out
+    }
+}
+
+impl Encoder for HashEncoder {
+    fn encode_batch(&self, model: ModelKind, records: &[MultimodalRecord]) -> Result<Vec<f32>> {
+        let dim = model.output_dim();
+        let mut out = Vec::with_capacity(records.len() * dim);
+        for r in records {
+            let v = match model {
+                ModelKind::Clip => {
+                    let mut v = self.project(&r.text, 512, 0xC11F_7E87);
+                    v.extend(self.project(&r.image, 512, 0xC11F_1487));
+                    v
+                }
+                ModelKind::Bert => self.project(&r.text, 768, 0xBE27_0001),
+                ModelKind::Vit => self.project(&r.image, 768, 0x0017_0002),
+                ModelKind::BertPanns => {
+                    if r.audio.is_empty() {
+                        return Err(OpdrError::data("bert-panns requires audio features"));
+                    }
+                    let mut v = self.project(&r.text, 768, 0xBE27_0001);
+                    v.extend(self.project(&r.audio, 2048, 0xA0D1_0003));
+                    v
+                }
+            };
+            debug_assert_eq!(v.len(), dim);
+            out.extend(v);
+        }
+        Ok(out)
+    }
+
+    fn batch_size(&self) -> usize {
+        64
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "hash-fallback"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::records::generate_records;
+    use crate::data::DatasetKind;
+
+    #[test]
+    fn hash_encoder_deterministic() {
+        let recs = generate_records(DatasetKind::Flickr30k, 3, 7);
+        let e = HashEncoder::default();
+        let a = e.encode_batch(ModelKind::Clip, &recs).unwrap();
+        let b = e.encode_batch(ModelKind::Clip, &recs).unwrap();
+        assert_eq!(a, b);
+        let e2 = HashEncoder { seed: 1 };
+        let c = e2.encode_batch(ModelKind::Clip, &recs).unwrap();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn hash_encoder_preserves_class_structure() {
+        // Same-class records should embed closer than cross-class on average.
+        let recs = generate_records(DatasetKind::MaterialsObservable, 40, 9);
+        let e = HashEncoder::default();
+        let emb = e.encode_batch(ModelKind::Bert, &recs[..40.min(e.batch_size())]).unwrap();
+        let dim = ModelKind::Bert.output_dim();
+        let mut same = vec![];
+        let mut diff = vec![];
+        let n = emb.len() / dim;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let d = crate::metrics::sq_euclidean(&emb[i * dim..(i + 1) * dim], &emb[j * dim..(j + 1) * dim]) as f64;
+                if recs[i].class == recs[j].class {
+                    same.push(d);
+                } else {
+                    diff.push(d);
+                }
+            }
+        }
+        if !same.is_empty() && !diff.is_empty() {
+            assert!(crate::util::float::mean(&same) < crate::util::float::mean(&diff));
+        }
+    }
+
+    #[test]
+    fn bert_panns_requires_audio() {
+        let recs = generate_records(DatasetKind::Flickr30k, 2, 3); // no audio
+        let e = HashEncoder::default();
+        assert!(e.encode_batch(ModelKind::BertPanns, &recs).is_err());
+        let audio = generate_records(DatasetKind::Esc50, 2, 3);
+        let out = e.encode_batch(ModelKind::BertPanns, &audio).unwrap();
+        assert_eq!(out.len(), 2 * 2816);
+    }
+
+    #[test]
+    fn concat_rows_interleaves() {
+        let a = [1.0f32, 2.0, 10.0, 20.0]; // 2 rows × 2
+        let b = [3.0f32, 30.0]; // 2 rows × 1
+        let c = concat_rows(&a, 2, &b, 1, 2);
+        assert_eq!(c, vec![1.0, 2.0, 3.0, 10.0, 20.0, 30.0]);
+    }
+}

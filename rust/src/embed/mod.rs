@@ -1,0 +1,130 @@
+//! Multimodal embedding pipeline.
+//!
+//! Maps raw [`MultimodalRecord`]s to embedding vectors through the paper's
+//! encoder line-up: CLIP (text tower 512 + image tower 512, concatenated to
+//! 1024), BERT (768, text only), ViT (768, image only) and BERT+PANNs
+//! (768 + 2048 = 2816) for ESC-50 audio–text.
+//!
+//! Two interchangeable backends:
+//! * [`RuntimeEncoder`] — executes the AOT-compiled JAX towers via the PJRT
+//!   [`Engine`] (the production path; `make artifacts` first);
+//! * [`HashEncoder`] — a pure-Rust deterministic stand-in (fixed random
+//!   projection + tanh), used by tests and available when artifacts are
+//!   absent. Different `ModelKind`s use different projection seeds, so model
+//!   comparisons (Figs 7–9) exercise genuinely different geometries on both
+//!   backends.
+
+pub mod encoder;
+
+pub use encoder::{Encoder, HashEncoder, RuntimeEncoder};
+
+use crate::data::records::MultimodalRecord;
+use crate::data::EmbeddingSet;
+use crate::error::Result;
+
+/// The embedding models evaluated in the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelKind {
+    /// CLIP: text(512) ⊕ image(512) → 1024.
+    Clip,
+    /// BERT: text → 768.
+    Bert,
+    /// ViT: image → 768.
+    Vit,
+    /// BERT ⊕ PANNs-CNN14: text(768) ⊕ audio(2048) → 2816 (ESC-50 path).
+    BertPanns,
+}
+
+impl ModelKind {
+    /// All models compared in Figs 7–9.
+    pub const FIGURE_MODELS: [ModelKind; 3] = [ModelKind::Bert, ModelKind::Vit, ModelKind::Clip];
+
+    /// Parse from config / CLI.
+    pub fn parse(s: &str) -> Option<ModelKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "clip" => Some(ModelKind::Clip),
+            "bert" => Some(ModelKind::Bert),
+            "vit" => Some(ModelKind::Vit),
+            "bert-panns" | "bertpanns" | "audio" | "concat-bert-panns" => Some(ModelKind::BertPanns),
+            _ => None,
+        }
+    }
+
+    /// Canonical name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::Clip => "clip",
+            ModelKind::Bert => "bert",
+            ModelKind::Vit => "vit",
+            ModelKind::BertPanns => "bert-panns",
+        }
+    }
+
+    /// Output dimensionality of the (concatenated) embedding.
+    pub fn output_dim(&self) -> usize {
+        match self {
+            ModelKind::Clip => 1024,
+            ModelKind::Bert => 768,
+            ModelKind::Vit => 768,
+            ModelKind::BertPanns => 2816,
+        }
+    }
+}
+
+/// Embed a record batch with the given encoder backend.
+pub fn embed_records(
+    encoder: &dyn Encoder,
+    model: ModelKind,
+    records: &[MultimodalRecord],
+    label: &str,
+) -> Result<EmbeddingSet> {
+    let dim = model.output_dim();
+    let mut data = Vec::with_capacity(records.len() * dim);
+    // Encoders work on fixed batch sizes internally; chunk here.
+    let bs = encoder.batch_size();
+    let mut i = 0;
+    while i < records.len() {
+        let end = (i + bs).min(records.len());
+        let out = encoder.encode_batch(model, &records[i..end])?;
+        debug_assert_eq!(out.len(), (end - i) * dim);
+        data.extend_from_slice(&out);
+        i = end;
+    }
+    EmbeddingSet::new(format!("{label}/{}", model.name()), dim, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::records::generate_records;
+    use crate::data::DatasetKind;
+
+    #[test]
+    fn model_kind_roundtrip() {
+        for m in [ModelKind::Clip, ModelKind::Bert, ModelKind::Vit, ModelKind::BertPanns] {
+            assert_eq!(ModelKind::parse(m.name()), Some(m));
+        }
+        assert_eq!(ModelKind::Clip.output_dim(), 1024);
+        assert_eq!(ModelKind::BertPanns.output_dim(), 2816);
+    }
+
+    #[test]
+    fn embed_records_produces_right_shape() {
+        let recs = generate_records(DatasetKind::Flickr30k, 11, 1);
+        let enc = HashEncoder::default();
+        let set = embed_records(&enc, ModelKind::Clip, &recs, "flickr").unwrap();
+        assert_eq!(set.len(), 11);
+        assert_eq!(set.dim(), 1024);
+        assert!(set.label().contains("clip"));
+    }
+
+    #[test]
+    fn different_models_give_different_embeddings() {
+        let recs = generate_records(DatasetKind::Flickr30k, 4, 2);
+        let enc = HashEncoder::default();
+        let bert = embed_records(&enc, ModelKind::Bert, &recs, "x").unwrap();
+        let vit = embed_records(&enc, ModelKind::Vit, &recs, "x").unwrap();
+        assert_eq!(bert.dim(), vit.dim());
+        assert_ne!(bert.data()[..10], vit.data()[..10]);
+    }
+}

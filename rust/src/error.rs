@@ -1,0 +1,96 @@
+//! Unified error type for the OPDR crate.
+
+use thiserror::Error;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, OpdrError>;
+
+/// Unified error type covering configuration, linear algebra, runtime (PJRT)
+/// and coordinator failures.
+#[derive(Debug, Error)]
+pub enum OpdrError {
+    /// Configuration file / CLI errors.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Shape or argument mismatch in numeric code.
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    /// Numerical failure (non-convergence, singular input, NaN).
+    #[error("numeric error: {0}")]
+    Numeric(String),
+
+    /// Dataset / embedding-store errors.
+    #[error("data error: {0}")]
+    Data(String),
+
+    /// PJRT runtime / artifact errors.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Coordinator / serving errors.
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    /// Underlying XLA error.
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    /// I/O error.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for OpdrError {
+    fn from(e: xla::Error) -> Self {
+        OpdrError::Xla(e.to_string())
+    }
+}
+
+impl OpdrError {
+    /// Shorthand constructor for shape errors.
+    pub fn shape(msg: impl Into<String>) -> Self {
+        OpdrError::Shape(msg.into())
+    }
+    /// Shorthand constructor for numeric errors.
+    pub fn numeric(msg: impl Into<String>) -> Self {
+        OpdrError::Numeric(msg.into())
+    }
+    /// Shorthand constructor for config errors.
+    pub fn config(msg: impl Into<String>) -> Self {
+        OpdrError::Config(msg.into())
+    }
+    /// Shorthand constructor for data errors.
+    pub fn data(msg: impl Into<String>) -> Self {
+        OpdrError::Data(msg.into())
+    }
+    /// Shorthand constructor for runtime errors.
+    pub fn runtime(msg: impl Into<String>) -> Self {
+        OpdrError::Runtime(msg.into())
+    }
+    /// Shorthand constructor for coordinator errors.
+    pub fn coordinator(msg: impl Into<String>) -> Self {
+        OpdrError::Coordinator(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_kind_and_message() {
+        let e = OpdrError::shape("rows mismatch");
+        assert_eq!(e.to_string(), "shape error: rows mismatch");
+        let e = OpdrError::numeric("jacobi failed");
+        assert!(e.to_string().contains("jacobi failed"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: OpdrError = io.into();
+        assert!(matches!(e, OpdrError::Io(_)));
+    }
+}

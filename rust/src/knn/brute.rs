@@ -1,0 +1,108 @@
+//! Exact brute-force KNN — the ground truth for the order-preserving measure.
+
+use crate::error::{OpdrError, Result};
+use crate::knn::topk::{top_k_smallest, top_k_smallest_excluding};
+use crate::metrics::{pairwise_distances_symmetric, Metric};
+
+/// One retrieved neighbor.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Neighbor {
+    /// Index into the base set.
+    pub index: usize,
+    /// Distance from the query.
+    pub distance: f32,
+}
+
+/// Exact k-nearest neighbors of `query` within `base` (n×dim row-major).
+pub fn knn_indices(
+    query: &[f32],
+    base: &[f32],
+    dim: usize,
+    k: usize,
+    metric: Metric,
+) -> Result<Vec<Neighbor>> {
+    if dim == 0 || query.len() != dim || base.len() % dim != 0 {
+        return Err(OpdrError::shape("knn_indices: bad shapes"));
+    }
+    let dists = crate::metrics::pairwise_distances(query, base, dim, metric)?;
+    Ok(top_k_smallest(&dists, k)
+        .into_iter()
+        .map(|(index, distance)| Neighbor { index, distance })
+        .collect())
+}
+
+/// Leave-one-out exact KNN sets for every point of a dataset: result `[i]` is
+/// the set (as sorted indices) of the k nearest neighbors of point `i`
+/// excluding itself. This is `E_{k,i}` from Eq. (1) of the paper.
+pub fn knn_indices_all(data: &[f32], dim: usize, k: usize, metric: Metric) -> Result<Vec<Vec<usize>>> {
+    if dim == 0 || data.len() % dim != 0 {
+        return Err(OpdrError::shape("knn_indices_all: bad shapes"));
+    }
+    let n = data.len() / dim;
+    if k >= n && n > 0 {
+        // k is capped at n-1 neighbors (everything except self).
+    }
+    let dists = pairwise_distances_symmetric(data, dim, metric)?;
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let row = &dists[i * n..(i + 1) * n];
+        let nb: Vec<usize> = top_k_smallest_excluding(row, k.min(n.saturating_sub(1)), i)
+            .into_iter()
+            .map(|(idx, _)| idx)
+            .collect();
+        out.push(nb);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simple_line_neighbors() {
+        // Points at 0, 1, 2, 10 on a line.
+        let base = [0.0f32, 1.0, 2.0, 10.0];
+        let nb = knn_indices(&[1.1f32], &base, 1, 2, Metric::Euclidean).unwrap();
+        assert_eq!(nb[0].index, 1);
+        assert_eq!(nb[1].index, 2);
+    }
+
+    #[test]
+    fn all_sets_exclude_self() {
+        let data = [0.0f32, 1.0, 2.0, 3.0];
+        let sets = knn_indices_all(&data, 1, 2, Metric::Euclidean).unwrap();
+        for (i, s) in sets.iter().enumerate() {
+            assert!(!s.contains(&i), "set {i} contains self");
+            assert_eq!(s.len(), 2);
+        }
+        // Neighbors of point 0 (value 0.0): points 1 and 2.
+        assert_eq!({ let mut s = sets[0].clone(); s.sort(); s }, vec![1, 2]);
+    }
+
+    #[test]
+    fn k_capped_at_n_minus_1() {
+        let data = [0.0f32, 1.0, 2.0];
+        let sets = knn_indices_all(&data, 1, 10, Metric::Euclidean).unwrap();
+        for s in &sets {
+            assert_eq!(s.len(), 2);
+        }
+    }
+
+    #[test]
+    fn shape_errors() {
+        assert!(knn_indices(&[1.0, 2.0], &[1.0, 2.0], 3, 1, Metric::Euclidean).is_err());
+        assert!(knn_indices_all(&[1.0, 2.0, 3.0], 2, 1, Metric::Euclidean).is_err());
+    }
+
+    #[test]
+    fn metric_changes_neighbors() {
+        // Under L2 the nearest to q is a; under cosine it is b (aligned direction).
+        let q = [1.0f32, 1.0];
+        let base = [1.2f32, 0.8, /* a: close in L2 */ 10.0, 10.0 /* b: same direction */];
+        let l2 = knn_indices(&q, &base, 2, 1, Metric::Euclidean).unwrap();
+        let cos = knn_indices(&q, &base, 2, 1, Metric::Cosine).unwrap();
+        assert_eq!(l2[0].index, 0);
+        assert_eq!(cos[0].index, 1);
+    }
+}

@@ -1,0 +1,262 @@
+//! IVF-Flat inverted-file index — the serving-scale ANN substrate.
+//!
+//! The paper positions OPDR as a complement to vector indexes (FAISS, ScaNN,
+//! HNSW): reduce the dimension first, then index. The coordinator uses this
+//! index for collections above a size threshold; the measure/accuracy math
+//! always uses exact [`crate::knn::brute`].
+//!
+//! Design: k-means (Lloyd) coarse quantizer with `nlist` centroids; queries
+//! scan the `nprobe` nearest inverted lists exhaustively (flat).
+
+use crate::error::{OpdrError, Result};
+use crate::knn::topk::top_k_smallest;
+use crate::knn::Neighbor;
+use crate::metrics::Metric;
+use crate::util::Rng;
+
+/// IVF-Flat index over row-major f32 vectors.
+#[derive(Debug, Clone)]
+pub struct IvfFlatIndex {
+    dim: usize,
+    metric: Metric,
+    nlist: usize,
+    centroids: Vec<f32>,       // nlist × dim
+    lists: Vec<Vec<usize>>,    // inverted lists of vector ids
+    vectors: Vec<f32>,         // n × dim (owned copy)
+}
+
+impl IvfFlatIndex {
+    /// Build an index with `nlist` coarse cells via Lloyd k-means
+    /// (`train_iters` iterations, deterministic from `seed`).
+    pub fn build(
+        data: &[f32],
+        dim: usize,
+        metric: Metric,
+        nlist: usize,
+        train_iters: usize,
+        seed: u64,
+    ) -> Result<Self> {
+        if dim == 0 || data.len() % dim != 0 {
+            return Err(OpdrError::shape("ivf: bad data shape"));
+        }
+        let n = data.len() / dim;
+        if n == 0 {
+            return Err(OpdrError::data("ivf: empty data"));
+        }
+        let nlist = nlist.max(1).min(n);
+
+        // k-means++ style seeding (simple random distinct picks are fine here).
+        let mut rng = Rng::new(seed);
+        let picks = rng.sample_indices(n, nlist);
+        let mut centroids = vec![0.0f32; nlist * dim];
+        for (c, &p) in picks.iter().enumerate() {
+            centroids[c * dim..(c + 1) * dim].copy_from_slice(&data[p * dim..(p + 1) * dim]);
+        }
+
+        let mut assign = vec![0usize; n];
+        for _ in 0..train_iters {
+            // Assign.
+            for i in 0..n {
+                assign[i] = nearest_centroid(&data[i * dim..(i + 1) * dim], &centroids, dim, metric);
+            }
+            // Update.
+            let mut sums = vec![0.0f64; nlist * dim];
+            let mut counts = vec![0usize; nlist];
+            for i in 0..n {
+                let c = assign[i];
+                counts[c] += 1;
+                for k in 0..dim {
+                    sums[c * dim + k] += data[i * dim + k] as f64;
+                }
+            }
+            for c in 0..nlist {
+                if counts[c] == 0 {
+                    // Re-seed empty cell with a random point.
+                    let p = rng.below(n);
+                    centroids[c * dim..(c + 1) * dim].copy_from_slice(&data[p * dim..(p + 1) * dim]);
+                } else {
+                    for k in 0..dim {
+                        centroids[c * dim + k] = (sums[c * dim + k] / counts[c] as f64) as f32;
+                    }
+                }
+            }
+        }
+
+        // Final assignment into inverted lists.
+        let mut lists = vec![Vec::new(); nlist];
+        for i in 0..n {
+            let c = nearest_centroid(&data[i * dim..(i + 1) * dim], &centroids, dim, metric);
+            lists[c].push(i);
+        }
+
+        Ok(IvfFlatIndex { dim, metric, nlist, centroids, lists, vectors: data.to_vec() })
+    }
+
+    /// Number of indexed vectors.
+    pub fn len(&self) -> usize {
+        self.vectors.len() / self.dim
+    }
+
+    /// True if the index holds no vectors.
+    pub fn is_empty(&self) -> bool {
+        self.vectors.is_empty()
+    }
+
+    /// Vector dimensionality.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Number of inverted lists.
+    pub fn nlist(&self) -> usize {
+        self.nlist
+    }
+
+    /// Approximate k-NN search scanning the `nprobe` closest cells.
+    pub fn search(&self, query: &[f32], k: usize, nprobe: usize) -> Result<Vec<Neighbor>> {
+        if query.len() != self.dim {
+            return Err(OpdrError::shape("ivf search: query dim mismatch"));
+        }
+        let nprobe = nprobe.max(1).min(self.nlist);
+        // Rank cells by centroid distance.
+        let cdists: Vec<f32> = (0..self.nlist)
+            .map(|c| self.metric.distance(query, &self.centroids[c * self.dim..(c + 1) * self.dim]))
+            .collect();
+        let cells = top_k_smallest(&cdists, nprobe);
+
+        // Exhaustive scan within probed cells.
+        let mut cand_idx = Vec::new();
+        let mut cand_dist = Vec::new();
+        for (c, _) in cells {
+            for &vid in &self.lists[c] {
+                let d = self
+                    .metric
+                    .distance(query, &self.vectors[vid * self.dim..(vid + 1) * self.dim]);
+                cand_idx.push(vid);
+                cand_dist.push(d);
+            }
+        }
+        let picked = top_k_smallest(&cand_dist, k);
+        Ok(picked
+            .into_iter()
+            .map(|(pos, distance)| Neighbor { index: cand_idx[pos], distance })
+            .collect())
+    }
+
+    /// Recall@k of this index against exact brute-force on `queries`.
+    pub fn recall_at_k(&self, queries: &[f32], k: usize, nprobe: usize) -> Result<f64> {
+        if queries.len() % self.dim != 0 {
+            return Err(OpdrError::shape("recall: bad query shape"));
+        }
+        let nq = queries.len() / self.dim;
+        if nq == 0 {
+            return Ok(1.0);
+        }
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        for qi in 0..nq {
+            let q = &queries[qi * self.dim..(qi + 1) * self.dim];
+            let exact = crate::knn::knn_indices(q, &self.vectors, self.dim, k, self.metric)?;
+            let approx = self.search(q, k, nprobe)?;
+            let approx_set: std::collections::HashSet<usize> =
+                approx.iter().map(|nb| nb.index).collect();
+            for nb in &exact {
+                total += 1;
+                if approx_set.contains(&nb.index) {
+                    hits += 1;
+                }
+            }
+        }
+        Ok(hits as f64 / total as f64)
+    }
+}
+
+fn nearest_centroid(x: &[f32], centroids: &[f32], dim: usize, metric: Metric) -> usize {
+    let nlist = centroids.len() / dim;
+    let mut best = 0usize;
+    let mut best_d = f32::INFINITY;
+    for c in 0..nlist {
+        let d = metric.distance(x, &centroids[c * dim..(c + 1) * dim]);
+        if d < best_d {
+            best_d = d;
+            best = c;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn clustered_data(n_per: usize, dim: usize, seed: u64) -> Vec<f32> {
+        // 4 well-separated Gaussian blobs.
+        let mut rng = Rng::new(seed);
+        let mut data = Vec::new();
+        for c in 0..4 {
+            let center = 20.0 * c as f32;
+            for _ in 0..n_per {
+                for k in 0..dim {
+                    let base = if k == 0 { center } else { 0.0 };
+                    data.push(base + rng.normal() as f32);
+                }
+            }
+        }
+        data
+    }
+
+    #[test]
+    fn builds_and_indexes_everything() {
+        let dim = 4;
+        let data = clustered_data(25, dim, 1);
+        let idx = IvfFlatIndex::build(&data, dim, Metric::SqEuclidean, 4, 10, 7).unwrap();
+        assert_eq!(idx.len(), 100);
+        let total: usize = (0..idx.nlist()).map(|c| idx.lists[c].len()).sum();
+        assert_eq!(total, 100);
+    }
+
+    #[test]
+    fn full_probe_equals_exact() {
+        let dim = 4;
+        let data = clustered_data(20, dim, 3);
+        let idx = IvfFlatIndex::build(&data, dim, Metric::SqEuclidean, 8, 10, 7).unwrap();
+        let mut rng = Rng::new(11);
+        let q = rng.normal_vec_f32(dim);
+        let approx = idx.search(&q, 5, 8).unwrap();
+        let exact = crate::knn::knn_indices(&q, &data, dim, 5, Metric::SqEuclidean).unwrap();
+        assert_eq!(
+            approx.iter().map(|n| n.index).collect::<Vec<_>>(),
+            exact.iter().map(|n| n.index).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn recall_improves_with_nprobe() {
+        let dim = 8;
+        let data = clustered_data(50, dim, 5);
+        let idx = IvfFlatIndex::build(&data, dim, Metric::SqEuclidean, 16, 8, 9).unwrap();
+        let mut rng = Rng::new(13);
+        let queries = rng.normal_vec_f32(10 * dim);
+        let r1 = idx.recall_at_k(&queries, 5, 1).unwrap();
+        let r_all = idx.recall_at_k(&queries, 5, 16).unwrap();
+        assert!(r_all >= r1);
+        assert!((r_all - 1.0).abs() < 1e-9, "full probe must be exact, got {r_all}");
+    }
+
+    #[test]
+    fn empty_and_bad_shapes_rejected() {
+        assert!(IvfFlatIndex::build(&[], 4, Metric::Euclidean, 4, 5, 1).is_err());
+        assert!(IvfFlatIndex::build(&[1.0; 7], 4, Metric::Euclidean, 4, 5, 1).is_err());
+        let data = clustered_data(10, 4, 1);
+        let idx = IvfFlatIndex::build(&data, 4, Metric::Euclidean, 2, 5, 1).unwrap();
+        assert!(idx.search(&[1.0; 3], 2, 1).is_err());
+    }
+
+    #[test]
+    fn nlist_capped_at_n() {
+        let data = clustered_data(1, 4, 2); // 4 points
+        let idx = IvfFlatIndex::build(&data, 4, Metric::Euclidean, 100, 3, 1).unwrap();
+        assert!(idx.nlist() <= 4);
+    }
+}

@@ -1,0 +1,16 @@
+//! Exact and approximate k-nearest-neighbor search substrates.
+//!
+//! * [`topk`] — bounded-heap top-k selection over a distance row (the inner
+//!   loop of every KNN query);
+//! * [`brute`] — exact brute-force KNN used by the OPDR measure (the paper's
+//!   ground truth is always exact KNN);
+//! * [`ivf`] — an IVF-Flat inverted-file ANN index, the serving-scale
+//!   substrate the coordinator uses for large collections.
+
+pub mod brute;
+pub mod ivf;
+pub mod topk;
+
+pub use brute::{knn_indices, knn_indices_all, Neighbor};
+pub use ivf::IvfFlatIndex;
+pub use topk::top_k_smallest;

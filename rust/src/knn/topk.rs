@@ -1,0 +1,141 @@
+//! Bounded top-k selection.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Max-heap entry so the heap root is the *worst* of the current best-k.
+#[derive(Debug, Clone, Copy)]
+struct HeapItem {
+    dist: f32,
+    idx: usize,
+}
+
+impl PartialEq for HeapItem {
+    fn eq(&self, other: &Self) -> bool {
+        self.dist == other.dist && self.idx == other.idx
+    }
+}
+impl Eq for HeapItem {}
+impl PartialOrd for HeapItem {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapItem {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Ties broken by index for full determinism.
+        self.dist
+            .partial_cmp(&other.dist)
+            .unwrap_or(Ordering::Equal)
+            .then(self.idx.cmp(&other.idx))
+    }
+}
+
+/// Indices of the `k` smallest values in `dists`, sorted ascending by
+/// (value, index). NaNs are skipped. If `k >= len`, returns all finite
+/// entries sorted.
+pub fn top_k_smallest(dists: &[f32], k: usize) -> Vec<(usize, f32)> {
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut heap: BinaryHeap<HeapItem> = BinaryHeap::with_capacity(k + 1);
+    for (idx, &dist) in dists.iter().enumerate() {
+        if dist.is_nan() {
+            continue;
+        }
+        if heap.len() < k {
+            heap.push(HeapItem { dist, idx });
+        } else if let Some(worst) = heap.peek() {
+            if (dist, idx) < (worst.dist, worst.idx) {
+                heap.pop();
+                heap.push(HeapItem { dist, idx });
+            }
+        }
+    }
+    let mut out: Vec<(usize, f32)> = heap.into_iter().map(|h| (h.idx, h.dist)).collect();
+    out.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(Ordering::Equal).then(a.0.cmp(&b.0)));
+    out
+}
+
+/// Top-k excluding one index (used for leave-one-out neighbor sets, i.e. the
+/// paper's `Y \ {y_i}` in Eq. 2).
+pub fn top_k_smallest_excluding(dists: &[f32], k: usize, exclude: usize) -> Vec<(usize, f32)> {
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut heap: BinaryHeap<HeapItem> = BinaryHeap::with_capacity(k + 1);
+    for (idx, &dist) in dists.iter().enumerate() {
+        if idx == exclude || dist.is_nan() {
+            continue;
+        }
+        if heap.len() < k {
+            heap.push(HeapItem { dist, idx });
+        } else if let Some(worst) = heap.peek() {
+            if (dist, idx) < (worst.dist, worst.idx) {
+                heap.pop();
+                heap.push(HeapItem { dist, idx });
+            }
+        }
+    }
+    let mut out: Vec<(usize, f32)> = heap.into_iter().map(|h| (h.idx, h.dist)).collect();
+    out.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(Ordering::Equal).then(a.0.cmp(&b.0)));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selects_smallest_sorted() {
+        let d = [5.0, 1.0, 3.0, 0.5, 4.0];
+        let t = top_k_smallest(&d, 3);
+        assert_eq!(t.iter().map(|x| x.0).collect::<Vec<_>>(), vec![3, 1, 2]);
+        assert_eq!(t[0].1, 0.5);
+    }
+
+    #[test]
+    fn k_zero_and_k_larger_than_len() {
+        assert!(top_k_smallest(&[1.0, 2.0], 0).is_empty());
+        let t = top_k_smallest(&[2.0, 1.0], 10);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t[0].0, 1);
+    }
+
+    #[test]
+    fn nan_skipped() {
+        let d = [f32::NAN, 1.0, 2.0];
+        let t = top_k_smallest(&d, 3);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t[0].0, 1);
+    }
+
+    #[test]
+    fn deterministic_tie_break_by_index() {
+        let d = [1.0, 1.0, 1.0, 1.0];
+        let t = top_k_smallest(&d, 2);
+        assert_eq!(t.iter().map(|x| x.0).collect::<Vec<_>>(), vec![0, 1]);
+    }
+
+    #[test]
+    fn excluding_removes_self() {
+        let d = [0.0, 1.0, 2.0, 3.0];
+        let t = top_k_smallest_excluding(&d, 2, 0);
+        assert_eq!(t.iter().map(|x| x.0).collect::<Vec<_>>(), vec![1, 2]);
+    }
+
+    #[test]
+    fn matches_full_sort_on_random_input() {
+        let mut rng = crate::util::Rng::new(8);
+        for _ in 0..20 {
+            let n = 1 + rng.below(200);
+            let k = 1 + rng.below(20);
+            let d: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let fast = top_k_smallest(&d, k);
+            let mut idx: Vec<usize> = (0..n).collect();
+            idx.sort_by(|&a, &b| d[a].partial_cmp(&d[b]).unwrap().then(a.cmp(&b)));
+            let slow: Vec<usize> = idx.into_iter().take(k.min(n)).collect();
+            assert_eq!(fast.iter().map(|x| x.0).collect::<Vec<_>>(), slow);
+        }
+    }
+}

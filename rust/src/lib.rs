@@ -1,0 +1,45 @@
+//! # OPDR — Order-Preserving Dimension Reduction for Multimodal Semantic Embedding
+//!
+//! Reproduction of the AAAI 2026 paper (Gong, Shen, Guo, Tallent, Zhao).
+//!
+//! This crate is the Layer-3 coordinator of a three-layer Rust + JAX + Pallas
+//! stack. It owns:
+//!
+//! * the **OPDR math** — the order-preserving measure `μ` (Eq. 1), the global
+//!   accuracy `A_k` (Eq. 2), the closed-form fit `A_k = c0·log(n/m) + c1`
+//!   (Eq. 4) and the dimensionality planner that inverts it ([`opdr`]);
+//! * the **dimension-reduction substrates** — PCA (covariance and Gram-trick
+//!   paths), classical MDS, SMACOF MDS, Gaussian random projection
+//!   ([`reduction`]);
+//! * the **retrieval substrates** — distance metrics, exact KNN, top-k
+//!   selection, an IVF-Flat ANN index ([`metrics`], [`knn`]);
+//! * the **multimodal data substrates** — synthetic generators standing in for
+//!   the paper's seven datasets, plus an embedding store ([`data`]);
+//! * the **runtime** — a PJRT engine that loads AOT-compiled HLO artifacts
+//!   produced by the build-time JAX/Pallas layer ([`runtime`], [`embed`]);
+//! * the **serving coordinator** — worker pool, dynamic batcher, router and
+//!   collection state for online multimodal KNN queries ([`coordinator`]).
+//!
+//! Python never runs on the request path: `make artifacts` lowers the JAX/
+//! Pallas graphs to `artifacts/*.hlo.txt` once, and everything here is pure
+//! Rust + PJRT afterwards.
+
+pub mod bench_support;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod embed;
+pub mod error;
+pub mod knn;
+pub mod linalg;
+pub mod metrics;
+pub mod opdr;
+pub mod reduction;
+pub mod report;
+pub mod runtime;
+pub mod telemetry;
+pub mod testing;
+pub mod util;
+
+pub use error::{OpdrError, Result};

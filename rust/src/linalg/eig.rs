@@ -1,0 +1,266 @@
+//! Symmetric eigendecomposition via the cyclic Jacobi method.
+//!
+//! Jacobi is chosen over QR because it is simple to verify, unconditionally
+//! stable for symmetric input, and more than fast enough for the problem
+//! sizes OPDR fits (≤ ~3000×3000 once, typically ≤ 300×300 per sweep point
+//! thanks to the Gram trick in [`crate::reduction::Pca`]).
+
+use crate::error::{OpdrError, Result};
+use crate::linalg::Mat;
+
+/// Result of [`eigh`]: eigenvalues descending, eigenvectors as columns of `vectors`
+/// (i.e. `vectors.col(i)` pairs with `values[i]`).
+#[derive(Debug, Clone)]
+pub struct EighResult {
+    /// Eigenvalues, sorted descending.
+    pub values: Vec<f64>,
+    /// Orthonormal eigenvectors; column `i` corresponds to `values[i]`.
+    pub vectors: Mat,
+}
+
+/// Eigendecomposition of a symmetric matrix by cyclic Jacobi rotations.
+///
+/// Returns eigenpairs sorted by descending eigenvalue. Errors if the input is
+/// not square/symmetric or if convergence fails (which for Jacobi indicates
+/// NaN/Inf input).
+pub fn eigh(a: &Mat) -> Result<EighResult> {
+    if a.rows() != a.cols() {
+        return Err(OpdrError::shape("eigh: matrix not square"));
+    }
+    if !a.is_symmetric(1e-8 * (1.0 + a.frobenius())) {
+        return Err(OpdrError::shape("eigh: matrix not symmetric"));
+    }
+    if a.data().iter().any(|x| !x.is_finite()) {
+        return Err(OpdrError::numeric("eigh: non-finite entries"));
+    }
+    let n = a.rows();
+    if n == 0 {
+        return Ok(EighResult { values: vec![], vectors: Mat::zeros(0, 0) });
+    }
+
+    let mut m = a.clone();
+    let mut v = Mat::eye(n);
+    let max_sweeps = 64;
+    let tol = 1e-14 * (1.0 + a.frobenius());
+
+    for _sweep in 0..max_sweeps {
+        let off = off_diagonal_norm(&m);
+        if off < tol {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() < tol / (n as f64) {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                // Rotation angle.
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+
+                // Apply rotation J(p,q,θ) on both sides: m = Jᵀ m J.
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                // Accumulate eigenvectors.
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    if off_diagonal_norm(&m) > 1e-6 * (1.0 + a.frobenius()) {
+        return Err(OpdrError::numeric("eigh: Jacobi did not converge"));
+    }
+
+    // Extract and sort descending.
+    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m[(i, i)], i)).collect();
+    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let values: Vec<f64> = pairs.iter().map(|&(val, _)| val).collect();
+    let mut vectors = Mat::zeros(n, n);
+    for (new_col, &(_, old_col)) in pairs.iter().enumerate() {
+        for k in 0..n {
+            vectors[(k, new_col)] = v[(k, old_col)];
+        }
+    }
+    Ok(EighResult { values, vectors })
+}
+
+fn off_diagonal_norm(m: &Mat) -> f64 {
+    let n = m.rows();
+    let mut s = 0.0;
+    for i in 0..n {
+        for j in 0..n {
+            if i != j {
+                s += m[(i, j)] * m[(i, j)];
+            }
+        }
+    }
+    s.sqrt()
+}
+
+/// Power iteration for the dominant eigenpair (used for cheap spectral probes
+/// and as an independent cross-check on `eigh` in tests).
+pub fn power_iteration(a: &Mat, iters: usize, seed: u64) -> Result<(f64, Vec<f64>)> {
+    if a.rows() != a.cols() {
+        return Err(OpdrError::shape("power_iteration: not square"));
+    }
+    let n = a.rows();
+    if n == 0 {
+        return Err(OpdrError::shape("power_iteration: empty"));
+    }
+    let mut rng = crate::util::Rng::new(seed);
+    let mut v: Vec<f64> = rng.normal_vec(n);
+    normalize(&mut v);
+    let mut lambda = 0.0;
+    for _ in 0..iters {
+        let mut w = a.matvec(&v)?;
+        let norm = l2(&w);
+        if norm < 1e-300 {
+            return Err(OpdrError::numeric("power_iteration: zero vector"));
+        }
+        for x in &mut w {
+            *x /= norm;
+        }
+        lambda = dot(&w, &a.matvec(&w)?);
+        v = w;
+    }
+    Ok((lambda, v))
+}
+
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+fn l2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+fn normalize(a: &mut [f64]) {
+    let n = l2(a);
+    if n > 0.0 {
+        for x in a.iter_mut() {
+            *x /= n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_symmetric(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let x = rng.normal();
+                m[(i, j)] = x;
+                m[(j, i)] = x;
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn diagonal_matrix_eigenvalues() {
+        let mut d = Mat::zeros(3, 3);
+        d[(0, 0)] = 1.0;
+        d[(1, 1)] = 5.0;
+        d[(2, 2)] = 3.0;
+        let r = eigh(&d).unwrap();
+        assert_eq!(r.values, vec![5.0, 3.0, 1.0]);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] -> eigenvalues 3, 1.
+        let a = Mat::from_rows(&[vec![2.0, 1.0], vec![1.0, 2.0]]).unwrap();
+        let r = eigh(&a).unwrap();
+        assert!((r.values[0] - 3.0).abs() < 1e-10);
+        assert!((r.values[1] - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn reconstruction_and_orthonormality() {
+        let a = random_symmetric(12, 99);
+        let r = eigh(&a).unwrap();
+        // V Λ Vᵀ == A
+        let mut lam = Mat::zeros(12, 12);
+        for i in 0..12 {
+            lam[(i, i)] = r.values[i];
+        }
+        let recon = r.vectors.matmul(&lam).unwrap().matmul(&r.vectors.transpose()).unwrap();
+        assert!(recon.max_abs_diff(&a) < 1e-8, "diff={}", recon.max_abs_diff(&a));
+        // VᵀV == I
+        let vtv = r.vectors.transpose().matmul(&r.vectors).unwrap();
+        assert!(vtv.max_abs_diff(&Mat::eye(12)) < 1e-10);
+    }
+
+    #[test]
+    fn eigenvalues_sorted_descending() {
+        let a = random_symmetric(8, 7);
+        let r = eigh(&a).unwrap();
+        for w in r.values.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+    }
+
+    #[test]
+    fn trace_equals_eigenvalue_sum() {
+        let a = random_symmetric(10, 3);
+        let r = eigh(&a).unwrap();
+        let trace: f64 = (0..10).map(|i| a[(i, i)]).sum();
+        let sum: f64 = r.values.iter().sum();
+        assert!((trace - sum).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_nonsquare_and_asymmetric() {
+        assert!(eigh(&Mat::zeros(2, 3)).is_err());
+        let ns = Mat::from_rows(&[vec![1.0, 2.0], vec![0.0, 1.0]]).unwrap();
+        assert!(eigh(&ns).is_err());
+    }
+
+    #[test]
+    fn rejects_non_finite() {
+        let mut a = Mat::zeros(2, 2);
+        a[(0, 0)] = f64::NAN;
+        assert!(eigh(&a).is_err());
+    }
+
+    #[test]
+    fn empty_matrix_ok() {
+        let r = eigh(&Mat::zeros(0, 0)).unwrap();
+        assert!(r.values.is_empty());
+    }
+
+    #[test]
+    fn power_iteration_matches_eigh() {
+        let a = random_symmetric(9, 21);
+        // Shift to make dominant eigenvalue positive & well separated in magnitude.
+        let mut shifted = a.clone();
+        for i in 0..9 {
+            shifted[(i, i)] += 20.0;
+        }
+        let r = eigh(&shifted).unwrap();
+        let (lam, _) = power_iteration(&shifted, 500, 1).unwrap();
+        assert!((lam - r.values[0]).abs() < 1e-6, "power={lam} eigh={}", r.values[0]);
+    }
+}

@@ -1,0 +1,19 @@
+//! Dense linear-algebra substrate.
+//!
+//! The offline crate set has no `ndarray`/`nalgebra`, so the reducers are
+//! built on this minimal, well-tested kernel set: a row-major `f64` matrix,
+//! a cyclic-Jacobi symmetric eigendecomposition (the workhorse of both PCA
+//! and classical MDS), and the centering/Gram utilities those methods need.
+//!
+//! Sizes in OPDR experiments are modest (the paper sweeps m ≤ 300 samples and
+//! d ≤ 2816 dims; PCA fits run on min(m, d)-sized symmetric matrices thanks to
+//! the Gram trick), so Jacobi's O(n³) per sweep is plenty and numerically
+//! very robust.
+
+pub mod eig;
+pub mod mat;
+pub mod ops;
+
+pub use eig::{eigh, EighResult};
+pub use mat::Mat;
+pub use ops::{center_columns, double_center, gram_matrix, covariance_matrix};

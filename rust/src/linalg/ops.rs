@@ -1,0 +1,171 @@
+//! Centering, Gram and covariance operations shared by PCA and MDS.
+
+use crate::error::{OpdrError, Result};
+use crate::linalg::Mat;
+
+/// Subtract the column means from a data matrix (rows = samples).
+/// Returns the centered matrix and the mean vector.
+pub fn center_columns(x: &Mat) -> (Mat, Vec<f64>) {
+    let (m, d) = (x.rows(), x.cols());
+    let mut means = vec![0.0; d];
+    for i in 0..m {
+        for (j, mean) in means.iter_mut().enumerate() {
+            *mean += x[(i, j)];
+        }
+    }
+    if m > 0 {
+        for mean in &mut means {
+            *mean /= m as f64;
+        }
+    }
+    let mut c = x.clone();
+    for i in 0..m {
+        for j in 0..d {
+            c[(i, j)] -= means[j];
+        }
+    }
+    (c, means)
+}
+
+/// Sample covariance matrix `Xᶜᵀ Xᶜ / (m-1)` of row-sample data (d×d).
+pub fn covariance_matrix(x: &Mat) -> Result<Mat> {
+    let m = x.rows();
+    if m < 2 {
+        return Err(OpdrError::shape("covariance: need at least 2 samples"));
+    }
+    let (c, _) = center_columns(x);
+    let mut cov = c.transpose().matmul(&c)?;
+    cov.scale(1.0 / (m as f64 - 1.0));
+    Ok(cov)
+}
+
+/// Gram matrix `Xᶜ Xᶜᵀ` of centered data (m×m). Shares the non-zero spectrum
+/// with `XᶜᵀXᶜ` — the basis of the PCA "Gram trick" when d ≫ m.
+pub fn gram_matrix(x: &Mat) -> Result<Mat> {
+    let (c, _) = center_columns(x);
+    c.matmul(&c.transpose())
+}
+
+/// Double-center a squared-distance matrix: `B = -½ J D² J`, `J = I - 11ᵀ/m`.
+/// This is the classical-MDS Gram reconstruction (Torgerson 1952).
+pub fn double_center(d_sq: &Mat) -> Result<Mat> {
+    if d_sq.rows() != d_sq.cols() {
+        return Err(OpdrError::shape("double_center: not square"));
+    }
+    let m = d_sq.rows();
+    if m == 0 {
+        return Ok(Mat::zeros(0, 0));
+    }
+    let mf = m as f64;
+    let mut row_mean = vec![0.0; m];
+    let mut col_mean = vec![0.0; m];
+    let mut total = 0.0;
+    for i in 0..m {
+        for j in 0..m {
+            let v = d_sq[(i, j)];
+            row_mean[i] += v;
+            col_mean[j] += v;
+            total += v;
+        }
+    }
+    for v in &mut row_mean {
+        *v /= mf;
+    }
+    for v in &mut col_mean {
+        *v /= mf;
+    }
+    total /= mf * mf;
+
+    let mut b = Mat::zeros(m, m);
+    for i in 0..m {
+        for j in 0..m {
+            b[(i, j)] = -0.5 * (d_sq[(i, j)] - row_mean[i] - col_mean[j] + total);
+        }
+    }
+    Ok(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn centering_zeroes_means() {
+        let x = Mat::from_rows(&[vec![1.0, 10.0], vec![3.0, 20.0], vec![5.0, 30.0]]).unwrap();
+        let (c, means) = center_columns(&x);
+        assert_eq!(means, vec![3.0, 20.0]);
+        for j in 0..2 {
+            let col_sum: f64 = (0..3).map(|i| c[(i, j)]).sum();
+            assert!(col_sum.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn covariance_known_values() {
+        // Two perfectly correlated columns.
+        let x = Mat::from_rows(&[vec![0.0, 0.0], vec![1.0, 2.0], vec![2.0, 4.0]]).unwrap();
+        let c = covariance_matrix(&x).unwrap();
+        assert!((c[(0, 0)] - 1.0).abs() < 1e-12);
+        assert!((c[(1, 1)] - 4.0).abs() < 1e-12);
+        assert!((c[(0, 1)] - 2.0).abs() < 1e-12);
+        assert!(c.is_symmetric(1e-12));
+    }
+
+    #[test]
+    fn covariance_needs_two_samples() {
+        let x = Mat::zeros(1, 4);
+        assert!(covariance_matrix(&x).is_err());
+    }
+
+    #[test]
+    fn gram_and_covariance_share_spectrum() {
+        let mut rng = Rng::new(5);
+        let x = Mat::from_vec(6, 10, rng.normal_vec(60)).unwrap();
+        let g = gram_matrix(&x).unwrap(); // 6x6
+        let mut cov = covariance_matrix(&x).unwrap(); // 10x10 (scaled by 1/(m-1))
+        cov.scale(5.0); // undo the 1/(m-1): compare XᵀX vs XXᵀ spectra
+        let eg = crate::linalg::eigh(&g).unwrap();
+        let ec = crate::linalg::eigh(&cov).unwrap();
+        // Top 5 non-zero eigenvalues must match (centered rank ≤ m-1 = 5).
+        for i in 0..5 {
+            assert!(
+                (eg.values[i] - ec.values[i]).abs() < 1e-8 * (1.0 + eg.values[i].abs()),
+                "i={i}: {} vs {}",
+                eg.values[i],
+                ec.values[i]
+            );
+        }
+    }
+
+    #[test]
+    fn double_center_recovers_gram_of_points() {
+        // Points in 2D; D²ij = |xi-xj|²; B should equal centered Gram.
+        let pts = [(0.0, 0.0), (1.0, 0.0), (0.0, 2.0), (3.0, 1.0)];
+        let m = pts.len();
+        let mut dsq = Mat::zeros(m, m);
+        for i in 0..m {
+            for j in 0..m {
+                let dx = pts[i].0 - pts[j].0;
+                let dy = pts[i].1 - pts[j].1;
+                dsq[(i, j)] = dx * dx + dy * dy;
+            }
+        }
+        let b = double_center(&dsq).unwrap();
+        // Build centered Gram directly.
+        let x = Mat::from_rows(&pts.iter().map(|&(a, c)| vec![a, c]).collect::<Vec<_>>()).unwrap();
+        let g = gram_matrix(&x).unwrap();
+        assert!(b.max_abs_diff(&g) < 1e-10);
+    }
+
+    #[test]
+    fn double_center_rejects_nonsquare() {
+        assert!(double_center(&Mat::zeros(2, 3)).is_err());
+    }
+
+    #[test]
+    fn double_center_empty_ok() {
+        let b = double_center(&Mat::zeros(0, 0)).unwrap();
+        assert_eq!(b.rows(), 0);
+    }
+}

@@ -1,0 +1,312 @@
+//! `opdr` — leader entrypoint / CLI for the OPDR reproduction.
+//!
+//! Subcommands:
+//!   gen-data   Generate a synthetic dataset and save it to the store.
+//!   sweep      Run an accuracy-vs-n/m sweep and print/fit the series.
+//!   plan       Calibrate the planner on a dataset and plan dims.
+//!   figure     Regenerate a paper figure's series (1..6, esc50).
+//!   serve-demo Start the coordinator, ingest, run a query storm, print stats.
+//!   artifacts  Verify the PJRT artifacts load and execute.
+
+use opdr::cli::Args;
+use opdr::config::SweepSpec;
+use opdr::data::{store, synth, DatasetKind};
+use opdr::error::{OpdrError, Result};
+use opdr::metrics::Metric;
+use opdr::opdr::{fit_log_model, sweep::SweepConfig, Planner};
+use opdr::reduction::ReducerKind;
+use opdr::report::Table;
+
+fn main() {
+    let code = match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run() -> Result<()> {
+    let mut args = Args::from_env()?;
+    match args.subcommand.as_str() {
+        "gen-data" => cmd_gen_data(&mut args),
+        "sweep" => cmd_sweep(&mut args),
+        "plan" => cmd_plan(&mut args),
+        "figure" => cmd_figure(&mut args),
+        "experiment" => cmd_experiment(&mut args),
+        "serve-demo" => cmd_serve_demo(&mut args),
+        "artifacts" => cmd_artifacts(&mut args),
+        "" | "help" => {
+            print_help();
+            Ok(())
+        }
+        other => Err(OpdrError::config(format!("unknown subcommand `{other}` (try help)"))),
+    }
+}
+
+fn print_help() {
+    println!(
+        "opdr — Order-Preserving Dimension Reduction (AAAI 2026 reproduction)\n\n\
+         USAGE: opdr <subcommand> [flags]\n\n\
+         SUBCOMMANDS:\n\
+           gen-data   --dataset <name> --n <count> [--dim D] [--seed S] [--out file]\n\
+           sweep      --dataset <name> [--k K] [--metric M] [--reducer R] [--seed S]\n\
+           plan       --dataset <name> --target-accuracy A [--m M] [--k K]\n\
+           figure     --id <1..6|esc50> [--seed S]\n\
+           experiment --config configs/<file>.toml\n\
+           serve-demo [--n N] [--dim D] [--queries Q] [--use-runtime]\n\
+           artifacts  [--dir artifacts]\n\n\
+         DATASETS: {}\n",
+        DatasetKind::ALL.map(|d| d.name()).join(", ")
+    );
+}
+
+fn parse_dataset(args: &mut Args) -> Result<DatasetKind> {
+    let name = args.get_or("dataset", "materials-observable");
+    DatasetKind::parse(&name).ok_or_else(|| OpdrError::config(format!("unknown dataset `{name}`")))
+}
+
+fn cmd_gen_data(args: &mut Args) -> Result<()> {
+    let kind = parse_dataset(args)?;
+    let n = args.get_usize_or("n", 1000)?;
+    let dim = args.get_usize_or("dim", kind.default_embed_dim())?;
+    let seed = args.get_u64_or("seed", 42)?;
+    let out = args.get_or("out", &format!("data/{}.opdr", kind.name()));
+    args.finish()?;
+
+    let set = synth::generate(kind, n, dim, seed);
+    if let Some(parent) = std::path::Path::new(&out).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    store::save(&set, &out)?;
+    println!("wrote {} vectors (dim {}) to {}", set.len(), set.dim(), out);
+    Ok(())
+}
+
+fn cmd_sweep(args: &mut Args) -> Result<()> {
+    let kind = parse_dataset(args)?;
+    let k = args.get_usize_or("k", 5)?;
+    let metric = Metric::parse(&args.get_or("metric", "l2sq"))
+        .ok_or_else(|| OpdrError::config("bad --metric"))?;
+    let reducer = ReducerKind::parse(&args.get_or("reducer", "pca"))
+        .ok_or_else(|| OpdrError::config("bad --reducer"))?;
+    let seed = args.get_u64_or("seed", 42)?;
+    let dim = args.get_usize_or("dim", 256)?;
+    args.finish()?;
+
+    let spec = SweepSpec { dataset: kind, k, metric, reducer, seed, ..Default::default() };
+    spec.validate()?;
+    let sizes = kind.paper_sample_sizes();
+    let total = *sizes.iter().max().unwrap() * 4;
+    let set = synth::generate(kind, total, dim, seed);
+    let cfg = SweepConfig {
+        k,
+        metric,
+        reducer,
+        sample_sizes: sizes,
+        dims_per_m: 10,
+        repeats: 2,
+        seed,
+    };
+    let curve = opdr::opdr::accuracy_curve(&set, &cfg)?;
+    let mut t = Table::new(&["n/m", "accuracy"]);
+    for (r, a) in curve.binned(12) {
+        t.row(&[format!("{r:.4}"), format!("{a:.4}")]);
+    }
+    println!("{}", t.render());
+    let fit = fit_log_model(curve.points())?;
+    println!(
+        "fit: A = {:.4}·ln(n/m) + {:.4}   (R² = {:.4}, {} points)",
+        fit.c0, fit.c1, fit.r_squared, fit.n_points
+    );
+    Ok(())
+}
+
+fn cmd_plan(args: &mut Args) -> Result<()> {
+    let kind = parse_dataset(args)?;
+    let target = args.get_f64_or("target-accuracy", 0.9)?;
+    let m = args.get_usize_or("m", 200)?;
+    let k = args.get_usize_or("k", 5)?;
+    let dim = args.get_usize_or("dim", 256)?;
+    let seed = args.get_u64_or("seed", 42)?;
+    args.finish()?;
+
+    let set = synth::generate(kind, m, dim, seed);
+    let planner = Planner::calibrate(set.data(), dim, k, Metric::SqEuclidean, ReducerKind::Pca, seed)?;
+    let fit = planner.fit();
+    println!(
+        "calibrated on {} ({} pts, dim {}): A = {:.4}·ln(n/m) + {:.4}  R²={:.3}",
+        kind.name(),
+        m,
+        dim,
+        fit.c0,
+        fit.c1,
+        fit.r_squared
+    );
+    let mut t = Table::new(&["target A", "planned dim(Y)"]);
+    for a in [0.5, 0.7, 0.8, 0.9, 0.95, target] {
+        t.row(&[format!("{a:.2}"), planner.dim_for_accuracy(a, m).to_string()]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_figure(args: &mut Args) -> Result<()> {
+    let id = args.get_or("id", "1");
+    let seed = args.get_u64_or("seed", 42)?;
+    args.finish()?;
+    run_figure(&id, seed, true).map(|_| ())
+}
+
+fn cmd_experiment(args: &mut Args) -> Result<()> {
+    use opdr::config::ExperimentConfig;
+    use opdr::report::write_csv;
+    let path = args
+        .get("config")
+        .ok_or_else(|| OpdrError::config("experiment: --config <file.toml> required"))?
+        .to_string();
+    args.finish()?;
+    let cfg = ExperimentConfig::from_file(&path)?;
+    println!("experiment `{}` → {}/", cfg.name, cfg.out_dir);
+    for spec in &cfg.sweeps {
+        let sizes = if spec.sample_sizes.is_empty() {
+            spec.dataset.paper_sample_sizes()
+        } else {
+            spec.sample_sizes.clone()
+        };
+        let total = sizes.iter().max().copied().unwrap_or(100) * 4;
+        let set = synth::generate(spec.dataset, total, 256, spec.seed);
+        let scfg = SweepConfig {
+            k: spec.k,
+            metric: spec.metric,
+            reducer: spec.reducer,
+            sample_sizes: sizes,
+            dims_per_m: spec.dims_per_m,
+            repeats: spec.repeats,
+            seed: spec.seed,
+        };
+        let curve = opdr::opdr::accuracy_curve(&set, &scfg)?;
+        let fit = fit_log_model(curve.points())?;
+        println!(
+            "  {}: A = {:.4}·ln(n/m) + {:.4}  R²={:.3}  ({} pts)",
+            spec.dataset.name(),
+            fit.c0,
+            fit.c1,
+            fit.r_squared,
+            fit.n_points
+        );
+        let rows: Vec<Vec<String>> = curve
+            .points()
+            .iter()
+            .map(|&(r, a)| vec![format!("{r}"), format!("{a}")])
+            .collect();
+        write_csv(
+            format!("{}/{}_{}.csv", cfg.out_dir, cfg.name, spec.dataset.name()),
+            &["ratio", "accuracy"],
+            &rows,
+        )?;
+    }
+    Ok(())
+}
+
+fn cmd_serve_demo(args: &mut Args) -> Result<()> {
+    use opdr::config::ServeConfig;
+    use opdr::coordinator::Coordinator;
+    let n = args.get_usize_or("n", 2000)?;
+    let dim = args.get_usize_or("dim", 256)?;
+    let queries = args.get_usize_or("queries", 500)?;
+    let use_runtime = args.has("use-runtime");
+    args.finish()?;
+
+    let cfg = ServeConfig { use_runtime, ..Default::default() };
+    let coord = Coordinator::start(cfg)?;
+    coord.create_collection("demo", dim, Metric::SqEuclidean)?;
+    let set = synth::generate(DatasetKind::Flickr30k, n, dim, 42);
+    coord.ingest("demo", set.data().to_vec())?;
+    let planned = coord.build_reduced("demo", 0.9, 10)?;
+    println!("ingested {n} vectors (dim {dim}); OPDR planned serving dim = {planned}");
+
+    let sw = opdr::util::Stopwatch::start();
+    let mut rxs = Vec::new();
+    for i in 0..queries {
+        match coord.search_async("demo", set.vector(i % n).to_vec(), 10) {
+            Ok(rx) => rxs.push(rx),
+            Err(_) => {} // backpressure
+        }
+    }
+    let mut ok = 0;
+    for rx in rxs {
+        if rx.recv().map(|r| r.is_ok()).unwrap_or(false) {
+            ok += 1;
+        }
+    }
+    let secs = sw.elapsed_secs();
+    println!("completed {ok}/{queries} queries in {secs:.2}s ({:.0} qps)", ok as f64 / secs);
+    println!("{}", coord.stats()?);
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_artifacts(args: &mut Args) -> Result<()> {
+    let dir = args.get_or("dir", "artifacts");
+    args.finish()?;
+    let engine = opdr::runtime::Engine::new(&dir)?;
+    println!("platform: {}", engine.platform());
+    for name in engine.manifest().names() {
+        let sw = opdr::util::Stopwatch::start();
+        engine.warmup(&name)?;
+        println!("  {name}: compiled in {:.2}s", sw.elapsed_secs());
+    }
+    println!("all artifacts OK");
+    Ok(())
+}
+
+/// Run a figure by id (datasets figures 1-6 + esc50), optionally printing.
+fn run_figure(id: &str, seed: u64, verbose: bool) -> Result<Vec<opdr::opdr::sweep::AccuracyCurve>> {
+    let datasets: Vec<(DatasetKind, &str)> = match id {
+        "1" => vec![(DatasetKind::MaterialsObservable, "Figure 1: Observable")],
+        "2" => vec![(DatasetKind::MaterialsStable, "Figure 2: Stable")],
+        "3" => vec![(DatasetKind::MaterialsMetal, "Figure 3: Metal")],
+        "4" => vec![(DatasetKind::MaterialsMagnetic, "Figure 4: Magnetic")],
+        "5" => vec![(DatasetKind::Flickr30k, "Figure 5: Flickr30k")],
+        "6" => vec![(DatasetKind::OmniCorpus, "Figure 6: OmniCorpus")],
+        "esc50" => vec![(DatasetKind::Esc50, "ESC-50 (audio-text)")],
+        other => {
+            return Err(OpdrError::config(format!(
+                "figure `{other}` is handled by the bench targets (7-12, metrics)"
+            )))
+        }
+    };
+    let mut curves = Vec::new();
+    for (kind, title) in datasets {
+        let sizes = kind.paper_sample_sizes();
+        let total = sizes.iter().max().unwrap() * 4;
+        let set = synth::generate(kind, total, kind.default_embed_dim().min(512), seed);
+        let cfg = SweepConfig {
+            sample_sizes: sizes,
+            dims_per_m: 10,
+            repeats: 2,
+            seed,
+            ..Default::default()
+        };
+        let curve = opdr::opdr::accuracy_curve(&set, &cfg)?;
+        if verbose {
+            println!("\n{title}");
+            let mut t = Table::new(&["n/m", "accuracy"]);
+            for (r, a) in curve.binned(10) {
+                t.row(&[format!("{r:.4}"), format!("{a:.4}")]);
+            }
+            println!("{}", t.render());
+            if let Ok(fit) = fit_log_model(curve.points()) {
+                println!(
+                    "fit: A = {:.4}·ln(n/m) + {:.4}  R²={:.3}",
+                    fit.c0, fit.c1, fit.r_squared
+                );
+            }
+        }
+        curves.push(curve);
+    }
+    Ok(curves)
+}

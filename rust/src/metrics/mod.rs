@@ -1,0 +1,206 @@
+//! Distance metrics over `f32` embedding vectors.
+//!
+//! The paper evaluates OPDR under Euclidean (L2), cosine and Manhattan
+//! distances. All metrics here are *distances* (smaller = closer) so KNN code
+//! is metric-agnostic. `SqEuclidean` is the L2 hot-path variant: it induces
+//! the same neighbor ordering as L2 without the square root, and matches the
+//! `‖q‖² − 2q·b + ‖b‖²` matmul expansion used by the Pallas kernel (L1) and
+//! the `pairwise_topk` HLO artifact (L2).
+
+pub mod pairwise;
+
+pub use pairwise::{pairwise_distances, pairwise_distances_symmetric};
+
+/// Supported distance metrics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Metric {
+    /// Euclidean (L2) distance.
+    Euclidean,
+    /// Squared Euclidean — same KNN ordering as L2, cheaper.
+    SqEuclidean,
+    /// Cosine distance `1 − cos(a, b)`; zero vectors treated as distance 1.
+    Cosine,
+    /// Manhattan (L1) distance.
+    Manhattan,
+    /// Negative dot product (maximum inner-product search as a distance).
+    NegDot,
+}
+
+impl Metric {
+    /// Parse from a config / CLI string.
+    pub fn parse(s: &str) -> Option<Metric> {
+        match s.to_ascii_lowercase().as_str() {
+            "euclidean" | "l2" => Some(Metric::Euclidean),
+            "sqeuclidean" | "l2sq" | "sql2" => Some(Metric::SqEuclidean),
+            "cosine" | "cos" => Some(Metric::Cosine),
+            "manhattan" | "l1" | "cityblock" => Some(Metric::Manhattan),
+            "negdot" | "dot" | "mips" => Some(Metric::NegDot),
+            _ => None,
+        }
+    }
+
+    /// Canonical name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Metric::Euclidean => "euclidean",
+            Metric::SqEuclidean => "sqeuclidean",
+            Metric::Cosine => "cosine",
+            Metric::Manhattan => "manhattan",
+            Metric::NegDot => "negdot",
+        }
+    }
+
+    /// Distance between two equal-length vectors.
+    #[inline]
+    pub fn distance(&self, a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        match self {
+            Metric::Euclidean => sq_euclidean(a, b).sqrt(),
+            Metric::SqEuclidean => sq_euclidean(a, b),
+            Metric::Cosine => cosine_distance(a, b),
+            Metric::Manhattan => manhattan(a, b),
+            Metric::NegDot => -crate::util::float::dot_f32(a, b),
+        }
+    }
+
+    /// Does zero-padding both vectors to a larger dimension preserve the
+    /// distance exactly? True for every metric here — the property the padded
+    /// fixed-shape HLO artifacts rely on.
+    pub fn padding_invariant(&self) -> bool {
+        true
+    }
+}
+
+/// Squared Euclidean distance (8-accumulator form; see §Perf L3-1).
+#[inline]
+pub fn sq_euclidean(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = [0.0f32; 8];
+    let ca = a.chunks_exact(8);
+    let cb = b.chunks_exact(8);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (xa, xb) in ca.zip(cb) {
+        for l in 0..8 {
+            let d = xa[l] - xb[l];
+            acc[l] += d * d;
+        }
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    for i in 0..ra.len() {
+        let d = ra[i] - rb[i];
+        s += d * d;
+    }
+    s
+}
+
+/// Manhattan (L1) distance (8-accumulator form; see §Perf L3-1).
+#[inline]
+pub fn manhattan(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = [0.0f32; 8];
+    let ca = a.chunks_exact(8);
+    let cb = b.chunks_exact(8);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (xa, xb) in ca.zip(cb) {
+        for l in 0..8 {
+            acc[l] += (xa[l] - xb[l]).abs();
+        }
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    for i in 0..ra.len() {
+        s += (ra[i] - rb[i]).abs();
+    }
+    s
+}
+
+/// Cosine distance `1 − a·b/(‖a‖‖b‖)`; if either vector is zero, returns 1.
+#[inline]
+pub fn cosine_distance(a: &[f32], b: &[f32]) -> f32 {
+    let dot = crate::util::float::dot_f32(a, b);
+    let na = crate::util::float::norm_sq_f32(a).sqrt();
+    let nb = crate::util::float::norm_sq_f32(b).sqrt();
+    if na == 0.0 || nb == 0.0 {
+        return 1.0;
+    }
+    1.0 - dot / (na * nb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_aliases() {
+        assert_eq!(Metric::parse("L2"), Some(Metric::Euclidean));
+        assert_eq!(Metric::parse("cosine"), Some(Metric::Cosine));
+        assert_eq!(Metric::parse("cityblock"), Some(Metric::Manhattan));
+        assert_eq!(Metric::parse("bogus"), None);
+    }
+
+    #[test]
+    fn known_distances() {
+        let a = [0.0f32, 0.0];
+        let b = [3.0f32, 4.0];
+        assert_eq!(Metric::Euclidean.distance(&a, &b), 5.0);
+        assert_eq!(Metric::SqEuclidean.distance(&a, &b), 25.0);
+        assert_eq!(Metric::Manhattan.distance(&a, &b), 7.0);
+    }
+
+    #[test]
+    fn cosine_identical_and_orthogonal() {
+        let a = [1.0f32, 0.0];
+        let b = [0.0f32, 1.0];
+        assert!((Metric::Cosine.distance(&a, &a)).abs() < 1e-6);
+        assert!((Metric::Cosine.distance(&a, &b) - 1.0).abs() < 1e-6);
+        let c = [-1.0f32, 0.0];
+        assert!((Metric::Cosine.distance(&a, &c) - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_zero_vector_safe() {
+        let z = [0.0f32, 0.0];
+        let a = [1.0f32, 1.0];
+        assert_eq!(Metric::Cosine.distance(&z, &a), 1.0);
+    }
+
+    #[test]
+    fn sq_euclidean_same_ordering_as_euclidean() {
+        let q = [0.5f32, -1.0, 2.0];
+        let xs = [[1.0f32, 0.0, 0.0], [0.0, -1.0, 2.0], [2.0, 2.0, 2.0]];
+        let mut by_l2: Vec<usize> = (0..3).collect();
+        by_l2.sort_by(|&i, &j| {
+            Metric::Euclidean
+                .distance(&q, &xs[i])
+                .partial_cmp(&Metric::Euclidean.distance(&q, &xs[j]))
+                .unwrap()
+        });
+        let mut by_sq: Vec<usize> = (0..3).collect();
+        by_sq.sort_by(|&i, &j| {
+            Metric::SqEuclidean
+                .distance(&q, &xs[i])
+                .partial_cmp(&Metric::SqEuclidean.distance(&q, &xs[j]))
+                .unwrap()
+        });
+        assert_eq!(by_l2, by_sq);
+    }
+
+    #[test]
+    fn zero_padding_preserves_all_metrics() {
+        let a = [1.0f32, -2.0, 0.5];
+        let b = [0.25f32, 1.5, -1.0];
+        let pad =
+            |v: &[f32]| -> Vec<f32> { v.iter().copied().chain(std::iter::repeat(0.0)).take(8).collect() };
+        for m in [Metric::Euclidean, Metric::SqEuclidean, Metric::Cosine, Metric::Manhattan, Metric::NegDot] {
+            let d0 = m.distance(&a, &b);
+            let d1 = m.distance(&pad(&a), &pad(&b));
+            assert!((d0 - d1).abs() < 1e-6, "{}: {d0} vs {d1}", m.name());
+            assert!(m.padding_invariant());
+        }
+    }
+
+    #[test]
+    fn negdot_prefers_aligned() {
+        let q = [1.0f32, 0.0];
+        let aligned = [5.0f32, 0.0];
+        let anti = [-5.0f32, 0.0];
+        assert!(Metric::NegDot.distance(&q, &aligned) < Metric::NegDot.distance(&q, &anti));
+    }
+}

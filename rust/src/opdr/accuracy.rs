@@ -1,0 +1,115 @@
+//! The global accuracy `A_k^X(Y)` (paper Eq. 2).
+//!
+//! ```text
+//! A_k^X(Y) = (1/m) Σ_i μ_i(Y \ {y_i}) / k  ... with μ_i already 1/k-scaled,
+//! ```
+//!
+//! i.e. the mean over all points of the fraction of their k nearest neighbors
+//! that survive the reduction. `A ∈ [0, 1]`; `A = 1` means the map is `OP_k`.
+
+use crate::error::Result;
+use crate::metrics::Metric;
+use crate::opdr::measure::NeighborSets;
+
+/// Accuracy from precomputed neighbor sets.
+pub fn accuracy_from_sets(sets: &NeighborSets) -> f64 {
+    if sets.is_empty() {
+        return 1.0; // vacuous: nothing to preserve
+    }
+    let m = sets.len();
+    let total: f64 = (0..m)
+        .map(|i| sets.preserved_set(i).len() as f64 / sets.k as f64)
+        .sum();
+    total / m as f64
+}
+
+/// End-to-end accuracy: compute neighbor sets in `X` and `Y` and average the
+/// per-point measures. This is the quantity every figure of the paper plots.
+pub fn accuracy(
+    x: &[f32],
+    dim_x: usize,
+    y: &[f32],
+    dim_y: usize,
+    k: usize,
+    metric: Metric,
+) -> Result<f64> {
+    let sets = NeighborSets::compute(x, dim_x, y, dim_y, k, metric)?;
+    Ok(accuracy_from_sets(&sets))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reduction::{DimReducer, Pca};
+    use crate::util::Rng;
+
+    #[test]
+    fn identity_reduction_scores_one() {
+        let mut rng = Rng::new(1);
+        let x = rng.normal_vec_f32(30 * 8);
+        let a = accuracy(&x, 8, &x, 8, 5, Metric::Euclidean).unwrap();
+        assert_eq!(a, 1.0);
+    }
+
+    #[test]
+    fn random_unrelated_y_scores_low() {
+        let mut rng = Rng::new(2);
+        let m = 60;
+        let x = rng.normal_vec_f32(m * 16);
+        let y = rng.normal_vec_f32(m * 2); // unrelated coordinates
+        let a = accuracy(&x, 16, &y, 2, 5, Metric::Euclidean).unwrap();
+        // Expected preserved fraction for random sets ≈ k/(m-1) ≈ 0.085.
+        assert!(a < 0.35, "a={a}");
+    }
+
+    #[test]
+    fn accuracy_in_unit_interval() {
+        let mut rng = Rng::new(3);
+        for trial in 0..10 {
+            let m = 10 + rng.below(30);
+            let x = rng.normal_vec_f32(m * 8);
+            let y = rng.normal_vec_f32(m * 3);
+            let a = accuracy(&x, 8, &y, 3, 4, Metric::Euclidean).unwrap();
+            assert!((0.0..=1.0).contains(&a), "trial {trial}: a={a}");
+        }
+    }
+
+    #[test]
+    fn rotation_is_op_k() {
+        // Full-dim PCA is a rigid rotation: A_k must be exactly 1 (paper's
+        // "if Y = X then A_k = 1.0" extreme case, generalized to isometries).
+        let mut rng = Rng::new(4);
+        let m = 25;
+        let dim = 6;
+        let x = rng.normal_vec_f32(m * dim);
+        let y = Pca::new().fit_transform(&x, dim, dim).unwrap();
+        let a = accuracy(&x, dim, &y, dim, 5, Metric::Euclidean).unwrap();
+        assert_eq!(a, 1.0);
+    }
+
+    #[test]
+    fn pca_accuracy_monotone_in_target_dim_on_average() {
+        // More dimensions kept → (weakly) better neighbor preservation.
+        let mut rng = Rng::new(5);
+        let m = 40;
+        let dim = 32;
+        let x = rng.normal_vec_f32(m * dim);
+        let mut prev = 0.0;
+        let mut violations = 0;
+        for target in [2usize, 8, 16, 32] {
+            let y = Pca::new().fit_transform(&x, dim, target).unwrap();
+            let a = accuracy(&x, dim, &y, target, 5, Metric::Euclidean).unwrap();
+            if a + 0.05 < prev {
+                violations += 1;
+            }
+            prev = a;
+        }
+        assert!(violations == 0, "accuracy dropped sharply as target_dim grew");
+    }
+
+    #[test]
+    fn empty_sets_edge() {
+        let s = NeighborSets { k: 3, in_x: vec![], in_y: vec![] };
+        assert_eq!(accuracy_from_sets(&s), 1.0);
+    }
+}

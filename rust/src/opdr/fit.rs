@@ -1,0 +1,245 @@
+//! Fitting the closed-form function (paper Eq. 4):
+//!
+//! ```text
+//! A_k = c0 · log(n/m) + c1
+//! ```
+//!
+//! where `n = dim(Y)` and `m = |Y|`. The paper estimates `c0, c1` "by various
+//! regression models"; we provide ordinary least squares on the log ratio,
+//! a Huber-robust variant (outlier-tolerant, matching the paper's noisier
+//! web datasets), and the alternative functional forms used by the ablation
+//! bench (linear and sqrt in n/m) so the log model's superiority is testable.
+
+use crate::error::{OpdrError, Result};
+use crate::util::float::mean;
+
+/// A fitted `A = c0·log(n/m) + c1` model.
+#[derive(Debug, Clone, Copy)]
+pub struct LogFit {
+    /// Slope against `ln(n/m)`.
+    pub c0: f64,
+    /// Intercept.
+    pub c1: f64,
+    /// Coefficient of determination on the training points.
+    pub r_squared: f64,
+    /// Number of points fitted.
+    pub n_points: usize,
+}
+
+impl LogFit {
+    /// Predicted accuracy for a ratio `n/m`, clamped to [0, 1].
+    pub fn predict(&self, ratio: f64) -> f64 {
+        if ratio <= 0.0 {
+            return 0.0;
+        }
+        (self.c0 * ratio.ln() + self.c1).clamp(0.0, 1.0)
+    }
+
+    /// Raw (unclamped) prediction — used by the planner's inversion.
+    pub fn predict_raw(&self, ratio: f64) -> f64 {
+        self.c0 * ratio.ln() + self.c1
+    }
+}
+
+/// Ordinary least squares of `a = c0·ln(r) + c1` over `(ratio, accuracy)`
+/// points. Ratios must be positive; accuracies in [0, 1].
+pub fn fit_log_model(points: &[(f64, f64)]) -> Result<LogFit> {
+    fit_transformed(points, f64::ln)
+}
+
+/// OLS of `a = c0·r + c1` (ablation alternative).
+pub fn fit_linear_model(points: &[(f64, f64)]) -> Result<LogFit> {
+    fit_transformed(points, |r| r)
+}
+
+/// OLS of `a = c0·sqrt(r) + c1` (ablation alternative).
+pub fn fit_sqrt_model(points: &[(f64, f64)]) -> Result<LogFit> {
+    fit_transformed(points, f64::sqrt)
+}
+
+fn fit_transformed(points: &[(f64, f64)], xform: impl Fn(f64) -> f64) -> Result<LogFit> {
+    if points.len() < 2 {
+        return Err(OpdrError::numeric("fit: need at least 2 points"));
+    }
+    for &(r, a) in points {
+        if r <= 0.0 || !r.is_finite() {
+            return Err(OpdrError::numeric(format!("fit: ratio {r} not positive/finite")));
+        }
+        if !(0.0..=1.0).contains(&a) {
+            return Err(OpdrError::numeric(format!("fit: accuracy {a} outside [0,1]")));
+        }
+    }
+    let xs: Vec<f64> = points.iter().map(|&(r, _)| xform(r)).collect();
+    let ys: Vec<f64> = points.iter().map(|&(_, a)| a).collect();
+    let mx = mean(&xs);
+    let my = mean(&ys);
+    let sxx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    if sxx < 1e-12 {
+        return Err(OpdrError::numeric("fit: ratios are all identical"));
+    }
+    let sxy: f64 = xs.iter().zip(&ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let c0 = sxy / sxx;
+    let c1 = my - c0 * mx;
+
+    let ss_tot: f64 = ys.iter().map(|y| (y - my) * (y - my)).sum();
+    let ss_res: f64 = xs
+        .iter()
+        .zip(&ys)
+        .map(|(x, y)| {
+            let pred = c0 * x + c1;
+            (y - pred) * (y - pred)
+        })
+        .sum();
+    let r_squared = if ss_tot < 1e-15 { 1.0 } else { 1.0 - ss_res / ss_tot };
+
+    Ok(LogFit { c0, c1, r_squared, n_points: points.len() })
+}
+
+/// Huber-robust fit of the log model via iteratively reweighted least squares.
+///
+/// `delta` is the Huber threshold on residuals (≈1.35σ is classic; accuracy
+/// residuals live in [−1,1] so 0.05–0.1 is a sensible range here).
+pub fn fit_log_model_huber(points: &[(f64, f64)], delta: f64, iters: usize) -> Result<LogFit> {
+    let mut fit = fit_log_model(points)?;
+    if delta <= 0.0 {
+        return Err(OpdrError::numeric("huber: delta must be positive"));
+    }
+    let xs: Vec<f64> = points.iter().map(|&(r, _)| r.ln()).collect();
+    let ys: Vec<f64> = points.iter().map(|&(_, a)| a).collect();
+
+    for _ in 0..iters {
+        // Weights from current residuals.
+        let w: Vec<f64> = xs
+            .iter()
+            .zip(&ys)
+            .map(|(x, y)| {
+                let r = (y - (fit.c0 * x + fit.c1)).abs();
+                if r <= delta {
+                    1.0
+                } else {
+                    delta / r
+                }
+            })
+            .collect();
+        // Weighted least squares.
+        let sw: f64 = w.iter().sum();
+        let mx: f64 = xs.iter().zip(&w).map(|(x, wi)| x * wi).sum::<f64>() / sw;
+        let my: f64 = ys.iter().zip(&w).map(|(y, wi)| y * wi).sum::<f64>() / sw;
+        let sxx: f64 = xs.iter().zip(&w).map(|(x, wi)| wi * (x - mx) * (x - mx)).sum();
+        if sxx < 1e-12 {
+            break;
+        }
+        let sxy: f64 = xs
+            .iter()
+            .zip(ys.iter().zip(&w))
+            .map(|(x, (y, wi))| wi * (x - mx) * (y - my))
+            .sum();
+        let c0 = sxy / sxx;
+        let c1 = my - c0 * mx;
+        if (c0 - fit.c0).abs() < 1e-12 && (c1 - fit.c1).abs() < 1e-12 {
+            fit.c0 = c0;
+            fit.c1 = c1;
+            break;
+        }
+        fit.c0 = c0;
+        fit.c1 = c1;
+    }
+
+    // Recompute unweighted R² for comparability.
+    let my = mean(&ys);
+    let ss_tot: f64 = ys.iter().map(|y| (y - my) * (y - my)).sum();
+    let ss_res: f64 = xs
+        .iter()
+        .zip(&ys)
+        .map(|(x, y)| {
+            let p = fit.c0 * x + fit.c1;
+            (y - p) * (y - p)
+        })
+        .sum();
+    fit.r_squared = if ss_tot < 1e-15 { 1.0 } else { 1.0 - ss_res / ss_tot };
+    Ok(fit)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn synthetic_points(c0: f64, c1: f64, noise: f64, seed: u64, n: usize) -> Vec<(f64, f64)> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|i| {
+                let ratio = 0.05 + 0.95 * (i as f64 / (n - 1) as f64);
+                let a = (c0 * ratio.ln() + c1 + noise * rng.normal()).clamp(0.0, 1.0);
+                (ratio, a)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn recovers_exact_coefficients() {
+        let pts = synthetic_points(0.2, 0.9, 0.0, 1, 20);
+        let fit = fit_log_model(&pts).unwrap();
+        assert!((fit.c0 - 0.2).abs() < 1e-9);
+        assert!((fit.c1 - 0.9).abs() < 1e-9);
+        assert!(fit.r_squared > 0.999);
+    }
+
+    #[test]
+    fn noisy_fit_close_and_r2_reasonable() {
+        let pts = synthetic_points(0.15, 0.85, 0.02, 2, 50);
+        let fit = fit_log_model(&pts).unwrap();
+        assert!((fit.c0 - 0.15).abs() < 0.03, "c0={}", fit.c0);
+        assert!(fit.r_squared > 0.8, "r2={}", fit.r_squared);
+    }
+
+    #[test]
+    fn predict_clamps() {
+        let fit = LogFit { c0: 0.5, c1: 0.9, r_squared: 1.0, n_points: 2 };
+        assert_eq!(fit.predict(1e9), 1.0);
+        assert_eq!(fit.predict(1e-9), 0.0);
+        assert_eq!(fit.predict(0.0), 0.0);
+    }
+
+    #[test]
+    fn validation_rejects_bad_input() {
+        assert!(fit_log_model(&[(1.0, 0.5)]).is_err()); // too few
+        assert!(fit_log_model(&[(0.0, 0.5), (1.0, 0.6)]).is_err()); // ratio 0
+        assert!(fit_log_model(&[(0.5, 1.5), (1.0, 0.6)]).is_err()); // accuracy > 1
+        assert!(fit_log_model(&[(0.5, 0.5), (0.5, 0.6)]).is_err()); // identical ratios
+    }
+
+    #[test]
+    fn huber_resists_outliers() {
+        let mut pts = synthetic_points(0.2, 0.9, 0.0, 3, 30);
+        // Corrupt two points hard.
+        pts[3].1 = 0.0;
+        pts[20].1 = 0.0;
+        let ols = fit_log_model(&pts).unwrap();
+        let rob = fit_log_model_huber(&pts, 0.05, 30).unwrap();
+        assert!(
+            (rob.c0 - 0.2).abs() < (ols.c0 - 0.2).abs(),
+            "huber {} should beat ols {}",
+            rob.c0,
+            ols.c0
+        );
+    }
+
+    #[test]
+    fn log_model_beats_linear_on_log_data() {
+        // Data generated from the paper's log form: the log fit must hold a
+        // higher R² than a linear-in-ratio fit.
+        let pts = synthetic_points(0.18, 0.88, 0.01, 4, 40);
+        let log_fit = fit_log_model(&pts).unwrap();
+        let lin_fit = fit_linear_model(&pts).unwrap();
+        assert!(log_fit.r_squared > lin_fit.r_squared);
+    }
+
+    #[test]
+    fn alternative_models_fit_cleanly() {
+        let pts: Vec<(f64, f64)> =
+            (1..20).map(|i| (i as f64 / 20.0, (0.3 * (i as f64 / 20.0) + 0.5).min(1.0))).collect();
+        assert!(fit_linear_model(&pts).unwrap().r_squared > 0.999);
+        assert!(fit_sqrt_model(&pts).unwrap().r_squared > 0.9);
+    }
+}

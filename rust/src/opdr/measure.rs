@@ -1,0 +1,223 @@
+//! The order-preserving measure `μ` (paper Eq. 1).
+//!
+//! For a point `y_i` in the reduced space `Y`, let `E_{k,i}^Y` be its set of
+//! k-nearest neighbors in `Y` and `E_{k,i}^X` the k-nearest neighbors of its
+//! pre-image in the original space `X`. For any `F ∈ P(Y)` (the power-set
+//! σ-algebra), the paper defines
+//!
+//! ```text
+//! μ_i(F) = |F ∩ E_{k,i}^Y ∩ E_{k,i}^X| / k
+//! ```
+//!
+//! which is a measure: μ(∅)=0 and μ is finitely additive over disjoint sets
+//! (verified by the property tests below — this is the paper's central
+//! formal object, so we test its *axioms*, not just values).
+//!
+//! Sets are represented by sorted `usize` point indices; `F` is any subset of
+//! indices of `Y`.
+
+use crate::error::{OpdrError, Result};
+use crate::knn::knn_indices_all;
+use crate::metrics::Metric;
+use std::collections::HashSet;
+
+/// Precomputed leave-one-out k-NN sets for the original space `X` and the
+/// reduced space `Y` over the same point set.
+#[derive(Debug, Clone)]
+pub struct NeighborSets {
+    /// Neighborhood size.
+    pub k: usize,
+    /// `E_{k,i}^X` per point.
+    pub in_x: Vec<Vec<usize>>,
+    /// `E_{k,i}^Y` per point.
+    pub in_y: Vec<Vec<usize>>,
+}
+
+impl NeighborSets {
+    /// Compute exact neighbor sets in both spaces.
+    ///
+    /// `x` is `m×dim_x` row-major, `y` is `m×dim_y`; the point at row `i` of
+    /// `y` must be the image of row `i` of `x` (the dimension-reduction map
+    /// is index-aligned by construction).
+    pub fn compute(
+        x: &[f32],
+        dim_x: usize,
+        y: &[f32],
+        dim_y: usize,
+        k: usize,
+        metric: Metric,
+    ) -> Result<Self> {
+        if dim_x == 0 || dim_y == 0 || x.len() % dim_x != 0 || y.len() % dim_y != 0 {
+            return Err(OpdrError::shape("NeighborSets: bad shapes"));
+        }
+        let m = x.len() / dim_x;
+        if y.len() / dim_y != m {
+            return Err(OpdrError::shape("NeighborSets: X and Y cardinality differ"));
+        }
+        if k == 0 {
+            return Err(OpdrError::shape("NeighborSets: k must be >= 1"));
+        }
+        if k >= m {
+            return Err(OpdrError::shape(format!("NeighborSets: k={k} >= m={m}")));
+        }
+        let in_x = knn_indices_all(x, dim_x, k, metric)?;
+        let in_y = knn_indices_all(y, dim_y, k, metric)?;
+        Ok(NeighborSets { k, in_x, in_y })
+    }
+
+    /// Number of points `m`.
+    pub fn len(&self) -> usize {
+        self.in_x.len()
+    }
+
+    /// True when there are no points.
+    pub fn is_empty(&self) -> bool {
+        self.in_x.is_empty()
+    }
+
+    /// `E_{k,i}^Y ∩ E_{k,i}^X` as a hash set (the `E` of the paper's proof).
+    pub fn preserved_set(&self, i: usize) -> HashSet<usize> {
+        let sx: HashSet<usize> = self.in_x[i].iter().copied().collect();
+        self.in_y[i].iter().copied().filter(|j| sx.contains(j)).collect()
+    }
+}
+
+/// `|E_{k,i}^Y ∩ E_{k,i}^X|` — the number of preserved neighbors of point `i`.
+pub fn preserved_count(sets: &NeighborSets, i: usize) -> usize {
+    sets.preserved_set(i).len()
+}
+
+/// The measure `μ_i(F)` of Eq. (1): `|F ∩ E_{k,i}^Y ∩ E_{k,i}^X| / k`.
+///
+/// `f` is a subset of point indices of `Y` (an element of the power-set
+/// σ-algebra `M_Y = P(Y)`).
+pub fn op_measure(sets: &NeighborSets, i: usize, f: &[usize]) -> f64 {
+    let e = sets.preserved_set(i);
+    let hits = f.iter().filter(|j| e.contains(j)).count();
+    hits as f64 / sets.k as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn toy_sets() -> NeighborSets {
+        // 6 colinear points; k = 2. Identity "reduction" (Y = X) means all
+        // neighbors preserved.
+        let x = [0.0f32, 1.0, 2.0, 3.0, 4.0, 5.0];
+        NeighborSets::compute(&x, 1, &x, 1, 2, Metric::Euclidean).unwrap()
+    }
+
+    #[test]
+    fn identity_map_preserves_everything() {
+        let s = toy_sets();
+        for i in 0..s.len() {
+            assert_eq!(preserved_count(&s, i), 2);
+        }
+    }
+
+    #[test]
+    fn measure_of_empty_set_is_zero() {
+        // Measure axiom (i): μ(∅) = 0.
+        let s = toy_sets();
+        for i in 0..s.len() {
+            assert_eq!(op_measure(&s, i, &[]), 0.0);
+        }
+    }
+
+    #[test]
+    fn measure_additive_on_disjoint_sets() {
+        // Measure axiom (ii): μ(F1 ∪ F2) = μ(F1) + μ(F2) for disjoint F1, F2.
+        let s = toy_sets();
+        let i = 2; // neighbors of point 2 are {1, 3}
+        let f1 = vec![1usize];
+        let f2 = vec![3usize, 4];
+        let union: Vec<usize> = f1.iter().chain(f2.iter()).copied().collect();
+        let lhs = op_measure(&s, i, &union);
+        let rhs = op_measure(&s, i, &f1) + op_measure(&s, i, &f2);
+        assert!((lhs - rhs).abs() < 1e-12);
+    }
+
+    #[test]
+    fn measure_additivity_random_partitions() {
+        // Property test: additivity over random disjoint partitions of Y.
+        let mut rng = Rng::new(40);
+        let m = 20;
+        let dim = 5;
+        let x = rng.normal_vec_f32(m * dim);
+        let y = rng.normal_vec_f32(m * 2); // arbitrary "reduction"
+        let s = NeighborSets::compute(&x, dim, &y, 2, 4, Metric::Euclidean).unwrap();
+        for trial in 0..50 {
+            let i = rng.below(m);
+            // Random partition of indices into two disjoint sets.
+            let mut f1 = Vec::new();
+            let mut f2 = Vec::new();
+            for j in 0..m {
+                if rng.uniform() < 0.5 {
+                    f1.push(j);
+                } else {
+                    f2.push(j);
+                }
+            }
+            let union: Vec<usize> = f1.iter().chain(f2.iter()).copied().collect();
+            let lhs = op_measure(&s, i, &union);
+            let rhs = op_measure(&s, i, &f1) + op_measure(&s, i, &f2);
+            assert!((lhs - rhs).abs() < 1e-12, "trial {trial}: {lhs} vs {rhs}");
+        }
+    }
+
+    #[test]
+    fn measure_bounded_by_one() {
+        let mut rng = Rng::new(41);
+        let m = 15;
+        let x = rng.normal_vec_f32(m * 4);
+        let y = rng.normal_vec_f32(m * 2);
+        let s = NeighborSets::compute(&x, 4, &y, 2, 3, Metric::Euclidean).unwrap();
+        let all: Vec<usize> = (0..m).collect();
+        for i in 0..m {
+            let mu = op_measure(&s, i, &all);
+            assert!((0.0..=1.0).contains(&mu));
+        }
+    }
+
+    #[test]
+    fn monotone_under_inclusion() {
+        // F ⊆ G ⇒ μ(F) ≤ μ(G) — follows from additivity + non-negativity.
+        let mut rng = Rng::new(42);
+        let m = 12;
+        let x = rng.normal_vec_f32(m * 4);
+        let y = rng.normal_vec_f32(m * 2);
+        let s = NeighborSets::compute(&x, 4, &y, 2, 3, Metric::Euclidean).unwrap();
+        let f: Vec<usize> = (0..6).collect();
+        let g: Vec<usize> = (0..12).collect();
+        for i in 0..m {
+            assert!(op_measure(&s, i, &f) <= op_measure(&s, i, &g) + 1e-12);
+        }
+    }
+
+    #[test]
+    fn shape_and_k_validation() {
+        let x = [0.0f32; 8];
+        let y = [0.0f32; 4];
+        assert!(NeighborSets::compute(&x, 2, &y, 1, 0, Metric::Euclidean).is_err()); // k=0
+        assert!(NeighborSets::compute(&x, 2, &y, 1, 4, Metric::Euclidean).is_err()); // k>=m
+        assert!(NeighborSets::compute(&x, 3, &y, 1, 1, Metric::Euclidean).is_err()); // ragged
+        assert!(NeighborSets::compute(&x, 2, &y, 3, 1, Metric::Euclidean).is_err()); // |X| != |Y|
+    }
+
+    #[test]
+    fn op2_not_op1_example_from_paper() {
+        // The paper's example: L_X = (a, b, c), L_Y = (b, a, c): OP_2 holds
+        // ({a,b} = {b,a}) but OP_1 fails ({a} != {b}).
+        //
+        // Realize it with distances from a query point q = index 0:
+        // X: d(q,a)=1, d(q,b)=2, d(q,c)=3 ; Y: d(q,b)=1, d(q,a)=2, d(q,c)=3.
+        let x = [0.0f32, 1.0, 2.0, 3.0]; // q, a, b, c on a line
+        let y = [0.0f32, 2.0, 1.0, 3.0]; // a and b swapped
+        let s2 = NeighborSets::compute(&x, 1, &y, 1, 2, Metric::Euclidean).unwrap();
+        assert_eq!(preserved_count(&s2, 0), 2, "OP_2 must hold");
+        let s1 = NeighborSets::compute(&x, 1, &y, 1, 1, Metric::Euclidean).unwrap();
+        assert_eq!(preserved_count(&s1, 0), 0, "OP_1 must fail");
+    }
+}

@@ -1,0 +1,23 @@
+//! The paper's contribution: the order-preserving measure, the global
+//! accuracy metric, the closed-form fit, and the dimensionality planner.
+//!
+//! * [`measure`] — the set measure `μ` of Eq. (1) on the power-set σ-algebra
+//!   of the reduced space;
+//! * [`accuracy`] — the global accuracy `A_k^X(Y)` of Eq. (2);
+//! * [`fit`] — least-squares (and Huber-robust) fitting of the closed form
+//!   `A_k = c0·log(n/m) + c1` of Eq. (4);
+//! * [`planner`] — inversion of the fit into `dim(Y) = g(A_target, m)`;
+//! * [`sweep`] — accuracy-vs-n/m curve generation (the engine behind every
+//!   figure bench).
+
+pub mod accuracy;
+pub mod fit;
+pub mod measure;
+pub mod planner;
+pub mod sweep;
+
+pub use accuracy::{accuracy, accuracy_from_sets};
+pub use fit::{fit_log_model, LogFit};
+pub use measure::{op_measure, preserved_count, NeighborSets};
+pub use planner::Planner;
+pub use sweep::{accuracy_curve, AccuracyCurve, SweepConfig};

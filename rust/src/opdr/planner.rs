@@ -1,0 +1,269 @@
+//! The dimensionality planner `g`: inverting the closed-form function.
+//!
+//! The paper's practical recipe is the composition `f ∘ g`: from a target
+//! accuracy `A_target` and a cardinality `m`, compute
+//!
+//! ```text
+//! dim(Y) = g(A_target, m) = m · exp((A_target − c1) / c0)
+//! ```
+//!
+//! and hand that dimension to the reduction method `f`. The planner owns a
+//! fitted [`LogFit`] (obtained either from a calibration sweep on a sample of
+//! the user's data, or from a stored config) and performs the inversion with
+//! the necessary clamping (1 ≤ dim(Y) ≤ original dim, dim(Y) ≤ m for
+//! sample-bounded reducers).
+
+use crate::error::{OpdrError, Result};
+use crate::metrics::Metric;
+use crate::opdr::fit::{fit_log_model, LogFit};
+use crate::opdr::sweep::SweepConfig;
+use crate::reduction::ReducerKind;
+
+/// Plans target dimensionalities from a fitted closed-form model.
+#[derive(Debug, Clone, Copy)]
+pub struct Planner {
+    fit: LogFit,
+}
+
+impl Planner {
+    /// Wrap an existing fit.
+    pub fn from_fit(fit: LogFit) -> Self {
+        Planner { fit }
+    }
+
+    /// Calibrate by running an accuracy sweep on (a sample of) the user's own
+    /// embeddings, then fitting Eq. (4). This is the paper's intended usage:
+    /// the constants c0/c1 are dataset- and method-specific.
+    pub fn calibrate(
+        data: &[f32],
+        dim: usize,
+        k: usize,
+        metric: Metric,
+        reducer: ReducerKind,
+        seed: u64,
+    ) -> Result<Self> {
+        if dim == 0 || data.len() % dim != 0 {
+            return Err(OpdrError::shape("planner: bad data shape"));
+        }
+        let m = data.len() / dim;
+        if m <= k + 1 {
+            return Err(OpdrError::shape("planner: need more samples than k+1"));
+        }
+        let cfg = SweepConfig {
+            k,
+            metric,
+            reducer,
+            seed,
+            dims_per_m: 10,
+            repeats: 1,
+            ..Default::default()
+        };
+        let curve = accuracy_curve_from_raw(data, dim, m, &cfg)?;
+        let fit = fit_log_model(&curve)?;
+        Ok(Planner { fit })
+    }
+
+    /// The underlying fit.
+    pub fn fit(&self) -> LogFit {
+        self.fit
+    }
+
+    /// `g(A_target, m)` — the minimum dimension predicted to reach
+    /// `target_accuracy` with `m` points. Clamped to `[1, m]` (the reducers
+    /// here can produce at most `m` informative dimensions; callers should
+    /// additionally clamp to the original dimensionality).
+    pub fn dim_for_accuracy(&self, target_accuracy: f64, m: usize) -> usize {
+        let a = target_accuracy.clamp(0.0, 1.0);
+        if self.fit.c0.abs() < 1e-12 {
+            // Flat fit: accuracy does not depend on dim; be conservative.
+            return m.max(1);
+        }
+        let ratio = ((a - self.fit.c1) / self.fit.c0).exp();
+        let dim = (ratio * m as f64).ceil();
+        (dim as usize).clamp(1, m.max(1))
+    }
+
+    /// Predicted accuracy at `(n, m)` — the forward direction of Eq. (4).
+    pub fn predicted_accuracy(&self, n: usize, m: usize) -> f64 {
+        if m == 0 {
+            return 0.0;
+        }
+        self.fit.predict(n as f64 / m as f64)
+    }
+}
+
+/// Run a sweep over the *given* raw embedding block (no dataset generation)
+/// and return (ratio, accuracy) points. Used by `Planner::calibrate`.
+pub fn accuracy_curve_from_raw(
+    data: &[f32],
+    dim: usize,
+    m: usize,
+    cfg: &SweepConfig,
+) -> Result<Vec<(f64, f64)>> {
+    let curve = accuracy_curve_over(data, dim, &[m.min(data.len() / dim)], cfg)?;
+    Ok(curve)
+}
+
+/// Sweep accuracy over explicit subset sizes of a raw embedding block.
+pub fn accuracy_curve_over(
+    data: &[f32],
+    dim: usize,
+    sample_sizes: &[usize],
+    cfg: &SweepConfig,
+) -> Result<Vec<(f64, f64)>> {
+    let total = data.len() / dim;
+    let mut points = Vec::new();
+    let mut rng = crate::util::Rng::new(cfg.seed);
+    for &m in sample_sizes {
+        if m > total {
+            return Err(OpdrError::data(format!("sweep: m={m} exceeds available {total}")));
+        }
+        if m <= cfg.k {
+            return Err(OpdrError::config(format!("sweep: m={m} <= k={}", cfg.k)));
+        }
+        for rep in 0..cfg.repeats {
+            // Random subset of m points.
+            let idx = rng.sample_indices(total, m);
+            let mut subset = Vec::with_capacity(m * dim);
+            for &i in &idx {
+                subset.extend_from_slice(&data[i * dim..(i + 1) * dim]);
+            }
+            // Log-spaced target dims in [1, min(dim, m)].
+            let max_n = dim.min(m);
+            let dims = log_spaced_dims(max_n, cfg.dims_per_m);
+            let reducer = cfg.reducer.build(cfg.seed ^ (rep as u64) << 8);
+            for n in dims {
+                let reduced = reducer.fit_transform(&subset, dim, n)?;
+                let a = crate::opdr::accuracy(&subset, dim, &reduced, n, cfg.k, cfg.metric)?;
+                points.push((n as f64 / m as f64, a));
+            }
+        }
+    }
+    Ok(points)
+}
+
+/// Log-spaced integer dims in `[1, max_n]`, deduplicated, ascending.
+pub fn log_spaced_dims(max_n: usize, count: usize) -> Vec<usize> {
+    if max_n == 0 {
+        return vec![];
+    }
+    let count = count.max(2);
+    let mut dims: Vec<usize> = (0..count)
+        .map(|i| {
+            let t = i as f64 / (count - 1) as f64;
+            let v = (max_n as f64).powf(t);
+            v.round().clamp(1.0, max_n as f64) as usize
+        })
+        .collect();
+    dims.sort_unstable();
+    dims.dedup();
+    dims
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opdr::fit::LogFit;
+    use crate::util::Rng;
+
+    fn fit(c0: f64, c1: f64) -> LogFit {
+        LogFit { c0, c1, r_squared: 1.0, n_points: 10 }
+    }
+
+    #[test]
+    fn inversion_roundtrip() {
+        let p = Planner::from_fit(fit(0.2, 0.9));
+        let m = 100;
+        for target in [0.5, 0.7, 0.85] {
+            let n = p.dim_for_accuracy(target, m);
+            let pred = p.predicted_accuracy(n, m);
+            assert!(pred >= target - 0.02, "target {target}: n={n}, pred={pred}");
+        }
+    }
+
+    #[test]
+    fn planner_monotone_in_target() {
+        let p = Planner::from_fit(fit(0.15, 0.8));
+        let m = 200;
+        let mut prev = 0;
+        for t in [0.2, 0.4, 0.6, 0.8, 0.95] {
+            let n = p.dim_for_accuracy(t, m);
+            assert!(n >= prev, "target {t}: {n} < {prev}");
+            prev = n;
+        }
+    }
+
+    #[test]
+    fn planner_clamps_to_valid_range() {
+        let p = Planner::from_fit(fit(0.2, 0.9));
+        assert_eq!(p.dim_for_accuracy(2.0, 50), 50); // impossible target → all dims (A clamped to 1)
+        assert!(p.dim_for_accuracy(0.0, 50) >= 1);
+        let flat = Planner::from_fit(fit(0.0, 0.5));
+        assert_eq!(flat.dim_for_accuracy(0.9, 64), 64); // conservative on flat fits
+    }
+
+    #[test]
+    fn higher_cardinality_needs_more_dims() {
+        // The paper's first observation: dim(Y) grows with m at fixed accuracy.
+        let p = Planner::from_fit(fit(0.2, 0.85));
+        let n_small = p.dim_for_accuracy(0.8, 50);
+        let n_large = p.dim_for_accuracy(0.8, 500);
+        assert!(n_large > n_small);
+        // And the ratio n/m is invariant (the closed form depends on n/m only).
+        let r_small = n_small as f64 / 50.0;
+        let r_large = n_large as f64 / 500.0;
+        assert!((r_small - r_large).abs() < 0.05);
+    }
+
+    #[test]
+    fn log_spaced_dims_properties() {
+        let dims = log_spaced_dims(64, 8);
+        assert_eq!(*dims.first().unwrap(), 1);
+        assert_eq!(*dims.last().unwrap(), 64);
+        for w in dims.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        assert!(log_spaced_dims(0, 5).is_empty());
+        assert_eq!(log_spaced_dims(1, 5), vec![1]);
+    }
+
+    #[test]
+    fn calibrate_on_structured_data_predicts_usably() {
+        // Structured low-rank data: calibration should produce a fit whose
+        // planned dim actually achieves near the target accuracy.
+        let mut rng = Rng::new(77);
+        let m = 60;
+        let dim = 48;
+        let rank = 6;
+        // low-rank + noise
+        let basis: Vec<f32> = rng.normal_vec_f32(rank * dim);
+        let mut data = vec![0.0f32; m * dim];
+        for i in 0..m {
+            let coefs: Vec<f32> = rng.normal_vec_f32(rank);
+            for r in 0..rank {
+                for j in 0..dim {
+                    data[i * dim + j] += coefs[r] * basis[r * dim + j];
+                }
+            }
+            for j in 0..dim {
+                data[i * dim + j] += 0.05 * rng.normal() as f32;
+            }
+        }
+        let planner =
+            Planner::calibrate(&data, dim, 5, Metric::SqEuclidean, ReducerKind::Pca, 3).unwrap();
+        let n = planner.dim_for_accuracy(0.8, m);
+        assert!(n >= 1 && n <= m);
+        // Measure the real accuracy at the planned dim.
+        let reduced = ReducerKind::Pca.build(0).fit_transform(&data, dim, n.min(dim)).unwrap();
+        let a = crate::opdr::accuracy(&data, dim, &reduced, n.min(dim), 5, Metric::SqEuclidean).unwrap();
+        assert!(a > 0.6, "planned n={n} gave accuracy {a}");
+    }
+
+    #[test]
+    fn sweep_over_raw_rejects_bad_m() {
+        let data = vec![0.0f32; 20 * 4];
+        let cfg = SweepConfig::default();
+        assert!(accuracy_curve_over(&data, 4, &[100], &cfg).is_err());
+        assert!(accuracy_curve_over(&data, 4, &[3], &cfg).is_err()); // m <= k
+    }
+}

@@ -1,0 +1,171 @@
+//! Accuracy-vs-n/m sweep engine — the machinery behind every paper figure.
+//!
+//! A sweep takes an embedding set, draws subsets of the paper's sizes
+//! (m ∈ {10..80} for the materials datasets, {10..300} for the web corpora),
+//! reduces each subset to a log-spaced range of target dims `n`, and records
+//! the order-preserving accuracy at each `(n/m, A_k)` point.
+
+use crate::data::EmbeddingSet;
+use crate::error::Result;
+use crate::metrics::Metric;
+use crate::opdr::planner::accuracy_curve_over;
+use crate::reduction::ReducerKind;
+
+/// Configuration of one sweep (raw-data level; dataset selection lives in
+/// [`crate::config::SweepSpec`]).
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    /// Neighborhood size `k`.
+    pub k: usize,
+    /// Distance metric.
+    pub metric: Metric,
+    /// Reduction method.
+    pub reducer: ReducerKind,
+    /// Subset sizes `m`.
+    pub sample_sizes: Vec<usize>,
+    /// Target dims per subset (log-spaced in `[1, min(d, m)]`).
+    pub dims_per_m: usize,
+    /// Repetitions per cell (different random subsets), averaged by callers.
+    pub repeats: usize,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            k: 5,
+            metric: Metric::SqEuclidean,
+            reducer: ReducerKind::Pca,
+            sample_sizes: vec![10, 20, 30, 40, 50, 60, 70, 80],
+            dims_per_m: 12,
+            repeats: 3,
+            seed: 42,
+        }
+    }
+}
+
+/// The result of a sweep: raw `(n/m, A_k)` scatter plus labels.
+#[derive(Debug, Clone)]
+pub struct AccuracyCurve {
+    /// Raw scatter points `(ratio, accuracy)`.
+    raw: Vec<(f64, f64)>,
+    /// Label of the dataset / configuration that produced the curve.
+    pub label: String,
+}
+
+impl AccuracyCurve {
+    /// Construct from raw points.
+    pub fn new(label: impl Into<String>, raw: Vec<(f64, f64)>) -> Self {
+        AccuracyCurve { raw, label: label.into() }
+    }
+
+    /// Raw `(ratio, accuracy)` points.
+    pub fn points(&self) -> &[(f64, f64)] {
+        &self.raw
+    }
+
+    /// Points averaged into `bins` equal-width bins over `log(ratio)` — the
+    /// smoothed series the paper plots.
+    pub fn binned(&self, bins: usize) -> Vec<(f64, f64)> {
+        if self.raw.is_empty() || bins == 0 {
+            return vec![];
+        }
+        let logs: Vec<f64> = self.raw.iter().map(|&(r, _)| r.ln()).collect();
+        let lo = logs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = logs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        if !(hi > lo) {
+            // Single ratio value: average everything.
+            let mean_a: f64 =
+                self.raw.iter().map(|&(_, a)| a).sum::<f64>() / self.raw.len() as f64;
+            return vec![(self.raw[0].0, mean_a)];
+        }
+        let width = (hi - lo) / bins as f64;
+        let mut sums = vec![(0.0f64, 0.0f64, 0usize); bins];
+        for (&(r, a), &lg) in self.raw.iter().zip(&logs) {
+            let mut b = ((lg - lo) / width) as usize;
+            if b >= bins {
+                b = bins - 1;
+            }
+            sums[b].0 += r;
+            sums[b].1 += a;
+            sums[b].2 += 1;
+        }
+        sums.into_iter()
+            .filter(|&(_, _, n)| n > 0)
+            .map(|(r, a, n)| (r / n as f64, a / n as f64))
+            .collect()
+    }
+
+    /// Convergence value: mean accuracy over the top decile of ratios.
+    pub fn plateau_accuracy(&self) -> f64 {
+        if self.raw.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.raw.clone();
+        sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let start = sorted.len() * 9 / 10;
+        let tail = &sorted[start..];
+        tail.iter().map(|&(_, a)| a).sum::<f64>() / tail.len() as f64
+    }
+}
+
+/// Run a sweep over an [`EmbeddingSet`].
+pub fn accuracy_curve(set: &EmbeddingSet, cfg: &SweepConfig) -> Result<AccuracyCurve> {
+    let pts = accuracy_curve_over(set.data(), set.dim(), &cfg.sample_sizes, &sweep_to_raw(cfg))?;
+    Ok(AccuracyCurve::new(set.label().to_string(), pts))
+}
+
+// accuracy_curve_over takes the same struct; helper to keep a single source of
+// truth if the types ever diverge.
+fn sweep_to_raw(cfg: &SweepConfig) -> SweepConfig {
+    cfg.clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synth, DatasetKind};
+
+    #[test]
+    fn sweep_on_materials_shows_log_trend() {
+        let set = synth::generate(DatasetKind::MaterialsObservable, 40, 64, 7);
+        let cfg = SweepConfig {
+            sample_sizes: vec![20, 40],
+            dims_per_m: 8,
+            repeats: 2,
+            ..Default::default()
+        };
+        let curve = accuracy_curve(&set, &cfg).unwrap();
+        assert!(!curve.points().is_empty());
+        // All accuracies in range.
+        for &(r, a) in curve.points() {
+            assert!(r > 0.0 && r <= 1.0 + 1e-9, "ratio {r}");
+            assert!((0.0..=1.0).contains(&a));
+        }
+        // Low-ratio accuracy below high-ratio accuracy (the paper's trend).
+        let binned = curve.binned(4);
+        assert!(binned.len() >= 2);
+        assert!(
+            binned.last().unwrap().1 > binned.first().unwrap().1,
+            "no positive trend: {binned:?}"
+        );
+        // Plateau should be decent for PCA on structured data.
+        assert!(curve.plateau_accuracy() > 0.7, "plateau {}", curve.plateau_accuracy());
+    }
+
+    #[test]
+    fn binned_handles_degenerate_input() {
+        let c = AccuracyCurve::new("x", vec![]);
+        assert!(c.binned(4).is_empty());
+        let c = AccuracyCurve::new("x", vec![(0.5, 0.8), (0.5, 0.6)]);
+        let b = c.binned(4);
+        assert_eq!(b.len(), 1);
+        assert!((b[0].1 - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn plateau_of_empty_curve() {
+        assert_eq!(AccuracyCurve::new("x", vec![]).plateau_accuracy(), 0.0);
+    }
+}

@@ -1,0 +1,335 @@
+//! Multidimensional scaling: classical (Torgerson) and SMACOF.
+//!
+//! Classical MDS double-centers the squared-distance matrix and embeds via
+//! the top eigenpairs — exact for Euclidean inputs. SMACOF iteratively
+//! minimizes metric stress by majorization; it is the variant that actually
+//! behaves like sklearn's `MDS` (the paper's comparator), including its
+//! tendency to plateau below PCA's neighborhood-preservation accuracy
+//! (Figs 10–12).
+
+use crate::error::{OpdrError, Result};
+use crate::linalg::{double_center, eigh, Mat};
+use crate::metrics::{pairwise_distances_symmetric, Metric};
+use crate::reduction::{check_shapes, DimReducer};
+use crate::util::Rng;
+
+/// Classical (Torgerson 1952) MDS.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ClassicalMds {}
+
+impl ClassicalMds {
+    /// New classical MDS.
+    pub fn new() -> Self {
+        ClassicalMds {}
+    }
+
+    /// Embed from a precomputed squared-distance matrix (m×m).
+    pub fn embed_from_sq_distances(&self, d_sq: &Mat, target_dim: usize) -> Result<Vec<f32>> {
+        let m = d_sq.rows();
+        if target_dim == 0 || target_dim > m {
+            return Err(OpdrError::shape("cmds: bad target_dim"));
+        }
+        let b = double_center(d_sq)?;
+        let e = eigh(&b)?;
+        let mut out = vec![0.0f32; m * target_dim];
+        for c in 0..target_dim {
+            let lam = e.values[c].max(0.0);
+            let scale = lam.sqrt();
+            for i in 0..m {
+                out[i * target_dim + c] = (e.vectors[(i, c)] * scale) as f32;
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl DimReducer for ClassicalMds {
+    fn fit_transform(&self, data: &[f32], dim: usize, target_dim: usize) -> Result<Vec<f32>> {
+        let m = check_shapes(data, dim, target_dim)?;
+        let d = pairwise_distances_symmetric(data, dim, Metric::SqEuclidean)?;
+        let d_sq = Mat::from_f32(m, m, &d)?;
+        self.embed_from_sq_distances(&d_sq, target_dim)
+    }
+
+    fn name(&self) -> &'static str {
+        "mds"
+    }
+}
+
+/// Initialization strategy for SMACOF.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SmacofInit {
+    /// Random Gaussian start — sklearn's default behaviour (the paper's
+    /// comparator). Converges to local stress minima, which is exactly why
+    /// MDS plateaus below PCA in Figs 10–12.
+    Random,
+    /// Warm start from classical MDS — converges further; used when SMACOF
+    /// is wanted as a *good* embedder rather than as the paper's baseline.
+    Classical,
+}
+
+/// SMACOF metric MDS (stress majorization).
+///
+/// Defaults mirror sklearn's `MDS` (random init, `max_iter=300`,
+/// `eps=1e-3`-style relative stopping), since that is what the paper ran.
+#[derive(Debug, Clone, Copy)]
+pub struct SmacofMds {
+    /// Maximum majorization iterations.
+    pub max_iters: usize,
+    /// Relative stress-improvement stopping threshold.
+    pub eps: f64,
+    /// Seed for random initialization.
+    pub seed: u64,
+    /// Initialization strategy.
+    pub init: SmacofInit,
+}
+
+impl Default for SmacofMds {
+    fn default() -> Self {
+        SmacofMds { max_iters: 300, eps: 1e-4, seed: 0, init: SmacofInit::Random }
+    }
+}
+
+impl SmacofMds {
+    /// Classical-MDS-initialized variant (better embeddings, not the paper's
+    /// sklearn baseline).
+    pub fn warm_started() -> Self {
+        SmacofMds { init: SmacofInit::Classical, eps: 1e-6, ..Default::default() }
+    }
+}
+
+impl SmacofMds {
+    /// Raw stress `Σ_{i<j} (d_ij − δ_ij)²` of a configuration against target
+    /// distances `delta` (m×m, plain distances not squared).
+    pub fn stress(coords: &[f32], target_dim: usize, delta: &Mat) -> f64 {
+        let m = delta.rows();
+        let mut s = 0.0;
+        for i in 0..m {
+            for j in (i + 1)..m {
+                let d = Metric::Euclidean.distance(
+                    &coords[i * target_dim..(i + 1) * target_dim],
+                    &coords[j * target_dim..(j + 1) * target_dim],
+                ) as f64;
+                let diff = d - delta[(i, j)];
+                s += diff * diff;
+            }
+        }
+        s
+    }
+
+    fn guttman_step(coords: &[f32], target_dim: usize, delta: &Mat) -> Vec<f32> {
+        // X' = B(X) X / m  with B(X) the Guttman transform matrix.
+        let m = delta.rows();
+        let mut next = vec![0.0f64; m * target_dim];
+        // Compute B entries on the fly.
+        let mut b_diag = vec![0.0f64; m];
+        let mut bx = vec![0.0f64; m * target_dim];
+        for i in 0..m {
+            for j in 0..m {
+                if i == j {
+                    continue;
+                }
+                let d = Metric::Euclidean.distance(
+                    &coords[i * target_dim..(i + 1) * target_dim],
+                    &coords[j * target_dim..(j + 1) * target_dim],
+                ) as f64;
+                let b_ij = if d > 1e-12 { -delta[(i, j)] / d } else { 0.0 };
+                b_diag[i] -= b_ij;
+                for c in 0..target_dim {
+                    bx[i * target_dim + c] += b_ij * coords[j * target_dim + c] as f64;
+                }
+            }
+        }
+        for i in 0..m {
+            for c in 0..target_dim {
+                bx[i * target_dim + c] += b_diag[i] * coords[i * target_dim + c] as f64;
+                next[i * target_dim + c] = bx[i * target_dim + c] / m as f64;
+            }
+        }
+        next.into_iter().map(|x| x as f32).collect()
+    }
+}
+
+impl DimReducer for SmacofMds {
+    fn fit_transform(&self, data: &[f32], dim: usize, target_dim: usize) -> Result<Vec<f32>> {
+        let m = check_shapes(data, dim, target_dim)?;
+        let dist = pairwise_distances_symmetric(data, dim, Metric::Euclidean)?;
+        let delta = Mat::from_f32(m, m, &dist)?;
+
+        let mut coords = match self.init {
+            SmacofInit::Random => {
+                // sklearn-style: random Gaussian start scaled to the data.
+                let scale = {
+                    let mut s = 0.0f64;
+                    let mut cnt = 0usize;
+                    for i in 0..m {
+                        for j in (i + 1)..m {
+                            s += delta[(i, j)];
+                            cnt += 1;
+                        }
+                    }
+                    (s / cnt.max(1) as f64) as f32 * 0.5
+                };
+                let mut rng = Rng::new(self.seed);
+                let mut v = rng.normal_vec_f32(m * target_dim);
+                for x in &mut v {
+                    *x *= scale;
+                }
+                v
+            }
+            SmacofInit::Classical => {
+                let dsq_vec: Vec<f32> = dist.iter().map(|&x| x * x).collect();
+                let d_sq = Mat::from_f32(m, m, &dsq_vec)?;
+                match ClassicalMds::new().embed_from_sq_distances(&d_sq, target_dim) {
+                    Ok(c) => c,
+                    Err(_) => {
+                        let mut rng = Rng::new(self.seed);
+                        rng.normal_vec_f32(m * target_dim)
+                    }
+                }
+            }
+        };
+
+        let mut prev_stress = Self::stress(&coords, target_dim, &delta);
+        for _ in 0..self.max_iters {
+            coords = Self::guttman_step(&coords, target_dim, &delta);
+            let stress = Self::stress(&coords, target_dim, &delta);
+            if prev_stress <= 1e-18 {
+                break;
+            }
+            if (prev_stress - stress).abs() / prev_stress.max(1e-18) < self.eps {
+                prev_stress = stress;
+                break;
+            }
+            prev_stress = stress;
+        }
+        let _ = prev_stress;
+        Ok(coords)
+    }
+
+    fn name(&self) -> &'static str {
+        "smacof"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Metric;
+    use crate::util::Rng;
+
+    /// Max relative distance distortion between two configurations.
+    fn max_distortion(a: &[f32], da: usize, b: &[f32], db: usize, m: usize) -> f32 {
+        let mut worst = 0.0f32;
+        for i in 0..m {
+            for j in (i + 1)..m {
+                let d1 = Metric::Euclidean.distance(&a[i * da..(i + 1) * da], &a[j * da..(j + 1) * da]);
+                let d2 = Metric::Euclidean.distance(&b[i * db..(i + 1) * db], &b[j * db..(j + 1) * db]);
+                let denom = d1.max(1e-6);
+                worst = worst.max((d1 - d2).abs() / denom);
+            }
+        }
+        worst
+    }
+
+    /// Points genuinely 2-dimensional, embedded (rotated) into 6 dims.
+    fn planar_in_6d(m: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut data = Vec::with_capacity(m * 6);
+        for _ in 0..m {
+            let (u, v) = (rng.normal() * 3.0, rng.normal() * 2.0);
+            // Fixed orthonormal-ish embedding of the plane into 6D.
+            let row = [
+                0.5 * u + 0.1 * v,
+                0.5 * u - 0.1 * v,
+                0.3 * v,
+                -0.3 * v + 0.2 * u,
+                0.4 * u,
+                0.6 * v,
+            ];
+            data.extend(row.iter().map(|&x| x as f32));
+        }
+        data
+    }
+
+    #[test]
+    fn classical_mds_exact_for_intrinsic_dim() {
+        // 2D data in 6D: a 2-dim classical MDS must reproduce distances ~exactly.
+        let m = 15;
+        let data = planar_in_6d(m, 1);
+        let out = ClassicalMds::new().fit_transform(&data, 6, 2).unwrap();
+        assert!(max_distortion(&data, 6, &out, 2, m) < 1e-3);
+    }
+
+    #[test]
+    fn classical_mds_full_dim_preserves_distances() {
+        let mut rng = Rng::new(4);
+        let m = 10;
+        let data = rng.normal_vec_f32(m * 4);
+        let out = ClassicalMds::new().fit_transform(&data, 4, 4).unwrap();
+        assert!(max_distortion(&data, 4, &out, 4, m) < 1e-3);
+    }
+
+    #[test]
+    fn smacof_reduces_stress_from_random() {
+        let mut rng = Rng::new(6);
+        let m = 12;
+        let data = rng.normal_vec_f32(m * 8);
+        let dist = pairwise_distances_symmetric(&data, 8, Metric::Euclidean).unwrap();
+        let delta = Mat::from_f32(m, m, &dist).unwrap();
+
+        let random: Vec<f32> = rng.normal_vec_f32(m * 2);
+        let s_random = SmacofMds::stress(&random, 2, &delta);
+        let out = SmacofMds::default().fit_transform(&data, 8, 2).unwrap();
+        let s_fit = SmacofMds::stress(&out, 2, &delta);
+        assert!(s_fit < s_random, "fit stress {s_fit} >= random stress {s_random}");
+    }
+
+    #[test]
+    fn smacof_warm_started_recovers_planar_data() {
+        let m = 12;
+        let data = planar_in_6d(m, 9);
+        let out = SmacofMds::warm_started().fit_transform(&data, 6, 2).unwrap();
+        assert!(max_distortion(&data, 6, &out, 2, m) < 0.05);
+    }
+
+    #[test]
+    fn smacof_random_init_worse_or_equal_to_warm_start() {
+        // The sklearn-default behaviour the paper benchmarked: random init
+        // lands in local minima, so its stress is ≥ the warm-started run.
+        let mut rng = Rng::new(15);
+        let m = 14;
+        let data = rng.normal_vec_f32(m * 10);
+        let dist = pairwise_distances_symmetric(&data, 10, Metric::Euclidean).unwrap();
+        let delta = Mat::from_f32(m, m, &dist).unwrap();
+        let cold = SmacofMds::default().fit_transform(&data, 10, 2).unwrap();
+        let warm = SmacofMds::warm_started().fit_transform(&data, 10, 2).unwrap();
+        let s_cold = SmacofMds::stress(&cold, 2, &delta);
+        let s_warm = SmacofMds::stress(&warm, 2, &delta);
+        assert!(s_warm <= s_cold * 1.05, "warm {s_warm} vs cold {s_cold}");
+    }
+
+    #[test]
+    fn embed_rejects_bad_target() {
+        let d = Mat::zeros(4, 4);
+        assert!(ClassicalMds::new().embed_from_sq_distances(&d, 0).is_err());
+        assert!(ClassicalMds::new().embed_from_sq_distances(&d, 5).is_err());
+    }
+
+    #[test]
+    fn reducers_shape_checks() {
+        let data = [0.0f32; 12];
+        assert!(ClassicalMds::new().fit_transform(&data, 5, 2).is_err());
+        assert!(SmacofMds::default().fit_transform(&data, 4, 5).is_err());
+    }
+
+    #[test]
+    fn stress_of_perfect_embedding_is_zero() {
+        let mut rng = Rng::new(10);
+        let m = 8;
+        let data = rng.normal_vec_f32(m * 3);
+        let dist = pairwise_distances_symmetric(&data, 3, Metric::Euclidean).unwrap();
+        let delta = Mat::from_f32(m, m, &dist).unwrap();
+        assert!(SmacofMds::stress(&data, 3, &delta) < 1e-8);
+    }
+}

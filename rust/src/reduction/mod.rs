@@ -1,0 +1,177 @@
+//! Dimension-reduction methods.
+//!
+//! The paper integrates OPDR with PCA and MDS; this module implements both
+//! (PCA with covariance- and Gram-trick fit paths, classical Torgerson MDS,
+//! and iterative SMACOF metric MDS), plus Gaussian random projection as a
+//! Johnson–Lindenstrauss baseline and an identity reducer for sanity checks.
+//!
+//! All reducers consume row-major `f32` data (`m` samples × `d` dims) and
+//! produce row-major `f32` output (`m` × `target_dim`). Fit-time math runs in
+//! `f64` through [`crate::linalg`].
+
+pub mod mds;
+pub mod pca;
+pub mod random_proj;
+
+pub use mds::{ClassicalMds, SmacofMds};
+pub use pca::{Pca, PcaModel};
+pub use random_proj::GaussianRandomProjection;
+
+use crate::error::{OpdrError, Result};
+
+/// A dimension-reduction method: maps `m×d` data to `m×target_dim`.
+pub trait DimReducer {
+    /// Fit on `data` and return the reduced coordinates.
+    ///
+    /// `data` is row-major with `m = data.len() / dim` samples. Errors if
+    /// `target_dim > dim` or `target_dim == 0` or shapes are inconsistent.
+    fn fit_transform(&self, data: &[f32], dim: usize, target_dim: usize) -> Result<Vec<f32>>;
+
+    /// Human-readable method name.
+    fn name(&self) -> &'static str;
+}
+
+/// Validate common reducer preconditions; returns the sample count.
+pub(crate) fn check_shapes(data: &[f32], dim: usize, target_dim: usize) -> Result<usize> {
+    if dim == 0 {
+        return Err(OpdrError::shape("reducer: dim must be > 0"));
+    }
+    if data.len() % dim != 0 {
+        return Err(OpdrError::shape("reducer: data not a multiple of dim"));
+    }
+    if target_dim == 0 {
+        return Err(OpdrError::shape("reducer: target_dim must be > 0"));
+    }
+    if target_dim > dim {
+        return Err(OpdrError::shape(format!(
+            "reducer: target_dim {target_dim} > input dim {dim}"
+        )));
+    }
+    let m = data.len() / dim;
+    if m == 0 {
+        return Err(OpdrError::shape("reducer: no samples"));
+    }
+    Ok(m)
+}
+
+/// Reducer selector for configs / CLI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ReducerKind {
+    /// Principal Component Analysis.
+    Pca,
+    /// Classical (Torgerson) MDS.
+    ClassicalMds,
+    /// SMACOF iterative metric MDS.
+    Smacof,
+    /// Gaussian random projection (JL baseline).
+    RandomProjection,
+    /// Identity/truncation (sanity baseline).
+    Identity,
+}
+
+impl ReducerKind {
+    /// Parse from a config / CLI string.
+    pub fn parse(s: &str) -> Option<ReducerKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "pca" => Some(ReducerKind::Pca),
+            "mds" | "classical-mds" | "cmds" => Some(ReducerKind::ClassicalMds),
+            "smacof" | "smacof-mds" => Some(ReducerKind::Smacof),
+            "random" | "random-projection" | "rp" | "jl" => Some(ReducerKind::RandomProjection),
+            "identity" | "truncate" => Some(ReducerKind::Identity),
+            _ => None,
+        }
+    }
+
+    /// Canonical name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReducerKind::Pca => "pca",
+            ReducerKind::ClassicalMds => "mds",
+            ReducerKind::Smacof => "smacof",
+            ReducerKind::RandomProjection => "random-projection",
+            ReducerKind::Identity => "identity",
+        }
+    }
+
+    /// Instantiate with a seed (only random projection consumes it).
+    pub fn build(&self, seed: u64) -> Box<dyn DimReducer> {
+        match self {
+            ReducerKind::Pca => Box::new(Pca::new()),
+            ReducerKind::ClassicalMds => Box::new(ClassicalMds::new()),
+            ReducerKind::Smacof => Box::new(SmacofMds::default()),
+            ReducerKind::RandomProjection => Box::new(GaussianRandomProjection::new(seed)),
+            ReducerKind::Identity => Box::new(IdentityReducer),
+        }
+    }
+}
+
+/// Truncation baseline: keep the first `target_dim` coordinates.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IdentityReducer;
+
+impl DimReducer for IdentityReducer {
+    fn fit_transform(&self, data: &[f32], dim: usize, target_dim: usize) -> Result<Vec<f32>> {
+        let m = check_shapes(data, dim, target_dim)?;
+        let mut out = Vec::with_capacity(m * target_dim);
+        for i in 0..m {
+            out.extend_from_slice(&data[i * dim..i * dim + target_dim]);
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "identity"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for kind in [
+            ReducerKind::Pca,
+            ReducerKind::ClassicalMds,
+            ReducerKind::Smacof,
+            ReducerKind::RandomProjection,
+            ReducerKind::Identity,
+        ] {
+            assert_eq!(ReducerKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(ReducerKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn identity_truncates() {
+        let data = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let out = IdentityReducer.fit_transform(&data, 3, 2).unwrap();
+        assert_eq!(out, vec![1.0, 2.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn shape_checks() {
+        let data = [1.0f32; 6];
+        assert!(check_shapes(&data, 0, 1).is_err());
+        assert!(check_shapes(&data, 4, 1).is_err()); // 6 % 4 != 0
+        assert!(check_shapes(&data, 3, 0).is_err());
+        assert!(check_shapes(&data, 3, 4).is_err());
+        assert_eq!(check_shapes(&data, 3, 2).unwrap(), 2);
+        assert!(check_shapes(&[], 3, 2).is_err());
+    }
+
+    #[test]
+    fn build_dispatches() {
+        for kind in [
+            ReducerKind::Pca,
+            ReducerKind::ClassicalMds,
+            ReducerKind::Smacof,
+            ReducerKind::RandomProjection,
+            ReducerKind::Identity,
+        ] {
+            let r = kind.build(1);
+            // identity/mds names map through.
+            assert!(!r.name().is_empty());
+        }
+    }
+}

@@ -1,0 +1,305 @@
+//! Principal Component Analysis with two fit paths.
+//!
+//! * **Covariance path** (`d ≤ m`): eigendecompose the d×d covariance.
+//! * **Gram-trick path** (`d > m`): eigendecompose the m×m centered Gram
+//!   matrix — identical projections, much cheaper for the paper's regime
+//!   (m ≤ 300 samples of 512–2816-dim embeddings).
+//!
+//! The fitted [`PcaModel`] exposes `project` for out-of-sample vectors, which
+//! is what the serving coordinator and the `pca_project` HLO artifact use.
+
+use crate::error::{OpdrError, Result};
+use crate::linalg::{center_columns, eigh, Mat};
+use crate::reduction::{check_shapes, DimReducer};
+
+/// PCA reducer (stateless config; fitting returns a [`PcaModel`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Pca {
+    /// Force the covariance path even when the Gram trick would be cheaper
+    /// (used by the ablation bench).
+    pub force_covariance: bool,
+}
+
+impl Pca {
+    /// New PCA with automatic path selection.
+    pub fn new() -> Self {
+        Pca { force_covariance: false }
+    }
+
+    /// Fit a model retaining `target_dim` components.
+    pub fn fit(&self, data: &[f32], dim: usize, target_dim: usize) -> Result<PcaModel> {
+        let m = check_shapes(data, dim, target_dim)?;
+        if m < 2 {
+            return Err(OpdrError::shape("pca: need at least 2 samples"));
+        }
+        let x = Mat::from_f32(m, dim, data)?;
+        let (xc, means) = center_columns(&x);
+
+        // Rank of centered data ≤ m-1; components beyond that are arbitrary
+        // null-space directions, still orthonormal, and we keep them so output
+        // dims are as requested (variance 0 on those axes).
+        let use_gram = dim > m && !self.force_covariance;
+        let (components, variances) = if use_gram {
+            // Gram trick: XcXcᵀ = U Λ Uᵀ (m×m); components V = Xcᵀ U Λ^{-1/2}.
+            let g = xc.matmul(&xc.transpose())?;
+            let eg = eigh(&g)?;
+            let mut comp = Mat::zeros(dim, target_dim);
+            let mut vars = Vec::with_capacity(target_dim);
+            for c in 0..target_dim {
+                let lam = eg.values.get(c).copied().unwrap_or(0.0).max(0.0);
+                vars.push(lam / (m as f64 - 1.0));
+                if lam > 1e-10 {
+                    let scale = 1.0 / lam.sqrt();
+                    // v_c = Xcᵀ u_c / sqrt(λ)
+                    for j in 0..dim {
+                        let mut acc = 0.0;
+                        for i in 0..m {
+                            acc += xc[(i, j)] * eg.vectors[(i, c)];
+                        }
+                        comp[(j, c)] = acc * scale;
+                    }
+                } else {
+                    // Deterministic fallback basis vector for null components,
+                    // orthogonalized against previous columns (Gram–Schmidt on e_c).
+                    let mut v = vec![0.0; dim];
+                    v[c % dim] = 1.0;
+                    for prev in 0..c {
+                        let dot: f64 = (0..dim).map(|j| v[j] * comp[(j, prev)]).sum();
+                        for j in 0..dim {
+                            v[j] -= dot * comp[(j, prev)];
+                        }
+                    }
+                    let norm: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+                    if norm > 1e-12 {
+                        for (j, vj) in v.iter().enumerate() {
+                            comp[(j, c)] = vj / norm;
+                        }
+                    }
+                }
+            }
+            (comp, vars)
+        } else {
+            // Covariance path.
+            let mut cov = xc.transpose().matmul(&xc)?;
+            cov.scale(1.0 / (m as f64 - 1.0));
+            let ec = eigh(&cov)?;
+            let mut comp = Mat::zeros(dim, target_dim);
+            let mut vars = Vec::with_capacity(target_dim);
+            for c in 0..target_dim {
+                vars.push(ec.values[c].max(0.0));
+                for j in 0..dim {
+                    comp[(j, c)] = ec.vectors[(j, c)];
+                }
+            }
+            (comp, vars)
+        };
+
+        Ok(PcaModel { dim, target_dim, means, components, explained_variance: variances })
+    }
+}
+
+impl DimReducer for Pca {
+    fn fit_transform(&self, data: &[f32], dim: usize, target_dim: usize) -> Result<Vec<f32>> {
+        let model = self.fit(data, dim, target_dim)?;
+        model.project(data)
+    }
+
+    fn name(&self) -> &'static str {
+        "pca"
+    }
+}
+
+/// A fitted PCA model: projection matrix + column means.
+#[derive(Debug, Clone)]
+pub struct PcaModel {
+    dim: usize,
+    target_dim: usize,
+    means: Vec<f64>,
+    /// d × target_dim, orthonormal columns.
+    components: Mat,
+    /// Per-component explained variance, descending.
+    pub explained_variance: Vec<f64>,
+}
+
+impl PcaModel {
+    /// Input dimensionality.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Output dimensionality.
+    pub fn target_dim(&self) -> usize {
+        self.target_dim
+    }
+
+    /// Column means subtracted before projection.
+    pub fn means(&self) -> &[f64] {
+        &self.means
+    }
+
+    /// Projection matrix as a row-major f32 buffer (d × target_dim), the
+    /// layout the `pca_project` HLO artifact consumes.
+    pub fn components_f32(&self) -> Vec<f32> {
+        self.components.data().iter().map(|&x| x as f32).collect()
+    }
+
+    /// Project out-of-sample row-major data (any number of rows).
+    pub fn project(&self, data: &[f32]) -> Result<Vec<f32>> {
+        if data.len() % self.dim != 0 {
+            return Err(OpdrError::shape("pca project: bad input shape"));
+        }
+        let m = data.len() / self.dim;
+        let mut out = vec![0.0f32; m * self.target_dim];
+        for i in 0..m {
+            let row = &data[i * self.dim..(i + 1) * self.dim];
+            for c in 0..self.target_dim {
+                let mut acc = 0.0f64;
+                for j in 0..self.dim {
+                    acc += (row[j] as f64 - self.means[j]) * self.components[(j, c)];
+                }
+                out[i * self.target_dim + c] = acc as f32;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Fraction of total variance captured (0..1), when total is known.
+    pub fn explained_variance_ratio(&self, total_variance: f64) -> Vec<f64> {
+        if total_variance <= 0.0 {
+            return vec![0.0; self.explained_variance.len()];
+        }
+        self.explained_variance.iter().map(|v| v / total_variance).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Data with a dominant direction along (1,1,...)/√d plus small noise.
+    fn anisotropic(m: usize, d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut data = Vec::with_capacity(m * d);
+        for _ in 0..m {
+            let t = rng.normal() * 10.0;
+            for j in 0..d {
+                let dir = 1.0 / (d as f64).sqrt();
+                data.push((t * dir + 0.1 * rng.normal() + j as f64 * 0.0) as f32);
+            }
+        }
+        data
+    }
+
+    #[test]
+    fn first_component_captures_dominant_direction() {
+        let d = 6;
+        let data = anisotropic(50, d, 1);
+        let model = Pca::new().fit(&data, d, 2).unwrap();
+        // Component 0 ≈ ±(1,..,1)/√d.
+        let comp = model.components_f32();
+        let expected = 1.0 / (d as f32).sqrt();
+        let sign = comp[0].signum();
+        for j in 0..d {
+            let cj = comp[j * 2]; // row-major d×2, column 0
+            assert!((cj - sign * expected).abs() < 0.05, "comp[{j}]={cj}");
+        }
+        assert!(model.explained_variance[0] > 10.0 * model.explained_variance[1]);
+    }
+
+    #[test]
+    fn gram_and_covariance_paths_agree() {
+        let mut rng = Rng::new(9);
+        let (m, d) = (12, 30); // d > m triggers Gram path
+        let data = rng.normal_vec_f32(m * d);
+        let gram = Pca::new().fit_transform(&data, d, 5).unwrap();
+        let cov = Pca { force_covariance: true }.fit_transform(&data, d, 5).unwrap();
+        // Components are sign-ambiguous; compare per-column up to sign.
+        for c in 0..5 {
+            let col_g: Vec<f32> = (0..m).map(|i| gram[i * 5 + c]).collect();
+            let col_c: Vec<f32> = (0..m).map(|i| cov[i * 5 + c]).collect();
+            let dot: f32 = col_g.iter().zip(&col_c).map(|(a, b)| a * b).sum();
+            let sign = dot.signum();
+            for i in 0..m {
+                assert!(
+                    (col_g[i] - sign * col_c[i]).abs() < 1e-2,
+                    "col {c} row {i}: {} vs {}",
+                    col_g[i],
+                    sign * col_c[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn full_dim_pca_preserves_distances() {
+        // target_dim == dim (and m > d): PCA is a rigid rotation — pairwise
+        // distances are exactly preserved.
+        let mut rng = Rng::new(3);
+        let (m, d) = (20, 5);
+        let data = rng.normal_vec_f32(m * d);
+        let out = Pca::new().fit_transform(&data, d, d).unwrap();
+        let din = crate::metrics::pairwise_distances_symmetric(&data, d, crate::metrics::Metric::Euclidean).unwrap();
+        let dout = crate::metrics::pairwise_distances_symmetric(&out, d, crate::metrics::Metric::Euclidean).unwrap();
+        for (a, b) in din.iter().zip(&dout) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn projection_of_training_mean_is_zero() {
+        let mut rng = Rng::new(5);
+        let (m, d) = (15, 8);
+        let data = rng.normal_vec_f32(m * d);
+        let model = Pca::new().fit(&data, d, 3).unwrap();
+        let mean_f32: Vec<f32> = model.means().iter().map(|&x| x as f32).collect();
+        let proj = model.project(&mean_f32).unwrap();
+        for v in proj {
+            assert!(v.abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn explained_variance_descending() {
+        let data = anisotropic(40, 10, 7);
+        let model = Pca::new().fit(&data, 10, 6).unwrap();
+        for w in model.explained_variance.windows(2) {
+            assert!(w[0] >= w[1] - 1e-9);
+        }
+    }
+
+    #[test]
+    fn rejects_single_sample_and_bad_dims() {
+        let data = [1.0f32; 8];
+        assert!(Pca::new().fit(&data, 8, 2).is_err()); // m = 1
+        assert!(Pca::new().fit(&data, 4, 5).is_err()); // target > dim
+    }
+
+    #[test]
+    fn out_of_sample_projection_shape() {
+        let mut rng = Rng::new(2);
+        let data = rng.normal_vec_f32(10 * 6);
+        let model = Pca::new().fit(&data, 6, 2).unwrap();
+        let queries = rng.normal_vec_f32(3 * 6);
+        let proj = model.project(&queries).unwrap();
+        assert_eq!(proj.len(), 3 * 2);
+        assert!(model.project(&[0.0; 7]).is_err());
+    }
+
+    #[test]
+    fn target_dim_beyond_rank_still_orthonormal_output() {
+        // m=4 samples in d=10: rank ≤ 3, ask for 6 dims via Gram path.
+        let mut rng = Rng::new(21);
+        let data = rng.normal_vec_f32(4 * 10);
+        let model = Pca::new().fit(&data, 10, 6).unwrap();
+        let comp = model.components_f32(); // 10×6
+        // Columns roughly orthonormal.
+        for a in 0..6 {
+            for b in a..6 {
+                let dot: f32 = (0..10).map(|j| comp[j * 6 + a] * comp[j * 6 + b]).sum();
+                let expect = if a == b { 1.0 } else { 0.0 };
+                assert!((dot - expect).abs() < 1e-3, "({a},{b}) dot={dot}");
+            }
+        }
+    }
+}

@@ -1,0 +1,104 @@
+//! Gaussian random projection — the Johnson–Lindenstrauss baseline.
+//!
+//! Not evaluated in the paper's figures but included as the natural ablation:
+//! JL preserves *distances* in expectation yet ignores data structure, so its
+//! accuracy-vs-n/m curve sits well below PCA's — a useful sanity contrast for
+//! the OPDR claim that structure-aware reduction preserves neighbor sets
+//! faster.
+
+use crate::error::Result;
+use crate::reduction::{check_shapes, DimReducer};
+use crate::util::Rng;
+
+/// Dense Gaussian random projection, entries N(0, 1/target_dim).
+#[derive(Debug, Clone, Copy)]
+pub struct GaussianRandomProjection {
+    /// Seed for the projection matrix.
+    pub seed: u64,
+}
+
+impl GaussianRandomProjection {
+    /// New projection with the given seed.
+    pub fn new(seed: u64) -> Self {
+        GaussianRandomProjection { seed }
+    }
+
+    /// Generate the d×target_dim projection matrix (row-major f32).
+    pub fn matrix(&self, dim: usize, target_dim: usize) -> Vec<f32> {
+        let mut rng = Rng::new(self.seed ^ 0x5EED_CAFE);
+        let scale = 1.0 / (target_dim as f64).sqrt();
+        (0..dim * target_dim).map(|_| (rng.normal() * scale) as f32).collect()
+    }
+}
+
+impl DimReducer for GaussianRandomProjection {
+    fn fit_transform(&self, data: &[f32], dim: usize, target_dim: usize) -> Result<Vec<f32>> {
+        let m = check_shapes(data, dim, target_dim)?;
+        let proj = self.matrix(dim, target_dim);
+        let mut out = vec![0.0f32; m * target_dim];
+        for i in 0..m {
+            let row = &data[i * dim..(i + 1) * dim];
+            let orow = &mut out[i * target_dim..(i + 1) * target_dim];
+            for (j, &x) in row.iter().enumerate() {
+                if x == 0.0 {
+                    continue;
+                }
+                let prow = &proj[j * target_dim..(j + 1) * target_dim];
+                for c in 0..target_dim {
+                    orow[c] += x * prow[c];
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "random-projection"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{pairwise_distances_symmetric, Metric};
+    use crate::util::Rng;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut rng = Rng::new(1);
+        let data = rng.normal_vec_f32(10 * 16);
+        let a = GaussianRandomProjection::new(5).fit_transform(&data, 16, 4).unwrap();
+        let b = GaussianRandomProjection::new(5).fit_transform(&data, 16, 4).unwrap();
+        assert_eq!(a, b);
+        let c = GaussianRandomProjection::new(6).fit_transform(&data, 16, 4).unwrap();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn jl_distance_preservation_in_expectation() {
+        // With a healthy target dim, relative distance errors should be modest.
+        let mut rng = Rng::new(2);
+        let m = 20;
+        let dim = 256;
+        let data = rng.normal_vec_f32(m * dim);
+        let out = GaussianRandomProjection::new(3).fit_transform(&data, dim, 128).unwrap();
+        let din = pairwise_distances_symmetric(&data, dim, Metric::Euclidean).unwrap();
+        let dout = pairwise_distances_symmetric(&out, 128, Metric::Euclidean).unwrap();
+        let mut rel_errs = Vec::new();
+        for i in 0..m {
+            for j in (i + 1)..m {
+                let a = din[i * m + j];
+                let b = dout[i * m + j];
+                rel_errs.push(((a - b) / a).abs() as f64);
+            }
+        }
+        let mean_err = crate::util::float::mean(&rel_errs);
+        assert!(mean_err < 0.15, "mean rel err {mean_err}");
+    }
+
+    #[test]
+    fn shape_validation() {
+        let data = [0.0f32; 8];
+        assert!(GaussianRandomProjection::new(0).fit_transform(&data, 4, 8).is_err());
+    }
+}

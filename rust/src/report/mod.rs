@@ -1,0 +1,274 @@
+//! Report writers: aligned console tables, CSV and minimal JSON.
+//!
+//! Every bench target prints the paper's series through [`Table`] and
+//! persists them via [`write_csv`] / [`JsonWriter`] under `bench_out/`
+//! (no `serde` offline — the JSON writer is a small escape-correct emitter).
+
+use crate::error::Result;
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A console table with aligned columns.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with a header row.
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    /// Append a row (stringified cells).
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let ncols = self.header.len().max(self.rows.iter().map(Vec::len).max().unwrap_or(0));
+        let mut widths = vec![0usize; ncols];
+        let all = std::iter::once(&self.header).chain(self.rows.iter());
+        for row in all {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |row: &[String], out: &mut String| {
+            for (i, cell) in row.iter().enumerate() {
+                let _ = write!(out, "{:<width$}  ", cell, width = widths[i]);
+            }
+            out.push('\n');
+        };
+        fmt_row(&self.header, &mut out);
+        let total: usize = widths.iter().sum::<usize>() + 2 * ncols;
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            fmt_row(row, &mut out);
+        }
+        out
+    }
+}
+
+/// Write series rows as CSV (`header` then `rows`), creating parent dirs.
+pub fn write_csv(path: impl AsRef<Path>, header: &[&str], rows: &[Vec<String>]) -> Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut out = String::new();
+    out.push_str(&header.join(","));
+    out.push('\n');
+    for row in rows {
+        let escaped: Vec<String> = row
+            .iter()
+            .map(|c| {
+                if c.contains(',') || c.contains('"') || c.contains('\n') {
+                    format!("\"{}\"", c.replace('"', "\"\""))
+                } else {
+                    c.clone()
+                }
+            })
+            .collect();
+        out.push_str(&escaped.join(","));
+        out.push('\n');
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+/// Minimal JSON object/array writer with correct string escaping.
+#[derive(Debug, Default)]
+pub struct JsonWriter {
+    buf: String,
+    stack: Vec<(char, bool)>, // (closer, has_items)
+}
+
+impl JsonWriter {
+    /// New writer.
+    pub fn new() -> Self {
+        JsonWriter::default()
+    }
+
+    fn pre_value(&mut self) {
+        if let Some(top) = self.stack.last_mut() {
+            if top.1 {
+                self.buf.push(',');
+            }
+            top.1 = true;
+        }
+    }
+
+    /// Begin an object (as a value).
+    pub fn begin_object(&mut self) -> &mut Self {
+        self.pre_value();
+        self.buf.push('{');
+        self.stack.push(('}', false));
+        self
+    }
+
+    /// Begin an array (as a value).
+    pub fn begin_array(&mut self) -> &mut Self {
+        self.pre_value();
+        self.buf.push('[');
+        self.stack.push((']', false));
+        self
+    }
+
+    /// Close the innermost object/array.
+    pub fn end(&mut self) -> &mut Self {
+        if let Some((closer, _)) = self.stack.pop() {
+            self.buf.push(closer);
+        }
+        self
+    }
+
+    /// Emit a key (inside an object); follow with a value call.
+    pub fn key(&mut self, k: &str) -> &mut Self {
+        self.pre_value();
+        self.push_escaped(k);
+        self.buf.push(':');
+        // The upcoming value must not add its own comma.
+        if let Some(top) = self.stack.last_mut() {
+            top.1 = false;
+        }
+        self
+    }
+
+    /// String value.
+    pub fn string(&mut self, v: &str) -> &mut Self {
+        self.pre_value();
+        self.push_escaped(v);
+        self
+    }
+
+    /// Number value.
+    pub fn number(&mut self, v: f64) -> &mut Self {
+        self.pre_value();
+        if v.is_finite() {
+            let _ = write!(self.buf, "{v}");
+        } else {
+            self.buf.push_str("null");
+        }
+        self
+    }
+
+    /// Integer value.
+    pub fn integer(&mut self, v: i64) -> &mut Self {
+        self.pre_value();
+        let _ = write!(self.buf, "{v}");
+        self
+    }
+
+    /// Bool value.
+    pub fn boolean(&mut self, v: bool) -> &mut Self {
+        self.pre_value();
+        self.buf.push_str(if v { "true" } else { "false" });
+        self
+    }
+
+    fn push_escaped(&mut self, s: &str) {
+        self.buf.push('"');
+        for c in s.chars() {
+            match c {
+                '"' => self.buf.push_str("\\\""),
+                '\\' => self.buf.push_str("\\\\"),
+                '\n' => self.buf.push_str("\\n"),
+                '\r' => self.buf.push_str("\\r"),
+                '\t' => self.buf.push_str("\\t"),
+                c if (c as u32) < 0x20 => {
+                    let _ = write!(self.buf, "\\u{:04x}", c as u32);
+                }
+                c => self.buf.push(c),
+            }
+        }
+        self.buf.push('"');
+    }
+
+    /// Final JSON text (stack must be empty).
+    pub fn finish(self) -> String {
+        debug_assert!(self.stack.is_empty(), "unclosed JSON scopes");
+        self.buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_alignment() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["x".into(), "1".into()]);
+        t.row(&["longer-name".into(), "2".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert!(lines[0].starts_with("name"));
+        assert!(lines[1].starts_with("---"));
+        assert_eq!(lines.len(), 4);
+        // Columns aligned: "value"/"1"/"2" start at same offset.
+        let col = lines[0].find("value").unwrap();
+        assert_eq!(&lines[2][col..col + 1], "1");
+        assert_eq!(&lines[3][col..col + 1], "2");
+    }
+
+    #[test]
+    fn csv_escaping_and_roundtrip_shape() {
+        let dir = std::env::temp_dir().join("opdr_report_test");
+        let path = dir.join("t.csv");
+        write_csv(
+            &path,
+            &["a", "b"],
+            &[vec!["1,2".to_string(), "plain".to_string()], vec!["q\"q".to_string(), "x".to_string()]],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("a,b\n"));
+        assert!(text.contains("\"1,2\""));
+        assert!(text.contains("\"q\"\"q\""));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn json_object_and_array() {
+        let mut w = JsonWriter::new();
+        w.begin_object();
+        w.key("name").string("fig1");
+        w.key("points").begin_array();
+        w.begin_object();
+        w.key("ratio").number(0.5);
+        w.key("acc").number(0.9);
+        w.end();
+        w.end();
+        w.key("count").integer(2);
+        w.key("ok").boolean(true);
+        w.end();
+        let s = w.finish();
+        assert_eq!(
+            s,
+            r#"{"name":"fig1","points":[{"ratio":0.5,"acc":0.9}],"count":2,"ok":true}"#
+        );
+    }
+
+    #[test]
+    fn json_escapes_specials() {
+        let mut w = JsonWriter::new();
+        w.begin_object();
+        w.key("s").string("a\"b\\c\nd");
+        w.end();
+        assert_eq!(w.finish(), r#"{"s":"a\"b\\c\nd"}"#);
+    }
+
+    #[test]
+    fn json_nan_becomes_null() {
+        let mut w = JsonWriter::new();
+        w.begin_array();
+        w.number(f64::NAN);
+        w.end();
+        assert_eq!(w.finish(), "[null]");
+    }
+}

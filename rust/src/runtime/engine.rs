@@ -1,0 +1,185 @@
+//! The PJRT execution engine.
+//!
+//! Wraps `xla::PjRtClient` (CPU): loads HLO text artifacts on demand, caches
+//! compiled executables, and exposes a typed f32 execute. Follows the
+//! reference wiring of /opt/xla-example/load_hlo.rs; outputs are always
+//! 1-tuples or n-tuples (the lowering uses `return_tuple=True`).
+
+use crate::error::{OpdrError, Result};
+use crate::runtime::manifest::{ArtifactSpec, Manifest};
+use crate::runtime::ArrayF32;
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+/// Compiles and runs AOT artifacts on the PJRT CPU client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Engine")
+            .field("platform", &self.client.platform_name())
+            .field("artifacts", &self.manifest.names())
+            .finish()
+    }
+}
+
+impl Engine {
+    /// Create an engine over an artifacts directory (must contain
+    /// `manifest.toml`; see `make artifacts`).
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// The manifest this engine serves.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Eagerly compile an artifact (otherwise compiled on first execute).
+    pub fn warmup(&self, name: &str) -> Result<()> {
+        self.compiled(name).map(|_| ())
+    }
+
+    /// Eagerly compile every artifact in the manifest.
+    pub fn warmup_all(&self) -> Result<()> {
+        for name in self.manifest.names() {
+            self.warmup(&name)?;
+        }
+        Ok(())
+    }
+
+    fn compiled(&self, name: &str) -> Result<()> {
+        if self.cache.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.manifest.get(name)?;
+        let path = self.manifest.path_of(spec);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| OpdrError::runtime("non-UTF8 artifact path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.cache.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with positional f32 inputs; returns positional
+    /// f32 outputs. Shapes are validated against the manifest.
+    pub fn execute(&self, name: &str, inputs: &[ArrayF32]) -> Result<Vec<ArrayF32>> {
+        let spec = self.manifest.get(name)?.clone();
+        self.validate_inputs(&spec, inputs)?;
+        self.compiled(name)?;
+
+        // Build input literals.
+        let mut literals = Vec::with_capacity(inputs.len());
+        for arr in inputs {
+            let lit = xla::Literal::vec1(&arr.data);
+            let dims: Vec<i64> = arr.shape.iter().map(|&d| d as i64).collect();
+            let lit = if arr.shape.len() == 1 { lit } else { lit.reshape(&dims)? };
+            literals.push(lit);
+        }
+
+        let cache = self.cache.borrow();
+        let exe = cache.get(name).expect("compiled() just populated the cache");
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let buffer = &result[0][0];
+        let root = buffer.to_literal_sync()?;
+        drop(cache);
+
+        // Root is a tuple of outputs (return_tuple=True on the python side).
+        let elements = root.to_tuple()?;
+        if elements.len() != spec.outputs.len() {
+            return Err(OpdrError::runtime(format!(
+                "artifact `{name}`: manifest declares {} outputs, HLO returned {}",
+                spec.outputs.len(),
+                elements.len()
+            )));
+        }
+        let mut out = Vec::with_capacity(elements.len());
+        for (lit, ospec) in elements.into_iter().zip(&spec.outputs) {
+            let data = lit.to_vec::<f32>()?;
+            if data.len() != ospec.elems() {
+                return Err(OpdrError::runtime(format!(
+                    "artifact `{name}`: output has {} elems, manifest says {}",
+                    data.len(),
+                    ospec.elems()
+                )));
+            }
+            out.push(ArrayF32::new(data, ospec.dims.clone())?);
+        }
+        Ok(out)
+    }
+
+    fn validate_inputs(&self, spec: &ArtifactSpec, inputs: &[ArrayF32]) -> Result<()> {
+        if inputs.len() != spec.inputs.len() {
+            return Err(OpdrError::runtime(format!(
+                "artifact `{}`: expected {} inputs, got {}",
+                spec.name,
+                spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (i, (arr, ispec)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if arr.shape != ispec.dims {
+                return Err(OpdrError::runtime(format!(
+                    "artifact `{}` input {i}: shape {:?} != manifest {:?}",
+                    spec.name, arr.shape, ispec.dims
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    // Engine tests that need real artifacts live in rust/tests/runtime_it.rs
+    // (they require `make artifacts`). Here: manifest-level validation only.
+
+    fn fake_manifest() -> Manifest {
+        Manifest::from_toml_str(
+            r#"
+[artifacts.toy]
+file = "toy.hlo.txt"
+inputs = ["f32:2x2"]
+outputs = ["f32:2x2"]
+"#,
+            PathBuf::from("/nonexistent"),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn input_validation_rejects_wrong_arity_and_shape() {
+        let m = fake_manifest();
+        let spec = m.get("toy").unwrap();
+        // Build a client-less check through the private fn via a tiny shim:
+        // validate logic is pure, so replicate through Engine API would need
+        // a client; instead verify TensorSpec comparison logic here.
+        let ok = ArrayF32::zeros(&[2, 2]);
+        let bad = ArrayF32::zeros(&[2, 3]);
+        assert_eq!(spec.inputs[0].dims, ok.shape);
+        assert_ne!(spec.inputs[0].dims, bad.shape);
+    }
+
+    #[test]
+    fn missing_artifacts_dir_errors_helpfully() {
+        let e = Engine::new("/definitely/not/here").unwrap_err().to_string();
+        assert!(e.contains("make artifacts"), "{e}");
+    }
+}

@@ -1,0 +1,206 @@
+//! Artifact manifest: what `make artifacts` produced.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.toml`:
+//!
+//! ```toml
+//! [artifacts.pairwise_topk_sqeuclidean]
+//! file = "pairwise_topk_sqeuclidean.hlo.txt"
+//! inputs = ["f32:32x1024", "f32:1024x1024"]
+//! outputs = ["f32:32x64", "f32:32x64"]
+//! ```
+//!
+//! Shapes are validated on every execute; only `f32` tensors cross the
+//! boundary (index outputs are cast to f32 on the JAX side).
+
+use crate::config::toml::{parse_toml, TomlValue};
+use crate::error::{OpdrError, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Shape+dtype of one artifact input/output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    /// Dtype string ("f32" is the only supported interchange type).
+    pub dtype: String,
+    /// Dimensions.
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    /// Parse "f32:32x1024" (scalar: "f32:scalar").
+    pub fn parse(s: &str) -> Result<TensorSpec> {
+        let (dtype, rest) = s
+            .split_once(':')
+            .ok_or_else(|| OpdrError::runtime(format!("bad tensor spec `{s}`")))?;
+        if dtype != "f32" {
+            return Err(OpdrError::runtime(format!(
+                "unsupported dtype `{dtype}` (artifacts must use f32 interchange)"
+            )));
+        }
+        let dims = if rest == "scalar" {
+            vec![]
+        } else {
+            rest.split('x')
+                .map(|d| {
+                    d.parse::<usize>()
+                        .map_err(|_| OpdrError::runtime(format!("bad dim `{d}` in `{s}`")))
+                })
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(TensorSpec { dtype: dtype.to_string(), dims })
+    }
+
+    /// Total element count.
+    pub fn elems(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// One artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    /// Logical name.
+    pub name: String,
+    /// HLO text file (relative to the artifacts dir).
+    pub file: PathBuf,
+    /// Input tensor specs, positional.
+    pub inputs: Vec<TensorSpec>,
+    /// Output tensor specs, positional (the HLO root is a tuple).
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    artifacts: BTreeMap<String, ArtifactSpec>,
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.toml`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.toml");
+        let src = std::fs::read_to_string(&path).map_err(|e| {
+            OpdrError::runtime(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        Self::from_toml_str(&src, dir)
+    }
+
+    /// Parse from TOML text.
+    pub fn from_toml_str(src: &str, dir: PathBuf) -> Result<Manifest> {
+        let root = parse_toml(src)?;
+        let arts = root
+            .get_path("artifacts")
+            .and_then(|v| v.as_table())
+            .ok_or_else(|| OpdrError::runtime("manifest: missing [artifacts.*] tables"))?;
+        let mut artifacts = BTreeMap::new();
+        for (name, val) in arts {
+            let t = val
+                .as_table()
+                .ok_or_else(|| OpdrError::runtime(format!("manifest: `{name}` not a table")))?;
+            let file = t
+                .get("file")
+                .and_then(TomlValue::as_str)
+                .ok_or_else(|| OpdrError::runtime(format!("manifest: `{name}` missing file")))?;
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                t.get(key)
+                    .and_then(TomlValue::as_array)
+                    .ok_or_else(|| OpdrError::runtime(format!("manifest: `{name}` missing {key}")))?
+                    .iter()
+                    .map(|v| {
+                        v.as_str()
+                            .ok_or_else(|| OpdrError::runtime("manifest: spec not a string"))
+                            .and_then(TensorSpec::parse)
+                    })
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: PathBuf::from(file),
+                    inputs: parse_specs("inputs")?,
+                    outputs: parse_specs("outputs")?,
+                },
+            );
+        }
+        Ok(Manifest { artifacts, dir })
+    }
+
+    /// Look up an artifact by name.
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name).ok_or_else(|| {
+            OpdrError::runtime(format!(
+                "artifact `{name}` not in manifest (have: {})",
+                self.names().join(", ")
+            ))
+        })
+    }
+
+    /// All artifact names.
+    pub fn names(&self) -> Vec<String> {
+        self.artifacts.keys().cloned().collect()
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn path_of(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+[artifacts.project]
+file = "project.hlo.txt"
+inputs = ["f32:32x1024", "f32:1024x1024"]
+outputs = ["f32:32x1024"]
+
+[artifacts.scalar_fn]
+file = "s.hlo.txt"
+inputs = ["f32:scalar"]
+outputs = ["f32:scalar"]
+"#;
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::from_toml_str(DOC, PathBuf::from("/tmp/a")).unwrap();
+        let spec = m.get("project").unwrap();
+        assert_eq!(spec.inputs.len(), 2);
+        assert_eq!(spec.inputs[0].dims, vec![32, 1024]);
+        assert_eq!(spec.outputs[0].elems(), 32 * 1024);
+        assert_eq!(m.path_of(spec), PathBuf::from("/tmp/a/project.hlo.txt"));
+        let s = m.get("scalar_fn").unwrap();
+        assert!(s.inputs[0].dims.is_empty());
+        assert_eq!(s.inputs[0].elems(), 1);
+    }
+
+    #[test]
+    fn unknown_artifact_lists_available() {
+        let m = Manifest::from_toml_str(DOC, PathBuf::from(".")).unwrap();
+        let e = m.get("nope").unwrap_err().to_string();
+        assert!(e.contains("project"), "{e}");
+    }
+
+    #[test]
+    fn tensor_spec_validation() {
+        assert!(TensorSpec::parse("f32:2x3").is_ok());
+        assert!(TensorSpec::parse("f64:2").is_err());
+        assert!(TensorSpec::parse("f32:2xbad").is_err());
+        assert!(TensorSpec::parse("noseparator").is_err());
+    }
+
+    #[test]
+    fn missing_sections_error() {
+        assert!(Manifest::from_toml_str("x = 1", PathBuf::from(".")).is_err());
+        let bad = "[artifacts.a]\nfile = \"a.hlo\"\ninputs = [\"f32:2\"]";
+        assert!(Manifest::from_toml_str(bad, PathBuf::from(".")).is_err()); // no outputs
+    }
+}

@@ -1,0 +1,112 @@
+//! PJRT runtime: loads AOT-compiled HLO artifacts and executes them.
+//!
+//! The build-time layer (`python/compile/aot.py`) lowers every JAX/Pallas
+//! graph to **HLO text** (not serialized `HloModuleProto` — the crate's
+//! xla_extension 0.5.1 rejects jax≥0.5 64-bit-id protos) plus a
+//! `manifest.toml` describing names, files and shapes. [`Engine`] compiles
+//! each module once on the PJRT CPU client and caches the executable; all
+//! artifact I/O is `f32` tensors ([`ArrayF32`]).
+//!
+//! The engine is deliberately `!Sync`: the coordinator gives it to a single
+//! executor thread (see [`crate::coordinator`]), keeping PJRT single-threaded
+//! and the request path allocation-predictable.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::Engine;
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
+
+use crate::error::{OpdrError, Result};
+
+/// A dense row-major `f32` tensor with shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrayF32 {
+    /// Row-major payload.
+    pub data: Vec<f32>,
+    /// Dimensions.
+    pub shape: Vec<usize>,
+}
+
+impl ArrayF32 {
+    /// Build, validating `data.len() == product(shape)`.
+    pub fn new(data: Vec<f32>, shape: Vec<usize>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(OpdrError::shape(format!(
+                "ArrayF32: shape {shape:?} wants {n} elems, got {}",
+                data.len()
+            )));
+        }
+        Ok(ArrayF32 { data, shape })
+    }
+
+    /// Zero-filled tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        ArrayF32 { data: vec![0.0; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when no elements.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Copy a 2-D row-major block into the top-left corner of a zero-padded
+    /// tensor of shape `[rows, cols]` — the padding convention every
+    /// fixed-shape artifact relies on (zero-padding is distance-exact for the
+    /// supported metrics).
+    pub fn padded_2d(block: &[f32], src_rows: usize, src_cols: usize, rows: usize, cols: usize) -> Result<Self> {
+        if src_rows > rows || src_cols > cols {
+            return Err(OpdrError::shape(format!(
+                "padded_2d: source {src_rows}x{src_cols} exceeds target {rows}x{cols}"
+            )));
+        }
+        if block.len() != src_rows * src_cols {
+            return Err(OpdrError::shape("padded_2d: block length mismatch"));
+        }
+        let mut out = ArrayF32::zeros(&[rows, cols]);
+        for r in 0..src_rows {
+            out.data[r * cols..r * cols + src_cols]
+                .copy_from_slice(&block[r * src_cols..(r + 1) * src_cols]);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn array_validation() {
+        assert!(ArrayF32::new(vec![0.0; 6], vec![2, 3]).is_ok());
+        assert!(ArrayF32::new(vec![0.0; 5], vec![2, 3]).is_err());
+        let z = ArrayF32::zeros(&[4, 2]);
+        assert_eq!(z.len(), 8);
+    }
+
+    #[test]
+    fn padding_places_block_top_left() {
+        let block = [1.0f32, 2.0, 3.0, 4.0]; // 2x2
+        let p = ArrayF32::padded_2d(&block, 2, 2, 3, 4).unwrap();
+        assert_eq!(p.shape, vec![3, 4]);
+        assert_eq!(p.data[0], 1.0);
+        assert_eq!(p.data[1], 2.0);
+        assert_eq!(p.data[4], 3.0);
+        assert_eq!(p.data[5], 4.0);
+        // Everything else zero.
+        assert_eq!(p.data.iter().filter(|&&x| x != 0.0).count(), 4);
+    }
+
+    #[test]
+    fn padding_rejects_oversize() {
+        let block = [0.0f32; 4];
+        assert!(ArrayF32::padded_2d(&block, 2, 2, 1, 4).is_err());
+        assert!(ArrayF32::padded_2d(&block, 2, 3, 4, 4).is_err());
+    }
+}

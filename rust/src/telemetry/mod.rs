@@ -1,0 +1,226 @@
+//! Lightweight telemetry: counters and latency histograms.
+//!
+//! The coordinator records per-request latencies and throughput counters
+//! here; the bench harness reads them back for its reports. Thread-safe via
+//! atomics + a mutex-guarded histogram (contention is negligible next to the
+//! work being measured).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Monotonic named counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    /// New zeroed counter.
+    pub fn new() -> Self {
+        Counter::default()
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Increment by one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-bucket log-scale latency histogram (1µs .. ~17min, 5% resolution).
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    inner: Mutex<HistogramInner>,
+}
+
+#[derive(Debug)]
+struct HistogramInner {
+    // bucket i covers [BASE * GROWTH^i, BASE * GROWTH^(i+1))
+    buckets: Vec<u64>,
+    count: u64,
+    sum_ns: u128,
+    max_ns: u64,
+    min_ns: u64,
+}
+
+const BASE_NS: f64 = 1_000.0; // 1µs
+const GROWTH: f64 = 1.05;
+const NBUCKETS: usize = 420; // 1µs * 1.05^420 ≈ 13 min
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    /// New empty histogram.
+    pub fn new() -> Self {
+        LatencyHistogram {
+            inner: Mutex::new(HistogramInner {
+                buckets: vec![0; NBUCKETS],
+                count: 0,
+                sum_ns: 0,
+                max_ns: 0,
+                min_ns: u64::MAX,
+            }),
+        }
+    }
+
+    /// Record one latency sample.
+    pub fn record(&self, d: Duration) {
+        let ns = d.as_nanos() as u64;
+        let idx = if (ns as f64) < BASE_NS {
+            0
+        } else {
+            (((ns as f64 / BASE_NS).ln() / GROWTH.ln()) as usize).min(NBUCKETS - 1)
+        };
+        let mut g = self.inner.lock().unwrap();
+        g.buckets[idx] += 1;
+        g.count += 1;
+        g.sum_ns += ns as u128;
+        g.max_ns = g.max_ns.max(ns);
+        g.min_ns = g.min_ns.min(ns);
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> u64 {
+        self.inner.lock().unwrap().count
+    }
+
+    /// Mean latency.
+    pub fn mean(&self) -> Duration {
+        let g = self.inner.lock().unwrap();
+        if g.count == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos((g.sum_ns / g.count as u128) as u64)
+    }
+
+    /// Approximate quantile (bucket upper bound), `q` in [0,1].
+    pub fn quantile(&self, q: f64) -> Duration {
+        let g = self.inner.lock().unwrap();
+        if g.count == 0 {
+            return Duration::ZERO;
+        }
+        let target = (q.clamp(0.0, 1.0) * g.count as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &b) in g.buckets.iter().enumerate() {
+            acc += b;
+            if acc >= target.max(1) {
+                let upper = BASE_NS * GROWTH.powi(i as i32 + 1);
+                return Duration::from_nanos(upper.min(g.max_ns as f64) as u64);
+            }
+        }
+        Duration::from_nanos(g.max_ns)
+    }
+
+    /// Max recorded sample.
+    pub fn max(&self) -> Duration {
+        Duration::from_nanos(self.inner.lock().unwrap().max_ns)
+    }
+
+    /// Human summary line.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={} p50={} p99={} max={}",
+            self.count(),
+            crate::util::timer::fmt_duration(self.mean()),
+            crate::util::timer::fmt_duration(self.quantile(0.5)),
+            crate::util::timer::fmt_duration(self.quantile(0.99)),
+            crate::util::timer::fmt_duration(self.max()),
+        )
+    }
+}
+
+/// Metrics bundle shared by the coordinator.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Requests accepted into the queue.
+    pub requests: Counter,
+    /// Requests completed.
+    pub completed: Counter,
+    /// Requests rejected (backpressure).
+    pub rejected: Counter,
+    /// Batches executed.
+    pub batches: Counter,
+    /// Total vectors scored.
+    pub vectors_scored: Counter,
+    /// End-to-end request latency.
+    pub latency: LatencyHistogram,
+    /// Time spent inside batch execution.
+    pub exec_latency: LatencyHistogram,
+}
+
+impl Metrics {
+    /// New zeroed bundle.
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_concurrent_increments() {
+        let c = std::sync::Arc::new(Counter::new());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    c.inc();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 4000);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = LatencyHistogram::new();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i));
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p99);
+        // p50 within 10% of 500µs (bucket resolution is 5%).
+        let p50us = p50.as_micros() as f64;
+        assert!((p50us - 500.0).abs() < 60.0, "p50={p50us}µs");
+        assert!(h.mean() >= Duration::from_micros(400));
+        assert!(h.max() >= Duration::from_micros(999));
+    }
+
+    #[test]
+    fn empty_histogram_safe() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.mean(), Duration::ZERO);
+        assert_eq!(h.quantile(0.9), Duration::ZERO);
+        assert!(h.summary().contains("n=0"));
+    }
+
+    #[test]
+    fn tiny_and_huge_samples_clamped() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_nanos(1));
+        h.record(Duration::from_secs(3600));
+        assert_eq!(h.count(), 2);
+    }
+}

@@ -1,0 +1,164 @@
+//! Mini-proptest: a seeded property-testing harness.
+//!
+//! The offline registry has no `proptest`, so invariants are checked with
+//! this small substitute: deterministic generators over a seeded [`Rng`],
+//! a `forall` runner with case-count control, and greedy input shrinking for
+//! numeric vectors. Property tests across the crate (measure additivity,
+//! planner monotonicity, batcher ordering, kernel-vs-reference) run on it.
+
+use crate::util::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct PropConfig {
+    /// Number of random cases.
+    pub cases: usize,
+    /// Base seed (case `i` uses `seed + i`).
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 64, seed: 0x9E37 }
+    }
+}
+
+/// Run `prop` on `cases` random inputs produced by `gen`; panic with the
+/// failing seed and case index on first failure (re-runnable directly).
+pub fn forall<T, G, P>(cfg: PropConfig, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let mut rng = Rng::new(cfg.seed.wrapping_add(case as u64));
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed (case {case}, seed {}): {msg}\ninput: {input:?}",
+                cfg.seed.wrapping_add(case as u64)
+            );
+        }
+    }
+}
+
+/// Shrink a failing f32-vector input by greedy halving/truncation; returns
+/// the smallest still-failing input found.
+pub fn shrink_vec_f32<P>(input: Vec<f32>, mut fails: P) -> Vec<f32>
+where
+    P: FnMut(&[f32]) -> bool,
+{
+    debug_assert!(fails(&input), "shrink called with passing input");
+    let mut current = input;
+    loop {
+        let mut improved = false;
+        // Try removing halves.
+        if current.len() > 1 {
+            let half = current.len() / 2;
+            for cand in [current[..half].to_vec(), current[half..].to_vec()] {
+                if !cand.is_empty() && fails(&cand) {
+                    current = cand;
+                    improved = true;
+                    break;
+                }
+            }
+        }
+        if improved {
+            continue;
+        }
+        // Try zeroing elements.
+        for i in 0..current.len() {
+            if current[i] != 0.0 {
+                let mut cand = current.clone();
+                cand[i] = 0.0;
+                if fails(&cand) {
+                    current = cand;
+                    improved = true;
+                }
+            }
+        }
+        if !improved {
+            return current;
+        }
+    }
+}
+
+/// Generators for common inputs.
+pub mod gen {
+    use crate::util::Rng;
+
+    /// Random vector length in `[lo, hi]`.
+    pub fn len(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.below(hi - lo + 1)
+    }
+
+    /// Random normal f32 vector.
+    pub fn vec_f32(rng: &mut Rng, n: usize) -> Vec<f32> {
+        rng.normal_vec_f32(n)
+    }
+
+    /// Random embedding block: (data, dim, m) with m in [m_lo, m_hi], dim in
+    /// [d_lo, d_hi].
+    pub fn embedding_block(
+        rng: &mut Rng,
+        m_lo: usize,
+        m_hi: usize,
+        d_lo: usize,
+        d_hi: usize,
+    ) -> (Vec<f32>, usize, usize) {
+        let m = len(rng, m_lo, m_hi);
+        let d = len(rng, d_lo, d_hi);
+        (rng.normal_vec_f32(m * d), d, m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(
+            PropConfig { cases: 32, seed: 1 },
+            |rng| rng.normal_vec_f32(8),
+            |v| {
+                if v.len() == 8 {
+                    Ok(())
+                } else {
+                    Err("wrong length".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failures() {
+        forall(
+            PropConfig { cases: 8, seed: 2 },
+            |rng| rng.below(10),
+            |&n| if n < 100 { Err(format!("always fails, n={n}")) } else { Ok(()) },
+        );
+    }
+
+    #[test]
+    fn shrink_finds_minimal_failure() {
+        // Failing predicate: contains any negative value.
+        let input = vec![1.0, -2.0, 3.0, 4.0, -5.0, 6.0, 7.0, 8.0];
+        let small = shrink_vec_f32(input, |v| v.iter().any(|&x| x < 0.0));
+        assert!(small.iter().any(|&x| x < 0.0));
+        assert!(small.len() <= 2, "shrunk to {small:?}");
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        let mut rng = crate::util::Rng::new(3);
+        for _ in 0..50 {
+            let (data, d, m) = gen::embedding_block(&mut rng, 2, 10, 1, 5);
+            assert_eq!(data.len(), d * m);
+            assert!((2..=10).contains(&m));
+            assert!((1..=5).contains(&d));
+        }
+    }
+}

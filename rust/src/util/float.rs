@@ -1,0 +1,126 @@
+//! Float comparison and summary-statistics helpers.
+
+/// Approximate equality with combined absolute/relative tolerance.
+pub fn approx_eq(a: f64, b: f64, tol: f64) -> bool {
+    let diff = (a - b).abs();
+    diff <= tol || diff <= tol * a.abs().max(b.abs())
+}
+
+/// Assert-style approximate equality used in tests; returns a message on failure.
+pub fn check_close(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    if approx_eq(a, b, tol) {
+        Ok(())
+    } else {
+        Err(format!("not close: {a} vs {b} (tol {tol})"))
+    }
+}
+
+/// Mean of a slice (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Percentile by linear interpolation on a *sorted* slice; `q` in [0,1].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Dot product of two equal-length f32 slices, accumulated in f32.
+///
+/// Eight independent accumulators break the FP-add dependency chain so the
+/// compiler can vectorize + pipeline (perf pass L3-1; ~6× over the naive
+/// single-accumulator loop on this box — see EXPERIMENTS.md §Perf).
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 8];
+    let ca = a.chunks_exact(8);
+    let cb = b.chunks_exact(8);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (xa, xb) in ca.zip(cb) {
+        for l in 0..8 {
+            acc[l] += xa[l] * xb[l];
+        }
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    for i in 0..ra.len() {
+        s += ra[i] * rb[i];
+    }
+    s
+}
+
+/// Squared L2 norm of an f32 slice.
+#[inline]
+pub fn norm_sq_f32(a: &[f32]) -> f32 {
+    dot_f32(a, a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn approx_eq_abs_and_rel() {
+        assert!(approx_eq(1.0, 1.0 + 1e-9, 1e-6));
+        assert!(approx_eq(1e9, 1e9 * (1.0 + 1e-7), 1e-6));
+        assert!(!approx_eq(1.0, 1.1, 1e-3));
+    }
+
+    #[test]
+    fn stats_basics() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((variance(&xs) - 1.25).abs() < 1e-12);
+        assert!((stddev(&xs) - 1.25f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_stats_are_safe() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(variance(&[]), 0.0);
+        assert!(percentile_sorted(&[], 0.5).is_nan());
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0, 20.0, 30.0];
+        assert_eq!(percentile_sorted(&xs, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&xs, 1.0), 30.0);
+        assert_eq!(percentile_sorted(&xs, 0.5), 15.0);
+    }
+
+    #[test]
+    fn dot_and_norm() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [4.0f32, 5.0, 6.0];
+        assert_eq!(dot_f32(&a, &b), 32.0);
+        assert_eq!(norm_sq_f32(&a), 14.0);
+    }
+}

@@ -1,0 +1,8 @@
+//! Small shared utilities: seeded RNG, timing, float helpers.
+
+pub mod float;
+pub mod rng;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::Stopwatch;

@@ -1,0 +1,148 @@
+//! Integration tests: coordinator end-to-end, including the PJRT path.
+
+use opdr::config::ServeConfig;
+use opdr::coordinator::Coordinator;
+use opdr::data::{synth, DatasetKind};
+use opdr::metrics::Metric;
+
+fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/manifest.toml").exists()
+}
+
+#[test]
+fn full_lifecycle_with_reduction_and_recall() {
+    let cfg = ServeConfig { workers: 2, max_batch: 16, max_wait_ms: 1, ..Default::default() };
+    let coord = Coordinator::start(cfg).unwrap();
+    coord.create_collection("lib", 128, Metric::SqEuclidean).unwrap();
+    let set = synth::generate(DatasetKind::MaterialsObservable, 300, 128, 9);
+    coord.ingest("lib", set.data().to_vec()).unwrap();
+
+    // Ground truth at full dim for 20 queries.
+    let k = 10;
+    let mut truth = Vec::new();
+    for qi in 0..20 {
+        let q = set.vector(qi);
+        truth.push(
+            opdr::knn::knn_indices(q, set.data(), 128, k, Metric::SqEuclidean).unwrap(),
+        );
+    }
+
+    let planned = coord.build_reduced("lib", 0.9, k).unwrap();
+    assert!(planned < 128, "OPDR should reduce below full dim, got {planned}");
+
+    // Recall of reduced serving vs full-dim ground truth.
+    let mut hits = 0usize;
+    for (qi, t) in truth.iter().enumerate() {
+        let res = coord.search("lib", set.vector(qi).to_vec(), k).unwrap();
+        assert_eq!(res.scored_dim, planned);
+        let got: std::collections::HashSet<usize> =
+            res.neighbors.iter().map(|n| n.index).collect();
+        hits += t.iter().filter(|n| got.contains(&n.index)).count();
+    }
+    let recall = hits as f64 / (20 * k) as f64;
+    assert!(recall > 0.6, "recall@{k} = {recall} too low for target 0.9");
+    coord.shutdown();
+}
+
+#[test]
+fn runtime_path_agrees_with_cpu_path() {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    }
+    let set = synth::generate(DatasetKind::Flickr30k, 400, 96, 4);
+    let k = 8;
+
+    let run = |use_runtime: bool| -> Vec<Vec<usize>> {
+        let cfg = ServeConfig {
+            workers: 2,
+            max_batch: 8,
+            max_wait_ms: 1,
+            use_runtime,
+            ..Default::default()
+        };
+        let coord = Coordinator::start(cfg).unwrap();
+        coord.create_collection("c", 96, Metric::SqEuclidean).unwrap();
+        coord.ingest("c", set.data().to_vec()).unwrap();
+        let mut out = Vec::new();
+        for qi in 0..12 {
+            let res = coord.search("c", set.vector(qi).to_vec(), k).unwrap();
+            out.push(res.neighbors.iter().map(|n| n.index).collect());
+        }
+        coord.shutdown();
+        out
+    };
+
+    let cpu = run(false);
+    let rt = run(true);
+    assert_eq!(cpu, rt, "PJRT and CPU scoring disagree");
+}
+
+#[test]
+fn concurrent_clients_under_load() {
+    let cfg = ServeConfig {
+        workers: 4,
+        max_batch: 32,
+        max_wait_ms: 2,
+        queue_capacity: 4096,
+        ..Default::default()
+    };
+    let coord = std::sync::Arc::new(Coordinator::start(cfg).unwrap());
+    coord.create_collection("c", 32, Metric::SqEuclidean).unwrap();
+    let set = synth::generate(DatasetKind::OmniCorpus, 500, 32, 5);
+    coord.ingest("c", set.data().to_vec()).unwrap();
+
+    let mut handles = Vec::new();
+    for t in 0..4 {
+        let coord = std::sync::Arc::clone(&coord);
+        let set = set.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut ok = 0;
+            for i in 0..50 {
+                let qi = (t * 50 + i) % 500;
+                if let Ok(res) = coord.search("c", set.vector(qi).to_vec(), 5) {
+                    assert_eq!(res.neighbors[0].index, qi); // self-hit
+                    ok += 1;
+                }
+            }
+            ok
+        }));
+    }
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, 200);
+    assert_eq!(coord.metrics().completed.get(), 200);
+    // Batching must actually have batched (fewer batches than requests).
+    assert!(coord.metrics().batches.get() < 200, "no batching happened");
+}
+
+#[test]
+fn admin_errors_propagate_to_caller() {
+    let coord = Coordinator::start(ServeConfig::default()).unwrap();
+    assert!(coord.ingest("missing", vec![0.0; 4]).is_err());
+    assert!(coord.build_reduced("missing", 0.9, 5).is_err());
+    coord.create_collection("c", 4, Metric::Euclidean).unwrap();
+    assert!(coord.create_collection("c", 4, Metric::Euclidean).is_err());
+    assert!(coord.ingest("c", vec![0.0; 3]).is_err()); // ragged
+    coord.shutdown();
+}
+
+#[test]
+fn ivf_index_served_collection() {
+    let cfg = ServeConfig {
+        workers: 2,
+        ivf_threshold: 100,
+        ivf_nlist: 16,
+        ivf_nprobe: 16, // full probe → exact
+        ..Default::default()
+    };
+    let coord = Coordinator::start(cfg).unwrap();
+    coord.create_collection("big", 16, Metric::SqEuclidean).unwrap();
+    let set = synth::generate(DatasetKind::MaterialsMetal, 600, 16, 6);
+    coord.ingest("big", set.data().to_vec()).unwrap();
+    coord.build_index("big").unwrap();
+    let res = coord.search("big", set.vector(7).to_vec(), 5).unwrap();
+    assert_eq!(res.neighbors[0].index, 7);
+    let stats = coord.stats().unwrap();
+    assert!(stats.contains("indexed=true"), "{stats}");
+    coord.shutdown();
+}

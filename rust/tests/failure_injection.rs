@@ -1,0 +1,137 @@
+//! Failure-injection tests: the system must fail loudly and recoverably,
+//! never silently serve garbage.
+
+use opdr::config::ServeConfig;
+use opdr::coordinator::Coordinator;
+use opdr::data::{synth, DatasetKind};
+use opdr::metrics::Metric;
+use opdr::runtime::Engine;
+use std::io::Write;
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("opdr_fail_{name}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn corrupt_manifest_is_rejected() {
+    let dir = tmpdir("manifest");
+    std::fs::write(dir.join("manifest.toml"), "this is { not toml").unwrap();
+    let err = Engine::new(&dir).unwrap_err().to_string();
+    assert!(err.contains("config") || err.contains("manifest") || err.contains("line"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn manifest_pointing_at_missing_hlo_fails_on_use() {
+    let dir = tmpdir("missing_hlo");
+    std::fs::write(
+        dir.join("manifest.toml"),
+        "[artifacts.ghost]\nfile = \"ghost.hlo.txt\"\ninputs = [\"f32:2x2\"]\noutputs = [\"f32:2x2\"]\n",
+    )
+    .unwrap();
+    let engine = Engine::new(&dir).unwrap(); // lazy: construction succeeds
+    let err = engine.warmup("ghost").unwrap_err().to_string();
+    assert!(!err.is_empty());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupt_hlo_text_fails_to_parse_not_to_garbage() {
+    let dir = tmpdir("corrupt_hlo");
+    let mut f = std::fs::File::create(dir.join("bad.hlo.txt")).unwrap();
+    writeln!(f, "HloModule bad\nENTRY main {{ garbage garbage }}").unwrap();
+    std::fs::write(
+        dir.join("manifest.toml"),
+        "[artifacts.bad]\nfile = \"bad.hlo.txt\"\ninputs = [\"f32:2x2\"]\noutputs = [\"f32:2x2\"]\n",
+    )
+    .unwrap();
+    let engine = Engine::new(&dir).unwrap();
+    assert!(engine.warmup("bad").is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn manifest_output_mismatch_detected_at_execute() {
+    // Point the manifest at a REAL artifact but declare wrong output shapes:
+    // execute must detect the drift instead of mis-slicing results.
+    if !std::path::Path::new("artifacts/pca_project.hlo.txt").exists() {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    }
+    let dir = tmpdir("shape_drift");
+    std::fs::copy("artifacts/pca_project.hlo.txt", dir.join("p.hlo.txt")).unwrap();
+    std::fs::write(
+        dir.join("manifest.toml"),
+        // true shapes are [64,1024]x[1024,1024] -> [64,1024]
+        "[artifacts.p]\nfile = \"p.hlo.txt\"\ninputs = [\"f32:64x1024\", \"f32:1024x1024\"]\noutputs = [\"f32:64x512\"]\n",
+    )
+    .unwrap();
+    let engine = Engine::new(&dir).unwrap();
+    let x = opdr::runtime::ArrayF32::zeros(&[64, 1024]);
+    let w = opdr::runtime::ArrayF32::zeros(&[1024, 1024]);
+    let err = engine.execute("p", &[x, w]).unwrap_err().to_string();
+    assert!(err.contains("elems") || err.contains("output"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn coordinator_survives_failing_requests_and_keeps_serving() {
+    let coord = Coordinator::start(ServeConfig { workers: 2, ..Default::default() }).unwrap();
+    coord.create_collection("ok", 8, Metric::SqEuclidean).unwrap();
+    let set = synth::generate(DatasetKind::Flickr30k, 30, 8, 1);
+    coord.ingest("ok", set.data().to_vec()).unwrap();
+
+    // A burst of failures: wrong collection, wrong dims, zero-k.
+    for _ in 0..20 {
+        assert!(coord.search("nope", vec![0.0; 8], 3).is_err());
+        assert!(coord.search("ok", vec![0.0; 5], 3).is_err()); // wrong dim
+    }
+    // Still healthy.
+    let res = coord.search("ok", set.vector(2).to_vec(), 3).unwrap();
+    assert_eq!(res.neighbors[0].index, 2);
+    coord.shutdown();
+}
+
+#[test]
+fn wrong_dim_query_rejected_not_mis_scored() {
+    let coord = Coordinator::start(ServeConfig::default()).unwrap();
+    coord.create_collection("c", 16, Metric::SqEuclidean).unwrap();
+    let set = synth::generate(DatasetKind::Esc50, 20, 16, 2);
+    coord.ingest("c", set.data().to_vec()).unwrap();
+    let err = coord.search("c", vec![0.0; 15], 3);
+    assert!(err.is_err());
+    let err = coord.search("c", vec![0.0; 17], 3);
+    assert!(err.is_err());
+    coord.shutdown();
+}
+
+#[test]
+fn store_load_of_truncated_file_errors() {
+    let dir = tmpdir("store");
+    let set = synth::generate(DatasetKind::Flickr30k, 5, 4, 3);
+    let path = dir.join("x.opdr");
+    opdr::data::store::save(&set, &path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+    assert!(opdr::data::store::load(&path).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn reducer_rejects_degenerate_inputs_cleanly() {
+    use opdr::reduction::ReducerKind;
+    // All-identical points: PCA/MDS must not panic (zero variance).
+    let data = vec![1.0f32; 10 * 6];
+    for kind in [ReducerKind::Pca, ReducerKind::ClassicalMds, ReducerKind::Smacof] {
+        match kind.build(0).fit_transform(&data, 6, 2) {
+            Ok(out) => assert!(out.iter().all(|x| x.is_finite()), "{}", kind.name()),
+            Err(_) => {} // clean error is acceptable; panic is not
+        }
+    }
+    // NaN inputs: must error, not propagate silently through eigh.
+    let mut nan_data = vec![0.5f32; 8 * 4];
+    nan_data[5] = f32::NAN;
+    assert!(ReducerKind::Pca.build(0).fit_transform(&nan_data, 4, 2).is_err());
+}

@@ -1,0 +1,119 @@
+//! End-to-end OPDR math: the paper's pipeline run as a library user would.
+
+use opdr::data::{synth, DatasetKind};
+use opdr::embed::{embed_records, HashEncoder, ModelKind};
+use opdr::metrics::Metric;
+use opdr::opdr::{accuracy, fit_log_model, sweep::SweepConfig, Planner};
+use opdr::reduction::ReducerKind;
+
+#[test]
+fn paper_pipeline_sweep_fit_plan_verify() {
+    // 1. "Extract" embeddings (synthetic materials set, CLIP-dim).
+    let set = synth::generate(DatasetKind::MaterialsObservable, 120, 256, 42);
+
+    // 2. Sweep accuracy vs n/m (the paper's Figures 1-4 engine).
+    let cfg = SweepConfig {
+        sample_sizes: vec![30, 60],
+        dims_per_m: 8,
+        repeats: 2,
+        ..Default::default()
+    };
+    let curve = opdr::opdr::accuracy_curve(&set, &cfg).unwrap();
+
+    // 3. Fit Eq. (4).
+    let fit = fit_log_model(curve.points()).unwrap();
+    assert!(fit.c0 > 0.0, "accuracy must increase with n/m (c0 = {})", fit.c0);
+    assert!(fit.r_squared > 0.5, "log model should explain the sweep (R² = {})", fit.r_squared);
+
+    // 4. Plan a dimension for A=0.85 and verify the measured accuracy is in
+    //    the right neighbourhood.
+    let planner = Planner::from_fit(fit);
+    let m = 60;
+    let planned = planner.dim_for_accuracy(0.85, m);
+    let sub: Vec<usize> = (0..m).collect();
+    let subset = set.subset(&sub).unwrap();
+    let n = planned.min(set.dim());
+    let reduced = ReducerKind::Pca.build(0).fit_transform(subset.data(), set.dim(), n).unwrap();
+    let measured =
+        accuracy(subset.data(), set.dim(), &reduced, n, cfg.k, cfg.metric).unwrap();
+    assert!(
+        measured > 0.85 - 0.15,
+        "planned dim {planned} delivered accuracy {measured}, target 0.85"
+    );
+}
+
+#[test]
+fn pca_dominates_random_projection() {
+    // The structural claim behind choosing PCA: structure-aware reduction
+    // preserves neighbors better than oblivious projection at equal dims.
+    let set = synth::generate(DatasetKind::MaterialsStable, 60, 128, 7);
+    let k = 5;
+    let n = 8;
+    let pca = ReducerKind::Pca.build(0).fit_transform(set.data(), 128, n).unwrap();
+    let rp = ReducerKind::RandomProjection.build(0).fit_transform(set.data(), 128, n).unwrap();
+    let a_pca = accuracy(set.data(), 128, &pca, n, k, Metric::SqEuclidean).unwrap();
+    let a_rp = accuracy(set.data(), 128, &rp, n, k, Metric::SqEuclidean).unwrap();
+    assert!(a_pca > a_rp, "pca {a_pca} !> random {a_rp}");
+}
+
+#[test]
+fn trend_holds_across_all_seven_datasets() {
+    // Every figure's qualitative claim: accuracy rises with n/m everywhere.
+    for kind in DatasetKind::ALL {
+        let set = synth::generate(kind, 60, 128, 3);
+        let cfg = SweepConfig {
+            sample_sizes: vec![40],
+            dims_per_m: 6,
+            repeats: 1,
+            ..Default::default()
+        };
+        let curve = opdr::opdr::accuracy_curve(&set, &cfg).unwrap();
+        let fit = fit_log_model(curve.points()).unwrap();
+        assert!(fit.c0 > 0.0, "{}: c0 = {}", kind.name(), fit.c0);
+    }
+}
+
+#[test]
+fn trend_holds_across_models_via_embed_pipeline() {
+    // Figs 7-9 shape: all three models produce the log trend on the same raw
+    // records (hash-encoder backend; the runtime backend is covered in
+    // runtime_it.rs).
+    let recs = opdr::data::records::generate_records(DatasetKind::Flickr30k, 60, 5);
+    let enc = HashEncoder::default();
+    for model in ModelKind::FIGURE_MODELS {
+        let set = embed_records(&enc, model, &recs, "e2e").unwrap();
+        let cfg = SweepConfig {
+            sample_sizes: vec![40],
+            dims_per_m: 6,
+            repeats: 1,
+            ..Default::default()
+        };
+        let curve = opdr::opdr::accuracy_curve(&set, &cfg).unwrap();
+        let fit = fit_log_model(curve.points()).unwrap();
+        assert!(fit.c0 > 0.0, "{}: c0 = {}", model.name(), fit.c0);
+    }
+}
+
+#[test]
+fn op2_implies_not_op1_end_to_end() {
+    // The paper's non-inclusiveness claim survives the full pipeline: find a
+    // reduction where some point's 2-NN set is preserved but its 1-NN is not.
+    let set = synth::generate(DatasetKind::Flickr30k, 50, 64, 11);
+    let reduced = ReducerKind::Pca.build(0).fit_transform(set.data(), 64, 3).unwrap();
+    let s1 = opdr::opdr::measure::NeighborSets::compute(
+        set.data(), 64, &reduced, 3, 1, Metric::SqEuclidean).unwrap();
+    let s2 = opdr::opdr::measure::NeighborSets::compute(
+        set.data(), 64, &reduced, 3, 2, Metric::SqEuclidean).unwrap();
+    let mut found = false;
+    for i in 0..set.len() {
+        let p1 = opdr::opdr::measure::preserved_count(&s1, i);
+        let p2 = opdr::opdr::measure::preserved_count(&s2, i);
+        if p2 == 2 && p1 == 0 {
+            found = true;
+            break;
+        }
+    }
+    // This is probabilistic but overwhelmingly likely at this distortion
+    // level; if it flakes, the seed can be fixed differently.
+    assert!(found, "no OP_2-but-not-OP_1 point found (unlikely but possible)");
+}

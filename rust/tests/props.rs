@@ -1,0 +1,214 @@
+//! Cross-module property tests on the mini-proptest harness.
+
+use opdr::metrics::Metric;
+use opdr::opdr::measure::{op_measure, NeighborSets};
+use opdr::opdr::{accuracy, fit_log_model, Planner};
+use opdr::reduction::ReducerKind;
+use opdr::testing::{forall, gen, PropConfig};
+
+const METRICS: [Metric; 4] =
+    [Metric::SqEuclidean, Metric::Euclidean, Metric::Cosine, Metric::Manhattan];
+
+#[test]
+fn prop_measure_is_additive_and_bounded() {
+    forall(
+        PropConfig { cases: 40, seed: 101 },
+        |rng| {
+            let (x, dx, m) = gen::embedding_block(rng, 8, 24, 4, 16);
+            let dy = 1 + rng.below(dx);
+            let y = rng.normal_vec_f32(m * dy);
+            let k = 1 + rng.below((m - 1).min(6));
+            let metric = METRICS[rng.below(4)];
+            // Random disjoint partition of all indices into 3 parts.
+            let mut parts: Vec<Vec<usize>> = vec![vec![], vec![], vec![]];
+            for i in 0..m {
+                parts[rng.below(3)].push(i);
+            }
+            (x, dx, y, dy, m, k, metric, parts)
+        },
+        |(x, dx, y, dy, m, k, metric, parts)| {
+            let sets = NeighborSets::compute(x, *dx, y, *dy, *k, *metric)
+                .map_err(|e| e.to_string())?;
+            for i in 0..*m {
+                let whole: Vec<usize> = (0..*m).collect();
+                let mu_whole = op_measure(&sets, i, &whole);
+                if !(0.0..=1.0).contains(&mu_whole) {
+                    return Err(format!("μ out of range: {mu_whole}"));
+                }
+                let sum: f64 = parts.iter().map(|p| op_measure(&sets, i, p)).sum();
+                if (mu_whole - sum).abs() > 1e-9 {
+                    return Err(format!("additivity violated: {mu_whole} vs {sum}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_accuracy_bounds_and_identity() {
+    forall(
+        PropConfig { cases: 30, seed: 202 },
+        |rng| {
+            let (x, dx, m) = gen::embedding_block(rng, 8, 30, 3, 12);
+            let k = 1 + rng.below((m - 1).min(5));
+            let metric = METRICS[rng.below(4)];
+            (x, dx, k, metric)
+        },
+        |(x, dx, k, metric)| {
+            // Identity map: accuracy exactly 1.
+            let a = accuracy(x, *dx, x, *dx, *k, *metric).map_err(|e| e.to_string())?;
+            if a != 1.0 {
+                return Err(format!("identity accuracy {a} != 1"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_reducers_produce_valid_output() {
+    forall(
+        PropConfig { cases: 25, seed: 303 },
+        |rng| {
+            let (x, dx, m) = gen::embedding_block(rng, 6, 20, 4, 20);
+            let target = 1 + rng.below(dx.min(m));
+            let kind = [
+                ReducerKind::Pca,
+                ReducerKind::ClassicalMds,
+                ReducerKind::Smacof,
+                ReducerKind::RandomProjection,
+                ReducerKind::Identity,
+            ][rng.below(5)];
+            (x, dx, m, target, kind)
+        },
+        |(x, dx, m, target, kind)| {
+            let out = kind
+                .build(7)
+                .fit_transform(x, *dx, *target)
+                .map_err(|e| format!("{}: {e}", kind.name()))?;
+            if out.len() != m * target {
+                return Err(format!("{}: wrong output size", kind.name()));
+            }
+            if out.iter().any(|v| !v.is_finite()) {
+                return Err(format!("{}: non-finite output", kind.name()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_planner_inversion_consistent() {
+    forall(
+        PropConfig { cases: 50, seed: 404 },
+        |rng| {
+            // Random plausible fits: c0 in (0.02, 0.5], c1 in [0.3, 1.1].
+            let c0 = 0.02 + rng.uniform() * 0.48;
+            let c1 = 0.3 + rng.uniform() * 0.8;
+            let m = 10 + rng.below(500);
+            let target = 0.2 + rng.uniform() * 0.75;
+            (c0, c1, m, target)
+        },
+        |&(c0, c1, m, target)| {
+            let fit = opdr::opdr::fit::LogFit { c0, c1, r_squared: 1.0, n_points: 10 };
+            let planner = Planner::from_fit(fit);
+            let n = planner.dim_for_accuracy(target, m);
+            if n < 1 || n > m {
+                return Err(format!("planned dim {n} outside [1, {m}]"));
+            }
+            // Forward prediction at the planned dim must reach the target
+            // (unless clamped at m, where the best achievable is predict(1)).
+            let pred = planner.predicted_accuracy(n, m);
+            if n < m && pred + 1e-6 < target.min(1.0) {
+                return Err(format!("pred {pred} < target {target} at n={n}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fit_recovers_generating_coefficients() {
+    forall(
+        PropConfig { cases: 30, seed: 505 },
+        |rng| {
+            let c0 = 0.05 + rng.uniform() * 0.3;
+            let c1 = 0.5 + rng.uniform() * 0.4;
+            let pts: Vec<(f64, f64)> = (0..30)
+                .map(|i| {
+                    let r = 0.05 + 0.95 * (i as f64 / 29.0);
+                    let a = (c0 * r.ln() + c1).clamp(0.0, 1.0);
+                    (r, a)
+                })
+                .collect();
+            (c0, c1, pts)
+        },
+        |(c0, c1, pts)| {
+            // Only use the unclamped midsection for exact recovery.
+            let interior: Vec<(f64, f64)> =
+                pts.iter().copied().filter(|&(_, a)| a > 1e-9 && a < 1.0 - 1e-9).collect();
+            if interior.len() < 5 {
+                return Ok(()); // degenerate draw; skip
+            }
+            let fit = fit_log_model(&interior).map_err(|e| e.to_string())?;
+            if (fit.c0 - c0).abs() > 1e-6 || (fit.c1 - c1).abs() > 1e-6 {
+                return Err(format!(
+                    "recovered ({}, {}) from ({c0}, {c1})",
+                    fit.c0, fit.c1
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_topk_matches_sort_under_duplicates() {
+    forall(
+        PropConfig { cases: 60, seed: 606 },
+        |rng| {
+            // Heavy duplicates to stress tie-breaking.
+            let n = 1 + rng.below(100);
+            let vals: Vec<f32> = (0..n).map(|_| (rng.below(5) as f32) * 0.25).collect();
+            let k = 1 + rng.below(12);
+            (vals, k)
+        },
+        |(vals, k)| {
+            let fast = opdr::knn::top_k_smallest(vals, *k);
+            let mut idx: Vec<usize> = (0..vals.len()).collect();
+            idx.sort_by(|&a, &b| {
+                vals[a].partial_cmp(&vals[b]).unwrap().then(a.cmp(&b))
+            });
+            let want: Vec<usize> = idx.into_iter().take(*k.min(&vals.len())).collect();
+            let got: Vec<usize> = fast.iter().map(|x| x.0).collect();
+            if got != want {
+                return Err(format!("topk {got:?} != sort {want:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_store_roundtrip() {
+    forall(
+        PropConfig { cases: 20, seed: 707 },
+        |rng| {
+            let (data, dim, _) = gen::embedding_block(rng, 1, 20, 1, 16);
+            (data, dim)
+        },
+        |(data, dim)| {
+            let set = opdr::data::EmbeddingSet::new("prop", *dim, data.clone())
+                .map_err(|e| e.to_string())?;
+            let mut buf = Vec::new();
+            opdr::data::store::write_embeddings(&set, &mut buf).map_err(|e| e.to_string())?;
+            let back =
+                opdr::data::store::read_embeddings(&mut buf.as_slice()).map_err(|e| e.to_string())?;
+            if back != set {
+                return Err("roundtrip mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}

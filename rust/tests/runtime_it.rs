@@ -1,0 +1,208 @@
+//! Integration tests over the PJRT runtime + real AOT artifacts.
+//!
+//! These require `make artifacts` (the Makefile test target guarantees it);
+//! when artifacts are missing the tests skip with a note instead of failing,
+//! so plain `cargo test` works on a fresh checkout.
+
+use opdr::data::records::{generate_records, TEXT_FEAT, TEXT_TOKENS};
+use opdr::data::DatasetKind;
+use opdr::embed::{embed_records, Encoder, ModelKind, RuntimeEncoder};
+use opdr::metrics::Metric;
+use opdr::runtime::{ArrayF32, Engine};
+use opdr::util::Rng;
+
+fn engine_or_skip() -> Option<Engine> {
+    match Engine::new("artifacts") {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("SKIP (run `make artifacts`): {err}");
+            None
+        }
+    }
+}
+
+#[test]
+fn pairwise_topk_artifact_matches_rust_reference() {
+    let Some(engine) = engine_or_skip() else { return };
+    let mut rng = Rng::new(1);
+    let (q_cap, n_cap, d_cap, k_cap) = (32usize, 1024usize, 1024usize, 64usize);
+    let live_n = 300;
+    let live_d = 192;
+    let live_q = 8;
+    let queries = rng.normal_vec_f32(live_q * live_d);
+    let base = rng.normal_vec_f32(live_n * live_d);
+
+    let q_in = ArrayF32::padded_2d(&queries, live_q, live_d, q_cap, d_cap).unwrap();
+    let b_in = ArrayF32::padded_2d(&base, live_n, live_d, n_cap, d_cap).unwrap();
+    let mut mask = vec![0.0f32; n_cap];
+    for m in mask.iter_mut().skip(live_n) {
+        *m = 1.0;
+    }
+    let mask_in = ArrayF32::new(mask, vec![n_cap]).unwrap();
+
+    for metric in [Metric::SqEuclidean, Metric::Cosine, Metric::Manhattan] {
+        let artifact = format!("pairwise_topk_{}", metric.name());
+        let out = engine
+            .execute(&artifact, &[q_in.clone(), b_in.clone(), mask_in.clone()])
+            .unwrap();
+        let dists = &out[0];
+        let idxs = &out[1];
+        assert_eq!(dists.shape, vec![q_cap, k_cap]);
+
+        // Compare against exact rust KNN for each live query.
+        for qi in 0..live_q {
+            let exact = opdr::knn::knn_indices(
+                &queries[qi * live_d..(qi + 1) * live_d],
+                &base,
+                live_d,
+                10,
+                metric,
+            )
+            .unwrap();
+            for (j, nb) in exact.iter().enumerate() {
+                let got_idx = idxs.data[qi * k_cap + j] as usize;
+                let got_dist = dists.data[qi * k_cap + j];
+                assert_eq!(got_idx, nb.index, "{artifact} q{qi} rank {j}");
+                assert!(
+                    (got_dist - nb.distance).abs() < 1e-2 * (1.0 + nb.distance.abs()),
+                    "{artifact} q{qi} rank {j}: {got_dist} vs {}",
+                    nb.distance
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pca_project_artifact_matches_rust_projection() {
+    let Some(engine) = engine_or_skip() else { return };
+    let mut rng = Rng::new(2);
+    let (b_cap, d_cap) = (64usize, 1024usize);
+    let live_b = 10;
+    let live_d = 128;
+    let target = 16;
+
+    // Fit a PCA on random data in rust, project via artifact, compare.
+    let data = rng.normal_vec_f32(40 * live_d);
+    let model = opdr::reduction::Pca::new().fit(&data, live_d, target).unwrap();
+    let queries = rng.normal_vec_f32(live_b * live_d);
+    let want = model.project(&queries).unwrap();
+
+    // Build padded inputs: x must be CENTERED before the artifact (the HLO
+    // graph is a plain projection; mean subtraction is the caller's job).
+    let means = model.means();
+    let mut centered = queries.clone();
+    for r in 0..live_b {
+        for j in 0..live_d {
+            centered[r * live_d + j] -= means[j] as f32;
+        }
+    }
+    let x_in = ArrayF32::padded_2d(&centered, live_b, live_d, b_cap, d_cap).unwrap();
+    let comp = model.components_f32(); // live_d × target
+    let w_in = ArrayF32::padded_2d(&comp, live_d, target, d_cap, d_cap).unwrap();
+
+    let out = engine.execute("pca_project", &[x_in, w_in]).unwrap();
+    let got = &out[0];
+    for r in 0..live_b {
+        for c in 0..target {
+            let g = got.data[r * d_cap + c];
+            let w = want[r * target + c];
+            assert!((g - w).abs() < 1e-3 * (1.0 + w.abs()), "({r},{c}): {g} vs {w}");
+        }
+        // Padding columns must be exactly zero (zero-padded components).
+        for c in target..(target + 8) {
+            assert_eq!(got.data[r * d_cap + c], 0.0);
+        }
+    }
+}
+
+#[test]
+fn covariance_artifact_matches_rust_covariance() {
+    let Some(engine) = engine_or_skip() else { return };
+    let mut rng = Rng::new(3);
+    let (m_cap, d_cap) = (128usize, 512usize);
+    // Use the full fixed shape (padding rows would shift the column means in
+    // the graph's centering; full-shape usage is the supported contract).
+    let data = rng.normal_vec_f32(m_cap * d_cap);
+    let x_in = ArrayF32::new(data.clone(), vec![m_cap, d_cap]).unwrap();
+    let out = engine.execute("covariance", &[x_in]).unwrap();
+    let got = &out[0];
+    assert_eq!(got.shape, vec![d_cap, d_cap]);
+
+    let x = opdr::linalg::Mat::from_f32(m_cap, d_cap, &data).unwrap();
+    let mut want = opdr::linalg::covariance_matrix(&x).unwrap();
+    want.scale(m_cap as f64 - 1.0); // artifact returns raw centered Gram
+    for idx in (0..d_cap * d_cap).step_by(9173) {
+        let (i, j) = (idx / d_cap, idx % d_cap);
+        let g = got.data[idx] as f64;
+        let w = want[(i, j)];
+        assert!((g - w).abs() < 1e-2 * (1.0 + w.abs()), "({i},{j}): {g} vs {w}");
+    }
+}
+
+#[test]
+fn encoder_towers_execute_and_are_deterministic() {
+    let Some(engine) = engine_or_skip() else { return };
+    let enc = RuntimeEncoder::new(&engine);
+    let recs = generate_records(DatasetKind::Esc50, 5, 7);
+
+    for model in [ModelKind::Clip, ModelKind::Bert, ModelKind::Vit, ModelKind::BertPanns] {
+        let a = embed_records(&enc, model, &recs, "it").unwrap();
+        let b = embed_records(&enc, model, &recs, "it").unwrap();
+        assert_eq!(a.len(), 5);
+        assert_eq!(a.dim(), model.output_dim());
+        assert_eq!(a.data(), b.data(), "{} not deterministic", model.name());
+        assert!(a.data().iter().all(|x| x.is_finite()));
+    }
+}
+
+#[test]
+fn runtime_embeddings_cluster_by_class() {
+    // The substitution argument (DESIGN.md §1) requires encoder outputs to
+    // inherit record cluster structure; verify on the real towers.
+    let Some(engine) = engine_or_skip() else { return };
+    let enc = RuntimeEncoder::new(&engine);
+    let recs = generate_records(DatasetKind::MaterialsObservable, 24, 11);
+    let set = embed_records(&enc, ModelKind::Clip, &recs, "it").unwrap();
+    let dim = set.dim();
+    let mut same = Vec::new();
+    let mut diff = Vec::new();
+    for i in 0..set.len() {
+        for j in (i + 1)..set.len() {
+            let d = opdr::metrics::sq_euclidean(set.vector(i), set.vector(j)) as f64;
+            if recs[i].class == recs[j].class {
+                same.push(d);
+            } else {
+                diff.push(d);
+            }
+        }
+    }
+    assert!(!same.is_empty() && !diff.is_empty());
+    let ms = opdr::util::float::mean(&same);
+    let md = opdr::util::float::mean(&diff);
+    assert!(ms < md, "same-class {ms} !< cross-class {md} (dim {dim})");
+}
+
+#[test]
+fn encode_batch_rejects_oversized_batches() {
+    let Some(engine) = engine_or_skip() else { return };
+    let enc = RuntimeEncoder::new(&engine);
+    let recs = generate_records(DatasetKind::Flickr30k, 9, 1); // > ENCODER_BATCH
+    assert!(enc.encode_batch(ModelKind::Bert, &recs).is_err());
+    // And record feature-size mismatches.
+    let mut bad = generate_records(DatasetKind::Flickr30k, 1, 1);
+    bad[0].text.truncate(TEXT_TOKENS * TEXT_FEAT - 1);
+    assert!(enc.encode_batch(ModelKind::Bert, &bad).is_err());
+}
+
+#[test]
+fn engine_validates_shapes_against_manifest() {
+    let Some(engine) = engine_or_skip() else { return };
+    // Wrong arity.
+    assert!(engine.execute("pca_project", &[]).is_err());
+    // Wrong shape.
+    let bad = ArrayF32::zeros(&[1, 1]);
+    assert!(engine.execute("pca_project", &[bad.clone(), bad]).is_err());
+    // Unknown artifact.
+    assert!(engine.execute("nope", &[]).is_err());
+}
