@@ -1,0 +1,154 @@
+//! Index substrate comparison at the planner-chosen dimension.
+//!
+//! The paper's serving story is "reduce the dimension first, then index".
+//! This bench runs the second half: it calibrates the OPDR planner on a
+//! synthetic multimodal set, projects everything to the dimension planned
+//! for A=0.9, then compares the pluggable ANN substrates — exact flat scan,
+//! IVF-Flat, HNSW and HNSW+SQ8 — on recall@10 against exact KNN, query
+//! throughput, build time and resident index bytes.
+//!
+//! Run: `cargo bench --bench index_substrates`
+
+use opdr::bench_support::{section, Bencher};
+use opdr::config::IndexPolicy;
+use opdr::data::{synth, DatasetKind};
+use opdr::index::{build_index, AnnIndex, IndexKind};
+use opdr::knn::knn_indices;
+use opdr::metrics::Metric;
+use opdr::opdr::Planner;
+use opdr::reduction::{Pca, ReducerKind};
+use opdr::report::{write_csv, Table};
+use opdr::util::Stopwatch;
+
+const N: usize = 4000;
+const NQ: usize = 200;
+const DIM: usize = 256;
+const K: usize = 10;
+const CALIB: usize = 200;
+const METRIC: Metric = Metric::SqEuclidean;
+
+fn recall_at_k(
+    idx: &dyn AnnIndex,
+    queries: &[f32],
+    dim: usize,
+    truth: &[Vec<usize>],
+) -> f64 {
+    let mut hits = 0usize;
+    for (qi, want) in truth.iter().enumerate() {
+        let q = &queries[qi * dim..(qi + 1) * dim];
+        let got: std::collections::HashSet<usize> =
+            idx.search(q, K).unwrap().iter().map(|n| n.index).collect();
+        hits += want.iter().filter(|i| got.contains(*i)).count();
+    }
+    hits as f64 / (truth.len() * K) as f64
+}
+
+fn main() {
+    let set = synth::generate(DatasetKind::Flickr30k, N + NQ, DIM, 42);
+    let base_full = &set.data()[..N * DIM];
+    let query_full = &set.data()[N * DIM..];
+
+    // Plan the serving dimension the OPDR way: calibrate on a sample, invert
+    // the closed form for A=0.9.
+    let sample = &base_full[..CALIB * DIM];
+    let planner =
+        Planner::calibrate(sample, DIM, K, METRIC, ReducerKind::Pca, 7).expect("calibrate");
+    let target_dim = planner.dim_for_accuracy(0.9, CALIB).min(DIM);
+    let model = Pca::new().fit(sample, DIM, target_dim).expect("pca fit");
+    let base = model.project(base_full).expect("project base");
+    let queries = model.project(query_full).expect("project queries");
+    let dim = target_dim;
+    section(&format!(
+        "index substrates over {N} vectors at planner-chosen dim {dim} (from {DIM}, A=0.9)"
+    ));
+
+    // Exact ground truth in the reduced space.
+    let truth: Vec<Vec<usize>> = (0..NQ)
+        .map(|qi| {
+            knn_indices(&queries[qi * dim..(qi + 1) * dim], &base, dim, K, METRIC)
+                .unwrap()
+                .into_iter()
+                .map(|n| n.index)
+                .collect()
+        })
+        .collect();
+
+    let substrates: Vec<(&str, IndexPolicy)> = vec![
+        (
+            "exact",
+            IndexPolicy { kind: IndexKind::Exact, exact_threshold: 0, ..Default::default() },
+        ),
+        (
+            "ivf",
+            IndexPolicy {
+                kind: IndexKind::Ivf,
+                exact_threshold: 0,
+                ivf_nlist: 64,
+                ivf_nprobe: 8,
+                ..Default::default()
+            },
+        ),
+        (
+            "hnsw",
+            IndexPolicy { kind: IndexKind::Hnsw, exact_threshold: 0, ..Default::default() },
+        ),
+        (
+            "hnsw+sq8",
+            IndexPolicy {
+                kind: IndexKind::Hnsw,
+                exact_threshold: 0,
+                sq8: true,
+                ..Default::default()
+            },
+        ),
+    ];
+
+    let bencher = Bencher { warmup_iters: 1, iters: 5, max_time: std::time::Duration::from_secs(30) };
+    let mut table =
+        Table::new(&["substrate", "build ms", "recall@10", "qps", "index KiB", "quantized"]);
+    let mut rows = Vec::new();
+    for (name, policy) in &substrates {
+        let sw = Stopwatch::start();
+        let idx = build_index(&base, dim, METRIC, policy, 9).expect("build index");
+        let build_ms = sw.elapsed_ns() / 1e6;
+
+        let recall = recall_at_k(idx.as_ref(), &queries, dim, &truth);
+        let r = bencher.run_items(name, NQ as u64, || {
+            for qi in 0..NQ {
+                let q = &queries[qi * dim..(qi + 1) * dim];
+                let out = idx.search(q, K).unwrap();
+                std::hint::black_box(out.len());
+            }
+        });
+        let qps = r.throughput().unwrap_or(0.0);
+        let kib = idx.memory_bytes() as f64 / 1024.0;
+        table.row(&[
+            name.to_string(),
+            format!("{build_ms:.1}"),
+            format!("{recall:.3}"),
+            format!("{qps:.0}"),
+            format!("{kib:.0}"),
+            idx.quantized().to_string(),
+        ]);
+        rows.push(vec![
+            name.to_string(),
+            format!("{build_ms}"),
+            format!("{recall}"),
+            format!("{qps}"),
+            format!("{kib}"),
+        ]);
+    }
+    println!("{}", table.render());
+    write_csv(
+        "bench_out/index_substrates.csv",
+        &["substrate", "build_ms", "recall_at_10", "qps", "index_kib"],
+        &rows,
+    )
+    .expect("csv");
+
+    println!(
+        "\nreading: exact is the recall ceiling and the QPS floor; IVF trades recall\n\
+         for probe-bounded scans; HNSW holds recall near 1.0 at graph-walk cost;\n\
+         SQ8 shrinks the resident copy ~4x with a small asymmetric-distance penalty."
+    );
+}

@@ -3,6 +3,7 @@
 use crate::config::toml::{parse_toml, TomlValue};
 use crate::data::DatasetKind;
 use crate::error::{OpdrError, Result};
+use crate::index::IndexKind;
 use crate::metrics::Metric;
 use crate::reduction::ReducerKind;
 
@@ -201,6 +202,67 @@ fn get_str<'a>(root: &'a TomlValue, key: &str) -> Result<&'a str> {
         .ok_or_else(|| OpdrError::config(format!("missing string key `{key}`")))
 }
 
+/// How the coordinator picks and parameterizes the ANN substrate for a
+/// collection (see [`crate::index`]). Assembled from [`ServeConfig`] via
+/// [`ServeConfig::index_policy`] and consumed by
+/// [`crate::index::build_index`].
+#[derive(Debug, Clone)]
+pub struct IndexPolicy {
+    /// Structure for collections at or above `exact_threshold`.
+    pub kind: IndexKind,
+    /// Collections smaller than this always get an exact flat index.
+    pub exact_threshold: usize,
+    /// Store vectors SQ8-quantized (≈4× smaller serving copy).
+    pub sq8: bool,
+    /// IVF: number of k-means cells.
+    pub ivf_nlist: usize,
+    /// IVF: cells probed per query.
+    pub ivf_nprobe: usize,
+    /// IVF: Lloyd iterations when training the coarse quantizer.
+    pub ivf_train_iters: usize,
+    /// HNSW: max links per node (layer 0 allows 2×).
+    pub hnsw_m: usize,
+    /// HNSW: construction beam width.
+    pub hnsw_ef_construction: usize,
+    /// HNSW: search beam width.
+    pub hnsw_ef_search: usize,
+}
+
+impl Default for IndexPolicy {
+    fn default() -> Self {
+        IndexPolicy {
+            kind: IndexKind::Ivf,
+            exact_threshold: 4096,
+            sq8: false,
+            ivf_nlist: 64,
+            ivf_nprobe: 8,
+            ivf_train_iters: 10,
+            hnsw_m: 16,
+            hnsw_ef_construction: 100,
+            hnsw_ef_search: 64,
+        }
+    }
+}
+
+impl IndexPolicy {
+    /// Validate invariants.
+    pub fn validate(&self) -> Result<()> {
+        if self.ivf_nlist == 0 {
+            return Err(OpdrError::config("index: ivf_nlist must be >= 1"));
+        }
+        if self.ivf_nprobe == 0 || self.ivf_nprobe > self.ivf_nlist {
+            return Err(OpdrError::config("index: ivf_nprobe must be in [1, ivf_nlist]"));
+        }
+        if self.hnsw_m < 2 {
+            return Err(OpdrError::config("index: hnsw_m must be >= 2"));
+        }
+        if self.hnsw_ef_construction == 0 || self.hnsw_ef_search == 0 {
+            return Err(OpdrError::config("index: hnsw beam widths must be >= 1"));
+        }
+        Ok(())
+    }
+}
+
 /// Serving configuration for the coordinator.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -218,12 +280,23 @@ pub struct ServeConfig {
     pub use_runtime: bool,
     /// Artifacts directory.
     pub artifacts_dir: String,
-    /// Collections above this size are served by an IVF index.
+    /// Collections above this size are served by an ANN index (below it the
+    /// index subsystem falls back to an exact flat scan).
     pub ivf_threshold: usize,
     /// IVF cells and probes.
     pub ivf_nlist: usize,
     /// Number of IVF cells probed per query.
     pub ivf_nprobe: usize,
+    /// ANN structure for indexed collections ("exact" | "ivf" | "hnsw").
+    pub index_kind: IndexKind,
+    /// Store indexed vectors SQ8-quantized.
+    pub index_sq8: bool,
+    /// HNSW max links per node.
+    pub hnsw_m: usize,
+    /// HNSW construction beam width.
+    pub hnsw_ef_construction: usize,
+    /// HNSW search beam width.
+    pub hnsw_ef_search: usize,
 }
 
 impl Default for ServeConfig {
@@ -239,6 +312,11 @@ impl Default for ServeConfig {
             ivf_threshold: 4096,
             ivf_nlist: 64,
             ivf_nprobe: 8,
+            index_kind: IndexKind::Ivf,
+            index_sq8: false,
+            hnsw_m: 16,
+            hnsw_ef_construction: 100,
+            hnsw_ef_search: 64,
         }
     }
 }
@@ -270,6 +348,24 @@ impl ServeConfig {
                     "ivf_threshold" => cfg.ivf_threshold = pos_int(val, "serve", key)?,
                     "ivf_nlist" => cfg.ivf_nlist = pos_int(val, "serve", key)?,
                     "ivf_nprobe" => cfg.ivf_nprobe = pos_int(val, "serve", key)?,
+                    "index_kind" => {
+                        let s = val.as_str().ok_or_else(|| {
+                            OpdrError::config("serve.index_kind must be a string")
+                        })?;
+                        cfg.index_kind = IndexKind::parse(s).ok_or_else(|| {
+                            OpdrError::config(format!("serve: unknown index kind `{s}`"))
+                        })?;
+                    }
+                    "index_sq8" => {
+                        cfg.index_sq8 = val
+                            .as_bool()
+                            .ok_or_else(|| OpdrError::config("serve.index_sq8 must be a bool"))?
+                    }
+                    "hnsw_m" => cfg.hnsw_m = pos_int(val, "serve", key)?,
+                    "hnsw_ef_construction" => {
+                        cfg.hnsw_ef_construction = pos_int(val, "serve", key)?
+                    }
+                    "hnsw_ef_search" => cfg.hnsw_ef_search = pos_int(val, "serve", key)?,
                     other => {
                         return Err(OpdrError::config(format!("serve: unknown key `{other}`")))
                     }
@@ -297,7 +393,23 @@ impl ServeConfig {
         if self.ivf_nprobe > self.ivf_nlist {
             return Err(OpdrError::config("serve.ivf_nprobe must be <= ivf_nlist"));
         }
-        Ok(())
+        self.index_policy().validate()
+    }
+
+    /// Assemble the [`IndexPolicy`] the coordinator hands to
+    /// [`crate::index::build_index`].
+    pub fn index_policy(&self) -> IndexPolicy {
+        IndexPolicy {
+            kind: self.index_kind,
+            exact_threshold: self.ivf_threshold,
+            sq8: self.index_sq8,
+            ivf_nlist: self.ivf_nlist,
+            ivf_nprobe: self.ivf_nprobe,
+            ivf_train_iters: 10,
+            hnsw_m: self.hnsw_m,
+            hnsw_ef_construction: self.hnsw_ef_construction,
+            hnsw_ef_search: self.hnsw_ef_search,
+        }
     }
 }
 
@@ -374,5 +486,34 @@ k = 5
         assert!(ServeConfig::from_toml_str("[serve]\nworkers = 0").is_err());
         assert!(ServeConfig::from_toml_str("[serve]\nqueue_capacity = 1\nmax_batch = 32").is_err());
         assert!(ServeConfig::from_toml_str("[serve]\nivf_nprobe = 100\nivf_nlist = 4").is_err());
+    }
+
+    #[test]
+    fn serve_index_policy_keys() {
+        let cfg = ServeConfig::from_toml_str(
+            "[serve]\nindex_kind = \"hnsw\"\nindex_sq8 = true\nhnsw_m = 8\nhnsw_ef_search = 200\nivf_threshold = 100",
+        )
+        .unwrap();
+        assert_eq!(cfg.index_kind, IndexKind::Hnsw);
+        assert!(cfg.index_sq8);
+        let p = cfg.index_policy();
+        assert_eq!(p.kind, IndexKind::Hnsw);
+        assert!(p.sq8);
+        assert_eq!(p.hnsw_m, 8);
+        assert_eq!(p.hnsw_ef_search, 200);
+        assert_eq!(p.exact_threshold, 100);
+        // Defaults flow through untouched keys.
+        assert_eq!(p.hnsw_ef_construction, 100);
+        assert_eq!(ServeConfig::from_toml_str("").unwrap().index_kind, IndexKind::Ivf);
+    }
+
+    #[test]
+    fn serve_index_policy_validation() {
+        assert!(ServeConfig::from_toml_str("[serve]\nindex_kind = \"quantum\"").is_err());
+        assert!(ServeConfig::from_toml_str("[serve]\nhnsw_m = 1").is_err());
+        assert!(ServeConfig::from_toml_str("[serve]\nhnsw_ef_search = 0").is_err());
+        assert!(ServeConfig::from_toml_str("[serve]\nindex_sq8 = 3").is_err());
+        let p = IndexPolicy { ivf_nprobe: 0, ..Default::default() };
+        assert!(p.validate().is_err());
     }
 }

@@ -5,6 +5,7 @@ use crate::coordinator::batcher::{collect_batch, BatchPolicy, CollectOutcome};
 use crate::coordinator::pool::ThreadPool;
 use crate::coordinator::state::Collections;
 use crate::error::{OpdrError, Result};
+use crate::index::AnnIndex as _;
 use crate::knn::Neighbor;
 use crate::metrics::Metric;
 use crate::runtime::Engine;
@@ -41,6 +42,8 @@ enum AdminOp {
     Ingest { collection: String, vectors: Vec<f32> },
     BuildReduced { collection: String, target_accuracy: f64, k: usize },
     BuildIndex { collection: String },
+    SaveIndex { collection: String, path: String },
+    LoadIndex { collection: String, path: String },
     Stats,
 }
 
@@ -119,9 +122,23 @@ impl Coordinator {
             .map_err(|_| OpdrError::coordinator("bad build_reduced response"))
     }
 
-    /// Build the IVF index on the current serving vectors.
+    /// Build the ANN index on the current serving vectors (substrate chosen
+    /// by the configured [`crate::config::IndexPolicy`]).
     pub fn build_index(&self, collection: &str) -> Result<()> {
         self.admin(AdminOp::BuildIndex { collection: collection.into() }).map(|_| ())
+    }
+
+    /// Persist a collection's built index as an `OPDR` index segment.
+    pub fn save_index(&self, collection: &str, path: &str) -> Result<()> {
+        self.admin(AdminOp::SaveIndex { collection: collection.into(), path: path.into() })
+            .map(|_| ())
+    }
+
+    /// Load a previously saved index segment into a collection (validated
+    /// against its current serving vectors).
+    pub fn load_index(&self, collection: &str, path: &str) -> Result<()> {
+        self.admin(AdminOp::LoadIndex { collection: collection.into(), path: path.into() })
+            .map(|_| ())
     }
 
     /// Human-readable stats snapshot.
@@ -229,7 +246,7 @@ fn scheduler_loop(rx: Receiver<Request>, cfg: ServeConfig, metrics: Arc<Metrics>
             }
         }
         if !searches.is_empty() {
-            execute_search_batch(searches, &collections, &pool, engine.as_ref(), &cfg, &metrics);
+            execute_search_batch(searches, &collections, &pool, engine.as_ref(), &metrics);
         }
         if stop {
             break;
@@ -256,14 +273,23 @@ fn handle_admin(
             let c = collections.get_mut(&collection)?;
             let r = c.build_reduced(target_accuracy, k, 64, 0xC0DE)?;
             let dim = r.model.target_dim();
-            // Re-index if the collection is large enough.
+            // Re-index if the collection is large enough for the policy's
+            // ANN substrate to pay off.
             if c.len() >= cfg.ivf_threshold {
-                c.build_index(cfg.ivf_nlist, 0xC0DE)?;
+                c.build_index(&cfg.index_policy(), 0xC0DE)?;
             }
             Ok(dim.to_string())
         }
         AdminOp::BuildIndex { collection } => {
-            collections.get_mut(&collection)?.build_index(cfg.ivf_nlist, 0xC0DE)?;
+            collections.get_mut(&collection)?.build_index(&cfg.index_policy(), 0xC0DE)?;
+            Ok("ok".into())
+        }
+        AdminOp::SaveIndex { collection, path } => {
+            collections.get(&collection)?.save_index(&path)?;
+            Ok("ok".into())
+        }
+        AdminOp::LoadIndex { collection, path } => {
+            collections.get_mut(&collection)?.load_index(&path)?;
             Ok("ok".into())
         }
         AdminOp::Stats => {
@@ -271,12 +297,20 @@ fn handle_admin(
             for name in collections.names() {
                 let c = collections.get(&name)?;
                 let (_, sdim) = c.serving_vectors();
+                let indexed = match &c.index {
+                    Some(ix) => format!(
+                        "true kind={} quantized={} index_bytes={}",
+                        ix.kind().name(),
+                        ix.quantized(),
+                        ix.memory_bytes()
+                    ),
+                    None => "false".to_string(),
+                };
                 out.push_str(&format!(
-                    "collection {name}: n={} dim={} serving_dim={} indexed={}\n",
+                    "collection {name}: n={} dim={} serving_dim={} indexed={indexed}\n",
                     c.len(),
                     c.dim,
                     sdim,
-                    c.index.is_some()
                 ));
             }
             out.push_str(&format!(
@@ -298,7 +332,6 @@ fn execute_search_batch(
     collections: &Collections,
     pool: &ThreadPool,
     engine: Option<&Engine>,
-    cfg: &ServeConfig,
     metrics: &Metrics,
 ) {
     metrics.batches.inc();
@@ -369,17 +402,16 @@ fn execute_search_batch(
         let vecs_arc: Arc<Vec<f32>> = coll.serving_arc();
         let metric = coll.metric;
         let has_index = coll.index.is_some();
-        let nprobe = cfg.ivf_nprobe;
         let results: Vec<Vec<Result<SearchResult>>> = if has_index {
-            // Index search is cheap; do it inline (index isn't Send-shareable
-            // without cloning the whole thing).
+            // Index search is cheap (sub-linear probes/beams); do it inline
+            // rather than fanning out to the pool.
             vec![shared
                 .iter()
                 .map(|(q, k)| {
                     if q.is_empty() {
                         Err(OpdrError::shape("query projection failed"))
                     } else {
-                        coll.search_projected(q, *k, nprobe)
+                        coll.search_projected(q, *k)
                             .map(|neighbors| SearchResult { neighbors, scored_dim: sdim })
                     }
                 })

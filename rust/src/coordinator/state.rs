@@ -1,8 +1,10 @@
 //! Collection state: vectors, fitted reducers, optional ANN index.
 
+use crate::config::IndexPolicy;
 use crate::data::EmbeddingSet;
 use crate::error::{OpdrError, Result};
-use crate::knn::{IvfFlatIndex, Neighbor};
+use crate::index::AnnIndex;
+use crate::knn::Neighbor;
 use crate::metrics::Metric;
 use crate::opdr::Planner;
 use crate::reduction::{Pca, PcaModel, ReducerKind};
@@ -36,8 +38,9 @@ pub struct Collection {
     pub metric: Metric,
     /// OPDR-reduced serving state, if built.
     pub reduced: Option<ReducedState>,
-    /// IVF index over the active serving vectors (built past a threshold).
-    pub index: Option<IvfFlatIndex>,
+    /// ANN index over the active serving vectors (substrate chosen by the
+    /// configured [`IndexPolicy`]: exact / IVF-Flat / HNSW, optionally SQ8).
+    pub index: Option<Box<dyn AnnIndex>>,
     /// Shared snapshot of the serving vectors for worker threads (perf-pass
     /// L3-2: avoids cloning the whole block every batch). Invalidated on
     /// ingest / build_reduced.
@@ -190,13 +193,59 @@ impl Collection {
         Ok(self.reduced.as_ref().unwrap())
     }
 
-    /// Build (or rebuild) the IVF index over the active serving vectors.
-    pub fn build_index(&mut self, nlist: usize, seed: u64) -> Result<()> {
+    /// Build (or rebuild) the ANN index over the active serving vectors,
+    /// with the substrate chosen by `policy` (exact below its threshold,
+    /// then IVF/HNSW, optionally SQ8-quantized).
+    pub fn build_index(&mut self, policy: &IndexPolicy, seed: u64) -> Result<()> {
         let (vecs, dim) = self.serving_vectors();
         if vecs.is_empty() {
             return Err(OpdrError::data("build_index: empty collection"));
         }
-        self.index = Some(IvfFlatIndex::build(vecs, dim, self.metric, nlist, 10, seed)?);
+        self.index = Some(crate::index::build_index(vecs, dim, self.metric, policy, seed)?);
+        Ok(())
+    }
+
+    /// Persist the built index as an `OPDR` index segment.
+    pub fn save_index(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let index = self.index.as_deref().ok_or_else(|| {
+            OpdrError::coordinator(format!("collection `{}` has no index to save", self.name))
+        })?;
+        crate::data::store::save_index(index, path)
+    }
+
+    /// Load a previously saved index segment, validating it against the
+    /// current serving vectors (same count and dimensionality — an index
+    /// built for different data must never silently serve it).
+    pub fn load_index(&mut self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let index = crate::data::store::load_index(path)?;
+        let (vecs, dim) = self.serving_vectors();
+        let n = vecs.len() / dim.max(1);
+        if index.dim() != dim || index.len() != n {
+            return Err(OpdrError::coordinator(format!(
+                "collection `{}`: loaded index is {}x{} but serving state is {}x{}",
+                self.name,
+                index.len(),
+                index.dim(),
+                n,
+                dim
+            )));
+        }
+        if index.metric() != self.metric {
+            return Err(OpdrError::coordinator(format!(
+                "collection `{}`: loaded index metric {} != collection metric {}",
+                self.name,
+                index.metric().name(),
+                self.metric.name()
+            )));
+        }
+        if !index.matches_data(vecs) {
+            return Err(OpdrError::coordinator(format!(
+                "collection `{}`: loaded index was built from different vectors \
+                 than the current serving state",
+                self.name
+            )));
+        }
+        self.index = Some(index);
         Ok(())
     }
 
@@ -224,15 +273,16 @@ impl Collection {
         }
     }
 
-    /// Exact (or IVF-approximate, if indexed) k-NN search for a single
-    /// *already-projected* query.
-    pub fn search_projected(&self, query: &[f32], k: usize, nprobe: usize) -> Result<Vec<Neighbor>> {
+    /// Exact (or index-approximate, if indexed) k-NN search for a single
+    /// *already-projected* query. Probe widths / beam sizes are baked into
+    /// the index at build time by the [`IndexPolicy`].
+    pub fn search_projected(&self, query: &[f32], k: usize) -> Result<Vec<Neighbor>> {
         let (vecs, dim) = self.serving_vectors();
         if query.len() != dim {
             return Err(OpdrError::shape("search: projected query dim mismatch"));
         }
         if let Some(index) = &self.index {
-            index.search(query, k, nprobe)
+            index.search(query, k)
         } else {
             crate::knn::knn_indices(query, vecs, dim, k, self.metric)
         }
@@ -323,7 +373,7 @@ mod tests {
         // full-dim form should be itself.
         let q_full: Vec<f32> = c.data()[..64].to_vec();
         let q = c.project_query(&q_full).unwrap();
-        let hits = c.search_projected(&q, 3, 1).unwrap();
+        let hits = c.search_projected(&q, 3).unwrap();
         assert_eq!(hits[0].index, 0);
     }
 
@@ -335,7 +385,7 @@ mod tests {
         let full = crate::knn::knn_indices(&q, c.data(), 64, 10, Metric::SqEuclidean).unwrap();
         c.build_reduced(0.9, 10, 60, 2).unwrap();
         let qp = c.project_query(&q).unwrap();
-        let red = c.search_projected(&qp, 10, 1).unwrap();
+        let red = c.search_projected(&qp, 10).unwrap();
         let full_set: std::collections::HashSet<usize> = full.iter().map(|n| n.index).collect();
         let hits = red.iter().filter(|n| full_set.contains(&n.index)).count();
         assert!(hits >= 5, "recall too low: {hits}/10");
@@ -353,11 +403,93 @@ mod tests {
     #[test]
     fn index_path_used_when_built() {
         let mut c = seeded_collection(100, 16);
-        c.build_index(8, 3).unwrap();
+        let policy = IndexPolicy {
+            exact_threshold: 10,
+            ivf_nlist: 8,
+            ivf_nprobe: 8,
+            ..Default::default()
+        };
+        c.build_index(&policy, 3).unwrap();
         assert!(c.index.is_some());
+        assert_eq!(c.index.as_ref().unwrap().kind(), crate::index::IndexKind::Ivf);
         let q: Vec<f32> = c.data()[..16].to_vec();
-        let hits = c.search_projected(&q, 5, 8).unwrap();
+        let hits = c.search_projected(&q, 5).unwrap();
         assert_eq!(hits[0].index, 0);
+    }
+
+    #[test]
+    fn policy_selects_exact_below_threshold_and_hnsw_above() {
+        let mut c = seeded_collection(80, 16);
+        let policy = IndexPolicy {
+            kind: crate::index::IndexKind::Hnsw,
+            exact_threshold: 1000,
+            ..Default::default()
+        };
+        c.build_index(&policy, 1).unwrap();
+        assert_eq!(c.index.as_ref().unwrap().kind(), crate::index::IndexKind::Exact);
+
+        let policy = IndexPolicy { exact_threshold: 10, ..policy };
+        c.build_index(&policy, 1).unwrap();
+        let idx = c.index.as_ref().unwrap();
+        assert_eq!(idx.kind(), crate::index::IndexKind::Hnsw);
+        let q: Vec<f32> = c.data()[3 * 16..4 * 16].to_vec();
+        let hits = c.search_projected(&q, 5).unwrap();
+        assert_eq!(hits[0].index, 3);
+    }
+
+    #[test]
+    fn index_save_load_roundtrip_with_validation() {
+        let dir = std::env::temp_dir().join(format!("opdr_state_idx_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.opdx");
+
+        let mut c = seeded_collection(120, 16);
+        let policy = IndexPolicy {
+            kind: crate::index::IndexKind::Hnsw,
+            exact_threshold: 10,
+            sq8: true,
+            ..Default::default()
+        };
+        c.build_index(&policy, 7).unwrap();
+        let q: Vec<f32> = c.data()[5 * 16..6 * 16].to_vec();
+        let before = c.search_projected(&q, 6).unwrap();
+        c.save_index(&path).unwrap();
+
+        // Fresh collection over the same data loads and serves identically.
+        let mut c2 = seeded_collection(120, 16);
+        c2.load_index(&path).unwrap();
+        let after = c2.search_projected(&q, 6).unwrap();
+        assert_eq!(before.len(), after.len());
+        for (a, b) in before.iter().zip(&after) {
+            assert_eq!(a.index, b.index);
+            assert_eq!(a.distance.to_bits(), b.distance.to_bits());
+        }
+
+        // A mismatched collection refuses the segment.
+        let mut c3 = seeded_collection(60, 16);
+        let e = c3.load_index(&path).unwrap_err().to_string();
+        assert!(e.contains("serving state"), "{e}");
+
+        // Same shape but different data must also be refused.
+        let set = synth::generate(DatasetKind::MaterialsObservable, 120, 16, 999);
+        let mut c4 = Collection::new("other-data", 16, Metric::SqEuclidean).unwrap();
+        c4.ingest(set.data()).unwrap();
+        let e = c4.load_index(&path).unwrap_err().to_string();
+        assert!(e.contains("different vectors"), "{e}");
+
+        // No index → save errors.
+        assert!(c3.save_index(dir.join("none.opdx")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn ingest_invalidates_index() {
+        let mut c = seeded_collection(50, 8);
+        let policy = IndexPolicy { exact_threshold: 0, ..Default::default() };
+        c.build_index(&policy, 1).unwrap();
+        assert!(c.index.is_some());
+        c.ingest(&vec![0.0; 8]).unwrap();
+        assert!(c.index.is_none());
     }
 
     #[test]

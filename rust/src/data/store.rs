@@ -1,18 +1,28 @@
-//! Binary embedding store.
+//! Binary embedding + index store.
 //!
 //! Persists [`EmbeddingSet`]s between pipeline stages (extract → reduce →
-//! serve) without `serde`: a small versioned little-endian format.
+//! serve) and ANN index segments (so `BuildReduced`-built graphs and SQ8
+//! codebooks survive restarts) without `serde`: a small versioned
+//! little-endian format. The version field doubles as the segment type:
 //!
-//! Layout: magic `OPDR` | u32 version | u32 label_len | label bytes |
-//! u64 n | u64 dim | n·dim f32 payload.
+//! * version 1 — embedding set: magic `OPDR` | u32 1 | u32 label_len |
+//!   label bytes | u64 n | u64 dim | n·dim f32 payload;
+//! * version 2 — index segment: magic `OPDR` | u32 2 | u32 index-kind tag |
+//!   kind-specific payload (see [`crate::index`]).
+//!
+//! Readers reject the other segment type with a descriptive error instead of
+//! misparsing it.
 
 use crate::data::EmbeddingSet;
 use crate::error::{OpdrError, Result};
+use crate::index::io::{read_u32, read_u64};
+use crate::index::AnnIndex;
 use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"OPDR";
 const VERSION: u32 = 1;
+const INDEX_VERSION: u32 = 2;
 
 /// Serialize an embedding set to a writer.
 pub fn write_embeddings<W: Write>(set: &EmbeddingSet, w: &mut W) -> Result<()> {
@@ -37,8 +47,15 @@ pub fn read_embeddings<R: Read>(r: &mut R) -> Result<EmbeddingSet> {
         return Err(OpdrError::data("store: bad magic"));
     }
     let version = read_u32(r)?;
+    if version == INDEX_VERSION {
+        return Err(OpdrError::data(
+            "store: file holds an index segment, not an embedding set (use load_index)",
+        ));
+    }
     if version != VERSION {
-        return Err(OpdrError::data(format!("store: unsupported version {version}")));
+        return Err(OpdrError::data(format!(
+            "store: unsupported version {version} (embedding sets are version {VERSION})"
+        )));
     }
     let label_len = read_u32(r)? as usize;
     if label_len > 1 << 20 {
@@ -82,16 +99,48 @@ pub fn load(path: impl AsRef<Path>) -> Result<EmbeddingSet> {
     read_embeddings(&mut f)
 }
 
-fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
-    let mut b = [0u8; 4];
-    r.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
+/// Serialize an ANN index as an `OPDR` version-2 index segment.
+pub fn write_index<W: Write>(index: &dyn AnnIndex, w: &mut W) -> Result<()> {
+    w.write_all(MAGIC)?;
+    w.write_all(&INDEX_VERSION.to_le_bytes())?;
+    w.write_all(&index.kind().tag().to_le_bytes())?;
+    index.write_to(w)
 }
 
-fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
-    let mut b = [0u8; 8];
-    r.read_exact(&mut b)?;
-    Ok(u64::from_le_bytes(b))
+/// Deserialize an ANN index from an `OPDR` version-2 index segment.
+pub fn read_index<R: Read>(r: &mut R) -> Result<Box<dyn AnnIndex>> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(OpdrError::data("store: bad magic"));
+    }
+    let version = read_u32(r)?;
+    if version == VERSION {
+        return Err(OpdrError::data(
+            "store: file holds an embedding set, not an index segment (use load)",
+        ));
+    }
+    if version != INDEX_VERSION {
+        return Err(OpdrError::data(format!(
+            "store: unsupported version {version} (index segments are version {INDEX_VERSION})"
+        )));
+    }
+    let kind_tag = read_u32(r)?;
+    crate::index::read_index_payload(kind_tag, r)
+}
+
+/// Save an index to a file path.
+pub fn save_index(index: &dyn AnnIndex, path: impl AsRef<Path>) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    write_index(index, &mut f)?;
+    f.flush()?;
+    Ok(())
+}
+
+/// Load an index from a file path.
+pub fn load_index(path: impl AsRef<Path>) -> Result<Box<dyn AnnIndex>> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    read_index(&mut f)
 }
 
 #[cfg(test)]
@@ -146,5 +195,144 @@ mod tests {
         let back = read_embeddings(&mut buf.as_slice()).unwrap();
         assert_eq!(back.len(), 0);
         assert_eq!(back.dim(), 8);
+    }
+
+    #[test]
+    fn truncated_header_rejected_at_every_cut() {
+        let set = synth::generate(DatasetKind::Esc50, 2, 4, 1);
+        let mut buf = Vec::new();
+        write_embeddings(&set, &mut buf).unwrap();
+        // Empty file, partial magic, cut inside version, label and counts:
+        // every prefix of the header must fail cleanly, never panic.
+        for cut in [0usize, 2, 5, 9, 14, 20] {
+            assert!(
+                read_embeddings(&mut &buf[..cut.min(buf.len())]).is_err(),
+                "cut at {cut} accepted"
+            );
+        }
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let set = synth::generate(DatasetKind::Esc50, 2, 4, 1);
+        let mut buf = Vec::new();
+        write_embeddings(&set, &mut buf).unwrap();
+        let mut bad = buf.clone();
+        bad[..4].copy_from_slice(b"NOPE");
+        let e = read_embeddings(&mut bad.as_slice()).unwrap_err().to_string();
+        assert!(e.contains("bad magic"), "{e}");
+    }
+
+    #[test]
+    fn unsupported_version_message_names_the_version() {
+        let set = synth::generate(DatasetKind::Esc50, 2, 4, 1);
+        let mut buf = Vec::new();
+        write_embeddings(&set, &mut buf).unwrap();
+        buf[4..8].copy_from_slice(&99u32.to_le_bytes());
+        let e = read_embeddings(&mut buf.as_slice()).unwrap_err().to_string();
+        assert!(e.contains("version 99"), "{e}");
+    }
+
+    #[test]
+    fn label_roundtrips_including_unicode_and_empty() {
+        for label in ["", "plain", "µ-measure/Δdim — 測定"] {
+            let set = EmbeddingSet::new(label, 3, vec![0.5; 6]).unwrap();
+            let mut buf = Vec::new();
+            write_embeddings(&set, &mut buf).unwrap();
+            let back = read_embeddings(&mut buf.as_slice()).unwrap();
+            assert_eq!(back.label(), label);
+        }
+        // Invalid UTF-8 in the label region must error, not mangle.
+        let set = EmbeddingSet::new("ab", 2, vec![0.0; 4]).unwrap();
+        let mut buf = Vec::new();
+        write_embeddings(&set, &mut buf).unwrap();
+        buf[12] = 0xFF; // first label byte (magic 4 + version 4 + label_len 4)
+        let e = read_embeddings(&mut buf.as_slice()).unwrap_err().to_string();
+        assert!(e.contains("UTF-8"), "{e}");
+    }
+
+    #[test]
+    fn index_segment_roundtrips_for_every_kind() {
+        use crate::config::IndexPolicy;
+        use crate::index::IndexKind;
+        let set = synth::generate(DatasetKind::Flickr30k, 120, 12, 7);
+        for (kind, sq8) in [
+            (IndexKind::Exact, false),
+            (IndexKind::Ivf, false),
+            (IndexKind::Hnsw, false),
+            (IndexKind::Hnsw, true),
+        ] {
+            let policy = IndexPolicy { kind, exact_threshold: 0, sq8, ..Default::default() };
+            let idx = crate::index::build_index(
+                set.data(),
+                set.dim(),
+                crate::metrics::Metric::SqEuclidean,
+                &policy,
+                3,
+            )
+            .unwrap();
+            let mut buf = Vec::new();
+            write_index(idx.as_ref(), &mut buf).unwrap();
+            let back = read_index(&mut buf.as_slice()).unwrap();
+            assert_eq!(back.kind(), kind);
+            assert_eq!(back.len(), idx.len());
+            assert_eq!(back.dim(), idx.dim());
+            assert_eq!(back.quantized(), sq8);
+            let q = set.vector(5);
+            let a = idx.search(q, 5).unwrap();
+            let b = back.search(q, 5).unwrap();
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.index, y.index);
+                assert_eq!(x.distance.to_bits(), y.distance.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn index_and_embedding_segments_not_confusable() {
+        use crate::config::IndexPolicy;
+        let set = synth::generate(DatasetKind::Esc50, 30, 6, 2);
+        let policy = IndexPolicy { exact_threshold: 0, ..Default::default() };
+        let idx = crate::index::build_index(
+            set.data(),
+            set.dim(),
+            crate::metrics::Metric::Euclidean,
+            &policy,
+            1,
+        )
+        .unwrap();
+
+        let mut idx_buf = Vec::new();
+        write_index(idx.as_ref(), &mut idx_buf).unwrap();
+        let e = read_embeddings(&mut idx_buf.as_slice()).unwrap_err().to_string();
+        assert!(e.contains("index segment"), "{e}");
+
+        let mut emb_buf = Vec::new();
+        write_embeddings(&set, &mut emb_buf).unwrap();
+        let e = read_index(&mut emb_buf.as_slice()).unwrap_err().to_string();
+        assert!(e.contains("embedding set"), "{e}");
+    }
+
+    #[test]
+    fn index_file_save_load() {
+        use crate::config::IndexPolicy;
+        let set = synth::generate(DatasetKind::Flickr30k, 50, 8, 4);
+        let policy = IndexPolicy { exact_threshold: 0, ..Default::default() };
+        let idx = crate::index::build_index(
+            set.data(),
+            set.dim(),
+            crate::metrics::Metric::SqEuclidean,
+            &policy,
+            2,
+        )
+        .unwrap();
+        let dir = std::env::temp_dir().join(format!("opdr_idx_store_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.opdx");
+        save_index(idx.as_ref(), &path).unwrap();
+        let back = load_index(&path).unwrap();
+        assert_eq!(back.len(), 50);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,45 +1,71 @@
 //! Unified error type for the OPDR crate.
+//!
+//! Hand-rolled `Display`/`Error` impls (the offline registry has no
+//! `thiserror`); the message format is `<kind> error: <detail>` everywhere so
+//! tests and operators can match on either part.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, OpdrError>;
 
 /// Unified error type covering configuration, linear algebra, runtime (PJRT)
 /// and coordinator failures.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum OpdrError {
     /// Configuration file / CLI errors.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Shape or argument mismatch in numeric code.
-    #[error("shape error: {0}")]
     Shape(String),
 
     /// Numerical failure (non-convergence, singular input, NaN).
-    #[error("numeric error: {0}")]
     Numeric(String),
 
     /// Dataset / embedding-store errors.
-    #[error("data error: {0}")]
     Data(String),
 
     /// PJRT runtime / artifact errors.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Coordinator / serving errors.
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
     /// Underlying XLA error.
-    #[error("xla error: {0}")]
     Xla(String),
 
     /// I/O error.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for OpdrError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            OpdrError::Config(m) => write!(f, "config error: {m}"),
+            OpdrError::Shape(m) => write!(f, "shape error: {m}"),
+            OpdrError::Numeric(m) => write!(f, "numeric error: {m}"),
+            OpdrError::Data(m) => write!(f, "data error: {m}"),
+            OpdrError::Runtime(m) => write!(f, "runtime error: {m}"),
+            OpdrError::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            OpdrError::Xla(m) => write!(f, "xla error: {m}"),
+            OpdrError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for OpdrError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            OpdrError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for OpdrError {
+    fn from(e: std::io::Error) -> Self {
+        OpdrError::Io(e)
+    }
 }
 
 impl From<xla::Error> for OpdrError {
@@ -92,5 +118,13 @@ mod tests {
         let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
         let e: OpdrError = io.into();
         assert!(matches!(e, OpdrError::Io(_)));
+    }
+
+    #[test]
+    fn io_source_preserved() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: OpdrError = io.into();
+        assert!(std::error::Error::source(&e).is_some());
+        assert!(std::error::Error::source(&OpdrError::shape("x")).is_none());
     }
 }

@@ -1,0 +1,164 @@
+//! Exact flat index: exhaustive scan over a [`VectorStore`].
+//!
+//! The ground-truth substrate of the subsystem, and the automatic choice for
+//! small collections where ANN structures cost more than they save. With SQ8
+//! storage it becomes "exact over quantized vectors" — the same scan order
+//! and tie-breaking, 4× less resident memory.
+
+use crate::error::{OpdrError, Result};
+use crate::index::{io, AnnIndex, IndexKind, VectorStore};
+use crate::knn::topk::top_k_smallest;
+use crate::knn::Neighbor;
+use crate::metrics::Metric;
+use std::io::{Read, Write};
+
+/// Exhaustive-scan index.
+#[derive(Debug, Clone)]
+pub struct ExactIndex {
+    metric: Metric,
+    store: VectorStore,
+}
+
+impl ExactIndex {
+    /// Build over row-major `data`, optionally SQ8-quantized.
+    pub fn build(data: &[f32], dim: usize, metric: Metric, sq8: bool) -> Result<ExactIndex> {
+        let store = VectorStore::build(data, dim, sq8)?;
+        if store.is_empty() {
+            return Err(OpdrError::data("exact index: empty data"));
+        }
+        Ok(ExactIndex { metric, store })
+    }
+
+    /// Deserialize (payload written by [`AnnIndex::write_to`]).
+    pub(crate) fn read_from(r: &mut dyn Read) -> Result<ExactIndex> {
+        let metric = io::metric_from_tag(io::read_u8(r)?)?;
+        let store = VectorStore::read_from(r)?;
+        Ok(ExactIndex { metric, store })
+    }
+}
+
+impl AnnIndex for ExactIndex {
+    fn kind(&self) -> IndexKind {
+        IndexKind::Exact
+    }
+
+    fn len(&self) -> usize {
+        self.store.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.store.dim()
+    }
+
+    fn metric(&self) -> Metric {
+        self.metric
+    }
+
+    fn quantized(&self) -> bool {
+        self.store.quantized()
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.store.memory_bytes()
+    }
+
+    fn matches_data(&self, data: &[f32]) -> bool {
+        self.store.matches(data)
+    }
+
+    fn search(&self, query: &[f32], k: usize) -> Result<Vec<Neighbor>> {
+        if query.len() != self.dim() {
+            return Err(OpdrError::shape(format!(
+                "exact search: query dim {} != index dim {}",
+                query.len(),
+                self.dim()
+            )));
+        }
+        let n = self.len();
+        let mut scratch = Vec::new();
+        let dists: Vec<f32> =
+            (0..n).map(|id| self.store.distance(self.metric, query, id, &mut scratch)).collect();
+        Ok(top_k_smallest(&dists, k)
+            .into_iter()
+            .map(|(index, distance)| Neighbor { index, distance })
+            .collect())
+    }
+
+    fn write_to(&self, w: &mut dyn Write) -> Result<()> {
+        io::write_u8(w, io::metric_tag(self.metric))?;
+        self.store.write_to(w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn matches_brute_force_exactly() {
+        let mut rng = Rng::new(5);
+        let dim = 8;
+        let data = rng.normal_vec_f32(60 * dim);
+        let idx = ExactIndex::build(&data, dim, Metric::SqEuclidean, false).unwrap();
+        for _ in 0..5 {
+            let q = rng.normal_vec_f32(dim);
+            let got = idx.search(&q, 7).unwrap();
+            let want = crate::knn::knn_indices(&q, &data, dim, 7, Metric::SqEuclidean).unwrap();
+            assert_eq!(
+                got.iter().map(|n| n.index).collect::<Vec<_>>(),
+                want.iter().map(|n| n.index).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn sq8_variant_high_recall() {
+        let mut rng = Rng::new(6);
+        let dim = 16;
+        let data = rng.normal_vec_f32(200 * dim);
+        let idx = ExactIndex::build(&data, dim, Metric::SqEuclidean, true).unwrap();
+        assert!(idx.quantized());
+        let mut hits = 0;
+        let nq = 10;
+        let k = 10;
+        for qi in 0..nq {
+            let q = data[qi * dim..(qi + 1) * dim].to_vec();
+            let got: std::collections::HashSet<usize> =
+                idx.search(&q, k).unwrap().iter().map(|n| n.index).collect();
+            let want = crate::knn::knn_indices(&q, &data, dim, k, Metric::SqEuclidean).unwrap();
+            hits += want.iter().filter(|n| got.contains(&n.index)).count();
+        }
+        let recall = hits as f64 / (nq * k) as f64;
+        assert!(recall >= 0.8, "sq8 exact recall {recall}");
+    }
+
+    #[test]
+    fn dim_mismatch_rejected() {
+        let data = vec![0.0f32; 12];
+        let idx = ExactIndex::build(&data, 4, Metric::Euclidean, false).unwrap();
+        let e = idx.search(&[0.0; 3], 2).unwrap_err().to_string();
+        assert!(e.contains("query dim 3"), "{e}");
+    }
+
+    #[test]
+    fn roundtrip_preserves_results_bitwise() {
+        let mut rng = Rng::new(8);
+        let dim = 6;
+        let data = rng.normal_vec_f32(40 * dim);
+        for sq8 in [false, true] {
+            let idx = ExactIndex::build(&data, dim, Metric::Cosine, sq8).unwrap();
+            let mut buf = Vec::new();
+            idx.write_to(&mut buf).unwrap();
+            let back = ExactIndex::read_from(&mut buf.as_slice()).unwrap();
+            let q = rng.normal_vec_f32(dim);
+            let a = idx.search(&q, 5).unwrap();
+            let b = back.search(&q, 5).unwrap();
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.index, y.index);
+                assert_eq!(x.distance.to_bits(), y.distance.to_bits());
+            }
+        }
+    }
+}

@@ -1,0 +1,615 @@
+//! Deterministic HNSW (Hierarchical Navigable Small World) graph index.
+//!
+//! Malkov & Yashunin's layered skip-list-over-graphs: every vector gets a
+//! geometrically distributed top level (seeded [`Rng`], so builds are
+//! deterministic), upper layers are sparse "express lanes" descended
+//! greedily, and layer 0 holds the dense neighborhood graph searched with a
+//! bounded beam (`ef`). Construction inserts points one at a time, linking
+//! each to its `m` nearest discovered neighbors per layer (degree-capped at
+//! `2m` on layer 0, `m` above) and pruning overfull adjacency lists back to
+//! the closest set.
+//!
+//! Distances during *construction* use the raw full-precision rows;
+//! distances during *search* go through the [`VectorStore`] (asymmetric when
+//! SQ8-quantized), so the graph topology is identical between a flat and a
+//! quantized build of the same data — only the scoring differs.
+//!
+//! Determinism contract (tested): equal `(data, params, seed)` give
+//! bit-identical indexes, and a serialize/deserialize round-trip preserves
+//! search results exactly.
+
+use crate::error::{OpdrError, Result};
+use crate::index::{io, AnnIndex, IndexKind, VectorStore};
+use crate::knn::Neighbor;
+use crate::metrics::Metric;
+use crate::util::Rng;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::io::{Read, Write};
+
+/// Maximum level a node may be assigned (keeps the descent bounded even on
+/// adversarial RNG draws).
+const MAX_LEVEL_CAP: u8 = 15;
+
+/// HNSW construction / search parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HnswParams {
+    /// Max links per node on layers ≥ 1 (layer 0 allows `2m`).
+    pub m: usize,
+    /// Beam width while inserting.
+    pub ef_construction: usize,
+    /// Default beam width while searching (raised to `k` when `k` is larger).
+    pub ef_search: usize,
+}
+
+impl Default for HnswParams {
+    fn default() -> Self {
+        HnswParams { m: 16, ef_construction: 100, ef_search: 64 }
+    }
+}
+
+/// f32 with a total order (NaN compares equal; indexed data is finite).
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct OrdF32(f32);
+
+impl Eq for OrdF32 {}
+
+impl PartialOrd for OrdF32 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for OrdF32 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&other.0).unwrap_or(std::cmp::Ordering::Equal)
+    }
+}
+
+/// The layered graph index.
+#[derive(Debug, Clone)]
+pub struct HnswIndex {
+    metric: Metric,
+    params: HnswParams,
+    /// Entry point for the greedy descent (a node at `max_level`).
+    entry: u32,
+    /// Highest populated layer.
+    max_level: usize,
+    /// Top level of each node.
+    levels: Vec<u8>,
+    /// Adjacency: `links[node][level]` → neighbor ids, `level ≤ levels[node]`.
+    links: Vec<Vec<Vec<u32>>>,
+    store: VectorStore,
+}
+
+impl HnswIndex {
+    /// Build over row-major `data`; deterministic from `seed`. Degenerate
+    /// parameters are clamped (`m ≥ 2`, beams ≥ 1) rather than rejected.
+    pub fn build(
+        data: &[f32],
+        dim: usize,
+        metric: Metric,
+        params: HnswParams,
+        sq8: bool,
+        seed: u64,
+    ) -> Result<HnswIndex> {
+        if dim == 0 || data.len() % dim != 0 {
+            return Err(OpdrError::shape("hnsw: bad data shape"));
+        }
+        let n = data.len() / dim;
+        if n == 0 {
+            return Err(OpdrError::data("hnsw: empty data"));
+        }
+        let params = HnswParams {
+            m: params.m.max(2),
+            ef_construction: params.ef_construction.max(params.m.max(2)),
+            ef_search: params.ef_search.max(1),
+        };
+        let m = params.m;
+
+        // Seeded geometric level assignment: P(level ≥ l) = m^-l.
+        let mut rng = Rng::new(seed);
+        let inv_log_m = 1.0 / (m as f64).ln();
+        let levels: Vec<u8> = (0..n).map(|_| sample_level(&mut rng, inv_log_m)).collect();
+
+        let mut links: Vec<Vec<Vec<u32>>> =
+            levels.iter().map(|&l| vec![Vec::new(); l as usize + 1]).collect();
+        let mut entry: u32 = 0;
+        let mut max_level = levels[0] as usize;
+
+        for i in 1..n {
+            let q = &data[i * dim..(i + 1) * dim];
+            let l = levels[i] as usize;
+            let top = max_level;
+
+            // Greedy descent through layers above this node's level.
+            let mut ep = entry;
+            for lvl in (l + 1..=top).rev() {
+                ep = greedy_descend(ep, lvl, &links, |id| {
+                    metric.distance(q, &data[id * dim..(id + 1) * dim])
+                });
+            }
+
+            // Beam-search and link on each layer the node participates in.
+            for lvl in (0..=l.min(top)).rev() {
+                let cands = search_layer(n, ep, params.ef_construction, lvl, &links, |id| {
+                    metric.distance(q, &data[id * dim..(id + 1) * dim])
+                });
+                ep = cands[0].1;
+                let max_deg = if lvl == 0 { 2 * m } else { m };
+                let selected: Vec<u32> = cands.iter().take(m).map(|&(_, id)| id).collect();
+                links[i][lvl] = selected.clone();
+                for &nb in &selected {
+                    let nbu = nb as usize;
+                    links[nbu][lvl].push(i as u32);
+                    if links[nbu][lvl].len() > max_deg {
+                        let mut scored: Vec<(OrdF32, u32)> = links[nbu][lvl]
+                            .iter()
+                            .map(|&x| {
+                                (OrdF32(dist_rows(data, dim, metric, nbu, x as usize)), x)
+                            })
+                            .collect();
+                        scored.sort();
+                        scored.truncate(max_deg);
+                        links[nbu][lvl] = scored.into_iter().map(|(_, x)| x).collect();
+                    }
+                }
+            }
+
+            if l > max_level {
+                max_level = l;
+                entry = i as u32;
+            }
+        }
+
+        let store = VectorStore::build(data, dim, sq8)?;
+        Ok(HnswIndex { metric, params, entry, max_level, levels, links, store })
+    }
+
+    /// Construction / search parameters (after clamping).
+    pub fn params(&self) -> HnswParams {
+        self.params
+    }
+
+    /// Highest populated layer.
+    pub fn max_level(&self) -> usize {
+        self.max_level
+    }
+
+    /// Deserialize (payload written by [`AnnIndex::write_to`]); validates
+    /// structural invariants so a corrupt file cannot cause out-of-bounds
+    /// traversal.
+    pub(crate) fn read_from(r: &mut dyn Read) -> Result<HnswIndex> {
+        let metric = io::metric_from_tag(io::read_u8(r)?)?;
+        let m = io::read_u64_usize(r)?;
+        let ef_construction = io::read_u64_usize(r)?;
+        let ef_search = io::read_u64_usize(r)?;
+        let entry = io::read_u64(r)?;
+        let max_level = io::read_u64_usize(r)?;
+        let n = io::read_u64_usize(r)?;
+        if n == 0 || n > io::MAX_ELEMS || m < 2 {
+            return Err(OpdrError::data("hnsw: corrupt header"));
+        }
+        if entry as usize >= n || max_level > MAX_LEVEL_CAP as usize {
+            return Err(OpdrError::data("hnsw: corrupt entry point"));
+        }
+        let mut levels = Vec::with_capacity(n);
+        let mut links = Vec::with_capacity(n);
+        for _ in 0..n {
+            let l = io::read_u8(r)?;
+            if l > MAX_LEVEL_CAP {
+                return Err(OpdrError::data("hnsw: corrupt node level"));
+            }
+            let mut per_node = Vec::with_capacity(l as usize + 1);
+            for _ in 0..=l {
+                let len = io::read_u32(r)? as usize;
+                if len > n {
+                    return Err(OpdrError::data("hnsw: corrupt adjacency length"));
+                }
+                let mut list = Vec::with_capacity(len);
+                for _ in 0..len {
+                    list.push(io::read_u32(r)?);
+                }
+                per_node.push(list);
+            }
+            levels.push(l);
+            links.push(per_node);
+        }
+        let store = VectorStore::read_from(r)?;
+        if store.len() != n {
+            return Err(OpdrError::data("hnsw: store length mismatch"));
+        }
+        if (levels[entry as usize] as usize) < max_level {
+            return Err(OpdrError::data("hnsw: entry below max level"));
+        }
+        // Every link must point inside the graph at a node that reaches the
+        // link's layer; otherwise traversal would index out of bounds.
+        for per_node in &links {
+            for (lvl, list) in per_node.iter().enumerate() {
+                for &v in list {
+                    let vu = v as usize;
+                    if vu >= n || (levels[vu] as usize) < lvl {
+                        return Err(OpdrError::data("hnsw: corrupt link"));
+                    }
+                }
+            }
+        }
+        let params = HnswParams { m, ef_construction, ef_search };
+        Ok(HnswIndex { metric, params, entry, max_level, levels, links, store })
+    }
+}
+
+impl AnnIndex for HnswIndex {
+    fn kind(&self) -> IndexKind {
+        IndexKind::Hnsw
+    }
+
+    fn len(&self) -> usize {
+        self.store.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.store.dim()
+    }
+
+    fn metric(&self) -> Metric {
+        self.metric
+    }
+
+    fn quantized(&self) -> bool {
+        self.store.quantized()
+    }
+
+    fn memory_bytes(&self) -> usize {
+        let links_bytes: usize = self
+            .links
+            .iter()
+            .map(|per| per.iter().map(|l| l.len() * std::mem::size_of::<u32>()).sum::<usize>())
+            .sum();
+        self.store.memory_bytes() + links_bytes + self.levels.len()
+    }
+
+    fn matches_data(&self, data: &[f32]) -> bool {
+        self.store.matches(data)
+    }
+
+    fn search(&self, query: &[f32], k: usize) -> Result<Vec<Neighbor>> {
+        let dim = self.dim();
+        if query.len() != dim {
+            return Err(OpdrError::shape(format!(
+                "hnsw search: query dim {} != index dim {dim}",
+                query.len()
+            )));
+        }
+        if k == 0 {
+            return Ok(Vec::new());
+        }
+        let mut scratch = Vec::new();
+        let mut ep = self.entry;
+        for lvl in (1..=self.max_level).rev() {
+            ep = greedy_descend(ep, lvl, &self.links, |id| {
+                self.store.distance(self.metric, query, id, &mut scratch)
+            });
+        }
+        let ef = self.params.ef_search.max(k);
+        let found = search_layer(self.len(), ep, ef, 0, &self.links, |id| {
+            self.store.distance(self.metric, query, id, &mut scratch)
+        });
+        Ok(found
+            .into_iter()
+            .take(k)
+            .map(|(d, id)| Neighbor { index: id as usize, distance: d.0 })
+            .collect())
+    }
+
+    fn write_to(&self, w: &mut dyn Write) -> Result<()> {
+        io::write_u8(w, io::metric_tag(self.metric))?;
+        io::write_u64(w, self.params.m as u64)?;
+        io::write_u64(w, self.params.ef_construction as u64)?;
+        io::write_u64(w, self.params.ef_search as u64)?;
+        io::write_u64(w, self.entry as u64)?;
+        io::write_u64(w, self.max_level as u64)?;
+        io::write_u64(w, self.len() as u64)?;
+        for (node, per_node) in self.links.iter().enumerate() {
+            io::write_u8(w, self.levels[node])?;
+            for list in per_node {
+                io::write_u32(w, list.len() as u32)?;
+                for &id in list {
+                    io::write_u32(w, id)?;
+                }
+            }
+        }
+        self.store.write_to(w)
+    }
+}
+
+/// Geometric level draw: `floor(−ln(U) / ln(m))`, capped.
+fn sample_level(rng: &mut Rng, inv_log_m: f64) -> u8 {
+    let u = rng.uniform().max(f64::MIN_POSITIVE);
+    let l = (-u.ln() * inv_log_m).floor();
+    if l >= MAX_LEVEL_CAP as f64 {
+        MAX_LEVEL_CAP
+    } else {
+        l as u8
+    }
+}
+
+/// Raw-row distance used during construction.
+#[inline]
+fn dist_rows(data: &[f32], dim: usize, metric: Metric, a: usize, b: usize) -> f32 {
+    metric.distance(&data[a * dim..(a + 1) * dim], &data[b * dim..(b + 1) * dim])
+}
+
+/// Greedy hill descent on one layer: move to the closest neighbor until no
+/// strict improvement. `dist(id)` scores a node against the implicit query.
+fn greedy_descend<F: FnMut(usize) -> f32>(
+    mut ep: u32,
+    lvl: usize,
+    links: &[Vec<Vec<u32>>],
+    mut dist: F,
+) -> u32 {
+    let mut best = dist(ep as usize);
+    loop {
+        let mut improved = false;
+        for &v in &links[ep as usize][lvl] {
+            let d = dist(v as usize);
+            if d < best {
+                best = d;
+                ep = v;
+                improved = true;
+            }
+        }
+        if !improved {
+            return ep;
+        }
+    }
+}
+
+/// Visited-node set for one beam search. The beam only touches ~`ef·2m`
+/// nodes, so for large graphs a hash set avoids the O(n) allocate+memset a
+/// dense bitmap would pay per query; small graphs use the bitmap (faster
+/// constants, and exhaustive `ef ≥ n` searches touch everything anyway).
+enum Visited {
+    Dense(Vec<bool>),
+    Sparse(std::collections::HashSet<u32>),
+}
+
+impl Visited {
+    fn new(n: usize, ef: usize) -> Visited {
+        // Dense wins when the expected visit count is a sizable fraction of n.
+        if n <= 4096 || ef.saturating_mul(64) >= n {
+            Visited::Dense(vec![false; n])
+        } else {
+            Visited::Sparse(std::collections::HashSet::new())
+        }
+    }
+
+    /// Mark `id`; returns true when it was not visited before.
+    fn insert(&mut self, id: u32) -> bool {
+        match self {
+            Visited::Dense(v) => {
+                let seen = &mut v[id as usize];
+                !std::mem::replace(seen, true)
+            }
+            Visited::Sparse(s) => s.insert(id),
+        }
+    }
+}
+
+/// Bounded beam search on one layer (the classic SEARCH-LAYER): returns up
+/// to `ef` nodes ascending by `(distance, id)`. With `ef ≥ n` this visits
+/// the entire connected component, making the result exact.
+fn search_layer<F: FnMut(usize) -> f32>(
+    n: usize,
+    ep: u32,
+    ef: usize,
+    lvl: usize,
+    links: &[Vec<Vec<u32>>],
+    mut dist: F,
+) -> Vec<(OrdF32, u32)> {
+    let ef = ef.max(1);
+    let mut visited = Visited::new(n, ef);
+    visited.insert(ep);
+    let d0 = OrdF32(dist(ep as usize));
+
+    // Min-heap of the expansion frontier; max-heap of the best `ef` found.
+    let mut frontier: BinaryHeap<Reverse<(OrdF32, u32)>> = BinaryHeap::new();
+    let mut best: BinaryHeap<(OrdF32, u32)> = BinaryHeap::new();
+    frontier.push(Reverse((d0, ep)));
+    best.push((d0, ep));
+
+    while let Some(Reverse((d, u))) = frontier.pop() {
+        if best.len() >= ef {
+            if let Some(&(worst, _)) = best.peek() {
+                if d > worst {
+                    break;
+                }
+            }
+        }
+        for &v in &links[u as usize][lvl] {
+            if !visited.insert(v) {
+                continue;
+            }
+            let dv = OrdF32(dist(v as usize));
+            let admit = best.len() < ef || best.peek().map(|&(w, _)| dv < w).unwrap_or(true);
+            if admit {
+                frontier.push(Reverse((dv, v)));
+                best.push((dv, v));
+                if best.len() > ef {
+                    best.pop();
+                }
+            }
+        }
+    }
+    let mut out = best.into_vec();
+    out.sort();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn normal_data(n: usize, dim: usize, seed: u64) -> Vec<f32> {
+        Rng::new(seed).normal_vec_f32(n * dim)
+    }
+
+    fn recall(
+        idx: &HnswIndex,
+        data: &[f32],
+        dim: usize,
+        queries: &[Vec<f32>],
+        k: usize,
+    ) -> f64 {
+        let mut hits = 0usize;
+        for q in queries {
+            let got: std::collections::HashSet<usize> =
+                idx.search(q, k).unwrap().iter().map(|n| n.index).collect();
+            let want = crate::knn::knn_indices(q, data, dim, k, idx.metric()).unwrap();
+            hits += want.iter().filter(|n| got.contains(&n.index)).count();
+        }
+        hits as f64 / (queries.len() * k) as f64
+    }
+
+    #[test]
+    fn exhaustive_beam_is_exact() {
+        // With degree cap 2m ≥ n (no pruning) and ef ≥ n the layer-0 beam
+        // visits the whole graph, so results must equal brute force
+        // including tie order.
+        let dim = 4;
+        let n = 30;
+        let data = normal_data(n, dim, 1);
+        let params = HnswParams { m: 16, ef_construction: 32, ef_search: 64 };
+        let idx = HnswIndex::build(&data, dim, Metric::SqEuclidean, params, false, 7).unwrap();
+        let mut rng = Rng::new(2);
+        for _ in 0..8 {
+            let q = rng.normal_vec_f32(dim);
+            let got = idx.search(&q, 5).unwrap();
+            let want = crate::knn::knn_indices(&q, &data, dim, 5, Metric::SqEuclidean).unwrap();
+            assert_eq!(
+                got.iter().map(|x| x.index).collect::<Vec<_>>(),
+                want.iter().map(|x| x.index).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn high_recall_on_larger_set() {
+        let dim = 16;
+        let n = 1000;
+        let data = normal_data(n, dim, 3);
+        let params = HnswParams { m: 16, ef_construction: 100, ef_search: 128 };
+        let idx = HnswIndex::build(&data, dim, Metric::SqEuclidean, params, false, 9).unwrap();
+        let queries: Vec<Vec<f32>> =
+            (0..20).map(|i| data[i * 37 * dim % (n * dim - dim)..][..dim].to_vec()).collect();
+        let r = recall(&idx, &data, dim, &queries, 10);
+        assert!(r >= 0.9, "hnsw recall@10 = {r}");
+    }
+
+    #[test]
+    fn deterministic_across_builds() {
+        let dim = 8;
+        let data = normal_data(200, dim, 5);
+        let params = HnswParams::default();
+        let a = HnswIndex::build(&data, dim, Metric::Euclidean, params, false, 42).unwrap();
+        let b = HnswIndex::build(&data, dim, Metric::Euclidean, params, false, 42).unwrap();
+        let mut rng = Rng::new(6);
+        for _ in 0..5 {
+            let q = rng.normal_vec_f32(dim);
+            let ra = a.search(&q, 7).unwrap();
+            let rb = b.search(&q, 7).unwrap();
+            assert_eq!(ra.len(), rb.len());
+            for (x, y) in ra.iter().zip(&rb) {
+                assert_eq!(x.index, y.index);
+                assert_eq!(x.distance.to_bits(), y.distance.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_bit_identical_results() {
+        let dim = 8;
+        let data = normal_data(150, dim, 8);
+        for sq8 in [false, true] {
+            let idx = HnswIndex::build(
+                &data,
+                dim,
+                Metric::SqEuclidean,
+                HnswParams::default(),
+                sq8,
+                4,
+            )
+            .unwrap();
+            let mut buf = Vec::new();
+            idx.write_to(&mut buf).unwrap();
+            let back = HnswIndex::read_from(&mut buf.as_slice()).unwrap();
+            assert_eq!(back.max_level(), idx.max_level());
+            let mut rng = Rng::new(1);
+            for _ in 0..6 {
+                let q = rng.normal_vec_f32(dim);
+                let ra = idx.search(&q, 9).unwrap();
+                let rb = back.search(&q, 9).unwrap();
+                assert_eq!(ra.len(), rb.len());
+                for (x, y) in ra.iter().zip(&rb) {
+                    assert_eq!(x.index, y.index);
+                    assert_eq!(x.distance.to_bits(), y.distance.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sq8_variant_shrinks_and_still_finds_neighbors() {
+        let dim = 16;
+        let n = 400;
+        let data = normal_data(n, dim, 11);
+        let params = HnswParams { m: 16, ef_construction: 100, ef_search: 128 };
+        let flat = HnswIndex::build(&data, dim, Metric::SqEuclidean, params, false, 2).unwrap();
+        let sq8 = HnswIndex::build(&data, dim, Metric::SqEuclidean, params, true, 2).unwrap();
+        assert!(sq8.quantized());
+        assert!(sq8.memory_bytes() < flat.memory_bytes());
+        let queries: Vec<Vec<f32>> = (0..10).map(|i| data[i * dim..][..dim].to_vec()).collect();
+        let r = recall(&sq8, &data, dim, &queries, 10);
+        assert!(r >= 0.7, "hnsw+sq8 recall@10 = {r}");
+    }
+
+    #[test]
+    fn corrupt_payloads_rejected() {
+        let dim = 4;
+        let data = normal_data(20, dim, 1);
+        let idx =
+            HnswIndex::build(&data, dim, Metric::Euclidean, HnswParams::default(), false, 3)
+                .unwrap();
+        let mut buf = Vec::new();
+        idx.write_to(&mut buf).unwrap();
+        // Truncation.
+        assert!(HnswIndex::read_from(&mut &buf[..buf.len() / 2]).is_err());
+        // Entry point out of range: bytes 25..33 hold the entry id.
+        let mut bad = buf.clone();
+        bad[25..33].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(HnswIndex::read_from(&mut bad.as_slice()).is_err());
+    }
+
+    #[test]
+    fn edge_cases_single_node_and_large_k() {
+        let data = vec![1.0f32, 2.0, 3.0];
+        let idx = HnswIndex::build(&data, 3, Metric::Euclidean, HnswParams::default(), false, 1)
+            .unwrap();
+        let hits = idx.search(&[1.0, 2.0, 3.0], 5).unwrap();
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].index, 0);
+        assert!(idx.search(&[1.0, 2.0], 1).is_err());
+        assert!(idx.search(&[0.0; 3], 0).unwrap().is_empty());
+
+        let data = normal_data(12, 4, 2);
+        let idx = HnswIndex::build(&data, 4, Metric::Euclidean, HnswParams::default(), false, 1)
+            .unwrap();
+        let all = idx.search(&data[..4].to_vec(), 50).unwrap();
+        assert_eq!(all.len(), 12);
+        // Ascending by distance.
+        for w in all.windows(2) {
+            assert!(w[0].distance <= w[1].distance);
+        }
+    }
+}

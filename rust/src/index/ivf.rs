@@ -1,0 +1,310 @@
+//! IVF-Flat as an [`AnnIndex`] substrate over quantizable storage.
+//!
+//! Same coarse structure as [`crate::knn::IvfFlatIndex`] (Lloyd k-means
+//! centroids + inverted lists, exhaustive scan of the `nprobe` nearest
+//! cells) but generalized for the index subsystem: vectors live in a
+//! [`VectorStore`] (flat or SQ8), `nprobe` is part of the built index so the
+//! trait-level [`AnnIndex::search`] stays parameter-free, and the whole
+//! structure serializes into the `OPDR` index segment format.
+
+use crate::error::{OpdrError, Result};
+use crate::index::{io, AnnIndex, IndexKind, VectorStore};
+use crate::knn::ivf::{kmeans_train, nearest_centroid};
+use crate::knn::topk::top_k_smallest;
+use crate::knn::Neighbor;
+use crate::metrics::Metric;
+use crate::util::Rng;
+use std::io::{Read, Write};
+
+/// Inverted-file index with a k-means coarse quantizer.
+#[derive(Debug, Clone)]
+pub struct IvfIndex {
+    metric: Metric,
+    nlist: usize,
+    nprobe: usize,
+    /// `nlist × dim` coarse centroids (always full precision).
+    centroids: Vec<f32>,
+    /// Inverted lists of vector ids.
+    lists: Vec<Vec<u32>>,
+    store: VectorStore,
+}
+
+impl IvfIndex {
+    /// Build with `nlist` cells (clamped to `[1, n]`) and a default probe
+    /// width `nprobe` (clamped to `[1, nlist]`), deterministic from `seed`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn build(
+        data: &[f32],
+        dim: usize,
+        metric: Metric,
+        nlist: usize,
+        train_iters: usize,
+        nprobe: usize,
+        sq8: bool,
+        seed: u64,
+    ) -> Result<IvfIndex> {
+        if dim == 0 || data.len() % dim != 0 {
+            return Err(OpdrError::shape("ivf index: bad data shape"));
+        }
+        let n = data.len() / dim;
+        if n == 0 {
+            return Err(OpdrError::data("ivf index: empty data"));
+        }
+        let nlist = nlist.clamp(1, n);
+        let nprobe = nprobe.clamp(1, nlist);
+
+        let mut rng = Rng::new(seed);
+        let centroids = kmeans_train(data, dim, metric, nlist, train_iters, &mut rng);
+        let mut lists = vec![Vec::new(); nlist];
+        for i in 0..n {
+            let c = nearest_centroid(&data[i * dim..(i + 1) * dim], &centroids, dim, metric);
+            lists[c].push(i as u32);
+        }
+        let store = VectorStore::build(data, dim, sq8)?;
+        Ok(IvfIndex { metric, nlist, nprobe, centroids, lists, store })
+    }
+
+    /// Number of inverted lists.
+    pub fn nlist(&self) -> usize {
+        self.nlist
+    }
+
+    /// Default probe width used by [`AnnIndex::search`].
+    pub fn nprobe(&self) -> usize {
+        self.nprobe
+    }
+
+    /// Deserialize (payload written by [`AnnIndex::write_to`]).
+    pub(crate) fn read_from(r: &mut dyn Read) -> Result<IvfIndex> {
+        let metric = io::metric_from_tag(io::read_u8(r)?)?;
+        let nlist = io::read_u64_usize(r)?;
+        let nprobe = io::read_u64_usize(r)?;
+        let dim = io::read_u64_usize(r)?;
+        if nlist == 0 || dim == 0 {
+            return Err(OpdrError::data("ivf index: corrupt header"));
+        }
+        if nprobe == 0 || nprobe > nlist {
+            return Err(OpdrError::data("ivf index: corrupt nprobe"));
+        }
+        let centroids = io::read_f32s(r, io::checked_count(nlist, dim)?)?;
+        let mut lists = Vec::with_capacity(nlist);
+        for _ in 0..nlist {
+            let len = io::read_u64_usize(r)?;
+            if len > io::MAX_ELEMS {
+                return Err(OpdrError::data("ivf index: corrupt list length"));
+            }
+            let mut list = Vec::with_capacity(len);
+            for _ in 0..len {
+                list.push(io::read_u32(r)?);
+            }
+            lists.push(list);
+        }
+        let store = VectorStore::read_from(r)?;
+        if store.dim() != dim {
+            return Err(OpdrError::data("ivf index: store dim mismatch"));
+        }
+        let n = store.len();
+        if lists.iter().flatten().any(|&id| id as usize >= n) {
+            return Err(OpdrError::data("ivf index: list id out of range"));
+        }
+        Ok(IvfIndex { metric, nlist, nprobe, centroids, lists, store })
+    }
+}
+
+impl AnnIndex for IvfIndex {
+    fn kind(&self) -> IndexKind {
+        IndexKind::Ivf
+    }
+
+    fn len(&self) -> usize {
+        self.store.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.store.dim()
+    }
+
+    fn metric(&self) -> Metric {
+        self.metric
+    }
+
+    fn quantized(&self) -> bool {
+        self.store.quantized()
+    }
+
+    fn memory_bytes(&self) -> usize {
+        let lists_bytes: usize =
+            self.lists.iter().map(|l| l.len() * std::mem::size_of::<u32>()).sum();
+        self.store.memory_bytes()
+            + self.centroids.len() * std::mem::size_of::<f32>()
+            + lists_bytes
+    }
+
+    fn matches_data(&self, data: &[f32]) -> bool {
+        self.store.matches(data)
+    }
+
+    fn search(&self, query: &[f32], k: usize) -> Result<Vec<Neighbor>> {
+        let dim = self.dim();
+        if query.len() != dim {
+            return Err(OpdrError::shape(format!(
+                "ivf search: query dim {} != index dim {dim}",
+                query.len()
+            )));
+        }
+        // Rank cells by centroid distance.
+        let cdists: Vec<f32> = (0..self.nlist)
+            .map(|c| self.metric.distance(query, &self.centroids[c * dim..(c + 1) * dim]))
+            .collect();
+        let cells = top_k_smallest(&cdists, self.nprobe);
+
+        // Exhaustive (asymmetric for SQ8) scan within probed cells.
+        let mut cand_idx = Vec::new();
+        let mut cand_dist = Vec::new();
+        let mut scratch = Vec::new();
+        for (c, _) in cells {
+            for &vid in &self.lists[c] {
+                let d = self.store.distance(self.metric, query, vid as usize, &mut scratch);
+                cand_idx.push(vid as usize);
+                cand_dist.push(d);
+            }
+        }
+        let picked = top_k_smallest(&cand_dist, k);
+        Ok(picked
+            .into_iter()
+            .map(|(pos, distance)| Neighbor { index: cand_idx[pos], distance })
+            .collect())
+    }
+
+    fn write_to(&self, w: &mut dyn Write) -> Result<()> {
+        io::write_u8(w, io::metric_tag(self.metric))?;
+        io::write_u64(w, self.nlist as u64)?;
+        io::write_u64(w, self.nprobe as u64)?;
+        io::write_u64(w, self.dim() as u64)?;
+        io::write_f32s(w, &self.centroids)?;
+        for list in &self.lists {
+            io::write_u64(w, list.len() as u64)?;
+            for &id in list {
+                io::write_u32(w, id)?;
+            }
+        }
+        self.store.write_to(w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn blobs(n_per: usize, dim: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut data = Vec::new();
+        for c in 0..4 {
+            let center = 20.0 * c as f32;
+            for _ in 0..n_per {
+                for k in 0..dim {
+                    let base = if k == 0 { center } else { 0.0 };
+                    data.push(base + rng.normal() as f32);
+                }
+            }
+        }
+        data
+    }
+
+    #[test]
+    fn full_probe_matches_exact() {
+        let dim = 4;
+        let data = blobs(20, dim, 3);
+        let idx =
+            IvfIndex::build(&data, dim, Metric::SqEuclidean, 8, 10, 8, false, 7).unwrap();
+        let mut rng = Rng::new(11);
+        let q = rng.normal_vec_f32(dim);
+        let got = idx.search(&q, 5).unwrap();
+        let exact = crate::knn::knn_indices(&q, &data, dim, 5, Metric::SqEuclidean).unwrap();
+        assert_eq!(
+            got.iter().map(|n| n.index).collect::<Vec<_>>(),
+            exact.iter().map(|n| n.index).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn all_points_indexed_and_params_clamped() {
+        let dim = 4;
+        let data = blobs(5, dim, 2); // 20 points
+        let idx =
+            IvfIndex::build(&data, dim, Metric::Euclidean, 500, 4, 900, false, 1).unwrap();
+        assert!(idx.nlist() <= 20);
+        assert!(idx.nprobe() <= idx.nlist());
+        let total: usize = idx.lists.iter().map(|l| l.len()).sum();
+        assert_eq!(total, 20);
+        assert_eq!(idx.len(), 20);
+    }
+
+    #[test]
+    fn sq8_shrinks_memory_with_usable_recall() {
+        let dim = 8;
+        let data = blobs(50, dim, 5);
+        let flat = IvfIndex::build(&data, dim, Metric::SqEuclidean, 8, 8, 8, false, 9).unwrap();
+        let sq8 = IvfIndex::build(&data, dim, Metric::SqEuclidean, 8, 8, 8, true, 9).unwrap();
+        assert!(sq8.memory_bytes() < flat.memory_bytes() / 2);
+        let mut hits = 0;
+        let k = 5;
+        for qi in 0..10 {
+            let q = &data[qi * dim..(qi + 1) * dim];
+            let want: std::collections::HashSet<usize> =
+                flat.search(q, k).unwrap().iter().map(|n| n.index).collect();
+            hits += sq8.search(q, k).unwrap().iter().filter(|n| want.contains(&n.index)).count();
+        }
+        // Quantization may reshuffle near-tied in-cluster ranks; it must not
+        // lose the neighborhood wholesale.
+        assert!(hits as f64 / (10 * k) as f64 >= 0.6, "sq8 recall {hits}/50");
+    }
+
+    #[test]
+    fn roundtrip_bit_identical_results() {
+        let dim = 6;
+        let data = blobs(25, dim, 8);
+        for sq8 in [false, true] {
+            let idx =
+                IvfIndex::build(&data, dim, Metric::SqEuclidean, 6, 6, 3, sq8, 4).unwrap();
+            let mut buf = Vec::new();
+            idx.write_to(&mut buf).unwrap();
+            let back = IvfIndex::read_from(&mut buf.as_slice()).unwrap();
+            let mut rng = Rng::new(2);
+            for _ in 0..5 {
+                let q = rng.normal_vec_f32(dim);
+                let a = idx.search(&q, 4).unwrap();
+                let b = back.search(&q, 4).unwrap();
+                assert_eq!(a.len(), b.len());
+                for (x, y) in a.iter().zip(&b) {
+                    assert_eq!(x.index, y.index);
+                    assert_eq!(x.distance.to_bits(), y.distance.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_corrupt_payload() {
+        let dim = 4;
+        let data = blobs(5, dim, 1);
+        let idx = IvfIndex::build(&data, dim, Metric::Euclidean, 4, 4, 2, false, 3).unwrap();
+        let mut buf = Vec::new();
+        idx.write_to(&mut buf).unwrap();
+        // Truncation.
+        assert!(IvfIndex::read_from(&mut &buf[..buf.len() - 5]).is_err());
+        // Corrupt nprobe (> nlist): bytes 1..9 hold nlist, 9..17 nprobe.
+        let mut bad = buf.clone();
+        bad[9..17].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(IvfIndex::read_from(&mut bad.as_slice()).is_err());
+    }
+
+    #[test]
+    fn query_dim_checked() {
+        let dim = 4;
+        let data = blobs(5, dim, 1);
+        let idx = IvfIndex::build(&data, dim, Metric::Euclidean, 4, 4, 2, false, 3).unwrap();
+        assert!(idx.search(&[0.0; 5], 2).is_err());
+    }
+}

@@ -1,0 +1,552 @@
+//! Pluggable ANN index subsystem.
+//!
+//! The paper positions OPDR as a *complement* to vector indexes: reduce the
+//! dimension first, then index. This module is the "then index" half — a
+//! common [`AnnIndex`] trait over interchangeable search substrates:
+//!
+//! * [`exact`] — flat exhaustive scan (the ground-truth substrate, and the
+//!   automatic choice below [`IndexPolicy::exact_threshold`]);
+//! * [`ivf`] — IVF-Flat inverted lists over a k-means coarse quantizer
+//!   (FAISS-style), generalizing [`crate::knn::IvfFlatIndex`] to quantized
+//!   storage;
+//! * [`hnsw`] — a deterministic Hierarchical Navigable Small World graph
+//!   (layered greedy + beam search, seeded level assignment);
+//! * [`sq8`] — per-dimension scalar (8-bit) quantized storage with
+//!   asymmetric distance, composable under every substrate above to shrink
+//!   the serving copy ~4×.
+//!
+//! Indexes serialize through [`AnnIndex::write_to`] into the versioned
+//! `OPDR` binary format (see [`crate::data::store`]) so a built graph and
+//! its codebooks survive restarts. All builds are deterministic from the
+//! seed: identical data + policy + seed ⇒ bit-identical indexes.
+
+pub mod exact;
+pub mod hnsw;
+pub mod ivf;
+pub mod sq8;
+
+pub use exact::ExactIndex;
+pub use hnsw::{HnswIndex, HnswParams};
+pub use ivf::IvfIndex;
+pub use sq8::Sq8Storage;
+
+use crate::config::IndexPolicy;
+use crate::error::{OpdrError, Result};
+use crate::knn::Neighbor;
+use crate::metrics::Metric;
+use std::io::{Read, Write};
+
+/// Which search structure an index uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum IndexKind {
+    /// Exhaustive flat scan (exact).
+    Exact,
+    /// IVF-Flat inverted lists.
+    Ivf,
+    /// HNSW layered graph.
+    Hnsw,
+}
+
+impl IndexKind {
+    /// Parse from a config / CLI string.
+    pub fn parse(s: &str) -> Option<IndexKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "exact" | "flat" | "brute" => Some(IndexKind::Exact),
+            "ivf" | "ivf-flat" | "ivfflat" => Some(IndexKind::Ivf),
+            "hnsw" => Some(IndexKind::Hnsw),
+            _ => None,
+        }
+    }
+
+    /// Canonical name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            IndexKind::Exact => "exact",
+            IndexKind::Ivf => "ivf",
+            IndexKind::Hnsw => "hnsw",
+        }
+    }
+
+    /// Stable on-disk tag.
+    pub(crate) fn tag(&self) -> u32 {
+        match self {
+            IndexKind::Exact => 0,
+            IndexKind::Ivf => 1,
+            IndexKind::Hnsw => 2,
+        }
+    }
+
+    /// Inverse of [`IndexKind::tag`].
+    pub(crate) fn from_tag(tag: u32) -> Result<IndexKind> {
+        match tag {
+            0 => Ok(IndexKind::Exact),
+            1 => Ok(IndexKind::Ivf),
+            2 => Ok(IndexKind::Hnsw),
+            other => Err(OpdrError::data(format!("index: unknown kind tag {other}"))),
+        }
+    }
+}
+
+/// A k-NN search substrate over an owned copy of the serving vectors.
+///
+/// Implementations are `Send + Sync` so the coordinator can hold them behind
+/// a `Box<dyn AnnIndex>` inside state that moves across threads, and must be
+/// deterministic: equal build inputs give bit-identical search results, and
+/// a [`write_to`](AnnIndex::write_to)/read round-trip preserves results
+/// exactly (the persistence contract [`crate::data::store::save_index`]
+/// relies on).
+pub trait AnnIndex: Send + Sync + std::fmt::Debug {
+    /// Which structure this is.
+    fn kind(&self) -> IndexKind;
+
+    /// Number of indexed vectors.
+    fn len(&self) -> usize;
+
+    /// True when no vectors are indexed.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Dimensionality of indexed vectors (and queries).
+    fn dim(&self) -> usize;
+
+    /// Distance metric the index was built for.
+    fn metric(&self) -> Metric;
+
+    /// True when vectors are stored scalar-quantized (SQ8).
+    fn quantized(&self) -> bool;
+
+    /// Approximate resident bytes of the index (vectors + structure).
+    fn memory_bytes(&self) -> usize;
+
+    /// k nearest neighbors of `query`, ascending by (distance, index).
+    fn search(&self, query: &[f32], k: usize) -> Result<Vec<Neighbor>>;
+
+    /// True when the index's owned vector copy matches `data` (bit-exact for
+    /// flat storage, within quantization error for SQ8). Used when loading a
+    /// persisted segment so an index built from *different* data of the same
+    /// shape never silently serves a collection.
+    fn matches_data(&self, data: &[f32]) -> bool;
+
+    /// Serialize the index payload (kind tag and framing are written by
+    /// [`crate::data::store::write_index`]).
+    fn write_to(&self, w: &mut dyn Write) -> Result<()>;
+}
+
+/// Build an index over row-major `data` per `policy`: collections smaller
+/// than `policy.exact_threshold` get an exact flat index regardless of the
+/// configured kind (ANN structures only pay off at scale), larger ones get
+/// `policy.kind`. SQ8 storage applies to whichever substrate is chosen.
+pub fn build_index(
+    data: &[f32],
+    dim: usize,
+    metric: Metric,
+    policy: &IndexPolicy,
+    seed: u64,
+) -> Result<Box<dyn AnnIndex>> {
+    if dim == 0 || data.len() % dim != 0 {
+        return Err(OpdrError::shape(format!(
+            "index build: {} floats is not a multiple of dim {dim}",
+            data.len()
+        )));
+    }
+    let n = data.len() / dim;
+    if n == 0 {
+        return Err(OpdrError::data("index build: empty data"));
+    }
+    let kind = if n < policy.exact_threshold { IndexKind::Exact } else { policy.kind };
+    match kind {
+        IndexKind::Exact => Ok(Box::new(ExactIndex::build(data, dim, metric, policy.sq8)?)),
+        IndexKind::Ivf => Ok(Box::new(IvfIndex::build(
+            data,
+            dim,
+            metric,
+            policy.ivf_nlist,
+            policy.ivf_train_iters,
+            policy.ivf_nprobe,
+            policy.sq8,
+            seed,
+        )?)),
+        IndexKind::Hnsw => Ok(Box::new(HnswIndex::build(
+            data,
+            dim,
+            metric,
+            HnswParams {
+                m: policy.hnsw_m,
+                ef_construction: policy.hnsw_ef_construction,
+                ef_search: policy.hnsw_ef_search,
+            },
+            policy.sq8,
+            seed,
+        )?)),
+    }
+}
+
+/// Deserialize an index payload given its kind tag (the framing half lives
+/// in [`crate::data::store::read_index`]).
+pub(crate) fn read_index_payload(kind_tag: u32, r: &mut dyn Read) -> Result<Box<dyn AnnIndex>> {
+    match IndexKind::from_tag(kind_tag)? {
+        IndexKind::Exact => Ok(Box::new(ExactIndex::read_from(r)?)),
+        IndexKind::Ivf => Ok(Box::new(IvfIndex::read_from(r)?)),
+        IndexKind::Hnsw => Ok(Box::new(HnswIndex::read_from(r)?)),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Vector storage shared by the substrates: flat f32 or SQ8-quantized.
+// ---------------------------------------------------------------------------
+
+/// Owned copy of the indexed vectors, either flat `f32` or SQ8-quantized.
+#[derive(Debug, Clone, PartialEq)]
+pub enum VectorStore {
+    /// Row-major `n × dim` f32 payload.
+    Flat {
+        /// Vector dimensionality.
+        dim: usize,
+        /// Row-major payload.
+        data: Vec<f32>,
+    },
+    /// Scalar-quantized payload with per-dimension codebooks.
+    Sq8(Sq8Storage),
+}
+
+impl VectorStore {
+    /// Build from row-major data, optionally quantizing.
+    pub fn build(data: &[f32], dim: usize, sq8: bool) -> Result<VectorStore> {
+        if dim == 0 || data.len() % dim != 0 {
+            return Err(OpdrError::shape("vector store: bad data shape"));
+        }
+        if sq8 {
+            Ok(VectorStore::Sq8(Sq8Storage::train(data, dim)?))
+        } else {
+            Ok(VectorStore::Flat { dim, data: data.to_vec() })
+        }
+    }
+
+    /// Number of stored vectors.
+    pub fn len(&self) -> usize {
+        match self {
+            VectorStore::Flat { dim, data } => data.len() / dim,
+            VectorStore::Sq8(s) => s.len(),
+        }
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Vector dimensionality.
+    pub fn dim(&self) -> usize {
+        match self {
+            VectorStore::Flat { dim, .. } => *dim,
+            VectorStore::Sq8(s) => s.dim(),
+        }
+    }
+
+    /// True for SQ8 storage.
+    pub fn quantized(&self) -> bool {
+        matches!(self, VectorStore::Sq8(_))
+    }
+
+    /// Distance from a full-precision `query` to stored vector `id`
+    /// (asymmetric for SQ8: the query stays f32, the stored side is decoded
+    /// through `scratch` to avoid per-candidate allocation).
+    #[inline]
+    pub fn distance(&self, metric: Metric, query: &[f32], id: usize, scratch: &mut Vec<f32>) -> f32 {
+        match self {
+            VectorStore::Flat { dim, data } => {
+                metric.distance(query, &data[id * dim..(id + 1) * dim])
+            }
+            VectorStore::Sq8(s) => {
+                scratch.resize(s.dim(), 0.0);
+                s.decode_into(id, scratch);
+                metric.distance(query, scratch)
+            }
+        }
+    }
+
+    /// Resident bytes of the payload.
+    pub fn memory_bytes(&self) -> usize {
+        match self {
+            VectorStore::Flat { data, .. } => data.len() * std::mem::size_of::<f32>(),
+            VectorStore::Sq8(s) => s.memory_bytes(),
+        }
+    }
+
+    /// True when this store holds (an encoding of) exactly `other`:
+    /// bit-identical for flat storage, within half a quantization step per
+    /// dimension for SQ8.
+    pub fn matches(&self, other: &[f32]) -> bool {
+        match self {
+            VectorStore::Flat { data, .. } => {
+                data.len() == other.len()
+                    && data.iter().zip(other).all(|(a, b)| a.to_bits() == b.to_bits())
+            }
+            VectorStore::Sq8(s) => {
+                let dim = s.dim();
+                if other.len() != s.len() * dim {
+                    return false;
+                }
+                let mut dec = vec![0.0f32; dim];
+                for id in 0..s.len() {
+                    s.decode_into(id, &mut dec);
+                    for d in 0..dim {
+                        let x = other[id * dim + d];
+                        let tol = s.max_error(d) + 1e-4 * (1.0 + x.abs());
+                        if (dec[d] - x).abs() > tol {
+                            return false;
+                        }
+                    }
+                }
+                true
+            }
+        }
+    }
+
+    /// Serialize (tag + payload).
+    pub(crate) fn write_to(&self, w: &mut dyn Write) -> Result<()> {
+        match self {
+            VectorStore::Flat { dim, data } => {
+                io::write_u8(w, 0)?;
+                io::write_u64(w, (data.len() / dim) as u64)?;
+                io::write_u64(w, *dim as u64)?;
+                io::write_f32s(w, data)
+            }
+            VectorStore::Sq8(s) => {
+                io::write_u8(w, 1)?;
+                s.write_to(w)
+            }
+        }
+    }
+
+    /// Deserialize (inverse of [`VectorStore::write_to`]).
+    pub(crate) fn read_from(r: &mut dyn Read) -> Result<VectorStore> {
+        match io::read_u8(r)? {
+            0 => {
+                let n = io::read_u64_usize(r)?;
+                let dim = io::read_u64_usize(r)?;
+                if dim == 0 {
+                    return Err(OpdrError::data("vector store: dim is zero"));
+                }
+                let count = io::checked_count(n, dim)?;
+                let data = io::read_f32s(r, count)?;
+                Ok(VectorStore::Flat { dim, data })
+            }
+            1 => Ok(VectorStore::Sq8(Sq8Storage::read_from(r)?)),
+            other => Err(OpdrError::data(format!("vector store: unknown storage tag {other}"))),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Little-endian binary IO helpers shared by the index serializers.
+// ---------------------------------------------------------------------------
+
+pub(crate) mod io {
+    //! Little-endian read/write helpers for index (de)serialization.
+
+    use crate::error::{OpdrError, Result};
+    use crate::metrics::Metric;
+    use std::io::{Read, Write};
+
+    /// Cap on deserialized element counts (matches the embedding store's
+    /// payload bound): corrupt headers must not trigger huge allocations.
+    pub const MAX_ELEMS: usize = 1 << 31;
+
+    pub fn write_u8(w: &mut dyn Write, v: u8) -> Result<()> {
+        w.write_all(&[v])?;
+        Ok(())
+    }
+
+    pub fn read_u8(r: &mut dyn Read) -> Result<u8> {
+        let mut b = [0u8; 1];
+        r.read_exact(&mut b)?;
+        Ok(b[0])
+    }
+
+    pub fn write_u32(w: &mut dyn Write, v: u32) -> Result<()> {
+        w.write_all(&v.to_le_bytes())?;
+        Ok(())
+    }
+
+    pub fn read_u32(r: &mut dyn Read) -> Result<u32> {
+        let mut b = [0u8; 4];
+        r.read_exact(&mut b)?;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    pub fn write_u64(w: &mut dyn Write, v: u64) -> Result<()> {
+        w.write_all(&v.to_le_bytes())?;
+        Ok(())
+    }
+
+    pub fn read_u64(r: &mut dyn Read) -> Result<u64> {
+        let mut b = [0u8; 8];
+        r.read_exact(&mut b)?;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    /// Read a u64 and narrow it to usize with a range check.
+    pub fn read_u64_usize(r: &mut dyn Read) -> Result<usize> {
+        let v = read_u64(r)?;
+        usize::try_from(v).map_err(|_| OpdrError::data("index io: 64-bit count on 32-bit host"))
+    }
+
+    /// `a * b` with overflow + sanity bounds (element counts).
+    pub fn checked_count(a: usize, b: usize) -> Result<usize> {
+        let count = a
+            .checked_mul(b)
+            .ok_or_else(|| OpdrError::data("index io: size overflow"))?;
+        if count > MAX_ELEMS {
+            return Err(OpdrError::data("index io: payload too large"));
+        }
+        Ok(count)
+    }
+
+    pub fn write_f32s(w: &mut dyn Write, xs: &[f32]) -> Result<()> {
+        for &x in xs {
+            w.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    pub fn read_f32s(r: &mut dyn Read, count: usize) -> Result<Vec<f32>> {
+        if count > MAX_ELEMS {
+            return Err(OpdrError::data("index io: payload too large"));
+        }
+        let mut out = Vec::with_capacity(count);
+        let mut b = [0u8; 4];
+        for _ in 0..count {
+            r.read_exact(&mut b)?;
+            out.push(f32::from_le_bytes(b));
+        }
+        Ok(out)
+    }
+
+    pub fn write_bytes(w: &mut dyn Write, xs: &[u8]) -> Result<()> {
+        w.write_all(xs)?;
+        Ok(())
+    }
+
+    pub fn read_bytes(r: &mut dyn Read, count: usize) -> Result<Vec<u8>> {
+        if count > MAX_ELEMS {
+            return Err(OpdrError::data("index io: payload too large"));
+        }
+        let mut out = vec![0u8; count];
+        r.read_exact(&mut out)?;
+        Ok(out)
+    }
+
+    /// Stable on-disk tag for a metric.
+    pub fn metric_tag(m: Metric) -> u8 {
+        match m {
+            Metric::Euclidean => 0,
+            Metric::SqEuclidean => 1,
+            Metric::Cosine => 2,
+            Metric::Manhattan => 3,
+            Metric::NegDot => 4,
+        }
+    }
+
+    /// Inverse of [`metric_tag`].
+    pub fn metric_from_tag(tag: u8) -> Result<Metric> {
+        match tag {
+            0 => Ok(Metric::Euclidean),
+            1 => Ok(Metric::SqEuclidean),
+            2 => Ok(Metric::Cosine),
+            3 => Ok(Metric::Manhattan),
+            4 => Ok(Metric::NegDot),
+            other => Err(OpdrError::data(format!("index io: unknown metric tag {other}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn kind_parse_roundtrip_and_tags() {
+        for kind in [IndexKind::Exact, IndexKind::Ivf, IndexKind::Hnsw] {
+            assert_eq!(IndexKind::parse(kind.name()), Some(kind));
+            assert_eq!(IndexKind::from_tag(kind.tag()).unwrap(), kind);
+        }
+        assert_eq!(IndexKind::parse("bogus"), None);
+        assert!(IndexKind::from_tag(99).is_err());
+    }
+
+    #[test]
+    fn metric_tags_roundtrip() {
+        for m in [
+            Metric::Euclidean,
+            Metric::SqEuclidean,
+            Metric::Cosine,
+            Metric::Manhattan,
+            Metric::NegDot,
+        ] {
+            assert_eq!(io::metric_from_tag(io::metric_tag(m)).unwrap(), m);
+        }
+        assert!(io::metric_from_tag(200).is_err());
+    }
+
+    #[test]
+    fn vector_store_flat_and_sq8_roundtrip() {
+        let mut rng = Rng::new(4);
+        let dim = 6;
+        let data = rng.normal_vec_f32(20 * dim);
+        for sq8 in [false, true] {
+            let store = VectorStore::build(&data, dim, sq8).unwrap();
+            assert_eq!(store.len(), 20);
+            assert_eq!(store.dim(), dim);
+            assert_eq!(store.quantized(), sq8);
+            let mut buf = Vec::new();
+            store.write_to(&mut buf).unwrap();
+            let back = VectorStore::read_from(&mut buf.as_slice()).unwrap();
+            assert_eq!(store, back);
+        }
+    }
+
+    #[test]
+    fn factory_respects_exact_threshold() {
+        let mut rng = Rng::new(7);
+        let dim = 4;
+        let data = rng.normal_vec_f32(50 * dim);
+        let policy = crate::config::IndexPolicy {
+            kind: IndexKind::Hnsw,
+            exact_threshold: 100,
+            ..Default::default()
+        };
+        let idx = build_index(&data, dim, Metric::SqEuclidean, &policy, 1).unwrap();
+        assert_eq!(idx.kind(), IndexKind::Exact);
+        let policy = crate::config::IndexPolicy { exact_threshold: 10, ..policy };
+        let idx = build_index(&data, dim, Metric::SqEuclidean, &policy, 1).unwrap();
+        assert_eq!(idx.kind(), IndexKind::Hnsw);
+    }
+
+    #[test]
+    fn factory_rejects_bad_shapes() {
+        let policy = crate::config::IndexPolicy::default();
+        assert!(build_index(&[1.0; 7], 4, Metric::Euclidean, &policy, 1).is_err());
+        assert!(build_index(&[], 4, Metric::Euclidean, &policy, 1).is_err());
+        assert!(build_index(&[1.0; 8], 0, Metric::Euclidean, &policy, 1).is_err());
+    }
+
+    #[test]
+    fn sq8_store_distance_close_to_flat() {
+        let mut rng = Rng::new(11);
+        let dim = 8;
+        let data = rng.normal_vec_f32(30 * dim);
+        let flat = VectorStore::build(&data, dim, false).unwrap();
+        let sq8 = VectorStore::build(&data, dim, true).unwrap();
+        let q = rng.normal_vec_f32(dim);
+        let mut scratch = Vec::new();
+        for id in 0..30 {
+            let d0 = flat.distance(Metric::Euclidean, &q, id, &mut scratch);
+            let d1 = sq8.distance(Metric::Euclidean, &q, id, &mut scratch);
+            assert!((d0 - d1).abs() < 0.1, "id {id}: {d0} vs {d1}");
+        }
+        assert!(sq8.memory_bytes() < flat.memory_bytes() / 3);
+    }
+}

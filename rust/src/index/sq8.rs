@@ -1,0 +1,231 @@
+//! SQ8 scalar-quantized vector storage.
+//!
+//! Each dimension gets a per-dimension affine codebook `(lo, step)` trained
+//! from the data's min/max; values are stored as one byte each:
+//! `code = round((x − lo) / step)` clamped to `[0, 255]`, decoded as
+//! `lo + code·step`. Distances are *asymmetric*: the query stays full
+//! precision and only the stored side is decoded, so the quantization error
+//! enters each comparison once (the FAISS `SQ8` convention).
+//!
+//! The payload is 4× smaller than flat f32 plus `2·dim` f32 of codebook —
+//! the serving-copy shrink the index subsystem composes under IVF and HNSW.
+
+use crate::error::{OpdrError, Result};
+use crate::index::io;
+use std::io::{Read, Write};
+
+/// SQ8-encoded vectors with per-dimension min/step codebooks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sq8Storage {
+    dim: usize,
+    /// Per-dimension lower bound of the quantization range.
+    lo: Vec<f32>,
+    /// Per-dimension quantization step ((max − min) / 255; 0 for constant dims).
+    step: Vec<f32>,
+    /// Row-major `n × dim` codes.
+    codes: Vec<u8>,
+}
+
+impl Sq8Storage {
+    /// Train codebooks on `data` (row-major `n × dim`) and encode every row.
+    pub fn train(data: &[f32], dim: usize) -> Result<Sq8Storage> {
+        if dim == 0 || data.len() % dim != 0 {
+            return Err(OpdrError::shape("sq8: bad data shape"));
+        }
+        let n = data.len() / dim;
+        if n == 0 {
+            return Err(OpdrError::data("sq8: empty data"));
+        }
+        if data.iter().any(|x| !x.is_finite()) {
+            return Err(OpdrError::numeric("sq8: non-finite input"));
+        }
+        let mut lo = vec![f32::INFINITY; dim];
+        let mut hi = vec![f32::NEG_INFINITY; dim];
+        for row in 0..n {
+            for d in 0..dim {
+                let x = data[row * dim + d];
+                lo[d] = lo[d].min(x);
+                hi[d] = hi[d].max(x);
+            }
+        }
+        let step: Vec<f32> = (0..dim).map(|d| (hi[d] - lo[d]) / 255.0).collect();
+        let mut codes = Vec::with_capacity(n * dim);
+        for row in 0..n {
+            for d in 0..dim {
+                let x = data[row * dim + d];
+                let code = if step[d] > 0.0 {
+                    ((x - lo[d]) / step[d]).round().clamp(0.0, 255.0) as u8
+                } else {
+                    0
+                };
+                codes.push(code);
+            }
+        }
+        Ok(Sq8Storage { dim, lo, step, codes })
+    }
+
+    /// Number of encoded vectors.
+    pub fn len(&self) -> usize {
+        self.codes.len() / self.dim
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.codes.is_empty()
+    }
+
+    /// Vector dimensionality.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Decode vector `id` into `out` (must be `dim` long).
+    #[inline]
+    pub fn decode_into(&self, id: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.dim);
+        let row = &self.codes[id * self.dim..(id + 1) * self.dim];
+        for d in 0..self.dim {
+            out[d] = self.lo[d] + row[d] as f32 * self.step[d];
+        }
+    }
+
+    /// Decode vector `id` into a fresh Vec.
+    pub fn reconstruct(&self, id: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.dim];
+        self.decode_into(id, &mut out);
+        out
+    }
+
+    /// Worst-case absolute reconstruction error for dimension `d`
+    /// (half a quantization step).
+    pub fn max_error(&self, d: usize) -> f32 {
+        self.step[d] * 0.5
+    }
+
+    /// Resident bytes (codes + codebooks).
+    pub fn memory_bytes(&self) -> usize {
+        self.codes.len() + (self.lo.len() + self.step.len()) * std::mem::size_of::<f32>()
+    }
+
+    /// Serialize.
+    pub(crate) fn write_to(&self, w: &mut dyn Write) -> Result<()> {
+        io::write_u64(w, self.len() as u64)?;
+        io::write_u64(w, self.dim as u64)?;
+        io::write_f32s(w, &self.lo)?;
+        io::write_f32s(w, &self.step)?;
+        io::write_bytes(w, &self.codes)
+    }
+
+    /// Deserialize (inverse of [`Sq8Storage::write_to`]).
+    pub(crate) fn read_from(r: &mut dyn Read) -> Result<Sq8Storage> {
+        let n = io::read_u64_usize(r)?;
+        let dim = io::read_u64_usize(r)?;
+        if dim == 0 {
+            return Err(OpdrError::data("sq8: dim is zero"));
+        }
+        let count = io::checked_count(n, dim)?;
+        let lo = io::read_f32s(r, dim)?;
+        let step = io::read_f32s(r, dim)?;
+        if lo.iter().any(|x| !x.is_finite())
+            || step.iter().any(|&s| s < 0.0 || !s.is_finite())
+        {
+            return Err(OpdrError::data("sq8: corrupt codebook"));
+        }
+        let codes = io::read_bytes(r, count)?;
+        Ok(Sq8Storage { dim, lo, step, codes })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn reconstruction_error_within_half_step() {
+        let mut rng = Rng::new(3);
+        let dim = 5;
+        let n = 40;
+        let data: Vec<f32> = (0..n * dim).map(|_| rng.uniform_range(-4.0, 4.0) as f32).collect();
+        let s = Sq8Storage::train(&data, dim).unwrap();
+        assert_eq!(s.len(), n);
+        for id in 0..n {
+            let rec = s.reconstruct(id);
+            for d in 0..dim {
+                let err = (rec[d] - data[id * dim + d]).abs();
+                // Half a step plus float slack.
+                assert!(err <= s.max_error(d) + 1e-5, "id {id} dim {d}: err {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn constant_dimension_is_lossless() {
+        let data = vec![
+            7.0f32, 1.0, //
+            7.0, 2.0, //
+            7.0, 3.0,
+        ];
+        let s = Sq8Storage::train(&data, 2).unwrap();
+        for id in 0..3 {
+            assert_eq!(s.reconstruct(id)[0], 7.0);
+        }
+    }
+
+    #[test]
+    fn range_extremes_nearly_exact() {
+        // The range minimum decodes exactly (code 0); the maximum decodes to
+        // lo + 255·step, which may differ from hi by float rounding only.
+        let data = vec![-2.0f32, 10.0, 2.0, 20.0];
+        let s = Sq8Storage::train(&data, 2).unwrap();
+        assert_eq!(s.reconstruct(0), vec![-2.0, 10.0]);
+        let top = s.reconstruct(1);
+        assert!((top[0] - 2.0).abs() < 1e-4 && (top[1] - 20.0).abs() < 1e-4, "{top:?}");
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        assert!(Sq8Storage::train(&[], 4).is_err());
+        assert!(Sq8Storage::train(&[1.0; 7], 4).is_err());
+        assert!(Sq8Storage::train(&[1.0, f32::NAN], 2).is_err());
+    }
+
+    #[test]
+    fn roundtrip_bit_identical() {
+        let mut rng = Rng::new(9);
+        let data = rng.normal_vec_f32(25 * 8);
+        let s = Sq8Storage::train(&data, 8).unwrap();
+        let mut buf = Vec::new();
+        s.write_to(&mut buf).unwrap();
+        let back = Sq8Storage::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn corrupt_codebook_rejected() {
+        let data = vec![0.0f32, 1.0, 2.0, 3.0];
+        let s = Sq8Storage::train(&data, 2).unwrap();
+        let mut buf = Vec::new();
+        s.write_to(&mut buf).unwrap();
+        // Flip a step value to NaN: bytes 16.. hold lo (2×f32) then step.
+        let mut bad = buf.clone();
+        let step_off = 16 + 8;
+        bad[step_off..step_off + 4].copy_from_slice(&f32::NAN.to_le_bytes());
+        assert!(Sq8Storage::read_from(&mut bad.as_slice()).is_err());
+        // A non-finite lo must be rejected too (it would silently NaN every
+        // decoded distance and searches would return empty).
+        let mut bad = buf.clone();
+        bad[16..20].copy_from_slice(&f32::INFINITY.to_le_bytes());
+        assert!(Sq8Storage::read_from(&mut bad.as_slice()).is_err());
+    }
+
+    #[test]
+    fn memory_is_about_a_quarter() {
+        let mut rng = Rng::new(1);
+        let dim = 64;
+        let data = rng.normal_vec_f32(100 * dim);
+        let s = Sq8Storage::train(&data, dim).unwrap();
+        let flat_bytes = data.len() * 4;
+        assert!(s.memory_bytes() < flat_bytes / 3, "{} vs {flat_bytes}", s.memory_bytes());
+    }
+}

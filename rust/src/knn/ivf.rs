@@ -45,42 +45,8 @@ impl IvfFlatIndex {
         }
         let nlist = nlist.max(1).min(n);
 
-        // k-means++ style seeding (simple random distinct picks are fine here).
         let mut rng = Rng::new(seed);
-        let picks = rng.sample_indices(n, nlist);
-        let mut centroids = vec![0.0f32; nlist * dim];
-        for (c, &p) in picks.iter().enumerate() {
-            centroids[c * dim..(c + 1) * dim].copy_from_slice(&data[p * dim..(p + 1) * dim]);
-        }
-
-        let mut assign = vec![0usize; n];
-        for _ in 0..train_iters {
-            // Assign.
-            for i in 0..n {
-                assign[i] = nearest_centroid(&data[i * dim..(i + 1) * dim], &centroids, dim, metric);
-            }
-            // Update.
-            let mut sums = vec![0.0f64; nlist * dim];
-            let mut counts = vec![0usize; nlist];
-            for i in 0..n {
-                let c = assign[i];
-                counts[c] += 1;
-                for k in 0..dim {
-                    sums[c * dim + k] += data[i * dim + k] as f64;
-                }
-            }
-            for c in 0..nlist {
-                if counts[c] == 0 {
-                    // Re-seed empty cell with a random point.
-                    let p = rng.below(n);
-                    centroids[c * dim..(c + 1) * dim].copy_from_slice(&data[p * dim..(p + 1) * dim]);
-                } else {
-                    for k in 0..dim {
-                        centroids[c * dim + k] = (sums[c * dim + k] / counts[c] as f64) as f32;
-                    }
-                }
-            }
-        }
+        let centroids = kmeans_train(data, dim, metric, nlist, train_iters, &mut rng);
 
         // Final assignment into inverted lists.
         let mut lists = vec![Vec::new(); nlist];
@@ -113,11 +79,17 @@ impl IvfFlatIndex {
     }
 
     /// Approximate k-NN search scanning the `nprobe` closest cells.
+    /// `nprobe` is clamped to `[1, nlist]`; a query whose dimensionality
+    /// does not match the index is rejected (never scanned as garbage).
     pub fn search(&self, query: &[f32], k: usize, nprobe: usize) -> Result<Vec<Neighbor>> {
         if query.len() != self.dim {
-            return Err(OpdrError::shape("ivf search: query dim mismatch"));
+            return Err(OpdrError::shape(format!(
+                "ivf search: query dim {} != index dim {}",
+                query.len(),
+                self.dim
+            )));
         }
-        let nprobe = nprobe.max(1).min(self.nlist);
+        let nprobe = nprobe.clamp(1, self.nlist);
         // Rank cells by centroid distance.
         let cdists: Vec<f32> = (0..self.nlist)
             .map(|c| self.metric.distance(query, &self.centroids[c * self.dim..(c + 1) * self.dim]))
@@ -171,7 +143,58 @@ impl IvfFlatIndex {
     }
 }
 
-fn nearest_centroid(x: &[f32], centroids: &[f32], dim: usize, metric: Metric) -> usize {
+/// Lloyd k-means over row-major data: random distinct seeding, `train_iters`
+/// assign/update rounds, empty cells re-seeded from random points. Returns
+/// `nlist × dim` centroids. Deterministic given the RNG state; shared by
+/// [`IvfFlatIndex`] and the coarse quantizer of [`crate::index::IvfIndex`].
+pub(crate) fn kmeans_train(
+    data: &[f32],
+    dim: usize,
+    metric: Metric,
+    nlist: usize,
+    train_iters: usize,
+    rng: &mut Rng,
+) -> Vec<f32> {
+    let n = data.len() / dim;
+    debug_assert!(nlist >= 1 && nlist <= n);
+    let picks = rng.sample_indices(n, nlist);
+    let mut centroids = vec![0.0f32; nlist * dim];
+    for (c, &p) in picks.iter().enumerate() {
+        centroids[c * dim..(c + 1) * dim].copy_from_slice(&data[p * dim..(p + 1) * dim]);
+    }
+
+    let mut assign = vec![0usize; n];
+    for _ in 0..train_iters {
+        // Assign.
+        for i in 0..n {
+            assign[i] = nearest_centroid(&data[i * dim..(i + 1) * dim], &centroids, dim, metric);
+        }
+        // Update.
+        let mut sums = vec![0.0f64; nlist * dim];
+        let mut counts = vec![0usize; nlist];
+        for i in 0..n {
+            let c = assign[i];
+            counts[c] += 1;
+            for k in 0..dim {
+                sums[c * dim + k] += data[i * dim + k] as f64;
+            }
+        }
+        for c in 0..nlist {
+            if counts[c] == 0 {
+                // Re-seed empty cell with a random point.
+                let p = rng.below(n);
+                centroids[c * dim..(c + 1) * dim].copy_from_slice(&data[p * dim..(p + 1) * dim]);
+            } else {
+                for k in 0..dim {
+                    centroids[c * dim + k] = (sums[c * dim + k] / counts[c] as f64) as f32;
+                }
+            }
+        }
+    }
+    centroids
+}
+
+pub(crate) fn nearest_centroid(x: &[f32], centroids: &[f32], dim: usize, metric: Metric) -> usize {
     let nlist = centroids.len() / dim;
     let mut best = 0usize;
     let mut best_d = f32::INFINITY;
@@ -251,6 +274,22 @@ mod tests {
         let data = clustered_data(10, 4, 1);
         let idx = IvfFlatIndex::build(&data, 4, Metric::Euclidean, 2, 5, 1).unwrap();
         assert!(idx.search(&[1.0; 3], 2, 1).is_err());
+    }
+
+    #[test]
+    fn dim_mismatch_error_is_descriptive_and_nprobe_clamped() {
+        let data = clustered_data(10, 4, 1);
+        let idx = IvfFlatIndex::build(&data, 4, Metric::Euclidean, 4, 5, 1).unwrap();
+        let e = idx.search(&[1.0; 6], 2, 1).unwrap_err().to_string();
+        assert!(e.contains("query dim 6") && e.contains("index dim 4"), "{e}");
+        // nprobe 0 and nprobe far above nlist both clamp instead of panicking.
+        assert_eq!(idx.search(&[1.0; 4], 2, 0).unwrap().len(), 2);
+        let full = idx.search(&[1.0; 4], 2, usize::MAX).unwrap();
+        let exact = crate::knn::knn_indices(&[1.0; 4], &data, 4, 2, Metric::Euclidean).unwrap();
+        assert_eq!(
+            full.iter().map(|n| n.index).collect::<Vec<_>>(),
+            exact.iter().map(|n| n.index).collect::<Vec<_>>()
+        );
     }
 
     #[test]

@@ -13,6 +13,11 @@
 //!   ([`reduction`]);
 //! * the **retrieval substrates** — distance metrics, exact KNN, top-k
 //!   selection, an IVF-Flat ANN index ([`metrics`], [`knn`]);
+//! * the **ANN index subsystem** — a pluggable [`index::AnnIndex`] layer with
+//!   exact, IVF-Flat and deterministic HNSW substrates, optional SQ8 scalar
+//!   quantization of the serving copy, and index persistence through the
+//!   versioned `OPDR` binary format; the coordinator picks a substrate per
+//!   collection via a config-driven [`config::IndexPolicy`] ([`index`]);
 //! * the **multimodal data substrates** — synthetic generators standing in for
 //!   the paper's seven datasets, plus an embedding store ([`data`]);
 //! * the **runtime** — a PJRT engine that loads AOT-compiled HLO artifacts
@@ -31,6 +36,7 @@ pub mod coordinator;
 pub mod data;
 pub mod embed;
 pub mod error;
+pub mod index;
 pub mod knn;
 pub mod linalg;
 pub mod metrics;

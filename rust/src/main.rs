@@ -57,6 +57,9 @@ fn print_help() {
            figure     --id <1..6|esc50> [--seed S]\n\
            experiment --config configs/<file>.toml\n\
            serve-demo [--n N] [--dim D] [--queries Q] [--use-runtime]\n\
+                      [--index exact|ivf|hnsw] [--sq8] [--hnsw-m M]\n\
+                      [--hnsw-ef-search EF] [--ivf-threshold T]\n\
+                      [--save-index file.opdx]\n\
            artifacts  [--dir artifacts]\n\n\
          DATASETS: {}\n",
         DatasetKind::ALL.map(|d| d.name()).join(", ")
@@ -214,19 +217,49 @@ fn cmd_experiment(args: &mut Args) -> Result<()> {
 fn cmd_serve_demo(args: &mut Args) -> Result<()> {
     use opdr::config::ServeConfig;
     use opdr::coordinator::Coordinator;
+    use opdr::index::IndexKind;
     let n = args.get_usize_or("n", 2000)?;
     let dim = args.get_usize_or("dim", 256)?;
     let queries = args.get_usize_or("queries", 500)?;
     let use_runtime = args.has("use-runtime");
+    let index_flag = args.get("index").map(str::to_string);
+    let index_name = index_flag.clone().unwrap_or_else(|| "ivf".to_string());
+    let index_sq8 = args.has("sq8");
+    let hnsw_m = args.get_usize_or("hnsw-m", 16)?;
+    let hnsw_ef_search = args.get_usize_or("hnsw-ef-search", 64)?;
+    let ivf_threshold = args.get_usize_or("ivf-threshold", ServeConfig::default().ivf_threshold)?;
+    let save_index = args.get("save-index").map(str::to_string);
     args.finish()?;
 
-    let cfg = ServeConfig { use_runtime, ..Default::default() };
+    let index_kind = IndexKind::parse(&index_name)
+        .ok_or_else(|| OpdrError::config(format!("unknown --index `{index_name}`")))?;
+    let cfg = ServeConfig {
+        use_runtime,
+        index_kind,
+        index_sq8,
+        hnsw_m,
+        hnsw_ef_search,
+        ivf_threshold,
+        ..Default::default()
+    };
     let coord = Coordinator::start(cfg)?;
     coord.create_collection("demo", dim, Metric::SqEuclidean)?;
     let set = synth::generate(DatasetKind::Flickr30k, n, dim, 42);
     coord.ingest("demo", set.data().to_vec())?;
     let planned = coord.build_reduced("demo", 0.9, 10)?;
-    println!("ingested {n} vectors (dim {dim}); OPDR planned serving dim = {planned}");
+    // BuildReduced only auto-indexes above the size threshold; when the user
+    // asked for an index explicitly, build it regardless so the flags (and
+    // --save-index) always take effect.
+    let index_requested = index_flag.is_some() || index_sq8 || save_index.is_some();
+    if index_requested {
+        coord.build_index("demo")?;
+    }
+    println!(
+        "ingested {n} vectors (dim {dim}); OPDR planned serving dim = {planned}; \
+         index policy = {}{}",
+        index_kind.name(),
+        if index_sq8 { "+sq8" } else { "" }
+    );
 
     let sw = opdr::util::Stopwatch::start();
     let mut rxs = Vec::new();
@@ -245,6 +278,10 @@ fn cmd_serve_demo(args: &mut Args) -> Result<()> {
     let secs = sw.elapsed_secs();
     println!("completed {ok}/{queries} queries in {secs:.2}s ({:.0} qps)", ok as f64 / secs);
     println!("{}", coord.stats()?);
+    if let Some(path) = save_index {
+        coord.save_index("demo", &path)?;
+        println!("saved index segment to {path}");
+    }
     coord.shutdown();
     Ok(())
 }

@@ -126,6 +126,135 @@ fn admin_errors_propagate_to_caller() {
     coord.shutdown();
 }
 
+/// Tentpole acceptance: `BuildReduced` → HNSW-indexed search where the
+/// substrate is selected by the config-driven `IndexPolicy` (parsed from
+/// TOML, not constructed in code), with recall@10 ≥ 0.9 against exact KNN
+/// over the same reduced space.
+#[test]
+fn build_reduced_with_hnsw_policy_reaches_recall() {
+    let n = 500;
+    let dim = 64;
+    let k = 10;
+    // Synthetic multimodal collection (Flickr30k regime: image+text concat).
+    let set = synth::generate(DatasetKind::Flickr30k, n, dim, 21);
+
+    // Run the same deterministic pipeline under two configs that differ only
+    // in indexing: HNSW policy vs. no index (exact scan over the identical
+    // reduced space, since BuildReduced seeds are fixed inside the server).
+    let run = |toml: &str| -> Vec<Vec<usize>> {
+        let cfg = opdr::config::ServeConfig::from_toml_str(toml).unwrap();
+        let coord = Coordinator::start(cfg).unwrap();
+        coord.create_collection("mm", dim, Metric::SqEuclidean).unwrap();
+        coord.ingest("mm", set.data().to_vec()).unwrap();
+        let planned = coord.build_reduced("mm", 0.9, k).unwrap();
+        assert!(planned >= 1 && planned <= dim);
+        let mut out = Vec::new();
+        for qi in 0..40 {
+            let res = coord.search("mm", set.vector(qi).to_vec(), k).unwrap();
+            assert_eq!(res.scored_dim, planned);
+            out.push(res.neighbors.iter().map(|nb| nb.index).collect());
+        }
+        coord.shutdown();
+        out
+    };
+
+    let hnsw_toml = "[serve]\nworkers = 2\nmax_batch = 8\nmax_wait_ms = 1\n\
+                     ivf_threshold = 100\nindex_kind = \"hnsw\"\nhnsw_ef_search = 128\n";
+    let exact_toml = "[serve]\nworkers = 2\nmax_batch = 8\nmax_wait_ms = 1\n\
+                      ivf_threshold = 1000000\n";
+    let hnsw = run(hnsw_toml);
+    let exact = run(exact_toml);
+
+    let mut hits = 0usize;
+    for (h, e) in hnsw.iter().zip(&exact) {
+        let got: std::collections::HashSet<usize> = h.iter().copied().collect();
+        hits += e.iter().filter(|i| got.contains(*i)).count();
+    }
+    let recall = hits as f64 / (40 * k) as f64;
+    assert!(recall >= 0.9, "hnsw recall@{k} vs exact = {recall}");
+
+    // The config-selected substrate must actually be HNSW.
+    let cfg = opdr::config::ServeConfig::from_toml_str(hnsw_toml).unwrap();
+    let coord = Coordinator::start(cfg).unwrap();
+    coord.create_collection("mm", dim, Metric::SqEuclidean).unwrap();
+    coord.ingest("mm", set.data().to_vec()).unwrap();
+    coord.build_reduced("mm", 0.9, k).unwrap();
+    let stats = coord.stats().unwrap();
+    assert!(stats.contains("kind=hnsw"), "{stats}");
+    coord.shutdown();
+}
+
+/// Tentpole acceptance: an HNSW+SQ8 index survives a save/load round-trip
+/// with bit-identical search results, served through the coordinator.
+#[test]
+fn hnsw_sq8_index_survives_restart_bit_identical() {
+    let n = 300;
+    let dim = 32;
+    let k = 8;
+    let set = synth::generate(DatasetKind::Esc50, n, dim, 13);
+    let dir = std::env::temp_dir().join(format!("opdr_it_idx_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("mm.opdx");
+    let path_str = path.to_str().unwrap();
+
+    let cfg = ServeConfig {
+        workers: 2,
+        ivf_threshold: 50,
+        index_kind: opdr::index::IndexKind::Hnsw,
+        index_sq8: true,
+        hnsw_ef_search: 96,
+        ..Default::default()
+    };
+
+    // First "process": build, search, persist.
+    let before: Vec<Vec<(usize, u32)>>;
+    {
+        let coord = Coordinator::start(cfg.clone()).unwrap();
+        coord.create_collection("mm", dim, Metric::SqEuclidean).unwrap();
+        coord.ingest("mm", set.data().to_vec()).unwrap();
+        coord.build_index("mm").unwrap();
+        let stats = coord.stats().unwrap();
+        assert!(stats.contains("kind=hnsw") && stats.contains("quantized=true"), "{stats}");
+        before = (0..20)
+            .map(|qi| {
+                coord
+                    .search("mm", set.vector(qi).to_vec(), k)
+                    .unwrap()
+                    .neighbors
+                    .iter()
+                    .map(|nb| (nb.index, nb.distance.to_bits()))
+                    .collect()
+            })
+            .collect();
+        coord.save_index("mm", path_str).unwrap();
+        coord.shutdown();
+    }
+
+    // Second "process": same data, index loaded from disk instead of rebuilt.
+    {
+        let coord = Coordinator::start(cfg).unwrap();
+        coord.create_collection("mm", dim, Metric::SqEuclidean).unwrap();
+        coord.ingest("mm", set.data().to_vec()).unwrap();
+        coord.load_index("mm", path_str).unwrap();
+        for (qi, want) in before.iter().enumerate() {
+            let got: Vec<(usize, u32)> = coord
+                .search("mm", set.vector(qi).to_vec(), k)
+                .unwrap()
+                .neighbors
+                .iter()
+                .map(|nb| (nb.index, nb.distance.to_bits()))
+                .collect();
+            assert_eq!(&got, want, "query {qi} diverged after reload");
+        }
+        // Loading into a mismatched collection must fail loudly.
+        coord.create_collection("other", dim + 1, Metric::SqEuclidean).unwrap();
+        coord.ingest("other", vec![0.0; (dim + 1) * 10]).unwrap();
+        assert!(coord.load_index("other", path_str).is_err());
+        coord.shutdown();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 #[test]
 fn ivf_index_served_collection() {
     let cfg = ServeConfig {

@@ -191,6 +191,94 @@ fn prop_topk_matches_sort_under_duplicates() {
 }
 
 #[test]
+fn prop_topk_full_oracle_under_nans_ties_and_large_k() {
+    // The tie-break contract every index substrate relies on: results equal
+    // the full sort of the finite entries by (value, index), NaNs skipped,
+    // k ≥ len returns everything finite, and returned distances are the
+    // source values bit-for-bit.
+    forall(
+        PropConfig { cases: 120, seed: 808 },
+        |rng| {
+            let n = rng.below(60); // includes the empty slice
+            let vals: Vec<f32> = (0..n)
+                .map(|_| match rng.below(8) {
+                    0 => f32::NAN,
+                    1 => 0.25, // heavy ties
+                    2 => -0.25,
+                    3 => f32::INFINITY,
+                    4 => 0.0,
+                    _ => rng.normal() as f32,
+                })
+                .collect();
+            let k = rng.below(80); // 0, < len, and >= len all exercised
+            (vals, k)
+        },
+        |(vals, k)| {
+            let fast = opdr::knn::top_k_smallest(vals, *k);
+            let mut idx: Vec<usize> = (0..vals.len()).filter(|&i| !vals[i].is_nan()).collect();
+            idx.sort_by(|&a, &b| vals[a].partial_cmp(&vals[b]).unwrap().then(a.cmp(&b)));
+            let want: Vec<usize> = idx.into_iter().take(*k).collect();
+            let got: Vec<usize> = fast.iter().map(|x| x.0).collect();
+            if got != want {
+                return Err(format!("topk {got:?} != oracle {want:?}"));
+            }
+            for &(i, d) in &fast {
+                if d.to_bits() != vals[i].to_bits() {
+                    return Err(format!("value at {i} not preserved: {d} vs {}", vals[i]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_index_substrates_agree_with_exact_at_full_beam() {
+    // With exhaustive parameters (full probe / ef ≥ n) every substrate must
+    // return exactly the brute-force ranking — same indices, same order.
+    use opdr::config::IndexPolicy;
+    use opdr::index::{build_index, AnnIndex as _, IndexKind};
+    forall(
+        PropConfig { cases: 12, seed: 909 },
+        |rng| {
+            let (data, dim, m) = gen::embedding_block(rng, 10, 40, 2, 8);
+            let q = rng.normal_vec_f32(dim);
+            let k = 1 + rng.below(m.min(8));
+            (data, dim, q, k)
+        },
+        |(data, dim, q, k)| {
+            let exact =
+                opdr::knn::knn_indices(q, data, *dim, *k, Metric::SqEuclidean)
+                    .map_err(|e| e.to_string())?;
+            let want: Vec<usize> = exact.iter().map(|n| n.index).collect();
+            let n = data.len() / dim;
+            for kind in [IndexKind::Exact, IndexKind::Ivf, IndexKind::Hnsw] {
+                // Exhaustive parameters: full IVF probe; HNSW degree cap 2m ≥ n
+                // (no pruning can disconnect) with beam ef ≥ n (visits the
+                // whole component), so every substrate must be exact.
+                let policy = IndexPolicy {
+                    kind,
+                    exact_threshold: 0,
+                    ivf_nlist: n,
+                    ivf_nprobe: n,
+                    hnsw_m: n.max(2),
+                    hnsw_ef_search: 4 * n,
+                    ..Default::default()
+                };
+                let idx = build_index(data, *dim, Metric::SqEuclidean, &policy, 5)
+                    .map_err(|e| e.to_string())?;
+                let got: Vec<usize> =
+                    idx.search(q, *k).map_err(|e| e.to_string())?.iter().map(|n| n.index).collect();
+                if got != want {
+                    return Err(format!("{}: {got:?} != exact {want:?}", kind.name()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_store_roundtrip() {
     forall(
         PropConfig { cases: 20, seed: 707 },

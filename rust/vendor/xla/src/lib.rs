@@ -1,0 +1,166 @@
+//! API-compatible stub of the `xla` PJRT bindings used by the OPDR runtime.
+//!
+//! The offline build environment has no XLA/PJRT shared libraries, so this
+//! crate provides just enough of the binding surface for the `opdr` crate to
+//! compile and for its runtime layer to fail *loudly and lazily*: client
+//! construction and manifest handling work, but loading an HLO artifact
+//! returns an error. The coordinator already treats a failed engine as
+//! "runtime disabled" and falls back to the pure-Rust scoring path, so the
+//! system degrades gracefully.
+//!
+//! Swapping this path dependency for the real `xla` bindings re-enables the
+//! PJRT execution path with no changes to `opdr` itself.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` (message-only in the stub).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    /// Construct from a message.
+    pub fn new(msg: impl Into<String>) -> Self {
+        Error(msg.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "xla stub: {what} unavailable (offline build without PJRT; \
+         swap rust/vendor/xla for the real bindings to enable it)"
+    ))
+}
+
+/// PJRT client handle. Construction succeeds so that manifest-level engine
+/// operations (validation, lazy artifact errors) behave like the real crate.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// CPU client. Always succeeds in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    /// Platform name advertised by the client.
+    pub fn platform_name(&self) -> String {
+        "cpu (xla stub)".to_string()
+    }
+
+    /// Compile a computation. Unreachable in practice because HLO loading
+    /// fails first; errors defensively if called.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compilation"))
+    }
+}
+
+/// Parsed HLO module proto.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse an HLO text file. The stub reports a missing file distinctly
+    /// from its own lack of a parser, so failure-injection tests see the
+    /// same error classes as with the real bindings.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        if !std::path::Path::new(path).exists() {
+            return Err(Error(format!("hlo artifact not found: {path}")));
+        }
+        Err(unavailable("HLO parsing"))
+    }
+}
+
+/// An XLA computation wrapping a module proto.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a proto (no-op in the stub).
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// A compiled, loaded executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with positional literal arguments.
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("execution"))
+    }
+}
+
+/// A device buffer produced by execution.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("device-to-host transfer"))
+    }
+}
+
+/// A host-side tensor literal.
+pub struct Literal;
+
+impl Literal {
+    /// Build a rank-1 f32 literal.
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal)
+    }
+
+    /// Destructure a tuple literal.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("tuple literals"))
+    }
+
+    /// Read out the payload as a typed vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable("literal readback"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_constructs_and_names_platform() {
+        let c = PjRtClient::cpu().unwrap();
+        assert!(c.platform_name().contains("stub"));
+    }
+
+    #[test]
+    fn missing_hlo_file_reported_distinctly() {
+        let e = HloModuleProto::from_text_file("/definitely/not/here.hlo.txt").unwrap_err();
+        assert!(e.to_string().contains("not found"), "{e}");
+    }
+
+    #[test]
+    fn present_hlo_file_fails_with_stub_error() {
+        let dir = std::env::temp_dir().join(format!("xla_stub_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("toy.hlo.txt");
+        std::fs::write(&p, "HloModule toy").unwrap();
+        let e = HloModuleProto::from_text_file(p.to_str().unwrap()).unwrap_err();
+        assert!(e.to_string().contains("stub"), "{e}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
