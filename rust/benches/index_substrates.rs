@@ -11,6 +11,7 @@
 
 use opdr::bench_support::{section, Bencher};
 use opdr::config::IndexPolicy;
+use opdr::coordinator::ThreadPool;
 use opdr::data::{synth, DatasetKind};
 use opdr::index::{build_index, AnnIndex, IndexKind};
 use opdr::knn::knn_indices;
@@ -19,6 +20,7 @@ use opdr::opdr::Planner;
 use opdr::reduction::{Pca, ReducerKind};
 use opdr::report::{write_csv, Table};
 use opdr::util::Stopwatch;
+use std::sync::Arc;
 
 const N: usize = 4000;
 const NQ: usize = 200;
@@ -150,5 +152,93 @@ fn main() {
         "\nreading: exact is the recall ceiling and the QPS floor; IVF trades recall\n\
          for probe-bounded scans; HNSW holds recall near 1.0 at graph-walk cost;\n\
          SQ8 shrinks the resident copy ~4x with a small asymmetric-distance penalty."
+    );
+
+    // ---------------------------------------------------------------
+    // Shard-count axis: S ∈ {1, 2, 4, 8} — serial vs pool build time,
+    // fan-out QPS, recall@10. Results land in BENCH_shards.json.
+    // ---------------------------------------------------------------
+    let workers = 4usize;
+    section(&format!(
+        "shard-count axis over {N} vectors at dim {dim}: S in {{1,2,4,8}}, {workers} workers"
+    ));
+    let pool = ThreadPool::new(workers);
+    let base_arc = Arc::new(base.clone());
+    let mut shard_table =
+        Table::new(&["substrate", "S", "build ms", "pool build ms", "recall@10", "qps"]);
+    let mut json_rows: Vec<String> = Vec::new();
+    for (name, kind) in [("exact", IndexKind::Exact), ("hnsw", IndexKind::Hnsw)] {
+        for s in [1usize, 2, 4, 8] {
+            let policy = IndexPolicy {
+                kind,
+                exact_threshold: 0,
+                shards: s,
+                shard_min_vectors: 1,
+                ..Default::default()
+            };
+            let sw = Stopwatch::start();
+            let idx = build_index(&base, dim, METRIC, &policy, 9).expect("build sharded");
+            let build_ms = sw.elapsed_ns() / 1e6;
+            assert_eq!(idx.as_sharded().map_or(1, |sh| sh.num_shards()), s);
+
+            let sw = Stopwatch::start();
+            let (tx, rx) = std::sync::mpsc::channel();
+            opdr::index::shard::build_on_pool(
+                Arc::clone(&base_arc),
+                dim,
+                METRIC,
+                &policy,
+                9,
+                &pool,
+                move |r| {
+                    let _ = tx.send(r);
+                },
+            );
+            let pooled = rx.recv().expect("collector").expect("pool build");
+            let pool_build_ms = sw.elapsed_ns() / 1e6;
+            drop(pooled);
+
+            let recall = recall_at_k(idx.as_ref(), &queries, dim, &truth);
+            let r = bencher.run_items(&format!("{name} S={s}"), NQ as u64, || {
+                for qi in 0..NQ {
+                    let q = &queries[qi * dim..(qi + 1) * dim];
+                    let out = match idx.as_sharded() {
+                        Some(sh) => sh.search_on(&pool, q, K).unwrap(),
+                        None => idx.search(q, K).unwrap(),
+                    };
+                    std::hint::black_box(out.len());
+                }
+            });
+            let qps = r.throughput().unwrap_or(0.0);
+            shard_table.row(&[
+                name.to_string(),
+                s.to_string(),
+                format!("{build_ms:.1}"),
+                format!("{pool_build_ms:.1}"),
+                format!("{recall:.3}"),
+                format!("{qps:.0}"),
+            ]);
+            json_rows.push(format!(
+                "{{\"substrate\":\"{name}\",\"shards\":{s},\"build_ms\":{build_ms:.3},\
+                 \"pool_build_ms\":{pool_build_ms:.3},\"recall_at_10\":{recall:.4},\
+                 \"qps\":{qps:.1}}}"
+            ));
+        }
+    }
+    println!("{}", shard_table.render());
+    let json = format!(
+        "{{\"bench\":\"index_shards\",\"n\":{N},\"dim\":{dim},\"k\":{K},\
+         \"pool_workers\":{workers},\"rows\":[\n  {}\n]}}\n",
+        json_rows.join(",\n  ")
+    );
+    std::fs::create_dir_all("bench_out").expect("bench_out dir");
+    std::fs::write("bench_out/BENCH_shards.json", json).expect("write BENCH_shards.json");
+    println!("wrote bench_out/BENCH_shards.json");
+
+    println!(
+        "\nreading: builds parallelize near-linearly in S on the pool (HNSW\n\
+         construction dominates); exact fan-out QPS dips at small N (merge\n\
+         overhead) and the sharded merge keeps recall pinned to the\n\
+         single-segment value for exact — order-exactness costs nothing."
     );
 }

@@ -226,6 +226,13 @@ pub struct IndexPolicy {
     pub hnsw_ef_construction: usize,
     /// HNSW: search beam width.
     pub hnsw_ef_search: usize,
+    /// Split a collection into up to this many index segments: segments
+    /// build in parallel on the worker pool and queries fan out per shard
+    /// and merge order-exactly (see [`crate::index::shard`]). 1 = unsharded.
+    pub shards: usize,
+    /// Never create a shard with fewer rows than this (small collections
+    /// degrade to fewer shards — sharding only pays off at scale).
+    pub shard_min_vectors: usize,
 }
 
 impl Default for IndexPolicy {
@@ -240,6 +247,8 @@ impl Default for IndexPolicy {
             hnsw_m: 16,
             hnsw_ef_construction: 100,
             hnsw_ef_search: 64,
+            shards: 1,
+            shard_min_vectors: 1024,
         }
     }
 }
@@ -247,6 +256,12 @@ impl Default for IndexPolicy {
 impl IndexPolicy {
     /// Validate invariants.
     pub fn validate(&self) -> Result<()> {
+        if self.shards == 0 || self.shards > crate::index::shard::MAX_SHARDS {
+            return Err(OpdrError::config(format!(
+                "index: shards must be in [1, {}]",
+                crate::index::shard::MAX_SHARDS
+            )));
+        }
         if self.ivf_nlist == 0 {
             return Err(OpdrError::config("index: ivf_nlist must be >= 1"));
         }
@@ -297,6 +312,10 @@ pub struct ServeConfig {
     pub hnsw_ef_construction: usize,
     /// HNSW search beam width.
     pub hnsw_ef_search: usize,
+    /// Index segments per collection (parallel builds + query fan-out).
+    pub shards: usize,
+    /// Minimum rows per index segment.
+    pub shard_min_vectors: usize,
 }
 
 impl Default for ServeConfig {
@@ -317,6 +336,8 @@ impl Default for ServeConfig {
             hnsw_m: 16,
             hnsw_ef_construction: 100,
             hnsw_ef_search: 64,
+            shards: 1,
+            shard_min_vectors: 1024,
         }
     }
 }
@@ -366,6 +387,8 @@ impl ServeConfig {
                         cfg.hnsw_ef_construction = pos_int(val, "serve", key)?
                     }
                     "hnsw_ef_search" => cfg.hnsw_ef_search = pos_int(val, "serve", key)?,
+                    "shards" => cfg.shards = pos_int(val, "serve", key)?,
+                    "shard_min_vectors" => cfg.shard_min_vectors = pos_int(val, "serve", key)?,
                     other => {
                         return Err(OpdrError::config(format!("serve: unknown key `{other}`")))
                     }
@@ -409,6 +432,8 @@ impl ServeConfig {
             hnsw_m: self.hnsw_m,
             hnsw_ef_construction: self.hnsw_ef_construction,
             hnsw_ef_search: self.hnsw_ef_search,
+            shards: self.shards,
+            shard_min_vectors: self.shard_min_vectors,
         }
     }
 }
@@ -505,6 +530,26 @@ k = 5
         // Defaults flow through untouched keys.
         assert_eq!(p.hnsw_ef_construction, 100);
         assert_eq!(ServeConfig::from_toml_str("").unwrap().index_kind, IndexKind::Ivf);
+    }
+
+    #[test]
+    fn serve_shard_keys_flow_into_policy() {
+        let cfg = ServeConfig::from_toml_str(
+            "[serve]\nshards = 8\nshard_min_vectors = 256",
+        )
+        .unwrap();
+        assert_eq!(cfg.shards, 8);
+        assert_eq!(cfg.shard_min_vectors, 256);
+        let p = cfg.index_policy();
+        assert_eq!(p.shards, 8);
+        assert_eq!(p.shard_min_vectors, 256);
+        // Defaults stay unsharded.
+        let d = ServeConfig::from_toml_str("").unwrap();
+        assert_eq!(d.shards, 1);
+        assert_eq!(d.index_policy().shard_min_vectors, 1024);
+        // shards = 0 and absurd counts are rejected.
+        assert!(ServeConfig::from_toml_str("[serve]\nshards = 0").is_err());
+        assert!(ServeConfig::from_toml_str("[serve]\nshards = 100000").is_err());
     }
 
     #[test]

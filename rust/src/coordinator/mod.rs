@@ -8,17 +8,17 @@
 //!   drains the queue through the **dynamic batcher** ([`batcher`]) and
 //!   executes search batches either on the PJRT `pairwise_topk` artifact or
 //!   on the pure-Rust scoring path parallelized over a **worker pool**
-//!   ([`pool`]);
+//!   ([`crate::pool`] — shared with the index subsystem's segment builds
+//!   and shard fan-out);
 //! * OPDR is a first-class verb: `BuildReduced` calibrates the planner on the
 //!   collection, picks `dim(Y)` for the requested accuracy and swaps the
 //!   serving copy to the reduced space.
 
 pub mod batcher;
-pub mod pool;
 pub mod server;
 pub mod state;
 
 pub use batcher::{collect_batch, BatchPolicy, CollectOutcome};
-pub use pool::ThreadPool;
+pub use crate::pool::ThreadPool;
 pub use server::{Coordinator, SearchResult};
-pub use state::{Collection, Collections, ReducedState};
+pub use state::{Collection, Collections, IndexSlot, ReducedState};

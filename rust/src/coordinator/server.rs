@@ -2,15 +2,16 @@
 
 use crate::config::ServeConfig;
 use crate::coordinator::batcher::{collect_batch, BatchPolicy, CollectOutcome};
-use crate::coordinator::pool::ThreadPool;
 use crate::coordinator::state::Collections;
 use crate::error::{OpdrError, Result};
 use crate::index::AnnIndex as _;
 use crate::knn::Neighbor;
 use crate::metrics::Metric;
+use crate::pool::ThreadPool;
 use crate::runtime::Engine;
 use crate::telemetry::Metrics;
 use crate::util::Stopwatch;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -204,6 +205,11 @@ impl Drop for Coordinator {
 fn scheduler_loop(rx: Receiver<Request>, cfg: ServeConfig, metrics: Arc<Metrics>) {
     let mut collections = Collections::new();
     let pool = ThreadPool::new(cfg.workers);
+    // Background segment builds in flight on the pool. While nonzero, search
+    // batches avoid the pool (their jobs would queue behind multi-second
+    // build jobs) and run indexed searches inline instead — this is what
+    // keeps "serving never blocks on a rebuild" true with one shared pool.
+    let builds_in_flight = Arc::new(AtomicUsize::new(0));
     // The engine is created lazily so a missing artifacts dir only matters if
     // runtime execution was requested.
     let engine: Option<Engine> = if cfg.use_runtime {
@@ -232,21 +238,25 @@ fn scheduler_loop(rx: Receiver<Request>, cfg: ServeConfig, metrics: Arc<Metrics>
         // Partition: admin ops execute serially in arrival order relative to
         // the searches around them would require per-collection versioning;
         // we keep the simpler (and documented) model: admin ops in a batch
-        // run first, then searches.
+        // run first, then searches. (`BuildIndex` only *starts* here — the
+        // segment builds run on the pool and the response is deferred to the
+        // atomic swap, so a long rebuild never stalls this loop.)
         let mut searches = Vec::new();
         let mut stop = false;
         for req in batch.drain(..) {
             match req {
                 Request::Shutdown => stop = true,
                 Request::Admin(op, resp) => {
-                    let r = handle_admin(op, &mut collections, &cfg, &metrics);
-                    let _ = resp.send(r);
+                    let builds = &builds_in_flight;
+                    handle_admin(op, &mut collections, &cfg, &metrics, &pool, builds, resp)
                 }
                 s @ Request::Search { .. } => searches.push(s),
             }
         }
         if !searches.is_empty() {
-            execute_search_batch(searches, &collections, &pool, engine.as_ref(), &metrics);
+            let pool_free = builds_in_flight.load(Ordering::SeqCst) == 0;
+            let engine = engine.as_ref();
+            execute_search_batch(searches, &collections, &pool, pool_free, engine, &metrics);
         }
         if stop {
             break;
@@ -254,10 +264,101 @@ fn scheduler_loop(rx: Receiver<Request>, cfg: ServeConfig, metrics: Arc<Metrics>
     }
 }
 
+/// Execute one admin op and answer `resp`. Most ops run synchronously on
+/// the scheduler thread; index (re)builds never do — `BuildIndex` (and the
+/// re-index step of `BuildReduced`) snapshot the collection, fan
+/// whole-segment builds out to the worker pool and defer the response
+/// until the finished index is atomically swapped in, while the scheduler
+/// keeps draining search batches (`builds_in_flight` steers those batches
+/// off the pool for the rebuild's duration).
 fn handle_admin(
     op: AdminOp,
     collections: &mut Collections,
     cfg: &ServeConfig,
+    metrics: &Metrics,
+    pool: &ThreadPool,
+    builds_in_flight: &Arc<AtomicUsize>,
+    resp: Sender<Result<String>>,
+) {
+    match op {
+        AdminOp::BuildIndex { collection } => {
+            let b = builds_in_flight;
+            spawn_build(collections, &collection, "ok".into(), false, cfg, pool, b, resp);
+        }
+        AdminOp::BuildReduced { collection, target_accuracy, k } => {
+            // The reduction itself (planner calibration + PCA projection)
+            // mutates the collection and runs here; the follow-up re-index
+            // goes through the pool like any other build.
+            let reduced = collections.get_mut(&collection).and_then(|c| {
+                c.build_reduced(target_accuracy, k, 64, 0xC0DE).map(|r| r.model.target_dim())
+            });
+            match reduced {
+                Ok(dim) => {
+                    let big_enough =
+                        collections.get(&collection).map_or(0, |c| c.len()) >= cfg.ivf_threshold;
+                    if big_enough {
+                        let msg = dim.to_string();
+                        let b = builds_in_flight;
+                        spawn_build(collections, &collection, msg, true, cfg, pool, b, resp);
+                    } else {
+                        let _ = resp.send(Ok(dim.to_string()));
+                    }
+                }
+                Err(e) => {
+                    let _ = resp.send(Err(e));
+                }
+            }
+        }
+        other => {
+            let _ = resp.send(handle_admin_sync(other, collections, metrics));
+        }
+    }
+}
+
+/// Dispatch an index build for `collection` onto the worker pool; the
+/// deferred response maps a successful atomic swap to `ok_msg`. When a
+/// racing ingest invalidates the snapshot mid-build, the stale index is
+/// discarded; `stale_ok` decides whether that still answers `ok_msg`
+/// (BuildReduced: the reduction itself succeeded and serving falls back to
+/// the exact scan) or reports the discarded build (explicit BuildIndex).
+#[allow(clippy::too_many_arguments)]
+fn spawn_build(
+    collections: &Collections,
+    collection: &str,
+    ok_msg: String,
+    stale_ok: bool,
+    cfg: &ServeConfig,
+    pool: &ThreadPool,
+    builds_in_flight: &Arc<AtomicUsize>,
+    resp: Sender<Result<String>>,
+) {
+    match collections.get(collection) {
+        Ok(c) => {
+            builds_in_flight.fetch_add(1, Ordering::SeqCst);
+            let builds = Arc::clone(builds_in_flight);
+            let name = collection.to_string();
+            c.spawn_index_build(&cfg.index_policy(), 0xC0DE, pool, move |r| {
+                builds.fetch_sub(1, Ordering::SeqCst);
+                let out = match r {
+                    Ok(installed) if installed || stale_ok => Ok(ok_msg),
+                    Ok(_) => Err(OpdrError::coordinator(format!(
+                        "collection `{name}` changed during the index build; the stale \
+                         index was discarded — rebuild required"
+                    ))),
+                    Err(e) => Err(e),
+                };
+                let _ = resp.send(out);
+            });
+        }
+        Err(e) => {
+            let _ = resp.send(Err(e));
+        }
+    }
+}
+
+fn handle_admin_sync(
+    op: AdminOp,
+    collections: &mut Collections,
     metrics: &Metrics,
 ) -> Result<String> {
     match op {
@@ -269,20 +370,8 @@ fn handle_admin(
             let n = collections.get_mut(&collection)?.ingest(&vectors)?;
             Ok(n.to_string())
         }
-        AdminOp::BuildReduced { collection, target_accuracy, k } => {
-            let c = collections.get_mut(&collection)?;
-            let r = c.build_reduced(target_accuracy, k, 64, 0xC0DE)?;
-            let dim = r.model.target_dim();
-            // Re-index if the collection is large enough for the policy's
-            // ANN substrate to pay off.
-            if c.len() >= cfg.ivf_threshold {
-                c.build_index(&cfg.index_policy(), 0xC0DE)?;
-            }
-            Ok(dim.to_string())
-        }
-        AdminOp::BuildIndex { collection } => {
-            collections.get_mut(&collection)?.build_index(&cfg.index_policy(), 0xC0DE)?;
-            Ok("ok".into())
+        AdminOp::BuildReduced { .. } | AdminOp::BuildIndex { .. } => {
+            unreachable!("index builds are dispatched to the pool by handle_admin")
         }
         AdminOp::SaveIndex { collection, path } => {
             collections.get(&collection)?.save_index(&path)?;
@@ -297,10 +386,11 @@ fn handle_admin(
             for name in collections.names() {
                 let c = collections.get(&name)?;
                 let (_, sdim) = c.serving_vectors();
-                let indexed = match &c.index {
+                let indexed = match c.index() {
                     Some(ix) => format!(
-                        "true kind={} quantized={} index_bytes={}",
+                        "true kind={} shards={} quantized={} index_bytes={}",
                         ix.kind().name(),
+                        ix.as_sharded().map_or(1, |s| s.num_shards()),
                         ix.quantized(),
                         ix.memory_bytes()
                     ),
@@ -327,10 +417,26 @@ fn handle_admin(
     }
 }
 
+/// One query of a search batch: reject failed projections, run `search`,
+/// wrap the hits with the serving dimension. Shared by every scoring branch
+/// (indexed / brute, inline / pooled) of [`execute_search_batch`].
+fn run_one(
+    q: &[f32],
+    k: usize,
+    sdim: usize,
+    search: impl FnOnce(&[f32], usize) -> Result<Vec<Neighbor>>,
+) -> Result<SearchResult> {
+    if q.is_empty() {
+        return Err(OpdrError::shape("query projection failed"));
+    }
+    search(q, k).map(|neighbors| SearchResult { neighbors, scored_dim: sdim })
+}
+
 fn execute_search_batch(
     searches: Vec<Request>,
     collections: &Collections,
     pool: &ThreadPool,
+    pool_free: bool,
     engine: Option<&Engine>,
     metrics: &Metrics,
 ) {
@@ -401,35 +507,68 @@ fn execute_search_batch(
         // per batch — full-dim collections were paying a multi-MB memcpy here.
         let vecs_arc: Arc<Vec<f32>> = coll.serving_arc();
         let metric = coll.metric;
-        let has_index = coll.index.is_some();
-        let results: Vec<Vec<Result<SearchResult>>> = if has_index {
-            // Index search is cheap (sub-linear probes/beams); do it inline
-            // rather than fanning out to the pool.
-            vec![shared
-                .iter()
-                .map(|(q, k)| {
-                    if q.is_empty() {
-                        Err(OpdrError::shape("query projection failed"))
-                    } else {
-                        coll.search_projected(q, *k)
-                            .map(|neighbors| SearchResult { neighbors, scored_dim: sdim })
-                    }
+        let index_snapshot = coll.index();
+        let results: Vec<Vec<Result<SearchResult>>> = if let Some(index) = index_snapshot {
+            if pool_free && n > 1 {
+                // Batched with an idle pool: parallelize across queries —
+                // each worker runs the serial (per-shard sequential) search
+                // against one batch-wide index snapshot, avoiding a blocking
+                // per-query fan-out barrier on this thread.
+                let shared = Arc::clone(&shared);
+                let chunk = n.div_ceil(pool.size().max(1)).max(1);
+                pool.map_chunks(n, chunk, move |range| {
+                    range
+                        .map(|i| {
+                            let (q, k) = &shared[i];
+                            run_one(q, *k, sdim, |q, k| index.search(q, k))
+                        })
+                        .collect::<Vec<_>>()
                 })
-                .collect()]
-        } else {
+            } else {
+                // Single query with an idle pool: fan it out across shards
+                // for latency. Pool busy with segment builds: run entirely
+                // inline so serving never queues behind a rebuild. Serial
+                // and fanned merges are order-exact, so the choice is
+                // invisible in results. The whole batch runs against the one
+                // `index` snapshot loaded above (never re-reads the slot
+                // mid-batch).
+                let inline_pool = if pool_free { Some(pool) } else { None };
+                vec![shared
+                    .iter()
+                    .map(|(q, k)| {
+                        run_one(q, *k, sdim, |q, k| match (inline_pool, index.as_sharded()) {
+                            (Some(pool), Some(sh)) if sh.num_shards() > 1 => {
+                                sh.search_on(pool, q, k)
+                            }
+                            _ => index.search(q, k),
+                        })
+                    })
+                    .collect()]
+            }
+        } else if pool_free {
             let chunk = n.div_ceil(pool.size().max(1)).max(1);
             pool.map_chunks(n, chunk, move |range| {
                 range
                     .map(|i| {
                         let (q, k) = &shared[i];
-                        if q.is_empty() {
-                            return Err(OpdrError::shape("query projection failed"));
-                        }
-                        crate::knn::knn_indices(q, &vecs_arc, sdim, *k, metric)
-                            .map(|neighbors| SearchResult { neighbors, scored_dim: sdim })
+                        run_one(q, *k, sdim, |q, k| {
+                            crate::knn::knn_indices(q, &vecs_arc, sdim, k, metric)
+                        })
                     })
                     .collect::<Vec<_>>()
             })
+        } else {
+            // Pool held by segment builds: score inline on this thread. The
+            // batch loses scan parallelism for the rebuild's duration, but
+            // it is never queued behind multi-second build jobs.
+            vec![shared
+                .iter()
+                .map(|(q, k)| {
+                    run_one(q, *k, sdim, |q, k| {
+                        crate::knn::knn_indices(q, &vecs_arc, sdim, k, metric)
+                    })
+                })
+                .collect()]
         };
 
         let flat: Vec<Result<SearchResult>> = results.into_iter().flatten().collect();
@@ -605,6 +744,56 @@ mod tests {
         // With a queue of 2 and slow scoring, some must have been rejected.
         assert!(rejected > 0, "expected backpressure rejections");
         assert_eq!(coord.metrics().rejected.get(), rejected as u64);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn sharded_policy_served_collection_is_exact() {
+        // A sharded exact index must serve byte-identical results to an
+        // unsharded exact scan over the same vectors (same distance
+        // kernel), and stats must report the shard count.
+        let cfg = ServeConfig {
+            workers: 2,
+            max_batch: 8,
+            max_wait_ms: 1,
+            use_runtime: false,
+            index_kind: crate::index::IndexKind::Exact,
+            ivf_threshold: 0,
+            shards: 4,
+            shard_min_vectors: 1,
+            ..Default::default()
+        };
+        let coord = Coordinator::start(cfg).unwrap();
+        coord.create_collection("c", 12, Metric::SqEuclidean).unwrap();
+        let set = synth::generate(DatasetKind::OmniCorpus, 120, 12, 8);
+        coord.ingest("c", set.data().to_vec()).unwrap();
+
+        let exact =
+            crate::index::ExactIndex::build(set.data(), 12, Metric::SqEuclidean, false).unwrap();
+        let want: Vec<Vec<(usize, u32)>> = (0..10)
+            .map(|qi| {
+                exact
+                    .search(set.vector(qi), 5)
+                    .unwrap()
+                    .iter()
+                    .map(|nb| (nb.index, nb.distance.to_bits()))
+                    .collect()
+            })
+            .collect();
+
+        coord.build_index("c").unwrap();
+        let stats = coord.stats().unwrap();
+        assert!(stats.contains("kind=exact") && stats.contains("shards=4"), "{stats}");
+        for (qi, w) in want.iter().enumerate() {
+            let got: Vec<(usize, u32)> = coord
+                .search("c", set.vector(qi).to_vec(), 5)
+                .unwrap()
+                .neighbors
+                .iter()
+                .map(|nb| (nb.index, nb.distance.to_bits()))
+                .collect();
+            assert_eq!(&got, w, "query {qi} diverged under sharding");
+        }
         coord.shutdown();
     }
 

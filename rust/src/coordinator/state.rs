@@ -7,9 +7,65 @@ use crate::index::AnnIndex;
 use crate::knn::Neighbor;
 use crate::metrics::Metric;
 use crate::opdr::Planner;
+use crate::pool::ThreadPool;
 use crate::reduction::{Pca, PcaModel, ReducerKind};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
+
+/// Atomic slot for a collection's serving index.
+///
+/// Searches [`load`](IndexSlot::load) an `Arc` snapshot under a briefly-held
+/// lock, so serving never blocks on a rebuild; background builds
+/// [`install`](IndexSlot::install) their result with the generation they
+/// snapshotted — if an ingest or re-reduce bumped the generation in the
+/// meantime ([`invalidate`](IndexSlot::invalidate)) the stale index is
+/// dropped instead of installed, so a search can never observe an index
+/// built from vectors the collection no longer serves.
+#[derive(Debug, Default)]
+pub struct IndexSlot {
+    inner: Mutex<(u64, Option<Arc<dyn AnnIndex>>)>,
+}
+
+impl IndexSlot {
+    /// Snapshot the current index (if any).
+    pub fn load(&self) -> Option<Arc<dyn AnnIndex>> {
+        self.inner.lock().unwrap().1.clone()
+    }
+
+    /// Current generation (captured before a build, checked at install).
+    pub fn generation(&self) -> u64 {
+        self.inner.lock().unwrap().0
+    }
+
+    /// Drop the index and bump the generation (serving state changed).
+    pub fn invalidate(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.0 += 1;
+        g.1 = None;
+    }
+
+    /// Atomically swap `index` in iff the generation still matches; returns
+    /// whether the install happened.
+    pub fn install(&self, index: Arc<dyn AnnIndex>, generation: u64) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if g.0 != generation {
+            return false;
+        }
+        g.1 = Some(index);
+        true
+    }
+
+    /// Bump the generation and install `index` in one step (the synchronous
+    /// build/load paths): any background build still in flight against an
+    /// older snapshot is thereby invalidated and its later install refused,
+    /// so an explicitly built or loaded index is never silently replaced by
+    /// a stale rebuild finishing afterwards.
+    pub fn replace(&self, index: Arc<dyn AnnIndex>) {
+        let mut g = self.inner.lock().unwrap();
+        g.0 += 1;
+        g.1 = Some(index);
+    }
+}
 
 /// Zero-padded fixed-shape copy of the serving vectors for the PJRT
 /// `pairwise_topk` artifact (perf-pass Runtime-1: built once per serving
@@ -39,8 +95,10 @@ pub struct Collection {
     /// OPDR-reduced serving state, if built.
     pub reduced: Option<ReducedState>,
     /// ANN index over the active serving vectors (substrate chosen by the
-    /// configured [`IndexPolicy`]: exact / IVF-Flat / HNSW, optionally SQ8).
-    pub index: Option<Box<dyn AnnIndex>>,
+    /// configured [`IndexPolicy`]: exact / IVF-Flat / HNSW, optionally SQ8,
+    /// optionally sharded), behind an atomic slot so background rebuilds
+    /// swap in without blocking searches.
+    index: Arc<IndexSlot>,
     /// Shared snapshot of the serving vectors for worker threads (perf-pass
     /// L3-2: avoids cloning the whole block every batch). Invalidated on
     /// ingest / build_reduced.
@@ -74,10 +132,15 @@ impl Collection {
             data: Vec::new(),
             metric,
             reduced: None,
-            index: None,
+            index: Arc::new(IndexSlot::default()),
             serving_cache: Mutex::new(None),
             padded_cache: Mutex::new(None),
         })
+    }
+
+    /// Snapshot of the serving index, if one is installed.
+    pub fn index(&self) -> Option<Arc<dyn AnnIndex>> {
+        self.index.load()
     }
 
     /// Number of vectors.
@@ -108,7 +171,7 @@ impl Collection {
         }
         self.data.extend_from_slice(vectors);
         self.reduced = None;
-        self.index = None;
+        self.index.invalidate();
         self.invalidate_caches();
         Ok(vectors.len() / self.dim)
     }
@@ -188,29 +251,62 @@ impl Collection {
         let model = Pca::new().fit(&sample, self.dim, target_dim)?;
         let data = model.project(&self.data)?;
         self.reduced = Some(ReducedState { model, data, planner, target_accuracy });
-        self.index = None;
+        self.index.invalidate();
         self.invalidate_caches();
         Ok(self.reduced.as_ref().unwrap())
     }
 
     /// Build (or rebuild) the ANN index over the active serving vectors,
     /// with the substrate chosen by `policy` (exact below its threshold,
-    /// then IVF/HNSW, optionally SQ8-quantized).
+    /// then IVF/HNSW, optionally SQ8-quantized, sharded when
+    /// `policy.shards > 1`). Blocks the caller; the coordinator's scheduler
+    /// uses [`Collection::spawn_index_build`] instead so serving never
+    /// waits on a rebuild.
     pub fn build_index(&mut self, policy: &IndexPolicy, seed: u64) -> Result<()> {
         let (vecs, dim) = self.serving_vectors();
         if vecs.is_empty() {
             return Err(OpdrError::data("build_index: empty collection"));
         }
-        self.index = Some(crate::index::build_index(vecs, dim, self.metric, policy, seed)?);
+        let index = crate::index::build_index(vecs, dim, self.metric, policy, seed)?;
+        self.index.replace(Arc::from(index));
         Ok(())
+    }
+
+    /// Rebuild the index off-thread: snapshot the serving vectors, fan
+    /// whole-segment builds out to `pool`
+    /// ([`crate::index::shard::build_on_pool`]) and atomically swap the
+    /// result in when done — searches keep serving the old index (or the
+    /// exact scan) throughout. `on_done` runs on the collector thread with
+    /// `Ok(true)` when the index was installed, `Ok(false)` when the
+    /// collection changed while building (the stale index is discarded,
+    /// never installed — serving falls back to the exact scan), and `Err`
+    /// when the build itself failed.
+    pub fn spawn_index_build(
+        &self,
+        policy: &IndexPolicy,
+        seed: u64,
+        pool: &ThreadPool,
+        on_done: impl FnOnce(Result<bool>) + Send + 'static,
+    ) {
+        let data = self.serving_arc();
+        let (_, dim) = self.serving_vectors();
+        let metric = self.metric;
+        let slot = Arc::clone(&self.index);
+        let generation = slot.generation();
+        crate::index::shard::build_on_pool(data, dim, metric, policy, seed, pool, move |res| {
+            match res {
+                Ok(index) => on_done(Ok(slot.install(Arc::from(index), generation))),
+                Err(e) => on_done(Err(e)),
+            }
+        });
     }
 
     /// Persist the built index as an `OPDR` index segment.
     pub fn save_index(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
-        let index = self.index.as_deref().ok_or_else(|| {
+        let index = self.index().ok_or_else(|| {
             OpdrError::coordinator(format!("collection `{}` has no index to save", self.name))
         })?;
-        crate::data::store::save_index(index, path)
+        crate::data::store::save_index(index.as_ref(), path)
     }
 
     /// Load a previously saved index segment, validating it against the
@@ -245,7 +341,7 @@ impl Collection {
                 self.name
             )));
         }
-        self.index = Some(index);
+        self.index.replace(Arc::from(index));
         Ok(())
     }
 
@@ -277,11 +373,29 @@ impl Collection {
     /// *already-projected* query. Probe widths / beam sizes are baked into
     /// the index at build time by the [`IndexPolicy`].
     pub fn search_projected(&self, query: &[f32], k: usize) -> Result<Vec<Neighbor>> {
+        self.search_projected_with(query, k, None)
+    }
+
+    /// [`Collection::search_projected`] with an optional worker pool: a
+    /// multi-shard index fans the query out across its segments on the pool
+    /// (byte-identical results to the serial path — the merge is
+    /// order-exact). Must not be called from a pool worker.
+    pub fn search_projected_with(
+        &self,
+        query: &[f32],
+        k: usize,
+        pool: Option<&ThreadPool>,
+    ) -> Result<Vec<Neighbor>> {
         let (vecs, dim) = self.serving_vectors();
         if query.len() != dim {
             return Err(OpdrError::shape("search: projected query dim mismatch"));
         }
-        if let Some(index) = &self.index {
+        if let Some(index) = self.index() {
+            if let (Some(pool), Some(sharded)) = (pool, index.as_sharded()) {
+                if sharded.num_shards() > 1 {
+                    return sharded.search_on(pool, query, k);
+                }
+            }
             index.search(query, k)
         } else {
             crate::knn::knn_indices(query, vecs, dim, k, self.metric)
@@ -410,8 +524,8 @@ mod tests {
             ..Default::default()
         };
         c.build_index(&policy, 3).unwrap();
-        assert!(c.index.is_some());
-        assert_eq!(c.index.as_ref().unwrap().kind(), crate::index::IndexKind::Ivf);
+        assert!(c.index().is_some());
+        assert_eq!(c.index().unwrap().kind(), crate::index::IndexKind::Ivf);
         let q: Vec<f32> = c.data()[..16].to_vec();
         let hits = c.search_projected(&q, 5).unwrap();
         assert_eq!(hits[0].index, 0);
@@ -426,11 +540,11 @@ mod tests {
             ..Default::default()
         };
         c.build_index(&policy, 1).unwrap();
-        assert_eq!(c.index.as_ref().unwrap().kind(), crate::index::IndexKind::Exact);
+        assert_eq!(c.index().unwrap().kind(), crate::index::IndexKind::Exact);
 
         let policy = IndexPolicy { exact_threshold: 10, ..policy };
         c.build_index(&policy, 1).unwrap();
-        let idx = c.index.as_ref().unwrap();
+        let idx = c.index().unwrap();
         assert_eq!(idx.kind(), crate::index::IndexKind::Hnsw);
         let q: Vec<f32> = c.data()[3 * 16..4 * 16].to_vec();
         let hits = c.search_projected(&q, 5).unwrap();
@@ -487,9 +601,112 @@ mod tests {
         let mut c = seeded_collection(50, 8);
         let policy = IndexPolicy { exact_threshold: 0, ..Default::default() };
         c.build_index(&policy, 1).unwrap();
-        assert!(c.index.is_some());
+        assert!(c.index().is_some());
         c.ingest(&vec![0.0; 8]).unwrap();
-        assert!(c.index.is_none());
+        assert!(c.index().is_none());
+    }
+
+    #[test]
+    fn index_slot_generation_guard_drops_stale_installs() {
+        let slot = IndexSlot::default();
+        let data = vec![0.0f32; 8 * 4];
+        let idx: Arc<dyn AnnIndex> = Arc::from(
+            crate::index::build_index(
+                &data,
+                4,
+                Metric::Euclidean,
+                &IndexPolicy { kind: crate::index::IndexKind::Exact, ..Default::default() },
+                1,
+            )
+            .unwrap(),
+        );
+        let gen0 = slot.generation();
+        assert!(slot.install(Arc::clone(&idx), gen0));
+        assert!(slot.load().is_some());
+        // Invalidate (as ingest does), then try to install with the stale
+        // generation: the install must be refused and the slot stay empty.
+        slot.invalidate();
+        assert!(slot.load().is_none());
+        assert!(!slot.install(Arc::clone(&idx), gen0));
+        assert!(slot.load().is_none());
+        // A fresh generation installs fine.
+        assert!(slot.install(Arc::clone(&idx), slot.generation()));
+        assert!(slot.load().is_some());
+        // `replace` (sync build / load paths) bumps the generation, so a
+        // background build that snapshotted before it can't stomp the
+        // explicitly installed index.
+        let pre_replace = slot.generation();
+        slot.replace(Arc::clone(&idx));
+        assert!(!slot.install(idx, pre_replace));
+        assert!(slot.load().is_some());
+    }
+
+    #[test]
+    fn spawn_index_build_installs_off_thread() {
+        let c = seeded_collection(80, 8);
+        let pool = ThreadPool::new(2);
+        let policy = IndexPolicy {
+            kind: crate::index::IndexKind::Exact,
+            exact_threshold: 0,
+            shards: 4,
+            shard_min_vectors: 1,
+            ..Default::default()
+        };
+        let (tx, rx) = std::sync::mpsc::channel();
+        c.spawn_index_build(&policy, 3, &pool, move |r| {
+            let _ = tx.send(r);
+        });
+        assert!(rx.recv().unwrap().unwrap(), "install reported refused");
+        let idx = c.index().expect("index installed");
+        assert_eq!(idx.as_sharded().unwrap().num_shards(), 4);
+        // Sharded search through the collection equals an unsharded exact
+        // scan (same distance kernel; the matmul-form brute path rounds
+        // differently, so it is only id-equal, not bit-equal).
+        let q: Vec<f32> = c.data()[5 * 8..6 * 8].to_vec();
+        let exact =
+            crate::index::ExactIndex::build(c.data(), 8, Metric::SqEuclidean, false).unwrap();
+        let want = exact.search(&q, 6).unwrap();
+        for use_pool in [None, Some(&pool)] {
+            let got = c.search_projected_with(&q, 6, use_pool).unwrap();
+            crate::testing::assert_same_neighbors(&got, &want);
+        }
+    }
+
+    #[test]
+    fn spawn_index_build_reports_errors_and_skips_stale_installs() {
+        // Empty collection: the build fails through `on_done`.
+        let c = Collection::new("empty", 4, Metric::Euclidean).unwrap();
+        let pool = ThreadPool::new(1);
+        let (tx, rx) = std::sync::mpsc::channel();
+        c.spawn_index_build(&IndexPolicy::default(), 1, &pool, move |r| {
+            let _ = tx.send(r);
+        });
+        assert!(rx.recv().unwrap().is_err());
+
+        // Ingest-after-snapshot: force the race deterministically by bumping
+        // the generation before the collector can install.
+        let mut c = seeded_collection(40, 8);
+        let (tx, rx) = std::sync::mpsc::channel();
+        {
+            // Hold the pool hostage so the build can't finish yet.
+            let (block_tx, block_rx) = std::sync::mpsc::channel::<()>();
+            pool.execute(move || {
+                let _ = block_rx.recv();
+            });
+            c.spawn_index_build(
+                &IndexPolicy { exact_threshold: 0, ..Default::default() },
+                1,
+                &pool,
+                move |r| {
+                    let _ = tx.send(r);
+                },
+            );
+            c.ingest(&vec![0.0; 8]).unwrap(); // bumps the generation
+            block_tx.send(()).unwrap(); // release the pool
+        }
+        let res = rx.recv().unwrap();
+        assert!(!res.unwrap(), "stale install must be refused");
+        assert!(c.index().is_none(), "stale index must not be installed");
     }
 
     #[test]

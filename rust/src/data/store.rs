@@ -8,10 +8,19 @@
 //! * version 1 — embedding set: magic `OPDR` | u32 1 | u32 label_len |
 //!   label bytes | u64 n | u64 dim | n·dim f32 payload;
 //! * version 2 — index segment: magic `OPDR` | u32 2 | u32 index-kind tag |
-//!   kind-specific payload (see [`crate::index`]).
+//!   kind-specific payload (see [`crate::index`]);
+//! * version 3 — sharded index: magic `OPDR` | u32 3 | u32 shard count |
+//!   per shard a header (u32 kind tag | u8 metric tag | u64 n | u64 dim |
+//!   u64 global start row | u64 payload bytes) and the shard's
+//!   version-2-style payload (see [`crate::index::shard`]). Every header is
+//!   validated against its decoded payload on load (including that the
+//!   payload is fully consumed and that start rows are contiguous, so
+//!   reordered segment records fail), trailing bytes after the last shard
+//!   are rejected (shard-count mismatch), and version-2 single-segment
+//!   files keep loading unchanged.
 //!
-//! Readers reject the other segment type with a descriptive error instead of
-//! misparsing it.
+//! Readers reject the other segment types with a descriptive error instead
+//! of misparsing them.
 
 use crate::data::EmbeddingSet;
 use crate::error::{OpdrError, Result};
@@ -23,6 +32,7 @@ use std::path::Path;
 const MAGIC: &[u8; 4] = b"OPDR";
 const VERSION: u32 = 1;
 const INDEX_VERSION: u32 = 2;
+const SHARDED_INDEX_VERSION: u32 = 3;
 
 /// Serialize an embedding set to a writer.
 pub fn write_embeddings<W: Write>(set: &EmbeddingSet, w: &mut W) -> Result<()> {
@@ -47,7 +57,7 @@ pub fn read_embeddings<R: Read>(r: &mut R) -> Result<EmbeddingSet> {
         return Err(OpdrError::data("store: bad magic"));
     }
     let version = read_u32(r)?;
-    if version == INDEX_VERSION {
+    if version == INDEX_VERSION || version == SHARDED_INDEX_VERSION {
         return Err(OpdrError::data(
             "store: file holds an index segment, not an embedding set (use load_index)",
         ));
@@ -99,15 +109,21 @@ pub fn load(path: impl AsRef<Path>) -> Result<EmbeddingSet> {
     read_embeddings(&mut f)
 }
 
-/// Serialize an ANN index as an `OPDR` version-2 index segment.
+/// Serialize an ANN index: sharded indexes become version-3 multi-segment
+/// files, everything else the unchanged version-2 single-segment format.
 pub fn write_index<W: Write>(index: &dyn AnnIndex, w: &mut W) -> Result<()> {
     w.write_all(MAGIC)?;
+    if index.as_sharded().is_some() {
+        w.write_all(&SHARDED_INDEX_VERSION.to_le_bytes())?;
+        return index.write_to(w);
+    }
     w.write_all(&INDEX_VERSION.to_le_bytes())?;
     w.write_all(&index.kind().tag().to_le_bytes())?;
     index.write_to(w)
 }
 
-/// Deserialize an ANN index from an `OPDR` version-2 index segment.
+/// Deserialize an ANN index from an `OPDR` version-2 (single-segment) or
+/// version-3 (sharded) index file.
 pub fn read_index<R: Read>(r: &mut R) -> Result<Box<dyn AnnIndex>> {
     let mut magic = [0u8; 4];
     r.read_exact(&mut magic)?;
@@ -120,9 +136,22 @@ pub fn read_index<R: Read>(r: &mut R) -> Result<Box<dyn AnnIndex>> {
             "store: file holds an embedding set, not an index segment (use load)",
         ));
     }
+    if version == SHARDED_INDEX_VERSION {
+        let index = crate::index::shard::ShardedIndex::read_from(r)?;
+        // A shard count smaller than the file's real segment count leaves
+        // payload behind; surface it instead of silently dropping shards.
+        let mut probe = [0u8; 1];
+        if r.read(&mut probe)? != 0 {
+            return Err(OpdrError::data(
+                "store: trailing bytes after the last shard (shard count mismatch?)",
+            ));
+        }
+        return Ok(Box::new(index));
+    }
     if version != INDEX_VERSION {
         return Err(OpdrError::data(format!(
-            "store: unsupported version {version} (index segments are version {INDEX_VERSION})"
+            "store: unsupported version {version} (index segments are versions \
+             {INDEX_VERSION} and {SHARDED_INDEX_VERSION})"
         )));
     }
     let kind_tag = read_u32(r)?;
@@ -281,11 +310,7 @@ mod tests {
             let q = set.vector(5);
             let a = idx.search(q, 5).unwrap();
             let b = back.search(q, 5).unwrap();
-            assert_eq!(a.len(), b.len());
-            for (x, y) in a.iter().zip(&b) {
-                assert_eq!(x.index, y.index);
-                assert_eq!(x.distance.to_bits(), y.distance.to_bits());
-            }
+            crate::testing::assert_same_neighbors(&a, &b);
         }
     }
 
@@ -312,6 +337,110 @@ mod tests {
         write_embeddings(&set, &mut emb_buf).unwrap();
         let e = read_index(&mut emb_buf.as_slice()).unwrap_err().to_string();
         assert!(e.contains("embedding set"), "{e}");
+    }
+
+    fn sharded_fixture(shards: usize, sq8: bool) -> (Vec<u8>, crate::data::EmbeddingSet) {
+        use crate::config::IndexPolicy;
+        let set = synth::generate(DatasetKind::Flickr30k, 90, 10, 17);
+        let policy = IndexPolicy {
+            exact_threshold: 0,
+            shards,
+            shard_min_vectors: 1,
+            sq8,
+            ivf_nlist: 8,
+            ivf_nprobe: 8,
+            ..Default::default()
+        };
+        let idx = crate::index::build_index(
+            set.data(),
+            set.dim(),
+            crate::metrics::Metric::SqEuclidean,
+            &policy,
+            6,
+        )
+        .unwrap();
+        assert_eq!(idx.as_sharded().is_some(), shards > 1);
+        let mut buf = Vec::new();
+        write_index(idx.as_ref(), &mut buf).unwrap();
+        (buf, set)
+    }
+
+    #[test]
+    fn sharded_index_roundtrips_as_version_3_bit_identical() {
+        for sq8 in [false, true] {
+            let (buf, set) = sharded_fixture(3, sq8);
+            assert_eq!(u32::from_le_bytes(buf[4..8].try_into().unwrap()), 3);
+            let back = read_index(&mut buf.as_slice()).unwrap();
+            let sh = back.as_sharded().expect("loads as sharded");
+            assert_eq!(sh.num_shards(), 3);
+            assert_eq!(back.len(), set.len());
+            assert_eq!(back.quantized(), sq8);
+            // Identical results to a freshly built copy of the same index.
+            let rebuilt = read_index(&mut buf.as_slice()).unwrap();
+            for qi in [0usize, 7, 42] {
+                let a = back.search(set.vector(qi), 6).unwrap();
+                let b = rebuilt.search(set.vector(qi), 6).unwrap();
+                crate::testing::assert_same_neighbors(&a, &b);
+                assert_eq!(a[0].index, qi, "self-hit lost through the store");
+            }
+        }
+    }
+
+    #[test]
+    fn version_2_single_segment_files_still_load() {
+        // Back-compat: a non-sharded index written before (and after) this
+        // format revision is a version-2 file; it must keep loading.
+        let (buf, set) = sharded_fixture(1, false);
+        assert_eq!(u32::from_le_bytes(buf[4..8].try_into().unwrap()), 2);
+        let back = read_index(&mut buf.as_slice()).unwrap();
+        assert!(back.as_sharded().is_none());
+        assert_eq!(back.len(), set.len());
+        assert_eq!(back.search(set.vector(3), 1).unwrap()[0].index, 3);
+    }
+
+    #[test]
+    fn sharded_corrupt_shard_header_rejected() {
+        let (buf, _) = sharded_fixture(2, false);
+        // Bytes: magic 4 | version 4 | shard count 4 | first shard kind tag 4.
+        let mut bad = buf.clone();
+        bad[12..16].copy_from_slice(&77u32.to_le_bytes());
+        let e = read_index(&mut bad.as_slice()).unwrap_err().to_string();
+        assert!(e.contains("shard 0") && e.contains("kind tag"), "{e}");
+        // Zero shard count.
+        let mut bad = buf.clone();
+        bad[8..12].copy_from_slice(&0u32.to_le_bytes());
+        let e = read_index(&mut bad.as_slice()).unwrap_err().to_string();
+        assert!(e.contains("zero segment count"), "{e}");
+        // Absurd shard count.
+        let mut bad = buf.clone();
+        bad[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        let e = read_index(&mut bad.as_slice()).unwrap_err().to_string();
+        assert!(e.contains("unreasonable segment count"), "{e}");
+    }
+
+    #[test]
+    fn sharded_truncated_shard_rejected() {
+        let (buf, _) = sharded_fixture(2, false);
+        // Cut inside the last shard's payload and at several header cuts.
+        for cut in [buf.len() - 3, buf.len() / 2, 13, 9] {
+            assert!(read_index(&mut &buf[..cut]).is_err(), "cut at {cut} accepted");
+        }
+    }
+
+    #[test]
+    fn sharded_shard_count_mismatch_rejected() {
+        let (buf, _) = sharded_fixture(2, false);
+        // Declare more shards than the file holds → truncated read.
+        let mut more = buf.clone();
+        more[8..12].copy_from_slice(&3u32.to_le_bytes());
+        let e = read_index(&mut more.as_slice()).unwrap_err().to_string();
+        assert!(e.contains("shard"), "{e}");
+        // Declare fewer → trailing bytes must be rejected, not silently
+        // dropped (that would serve a subset of the collection).
+        let mut fewer = buf.clone();
+        fewer[8..12].copy_from_slice(&1u32.to_le_bytes());
+        let e = read_index(&mut fewer.as_slice()).unwrap_err().to_string();
+        assert!(e.contains("trailing bytes"), "{e}");
     }
 
     #[test]

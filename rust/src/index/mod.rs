@@ -13,21 +13,30 @@
 //!   (layered greedy + beam search, seeded level assignment);
 //! * [`sq8`] — per-dimension scalar (8-bit) quantized storage with
 //!   asymmetric distance, composable under every substrate above to shrink
-//!   the serving copy ~4×.
+//!   the serving copy ~4×;
+//! * [`shard`] — segment sharding over any of the above: a collection is
+//!   split into `S` contiguous segments ([`IndexPolicy::shards`] /
+//!   [`IndexPolicy::shard_min_vectors`]), segments build in parallel on the
+//!   coordinator's worker pool, and queries fan out per shard and merge
+//!   through the bounded top-k heap with an order-exact (not merely
+//!   recall-equal) guarantee.
 //!
 //! Indexes serialize through [`AnnIndex::write_to`] into the versioned
-//! `OPDR` binary format (see [`crate::data::store`]) so a built graph and
-//! its codebooks survive restarts. All builds are deterministic from the
+//! `OPDR` binary format (see [`crate::data::store`]): single-segment indexes
+//! as version-2 segments, sharded indexes as version-3 multi-segment files
+//! with validated per-shard headers. All builds are deterministic from the
 //! seed: identical data + policy + seed ⇒ bit-identical indexes.
 
 pub mod exact;
 pub mod hnsw;
 pub mod ivf;
+pub mod shard;
 pub mod sq8;
 
 pub use exact::ExactIndex;
 pub use hnsw::{HnswIndex, HnswParams};
 pub use ivf::IvfIndex;
+pub use shard::ShardedIndex;
 pub use sq8::Sq8Storage;
 
 use crate::config::IndexPolicy;
@@ -131,12 +140,26 @@ pub trait AnnIndex: Send + Sync + std::fmt::Debug {
     /// Serialize the index payload (kind tag and framing are written by
     /// [`crate::data::store::write_index`]).
     fn write_to(&self, w: &mut dyn Write) -> Result<()>;
+
+    /// Concrete [`ShardedIndex`] view when this index is sharded. The store
+    /// uses it to pick the multi-segment (version-3) format and the
+    /// coordinator to fan queries out across shards on the worker pool.
+    fn as_sharded(&self) -> Option<&ShardedIndex> {
+        None
+    }
 }
 
 /// Build an index over row-major `data` per `policy`: collections smaller
 /// than `policy.exact_threshold` get an exact flat index regardless of the
 /// configured kind (ANN structures only pay off at scale), larger ones get
 /// `policy.kind`. SQ8 storage applies to whichever substrate is chosen.
+/// When `policy.shards` (bounded below by `policy.shard_min_vectors` rows
+/// per shard) partitions the data into more than one segment, the result is
+/// a [`ShardedIndex`] over that substrate; a single-segment partition keeps
+/// the bare substrate index so existing format and search paths are
+/// untouched. (This builds serially; the coordinator's background path,
+/// [`shard::build_on_pool`], fans segment builds out to the worker pool and
+/// yields a bit-identical index.)
 pub fn build_index(
     data: &[f32],
     dim: usize,
@@ -153,6 +176,9 @@ pub fn build_index(
     let n = data.len() / dim;
     if n == 0 {
         return Err(OpdrError::data("index build: empty data"));
+    }
+    if shard::shard_ranges(n, policy.shards, policy.shard_min_vectors).len() > 1 {
+        return Ok(Box::new(ShardedIndex::build(data, dim, metric, policy, seed)?));
     }
     let kind = if n < policy.exact_threshold { IndexKind::Exact } else { policy.kind };
     match kind {
@@ -523,6 +549,26 @@ mod tests {
         let policy = crate::config::IndexPolicy { exact_threshold: 10, ..policy };
         let idx = build_index(&data, dim, Metric::SqEuclidean, &policy, 1).unwrap();
         assert_eq!(idx.kind(), IndexKind::Hnsw);
+    }
+
+    #[test]
+    fn factory_routes_multi_segment_partitions_to_sharded() {
+        let mut rng = Rng::new(9);
+        let dim = 4;
+        let data = rng.normal_vec_f32(64 * dim);
+        let policy = crate::config::IndexPolicy {
+            exact_threshold: 0,
+            shards: 4,
+            shard_min_vectors: 8,
+            ..Default::default()
+        };
+        let idx = build_index(&data, dim, Metric::SqEuclidean, &policy, 1).unwrap();
+        assert_eq!(idx.as_sharded().unwrap().num_shards(), 4);
+        assert_eq!(idx.len(), 64);
+        // A minimum that only allows one shard keeps the bare substrate.
+        let policy = crate::config::IndexPolicy { shard_min_vectors: 64, ..policy };
+        let idx = build_index(&data, dim, Metric::SqEuclidean, &policy, 1).unwrap();
+        assert!(idx.as_sharded().is_none());
     }
 
     #[test]

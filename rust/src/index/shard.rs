@@ -1,0 +1,764 @@
+//! Sharded index: a collection split into `S` independent index segments.
+//!
+//! Each segment is a complete [`AnnIndex`] (any substrate: exact / IVF-Flat /
+//! HNSW, flat or SQ8 storage) over a contiguous slice of the collection's
+//! rows; segment-local hit ids are remapped to global ids by adding the
+//! segment's row offset. Sharding buys two things on the serving path:
+//!
+//! * **parallel builds** — whole-segment builds are independent, so
+//!   [`build_on_pool`] fans them out across the coordinator's worker pool and
+//!   a collector thread assembles and delivers the finished index without
+//!   ever blocking the caller (the scheduler thread);
+//! * **parallel queries** — [`ShardedIndex::search_on`] fans one query out
+//!   across segments on the pool and merges per-segment top-k lists through
+//!   the bounded heap in [`crate::knn::topk::merge_top_k`].
+//!
+//! ## Exactness contract (machine-checked in `tests/props.rs`)
+//!
+//! The fan-out/merge is *order-exact*, not approximately-recall-equal:
+//! merging each segment's top-k (remapped to global ids) under the global
+//! (distance, index) order returns byte-identical neighbors to searching the
+//! same segments serially — and, for substrates whose per-segment search is
+//! exhaustive (exact flat scan; IVF at full probe; HNSW at `m ≥ n`,
+//! `ef ≥ 4n`), byte-identical neighbors to the *unsharded* index over the
+//! whole collection, including tie and NaN-distance vectors and `k ≥ n`.
+//! SQ8 codebooks are trained per segment (the FAISS/Lucene segment-local
+//! convention), so quantized distances are defined relative to each
+//! segment's codebook; the merge contract still holds bit-for-bit.
+//!
+//! Partitioning, per-shard seeds and therefore every segment structure are
+//! deterministic: equal `(data, policy, seed)` give bit-identical sharded
+//! indexes whether built serially or on the pool.
+
+use crate::config::IndexPolicy;
+use crate::error::{OpdrError, Result};
+use crate::index::{io, AnnIndex, IndexKind};
+use crate::knn::topk::merge_top_k;
+use crate::knn::Neighbor;
+use crate::metrics::Metric;
+use crate::pool::ThreadPool;
+use std::io::{Read, Write};
+use std::ops::Range;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+
+/// Upper bound on the segment count accepted from disk (a corrupt header
+/// must not trigger huge allocations).
+pub const MAX_SHARDS: usize = 4096;
+
+/// Deterministic per-shard build seed (shard 0 keeps `seed` itself, so a
+/// single-shard build is bit-identical to the unsharded build path).
+pub fn shard_seed(seed: u64, shard: usize) -> u64 {
+    seed.wrapping_add((shard as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// Deterministic balanced partition of `n` rows into at most `shards`
+/// contiguous ranges, never creating a shard smaller than
+/// `shard_min_vectors` (a minimum of 0 is treated as 1). Always returns at
+/// least one range; earlier ranges get the remainder rows.
+pub fn shard_ranges(n: usize, shards: usize, shard_min_vectors: usize) -> Vec<Range<usize>> {
+    let max_by_min = (n / shard_min_vectors.max(1)).max(1);
+    let s = shards.max(1).min(max_by_min).min(n.max(1));
+    let base = n / s;
+    let rem = n % s;
+    let mut out = Vec::with_capacity(s);
+    let mut start = 0usize;
+    for i in 0..s {
+        let len = base + usize::from(i < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// The per-segment build policy: the substrate is decided once from the
+/// *collection* size (so a shard slice dropping under `exact_threshold`
+/// never silently changes substrate), and recursion into sharding is off.
+fn leaf_policy(n: usize, policy: &IndexPolicy) -> IndexPolicy {
+    IndexPolicy {
+        kind: if n < policy.exact_threshold { IndexKind::Exact } else { policy.kind },
+        exact_threshold: 0,
+        shards: 1,
+        ..policy.clone()
+    }
+}
+
+/// A collection served by `S` independent index segments with stable
+/// global-id remapping (segment `s` owns global rows
+/// `offsets[s]..offsets[s+1]`).
+#[derive(Debug)]
+pub struct ShardedIndex {
+    metric: Metric,
+    dim: usize,
+    /// Row offsets; `offsets[0] == 0`, `offsets[S] == len()`.
+    offsets: Vec<usize>,
+    /// Segments are `Arc` so query fan-out can move clones onto the pool.
+    segments: Vec<Arc<dyn AnnIndex>>,
+}
+
+impl ShardedIndex {
+    /// Assemble from already-built segments (offsets accumulate in order).
+    /// All segments must be non-empty, share one dimensionality and metric,
+    /// and be leaf indexes (nesting sharded segments is rejected).
+    pub fn from_segments(segments: Vec<Box<dyn AnnIndex>>) -> Result<ShardedIndex> {
+        if segments.is_empty() {
+            return Err(OpdrError::data("sharded index: no segments"));
+        }
+        if segments.len() > MAX_SHARDS {
+            return Err(OpdrError::data(format!(
+                "sharded index: {} segments exceeds the cap of {MAX_SHARDS}",
+                segments.len()
+            )));
+        }
+        let dim = segments[0].dim();
+        let metric = segments[0].metric();
+        let mut offsets = Vec::with_capacity(segments.len() + 1);
+        offsets.push(0usize);
+        for (s, seg) in segments.iter().enumerate() {
+            if seg.as_sharded().is_some() {
+                return Err(OpdrError::data(
+                    "sharded index: nested sharded segments are not supported",
+                ));
+            }
+            if seg.is_empty() {
+                return Err(OpdrError::data(format!("sharded index: segment {s} is empty")));
+            }
+            if seg.dim() != dim {
+                return Err(OpdrError::data(format!(
+                    "sharded index: segment {s} dim {} != segment 0 dim {dim}",
+                    seg.dim()
+                )));
+            }
+            if seg.metric() != metric {
+                return Err(OpdrError::data(format!(
+                    "sharded index: segment {s} metric {} != segment 0 metric {}",
+                    seg.metric().name(),
+                    metric.name()
+                )));
+            }
+            offsets.push(offsets.last().unwrap() + seg.len());
+        }
+        let segments = segments
+            .into_iter()
+            .map(|seg| -> Arc<dyn AnnIndex> { Arc::from(seg) })
+            .collect();
+        Ok(ShardedIndex { metric, dim, offsets, segments })
+    }
+
+    /// Build serially per `policy` (partition via [`shard_ranges`], one
+    /// [`crate::index::build_index`] call per slice with [`shard_seed`]).
+    /// Bit-identical to [`build_on_pool`] over the same inputs.
+    pub fn build(
+        data: &[f32],
+        dim: usize,
+        metric: Metric,
+        policy: &IndexPolicy,
+        seed: u64,
+    ) -> Result<ShardedIndex> {
+        if dim == 0 || data.len() % dim != 0 {
+            return Err(OpdrError::shape(format!(
+                "sharded index build: {} floats is not a multiple of dim {dim}",
+                data.len()
+            )));
+        }
+        let n = data.len() / dim;
+        if n == 0 {
+            return Err(OpdrError::data("sharded index build: empty data"));
+        }
+        let ranges = shard_ranges(n, policy.shards, policy.shard_min_vectors);
+        let leaf = leaf_policy(n, policy);
+        let mut segments: Vec<Box<dyn AnnIndex>> = Vec::with_capacity(ranges.len());
+        for (s, r) in ranges.iter().enumerate() {
+            segments.push(crate::index::build_index(
+                &data[r.start * dim..r.end * dim],
+                dim,
+                metric,
+                &leaf,
+                shard_seed(seed, s),
+            )?);
+        }
+        ShardedIndex::from_segments(segments)
+    }
+
+    /// Number of segments.
+    pub fn num_shards(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// Global-id range owned by segment `s`.
+    pub fn shard_range(&self, s: usize) -> Range<usize> {
+        self.offsets[s]..self.offsets[s + 1]
+    }
+
+    fn check_query(&self, query: &[f32]) -> Result<()> {
+        if query.len() != self.dim {
+            return Err(OpdrError::shape(format!(
+                "sharded search: query dim {} != index dim {}",
+                query.len(),
+                self.dim
+            )));
+        }
+        Ok(())
+    }
+
+    /// Merge per-segment hit lists (in segment order) into the global top-k.
+    fn merge(&self, per_segment: Vec<Vec<Neighbor>>, k: usize) -> Vec<Neighbor> {
+        let cands = per_segment.into_iter().enumerate().flat_map(|(s, hits)| {
+            let base = self.offsets[s];
+            hits.into_iter().map(move |nb| (nb.index + base, nb.distance))
+        });
+        merge_top_k(cands, k)
+            .into_iter()
+            .map(|(index, distance)| Neighbor { index, distance })
+            .collect()
+    }
+
+    /// Fan the query out across segments on `pool` and merge, returning
+    /// byte-identical results to the serial [`AnnIndex::search`].
+    ///
+    /// Must not be called from a pool worker itself (the fan-out would wait
+    /// on jobs that can never be scheduled); the coordinator calls it from
+    /// the scheduler thread. Queries fanned out while segment builds occupy
+    /// the pool queue behind them — latency, not a deadlock (a rebuild's
+    /// *own* collection keeps serving its previous index either way).
+    pub fn search_on(&self, pool: &ThreadPool, query: &[f32], k: usize) -> Result<Vec<Neighbor>> {
+        if self.segments.len() < 2 || pool.size() < 2 {
+            return self.search(query, k);
+        }
+        self.check_query(query)?;
+        let q = Arc::new(query.to_vec());
+        let (tx, rx) = channel::<(usize, Result<Vec<Neighbor>>)>();
+        for (s, seg) in self.segments.iter().enumerate() {
+            let seg = Arc::clone(seg);
+            let q = Arc::clone(&q);
+            let tx = tx.clone();
+            pool.execute(move || {
+                let _ = tx.send((s, seg.search(&q, k)));
+            });
+        }
+        drop(tx);
+        let mut parts: Vec<(usize, Result<Vec<Neighbor>>)> = rx.iter().collect();
+        if parts.len() != self.segments.len() {
+            return Err(OpdrError::coordinator("sharded search: a shard result was dropped"));
+        }
+        // Deterministic merge and error order regardless of completion order.
+        parts.sort_by_key(|p| p.0);
+        let mut per_segment = Vec::with_capacity(parts.len());
+        for (_, res) in parts {
+            per_segment.push(res?);
+        }
+        Ok(self.merge(per_segment, k))
+    }
+}
+
+impl AnnIndex for ShardedIndex {
+    fn kind(&self) -> IndexKind {
+        // Segments built through `build`/`build_on_pool` share one substrate;
+        // hand-assembled mixed-kind segment sets report their first segment.
+        self.segments[0].kind()
+    }
+
+    fn len(&self) -> usize {
+        *self.offsets.last().unwrap()
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn metric(&self) -> Metric {
+        self.metric
+    }
+
+    fn quantized(&self) -> bool {
+        self.segments.iter().all(|s| s.quantized())
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.segments.iter().map(|s| s.memory_bytes()).sum()
+    }
+
+    fn search(&self, query: &[f32], k: usize) -> Result<Vec<Neighbor>> {
+        self.check_query(query)?;
+        let mut per_segment = Vec::with_capacity(self.segments.len());
+        for seg in &self.segments {
+            per_segment.push(seg.search(query, k)?);
+        }
+        Ok(self.merge(per_segment, k))
+    }
+
+    fn matches_data(&self, data: &[f32]) -> bool {
+        if data.len() != self.len() * self.dim {
+            return false;
+        }
+        self.segments
+            .iter()
+            .zip(self.offsets.windows(2))
+            .all(|(seg, w)| seg.matches_data(&data[w[0] * self.dim..w[1] * self.dim]))
+    }
+
+    fn as_sharded(&self) -> Option<&ShardedIndex> {
+        Some(self)
+    }
+
+    /// Multi-segment payload: `u32` segment count, then per segment a header
+    /// (`u32` kind tag, `u8` metric tag, `u64` n, `u64` dim, `u64` global
+    /// start row, `u64` payload bytes) followed by the segment's own
+    /// serialized payload. The start row pins each segment to its position
+    /// in the global id space, so a file whose segment records were
+    /// reordered fails validation instead of silently remapping ids. The
+    /// store frames this as an `OPDR` version-3 file
+    /// ([`crate::data::store::write_index`]).
+    fn write_to(&self, w: &mut dyn Write) -> Result<()> {
+        io::write_u32(w, self.segments.len() as u32)?;
+        for (s, seg) in self.segments.iter().enumerate() {
+            let mut payload = Vec::new();
+            seg.write_to(&mut payload)?;
+            io::write_u32(w, seg.kind().tag())?;
+            io::write_u8(w, io::metric_tag(seg.metric()))?;
+            io::write_u64(w, seg.len() as u64)?;
+            io::write_u64(w, seg.dim() as u64)?;
+            io::write_u64(w, self.offsets[s] as u64)?;
+            io::write_u64(w, payload.len() as u64)?;
+            io::write_bytes(w, &payload)?;
+        }
+        Ok(())
+    }
+}
+
+impl ShardedIndex {
+    /// Deserialize the multi-segment payload (inverse of
+    /// [`AnnIndex::write_to`]); every per-shard header is validated against
+    /// its decoded payload so a corrupt or reshuffled file fails loudly
+    /// instead of serving wrong neighbors.
+    pub(crate) fn read_from(r: &mut dyn Read) -> Result<ShardedIndex> {
+        let count = io::read_u32(r)? as usize;
+        if count == 0 {
+            return Err(OpdrError::data("sharded index: zero segment count"));
+        }
+        if count > MAX_SHARDS {
+            return Err(OpdrError::data(format!(
+                "sharded index: unreasonable segment count {count}"
+            )));
+        }
+        let mut segments: Vec<Box<dyn AnnIndex>> = Vec::with_capacity(count);
+        let mut next_start = 0usize;
+        for s in 0..count {
+            let header = |e: OpdrError| {
+                OpdrError::data(format!("sharded index: shard {s} header truncated: {e}"))
+            };
+            let kind_tag = io::read_u32(r).map_err(header)?;
+            let kind = IndexKind::from_tag(kind_tag).map_err(|_| {
+                OpdrError::data(format!("sharded index: shard {s}: bad kind tag {kind_tag}"))
+            })?;
+            let metric_byte = io::read_u8(r).map_err(header)?;
+            let metric = io::metric_from_tag(metric_byte)
+                .map_err(|e| OpdrError::data(format!("sharded index: shard {s}: {e}")))?;
+            let n = io::read_u64_usize(r).map_err(header)?;
+            let dim = io::read_u64_usize(r).map_err(header)?;
+            let start = io::read_u64_usize(r).map_err(header)?;
+            if start != next_start {
+                return Err(OpdrError::data(format!(
+                    "sharded index: shard {s}: declared start row {start} != expected \
+                     {next_start} (segment records out of order?)"
+                )));
+            }
+            next_start = next_start
+                .checked_add(n)
+                .ok_or_else(|| OpdrError::data("sharded index: row count overflow"))?;
+            let payload_len = io::read_u64_usize(r).map_err(header)?;
+            if payload_len > io::MAX_ELEMS {
+                return Err(OpdrError::data(format!(
+                    "sharded index: shard {s}: unreasonable payload length {payload_len}"
+                )));
+            }
+            let payload = io::read_bytes(r, payload_len)
+                .map_err(|e| OpdrError::data(format!("sharded index: shard {s} truncated: {e}")))?;
+            let mut slice = payload.as_slice();
+            let seg = crate::index::read_index_payload(kind_tag, &mut slice)
+                .map_err(|e| OpdrError::data(format!("sharded index: shard {s}: {e}")))?;
+            if !slice.is_empty() {
+                return Err(OpdrError::data(format!(
+                    "sharded index: shard {s}: {} unconsumed payload bytes \
+                     (declared length does not match the segment)",
+                    slice.len()
+                )));
+            }
+            if seg.kind() != kind || seg.len() != n || seg.dim() != dim || seg.metric() != metric {
+                return Err(OpdrError::data(format!(
+                    "sharded index: shard {s}: payload does not match its header \
+                     ({}x{} {} vs declared {n}x{dim} {})",
+                    seg.len(),
+                    seg.dim(),
+                    seg.metric().name(),
+                    metric.name()
+                )));
+            }
+            segments.push(seg);
+        }
+        ShardedIndex::from_segments(segments)
+    }
+}
+
+/// Build an index per `policy` over a shared data snapshot, fanning
+/// whole-segment builds out to `pool` and delivering the finished index to
+/// `done` from a collector thread. The caller — the coordinator's scheduler
+/// thread — returns immediately and keeps serving searches while segments
+/// build; `done` runs on the collector thread once every segment finished
+/// (or failed). When partitioning yields a single segment the bare segment
+/// index is delivered (no wrapper), preserving the unsharded format and
+/// search path. Must not be called from a pool worker.
+pub fn build_on_pool(
+    data: Arc<Vec<f32>>,
+    dim: usize,
+    metric: Metric,
+    policy: &IndexPolicy,
+    seed: u64,
+    pool: &ThreadPool,
+    done: impl FnOnce(Result<Box<dyn AnnIndex>>) + Send + 'static,
+) {
+    if dim == 0 || data.len() % dim != 0 {
+        done(Err(OpdrError::shape(format!(
+            "index build: {} floats is not a multiple of dim {dim}",
+            data.len()
+        ))));
+        return;
+    }
+    let n = data.len() / dim;
+    if n == 0 {
+        done(Err(OpdrError::data("index build: empty data")));
+        return;
+    }
+    let ranges = shard_ranges(n, policy.shards, policy.shard_min_vectors);
+    let leaf = leaf_policy(n, policy);
+    let expected = ranges.len();
+    let (tx, rx) = channel::<(usize, Result<Box<dyn AnnIndex>>)>();
+    for (s, range) in ranges.into_iter().enumerate() {
+        let data = Arc::clone(&data);
+        let leaf = leaf.clone();
+        let tx = tx.clone();
+        pool.execute(move || {
+            let slice = &data[range.start * dim..range.end * dim];
+            let seed = shard_seed(seed, s);
+            let _ = tx.send((s, crate::index::build_index(slice, dim, metric, &leaf, seed)));
+        });
+    }
+    drop(tx);
+    std::thread::Builder::new()
+        .name("opdr-index-build".to_string())
+        .spawn(move || {
+            let mut parts: Vec<(usize, Result<Box<dyn AnnIndex>>)> = rx.iter().collect();
+            if parts.len() != expected {
+                done(Err(OpdrError::coordinator("index build: a segment build was dropped")));
+                return;
+            }
+            parts.sort_by_key(|p| p.0);
+            let mut segments = Vec::with_capacity(expected);
+            let mut first_err: Option<OpdrError> = None;
+            for (_, res) in parts {
+                match res {
+                    Ok(seg) => segments.push(seg),
+                    Err(e) => {
+                        first_err = Some(e);
+                        break;
+                    }
+                }
+            }
+            if let Some(e) = first_err {
+                done(Err(e));
+                return;
+            }
+            if segments.len() == 1 {
+                done(Ok(segments.pop().unwrap()));
+                return;
+            }
+            done(
+                ShardedIndex::from_segments(segments)
+                    .map(|sharded| Box::new(sharded) as Box<dyn AnnIndex>),
+            );
+        })
+        .expect("spawn index-build collector");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::IndexPolicy;
+    use crate::util::Rng;
+
+    fn exact_policy(shards: usize) -> IndexPolicy {
+        IndexPolicy {
+            kind: IndexKind::Exact,
+            exact_threshold: 0,
+            shards,
+            shard_min_vectors: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn ranges_are_balanced_contiguous_and_min_bounded() {
+        assert_eq!(shard_ranges(10, 3, 1), vec![0..4, 4..7, 7..10]);
+        assert_eq!(shard_ranges(10, 1, 1), vec![0..10]);
+        // shard_min_vectors caps the shard count.
+        assert_eq!(shard_ranges(10, 8, 5), vec![0..5, 5..10]);
+        assert_eq!(shard_ranges(10, 8, 100), vec![0..10]);
+        // More shards than rows degrades to one row per shard.
+        assert_eq!(shard_ranges(2, 5, 0), vec![0..1, 1..2]);
+        // Total coverage, no gaps, for a spread of inputs.
+        for n in [1usize, 7, 64, 1000] {
+            for s in [1usize, 2, 3, 8] {
+                let rs = shard_ranges(n, s, 1);
+                assert_eq!(rs[0].start, 0);
+                assert_eq!(rs.last().unwrap().end, n);
+                for w in rs.windows(2) {
+                    assert_eq!(w[0].end, w[1].start);
+                    assert!(!w[0].is_empty());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shard_zero_keeps_the_base_seed() {
+        assert_eq!(shard_seed(42, 0), 42);
+        assert_ne!(shard_seed(42, 1), shard_seed(42, 2));
+    }
+
+    #[test]
+    fn sharded_exact_matches_unsharded_bitwise() {
+        let mut rng = Rng::new(17);
+        let dim = 6;
+        let n = 53; // not divisible by the shard count
+        let data = rng.normal_vec_f32(n * dim);
+        let single =
+            crate::index::build_index(&data, dim, Metric::SqEuclidean, &exact_policy(1), 3)
+                .unwrap();
+        let sharded =
+            ShardedIndex::build(&data, dim, Metric::SqEuclidean, &exact_policy(4), 3).unwrap();
+        assert_eq!(sharded.num_shards(), 4);
+        assert_eq!(sharded.len(), n);
+        assert_eq!(sharded.dim(), dim);
+        for k in [1usize, 5, n, n + 10] {
+            for _ in 0..4 {
+                let q = rng.normal_vec_f32(dim);
+                let a = single.search(&q, k).unwrap();
+                let b = sharded.search(&q, k).unwrap();
+                crate::testing::assert_same_neighbors(&a, &b);
+            }
+        }
+    }
+
+    #[test]
+    fn pool_fanout_matches_serial_search_bitwise() {
+        let mut rng = Rng::new(23);
+        let dim = 5;
+        let data = rng.normal_vec_f32(40 * dim);
+        let sharded = ShardedIndex::build(&data, dim, Metric::Cosine, &exact_policy(3), 9).unwrap();
+        let pool = ThreadPool::new(3);
+        for _ in 0..5 {
+            let q = rng.normal_vec_f32(dim);
+            let a = sharded.search(&q, 7).unwrap();
+            let b = sharded.search_on(&pool, &q, 7).unwrap();
+            crate::testing::assert_same_neighbors(&a, &b);
+        }
+    }
+
+    #[test]
+    fn build_on_pool_matches_serial_build_bitwise() {
+        let mut rng = Rng::new(31);
+        let dim = 4;
+        let data = Arc::new(rng.normal_vec_f32(30 * dim));
+        let policy = IndexPolicy {
+            kind: IndexKind::Hnsw,
+            exact_threshold: 0,
+            shards: 3,
+            shard_min_vectors: 1,
+            ..Default::default()
+        };
+        let serial = ShardedIndex::build(&data, dim, Metric::SqEuclidean, &policy, 5).unwrap();
+        let pool = ThreadPool::new(2);
+        let (tx, rx) = channel();
+        build_on_pool(Arc::clone(&data), dim, Metric::SqEuclidean, &policy, 5, &pool, move |r| {
+            let _ = tx.send(r);
+        });
+        let built = rx.recv().unwrap().unwrap();
+        assert!(built.as_sharded().is_some());
+        for _ in 0..5 {
+            let q = rng.normal_vec_f32(dim);
+            let a = serial.search(&q, 6).unwrap();
+            let b = built.search(&q, 6).unwrap();
+            crate::testing::assert_same_neighbors(&a, &b);
+        }
+    }
+
+    #[test]
+    fn build_on_pool_single_segment_stays_unwrapped() {
+        let mut rng = Rng::new(37);
+        let dim = 4;
+        let data = Arc::new(rng.normal_vec_f32(20 * dim));
+        let pool = ThreadPool::new(2);
+        let (tx, rx) = channel();
+        build_on_pool(
+            Arc::clone(&data),
+            dim,
+            Metric::Euclidean,
+            &exact_policy(1),
+            1,
+            &pool,
+            move |r| {
+                let _ = tx.send(r);
+            },
+        );
+        let built = rx.recv().unwrap().unwrap();
+        assert!(built.as_sharded().is_none());
+        assert_eq!(built.kind(), IndexKind::Exact);
+
+        // Errors surface through `done` too (empty data).
+        let (tx, rx) = channel();
+        let empty = Arc::new(Vec::new());
+        build_on_pool(empty, dim, Metric::Euclidean, &exact_policy(1), 1, &pool, move |r| {
+            let _ = tx.send(r);
+        });
+        assert!(rx.recv().unwrap().is_err());
+    }
+
+    #[test]
+    fn from_segments_validates_consistency() {
+        let mut rng = Rng::new(41);
+        let a = rng.normal_vec_f32(10 * 4);
+        let b = rng.normal_vec_f32(10 * 5);
+        let seg = |data: &[f32], dim: usize, metric: Metric| {
+            crate::index::build_index(data, dim, metric, &exact_policy(1), 1).unwrap()
+        };
+        assert!(ShardedIndex::from_segments(vec![]).is_err());
+        let e = ShardedIndex::from_segments(vec![
+            seg(&a, 4, Metric::Euclidean),
+            seg(&b, 5, Metric::Euclidean),
+        ])
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("dim"), "{e}");
+        let e = ShardedIndex::from_segments(vec![
+            seg(&a, 4, Metric::Euclidean),
+            seg(&a, 4, Metric::Cosine),
+        ])
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("metric"), "{e}");
+        // Nesting is rejected.
+        let inner = ShardedIndex::build(&a, 4, Metric::Euclidean, &exact_policy(2), 1).unwrap();
+        let inner: Box<dyn AnnIndex> = Box::new(inner);
+        let e = ShardedIndex::from_segments(vec![inner, seg(&a, 4, Metric::Euclidean)])
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("nested"), "{e}");
+    }
+
+    #[test]
+    fn matches_data_checks_every_segment_slice() {
+        let mut rng = Rng::new(43);
+        let dim = 4;
+        let data = rng.normal_vec_f32(24 * dim);
+        let sharded =
+            ShardedIndex::build(&data, dim, Metric::SqEuclidean, &exact_policy(3), 2).unwrap();
+        assert!(sharded.matches_data(&data));
+        let mut other = data.clone();
+        // Flip one value in the *last* shard's slice.
+        let last = other.len() - 1;
+        other[last] += 1.0;
+        assert!(!sharded.matches_data(&other));
+        assert!(!sharded.matches_data(&data[..data.len() - dim]));
+    }
+
+    #[test]
+    fn payload_roundtrip_preserves_results_bitwise() {
+        let mut rng = Rng::new(47);
+        let dim = 6;
+        let data = rng.normal_vec_f32(36 * dim);
+        for (kind, sq8) in [
+            (IndexKind::Exact, false),
+            (IndexKind::Exact, true),
+            (IndexKind::Ivf, false),
+            (IndexKind::Hnsw, true),
+        ] {
+            let policy = IndexPolicy {
+                kind,
+                sq8,
+                ivf_nlist: 4,
+                ivf_nprobe: 4,
+                ..exact_policy(3)
+            };
+            let idx = ShardedIndex::build(&data, dim, Metric::SqEuclidean, &policy, 11).unwrap();
+            let mut buf = Vec::new();
+            idx.write_to(&mut buf).unwrap();
+            let back = ShardedIndex::read_from(&mut buf.as_slice()).unwrap();
+            assert_eq!(back.num_shards(), idx.num_shards());
+            assert_eq!(back.quantized(), sq8);
+            let q = rng.normal_vec_f32(dim);
+            let a = idx.search(&q, 8).unwrap();
+            let b = back.search(&q, 8).unwrap();
+            crate::testing::assert_same_neighbors(&a, &b);
+        }
+    }
+
+    /// Per-shard record layout after the u32 count: u32 kind | u8 metric |
+    /// u64 n | u64 dim | u64 start row | u64 payload_len | payload
+    /// (37 header bytes), used by the file-surgery tests below.
+    const SHARD_HEADER_BYTES: usize = 37;
+
+    #[test]
+    fn inflated_payload_length_rejected() {
+        // An inflated payload length whose extra bytes the segment decoder
+        // doesn't consume must be rejected, not silently absorbed.
+        let mut rng = Rng::new(59);
+        let dim = 4;
+        let data = rng.normal_vec_f32(20 * dim);
+        let sharded =
+            ShardedIndex::build(&data, dim, Metric::SqEuclidean, &exact_policy(2), 1).unwrap();
+        let mut buf = Vec::new();
+        sharded.write_to(&mut buf).unwrap();
+        // The payload_len field is the last 8 header bytes of each record.
+        let len1_off = 4 + SHARD_HEADER_BYTES - 8;
+        let len1 = u64::from_le_bytes(buf[len1_off..len1_off + 8].try_into().unwrap()) as usize;
+        let len2_off = 4 + SHARD_HEADER_BYTES + len1 + SHARD_HEADER_BYTES - 8;
+        let len2 = u64::from_le_bytes(buf[len2_off..len2_off + 8].try_into().unwrap());
+        buf[len2_off..len2_off + 8].copy_from_slice(&(len2 + 4).to_le_bytes());
+        buf.extend_from_slice(&[0xAB; 4]);
+        let e = ShardedIndex::read_from(&mut buf.as_slice()).unwrap_err().to_string();
+        assert!(e.contains("unconsumed payload"), "{e}");
+    }
+
+    #[test]
+    fn reordered_segment_records_rejected() {
+        // Two equal-shape shard records swapped in place still satisfy every
+        // per-record check; the global start row pins each record to its id
+        // range so the swap fails loudly instead of remapping ids.
+        let mut rng = Rng::new(61);
+        let dim = 4;
+        let data = rng.normal_vec_f32(20 * dim); // 2 shards of 10 rows
+        let sharded =
+            ShardedIndex::build(&data, dim, Metric::SqEuclidean, &exact_policy(2), 1).unwrap();
+        let mut buf = Vec::new();
+        sharded.write_to(&mut buf).unwrap();
+        let record = (buf.len() - 4) / 2; // equal flat segments → equal records
+        let mut swapped = buf[..4].to_vec();
+        swapped.extend_from_slice(&buf[4 + record..]);
+        swapped.extend_from_slice(&buf[4..4 + record]);
+        assert_eq!(swapped.len(), buf.len());
+        let e = ShardedIndex::read_from(&mut swapped.as_slice()).unwrap_err().to_string();
+        assert!(e.contains("start row"), "{e}");
+        // The untouched buffer still loads.
+        assert!(ShardedIndex::read_from(&mut buf.as_slice()).is_ok());
+    }
+
+    #[test]
+    fn query_dim_checked() {
+        let mut rng = Rng::new(53);
+        let data = rng.normal_vec_f32(12 * 4);
+        let sharded =
+            ShardedIndex::build(&data, 4, Metric::Euclidean, &exact_policy(2), 1).unwrap();
+        let e = sharded.search(&[0.0; 3], 2).unwrap_err().to_string();
+        assert!(e.contains("query dim 3"), "{e}");
+    }
+}

@@ -13,4 +13,4 @@ pub mod topk;
 
 pub use brute::{knn_indices, knn_indices_all, Neighbor};
 pub use ivf::IvfFlatIndex;
-pub use topk::top_k_smallest;
+pub use topk::{merge_top_k, top_k_smallest};

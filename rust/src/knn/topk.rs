@@ -31,15 +31,22 @@ impl Ord for HeapItem {
     }
 }
 
-/// Indices of the `k` smallest values in `dists`, sorted ascending by
-/// (value, index). NaNs are skipped. If `k >= len`, returns all finite
-/// entries sorted.
-pub fn top_k_smallest(dists: &[f32], k: usize) -> Vec<(usize, f32)> {
+/// Bounded-heap selection of the `k` smallest `(index, distance)` candidates,
+/// sorted ascending by (distance, index) with ties broken by index and NaN
+/// distances skipped. This is the single selection kernel behind
+/// [`top_k_smallest`] and the shard fan-out merge
+/// ([`crate::index::shard::ShardedIndex`] feeds per-shard hit lists — already
+/// remapped to global ids — straight through here, which is what makes the
+/// sharded merge bit-identical to an unsharded scan).
+pub fn merge_top_k<I>(candidates: I, k: usize) -> Vec<(usize, f32)>
+where
+    I: IntoIterator<Item = (usize, f32)>,
+{
     if k == 0 {
         return Vec::new();
     }
     let mut heap: BinaryHeap<HeapItem> = BinaryHeap::with_capacity(k + 1);
-    for (idx, &dist) in dists.iter().enumerate() {
+    for (idx, dist) in candidates {
         if dist.is_nan() {
             continue;
         }
@@ -57,29 +64,20 @@ pub fn top_k_smallest(dists: &[f32], k: usize) -> Vec<(usize, f32)> {
     out
 }
 
+/// Indices of the `k` smallest values in `dists`, sorted ascending by
+/// (value, index). NaNs are skipped. If `k >= len`, returns all finite
+/// entries sorted.
+pub fn top_k_smallest(dists: &[f32], k: usize) -> Vec<(usize, f32)> {
+    merge_top_k(dists.iter().copied().enumerate(), k)
+}
+
 /// Top-k excluding one index (used for leave-one-out neighbor sets, i.e. the
 /// paper's `Y \ {y_i}` in Eq. 2).
 pub fn top_k_smallest_excluding(dists: &[f32], k: usize, exclude: usize) -> Vec<(usize, f32)> {
-    if k == 0 {
-        return Vec::new();
-    }
-    let mut heap: BinaryHeap<HeapItem> = BinaryHeap::with_capacity(k + 1);
-    for (idx, &dist) in dists.iter().enumerate() {
-        if idx == exclude || dist.is_nan() {
-            continue;
-        }
-        if heap.len() < k {
-            heap.push(HeapItem { dist, idx });
-        } else if let Some(worst) = heap.peek() {
-            if (dist, idx) < (worst.dist, worst.idx) {
-                heap.pop();
-                heap.push(HeapItem { dist, idx });
-            }
-        }
-    }
-    let mut out: Vec<(usize, f32)> = heap.into_iter().map(|h| (h.idx, h.dist)).collect();
-    out.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(Ordering::Equal).then(a.0.cmp(&b.0)));
-    out
+    merge_top_k(
+        dists.iter().copied().enumerate().filter(|&(idx, _)| idx != exclude),
+        k,
+    )
 }
 
 #[cfg(test)]
@@ -122,6 +120,23 @@ mod tests {
         let d = [0.0, 1.0, 2.0, 3.0];
         let t = top_k_smallest_excluding(&d, 2, 0);
         assert_eq!(t.iter().map(|x| x.0).collect::<Vec<_>>(), vec![1, 2]);
+    }
+
+    #[test]
+    fn merge_selects_across_lists_with_global_tie_break() {
+        // Two "shards" with interleaved and tied distances: the merge must
+        // order by (distance, global index), skipping NaN.
+        let a = [(0usize, 1.0f32), (2, 0.5), (4, f32::NAN)];
+        let b = [(1usize, 0.5f32), (3, 2.0), (5, 0.25)];
+        let got = merge_top_k(a.iter().chain(b.iter()).copied(), 4);
+        assert_eq!(
+            got.iter().map(|x| x.0).collect::<Vec<_>>(),
+            vec![5, 1, 2, 0],
+            "{got:?}"
+        );
+        assert!(merge_top_k(a.iter().copied(), 0).is_empty());
+        // k larger than the candidate set returns all finite entries.
+        assert_eq!(merge_top_k(a.iter().copied(), 10).len(), 2);
     }
 
     #[test]

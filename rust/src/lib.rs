@@ -18,6 +18,12 @@
 //!   quantization of the serving copy, and index persistence through the
 //!   versioned `OPDR` binary format; the coordinator picks a substrate per
 //!   collection via a config-driven [`config::IndexPolicy`] ([`index`]);
+//! * **segment sharding** — collections split into `S` index segments
+//!   ([`index::shard`]): whole-segment builds fan out across the worker pool
+//!   behind an atomic index swap (serving never blocks on a rebuild),
+//!   queries fan out per shard and merge through the bounded top-k heap with
+//!   a machine-checked order-exactness guarantee, and sharded indexes
+//!   persist as version-3 multi-segment `OPDR` files;
 //! * the **multimodal data substrates** — synthetic generators standing in for
 //!   the paper's seven datasets, plus an embedding store ([`data`]);
 //! * the **runtime** — a PJRT engine that loads AOT-compiled HLO artifacts
@@ -41,6 +47,7 @@ pub mod knn;
 pub mod linalg;
 pub mod metrics;
 pub mod opdr;
+pub mod pool;
 pub mod reduction;
 pub mod report;
 pub mod runtime;

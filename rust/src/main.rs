@@ -59,6 +59,7 @@ fn print_help() {
            serve-demo [--n N] [--dim D] [--queries Q] [--use-runtime]\n\
                       [--index exact|ivf|hnsw] [--sq8] [--hnsw-m M]\n\
                       [--hnsw-ef-search EF] [--ivf-threshold T]\n\
+                      [--shards S] [--shard-min-vectors V]\n\
                       [--save-index file.opdx]\n\
            artifacts  [--dir artifacts]\n\n\
          DATASETS: {}\n",
@@ -228,6 +229,9 @@ fn cmd_serve_demo(args: &mut Args) -> Result<()> {
     let hnsw_m = args.get_usize_or("hnsw-m", 16)?;
     let hnsw_ef_search = args.get_usize_or("hnsw-ef-search", 64)?;
     let ivf_threshold = args.get_usize_or("ivf-threshold", ServeConfig::default().ivf_threshold)?;
+    let shards = args.get_usize_or("shards", ServeConfig::default().shards)?;
+    let shard_min_vectors =
+        args.get_usize_or("shard-min-vectors", ServeConfig::default().shard_min_vectors)?;
     let save_index = args.get("save-index").map(str::to_string);
     args.finish()?;
 
@@ -240,8 +244,11 @@ fn cmd_serve_demo(args: &mut Args) -> Result<()> {
         hnsw_m,
         hnsw_ef_search,
         ivf_threshold,
+        shards,
+        shard_min_vectors,
         ..Default::default()
     };
+    cfg.validate()?;
     let coord = Coordinator::start(cfg)?;
     coord.create_collection("demo", dim, Metric::SqEuclidean)?;
     let set = synth::generate(DatasetKind::Flickr30k, n, dim, 42);
@@ -250,15 +257,19 @@ fn cmd_serve_demo(args: &mut Args) -> Result<()> {
     // BuildReduced only auto-indexes above the size threshold; when the user
     // asked for an index explicitly, build it regardless so the flags (and
     // --save-index) always take effect.
-    let index_requested = index_flag.is_some() || index_sq8 || save_index.is_some();
+    let index_requested = index_flag.is_some() || index_sq8 || shards > 1 || save_index.is_some();
     if index_requested {
         coord.build_index("demo")?;
     }
+    // Report the *effective* shard count: `shard_min_vectors` caps the
+    // partition, so small collections may serve fewer shards than asked.
+    let eff_shards = opdr::index::shard::shard_ranges(n, shards, shard_min_vectors).len();
     println!(
         "ingested {n} vectors (dim {dim}); OPDR planned serving dim = {planned}; \
-         index policy = {}{}",
+         index policy = {}{}{}",
         index_kind.name(),
-        if index_sq8 { "+sq8" } else { "" }
+        if index_sq8 { "+sq8" } else { "" },
+        if eff_shards > 1 { format!(" x{eff_shards} shards") } else { String::new() }
     );
 
     let sw = opdr::util::Stopwatch::start();

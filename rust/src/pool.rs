@@ -1,7 +1,11 @@
 //! Minimal worker thread pool (no `tokio`/`rayon` offline).
 //!
 //! Fixed worker count, bounded in-flight via the job channel, `scope`-style
-//! chunked parallel map for the scoring hot path.
+//! chunked parallel map for the scoring hot path. Lives at the crate root
+//! (not under [`crate::coordinator`]) because both the coordinator's
+//! scoring path and the index subsystem's shard builds / query fan-out
+//! ([`crate::index::shard`]) run on it; the coordinator re-exports it for
+//! compatibility.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};

@@ -43,6 +43,24 @@ where
     }
 }
 
+/// Assert two neighbor lists are byte-identical — same ids in the same
+/// order with bit-identical distances. This is the exactness contract the
+/// sharded fan-out/merge and every index persistence round-trip promise;
+/// tests across the crate share it so the contract is stated once.
+pub fn assert_same_neighbors(a: &[crate::knn::Neighbor], b: &[crate::knn::Neighbor]) {
+    assert_eq!(a.len(), b.len(), "neighbor counts differ");
+    for (rank, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.index, y.index, "rank {rank}: id mismatch");
+        assert_eq!(
+            x.distance.to_bits(),
+            y.distance.to_bits(),
+            "rank {rank}: distance bits differ ({} vs {})",
+            x.distance,
+            y.distance
+        );
+    }
+}
+
 /// Shrink a failing f32-vector input by greedy halving/truncation; returns
 /// the smallest still-failing input found.
 pub fn shrink_vec_f32<P>(input: Vec<f32>, mut fails: P) -> Vec<f32>

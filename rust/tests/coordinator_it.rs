@@ -3,6 +3,7 @@
 use opdr::config::ServeConfig;
 use opdr::coordinator::Coordinator;
 use opdr::data::{synth, DatasetKind};
+use opdr::index::AnnIndex as _;
 use opdr::metrics::Metric;
 
 fn artifacts_available() -> bool {
@@ -250,6 +251,252 @@ fn hnsw_sq8_index_survives_restart_bit_identical() {
         coord.create_collection("other", dim + 1, Metric::SqEuclidean).unwrap();
         coord.ingest("other", vec![0.0; (dim + 1) * 10]).unwrap();
         assert!(coord.load_index("other", path_str).is_err());
+        coord.shutdown();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Swap-safety: searcher threads hammer an indexed collection while the
+/// index is rebuilt (atomic swap) several times. With an exact sharded
+/// substrate, the old index and every rebuilt index serve byte-identical
+/// rankings (deterministic build over unchanged data), so *every* response
+/// must equal the ground truth computed through the same exact-scan kernel:
+/// any deviation means a search observed a half-built or stale index, and
+/// no search may ever error.
+#[test]
+fn searches_never_observe_half_built_index_during_swap() {
+    let n = 400;
+    let dim = 16;
+    let k = 6;
+    let cfg = ServeConfig {
+        workers: 3,
+        max_batch: 16,
+        max_wait_ms: 1,
+        queue_capacity: 4096,
+        index_kind: opdr::index::IndexKind::Exact,
+        ivf_threshold: 0,
+        shards: 4,
+        shard_min_vectors: 1,
+        ..Default::default()
+    };
+    let coord = std::sync::Arc::new(Coordinator::start(cfg).unwrap());
+    coord.create_collection("c", dim, Metric::SqEuclidean).unwrap();
+    let set = synth::generate(DatasetKind::Flickr30k, n, dim, 77);
+    coord.ingest("c", set.data().to_vec()).unwrap();
+    // Install the index before any searcher starts: the unindexed scan uses
+    // the matmul-form distance kernel, whose floats differ in the last ulp
+    // from the index's direct-form scan, so bitwise assertions are only
+    // valid while an index is serving.
+    coord.build_index("c").unwrap();
+
+    // Ground truth through the same kernel as the serving index: an
+    // unsharded exact scan over the same vectors.
+    let exact =
+        opdr::index::ExactIndex::build(set.data(), dim, Metric::SqEuclidean, false).unwrap();
+    let truth: std::sync::Arc<Vec<Vec<(usize, u32)>>> = std::sync::Arc::new(
+        (0..n)
+            .map(|qi| {
+                exact
+                    .search(set.vector(qi), k)
+                    .unwrap()
+                    .iter()
+                    .map(|nb| (nb.index, nb.distance.to_bits()))
+                    .collect()
+            })
+            .collect(),
+    );
+
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let mut searchers = Vec::new();
+    for t in 0..3usize {
+        let coord = std::sync::Arc::clone(&coord);
+        let set = set.clone();
+        let truth = std::sync::Arc::clone(&truth);
+        let stop = std::sync::Arc::clone(&stop);
+        searchers.push(std::thread::spawn(move || {
+            let mut done = 0usize;
+            let mut i = 0usize;
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) || done == 0 {
+                let qi = (t * 131 + i * 7) % n;
+                i += 1;
+                let res = coord
+                    .search("c", set.vector(qi).to_vec(), k)
+                    .expect("search errored during rebuild");
+                let got: Vec<(usize, u32)> = res
+                    .neighbors
+                    .iter()
+                    .map(|nb| (nb.index, nb.distance.to_bits()))
+                    .collect();
+                assert_eq!(got, truth[qi], "query {qi} diverged during rebuild");
+                done += 1;
+            }
+            done
+        }));
+    }
+
+    // Rebuild (atomic swap) repeatedly while the searchers run.
+    for _ in 0..5 {
+        coord.build_index("c").unwrap();
+    }
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let total: usize = searchers.into_iter().map(|h| h.join().unwrap()).sum();
+    assert!(total >= 3, "searchers made no progress");
+    let stats = coord.stats().unwrap();
+    assert!(stats.contains("shards=4"), "{stats}");
+    coord.shutdown();
+}
+
+/// Liveness: `BuildIndex` must not run on the scheduler thread, and while
+/// its segment builds occupy the worker pool the coordinator serves indexed
+/// searches inline (it tracks builds-in-flight and avoids queueing search
+/// work behind multi-second build jobs). So during a long sharded HNSW
+/// rebuild, searches against the previously installed index complete
+/// *while* the build is in flight, and (same data, same seed) results are
+/// byte-identical before, during and after the swap. Timing-sensitive:
+/// meaningful in release only (the CI shard/swap job runs it with
+/// `--release`).
+#[test]
+fn build_index_keeps_search_live_while_rebuilding() {
+    if cfg!(debug_assertions) {
+        eprintln!("SKIP: timing-sensitive swap test runs in release CI");
+        return;
+    }
+    let n = 6000;
+    let dim = 32;
+    let cfg = ServeConfig {
+        workers: 2,
+        max_batch: 16,
+        max_wait_ms: 1,
+        queue_capacity: 4096,
+        index_kind: opdr::index::IndexKind::Hnsw,
+        hnsw_ef_construction: 400,
+        ivf_threshold: 0,
+        shards: 2,
+        shard_min_vectors: 1,
+        ..Default::default()
+    };
+    let coord = std::sync::Arc::new(Coordinator::start(cfg).unwrap());
+    coord.create_collection("c", dim, Metric::SqEuclidean).unwrap();
+    let set = synth::generate(DatasetKind::OmniCorpus, n, dim, 3);
+    coord.ingest("c", set.data().to_vec()).unwrap();
+
+    // First build: blocks the *caller* until the swap, not the scheduler.
+    coord.build_index("c").unwrap();
+    let expected: Vec<(usize, u32)> = coord
+        .search("c", set.vector(9).to_vec(), 8)
+        .unwrap()
+        .neighbors
+        .iter()
+        .map(|nb| (nb.index, nb.distance.to_bits()))
+        .collect();
+
+    // Second build of the same data (same seed → bit-identical index) on a
+    // helper thread; the main thread searches until it completes.
+    let building = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(true));
+    let builder = {
+        let coord = std::sync::Arc::clone(&coord);
+        let building = std::sync::Arc::clone(&building);
+        std::thread::spawn(move || {
+            let started = std::time::Instant::now();
+            coord.build_index("c").unwrap();
+            building.store(false, std::sync::atomic::Ordering::SeqCst);
+            started.elapsed()
+        })
+    };
+
+    let mut overlapped = 0usize;
+    while building.load(std::sync::atomic::Ordering::SeqCst) {
+        let res = coord.search("c", set.vector(9).to_vec(), 8).unwrap();
+        let got: Vec<(usize, u32)> = res
+            .neighbors
+            .iter()
+            .map(|nb| (nb.index, nb.distance.to_bits()))
+            .collect();
+        assert_eq!(got, expected, "search diverged during the rebuild");
+        if building.load(std::sync::atomic::Ordering::SeqCst) {
+            overlapped += 1;
+        }
+    }
+    let build_time = builder.join().unwrap();
+    assert!(
+        overlapped >= 1,
+        "no search completed during a {build_time:?} rebuild — BuildIndex blocked the scheduler"
+    );
+    // After the swap: still byte-identical (deterministic rebuild).
+    let after: Vec<(usize, u32)> = coord
+        .search("c", set.vector(9).to_vec(), 8)
+        .unwrap()
+        .neighbors
+        .iter()
+        .map(|nb| (nb.index, nb.distance.to_bits()))
+        .collect();
+    assert_eq!(after, expected);
+    coord.shutdown();
+}
+
+/// A sharded (version-3, multi-segment) index survives a save/load
+/// round-trip through the coordinator's SaveIndex/LoadIndex verbs with
+/// bit-identical search results.
+#[test]
+fn sharded_index_survives_restart_bit_identical() {
+    let n = 240;
+    let dim = 12;
+    let k = 7;
+    let set = synth::generate(DatasetKind::MaterialsStable, n, dim, 31);
+    let dir = std::env::temp_dir().join(format!("opdr_it_shidx_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("sharded.opdx");
+    let path_str = path.to_str().unwrap();
+
+    let cfg = ServeConfig {
+        workers: 2,
+        index_kind: opdr::index::IndexKind::Hnsw,
+        index_sq8: true,
+        ivf_threshold: 0,
+        shards: 3,
+        shard_min_vectors: 1,
+        ..Default::default()
+    };
+
+    let before: Vec<Vec<(usize, u32)>>;
+    {
+        let coord = Coordinator::start(cfg.clone()).unwrap();
+        coord.create_collection("mm", dim, Metric::SqEuclidean).unwrap();
+        coord.ingest("mm", set.data().to_vec()).unwrap();
+        coord.build_index("mm").unwrap();
+        let stats = coord.stats().unwrap();
+        assert!(stats.contains("kind=hnsw") && stats.contains("shards=3"), "{stats}");
+        before = (0..15)
+            .map(|qi| {
+                coord
+                    .search("mm", set.vector(qi).to_vec(), k)
+                    .unwrap()
+                    .neighbors
+                    .iter()
+                    .map(|nb| (nb.index, nb.distance.to_bits()))
+                    .collect()
+            })
+            .collect();
+        coord.save_index("mm", path_str).unwrap();
+        coord.shutdown();
+    }
+    {
+        let coord = Coordinator::start(cfg).unwrap();
+        coord.create_collection("mm", dim, Metric::SqEuclidean).unwrap();
+        coord.ingest("mm", set.data().to_vec()).unwrap();
+        coord.load_index("mm", path_str).unwrap();
+        let stats = coord.stats().unwrap();
+        assert!(stats.contains("shards=3"), "{stats}");
+        for (qi, want) in before.iter().enumerate() {
+            let got: Vec<(usize, u32)> = coord
+                .search("mm", set.vector(qi).to_vec(), k)
+                .unwrap()
+                .neighbors
+                .iter()
+                .map(|nb| (nb.index, nb.distance.to_bits()))
+                .collect();
+            assert_eq!(&got, want, "query {qi} diverged after reload");
+        }
         coord.shutdown();
     }
     std::fs::remove_dir_all(&dir).ok();

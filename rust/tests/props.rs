@@ -278,6 +278,187 @@ fn prop_index_substrates_agree_with_exact_at_full_beam() {
     );
 }
 
+/// Tentpole exactness proof, part 1 — the fan-out/merge is *order-exact*
+/// for every substrate ± SQ8: searching a `ShardedIndex` (serially or fanned
+/// out on the pool) returns byte-identical neighbors to independently
+/// searching the same per-shard segments and merging their remapped hits
+/// under the global (distance, index) order — including heavy ties,
+/// NaN-distance vectors and k ≥ N.
+#[test]
+fn prop_sharded_merge_is_order_exact_for_every_substrate() {
+    use opdr::config::IndexPolicy;
+    use opdr::coordinator::ThreadPool;
+    use opdr::index::shard::{shard_ranges, shard_seed, ShardedIndex};
+    use opdr::index::{build_index, AnnIndex as _, IndexKind};
+    let pool = ThreadPool::new(3);
+    forall(
+        PropConfig { cases: 20, seed: 4242 },
+        |rng| {
+            let m = 6 + rng.below(36);
+            let dim = 2 + rng.below(6);
+            let mut data = gen::vec_f32(rng, m * dim);
+            // Duplicate some rows so (distance, index) tie-breaking is load-
+            // bearing across shard boundaries.
+            for i in 1..m {
+                if rng.below(4) == 0 {
+                    let src = rng.below(i);
+                    data.copy_within(src * dim..(src + 1) * dim, i * dim);
+                }
+            }
+            // Sometimes poison a row with NaN (skipped by the top-k
+            // contract). SQ8 training rejects non-finite input, and ANN
+            // structure builds over NaN rows are undefined, so NaN cases
+            // exercise the exact substrate.
+            let nan_row = if rng.below(3) == 0 { Some(rng.below(m)) } else { None };
+            if let Some(rix) = nan_row {
+                data[rix * dim] = f32::NAN;
+            }
+            let s = 2 + rng.below(4);
+            let k = rng.below(m + 4); // 0, < m and ≥ m all exercised
+            let metric = METRICS[rng.below(4)];
+            let q = gen::vec_f32(rng, dim);
+            (data, dim, m, s, k, metric, q, nan_row.is_some())
+        },
+        |(data, dim, m, s, k, metric, q, has_nan)| {
+            let substrates: &[(IndexKind, bool)] = if *has_nan {
+                &[(IndexKind::Exact, false)]
+            } else {
+                &[
+                    (IndexKind::Exact, false),
+                    (IndexKind::Exact, true),
+                    (IndexKind::Ivf, false),
+                    (IndexKind::Ivf, true),
+                    (IndexKind::Hnsw, false),
+                    (IndexKind::Hnsw, true),
+                ]
+            };
+            for &(kind, sq8) in substrates {
+                let policy = IndexPolicy {
+                    kind,
+                    sq8,
+                    exact_threshold: 0,
+                    shards: *s,
+                    shard_min_vectors: 1,
+                    ivf_nlist: 3,
+                    ivf_nprobe: 2,
+                    ..Default::default()
+                };
+                let tag = format!("{}{} S={s}", kind.name(), if sq8 { "+sq8" } else { "" });
+                let sharded = ShardedIndex::build(data, *dim, *metric, &policy, 77)
+                    .map_err(|e| format!("{tag}: {e}"))?;
+                // Reference: same leaf builds (same partition, same per-shard
+                // seeds), searched independently, remapped and merged by a
+                // plain total-order sort.
+                let leaf = IndexPolicy { shards: 1, ..policy.clone() };
+                let mut reference: Vec<(usize, u32, f32)> = Vec::new();
+                for (si, r) in shard_ranges(*m, *s, 1).iter().enumerate() {
+                    let seg = build_index(
+                        &data[r.start * dim..r.end * dim],
+                        *dim,
+                        *metric,
+                        &leaf,
+                        shard_seed(77, si),
+                    )
+                    .map_err(|e| format!("{tag} shard {si}: {e}"))?;
+                    for nb in seg.search(q, *k).map_err(|e| format!("{tag}: {e}"))? {
+                        reference.push((nb.index + r.start, nb.distance.to_bits(), nb.distance));
+                    }
+                }
+                reference.sort_by(|a, b| {
+                    a.2.partial_cmp(&b.2).unwrap().then(a.0.cmp(&b.0))
+                });
+                reference.truncate(*k);
+                let want: Vec<(usize, u32)> =
+                    reference.into_iter().map(|(i, bits, _)| (i, bits)).collect();
+
+                let serial: Vec<(usize, u32)> = sharded
+                    .search(q, *k)
+                    .map_err(|e| format!("{tag}: {e}"))?
+                    .iter()
+                    .map(|nb| (nb.index, nb.distance.to_bits()))
+                    .collect();
+                if serial != want {
+                    return Err(format!("{tag}: serial merge {serial:?} != reference {want:?}"));
+                }
+                let fanned: Vec<(usize, u32)> = sharded
+                    .search_on(&pool, q, *k)
+                    .map_err(|e| format!("{tag}: {e}"))?
+                    .iter()
+                    .map(|nb| (nb.index, nb.distance.to_bits()))
+                    .collect();
+                if fanned != serial {
+                    return Err(format!("{tag}: pool fan-out {fanned:?} != serial {serial:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Tentpole exactness proof, part 2 — at exhaustive parameters (exact scan;
+/// IVF at full probe; HNSW with degree cap ≥ n and beam ≥ 4n) a sharded
+/// index over *any* substrate returns the same neighbor IDs and bit-
+/// identical distances as the unsharded index over the whole collection.
+#[test]
+fn prop_sharded_equals_unsharded_at_exhaustive_params() {
+    use opdr::config::IndexPolicy;
+    use opdr::index::{build_index, AnnIndex as _, IndexKind};
+    forall(
+        PropConfig { cases: 10, seed: 5151 },
+        |rng| {
+            let (data, dim, m) = gen::embedding_block(rng, 8, 36, 2, 8);
+            let s = 2 + rng.below(4);
+            let k = 1 + rng.below(m + 2);
+            let metric = METRICS[rng.below(4)];
+            let q = gen::vec_f32(rng, dim);
+            (data, dim, m, s, k, metric, q)
+        },
+        |(data, dim, m, s, k, metric, q)| {
+            let n = *m;
+            for kind in [IndexKind::Exact, IndexKind::Ivf, IndexKind::Hnsw] {
+                let sharded_policy = IndexPolicy {
+                    kind,
+                    exact_threshold: 0,
+                    shards: *s,
+                    shard_min_vectors: 1,
+                    ivf_nlist: n,
+                    ivf_nprobe: n,
+                    hnsw_m: n.max(2),
+                    hnsw_ef_search: 4 * n,
+                    ..Default::default()
+                };
+                let unsharded_policy = IndexPolicy { shards: 1, ..sharded_policy.clone() };
+                let single = build_index(data, *dim, *metric, &unsharded_policy, 5)
+                    .map_err(|e| e.to_string())?;
+                let sharded = build_index(data, *dim, *metric, &sharded_policy, 5)
+                    .map_err(|e| e.to_string())?;
+                if sharded.as_sharded().is_none() {
+                    return Err(format!("{}: expected a sharded index", kind.name()));
+                }
+                let a: Vec<(usize, u32)> = single
+                    .search(q, *k)
+                    .map_err(|e| e.to_string())?
+                    .iter()
+                    .map(|nb| (nb.index, nb.distance.to_bits()))
+                    .collect();
+                let b: Vec<(usize, u32)> = sharded
+                    .search(q, *k)
+                    .map_err(|e| e.to_string())?
+                    .iter()
+                    .map(|nb| (nb.index, nb.distance.to_bits()))
+                    .collect();
+                if a != b {
+                    return Err(format!(
+                        "{} S={s}: sharded {b:?} != unsharded {a:?}",
+                        kind.name()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn prop_store_roundtrip() {
     forall(
