@@ -55,7 +55,10 @@ fn main() {
     let sample = &base_full[..CALIB * DIM];
     let planner =
         Planner::calibrate(sample, DIM, K, METRIC, ReducerKind::Pca, 7).expect("calibrate");
+    // Round the planned dim up to even so the PQ axis gets its headline
+    // m = dim/2 (2-dim subspaces) without a divisor fallback.
     let target_dim = planner.dim_for_accuracy(0.9, CALIB).min(DIM);
+    let target_dim = ((target_dim + 1) / 2 * 2).clamp(2, DIM);
     let model = Pca::new().fit(sample, DIM, target_dim).expect("pca fit");
     let base = model.project(base_full).expect("project base");
     let queries = model.project(query_full).expect("project queries");
@@ -95,11 +98,40 @@ fn main() {
             IndexPolicy { kind: IndexKind::Hnsw, exact_threshold: 0, ..Default::default() },
         ),
         (
+            "hnsw-plain",
+            IndexPolicy {
+                kind: IndexKind::Hnsw,
+                exact_threshold: 0,
+                hnsw_heuristic: false,
+                ..Default::default()
+            },
+        ),
+        (
             "hnsw+sq8",
             IndexPolicy {
                 kind: IndexKind::Hnsw,
                 exact_threshold: 0,
                 sq8: true,
+                ..Default::default()
+            },
+        ),
+        (
+            "exact+pq",
+            IndexPolicy {
+                kind: IndexKind::Exact,
+                exact_threshold: 0,
+                pq: true,
+                rerank_depth: 4 * K,
+                ..Default::default()
+            },
+        ),
+        (
+            "hnsw+pq",
+            IndexPolicy {
+                kind: IndexKind::Hnsw,
+                exact_threshold: 0,
+                pq: true,
+                rerank_depth: 4 * K,
                 ..Default::default()
             },
         ),
@@ -240,5 +272,128 @@ fn main() {
          construction dominates); exact fan-out QPS dips at small N (merge\n\
          overhead) and the sharded merge keeps recall pinned to the\n\
          single-segment value for exact — order-exactness costs nothing."
+    );
+
+    // ---------------------------------------------------------------
+    // Compression axis: flat f32 vs SQ8 vs PQ vs PQ+OPQ — compression
+    // ratio × recall@10 × QPS, sweeping the PQ rerank depth. Results
+    // land in BENCH_pq.json; the PQ rows must clear the 8× bar.
+    // ---------------------------------------------------------------
+    section(&format!(
+        "compression axis over {N} vectors at dim {dim}: f32 / sq8 / pq(m=dim/2, ksub=16) / pq+opq"
+    ));
+    let flat_bytes = (N * dim * std::mem::size_of::<f32>()) as f64;
+    let mut pq_table = Table::new(&[
+        "storage",
+        "rerank depth",
+        "compression",
+        "recall@10",
+        "qps",
+        "hot KiB",
+        "cold KiB",
+    ]);
+    let mut pq_json: Vec<String> = Vec::new();
+    let variants: Vec<(&str, IndexPolicy, usize)> = vec![
+        (
+            "f32",
+            IndexPolicy { kind: IndexKind::Exact, exact_threshold: 0, ..Default::default() },
+            0,
+        ),
+        (
+            "sq8",
+            IndexPolicy {
+                kind: IndexKind::Exact,
+                exact_threshold: 0,
+                sq8: true,
+                ..Default::default()
+            },
+            0,
+        ),
+        (
+            "pq",
+            IndexPolicy {
+                kind: IndexKind::Exact,
+                exact_threshold: 0,
+                pq: true,
+                ..Default::default()
+            },
+            2 * K,
+        ),
+        (
+            "pq",
+            IndexPolicy {
+                kind: IndexKind::Exact,
+                exact_threshold: 0,
+                pq: true,
+                ..Default::default()
+            },
+            8 * K,
+        ),
+        (
+            "pq+opq",
+            IndexPolicy {
+                kind: IndexKind::Exact,
+                exact_threshold: 0,
+                pq: true,
+                pq_opq: true,
+                ..Default::default()
+            },
+            8 * K,
+        ),
+    ];
+    for (name, policy, depth) in variants {
+        let policy = if depth > 0 { IndexPolicy { rerank_depth: depth, ..policy } } else { policy };
+        let idx = build_index(&base, dim, METRIC, &policy, 9).expect("build compression variant");
+        let recall = recall_at_k(idx.as_ref(), &queries, dim, &truth);
+        let r = bencher.run_items(&format!("{name} d={depth}"), NQ as u64, || {
+            for qi in 0..NQ {
+                let q = &queries[qi * dim..(qi + 1) * dim];
+                let out = idx.search(q, K).unwrap();
+                std::hint::black_box(out.len());
+            }
+        });
+        let qps = r.throughput().unwrap_or(0.0);
+        let ratio = flat_bytes / idx.memory_bytes() as f64;
+        // Acceptance bar: PQ at m=dim/2 must clear 8× (OPQ's dim² rotation
+        // is a constant overhead amortized by n, so it is reported but not
+        // gated).
+        if name == "pq" {
+            assert!(
+                ratio >= 8.0,
+                "{name}: compression {ratio:.2}x below the 8x acceptance bar"
+            );
+        }
+        pq_table.row(&[
+            name.to_string(),
+            depth.to_string(),
+            format!("{ratio:.1}x"),
+            format!("{recall:.3}"),
+            format!("{qps:.0}"),
+            format!("{:.0}", idx.memory_bytes() as f64 / 1024.0),
+            format!("{:.0}", idx.cold_bytes() as f64 / 1024.0),
+        ]);
+        pq_json.push(format!(
+            "{{\"storage\":\"{name}\",\"rerank_depth\":{depth},\"compression\":{ratio:.3},\
+             \"recall_at_10\":{recall:.4},\"qps\":{qps:.1},\"hot_bytes\":{},\"cold_bytes\":{}}}",
+            idx.memory_bytes(),
+            idx.cold_bytes()
+        ));
+    }
+    println!("{}", pq_table.render());
+    let json = format!(
+        "{{\"bench\":\"index_pq\",\"n\":{N},\"dim\":{dim},\"k\":{K},\"rows\":[\n  {}\n]}}\n",
+        pq_json.join(",\n  ")
+    );
+    std::fs::write("bench_out/BENCH_pq.json", json).expect("write BENCH_pq.json");
+    println!("wrote bench_out/BENCH_pq.json");
+
+    println!(
+        "\nreading: sq8 sits at ~4x; pq(m=dim/2, ksub=16) clears 16x on the hot\n\
+         copy (nibble-packed codes) with the full-precision rows banished to the\n\
+         cold rerank tier; recall climbs with rerank depth and reaches the exact\n\
+         ranking as depth approaches N (the order-exactness property); OPQ's\n\
+         rotation buys a few recall points at equal compression on correlated\n\
+         embeddings. hnsw vs hnsw-plain in the first table isolates Malkov\n\
+         Algorithm 4 heuristic neighbor selection."
     );
 }

@@ -3,9 +3,10 @@
 use crate::config::toml::{parse_toml, TomlValue};
 use crate::data::DatasetKind;
 use crate::error::{OpdrError, Result};
-use crate::index::IndexKind;
+use crate::index::{IndexKind, PqParams, Sq8Bounds, StorageSpec};
 use crate::metrics::Metric;
 use crate::reduction::ReducerKind;
+use std::sync::Arc;
 
 /// Specification of an accuracy-vs-n/m sweep (one paper figure).
 #[derive(Debug, Clone)]
@@ -214,6 +215,31 @@ pub struct IndexPolicy {
     pub exact_threshold: usize,
     /// Store vectors SQ8-quantized (≈4× smaller serving copy).
     pub sq8: bool,
+    /// SQ8: train one codebook over the whole collection instead of per
+    /// segment, so sharded quantized results are bit-identical to the
+    /// unsharded quantized index at exhaustive parameters.
+    pub sq8_global_codebook: bool,
+    /// Pre-trained SQ8 bounds injected by the sharded builder (runtime-only;
+    /// not a config key).
+    pub sq8_bounds: Option<Arc<Sq8Bounds>>,
+    /// Store vectors product-quantized (≈16× smaller hot copy at the
+    /// default `m = dim/2`, `ksub = 16`), searched through ADC tables plus a
+    /// full-precision rerank. Mutually exclusive with `sq8`.
+    pub pq: bool,
+    /// PQ: subquantizer count (0 = auto `dim/2`).
+    pub pq_m: usize,
+    /// PQ: centroids per subspace (2..=256; ≤ 16 packs two codes per byte).
+    pub pq_ksub: usize,
+    /// PQ: train an OPQ rotation before encoding.
+    pub pq_opq: bool,
+    /// PQ: Lloyd iterations per subspace codebook.
+    pub pq_train_iters: usize,
+    /// PQ: OPQ alternating-least-squares rounds.
+    pub pq_opq_iters: usize,
+    /// PQ: ADC candidates re-scored at full precision per query (raised to
+    /// `k` when `k` is larger; `≥ n` makes results bit-identical to the
+    /// exact index).
+    pub rerank_depth: usize,
     /// IVF: number of k-means cells.
     pub ivf_nlist: usize,
     /// IVF: cells probed per query.
@@ -226,6 +252,8 @@ pub struct IndexPolicy {
     pub hnsw_ef_construction: usize,
     /// HNSW: search beam width.
     pub hnsw_ef_search: usize,
+    /// HNSW: Malkov Algorithm 4 heuristic neighbor selection (default on).
+    pub hnsw_heuristic: bool,
     /// Split a collection into up to this many index segments: segments
     /// build in parallel on the worker pool and queries fan out per shard
     /// and merge order-exactly (see [`crate::index::shard`]). 1 = unsharded.
@@ -241,12 +269,22 @@ impl Default for IndexPolicy {
             kind: IndexKind::Ivf,
             exact_threshold: 4096,
             sq8: false,
+            sq8_global_codebook: false,
+            sq8_bounds: None,
+            pq: false,
+            pq_m: 0,
+            pq_ksub: 16,
+            pq_opq: false,
+            pq_train_iters: 10,
+            pq_opq_iters: 4,
+            rerank_depth: 64,
             ivf_nlist: 64,
             ivf_nprobe: 8,
             ivf_train_iters: 10,
             hnsw_m: 16,
             hnsw_ef_construction: 100,
             hnsw_ef_search: 64,
+            hnsw_heuristic: true,
             shards: 1,
             shard_min_vectors: 1024,
         }
@@ -262,6 +300,30 @@ impl IndexPolicy {
                 crate::index::shard::MAX_SHARDS
             )));
         }
+        if self.sq8 && self.pq {
+            return Err(OpdrError::config(
+                "index: sq8 and pq are mutually exclusive quantizers",
+            ));
+        }
+        if self.sq8_global_codebook && !self.sq8 {
+            return Err(OpdrError::config(
+                "index: sq8_global_codebook requires sq8 (the flag would be silently ignored)",
+            ));
+        }
+        if self.pq_opq && !self.pq {
+            return Err(OpdrError::config(
+                "index: pq_opq requires pq (the flag would be silently ignored)",
+            ));
+        }
+        if self.pq_ksub < 2 || self.pq_ksub > 256 {
+            return Err(OpdrError::config("index: pq_ksub must be in [2, 256]"));
+        }
+        if self.pq_train_iters == 0 {
+            return Err(OpdrError::config("index: pq_train_iters must be >= 1"));
+        }
+        if self.rerank_depth == 0 {
+            return Err(OpdrError::config("index: rerank_depth must be >= 1"));
+        }
         if self.ivf_nlist == 0 {
             return Err(OpdrError::config("index: ivf_nlist must be >= 1"));
         }
@@ -275,6 +337,25 @@ impl IndexPolicy {
             return Err(OpdrError::config("index: hnsw beam widths must be >= 1"));
         }
         Ok(())
+    }
+
+    /// The [`StorageSpec`] the substrates build their vector copy from
+    /// (flat / SQ8 ± global bounds / PQ).
+    pub fn storage_spec(&self) -> StorageSpec {
+        if self.pq {
+            StorageSpec::Pq(PqParams {
+                m: self.pq_m,
+                ksub: self.pq_ksub,
+                opq: self.pq_opq,
+                train_iters: self.pq_train_iters,
+                opq_iters: self.pq_opq_iters,
+                rerank_depth: self.rerank_depth,
+            })
+        } else if self.sq8 {
+            StorageSpec::Sq8 { bounds: self.sq8_bounds.clone() }
+        } else {
+            StorageSpec::Flat
+        }
     }
 }
 
@@ -306,16 +387,33 @@ pub struct ServeConfig {
     pub index_kind: IndexKind,
     /// Store indexed vectors SQ8-quantized.
     pub index_sq8: bool,
+    /// SQ8: one codebook over the whole collection instead of per shard.
+    pub sq8_global_codebook: bool,
+    /// Store indexed vectors product-quantized (ADC + rerank search).
+    pub index_pq: bool,
+    /// PQ subquantizer count (0 = auto `dim/2`).
+    pub index_pq_m: usize,
+    /// PQ centroids per subspace.
+    pub index_pq_ksub: usize,
+    /// PQ: train an OPQ rotation before encoding.
+    pub index_pq_opq: bool,
+    /// PQ: ADC candidates re-scored at full precision per query.
+    pub rerank_depth: usize,
     /// HNSW max links per node.
     pub hnsw_m: usize,
     /// HNSW construction beam width.
     pub hnsw_ef_construction: usize,
     /// HNSW search beam width.
     pub hnsw_ef_search: usize,
+    /// HNSW heuristic neighbor selection (Malkov Algorithm 4, default on).
+    pub hnsw_heuristic: bool,
     /// Index segments per collection (parallel builds + query fan-out).
     pub shards: usize,
     /// Minimum rows per index segment.
     pub shard_min_vectors: usize,
+    /// Workers in the dedicated index-build pool (segment builds never
+    /// compete with search fan-out for pool slots).
+    pub build_workers: usize,
 }
 
 impl Default for ServeConfig {
@@ -333,22 +431,35 @@ impl Default for ServeConfig {
             ivf_nprobe: 8,
             index_kind: IndexKind::Ivf,
             index_sq8: false,
+            sq8_global_codebook: false,
+            index_pq: false,
+            index_pq_m: 0,
+            index_pq_ksub: 16,
+            index_pq_opq: false,
+            rerank_depth: 64,
             hnsw_m: 16,
             hnsw_ef_construction: 100,
             hnsw_ef_search: 64,
+            hnsw_heuristic: true,
             shards: 1,
             shard_min_vectors: 1024,
+            build_workers: 2,
         }
     }
 }
 
 impl ServeConfig {
     /// Parse the `[serve]` table of a TOML doc (all keys optional).
+    /// Dependent keys given without their primary toggle (`index_pq_*` /
+    /// `rerank_depth` without `index_pq`, `sq8_global_codebook` without
+    /// `index_sq8`) are rejected rather than silently ignored.
     pub fn from_toml_str(src: &str) -> Result<Self> {
         let root = parse_toml(src)?;
         let mut cfg = ServeConfig::default();
+        let mut seen: Vec<String> = Vec::new();
         if let Some(t) = root.get_path("serve").and_then(|v| v.as_table()) {
             for (key, val) in t {
+                seen.push(key.clone());
                 match key.as_str() {
                     "workers" => cfg.workers = pos_int(val, "serve", key)?,
                     "max_batch" => cfg.max_batch = pos_int(val, "serve", key)?,
@@ -382,18 +493,56 @@ impl ServeConfig {
                             .as_bool()
                             .ok_or_else(|| OpdrError::config("serve.index_sq8 must be a bool"))?
                     }
+                    "sq8_global_codebook" => {
+                        cfg.sq8_global_codebook = val.as_bool().ok_or_else(|| {
+                            OpdrError::config("serve.sq8_global_codebook must be a bool")
+                        })?
+                    }
+                    "index_pq" => {
+                        cfg.index_pq = val
+                            .as_bool()
+                            .ok_or_else(|| OpdrError::config("serve.index_pq must be a bool"))?
+                    }
+                    "index_pq_m" => cfg.index_pq_m = pos_int(val, "serve", key)?,
+                    "index_pq_ksub" => cfg.index_pq_ksub = pos_int(val, "serve", key)?,
+                    "index_pq_opq" => {
+                        cfg.index_pq_opq = val.as_bool().ok_or_else(|| {
+                            OpdrError::config("serve.index_pq_opq must be a bool")
+                        })?
+                    }
+                    "rerank_depth" => cfg.rerank_depth = pos_int(val, "serve", key)?,
                     "hnsw_m" => cfg.hnsw_m = pos_int(val, "serve", key)?,
                     "hnsw_ef_construction" => {
                         cfg.hnsw_ef_construction = pos_int(val, "serve", key)?
                     }
                     "hnsw_ef_search" => cfg.hnsw_ef_search = pos_int(val, "serve", key)?,
+                    "hnsw_heuristic" => {
+                        cfg.hnsw_heuristic = val.as_bool().ok_or_else(|| {
+                            OpdrError::config("serve.hnsw_heuristic must be a bool")
+                        })?
+                    }
                     "shards" => cfg.shards = pos_int(val, "serve", key)?,
                     "shard_min_vectors" => cfg.shard_min_vectors = pos_int(val, "serve", key)?,
+                    "build_workers" => cfg.build_workers = pos_int(val, "serve", key)?,
                     other => {
                         return Err(OpdrError::config(format!("serve: unknown key `{other}`")))
                     }
                 }
             }
+        }
+        const PQ_DEPENDENT: [&str; 4] =
+            ["index_pq_m", "index_pq_ksub", "index_pq_opq", "rerank_depth"];
+        if !cfg.index_pq {
+            if let Some(k) = seen.iter().find(|k| PQ_DEPENDENT.contains(&k.as_str())) {
+                return Err(OpdrError::config(format!(
+                    "serve: `{k}` requires index_pq = true (it would be silently ignored)"
+                )));
+            }
+        }
+        if !cfg.index_sq8 && seen.iter().any(|k| k == "sq8_global_codebook") {
+            return Err(OpdrError::config(
+                "serve: `sq8_global_codebook` requires index_sq8 = true                  (it would be silently ignored)",
+            ));
         }
         cfg.validate()?;
         Ok(cfg)
@@ -403,6 +552,9 @@ impl ServeConfig {
     pub fn validate(&self) -> Result<()> {
         if self.workers == 0 {
             return Err(OpdrError::config("serve.workers must be >= 1"));
+        }
+        if self.build_workers == 0 {
+            return Err(OpdrError::config("serve.build_workers must be >= 1"));
         }
         if self.max_batch == 0 {
             return Err(OpdrError::config("serve.max_batch must be >= 1"));
@@ -426,14 +578,21 @@ impl ServeConfig {
             kind: self.index_kind,
             exact_threshold: self.ivf_threshold,
             sq8: self.index_sq8,
+            sq8_global_codebook: self.sq8_global_codebook,
+            pq: self.index_pq,
+            pq_m: self.index_pq_m,
+            pq_ksub: self.index_pq_ksub,
+            pq_opq: self.index_pq_opq,
+            rerank_depth: self.rerank_depth,
             ivf_nlist: self.ivf_nlist,
             ivf_nprobe: self.ivf_nprobe,
-            ivf_train_iters: 10,
             hnsw_m: self.hnsw_m,
             hnsw_ef_construction: self.hnsw_ef_construction,
             hnsw_ef_search: self.hnsw_ef_search,
+            hnsw_heuristic: self.hnsw_heuristic,
             shards: self.shards,
             shard_min_vectors: self.shard_min_vectors,
+            ..Default::default()
         }
     }
 }
@@ -550,6 +709,52 @@ k = 5
         // shards = 0 and absurd counts are rejected.
         assert!(ServeConfig::from_toml_str("[serve]\nshards = 0").is_err());
         assert!(ServeConfig::from_toml_str("[serve]\nshards = 100000").is_err());
+    }
+
+    #[test]
+    fn serve_pq_and_global_codebook_keys_flow_into_policy() {
+        let cfg = ServeConfig::from_toml_str(
+            "[serve]\nindex_pq = true\nindex_pq_m = 8\nindex_pq_ksub = 32\n\
+             index_pq_opq = true\nrerank_depth = 200\nhnsw_heuristic = false\n\
+             build_workers = 3\n",
+        )
+        .unwrap();
+        assert!(cfg.index_pq);
+        assert_eq!(cfg.build_workers, 3);
+        let p = cfg.index_policy();
+        assert!(p.pq && p.pq_opq && !p.hnsw_heuristic);
+        assert_eq!(p.pq_m, 8);
+        assert_eq!(p.pq_ksub, 32);
+        assert_eq!(p.rerank_depth, 200);
+        assert!(matches!(p.storage_spec(), StorageSpec::Pq(pp) if pp.opq && pp.ksub == 32));
+        // Global SQ8 codebook key.
+        let cfg = ServeConfig::from_toml_str(
+            "[serve]\nindex_sq8 = true\nsq8_global_codebook = true\n",
+        )
+        .unwrap();
+        let p = cfg.index_policy();
+        assert!(p.sq8 && p.sq8_global_codebook);
+        assert!(matches!(p.storage_spec(), StorageSpec::Sq8 { bounds: None }));
+        // Defaults: flat storage, heuristic on, dedicated build pool.
+        let d = ServeConfig::from_toml_str("").unwrap();
+        assert!(!d.index_pq && d.hnsw_heuristic);
+        assert_eq!(d.build_workers, 2);
+        assert!(matches!(d.index_policy().storage_spec(), StorageSpec::Flat));
+        // Invalid combinations / ranges.
+        assert!(ServeConfig::from_toml_str("[serve]\nindex_pq = true\nindex_sq8 = true").is_err());
+        assert!(ServeConfig::from_toml_str("[serve]\nindex_pq_ksub = 1000").is_err());
+        assert!(ServeConfig::from_toml_str("[serve]\nrerank_depth = 0").is_err());
+        assert!(ServeConfig::from_toml_str("[serve]\nbuild_workers = 0").is_err());
+        assert!(ServeConfig::from_toml_str("[serve]\nindex_pq = 3").is_err());
+        // Dependent keys without their primary toggle are rejected instead
+        // of silently ignored — booleans and parameters alike.
+        assert!(ServeConfig::from_toml_str("[serve]\nsq8_global_codebook = true").is_err());
+        assert!(ServeConfig::from_toml_str("[serve]\nindex_pq_opq = true").is_err());
+        let e = ServeConfig::from_toml_str("[serve]\nindex_pq_ksub = 32")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("requires index_pq"), "{e}");
+        assert!(ServeConfig::from_toml_str("[serve]\nrerank_depth = 500").is_err());
     }
 
     #[test]

@@ -8,8 +8,10 @@
 //!   drains the queue through the **dynamic batcher** ([`batcher`]) and
 //!   executes search batches either on the PJRT `pairwise_topk` artifact or
 //!   on the pure-Rust scoring path parallelized over a **worker pool**
-//!   ([`crate::pool`] — shared with the index subsystem's segment builds
-//!   and shard fan-out);
+//!   ([`crate::pool`] — shared with the index subsystem's shard fan-out;
+//!   segment builds run on a **dedicated build pool** with per-collection
+//!   builds-in-flight accounting ([`BuildTracker`]), so rebuilds never
+//!   steal pool slots from any collection's searches);
 //! * OPDR is a first-class verb: `BuildReduced` calibrates the planner on the
 //!   collection, picks `dim(Y)` for the requested accuracy and swaps the
 //!   serving copy to the reduced space.
@@ -20,5 +22,5 @@ pub mod state;
 
 pub use batcher::{collect_batch, BatchPolicy, CollectOutcome};
 pub use crate::pool::ThreadPool;
-pub use server::{Coordinator, SearchResult};
+pub use server::{BuildTracker, Coordinator, SearchResult};
 pub use state::{Collection, Collections, IndexSlot, ReducedState};

@@ -11,11 +11,53 @@ use crate::pool::ThreadPool;
 use crate::runtime::Engine;
 use crate::telemetry::Metrics;
 use crate::util::Stopwatch;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::collections::HashMap;
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
+
+/// Per-collection builds-in-flight accounting. One collection's rebuild
+/// used to steer *every* collection's search batches off the worker pool
+/// (the counter was global, and builds shared the search pool); now that
+/// segment builds run on the dedicated build pool no collection is steered
+/// at all, and the per-collection counts feed stats (`building=`) and the
+/// deferred build responses.
+#[derive(Debug, Default)]
+pub struct BuildTracker {
+    inner: Mutex<HashMap<String, usize>>,
+}
+
+impl BuildTracker {
+    /// Record a build starting for `collection`.
+    pub fn begin(&self, collection: &str) {
+        *self.inner.lock().unwrap().entry(collection.to_string()).or_insert(0) += 1;
+    }
+
+    /// Record a build finishing for `collection` (saturating; entries drop
+    /// at zero so the map stays bounded by the set of rebuilding
+    /// collections).
+    pub fn finish(&self, collection: &str) {
+        let mut map = self.inner.lock().unwrap();
+        if let Some(count) = map.get_mut(collection) {
+            *count = count.saturating_sub(1);
+            if *count == 0 {
+                map.remove(collection);
+            }
+        }
+    }
+
+    /// Builds currently in flight for `collection`.
+    pub fn in_flight(&self, collection: &str) -> usize {
+        self.inner.lock().unwrap().get(collection).copied().unwrap_or(0)
+    }
+
+    /// Total builds in flight across all collections (the stats summary
+    /// line reports it).
+    pub fn total(&self) -> usize {
+        self.inner.lock().unwrap().values().sum()
+    }
+}
 
 /// One search hit list.
 #[derive(Debug, Clone)]
@@ -205,11 +247,13 @@ impl Drop for Coordinator {
 fn scheduler_loop(rx: Receiver<Request>, cfg: ServeConfig, metrics: Arc<Metrics>) {
     let mut collections = Collections::new();
     let pool = ThreadPool::new(cfg.workers);
-    // Background segment builds in flight on the pool. While nonzero, search
-    // batches avoid the pool (their jobs would queue behind multi-second
-    // build jobs) and run indexed searches inline instead — this is what
-    // keeps "serving never blocks on a rebuild" true with one shared pool.
-    let builds_in_flight = Arc::new(AtomicUsize::new(0));
+    // Segment builds run on their own pool so search fan-out never queues
+    // behind multi-second build jobs — every collection keeps full
+    // batch/shard parallelism while any collection rebuilds. The tracker
+    // records builds-in-flight per collection (stats observability and the
+    // deferred build responses).
+    let build_pool = ThreadPool::new(cfg.build_workers);
+    let builds_in_flight = Arc::new(BuildTracker::default());
     // The engine is created lazily so a missing artifacts dir only matters if
     // runtime execution was requested.
     let engine: Option<Engine> = if cfg.use_runtime {
@@ -239,8 +283,8 @@ fn scheduler_loop(rx: Receiver<Request>, cfg: ServeConfig, metrics: Arc<Metrics>
         // the searches around them would require per-collection versioning;
         // we keep the simpler (and documented) model: admin ops in a batch
         // run first, then searches. (`BuildIndex` only *starts* here — the
-        // segment builds run on the pool and the response is deferred to the
-        // atomic swap, so a long rebuild never stalls this loop.)
+        // segment builds run on the build pool and the response is deferred
+        // to the atomic swap, so a long rebuild never stalls this loop.)
         let mut searches = Vec::new();
         let mut stop = false;
         for req in batch.drain(..) {
@@ -248,15 +292,14 @@ fn scheduler_loop(rx: Receiver<Request>, cfg: ServeConfig, metrics: Arc<Metrics>
                 Request::Shutdown => stop = true,
                 Request::Admin(op, resp) => {
                     let builds = &builds_in_flight;
-                    handle_admin(op, &mut collections, &cfg, &metrics, &pool, builds, resp)
+                    handle_admin(op, &mut collections, &cfg, &metrics, &build_pool, builds, resp)
                 }
                 s @ Request::Search { .. } => searches.push(s),
             }
         }
         if !searches.is_empty() {
-            let pool_free = builds_in_flight.load(Ordering::SeqCst) == 0;
             let engine = engine.as_ref();
-            execute_search_batch(searches, &collections, &pool, pool_free, engine, &metrics);
+            execute_search_batch(searches, &collections, &pool, engine, &metrics);
         }
         if stop {
             break;
@@ -267,28 +310,29 @@ fn scheduler_loop(rx: Receiver<Request>, cfg: ServeConfig, metrics: Arc<Metrics>
 /// Execute one admin op and answer `resp`. Most ops run synchronously on
 /// the scheduler thread; index (re)builds never do — `BuildIndex` (and the
 /// re-index step of `BuildReduced`) snapshot the collection, fan
-/// whole-segment builds out to the worker pool and defer the response
-/// until the finished index is atomically swapped in, while the scheduler
-/// keeps draining search batches (`builds_in_flight` steers those batches
-/// off the pool for the rebuild's duration).
+/// whole-segment builds out to the dedicated build pool and defer the
+/// response until the finished index is atomically swapped in, while the
+/// scheduler keeps draining search batches at full pool parallelism (the
+/// per-collection `builds_in_flight` tracker feeds stats and the deferred
+/// responses).
 fn handle_admin(
     op: AdminOp,
     collections: &mut Collections,
     cfg: &ServeConfig,
     metrics: &Metrics,
-    pool: &ThreadPool,
-    builds_in_flight: &Arc<AtomicUsize>,
+    build_pool: &ThreadPool,
+    builds_in_flight: &Arc<BuildTracker>,
     resp: Sender<Result<String>>,
 ) {
     match op {
         AdminOp::BuildIndex { collection } => {
             let b = builds_in_flight;
-            spawn_build(collections, &collection, "ok".into(), false, cfg, pool, b, resp);
+            spawn_build(collections, &collection, "ok".into(), false, cfg, build_pool, b, resp);
         }
         AdminOp::BuildReduced { collection, target_accuracy, k } => {
             // The reduction itself (planner calibration + PCA projection)
             // mutates the collection and runs here; the follow-up re-index
-            // goes through the pool like any other build.
+            // goes through the build pool like any other build.
             let reduced = collections.get_mut(&collection).and_then(|c| {
                 c.build_reduced(target_accuracy, k, 64, 0xC0DE).map(|r| r.model.target_dim())
             });
@@ -299,7 +343,7 @@ fn handle_admin(
                     if big_enough {
                         let msg = dim.to_string();
                         let b = builds_in_flight;
-                        spawn_build(collections, &collection, msg, true, cfg, pool, b, resp);
+                        spawn_build(collections, &collection, msg, true, cfg, build_pool, b, resp);
                     } else {
                         let _ = resp.send(Ok(dim.to_string()));
                     }
@@ -310,13 +354,13 @@ fn handle_admin(
             }
         }
         other => {
-            let _ = resp.send(handle_admin_sync(other, collections, metrics));
+            let _ = resp.send(handle_admin_sync(other, collections, metrics, builds_in_flight));
         }
     }
 }
 
-/// Dispatch an index build for `collection` onto the worker pool; the
-/// deferred response maps a successful atomic swap to `ok_msg`. When a
+/// Dispatch an index build for `collection` onto the dedicated build pool;
+/// the deferred response maps a successful atomic swap to `ok_msg`. When a
 /// racing ingest invalidates the snapshot mid-build, the stale index is
 /// discarded; `stale_ok` decides whether that still answers `ok_msg`
 /// (BuildReduced: the reduction itself succeeded and serving falls back to
@@ -328,17 +372,17 @@ fn spawn_build(
     ok_msg: String,
     stale_ok: bool,
     cfg: &ServeConfig,
-    pool: &ThreadPool,
-    builds_in_flight: &Arc<AtomicUsize>,
+    build_pool: &ThreadPool,
+    builds_in_flight: &Arc<BuildTracker>,
     resp: Sender<Result<String>>,
 ) {
     match collections.get(collection) {
         Ok(c) => {
-            builds_in_flight.fetch_add(1, Ordering::SeqCst);
+            builds_in_flight.begin(collection);
             let builds = Arc::clone(builds_in_flight);
             let name = collection.to_string();
-            c.spawn_index_build(&cfg.index_policy(), 0xC0DE, pool, move |r| {
-                builds.fetch_sub(1, Ordering::SeqCst);
+            c.spawn_index_build(&cfg.index_policy(), 0xC0DE, build_pool, move |r| {
+                builds.finish(&name);
                 let out = match r {
                     Ok(installed) if installed || stale_ok => Ok(ok_msg),
                     Ok(_) => Err(OpdrError::coordinator(format!(
@@ -360,6 +404,7 @@ fn handle_admin_sync(
     op: AdminOp,
     collections: &mut Collections,
     metrics: &Metrics,
+    builds: &BuildTracker,
 ) -> Result<String> {
     match op {
         AdminOp::CreateCollection { name, dim, metric } => {
@@ -388,27 +433,33 @@ fn handle_admin_sync(
                 let (_, sdim) = c.serving_vectors();
                 let indexed = match c.index() {
                     Some(ix) => format!(
-                        "true kind={} shards={} quantized={} index_bytes={}",
+                        "true kind={} shards={} quantized={} storage={} index_bytes={} \
+                         cold_bytes={}",
                         ix.kind().name(),
                         ix.as_sharded().map_or(1, |s| s.num_shards()),
                         ix.quantized(),
-                        ix.memory_bytes()
+                        ix.storage_name(),
+                        ix.memory_bytes(),
+                        ix.cold_bytes()
                     ),
                     None => "false".to_string(),
                 };
                 out.push_str(&format!(
-                    "collection {name}: n={} dim={} serving_dim={} indexed={indexed}\n",
+                    "collection {name}: n={} dim={} serving_dim={} building={} indexed={indexed}\n",
                     c.len(),
                     c.dim,
                     sdim,
+                    builds.in_flight(&name),
                 ));
             }
             out.push_str(&format!(
-                "requests={} completed={} rejected={} batches={} latency[{}] exec[{}]",
+                "requests={} completed={} rejected={} batches={} builds_in_flight={} \
+                 latency[{}] exec[{}]",
                 metrics.requests.get(),
                 metrics.completed.get(),
                 metrics.rejected.get(),
                 metrics.batches.get(),
+                builds.total(),
                 metrics.latency.summary(),
                 metrics.exec_latency.summary(),
             ));
@@ -436,7 +487,6 @@ fn execute_search_batch(
     searches: Vec<Request>,
     collections: &Collections,
     pool: &ThreadPool,
-    pool_free: bool,
     engine: Option<&Engine>,
     metrics: &Metrics,
 ) {
@@ -508,12 +558,17 @@ fn execute_search_batch(
         let vecs_arc: Arc<Vec<f32>> = coll.serving_arc();
         let metric = coll.metric;
         let index_snapshot = coll.index();
+        // Since PR 3, segment builds run on the dedicated build pool, so the
+        // search pool is always free for scoring — no collection is ever
+        // steered off it during a rebuild (the old global builds-in-flight
+        // gate; per-collection accounting lives in `BuildTracker` for stats
+        // and deferred build responses).
         let results: Vec<Vec<Result<SearchResult>>> = if let Some(index) = index_snapshot {
-            if pool_free && n > 1 {
-                // Batched with an idle pool: parallelize across queries —
-                // each worker runs the serial (per-shard sequential) search
-                // against one batch-wide index snapshot, avoiding a blocking
-                // per-query fan-out barrier on this thread.
+            if n > 1 {
+                // Batched: parallelize across queries — each worker runs the
+                // serial (per-shard sequential) search against one
+                // batch-wide index snapshot, avoiding a blocking per-query
+                // fan-out barrier on this thread.
                 let shared = Arc::clone(&shared);
                 let chunk = n.div_ceil(pool.size().max(1)).max(1);
                 pool.map_chunks(n, chunk, move |range| {
@@ -525,27 +580,22 @@ fn execute_search_batch(
                         .collect::<Vec<_>>()
                 })
             } else {
-                // Single query with an idle pool: fan it out across shards
-                // for latency. Pool busy with segment builds: run entirely
-                // inline so serving never queues behind a rebuild. Serial
-                // and fanned merges are order-exact, so the choice is
+                // Single query: fan it out across shards for latency.
+                // Serial and fanned merges are order-exact, so the choice is
                 // invisible in results. The whole batch runs against the one
                 // `index` snapshot loaded above (never re-reads the slot
                 // mid-batch).
-                let inline_pool = if pool_free { Some(pool) } else { None };
                 vec![shared
                     .iter()
                     .map(|(q, k)| {
-                        run_one(q, *k, sdim, |q, k| match (inline_pool, index.as_sharded()) {
-                            (Some(pool), Some(sh)) if sh.num_shards() > 1 => {
-                                sh.search_on(pool, q, k)
-                            }
+                        run_one(q, *k, sdim, |q, k| match index.as_sharded() {
+                            Some(sh) if sh.num_shards() > 1 => sh.search_on(pool, q, k),
                             _ => index.search(q, k),
                         })
                     })
                     .collect()]
             }
-        } else if pool_free {
+        } else {
             let chunk = n.div_ceil(pool.size().max(1)).max(1);
             pool.map_chunks(n, chunk, move |range| {
                 range
@@ -557,18 +607,6 @@ fn execute_search_batch(
                     })
                     .collect::<Vec<_>>()
             })
-        } else {
-            // Pool held by segment builds: score inline on this thread. The
-            // batch loses scan parallelism for the rebuild's duration, but
-            // it is never queued behind multi-second build jobs.
-            vec![shared
-                .iter()
-                .map(|(q, k)| {
-                    run_one(q, *k, sdim, |q, k| {
-                        crate::knn::knn_indices(q, &vecs_arc, sdim, k, metric)
-                    })
-                })
-                .collect()]
         };
 
         let flat: Vec<Result<SearchResult>> = results.into_iter().flatten().collect();
@@ -768,8 +806,14 @@ mod tests {
         let set = synth::generate(DatasetKind::OmniCorpus, 120, 12, 8);
         coord.ingest("c", set.data().to_vec()).unwrap();
 
-        let exact =
-            crate::index::ExactIndex::build(set.data(), 12, Metric::SqEuclidean, false).unwrap();
+        let exact = crate::index::ExactIndex::build(
+            set.data(),
+            12,
+            Metric::SqEuclidean,
+            &crate::index::StorageSpec::flat(),
+            1,
+        )
+        .unwrap();
         let want: Vec<Vec<(usize, u32)>> = (0..10)
             .map(|qi| {
                 exact
@@ -803,7 +847,83 @@ mod tests {
         coord.create_collection("x", 8, Metric::Cosine).unwrap();
         let s = coord.stats().unwrap();
         assert!(s.contains("collection x"), "{s}");
+        assert!(s.contains("building=0"), "{s}");
         assert!(s.contains("requests="));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn build_tracker_counts_per_collection() {
+        let t = BuildTracker::default();
+        assert_eq!(t.in_flight("a"), 0);
+        t.begin("a");
+        t.begin("a");
+        t.begin("b");
+        assert_eq!(t.in_flight("a"), 2);
+        assert_eq!(t.in_flight("b"), 1);
+        assert_eq!(t.in_flight("c"), 0);
+        assert_eq!(t.total(), 3);
+        t.finish("a");
+        assert_eq!(t.in_flight("a"), 1);
+        t.finish("a");
+        assert_eq!(t.in_flight("a"), 0);
+        // Finishing a collection with no build in flight is a no-op, and an
+        // unknown name never underflows.
+        t.finish("a");
+        t.finish("never-started");
+        assert_eq!(t.total(), 1);
+        t.finish("b");
+        assert_eq!(t.total(), 0);
+    }
+
+    #[test]
+    fn pq_policy_served_collection_is_exact_at_exhaustive_depth() {
+        // A PQ-compressed exact index at rerank_depth ≥ n serves bitwise the
+        // same results as the flat exact scan, through the whole coordinator
+        // path, and stats report the pq storage + cold tier.
+        let n = 150;
+        let cfg = ServeConfig {
+            workers: 2,
+            max_batch: 8,
+            max_wait_ms: 1,
+            use_runtime: false,
+            index_kind: crate::index::IndexKind::Exact,
+            ivf_threshold: 0,
+            index_pq: true,
+            rerank_depth: n,
+            ..Default::default()
+        };
+        let coord = Coordinator::start(cfg).unwrap();
+        coord.create_collection("c", 8, Metric::SqEuclidean).unwrap();
+        let set = synth::generate(DatasetKind::OmniCorpus, n, 8, 12);
+        coord.ingest("c", set.data().to_vec()).unwrap();
+        coord.build_index("c").unwrap();
+        let stats = coord.stats().unwrap();
+        assert!(stats.contains("storage=pq") && stats.contains("quantized=true"), "{stats}");
+        let flat = crate::index::ExactIndex::build(
+            set.data(),
+            8,
+            Metric::SqEuclidean,
+            &crate::index::StorageSpec::flat(),
+            1,
+        )
+        .unwrap();
+        for qi in 0..10 {
+            let want: Vec<(usize, u32)> = flat
+                .search(set.vector(qi), 6)
+                .unwrap()
+                .iter()
+                .map(|nb| (nb.index, nb.distance.to_bits()))
+                .collect();
+            let got: Vec<(usize, u32)> = coord
+                .search("c", set.vector(qi).to_vec(), 6)
+                .unwrap()
+                .neighbors
+                .iter()
+                .map(|nb| (nb.index, nb.distance.to_bits()))
+                .collect();
+            assert_eq!(got, want, "query {qi} diverged under pq");
+        }
         coord.shutdown();
     }
 }

@@ -663,8 +663,14 @@ mod tests {
         // scan (same distance kernel; the matmul-form brute path rounds
         // differently, so it is only id-equal, not bit-equal).
         let q: Vec<f32> = c.data()[5 * 8..6 * 8].to_vec();
-        let exact =
-            crate::index::ExactIndex::build(c.data(), 8, Metric::SqEuclidean, false).unwrap();
+        let exact = crate::index::ExactIndex::build(
+            c.data(),
+            8,
+            Metric::SqEuclidean,
+            &crate::index::StorageSpec::flat(),
+            1,
+        )
+        .unwrap();
         let want = exact.search(&q, 6).unwrap();
         for use_pool in [None, Some(&pool)] {
             let got = c.search_projected_with(&q, 6, use_pool).unwrap();

@@ -19,6 +19,13 @@
 //!   are rejected (shard-count mismatch), and version-2 single-segment
 //!   files keep loading unchanged.
 //!
+//! Index payloads (version 2 and per shard in version 3) embed their vector
+//! storage as a tagged record: 0 = flat f32, 1 = SQ8 codebooks + codes,
+//! 2 = PQ codebooks + packed codes + optional OPQ rotation + rerank tier
+//! (the record kind added with the PQ subsystem — see
+//! [`crate::index::pq`]). Tags unknown to a reader fail with a descriptive
+//! error, and files written before tag 2 existed keep loading unchanged.
+//!
 //! Readers reject the other segment types with a descriptive error instead
 //! of misparsing them.
 
@@ -441,6 +448,76 @@ mod tests {
         fewer[8..12].copy_from_slice(&1u32.to_le_bytes());
         let e = read_index(&mut fewer.as_slice()).unwrap_err().to_string();
         assert!(e.contains("trailing bytes"), "{e}");
+    }
+
+    #[test]
+    fn pq_index_segment_roundtrips_and_corruption_rejected() {
+        use crate::config::IndexPolicy;
+        use crate::index::IndexKind;
+        let set = synth::generate(DatasetKind::Flickr30k, 80, 8, 23);
+        for (opq, shards) in [(false, 1), (true, 1), (false, 3)] {
+            let policy = IndexPolicy {
+                kind: IndexKind::Exact,
+                exact_threshold: 0,
+                pq: true,
+                pq_opq: opq,
+                rerank_depth: 80,
+                shards,
+                shard_min_vectors: 1,
+                ..Default::default()
+            };
+            let idx = crate::index::build_index(
+                set.data(),
+                set.dim(),
+                crate::metrics::Metric::SqEuclidean,
+                &policy,
+                9,
+            )
+            .unwrap();
+            let mut buf = Vec::new();
+            write_index(idx.as_ref(), &mut buf).unwrap();
+            let back = read_index(&mut buf.as_slice()).unwrap();
+            assert!(back.quantized());
+            assert_eq!(back.storage_name(), "pq");
+            assert_eq!(back.cold_bytes(), set.data().len() * 4);
+            // Search results survive the round-trip bit-for-bit, and at
+            // exhaustive rerank depth the self-hit is exact.
+            for qi in [0usize, 17, 79] {
+                let a = idx.search(set.vector(qi), 5).unwrap();
+                let b = back.search(set.vector(qi), 5).unwrap();
+                crate::testing::assert_same_neighbors(&a, &b);
+                assert_eq!(a[0].index, qi, "self-hit lost (opq={opq} shards={shards})");
+            }
+            // Truncation anywhere inside the PQ record fails cleanly.
+            for cut in [buf.len() - 3, buf.len() / 2, buf.len() / 4] {
+                assert!(read_index(&mut &buf[..cut]).is_err(), "cut {cut} accepted");
+            }
+        }
+        // Corrupting a PQ codebook f32 to NaN is caught by the reader. The
+        // unsharded flat-exact layout is: magic 4 | version 4 | kind 4 |
+        // metric 1 | storage tag 1 | 5×u64 pq header | rotation flag 1 |
+        // codebooks...
+        let policy = IndexPolicy {
+            kind: IndexKind::Exact,
+            exact_threshold: 0,
+            pq: true,
+            ..Default::default()
+        };
+        let idx = crate::index::build_index(
+            set.data(),
+            set.dim(),
+            crate::metrics::Metric::SqEuclidean,
+            &policy,
+            9,
+        )
+        .unwrap();
+        let mut buf = Vec::new();
+        write_index(idx.as_ref(), &mut buf).unwrap();
+        let cb_off = 4 + 4 + 4 + 1 + 1 + 40 + 1;
+        let mut bad = buf.clone();
+        bad[cb_off..cb_off + 4].copy_from_slice(&f32::NAN.to_le_bytes());
+        let e = read_index(&mut bad.as_slice()).unwrap_err().to_string();
+        assert!(e.contains("codebook"), "{e}");
     }
 
     #[test]

@@ -3,10 +3,12 @@
 //! The ground-truth substrate of the subsystem, and the automatic choice for
 //! small collections where ANN structures cost more than they save. With SQ8
 //! storage it becomes "exact over quantized vectors" — the same scan order
-//! and tie-breaking, 4× less resident memory.
+//! and tie-breaking, 4× less resident memory. With PQ storage the scan is an
+//! ADC table sweep followed by the full-precision rerank stage: at
+//! exhaustive `rerank_depth` this is bit-identical to the flat scan.
 
 use crate::error::{OpdrError, Result};
-use crate::index::{io, AnnIndex, IndexKind, VectorStore};
+use crate::index::{io, pq, AnnIndex, IndexKind, StorageSpec, VectorStore};
 use crate::knn::topk::top_k_smallest;
 use crate::knn::Neighbor;
 use crate::metrics::Metric;
@@ -20,9 +22,15 @@ pub struct ExactIndex {
 }
 
 impl ExactIndex {
-    /// Build over row-major `data`, optionally SQ8-quantized.
-    pub fn build(data: &[f32], dim: usize, metric: Metric, sq8: bool) -> Result<ExactIndex> {
-        let store = VectorStore::build(data, dim, sq8)?;
+    /// Build over row-major `data` with the given storage (flat/SQ8/PQ).
+    pub fn build(
+        data: &[f32],
+        dim: usize,
+        metric: Metric,
+        storage: &StorageSpec,
+        seed: u64,
+    ) -> Result<ExactIndex> {
+        let store = VectorStore::build(data, dim, storage, seed)?;
         if store.is_empty() {
             return Err(OpdrError::data("exact index: empty data"));
         }
@@ -58,8 +66,16 @@ impl AnnIndex for ExactIndex {
         self.store.quantized()
     }
 
+    fn storage_name(&self) -> &'static str {
+        self.store.name()
+    }
+
     fn memory_bytes(&self) -> usize {
         self.store.memory_bytes()
+    }
+
+    fn cold_bytes(&self) -> usize {
+        self.store.cold_bytes()
     }
 
     fn matches_data(&self, data: &[f32]) -> bool {
@@ -75,6 +91,11 @@ impl AnnIndex for ExactIndex {
             )));
         }
         let n = self.len();
+        if let Some(p) = self.store.as_pq() {
+            // Two-stage: ADC table sweep over all ids, then full-precision
+            // rerank of the top `rerank_depth` candidates.
+            return pq::two_stage_search(p, self.metric, query, 0..n, k);
+        }
         let mut scratch = Vec::new();
         let dists: Vec<f32> =
             (0..n).map(|id| self.store.distance(self.metric, query, id, &mut scratch)).collect();
@@ -100,7 +121,8 @@ mod tests {
         let mut rng = Rng::new(5);
         let dim = 8;
         let data = rng.normal_vec_f32(60 * dim);
-        let idx = ExactIndex::build(&data, dim, Metric::SqEuclidean, false).unwrap();
+        let idx =
+            ExactIndex::build(&data, dim, Metric::SqEuclidean, &StorageSpec::flat(), 1).unwrap();
         for _ in 0..5 {
             let q = rng.normal_vec_f32(dim);
             let got = idx.search(&q, 7).unwrap();
@@ -117,8 +139,10 @@ mod tests {
         let mut rng = Rng::new(6);
         let dim = 16;
         let data = rng.normal_vec_f32(200 * dim);
-        let idx = ExactIndex::build(&data, dim, Metric::SqEuclidean, true).unwrap();
+        let idx =
+            ExactIndex::build(&data, dim, Metric::SqEuclidean, &StorageSpec::sq8(), 1).unwrap();
         assert!(idx.quantized());
+        assert_eq!(idx.storage_name(), "sq8");
         let mut hits = 0;
         let nq = 10;
         let k = 10;
@@ -136,7 +160,7 @@ mod tests {
     #[test]
     fn dim_mismatch_rejected() {
         let data = vec![0.0f32; 12];
-        let idx = ExactIndex::build(&data, 4, Metric::Euclidean, false).unwrap();
+        let idx = ExactIndex::build(&data, 4, Metric::Euclidean, &StorageSpec::flat(), 1).unwrap();
         let e = idx.search(&[0.0; 3], 2).unwrap_err().to_string();
         assert!(e.contains("query dim 3"), "{e}");
     }
@@ -146,8 +170,8 @@ mod tests {
         let mut rng = Rng::new(8);
         let dim = 6;
         let data = rng.normal_vec_f32(40 * dim);
-        for sq8 in [false, true] {
-            let idx = ExactIndex::build(&data, dim, Metric::Cosine, sq8).unwrap();
+        for spec in [StorageSpec::flat(), StorageSpec::sq8(), StorageSpec::pq()] {
+            let idx = ExactIndex::build(&data, dim, Metric::Cosine, &spec, 2).unwrap();
             let mut buf = Vec::new();
             idx.write_to(&mut buf).unwrap();
             let back = ExactIndex::read_from(&mut buf.as_slice()).unwrap();
@@ -158,6 +182,33 @@ mod tests {
             for (x, y) in a.iter().zip(&b) {
                 assert_eq!(x.index, y.index);
                 assert_eq!(x.distance.to_bits(), y.distance.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn pq_at_exhaustive_rerank_depth_is_bitwise_flat_exact() {
+        use crate::index::PqParams;
+        let mut rng = Rng::new(12);
+        let dim = 8;
+        let n = 70;
+        let data = rng.normal_vec_f32(n * dim);
+        let flat =
+            ExactIndex::build(&data, dim, Metric::SqEuclidean, &StorageSpec::flat(), 3).unwrap();
+        for opq in [false, true] {
+            let spec = StorageSpec::Pq(PqParams { opq, rerank_depth: n, ..Default::default() });
+            let pq = ExactIndex::build(&data, dim, Metric::SqEuclidean, &spec, 3).unwrap();
+            assert_eq!(pq.storage_name(), "pq");
+            assert!(pq.cold_bytes() > 0);
+            for _ in 0..5 {
+                let q = rng.normal_vec_f32(dim);
+                let a = flat.search(&q, 9).unwrap();
+                let b = pq.search(&q, 9).unwrap();
+                assert_eq!(a.len(), b.len());
+                for (x, y) in a.iter().zip(&b) {
+                    assert_eq!(x.index, y.index, "opq={opq}");
+                    assert_eq!(x.distance.to_bits(), y.distance.to_bits(), "opq={opq}");
+                }
             }
         }
     }

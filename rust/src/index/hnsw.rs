@@ -5,21 +5,30 @@
 //! deterministic), upper layers are sparse "express lanes" descended
 //! greedily, and layer 0 holds the dense neighborhood graph searched with a
 //! bounded beam (`ef`). Construction inserts points one at a time, linking
-//! each to its `m` nearest discovered neighbors per layer (degree-capped at
-//! `2m` on layer 0, `m` above) and pruning overfull adjacency lists back to
-//! the closest set.
+//! each to up to `m` discovered neighbors per layer (degree-capped at `2m`
+//! on layer 0, `m` above) and shrinking overfull adjacency lists.
+//!
+//! Neighbor selection follows Malkov's Algorithm 4 (the *heuristic*:
+//! a candidate is kept only when it is closer to the query node than to any
+//! already-selected neighbor, which spreads links across directions and
+//! keeps clustered regions navigable) when [`HnswParams::heuristic`] is on —
+//! the default — and plain `m`-nearest selection otherwise. Both are
+//! deterministic; the flag is a build-time choice and is deliberately not
+//! persisted (a loaded graph already has its topology), so the on-disk
+//! format is unchanged.
 //!
 //! Distances during *construction* use the raw full-precision rows;
 //! distances during *search* go through the [`VectorStore`] (asymmetric when
-//! SQ8-quantized), so the graph topology is identical between a flat and a
-//! quantized build of the same data — only the scoring differs.
+//! SQ8-quantized; ADC lookup tables when PQ-quantized, followed by the
+//! full-precision rerank stage), so the graph topology is identical between
+//! a flat and a quantized build of the same data — only the scoring differs.
 //!
 //! Determinism contract (tested): equal `(data, params, seed)` give
 //! bit-identical indexes, and a serialize/deserialize round-trip preserves
 //! search results exactly.
 
 use crate::error::{OpdrError, Result};
-use crate::index::{io, AnnIndex, IndexKind, VectorStore};
+use crate::index::{io, pq, AnnIndex, IndexKind, StorageSpec, VectorStore};
 use crate::knn::Neighbor;
 use crate::metrics::Metric;
 use crate::util::Rng;
@@ -40,11 +49,14 @@ pub struct HnswParams {
     pub ef_construction: usize,
     /// Default beam width while searching (raised to `k` when `k` is larger).
     pub ef_search: usize,
+    /// Use Malkov Algorithm 4 heuristic neighbor selection during
+    /// construction (default on; build-time only, not persisted).
+    pub heuristic: bool,
 }
 
 impl Default for HnswParams {
     fn default() -> Self {
-        HnswParams { m: 16, ef_construction: 100, ef_search: 64 }
+        HnswParams { m: 16, ef_construction: 100, ef_search: 64, heuristic: true }
     }
 }
 
@@ -90,7 +102,7 @@ impl HnswIndex {
         dim: usize,
         metric: Metric,
         params: HnswParams,
-        sq8: bool,
+        storage: &StorageSpec,
         seed: u64,
     ) -> Result<HnswIndex> {
         if dim == 0 || data.len() % dim != 0 {
@@ -104,6 +116,7 @@ impl HnswIndex {
             m: params.m.max(2),
             ef_construction: params.ef_construction.max(params.m.max(2)),
             ef_search: params.ef_search.max(1),
+            heuristic: params.heuristic,
         };
         let m = params.m;
 
@@ -137,7 +150,13 @@ impl HnswIndex {
                 });
                 ep = cands[0].1;
                 let max_deg = if lvl == 0 { 2 * m } else { m };
-                let selected: Vec<u32> = cands.iter().take(m).map(|&(_, id)| id).collect();
+                let selected: Vec<u32> = if params.heuristic {
+                    select_neighbors_heuristic(&cands, m, |a, b| {
+                        dist_rows(data, dim, metric, a as usize, b as usize)
+                    })
+                } else {
+                    cands.iter().take(m).map(|&(_, id)| id).collect()
+                };
                 links[i][lvl] = selected.clone();
                 for &nb in &selected {
                     let nbu = nb as usize;
@@ -150,8 +169,14 @@ impl HnswIndex {
                             })
                             .collect();
                         scored.sort();
-                        scored.truncate(max_deg);
-                        links[nbu][lvl] = scored.into_iter().map(|(_, x)| x).collect();
+                        links[nbu][lvl] = if params.heuristic {
+                            select_neighbors_heuristic(&scored, max_deg, |a, b| {
+                                dist_rows(data, dim, metric, a as usize, b as usize)
+                            })
+                        } else {
+                            scored.truncate(max_deg);
+                            scored.into_iter().map(|(_, x)| x).collect()
+                        };
                     }
                 }
             }
@@ -162,7 +187,7 @@ impl HnswIndex {
             }
         }
 
-        let store = VectorStore::build(data, dim, sq8)?;
+        let store = VectorStore::build(data, dim, storage, seed)?;
         Ok(HnswIndex { metric, params, entry, max_level, levels, links, store })
     }
 
@@ -234,7 +259,9 @@ impl HnswIndex {
                 }
             }
         }
-        let params = HnswParams { m, ef_construction, ef_search };
+        // `heuristic` is a construction-time choice; the loaded graph's
+        // topology already reflects it, so the default is recorded.
+        let params = HnswParams { m, ef_construction, ef_search, heuristic: true };
         Ok(HnswIndex { metric, params, entry, max_level, levels, links, store })
     }
 }
@@ -260,6 +287,10 @@ impl AnnIndex for HnswIndex {
         self.store.quantized()
     }
 
+    fn storage_name(&self) -> &'static str {
+        self.store.name()
+    }
+
     fn memory_bytes(&self) -> usize {
         let links_bytes: usize = self
             .links
@@ -267,6 +298,10 @@ impl AnnIndex for HnswIndex {
             .map(|per| per.iter().map(|l| l.len() * std::mem::size_of::<u32>()).sum::<usize>())
             .sum();
         self.store.memory_bytes() + links_bytes + self.levels.len()
+    }
+
+    fn cold_bytes(&self) -> usize {
+        self.store.cold_bytes()
     }
 
     fn matches_data(&self, data: &[f32]) -> bool {
@@ -283,6 +318,22 @@ impl AnnIndex for HnswIndex {
         }
         if k == 0 {
             return Ok(Vec::new());
+        }
+        if let Some(p) = self.store.as_pq() {
+            // PQ path: walk the graph on ADC lookups, then rerank the beam's
+            // top `rerank_depth` at full precision. The beam is widened to
+            // the rerank depth so the candidate stage can fill it.
+            let table = pq::AdcTable::new(p, self.metric, query)?;
+            let depth = p.rerank_depth().max(k);
+            let mut ep = self.entry;
+            for lvl in (1..=self.max_level).rev() {
+                ep = greedy_descend(ep, lvl, &self.links, |id| table.lookup(id));
+            }
+            let ef = self.params.ef_search.max(k).max(depth);
+            let found =
+                search_layer(self.len(), ep, ef, 0, &self.links, |id| table.lookup(id));
+            let ids = found.into_iter().take(depth).map(|(_, id)| id as usize);
+            return Ok(pq::rerank(p, self.metric, query, ids, k));
         }
         let mut scratch = Vec::new();
         let mut ep = self.entry;
@@ -338,6 +389,33 @@ fn sample_level(rng: &mut Rng, inv_log_m: f64) -> u8 {
 #[inline]
 fn dist_rows(data: &[f32], dim: usize, metric: Metric, a: usize, b: usize) -> f32 {
     metric.distance(&data[a * dim..(a + 1) * dim], &data[b * dim..(b + 1) * dim])
+}
+
+/// Malkov Algorithm 4 (SELECT-NEIGHBORS-HEURISTIC, the hnswlib shrink rule):
+/// walk candidates ascending by distance to the query node and keep one only
+/// when it is closer to the query than to every already-kept neighbor
+/// (`dist_between(cand, kept) ≥ cand's query distance`). This spreads links
+/// across directions instead of piling them into one cluster, which is what
+/// keeps the graph navigable between clusters. May select fewer than
+/// `max_links`; the closest candidate is always kept, so every inserted node
+/// stays bidirectionally linked to its nearest discovered neighbor (the
+/// connectivity the exhaustive-beam exactness contract relies on).
+/// Deterministic: candidates arrive sorted by `(distance, id)`.
+fn select_neighbors_heuristic<F: FnMut(u32, u32) -> f32>(
+    cands: &[(OrdF32, u32)],
+    max_links: usize,
+    mut dist_between: F,
+) -> Vec<u32> {
+    let mut selected: Vec<u32> = Vec::with_capacity(max_links.min(cands.len()));
+    for &(d, id) in cands {
+        if selected.len() >= max_links {
+            break;
+        }
+        if selected.iter().all(|&s| dist_between(id, s) >= d.0) {
+            selected.push(id);
+        }
+    }
+    selected
 }
 
 /// Greedy hill descent on one layer: move to the closest neighbor until no
@@ -480,8 +558,10 @@ mod tests {
         let dim = 4;
         let n = 30;
         let data = normal_data(n, dim, 1);
-        let params = HnswParams { m: 16, ef_construction: 32, ef_search: 64 };
-        let idx = HnswIndex::build(&data, dim, Metric::SqEuclidean, params, false, 7).unwrap();
+        let params = HnswParams { m: 16, ef_construction: 32, ef_search: 64, heuristic: true };
+        let idx =
+            HnswIndex::build(&data, dim, Metric::SqEuclidean, params, &StorageSpec::flat(), 7)
+                .unwrap();
         let mut rng = Rng::new(2);
         for _ in 0..8 {
             let q = rng.normal_vec_f32(dim);
@@ -499,8 +579,10 @@ mod tests {
         let dim = 16;
         let n = 1000;
         let data = normal_data(n, dim, 3);
-        let params = HnswParams { m: 16, ef_construction: 100, ef_search: 128 };
-        let idx = HnswIndex::build(&data, dim, Metric::SqEuclidean, params, false, 9).unwrap();
+        let params = HnswParams { m: 16, ef_construction: 100, ef_search: 128, heuristic: true };
+        let idx =
+            HnswIndex::build(&data, dim, Metric::SqEuclidean, params, &StorageSpec::flat(), 9)
+                .unwrap();
         let queries: Vec<Vec<f32>> =
             (0..20).map(|i| data[i * 37 * dim % (n * dim - dim)..][..dim].to_vec()).collect();
         let r = recall(&idx, &data, dim, &queries, 10);
@@ -512,8 +594,10 @@ mod tests {
         let dim = 8;
         let data = normal_data(200, dim, 5);
         let params = HnswParams::default();
-        let a = HnswIndex::build(&data, dim, Metric::Euclidean, params, false, 42).unwrap();
-        let b = HnswIndex::build(&data, dim, Metric::Euclidean, params, false, 42).unwrap();
+        let a = HnswIndex::build(&data, dim, Metric::Euclidean, params, &StorageSpec::flat(), 42)
+            .unwrap();
+        let b = HnswIndex::build(&data, dim, Metric::Euclidean, params, &StorageSpec::flat(), 42)
+            .unwrap();
         let mut rng = Rng::new(6);
         for _ in 0..5 {
             let q = rng.normal_vec_f32(dim);
@@ -564,9 +648,13 @@ mod tests {
         let dim = 16;
         let n = 400;
         let data = normal_data(n, dim, 11);
-        let params = HnswParams { m: 16, ef_construction: 100, ef_search: 128 };
-        let flat = HnswIndex::build(&data, dim, Metric::SqEuclidean, params, false, 2).unwrap();
-        let sq8 = HnswIndex::build(&data, dim, Metric::SqEuclidean, params, true, 2).unwrap();
+        let params = HnswParams { m: 16, ef_construction: 100, ef_search: 128, heuristic: true };
+        let flat =
+            HnswIndex::build(&data, dim, Metric::SqEuclidean, params, &StorageSpec::flat(), 2)
+                .unwrap();
+        let sq8 =
+            HnswIndex::build(&data, dim, Metric::SqEuclidean, params, &StorageSpec::sq8(), 2)
+                .unwrap();
         assert!(sq8.quantized());
         assert!(sq8.memory_bytes() < flat.memory_bytes());
         let queries: Vec<Vec<f32>> = (0..10).map(|i| data[i * dim..][..dim].to_vec()).collect();
@@ -575,12 +663,107 @@ mod tests {
     }
 
     #[test]
+    fn heuristic_exhaustive_beam_still_exact() {
+        // The heuristic may select fewer than m links, but the nearest
+        // candidate is always kept (bidirectionally), so layer 0 stays
+        // connected and an exhaustive beam remains exact.
+        let dim = 4;
+        let n = 40;
+        let data = normal_data(n, dim, 51);
+        for heuristic in [true, false] {
+            let params =
+                HnswParams { m: n, ef_construction: 2 * n, ef_search: 4 * n, heuristic };
+            let idx =
+                HnswIndex::build(&data, dim, Metric::SqEuclidean, params, &StorageSpec::flat(), 7)
+                    .unwrap();
+            let mut rng = Rng::new(5);
+            for _ in 0..6 {
+                let q = rng.normal_vec_f32(dim);
+                let got = idx.search(&q, 6).unwrap();
+                let want =
+                    crate::knn::knn_indices(&q, &data, dim, 6, Metric::SqEuclidean).unwrap();
+                assert_eq!(
+                    got.iter().map(|x| x.index).collect::<Vec<_>>(),
+                    want.iter().map(|x| x.index).collect::<Vec<_>>(),
+                    "heuristic={heuristic}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn heuristic_prunes_no_worse_recall_than_plain_on_clustered_data() {
+        // Two far-apart clusters: heuristic selection keeps cross-cluster
+        // links navigable. Both variants must stay usable; the heuristic one
+        // must not regress below the plain one by more than noise.
+        let dim = 8;
+        let n = 400;
+        let mut rng = Rng::new(61);
+        let mut data = Vec::with_capacity(n * dim);
+        for i in 0..n {
+            let center = if i % 2 == 0 { 0.0 } else { 30.0 };
+            for _ in 0..dim {
+                data.push(center + rng.normal() as f32);
+            }
+        }
+        let queries: Vec<Vec<f32>> = (0..10).map(|i| data[i * dim..][..dim].to_vec()).collect();
+        for heuristic in [true, false] {
+            let params = HnswParams { m: 8, ef_construction: 60, ef_search: 48, heuristic };
+            let idx =
+                HnswIndex::build(&data, dim, Metric::SqEuclidean, params, &StorageSpec::flat(), 3)
+                    .unwrap();
+            let r = recall(&idx, &data, dim, &queries, 10);
+            assert!(r >= 0.7, "heuristic={heuristic} recall {r}");
+        }
+    }
+
+    #[test]
+    fn pq_storage_exhaustive_beam_and_depth_is_bitwise_exact() {
+        use crate::index::PqParams;
+        let dim = 6;
+        let n = 30;
+        let data = normal_data(n, dim, 71);
+        let params = HnswParams { m: n, ef_construction: 2 * n, ef_search: 4 * n, heuristic: true };
+        let spec = StorageSpec::Pq(PqParams { rerank_depth: n, ..Default::default() });
+        let idx =
+            HnswIndex::build(&data, dim, Metric::SqEuclidean, params, &spec, 7).unwrap();
+        assert!(idx.quantized());
+        assert_eq!(idx.storage_name(), "pq");
+        let flat = crate::index::ExactIndex::build(
+            &data,
+            dim,
+            Metric::SqEuclidean,
+            &StorageSpec::flat(),
+            7,
+        )
+        .unwrap();
+        let mut rng = Rng::new(9);
+        for _ in 0..6 {
+            let q = rng.normal_vec_f32(dim);
+            let a = flat.search(&q, 8).unwrap();
+            let b = idx.search(&q, 8).unwrap();
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.index, y.index);
+                assert_eq!(x.distance.to_bits(), y.distance.to_bits());
+            }
+        }
+    }
+
+    #[test]
     fn corrupt_payloads_rejected() {
         let dim = 4;
         let data = normal_data(20, dim, 1);
         let idx =
-            HnswIndex::build(&data, dim, Metric::Euclidean, HnswParams::default(), false, 3)
-                .unwrap();
+            HnswIndex::build(
+                &data,
+                dim,
+                Metric::Euclidean,
+                HnswParams::default(),
+                &StorageSpec::flat(),
+                3,
+            )
+            .unwrap();
         let mut buf = Vec::new();
         idx.write_to(&mut buf).unwrap();
         // Truncation.
@@ -594,8 +777,15 @@ mod tests {
     #[test]
     fn edge_cases_single_node_and_large_k() {
         let data = vec![1.0f32, 2.0, 3.0];
-        let idx = HnswIndex::build(&data, 3, Metric::Euclidean, HnswParams::default(), false, 1)
-            .unwrap();
+        let idx = HnswIndex::build(
+            &data,
+            3,
+            Metric::Euclidean,
+            HnswParams::default(),
+            &StorageSpec::flat(),
+            1,
+        )
+        .unwrap();
         let hits = idx.search(&[1.0, 2.0, 3.0], 5).unwrap();
         assert_eq!(hits.len(), 1);
         assert_eq!(hits[0].index, 0);
@@ -603,8 +793,15 @@ mod tests {
         assert!(idx.search(&[0.0; 3], 0).unwrap().is_empty());
 
         let data = normal_data(12, 4, 2);
-        let idx = HnswIndex::build(&data, 4, Metric::Euclidean, HnswParams::default(), false, 1)
-            .unwrap();
+        let idx = HnswIndex::build(
+            &data,
+            4,
+            Metric::Euclidean,
+            HnswParams::default(),
+            &StorageSpec::flat(),
+            1,
+        )
+        .unwrap();
         let all = idx.search(&data[..4].to_vec(), 50).unwrap();
         assert_eq!(all.len(), 12);
         // Ascending by distance.

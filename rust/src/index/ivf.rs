@@ -3,12 +3,14 @@
 //! Same coarse structure as [`crate::knn::IvfFlatIndex`] (Lloyd k-means
 //! centroids + inverted lists, exhaustive scan of the `nprobe` nearest
 //! cells) but generalized for the index subsystem: vectors live in a
-//! [`VectorStore`] (flat or SQ8), `nprobe` is part of the built index so the
-//! trait-level [`AnnIndex::search`] stays parameter-free, and the whole
-//! structure serializes into the `OPDR` index segment format.
+//! [`VectorStore`] (flat, SQ8 or PQ — the PQ path sweeps ADC tables over
+//! the probed cells and reranks at full precision), `nprobe` is part of the
+//! built index so the trait-level [`AnnIndex::search`] stays
+//! parameter-free, and the whole structure serializes into the `OPDR` index
+//! segment format.
 
 use crate::error::{OpdrError, Result};
-use crate::index::{io, AnnIndex, IndexKind, VectorStore};
+use crate::index::{io, pq, AnnIndex, IndexKind, StorageSpec, VectorStore};
 use crate::knn::ivf::{kmeans_train, nearest_centroid};
 use crate::knn::topk::top_k_smallest;
 use crate::knn::Neighbor;
@@ -32,6 +34,8 @@ pub struct IvfIndex {
 impl IvfIndex {
     /// Build with `nlist` cells (clamped to `[1, n]`) and a default probe
     /// width `nprobe` (clamped to `[1, nlist]`), deterministic from `seed`.
+    /// `storage` picks flat/SQ8/PQ for the scanned copy; the coarse
+    /// quantizer always trains on the raw full-precision rows.
     #[allow(clippy::too_many_arguments)]
     pub fn build(
         data: &[f32],
@@ -40,7 +44,7 @@ impl IvfIndex {
         nlist: usize,
         train_iters: usize,
         nprobe: usize,
-        sq8: bool,
+        storage: &StorageSpec,
         seed: u64,
     ) -> Result<IvfIndex> {
         if dim == 0 || data.len() % dim != 0 {
@@ -60,7 +64,7 @@ impl IvfIndex {
             let c = nearest_centroid(&data[i * dim..(i + 1) * dim], &centroids, dim, metric);
             lists[c].push(i as u32);
         }
-        let store = VectorStore::build(data, dim, sq8)?;
+        let store = VectorStore::build(data, dim, storage, seed)?;
         Ok(IvfIndex { metric, nlist, nprobe, centroids, lists, store })
     }
 
@@ -132,12 +136,20 @@ impl AnnIndex for IvfIndex {
         self.store.quantized()
     }
 
+    fn storage_name(&self) -> &'static str {
+        self.store.name()
+    }
+
     fn memory_bytes(&self) -> usize {
         let lists_bytes: usize =
             self.lists.iter().map(|l| l.len() * std::mem::size_of::<u32>()).sum();
         self.store.memory_bytes()
             + self.centroids.len() * std::mem::size_of::<f32>()
             + lists_bytes
+    }
+
+    fn cold_bytes(&self) -> usize {
+        self.store.cold_bytes()
     }
 
     fn matches_data(&self, data: &[f32]) -> bool {
@@ -157,6 +169,15 @@ impl AnnIndex for IvfIndex {
             .map(|c| self.metric.distance(query, &self.centroids[c * dim..(c + 1) * dim]))
             .collect();
         let cells = top_k_smallest(&cdists, self.nprobe);
+
+        if let Some(p) = self.store.as_pq() {
+            // Two-stage PQ path: ADC table sweep over the probed cells'
+            // members, then full-precision rerank of the top candidates.
+            let ids = cells
+                .into_iter()
+                .flat_map(|(c, _)| self.lists[c].iter().map(|&vid| vid as usize));
+            return pq::two_stage_search(p, self.metric, query, ids, k);
+        }
 
         // Exhaustive (asymmetric for SQ8) scan within probed cells.
         let mut cand_idx = Vec::new();
@@ -216,8 +237,17 @@ mod tests {
     fn full_probe_matches_exact() {
         let dim = 4;
         let data = blobs(20, dim, 3);
-        let idx =
-            IvfIndex::build(&data, dim, Metric::SqEuclidean, 8, 10, 8, false, 7).unwrap();
+        let idx = IvfIndex::build(
+            &data,
+            dim,
+            Metric::SqEuclidean,
+            8,
+            10,
+            8,
+            &StorageSpec::flat(),
+            7,
+        )
+        .unwrap();
         let mut rng = Rng::new(11);
         let q = rng.normal_vec_f32(dim);
         let got = idx.search(&q, 5).unwrap();
@@ -232,8 +262,17 @@ mod tests {
     fn all_points_indexed_and_params_clamped() {
         let dim = 4;
         let data = blobs(5, dim, 2); // 20 points
-        let idx =
-            IvfIndex::build(&data, dim, Metric::Euclidean, 500, 4, 900, false, 1).unwrap();
+        let idx = IvfIndex::build(
+            &data,
+            dim,
+            Metric::Euclidean,
+            500,
+            4,
+            900,
+            &StorageSpec::flat(),
+            1,
+        )
+        .unwrap();
         assert!(idx.nlist() <= 20);
         assert!(idx.nprobe() <= idx.nlist());
         let total: usize = idx.lists.iter().map(|l| l.len()).sum();
@@ -245,8 +284,12 @@ mod tests {
     fn sq8_shrinks_memory_with_usable_recall() {
         let dim = 8;
         let data = blobs(50, dim, 5);
-        let flat = IvfIndex::build(&data, dim, Metric::SqEuclidean, 8, 8, 8, false, 9).unwrap();
-        let sq8 = IvfIndex::build(&data, dim, Metric::SqEuclidean, 8, 8, 8, true, 9).unwrap();
+        let flat =
+            IvfIndex::build(&data, dim, Metric::SqEuclidean, 8, 8, 8, &StorageSpec::flat(), 9)
+                .unwrap();
+        let sq8 =
+            IvfIndex::build(&data, dim, Metric::SqEuclidean, 8, 8, 8, &StorageSpec::sq8(), 9)
+                .unwrap();
         assert!(sq8.memory_bytes() < flat.memory_bytes() / 2);
         let mut hits = 0;
         let k = 5;
@@ -265,9 +308,9 @@ mod tests {
     fn roundtrip_bit_identical_results() {
         let dim = 6;
         let data = blobs(25, dim, 8);
-        for sq8 in [false, true] {
+        for spec in [StorageSpec::flat(), StorageSpec::sq8(), StorageSpec::pq()] {
             let idx =
-                IvfIndex::build(&data, dim, Metric::SqEuclidean, 6, 6, 3, sq8, 4).unwrap();
+                IvfIndex::build(&data, dim, Metric::SqEuclidean, 6, 6, 3, &spec, 4).unwrap();
             let mut buf = Vec::new();
             idx.write_to(&mut buf).unwrap();
             let back = IvfIndex::read_from(&mut buf.as_slice()).unwrap();
@@ -289,7 +332,9 @@ mod tests {
     fn rejects_corrupt_payload() {
         let dim = 4;
         let data = blobs(5, dim, 1);
-        let idx = IvfIndex::build(&data, dim, Metric::Euclidean, 4, 4, 2, false, 3).unwrap();
+        let idx =
+            IvfIndex::build(&data, dim, Metric::Euclidean, 4, 4, 2, &StorageSpec::flat(), 3)
+                .unwrap();
         let mut buf = Vec::new();
         idx.write_to(&mut buf).unwrap();
         // Truncation.
@@ -304,7 +349,9 @@ mod tests {
     fn query_dim_checked() {
         let dim = 4;
         let data = blobs(5, dim, 1);
-        let idx = IvfIndex::build(&data, dim, Metric::Euclidean, 4, 4, 2, false, 3).unwrap();
+        let idx =
+            IvfIndex::build(&data, dim, Metric::Euclidean, 4, 4, 2, &StorageSpec::flat(), 3)
+                .unwrap();
         assert!(idx.search(&[0.0; 5], 2).is_err());
     }
 }

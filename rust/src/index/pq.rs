@@ -1,0 +1,1010 @@
+//! Product-quantized (PQ / OPQ) vector storage with ADC search and an
+//! order-exact full-precision rerank.
+//!
+//! The vector is split into `m` contiguous subspaces of `dim/m` dimensions;
+//! each subspace gets its own k-means codebook of `ksub` centroids (trained
+//! through the shared [`kmeans_train`] kernel), and a vector is stored as
+//! `m` codebook indices — one byte per subquantizer, or a nibble when
+//! `ksub ≤ 16` (two codes packed per byte). With the default `m = dim/2`,
+//! `ksub = 16` configuration the hot serving payload is ~16× smaller than
+//! flat f32, versus ~4× for SQ8.
+//!
+//! **OPQ**: an optional learned orthonormal rotation applied before
+//! encoding, trained by alternating least squares (Ge et al.'s OPQ-NP):
+//! alternate (a) codebook training + assignment in the rotated space with
+//! (b) the orthogonal Procrustes update `R = U Vᵀ` from the SVD of
+//! `X̂ᵀX` — computed here from the symmetric eigendecomposition
+//! ([`crate::linalg::eigh`]) of `(X̂ᵀX)ᵀ(X̂ᵀX)`. Rotation spreads variance
+//! across subspaces so the per-subspace codebooks waste fewer bits.
+//!
+//! **ADC** (asymmetric distance computation): at query time the query stays
+//! full precision; one `m × ksub` lookup table of per-subspace partial
+//! distances is built per query, after which every candidate costs `m` table
+//! adds instead of a `dim`-wide decode + distance. All five metrics are
+//! supported (cosine keeps a second per-subspace squared-norm table).
+//!
+//! **Two-stage search** (the exactness contract, machine-checked in
+//! `tests/props.rs::prop_pq_rerank_is_order_exact_at_full_depth`): the ADC
+//! scan is only a candidate generator. The top `rerank_depth` ADC candidates
+//! are re-scored against the full-precision rows through the same
+//! [`merge_top_k`] kernel every other index path uses, so the final order is
+//! decided by exact distances. At exhaustive `rerank_depth ≥ n` the returned
+//! top-k is therefore **bit-identical** to [`crate::index::ExactIndex`] over
+//! flat storage — for every substrate (exact / IVF at full probe / HNSW at
+//! exhaustive beam), sharded or not, PQ compression costs zero correctness.
+//!
+//! The full-precision rows live in a `rerank` tier held by the storage but
+//! excluded from [`PqStorage::memory_bytes`] (reported separately by
+//! [`PqStorage::rerank_bytes`]): it models the cold tier a production
+//! deployment would serve from disk/mmap (a ROADMAP item), while codes +
+//! codebooks + rotation are the hot RAM-resident copy.
+
+use crate::error::{OpdrError, Result};
+use crate::index::io;
+use crate::knn::ivf::{kmeans_train, nearest_centroid};
+use crate::knn::topk::merge_top_k;
+use crate::knn::Neighbor;
+use crate::linalg::{eigh, Mat};
+use crate::metrics::{manhattan, sq_euclidean, Metric};
+use crate::util::float::{dot_f32, norm_sq_f32};
+use crate::util::Rng;
+use std::io::{Read, Write};
+
+/// Training / search parameters for PQ storage (assembled from
+/// [`crate::config::IndexPolicy`] by
+/// [`crate::config::IndexPolicy::storage_spec`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PqParams {
+    /// Number of subquantizers; 0 = auto (`dim/2`, i.e. 2-dim subspaces).
+    /// Clamped to the largest divisor of `dim` not exceeding the request.
+    pub m: usize,
+    /// Centroids per subspace, clamped to `[2, 256]` (and to `n`). Values
+    /// ≤ 16 store two codes per byte.
+    pub ksub: usize,
+    /// Train an OPQ rotation before encoding.
+    pub opq: bool,
+    /// Lloyd iterations per subspace codebook.
+    pub train_iters: usize,
+    /// Alternating-least-squares rounds for the OPQ rotation.
+    pub opq_iters: usize,
+    /// ADC candidates re-scored at full precision per query (raised to `k`
+    /// when `k` is larger; `≥ n` makes the search exactly [`ExactIndex`]-
+    /// equal).
+    ///
+    /// [`ExactIndex`]: crate::index::ExactIndex
+    pub rerank_depth: usize,
+}
+
+impl Default for PqParams {
+    fn default() -> Self {
+        PqParams { m: 0, ksub: 16, opq: false, train_iters: 10, opq_iters: 4, rerank_depth: 64 }
+    }
+}
+
+/// PQ-encoded vectors: per-subspace codebooks, packed codes, optional OPQ
+/// rotation, plus the full-precision rerank tier.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PqStorage {
+    n: usize,
+    dim: usize,
+    /// Subquantizer count (divides `dim`).
+    m: usize,
+    /// Dimensions per subspace (`dim / m`).
+    dsub: usize,
+    /// Centroids per subspace (≤ 256; ≤ 16 packs two codes per byte).
+    ksub: usize,
+    /// Default ADC candidate depth for the two-stage search.
+    rerank_depth: usize,
+    /// OPQ rotation, row-major `dim × dim` (`y = R·x`), when trained.
+    rotation: Option<Vec<f32>>,
+    /// `m × ksub × dsub` centroids.
+    codebooks: Vec<f32>,
+    /// Row-major codes, `n × row_bytes` (nibble-packed when `ksub ≤ 16`).
+    codes: Vec<u8>,
+    /// Full-precision rows (cold rerank tier, original/unrotated space).
+    rerank: Vec<f32>,
+}
+
+impl PqStorage {
+    /// Train codebooks (and optionally an OPQ rotation) on `data` and encode
+    /// every row. Deterministic from `seed`.
+    pub fn train(data: &[f32], dim: usize, params: &PqParams, seed: u64) -> Result<PqStorage> {
+        if dim == 0 || data.len() % dim != 0 {
+            return Err(OpdrError::shape("pq: bad data shape"));
+        }
+        let n = data.len() / dim;
+        if n == 0 {
+            return Err(OpdrError::data("pq: empty data"));
+        }
+        if data.iter().any(|x| !x.is_finite()) {
+            return Err(OpdrError::numeric("pq: non-finite input"));
+        }
+        let want_m = if params.m == 0 { (dim / 2).max(1) } else { params.m.min(dim).max(1) };
+        // Largest divisor of dim not exceeding the request (1 always works).
+        let m = (1..=want_m).rev().find(|mm| dim % mm == 0).unwrap_or(1);
+        let dsub = dim / m;
+        let ksub = params.ksub.clamp(2, 256).min(n);
+        let train_iters = params.train_iters.max(1);
+        let rerank_depth = params.rerank_depth.max(1);
+        let mut rng = Rng::new(seed);
+
+        let rotation = if params.opq && dim > 1 {
+            train_opq_rotation(
+                data,
+                dim,
+                n,
+                m,
+                dsub,
+                ksub,
+                train_iters.min(4),
+                params.opq_iters.max(1),
+                &mut rng,
+            )?
+        } else {
+            None
+        };
+
+        let rotated;
+        let y: &[f32] = match &rotation {
+            Some(r) => {
+                rotated = rotate_rows(data, dim, r);
+                &rotated
+            }
+            None => data,
+        };
+        let codebooks = train_codebooks(y, n, dim, m, dsub, ksub, train_iters, &mut rng);
+        let codes = encode_all(y, n, dim, m, dsub, ksub, &codebooks);
+        Ok(PqStorage {
+            n,
+            dim,
+            m,
+            dsub,
+            ksub,
+            rerank_depth,
+            rotation,
+            codebooks,
+            codes,
+            rerank: data.to_vec(),
+        })
+    }
+
+    /// Number of encoded vectors.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Vector dimensionality.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Number of subquantizers.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Centroids per subspace.
+    pub fn ksub(&self) -> usize {
+        self.ksub
+    }
+
+    /// Default ADC candidate depth of the two-stage search.
+    pub fn rerank_depth(&self) -> usize {
+        self.rerank_depth
+    }
+
+    /// True when an OPQ rotation is applied before encoding.
+    pub fn has_rotation(&self) -> bool {
+        self.rotation.is_some()
+    }
+
+    /// Two codes per byte?
+    #[inline]
+    fn packed(&self) -> bool {
+        self.ksub <= 16
+    }
+
+    /// Code bytes per row.
+    #[inline]
+    fn row_bytes(&self) -> usize {
+        row_bytes_for(self.m, self.ksub)
+    }
+
+    /// Code of vector `id` in subspace `s`.
+    #[inline]
+    pub(crate) fn code(&self, id: usize, s: usize) -> usize {
+        code_at(&self.codes, self.row_bytes(), self.packed(), id, s)
+    }
+
+    /// Decode vector `id` (the rotated-space reconstruction when OPQ is on)
+    /// into `out` (must be `dim` long).
+    pub fn decode_into(&self, id: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.dim);
+        for s in 0..self.m {
+            let c = self.code(id, s);
+            let cent = &self.codebooks[(s * self.ksub + c) * self.dsub..][..self.dsub];
+            out[s * self.dsub..(s + 1) * self.dsub].copy_from_slice(cent);
+        }
+    }
+
+    /// Decode vector `id` into a fresh Vec.
+    pub fn reconstruct(&self, id: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.dim];
+        self.decode_into(id, &mut out);
+        out
+    }
+
+    /// Rotate a query into the encoded space (identity copy without OPQ).
+    pub fn rotate_query(&self, q: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.dim];
+        self.rotate_query_into(q, &mut out);
+        out
+    }
+
+    /// [`PqStorage::rotate_query`] into a caller-provided buffer (must be
+    /// `dim` long) — no allocation.
+    pub fn rotate_query_into(&self, q: &[f32], out: &mut [f32]) {
+        match &self.rotation {
+            Some(r) => rotate_into(q, self.dim, r, out),
+            None => out.copy_from_slice(q),
+        }
+    }
+
+    /// Full-precision row `id` (the cold rerank tier).
+    #[inline]
+    pub fn rerank_row(&self, id: usize) -> &[f32] {
+        &self.rerank[id * self.dim..(id + 1) * self.dim]
+    }
+
+    /// Hot resident bytes: codes + codebooks + rotation. The full-precision
+    /// rerank tier is excluded (see [`PqStorage::rerank_bytes`] and the
+    /// module docs).
+    pub fn memory_bytes(&self) -> usize {
+        self.codes.len()
+            + self.codebooks.len() * std::mem::size_of::<f32>()
+            + self.rotation.as_ref().map_or(0, |r| r.len() * std::mem::size_of::<f32>())
+    }
+
+    /// Bytes of the cold full-precision rerank tier.
+    pub fn rerank_bytes(&self) -> usize {
+        self.rerank.len() * std::mem::size_of::<f32>()
+    }
+
+    /// True when this store was built from exactly `other` (the rerank tier
+    /// keeps the original rows, so the check is bitwise).
+    pub fn matches(&self, other: &[f32]) -> bool {
+        self.rerank.len() == other.len()
+            && self.rerank.iter().zip(other).all(|(a, b)| a.to_bits() == b.to_bits())
+    }
+
+    /// Serialize (the `pq` record kind inside `OPDR` index segments).
+    pub(crate) fn write_to(&self, w: &mut dyn Write) -> Result<()> {
+        io::write_u64(w, self.n as u64)?;
+        io::write_u64(w, self.dim as u64)?;
+        io::write_u64(w, self.m as u64)?;
+        io::write_u64(w, self.ksub as u64)?;
+        io::write_u64(w, self.rerank_depth as u64)?;
+        io::write_u8(w, u8::from(self.rotation.is_some()))?;
+        if let Some(r) = &self.rotation {
+            io::write_f32s(w, r)?;
+        }
+        io::write_f32s(w, &self.codebooks)?;
+        io::write_bytes(w, &self.codes)?;
+        io::write_f32s(w, &self.rerank)
+    }
+
+    /// Deserialize (inverse of [`PqStorage::write_to`]); every structural
+    /// invariant is validated so a corrupt record fails loudly instead of
+    /// serving garbage distances.
+    pub(crate) fn read_from(r: &mut dyn Read) -> Result<PqStorage> {
+        let n = io::read_u64_usize(r)?;
+        let dim = io::read_u64_usize(r)?;
+        let m = io::read_u64_usize(r)?;
+        let ksub = io::read_u64_usize(r)?;
+        let rerank_depth = io::read_u64_usize(r)?;
+        if dim == 0 || n == 0 {
+            return Err(OpdrError::data("pq: corrupt header"));
+        }
+        if m == 0 || m > dim || dim % m != 0 {
+            return Err(OpdrError::data(format!(
+                "pq: corrupt subquantizer count {m} for dim {dim}"
+            )));
+        }
+        if ksub == 0 || ksub > 256 {
+            return Err(OpdrError::data(format!("pq: corrupt ksub {ksub}")));
+        }
+        if rerank_depth == 0 {
+            return Err(OpdrError::data("pq: corrupt rerank depth"));
+        }
+        let dsub = dim / m;
+        let rotation = match io::read_u8(r)? {
+            0 => None,
+            1 => {
+                let rot = io::read_f32s(r, io::checked_count(dim, dim)?)?;
+                if rot.iter().any(|x| !x.is_finite()) {
+                    return Err(OpdrError::data("pq: corrupt rotation"));
+                }
+                Some(rot)
+            }
+            other => return Err(OpdrError::data(format!("pq: bad rotation flag {other}"))),
+        };
+        let cb_count = io::checked_count(io::checked_count(m, ksub)?, dsub)?;
+        let codebooks = io::read_f32s(r, cb_count)?;
+        if codebooks.iter().any(|x| !x.is_finite()) {
+            return Err(OpdrError::data("pq: corrupt codebook"));
+        }
+        let row_bytes = row_bytes_for(m, ksub);
+        let codes = io::read_bytes(r, io::checked_count(n, row_bytes)?)?;
+        let rerank = io::read_f32s(r, io::checked_count(n, dim)?)?;
+        if rerank.iter().any(|x| !x.is_finite()) {
+            return Err(OpdrError::data("pq: corrupt rerank payload"));
+        }
+        let store = PqStorage {
+            n,
+            dim,
+            m,
+            dsub,
+            ksub,
+            rerank_depth,
+            rotation,
+            codebooks,
+            codes,
+            rerank,
+        };
+        for id in 0..n {
+            for s in 0..m {
+                if store.code(id, s) >= ksub {
+                    return Err(OpdrError::data(format!(
+                        "pq: code out of range in row {id} subspace {s}"
+                    )));
+                }
+            }
+            // An odd subquantizer count leaves the top nibble of each row's
+            // last byte unused; it must be zero (anything else is corruption).
+            if store.packed() && m % 2 == 1 {
+                let last = store.codes[id * row_bytes + row_bytes - 1];
+                if last >> 4 != 0 {
+                    return Err(OpdrError::data(format!("pq: stray bits in row {id}")));
+                }
+            }
+        }
+        Ok(store)
+    }
+}
+
+/// Code bytes per row for a given `(m, ksub)`.
+#[inline]
+fn row_bytes_for(m: usize, ksub: usize) -> usize {
+    if ksub <= 16 {
+        m.div_ceil(2)
+    } else {
+        m
+    }
+}
+
+/// Read the code of row `id`, subspace `s` from a raw code buffer — the one
+/// place that knows the packed-nibble layout (low nibble = even subspace).
+#[inline]
+fn code_at(codes: &[u8], row_bytes: usize, packed: bool, id: usize, s: usize) -> usize {
+    if packed {
+        let b = codes[id * row_bytes + s / 2];
+        (if s % 2 == 0 { b & 0x0F } else { b >> 4 }) as usize
+    } else {
+        codes[id * row_bytes + s] as usize
+    }
+}
+
+/// Rotate one vector: `out = R·x` (row-major `R`, `dim × dim`).
+fn rotate_into(x: &[f32], dim: usize, r: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), dim);
+    for (a, o) in out.iter_mut().enumerate() {
+        *o = dot_f32(&r[a * dim..(a + 1) * dim], x);
+    }
+}
+
+/// Rotate every row of a row-major block.
+fn rotate_rows(data: &[f32], dim: usize, r: &[f32]) -> Vec<f32> {
+    let n = data.len() / dim;
+    let mut out = vec![0.0f32; data.len()];
+    for i in 0..n {
+        let (src, dst) = (&data[i * dim..(i + 1) * dim], &mut out[i * dim..(i + 1) * dim]);
+        rotate_into(src, dim, r, dst);
+    }
+    out
+}
+
+/// Train one k-means codebook per subspace over (possibly rotated) rows `y`.
+#[allow(clippy::too_many_arguments)]
+fn train_codebooks(
+    y: &[f32],
+    n: usize,
+    dim: usize,
+    m: usize,
+    dsub: usize,
+    ksub: usize,
+    iters: usize,
+    rng: &mut Rng,
+) -> Vec<f32> {
+    let mut codebooks = Vec::with_capacity(m * ksub * dsub);
+    let mut sub = vec![0.0f32; n * dsub];
+    for s in 0..m {
+        for i in 0..n {
+            sub[i * dsub..(i + 1) * dsub]
+                .copy_from_slice(&y[i * dim + s * dsub..i * dim + (s + 1) * dsub]);
+        }
+        // PQ codebooks always minimize L2 reconstruction error; the serving
+        // metric is applied at ADC/rerank time.
+        codebooks.extend_from_slice(&kmeans_train(
+            &sub,
+            dsub,
+            Metric::SqEuclidean,
+            ksub,
+            iters,
+            rng,
+        ));
+    }
+    codebooks
+}
+
+/// Assign every row to its nearest centroid per subspace and pack the codes.
+fn encode_all(
+    y: &[f32],
+    n: usize,
+    dim: usize,
+    m: usize,
+    dsub: usize,
+    ksub: usize,
+    codebooks: &[f32],
+) -> Vec<u8> {
+    let packed = ksub <= 16;
+    let row_bytes = row_bytes_for(m, ksub);
+    let mut codes = vec![0u8; n * row_bytes];
+    for i in 0..n {
+        for s in 0..m {
+            let xs = &y[i * dim + s * dsub..i * dim + (s + 1) * dsub];
+            let cb = &codebooks[s * ksub * dsub..(s + 1) * ksub * dsub];
+            let c = nearest_centroid(xs, cb, dsub, Metric::SqEuclidean) as u8;
+            if packed {
+                let byte = &mut codes[i * row_bytes + s / 2];
+                *byte |= if s % 2 == 0 { c } else { c << 4 };
+            } else {
+                codes[i * row_bytes + s] = c;
+            }
+        }
+    }
+    codes
+}
+
+/// Decode one row from raw codebooks/codes (used during OPQ training before
+/// a `PqStorage` exists).
+#[allow(clippy::too_many_arguments)]
+fn decode_raw(
+    codes: &[u8],
+    codebooks: &[f32],
+    id: usize,
+    m: usize,
+    dsub: usize,
+    ksub: usize,
+    out: &mut [f32],
+) {
+    let packed = ksub <= 16;
+    let row_bytes = row_bytes_for(m, ksub);
+    for s in 0..m {
+        let c = code_at(codes, row_bytes, packed, id, s);
+        let cent = &codebooks[(s * ksub + c) * dsub..][..dsub];
+        out[s * dsub..(s + 1) * dsub].copy_from_slice(cent);
+    }
+}
+
+/// OPQ-NP alternating least squares: alternate codebook training in the
+/// rotated space with the orthogonal Procrustes update `R = U Vᵀ` from the
+/// SVD of `M = X̂ᵀX` (computed via [`eigh`] of `MᵀM`: `MᵀM = V Σ² Vᵀ`,
+/// `U = M V Σ⁻¹`). A rank-deficient `M` (degenerate data) keeps the last
+/// well-defined rotation instead of dividing by ~0 singular values.
+#[allow(clippy::too_many_arguments)]
+fn train_opq_rotation(
+    data: &[f32],
+    dim: usize,
+    n: usize,
+    m: usize,
+    dsub: usize,
+    ksub: usize,
+    kmeans_iters: usize,
+    opq_iters: usize,
+    rng: &mut Rng,
+) -> Result<Option<Vec<f32>>> {
+    // Identity start.
+    let mut r = vec![0.0f32; dim * dim];
+    for a in 0..dim {
+        r[a * dim + a] = 1.0;
+    }
+    let mut decoded = vec![0.0f32; dim];
+    for _ in 0..opq_iters {
+        let y = rotate_rows(data, dim, &r);
+        let codebooks = train_codebooks(&y, n, dim, m, dsub, ksub, kmeans_iters, rng);
+        let codes = encode_all(&y, n, dim, m, dsub, ksub, &codebooks);
+        // M[a][b] = Σ_i x̂_i[a] · x_i[b]  (reconstructions vs raw rows).
+        let mut mdat = vec![0.0f64; dim * dim];
+        for i in 0..n {
+            decode_raw(&codes, &codebooks, i, m, dsub, ksub, &mut decoded);
+            let x = &data[i * dim..(i + 1) * dim];
+            for a in 0..dim {
+                let xa = decoded[a] as f64;
+                if xa == 0.0 {
+                    continue;
+                }
+                let row = &mut mdat[a * dim..(a + 1) * dim];
+                for b in 0..dim {
+                    row[b] += xa * x[b] as f64;
+                }
+            }
+        }
+        let mmat = Mat::from_vec(dim, dim, mdat)?;
+        let mtm = mmat.transpose().matmul(&mmat)?;
+        let eig = match eigh(&mtm) {
+            Ok(e) => e,
+            Err(_) => break,
+        };
+        let smax = eig.values.first().copied().unwrap_or(0.0);
+        if smax <= 0.0 || eig.values.iter().any(|&v| v <= 1e-12 * smax) {
+            break; // rank-deficient: keep the last rotation
+        }
+        // U = M V Σ⁻¹, then R = U Vᵀ.
+        let v = &eig.vectors;
+        let mut u = mmat.matmul(v)?;
+        for (k, &lambda) in eig.values.iter().enumerate() {
+            let sigma = lambda.sqrt();
+            for a in 0..dim {
+                u[(a, k)] /= sigma;
+            }
+        }
+        let rnew = u.matmul(&v.transpose())?;
+        r = rnew.data().iter().map(|&x| x as f32).collect();
+    }
+    Ok(Some(r))
+}
+
+// ---------------------------------------------------------------------------
+// ADC lookup tables + the two-stage search shared by every substrate.
+// ---------------------------------------------------------------------------
+
+/// Per-query ADC lookup tables: `m × ksub` partial terms so each candidate
+/// costs `m` table adds. Cosine carries a second squared-norm table (the
+/// reconstruction norm decomposes additively across subspaces).
+#[derive(Debug)]
+pub struct AdcTable<'a> {
+    pq: &'a PqStorage,
+    metric: Metric,
+    /// `m × ksub` partial distances (sq-L2 / L1) or partial dots (cosine,
+    /// negdot).
+    lut: Vec<f32>,
+    /// Cosine only: `m × ksub` centroid squared norms.
+    norm_lut: Vec<f32>,
+    /// Cosine only: query L2 norm.
+    q_norm: f32,
+}
+
+impl<'a> AdcTable<'a> {
+    /// Build the table for one query (rotating it into the encoded space
+    /// when OPQ is on).
+    pub fn new(pq: &'a PqStorage, metric: Metric, query: &[f32]) -> Result<AdcTable<'a>> {
+        if query.len() != pq.dim {
+            return Err(OpdrError::shape(format!(
+                "pq adc: query dim {} != storage dim {}",
+                query.len(),
+                pq.dim
+            )));
+        }
+        let rotated;
+        let q: &[f32] = match &pq.rotation {
+            Some(_) => {
+                rotated = pq.rotate_query(query);
+                &rotated
+            }
+            None => query,
+        };
+        let (m, ksub, dsub) = (pq.m, pq.ksub, pq.dsub);
+        let cosine = metric == Metric::Cosine;
+        let mut lut = vec![0.0f32; m * ksub];
+        let mut norm_lut = if cosine { vec![0.0f32; m * ksub] } else { Vec::new() };
+        for s in 0..m {
+            let qs = &q[s * dsub..(s + 1) * dsub];
+            for c in 0..ksub {
+                let cent = &pq.codebooks[(s * ksub + c) * dsub..][..dsub];
+                lut[s * ksub + c] = match metric {
+                    Metric::SqEuclidean | Metric::Euclidean => sq_euclidean(qs, cent),
+                    Metric::Manhattan => manhattan(qs, cent),
+                    Metric::Cosine | Metric::NegDot => dot_f32(qs, cent),
+                };
+                if cosine {
+                    norm_lut[s * ksub + c] = norm_sq_f32(cent);
+                }
+            }
+        }
+        let q_norm = if cosine { norm_sq_f32(q).sqrt() } else { 0.0 };
+        Ok(AdcTable { pq, metric, lut, norm_lut, q_norm })
+    }
+
+    /// ADC distance from the table's query to encoded vector `id`.
+    #[inline]
+    pub fn lookup(&self, id: usize) -> f32 {
+        let (m, ksub) = (self.pq.m, self.pq.ksub);
+        if self.metric == Metric::Cosine {
+            let mut dot = 0.0f32;
+            let mut nsq = 0.0f32;
+            for s in 0..m {
+                let c = self.pq.code(id, s);
+                dot += self.lut[s * ksub + c];
+                nsq += self.norm_lut[s * ksub + c];
+            }
+            let nx = nsq.sqrt();
+            if self.q_norm == 0.0 || nx == 0.0 {
+                return 1.0;
+            }
+            return 1.0 - dot / (self.q_norm * nx);
+        }
+        let mut acc = 0.0f32;
+        for s in 0..m {
+            acc += self.lut[s * ksub + self.pq.code(id, s)];
+        }
+        match self.metric {
+            Metric::SqEuclidean | Metric::Manhattan => acc,
+            Metric::Euclidean => acc.sqrt(),
+            Metric::NegDot => -acc,
+            Metric::Cosine => unreachable!("cosine handled above"),
+        }
+    }
+}
+
+/// Stage 2: re-score candidate ids against the full-precision rerank rows
+/// and select the top `k` through the shared [`merge_top_k`] kernel. With
+/// the candidate set covering all rows this is exactly the flat exact scan
+/// (same distances, same (distance, index) tie-break, NaN skipped).
+pub(crate) fn rerank(
+    pq: &PqStorage,
+    metric: Metric,
+    query: &[f32],
+    ids: impl IntoIterator<Item = usize>,
+    k: usize,
+) -> Vec<Neighbor> {
+    merge_top_k(
+        ids.into_iter().map(|id| (id, metric.distance(query, pq.rerank_row(id)))),
+        k,
+    )
+    .into_iter()
+    .map(|(index, distance)| Neighbor { index, distance })
+    .collect()
+}
+
+/// The full two-stage search over a candidate id stream: ADC-scan the ids,
+/// keep the best `max(rerank_depth, k)`, then [`rerank`] them at full
+/// precision. Used by the exact scan (all ids) and IVF (probed cells).
+pub(crate) fn two_stage_search(
+    pq: &PqStorage,
+    metric: Metric,
+    query: &[f32],
+    ids: impl IntoIterator<Item = usize>,
+    k: usize,
+) -> Result<Vec<Neighbor>> {
+    let table = AdcTable::new(pq, metric, query)?;
+    let depth = pq.rerank_depth.max(k);
+    let cands = merge_top_k(ids.into_iter().map(|id| (id, table.lookup(id))), depth);
+    Ok(rerank(pq, metric, query, cands.into_iter().map(|(id, _)| id), k))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::knn::topk::top_k_smallest;
+
+    const METRICS: [Metric; 5] = [
+        Metric::SqEuclidean,
+        Metric::Euclidean,
+        Metric::Cosine,
+        Metric::Manhattan,
+        Metric::NegDot,
+    ];
+
+    fn normal_data(n: usize, dim: usize, seed: u64) -> Vec<f32> {
+        Rng::new(seed).normal_vec_f32(n * dim)
+    }
+
+    #[test]
+    fn subquantizer_count_adapts_to_dim() {
+        let data = normal_data(20, 8, 1);
+        let pq = PqStorage::train(&data, 8, &PqParams::default(), 1).unwrap();
+        assert_eq!(pq.m(), 4); // auto = dim/2
+        assert_eq!(pq.dim(), 8);
+        // Prime dim: the only divisor ≤ dim/2 is 1.
+        let data = normal_data(20, 7, 2);
+        let pq = PqStorage::train(&data, 7, &PqParams::default(), 1).unwrap();
+        assert_eq!(pq.m(), 1);
+        // Explicit non-divisor request falls back to the largest divisor.
+        let data = normal_data(20, 12, 3);
+        let pq =
+            PqStorage::train(&data, 12, &PqParams { m: 5, ..Default::default() }, 1).unwrap();
+        assert_eq!(pq.m(), 4);
+    }
+
+    #[test]
+    fn reconstruction_is_finite_and_roughly_close() {
+        let dim = 8;
+        let n = 200;
+        let data = normal_data(n, dim, 5);
+        let pq = PqStorage::train(&data, dim, &PqParams::default(), 7).unwrap();
+        assert_eq!(pq.len(), n);
+        let mut worst = 0.0f32;
+        for id in 0..n {
+            let rec = pq.reconstruct(id);
+            assert!(rec.iter().all(|x| x.is_finite()));
+            let err = sq_euclidean(&rec, &data[id * dim..(id + 1) * dim]);
+            worst = worst.max(err);
+        }
+        // 16 centroids per 2-dim subspace of unit normals: coarse but sane
+        // (the bound is deliberately loose — outliers land far from their
+        // nearest centroid; exactness never depends on reconstruction).
+        assert!(worst < 4.0 * dim as f32, "worst sq reconstruction error {worst}");
+    }
+
+    #[test]
+    fn packing_kicks_in_at_ksub_16() {
+        let dim = 8;
+        let data = normal_data(100, dim, 9);
+        let small =
+            PqStorage::train(&data, dim, &PqParams { ksub: 16, ..Default::default() }, 1).unwrap();
+        let big =
+            PqStorage::train(&data, dim, &PqParams { ksub: 17, ..Default::default() }, 1).unwrap();
+        assert!(small.packed());
+        assert!(!big.packed());
+        assert_eq!(small.codes.len(), 100 * 2); // m=4 packed
+        assert_eq!(big.codes.len(), 100 * 4);
+        // Codes survive the nibble round-trip.
+        for id in [0usize, 13, 99] {
+            for s in 0..small.m() {
+                assert!(small.code(id, s) < 16);
+            }
+        }
+    }
+
+    #[test]
+    fn two_stage_at_full_depth_is_bitwise_exact_for_every_metric() {
+        let dim = 6;
+        let n = 50;
+        let mut data = normal_data(n, dim, 11);
+        // Duplicate rows so tie-breaking is load-bearing.
+        data.copy_within(0..dim, 3 * dim);
+        data.copy_within(0..dim, 17 * dim);
+        for opq in [false, true] {
+            let params = PqParams { opq, rerank_depth: n + 5, ..Default::default() };
+            let pq = PqStorage::train(&data, dim, &params, 3).unwrap();
+            let mut rng = Rng::new(21);
+            for metric in METRICS {
+                for k in [1usize, 7, n, n + 3] {
+                    let q = rng.normal_vec_f32(dim);
+                    let got = two_stage_search(&pq, metric, &q, 0..n, k).unwrap();
+                    let dists: Vec<f32> = (0..n)
+                        .map(|id| metric.distance(&q, &data[id * dim..(id + 1) * dim]))
+                        .collect();
+                    let want = top_k_smallest(&dists, k);
+                    assert_eq!(got.len(), want.len(), "opq={opq} {} k={k}", metric.name());
+                    for (g, (wi, wd)) in got.iter().zip(&want) {
+                        assert_eq!(g.index, *wi, "opq={opq} {} k={k}", metric.name());
+                        assert_eq!(g.distance.to_bits(), wd.to_bits());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nan_query_yields_empty_results_like_exact() {
+        let dim = 4;
+        let n = 20;
+        let data = normal_data(n, dim, 13);
+        let pq = PqStorage::train(
+            &data,
+            dim,
+            &PqParams { rerank_depth: n, ..Default::default() },
+            1,
+        )
+        .unwrap();
+        let q = vec![f32::NAN; dim];
+        let got = two_stage_search(&pq, Metric::SqEuclidean, &q, 0..n, 5).unwrap();
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn adc_tracks_true_reconstruction_distance() {
+        let dim = 8;
+        let n = 120;
+        let data = normal_data(n, dim, 17);
+        for opq in [false, true] {
+            let pq = PqStorage::train(
+                &data,
+                dim,
+                &PqParams { opq, ..Default::default() },
+                5,
+            )
+            .unwrap();
+            let mut rng = Rng::new(3);
+            let q = rng.normal_vec_f32(dim);
+            for metric in METRICS {
+                let table = AdcTable::new(&pq, metric, &q).unwrap();
+                let rq = pq.rotate_query(&q);
+                let mut dec = vec![0.0f32; dim];
+                for id in [0usize, 7, 64, n - 1] {
+                    pq.decode_into(id, &mut dec);
+                    let want = metric.distance(&rq, &dec);
+                    let got = table.lookup(id);
+                    assert!(
+                        (got - want).abs() <= 1e-3 * (1.0 + want.abs()),
+                        "opq={opq} {} id {id}: adc {got} vs decode {want}",
+                        metric.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn opq_rotation_is_orthonormal() {
+        let dim = 6;
+        let data = normal_data(150, dim, 23);
+        let pq = PqStorage::train(
+            &data,
+            dim,
+            &PqParams { opq: true, ..Default::default() },
+            9,
+        )
+        .unwrap();
+        assert!(pq.has_rotation());
+        let r = pq.rotation.as_ref().unwrap();
+        // R Rᵀ ≈ I.
+        for a in 0..dim {
+            for b in 0..dim {
+                let mut s = 0.0f64;
+                for k in 0..dim {
+                    s += r[a * dim + k] as f64 * r[b * dim + k] as f64;
+                }
+                let want = if a == b { 1.0 } else { 0.0 };
+                assert!((s - want).abs() < 1e-3, "RRᵀ[{a}][{b}] = {s}");
+            }
+        }
+        // Rotation preserves L2 distances (up to float error).
+        let mut rng = Rng::new(4);
+        let x = rng.normal_vec_f32(dim);
+        let y = rng.normal_vec_f32(dim);
+        let d0 = sq_euclidean(&x, &y);
+        let d1 = sq_euclidean(&pq.rotate_query(&x), &pq.rotate_query(&y));
+        assert!((d0 - d1).abs() < 1e-3 * (1.0 + d0), "{d0} vs {d1}");
+    }
+
+    #[test]
+    fn deterministic_across_builds() {
+        let dim = 8;
+        let data = normal_data(100, dim, 29);
+        for opq in [false, true] {
+            let params = PqParams { opq, ..Default::default() };
+            let a = PqStorage::train(&data, dim, &params, 42).unwrap();
+            let b = PqStorage::train(&data, dim, &params, 42).unwrap();
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn roundtrip_bit_identical() {
+        let dim = 8;
+        let data = normal_data(60, dim, 31);
+        for (opq, ksub) in [(false, 16), (true, 16), (false, 32)] {
+            let pq = PqStorage::train(
+                &data,
+                dim,
+                &PqParams { opq, ksub, ..Default::default() },
+                6,
+            )
+            .unwrap();
+            let mut buf = Vec::new();
+            pq.write_to(&mut buf).unwrap();
+            let back = PqStorage::read_from(&mut buf.as_slice()).unwrap();
+            assert_eq!(pq, back);
+        }
+    }
+
+    #[test]
+    fn odd_subquantizer_count_packs_and_roundtrips() {
+        // dim 6 with m=3 (odd) exercises the unused-nibble path.
+        let dim = 6;
+        let data = normal_data(40, dim, 37);
+        let pq =
+            PqStorage::train(&data, dim, &PqParams { m: 3, ..Default::default() }, 2).unwrap();
+        assert_eq!(pq.m(), 3);
+        assert_eq!(pq.row_bytes(), 2);
+        let mut buf = Vec::new();
+        pq.write_to(&mut buf).unwrap();
+        assert_eq!(PqStorage::read_from(&mut buf.as_slice()).unwrap(), pq);
+    }
+
+    #[test]
+    fn corrupt_payloads_rejected() {
+        let dim = 4;
+        let data = normal_data(10, dim, 41);
+        let pq = PqStorage::train(
+            &data,
+            dim,
+            &PqParams { ksub: 10, ..Default::default() },
+            1,
+        )
+        .unwrap();
+        let mut buf = Vec::new();
+        pq.write_to(&mut buf).unwrap();
+        // Truncation at several cuts.
+        for cut in [0usize, 7, 20, buf.len() / 2, buf.len() - 2] {
+            assert!(PqStorage::read_from(&mut &buf[..cut]).is_err(), "cut {cut} accepted");
+        }
+        // Header layout: n | dim | m | ksub | rerank_depth (u64 each) | flag.
+        // Non-divisor m.
+        let mut bad = buf.clone();
+        bad[16..24].copy_from_slice(&3u64.to_le_bytes());
+        assert!(PqStorage::read_from(&mut bad.as_slice()).is_err());
+        // Absurd ksub.
+        let mut bad = buf.clone();
+        bad[24..32].copy_from_slice(&1000u64.to_le_bytes());
+        assert!(PqStorage::read_from(&mut bad.as_slice()).is_err());
+        // Zero rerank depth.
+        let mut bad = buf.clone();
+        bad[32..40].copy_from_slice(&0u64.to_le_bytes());
+        assert!(PqStorage::read_from(&mut bad.as_slice()).is_err());
+        // NaN centroid (codebooks start right after the 41-byte header when
+        // no rotation is stored).
+        let mut bad = buf.clone();
+        bad[41..45].copy_from_slice(&f32::NAN.to_le_bytes());
+        let e = PqStorage::read_from(&mut bad.as_slice()).unwrap_err().to_string();
+        assert!(e.contains("codebook"), "{e}");
+        // Out-of-range code: ksub=10 < 16 packs nibbles, so 0x0F is invalid.
+        let cb_bytes = pq.codebooks.len() * 4;
+        let code_off = 41 + cb_bytes;
+        let mut bad = buf.clone();
+        bad[code_off] = 0xFF;
+        let e = PqStorage::read_from(&mut bad.as_slice()).unwrap_err().to_string();
+        assert!(e.contains("code out of range"), "{e}");
+        // NaN in the rerank tier.
+        let code_bytes = pq.codes.len();
+        let mut bad = buf.clone();
+        let rer_off = code_off + code_bytes;
+        bad[rer_off..rer_off + 4].copy_from_slice(&f32::INFINITY.to_le_bytes());
+        let e = PqStorage::read_from(&mut bad.as_slice()).unwrap_err().to_string();
+        assert!(e.contains("rerank"), "{e}");
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        assert!(PqStorage::train(&[], 4, &PqParams::default(), 1).is_err());
+        assert!(PqStorage::train(&[1.0; 7], 4, &PqParams::default(), 1).is_err());
+        assert!(PqStorage::train(&[1.0, f32::NAN], 2, &PqParams::default(), 1).is_err());
+        assert!(PqStorage::train(&[1.0; 8], 0, &PqParams::default(), 1).is_err());
+    }
+
+    #[test]
+    fn hot_memory_at_least_8x_smaller_than_flat() {
+        let dim = 16;
+        let n = 1000;
+        let data = normal_data(n, dim, 43);
+        let pq = PqStorage::train(&data, dim, &PqParams::default(), 3).unwrap();
+        let flat = n * dim * 4;
+        assert!(
+            pq.memory_bytes() * 8 <= flat,
+            "pq hot bytes {} vs flat {flat}",
+            pq.memory_bytes()
+        );
+        assert_eq!(pq.rerank_bytes(), flat);
+        assert!(pq.matches(&data));
+        let mut other = data.clone();
+        other[5] += 1.0;
+        assert!(!pq.matches(&other));
+    }
+}

@@ -22,9 +22,16 @@
 //! exhaustive (exact flat scan; IVF at full probe; HNSW at `m ≥ n`,
 //! `ef ≥ 4n`), byte-identical neighbors to the *unsharded* index over the
 //! whole collection, including tie and NaN-distance vectors and `k ≥ n`.
-//! SQ8 codebooks are trained per segment (the FAISS/Lucene segment-local
-//! convention), so quantized distances are defined relative to each
-//! segment's codebook; the merge contract still holds bit-for-bit.
+//! SQ8 codebooks default to per-segment training (the FAISS/Lucene
+//! segment-local convention), so quantized distances are defined relative
+//! to each segment's codebook and the merge contract still holds
+//! bit-for-bit; with [`IndexPolicy::sq8_global_codebook`] the builder
+//! trains one [`Sq8Bounds`] over the whole collection and every segment
+//! encodes against it, making quantized sharded results bit-identical to
+//! the *unsharded* quantized index at exhaustive parameters too. PQ
+//! segments keep segment-local codebooks — their full-precision rerank
+//! stage already pins exhaustive-depth results to the exact index
+//! regardless of codebooks.
 //!
 //! Partitioning, per-shard seeds and therefore every segment structure are
 //! deterministic: equal `(data, policy, seed)` give bit-identical sharded
@@ -32,7 +39,7 @@
 
 use crate::config::IndexPolicy;
 use crate::error::{OpdrError, Result};
-use crate::index::{io, AnnIndex, IndexKind};
+use crate::index::{io, AnnIndex, IndexKind, Sq8Bounds};
 use crate::knn::topk::merge_top_k;
 use crate::knn::Neighbor;
 use crate::metrics::Metric;
@@ -81,6 +88,23 @@ fn leaf_policy(n: usize, policy: &IndexPolicy) -> IndexPolicy {
         shards: 1,
         ..policy.clone()
     }
+}
+
+/// [`leaf_policy`] plus the global-codebook option: when
+/// `sq8_global_codebook` is on, train one set of [`Sq8Bounds`] over the
+/// *whole* collection and pin it into the leaf policy so every segment
+/// encodes against identical codebooks.
+fn leaf_policy_with_bounds(
+    data: &[f32],
+    dim: usize,
+    n: usize,
+    policy: &IndexPolicy,
+) -> Result<IndexPolicy> {
+    let mut leaf = leaf_policy(n, policy);
+    if leaf.sq8 && leaf.sq8_global_codebook && leaf.sq8_bounds.is_none() {
+        leaf.sq8_bounds = Some(Arc::new(Sq8Bounds::train(data, dim)?));
+    }
+    Ok(leaf)
 }
 
 /// A collection served by `S` independent index segments with stable
@@ -166,7 +190,7 @@ impl ShardedIndex {
             return Err(OpdrError::data("sharded index build: empty data"));
         }
         let ranges = shard_ranges(n, policy.shards, policy.shard_min_vectors);
-        let leaf = leaf_policy(n, policy);
+        let leaf = leaf_policy_with_bounds(data, dim, n, policy)?;
         let mut segments: Vec<Box<dyn AnnIndex>> = Vec::with_capacity(ranges.len());
         for (s, r) in ranges.iter().enumerate() {
             segments.push(crate::index::build_index(
@@ -274,8 +298,16 @@ impl AnnIndex for ShardedIndex {
         self.segments.iter().all(|s| s.quantized())
     }
 
+    fn storage_name(&self) -> &'static str {
+        self.segments[0].storage_name()
+    }
+
     fn memory_bytes(&self) -> usize {
         self.segments.iter().map(|s| s.memory_bytes()).sum()
+    }
+
+    fn cold_bytes(&self) -> usize {
+        self.segments.iter().map(|s| s.cold_bytes()).sum()
     }
 
     fn search(&self, query: &[f32], k: usize) -> Result<Vec<Neighbor>> {
@@ -403,11 +435,14 @@ impl ShardedIndex {
 /// Build an index per `policy` over a shared data snapshot, fanning
 /// whole-segment builds out to `pool` and delivering the finished index to
 /// `done` from a collector thread. The caller — the coordinator's scheduler
-/// thread — returns immediately and keeps serving searches while segments
-/// build; `done` runs on the collector thread once every segment finished
-/// (or failed). When partitioning yields a single segment the bare segment
-/// index is delivered (no wrapper), preserving the unsharded format and
-/// search path. Must not be called from a pool worker.
+/// thread — returns immediately (only cheap shape checks run on it; the
+/// global-codebook bounds scan and the job dispatch happen on the collector
+/// thread, which submits through a detached [`ThreadPool::handle`]) and
+/// keeps serving searches while segments build; `done` runs on the
+/// collector thread once every segment finished (or failed). When
+/// partitioning yields a single segment the bare segment index is delivered
+/// (no wrapper), preserving the unsharded format and search path. Must not
+/// be called from a pool worker.
 pub fn build_on_pool(
     data: Arc<Vec<f32>>,
     dim: usize,
@@ -430,23 +465,35 @@ pub fn build_on_pool(
         return;
     }
     let ranges = shard_ranges(n, policy.shards, policy.shard_min_vectors);
-    let leaf = leaf_policy(n, policy);
     let expected = ranges.len();
-    let (tx, rx) = channel::<(usize, Result<Box<dyn AnnIndex>>)>();
-    for (s, range) in ranges.into_iter().enumerate() {
-        let data = Arc::clone(&data);
-        let leaf = leaf.clone();
-        let tx = tx.clone();
-        pool.execute(move || {
-            let slice = &data[range.start * dim..range.end * dim];
-            let seed = shard_seed(seed, s);
-            let _ = tx.send((s, crate::index::build_index(slice, dim, metric, &leaf, seed)));
-        });
-    }
-    drop(tx);
+    let submit = pool.handle();
+    let policy = policy.clone();
     std::thread::Builder::new()
         .name("opdr-index-build".to_string())
         .spawn(move || {
+            // Everything with real cost runs here, off the caller's thread:
+            // the global-codebook bounds scan (O(n·dim) when enabled), the
+            // per-segment job dispatch, and the collection of results.
+            let leaf = match leaf_policy_with_bounds(data.as_slice(), dim, n, &policy) {
+                Ok(leaf) => leaf,
+                Err(e) => {
+                    done(Err(e));
+                    return;
+                }
+            };
+            let (tx, rx) = channel::<(usize, Result<Box<dyn AnnIndex>>)>();
+            for (s, range) in ranges.into_iter().enumerate() {
+                let data = Arc::clone(&data);
+                let leaf = leaf.clone();
+                let tx = tx.clone();
+                submit.execute(move || {
+                    let slice = &data[range.start * dim..range.end * dim];
+                    let seed = shard_seed(seed, s);
+                    let _ =
+                        tx.send((s, crate::index::build_index(slice, dim, metric, &leaf, seed)));
+                });
+            }
+            drop(tx);
             let mut parts: Vec<(usize, Result<Box<dyn AnnIndex>>)> = rx.iter().collect();
             if parts.len() != expected {
                 done(Err(OpdrError::coordinator("index build: a segment build was dropped")));
@@ -760,5 +807,87 @@ mod tests {
             ShardedIndex::build(&data, 4, Metric::Euclidean, &exact_policy(2), 1).unwrap();
         let e = sharded.search(&[0.0; 3], 2).unwrap_err().to_string();
         assert!(e.contains("query dim 3"), "{e}");
+    }
+
+    #[test]
+    fn global_sq8_codebook_makes_sharded_equal_unsharded_bitwise() {
+        let mut rng = Rng::new(67);
+        let dim = 5;
+        let n = 48;
+        let data = rng.normal_vec_f32(n * dim);
+        let policy = IndexPolicy {
+            sq8: true,
+            sq8_global_codebook: true,
+            ..exact_policy(4)
+        };
+        let unsharded = crate::index::build_index(
+            &data,
+            dim,
+            Metric::SqEuclidean,
+            &IndexPolicy { shards: 1, ..policy.clone() },
+            3,
+        )
+        .unwrap();
+        let sharded = ShardedIndex::build(&data, dim, Metric::SqEuclidean, &policy, 3).unwrap();
+        assert!(sharded.quantized());
+        for _ in 0..6 {
+            let q = rng.normal_vec_f32(dim);
+            let a = unsharded.search(&q, 7).unwrap();
+            let b = sharded.search(&q, 7).unwrap();
+            crate::testing::assert_same_neighbors(&a, &b);
+        }
+        // Segment-local codebooks (the default) generally diverge in the
+        // last ulp across shard boundaries, which is exactly why the global
+        // option exists; the merge itself stays order-exact either way.
+        let local = ShardedIndex::build(
+            &data,
+            dim,
+            Metric::SqEuclidean,
+            &IndexPolicy { sq8_global_codebook: false, ..policy },
+            3,
+        )
+        .unwrap();
+        assert_eq!(local.num_shards(), 4);
+    }
+
+    #[test]
+    fn pq_segments_roundtrip_and_rerank_exactly_at_full_depth() {
+        let mut rng = Rng::new(71);
+        let dim = 6;
+        let n = 42;
+        let data = rng.normal_vec_f32(n * dim);
+        let policy = IndexPolicy {
+            pq: true,
+            rerank_depth: n,
+            ..exact_policy(3)
+        };
+        let sharded = ShardedIndex::build(&data, dim, Metric::SqEuclidean, &policy, 5).unwrap();
+        assert!(sharded.quantized());
+        assert_eq!(sharded.storage_name(), "pq");
+        assert_eq!(sharded.cold_bytes(), n * dim * 4);
+        // Exhaustive rerank depth: bit-identical to the unsharded flat scan.
+        let flat = crate::index::ExactIndex::build(
+            &data,
+            dim,
+            Metric::SqEuclidean,
+            &crate::index::StorageSpec::flat(),
+            5,
+        )
+        .unwrap();
+        for _ in 0..6 {
+            let q = rng.normal_vec_f32(dim);
+            let a = flat.search(&q, 9).unwrap();
+            let b = sharded.search(&q, 9).unwrap();
+            crate::testing::assert_same_neighbors(&a, &b);
+        }
+        // And the multi-segment payload round-trips bit-identically.
+        let mut buf = Vec::new();
+        sharded.write_to(&mut buf).unwrap();
+        let back = ShardedIndex::read_from(&mut buf.as_slice()).unwrap();
+        let q = rng.normal_vec_f32(dim);
+        crate::testing::assert_same_neighbors(
+            &sharded.search(&q, 8).unwrap(),
+            &back.search(&q, 8).unwrap(),
+        );
     }
 }

@@ -9,10 +9,62 @@
 //!
 //! The payload is 4× smaller than flat f32 plus `2·dim` f32 of codebook —
 //! the serving-copy shrink the index subsystem composes under IVF and HNSW.
+//!
+//! Codebooks are either trained on the encoded slice itself
+//! ([`Sq8Storage::train`], the FAISS/Lucene segment-local convention) or
+//! supplied as pre-trained global bounds ([`Sq8Bounds`] +
+//! [`Sq8Storage::encode_with`]): the sharded builder trains one
+//! [`Sq8Bounds`] over the *whole* collection when
+//! `[serve] sq8_global_codebook` is set, so every segment decodes through
+//! identical codebooks and quantized sharded results are bit-identical to
+//! the unsharded quantized index at exhaustive parameters (machine-checked
+//! in `tests/props.rs`).
 
 use crate::error::{OpdrError, Result};
 use crate::index::io;
 use std::io::{Read, Write};
+
+/// Pre-trained per-dimension quantization bounds, shareable across segments
+/// (the global-codebook option of the sharded builder).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sq8Bounds {
+    /// Per-dimension lower bound.
+    lo: Vec<f32>,
+    /// Per-dimension step ((max − min) / 255; 0 for constant dims).
+    step: Vec<f32>,
+}
+
+impl Sq8Bounds {
+    /// Train bounds from row-major `n × dim` data (min/max per dimension).
+    pub fn train(data: &[f32], dim: usize) -> Result<Sq8Bounds> {
+        if dim == 0 || data.len() % dim != 0 {
+            return Err(OpdrError::shape("sq8 bounds: bad data shape"));
+        }
+        let n = data.len() / dim;
+        if n == 0 {
+            return Err(OpdrError::data("sq8 bounds: empty data"));
+        }
+        if data.iter().any(|x| !x.is_finite()) {
+            return Err(OpdrError::numeric("sq8 bounds: non-finite input"));
+        }
+        let mut lo = vec![f32::INFINITY; dim];
+        let mut hi = vec![f32::NEG_INFINITY; dim];
+        for row in 0..n {
+            for d in 0..dim {
+                let x = data[row * dim + d];
+                lo[d] = lo[d].min(x);
+                hi[d] = hi[d].max(x);
+            }
+        }
+        let step: Vec<f32> = (0..dim).map(|d| (hi[d] - lo[d]) / 255.0).collect();
+        Ok(Sq8Bounds { lo, step })
+    }
+
+    /// Dimensionality these bounds were trained for.
+    pub fn dim(&self) -> usize {
+        self.lo.len()
+    }
+}
 
 /// SQ8-encoded vectors with per-dimension min/step codebooks.
 #[derive(Debug, Clone, PartialEq)]
@@ -28,9 +80,27 @@ pub struct Sq8Storage {
 
 impl Sq8Storage {
     /// Train codebooks on `data` (row-major `n × dim`) and encode every row.
+    /// Exactly [`Sq8Storage::encode_with`] over [`Sq8Bounds::train`]ed
+    /// bounds, so a single-segment "global codebook" build is bit-identical
+    /// to the plain segment-local one.
     pub fn train(data: &[f32], dim: usize) -> Result<Sq8Storage> {
+        let bounds = Sq8Bounds::train(data, dim)?;
+        Sq8Storage::encode_with(&bounds, data, dim)
+    }
+
+    /// Encode `data` against pre-trained `bounds` (values outside the
+    /// trained range clamp to the nearest code). The sharded builder feeds
+    /// every segment the same collection-wide bounds here when the global
+    /// codebook option is on.
+    pub fn encode_with(bounds: &Sq8Bounds, data: &[f32], dim: usize) -> Result<Sq8Storage> {
         if dim == 0 || data.len() % dim != 0 {
             return Err(OpdrError::shape("sq8: bad data shape"));
+        }
+        if bounds.dim() != dim {
+            return Err(OpdrError::shape(format!(
+                "sq8: bounds dim {} != data dim {dim}",
+                bounds.dim()
+            )));
         }
         let n = data.len() / dim;
         if n == 0 {
@@ -39,16 +109,7 @@ impl Sq8Storage {
         if data.iter().any(|x| !x.is_finite()) {
             return Err(OpdrError::numeric("sq8: non-finite input"));
         }
-        let mut lo = vec![f32::INFINITY; dim];
-        let mut hi = vec![f32::NEG_INFINITY; dim];
-        for row in 0..n {
-            for d in 0..dim {
-                let x = data[row * dim + d];
-                lo[d] = lo[d].min(x);
-                hi[d] = hi[d].max(x);
-            }
-        }
-        let step: Vec<f32> = (0..dim).map(|d| (hi[d] - lo[d]) / 255.0).collect();
+        let (lo, step) = (&bounds.lo, &bounds.step);
         let mut codes = Vec::with_capacity(n * dim);
         for row in 0..n {
             for d in 0..dim {
@@ -61,7 +122,7 @@ impl Sq8Storage {
                 codes.push(code);
             }
         }
-        Ok(Sq8Storage { dim, lo, step, codes })
+        Ok(Sq8Storage { dim, lo: lo.clone(), step: step.clone(), codes })
     }
 
     /// Number of encoded vectors.
@@ -217,6 +278,41 @@ mod tests {
         let mut bad = buf.clone();
         bad[16..20].copy_from_slice(&f32::INFINITY.to_le_bytes());
         assert!(Sq8Storage::read_from(&mut bad.as_slice()).is_err());
+    }
+
+    #[test]
+    fn global_bounds_encode_matches_local_train_bitwise() {
+        let mut rng = Rng::new(21);
+        let dim = 6;
+        let data = rng.normal_vec_f32(30 * dim);
+        let local = Sq8Storage::train(&data, dim).unwrap();
+        let bounds = Sq8Bounds::train(&data, dim).unwrap();
+        let global = Sq8Storage::encode_with(&bounds, &data, dim).unwrap();
+        assert_eq!(local, global);
+        // Encoding a slice with whole-collection bounds: decoded values stay
+        // inside the global range even when the slice's own range is tighter.
+        let slice = &data[..10 * dim];
+        let seg = Sq8Storage::encode_with(&bounds, slice, dim).unwrap();
+        assert_eq!(seg.len(), 10);
+        let mut dec = vec![0.0f32; dim];
+        seg.decode_into(3, &mut dec);
+        assert!(dec.iter().all(|x| x.is_finite()));
+        // Out-of-range values (possible when bounds come from other data)
+        // clamp instead of wrapping.
+        let zeros = vec![0.0f32; dim * 2];
+        let tight = Sq8Bounds::train(&zeros, dim).unwrap();
+        let wild: Vec<f32> = (0..dim).map(|i| i as f32 * 100.0).collect();
+        let clamped = Sq8Storage::encode_with(&tight, &wild, dim).unwrap();
+        assert!(clamped.reconstruct(0).iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn bounds_validation() {
+        assert!(Sq8Bounds::train(&[], 3).is_err());
+        assert!(Sq8Bounds::train(&[1.0, f32::NAN], 2).is_err());
+        let b = Sq8Bounds::train(&[1.0, 2.0, 3.0, 4.0], 2).unwrap();
+        assert_eq!(b.dim(), 2);
+        assert!(Sq8Storage::encode_with(&b, &[1.0, 2.0, 3.0], 3).is_err());
     }
 
     #[test]

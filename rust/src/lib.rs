@@ -14,10 +14,15 @@
 //! * the **retrieval substrates** — distance metrics, exact KNN, top-k
 //!   selection, an IVF-Flat ANN index ([`metrics`], [`knn`]);
 //! * the **ANN index subsystem** — a pluggable [`index::AnnIndex`] layer with
-//!   exact, IVF-Flat and deterministic HNSW substrates, optional SQ8 scalar
-//!   quantization of the serving copy, and index persistence through the
-//!   versioned `OPDR` binary format; the coordinator picks a substrate per
-//!   collection via a config-driven [`config::IndexPolicy`] ([`index`]);
+//!   exact, IVF-Flat and deterministic HNSW substrates (HNSW with Malkov
+//!   Algorithm 4 heuristic neighbor selection by default), composable
+//!   vector storage (flat f32, SQ8 scalar quantization at ~4×, and PQ/OPQ
+//!   product quantization at ~16× with ADC lookup-table scans plus an
+//!   order-exact full-precision rerank stage — at exhaustive `rerank_depth`
+//!   the compressed top-k is bit-identical to the exact index), and index
+//!   persistence through the versioned `OPDR` binary format; the
+//!   coordinator picks a substrate per collection via a config-driven
+//!   [`config::IndexPolicy`] ([`index`], [`index::pq`]);
 //! * **segment sharding** — collections split into `S` index segments
 //!   ([`index::shard`]): whole-segment builds fan out across the worker pool
 //!   behind an atomic index swap (serving never blocks on a rebuild),

@@ -57,10 +57,12 @@ fn print_help() {
            figure     --id <1..6|esc50> [--seed S]\n\
            experiment --config configs/<file>.toml\n\
            serve-demo [--n N] [--dim D] [--queries Q] [--use-runtime]\n\
-                      [--index exact|ivf|hnsw] [--sq8] [--hnsw-m M]\n\
+                      [--index exact|ivf|hnsw] [--sq8] [--sq8-global]\n\
+                      [--pq] [--pq-m M] [--pq-ksub K] [--opq]\n\
+                      [--rerank-depth R] [--hnsw-m M] [--no-hnsw-heuristic]\n\
                       [--hnsw-ef-search EF] [--ivf-threshold T]\n\
                       [--shards S] [--shard-min-vectors V]\n\
-                      [--save-index file.opdx]\n\
+                      [--build-workers B] [--save-index file.opdx]\n\
            artifacts  [--dir artifacts]\n\n\
          DATASETS: {}\n",
         DatasetKind::ALL.map(|d| d.name()).join(", ")
@@ -226,12 +228,35 @@ fn cmd_serve_demo(args: &mut Args) -> Result<()> {
     let index_flag = args.get("index").map(str::to_string);
     let index_name = index_flag.clone().unwrap_or_else(|| "ivf".to_string());
     let index_sq8 = args.has("sq8");
+    let sq8_global_codebook = args.has("sq8-global");
+    let index_pq = args.has("pq");
+    let index_pq_m = args.get_usize("pq-m")?;
+    let index_pq_ksub = args.get_usize("pq-ksub")?;
+    let index_pq_opq = args.has("opq");
+    let rerank_depth = args.get_usize("rerank-depth")?;
+    // Dependent flags without --pq would be silently ignored; fail loudly
+    // instead (mirrors the `[serve]` TOML validation).
+    if !index_pq
+        && (index_pq_m.is_some()
+            || index_pq_ksub.is_some()
+            || index_pq_opq
+            || rerank_depth.is_some())
+    {
+        return Err(OpdrError::config(
+            "serve-demo: --pq-m/--pq-ksub/--opq/--rerank-depth require --pq",
+        ));
+    }
+    let index_pq_m = index_pq_m.unwrap_or(0);
+    let index_pq_ksub = index_pq_ksub.unwrap_or(ServeConfig::default().index_pq_ksub);
+    let rerank_depth = rerank_depth.unwrap_or(ServeConfig::default().rerank_depth);
     let hnsw_m = args.get_usize_or("hnsw-m", 16)?;
     let hnsw_ef_search = args.get_usize_or("hnsw-ef-search", 64)?;
+    let hnsw_heuristic = !args.has("no-hnsw-heuristic");
     let ivf_threshold = args.get_usize_or("ivf-threshold", ServeConfig::default().ivf_threshold)?;
     let shards = args.get_usize_or("shards", ServeConfig::default().shards)?;
     let shard_min_vectors =
         args.get_usize_or("shard-min-vectors", ServeConfig::default().shard_min_vectors)?;
+    let build_workers = args.get_usize_or("build-workers", ServeConfig::default().build_workers)?;
     let save_index = args.get("save-index").map(str::to_string);
     args.finish()?;
 
@@ -241,11 +266,19 @@ fn cmd_serve_demo(args: &mut Args) -> Result<()> {
         use_runtime,
         index_kind,
         index_sq8,
+        sq8_global_codebook,
+        index_pq,
+        index_pq_m,
+        index_pq_ksub,
+        index_pq_opq,
+        rerank_depth,
         hnsw_m,
         hnsw_ef_search,
+        hnsw_heuristic,
         ivf_threshold,
         shards,
         shard_min_vectors,
+        build_workers,
         ..Default::default()
     };
     cfg.validate()?;
@@ -257,18 +290,29 @@ fn cmd_serve_demo(args: &mut Args) -> Result<()> {
     // BuildReduced only auto-indexes above the size threshold; when the user
     // asked for an index explicitly, build it regardless so the flags (and
     // --save-index) always take effect.
-    let index_requested = index_flag.is_some() || index_sq8 || shards > 1 || save_index.is_some();
+    let index_requested = index_flag.is_some()
+        || index_sq8
+        || index_pq
+        || shards > 1
+        || save_index.is_some();
     if index_requested {
         coord.build_index("demo")?;
     }
     // Report the *effective* shard count: `shard_min_vectors` caps the
     // partition, so small collections may serve fewer shards than asked.
     let eff_shards = opdr::index::shard::shard_ranges(n, shards, shard_min_vectors).len();
+    let storage = if index_pq {
+        if index_pq_opq { "+pq/opq" } else { "+pq" }
+    } else if index_sq8 {
+        if sq8_global_codebook { "+sq8(global)" } else { "+sq8" }
+    } else {
+        ""
+    };
     println!(
         "ingested {n} vectors (dim {dim}); OPDR planned serving dim = {planned}; \
          index policy = {}{}{}",
         index_kind.name(),
-        if index_sq8 { "+sq8" } else { "" },
+        storage,
         if eff_shards > 1 { format!(" x{eff_shards} shards") } else { String::new() }
     );
 

@@ -66,6 +66,16 @@ impl ThreadPool {
             .expect("worker channel open");
     }
 
+    /// A cheap cloneable `'static` submit handle onto the same workers, for
+    /// helper threads that outlive the borrow of `&ThreadPool` (the index
+    /// build collector uses one to dispatch segment jobs off the scheduler
+    /// thread). Jobs submitted after the pool is dropped are silently
+    /// discarded — the submitting side observes that through its own result
+    /// channel going quiet, not through a panic.
+    pub fn handle(&self) -> PoolHandle {
+        PoolHandle { tx: self.tx.as_ref().expect("pool not shut down").clone() }
+    }
+
     /// Parallel map over chunks of `0..n`: calls `f(range)` on the pool and
     /// collects results in submission order. `f` must be cloneable state-free
     /// work (wrap shared inputs in `Arc`).
@@ -103,11 +113,31 @@ impl ThreadPool {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        // Close the channel; workers exit after draining.
+        // Close the channel; workers exit after draining. (Outstanding
+        // `PoolHandle`s keep the channel open until they drop too.)
         self.tx.take();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+    }
+}
+
+/// Detached submit handle created by [`ThreadPool::handle`].
+#[derive(Clone)]
+pub struct PoolHandle {
+    tx: Sender<Job>,
+}
+
+impl std::fmt::Debug for PoolHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PoolHandle").finish()
+    }
+}
+
+impl PoolHandle {
+    /// Submit a job; silently dropped if every worker has exited.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let _ = self.tx.send(Box::new(f));
     }
 }
 
@@ -160,5 +190,25 @@ mod tests {
     #[test]
     fn size_floor_is_one() {
         assert_eq!(ThreadPool::new(0).size(), 1);
+    }
+
+    #[test]
+    fn handle_submits_from_detached_thread() {
+        let pool = ThreadPool::new(2);
+        let handle = pool.handle();
+        let (tx, rx) = channel();
+        std::thread::spawn(move || {
+            for i in 0..10 {
+                let tx = tx.clone();
+                handle.execute(move || {
+                    let _ = tx.send(i);
+                });
+            }
+        })
+        .join()
+        .unwrap();
+        let mut got: Vec<i32> = rx.iter().take(10).collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..10).collect::<Vec<_>>());
     }
 }

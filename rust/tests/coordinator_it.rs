@@ -291,8 +291,14 @@ fn searches_never_observe_half_built_index_during_swap() {
 
     // Ground truth through the same kernel as the serving index: an
     // unsharded exact scan over the same vectors.
-    let exact =
-        opdr::index::ExactIndex::build(set.data(), dim, Metric::SqEuclidean, false).unwrap();
+    let exact = opdr::index::ExactIndex::build(
+        set.data(),
+        dim,
+        Metric::SqEuclidean,
+        &opdr::index::StorageSpec::flat(),
+        1,
+    )
+    .unwrap();
     let truth: std::sync::Arc<Vec<Vec<(usize, u32)>>> = std::sync::Arc::new(
         (0..n)
             .map(|qi| {
@@ -346,10 +352,9 @@ fn searches_never_observe_half_built_index_during_swap() {
     coord.shutdown();
 }
 
-/// Liveness: `BuildIndex` must not run on the scheduler thread, and while
-/// its segment builds occupy the worker pool the coordinator serves indexed
-/// searches inline (it tracks builds-in-flight and avoids queueing search
-/// work behind multi-second build jobs). So during a long sharded HNSW
+/// Liveness: `BuildIndex` must not run on the scheduler thread, and its
+/// segment builds run on the dedicated build pool, so search work is never
+/// queued behind multi-second build jobs. During a long sharded HNSW
 /// rebuild, searches against the previously installed index complete
 /// *while* the build is in flight, and (same data, same seed) results are
 /// byte-identical before, during and after the swap. Timing-sensitive:

@@ -459,6 +459,206 @@ fn prop_sharded_equals_unsharded_at_exhaustive_params() {
     );
 }
 
+/// Tentpole exactness proof (PR 3) — the PQ two-stage search is *order-
+/// exact at full depth* for every substrate, sharded and unsharded: with
+/// exhaustive substrate parameters (exact scan; IVF at full probe; HNSW at
+/// degree cap ≥ n, beam ≥ 4n) and `rerank_depth ≥ n`, a PQ-compressed
+/// index (± OPQ rotation) returns **bit-identical** neighbors to the flat
+/// [`opdr::index::ExactIndex`] over the same rows — including duplicate
+/// rows (tie-breaking across shard boundaries), NaN queries (both sides
+/// return empty) and k ≥ N. Compression costs zero correctness once the
+/// full-precision rerank has the whole candidate set.
+#[test]
+fn prop_pq_rerank_is_order_exact_at_full_depth() {
+    use opdr::config::IndexPolicy;
+    use opdr::index::{build_index, AnnIndex as _, ExactIndex, IndexKind, StorageSpec};
+    forall(
+        PropConfig { cases: 14, seed: 6161 },
+        |rng| {
+            let m = 6 + rng.below(30);
+            let dim = 2 + rng.below(6);
+            let mut data = gen::vec_f32(rng, m * dim);
+            // Duplicate rows: (distance, index) tie-breaking must survive
+            // both the ADC candidate stage and the rerank merge.
+            for i in 1..m {
+                if rng.below(4) == 0 {
+                    let src = rng.below(i);
+                    data.copy_within(src * dim..(src + 1) * dim, i * dim);
+                }
+            }
+            let s = 1 + rng.below(4); // 1 = unsharded
+            let k = rng.below(m + 4); // 0, < m and ≥ m all exercised
+            let metric = METRICS[rng.below(4)];
+            // Sometimes a NaN query: every variant must return empty.
+            let q = if rng.below(5) == 0 {
+                vec![f32::NAN; dim]
+            } else {
+                gen::vec_f32(rng, dim)
+            };
+            let opq = rng.below(2) == 0;
+            let ksub = 2 + rng.below(15); // spans packed (≤16) space
+            (data, dim, m, s, k, metric, q, opq, ksub)
+        },
+        |(data, dim, m, s, k, metric, q, opq, ksub)| {
+            let n = *m;
+            // Ground truth: flat exact scan (the contract's reference).
+            let flat = ExactIndex::build(data, *dim, *metric, &StorageSpec::flat(), 5)
+                .map_err(|e| e.to_string())?;
+            let want: Vec<(usize, u32)> = flat
+                .search(q, *k)
+                .map_err(|e| e.to_string())?
+                .iter()
+                .map(|nb| (nb.index, nb.distance.to_bits()))
+                .collect();
+            for kind in [IndexKind::Exact, IndexKind::Ivf, IndexKind::Hnsw] {
+                let policy = IndexPolicy {
+                    kind,
+                    exact_threshold: 0,
+                    pq: true,
+                    pq_opq: *opq,
+                    pq_ksub: *ksub,
+                    pq_train_iters: 4,
+                    pq_opq_iters: 2,
+                    rerank_depth: n + 3,
+                    shards: *s,
+                    shard_min_vectors: 1,
+                    ivf_nlist: n,
+                    ivf_nprobe: n,
+                    hnsw_m: n.max(2),
+                    hnsw_ef_search: 4 * n,
+                    ..Default::default()
+                };
+                let idx = build_index(data, *dim, *metric, &policy, 5)
+                    .map_err(|e| format!("{} S={s}: {e}", kind.name()))?;
+                if (*s > 1) != idx.as_sharded().is_some() {
+                    return Err(format!("{} S={s}: unexpected sharding", kind.name()));
+                }
+                if !idx.quantized() || idx.storage_name() != "pq" {
+                    return Err(format!("{} S={s}: not pq-quantized", kind.name()));
+                }
+                let got: Vec<(usize, u32)> = idx
+                    .search(q, *k)
+                    .map_err(|e| format!("{} S={s}: {e}", kind.name()))?
+                    .iter()
+                    .map(|nb| (nb.index, nb.distance.to_bits()))
+                    .collect();
+                if got != want {
+                    return Err(format!(
+                        "{} S={s} opq={opq} ksub={ksub}: pq {got:?} != exact {want:?}",
+                        kind.name()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Satellite (PR 3): with `sq8_global_codebook` one codebook is trained over
+/// the whole collection, so at exhaustive parameters the *quantized* sharded
+/// index is bit-identical to the *quantized* unsharded index for every
+/// substrate (the segment-local default only guarantees exactness of the
+/// merge, not cross-shard codebook equality — the PR 2 ROADMAP note this
+/// closes).
+#[test]
+fn prop_sq8_global_codebook_sharded_equals_unsharded() {
+    use opdr::config::IndexPolicy;
+    use opdr::index::{build_index, AnnIndex as _, IndexKind};
+    forall(
+        PropConfig { cases: 10, seed: 7272 },
+        |rng| {
+            let (data, dim, m) = gen::embedding_block(rng, 8, 36, 2, 8);
+            let s = 2 + rng.below(4);
+            let k = 1 + rng.below(m + 2);
+            let metric = METRICS[rng.below(4)];
+            let q = gen::vec_f32(rng, dim);
+            (data, dim, m, s, k, metric, q)
+        },
+        |(data, dim, m, s, k, metric, q)| {
+            let n = *m;
+            for kind in [IndexKind::Exact, IndexKind::Ivf, IndexKind::Hnsw] {
+                let sharded_policy = IndexPolicy {
+                    kind,
+                    exact_threshold: 0,
+                    sq8: true,
+                    sq8_global_codebook: true,
+                    shards: *s,
+                    shard_min_vectors: 1,
+                    ivf_nlist: n,
+                    ivf_nprobe: n,
+                    hnsw_m: n.max(2),
+                    hnsw_ef_search: 4 * n,
+                    ..Default::default()
+                };
+                let unsharded_policy = IndexPolicy { shards: 1, ..sharded_policy.clone() };
+                let single = build_index(data, *dim, *metric, &unsharded_policy, 5)
+                    .map_err(|e| e.to_string())?;
+                let sharded = build_index(data, *dim, *metric, &sharded_policy, 5)
+                    .map_err(|e| e.to_string())?;
+                if sharded.as_sharded().is_none() {
+                    return Err(format!("{}: expected a sharded index", kind.name()));
+                }
+                if !sharded.quantized() {
+                    return Err(format!("{}: expected sq8 storage", kind.name()));
+                }
+                let a: Vec<(usize, u32)> = single
+                    .search(q, *k)
+                    .map_err(|e| e.to_string())?
+                    .iter()
+                    .map(|nb| (nb.index, nb.distance.to_bits()))
+                    .collect();
+                let b: Vec<(usize, u32)> = sharded
+                    .search(q, *k)
+                    .map_err(|e| e.to_string())?
+                    .iter()
+                    .map(|nb| (nb.index, nb.distance.to_bits()))
+                    .collect();
+                if a != b {
+                    return Err(format!(
+                        "{} S={s}: global-codebook sharded {b:?} != unsharded {a:?}",
+                        kind.name()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Acceptance criterion (PR 3): at the default `m = dim/2`, `ksub = 16`
+/// configuration the PQ hot serving copy is at least 8× smaller than flat
+/// f32 on a realistically sized block, and the two-stage search still finds
+/// the encoded vectors themselves. (The CI bench-smoke step runs this in
+/// release.)
+#[test]
+fn pq_compression_ratio_at_least_8x() {
+    use opdr::config::IndexPolicy;
+    use opdr::index::{build_index, AnnIndex as _, IndexKind};
+    use opdr::util::Rng;
+    let n = 3000;
+    let dim = 32;
+    let data = Rng::new(77).normal_vec_f32(n * dim);
+    let flat_bytes = n * dim * std::mem::size_of::<f32>();
+    let policy = IndexPolicy {
+        kind: IndexKind::Exact,
+        exact_threshold: 0,
+        pq: true,
+        rerank_depth: 128,
+        ..Default::default()
+    };
+    let idx = build_index(&data, dim, opdr::metrics::Metric::SqEuclidean, &policy, 7).unwrap();
+    let ratio = flat_bytes as f64 / idx.memory_bytes() as f64;
+    assert!(ratio >= 8.0, "pq compression {ratio:.2}x < 8x ({} bytes)", idx.memory_bytes());
+    // The cold rerank tier is accounted separately and equals the raw rows.
+    assert_eq!(idx.cold_bytes(), flat_bytes);
+    // Self-hits survive the two-stage search at a practical rerank depth.
+    for qi in [0usize, 999, 2999] {
+        let q = &data[qi * dim..(qi + 1) * dim];
+        let hits = idx.search(q, 1).unwrap();
+        assert_eq!(hits[0].index, qi, "self-hit lost under pq");
+    }
+}
+
 #[test]
 fn prop_store_roundtrip() {
     forall(
