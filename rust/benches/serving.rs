@@ -44,7 +44,7 @@ fn storm(coord: &Coordinator, set: &opdr::data::EmbeddingSet) -> (f64, f64, f64)
         qi = end;
     }
     let secs = sw.elapsed_secs();
-    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    lat.sort_by(f64::total_cmp);
     (
         QUERIES as f64 / secs,
         opdr::util::float::percentile_sorted(&lat, 0.5),
@@ -122,7 +122,7 @@ fn main() {
                 lat.push(t0.elapsed_ns() / 1e6);
             }
             let secs = sw.elapsed_secs();
-            lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            lat.sort_by(f64::total_cmp);
             table.row(&[
                 if use_runtime { "pjrt".into() } else { "cpu".to_string() },
                 format!("{:.0}", 200.0 / secs),

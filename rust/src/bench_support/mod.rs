@@ -26,10 +26,12 @@ impl BenchResult {
         Duration::from_nanos(mean(&self.samples_ns) as u64)
     }
 
-    /// Percentile of iteration time.
+    /// Percentile of iteration time. NaN samples (a zero-duration clock
+    /// glitch fed through a ratio, say) sort last via the IEEE total order
+    /// instead of panicking the whole bench run.
     pub fn percentile(&self, q: f64) -> Duration {
         let mut sorted = self.samples_ns.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         Duration::from_nanos(percentile_sorted(&sorted, q) as u64)
     }
 
@@ -155,6 +157,21 @@ mod tests {
         let b = Bencher { warmup_iters: 0, iters: 1000, max_time: Duration::from_millis(20) };
         let r = b.run("capped", || std::thread::sleep(Duration::from_millis(5)));
         assert!(r.samples_ns.len() < 1000);
+    }
+
+    #[test]
+    fn nan_samples_do_not_panic_percentiles() {
+        // Regression: `partial_cmp(..).unwrap()` here used to panic on any
+        // NaN sample, taking the whole bench run down with it.
+        let r = BenchResult {
+            name: "nan".into(),
+            samples_ns: vec![2e3, f64::NAN, 1e3],
+            items_per_iter: None,
+        };
+        let p50 = r.percentile(0.5);
+        assert!(p50 >= Duration::from_nanos(1), "{p50:?}");
+        let _ = r.percentile(0.99); // NaN tail: no panic either
+        assert!(r.summary().contains("nan"));
     }
 
     #[test]

@@ -414,6 +414,16 @@ pub struct ServeConfig {
     /// Workers in the dedicated index-build pool (segment builds never
     /// compete with search fan-out for pool slots).
     pub build_workers: usize,
+    /// Incremental ingest (default on): appended rows are absorbed into the
+    /// serving index's flat exact delta segment instead of invalidating the
+    /// index, so queries never silently degrade to a brute-force scan
+    /// between an ingest and the next rebuild. Off = the legacy
+    /// invalidate-on-ingest behavior.
+    pub incremental_ingest: bool,
+    /// Compaction threshold: when a collection's delta segment exceeds this
+    /// many rows, a background compaction on the build pool folds it into a
+    /// rebuilt main index behind the generation-guarded swap.
+    pub delta_max_vectors: usize,
 }
 
 impl Default for ServeConfig {
@@ -444,6 +454,8 @@ impl Default for ServeConfig {
             shards: 1,
             shard_min_vectors: 1024,
             build_workers: 2,
+            incremental_ingest: true,
+            delta_max_vectors: 2048,
         }
     }
 }
@@ -524,6 +536,12 @@ impl ServeConfig {
                     "shards" => cfg.shards = pos_int(val, "serve", key)?,
                     "shard_min_vectors" => cfg.shard_min_vectors = pos_int(val, "serve", key)?,
                     "build_workers" => cfg.build_workers = pos_int(val, "serve", key)?,
+                    "incremental_ingest" => {
+                        cfg.incremental_ingest = val.as_bool().ok_or_else(|| {
+                            OpdrError::config("serve.incremental_ingest must be a bool")
+                        })?
+                    }
+                    "delta_max_vectors" => cfg.delta_max_vectors = pos_int(val, "serve", key)?,
                     other => {
                         return Err(OpdrError::config(format!("serve: unknown key `{other}`")))
                     }
@@ -542,6 +560,12 @@ impl ServeConfig {
         if !cfg.index_sq8 && seen.iter().any(|k| k == "sq8_global_codebook") {
             return Err(OpdrError::config(
                 "serve: `sq8_global_codebook` requires index_sq8 = true                  (it would be silently ignored)",
+            ));
+        }
+        if !cfg.incremental_ingest && seen.iter().any(|k| k == "delta_max_vectors") {
+            return Err(OpdrError::config(
+                "serve: `delta_max_vectors` requires incremental_ingest = true \
+                 (it would be silently ignored)",
             ));
         }
         cfg.validate()?;
@@ -564,6 +588,9 @@ impl ServeConfig {
         }
         if self.default_k == 0 {
             return Err(OpdrError::config("serve.default_k must be >= 1"));
+        }
+        if self.delta_max_vectors == 0 {
+            return Err(OpdrError::config("serve.delta_max_vectors must be >= 1"));
         }
         if self.ivf_nprobe > self.ivf_nlist {
             return Err(OpdrError::config("serve.ivf_nprobe must be <= ivf_nlist"));
@@ -755,6 +782,34 @@ k = 5
             .to_string();
         assert!(e.contains("requires index_pq"), "{e}");
         assert!(ServeConfig::from_toml_str("[serve]\nrerank_depth = 500").is_err());
+    }
+
+    #[test]
+    fn serve_incremental_ingest_keys() {
+        // Defaults: incremental ingest on with a sane compaction bound.
+        let d = ServeConfig::from_toml_str("").unwrap();
+        assert!(d.incremental_ingest);
+        assert_eq!(d.delta_max_vectors, 2048);
+        // Overrides parse.
+        let cfg = ServeConfig::from_toml_str(
+            "[serve]\nincremental_ingest = true\ndelta_max_vectors = 64\n",
+        )
+        .unwrap();
+        assert!(cfg.incremental_ingest);
+        assert_eq!(cfg.delta_max_vectors, 64);
+        // Legacy mode still expressible.
+        let legacy = ServeConfig::from_toml_str("[serve]\nincremental_ingest = false\n").unwrap();
+        assert!(!legacy.incremental_ingest);
+        // Dependent key without its toggle is rejected, not silently ignored.
+        let e = ServeConfig::from_toml_str(
+            "[serve]\nincremental_ingest = false\ndelta_max_vectors = 64\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("requires incremental_ingest"), "{e}");
+        // Range / type validation.
+        assert!(ServeConfig::from_toml_str("[serve]\ndelta_max_vectors = 0").is_err());
+        assert!(ServeConfig::from_toml_str("[serve]\nincremental_ingest = 3").is_err());
     }
 
     #[test]

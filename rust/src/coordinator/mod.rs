@@ -14,7 +14,14 @@
 //!   steal pool slots from any collection's searches);
 //! * OPDR is a first-class verb: `BuildReduced` calibrates the planner on the
 //!   collection, picks `dim(Y)` for the requested accuracy and swaps the
-//!   serving copy to the reduced space.
+//!   serving copy to the reduced space;
+//! * ingest is **incremental** by default: appended rows are absorbed into
+//!   the serving index's flat exact delta segment
+//!   ([`crate::index::delta`]) instead of invalidating it, and once the
+//!   delta outgrows `[serve] delta_max_vectors` a background compaction on
+//!   the build pool folds it into a rebuilt main index behind the
+//!   rebase-aware swap ([`state::IndexSlot::install_rebased`]) — an ingest
+//!   racing a compaction lands in the new delta, never lost.
 
 pub mod batcher;
 pub mod server;

@@ -26,12 +26,24 @@ use std::time::Duration;
 #[derive(Debug, Default)]
 pub struct BuildTracker {
     inner: Mutex<HashMap<String, usize>>,
+    /// Completed delta compactions per collection (stats: `compactions=`).
+    compactions: Mutex<HashMap<String, u64>>,
 }
 
 impl BuildTracker {
     /// Record a build starting for `collection`.
     pub fn begin(&self, collection: &str) {
         *self.inner.lock().unwrap().entry(collection.to_string()).or_insert(0) += 1;
+    }
+
+    /// Record a completed (installed) delta compaction for `collection`.
+    pub fn record_compaction(&self, collection: &str) {
+        *self.compactions.lock().unwrap().entry(collection.to_string()).or_insert(0) += 1;
+    }
+
+    /// Delta compactions completed for `collection` since startup.
+    pub fn compactions(&self, collection: &str) -> u64 {
+        self.compactions.lock().unwrap().get(collection).copied().unwrap_or(0)
     }
 
     /// Record a build finishing for `collection` (saturating; entries drop
@@ -146,7 +158,11 @@ impl Coordinator {
         self.admin(AdminOp::CreateCollection { name: name.into(), dim, metric }).map(|_| ())
     }
 
-    /// Ingest row-major vectors.
+    /// Ingest row-major vectors. With `incremental_ingest` (the default)
+    /// the rows are absorbed into the serving index's flat exact delta
+    /// segment — the index keeps serving — and a background compaction is
+    /// scheduled once the delta outgrows `delta_max_vectors`; with it off,
+    /// the legacy path invalidates the index and the reduced copy.
     pub fn ingest(&self, collection: &str, vectors: Vec<f32>) -> Result<usize> {
         let r = self.admin(AdminOp::Ingest { collection: collection.into(), vectors })?;
         r.parse::<usize>()
@@ -329,6 +345,38 @@ fn handle_admin(
             let b = builds_in_flight;
             spawn_build(collections, &collection, "ok".into(), false, cfg, build_pool, b, resp);
         }
+        AdminOp::Ingest { collection, vectors } => {
+            // Incremental mode (the default) absorbs the rows into the
+            // serving index's flat exact delta segment instead of dropping
+            // the index; once the delta outgrows `delta_max_vectors` a
+            // background compaction folds it into a rebuilt main index on
+            // the build pool. The response is the row count either way —
+            // compaction is fire-and-forget behind the rebased atomic swap.
+            let out = collections.get_mut(&collection).and_then(|c| {
+                if cfg.incremental_ingest {
+                    c.ingest_incremental(&vectors)
+                } else {
+                    c.ingest(&vectors)
+                }
+            });
+            match out {
+                Ok(n) => {
+                    if cfg.incremental_ingest {
+                        maybe_spawn_compaction(
+                            collections,
+                            &collection,
+                            cfg,
+                            build_pool,
+                            builds_in_flight,
+                        );
+                    }
+                    let _ = resp.send(Ok(n.to_string()));
+                }
+                Err(e) => {
+                    let _ = resp.send(Err(e));
+                }
+            }
+        }
         AdminOp::BuildReduced { collection, target_accuracy, k } => {
             // The reduction itself (planner calibration + PCA projection)
             // mutates the collection and runs here; the follow-up re-index
@@ -360,8 +408,10 @@ fn handle_admin(
 }
 
 /// Dispatch an index build for `collection` onto the dedicated build pool;
-/// the deferred response maps a successful atomic swap to `ok_msg`. When a
-/// racing ingest invalidates the snapshot mid-build, the stale index is
+/// the deferred response maps a successful atomic swap to `ok_msg`. When
+/// the snapshot is invalidated wholesale mid-build (legacy-mode ingest,
+/// re-reduce, explicit build/load — incremental-mode ingests don't
+/// invalidate, they rebase onto the finished index), the stale index is
 /// discarded; `stale_ok` decides whether that still answers `ok_msg`
 /// (BuildReduced: the reduction itself succeeded and serving falls back to
 /// the exact scan) or reports the discarded build (explicit BuildIndex).
@@ -400,6 +450,41 @@ fn spawn_build(
     }
 }
 
+/// Schedule a background delta compaction for `collection` when its delta
+/// segment has outgrown `cfg.delta_max_vectors` and no build is already in
+/// flight (compactions never stack — a fresh one is scheduled by the next
+/// ingest if the delta is still over the bound). The compaction is the
+/// ordinary pool rebuild over the merged `{main, delta}` snapshot; the swap
+/// goes through the rebase-aware install, so rows ingested while it runs
+/// land in the new index's delta.
+fn maybe_spawn_compaction(
+    collections: &Collections,
+    collection: &str,
+    cfg: &ServeConfig,
+    build_pool: &ThreadPool,
+    builds_in_flight: &Arc<BuildTracker>,
+) {
+    let Ok(c) = collections.get(collection) else { return };
+    if c.delta_len() <= cfg.delta_max_vectors || builds_in_flight.in_flight(collection) > 0 {
+        return;
+    }
+    builds_in_flight.begin(collection);
+    let builds = Arc::clone(builds_in_flight);
+    let name = collection.to_string();
+    c.spawn_index_build(&cfg.index_policy(), 0xC0DE, build_pool, move |r| {
+        builds.finish(&name);
+        match r {
+            Ok(true) => builds.record_compaction(&name),
+            // A wholesale serving-state change (re-reduce, explicit build,
+            // load) invalidated the snapshot; the discarded result is not a
+            // compaction. Nothing is lost — the rows live in the serving
+            // data and whatever replaced the snapshot.
+            Ok(false) => {}
+            Err(e) => eprintln!("[coordinator] compaction of `{name}` failed: {e}"),
+        }
+    });
+}
+
 fn handle_admin_sync(
     op: AdminOp,
     collections: &mut Collections,
@@ -411,12 +496,8 @@ fn handle_admin_sync(
             collections.create(&name, dim, metric)?;
             Ok("ok".into())
         }
-        AdminOp::Ingest { collection, vectors } => {
-            let n = collections.get_mut(&collection)?.ingest(&vectors)?;
-            Ok(n.to_string())
-        }
-        AdminOp::BuildReduced { .. } | AdminOp::BuildIndex { .. } => {
-            unreachable!("index builds are dispatched to the pool by handle_admin")
+        AdminOp::Ingest { .. } | AdminOp::BuildReduced { .. } | AdminOp::BuildIndex { .. } => {
+            unreachable!("ingest and index builds are handled by handle_admin")
         }
         AdminOp::SaveIndex { collection, path } => {
             collections.get(&collection)?.save_index(&path)?;
@@ -432,24 +513,36 @@ fn handle_admin_sync(
                 let c = collections.get(&name)?;
                 let (_, sdim) = c.serving_vectors();
                 let indexed = match c.index() {
-                    Some(ix) => format!(
-                        "true kind={} shards={} quantized={} storage={} index_bytes={} \
-                         cold_bytes={}",
-                        ix.kind().name(),
-                        ix.as_sharded().map_or(1, |s| s.num_shards()),
-                        ix.quantized(),
-                        ix.storage_name(),
-                        ix.memory_bytes(),
-                        ix.cold_bytes()
-                    ),
+                    Some(ix) => {
+                        // A delta wrapper reports its main's shard count and
+                        // the delta backlog awaiting compaction.
+                        let (shards, delta) = match ix.as_delta() {
+                            Some(d) => (
+                                d.main().as_sharded().map_or(1, |s| s.num_shards()),
+                                d.delta_len(),
+                            ),
+                            None => (ix.as_sharded().map_or(1, |s| s.num_shards()), 0),
+                        };
+                        format!(
+                            "true kind={} shards={shards} delta={delta} quantized={} \
+                             storage={} index_bytes={} cold_bytes={}",
+                            ix.kind().name(),
+                            ix.quantized(),
+                            ix.storage_name(),
+                            ix.memory_bytes(),
+                            ix.cold_bytes()
+                        )
+                    }
                     None => "false".to_string(),
                 };
                 out.push_str(&format!(
-                    "collection {name}: n={} dim={} serving_dim={} building={} indexed={indexed}\n",
+                    "collection {name}: n={} dim={} serving_dim={} building={} compactions={} \
+                     indexed={indexed}\n",
                     c.len(),
                     c.dim,
                     sdim,
                     builds.in_flight(&name),
+                    builds.compactions(&name),
                 ));
             }
             out.push_str(&format!(
@@ -588,9 +681,17 @@ fn execute_search_batch(
                 vec![shared
                     .iter()
                     .map(|(q, k)| {
-                        run_one(q, *k, sdim, |q, k| match index.as_sharded() {
-                            Some(sh) if sh.num_shards() > 1 => sh.search_on(pool, q, k),
-                            _ => index.search(q, k),
+                        run_one(q, *k, sdim, |q, k| {
+                            if let Some(d) = index.as_delta() {
+                                // Delta wrapper: fan its (possibly sharded)
+                                // main out on the pool, scan the bounded
+                                // delta inline.
+                                return d.search_on(pool, q, k);
+                            }
+                            match index.as_sharded() {
+                                Some(sh) if sh.num_shards() > 1 => sh.search_on(pool, q, k),
+                                _ => index.search(q, k),
+                            }
                         })
                     })
                     .collect()]
@@ -874,6 +975,15 @@ mod tests {
         assert_eq!(t.total(), 1);
         t.finish("b");
         assert_eq!(t.total(), 0);
+        // Compaction counters are per collection and independent of the
+        // in-flight counts.
+        assert_eq!(t.compactions("a"), 0);
+        t.record_compaction("a");
+        t.record_compaction("a");
+        t.record_compaction("b");
+        assert_eq!(t.compactions("a"), 2);
+        assert_eq!(t.compactions("b"), 1);
+        assert_eq!(t.compactions("never"), 0);
     }
 
     #[test]

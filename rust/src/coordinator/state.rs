@@ -3,7 +3,7 @@
 use crate::config::IndexPolicy;
 use crate::data::EmbeddingSet;
 use crate::error::{OpdrError, Result};
-use crate::index::AnnIndex;
+use crate::index::{AnnIndex, DeltaIndex};
 use crate::knn::Neighbor;
 use crate::metrics::Metric;
 use crate::opdr::Planner;
@@ -16,11 +16,14 @@ use std::sync::{Arc, Mutex};
 ///
 /// Searches [`load`](IndexSlot::load) an `Arc` snapshot under a briefly-held
 /// lock, so serving never blocks on a rebuild; background builds
-/// [`install`](IndexSlot::install) their result with the generation they
-/// snapshotted — if an ingest or re-reduce bumped the generation in the
-/// meantime ([`invalidate`](IndexSlot::invalidate)) the stale index is
-/// dropped instead of installed, so a search can never observe an index
-/// built from vectors the collection no longer serves.
+/// [`install_rebased`](IndexSlot::install_rebased) their result with the
+/// generation they snapshotted — if a wholesale serving-state change bumped
+/// the generation in the meantime ([`invalidate`](IndexSlot::invalidate) /
+/// [`replace`](IndexSlot::replace)) the stale index is dropped instead of
+/// installed, so a search can never observe an index built from vectors the
+/// collection no longer serves, while rows appended incrementally
+/// ([`append_delta`](IndexSlot::append_delta)) are re-parented onto the
+/// installed index's delta instead of being lost.
 #[derive(Debug, Default)]
 pub struct IndexSlot {
     inner: Mutex<(u64, Option<Arc<dyn AnnIndex>>)>,
@@ -44,17 +47,6 @@ impl IndexSlot {
         g.1 = None;
     }
 
-    /// Atomically swap `index` in iff the generation still matches; returns
-    /// whether the install happened.
-    pub fn install(&self, index: Arc<dyn AnnIndex>, generation: u64) -> bool {
-        let mut g = self.inner.lock().unwrap();
-        if g.0 != generation {
-            return false;
-        }
-        g.1 = Some(index);
-        true
-    }
-
     /// Bump the generation and install `index` in one step (the synchronous
     /// build/load paths): any background build still in flight against an
     /// older snapshot is thereby invalidated and its later install refused,
@@ -64,6 +56,84 @@ impl IndexSlot {
         let mut g = self.inner.lock().unwrap();
         g.0 += 1;
         g.1 = Some(index);
+    }
+
+    /// Incremental-ingest path: absorb `rows` (already in the serving space)
+    /// into the serving index's delta segment by installing a new
+    /// [`DeltaIndex`] wrapper that shares the main index `Arc` — the
+    /// generation is *not* bumped, so a background compaction snapshotted
+    /// before this append can still install via
+    /// [`install_rebased`](IndexSlot::install_rebased), which re-parents
+    /// these rows onto the new main. Returns whether the rows were
+    /// absorbed; when no index is
+    /// installed (or the wrapper cannot be built) there is nothing to
+    /// absorb them into, so the generation is bumped instead — exactly like
+    /// [`invalidate`](IndexSlot::invalidate) — ensuring an in-flight build
+    /// covering fewer rows can never install.
+    pub fn append_delta(&self, rows: &[f32]) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        let Some(cur) = g.1.clone() else {
+            g.0 += 1;
+            return false;
+        };
+        let wrapper = if let Some(d) = cur.as_delta() {
+            d.extended(rows)
+        } else {
+            DeltaIndex::from_parts(Arc::clone(&cur), rows.to_vec())
+        };
+        match wrapper {
+            Ok(w) => {
+                g.1 = Some(Arc::new(w));
+                true
+            }
+            Err(_) => {
+                // Shape/metric drift between the installed index and the
+                // serving rows: fall back to invalidation rather than serve
+                // a wrapper that mislabels ids.
+                g.0 += 1;
+                g.1 = None;
+                false
+            }
+        }
+    }
+
+    /// Generation-guarded install that tolerates delta appends: `index` was
+    /// built from a snapshot covering serving rows `0..covered` at
+    /// `generation`. If the generation still matches and no rows appeared
+    /// since, `index` is installed bare; if delta-mode ingests appended rows
+    /// past the snapshot (appends don't bump the generation), those rows are
+    /// re-parented onto `index` as the new delta ([`DeltaIndex::rebase`]) —
+    /// an ingest racing a compaction lands in the *new* delta, is never
+    /// lost, and is never indexed twice. A wholesale change (invalidate /
+    /// replace) bumps the generation and refuses the install as before.
+    /// Successful installs bump the generation so a second in-flight build
+    /// from the same snapshot cannot double-install. Returns whether the
+    /// install happened.
+    pub fn install_rebased(
+        &self,
+        index: Arc<dyn AnnIndex>,
+        covered: usize,
+        generation: u64,
+    ) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if g.0 != generation {
+            return false;
+        }
+        let new_ix: Arc<dyn AnnIndex> = match g.1.as_ref() {
+            Some(cur) if cur.len() != covered => {
+                // Rows raced in since the snapshot; they live in the current
+                // wrapper's delta tail. Anything else is drift — refuse.
+                let Some(d) = cur.as_delta() else { return false };
+                match d.rebase(index, covered) {
+                    Ok(w) => Arc::new(w),
+                    Err(_) => return false,
+                }
+            }
+            _ => index,
+        };
+        g.0 += 1;
+        g.1 = Some(new_ix);
+        true
     }
 }
 
@@ -159,7 +229,11 @@ impl Collection {
     }
 
     /// Append vectors (row-major, multiple of `dim`). Invalidates any reduced
-    /// copy / index (they must be rebuilt).
+    /// copy / index (they must be rebuilt) — the legacy ingest path; the
+    /// coordinator's incremental mode uses
+    /// [`Collection::ingest_incremental`] instead so the serving index is
+    /// never dropped. A zero-length ingest is a no-op: it returns `Ok(0)`
+    /// without invalidating anything.
     pub fn ingest(&mut self, vectors: &[f32]) -> Result<usize> {
         if vectors.len() % self.dim != 0 {
             return Err(OpdrError::shape(format!(
@@ -169,11 +243,65 @@ impl Collection {
                 self.dim
             )));
         }
+        if vectors.is_empty() {
+            return Ok(0);
+        }
         self.data.extend_from_slice(vectors);
         self.reduced = None;
         self.index.invalidate();
         self.invalidate_caches();
         Ok(vectors.len() / self.dim)
+    }
+
+    /// Append vectors without dropping the serving state: new rows are
+    /// projected through the existing reduction model (if one is fitted) and
+    /// absorbed into the serving index's flat exact delta segment
+    /// ([`crate::index::DeltaIndex`]), so searches keep using the index —
+    /// no silent degradation to a brute-force scan between ingest and the
+    /// next rebuild. When no index is installed this degrades to the legacy
+    /// invalidation semantics (minus dropping the reduced copy, which stays
+    /// valid — appended rows are projected through it). A zero-length
+    /// ingest is a no-op returning `Ok(0)`.
+    pub fn ingest_incremental(&mut self, vectors: &[f32]) -> Result<usize> {
+        if vectors.len() % self.dim != 0 {
+            return Err(OpdrError::shape(format!(
+                "ingest into `{}`: {} floats is not a multiple of dim {}",
+                self.name,
+                vectors.len(),
+                self.dim
+            )));
+        }
+        if vectors.is_empty() {
+            return Ok(0);
+        }
+        // Project into the serving space first so a projection error leaves
+        // the collection untouched.
+        let projected = match &self.reduced {
+            Some(r) => Some(r.model.project(vectors)?),
+            None => None,
+        };
+        self.data.extend_from_slice(vectors);
+        match (projected, self.reduced.as_mut()) {
+            (Some(p), Some(r)) => {
+                r.data.extend_from_slice(&p);
+                self.index.append_delta(&p);
+            }
+            _ => {
+                self.index.append_delta(vectors);
+            }
+        }
+        self.invalidate_caches();
+        Ok(vectors.len() / self.dim)
+    }
+
+    /// Rows currently in the serving index's delta segment (0 when the
+    /// index is bare or absent). The coordinator compares this against
+    /// `[serve] delta_max_vectors` to schedule compactions.
+    pub fn delta_len(&self) -> usize {
+        self.index
+            .load()
+            .and_then(|ix| ix.as_delta().map(|d| d.delta_len()))
+            .unwrap_or(0)
     }
 
     fn invalidate_caches(&self) {
@@ -276,11 +404,15 @@ impl Collection {
     /// whole-segment builds out to `pool`
     /// ([`crate::index::shard::build_on_pool`]) and atomically swap the
     /// result in when done — searches keep serving the old index (or the
-    /// exact scan) throughout. `on_done` runs on the collector thread with
+    /// exact scan) throughout. This is also the compaction path: the
+    /// snapshot includes any delta rows, and the swap goes through
+    /// [`IndexSlot::install_rebased`], so rows ingested incrementally
+    /// *while* the build runs are re-parented onto the new index's delta
+    /// instead of being lost. `on_done` runs on the collector thread with
     /// `Ok(true)` when the index was installed, `Ok(false)` when the
-    /// collection changed while building (the stale index is discarded,
-    /// never installed — serving falls back to the exact scan), and `Err`
-    /// when the build itself failed.
+    /// collection changed wholesale while building (the stale index is
+    /// discarded, never installed — serving falls back to the exact scan),
+    /// and `Err` when the build itself failed.
     pub fn spawn_index_build(
         &self,
         policy: &IndexPolicy,
@@ -290,12 +422,15 @@ impl Collection {
     ) {
         let data = self.serving_arc();
         let (_, dim) = self.serving_vectors();
+        let covered = data.len() / dim.max(1);
         let metric = self.metric;
         let slot = Arc::clone(&self.index);
         let generation = slot.generation();
         crate::index::shard::build_on_pool(data, dim, metric, policy, seed, pool, move |res| {
             match res {
-                Ok(index) => on_done(Ok(slot.install(Arc::from(index), generation))),
+                Ok(index) => {
+                    on_done(Ok(slot.install_rebased(Arc::from(index), covered, generation)))
+                }
                 Err(e) => on_done(Err(e)),
             }
         });
@@ -391,9 +526,16 @@ impl Collection {
             return Err(OpdrError::shape("search: projected query dim mismatch"));
         }
         if let Some(index) = self.index() {
-            if let (Some(pool), Some(sharded)) = (pool, index.as_sharded()) {
-                if sharded.num_shards() > 1 {
-                    return sharded.search_on(pool, query, k);
+            if let Some(pool) = pool {
+                if let Some(delta) = index.as_delta() {
+                    // The wrapper fans its (possibly sharded) main out on
+                    // the pool and scans the bounded delta inline.
+                    return delta.search_on(pool, query, k);
+                }
+                if let Some(sharded) = index.as_sharded() {
+                    if sharded.num_shards() > 1 {
+                        return sharded.search_on(pool, query, k);
+                    }
                 }
             }
             index.search(query, k)
@@ -621,23 +763,24 @@ mod tests {
             .unwrap(),
         );
         let gen0 = slot.generation();
-        assert!(slot.install(Arc::clone(&idx), gen0));
+        assert!(slot.install_rebased(Arc::clone(&idx), 8, gen0));
         assert!(slot.load().is_some());
-        // Invalidate (as ingest does), then try to install with the stale
-        // generation: the install must be refused and the slot stay empty.
+        // Invalidate (as a legacy ingest does), then try to install with the
+        // stale generation: the install must be refused and the slot stay
+        // empty.
         slot.invalidate();
         assert!(slot.load().is_none());
-        assert!(!slot.install(Arc::clone(&idx), gen0));
+        assert!(!slot.install_rebased(Arc::clone(&idx), 8, gen0));
         assert!(slot.load().is_none());
         // A fresh generation installs fine.
-        assert!(slot.install(Arc::clone(&idx), slot.generation()));
+        assert!(slot.install_rebased(Arc::clone(&idx), 8, slot.generation()));
         assert!(slot.load().is_some());
         // `replace` (sync build / load paths) bumps the generation, so a
         // background build that snapshotted before it can't stomp the
         // explicitly installed index.
         let pre_replace = slot.generation();
         slot.replace(Arc::clone(&idx));
-        assert!(!slot.install(idx, pre_replace));
+        assert!(!slot.install_rebased(idx, 8, pre_replace));
         assert!(slot.load().is_some());
     }
 
@@ -713,6 +856,283 @@ mod tests {
         let res = rx.recv().unwrap();
         assert!(!res.unwrap(), "stale install must be refused");
         assert!(c.index().is_none(), "stale index must not be installed");
+    }
+
+    #[test]
+    fn zero_length_ingest_is_a_noop() {
+        // Satellite regression: an empty ingest used to invalidate the
+        // index, the reduced copy and both serving caches for a no-op
+        // write. It must return Ok(0) and change nothing — in particular
+        // the index generation, so in-flight builds are not spuriously
+        // refused.
+        let mut c = seeded_collection(60, 16);
+        c.build_reduced(0.8, 5, 40, 1).unwrap();
+        let policy = IndexPolicy { exact_threshold: 0, ..Default::default() };
+        c.build_index(&policy, 1).unwrap();
+        let gen_before = c.index.generation();
+        assert_eq!(c.ingest(&[]).unwrap(), 0);
+        assert_eq!(c.ingest_incremental(&[]).unwrap(), 0);
+        assert_eq!(c.index.generation(), gen_before, "generation must be unchanged");
+        assert!(c.index().is_some(), "index must survive a zero-length ingest");
+        assert!(c.reduced.is_some(), "reduced copy must survive a zero-length ingest");
+        assert_eq!(c.len(), 60);
+        // Ragged input still errors.
+        assert!(c.ingest(&[0.0; 3]).is_err());
+        assert!(c.ingest_incremental(&[0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn ingest_incremental_extends_delta_and_serves_exactly() {
+        let dim = 8;
+        let mut c = seeded_collection(50, dim);
+        let policy = IndexPolicy {
+            kind: crate::index::IndexKind::Exact,
+            exact_threshold: 0,
+            ..Default::default()
+        };
+        c.build_index(&policy, 1).unwrap();
+        assert_eq!(c.delta_len(), 0);
+
+        let extra = synth::generate(DatasetKind::Flickr30k, 15, dim, 99);
+        assert_eq!(c.ingest_incremental(&extra.data()[..10 * dim]).unwrap(), 10);
+        let ix = c.index().expect("index survives incremental ingest");
+        assert_eq!(ix.len(), 60);
+        assert_eq!(c.delta_len(), 10);
+        // A second ingest extends the same wrapper's delta.
+        assert_eq!(c.ingest_incremental(&extra.data()[10 * dim..]).unwrap(), 5);
+        assert_eq!(c.delta_len(), 15);
+        assert_eq!(c.len(), 65);
+
+        // Searches over index+delta are bitwise the flat exact scan over
+        // the concatenated rows.
+        let flat = crate::index::ExactIndex::build(
+            c.data(),
+            dim,
+            Metric::SqEuclidean,
+            &crate::index::StorageSpec::flat(),
+            1,
+        )
+        .unwrap();
+        let pool = ThreadPool::new(2);
+        for qi in [0usize, 49, 55, 64] {
+            let q: Vec<f32> = c.data()[qi * dim..(qi + 1) * dim].to_vec();
+            let want = flat.search(&q, 7).unwrap();
+            assert_eq!(want[0].index, qi, "self-hit");
+            for use_pool in [None, Some(&pool)] {
+                let got = c.search_projected_with(&q, 7, use_pool).unwrap();
+                crate::testing::assert_same_neighbors(&want, &got);
+            }
+        }
+    }
+
+    #[test]
+    fn ingest_incremental_projects_through_reduced_model() {
+        let dim = 32;
+        let mut c = seeded_collection(60, dim);
+        c.build_reduced(0.8, 5, 40, 1).unwrap();
+        let rdim = c.reduced.as_ref().unwrap().model.target_dim();
+        let policy = IndexPolicy {
+            kind: crate::index::IndexKind::Exact,
+            exact_threshold: 0,
+            ..Default::default()
+        };
+        c.build_index(&policy, 1).unwrap();
+
+        let extra = synth::generate(DatasetKind::MaterialsObservable, 8, dim, 321);
+        assert_eq!(c.ingest_incremental(extra.data()).unwrap(), 8);
+        // Reduced copy stays fitted and grows with the projected rows.
+        let r = c.reduced.as_ref().expect("reduced copy survives");
+        assert_eq!(r.data.len(), 68 * rdim);
+        let (vecs, sdim) = c.serving_vectors();
+        assert_eq!(sdim, rdim);
+        assert_eq!(vecs.len() / rdim, 68);
+        assert_eq!(c.delta_len(), 8);
+        // An appended row's own projection finds it first.
+        let q = c.project_query(&extra.data()[..dim]).unwrap();
+        let hits = c.search_projected(&q, 3).unwrap();
+        assert_eq!(hits[0].index, 60);
+    }
+
+    #[test]
+    fn ingest_incremental_without_index_invalidates_generation() {
+        let mut c = seeded_collection(30, 8);
+        assert!(c.index().is_none());
+        let gen_before = c.index.generation();
+        assert_eq!(c.ingest_incremental(&vec![0.0; 8]).unwrap(), 1);
+        assert!(c.index().is_none());
+        assert!(
+            c.index.generation() > gen_before,
+            "no delta to absorb the rows: in-flight builds must be invalidated"
+        );
+    }
+
+    #[test]
+    fn index_slot_append_delta_and_rebased_install() {
+        let dim = 4;
+        let data = crate::util::Rng::new(9).normal_vec_f32(20 * dim);
+        let build = |rows: &[f32]| -> Arc<dyn AnnIndex> {
+            Arc::from(
+                crate::index::build_index(
+                    rows,
+                    dim,
+                    Metric::SqEuclidean,
+                    &IndexPolicy {
+                        kind: crate::index::IndexKind::Exact,
+                        exact_threshold: 0,
+                        ..Default::default()
+                    },
+                    1,
+                )
+                .unwrap(),
+            )
+        };
+        let slot = IndexSlot::default();
+        // Appending with no index installed bumps the generation instead.
+        let g0 = slot.generation();
+        assert!(!slot.append_delta(&data[..dim]));
+        assert!(slot.generation() > g0);
+
+        slot.replace(build(&data[..12 * dim]));
+        let gen = slot.generation();
+        // Delta appends do not bump the generation.
+        assert!(slot.append_delta(&data[12 * dim..16 * dim]));
+        assert_eq!(slot.generation(), gen);
+        let ix = slot.load().unwrap();
+        assert_eq!(ix.as_delta().unwrap().delta_len(), 4);
+
+        // A compaction that snapshotted 14 rows (12 main + 2 delta) installs
+        // with the 2 uncovered rows re-parented as the new delta.
+        assert!(slot.install_rebased(build(&data[..14 * dim]), 14, gen));
+        let ix = slot.load().unwrap();
+        let d = ix.as_delta().unwrap();
+        assert_eq!(d.main_len(), 14);
+        assert_eq!(d.delta_len(), 2);
+        assert_eq!(d.delta_rows(), &data[14 * dim..16 * dim]);
+        // The install bumped the generation: a second build from the same
+        // snapshot is refused.
+        assert!(!slot.install_rebased(build(&data[..14 * dim]), 14, gen));
+        // A compaction covering everything installs bare.
+        let gen2 = slot.generation();
+        assert!(slot.install_rebased(build(&data[..16 * dim]), 16, gen2));
+        assert!(slot.load().unwrap().as_delta().is_none());
+        // Covered count that is not explainable by delta appends is refused
+        // (the tail would not be a delta suffix).
+        let gen3 = slot.generation();
+        assert!(slot.append_delta(&data[16 * dim..20 * dim]));
+        assert!(!slot.install_rebased(build(&data[..15 * dim]), 15, gen3));
+    }
+
+    #[test]
+    fn compaction_rebase_lands_racing_ingest_in_new_delta() {
+        // Acceptance: an ingest racing a compaction must land in the *new*
+        // delta — never lost, never doubly indexed. Forced deterministically
+        // by holding the build pool hostage while the racing ingest lands.
+        let dim = 8;
+        let mut c = seeded_collection(40, dim);
+        let policy = IndexPolicy {
+            kind: crate::index::IndexKind::Exact,
+            exact_threshold: 0,
+            ..Default::default()
+        };
+        c.build_index(&policy, 1).unwrap();
+        let extra = synth::generate(DatasetKind::OmniCorpus, 11, dim, 555);
+        let (a, b) = extra.data().split_at(6 * dim);
+        c.ingest_incremental(a).unwrap();
+        assert_eq!(c.delta_len(), 6);
+
+        let pool = ThreadPool::new(1);
+        let (block_tx, block_rx) = std::sync::mpsc::channel::<()>();
+        pool.execute(move || {
+            let _ = block_rx.recv();
+        });
+        // "Compaction": a background rebuild snapshotting 46 rows.
+        let (tx, rx) = std::sync::mpsc::channel();
+        c.spawn_index_build(&policy, 1, &pool, move |r| {
+            let _ = tx.send(r);
+        });
+        // Racing ingest while the build is queued behind the hostage job.
+        c.ingest_incremental(b).unwrap();
+        assert_eq!(c.delta_len(), 11);
+        block_tx.send(()).unwrap();
+
+        assert!(rx.recv().unwrap().unwrap(), "rebased install must succeed");
+        let ix = c.index().expect("compacted index installed");
+        let d = ix.as_delta().expect("racing rows live in the new delta");
+        assert_eq!(d.main_len(), 46, "compaction covered base + first delta");
+        assert_eq!(d.delta_len(), 5, "exactly the racing rows remain");
+        assert_eq!(ix.len(), 51);
+        assert_eq!(d.delta_rows(), b);
+
+        // No row lost, none doubly indexed: bitwise equal to a fresh flat
+        // exact index over the full serving data, and every row self-hits.
+        let flat = crate::index::ExactIndex::build(
+            c.data(),
+            dim,
+            Metric::SqEuclidean,
+            &crate::index::StorageSpec::flat(),
+            1,
+        )
+        .unwrap();
+        for qi in [0usize, 39, 40, 45, 46, 50] {
+            let q: Vec<f32> = c.data()[qi * dim..(qi + 1) * dim].to_vec();
+            let want = flat.search(&q, 8).unwrap();
+            assert_eq!(want[0].index, qi);
+            let got = c.search_projected(&q, 8).unwrap();
+            crate::testing::assert_same_neighbors(&want, &got);
+        }
+    }
+
+    #[test]
+    fn searches_keep_serving_index_plus_delta_during_inflight_compaction() {
+        // Search during an in-flight compaction: the old wrapper keeps
+        // serving (order-exact) until the swap lands.
+        let dim = 8;
+        let mut c = seeded_collection(40, dim);
+        let policy = IndexPolicy {
+            kind: crate::index::IndexKind::Exact,
+            exact_threshold: 0,
+            ..Default::default()
+        };
+        c.build_index(&policy, 1).unwrap();
+        let extra = synth::generate(DatasetKind::Esc50, 6, dim, 777);
+        c.ingest_incremental(extra.data()).unwrap();
+
+        let pool = ThreadPool::new(1);
+        let (block_tx, block_rx) = std::sync::mpsc::channel::<()>();
+        pool.execute(move || {
+            let _ = block_rx.recv();
+        });
+        let (tx, rx) = std::sync::mpsc::channel();
+        c.spawn_index_build(&policy, 1, &pool, move |r| {
+            let _ = tx.send(r);
+        });
+        // While the compaction is queued, searches serve index + delta.
+        let flat = crate::index::ExactIndex::build(
+            c.data(),
+            dim,
+            Metric::SqEuclidean,
+            &crate::index::StorageSpec::flat(),
+            1,
+        )
+        .unwrap();
+        assert_eq!(c.delta_len(), 6, "delta still serving during the compaction");
+        for qi in [0usize, 41, 45] {
+            let q: Vec<f32> = c.data()[qi * dim..(qi + 1) * dim].to_vec();
+            let want = flat.search(&q, 5).unwrap();
+            let got = c.search_projected(&q, 5).unwrap();
+            crate::testing::assert_same_neighbors(&want, &got);
+        }
+        block_tx.send(()).unwrap();
+        assert!(rx.recv().unwrap().unwrap());
+        // Swap landed: delta folded in, results unchanged.
+        assert_eq!(c.delta_len(), 0);
+        assert!(c.index().unwrap().as_delta().is_none());
+        for qi in [0usize, 41, 45] {
+            let q: Vec<f32> = c.data()[qi * dim..(qi + 1) * dim].to_vec();
+            let want = flat.search(&q, 5).unwrap();
+            let got = c.search_projected(&q, 5).unwrap();
+            crate::testing::assert_same_neighbors(&want, &got);
+        }
     }
 
     #[test]

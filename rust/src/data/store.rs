@@ -17,7 +17,15 @@
 //!   payload is fully consumed and that start rows are contiguous, so
 //!   reordered segment records fail), trailing bytes after the last shard
 //!   are rejected (shard-count mismatch), and version-2 single-segment
-//!   files keep loading unchanged.
+//!   files keep loading unchanged;
+//! * version 4 — delta-augmented index (the record kind added with the
+//!   incremental-ingest subsystem, see [`crate::index::delta`]): magic
+//!   `OPDR` | u32 4 | u8 sharded flag | the main index's version-2-style
+//!   (kind tag + payload) or version-3-style (shard payload) body | a delta
+//!   record (u8 metric tag | u64 n | u64 dim | row-major f32 rows). The
+//!   delta record is validated against the decoded main (matching metric
+//!   and dim, non-empty, fully consumed), and version-2/3 files keep
+//!   loading unchanged.
 //!
 //! Index payloads (version 2 and per shard in version 3) embed their vector
 //! storage as a tagged record: 0 = flat f32, 1 = SQ8 codebooks + codes,
@@ -40,6 +48,7 @@ const MAGIC: &[u8; 4] = b"OPDR";
 const VERSION: u32 = 1;
 const INDEX_VERSION: u32 = 2;
 const SHARDED_INDEX_VERSION: u32 = 3;
+const DELTA_INDEX_VERSION: u32 = 4;
 
 /// Serialize an embedding set to a writer.
 pub fn write_embeddings<W: Write>(set: &EmbeddingSet, w: &mut W) -> Result<()> {
@@ -64,7 +73,8 @@ pub fn read_embeddings<R: Read>(r: &mut R) -> Result<EmbeddingSet> {
         return Err(OpdrError::data("store: bad magic"));
     }
     let version = read_u32(r)?;
-    if version == INDEX_VERSION || version == SHARDED_INDEX_VERSION {
+    if version == INDEX_VERSION || version == SHARDED_INDEX_VERSION || version == DELTA_INDEX_VERSION
+    {
         return Err(OpdrError::data(
             "store: file holds an index segment, not an embedding set (use load_index)",
         ));
@@ -116,10 +126,15 @@ pub fn load(path: impl AsRef<Path>) -> Result<EmbeddingSet> {
     read_embeddings(&mut f)
 }
 
-/// Serialize an ANN index: sharded indexes become version-3 multi-segment
-/// files, everything else the unchanged version-2 single-segment format.
+/// Serialize an ANN index: delta-augmented indexes become version-4 files,
+/// sharded indexes version-3 multi-segment files, everything else the
+/// unchanged version-2 single-segment format.
 pub fn write_index<W: Write>(index: &dyn AnnIndex, w: &mut W) -> Result<()> {
     w.write_all(MAGIC)?;
+    if index.as_delta().is_some() {
+        w.write_all(&DELTA_INDEX_VERSION.to_le_bytes())?;
+        return index.write_to(w);
+    }
     if index.as_sharded().is_some() {
         w.write_all(&SHARDED_INDEX_VERSION.to_le_bytes())?;
         return index.write_to(w);
@@ -129,8 +144,8 @@ pub fn write_index<W: Write>(index: &dyn AnnIndex, w: &mut W) -> Result<()> {
     index.write_to(w)
 }
 
-/// Deserialize an ANN index from an `OPDR` version-2 (single-segment) or
-/// version-3 (sharded) index file.
+/// Deserialize an ANN index from an `OPDR` version-2 (single-segment),
+/// version-3 (sharded) or version-4 (delta-augmented) index file.
 pub fn read_index<R: Read>(r: &mut R) -> Result<Box<dyn AnnIndex>> {
     let mut magic = [0u8; 4];
     r.read_exact(&mut magic)?;
@@ -143,22 +158,31 @@ pub fn read_index<R: Read>(r: &mut R) -> Result<Box<dyn AnnIndex>> {
             "store: file holds an embedding set, not an index segment (use load)",
         ));
     }
-    if version == SHARDED_INDEX_VERSION {
-        let index = crate::index::shard::ShardedIndex::read_from(r)?;
-        // A shard count smaller than the file's real segment count leaves
-        // payload behind; surface it instead of silently dropping shards.
+    // Declared-count/length mismatches leave payload behind; surface
+    // trailing bytes instead of silently dropping rows or shards.
+    let reject_trailing = |r: &mut R, what: &str| -> Result<()> {
         let mut probe = [0u8; 1];
         if r.read(&mut probe)? != 0 {
-            return Err(OpdrError::data(
-                "store: trailing bytes after the last shard (shard count mismatch?)",
-            ));
+            return Err(OpdrError::data(format!(
+                "store: trailing bytes after {what} (count mismatch?)"
+            )));
         }
+        Ok(())
+    };
+    if version == SHARDED_INDEX_VERSION {
+        let index = crate::index::shard::ShardedIndex::read_from(r)?;
+        reject_trailing(r, "the last shard")?;
+        return Ok(Box::new(index));
+    }
+    if version == DELTA_INDEX_VERSION {
+        let index = crate::index::delta::DeltaIndex::read_from(r)?;
+        reject_trailing(r, "the delta record")?;
         return Ok(Box::new(index));
     }
     if version != INDEX_VERSION {
         return Err(OpdrError::data(format!(
             "store: unsupported version {version} (index segments are versions \
-             {INDEX_VERSION} and {SHARDED_INDEX_VERSION})"
+             {INDEX_VERSION}, {SHARDED_INDEX_VERSION} and {DELTA_INDEX_VERSION})"
         )));
     }
     let kind_tag = read_u32(r)?;
@@ -518,6 +542,75 @@ mod tests {
         bad[cb_off..cb_off + 4].copy_from_slice(&f32::NAN.to_le_bytes());
         let e = read_index(&mut bad.as_slice()).unwrap_err().to_string();
         assert!(e.contains("codebook"), "{e}");
+    }
+
+    fn delta_fixture(shards: usize) -> (Vec<u8>, crate::data::EmbeddingSet) {
+        use crate::config::IndexPolicy;
+        use crate::index::DeltaIndex;
+        use std::sync::Arc;
+        let set = synth::generate(DatasetKind::Flickr30k, 60, 8, 29);
+        let policy = IndexPolicy {
+            exact_threshold: 0,
+            shards,
+            shard_min_vectors: 1,
+            ivf_nlist: 8,
+            ivf_nprobe: 8,
+            ..Default::default()
+        };
+        let main = crate::index::build_index(
+            &set.data()[..48 * 8],
+            8,
+            crate::metrics::Metric::SqEuclidean,
+            &policy,
+            6,
+        )
+        .unwrap();
+        let idx =
+            DeltaIndex::from_parts(Arc::from(main), set.data()[48 * 8..].to_vec()).unwrap();
+        let mut buf = Vec::new();
+        write_index(&idx, &mut buf).unwrap();
+        (buf, set)
+    }
+
+    #[test]
+    fn delta_index_roundtrips_as_version_4_bit_identical() {
+        for shards in [1usize, 3] {
+            let (buf, set) = delta_fixture(shards);
+            assert_eq!(u32::from_le_bytes(buf[4..8].try_into().unwrap()), 4);
+            let back = read_index(&mut buf.as_slice()).unwrap();
+            let d = back.as_delta().expect("loads as a delta wrapper");
+            assert_eq!(d.main_len(), 48);
+            assert_eq!(d.delta_len(), 12);
+            assert_eq!(back.len(), set.len());
+            // Delta rows (including rows past the main) survive bit-exactly.
+            assert!(back.matches_data(set.data()));
+            for qi in [0usize, 47, 48, 59] {
+                let hits = back.search(set.vector(qi), 5).unwrap();
+                assert_eq!(hits[0].index, qi, "self-hit lost through the store");
+            }
+        }
+    }
+
+    #[test]
+    fn delta_index_corruption_rejected() {
+        let (buf, _) = delta_fixture(1);
+        // Truncation anywhere fails cleanly.
+        for cut in [buf.len() - 3, buf.len() / 2, 9, 8] {
+            assert!(read_index(&mut &buf[..cut]).is_err(), "cut at {cut} accepted");
+        }
+        // Trailing bytes after the delta record are rejected.
+        let mut more = buf.clone();
+        more.extend_from_slice(&[0xAB; 4]);
+        let e = read_index(&mut more.as_slice()).unwrap_err().to_string();
+        assert!(e.contains("trailing bytes"), "{e}");
+        // Bad main layout flag (byte 8, right after magic + version).
+        let mut bad = buf.clone();
+        bad[8] = 9;
+        let e = read_index(&mut bad.as_slice()).unwrap_err().to_string();
+        assert!(e.contains("layout flag"), "{e}");
+        // A version-4 file is not confusable with an embedding set.
+        let e = read_embeddings(&mut buf.as_slice()).unwrap_err().to_string();
+        assert!(e.contains("index segment"), "{e}");
     }
 
     #[test]

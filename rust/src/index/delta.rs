@@ -1,0 +1,527 @@
+//! Delta segment: incremental ingest without dropping the serving index.
+//!
+//! Before this module existed, any ingest invalidated the collection's ANN
+//! index, silently degrading every query to a brute-force scan until the
+//! next full rebuild — a latency cliff on the serving path. The fix is the
+//! LSM-style pattern used by FAISS/Lucene-family systems: writes are
+//! absorbed into a small, flat, *exact* **delta segment** appended behind
+//! the immutable main index, and a background **compaction** rebuilds the
+//! main index over the merged data once the delta exceeds a configured
+//! bound (`[serve] delta_max_vectors`).
+//!
+//! [`DeltaIndex`] is the fan-out wrapper: an [`AnnIndex`] over
+//! `{main index, delta rows}` where global ids `0..main.len()` live in the
+//! main index and `main.len()..len()` in the delta. A search queries the
+//! main index for its top-k, scans the delta exhaustively with the same
+//! per-row distance kernel the flat [`crate::index::ExactIndex`] uses, and
+//! merges both candidate streams through the bounded heap in
+//! [`crate::knn::topk::merge_top_k`].
+//!
+//! ## Exactness contract (machine-checked in `tests/props.rs`)
+//!
+//! The merge is *order-exact*, not approximately-recall-equal: for any main
+//! index whose own search is exhaustive-exact (exact flat scan; IVF at full
+//! probe; HNSW at `m ≥ n`, `ef ≥ 4n`; PQ at `rerank_depth ≥ n`), the
+//! wrapper's top-k is **bitwise identical** to a freshly built flat exact
+//! index over the concatenated rows — including duplicate rows straddling
+//! the main/delta boundary (the global (distance, index) tie-break), NaN
+//! delta rows and NaN queries (skipped on both sides), and `k ≥ N`. For
+//! quantized mains (SQ8), where quantized distances are defined relative to
+//! the main's codebooks, the merge is still order-exact against the
+//! reference merge of independently searched parts; the delta rows are
+//! always served at full precision.
+//!
+//! The wrapper is immutable like every other index: ingest builds a new
+//! wrapper sharing the main index `Arc` ([`DeltaIndex::extended`]), and a
+//! finished compaction re-parents any rows ingested while it ran onto the
+//! new main ([`DeltaIndex::rebase`]) so a racing ingest lands in the new
+//! delta instead of being lost — the coordinator drives both through
+//! [`crate::coordinator::IndexSlot`].
+//!
+//! Persistence: a delta-augmented index is written as a version-4 `OPDR`
+//! file (main payload + a delta record); see [`crate::data::store`].
+
+use crate::error::{OpdrError, Result};
+use crate::index::{io, AnnIndex, IndexKind};
+use crate::knn::topk::merge_top_k;
+use crate::knn::Neighbor;
+use crate::metrics::Metric;
+use crate::pool::ThreadPool;
+use std::io::{Read, Write};
+use std::sync::Arc;
+
+/// An immutable main index plus a flat, exact, append-only delta segment.
+#[derive(Debug, Clone)]
+pub struct DeltaIndex {
+    main: Arc<dyn AnnIndex>,
+    metric: Metric,
+    dim: usize,
+    /// Row-major delta rows owning global ids `main.len()..len()`.
+    rows: Vec<f32>,
+}
+
+impl DeltaIndex {
+    /// Wrap `main` with a non-empty delta of row-major `rows` (served at
+    /// full precision regardless of the main's storage). Nesting wrappers is
+    /// rejected — a delta extension reuses the existing wrapper's main.
+    pub fn from_parts(main: Arc<dyn AnnIndex>, rows: Vec<f32>) -> Result<DeltaIndex> {
+        if main.as_delta().is_some() {
+            return Err(OpdrError::data("delta index: nesting delta wrappers is not supported"));
+        }
+        let dim = main.dim();
+        if dim == 0 {
+            return Err(OpdrError::shape("delta index: main index has dim 0"));
+        }
+        if rows.is_empty() || rows.len() % dim != 0 {
+            return Err(OpdrError::shape(format!(
+                "delta index: {} delta floats is not a non-zero multiple of dim {dim}",
+                rows.len()
+            )));
+        }
+        Ok(DeltaIndex { metric: main.metric(), dim, main, rows })
+    }
+
+    /// A new wrapper with `more` rows appended to the delta, sharing the
+    /// same main index `Arc` (ingest path: the old wrapper keeps serving
+    /// in-flight searches unchanged).
+    pub fn extended(&self, more: &[f32]) -> Result<DeltaIndex> {
+        if more.is_empty() || more.len() % self.dim != 0 {
+            return Err(OpdrError::shape(format!(
+                "delta extend: {} floats is not a non-zero multiple of dim {}",
+                more.len(),
+                self.dim
+            )));
+        }
+        let mut rows = Vec::with_capacity(self.rows.len() + more.len());
+        rows.extend_from_slice(&self.rows);
+        rows.extend_from_slice(more);
+        Ok(DeltaIndex { main: Arc::clone(&self.main), metric: self.metric, dim: self.dim, rows })
+    }
+
+    /// Re-parent this wrapper onto a freshly compacted `new_main` covering
+    /// global rows `0..covered`: rows the compaction snapshot did not see
+    /// (`covered..len()`, necessarily a suffix of the current delta) become
+    /// the new delta, so an ingest racing the compaction is never lost and
+    /// no row is indexed twice. `covered` must lie inside the current
+    /// delta's id range (a compaction always covers at least its main).
+    pub fn rebase(&self, new_main: Arc<dyn AnnIndex>, covered: usize) -> Result<DeltaIndex> {
+        let base = self.main.len();
+        if covered < base || covered >= self.len() {
+            return Err(OpdrError::data(format!(
+                "delta rebase: covered rows {covered} outside the delta range [{base}, {})",
+                self.len()
+            )));
+        }
+        if new_main.len() != covered || new_main.dim() != self.dim {
+            return Err(OpdrError::data(format!(
+                "delta rebase: new main is {}x{} but must cover {covered}x{}",
+                new_main.len(),
+                new_main.dim(),
+                self.dim
+            )));
+        }
+        if new_main.metric() != self.metric {
+            return Err(OpdrError::data("delta rebase: metric mismatch"));
+        }
+        DeltaIndex::from_parts(new_main, self.rows[(covered - base) * self.dim..].to_vec())
+    }
+
+    /// The wrapped main index.
+    pub fn main(&self) -> &Arc<dyn AnnIndex> {
+        &self.main
+    }
+
+    /// Rows indexed by the main index (the delta's global id base).
+    pub fn main_len(&self) -> usize {
+        self.main.len()
+    }
+
+    /// Rows in the delta segment.
+    pub fn delta_len(&self) -> usize {
+        self.rows.len() / self.dim
+    }
+
+    /// Raw row-major delta rows.
+    pub fn delta_rows(&self) -> &[f32] {
+        &self.rows
+    }
+
+    fn check_query(&self, query: &[f32]) -> Result<()> {
+        if query.len() != self.dim {
+            return Err(OpdrError::shape(format!(
+                "delta search: query dim {} != index dim {}",
+                query.len(),
+                self.dim
+            )));
+        }
+        Ok(())
+    }
+
+    /// Merge the main's hit list with an exhaustive delta scan. The delta
+    /// rows are scored with the same kernel as the flat exact scan
+    /// ([`Metric::distance`] per row), so a wrapper over an exhaustive-exact
+    /// main is bitwise identical to the flat exact index over the
+    /// concatenated rows; NaN distances are skipped by the merge.
+    fn merged(&self, main_hits: Vec<Neighbor>, query: &[f32], k: usize) -> Vec<Neighbor> {
+        let base = self.main.len();
+        let delta = self
+            .rows
+            .chunks_exact(self.dim)
+            .enumerate()
+            .map(|(i, row)| (base + i, self.metric.distance(query, row)));
+        let cands = main_hits.into_iter().map(|nb| (nb.index, nb.distance)).chain(delta);
+        merge_top_k(cands, k)
+            .into_iter()
+            .map(|(index, distance)| Neighbor { index, distance })
+            .collect()
+    }
+
+    /// [`AnnIndex::search`] with a worker pool: a sharded main fans the
+    /// query out across its segments on `pool` (byte-identical to the serial
+    /// path); the delta scan stays on the calling thread — it is bounded by
+    /// the compaction threshold. Must not be called from a pool worker.
+    pub fn search_on(&self, pool: &ThreadPool, query: &[f32], k: usize) -> Result<Vec<Neighbor>> {
+        self.check_query(query)?;
+        let main_hits = match self.main.as_sharded() {
+            Some(sh) if sh.num_shards() > 1 && pool.size() > 1 => sh.search_on(pool, query, k)?,
+            _ => self.main.search(query, k)?,
+        };
+        Ok(self.merged(main_hits, query, k))
+    }
+}
+
+impl AnnIndex for DeltaIndex {
+    fn kind(&self) -> IndexKind {
+        self.main.kind()
+    }
+
+    fn len(&self) -> usize {
+        self.main.len() + self.delta_len()
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn metric(&self) -> Metric {
+        self.metric
+    }
+
+    /// The delta is always full-precision; quantization describes the main.
+    fn quantized(&self) -> bool {
+        self.main.quantized()
+    }
+
+    fn storage_name(&self) -> &'static str {
+        self.main.storage_name()
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.main.memory_bytes() + self.rows.len() * std::mem::size_of::<f32>()
+    }
+
+    fn cold_bytes(&self) -> usize {
+        self.main.cold_bytes()
+    }
+
+    fn search(&self, query: &[f32], k: usize) -> Result<Vec<Neighbor>> {
+        self.check_query(query)?;
+        let main_hits = self.main.search(query, k)?;
+        Ok(self.merged(main_hits, query, k))
+    }
+
+    fn matches_data(&self, data: &[f32]) -> bool {
+        let split = self.main.len() * self.dim;
+        if data.len() != split + self.rows.len() {
+            return false;
+        }
+        self.rows.iter().zip(&data[split..]).all(|(a, b)| a.to_bits() == b.to_bits())
+            && self.main.matches_data(&data[..split])
+    }
+
+    fn as_delta(&self) -> Option<&DeltaIndex> {
+        Some(self)
+    }
+
+    /// Delta-augmented payload: `u8` sharded flag, the main's payload
+    /// (prefixed with its `u32` kind tag when unsharded, exactly as a
+    /// version-2/3 body), then the delta record (`u8` metric tag, `u64` n,
+    /// `u64` dim, row-major f32 rows). The store frames this as an `OPDR`
+    /// version-4 file ([`crate::data::store::write_index`]).
+    fn write_to(&self, w: &mut dyn Write) -> Result<()> {
+        let sharded = self.main.as_sharded().is_some();
+        io::write_u8(w, u8::from(sharded))?;
+        if !sharded {
+            io::write_u32(w, self.main.kind().tag())?;
+        }
+        self.main.write_to(w)?;
+        io::write_u8(w, io::metric_tag(self.metric))?;
+        io::write_u64(w, self.delta_len() as u64)?;
+        io::write_u64(w, self.dim as u64)?;
+        io::write_f32s(w, &self.rows)
+    }
+}
+
+impl DeltaIndex {
+    /// Deserialize (inverse of [`AnnIndex::write_to`]); the delta record is
+    /// validated against the decoded main so a corrupt or mismatched file
+    /// fails loudly instead of serving wrong rows.
+    pub(crate) fn read_from(r: &mut dyn Read) -> Result<DeltaIndex> {
+        let main: Box<dyn AnnIndex> = match io::read_u8(r)? {
+            0 => {
+                let kind_tag = io::read_u32(r)?;
+                crate::index::read_index_payload(kind_tag, r)?
+            }
+            1 => Box::new(crate::index::shard::ShardedIndex::read_from(r)?),
+            other => {
+                return Err(OpdrError::data(format!(
+                    "delta index: unknown main layout flag {other}"
+                )))
+            }
+        };
+        let metric = io::metric_from_tag(io::read_u8(r)?)
+            .map_err(|e| OpdrError::data(format!("delta index: {e}")))?;
+        if metric != main.metric() {
+            return Err(OpdrError::data(format!(
+                "delta index: delta metric {} != main metric {}",
+                metric.name(),
+                main.metric().name()
+            )));
+        }
+        let n = io::read_u64_usize(r)?;
+        if n == 0 {
+            return Err(OpdrError::data(
+                "delta index: empty delta record (an empty delta is stored as a bare index)",
+            ));
+        }
+        let dim = io::read_u64_usize(r)?;
+        if dim != main.dim() {
+            return Err(OpdrError::data(format!(
+                "delta index: delta dim {dim} != main dim {}",
+                main.dim()
+            )));
+        }
+        let count = io::checked_count(n, dim)?;
+        let rows = io::read_f32s(r, count)
+            .map_err(|e| OpdrError::data(format!("delta index: delta rows truncated: {e}")))?;
+        DeltaIndex::from_parts(Arc::from(main), rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::IndexPolicy;
+    use crate::index::{build_index, ExactIndex, StorageSpec};
+    use crate::util::Rng;
+
+    fn exact_arc(data: &[f32], dim: usize, metric: Metric) -> Arc<dyn AnnIndex> {
+        Arc::from(build_index(
+            data,
+            dim,
+            metric,
+            &IndexPolicy { kind: IndexKind::Exact, exact_threshold: 0, ..Default::default() },
+            1,
+        )
+        .unwrap())
+    }
+
+    #[test]
+    fn wrapper_is_bitwise_flat_exact_over_concat() {
+        let mut rng = Rng::new(3);
+        let dim = 5;
+        let (n0, n1) = (24, 9);
+        let data = rng.normal_vec_f32((n0 + n1) * dim);
+        let wrapper =
+            DeltaIndex::from_parts(exact_arc(&data[..n0 * dim], dim, Metric::SqEuclidean),
+                data[n0 * dim..].to_vec())
+            .unwrap();
+        assert_eq!(wrapper.len(), n0 + n1);
+        assert_eq!(wrapper.main_len(), n0);
+        assert_eq!(wrapper.delta_len(), n1);
+        let flat =
+            ExactIndex::build(&data, dim, Metric::SqEuclidean, &StorageSpec::flat(), 1).unwrap();
+        for k in [1usize, 7, n0 + n1, n0 + n1 + 5] {
+            for _ in 0..4 {
+                let q = rng.normal_vec_f32(dim);
+                let a = flat.search(&q, k).unwrap();
+                let b = wrapper.search(&q, k).unwrap();
+                crate::testing::assert_same_neighbors(&a, &b);
+            }
+        }
+    }
+
+    #[test]
+    fn extended_appends_and_shares_the_main() {
+        let mut rng = Rng::new(7);
+        let dim = 4;
+        let data = rng.normal_vec_f32(30 * dim);
+        let main = exact_arc(&data[..20 * dim], dim, Metric::Euclidean);
+        let w1 = DeltaIndex::from_parts(Arc::clone(&main), data[20 * dim..25 * dim].to_vec())
+            .unwrap();
+        let w2 = w1.extended(&data[25 * dim..]).unwrap();
+        assert_eq!(w1.delta_len(), 5);
+        assert_eq!(w2.delta_len(), 10);
+        assert!(Arc::ptr_eq(w1.main(), w2.main()));
+        let flat =
+            ExactIndex::build(&data, dim, Metric::Euclidean, &StorageSpec::flat(), 1).unwrap();
+        let q = rng.normal_vec_f32(dim);
+        crate::testing::assert_same_neighbors(
+            &flat.search(&q, 8).unwrap(),
+            &w2.search(&q, 8).unwrap(),
+        );
+        // Shape errors.
+        assert!(w1.extended(&[]).is_err());
+        assert!(w1.extended(&[0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn rebase_keeps_only_uncovered_rows() {
+        let mut rng = Rng::new(11);
+        let dim = 4;
+        let data = rng.normal_vec_f32(30 * dim);
+        let w = DeltaIndex::from_parts(
+            exact_arc(&data[..20 * dim], dim, Metric::SqEuclidean),
+            data[20 * dim..].to_vec(),
+        )
+        .unwrap();
+        // Compaction covered 26 rows; rows 26..30 raced in.
+        let new_main = exact_arc(&data[..26 * dim], dim, Metric::SqEuclidean);
+        let rebased = w.rebase(new_main, 26).unwrap();
+        assert_eq!(rebased.main_len(), 26);
+        assert_eq!(rebased.delta_len(), 4);
+        assert_eq!(rebased.delta_rows(), &data[26 * dim..]);
+        let flat =
+            ExactIndex::build(&data, dim, Metric::SqEuclidean, &StorageSpec::flat(), 1).unwrap();
+        let q = rng.normal_vec_f32(dim);
+        crate::testing::assert_same_neighbors(
+            &flat.search(&q, 9).unwrap(),
+            &rebased.search(&q, 9).unwrap(),
+        );
+        // covered outside the delta range, wrong shape and wrong metric all
+        // refuse instead of mislabeling rows.
+        let m26 = exact_arc(&data[..26 * dim], dim, Metric::SqEuclidean);
+        assert!(w.rebase(Arc::clone(&m26), 19).is_err()); // < main_len
+        assert!(w.rebase(Arc::clone(&m26), 30).is_err()); // == len
+        assert!(w.rebase(Arc::clone(&m26), 27).is_err()); // len mismatch
+        let wrong_metric = exact_arc(&data[..26 * dim], dim, Metric::Cosine);
+        assert!(w.rebase(wrong_metric, 26).is_err());
+    }
+
+    #[test]
+    fn construction_validates_shapes_and_nesting() {
+        let mut rng = Rng::new(13);
+        let dim = 4;
+        let data = rng.normal_vec_f32(10 * dim);
+        let main = exact_arc(&data, dim, Metric::Euclidean);
+        assert!(DeltaIndex::from_parts(Arc::clone(&main), vec![]).is_err());
+        assert!(DeltaIndex::from_parts(Arc::clone(&main), vec![0.0; 3]).is_err());
+        let w = DeltaIndex::from_parts(main, vec![0.0; dim]).unwrap();
+        let nested: Arc<dyn AnnIndex> = Arc::new(w);
+        let e = DeltaIndex::from_parts(nested, vec![0.0; dim]).unwrap_err().to_string();
+        assert!(e.contains("nesting"), "{e}");
+    }
+
+    #[test]
+    fn nan_delta_rows_and_nan_queries_skipped_like_exact() {
+        let mut rng = Rng::new(17);
+        let dim = 3;
+        let mut data = rng.normal_vec_f32(12 * dim);
+        data[8 * dim] = f32::NAN; // NaN row in the delta region
+        let w = DeltaIndex::from_parts(
+            exact_arc(&data[..6 * dim], dim, Metric::SqEuclidean),
+            data[6 * dim..].to_vec(),
+        )
+        .unwrap();
+        let flat =
+            ExactIndex::build(&data, dim, Metric::SqEuclidean, &StorageSpec::flat(), 1).unwrap();
+        let q = rng.normal_vec_f32(dim);
+        crate::testing::assert_same_neighbors(
+            &flat.search(&q, 12).unwrap(),
+            &w.search(&q, 12).unwrap(),
+        );
+        // NaN query: empty on both sides.
+        assert!(w.search(&[f32::NAN; 3], 4).unwrap().is_empty());
+        // Query dim checked.
+        assert!(w.search(&[0.0; 2], 4).is_err());
+    }
+
+    #[test]
+    fn pool_fanout_over_sharded_main_matches_serial() {
+        let mut rng = Rng::new(19);
+        let dim = 4;
+        let data = rng.normal_vec_f32(40 * dim);
+        let policy = IndexPolicy {
+            kind: IndexKind::Exact,
+            exact_threshold: 0,
+            shards: 3,
+            shard_min_vectors: 1,
+            ..Default::default()
+        };
+        let main: Arc<dyn AnnIndex> =
+            Arc::from(build_index(&data[..30 * dim], dim, Metric::Cosine, &policy, 2).unwrap());
+        assert!(main.as_sharded().is_some());
+        let w = DeltaIndex::from_parts(main, data[30 * dim..].to_vec()).unwrap();
+        let pool = ThreadPool::new(3);
+        for _ in 0..5 {
+            let q = rng.normal_vec_f32(dim);
+            let a = w.search(&q, 7).unwrap();
+            let b = w.search_on(&pool, &q, 7).unwrap();
+            crate::testing::assert_same_neighbors(&a, &b);
+        }
+    }
+
+    #[test]
+    fn payload_roundtrips_bitwise_for_plain_and_sharded_mains() {
+        let mut rng = Rng::new(23);
+        let dim = 6;
+        let data = rng.normal_vec_f32(36 * dim);
+        for shards in [1usize, 3] {
+            let policy = IndexPolicy {
+                kind: IndexKind::Hnsw,
+                exact_threshold: 0,
+                sq8: shards == 1,
+                shards,
+                shard_min_vectors: 1,
+                ..Default::default()
+            };
+            let main: Arc<dyn AnnIndex> = Arc::from(
+                build_index(&data[..30 * dim], dim, Metric::SqEuclidean, &policy, 4).unwrap(),
+            );
+            let w = DeltaIndex::from_parts(main, data[30 * dim..].to_vec()).unwrap();
+            let mut buf = Vec::new();
+            w.write_to(&mut buf).unwrap();
+            let back = DeltaIndex::read_from(&mut buf.as_slice()).unwrap();
+            assert_eq!(back.main_len(), 30);
+            assert_eq!(back.delta_len(), 6);
+            assert_eq!(back.kind(), w.kind());
+            assert_eq!(back.quantized(), w.quantized());
+            let q = rng.normal_vec_f32(dim);
+            crate::testing::assert_same_neighbors(
+                &w.search(&q, 9).unwrap(),
+                &back.search(&q, 9).unwrap(),
+            );
+            // Truncations anywhere fail cleanly.
+            for cut in [buf.len() - 3, buf.len() / 2, 3, 0] {
+                assert!(DeltaIndex::read_from(&mut &buf[..cut]).is_err(), "cut {cut}");
+            }
+        }
+    }
+
+    #[test]
+    fn accounting_covers_main_plus_delta() {
+        let mut rng = Rng::new(29);
+        let dim = 4;
+        let data = rng.normal_vec_f32(20 * dim);
+        let main = exact_arc(&data[..16 * dim], dim, Metric::SqEuclidean);
+        let main_bytes = main.memory_bytes();
+        let w = DeltaIndex::from_parts(main, data[16 * dim..].to_vec()).unwrap();
+        assert_eq!(w.memory_bytes(), main_bytes + 4 * dim * 4);
+        assert_eq!(w.cold_bytes(), 0);
+        assert!(w.matches_data(&data));
+        assert!(!w.matches_data(&data[..19 * dim]));
+        let mut other = data.clone();
+        other[17 * dim] += 1.0; // flip a delta row
+        assert!(!w.matches_data(&other));
+    }
+}

@@ -23,7 +23,12 @@
 //!   [`IndexPolicy::shard_min_vectors`]), segments build in parallel on the
 //!   coordinator's worker pool, and queries fan out per shard and merge
 //!   through the bounded top-k heap with an order-exact (not merely
-//!   recall-equal) guarantee.
+//!   recall-equal) guarantee;
+//! * [`delta`] — incremental ingest over any of the above: writes are
+//!   absorbed into a flat exact delta segment behind the immutable main
+//!   index ([`DeltaIndex`]), searches fan out over `{main, delta}` and
+//!   merge order-exactly, and a background compaction folds the delta back
+//!   into the main index behind the coordinator's generation-guarded swap.
 //!
 //! Substrate × storage composition is expressed by [`StorageSpec`]: every
 //! substrate builds over a [`VectorStore`] that is flat f32, SQ8 or PQ, so
@@ -33,9 +38,12 @@
 //! Indexes serialize through [`AnnIndex::write_to`] into the versioned
 //! `OPDR` binary format (see [`crate::data::store`]): single-segment indexes
 //! as version-2 segments, sharded indexes as version-3 multi-segment files
-//! with validated per-shard headers. All builds are deterministic from the
-//! seed: identical data + policy + seed ⇒ bit-identical indexes.
+//! with validated per-shard headers, and delta-augmented indexes as
+//! version-4 files carrying the main payload plus a delta record. All
+//! builds are deterministic from the seed: identical data + policy + seed ⇒
+//! bit-identical indexes.
 
+pub mod delta;
 pub mod exact;
 pub mod hnsw;
 pub mod ivf;
@@ -43,6 +51,7 @@ pub mod pq;
 pub mod shard;
 pub mod sq8;
 
+pub use delta::DeltaIndex;
 pub use exact::ExactIndex;
 pub use hnsw::{HnswIndex, HnswParams};
 pub use ivf::IvfIndex;
@@ -208,6 +217,14 @@ pub trait AnnIndex: Send + Sync + std::fmt::Debug {
     /// uses it to pick the multi-segment (version-3) format and the
     /// coordinator to fan queries out across shards on the worker pool.
     fn as_sharded(&self) -> Option<&ShardedIndex> {
+        None
+    }
+
+    /// Concrete [`DeltaIndex`] view when this index is a delta-augmented
+    /// wrapper. The store uses it to pick the version-4 format and the
+    /// coordinator to extend / rebase the delta across ingests and
+    /// compactions.
+    fn as_delta(&self) -> Option<&DeltaIndex> {
         None
     }
 }

@@ -29,6 +29,13 @@
 //!   queries fan out per shard and merge through the bounded top-k heap with
 //!   a machine-checked order-exactness guarantee, and sharded indexes
 //!   persist as version-3 multi-segment `OPDR` files;
+//! * **incremental ingest** — appended rows land in a flat exact delta
+//!   segment behind the immutable main index ([`index::delta`]) instead of
+//!   invalidating it, searches merge `{main, delta}` order-exactly, and a
+//!   background compaction folds the delta into a rebuilt main index behind
+//!   a rebase-aware generation-guarded swap (an ingest racing a compaction
+//!   lands in the new delta, never lost); delta-augmented indexes persist
+//!   as version-4 `OPDR` files;
 //! * the **multimodal data substrates** — synthetic generators standing in for
 //!   the paper's seven datasets, plus an embedding store ([`data`]);
 //! * the **runtime** — a PJRT engine that loads AOT-compiled HLO artifacts

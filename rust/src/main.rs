@@ -62,6 +62,7 @@ fn print_help() {
                       [--rerank-depth R] [--hnsw-m M] [--no-hnsw-heuristic]\n\
                       [--hnsw-ef-search EF] [--ivf-threshold T]\n\
                       [--shards S] [--shard-min-vectors V]\n\
+                      [--incremental | --no-incremental] [--delta-max V]\n\
                       [--build-workers B] [--save-index file.opdx]\n\
            artifacts  [--dir artifacts]\n\n\
          DATASETS: {}\n",
@@ -257,6 +258,22 @@ fn cmd_serve_demo(args: &mut Args) -> Result<()> {
     let shard_min_vectors =
         args.get_usize_or("shard-min-vectors", ServeConfig::default().shard_min_vectors)?;
     let build_workers = args.get_usize_or("build-workers", ServeConfig::default().build_workers)?;
+    // Incremental ingest is the default; --no-incremental selects the legacy
+    // invalidate-on-ingest path (and then --delta-max would be silently
+    // ignored, so reject the combination — mirrors the TOML validation).
+    let force_incremental = args.has("incremental");
+    let no_incremental = args.has("no-incremental");
+    let delta_max = args.get_usize("delta-max")?;
+    if force_incremental && no_incremental {
+        return Err(OpdrError::config(
+            "serve-demo: --incremental and --no-incremental are mutually exclusive",
+        ));
+    }
+    if no_incremental && delta_max.is_some() {
+        return Err(OpdrError::config("serve-demo: --delta-max requires incremental ingest"));
+    }
+    let incremental_ingest = !no_incremental;
+    let delta_max_vectors = delta_max.unwrap_or(ServeConfig::default().delta_max_vectors);
     let save_index = args.get("save-index").map(str::to_string);
     args.finish()?;
 
@@ -279,6 +296,8 @@ fn cmd_serve_demo(args: &mut Args) -> Result<()> {
         shards,
         shard_min_vectors,
         build_workers,
+        incremental_ingest,
+        delta_max_vectors,
         ..Default::default()
     };
     cfg.validate()?;
@@ -332,6 +351,19 @@ fn cmd_serve_demo(args: &mut Args) -> Result<()> {
     }
     let secs = sw.elapsed_secs();
     println!("completed {ok}/{queries} queries in {secs:.2}s ({:.0} qps)", ok as f64 / secs);
+    if incremental_ingest && index_requested {
+        // Incremental ingest in action: the appended batch lands in the
+        // serving index's delta segment (visible as `delta=` in the stats
+        // below) instead of invalidating the index.
+        let extra = synth::generate(DatasetKind::Flickr30k, 64, dim, 7);
+        coord.ingest("demo", extra.data().to_vec())?;
+        let hit = coord.search("demo", extra.vector(0).to_vec(), 1)?;
+        println!(
+            "incremental ingest: +64 rows absorbed into the delta; first appended row \
+             self-hits at id {}",
+            hit.neighbors.first().map_or(0, |nb| nb.index)
+        );
+    }
     println!("{}", coord.stats()?);
     if let Some(path) = save_index {
         coord.save_index("demo", &path)?;

@@ -98,12 +98,14 @@ impl AccuracyCurve {
     }
 
     /// Convergence value: mean accuracy over the top decile of ratios.
+    /// NaN ratios (a degenerate sweep cell) sort last via the IEEE total
+    /// order instead of panicking the whole report.
     pub fn plateau_accuracy(&self) -> f64 {
         if self.raw.is_empty() {
             return 0.0;
         }
         let mut sorted = self.raw.clone();
-        sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        sorted.sort_by(|a, b| a.0.total_cmp(&b.0));
         let start = sorted.len() * 9 / 10;
         let tail = &sorted[start..];
         tail.iter().map(|&(_, a)| a).sum::<f64>() / tail.len() as f64
@@ -167,5 +169,19 @@ mod tests {
     #[test]
     fn plateau_of_empty_curve() {
         assert_eq!(AccuracyCurve::new("x", vec![]).plateau_accuracy(), 0.0);
+    }
+
+    #[test]
+    fn plateau_tolerates_nan_ratios() {
+        // Regression: `partial_cmp(..).unwrap()` here used to panic on any
+        // NaN ratio, taking the whole report down with it. NaN ratios sort
+        // last (IEEE total order) and only dilute the top decile.
+        let c = AccuracyCurve::new(
+            "x",
+            vec![(0.1, 0.2), (0.5, 0.5), (f64::NAN, 0.9), (1.0, 0.8)],
+        );
+        let p = c.plateau_accuracy();
+        // The NaN ratio sorts last, so the top decile is exactly that point.
+        assert!((p - 0.9).abs() < 1e-12, "plateau {p}");
     }
 }

@@ -6,8 +6,18 @@
 //! work being measured).
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 use std::time::Duration;
+
+/// Lock a telemetry mutex, recovering from poisoning instead of cascading:
+/// a panicking thread that held the histogram lock must not turn every
+/// subsequent stats call on unrelated threads into a panic. Histogram state
+/// is monotonic counters and buckets — the worst a poisoned update can leave
+/// behind is one partially recorded sample, which is harmless telemetry
+/// noise, never corruption worth crashing the serving path for.
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
 
 /// Monotonic named counter.
 #[derive(Debug, Default)]
@@ -85,7 +95,7 @@ impl LatencyHistogram {
         } else {
             (((ns as f64 / BASE_NS).ln() / GROWTH.ln()) as usize).min(NBUCKETS - 1)
         };
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_recover(&self.inner);
         g.buckets[idx] += 1;
         g.count += 1;
         g.sum_ns += ns as u128;
@@ -95,12 +105,12 @@ impl LatencyHistogram {
 
     /// Number of samples.
     pub fn count(&self) -> u64 {
-        self.inner.lock().unwrap().count
+        lock_recover(&self.inner).count
     }
 
     /// Mean latency.
     pub fn mean(&self) -> Duration {
-        let g = self.inner.lock().unwrap();
+        let g = lock_recover(&self.inner);
         if g.count == 0 {
             return Duration::ZERO;
         }
@@ -109,7 +119,7 @@ impl LatencyHistogram {
 
     /// Approximate quantile (bucket upper bound), `q` in [0,1].
     pub fn quantile(&self, q: f64) -> Duration {
-        let g = self.inner.lock().unwrap();
+        let g = lock_recover(&self.inner);
         if g.count == 0 {
             return Duration::ZERO;
         }
@@ -127,7 +137,7 @@ impl LatencyHistogram {
 
     /// Max recorded sample.
     pub fn max(&self) -> Duration {
-        Duration::from_nanos(self.inner.lock().unwrap().max_ns)
+        Duration::from_nanos(lock_recover(&self.inner).max_ns)
     }
 
     /// Human summary line.
@@ -222,5 +232,28 @@ mod tests {
         h.record(Duration::from_nanos(1));
         h.record(Duration::from_secs(3600));
         assert_eq!(h.count(), 2);
+    }
+
+    #[test]
+    fn poisoned_histogram_lock_recovers_instead_of_cascading() {
+        // Regression: one panicking thread holding the histogram lock used
+        // to poison the registry and cascade panics into every unrelated
+        // stats call afterwards. The recovery path must keep recording.
+        let h = std::sync::Arc::new(LatencyHistogram::new());
+        h.record(Duration::from_micros(3));
+        let h2 = std::sync::Arc::clone(&h);
+        let panicked = std::thread::spawn(move || {
+            let _guard = h2.inner.lock().unwrap();
+            panic!("poison the telemetry lock");
+        })
+        .join();
+        assert!(panicked.is_err(), "the poisoning thread must have panicked");
+        // Every accessor keeps working on the poisoned mutex.
+        h.record(Duration::from_micros(7));
+        assert_eq!(h.count(), 2);
+        assert!(h.mean() > Duration::ZERO);
+        assert!(h.quantile(0.5) > Duration::ZERO);
+        assert!(h.max() >= Duration::from_micros(7));
+        assert!(h.summary().contains("n=2"));
     }
 }

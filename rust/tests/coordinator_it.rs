@@ -507,6 +507,244 @@ fn sharded_index_survives_restart_bit_identical() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// Poll `coord.stats()` until `pred` holds (compactions finish on the build
+/// pool's collector thread, so stats converge asynchronously).
+fn wait_for_stats(coord: &Coordinator, pred: impl Fn(&str) -> bool) -> String {
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+    loop {
+        let s = coord.stats().unwrap();
+        if pred(&s) {
+            return s;
+        }
+        if std::time::Instant::now() > deadline {
+            panic!("stats never converged: {s}");
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+}
+
+/// Ingest-then-search, incremental path: an ingest after `build_index` must
+/// *not* drop the serving index — the rows land in a flat exact delta
+/// segment, searches stay bitwise identical to a flat exact scan over the
+/// concatenated rows, and once the delta outgrows `delta_max_vectors` a
+/// background compaction folds it into a rebuilt main index.
+#[test]
+fn incremental_ingest_keeps_index_serving_and_compacts() {
+    let dim = 12;
+    let k = 6;
+    let cfg = ServeConfig {
+        workers: 2,
+        max_batch: 8,
+        max_wait_ms: 1,
+        use_runtime: false,
+        index_kind: opdr::index::IndexKind::Exact,
+        ivf_threshold: 0,
+        delta_max_vectors: 30,
+        build_workers: 1,
+        ..Default::default()
+    };
+    assert!(cfg.incremental_ingest, "incremental ingest is the default");
+    let coord = Coordinator::start(cfg).unwrap();
+    coord.create_collection("c", dim, Metric::SqEuclidean).unwrap();
+    let set = synth::generate(DatasetKind::OmniCorpus, 140, dim, 41);
+    coord.ingest("c", set.data()[..100 * dim].to_vec()).unwrap();
+    coord.build_index("c").unwrap();
+
+    let flat_over = |rows: usize| {
+        opdr::index::ExactIndex::build(
+            &set.data()[..rows * dim],
+            dim,
+            Metric::SqEuclidean,
+            &opdr::index::StorageSpec::flat(),
+            1,
+        )
+        .unwrap()
+    };
+    let check_bitwise = |rows: usize, qis: &[usize]| {
+        let flat = flat_over(rows);
+        for &qi in qis {
+            let want: Vec<(usize, u32)> = flat
+                .search(set.vector(qi), k)
+                .unwrap()
+                .iter()
+                .map(|nb| (nb.index, nb.distance.to_bits()))
+                .collect();
+            let got: Vec<(usize, u32)> = coord
+                .search("c", set.vector(qi).to_vec(), k)
+                .unwrap()
+                .neighbors
+                .iter()
+                .map(|nb| (nb.index, nb.distance.to_bits()))
+                .collect();
+            assert_eq!(got, want, "query {qi} diverged (n={rows})");
+        }
+    };
+
+    // Below the compaction bound: the rows are served from the delta.
+    coord.ingest("c", set.data()[100 * dim..120 * dim].to_vec()).unwrap();
+    let stats = coord.stats().unwrap();
+    assert!(
+        stats.contains("indexed=true") && stats.contains("delta=20"),
+        "ingest must not drop the index: {stats}"
+    );
+    assert!(stats.contains("kind=exact"), "{stats}");
+    check_bitwise(120, &[0, 50, 100, 119]);
+
+    // Past the bound: a background compaction folds the delta in.
+    coord.ingest("c", set.data()[120 * dim..].to_vec()).unwrap();
+    let stats = wait_for_stats(&coord, |s| {
+        s.contains("compactions=1") && s.contains("delta=0") && s.contains("building=0")
+    });
+    assert!(stats.contains("indexed=true"), "{stats}");
+    check_bitwise(140, &[0, 99, 120, 139]);
+    coord.shutdown();
+}
+
+/// Ingest-then-search, legacy path (`incremental_ingest = false`): the
+/// pre-existing invalidate-on-ingest behavior stays available and correct —
+/// the index is dropped and searches fall back to the brute scan until the
+/// next rebuild.
+#[test]
+fn legacy_ingest_invalidates_index_and_serves_brute_scan() {
+    let dim = 16;
+    let cfg = ServeConfig {
+        workers: 2,
+        max_batch: 8,
+        max_wait_ms: 1,
+        use_runtime: false,
+        index_kind: opdr::index::IndexKind::Exact,
+        ivf_threshold: 0,
+        incremental_ingest: false,
+        ..Default::default()
+    };
+    let coord = Coordinator::start(cfg).unwrap();
+    coord.create_collection("c", dim, Metric::SqEuclidean).unwrap();
+    let set = synth::generate(DatasetKind::MaterialsStable, 90, dim, 57);
+    coord.ingest("c", set.data()[..80 * dim].to_vec()).unwrap();
+    coord.build_index("c").unwrap();
+    assert!(coord.stats().unwrap().contains("indexed=true"));
+
+    coord.ingest("c", set.data()[80 * dim..].to_vec()).unwrap();
+    let stats = coord.stats().unwrap();
+    assert!(stats.contains("indexed=false"), "legacy ingest must invalidate: {stats}");
+    // Brute scan over all 90 rows: old and new rows both found (id-equal;
+    // the matmul-form brute kernel rounds differently than the index scan,
+    // so bitwise assertions don't apply here).
+    for qi in [0usize, 79, 80, 89] {
+        let res = coord.search("c", set.vector(qi).to_vec(), 3).unwrap();
+        assert_eq!(res.neighbors[0].index, qi, "row {qi} lost after legacy ingest");
+    }
+    coord.shutdown();
+}
+
+/// Compaction race, end to end under load: searcher threads hammer self-hit
+/// queries while the main thread streams ingest batches that repeatedly
+/// push the delta over the compaction bound. Every acked row must stay
+/// findable through every {index, delta} state and across every compaction
+/// swap (no row lost, none doubly indexed), and the final state must be
+/// bitwise identical to a flat exact scan over everything ingested.
+#[test]
+fn incremental_ingest_under_search_load_never_loses_rows() {
+    let dim = 16;
+    let total = 224;
+    let base = 64;
+    let cfg = ServeConfig {
+        workers: 3,
+        max_batch: 16,
+        max_wait_ms: 1,
+        queue_capacity: 4096,
+        use_runtime: false,
+        index_kind: opdr::index::IndexKind::Exact,
+        ivf_threshold: 0,
+        delta_max_vectors: 16,
+        build_workers: 2,
+        ..Default::default()
+    };
+    let coord = std::sync::Arc::new(Coordinator::start(cfg).unwrap());
+    coord.create_collection("c", dim, Metric::SqEuclidean).unwrap();
+    let set = synth::generate(DatasetKind::Flickr30k, total, dim, 31);
+    coord.ingest("c", set.data()[..base * dim].to_vec()).unwrap();
+    coord.build_index("c").unwrap();
+
+    let high_water = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(base));
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let mut searchers = Vec::new();
+    for t in 0..2usize {
+        let coord = std::sync::Arc::clone(&coord);
+        let set = set.clone();
+        let high_water = std::sync::Arc::clone(&high_water);
+        let stop = std::sync::Arc::clone(&stop);
+        searchers.push(std::thread::spawn(move || {
+            let mut done = 0usize;
+            let mut i = 0usize;
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) || done == 0 {
+                let hw = high_water.load(std::sync::atomic::Ordering::Acquire);
+                let qi = (t * 131 + i * 7) % hw;
+                i += 1;
+                let res = coord
+                    .search("c", set.vector(qi).to_vec(), 4)
+                    .expect("search errored during incremental ingest");
+                assert_eq!(
+                    res.neighbors[0].index, qi,
+                    "acked row {qi} not served (hw={hw})"
+                );
+                done += 1;
+            }
+            done
+        }));
+    }
+
+    // Stream the remaining rows in batches of 8; every batch is acked
+    // before the high-water mark advances, so searchers only query rows the
+    // coordinator has confirmed.
+    let mut at = base;
+    while at < total {
+        let end = (at + 8).min(total);
+        coord.ingest("c", set.data()[at * dim..end * dim].to_vec()).unwrap();
+        high_water.store(end, std::sync::atomic::Ordering::Release);
+        at = end;
+    }
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let completed: usize = searchers.into_iter().map(|h| h.join().unwrap()).sum();
+    assert!(completed >= 2, "searchers made no progress");
+
+    // Quiesce: all compactions finished, at least one landed, and the final
+    // state serves every row bitwise-exactly.
+    let stats = wait_for_stats(&coord, |s| s.contains("building=0"));
+    let compactions: u64 = stats
+        .split("compactions=")
+        .nth(1)
+        .and_then(|rest| rest.split_whitespace().next())
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    assert!(compactions >= 1, "no compaction ever landed: {stats}");
+    let flat = opdr::index::ExactIndex::build(
+        set.data(),
+        dim,
+        Metric::SqEuclidean,
+        &opdr::index::StorageSpec::flat(),
+        1,
+    )
+    .unwrap();
+    for qi in (0..total).step_by(13).chain([base - 1, base, total - 1]) {
+        let want: Vec<(usize, u32)> = flat
+            .search(set.vector(qi), 5)
+            .unwrap()
+            .iter()
+            .map(|nb| (nb.index, nb.distance.to_bits()))
+            .collect();
+        let got: Vec<(usize, u32)> = coord
+            .search("c", set.vector(qi).to_vec(), 5)
+            .unwrap()
+            .neighbors
+            .iter()
+            .map(|nb| (nb.index, nb.distance.to_bits()))
+            .collect();
+        assert_eq!(got, want, "row {qi} diverged in the final state");
+    }
+    coord.shutdown();
+}
+
 #[test]
 fn ivf_index_served_collection() {
     let cfg = ServeConfig {

@@ -659,6 +659,149 @@ fn pq_compression_ratio_at_least_8x() {
     }
 }
 
+/// Tentpole exactness proof (PR 4) — incremental ingest is *order-exact*:
+/// a [`opdr::index::DeltaIndex`] wrapping a main index built over the first
+/// `n0` rows plus a flat delta holding the remaining rows (appended in one
+/// or several ingest batches) searches **bitwise identically** to a freshly
+/// built flat [`opdr::index::ExactIndex`] over the concatenated rows, for
+/// every substrate at exhaustive parameters (exact scan; IVF at full probe;
+/// HNSW at degree cap ≥ n, beam ≥ 4n) × storage (flat; PQ at full rerank
+/// depth) × sharded/unsharded main — including duplicate rows straddling
+/// the main/delta boundary (global (distance, index) tie-breaking), NaN
+/// delta rows and NaN queries (skipped on both sides), and k ≥ N. SQ8
+/// storage defines its distances relative to the main's codebooks, so
+/// there the wrapper is checked against the order-exact reference merge of
+/// the independently searched parts (the same contract the shard merge
+/// honors) — as is every other combination, on top of the bitwise check.
+#[test]
+fn prop_delta_search_is_order_exact_for_every_substrate_and_storage() {
+    use opdr::config::IndexPolicy;
+    use opdr::index::{build_index, AnnIndex as _, DeltaIndex, ExactIndex, IndexKind, StorageSpec};
+    use std::sync::Arc;
+    forall(
+        PropConfig { cases: 10, seed: 9393 },
+        |rng| {
+            let m = 6 + rng.below(30);
+            let dim = 2 + rng.below(6);
+            let mut data = gen::vec_f32(rng, m * dim);
+            // Duplicate rows so (distance, index) tie-breaking is load-
+            // bearing across the main/delta boundary.
+            for i in 1..m {
+                if rng.below(4) == 0 {
+                    let src = rng.below(i);
+                    data.copy_within(src * dim..(src + 1) * dim, i * dim);
+                }
+            }
+            let n0 = 2 + rng.below(m - 3); // main prefix; delta keeps >= 2 rows
+            // Sometimes poison a *delta* row with NaN (the delta is never
+            // quantized and never fed to an ANN build, so every substrate
+            // and storage must tolerate it; main rows stay finite).
+            if rng.below(3) == 0 {
+                let rix = n0 + rng.below(m - n0);
+                data[rix * dim] = f32::NAN;
+            }
+            let batches = 1 + rng.below(3); // ingest the delta in 1..=3 batches
+            let s = 1 + rng.below(3); // 1 = unsharded main
+            let k = rng.below(m + 4); // 0, < m and >= m all exercised
+            let metric = METRICS[rng.below(4)];
+            let q = if rng.below(6) == 0 { vec![f32::NAN; dim] } else { gen::vec_f32(rng, dim) };
+            (data, dim, m, n0, batches, s, k, metric, q)
+        },
+        |(data, dim, m, n0, batches, s, k, metric, q)| {
+            let (n, n0) = (*m, *n0);
+            // Ground truth: flat exact scan over the concatenated rows.
+            let flat = ExactIndex::build(data, *dim, *metric, &StorageSpec::flat(), 5)
+                .map_err(|e| e.to_string())?;
+            let want: Vec<(usize, u32)> = flat
+                .search(q, *k)
+                .map_err(|e| e.to_string())?
+                .iter()
+                .map(|nb| (nb.index, nb.distance.to_bits()))
+                .collect();
+            for kind in [IndexKind::Exact, IndexKind::Ivf, IndexKind::Hnsw] {
+                for storage in ["f32", "sq8", "pq"] {
+                    let policy = IndexPolicy {
+                        kind,
+                        exact_threshold: 0,
+                        sq8: storage == "sq8",
+                        pq: storage == "pq",
+                        pq_train_iters: 4,
+                        pq_opq_iters: 2,
+                        rerank_depth: n0 + 3,
+                        shards: *s,
+                        shard_min_vectors: 1,
+                        ivf_nlist: n0,
+                        ivf_nprobe: n0,
+                        hnsw_m: n0.max(2),
+                        hnsw_ef_search: 4 * n0,
+                        ..Default::default()
+                    };
+                    let tag = format!("{}+{storage} S={s} n0={n0}/{n}", kind.name());
+                    let main: Arc<dyn opdr::index::AnnIndex> = Arc::from(
+                        build_index(&data[..n0 * dim], *dim, *metric, &policy, 5)
+                            .map_err(|e| format!("{tag}: {e}"))?,
+                    );
+                    // Assemble the wrapper the way ingest does: an initial
+                    // wrap plus zero or more extensions, in `batches` steps.
+                    let delta_rows = &data[n0 * dim..];
+                    let delta_n = n - n0;
+                    let per = delta_n.div_ceil(*batches);
+                    let mut wrapper = DeltaIndex::from_parts(
+                        Arc::clone(&main),
+                        delta_rows[..per.min(delta_n) * dim].to_vec(),
+                    )
+                    .map_err(|e| format!("{tag}: {e}"))?;
+                    let mut at = per.min(delta_n);
+                    while at < delta_n {
+                        let end = (at + per).min(delta_n);
+                        wrapper = wrapper
+                            .extended(&delta_rows[at * dim..end * dim])
+                            .map_err(|e| format!("{tag}: {e}"))?;
+                        at = end;
+                    }
+                    if wrapper.len() != n || wrapper.delta_len() != delta_n {
+                        return Err(format!("{tag}: wrapper assembled {} rows", wrapper.len()));
+                    }
+                    let got: Vec<(usize, u32)> = wrapper
+                        .search(q, *k)
+                        .map_err(|e| format!("{tag}: {e}"))?
+                        .iter()
+                        .map(|nb| (nb.index, nb.distance.to_bits()))
+                        .collect();
+                    // Reference merge: the main searched independently plus
+                    // a flat exact scan of the delta rows, merged under the
+                    // global (distance, index) total order.
+                    let delta_exact =
+                        ExactIndex::build(delta_rows, *dim, *metric, &StorageSpec::flat(), 5)
+                            .map_err(|e| format!("{tag}: {e}"))?;
+                    let mut reference: Vec<(usize, u32, f32)> = Vec::new();
+                    for nb in main.search(q, *k).map_err(|e| format!("{tag}: {e}"))? {
+                        reference.push((nb.index, nb.distance.to_bits(), nb.distance));
+                    }
+                    for nb in delta_exact.search(q, *k).map_err(|e| format!("{tag}: {e}"))? {
+                        reference.push((nb.index + n0, nb.distance.to_bits(), nb.distance));
+                    }
+                    reference.sort_by(|a, b| a.2.partial_cmp(&b.2).unwrap().then(a.0.cmp(&b.0)));
+                    reference.truncate(*k);
+                    let reference: Vec<(usize, u32)> =
+                        reference.into_iter().map(|(i, bits, _)| (i, bits)).collect();
+                    if got != reference {
+                        return Err(format!(
+                            "{tag}: wrapper {got:?} != reference merge {reference:?}"
+                        ));
+                    }
+                    // Exactness-preserving storages: bitwise equal to the
+                    // flat exact index over the concatenated rows.
+                    if storage != "sq8" && got != want {
+                        return Err(format!("{tag}: wrapper {got:?} != flat exact {want:?}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn prop_store_roundtrip() {
     forall(
