@@ -398,6 +398,107 @@ fn main() {
     );
 
     // ---------------------------------------------------------------
+    // Mmap cold-tier axis: the PQ rerank tier served from RAM vs from an
+    // mmap'd on-disk vector file (ColdTier::Mmap) — resident vs mapped
+    // bytes and QPS across rerank depths. Results land in
+    // BENCH_mmap.json; the mapped tier must hold >= 0.5x the RAM-tier QPS
+    // at the default rerank depth.
+    // ---------------------------------------------------------------
+    use opdr::index::ColdTier;
+    let cold_dir = std::path::PathBuf::from("bench_out/cold_tier_bench");
+    std::fs::create_dir_all("bench_out").expect("bench_out dir");
+    section(&format!(
+        "mmap cold-tier axis over {N} vectors at dim {dim}: pq rerank from ram vs mmap"
+    ));
+    let default_depth = IndexPolicy::default().rerank_depth;
+    let mut mm_table = Table::new(&[
+        "tier",
+        "rerank depth",
+        "recall@10",
+        "qps",
+        "resident KiB",
+        "mapped KiB",
+    ]);
+    let mut mm_json: Vec<String> = Vec::new();
+    let mut gate: (f64, f64) = (0.0, 0.0); // (ram qps, mmap qps) at the default depth
+    for depth in [2 * K, default_depth] {
+        for mmap in [false, true] {
+            let policy = IndexPolicy {
+                kind: IndexKind::Exact,
+                exact_threshold: 0,
+                pq: true,
+                rerank_depth: depth,
+                cold_tier: if mmap {
+                    ColdTier::Mmap(cold_dir.clone())
+                } else {
+                    ColdTier::Ram
+                },
+                ..Default::default()
+            };
+            let tier = if mmap { "mmap" } else { "ram" };
+            let idx = build_index(&base, dim, METRIC, &policy, 9).expect("build cold variant");
+            let recall = recall_at_k(idx.as_ref(), &queries, dim, &truth);
+            let r = bencher.run_items(&format!("pq {tier} d={depth}"), NQ as u64, || {
+                for qi in 0..NQ {
+                    let q = &queries[qi * dim..(qi + 1) * dim];
+                    let out = idx.search(q, K).unwrap();
+                    std::hint::black_box(out.len());
+                }
+            });
+            let qps = r.throughput().unwrap_or(0.0);
+            // Resident = hot copy + whatever part of the tier is not
+            // mapped; mapped = bytes served zero-copy from the cold file.
+            let mapped = idx.mapped_bytes();
+            let resident = idx.memory_bytes() + idx.cold_bytes() - mapped;
+            if depth == default_depth {
+                if mmap {
+                    gate.1 = qps;
+                } else {
+                    gate.0 = qps;
+                }
+            }
+            mm_table.row(&[
+                tier.to_string(),
+                depth.to_string(),
+                format!("{recall:.3}"),
+                format!("{qps:.0}"),
+                format!("{:.0}", resident as f64 / 1024.0),
+                format!("{:.0}", mapped as f64 / 1024.0),
+            ]);
+            mm_json.push(format!(
+                "{{\"tier\":\"{tier}\",\"rerank_depth\":{depth},\"recall_at_10\":{recall:.4},\
+                 \"qps\":{qps:.1},\"resident_bytes\":{resident},\"mapped_bytes\":{mapped}}}"
+            ));
+        }
+    }
+    println!("{}", mm_table.render());
+    // Acceptance bar: the mapped tier serves at >= 0.5x the RAM tier at the
+    // default rerank depth (pages are cache-hot in steady state). On hosts
+    // where mmap is unavailable the tier falls back to heap and trivially
+    // passes.
+    assert!(
+        gate.1 >= 0.5 * gate.0,
+        "mmap tier {:.0} qps < 0.5x ram tier {:.0} qps at depth {default_depth}",
+        gate.1,
+        gate.0
+    );
+    let json = format!(
+        "{{\"bench\":\"index_mmap\",\"n\":{N},\"dim\":{dim},\"k\":{K},\"rows\":[\n  {}\n]}}\n",
+        mm_json.join(",\n  ")
+    );
+    std::fs::write("bench_out/BENCH_mmap.json", json).expect("write BENCH_mmap.json");
+    println!("wrote bench_out/BENCH_mmap.json");
+    std::fs::remove_dir_all(&cold_dir).ok();
+
+    println!(
+        "\nreading: the rerank tier leaves RAM (resident drops by the cold\n\
+         bytes, mapped rises by the same) while QPS stays within a small\n\
+         factor of the RAM tier — the rows are page-cache-hot in steady\n\
+         state, which is exactly the DiskANN/Lucene serving pattern that\n\
+         lets collections larger than memory serve from one box."
+    );
+
+    // ---------------------------------------------------------------
     // Incremental-ingest axis: availability right after an ingest
     // (legacy invalidate → brute scan vs delta segment → index + exact
     // delta merge) and QPS while a background compaction rebuilds the

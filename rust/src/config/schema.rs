@@ -3,7 +3,7 @@
 use crate::config::toml::{parse_toml, TomlValue};
 use crate::data::DatasetKind;
 use crate::error::{OpdrError, Result};
-use crate::index::{IndexKind, PqParams, Sq8Bounds, StorageSpec};
+use crate::index::{ColdTier, IndexKind, PqParams, Quantizer, Sq8Bounds, StorageSpec};
 use crate::metrics::Metric;
 use crate::reduction::ReducerKind;
 use std::sync::Arc;
@@ -261,6 +261,11 @@ pub struct IndexPolicy {
     /// Never create a shard with fewer rows than this (small collections
     /// degrade to fewer shards — sharding only pays off at scale).
     pub shard_min_vectors: usize,
+    /// Where full-precision rows (flat payloads, PQ rerank tiers) live:
+    /// RAM, or spilled to mmap'd cold files so collections larger than RAM
+    /// can serve (see [`crate::data::mapped`]). Results are bit-identical
+    /// either way.
+    pub cold_tier: ColdTier,
 }
 
 impl Default for IndexPolicy {
@@ -287,6 +292,7 @@ impl Default for IndexPolicy {
             hnsw_heuristic: true,
             shards: 1,
             shard_min_vectors: 1024,
+            cold_tier: ColdTier::Ram,
         }
     }
 }
@@ -336,14 +342,21 @@ impl IndexPolicy {
         if self.hnsw_ef_construction == 0 || self.hnsw_ef_search == 0 {
             return Err(OpdrError::config("index: hnsw beam widths must be >= 1"));
         }
+        if self.sq8 && matches!(self.cold_tier, ColdTier::Mmap(_)) {
+            return Err(OpdrError::config(
+                "index: cold_tier = mmap has no effect under sq8 storage \
+                 (no full-precision tier to map) — it would be silently ignored",
+            ));
+        }
         Ok(())
     }
 
     /// The [`StorageSpec`] the substrates build their vector copy from
-    /// (flat / SQ8 ± global bounds / PQ).
+    /// (flat / SQ8 ± global bounds / PQ, each over the configured cold
+    /// tier).
     pub fn storage_spec(&self) -> StorageSpec {
-        if self.pq {
-            StorageSpec::Pq(PqParams {
+        let quant = if self.pq {
+            Quantizer::Pq(PqParams {
                 m: self.pq_m,
                 ksub: self.pq_ksub,
                 opq: self.pq_opq,
@@ -352,10 +365,11 @@ impl IndexPolicy {
                 rerank_depth: self.rerank_depth,
             })
         } else if self.sq8 {
-            StorageSpec::Sq8 { bounds: self.sq8_bounds.clone() }
+            Quantizer::Sq8 { bounds: self.sq8_bounds.clone() }
         } else {
-            StorageSpec::Flat
-        }
+            Quantizer::Flat
+        };
+        StorageSpec { quant, cold_tier: self.cold_tier.clone() }
     }
 }
 
@@ -424,6 +438,13 @@ pub struct ServeConfig {
     /// many rows, a background compaction on the build pool folds it into a
     /// rebuilt main index behind the generation-guarded swap.
     pub delta_max_vectors: usize,
+    /// Serve full-precision rows (flat payloads, PQ rerank tiers) from
+    /// mmap'd on-disk cold files instead of RAM (`cold_tier = "mmap"`), so
+    /// collections larger than memory can serve. Results are bit-identical
+    /// to the RAM tier; saves write the mmap-servable version-5 format.
+    pub cold_tier_mmap: bool,
+    /// Directory the cold tier spills its vector files into.
+    pub cold_dir: String,
 }
 
 impl Default for ServeConfig {
@@ -456,6 +477,8 @@ impl Default for ServeConfig {
             build_workers: 2,
             incremental_ingest: true,
             delta_max_vectors: 2048,
+            cold_tier_mmap: false,
+            cold_dir: "cold".to_string(),
         }
     }
 }
@@ -542,6 +565,26 @@ impl ServeConfig {
                         })?
                     }
                     "delta_max_vectors" => cfg.delta_max_vectors = pos_int(val, "serve", key)?,
+                    "cold_tier" => {
+                        let s = val.as_str().ok_or_else(|| {
+                            OpdrError::config("serve.cold_tier must be a string")
+                        })?;
+                        cfg.cold_tier_mmap = match s.to_ascii_lowercase().as_str() {
+                            "ram" => false,
+                            "mmap" => true,
+                            other => {
+                                return Err(OpdrError::config(format!(
+                                    "serve: unknown cold_tier `{other}` (expected ram | mmap)"
+                                )))
+                            }
+                        };
+                    }
+                    "cold_dir" => {
+                        cfg.cold_dir = val
+                            .as_str()
+                            .ok_or_else(|| OpdrError::config("serve.cold_dir must be a string"))?
+                            .to_string()
+                    }
                     other => {
                         return Err(OpdrError::config(format!("serve: unknown key `{other}`")))
                     }
@@ -568,6 +611,12 @@ impl ServeConfig {
                  (it would be silently ignored)",
             ));
         }
+        if !cfg.cold_tier_mmap && seen.iter().any(|k| k == "cold_dir") {
+            return Err(OpdrError::config(
+                "serve: `cold_dir` requires cold_tier = \"mmap\" \
+                 (it would be silently ignored)",
+            ));
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -591,6 +640,9 @@ impl ServeConfig {
         }
         if self.delta_max_vectors == 0 {
             return Err(OpdrError::config("serve.delta_max_vectors must be >= 1"));
+        }
+        if self.cold_tier_mmap && self.cold_dir.is_empty() {
+            return Err(OpdrError::config("serve.cold_dir must not be empty"));
         }
         if self.ivf_nprobe > self.ivf_nlist {
             return Err(OpdrError::config("serve.ivf_nprobe must be <= ivf_nlist"));
@@ -619,6 +671,11 @@ impl ServeConfig {
             hnsw_heuristic: self.hnsw_heuristic,
             shards: self.shards,
             shard_min_vectors: self.shard_min_vectors,
+            cold_tier: if self.cold_tier_mmap {
+                ColdTier::Mmap(std::path::PathBuf::from(&self.cold_dir))
+            } else {
+                ColdTier::Ram
+            },
             ..Default::default()
         }
     }
@@ -753,7 +810,7 @@ k = 5
         assert_eq!(p.pq_m, 8);
         assert_eq!(p.pq_ksub, 32);
         assert_eq!(p.rerank_depth, 200);
-        assert!(matches!(p.storage_spec(), StorageSpec::Pq(pp) if pp.opq && pp.ksub == 32));
+        assert!(matches!(p.storage_spec().quant, Quantizer::Pq(pp) if pp.opq && pp.ksub == 32));
         // Global SQ8 codebook key.
         let cfg = ServeConfig::from_toml_str(
             "[serve]\nindex_sq8 = true\nsq8_global_codebook = true\n",
@@ -761,12 +818,14 @@ k = 5
         .unwrap();
         let p = cfg.index_policy();
         assert!(p.sq8 && p.sq8_global_codebook);
-        assert!(matches!(p.storage_spec(), StorageSpec::Sq8 { bounds: None }));
+        assert!(matches!(p.storage_spec().quant, Quantizer::Sq8 { bounds: None }));
         // Defaults: flat storage, heuristic on, dedicated build pool.
         let d = ServeConfig::from_toml_str("").unwrap();
         assert!(!d.index_pq && d.hnsw_heuristic);
         assert_eq!(d.build_workers, 2);
-        assert!(matches!(d.index_policy().storage_spec(), StorageSpec::Flat));
+        let spec = d.index_policy().storage_spec();
+        assert!(matches!(spec.quant, Quantizer::Flat));
+        assert_eq!(spec.cold_tier, ColdTier::Ram);
         // Invalid combinations / ranges.
         assert!(ServeConfig::from_toml_str("[serve]\nindex_pq = true\nindex_sq8 = true").is_err());
         assert!(ServeConfig::from_toml_str("[serve]\nindex_pq_ksub = 1000").is_err());
@@ -810,6 +869,47 @@ k = 5
         // Range / type validation.
         assert!(ServeConfig::from_toml_str("[serve]\ndelta_max_vectors = 0").is_err());
         assert!(ServeConfig::from_toml_str("[serve]\nincremental_ingest = 3").is_err());
+    }
+
+    #[test]
+    fn serve_cold_tier_keys() {
+        // Default: RAM tier, nothing mapped.
+        let d = ServeConfig::from_toml_str("").unwrap();
+        assert!(!d.cold_tier_mmap);
+        assert_eq!(d.index_policy().cold_tier, ColdTier::Ram);
+        // Mmap tier with an explicit spill directory flows into the policy
+        // and the storage spec.
+        let cfg = ServeConfig::from_toml_str(
+            "[serve]\ncold_tier = \"mmap\"\ncold_dir = \"/tmp/opdr-cold\"\n",
+        )
+        .unwrap();
+        assert!(cfg.cold_tier_mmap);
+        let p = cfg.index_policy();
+        assert_eq!(p.cold_tier, ColdTier::Mmap(std::path::PathBuf::from("/tmp/opdr-cold")));
+        assert_eq!(p.storage_spec().cold_tier, p.cold_tier);
+        // "ram" is accepted explicitly; unknown tiers are not.
+        assert!(ServeConfig::from_toml_str("[serve]\ncold_tier = \"ram\"\n").is_ok());
+        assert!(ServeConfig::from_toml_str("[serve]\ncold_tier = \"ssd\"\n").is_err());
+        assert!(ServeConfig::from_toml_str("[serve]\ncold_tier = 3\n").is_err());
+        // Dependent key without the toggle is rejected, not silently
+        // ignored.
+        let e = ServeConfig::from_toml_str("[serve]\ncold_dir = \"x\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("requires cold_tier"), "{e}");
+        // SQ8 has no full-precision tier to map: the combination is
+        // rejected instead of silently doing nothing.
+        let e = ServeConfig::from_toml_str(
+            "[serve]\nindex_sq8 = true\ncold_tier = \"mmap\"\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("sq8"), "{e}");
+        // PQ + mmap is the headline combination and validates fine.
+        assert!(ServeConfig::from_toml_str(
+            "[serve]\nindex_pq = true\ncold_tier = \"mmap\"\n"
+        )
+        .is_ok());
     }
 
     #[test]

@@ -402,7 +402,8 @@ fn handle_admin(
             }
         }
         other => {
-            let _ = resp.send(handle_admin_sync(other, collections, metrics, builds_in_flight));
+            let _ =
+                resp.send(handle_admin_sync(other, collections, cfg, metrics, builds_in_flight));
         }
     }
 }
@@ -488,6 +489,7 @@ fn maybe_spawn_compaction(
 fn handle_admin_sync(
     op: AdminOp,
     collections: &mut Collections,
+    cfg: &ServeConfig,
     metrics: &Metrics,
     builds: &BuildTracker,
 ) -> Result<String> {
@@ -500,7 +502,9 @@ fn handle_admin_sync(
             unreachable!("ingest and index builds are handled by handle_admin")
         }
         AdminOp::SaveIndex { collection, path } => {
-            collections.get(&collection)?.save_index(&path)?;
+            // A mmap cold tier round-trips through the mmap-servable
+            // version-5 layout; the RAM tier keeps the inline formats.
+            collections.get(&collection)?.save_index_as(&path, cfg.cold_tier_mmap)?;
             Ok("ok".into())
         }
         AdminOp::LoadIndex { collection, path } => {
@@ -523,14 +527,27 @@ fn handle_admin_sync(
                             ),
                             None => (ix.as_sharded().map_or(1, |s| s.num_shards()), 0),
                         };
+                        // Tier accounting (hardening satellite): cold_bytes=
+                        // used to print for every index, even with no rerank
+                        // tier at all; now the cold/mapped pair appears only
+                        // when a tier exists, and distinguishes resident from
+                        // mmap-served bytes.
+                        let tier = if ix.cold_bytes() > 0 || ix.mapped_bytes() > 0 {
+                            format!(
+                                " cold_bytes={} mapped_bytes={}",
+                                ix.cold_bytes(),
+                                ix.mapped_bytes()
+                            )
+                        } else {
+                            String::new()
+                        };
                         format!(
                             "true kind={} shards={shards} delta={delta} quantized={} \
-                             storage={} index_bytes={} cold_bytes={}",
+                             storage={} index_bytes={}{tier}",
                             ix.kind().name(),
                             ix.quantized(),
                             ix.storage_name(),
                             ix.memory_bytes(),
-                            ix.cold_bytes()
                         )
                     }
                     None => "false".to_string(),
@@ -929,6 +946,9 @@ mod tests {
         coord.build_index("c").unwrap();
         let stats = coord.stats().unwrap();
         assert!(stats.contains("kind=exact") && stats.contains("shards=4"), "{stats}");
+        // Accounting satellite: a flat index has no cold rerank tier, so
+        // the stats line must not claim one.
+        assert!(!stats.contains("cold_bytes="), "{stats}");
         for (qi, w) in want.iter().enumerate() {
             let got: Vec<(usize, u32)> = coord
                 .search("c", set.vector(qi).to_vec(), 5)
@@ -984,6 +1004,80 @@ mod tests {
         assert_eq!(t.compactions("a"), 2);
         assert_eq!(t.compactions("b"), 1);
         assert_eq!(t.compactions("never"), 0);
+    }
+
+    #[test]
+    fn mmap_cold_tier_collection_serves_and_persists_exactly() {
+        // The full vertical slice: a PQ collection whose rerank tier lives
+        // in mmap'd cold files serves bitwise like the flat exact scan,
+        // reports the mapped bytes in stats, and round-trips through the
+        // version-5 cold file format.
+        let n = 120;
+        let dir =
+            std::env::temp_dir().join(format!("opdr_coord_cold_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = ServeConfig {
+            workers: 2,
+            max_batch: 8,
+            max_wait_ms: 1,
+            use_runtime: false,
+            index_kind: crate::index::IndexKind::Exact,
+            ivf_threshold: 0,
+            index_pq: true,
+            rerank_depth: n,
+            cold_tier_mmap: true,
+            cold_dir: dir.join("tier").to_string_lossy().into_owned(),
+            ..Default::default()
+        };
+        let coord = Coordinator::start(cfg).unwrap();
+        coord.create_collection("c", 8, Metric::SqEuclidean).unwrap();
+        let set = synth::generate(DatasetKind::OmniCorpus, n, 8, 77);
+        coord.ingest("c", set.data().to_vec()).unwrap();
+        coord.build_index("c").unwrap();
+        let stats = coord.stats().unwrap();
+        assert!(stats.contains("storage=pq"), "{stats}");
+        assert!(
+            stats.contains("cold_bytes=") && stats.contains("mapped_bytes="),
+            "{stats}"
+        );
+        let flat = crate::index::ExactIndex::build(
+            set.data(),
+            8,
+            Metric::SqEuclidean,
+            &crate::index::StorageSpec::flat(),
+            1,
+        )
+        .unwrap();
+        let check = |coord: &Coordinator| {
+            for qi in [0usize, 41, 119] {
+                let want: Vec<(usize, u32)> = flat
+                    .search(set.vector(qi), 6)
+                    .unwrap()
+                    .iter()
+                    .map(|nb| (nb.index, nb.distance.to_bits()))
+                    .collect();
+                let got: Vec<(usize, u32)> = coord
+                    .search("c", set.vector(qi).to_vec(), 6)
+                    .unwrap()
+                    .neighbors
+                    .iter()
+                    .map(|nb| (nb.index, nb.distance.to_bits()))
+                    .collect();
+                assert_eq!(got, want, "query {qi} diverged under the mmap tier");
+            }
+        };
+        check(&coord);
+        // Save writes the version-5 cold layout; loading it back serves
+        // identically (the annex now maps straight from the saved file).
+        let path = dir.join("c.opdx");
+        let path_str = path.to_string_lossy().into_owned();
+        coord.save_index("c", &path_str).unwrap();
+        let raw = std::fs::read(&path).unwrap();
+        assert_eq!(u32::from_le_bytes(raw[4..8].try_into().unwrap()), 5, "v5 on disk");
+        coord.load_index("c", &path_str).unwrap();
+        check(&coord);
+        coord.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -438,10 +438,22 @@ impl Collection {
 
     /// Persist the built index as an `OPDR` index segment.
     pub fn save_index(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        self.save_index_as(path, false)
+    }
+
+    /// Persist the built index, choosing the layout: `cold = true` writes
+    /// the version-5 cold format (full-precision rows in a
+    /// 64-byte-aligned annex, loadable zero-copy via mmap), `false` the
+    /// inline version-2/3/4 formats.
+    pub fn save_index_as(&self, path: impl AsRef<std::path::Path>, cold: bool) -> Result<()> {
         let index = self.index().ok_or_else(|| {
             OpdrError::coordinator(format!("collection `{}` has no index to save", self.name))
         })?;
-        crate::data::store::save_index(index.as_ref(), path)
+        if cold {
+            crate::data::store::save_index_cold(index.as_ref(), path)
+        } else {
+            crate::data::store::save_index(index.as_ref(), path)
+        }
     }
 
     /// Load a previously saved index segment, validating it against the

@@ -1,0 +1,892 @@
+//! Mmap-backed on-disk vector tier (the version-5 `OPDR` cold layout).
+//!
+//! PR 3's PQ subsystem banished the full-precision rerank rows to a
+//! separately accounted "cold tier" — but kept them in RAM, capping
+//! collection size at physical memory. This module is the missing half of
+//! the DiskANN / Lucene-HNSW-codec pattern: quantized codes stay hot in
+//! RAM, while full-precision vectors are served **zero-copy from a
+//! page-aligned read-only file mapping** of an alignment-aware on-disk
+//! layout.
+//!
+//! ## The version-5 cold layout
+//!
+//! A version-5 `OPDR` file is a fixed 64-byte header, an optional index
+//! *body* (the familiar version-2/3/4 index bytes with full-precision
+//! payloads externalized), zero padding, and a 64-byte-aligned,
+//! length-prefixed **vector annex** holding the externalized rows:
+//!
+//! | offset | bytes | field |
+//! |-------:|------:|-------|
+//! |      0 |     4 | magic `OPDR` |
+//! |      4 |     4 | u32 version = 5 |
+//! |      8 |     8 | u64 annex row count `n` |
+//! |     16 |     8 | u64 annex row dimensionality `dim` |
+//! |     24 |     8 | u64 annex offset (absolute, 64-byte aligned) |
+//! |     32 |     8 | u64 annex byte length (= `n·dim·4`, the length prefix) |
+//! |     40 |     8 | u64 body byte length (0 = bare vector annex) |
+//! |     48 |     4 | u32 inner body framing (0, or 2/3/4 like the store) |
+//! |     52 |    12 | reserved, must be zero |
+//! |     64 |     … | body, zero padding to the annex offset, annex rows |
+//!
+//! Because the annex is 64-byte aligned, little-endian and length-prefixed,
+//! a reader can map the file and serve `row(id)` **in place** — no decode,
+//! no copy, no resident footprint beyond the pages actually touched. The
+//! header is validated against the real file length before any row is
+//! served, so a truncated or trailing-byte-corrupted file fails loudly at
+//! open instead of faulting mid-query.
+//!
+//! ## Pieces
+//!
+//! * [`VectorFile`] — a safe view over one cold file: validated header,
+//!   bounds-checked `row(id) -> &[f32]`, and a graceful heap fallback on
+//!   platforms/filesystems where `mmap` fails (or on big-endian targets,
+//!   where in-place serving would misread the little-endian payload).
+//! * [`RowBlock`] — the row-serving abstraction index storage builds on:
+//!   RAM-resident rows or a `(file, start)` window into a [`VectorFile`].
+//!   [`crate::index::VectorStore`] flat payloads and
+//!   [`crate::index::PqStorage`] rerank tiers hold one of these, so the
+//!   whole substrate matrix serves from either tier transparently.
+//! * [`AnnexWriter`] / [`ColdContext`] — the serialization plumbing: a
+//!   writer accumulates externalized rows while the index body serializes
+//!   (each record keeps only a `u64` start row), and the context resolves
+//!   those references back to [`RowBlock`]s at load time.
+//!
+//! Build-time spill files ([`VectorFile::spill`], used when
+//! `[serve] cold_tier = "mmap"` is configured) are unlinked when the last
+//! index referencing them drops, so a compaction's atomic swap cleans up
+//! the previous generation's tier automatically. Files loaded explicitly
+//! from disk are never deleted.
+//!
+//! Safety: the mapping is read-only and private; [`VectorFile`] is `Sync`
+//! because no interior mutation exists. The one hazard mmap cannot rule
+//! out is another process truncating the file underneath a live mapping
+//! (SIGBUS on fault) — the cold tier directory is owned by the serving
+//! process, and the length check at open rejects files that are already
+//! short.
+
+use crate::error::{OpdrError, Result};
+use crate::index::io;
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// The `OPDR` version tag of the cold layout.
+pub const COLD_VERSION: u32 = 5;
+
+/// Fixed header size; also the smallest valid annex offset.
+pub const HEADER_BYTES: usize = 64;
+
+/// Alignment of the vector annex (one cache line; a superset of the 4-byte
+/// `f32` alignment the in-place cast requires).
+pub const ANNEX_ALIGN: usize = 64;
+
+/// Round `x` up to the annex alignment (None on overflow — only reachable
+/// from hostile headers).
+fn align64(x: usize) -> Option<usize> {
+    x.checked_add(ANNEX_ALIGN - 1).map(|v| v & !(ANNEX_ALIGN - 1))
+}
+
+/// Parsed + validated version-5 header.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub(crate) struct ColdHeader {
+    /// Annex rows.
+    pub annex_n: usize,
+    /// Annex row dimensionality (0 iff the annex is empty).
+    pub annex_dim: usize,
+    /// Absolute, 64-byte-aligned file offset of the annex.
+    pub annex_offset: usize,
+    /// Annex byte length (`annex_n * annex_dim * 4`).
+    pub annex_bytes: usize,
+    /// Index body length in bytes (0 = bare vector annex).
+    pub body_len: usize,
+    /// Framing of the body: 0 (none) or the store's 2/3/4.
+    pub inner_version: u32,
+}
+
+impl ColdHeader {
+    /// Assemble a header for `body_len` body bytes and an annex of
+    /// `n × dim` rows.
+    pub(crate) fn new(
+        n: usize,
+        dim: usize,
+        body_len: usize,
+        inner_version: u32,
+    ) -> Result<ColdHeader> {
+        let annex_offset = align64(HEADER_BYTES + body_len)
+            .ok_or_else(|| OpdrError::data("cold store: body too large"))?;
+        let dim = if n == 0 { 0 } else { dim };
+        let header = ColdHeader {
+            annex_n: n,
+            annex_dim: dim,
+            annex_offset,
+            annex_bytes: n * dim * 4,
+            body_len,
+            inner_version,
+        };
+        header.validate()?;
+        Ok(header)
+    }
+
+    /// Serialize (including magic + version).
+    pub(crate) fn write(&self, w: &mut dyn Write) -> Result<()> {
+        w.write_all(b"OPDR")?;
+        w.write_all(&COLD_VERSION.to_le_bytes())?;
+        w.write_all(&(self.annex_n as u64).to_le_bytes())?;
+        w.write_all(&(self.annex_dim as u64).to_le_bytes())?;
+        w.write_all(&(self.annex_offset as u64).to_le_bytes())?;
+        w.write_all(&(self.annex_bytes as u64).to_le_bytes())?;
+        w.write_all(&(self.body_len as u64).to_le_bytes())?;
+        w.write_all(&self.inner_version.to_le_bytes())?;
+        w.write_all(&[0u8; 12])?;
+        Ok(())
+    }
+
+    /// Parse the header fields that follow the magic + version prefix
+    /// (which dispatching readers have already consumed), validating every
+    /// structural invariant.
+    pub(crate) fn read_after_version(r: &mut dyn Read) -> Result<ColdHeader> {
+        let annex_n = io::read_u64_usize(r)?;
+        let annex_dim = io::read_u64_usize(r)?;
+        let annex_offset = io::read_u64_usize(r)?;
+        let annex_bytes = io::read_u64_usize(r)?;
+        let body_len = io::read_u64_usize(r)?;
+        let inner_version = io::read_u32(r)?;
+        let mut reserved = [0u8; 12];
+        r.read_exact(&mut reserved)?;
+        if reserved != [0u8; 12] {
+            return Err(OpdrError::data("cold store: nonzero reserved header bytes"));
+        }
+        let header =
+            ColdHeader { annex_n, annex_dim, annex_offset, annex_bytes, body_len, inner_version };
+        header.validate()?;
+        Ok(header)
+    }
+
+    /// Structural invariants: shape consistency, the length prefix, the
+    /// 64-byte alignment and a recognized inner framing.
+    fn validate(&self) -> Result<()> {
+        if (self.annex_n == 0) != (self.annex_dim == 0) {
+            return Err(OpdrError::data("cold store: corrupt annex shape"));
+        }
+        let elems = self
+            .annex_n
+            .checked_mul(self.annex_dim)
+            .ok_or_else(|| OpdrError::data("cold store: annex size overflow"))?;
+        let bytes = elems
+            .checked_mul(4)
+            .ok_or_else(|| OpdrError::data("cold store: annex size overflow"))?;
+        if bytes != self.annex_bytes {
+            return Err(OpdrError::data(format!(
+                "cold store: annex length prefix {} != {} x {} rows",
+                self.annex_bytes, self.annex_n, self.annex_dim
+            )));
+        }
+        let expected_offset = HEADER_BYTES
+            .checked_add(self.body_len)
+            .and_then(align64)
+            .ok_or_else(|| OpdrError::data("cold store: body length overflow"))?;
+        if self.annex_offset != expected_offset {
+            return Err(OpdrError::data(format!(
+                "cold store: annex offset {} is not the aligned end of the body \
+                 (expected {expected_offset})",
+                self.annex_offset
+            )));
+        }
+        match self.inner_version {
+            0 if self.body_len == 0 => Ok(()),
+            2 | 3 | 4 if self.body_len > 0 => Ok(()),
+            other => Err(OpdrError::data(format!(
+                "cold store: inner body framing {other} does not match body length {}",
+                self.body_len
+            ))),
+        }
+    }
+
+    /// Annex element count (validated against overflow).
+    pub(crate) fn annex_elems(&self) -> usize {
+        self.annex_n * self.annex_dim
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The raw mapping (unix-only; everything else falls back to heap reads).
+// ---------------------------------------------------------------------------
+
+#[cfg(all(unix, target_pointer_width = "64", target_endian = "little"))]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+    pub const PROT_READ: c_int = 0x1;
+    pub const MAP_PRIVATE: c_int = 0x02;
+}
+
+/// A whole-file read-only mapping. Page-aligned by construction (`mmap`
+/// returns page-aligned addresses), so the 64-byte-aligned annex offset
+/// keeps every row 4-byte aligned for the in-place `f32` cast.
+#[derive(Debug)]
+struct Map {
+    ptr: *mut u8,
+    len: usize,
+}
+
+// SAFETY: the mapping is PROT_READ/MAP_PRIVATE — immutable shared state
+// with no interior mutability, so concurrent reads from many threads are
+// sound.
+unsafe impl Send for Map {}
+unsafe impl Sync for Map {}
+
+impl Map {
+    /// Map `len` bytes of `f` read-only, or None when the platform or the
+    /// filesystem refuses (the caller falls back to heap reads).
+    #[cfg(all(unix, target_pointer_width = "64", target_endian = "little"))]
+    fn try_map(f: &File, len: usize) -> Option<Map> {
+        use std::os::unix::io::AsRawFd;
+        if len == 0 {
+            return None;
+        }
+        // SAFETY: mapping an owned, open fd read-only; the result is
+        // checked against MAP_FAILED before use.
+        let ptr = unsafe {
+            sys::mmap(std::ptr::null_mut(), len, sys::PROT_READ, sys::MAP_PRIVATE, f.as_raw_fd(), 0)
+        };
+        if ptr.is_null() || ptr as isize == -1 {
+            return None;
+        }
+        Some(Map { ptr: ptr as *mut u8, len })
+    }
+
+    #[cfg(not(all(unix, target_pointer_width = "64", target_endian = "little")))]
+    fn try_map(_f: &File, _len: usize) -> Option<Map> {
+        None
+    }
+}
+
+impl Drop for Map {
+    fn drop(&mut self) {
+        unmap(self.ptr, self.len);
+    }
+}
+
+#[cfg(all(unix, target_pointer_width = "64", target_endian = "little"))]
+fn unmap(ptr: *mut u8, len: usize) {
+    // SAFETY: `ptr`/`len` came from a successful mmap and are unmapped
+    // exactly once (Drop).
+    unsafe {
+        sys::munmap(ptr as *mut std::os::raw::c_void, len);
+    }
+}
+
+#[cfg(not(all(unix, target_pointer_width = "64", target_endian = "little")))]
+fn unmap(_ptr: *mut u8, _len: usize) {}
+
+#[derive(Debug)]
+enum Backing {
+    /// Zero-copy whole-file mapping; rows served in place.
+    Mapped(Map),
+    /// Heap fallback: the annex decoded into RAM (mmap refused, heap load
+    /// requested, or a big-endian host).
+    Heap(Vec<f32>),
+}
+
+// ---------------------------------------------------------------------------
+// VectorFile: the safe view.
+// ---------------------------------------------------------------------------
+
+/// Distinct names for build-time spill files (many segments spill in
+/// parallel into one cold directory).
+static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A validated, read-only view over one version-5 cold file's vector
+/// annex: `row(id)` serves 64-byte-aligned `f32` rows zero-copy from the
+/// mapping (or from the heap fallback when mapping is unavailable).
+#[derive(Debug)]
+pub struct VectorFile {
+    header: ColdHeader,
+    backing: Backing,
+    /// Set for build-time spill files: remove the file when the last index
+    /// referencing it drops (a compaction swap cleans up the old tier).
+    unlink: Option<PathBuf>,
+}
+
+impl VectorFile {
+    /// Open a cold file, preferring a zero-copy mapping and falling back
+    /// to a heap read where mapping is unavailable.
+    pub fn open(path: impl AsRef<Path>) -> Result<VectorFile> {
+        VectorFile::open_with(path.as_ref(), true)
+    }
+
+    /// Open a cold file forcing the heap path (used by the exactness tests
+    /// and by hosts without a usable mmap).
+    pub fn open_heap(path: impl AsRef<Path>) -> Result<VectorFile> {
+        VectorFile::open_with(path.as_ref(), false)
+    }
+
+    fn open_with(path: &Path, prefer_mmap: bool) -> Result<VectorFile> {
+        let mut f = File::open(path)?;
+        let mut head = [0u8; 8];
+        f.read_exact(&mut head)?;
+        if &head[..4] != b"OPDR" {
+            return Err(OpdrError::data("cold store: bad magic"));
+        }
+        let version = u32::from_le_bytes(head[4..8].try_into().unwrap());
+        if version != COLD_VERSION {
+            return Err(OpdrError::data(format!(
+                "cold store: version {version} is not the cold layout ({COLD_VERSION})"
+            )));
+        }
+        let header = ColdHeader::read_after_version(&mut f)?;
+        let file_len = f.metadata()?.len();
+        let expected = (header.annex_offset as u64)
+            .checked_add(header.annex_bytes as u64)
+            .ok_or_else(|| OpdrError::data("cold store: file length overflow"))?;
+        if file_len != expected {
+            return Err(OpdrError::data(format!(
+                "cold store: file is {file_len} bytes but the header declares {expected} \
+                 (truncated or trailing bytes)"
+            )));
+        }
+        // The padding between body and annex is load-bearing zeros (the
+        // header pins the aligned offset); anything else is corruption.
+        let pad = header.annex_offset - HEADER_BYTES - header.body_len;
+        if pad > 0 {
+            let mut buf = [0u8; ANNEX_ALIGN];
+            f.seek(SeekFrom::Start((HEADER_BYTES + header.body_len) as u64))?;
+            f.read_exact(&mut buf[..pad])?;
+            if buf[..pad].iter().any(|&b| b != 0) {
+                return Err(OpdrError::data("cold store: nonzero padding before the annex"));
+            }
+        }
+        let backing = if header.annex_bytes == 0 {
+            Backing::Heap(Vec::new())
+        } else if prefer_mmap {
+            match Map::try_map(&f, file_len as usize) {
+                Some(m) => Backing::Mapped(m),
+                None => Backing::Heap(read_annex(&mut f, &header)?),
+            }
+        } else {
+            Backing::Heap(read_annex(&mut f, &header)?)
+        };
+        Ok(VectorFile { header, backing, unlink: None })
+    }
+
+    /// A purely in-memory vector file (the streaming heap path of
+    /// [`crate::data::store::read_index`], which has no path to map).
+    pub(crate) fn from_heap(n: usize, dim: usize, rows: Vec<f32>) -> Result<VectorFile> {
+        if n.checked_mul(dim) != Some(rows.len()) {
+            return Err(OpdrError::shape("cold store: heap annex shape mismatch"));
+        }
+        let header = ColdHeader::new(n, dim, 0, 0)?;
+        Ok(VectorFile { header, backing: Backing::Heap(rows), unlink: None })
+    }
+
+    /// Spill `rows` to a fresh bare-annex cold file under `dir` and open
+    /// it (mapped where possible). The file is unlinked when the returned
+    /// view drops — spill files live exactly as long as the index tier
+    /// built over them.
+    pub fn spill(dir: &Path, rows: &[f32], dim: usize) -> Result<VectorFile> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!(
+            "cold-{}-{}.opdr",
+            std::process::id(),
+            SPILL_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        write_cold_file(&path, rows, dim)?;
+        let mut vf = match VectorFile::open(&path) {
+            Ok(vf) => vf,
+            Err(e) => {
+                let _ = std::fs::remove_file(&path);
+                return Err(e);
+            }
+        };
+        vf.unlink = Some(path);
+        Ok(vf)
+    }
+
+    /// Annex rows.
+    pub fn n(&self) -> usize {
+        self.header.annex_n
+    }
+
+    /// Annex row dimensionality.
+    pub fn dim(&self) -> usize {
+        self.header.annex_dim
+    }
+
+    /// True when rows are served zero-copy from the mapping.
+    pub fn is_mapped(&self) -> bool {
+        matches!(self.backing, Backing::Mapped(_))
+    }
+
+    /// Annex bytes served from the mapping (0 on the heap fallback).
+    pub fn mapped_bytes(&self) -> usize {
+        if self.is_mapped() {
+            self.header.annex_bytes
+        } else {
+            0
+        }
+    }
+
+    /// Annex bytes resident in RAM (the heap fallback; 0 when mapped).
+    pub fn resident_bytes(&self) -> usize {
+        if self.is_mapped() {
+            0
+        } else {
+            self.header.annex_bytes
+        }
+    }
+
+    /// Row `id` of the annex. Bounds-checked: an out-of-range id panics
+    /// with a descriptive message (same contract as slice indexing; every
+    /// deserialized reference is range-validated before rows are served).
+    pub fn row(&self, id: usize) -> &[f32] {
+        assert!(
+            id < self.header.annex_n,
+            "VectorFile::row: id {id} out of bounds (annex holds {} rows)",
+            self.header.annex_n
+        );
+        let dim = self.header.annex_dim;
+        match &self.backing {
+            Backing::Heap(v) => &v[id * dim..(id + 1) * dim],
+            Backing::Mapped(m) => {
+                let off = self.header.annex_offset + id * dim * 4;
+                debug_assert!(off + dim * 4 <= m.len);
+                // SAFETY: the open-time length check pins
+                // annex_offset + annex_bytes == mapping length, `id` is in
+                // range, and the 64-byte-aligned annex keeps every row
+                // 4-byte aligned; the mapping is immutable for `&self`.
+                unsafe { std::slice::from_raw_parts(m.ptr.add(off) as *const f32, dim) }
+            }
+        }
+    }
+
+    /// The parsed header (store-internal: body framing + length).
+    pub(crate) fn header(&self) -> &ColdHeader {
+        &self.header
+    }
+}
+
+impl Drop for VectorFile {
+    fn drop(&mut self) {
+        if let Some(path) = self.unlink.take() {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+/// Read the annex into a heap vector (seek + buffered little-endian
+/// decode); the fallback serving tier.
+fn read_annex(f: &mut File, header: &ColdHeader) -> Result<Vec<f32>> {
+    f.seek(SeekFrom::Start(header.annex_offset as u64))?;
+    let mut br = std::io::BufReader::with_capacity(1 << 20, f);
+    io::read_f32s(&mut br, header.annex_elems())
+}
+
+/// Write a bare vector annex (no index body) — the build-time spill format.
+pub fn write_cold_file(path: &Path, rows: &[f32], dim: usize) -> Result<()> {
+    if dim == 0 || rows.len() % dim != 0 {
+        return Err(OpdrError::shape("cold store: bad spill shape"));
+    }
+    let header = ColdHeader::new(rows.len() / dim, dim, 0, 0)?;
+    let mut w = std::io::BufWriter::new(File::create(path)?);
+    header.write(&mut w)?;
+    io::write_f32s(&mut w, rows)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Frame an already-serialized cold index body + its annex as a version-5
+/// file: header, body, zero padding to the aligned annex offset, rows.
+pub(crate) fn write_cold_framed(
+    w: &mut dyn Write,
+    inner_version: u32,
+    body: &[u8],
+    annex: &AnnexWriter,
+) -> Result<()> {
+    let header = ColdHeader::new(annex.n_rows(), annex.dim, body.len(), inner_version)?;
+    header.write(w)?;
+    w.write_all(body)?;
+    let pad = header.annex_offset - HEADER_BYTES - body.len();
+    w.write_all(&vec![0u8; pad])?;
+    io::write_f32s(w, &annex.rows)?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Serialization plumbing: annex accumulation + reference resolution.
+// ---------------------------------------------------------------------------
+
+/// Accumulates rows externalized while an index body serializes into the
+/// version-5 layout; each externalized payload keeps only its start row.
+#[derive(Debug)]
+pub struct AnnexWriter {
+    dim: usize,
+    rows: Vec<f32>,
+}
+
+impl AnnexWriter {
+    /// A fresh annex for rows of dimensionality `dim`.
+    pub fn new(dim: usize) -> AnnexWriter {
+        AnnexWriter { dim, rows: Vec::new() }
+    }
+
+    /// Rows accumulated so far.
+    pub fn n_rows(&self) -> usize {
+        if self.dim == 0 {
+            0
+        } else {
+            self.rows.len() / self.dim
+        }
+    }
+
+    /// Append a row-major slice; returns its start row in the annex.
+    pub fn push_slice(&mut self, rows: &[f32], dim: usize) -> Result<u64> {
+        if dim != self.dim || dim == 0 || rows.len() % dim != 0 {
+            return Err(OpdrError::shape(format!(
+                "cold annex: pushing dim-{dim} rows into a dim-{} annex",
+                self.dim
+            )));
+        }
+        let start = self.n_rows() as u64;
+        self.rows.extend_from_slice(rows);
+        Ok(start)
+    }
+
+    /// Append every row of `block`; returns its start row in the annex.
+    pub fn push_rows(&mut self, block: &RowBlock) -> Result<u64> {
+        if block.dim() != self.dim || self.dim == 0 {
+            return Err(OpdrError::shape(format!(
+                "cold annex: pushing dim-{} rows into a dim-{} annex",
+                block.dim(),
+                self.dim
+            )));
+        }
+        let start = self.n_rows() as u64;
+        self.rows.reserve(block.n() * block.dim());
+        for i in 0..block.n() {
+            self.rows.extend_from_slice(block.row(i));
+        }
+        Ok(start)
+    }
+}
+
+/// Load-time counterpart of [`AnnexWriter`]: resolves `u64` start-row
+/// references inside a cold body back to windows of the file's annex.
+#[derive(Debug, Clone)]
+pub struct ColdContext {
+    /// The open cold file whose annex the body references.
+    pub file: Arc<VectorFile>,
+}
+
+// ---------------------------------------------------------------------------
+// RowBlock: RAM-resident or tiered row storage.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+enum RowBacking {
+    Ram(Vec<f32>),
+    Tiered { file: Arc<VectorFile>, start: usize },
+}
+
+/// Row-major `f32` rows, resident in RAM or served from a window of a
+/// [`VectorFile`] annex. The index layer's vector payloads (flat stores,
+/// PQ rerank tiers) hold one of these, so the same search code serves both
+/// tiers — and equality / `matches` compare logical row content bitwise
+/// regardless of backing.
+#[derive(Debug, Clone)]
+pub struct RowBlock {
+    n: usize,
+    dim: usize,
+    backing: RowBacking,
+}
+
+impl RowBlock {
+    /// RAM-resident rows.
+    pub fn from_ram(dim: usize, data: Vec<f32>) -> Result<RowBlock> {
+        if dim == 0 || data.len() % dim != 0 {
+            return Err(OpdrError::shape("row block: bad shape"));
+        }
+        Ok(RowBlock { n: data.len() / dim, dim, backing: RowBacking::Ram(data) })
+    }
+
+    /// A window of `n` rows starting at `start` inside `file`'s annex.
+    pub fn tiered(file: Arc<VectorFile>, start: usize, n: usize) -> Result<RowBlock> {
+        let dim = file.dim();
+        if dim == 0 {
+            return Err(OpdrError::data("row block: cold file has an empty annex"));
+        }
+        let end = start
+            .checked_add(n)
+            .ok_or_else(|| OpdrError::data("row block: row range overflow"))?;
+        if end > file.n() {
+            return Err(OpdrError::data(format!(
+                "row block: rows [{start}, {end}) outside the annex ({} rows)",
+                file.n()
+            )));
+        }
+        Ok(RowBlock { n, dim, backing: RowBacking::Tiered { file, start } })
+    }
+
+    /// Spill `data` into a fresh cold file under `dir` and serve it tiered
+    /// (the `cold_tier = "mmap"` build path).
+    pub fn spill(dir: &Path, data: &[f32], dim: usize) -> Result<RowBlock> {
+        let file = Arc::new(VectorFile::spill(dir, data, dim)?);
+        let n = file.n();
+        RowBlock::tiered(file, 0, n)
+    }
+
+    /// Row count.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// True when no rows are held.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Row dimensionality.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Row `id` (bounds-checked against this block's own window — a
+    /// tiered block must never silently serve a neighboring block's rows
+    /// from the shared annex).
+    #[inline]
+    pub fn row(&self, id: usize) -> &[f32] {
+        assert!(id < self.n, "RowBlock::row: id {id} out of bounds (block holds {} rows)", self.n);
+        match &self.backing {
+            RowBacking::Ram(v) => &v[id * self.dim..(id + 1) * self.dim],
+            RowBacking::Tiered { file, start } => file.row(start + id),
+        }
+    }
+
+    /// Total logical bytes of the rows (resident + mapped).
+    pub fn total_bytes(&self) -> usize {
+        self.n * self.dim * std::mem::size_of::<f32>()
+    }
+
+    /// Bytes resident in RAM (0 for a mapped tier).
+    pub fn resident_bytes(&self) -> usize {
+        match &self.backing {
+            RowBacking::Ram(_) => self.total_bytes(),
+            RowBacking::Tiered { file, .. } => {
+                if file.is_mapped() {
+                    0
+                } else {
+                    self.total_bytes()
+                }
+            }
+        }
+    }
+
+    /// Bytes served zero-copy from a mapping (0 when resident).
+    pub fn mapped_bytes(&self) -> usize {
+        self.total_bytes() - self.resident_bytes()
+    }
+
+    /// True when rows come from a mapped cold file.
+    pub fn is_mapped(&self) -> bool {
+        self.mapped_bytes() > 0
+    }
+
+    /// True when the held rows equal `other` bit-for-bit.
+    pub fn matches(&self, other: &[f32]) -> bool {
+        if other.len() != self.n * self.dim {
+            return false;
+        }
+        (0..self.n).all(|i| {
+            self.row(i)
+                .iter()
+                .zip(&other[i * self.dim..(i + 1) * self.dim])
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+        })
+    }
+
+    /// Write every row as little-endian `f32`s (the inline serialization).
+    pub fn write_f32s(&self, w: &mut dyn Write) -> Result<()> {
+        for i in 0..self.n {
+            io::write_f32s(w, self.row(i))?;
+        }
+        Ok(())
+    }
+}
+
+impl PartialEq for RowBlock {
+    fn eq(&self, other: &Self) -> bool {
+        self.n == other.n && self.dim == other.dim && {
+            (0..self.n).all(|i| {
+                self.row(i).iter().zip(other.row(i)).all(|(a, b)| a.to_bits() == b.to_bits())
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("opdr_mapped_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn spill_roundtrips_rows_bitwise_mapped_and_heap() {
+        let dir = tmp_dir("roundtrip");
+        let dim = 6;
+        let rows = Rng::new(7).normal_vec_f32(40 * dim);
+        let path = dir.join("annex.opdr");
+        write_cold_file(&path, &rows, dim).unwrap();
+        let views = [
+            (VectorFile::open(&path).unwrap(), false),
+            (VectorFile::open_heap(&path).unwrap(), true),
+        ];
+        for (vf, forced_heap) in views {
+            assert_eq!(vf.n(), 40);
+            assert_eq!(vf.dim(), dim);
+            if forced_heap {
+                assert!(!vf.is_mapped());
+                assert_eq!(vf.mapped_bytes(), 0);
+                assert_eq!(vf.resident_bytes(), 40 * dim * 4);
+            } else {
+                // Mapped on capable hosts; the heap fallback is still
+                // correct where mmap is unavailable.
+                assert_eq!(vf.mapped_bytes() + vf.resident_bytes(), 40 * dim * 4);
+            }
+            for id in [0usize, 17, 39] {
+                let got = vf.row(id);
+                assert_eq!(got.len(), dim);
+                for (a, b) in got.iter().zip(&rows[id * dim..(id + 1) * dim]) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "row {id}");
+                }
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn spill_files_unlink_when_dropped() {
+        let dir = tmp_dir("unlink");
+        let rows = vec![1.0f32; 12];
+        let block = RowBlock::spill(&dir, &rows, 4).unwrap();
+        assert_eq!(block.n(), 3);
+        assert!(block.matches(&rows));
+        let files: Vec<_> = std::fs::read_dir(&dir).unwrap().collect();
+        assert_eq!(files.len(), 1, "spill file exists while the block lives");
+        drop(block);
+        let files: Vec<_> = std::fs::read_dir(&dir).unwrap().collect();
+        assert!(files.is_empty(), "spill file must be unlinked on drop");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn header_corruption_rejected() {
+        let dir = tmp_dir("corrupt");
+        let dim = 4;
+        let rows = Rng::new(3).normal_vec_f32(8 * dim);
+        let path = dir.join("annex.opdr");
+        write_cold_file(&path, &rows, dim).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        let reject = |bytes: &[u8], what: &str| {
+            let bad = dir.join("bad.opdr");
+            std::fs::write(&bad, bytes).unwrap();
+            assert!(VectorFile::open(&bad).is_err(), "{what} accepted");
+            assert!(VectorFile::open_heap(&bad).is_err(), "{what} accepted (heap)");
+        };
+
+        // Bad magic / version.
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        reject(&bad, "bad magic");
+        let mut bad = good.clone();
+        bad[4..8].copy_from_slice(&2u32.to_le_bytes());
+        reject(&bad, "wrong version");
+        // Length-prefix mismatch.
+        let mut bad = good.clone();
+        bad[32..40].copy_from_slice(&7u64.to_le_bytes());
+        reject(&bad, "annex length prefix");
+        // Misaligned annex offset.
+        let mut bad = good.clone();
+        bad[24..32].copy_from_slice(&65u64.to_le_bytes());
+        reject(&bad, "misaligned offset");
+        // Nonzero reserved bytes.
+        let mut bad = good.clone();
+        bad[55] = 1;
+        reject(&bad, "reserved bytes");
+        // Truncation and trailing bytes (the file-length prefix check).
+        reject(&good[..good.len() - 3], "truncated annex");
+        reject(&good[..HEADER_BYTES - 4], "truncated header");
+        let mut bad = good.clone();
+        bad.push(0xAB);
+        reject(&bad, "trailing byte");
+        // Absurd declared annex size fails the length check instead of
+        // allocating (hostile-header hardening).
+        let mut bad = good.clone();
+        bad[8..16].copy_from_slice(&(u64::MAX / 8).to_le_bytes());
+        reject(&bad, "absurd annex rows");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn row_bounds_checked() {
+        let dir = tmp_dir("bounds");
+        let rows = vec![0.5f32; 8];
+        let block = RowBlock::spill(&dir, &rows, 4).unwrap();
+        let caught =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| block.row(2).to_vec()));
+        assert!(caught.is_err(), "out-of-bounds row must panic, not misread");
+        // Tiered windows are range-validated at construction.
+        let file = Arc::new(VectorFile::spill(&dir, &rows, 4).unwrap());
+        assert!(RowBlock::tiered(Arc::clone(&file), 1, 2).is_err());
+        assert!(RowBlock::tiered(file, 0, 2).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn row_block_equality_is_content_based_across_backings() {
+        let dir = tmp_dir("eq");
+        let dim = 3;
+        let rows = Rng::new(11).normal_vec_f32(10 * dim);
+        let ram = RowBlock::from_ram(dim, rows.clone()).unwrap();
+        let tiered = RowBlock::spill(&dir, &rows, dim).unwrap();
+        assert_eq!(ram, tiered);
+        assert!(tiered.matches(&rows));
+        let mut other = rows.clone();
+        other[5] += 1.0;
+        assert!(!tiered.matches(&other));
+        // Inline serialization is identical from both backings.
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        ram.write_f32s(&mut a).unwrap();
+        tiered.write_f32s(&mut b).unwrap();
+        assert_eq!(a, b);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn annex_writer_tracks_starts_and_validates_dim() {
+        let mut annex = AnnexWriter::new(4);
+        assert_eq!(annex.push_slice(&[0.0; 8], 4).unwrap(), 0);
+        assert_eq!(annex.push_slice(&[1.0; 4], 4).unwrap(), 2);
+        assert_eq!(annex.n_rows(), 3);
+        assert!(annex.push_slice(&[0.0; 6], 3).is_err());
+        let block = RowBlock::from_ram(4, vec![2.0; 8]).unwrap();
+        assert_eq!(annex.push_rows(&block).unwrap(), 3);
+        assert_eq!(annex.n_rows(), 5);
+    }
+}

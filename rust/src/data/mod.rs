@@ -9,8 +9,11 @@
 //! pipeline pushes through the AOT-compiled encoder towers.
 //!
 //! [`store`] is the binary embedding store used to persist extraction results
-//! between pipeline stages.
+//! between pipeline stages, and [`mapped`] is the mmap-backed cold vector
+//! tier (the version-5 `OPDR` layout) that serves full-precision rows
+//! zero-copy from disk for collections larger than RAM.
 
+pub mod mapped;
 pub mod records;
 pub mod store;
 pub mod synth;

@@ -25,30 +25,48 @@
 //!   record (u8 metric tag | u64 n | u64 dim | row-major f32 rows). The
 //!   delta record is validated against the decoded main (matching metric
 //!   and dim, non-empty, fully consumed), and version-2/3 files keep
-//!   loading unchanged.
+//!   loading unchanged;
+//! * version 5 — cold-tier index (the mmap-servable layout, see
+//!   [`crate::data::mapped`] for the byte-level table): magic `OPDR` |
+//!   u32 5 | a fixed 64-byte header (annex shape, 64-byte-aligned annex
+//!   offset, annex byte length, body length, inner framing) | the index
+//!   body (version-2/3/4-style bytes with full-precision vector payloads
+//!   replaced by annex start-row references) | zero padding | the
+//!   64-byte-aligned, length-prefixed f32 vector annex.
+//!   [`load_index`] serves the annex **zero-copy via mmap** (heap fallback
+//!   where mapping is unavailable; [`load_index_heap`] forces it), and the
+//!   mapped and heap tiers return bit-identical search results. Version
+//!   1–4 files keep loading via the heap path unchanged.
 //!
 //! Index payloads (version 2 and per shard in version 3) embed their vector
 //! storage as a tagged record: 0 = flat f32, 1 = SQ8 codebooks + codes,
 //! 2 = PQ codebooks + packed codes + optional OPQ rotation + rerank tier
 //! (the record kind added with the PQ subsystem — see
-//! [`crate::index::pq`]). Tags unknown to a reader fail with a descriptive
-//! error, and files written before tag 2 existed keep loading unchanged.
+//! [`crate::index::pq`]); inside version-5 files only, 3 = PQ with an
+//! external rerank tier and 4 = external flat rows (annex references).
+//! Tags unknown to a reader fail with a descriptive error, and files
+//! written before a tag existed keep loading unchanged.
 //!
 //! Readers reject the other segment types with a descriptive error instead
-//! of misparsing them.
+//! of misparsing them, reject trailing bytes after any payload, and never
+//! hand untrusted length fields to eager allocations (a lying header fails
+//! with the typed truncation error instead of aborting on OOM).
 
+use crate::data::mapped::{self, AnnexWriter, ColdContext, VectorFile};
 use crate::data::EmbeddingSet;
 use crate::error::{OpdrError, Result};
 use crate::index::io::{read_u32, read_u64};
 use crate::index::AnnIndex;
-use std::io::{Read, Write};
+use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::Path;
+use std::sync::Arc;
 
 const MAGIC: &[u8; 4] = b"OPDR";
 const VERSION: u32 = 1;
 const INDEX_VERSION: u32 = 2;
 const SHARDED_INDEX_VERSION: u32 = 3;
 const DELTA_INDEX_VERSION: u32 = 4;
+const COLD_INDEX_VERSION: u32 = mapped::COLD_VERSION;
 
 /// Serialize an embedding set to a writer.
 pub fn write_embeddings<W: Write>(set: &EmbeddingSet, w: &mut W) -> Result<()> {
@@ -73,7 +91,10 @@ pub fn read_embeddings<R: Read>(r: &mut R) -> Result<EmbeddingSet> {
         return Err(OpdrError::data("store: bad magic"));
     }
     let version = read_u32(r)?;
-    if version == INDEX_VERSION || version == SHARDED_INDEX_VERSION || version == DELTA_INDEX_VERSION
+    if version == INDEX_VERSION
+        || version == SHARDED_INDEX_VERSION
+        || version == DELTA_INDEX_VERSION
+        || version == COLD_INDEX_VERSION
     {
         return Err(OpdrError::data(
             "store: file holds an index segment, not an embedding set (use load_index)",
@@ -103,13 +124,29 @@ pub fn read_embeddings<R: Read>(r: &mut R) -> Result<EmbeddingSet> {
     if count > 1 << 31 {
         return Err(OpdrError::data("store: payload too large"));
     }
-    let mut data = Vec::with_capacity(count);
+    // Bounded preallocation: `count` is an untrusted length field, so the
+    // vector grows only as bytes actually arrive (a lying header fails
+    // with the truncation error instead of aborting on OOM).
+    let mut data = Vec::with_capacity(count.min(crate::index::io::ALLOC_CHUNK));
     let mut buf = [0u8; 4];
     for _ in 0..count {
         r.read_exact(&mut buf)?;
         data.push(f32::from_le_bytes(buf));
     }
+    reject_trailing(r, "the embedding payload")?;
     EmbeddingSet::new(label, dim, data)
+}
+
+/// Declared-count/length mismatches leave payload behind; surface trailing
+/// bytes instead of silently dropping rows, shards or whole records.
+fn reject_trailing(r: &mut impl Read, what: &str) -> Result<()> {
+    let mut probe = [0u8; 1];
+    if r.read(&mut probe)? != 0 {
+        return Err(OpdrError::data(format!(
+            "store: trailing bytes after {what} (count mismatch?)"
+        )));
+    }
+    Ok(())
 }
 
 /// Save to a file path.
@@ -145,7 +182,9 @@ pub fn write_index<W: Write>(index: &dyn AnnIndex, w: &mut W) -> Result<()> {
 }
 
 /// Deserialize an ANN index from an `OPDR` version-2 (single-segment),
-/// version-3 (sharded) or version-4 (delta-augmented) index file.
+/// version-3 (sharded), version-4 (delta-augmented) or version-5
+/// (cold-tier; heap-decoded — a streaming reader has no file to map) index
+/// file.
 pub fn read_index<R: Read>(r: &mut R) -> Result<Box<dyn AnnIndex>> {
     let mut magic = [0u8; 4];
     r.read_exact(&mut magic)?;
@@ -158,17 +197,6 @@ pub fn read_index<R: Read>(r: &mut R) -> Result<Box<dyn AnnIndex>> {
             "store: file holds an embedding set, not an index segment (use load)",
         ));
     }
-    // Declared-count/length mismatches leave payload behind; surface
-    // trailing bytes instead of silently dropping rows or shards.
-    let reject_trailing = |r: &mut R, what: &str| -> Result<()> {
-        let mut probe = [0u8; 1];
-        if r.read(&mut probe)? != 0 {
-            return Err(OpdrError::data(format!(
-                "store: trailing bytes after {what} (count mismatch?)"
-            )));
-        }
-        Ok(())
-    };
     if version == SHARDED_INDEX_VERSION {
         let index = crate::index::shard::ShardedIndex::read_from(r)?;
         reject_trailing(r, "the last shard")?;
@@ -179,14 +207,83 @@ pub fn read_index<R: Read>(r: &mut R) -> Result<Box<dyn AnnIndex>> {
         reject_trailing(r, "the delta record")?;
         return Ok(Box::new(index));
     }
+    if version == COLD_INDEX_VERSION {
+        // Streaming (pathless) readers cannot mmap; decode the annex to
+        // the heap — results are bit-identical to the mapped tier.
+        return read_cold_index(r);
+    }
     if version != INDEX_VERSION {
         return Err(OpdrError::data(format!(
             "store: unsupported version {version} (index segments are versions \
-             {INDEX_VERSION}, {SHARDED_INDEX_VERSION} and {DELTA_INDEX_VERSION})"
+             {INDEX_VERSION}, {SHARDED_INDEX_VERSION}, {DELTA_INDEX_VERSION} and \
+             {COLD_INDEX_VERSION})"
         )));
     }
     let kind_tag = read_u32(r)?;
-    crate::index::read_index_payload(kind_tag, r)
+    let index = crate::index::read_index_payload(kind_tag, r)?;
+    reject_trailing(r, "the index payload")?;
+    Ok(index)
+}
+
+/// Read a version-5 cold index from a streaming reader (magic + version
+/// already consumed): header, body bytes, zero padding, annex rows — the
+/// annex lands on the heap because a generic reader has no file to map.
+fn read_cold_index<R: Read>(r: &mut R) -> Result<Box<dyn AnnIndex>> {
+    let header = mapped::ColdHeader::read_after_version(r)?;
+    let body = crate::index::io::read_bytes(r, header.body_len)?;
+    let mut pad = header.annex_offset - mapped::HEADER_BYTES - header.body_len;
+    let mut buf = [0u8; 64];
+    while pad > 0 {
+        let take = pad.min(buf.len());
+        r.read_exact(&mut buf[..take])?;
+        if buf[..take].iter().any(|&b| b != 0) {
+            return Err(OpdrError::data("store: nonzero padding before the cold annex"));
+        }
+        pad -= take;
+    }
+    let rows = crate::index::io::read_f32s(r, header.annex_elems())?;
+    reject_trailing(r, "the cold annex")?;
+    let file = VectorFile::from_heap(header.annex_n, header.annex_dim, rows)?;
+    parse_cold_body(header.inner_version, &body, &ColdContext { file: Arc::new(file) })
+}
+
+/// Decode the index body of a version-5 file against its (mapped or heap)
+/// annex.
+fn parse_cold_body(
+    inner_version: u32,
+    body: &[u8],
+    cx: &ColdContext,
+) -> Result<Box<dyn AnnIndex>> {
+    let mut r: &[u8] = body;
+    let index: Box<dyn AnnIndex> = match inner_version {
+        INDEX_VERSION => {
+            let kind_tag = read_u32(&mut r)?;
+            crate::index::read_index_payload_with(kind_tag, &mut r, Some(cx))?
+        }
+        SHARDED_INDEX_VERSION => {
+            Box::new(crate::index::shard::ShardedIndex::read_with(&mut r, Some(cx))?)
+        }
+        DELTA_INDEX_VERSION => {
+            Box::new(crate::index::delta::DeltaIndex::read_with(&mut r, Some(cx))?)
+        }
+        0 => {
+            return Err(OpdrError::data(
+                "store: file holds a bare cold vector annex, not an index segment",
+            ))
+        }
+        other => {
+            return Err(OpdrError::data(format!(
+                "store: unknown inner body framing {other} in a cold index file"
+            )))
+        }
+    };
+    if !r.is_empty() {
+        return Err(OpdrError::data(format!(
+            "store: {} unconsumed bytes after the cold index body",
+            r.len()
+        )));
+    }
+    Ok(index)
 }
 
 /// Save an index to a file path.
@@ -197,10 +294,75 @@ pub fn save_index(index: &dyn AnnIndex, path: impl AsRef<Path>) -> Result<()> {
     Ok(())
 }
 
-/// Load an index from a file path.
+/// Serialize an ANN index as a version-5 cold file: the index body keeps
+/// its version-2/3/4 framing (recorded in the header), while full-precision
+/// vector payloads (flat rows, PQ rerank tiers) move into the
+/// 64-byte-aligned annex so [`load_index`] can serve them mmap'd in place.
+///
+/// Note: the writer currently accumulates the annex in RAM before framing
+/// it (the annex offset depends on the finished body), so *saving* peaks at
+/// the same footprint as the RAM tier — only *serving* is zero-copy. A
+/// streaming writer (spill the annex to a temp file alongside the body,
+/// then splice) is a ROADMAP follow-on for collections whose tier exceeds
+/// memory.
+pub fn write_index_cold<W: Write>(index: &dyn AnnIndex, w: &mut W) -> Result<()> {
+    let mut annex = AnnexWriter::new(index.dim());
+    let mut body: Vec<u8> = Vec::new();
+    let inner_version = if index.as_delta().is_some() {
+        DELTA_INDEX_VERSION
+    } else if index.as_sharded().is_some() {
+        SHARDED_INDEX_VERSION
+    } else {
+        body.extend_from_slice(&index.kind().tag().to_le_bytes());
+        INDEX_VERSION
+    };
+    index.write_cold(&mut body, &mut annex)?;
+    mapped::write_cold_framed(w, inner_version, &body, &annex)
+}
+
+/// Save an index as a version-5 cold file (see [`write_index_cold`]).
+pub fn save_index_cold(index: &dyn AnnIndex, path: impl AsRef<Path>) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    write_index_cold(index, &mut f)?;
+    f.flush()?;
+    Ok(())
+}
+
+/// Load an index from a file path. Version-5 cold files serve their vector
+/// annex zero-copy via mmap (heap fallback where mapping is unavailable);
+/// version 1–4 files load via the heap path unchanged.
 pub fn load_index(path: impl AsRef<Path>) -> Result<Box<dyn AnnIndex>> {
-    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
-    read_index(&mut f)
+    load_index_impl(path.as_ref(), true)
+}
+
+/// [`load_index`] forcing the heap tier for version-5 files (used by the
+/// bitwise mmap-vs-heap equivalence tests and by hosts without mmap).
+pub fn load_index_heap(path: impl AsRef<Path>) -> Result<Box<dyn AnnIndex>> {
+    load_index_impl(path.as_ref(), false)
+}
+
+fn load_index_impl(path: &Path, prefer_mmap: bool) -> Result<Box<dyn AnnIndex>> {
+    // Peek the magic + version to route cold files through the mapping
+    // path; anything else (including short files) takes the streaming
+    // reader, which produces the uniform typed errors.
+    let is_cold = {
+        let mut f = std::fs::File::open(path)?;
+        let mut head = [0u8; 8];
+        f.read_exact(&mut head).is_ok()
+            && &head[..4] == MAGIC
+            && u32::from_le_bytes(head[4..8].try_into().unwrap()) == COLD_INDEX_VERSION
+    };
+    if !is_cold {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        return read_index(&mut f);
+    }
+    let file = if prefer_mmap { VectorFile::open(path)? } else { VectorFile::open_heap(path)? };
+    let header = file.header().clone();
+    let mut f = std::fs::File::open(path)?;
+    f.seek(SeekFrom::Start(mapped::HEADER_BYTES as u64))?;
+    let mut body = vec![0u8; header.body_len];
+    f.read_exact(&mut body)?;
+    parse_cold_body(header.inner_version, &body, &ColdContext { file: Arc::new(file) })
 }
 
 #[cfg(test)]
@@ -611,6 +773,214 @@ mod tests {
         // A version-4 file is not confusable with an embedding set.
         let e = read_embeddings(&mut buf.as_slice()).unwrap_err().to_string();
         assert!(e.contains("index segment"), "{e}");
+    }
+
+    fn cold_fixture(pq: bool, shards: usize, delta: bool) -> (Box<dyn AnnIndex>, EmbeddingSet) {
+        use crate::config::IndexPolicy;
+        use crate::index::DeltaIndex;
+        use std::sync::Arc;
+        let set = synth::generate(DatasetKind::Flickr30k, 72, 8, 31);
+        let policy = IndexPolicy {
+            kind: crate::index::IndexKind::Exact,
+            exact_threshold: 0,
+            pq,
+            rerank_depth: 80,
+            shards,
+            shard_min_vectors: 1,
+            ..Default::default()
+        };
+        let main_rows = if delta { 60 } else { 72 };
+        let main = crate::index::build_index(
+            &set.data()[..main_rows * 8],
+            8,
+            crate::metrics::Metric::SqEuclidean,
+            &policy,
+            13,
+        )
+        .unwrap();
+        let idx: Box<dyn AnnIndex> = if delta {
+            Box::new(
+                DeltaIndex::from_parts(Arc::from(main), set.data()[main_rows * 8..].to_vec())
+                    .unwrap(),
+            )
+        } else {
+            main
+        };
+        (idx, set)
+    }
+
+    #[test]
+    fn cold_v5_roundtrips_mmap_and_heap_bitwise() {
+        let dir = std::env::temp_dir().join(format!("opdr_store_v5_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let cases =
+            [(true, 1, false), (false, 1, false), (true, 3, false), (true, 1, true)];
+        for (pq, shards, delta) in cases {
+            let (idx, set) = cold_fixture(pq, shards, delta);
+            let path = dir.join(format!("v5-{pq}-{shards}-{delta}.opdx"));
+            save_index_cold(idx.as_ref(), &path).unwrap();
+            // Declared as version 5 on disk.
+            let raw = std::fs::read(&path).unwrap();
+            assert_eq!(u32::from_le_bytes(raw[4..8].try_into().unwrap()), 5);
+            let via_mmap = load_index(&path).unwrap();
+            let via_heap = load_index_heap(&path).unwrap();
+            assert_eq!(via_mmap.len(), idx.len());
+            assert_eq!(via_heap.len(), idx.len());
+            assert!(via_mmap.matches_data(set.data()), "mapped rows must be bitwise");
+            assert!(via_heap.matches_data(set.data()));
+            assert_eq!(via_heap.mapped_bytes(), 0, "forced heap load maps nothing");
+            if pq {
+                // The cold tier covers the PQ main's rows (a delta wrapper
+                // keeps its write buffer inline and out of the tier).
+                let main_rows = if delta { 60 } else { 72 };
+                assert_eq!(via_mmap.cold_bytes(), main_rows * 8 * 4);
+            }
+            // Mapped, heap-loaded and original indexes search bitwise
+            // identically (pq={pq} shards={shards} delta={delta}).
+            for qi in [0usize, 35, 71] {
+                let a = idx.search(set.vector(qi), 6).unwrap();
+                let b = via_mmap.search(set.vector(qi), 6).unwrap();
+                let c = via_heap.search(set.vector(qi), 6).unwrap();
+                crate::testing::assert_same_neighbors(&a, &b);
+                crate::testing::assert_same_neighbors(&a, &c);
+            }
+            // The streaming reader (no path to map) decodes it too.
+            let via_stream = read_index(&mut raw.as_slice()).unwrap();
+            let a = idx.search(set.vector(7), 5).unwrap();
+            let b = via_stream.search(set.vector(7), 5).unwrap();
+            crate::testing::assert_same_neighbors(&a, &b);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cold_v5_corruption_rejected() {
+        let dir = std::env::temp_dir().join(format!("opdr_store_v5c_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let (idx, _) = cold_fixture(true, 1, false);
+        let path = dir.join("v5.opdx");
+        save_index_cold(idx.as_ref(), &path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        let try_load = |bytes: &[u8]| -> Result<Box<dyn AnnIndex>> {
+            let bad = dir.join("bad.opdx");
+            std::fs::write(&bad, bytes).unwrap();
+            let mapped = load_index(&bad);
+            let heap = load_index_heap(&bad);
+            let streamed = read_index(&mut &bytes[..]);
+            assert_eq!(mapped.is_err(), heap.is_err());
+            assert_eq!(mapped.is_err(), streamed.is_err());
+            mapped
+        };
+        // Truncation at several cuts (header, body, annex).
+        for cut in [8usize, 40, 63, good.len() / 2, good.len() - 3] {
+            assert!(try_load(&good[..cut]).is_err(), "cut at {cut} accepted");
+        }
+        // Trailing bytes after the annex.
+        let mut more = good.clone();
+        more.extend_from_slice(&[0xAB; 3]);
+        assert!(try_load(&more).is_err());
+        // Nonzero padding between body and annex (the header pins the
+        // aligned offset, so padding bytes are load-bearing zeros).
+        let body_len =
+            u64::from_le_bytes(good[40..48].try_into().unwrap()) as usize;
+        let annex_off = u64::from_le_bytes(good[24..32].try_into().unwrap()) as usize;
+        if annex_off > 64 + body_len {
+            let mut bad = good.clone();
+            bad[annex_off - 1] = 7;
+            assert!(try_load(&bad).is_err(), "nonzero padding accepted");
+        }
+        // A bare annex (no body) is a vector file, not an index.
+        let rows = vec![0.5f32; 32];
+        let bare = dir.join("bare.opdr");
+        crate::data::mapped::write_cold_file(&bare, &rows, 4).unwrap();
+        let e = load_index(&bare).unwrap_err().to_string();
+        assert!(e.contains("bare cold vector annex"), "{e}");
+        // And a v5 file is not confusable with an embedding set.
+        let e = read_embeddings(&mut good.as_slice()).unwrap_err().to_string();
+        assert!(e.contains("index segment"), "{e}");
+        // An absurd annex reference inside the body is range-checked: flip
+        // the external start row (last 8 body bytes of the pq record) to a
+        // huge value. The body layout ends with the u64 start row.
+        let mut bad = good.clone();
+        bad[64 + body_len - 8..64 + body_len].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(try_load(&bad).is_err(), "absurd annex start row accepted");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn trailing_bytes_rejected_for_v1_and_v2() {
+        // Hardening sweep: v3/v4 already rejected trailing bytes; v1
+        // embedding sets and v2 single-segment indexes now do too.
+        let set = synth::generate(DatasetKind::Esc50, 5, 4, 9);
+        let mut buf = Vec::new();
+        write_embeddings(&set, &mut buf).unwrap();
+        buf.push(0xCD);
+        let e = read_embeddings(&mut buf.as_slice()).unwrap_err().to_string();
+        assert!(e.contains("trailing bytes"), "{e}");
+
+        let (buf, _) = sharded_fixture(1, false);
+        let mut bad = buf.clone();
+        bad.extend_from_slice(&[0xCD; 2]);
+        let e = read_index(&mut bad.as_slice()).unwrap_err().to_string();
+        assert!(e.contains("trailing bytes"), "{e}");
+    }
+
+    #[test]
+    fn absurd_length_fields_fail_without_huge_allocation() {
+        // Hardening sweep: length fields from corrupt/hostile files used to
+        // be fed to eager allocations unchecked; a lying header must fail
+        // with the typed truncation/corruption error, never abort on OOM.
+        // Each case patches one length field to an absurd-but-under-cap
+        // value over a tiny file.
+        let big = (1u64 << 29).to_le_bytes(); // 2^29 elements, well under MAX_ELEMS
+
+        // v1 embedding set: n field (magic 4 | version 4 | label_len 4 |
+        // label .. | n 8 | dim 8).
+        let set = EmbeddingSet::new("ab", 4, vec![0.0; 8]).unwrap();
+        let mut buf = Vec::new();
+        write_embeddings(&set, &mut buf).unwrap();
+        let n_off = 4 + 4 + 4 + 2;
+        buf[n_off..n_off + 8].copy_from_slice(&big);
+        assert!(read_embeddings(&mut buf.as_slice()).is_err());
+
+        // v2 flat exact index: n field of the flat record (magic 4 |
+        // version 4 | kind 4 | metric 1 | storage tag 1 | n 8 | dim 8).
+        let (idx, _) = cold_fixture(false, 1, false);
+        let mut buf = Vec::new();
+        write_index(idx.as_ref(), &mut buf).unwrap();
+        buf[14..22].copy_from_slice(&big);
+        assert!(read_index(&mut buf.as_slice()).is_err());
+
+        // v2 pq index: n field of the pq record (same prefix).
+        let (idx, _) = cold_fixture(true, 1, false);
+        let mut buf = Vec::new();
+        write_index(idx.as_ref(), &mut buf).unwrap();
+        buf[14..22].copy_from_slice(&big);
+        assert!(read_index(&mut buf.as_slice()).is_err());
+
+        // v3 sharded: first shard's payload length (magic 4 | version 4 |
+        // count 4 | kind 4 | metric 1 | n 8 | dim 8 | start 8 | len 8).
+        let (buf, _) = sharded_fixture(2, false);
+        let mut bad = buf.clone();
+        bad[41..49].copy_from_slice(&big);
+        assert!(read_index(&mut bad.as_slice()).is_err());
+
+        // v4 delta: the delta record's row count (last 16 + rows bytes; patch
+        // via the known tail layout: metric 1 | n 8 | dim 8 | rows).
+        let (buf, _) = delta_fixture(1);
+        let rows_bytes = 12 * 8 * 4; // delta_fixture appends 12 rows of dim 8
+        let n_off = buf.len() - rows_bytes - 16;
+        let mut bad = buf.clone();
+        bad[n_off..n_off + 8].copy_from_slice(&big);
+        assert!(read_index(&mut bad.as_slice()).is_err());
+
+        // v5 cold: body length field (offset 40) inflated past the file.
+        let (idx, _) = cold_fixture(true, 1, false);
+        let mut buf = Vec::new();
+        write_index_cold(idx.as_ref(), &mut buf).unwrap();
+        let mut bad = buf.clone();
+        bad[40..48].copy_from_slice(&big);
+        assert!(read_index(&mut bad.as_slice()).is_err());
     }
 
     #[test]

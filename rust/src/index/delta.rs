@@ -41,6 +41,7 @@
 //! Persistence: a delta-augmented index is written as a version-4 `OPDR`
 //! file (main payload + a delta record); see [`crate::data::store`].
 
+use crate::data::mapped::{AnnexWriter, ColdContext};
 use crate::error::{OpdrError, Result};
 use crate::index::{io, AnnIndex, IndexKind};
 use crate::knn::topk::merge_top_k;
@@ -224,6 +225,10 @@ impl AnnIndex for DeltaIndex {
         self.main.cold_bytes()
     }
 
+    fn mapped_bytes(&self) -> usize {
+        self.main.mapped_bytes()
+    }
+
     fn search(&self, query: &[f32], k: usize) -> Result<Vec<Neighbor>> {
         self.check_query(query)?;
         let main_hits = self.main.search(query, k)?;
@@ -249,30 +254,52 @@ impl AnnIndex for DeltaIndex {
     /// `u64` dim, row-major f32 rows). The store frames this as an `OPDR`
     /// version-4 file ([`crate::data::store::write_index`]).
     fn write_to(&self, w: &mut dyn Write) -> Result<()> {
+        self.write_impl(w, None)
+    }
+
+    /// Cold (version-5) serialization: the main's full-precision payloads
+    /// externalize into the annex; the delta rows stay inline — they are
+    /// the bounded hot write buffer (`[serve] delta_max_vectors`), and the
+    /// next compaction folds them into the mapped main anyway.
+    fn write_cold(&self, w: &mut dyn Write, annex: &mut AnnexWriter) -> Result<()> {
+        self.write_impl(w, Some(annex))
+    }
+}
+
+impl DeltaIndex {
+    fn write_impl(&self, w: &mut dyn Write, annex: Option<&mut AnnexWriter>) -> Result<()> {
         let sharded = self.main.as_sharded().is_some();
         io::write_u8(w, u8::from(sharded))?;
         if !sharded {
             io::write_u32(w, self.main.kind().tag())?;
         }
-        self.main.write_to(w)?;
+        match annex {
+            Some(a) => self.main.write_cold(w, a)?,
+            None => self.main.write_to(w)?,
+        }
         io::write_u8(w, io::metric_tag(self.metric))?;
         io::write_u64(w, self.delta_len() as u64)?;
         io::write_u64(w, self.dim as u64)?;
         io::write_f32s(w, &self.rows)
     }
-}
 
-impl DeltaIndex {
     /// Deserialize (inverse of [`AnnIndex::write_to`]); the delta record is
     /// validated against the decoded main so a corrupt or mismatched file
     /// fails loudly instead of serving wrong rows.
     pub(crate) fn read_from(r: &mut dyn Read) -> Result<DeltaIndex> {
+        DeltaIndex::read_with(r, None)
+    }
+
+    /// [`DeltaIndex::read_from`] with an optional cold context (version-5
+    /// files: the main's external rows resolve against the file's mapped
+    /// annex; the delta record is always inline).
+    pub(crate) fn read_with(r: &mut dyn Read, cx: Option<&ColdContext>) -> Result<DeltaIndex> {
         let main: Box<dyn AnnIndex> = match io::read_u8(r)? {
             0 => {
                 let kind_tag = io::read_u32(r)?;
-                crate::index::read_index_payload(kind_tag, r)?
+                crate::index::read_index_payload_with(kind_tag, r, cx)?
             }
-            1 => Box::new(crate::index::shard::ShardedIndex::read_from(r)?),
+            1 => Box::new(crate::index::shard::ShardedIndex::read_with(r, cx)?),
             other => {
                 return Err(OpdrError::data(format!(
                     "delta index: unknown main layout flag {other}"

@@ -7,6 +7,7 @@
 //! ADC table sweep followed by the full-precision rerank stage: at
 //! exhaustive `rerank_depth` this is bit-identical to the flat scan.
 
+use crate::data::mapped::{AnnexWriter, ColdContext};
 use crate::error::{OpdrError, Result};
 use crate::index::{io, pq, AnnIndex, IndexKind, StorageSpec, VectorStore};
 use crate::knn::topk::top_k_smallest;
@@ -39,9 +40,20 @@ impl ExactIndex {
 
     /// Deserialize (payload written by [`AnnIndex::write_to`]).
     pub(crate) fn read_from(r: &mut dyn Read) -> Result<ExactIndex> {
+        ExactIndex::read_with(r, None)
+    }
+
+    /// [`ExactIndex::read_from`] with an optional cold context (version-5
+    /// files: external payloads resolve against the file's mapped annex).
+    pub(crate) fn read_with(r: &mut dyn Read, cx: Option<&ColdContext>) -> Result<ExactIndex> {
         let metric = io::metric_from_tag(io::read_u8(r)?)?;
-        let store = VectorStore::read_from(r)?;
+        let store = VectorStore::read_with(r, cx)?;
         Ok(ExactIndex { metric, store })
+    }
+
+    fn write_impl(&self, w: &mut dyn Write, annex: Option<&mut AnnexWriter>) -> Result<()> {
+        io::write_u8(w, io::metric_tag(self.metric))?;
+        self.store.write_with(w, annex)
     }
 }
 
@@ -78,6 +90,10 @@ impl AnnIndex for ExactIndex {
         self.store.cold_bytes()
     }
 
+    fn mapped_bytes(&self) -> usize {
+        self.store.mapped_bytes()
+    }
+
     fn matches_data(&self, data: &[f32]) -> bool {
         self.store.matches(data)
     }
@@ -106,8 +122,11 @@ impl AnnIndex for ExactIndex {
     }
 
     fn write_to(&self, w: &mut dyn Write) -> Result<()> {
-        io::write_u8(w, io::metric_tag(self.metric))?;
-        self.store.write_to(w)
+        self.write_impl(w, None)
+    }
+
+    fn write_cold(&self, w: &mut dyn Write, annex: &mut AnnexWriter) -> Result<()> {
+        self.write_impl(w, Some(annex))
     }
 }
 
@@ -196,7 +215,8 @@ mod tests {
         let flat =
             ExactIndex::build(&data, dim, Metric::SqEuclidean, &StorageSpec::flat(), 3).unwrap();
         for opq in [false, true] {
-            let spec = StorageSpec::Pq(PqParams { opq, rerank_depth: n, ..Default::default() });
+            let spec =
+                StorageSpec::pq_with(PqParams { opq, rerank_depth: n, ..Default::default() });
             let pq = ExactIndex::build(&data, dim, Metric::SqEuclidean, &spec, 3).unwrap();
             assert_eq!(pq.storage_name(), "pq");
             assert!(pq.cold_bytes() > 0);

@@ -27,6 +27,7 @@
 //! bit-identical indexes, and a serialize/deserialize round-trip preserves
 //! search results exactly.
 
+use crate::data::mapped::{AnnexWriter, ColdContext};
 use crate::error::{OpdrError, Result};
 use crate::index::{io, pq, AnnIndex, IndexKind, StorageSpec, VectorStore};
 use crate::knn::Neighbor;
@@ -205,6 +206,12 @@ impl HnswIndex {
     /// structural invariants so a corrupt file cannot cause out-of-bounds
     /// traversal.
     pub(crate) fn read_from(r: &mut dyn Read) -> Result<HnswIndex> {
+        HnswIndex::read_with(r, None)
+    }
+
+    /// [`HnswIndex::read_from`] with an optional cold context (version-5
+    /// files: external payloads resolve against the file's mapped annex).
+    pub(crate) fn read_with(r: &mut dyn Read, cx: Option<&ColdContext>) -> Result<HnswIndex> {
         let metric = io::metric_from_tag(io::read_u8(r)?)?;
         let m = io::read_u64_usize(r)?;
         let ef_construction = io::read_u64_usize(r)?;
@@ -218,8 +225,10 @@ impl HnswIndex {
         if entry as usize >= n || max_level > MAX_LEVEL_CAP as usize {
             return Err(OpdrError::data("hnsw: corrupt entry point"));
         }
-        let mut levels = Vec::with_capacity(n);
-        let mut links = Vec::with_capacity(n);
+        // `n` is untrusted: bound the eager preallocations so a lying
+        // header truncates instead of aborting on OOM.
+        let mut levels = Vec::with_capacity(n.min(io::ALLOC_CHUNK));
+        let mut links = Vec::with_capacity(n.min(io::ALLOC_CHUNK));
         for _ in 0..n {
             let l = io::read_u8(r)?;
             if l > MAX_LEVEL_CAP {
@@ -231,16 +240,12 @@ impl HnswIndex {
                 if len > n {
                     return Err(OpdrError::data("hnsw: corrupt adjacency length"));
                 }
-                let mut list = Vec::with_capacity(len);
-                for _ in 0..len {
-                    list.push(io::read_u32(r)?);
-                }
-                per_node.push(list);
+                per_node.push(io::read_u32s(r, len)?);
             }
             levels.push(l);
             links.push(per_node);
         }
-        let store = VectorStore::read_from(r)?;
+        let store = VectorStore::read_with(r, cx)?;
         if store.len() != n {
             return Err(OpdrError::data("hnsw: store length mismatch"));
         }
@@ -263,6 +268,26 @@ impl HnswIndex {
         // topology already reflects it, so the default is recorded.
         let params = HnswParams { m, ef_construction, ef_search, heuristic: true };
         Ok(HnswIndex { metric, params, entry, max_level, levels, links, store })
+    }
+
+    fn write_impl(&self, w: &mut dyn Write, annex: Option<&mut AnnexWriter>) -> Result<()> {
+        io::write_u8(w, io::metric_tag(self.metric))?;
+        io::write_u64(w, self.params.m as u64)?;
+        io::write_u64(w, self.params.ef_construction as u64)?;
+        io::write_u64(w, self.params.ef_search as u64)?;
+        io::write_u64(w, self.entry as u64)?;
+        io::write_u64(w, self.max_level as u64)?;
+        io::write_u64(w, self.len() as u64)?;
+        for (node, per_node) in self.links.iter().enumerate() {
+            io::write_u8(w, self.levels[node])?;
+            for list in per_node {
+                io::write_u32(w, list.len() as u32)?;
+                for &id in list {
+                    io::write_u32(w, id)?;
+                }
+            }
+        }
+        self.store.write_with(w, annex)
     }
 }
 
@@ -302,6 +327,10 @@ impl AnnIndex for HnswIndex {
 
     fn cold_bytes(&self) -> usize {
         self.store.cold_bytes()
+    }
+
+    fn mapped_bytes(&self) -> usize {
+        self.store.mapped_bytes()
     }
 
     fn matches_data(&self, data: &[f32]) -> bool {
@@ -354,23 +383,11 @@ impl AnnIndex for HnswIndex {
     }
 
     fn write_to(&self, w: &mut dyn Write) -> Result<()> {
-        io::write_u8(w, io::metric_tag(self.metric))?;
-        io::write_u64(w, self.params.m as u64)?;
-        io::write_u64(w, self.params.ef_construction as u64)?;
-        io::write_u64(w, self.params.ef_search as u64)?;
-        io::write_u64(w, self.entry as u64)?;
-        io::write_u64(w, self.max_level as u64)?;
-        io::write_u64(w, self.len() as u64)?;
-        for (node, per_node) in self.links.iter().enumerate() {
-            io::write_u8(w, self.levels[node])?;
-            for list in per_node {
-                io::write_u32(w, list.len() as u32)?;
-                for &id in list {
-                    io::write_u32(w, id)?;
-                }
-            }
-        }
-        self.store.write_to(w)
+        self.write_impl(w, None)
+    }
+
+    fn write_cold(&self, w: &mut dyn Write, annex: &mut AnnexWriter) -> Result<()> {
+        self.write_impl(w, Some(annex))
     }
 }
 
@@ -724,7 +741,7 @@ mod tests {
         let n = 30;
         let data = normal_data(n, dim, 71);
         let params = HnswParams { m: n, ef_construction: 2 * n, ef_search: 4 * n, heuristic: true };
-        let spec = StorageSpec::Pq(PqParams { rerank_depth: n, ..Default::default() });
+        let spec = StorageSpec::pq_with(PqParams { rerank_depth: n, ..Default::default() });
         let idx =
             HnswIndex::build(&data, dim, Metric::SqEuclidean, params, &spec, 7).unwrap();
         assert!(idx.quantized());

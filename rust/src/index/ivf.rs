@@ -9,6 +9,7 @@
 //! parameter-free, and the whole structure serializes into the `OPDR` index
 //! segment format.
 
+use crate::data::mapped::{AnnexWriter, ColdContext};
 use crate::error::{OpdrError, Result};
 use crate::index::{io, pq, AnnIndex, IndexKind, StorageSpec, VectorStore};
 use crate::knn::ivf::{kmeans_train, nearest_centroid};
@@ -80,6 +81,12 @@ impl IvfIndex {
 
     /// Deserialize (payload written by [`AnnIndex::write_to`]).
     pub(crate) fn read_from(r: &mut dyn Read) -> Result<IvfIndex> {
+        IvfIndex::read_with(r, None)
+    }
+
+    /// [`IvfIndex::read_from`] with an optional cold context (version-5
+    /// files: external payloads resolve against the file's mapped annex).
+    pub(crate) fn read_with(r: &mut dyn Read, cx: Option<&ColdContext>) -> Result<IvfIndex> {
         let metric = io::metric_from_tag(io::read_u8(r)?)?;
         let nlist = io::read_u64_usize(r)?;
         let nprobe = io::read_u64_usize(r)?;
@@ -90,20 +97,19 @@ impl IvfIndex {
         if nprobe == 0 || nprobe > nlist {
             return Err(OpdrError::data("ivf index: corrupt nprobe"));
         }
+        // `nlist` is untrusted: bound the eager preallocation and let the
+        // lists grow as bytes arrive (a lying header must truncate, not
+        // abort on OOM).
         let centroids = io::read_f32s(r, io::checked_count(nlist, dim)?)?;
-        let mut lists = Vec::with_capacity(nlist);
+        let mut lists = Vec::with_capacity(nlist.min(io::ALLOC_CHUNK));
         for _ in 0..nlist {
             let len = io::read_u64_usize(r)?;
             if len > io::MAX_ELEMS {
                 return Err(OpdrError::data("ivf index: corrupt list length"));
             }
-            let mut list = Vec::with_capacity(len);
-            for _ in 0..len {
-                list.push(io::read_u32(r)?);
-            }
-            lists.push(list);
+            lists.push(io::read_u32s(r, len)?);
         }
-        let store = VectorStore::read_from(r)?;
+        let store = VectorStore::read_with(r, cx)?;
         if store.dim() != dim {
             return Err(OpdrError::data("ivf index: store dim mismatch"));
         }
@@ -112,6 +118,21 @@ impl IvfIndex {
             return Err(OpdrError::data("ivf index: list id out of range"));
         }
         Ok(IvfIndex { metric, nlist, nprobe, centroids, lists, store })
+    }
+
+    fn write_impl(&self, w: &mut dyn Write, annex: Option<&mut AnnexWriter>) -> Result<()> {
+        io::write_u8(w, io::metric_tag(self.metric))?;
+        io::write_u64(w, self.nlist as u64)?;
+        io::write_u64(w, self.nprobe as u64)?;
+        io::write_u64(w, self.dim() as u64)?;
+        io::write_f32s(w, &self.centroids)?;
+        for list in &self.lists {
+            io::write_u64(w, list.len() as u64)?;
+            for &id in list {
+                io::write_u32(w, id)?;
+            }
+        }
+        self.store.write_with(w, annex)
     }
 }
 
@@ -150,6 +171,10 @@ impl AnnIndex for IvfIndex {
 
     fn cold_bytes(&self) -> usize {
         self.store.cold_bytes()
+    }
+
+    fn mapped_bytes(&self) -> usize {
+        self.store.mapped_bytes()
     }
 
     fn matches_data(&self, data: &[f32]) -> bool {
@@ -198,18 +223,11 @@ impl AnnIndex for IvfIndex {
     }
 
     fn write_to(&self, w: &mut dyn Write) -> Result<()> {
-        io::write_u8(w, io::metric_tag(self.metric))?;
-        io::write_u64(w, self.nlist as u64)?;
-        io::write_u64(w, self.nprobe as u64)?;
-        io::write_u64(w, self.dim() as u64)?;
-        io::write_f32s(w, &self.centroids)?;
-        for list in &self.lists {
-            io::write_u64(w, list.len() as u64)?;
-            for &id in list {
-                io::write_u32(w, id)?;
-            }
-        }
-        self.store.write_to(w)
+        self.write_impl(w, None)
+    }
+
+    fn write_cold(&self, w: &mut dyn Write, annex: &mut AnnexWriter) -> Result<()> {
+        self.write_impl(w, Some(annex))
     }
 }
 

@@ -31,17 +31,25 @@
 //!   into the main index behind the coordinator's generation-guarded swap.
 //!
 //! Substrate × storage composition is expressed by [`StorageSpec`]: every
-//! substrate builds over a [`VectorStore`] that is flat f32, SQ8 or PQ, so
-//! the full matrix {exact, IVF, HNSW} × {f32, SQ8, PQ} (± sharding) is
-//! available from one [`IndexPolicy`].
+//! substrate builds over a [`VectorStore`] whose quantizer is flat f32, SQ8
+//! or PQ, so the full matrix {exact, IVF, HNSW} × {f32, SQ8, PQ}
+//! (± sharding) is available from one [`IndexPolicy`]. Orthogonally, the
+//! spec's [`ColdTier`] knob decides where full-precision rows live: in RAM
+//! (the default) or spilled to an mmap'd on-disk vector file
+//! ([`crate::data::mapped`]), so PQ rerank tiers and flat payloads can
+//! serve zero-copy from disk for collections larger than RAM.
 //!
 //! Indexes serialize through [`AnnIndex::write_to`] into the versioned
 //! `OPDR` binary format (see [`crate::data::store`]): single-segment indexes
 //! as version-2 segments, sharded indexes as version-3 multi-segment files
 //! with validated per-shard headers, and delta-augmented indexes as
-//! version-4 files carrying the main payload plus a delta record. All
-//! builds are deterministic from the seed: identical data + policy + seed ⇒
-//! bit-identical indexes.
+//! version-4 files carrying the main payload plus a delta record.
+//! [`AnnIndex::write_cold`] additionally serializes into the version-5 cold
+//! layout, externalizing full-precision payloads into a 64-byte-aligned
+//! annex that loads back mapped-in-place. All builds are deterministic from
+//! the seed: identical data + policy + seed ⇒ bit-identical indexes, and
+//! the cold tier never changes search results (bit-identical to the RAM
+//! tier — machine-checked in `tests/props.rs`).
 
 pub mod delta;
 pub mod exact;
@@ -60,10 +68,12 @@ pub use shard::ShardedIndex;
 pub use sq8::{Sq8Bounds, Sq8Storage};
 
 use crate::config::IndexPolicy;
+use crate::data::mapped::{AnnexWriter, ColdContext, RowBlock};
 use crate::error::{OpdrError, Result};
 use crate::knn::Neighbor;
 use crate::metrics::Metric;
 use std::io::{Read, Write};
+use std::path::PathBuf;
 use std::sync::Arc;
 
 /// Which search structure an index uses.
@@ -117,12 +127,25 @@ impl IndexKind {
     }
 }
 
-/// How a substrate stores its owned copy of the serving vectors. Assembled
-/// from [`IndexPolicy`] by [`IndexPolicy::storage_spec`]; the sharded
-/// builder may inject collection-wide [`Sq8Bounds`] so every segment shares
-/// one SQ8 codebook.
+/// Where a store's full-precision rows live: resident in RAM (the
+/// default), or spilled to an mmap'd on-disk vector file under the given
+/// directory ([`crate::data::mapped`]) so PQ rerank tiers and flat
+/// payloads serve zero-copy from disk. Quantized hot copies (SQ8 codes, PQ
+/// codes + codebooks) always stay resident — the tier only moves the
+/// full-precision bytes.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub enum ColdTier {
+    /// Full-precision rows stay in RAM.
+    #[default]
+    Ram,
+    /// Full-precision rows are spilled to (and served mmap'd from) cold
+    /// files under this directory.
+    Mmap(PathBuf),
+}
+
+/// Which quantizer a substrate's owned vector copy uses.
 #[derive(Debug, Clone, Default)]
-pub enum StorageSpec {
+pub enum Quantizer {
     /// Row-major f32 (no quantization).
     #[default]
     Flat,
@@ -137,20 +160,48 @@ pub enum StorageSpec {
     Pq(PqParams),
 }
 
+/// How a substrate stores its owned copy of the serving vectors: a
+/// [`Quantizer`] for the hot copy plus the [`ColdTier`] the full-precision
+/// rows live in. Assembled from [`IndexPolicy`] by
+/// [`IndexPolicy::storage_spec`]; the sharded builder may inject
+/// collection-wide [`Sq8Bounds`] so every segment shares one SQ8 codebook.
+#[derive(Debug, Clone, Default)]
+pub struct StorageSpec {
+    /// Hot-copy quantizer.
+    pub quant: Quantizer,
+    /// Tier for the full-precision rows (flat payloads, PQ rerank rows).
+    pub cold_tier: ColdTier,
+}
+
 impl StorageSpec {
+    fn of(quant: Quantizer) -> StorageSpec {
+        StorageSpec { quant, cold_tier: ColdTier::Ram }
+    }
+
     /// Flat f32 storage.
     pub fn flat() -> StorageSpec {
-        StorageSpec::Flat
+        StorageSpec::of(Quantizer::Flat)
     }
 
     /// Segment-locally trained SQ8 storage.
     pub fn sq8() -> StorageSpec {
-        StorageSpec::Sq8 { bounds: None }
+        StorageSpec::of(Quantizer::Sq8 { bounds: None })
     }
 
     /// PQ storage with default parameters.
     pub fn pq() -> StorageSpec {
-        StorageSpec::Pq(PqParams::default())
+        StorageSpec::of(Quantizer::Pq(PqParams::default()))
+    }
+
+    /// PQ storage with explicit parameters.
+    pub fn pq_with(params: PqParams) -> StorageSpec {
+        StorageSpec::of(Quantizer::Pq(params))
+    }
+
+    /// The same spec with its cold tier replaced.
+    pub fn with_cold_tier(mut self, tier: ColdTier) -> StorageSpec {
+        self.cold_tier = tier;
+        self
     }
 }
 
@@ -193,10 +244,19 @@ pub trait AnnIndex: Send + Sync + std::fmt::Debug {
     /// [`AnnIndex::cold_bytes`].
     fn memory_bytes(&self) -> usize;
 
-    /// Bytes of the cold rerank tier (PQ only; 0 otherwise). Held in RAM in
-    /// this implementation, but modeled as the tier a production deployment
-    /// would mmap from disk.
+    /// Bytes of the cold rerank tier (PQ only; 0 otherwise) — the
+    /// full-precision rows the two-stage search reranks against. Resident
+    /// when the tier is RAM-backed; see [`AnnIndex::mapped_bytes`] for the
+    /// portion served zero-copy from an mmap'd cold file instead.
     fn cold_bytes(&self) -> usize {
+        0
+    }
+
+    /// Bytes served zero-copy from mmap'd cold files (0 for RAM-resident
+    /// indexes). Counts both mapped PQ rerank tiers and mapped flat
+    /// payloads; `memory_bytes() + mapped-tier bytes` is the full logical
+    /// footprint, of which only `memory_bytes()` is resident.
+    fn mapped_bytes(&self) -> usize {
         0
     }
 
@@ -212,6 +272,17 @@ pub trait AnnIndex: Send + Sync + std::fmt::Debug {
     /// Serialize the index payload (kind tag and framing are written by
     /// [`crate::data::store::write_index`]).
     fn write_to(&self, w: &mut dyn Write) -> Result<()>;
+
+    /// Serialize the payload for the version-5 cold layout: full-precision
+    /// vector payloads (flat rows, PQ rerank tiers) are pushed into `annex`
+    /// and replaced by start-row references, so the loaded file can serve
+    /// them mapped in place. The default writes the ordinary inline payload
+    /// — correct for indexes with nothing to externalize; storage-bearing
+    /// substrates override it.
+    fn write_cold(&self, w: &mut dyn Write, annex: &mut AnnexWriter) -> Result<()> {
+        let _ = annex;
+        self.write_to(w)
+    }
 
     /// Concrete [`ShardedIndex`] view when this index is sharded. The store
     /// uses it to pick the multi-segment (version-3) format and the
@@ -293,27 +364,36 @@ pub fn build_index(
 /// Deserialize an index payload given its kind tag (the framing half lives
 /// in [`crate::data::store::read_index`]).
 pub(crate) fn read_index_payload(kind_tag: u32, r: &mut dyn Read) -> Result<Box<dyn AnnIndex>> {
+    read_index_payload_with(kind_tag, r, None)
+}
+
+/// [`read_index_payload`] with an optional cold context: inside a
+/// version-5 file, externalized vector payloads resolve against the file's
+/// annex (mapped or heap) instead of being decoded inline.
+pub(crate) fn read_index_payload_with(
+    kind_tag: u32,
+    r: &mut dyn Read,
+    cx: Option<&ColdContext>,
+) -> Result<Box<dyn AnnIndex>> {
     match IndexKind::from_tag(kind_tag)? {
-        IndexKind::Exact => Ok(Box::new(ExactIndex::read_from(r)?)),
-        IndexKind::Ivf => Ok(Box::new(IvfIndex::read_from(r)?)),
-        IndexKind::Hnsw => Ok(Box::new(HnswIndex::read_from(r)?)),
+        IndexKind::Exact => Ok(Box::new(ExactIndex::read_with(r, cx)?)),
+        IndexKind::Ivf => Ok(Box::new(IvfIndex::read_with(r, cx)?)),
+        IndexKind::Hnsw => Ok(Box::new(HnswIndex::read_with(r, cx)?)),
     }
 }
 
 // ---------------------------------------------------------------------------
-// Vector storage shared by the substrates: flat f32 or SQ8-quantized.
+// Vector storage shared by the substrates: flat f32, SQ8- or PQ-quantized.
 // ---------------------------------------------------------------------------
 
 /// Owned copy of the indexed vectors: flat `f32`, SQ8- or PQ-quantized.
+/// Full-precision rows (the flat payload, PQ's rerank tier) live in a
+/// [`RowBlock`], so they are served identically from RAM or from an mmap'd
+/// cold file ([`ColdTier::Mmap`]).
 #[derive(Debug, Clone, PartialEq)]
 pub enum VectorStore {
-    /// Row-major `n × dim` f32 payload.
-    Flat {
-        /// Vector dimensionality.
-        dim: usize,
-        /// Row-major payload.
-        data: Vec<f32>,
-    },
+    /// Row-major `n × dim` f32 payload (resident or tiered).
+    Flat(RowBlock),
     /// Scalar-quantized payload with per-dimension codebooks.
     Sq8(Sq8Storage),
     /// Product-quantized payload with per-subspace codebooks, optional OPQ
@@ -323,21 +403,32 @@ pub enum VectorStore {
 
 impl VectorStore {
     /// Build from row-major data per `spec` (`seed` drives PQ codebook
-    /// training; flat and SQ8 storage ignore it).
+    /// training; flat and SQ8 storage ignore it). With
+    /// [`ColdTier::Mmap`], full-precision rows are spilled to a cold file
+    /// under the configured directory and served mapped; search results are
+    /// bit-identical to the RAM tier either way.
     pub fn build(data: &[f32], dim: usize, spec: &StorageSpec, seed: u64) -> Result<VectorStore> {
         if dim == 0 || data.len() % dim != 0 {
             return Err(OpdrError::shape("vector store: bad data shape"));
         }
-        match spec {
-            StorageSpec::Flat => Ok(VectorStore::Flat { dim, data: data.to_vec() }),
-            StorageSpec::Sq8 { bounds: None } => {
-                Ok(VectorStore::Sq8(Sq8Storage::train(data, dim)?))
+        match &spec.quant {
+            Quantizer::Flat => {
+                let rows = match &spec.cold_tier {
+                    ColdTier::Ram => RowBlock::from_ram(dim, data.to_vec())?,
+                    ColdTier::Mmap(dir) => RowBlock::spill(dir, data, dim)?,
+                };
+                Ok(VectorStore::Flat(rows))
             }
-            StorageSpec::Sq8 { bounds: Some(b) } => {
+            Quantizer::Sq8 { bounds: None } => Ok(VectorStore::Sq8(Sq8Storage::train(data, dim)?)),
+            Quantizer::Sq8 { bounds: Some(b) } => {
                 Ok(VectorStore::Sq8(Sq8Storage::encode_with(b, data, dim)?))
             }
-            StorageSpec::Pq(params) => {
-                Ok(VectorStore::Pq(PqStorage::train(data, dim, params, seed)?))
+            Quantizer::Pq(params) => {
+                let mut pq = PqStorage::train(data, dim, params, seed)?;
+                if let ColdTier::Mmap(dir) = &spec.cold_tier {
+                    pq.spill_cold(dir)?;
+                }
+                Ok(VectorStore::Pq(pq))
             }
         }
     }
@@ -345,7 +436,7 @@ impl VectorStore {
     /// Number of stored vectors.
     pub fn len(&self) -> usize {
         match self {
-            VectorStore::Flat { dim, data } => data.len() / dim,
+            VectorStore::Flat(rows) => rows.n(),
             VectorStore::Sq8(s) => s.len(),
             VectorStore::Pq(p) => p.len(),
         }
@@ -359,7 +450,7 @@ impl VectorStore {
     /// Vector dimensionality.
     pub fn dim(&self) -> usize {
         match self {
-            VectorStore::Flat { dim, .. } => *dim,
+            VectorStore::Flat(rows) => rows.dim(),
             VectorStore::Sq8(s) => s.dim(),
             VectorStore::Pq(p) => p.dim(),
         }
@@ -367,13 +458,13 @@ impl VectorStore {
 
     /// True for quantized (SQ8 or PQ) storage.
     pub fn quantized(&self) -> bool {
-        !matches!(self, VectorStore::Flat { .. })
+        !matches!(self, VectorStore::Flat(_))
     }
 
     /// Storage name: `"f32"`, `"sq8"` or `"pq"`.
     pub fn name(&self) -> &'static str {
         match self {
-            VectorStore::Flat { .. } => "f32",
+            VectorStore::Flat(_) => "f32",
             VectorStore::Sq8(_) => "sq8",
             VectorStore::Pq(_) => "pq",
         }
@@ -396,9 +487,7 @@ impl VectorStore {
     #[inline]
     pub fn distance(&self, metric: Metric, query: &[f32], id: usize, scratch: &mut Vec<f32>) -> f32 {
         match self {
-            VectorStore::Flat { dim, data } => {
-                metric.distance(query, &data[id * dim..(id + 1) * dim])
-            }
+            VectorStore::Flat(rows) => metric.distance(query, rows.row(id)),
             VectorStore::Sq8(s) => {
                 scratch.resize(s.dim(), 0.0);
                 s.decode_into(id, scratch);
@@ -422,10 +511,12 @@ impl VectorStore {
         }
     }
 
-    /// Hot resident bytes of the payload (PQ excludes its rerank tier).
+    /// Resident bytes of the payload (PQ excludes its rerank tier; a
+    /// mapped flat payload counts 0 here — see
+    /// [`VectorStore::mapped_bytes`]).
     pub fn memory_bytes(&self) -> usize {
         match self {
-            VectorStore::Flat { data, .. } => data.len() * std::mem::size_of::<f32>(),
+            VectorStore::Flat(rows) => rows.resident_bytes(),
             VectorStore::Sq8(s) => s.memory_bytes(),
             VectorStore::Pq(p) => p.memory_bytes(),
         }
@@ -439,16 +530,23 @@ impl VectorStore {
         }
     }
 
+    /// Bytes served zero-copy from mmap'd cold files (mapped flat payloads
+    /// and mapped PQ rerank tiers; 0 when everything is resident).
+    pub fn mapped_bytes(&self) -> usize {
+        match self {
+            VectorStore::Flat(rows) => rows.mapped_bytes(),
+            VectorStore::Sq8(_) => 0,
+            VectorStore::Pq(p) => p.mapped_bytes(),
+        }
+    }
+
     /// True when this store holds (an encoding of) exactly `other`:
     /// bit-identical for flat and PQ storage (PQ keeps the original rows in
     /// its rerank tier), within half a quantization step per dimension for
     /// SQ8.
     pub fn matches(&self, other: &[f32]) -> bool {
         match self {
-            VectorStore::Flat { data, .. } => {
-                data.len() == other.len()
-                    && data.iter().zip(other).all(|(a, b)| a.to_bits() == b.to_bits())
-            }
+            VectorStore::Flat(rows) => rows.matches(other),
             VectorStore::Sq8(s) => {
                 let dim = s.dim();
                 if other.len() != s.len() * dim {
@@ -471,30 +569,59 @@ impl VectorStore {
         }
     }
 
-    /// Serialize (tag + payload). Tags: 0 = flat, 1 = SQ8, 2 = PQ (the
-    /// record kind added for the PQ subsystem; older readers reject it with
-    /// a descriptive error instead of misparsing).
-    pub(crate) fn write_to(&self, w: &mut dyn Write) -> Result<()> {
+    /// Serialize (tag + payload). Tags: 0 = flat inline, 1 = SQ8, 2 = PQ
+    /// inline (the record kind added for the PQ subsystem), and — only
+    /// inside version-5 cold files, where `annex` is present — 3 =
+    /// PQ-external and 4 = flat-external, whose full-precision rows live
+    /// in the file's annex as a `u64` start-row reference. Tags unknown to
+    /// a reader fail with a descriptive error instead of misparsing.
+    pub(crate) fn write_with(
+        &self,
+        w: &mut dyn Write,
+        annex: Option<&mut AnnexWriter>,
+    ) -> Result<()> {
         match self {
-            VectorStore::Flat { dim, data } => {
-                io::write_u8(w, 0)?;
-                io::write_u64(w, (data.len() / dim) as u64)?;
-                io::write_u64(w, *dim as u64)?;
-                io::write_f32s(w, data)
-            }
+            VectorStore::Flat(rows) => match annex {
+                None => {
+                    io::write_u8(w, 0)?;
+                    io::write_u64(w, rows.n() as u64)?;
+                    io::write_u64(w, rows.dim() as u64)?;
+                    rows.write_f32s(w)
+                }
+                Some(a) => {
+                    io::write_u8(w, 4)?;
+                    io::write_u64(w, rows.n() as u64)?;
+                    io::write_u64(w, rows.dim() as u64)?;
+                    io::write_u64(w, a.push_rows(rows)?)
+                }
+            },
             VectorStore::Sq8(s) => {
                 io::write_u8(w, 1)?;
                 s.write_to(w)
             }
-            VectorStore::Pq(p) => {
-                io::write_u8(w, 2)?;
-                p.write_to(w)
-            }
+            VectorStore::Pq(p) => match annex {
+                None => {
+                    io::write_u8(w, 2)?;
+                    p.write_to(w)
+                }
+                Some(a) => {
+                    io::write_u8(w, 3)?;
+                    p.write_external(w, a)
+                }
+            },
         }
     }
 
-    /// Deserialize (inverse of [`VectorStore::write_to`]).
-    pub(crate) fn read_from(r: &mut dyn Read) -> Result<VectorStore> {
+    /// [`VectorStore::write_with`] without an annex (the inline v2/3/4
+    /// layouts).
+    pub(crate) fn write_to(&self, w: &mut dyn Write) -> Result<()> {
+        self.write_with(w, None)
+    }
+
+    /// Deserialize (inverse of [`VectorStore::write_with`]). External tags
+    /// (3/4) require the cold context of the enclosing version-5 file;
+    /// outside one they fail with a typed error instead of misparsing.
+    pub(crate) fn read_with(r: &mut dyn Read, cx: Option<&ColdContext>) -> Result<VectorStore> {
         match io::read_u8(r)? {
             0 => {
                 let n = io::read_u64_usize(r)?;
@@ -504,12 +631,45 @@ impl VectorStore {
                 }
                 let count = io::checked_count(n, dim)?;
                 let data = io::read_f32s(r, count)?;
-                Ok(VectorStore::Flat { dim, data })
+                Ok(VectorStore::Flat(RowBlock::from_ram(dim, data)?))
             }
             1 => Ok(VectorStore::Sq8(Sq8Storage::read_from(r)?)),
             2 => Ok(VectorStore::Pq(PqStorage::read_from(r)?)),
+            3 => {
+                let cx = cx.ok_or_else(|| {
+                    OpdrError::data(
+                        "vector store: external PQ rerank tier outside a version-5 cold file",
+                    )
+                })?;
+                Ok(VectorStore::Pq(PqStorage::read_external(r, cx)?))
+            }
+            4 => {
+                let cx = cx.ok_or_else(|| {
+                    OpdrError::data(
+                        "vector store: external flat rows outside a version-5 cold file",
+                    )
+                })?;
+                let n = io::read_u64_usize(r)?;
+                let dim = io::read_u64_usize(r)?;
+                let start = io::read_u64_usize(r)?;
+                if dim == 0 || n == 0 {
+                    return Err(OpdrError::data("vector store: corrupt external flat header"));
+                }
+                if dim != cx.file.dim() {
+                    return Err(OpdrError::data(format!(
+                        "vector store: external rows are dim {dim} but the annex is dim {}",
+                        cx.file.dim()
+                    )));
+                }
+                Ok(VectorStore::Flat(RowBlock::tiered(Arc::clone(&cx.file), start, n)?))
+            }
             other => Err(OpdrError::data(format!("vector store: unknown storage tag {other}"))),
         }
+    }
+
+    /// [`VectorStore::read_with`] without a cold context.
+    pub(crate) fn read_from(r: &mut dyn Read) -> Result<VectorStore> {
+        VectorStore::read_with(r, None)
     }
 }
 
@@ -527,6 +687,16 @@ pub(crate) mod io {
     /// Cap on deserialized element counts (matches the embedding store's
     /// payload bound): corrupt headers must not trigger huge allocations.
     pub const MAX_ELEMS: usize = 1 << 31;
+
+    /// Eager-preallocation cap for length fields read from disk. A corrupt
+    /// or hostile header may declare any count up to [`MAX_ELEMS`]
+    /// (gibibytes); readers must not hand that straight to
+    /// `Vec::with_capacity`/`vec![0; n]` — they would abort on OOM before
+    /// the truncated payload gets a chance to fail the read. Instead every
+    /// read path preallocates at most this many elements and lets the
+    /// vector grow as bytes actually arrive, so a lying length field ends
+    /// in the ordinary typed truncation error.
+    pub const ALLOC_CHUNK: usize = 1 << 16;
 
     pub fn write_u8(w: &mut dyn Write, v: u8) -> Result<()> {
         w.write_all(&[v])?;
@@ -589,7 +759,9 @@ pub(crate) mod io {
         if count > MAX_ELEMS {
             return Err(OpdrError::data("index io: payload too large"));
         }
-        let mut out = Vec::with_capacity(count);
+        // Bounded preallocation: `count` comes from an untrusted length
+        // field, so the vector grows only as bytes actually arrive.
+        let mut out = Vec::with_capacity(count.min(ALLOC_CHUNK));
         let mut b = [0u8; 4];
         for _ in 0..count {
             r.read_exact(&mut b)?;
@@ -607,8 +779,31 @@ pub(crate) mod io {
         if count > MAX_ELEMS {
             return Err(OpdrError::data("index io: payload too large"));
         }
-        let mut out = vec![0u8; count];
-        r.read_exact(&mut out)?;
+        // Chunked, bounded-preallocation read: a lying length field fails
+        // with the typed truncation error instead of a huge upfront alloc.
+        let mut out = Vec::with_capacity(count.min(ALLOC_CHUNK));
+        let mut buf = [0u8; 8192];
+        let mut remaining = count;
+        while remaining > 0 {
+            let take = remaining.min(buf.len());
+            r.read_exact(&mut buf[..take])?;
+            out.extend_from_slice(&buf[..take]);
+            remaining -= take;
+        }
+        Ok(out)
+    }
+
+    /// Chunked u32 list read with the same bounded-preallocation contract.
+    pub fn read_u32s(r: &mut dyn Read, count: usize) -> Result<Vec<u32>> {
+        if count > MAX_ELEMS {
+            return Err(OpdrError::data("index io: payload too large"));
+        }
+        let mut out = Vec::with_capacity(count.min(ALLOC_CHUNK));
+        let mut b = [0u8; 4];
+        for _ in 0..count {
+            r.read_exact(&mut b)?;
+            out.push(u32::from_le_bytes(b));
+        }
         Ok(out)
     }
 
@@ -674,7 +869,7 @@ mod tests {
             (StorageSpec::flat(), "f32", false),
             (StorageSpec::sq8(), "sq8", true),
             (StorageSpec::pq(), "pq", true),
-            (StorageSpec::Pq(PqParams { opq: true, ..Default::default() }), "pq", true),
+            (StorageSpec::pq_with(PqParams { opq: true, ..Default::default() }), "pq", true),
         ] {
             let store = VectorStore::build(&data, dim, &spec, 7).unwrap();
             assert_eq!(store.len(), 20);
@@ -770,5 +965,61 @@ mod tests {
         assert!(pq.memory_bytes() < flat.memory_bytes());
         assert_eq!(pq.cold_bytes(), data.len() * 4);
         assert!(pq.matches(&data));
+    }
+
+    #[test]
+    fn mmap_cold_tier_builds_serve_bitwise_like_ram() {
+        let dir = std::env::temp_dir().join(format!("opdr_store_cold_{}", std::process::id()));
+        let mut rng = Rng::new(21);
+        let dim = 6;
+        let data = rng.normal_vec_f32(40 * dim);
+        let q = rng.normal_vec_f32(dim);
+        for spec in [StorageSpec::flat(), StorageSpec::pq()] {
+            let ram = VectorStore::build(&data, dim, &spec, 5).unwrap();
+            let cold_spec = spec.clone().with_cold_tier(ColdTier::Mmap(dir.clone()));
+            let cold = VectorStore::build(&data, dim, &cold_spec, 5).unwrap();
+            assert_eq!(cold.len(), 40);
+            assert!(cold.matches(&data), "{}: tiered rows must match the input", cold.name());
+            // Tiered accounting: the cold-tier size is backing-independent,
+            // and mapped bytes leave the resident count (on hosts where the
+            // mapping succeeds; the heap fallback stays resident but
+            // correct).
+            assert_eq!(cold.cold_bytes(), ram.cold_bytes(), "{}", cold.name());
+            match &cold {
+                // Flat: the payload itself moves tiers.
+                VectorStore::Flat(_) => assert_eq!(
+                    cold.memory_bytes() + cold.mapped_bytes(),
+                    ram.memory_bytes(),
+                    "flat: mapped bytes must leave the resident count"
+                ),
+                // PQ: the hot copy is unchanged; only the rerank tier maps.
+                VectorStore::Pq(_) => {
+                    assert_eq!(cold.memory_bytes(), ram.memory_bytes(), "pq hot copy");
+                    assert!(
+                        cold.mapped_bytes() == 0 || cold.mapped_bytes() == cold.cold_bytes(),
+                        "pq: the mapped bytes are the rerank tier or nothing"
+                    );
+                }
+                VectorStore::Sq8(_) => unreachable!("no sq8 spec in this loop"),
+            }
+            // Per-candidate distances are bit-identical across tiers.
+            let mut s1 = Vec::new();
+            let mut s2 = Vec::new();
+            for id in 0..40 {
+                let a = ram.distance(Metric::SqEuclidean, &q, id, &mut s1);
+                let b = cold.distance(Metric::SqEuclidean, &q, id, &mut s2);
+                assert_eq!(a.to_bits(), b.to_bits(), "{} id {id}", cold.name());
+            }
+        }
+        // SQ8 has no full-precision tier: the knob is a no-op by design.
+        let sq8 = VectorStore::build(
+            &data,
+            dim,
+            &StorageSpec::sq8().with_cold_tier(ColdTier::Mmap(dir.clone())),
+            5,
+        )
+        .unwrap();
+        assert_eq!(sq8.mapped_bytes(), 0);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

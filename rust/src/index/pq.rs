@@ -35,10 +35,16 @@
 //!
 //! The full-precision rows live in a `rerank` tier held by the storage but
 //! excluded from [`PqStorage::memory_bytes`] (reported separately by
-//! [`PqStorage::rerank_bytes`]): it models the cold tier a production
-//! deployment would serve from disk/mmap (a ROADMAP item), while codes +
-//! codebooks + rotation are the hot RAM-resident copy.
+//! [`PqStorage::rerank_bytes`]): codes + codebooks + rotation are the hot
+//! RAM-resident copy, while the rerank tier is a
+//! [`RowBlock`] — RAM-resident by default, or served
+//! **zero-copy from an mmap'd on-disk cold file** when the storage was
+//! built with [`crate::index::ColdTier::Mmap`] (or loaded from a version-5
+//! `OPDR` file, whose 64-byte-aligned annex maps in place). The tier never
+//! changes results: rerank distances are computed from the same bits
+//! either way.
 
+use crate::data::mapped::{AnnexWriter, ColdContext, RowBlock};
 use crate::error::{OpdrError, Result};
 use crate::index::io;
 use crate::knn::ivf::{kmeans_train, nearest_centroid};
@@ -101,8 +107,9 @@ pub struct PqStorage {
     codebooks: Vec<f32>,
     /// Row-major codes, `n × row_bytes` (nibble-packed when `ksub ≤ 16`).
     codes: Vec<u8>,
-    /// Full-precision rows (cold rerank tier, original/unrotated space).
-    rerank: Vec<f32>,
+    /// Full-precision rows (cold rerank tier, original/unrotated space) —
+    /// RAM-resident or served from an mmap'd cold file.
+    rerank: RowBlock,
 }
 
 impl PqStorage {
@@ -164,8 +171,21 @@ impl PqStorage {
             rotation,
             codebooks,
             codes,
-            rerank: data.to_vec(),
+            rerank: RowBlock::from_ram(dim, data.to_vec())?,
         })
+    }
+
+    /// Spill the rerank tier to a fresh cold file under `dir` and serve it
+    /// mapped (heap fallback where mmap is unavailable). The file lives
+    /// exactly as long as this storage; results are bit-identical to the
+    /// RAM tier.
+    pub fn spill_cold(&mut self, dir: &std::path::Path) -> Result<()> {
+        let mut rows = Vec::with_capacity(self.n * self.dim);
+        for i in 0..self.n {
+            rows.extend_from_slice(self.rerank.row(i));
+        }
+        self.rerank = RowBlock::spill(dir, &rows, self.dim)?;
+        Ok(())
     }
 
     /// Number of encoded vectors.
@@ -255,10 +275,11 @@ impl PqStorage {
         }
     }
 
-    /// Full-precision row `id` (the cold rerank tier).
+    /// Full-precision row `id` (the cold rerank tier — resident or served
+    /// zero-copy from the mapped cold file).
     #[inline]
     pub fn rerank_row(&self, id: usize) -> &[f32] {
-        &self.rerank[id * self.dim..(id + 1) * self.dim]
+        self.rerank.row(id)
     }
 
     /// Hot resident bytes: codes + codebooks + rotation. The full-precision
@@ -270,20 +291,28 @@ impl PqStorage {
             + self.rotation.as_ref().map_or(0, |r| r.len() * std::mem::size_of::<f32>())
     }
 
-    /// Bytes of the cold full-precision rerank tier.
+    /// Total bytes of the cold full-precision rerank tier (resident +
+    /// mapped; see [`PqStorage::mapped_bytes`] for the split).
     pub fn rerank_bytes(&self) -> usize {
-        self.rerank.len() * std::mem::size_of::<f32>()
+        self.rerank.total_bytes()
+    }
+
+    /// Rerank-tier bytes served zero-copy from an mmap'd cold file (0 for
+    /// the RAM tier or the heap fallback).
+    pub fn mapped_bytes(&self) -> usize {
+        self.rerank.mapped_bytes()
     }
 
     /// True when this store was built from exactly `other` (the rerank tier
     /// keeps the original rows, so the check is bitwise).
     pub fn matches(&self, other: &[f32]) -> bool {
-        self.rerank.len() == other.len()
-            && self.rerank.iter().zip(other).all(|(a, b)| a.to_bits() == b.to_bits())
+        self.rerank.matches(other)
     }
 
-    /// Serialize (the `pq` record kind inside `OPDR` index segments).
-    pub(crate) fn write_to(&self, w: &mut dyn Write) -> Result<()> {
+    /// Serialize the header + hot copy (everything but the rerank tier):
+    /// the shared prefix of the inline (tag 2) and external (tag 3)
+    /// records.
+    fn write_hot(&self, w: &mut dyn Write) -> Result<()> {
         io::write_u64(w, self.n as u64)?;
         io::write_u64(w, self.dim as u64)?;
         io::write_u64(w, self.m as u64)?;
@@ -294,14 +323,39 @@ impl PqStorage {
             io::write_f32s(w, r)?;
         }
         io::write_f32s(w, &self.codebooks)?;
-        io::write_bytes(w, &self.codes)?;
-        io::write_f32s(w, &self.rerank)
+        io::write_bytes(w, &self.codes)
     }
 
-    /// Deserialize (inverse of [`PqStorage::write_to`]); every structural
-    /// invariant is validated so a corrupt record fails loudly instead of
-    /// serving garbage distances.
+    /// Serialize (the `pq` record kind inside `OPDR` index segments): hot
+    /// copy + the rerank rows inline.
+    pub(crate) fn write_to(&self, w: &mut dyn Write) -> Result<()> {
+        self.write_hot(w)?;
+        self.rerank.write_f32s(w)
+    }
+
+    /// Serialize for a version-5 cold file: the rerank rows move into the
+    /// file's 64-byte-aligned annex and only their `u64` start row stays
+    /// in the record, so the loaded tier serves mapped in place.
+    pub(crate) fn write_external(&self, w: &mut dyn Write, annex: &mut AnnexWriter) -> Result<()> {
+        self.write_hot(w)?;
+        io::write_u64(w, annex.push_rows(&self.rerank)?)
+    }
+
+    /// Deserialize the inline (tag 2) record — the rerank rows follow the
+    /// codes; every structural invariant is validated so a corrupt record
+    /// fails loudly instead of serving garbage distances.
     pub(crate) fn read_from(r: &mut dyn Read) -> Result<PqStorage> {
+        PqStorage::read_with(r, None)
+    }
+
+    /// Deserialize the external (tag 3) record of a version-5 cold file —
+    /// the rerank tier resolves to a window of the file's annex (mapped
+    /// where possible) instead of being decoded.
+    pub(crate) fn read_external(r: &mut dyn Read, cx: &ColdContext) -> Result<PqStorage> {
+        PqStorage::read_with(r, Some(cx))
+    }
+
+    fn read_with(r: &mut dyn Read, external: Option<&ColdContext>) -> Result<PqStorage> {
         let n = io::read_u64_usize(r)?;
         let dim = io::read_u64_usize(r)?;
         let m = io::read_u64_usize(r)?;
@@ -340,10 +394,32 @@ impl PqStorage {
         }
         let row_bytes = row_bytes_for(m, ksub);
         let codes = io::read_bytes(r, io::checked_count(n, row_bytes)?)?;
-        let rerank = io::read_f32s(r, io::checked_count(n, dim)?)?;
-        if rerank.iter().any(|x| !x.is_finite()) {
-            return Err(OpdrError::data("pq: corrupt rerank payload"));
-        }
+        let rerank = match external {
+            None => {
+                let rows = io::read_f32s(r, io::checked_count(n, dim)?)?;
+                if rows.iter().any(|x| !x.is_finite()) {
+                    return Err(OpdrError::data("pq: corrupt rerank payload"));
+                }
+                RowBlock::from_ram(dim, rows)?
+            }
+            Some(cx) => {
+                // The rerank rows live in the enclosing cold file's annex;
+                // resolve (and range-check) the reference. The NaN scan is
+                // deliberately skipped here: paging a larger-than-RAM tier
+                // in at load time would defeat it, and a NaN row degrades
+                // to being skipped by the top-k contract, never to a wrong
+                // neighbor.
+                let start = io::read_u64_usize(r)?;
+                if cx.file.dim() != dim {
+                    return Err(OpdrError::data(format!(
+                        "pq: external rerank tier is dim {} but the annex is dim {}",
+                        dim,
+                        cx.file.dim()
+                    )));
+                }
+                RowBlock::tiered(std::sync::Arc::clone(&cx.file), start, n)?
+            }
+        };
         let store = PqStorage {
             n,
             dim,
@@ -979,6 +1055,42 @@ mod tests {
         bad[rer_off..rer_off + 4].copy_from_slice(&f32::INFINITY.to_le_bytes());
         let e = PqStorage::read_from(&mut bad.as_slice()).unwrap_err().to_string();
         assert!(e.contains("rerank"), "{e}");
+    }
+
+    #[test]
+    fn spilled_cold_tier_serves_bitwise_identical_results() {
+        let dir = std::env::temp_dir().join(format!("opdr_pq_spill_{}", std::process::id()));
+        let dim = 8;
+        let n = 60;
+        let data = normal_data(n, dim, 47);
+        let params = PqParams { rerank_depth: n, ..Default::default() };
+        let ram = PqStorage::train(&data, dim, &params, 5).unwrap();
+        let mut cold = PqStorage::train(&data, dim, &params, 5).unwrap();
+        cold.spill_cold(&dir).unwrap();
+        assert_eq!(cold.rerank_bytes(), n * dim * 4);
+        assert!(cold.matches(&data), "tiered rerank rows must stay bitwise");
+        assert!(
+            cold.mapped_bytes() == 0 || cold.mapped_bytes() == cold.rerank_bytes(),
+            "mapped bytes are the whole tier or the heap fallback"
+        );
+        // Hot copies are identical, and the two-stage search is bitwise
+        // equal at every k — the tier never changes results.
+        assert_eq!(ram.memory_bytes(), cold.memory_bytes());
+        let mut rng = Rng::new(9);
+        for _ in 0..5 {
+            let q = rng.normal_vec_f32(dim);
+            for k in [1usize, 7, n] {
+                let a = two_stage_search(&ram, Metric::SqEuclidean, &q, 0..n, k).unwrap();
+                let b = two_stage_search(&cold, Metric::SqEuclidean, &q, 0..n, k).unwrap();
+                assert_eq!(a.len(), b.len());
+                for (x, y) in a.iter().zip(&b) {
+                    assert_eq!(x.index, y.index);
+                    assert_eq!(x.distance.to_bits(), y.distance.to_bits());
+                }
+            }
+        }
+        drop(cold);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -38,6 +38,7 @@
 //! indexes whether built serially or on the pool.
 
 use crate::config::IndexPolicy;
+use crate::data::mapped::{AnnexWriter, ColdContext};
 use crate::error::{OpdrError, Result};
 use crate::index::{io, AnnIndex, IndexKind, Sq8Bounds};
 use crate::knn::topk::merge_top_k;
@@ -310,6 +311,10 @@ impl AnnIndex for ShardedIndex {
         self.segments.iter().map(|s| s.cold_bytes()).sum()
     }
 
+    fn mapped_bytes(&self) -> usize {
+        self.segments.iter().map(|s| s.mapped_bytes()).sum()
+    }
+
     fn search(&self, query: &[f32], k: usize) -> Result<Vec<Neighbor>> {
         self.check_query(query)?;
         let mut per_segment = Vec::with_capacity(self.segments.len());
@@ -342,10 +347,30 @@ impl AnnIndex for ShardedIndex {
     /// store frames this as an `OPDR` version-3 file
     /// ([`crate::data::store::write_index`]).
     fn write_to(&self, w: &mut dyn Write) -> Result<()> {
+        self.write_impl(w, None)
+    }
+
+    fn write_cold(&self, w: &mut dyn Write, annex: &mut AnnexWriter) -> Result<()> {
+        self.write_impl(w, Some(annex))
+    }
+}
+
+impl ShardedIndex {
+    /// Multi-segment serialization shared by the inline ([`AnnIndex::write_to`])
+    /// and cold ([`AnnIndex::write_cold`]) paths: `u32` segment count, then
+    /// per segment a header (`u32` kind tag, `u8` metric tag, `u64` n,
+    /// `u64` dim, `u64` global start row, `u64` payload bytes) followed by
+    /// the segment's own serialized payload. With an annex, each segment's
+    /// full-precision rows externalize into the shared annex in segment
+    /// (= global row) order.
+    fn write_impl(&self, w: &mut dyn Write, mut annex: Option<&mut AnnexWriter>) -> Result<()> {
         io::write_u32(w, self.segments.len() as u32)?;
         for (s, seg) in self.segments.iter().enumerate() {
             let mut payload = Vec::new();
-            seg.write_to(&mut payload)?;
+            match annex.as_deref_mut() {
+                Some(a) => seg.write_cold(&mut payload, a)?,
+                None => seg.write_to(&mut payload)?,
+            }
             io::write_u32(w, seg.kind().tag())?;
             io::write_u8(w, io::metric_tag(seg.metric()))?;
             io::write_u64(w, seg.len() as u64)?;
@@ -356,14 +381,19 @@ impl AnnIndex for ShardedIndex {
         }
         Ok(())
     }
-}
 
-impl ShardedIndex {
     /// Deserialize the multi-segment payload (inverse of
     /// [`AnnIndex::write_to`]); every per-shard header is validated against
     /// its decoded payload so a corrupt or reshuffled file fails loudly
     /// instead of serving wrong neighbors.
     pub(crate) fn read_from(r: &mut dyn Read) -> Result<ShardedIndex> {
+        ShardedIndex::read_with(r, None)
+    }
+
+    /// [`ShardedIndex::read_from`] with an optional cold context (version-5
+    /// files: segment payloads resolve external rows against the file's
+    /// mapped annex).
+    pub(crate) fn read_with(r: &mut dyn Read, cx: Option<&ColdContext>) -> Result<ShardedIndex> {
         let count = io::read_u32(r)? as usize;
         if count == 0 {
             return Err(OpdrError::data("sharded index: zero segment count"));
@@ -407,7 +437,7 @@ impl ShardedIndex {
             let payload = io::read_bytes(r, payload_len)
                 .map_err(|e| OpdrError::data(format!("sharded index: shard {s} truncated: {e}")))?;
             let mut slice = payload.as_slice();
-            let seg = crate::index::read_index_payload(kind_tag, &mut slice)
+            let seg = crate::index::read_index_payload_with(kind_tag, &mut slice, cx)
                 .map_err(|e| OpdrError::data(format!("sharded index: shard {s}: {e}")))?;
             if !slice.is_empty() {
                 return Err(OpdrError::data(format!(

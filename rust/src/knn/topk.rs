@@ -148,7 +148,9 @@ mod tests {
             let d: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
             let fast = top_k_smallest(&d, k);
             let mut idx: Vec<usize> = (0..n).collect();
-            idx.sort_by(|&a, &b| d[a].partial_cmp(&d[b]).unwrap().then(a.cmp(&b)));
+            // NaN-total order (hardening sweep): the oracle sort must never
+            // be the thing that panics.
+            idx.sort_by(|&a, &b| d[a].total_cmp(&d[b]).then(a.cmp(&b)));
             let slow: Vec<usize> = idx.into_iter().take(k.min(n)).collect();
             assert_eq!(fast.iter().map(|x| x.0).collect::<Vec<_>>(), slow);
         }

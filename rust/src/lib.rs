@@ -36,6 +36,14 @@
 //!   a rebase-aware generation-guarded swap (an ingest racing a compaction
 //!   lands in the new delta, never lost); delta-augmented indexes persist
 //!   as version-4 `OPDR` files;
+//! * the **mmap-backed cold tier** — full-precision rows (PQ rerank tiers,
+//!   flat payloads) optionally leave RAM entirely ([`data::mapped`]):
+//!   spilled to 64-byte-aligned on-disk vector files and served zero-copy
+//!   through a validated read-only mapping (heap fallback where mmap is
+//!   unavailable), so collections larger than memory serve from one box;
+//!   cold indexes persist as version-5 `OPDR` files whose annex maps in
+//!   place on load, and the tier is bit-identical to RAM serving
+//!   (machine-checked);
 //! * the **multimodal data substrates** — synthetic generators standing in for
 //!   the paper's seven datasets, plus an embedding store ([`data`]);
 //! * the **runtime** — a PJRT engine that loads AOT-compiled HLO artifacts

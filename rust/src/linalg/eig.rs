@@ -86,13 +86,17 @@ pub fn eigh(a: &Mat) -> Result<EighResult> {
         }
     }
 
-    if off_diagonal_norm(&m) > 1e-6 * (1.0 + a.frobenius()) {
+    // NaN-robust convergence check: a degenerate sweep (overflow inside
+    // the rotations) can leave NaN in `m`, and `NaN > tol` is false — the
+    // explicit NaN branch catches it instead of reporting convergence.
+    let off = off_diagonal_norm(&m);
+    if off.is_nan() || off > 1e-6 * (1.0 + a.frobenius()) {
         return Err(OpdrError::numeric("eigh: Jacobi did not converge"));
     }
 
     // Extract and sort descending.
     let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m[(i, i)], i)).collect();
-    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    sort_eigenpairs_descending(&mut pairs);
     let values: Vec<f64> = pairs.iter().map(|&(val, _)| val).collect();
     let mut vectors = Mat::zeros(n, n);
     for (new_col, &(_, old_col)) in pairs.iter().enumerate() {
@@ -101,6 +105,16 @@ pub fn eigh(a: &Mat) -> Result<EighResult> {
         }
     }
     Ok(EighResult { values, vectors })
+}
+
+/// Sort `(eigenvalue, column)` pairs descending under the IEEE total
+/// order. `partial_cmp(..).unwrap()` here used to panic if a degenerate
+/// matrix (OPQ/PCA training on pathological data) ever produced a NaN
+/// diagonal — `total_cmp` keeps the sort deterministic and panic-free, and
+/// the NaN-robust convergence check above rejects such sweeps before the
+/// result can leave this module.
+fn sort_eigenpairs_descending(pairs: &mut [(f64, usize)]) {
+    pairs.sort_by(|a, b| b.0.total_cmp(&a.0));
 }
 
 fn off_diagonal_norm(m: &Mat) -> f64 {
@@ -243,6 +257,42 @@ mod tests {
         let mut a = Mat::zeros(2, 2);
         a[(0, 0)] = f64::NAN;
         assert!(eigh(&a).is_err());
+    }
+
+    #[test]
+    fn eigenpair_sort_is_total_and_never_panics_on_nan() {
+        // Regression: this sort used `partial_cmp(..).unwrap()`, which
+        // panicked the whole training path if a degenerate matrix ever put
+        // a NaN on the Jacobi diagonal. The total order sorts finite pairs
+        // descending and parks NaN deterministically instead of panicking.
+        let mut pairs = vec![(1.0f64, 0usize), (f64::NAN, 1), (3.0, 2), (-2.0, 3)];
+        sort_eigenpairs_descending(&mut pairs);
+        let finite: Vec<usize> =
+            pairs.iter().filter(|p| !p.0.is_nan()).map(|p| p.1).collect();
+        assert_eq!(finite, vec![2, 0, 3], "finite pairs sorted descending");
+        assert_eq!(pairs.iter().filter(|p| p.0.is_nan()).count(), 1);
+        // Ties and signed zeros stay deterministic across calls.
+        let mut a = vec![(0.0f64, 0usize), (-0.0, 1), (0.0, 2)];
+        let mut b = a.clone();
+        sort_eigenpairs_descending(&mut a);
+        sort_eigenpairs_descending(&mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn degenerate_rank_deficient_matrix_still_decomposes() {
+        // All-equal rows: rank 1, the kind of matrix degenerate OPQ/PCA
+        // training feeds through MᵀM. Must decompose (or error), never
+        // panic.
+        let a = Mat::from_rows(&[
+            vec![4.0, 4.0, 4.0],
+            vec![4.0, 4.0, 4.0],
+            vec![4.0, 4.0, 4.0],
+        ])
+        .unwrap();
+        let r = eigh(&a).unwrap();
+        assert!((r.values[0] - 12.0).abs() < 1e-9);
+        assert!(r.values[1].abs() < 1e-9 && r.values[2].abs() < 1e-9);
     }
 
     #[test]

@@ -63,6 +63,7 @@ fn print_help() {
                       [--hnsw-ef-search EF] [--ivf-threshold T]\n\
                       [--shards S] [--shard-min-vectors V]\n\
                       [--incremental | --no-incremental] [--delta-max V]\n\
+                      [--mmap-cold] [--cold-dir DIR]\n\
                       [--build-workers B] [--save-index file.opdx]\n\
            artifacts  [--dir artifacts]\n\n\
          DATASETS: {}\n",
@@ -274,6 +275,16 @@ fn cmd_serve_demo(args: &mut Args) -> Result<()> {
     }
     let incremental_ingest = !no_incremental;
     let delta_max_vectors = delta_max.unwrap_or(ServeConfig::default().delta_max_vectors);
+    // Mmap cold tier: full-precision rows (flat payloads, PQ rerank tiers)
+    // spill to cold files and serve zero-copy; --cold-dir without the
+    // toggle would be silently ignored, so reject it (mirrors the TOML
+    // validation).
+    let cold_tier_mmap = args.has("mmap-cold");
+    let cold_dir_flag = args.get("cold-dir").map(str::to_string);
+    if !cold_tier_mmap && cold_dir_flag.is_some() {
+        return Err(OpdrError::config("serve-demo: --cold-dir requires --mmap-cold"));
+    }
+    let cold_dir = cold_dir_flag.unwrap_or_else(|| ServeConfig::default().cold_dir);
     let save_index = args.get("save-index").map(str::to_string);
     args.finish()?;
 
@@ -298,6 +309,8 @@ fn cmd_serve_demo(args: &mut Args) -> Result<()> {
         build_workers,
         incremental_ingest,
         delta_max_vectors,
+        cold_tier_mmap,
+        cold_dir,
         ..Default::default()
     };
     cfg.validate()?;
@@ -313,6 +326,7 @@ fn cmd_serve_demo(args: &mut Args) -> Result<()> {
         || index_sq8
         || index_pq
         || shards > 1
+        || cold_tier_mmap
         || save_index.is_some();
     if index_requested {
         coord.build_index("demo")?;
@@ -329,10 +343,11 @@ fn cmd_serve_demo(args: &mut Args) -> Result<()> {
     };
     println!(
         "ingested {n} vectors (dim {dim}); OPDR planned serving dim = {planned}; \
-         index policy = {}{}{}",
+         index policy = {}{}{}{}",
         index_kind.name(),
         storage,
-        if eff_shards > 1 { format!(" x{eff_shards} shards") } else { String::new() }
+        if eff_shards > 1 { format!(" x{eff_shards} shards") } else { String::new() },
+        if cold_tier_mmap { " [mmap cold tier]" } else { "" }
     );
 
     let sw = opdr::util::Stopwatch::start();

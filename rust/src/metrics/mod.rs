@@ -165,19 +165,19 @@ mod tests {
     fn sq_euclidean_same_ordering_as_euclidean() {
         let q = [0.5f32, -1.0, 2.0];
         let xs = [[1.0f32, 0.0, 0.0], [0.0, -1.0, 2.0], [2.0, 2.0, 2.0]];
+        // NaN-total order (hardening sweep): test oracles sort with
+        // `total_cmp` so they can never be the thing that panics.
         let mut by_l2: Vec<usize> = (0..3).collect();
         by_l2.sort_by(|&i, &j| {
             Metric::Euclidean
                 .distance(&q, &xs[i])
-                .partial_cmp(&Metric::Euclidean.distance(&q, &xs[j]))
-                .unwrap()
+                .total_cmp(&Metric::Euclidean.distance(&q, &xs[j]))
         });
         let mut by_sq: Vec<usize> = (0..3).collect();
         by_sq.sort_by(|&i, &j| {
             Metric::SqEuclidean
                 .distance(&q, &xs[i])
-                .partial_cmp(&Metric::SqEuclidean.distance(&q, &xs[j]))
-                .unwrap()
+                .total_cmp(&Metric::SqEuclidean.distance(&q, &xs[j]))
         });
         assert_eq!(by_l2, by_sq);
     }

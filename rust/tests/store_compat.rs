@@ -1,0 +1,173 @@
+//! Cross-version `OPDR` store compatibility matrix.
+//!
+//! Fixture-driven: one representative file per store version (v1 embedding
+//! set, v2 single-segment index, v3 sharded index, v4 delta-augmented
+//! index, v5 cold-tier index) is written, then every fixture is asserted to
+//! (a) load through the public entry points, (b) fail with the right typed
+//! error when truncated at several cuts, and (c) fail when a trailing byte
+//! is appended — at *every* version. The v5 fixture additionally proves the
+//! written-once / loaded-twice contract: the heap-loaded and mmap-loaded
+//! indexes search bitwise identically.
+
+use opdr::config::IndexPolicy;
+use opdr::data::{store, synth, DatasetKind, EmbeddingSet};
+use opdr::index::{AnnIndex, DeltaIndex, IndexKind};
+use opdr::metrics::Metric;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const DIM: usize = 8;
+const N: usize = 64;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("opdr_store_compat_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn fixture_set() -> EmbeddingSet {
+    synth::generate(DatasetKind::Flickr30k, N, DIM, 19)
+}
+
+fn build(policy: &IndexPolicy, rows: usize, set: &EmbeddingSet) -> Box<dyn AnnIndex> {
+    opdr::index::build_index(&set.data()[..rows * DIM], DIM, Metric::SqEuclidean, policy, 11)
+        .unwrap()
+}
+
+/// One fixture per store version: `(version, file bytes)`.
+fn version_fixtures(set: &EmbeddingSet) -> Vec<(u32, Vec<u8>)> {
+    let exact = IndexPolicy {
+        kind: IndexKind::Exact,
+        exact_threshold: 0,
+        pq: true,
+        rerank_depth: N,
+        ..Default::default()
+    };
+    let sharded = IndexPolicy { shards: 3, shard_min_vectors: 1, ..exact.clone() };
+
+    let mut out = Vec::new();
+    let mut v1 = Vec::new();
+    store::write_embeddings(set, &mut v1).unwrap();
+    out.push((1, v1));
+
+    let idx2 = build(&exact, N, set);
+    let mut v2 = Vec::new();
+    store::write_index(idx2.as_ref(), &mut v2).unwrap();
+    out.push((2, v2));
+
+    let idx3 = build(&sharded, N, set);
+    let mut v3 = Vec::new();
+    store::write_index(idx3.as_ref(), &mut v3).unwrap();
+    out.push((3, v3));
+
+    let main = build(&exact, N - 10, set);
+    let idx4 =
+        DeltaIndex::from_parts(Arc::from(main), set.data()[(N - 10) * DIM..].to_vec()).unwrap();
+    let mut v4 = Vec::new();
+    store::write_index(&idx4, &mut v4).unwrap();
+    out.push((4, v4));
+
+    let idx5 = build(&sharded, N, set);
+    let mut v5 = Vec::new();
+    store::write_index_cold(idx5.as_ref(), &mut v5).unwrap();
+    out.push((5, v5));
+
+    out
+}
+
+#[test]
+fn every_version_loads_and_declares_its_version() {
+    let dir = tmp_dir("load");
+    let set = fixture_set();
+    for (version, bytes) in version_fixtures(&set) {
+        assert_eq!(
+            u32::from_le_bytes(bytes[4..8].try_into().unwrap()),
+            version,
+            "fixture v{version} mislabeled"
+        );
+        let path = dir.join(format!("fixture-v{version}.opdr"));
+        std::fs::write(&path, &bytes).unwrap();
+        if version == 1 {
+            let back = store::load(&path).unwrap();
+            assert_eq!(back, set, "v1 embedding set must round-trip");
+            continue;
+        }
+        let back = store::load_index(&path).unwrap();
+        assert_eq!(back.len(), N, "v{version} index loads all rows");
+        assert!(back.matches_data(set.data()), "v{version} rows survive bitwise");
+        // A stored row's own query self-hits through every version.
+        let hits = back.search(set.vector(5), 3).unwrap();
+        assert_eq!(hits[0].index, 5, "v{version} self-hit");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn truncation_and_trailing_bytes_rejected_at_every_version() {
+    let dir = tmp_dir("corrupt");
+    let set = fixture_set();
+    for (version, bytes) in version_fixtures(&set) {
+        let load = |raw: &[u8], what: &str| -> String {
+            let path = dir.join(format!("corrupt-v{version}.opdr"));
+            std::fs::write(&path, raw).unwrap();
+            let res = if version == 1 {
+                store::load(&path).map(|_| ()).map_err(|e| e.to_string())
+            } else {
+                store::load_index(&path).map(|_| ()).map_err(|e| e.to_string())
+            };
+            res.expect_err(&format!("v{version}: {what} accepted"))
+        };
+        // Truncation at several cuts: inside the header, mid-payload, and
+        // just short of the end — every cut must fail with a typed error
+        // (exercised through Display), never panic or misparse.
+        for cut in [6usize, bytes.len() / 3, bytes.len() / 2, bytes.len() - 2] {
+            let msg = load(&bytes[..cut], &format!("truncation at {cut}"));
+            assert!(msg.contains("error"), "v{version}: untyped failure: {msg}");
+        }
+        // A single trailing byte after a valid payload must be rejected,
+        // not silently ignored (count-mismatch corruption).
+        let mut more = bytes.clone();
+        more.push(0x5A);
+        let msg = load(&more, "trailing byte");
+        assert!(
+            msg.contains("trailing") || msg.contains("header declares"),
+            "v{version}: {msg}"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn v5_heap_and_mmap_loads_are_bitwise_equal() {
+    // Acceptance criterion: a v5-written file loaded through the heap path
+    // is bitwise equal to the mmap-loaded index — same neighbors, same
+    // distance bits, for a spread of queries and k.
+    let dir = tmp_dir("v5");
+    let set = fixture_set();
+    let policy = IndexPolicy {
+        kind: IndexKind::Exact,
+        exact_threshold: 0,
+        pq: true,
+        rerank_depth: N,
+        shards: 3,
+        shard_min_vectors: 1,
+        ..Default::default()
+    };
+    let idx = build(&policy, N, &set);
+    let path = dir.join("tier.opdx");
+    store::save_index_cold(idx.as_ref(), &path).unwrap();
+    let mapped = store::load_index(&path).unwrap();
+    let heap = store::load_index_heap(&path).unwrap();
+    assert_eq!(heap.mapped_bytes(), 0, "forced heap load must map nothing");
+    for qi in [0usize, 13, 37, N - 1] {
+        for k in [1usize, 7, N + 3] {
+            let a = idx.search(set.vector(qi), k).unwrap();
+            let b = mapped.search(set.vector(qi), k).unwrap();
+            let c = heap.search(set.vector(qi), k).unwrap();
+            opdr::testing::assert_same_neighbors(&a, &b);
+            opdr::testing::assert_same_neighbors(&a, &c);
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
