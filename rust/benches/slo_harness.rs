@@ -1,0 +1,251 @@
+//! Closed-loop SLO load harness: stepped target QPS against a live
+//! coordinator with mixed search / ingest / compaction traffic, to find the
+//! saturation knee — the highest offered rate the service still sustains at
+//! ≥ 90% of target. Client-side latency is sampled per request, so the
+//! percentiles include queueing, and the registry's stage histograms are
+//! dumped afterwards to show where the time went.
+//!
+//! Emits `bench_out/BENCH_slo.json` with the per-step ladder and the knee,
+//! and asserts a conservative CI floor on the knee QPS inside the binary.
+//!
+//! Run: `cargo bench --bench slo_harness` (append `-- --smoke` for the
+//! short CI ladder).
+
+use opdr::bench_support::section;
+use opdr::config::ServeConfig;
+use opdr::coordinator::Coordinator;
+use opdr::data::{synth, DatasetKind, EmbeddingSet};
+use opdr::metrics::Metric;
+use opdr::report::Table;
+use opdr::util::float::percentile_sorted;
+use opdr::util::Stopwatch;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Duration;
+
+const N: usize = 4000;
+const DIM: usize = 128;
+const K: usize = 10;
+const CLIENTS: usize = 8;
+
+struct StepOut {
+    target_qps: f64,
+    achieved_qps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    completed: u64,
+    rejected: u64,
+}
+
+/// One ladder step: `CLIENTS` closed-loop clients pace requests at
+/// `target_qps / CLIENTS` each for `dur`, never queueing ahead of themselves
+/// — when the service can't keep up, a client simply falls behind its
+/// schedule and the achieved rate drops below target (the knee signal).
+fn run_step(
+    coord: &Coordinator,
+    set: &EmbeddingSet,
+    target_qps: f64,
+    dur: Duration,
+    writer_rows: &AtomicU64,
+) -> StepOut {
+    let interval = Duration::from_secs_f64(CLIENTS as f64 / target_qps);
+    let stop = AtomicBool::new(false);
+    let sw = Stopwatch::start();
+    let (lat, rejected) = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for c in 0..CLIENTS {
+            let stop = &stop;
+            handles.push(s.spawn(move || {
+                let mut lat: Vec<f64> = Vec::new();
+                let mut rejected = 0u64;
+                // Stagger clients so request arrivals interleave instead of
+                // bursting in phase.
+                std::thread::sleep(interval.mul_f64(c as f64 / CLIENTS as f64));
+                let mut qi = c;
+                let step_sw = Stopwatch::start();
+                let mut deadline = Duration::ZERO;
+                loop {
+                    let elapsed = step_sw.elapsed();
+                    if elapsed >= dur || stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    if elapsed < deadline {
+                        std::thread::sleep(deadline - elapsed);
+                    } else {
+                        // Behind schedule: issue immediately (closed loop —
+                        // this is where saturation shows up as lost rate).
+                        deadline = elapsed;
+                    }
+                    deadline += interval;
+                    let t0 = Stopwatch::start();
+                    match coord.search("slo", set.vector(qi % N).to_vec(), K) {
+                        Ok(_) => lat.push(t0.elapsed_ns() / 1e6),
+                        Err(_) => rejected += 1,
+                    }
+                    qi += CLIENTS;
+                }
+                (lat, rejected)
+            }));
+        }
+        // Mixed traffic: a writer appends small batches throughout the step,
+        // exercising the delta-append span and (past delta_max_vectors) the
+        // background compaction + swap path.
+        let writer = s.spawn(|| {
+            let extra = synth::generate(DatasetKind::OmniCorpus, 32, DIM, 7);
+            let mut rows = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                if coord.ingest("slo", extra.data().to_vec()).is_ok() {
+                    rows += 32;
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            rows
+        });
+        let mut lat = Vec::new();
+        let mut rejected = 0u64;
+        for h in handles {
+            let (l, r) = h.join().expect("client thread");
+            lat.extend(l);
+            rejected += r;
+        }
+        stop.store(true, Ordering::Relaxed);
+        writer_rows.fetch_add(writer.join().expect("writer thread"), Ordering::Relaxed);
+        (lat, rejected)
+    });
+    let secs = sw.elapsed_secs();
+    let mut lat = lat;
+    lat.sort_by(f64::total_cmp);
+    StepOut {
+        target_qps,
+        achieved_qps: lat.len() as f64 / secs,
+        p50_ms: percentile_sorted(&lat, 0.5),
+        p99_ms: percentile_sorted(&lat, 0.99),
+        completed: lat.len() as u64,
+        rejected,
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (ladder, step_dur, floor_qps): (&[f64], Duration, f64) = if smoke {
+        (&[200.0, 400.0, 800.0, 1600.0], Duration::from_millis(400), 50.0)
+    } else {
+        (&[250.0, 500.0, 1000.0, 2000.0, 4000.0, 8000.0], Duration::from_secs(2), 200.0)
+    };
+
+    let cfg = ServeConfig {
+        workers: 4,
+        max_batch: 32,
+        max_wait_ms: 1,
+        queue_capacity: 4096,
+        ivf_threshold: 1024,
+        delta_max_vectors: 512,
+        ..Default::default()
+    };
+    let coord = Coordinator::start(cfg).unwrap();
+    coord.create_collection("slo", DIM, Metric::SqEuclidean).unwrap();
+    let set = synth::generate(DatasetKind::Flickr30k, N, DIM, 42);
+    coord.ingest("slo", set.data().to_vec()).unwrap();
+    let sdim = coord.build_reduced("slo", 0.9, K).unwrap();
+    // Serve from an IVF index so the writer's appends land in the delta
+    // segment and push it over `delta_max_vectors` — real compaction/swap
+    // traffic competing with the search load.
+    coord.build_index("slo").unwrap();
+
+    section(&format!(
+        "SLO ladder: {} clients, mixed search+ingest, n={N} dim={DIM}→{sdim} ({})",
+        CLIENTS,
+        if smoke { "smoke" } else { "full" },
+    ));
+    let writer_rows = AtomicU64::new(0);
+    let mut steps = Vec::new();
+    let mut table =
+        Table::new(&["target qps", "achieved", "p50 ms", "p99 ms", "completed", "rejected"]);
+    for &target in ladder {
+        let out = run_step(&coord, &set, target, step_dur, &writer_rows);
+        table.row(&[
+            format!("{target:.0}"),
+            format!("{:.0}", out.achieved_qps),
+            format!("{:.2}", out.p50_ms),
+            format!("{:.2}", out.p99_ms),
+            out.completed.to_string(),
+            out.rejected.to_string(),
+        ]);
+        steps.push(out);
+    }
+    println!("{}", table.render());
+
+    // The knee: the best achieved rate among steps that held ≥ 90% of their
+    // target. If even the first step saturates, fall back to the best
+    // achieved rate overall so the JSON still reports the capacity found.
+    let knee_qps = steps
+        .iter()
+        .filter(|s| s.achieved_qps >= 0.9 * s.target_qps)
+        .map(|s| s.achieved_qps)
+        .fold(0.0f64, f64::max);
+    let knee_qps = if knee_qps > 0.0 {
+        knee_qps
+    } else {
+        steps.iter().map(|s| s.achieved_qps).fold(0.0f64, f64::max)
+    };
+
+    // Where the time went: the query-path stage histograms accumulated by
+    // the very traffic above (scan/rerank/merge/delta_scan + queue wait),
+    // and the write path's append/compaction/swap spans.
+    let m = coord.metrics();
+    let stage_ms = |h: &opdr::telemetry::LatencyHistogram| {
+        format!(
+            "p50={:.3}ms p99={:.3}ms n={}",
+            h.quantile(0.5).as_secs_f64() * 1e3,
+            h.quantile(0.99).as_secs_f64() * 1e3,
+            h.count(),
+        )
+    };
+    println!("stage queue_wait   {}", stage_ms(&m.queue_wait));
+    println!("stage scan         {}", stage_ms(&m.trace.scan));
+    println!("stage rerank       {}", stage_ms(&m.trace.rerank));
+    println!("stage merge        {}", stage_ms(&m.trace.merge));
+    println!("stage delta_scan   {}", stage_ms(&m.trace.delta_scan));
+    println!("stage delta_append {}", stage_ms(&m.delta_append));
+    println!("stage build        {}", stage_ms(&m.build_spans.build));
+    println!("stage swap         {}", stage_ms(&m.build_spans.swap));
+
+    let ingested = writer_rows.load(Ordering::Relaxed);
+    let stats = coord.stats().unwrap();
+    println!("{stats}");
+    coord.shutdown();
+
+    let step_json: Vec<String> = steps
+        .iter()
+        .map(|s| {
+            format!(
+                "    {{\"target_qps\": {:.1}, \"achieved_qps\": {:.1}, \"p50_ms\": {:.3}, \
+                 \"p99_ms\": {:.3}, \"completed\": {}, \"rejected\": {}}}",
+                s.target_qps,
+                s.achieved_qps,
+                s.p50_ms,
+                s.p99_ms,
+                s.completed,
+                s.rejected,
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"slo_harness\",\n  \"mode\": \"{}\",\n  \"n\": {N},\n  \
+         \"dim\": {DIM},\n  \"serving_dim\": {sdim},\n  \"clients\": {CLIENTS},\n  \
+         \"ingested_rows\": {ingested},\n  \"steps\": [\n{}\n  ],\n  \
+         \"knee_qps\": {knee_qps:.1},\n  \"floor_qps\": {floor_qps:.1}\n}}\n",
+        if smoke { "smoke" } else { "full" },
+        step_json.join(",\n"),
+    );
+    std::fs::create_dir_all("bench_out").expect("bench_out");
+    std::fs::write("bench_out/BENCH_slo.json", &json).expect("write BENCH_slo.json");
+    println!("wrote bench_out/BENCH_slo.json (knee ≈ {knee_qps:.0} qps)");
+
+    // CI gate: the knee must clear a conservative floor — a regression that
+    // tanks serving throughput (or breaks the mixed-traffic path outright)
+    // fails the bench itself.
+    assert!(
+        knee_qps >= floor_qps,
+        "SLO knee {knee_qps:.1} qps fell below the CI floor {floor_qps:.1} qps"
+    );
+}

@@ -445,6 +445,14 @@ pub struct ServeConfig {
     pub cold_tier_mmap: bool,
     /// Directory the cold tier spills its vector files into.
     pub cold_dir: String,
+    /// Live recall probe (default off): shadow-execute a sampled fraction of
+    /// served queries against the flat exact scans on a background thread
+    /// and publish `recall@k` and the OPDR order-preservation measure μ as
+    /// per-collection gauges in the metrics registry.
+    pub recall_probe: bool,
+    /// Probe sampling stride: every Nth query per collection is shadowed
+    /// (1 = every query; only sensible for tests and small demos).
+    pub recall_probe_every: usize,
 }
 
 impl Default for ServeConfig {
@@ -479,6 +487,8 @@ impl Default for ServeConfig {
             delta_max_vectors: 2048,
             cold_tier_mmap: false,
             cold_dir: "cold".to_string(),
+            recall_probe: false,
+            recall_probe_every: 16,
         }
     }
 }
@@ -585,6 +595,14 @@ impl ServeConfig {
                             .ok_or_else(|| OpdrError::config("serve.cold_dir must be a string"))?
                             .to_string()
                     }
+                    "recall_probe" => {
+                        cfg.recall_probe = val
+                            .as_bool()
+                            .ok_or_else(|| OpdrError::config("serve.recall_probe must be a bool"))?
+                    }
+                    "recall_probe_every" => {
+                        cfg.recall_probe_every = pos_int(val, "serve", key)?
+                    }
                     other => {
                         return Err(OpdrError::config(format!("serve: unknown key `{other}`")))
                     }
@@ -617,6 +635,12 @@ impl ServeConfig {
                  (it would be silently ignored)",
             ));
         }
+        if !cfg.recall_probe && seen.iter().any(|k| k == "recall_probe_every") {
+            return Err(OpdrError::config(
+                "serve: `recall_probe_every` requires recall_probe = true \
+                 (it would be silently ignored)",
+            ));
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -646,6 +670,9 @@ impl ServeConfig {
         }
         if self.ivf_nprobe > self.ivf_nlist {
             return Err(OpdrError::config("serve.ivf_nprobe must be <= ivf_nlist"));
+        }
+        if self.recall_probe && self.recall_probe_every == 0 {
+            return Err(OpdrError::config("serve.recall_probe_every must be >= 1"));
         }
         self.index_policy().validate()
     }
@@ -910,6 +937,33 @@ k = 5
             "[serve]\nindex_pq = true\ncold_tier = \"mmap\"\n"
         )
         .is_ok());
+    }
+
+    #[test]
+    fn serve_recall_probe_keys() {
+        // Default: probe off with a sane sampling stride.
+        let d = ServeConfig::from_toml_str("").unwrap();
+        assert!(!d.recall_probe);
+        assert_eq!(d.recall_probe_every, 16);
+        // Overrides parse.
+        let cfg = ServeConfig::from_toml_str(
+            "[serve]\nrecall_probe = true\nrecall_probe_every = 4\n",
+        )
+        .unwrap();
+        assert!(cfg.recall_probe);
+        assert_eq!(cfg.recall_probe_every, 4);
+        // Dependent key without the toggle is rejected, not silently
+        // ignored.
+        let e = ServeConfig::from_toml_str("[serve]\nrecall_probe_every = 4\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("requires recall_probe"), "{e}");
+        // Range / type validation.
+        assert!(ServeConfig::from_toml_str(
+            "[serve]\nrecall_probe = true\nrecall_probe_every = 0\n"
+        )
+        .is_err());
+        assert!(ServeConfig::from_toml_str("[serve]\nrecall_probe = 3\n").is_err());
     }
 
     #[test]

@@ -22,6 +22,37 @@
 //!   the build pool folds it into a rebuilt main index behind the
 //!   rebase-aware swap ([`state::IndexSlot::install_rebased`]) — an ingest
 //!   racing a compaction lands in the new delta, never lost.
+//!
+//! # Published metrics
+//!
+//! Every instrument lives in the coordinator's labeled registry
+//! ([`crate::telemetry::Registry`]); the `Metrics` admin verb (and
+//! `serve-demo --metrics`) renders them in the Prometheus text format, and
+//! the legacy `stats` line is a view over the same storage. Names:
+//!
+//! | name | kind | labels | meaning |
+//! |------|------|--------|---------|
+//! | `opdr_requests_total` | counter | — and (`verb`, `collection`) | accepted requests; the labeled series count admin verbs at dispatch and searches at completion |
+//! | `opdr_requests_completed_total` | counter | — | searches completed |
+//! | `opdr_requests_rejected_total` | counter | — | searches rejected by queue backpressure |
+//! | `opdr_batches_total` | counter | — | search batches executed |
+//! | `opdr_vectors_scored_total` | counter | — | rows scored across all searches |
+//! | `opdr_request_duration_seconds` | summary | (`verb`[, `collection`]) | end-to-end request latency; `verb="search"` without a collection label is the all-collections aggregate |
+//! | `opdr_exec_duration_seconds` | summary | — | time inside batch execution |
+//! | `opdr_stage_duration_seconds` | summary | `stage` | pipeline spans: `queue_wait`, `scan`, `rerank`, `merge`, `delta_scan` on the query path; `delta_append`, `build`, `swap` on the write path |
+//! | `opdr_probe_recall_at_k` | gauge | `collection` | recall probe: running-mean `recall@k` of served results vs an exact full-dimensional scan |
+//! | `opdr_probe_op_measure_mu` | gauge | `collection` | recall probe: running mean of the paper's order-preserving measure μ |
+//! | `opdr_probe_samples_total` | counter | `collection` | queries the probe shadow-executed |
+//! | `opdr_collection_rows` | gauge | `collection` | rows in the collection |
+//! | `opdr_collection_shards` | gauge | `collection` | shards in the serving index (0 = unindexed) |
+//! | `opdr_collection_delta_rows` | gauge | `collection` | delta rows awaiting compaction |
+//! | `opdr_collection_cold_bytes` | gauge | `collection` | resident cold-tier bytes |
+//! | `opdr_collection_mapped_bytes` | gauge | `collection` | mmap-served cold-tier bytes |
+//!
+//! Histograms render as summaries with `quantile="0.5"`, `"0.99"`, `"0.999"`
+//! samples in seconds plus `_sum`/`_count`. The topology gauges refresh on
+//! each `Stats`/`Metrics` call; the probe gauges publish asynchronously from
+//! the probe thread ([`crate::telemetry::RecallProbe`]).
 
 pub mod batcher;
 pub mod server;

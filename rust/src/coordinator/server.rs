@@ -9,7 +9,7 @@ use crate::knn::Neighbor;
 use crate::metrics::Metric;
 use crate::pool::ThreadPool;
 use crate::runtime::Engine;
-use crate::telemetry::Metrics;
+use crate::telemetry::{registry, Metrics, ProbeJob, RecallProbe};
 use crate::util::Stopwatch;
 use std::collections::HashMap;
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
@@ -100,6 +100,24 @@ enum AdminOp {
     SaveIndex { collection: String, path: String },
     LoadIndex { collection: String, path: String },
     Stats,
+    Metrics,
+}
+
+/// `(verb, collection)` labels for an admin op — feeds the per-verb request
+/// counters and duration histograms. Ops without a collection (stats,
+/// metrics) use the `_admin` pseudo-collection so every series has both
+/// labels.
+fn op_meta(op: &AdminOp) -> (&'static str, &str) {
+    match op {
+        AdminOp::CreateCollection { name, .. } => ("create_collection", name),
+        AdminOp::Ingest { collection, .. } => ("ingest", collection),
+        AdminOp::BuildReduced { collection, .. } => ("build_reduced", collection),
+        AdminOp::BuildIndex { collection } => ("build_index", collection),
+        AdminOp::SaveIndex { collection, .. } => ("save_index", collection),
+        AdminOp::LoadIndex { collection, .. } => ("load_index", collection),
+        AdminOp::Stats => ("stats", "_admin"),
+        AdminOp::Metrics => ("metrics", "_admin"),
+    }
 }
 
 /// Public handle to a running coordinator. Cloneable; dropping the last
@@ -205,6 +223,14 @@ impl Coordinator {
         self.admin(AdminOp::Stats)
     }
 
+    /// Prometheus-style text exposition of every registered metric:
+    /// per-(verb, collection) request counters and latency quantiles,
+    /// per-stage pipeline histograms, probe gauges and the per-collection
+    /// topology gauges refreshed by this call.
+    pub fn metrics_text(&self) -> Result<String> {
+        self.admin(AdminOp::Metrics)
+    }
+
     /// Submit a search; blocks for the result. Fails fast with a
     /// backpressure error when the queue is full.
     pub fn search(&self, collection: &str, query: Vec<f32>, k: usize) -> Result<SearchResult> {
@@ -270,6 +296,15 @@ fn scheduler_loop(rx: Receiver<Request>, cfg: ServeConfig, metrics: Arc<Metrics>
     // deferred build responses).
     let build_pool = ThreadPool::new(cfg.build_workers);
     let builds_in_flight = Arc::new(BuildTracker::default());
+    // Live recall probe: shadow-executes a sampled fraction of served
+    // queries against the flat exact scans on its own thread and publishes
+    // recall@k / μ gauges into the shared registry. Dropping it at loop exit
+    // drains the queue and joins the thread.
+    let probe: Option<RecallProbe> = if cfg.recall_probe {
+        Some(RecallProbe::start(Arc::clone(&metrics.registry), cfg.recall_probe_every, 1024))
+    } else {
+        None
+    };
     // The engine is created lazily so a missing artifacts dir only matters if
     // runtime execution was requested.
     let engine: Option<Engine> = if cfg.use_runtime {
@@ -308,14 +343,23 @@ fn scheduler_loop(rx: Receiver<Request>, cfg: ServeConfig, metrics: Arc<Metrics>
                 Request::Shutdown => stop = true,
                 Request::Admin(op, resp) => {
                     let builds = &builds_in_flight;
-                    handle_admin(op, &mut collections, &cfg, &metrics, &build_pool, builds, resp)
+                    // Per-verb observability: count the op and time its
+                    // scheduler-side execution (deferred builds only spend
+                    // their dispatch here; the build itself feeds the
+                    // compaction_build / swap stage histograms).
+                    let (verb, coll) = op_meta(&op);
+                    metrics.verb_counter(verb, coll).inc();
+                    let h = metrics.verb_histogram(verb, coll);
+                    let sw = Stopwatch::start();
+                    handle_admin(op, &mut collections, &cfg, &metrics, &build_pool, builds, resp);
+                    h.record(sw.elapsed());
                 }
                 s @ Request::Search { .. } => searches.push(s),
             }
         }
         if !searches.is_empty() {
             let engine = engine.as_ref();
-            execute_search_batch(searches, &collections, &pool, engine, &metrics);
+            execute_search_batch(searches, &collections, &pool, engine, &metrics, probe.as_ref());
         }
         if stop {
             break;
@@ -343,7 +387,8 @@ fn handle_admin(
     match op {
         AdminOp::BuildIndex { collection } => {
             let b = builds_in_flight;
-            spawn_build(collections, &collection, "ok".into(), false, cfg, build_pool, b, resp);
+            let m = metrics;
+            spawn_build(collections, &collection, "ok".into(), false, cfg, m, build_pool, b, resp);
         }
         AdminOp::Ingest { collection, vectors } => {
             // Incremental mode (the default) absorbs the rows into the
@@ -354,7 +399,12 @@ fn handle_admin(
             // compaction is fire-and-forget behind the rebased atomic swap.
             let out = collections.get_mut(&collection).and_then(|c| {
                 if cfg.incremental_ingest {
-                    c.ingest_incremental(&vectors)
+                    // Write-path span: the delta absorb (projection +
+                    // wrapper swap) is the synchronous cost of an ingest.
+                    let sw = Stopwatch::start();
+                    let r = c.ingest_incremental(&vectors);
+                    metrics.delta_append.record(sw.elapsed());
+                    r
                 } else {
                     c.ingest(&vectors)
                 }
@@ -366,6 +416,7 @@ fn handle_admin(
                             collections,
                             &collection,
                             cfg,
+                            metrics,
                             build_pool,
                             builds_in_flight,
                         );
@@ -390,8 +441,17 @@ fn handle_admin(
                         collections.get(&collection).map_or(0, |c| c.len()) >= cfg.ivf_threshold;
                     if big_enough {
                         let msg = dim.to_string();
-                        let b = builds_in_flight;
-                        spawn_build(collections, &collection, msg, true, cfg, build_pool, b, resp);
+                        spawn_build(
+                            collections,
+                            &collection,
+                            msg,
+                            true,
+                            cfg,
+                            metrics,
+                            build_pool,
+                            builds_in_flight,
+                            resp,
+                        );
                     } else {
                         let _ = resp.send(Ok(dim.to_string()));
                     }
@@ -423,6 +483,7 @@ fn spawn_build(
     ok_msg: String,
     stale_ok: bool,
     cfg: &ServeConfig,
+    metrics: &Metrics,
     build_pool: &ThreadPool,
     builds_in_flight: &Arc<BuildTracker>,
     resp: Sender<Result<String>>,
@@ -432,7 +493,8 @@ fn spawn_build(
             builds_in_flight.begin(collection);
             let builds = Arc::clone(builds_in_flight);
             let name = collection.to_string();
-            c.spawn_index_build(&cfg.index_policy(), 0xC0DE, build_pool, move |r| {
+            let spans = Some(metrics.build_spans.clone());
+            c.spawn_index_build_traced(&cfg.index_policy(), 0xC0DE, build_pool, spans, move |r| {
                 builds.finish(&name);
                 let out = match r {
                     Ok(installed) if installed || stale_ok => Ok(ok_msg),
@@ -462,6 +524,7 @@ fn maybe_spawn_compaction(
     collections: &Collections,
     collection: &str,
     cfg: &ServeConfig,
+    metrics: &Metrics,
     build_pool: &ThreadPool,
     builds_in_flight: &Arc<BuildTracker>,
 ) {
@@ -472,7 +535,8 @@ fn maybe_spawn_compaction(
     builds_in_flight.begin(collection);
     let builds = Arc::clone(builds_in_flight);
     let name = collection.to_string();
-    c.spawn_index_build(&cfg.index_policy(), 0xC0DE, build_pool, move |r| {
+    let spans = Some(metrics.build_spans.clone());
+    c.spawn_index_build_traced(&cfg.index_policy(), 0xC0DE, build_pool, spans, move |r| {
         builds.finish(&name);
         match r {
             Ok(true) => builds.record_compaction(&name),
@@ -512,32 +576,34 @@ fn handle_admin_sync(
             Ok("ok".into())
         }
         AdminOp::Stats => {
+            // The legacy stats line is a *view over the registry*: the
+            // per-collection topology gauges are refreshed from live state,
+            // then the n=/shards=/delta=/cold_bytes= keys are formatted from
+            // the gauge read-back, and the summary counters are the very
+            // Arc-shared instruments registered in [`Metrics::new`]. A
+            // regression test pins the two surfaces to agree.
+            let reg = &metrics.registry;
             let mut out = String::new();
             for name in collections.names() {
                 let c = collections.get(&name)?;
                 let (_, sdim) = c.serving_vectors();
+                refresh_collection_gauges(&name, c, metrics);
+                let lbl = [("collection", name.as_str())];
+                let rows = reg.gauge(registry::COLLECTION_ROWS, &lbl).get() as usize;
                 let indexed = match c.index() {
                     Some(ix) => {
-                        // A delta wrapper reports its main's shard count and
-                        // the delta backlog awaiting compaction.
-                        let (shards, delta) = match ix.as_delta() {
-                            Some(d) => (
-                                d.main().as_sharded().map_or(1, |s| s.num_shards()),
-                                d.delta_len(),
-                            ),
-                            None => (ix.as_sharded().map_or(1, |s| s.num_shards()), 0),
-                        };
+                        let shards = reg.gauge(registry::COLLECTION_SHARDS, &lbl).get() as usize;
+                        let delta = reg.gauge(registry::COLLECTION_DELTA_ROWS, &lbl).get() as usize;
+                        let cold = reg.gauge(registry::COLLECTION_COLD_BYTES, &lbl).get() as usize;
+                        let mapped =
+                            reg.gauge(registry::COLLECTION_MAPPED_BYTES, &lbl).get() as usize;
                         // Tier accounting (hardening satellite): cold_bytes=
                         // used to print for every index, even with no rerank
-                        // tier at all; now the cold/mapped pair appears only
+                        // tier at all; the cold/mapped pair appears only
                         // when a tier exists, and distinguishes resident from
                         // mmap-served bytes.
-                        let tier = if ix.cold_bytes() > 0 || ix.mapped_bytes() > 0 {
-                            format!(
-                                " cold_bytes={} mapped_bytes={}",
-                                ix.cold_bytes(),
-                                ix.mapped_bytes()
-                            )
+                        let tier = if cold > 0 || mapped > 0 {
+                            format!(" cold_bytes={cold} mapped_bytes={mapped}")
                         } else {
                             String::new()
                         };
@@ -553,9 +619,8 @@ fn handle_admin_sync(
                     None => "false".to_string(),
                 };
                 out.push_str(&format!(
-                    "collection {name}: n={} dim={} serving_dim={} building={} compactions={} \
-                     indexed={indexed}\n",
-                    c.len(),
+                    "collection {name}: n={rows} dim={} serving_dim={} building={} \
+                     compactions={} indexed={indexed}\n",
                     c.dim,
                     sdim,
                     builds.in_flight(&name),
@@ -575,7 +640,44 @@ fn handle_admin_sync(
             ));
             Ok(out)
         }
+        AdminOp::Metrics => {
+            // Refresh the topology gauges so the exposition reflects the
+            // collections as of this call, then render everything.
+            for name in collections.names() {
+                refresh_collection_gauges(&name, collections.get(&name)?, metrics);
+            }
+            Ok(metrics.registry.render())
+        }
     }
+}
+
+/// Refresh the per-collection topology gauges (`opdr_collection_*`) from
+/// live collection state. Both the legacy stats view and the Prometheus
+/// exposition read these series back from the registry.
+fn refresh_collection_gauges(
+    name: &str,
+    c: &crate::coordinator::state::Collection,
+    metrics: &Metrics,
+) {
+    let reg = &metrics.registry;
+    let lbl = [("collection", name)];
+    reg.gauge(registry::COLLECTION_ROWS, &lbl).set(c.len() as f64);
+    let (shards, delta, cold, mapped) = match c.index() {
+        Some(ix) => {
+            // A delta wrapper reports its main's shard count and the delta
+            // backlog awaiting compaction.
+            let (shards, delta) = match ix.as_delta() {
+                Some(d) => (d.main().as_sharded().map_or(1, |s| s.num_shards()), d.delta_len()),
+                None => (ix.as_sharded().map_or(1, |s| s.num_shards()), 0),
+            };
+            (shards, delta, ix.cold_bytes(), ix.mapped_bytes())
+        }
+        None => (0, 0, 0, 0),
+    };
+    reg.gauge(registry::COLLECTION_SHARDS, &lbl).set(shards as f64);
+    reg.gauge(registry::COLLECTION_DELTA_ROWS, &lbl).set(delta as f64);
+    reg.gauge(registry::COLLECTION_COLD_BYTES, &lbl).set(cold as f64);
+    reg.gauge(registry::COLLECTION_MAPPED_BYTES, &lbl).set(mapped as f64);
 }
 
 /// One query of a search batch: reject failed projections, run `search`,
@@ -599,6 +701,7 @@ fn execute_search_batch(
     pool: &ThreadPool,
     engine: Option<&Engine>,
     metrics: &Metrics,
+    probe: Option<&RecallProbe>,
 ) {
     metrics.batches.inc();
     let exec_sw = Stopwatch::start();
@@ -614,6 +717,9 @@ fn execute_search_batch(
     let mut groups: HashMap<String, Vec<Item>> = HashMap::new();
     for req in searches {
         if let Request::Search { collection, query, k, resp, submitted } = req {
+            // Queue-wait stage: submit → the batch starting to execute. The
+            // stopwatch keeps running into the end-to-end latency record.
+            metrics.queue_wait.record(submitted.elapsed());
             groups.entry(collection).or_default().push(Item { query, k, resp, submitted });
         }
     }
@@ -632,6 +738,9 @@ fn execute_search_batch(
         };
         let (vecs, sdim) = coll.serving_vectors();
         metrics.vectors_scored.add((vecs.len() / sdim.max(1)) as u64 * items.len() as u64);
+        // Per-(verb, collection) series for this group.
+        let vh = metrics.verb_histogram("search", &cname);
+        let vc = metrics.verb_counter("search", &cname);
 
         // Try the PJRT artifact path for eligible groups (no IVF index; the
         // engine path scores exhaustively).
@@ -643,7 +752,10 @@ fn execute_search_batch(
         if let Some(results) = engine_out {
             for (it, res) in items.into_iter().zip(results) {
                 metrics.completed.inc();
-                metrics.latency.record(it.submitted.elapsed());
+                let took = it.submitted.elapsed();
+                metrics.latency.record(took);
+                vh.record(took);
+                vc.inc();
                 let _ = it.resp.send(Ok(res));
             }
             continue;
@@ -678,14 +790,16 @@ fn execute_search_batch(
                 // Batched: parallelize across queries — each worker runs the
                 // serial (per-shard sequential) search against one
                 // batch-wide index snapshot, avoiding a blocking per-query
-                // fan-out barrier on this thread.
+                // fan-out barrier on this thread. Stage timings land in the
+                // shared trace histograms (Arc-backed, thread-safe).
                 let shared = Arc::clone(&shared);
                 let chunk = n.div_ceil(pool.size().max(1)).max(1);
+                let trace = metrics.trace.clone();
                 pool.map_chunks(n, chunk, move |range| {
                     range
                         .map(|i| {
                             let (q, k) = &shared[i];
-                            run_one(q, *k, sdim, |q, k| index.search(q, k))
+                            run_one(q, *k, sdim, |q, k| index.search_traced(q, k, &trace))
                         })
                         .collect::<Vec<_>>()
                 })
@@ -703,11 +817,13 @@ fn execute_search_batch(
                                 // Delta wrapper: fan its (possibly sharded)
                                 // main out on the pool, scan the bounded
                                 // delta inline.
-                                return d.search_on(pool, q, k);
+                                return d.search_on_traced(pool, q, k, &metrics.trace);
                             }
                             match index.as_sharded() {
-                                Some(sh) if sh.num_shards() > 1 => sh.search_on(pool, q, k),
-                                _ => index.search(q, k),
+                                Some(sh) if sh.num_shards() > 1 => {
+                                    sh.search_on_traced(pool, q, k, &metrics.trace)
+                                }
+                                _ => index.search_traced(q, k, &metrics.trace),
                             }
                         })
                     })
@@ -715,12 +831,18 @@ fn execute_search_batch(
             }
         } else {
             let chunk = n.div_ceil(pool.size().max(1)).max(1);
+            let shared = Arc::clone(&shared);
+            let vecs = Arc::clone(&vecs_arc);
+            let trace = metrics.trace.clone();
             pool.map_chunks(n, chunk, move |range| {
                 range
                     .map(|i| {
                         let (q, k) = &shared[i];
                         run_one(q, *k, sdim, |q, k| {
-                            crate::knn::knn_indices(q, &vecs_arc, sdim, k, metric)
+                            let sw = Stopwatch::start();
+                            let r = crate::knn::knn_indices(q, &vecs, sdim, k, metric);
+                            trace.scan.record(sw.elapsed());
+                            r
                         })
                     })
                     .collect::<Vec<_>>()
@@ -728,9 +850,33 @@ fn execute_search_batch(
         };
 
         let flat: Vec<Result<SearchResult>> = results.into_iter().flatten().collect();
-        for (it, res) in items.into_iter().zip(flat) {
+        for (i, (it, res)) in items.into_iter().zip(flat).enumerate() {
             metrics.completed.inc();
-            metrics.latency.record(it.submitted.elapsed());
+            let took = it.submitted.elapsed();
+            metrics.latency.record(took);
+            vh.record(took);
+            vc.inc();
+            // Recall probe: shadow a sampled fraction of successful queries.
+            // The job carries Arc snapshots, so the probe thread scans the
+            // very vectors this query was served from (drop-not-block: a
+            // full probe queue skips the sample rather than stall serving).
+            if let (Some(p), Ok(r)) = (probe, &res) {
+                if p.should_sample(&cname) {
+                    let job = ProbeJob {
+                        collection: cname.clone(),
+                        query_full: it.query.clone(),
+                        query_serving: shared[i].0.clone(),
+                        k: it.k,
+                        served: r.neighbors.iter().map(|nb| nb.index).collect(),
+                        serving: Arc::clone(&vecs_arc),
+                        serving_dim: sdim,
+                        full: coll.full_arc(),
+                        full_dim: coll.dim,
+                        metric,
+                    };
+                    let _ = p.submit(job);
+                }
+            }
             let _ = it.resp.send(res);
         }
 

@@ -9,6 +9,8 @@ use crate::metrics::Metric;
 use crate::opdr::Planner;
 use crate::pool::ThreadPool;
 use crate::reduction::{Pca, PcaModel, ReducerKind};
+use crate::telemetry::BuildSpans;
+use crate::util::Stopwatch;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
@@ -173,6 +175,9 @@ pub struct Collection {
     /// L3-2: avoids cloning the whole block every batch). Invalidated on
     /// ingest / build_reduced.
     serving_cache: Mutex<Option<Arc<Vec<f32>>>>,
+    /// Shared snapshot of the *full-dimensional* vectors for the recall
+    /// probe's ground-truth scan (same lifecycle as `serving_cache`).
+    full_cache: Mutex<Option<Arc<Vec<f32>>>>,
     /// Cached padded block for the PJRT artifact path, keyed by (n_cap, d_cap).
     padded_cache: Mutex<Option<((usize, usize), Arc<PaddedBase>)>>,
 }
@@ -204,6 +209,7 @@ impl Collection {
             reduced: None,
             index: Arc::new(IndexSlot::default()),
             serving_cache: Mutex::new(None),
+            full_cache: Mutex::new(None),
             padded_cache: Mutex::new(None),
         })
     }
@@ -306,6 +312,7 @@ impl Collection {
 
     fn invalidate_caches(&self) {
         *self.serving_cache.lock().unwrap() = None;
+        *self.full_cache.lock().unwrap() = None;
         *self.padded_cache.lock().unwrap() = None;
     }
 
@@ -318,6 +325,19 @@ impl Collection {
         }
         let (vecs, _) = self.serving_vectors();
         let arc = Arc::new(vecs.to_vec());
+        *guard = Some(Arc::clone(&arc));
+        arc
+    }
+
+    /// Shared snapshot of the full-dimensional vectors (lazily built like
+    /// [`Collection::serving_arc`]). The recall probe scans this off-thread
+    /// for the exact full-space neighbor sets.
+    pub fn full_arc(&self) -> Arc<Vec<f32>> {
+        let mut guard = self.full_cache.lock().unwrap();
+        if let Some(arc) = guard.as_ref() {
+            return Arc::clone(arc);
+        }
+        let arc = Arc::new(self.data.clone());
         *guard = Some(Arc::clone(&arc));
         arc
     }
@@ -420,16 +440,39 @@ impl Collection {
         pool: &ThreadPool,
         on_done: impl FnOnce(Result<bool>) + Send + 'static,
     ) {
+        self.spawn_index_build_traced(policy, seed, pool, None, on_done)
+    }
+
+    /// [`Collection::spawn_index_build`] with optional write-path spans: the
+    /// whole background build (snapshot → segment fan-out → collect) feeds
+    /// `spans.build`, the atomic install feeds `spans.swap`.
+    pub fn spawn_index_build_traced(
+        &self,
+        policy: &IndexPolicy,
+        seed: u64,
+        pool: &ThreadPool,
+        spans: Option<BuildSpans>,
+        on_done: impl FnOnce(Result<bool>) + Send + 'static,
+    ) {
         let data = self.serving_arc();
         let (_, dim) = self.serving_vectors();
         let covered = data.len() / dim.max(1);
         let metric = self.metric;
         let slot = Arc::clone(&self.index);
         let generation = slot.generation();
+        let build_sw = Stopwatch::start();
         crate::index::shard::build_on_pool(data, dim, metric, policy, seed, pool, move |res| {
+            if let Some(s) = &spans {
+                s.build.record(build_sw.elapsed());
+            }
             match res {
                 Ok(index) => {
-                    on_done(Ok(slot.install_rebased(Arc::from(index), covered, generation)))
+                    let swap_sw = Stopwatch::start();
+                    let installed = slot.install_rebased(Arc::from(index), covered, generation);
+                    if let Some(s) = &spans {
+                        s.swap.record(swap_sw.elapsed());
+                    }
+                    on_done(Ok(installed))
                 }
                 Err(e) => on_done(Err(e)),
             }

@@ -48,6 +48,8 @@ use crate::knn::topk::merge_top_k;
 use crate::knn::Neighbor;
 use crate::metrics::Metric;
 use crate::pool::ThreadPool;
+use crate::telemetry::SearchTrace;
+use crate::util::timer::Stopwatch;
 use std::io::{Read, Write};
 use std::sync::Arc;
 
@@ -177,17 +179,75 @@ impl DeltaIndex {
             .collect()
     }
 
+    /// [`DeltaIndex::merged`] with the delta scan and the main+delta merge
+    /// attributed to their stage histograms. The candidate stream keeps the
+    /// exact order of the untraced path (main hits first, then delta rows in
+    /// row order), so results stay bitwise identical.
+    fn merged_traced(
+        &self,
+        main_hits: Vec<Neighbor>,
+        query: &[f32],
+        k: usize,
+        trace: Option<&SearchTrace>,
+    ) -> Vec<Neighbor> {
+        let Some(t) = trace else {
+            return self.merged(main_hits, query, k);
+        };
+        let base = self.main.len();
+        let sw = Stopwatch::start();
+        let delta: Vec<(usize, f32)> = self
+            .rows
+            .chunks_exact(self.dim)
+            .enumerate()
+            .map(|(i, row)| (base + i, self.metric.distance(query, row)))
+            .collect();
+        t.delta_scan.record(sw.elapsed());
+        let sw = Stopwatch::start();
+        let cands = main_hits.into_iter().map(|nb| (nb.index, nb.distance)).chain(delta);
+        let out = merge_top_k(cands, k)
+            .into_iter()
+            .map(|(index, distance)| Neighbor { index, distance })
+            .collect();
+        t.merge.record(sw.elapsed());
+        out
+    }
+
     /// [`AnnIndex::search`] with a worker pool: a sharded main fans the
     /// query out across its segments on `pool` (byte-identical to the serial
     /// path); the delta scan stays on the calling thread — it is bounded by
     /// the compaction threshold. Must not be called from a pool worker.
     pub fn search_on(&self, pool: &ThreadPool, query: &[f32], k: usize) -> Result<Vec<Neighbor>> {
+        self.search_on_impl(pool, query, k, None)
+    }
+
+    /// [`DeltaIndex::search_on`] with per-stage latency attribution.
+    pub fn search_on_traced(
+        &self,
+        pool: &ThreadPool,
+        query: &[f32],
+        k: usize,
+        trace: &SearchTrace,
+    ) -> Result<Vec<Neighbor>> {
+        self.search_on_impl(pool, query, k, Some(trace))
+    }
+
+    fn search_on_impl(
+        &self,
+        pool: &ThreadPool,
+        query: &[f32],
+        k: usize,
+        trace: Option<&SearchTrace>,
+    ) -> Result<Vec<Neighbor>> {
         self.check_query(query)?;
-        let main_hits = match self.main.as_sharded() {
-            Some(sh) if sh.num_shards() > 1 && pool.size() > 1 => sh.search_on(pool, query, k)?,
-            _ => self.main.search(query, k)?,
+        let main_hits = match (self.main.as_sharded(), trace) {
+            (Some(sh), t) if sh.num_shards() > 1 && pool.size() > 1 => match t {
+                Some(t) => sh.search_on_traced(pool, query, k, t)?,
+                None => sh.search_on(pool, query, k)?,
+            },
+            (_, Some(t)) => self.main.search_traced(query, k, t)?,
+            (_, None) => self.main.search(query, k)?,
         };
-        Ok(self.merged(main_hits, query, k))
+        Ok(self.merged_traced(main_hits, query, k, trace))
     }
 }
 
@@ -233,6 +293,12 @@ impl AnnIndex for DeltaIndex {
         self.check_query(query)?;
         let main_hits = self.main.search(query, k)?;
         Ok(self.merged(main_hits, query, k))
+    }
+
+    fn search_traced(&self, query: &[f32], k: usize, trace: &SearchTrace) -> Result<Vec<Neighbor>> {
+        self.check_query(query)?;
+        let main_hits = self.main.search_traced(query, k, trace)?;
+        Ok(self.merged_traced(main_hits, query, k, Some(trace)))
     }
 
     fn matches_data(&self, data: &[f32]) -> bool {

@@ -13,6 +13,8 @@ use crate::index::{io, pq, AnnIndex, IndexKind, StorageSpec, VectorStore};
 use crate::knn::topk::top_k_smallest;
 use crate::knn::Neighbor;
 use crate::metrics::Metric;
+use crate::telemetry::SearchTrace;
+use crate::util::timer::Stopwatch;
 use std::io::{Read, Write};
 
 /// Exhaustive-scan index.
@@ -54,6 +56,39 @@ impl ExactIndex {
     fn write_impl(&self, w: &mut dyn Write, annex: Option<&mut AnnexWriter>) -> Result<()> {
         io::write_u8(w, io::metric_tag(self.metric))?;
         self.store.write_with(w, annex)
+    }
+
+    fn search_impl(
+        &self,
+        query: &[f32],
+        k: usize,
+        trace: Option<&SearchTrace>,
+    ) -> Result<Vec<Neighbor>> {
+        if query.len() != self.dim() {
+            return Err(OpdrError::shape(format!(
+                "exact search: query dim {} != index dim {}",
+                query.len(),
+                self.dim()
+            )));
+        }
+        let n = self.len();
+        if let Some(p) = self.store.as_pq() {
+            // Two-stage: ADC table sweep over all ids, then full-precision
+            // rerank of the top `rerank_depth` candidates.
+            return pq::two_stage_search_traced(p, self.metric, query, 0..n, k, trace);
+        }
+        let sw = Stopwatch::start();
+        let mut scratch = Vec::new();
+        let dists: Vec<f32> =
+            (0..n).map(|id| self.store.distance(self.metric, query, id, &mut scratch)).collect();
+        let out = top_k_smallest(&dists, k)
+            .into_iter()
+            .map(|(index, distance)| Neighbor { index, distance })
+            .collect();
+        if let Some(t) = trace {
+            t.scan.record(sw.elapsed());
+        }
+        Ok(out)
     }
 }
 
@@ -99,26 +134,11 @@ impl AnnIndex for ExactIndex {
     }
 
     fn search(&self, query: &[f32], k: usize) -> Result<Vec<Neighbor>> {
-        if query.len() != self.dim() {
-            return Err(OpdrError::shape(format!(
-                "exact search: query dim {} != index dim {}",
-                query.len(),
-                self.dim()
-            )));
-        }
-        let n = self.len();
-        if let Some(p) = self.store.as_pq() {
-            // Two-stage: ADC table sweep over all ids, then full-precision
-            // rerank of the top `rerank_depth` candidates.
-            return pq::two_stage_search(p, self.metric, query, 0..n, k);
-        }
-        let mut scratch = Vec::new();
-        let dists: Vec<f32> =
-            (0..n).map(|id| self.store.distance(self.metric, query, id, &mut scratch)).collect();
-        Ok(top_k_smallest(&dists, k)
-            .into_iter()
-            .map(|(index, distance)| Neighbor { index, distance })
-            .collect())
+        self.search_impl(query, k, None)
+    }
+
+    fn search_traced(&self, query: &[f32], k: usize, trace: &SearchTrace) -> Result<Vec<Neighbor>> {
+        self.search_impl(query, k, Some(trace))
     }
 
     fn write_to(&self, w: &mut dyn Write) -> Result<()> {

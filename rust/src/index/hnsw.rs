@@ -32,6 +32,8 @@ use crate::error::{OpdrError, Result};
 use crate::index::{io, pq, AnnIndex, IndexKind, StorageSpec, VectorStore};
 use crate::knn::Neighbor;
 use crate::metrics::Metric;
+use crate::telemetry::SearchTrace;
+use crate::util::timer::Stopwatch;
 use crate::util::Rng;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -289,6 +291,72 @@ impl HnswIndex {
         }
         self.store.write_with(w, annex)
     }
+
+    fn search_impl(
+        &self,
+        query: &[f32],
+        k: usize,
+        trace: Option<&SearchTrace>,
+    ) -> Result<Vec<Neighbor>> {
+        let dim = self.dim();
+        if query.len() != dim {
+            return Err(OpdrError::shape(format!(
+                "hnsw search: query dim {} != index dim {dim}",
+                query.len()
+            )));
+        }
+        if k == 0 {
+            return Ok(Vec::new());
+        }
+        if let Some(p) = self.store.as_pq() {
+            // PQ path: walk the graph on ADC lookups, then rerank the beam's
+            // top `rerank_depth` at full precision. The beam is widened to
+            // the rerank depth so the candidate stage can fill it. The graph
+            // walk is the ADC scan stage; the rerank attributes separately.
+            let sw = Stopwatch::start();
+            let table = pq::AdcTable::new(p, self.metric, query)?;
+            let depth = p.rerank_depth().max(k);
+            let mut ep = self.entry;
+            for lvl in (1..=self.max_level).rev() {
+                ep = greedy_descend(ep, lvl, &self.links, |id| table.lookup(id));
+            }
+            let ef = self.params.ef_search.max(k).max(depth);
+            let found =
+                search_layer(self.len(), ep, ef, 0, &self.links, |id| table.lookup(id));
+            let ids: Vec<usize> =
+                found.into_iter().take(depth).map(|(_, id)| id as usize).collect();
+            if let Some(t) = trace {
+                t.scan.record(sw.elapsed());
+            }
+            let sw = Stopwatch::start();
+            let out = pq::rerank(p, self.metric, query, ids, k);
+            if let Some(t) = trace {
+                t.rerank.record(sw.elapsed());
+            }
+            return Ok(out);
+        }
+        let sw = Stopwatch::start();
+        let mut scratch = Vec::new();
+        let mut ep = self.entry;
+        for lvl in (1..=self.max_level).rev() {
+            ep = greedy_descend(ep, lvl, &self.links, |id| {
+                self.store.distance(self.metric, query, id, &mut scratch)
+            });
+        }
+        let ef = self.params.ef_search.max(k);
+        let found = search_layer(self.len(), ep, ef, 0, &self.links, |id| {
+            self.store.distance(self.metric, query, id, &mut scratch)
+        });
+        let out = found
+            .into_iter()
+            .take(k)
+            .map(|(d, id)| Neighbor { index: id as usize, distance: d.0 })
+            .collect();
+        if let Some(t) = trace {
+            t.scan.record(sw.elapsed());
+        }
+        Ok(out)
+    }
 }
 
 impl AnnIndex for HnswIndex {
@@ -338,48 +406,11 @@ impl AnnIndex for HnswIndex {
     }
 
     fn search(&self, query: &[f32], k: usize) -> Result<Vec<Neighbor>> {
-        let dim = self.dim();
-        if query.len() != dim {
-            return Err(OpdrError::shape(format!(
-                "hnsw search: query dim {} != index dim {dim}",
-                query.len()
-            )));
-        }
-        if k == 0 {
-            return Ok(Vec::new());
-        }
-        if let Some(p) = self.store.as_pq() {
-            // PQ path: walk the graph on ADC lookups, then rerank the beam's
-            // top `rerank_depth` at full precision. The beam is widened to
-            // the rerank depth so the candidate stage can fill it.
-            let table = pq::AdcTable::new(p, self.metric, query)?;
-            let depth = p.rerank_depth().max(k);
-            let mut ep = self.entry;
-            for lvl in (1..=self.max_level).rev() {
-                ep = greedy_descend(ep, lvl, &self.links, |id| table.lookup(id));
-            }
-            let ef = self.params.ef_search.max(k).max(depth);
-            let found =
-                search_layer(self.len(), ep, ef, 0, &self.links, |id| table.lookup(id));
-            let ids = found.into_iter().take(depth).map(|(_, id)| id as usize);
-            return Ok(pq::rerank(p, self.metric, query, ids, k));
-        }
-        let mut scratch = Vec::new();
-        let mut ep = self.entry;
-        for lvl in (1..=self.max_level).rev() {
-            ep = greedy_descend(ep, lvl, &self.links, |id| {
-                self.store.distance(self.metric, query, id, &mut scratch)
-            });
-        }
-        let ef = self.params.ef_search.max(k);
-        let found = search_layer(self.len(), ep, ef, 0, &self.links, |id| {
-            self.store.distance(self.metric, query, id, &mut scratch)
-        });
-        Ok(found
-            .into_iter()
-            .take(k)
-            .map(|(d, id)| Neighbor { index: id as usize, distance: d.0 })
-            .collect())
+        self.search_impl(query, k, None)
+    }
+
+    fn search_traced(&self, query: &[f32], k: usize, trace: &SearchTrace) -> Result<Vec<Neighbor>> {
+        self.search_impl(query, k, Some(trace))
     }
 
     fn write_to(&self, w: &mut dyn Write) -> Result<()> {

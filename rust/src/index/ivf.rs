@@ -16,6 +16,8 @@ use crate::knn::ivf::{kmeans_train, nearest_centroid};
 use crate::knn::topk::top_k_smallest;
 use crate::knn::Neighbor;
 use crate::metrics::Metric;
+use crate::telemetry::SearchTrace;
+use crate::util::timer::Stopwatch;
 use crate::util::Rng;
 use std::io::{Read, Write};
 
@@ -134,6 +136,59 @@ impl IvfIndex {
         }
         self.store.write_with(w, annex)
     }
+
+    fn search_impl(
+        &self,
+        query: &[f32],
+        k: usize,
+        trace: Option<&SearchTrace>,
+    ) -> Result<Vec<Neighbor>> {
+        let dim = self.dim();
+        if query.len() != dim {
+            return Err(OpdrError::shape(format!(
+                "ivf search: query dim {} != index dim {dim}",
+                query.len()
+            )));
+        }
+        let sw = Stopwatch::start();
+        // Rank cells by centroid distance.
+        let cdists: Vec<f32> = (0..self.nlist)
+            .map(|c| self.metric.distance(query, &self.centroids[c * dim..(c + 1) * dim]))
+            .collect();
+        let cells = top_k_smallest(&cdists, self.nprobe);
+
+        if let Some(p) = self.store.as_pq() {
+            // Two-stage PQ path: ADC table sweep over the probed cells'
+            // members, then full-precision rerank of the top candidates.
+            // (The centroid ranking above is a few µs and attributes to the
+            // ADC scan stage inside the traced two-stage call.)
+            let ids = cells
+                .into_iter()
+                .flat_map(|(c, _)| self.lists[c].iter().map(|&vid| vid as usize));
+            return pq::two_stage_search_traced(p, self.metric, query, ids, k, trace);
+        }
+
+        // Exhaustive (asymmetric for SQ8) scan within probed cells.
+        let mut cand_idx = Vec::new();
+        let mut cand_dist = Vec::new();
+        let mut scratch = Vec::new();
+        for (c, _) in cells {
+            for &vid in &self.lists[c] {
+                let d = self.store.distance(self.metric, query, vid as usize, &mut scratch);
+                cand_idx.push(vid as usize);
+                cand_dist.push(d);
+            }
+        }
+        let picked = top_k_smallest(&cand_dist, k);
+        let out = picked
+            .into_iter()
+            .map(|(pos, distance)| Neighbor { index: cand_idx[pos], distance })
+            .collect();
+        if let Some(t) = trace {
+            t.scan.record(sw.elapsed());
+        }
+        Ok(out)
+    }
 }
 
 impl AnnIndex for IvfIndex {
@@ -182,44 +237,11 @@ impl AnnIndex for IvfIndex {
     }
 
     fn search(&self, query: &[f32], k: usize) -> Result<Vec<Neighbor>> {
-        let dim = self.dim();
-        if query.len() != dim {
-            return Err(OpdrError::shape(format!(
-                "ivf search: query dim {} != index dim {dim}",
-                query.len()
-            )));
-        }
-        // Rank cells by centroid distance.
-        let cdists: Vec<f32> = (0..self.nlist)
-            .map(|c| self.metric.distance(query, &self.centroids[c * dim..(c + 1) * dim]))
-            .collect();
-        let cells = top_k_smallest(&cdists, self.nprobe);
+        self.search_impl(query, k, None)
+    }
 
-        if let Some(p) = self.store.as_pq() {
-            // Two-stage PQ path: ADC table sweep over the probed cells'
-            // members, then full-precision rerank of the top candidates.
-            let ids = cells
-                .into_iter()
-                .flat_map(|(c, _)| self.lists[c].iter().map(|&vid| vid as usize));
-            return pq::two_stage_search(p, self.metric, query, ids, k);
-        }
-
-        // Exhaustive (asymmetric for SQ8) scan within probed cells.
-        let mut cand_idx = Vec::new();
-        let mut cand_dist = Vec::new();
-        let mut scratch = Vec::new();
-        for (c, _) in cells {
-            for &vid in &self.lists[c] {
-                let d = self.store.distance(self.metric, query, vid as usize, &mut scratch);
-                cand_idx.push(vid as usize);
-                cand_dist.push(d);
-            }
-        }
-        let picked = top_k_smallest(&cand_dist, k);
-        Ok(picked
-            .into_iter()
-            .map(|(pos, distance)| Neighbor { index: cand_idx[pos], distance })
-            .collect())
+    fn search_traced(&self, query: &[f32], k: usize, trace: &SearchTrace) -> Result<Vec<Neighbor>> {
+        self.search_impl(query, k, Some(trace))
     }
 
     fn write_to(&self, w: &mut dyn Write) -> Result<()> {

@@ -72,6 +72,8 @@ use crate::data::mapped::{AnnexWriter, ColdContext, RowBlock};
 use crate::error::{OpdrError, Result};
 use crate::knn::Neighbor;
 use crate::metrics::Metric;
+use crate::telemetry::SearchTrace;
+use crate::util::timer::Stopwatch;
 use std::io::{Read, Write};
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -262,6 +264,25 @@ pub trait AnnIndex: Send + Sync + std::fmt::Debug {
 
     /// k nearest neighbors of `query`, ascending by (distance, index).
     fn search(&self, query: &[f32], k: usize) -> Result<Vec<Neighbor>>;
+
+    /// [`AnnIndex::search`] with per-stage latency attribution into `trace`.
+    ///
+    /// Results are bit-identical to `search` — tracing only adds stopwatches
+    /// around the stages a substrate actually executes. The default times
+    /// the whole search as a substrate scan; quantized and composite
+    /// substrates override it to split ADC scan from rerank and to attribute
+    /// shard/delta merges.
+    fn search_traced(
+        &self,
+        query: &[f32],
+        k: usize,
+        trace: &SearchTrace,
+    ) -> Result<Vec<Neighbor>> {
+        let sw = Stopwatch::start();
+        let out = self.search(query, k);
+        trace.scan.record(sw.elapsed());
+        out
+    }
 
     /// True when the index's owned vector copy matches `data` (bit-exact for
     /// flat storage, within quantization error for SQ8). Used when loading a

@@ -52,7 +52,9 @@ use crate::knn::topk::merge_top_k;
 use crate::knn::Neighbor;
 use crate::linalg::{eigh, Mat};
 use crate::metrics::{manhattan, sq_euclidean, Metric};
+use crate::telemetry::SearchTrace;
 use crate::util::float::{dot_f32, norm_sq_f32};
+use crate::util::timer::Stopwatch;
 use crate::util::Rng;
 use std::io::{Read, Write};
 
@@ -767,10 +769,33 @@ pub(crate) fn two_stage_search(
     ids: impl IntoIterator<Item = usize>,
     k: usize,
 ) -> Result<Vec<Neighbor>> {
+    two_stage_search_traced(pq, metric, query, ids, k, None)
+}
+
+/// [`two_stage_search`] with the ADC scan and the full-precision rerank
+/// attributed to their stage histograms. Results are identical with or
+/// without a trace — the stopwatches sit between stages, not inside them.
+pub(crate) fn two_stage_search_traced(
+    pq: &PqStorage,
+    metric: Metric,
+    query: &[f32],
+    ids: impl IntoIterator<Item = usize>,
+    k: usize,
+    trace: Option<&SearchTrace>,
+) -> Result<Vec<Neighbor>> {
+    let sw = Stopwatch::start();
     let table = AdcTable::new(pq, metric, query)?;
     let depth = pq.rerank_depth.max(k);
     let cands = merge_top_k(ids.into_iter().map(|id| (id, table.lookup(id))), depth);
-    Ok(rerank(pq, metric, query, cands.into_iter().map(|(id, _)| id), k))
+    if let Some(t) = trace {
+        t.scan.record(sw.elapsed());
+    }
+    let sw = Stopwatch::start();
+    let out = rerank(pq, metric, query, cands.into_iter().map(|(id, _)| id), k);
+    if let Some(t) = trace {
+        t.rerank.record(sw.elapsed());
+    }
+    Ok(out)
 }
 
 #[cfg(test)]

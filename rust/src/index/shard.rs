@@ -45,6 +45,8 @@ use crate::knn::topk::merge_top_k;
 use crate::knn::Neighbor;
 use crate::metrics::Metric;
 use crate::pool::ThreadPool;
+use crate::telemetry::SearchTrace;
+use crate::util::timer::Stopwatch;
 use std::io::{Read, Write};
 use std::ops::Range;
 use std::sync::mpsc::channel;
@@ -247,8 +249,35 @@ impl ShardedIndex {
     /// the pool queue behind them — latency, not a deadlock (a rebuild's
     /// *own* collection keeps serving its previous index either way).
     pub fn search_on(&self, pool: &ThreadPool, query: &[f32], k: usize) -> Result<Vec<Neighbor>> {
+        self.search_on_impl(pool, query, k, None)
+    }
+
+    /// [`ShardedIndex::search_on`] with per-stage latency attribution: each
+    /// segment search records into the trace's scan (and, for quantized
+    /// segments, rerank) histograms from its worker, and the global top-k
+    /// merge records into the merge histogram. Results stay byte-identical.
+    pub fn search_on_traced(
+        &self,
+        pool: &ThreadPool,
+        query: &[f32],
+        k: usize,
+        trace: &SearchTrace,
+    ) -> Result<Vec<Neighbor>> {
+        self.search_on_impl(pool, query, k, Some(trace))
+    }
+
+    fn search_on_impl(
+        &self,
+        pool: &ThreadPool,
+        query: &[f32],
+        k: usize,
+        trace: Option<&SearchTrace>,
+    ) -> Result<Vec<Neighbor>> {
         if self.segments.len() < 2 || pool.size() < 2 {
-            return self.search(query, k);
+            return match trace {
+                Some(t) => self.search_traced(query, k, t),
+                None => self.search(query, k),
+            };
         }
         self.check_query(query)?;
         let q = Arc::new(query.to_vec());
@@ -257,8 +286,15 @@ impl ShardedIndex {
             let seg = Arc::clone(seg);
             let q = Arc::clone(&q);
             let tx = tx.clone();
+            // The trace is a bundle of Arc'd histograms — cloning it moves
+            // cheap handles into the 'static pool closure.
+            let trace = trace.cloned();
             pool.execute(move || {
-                let _ = tx.send((s, seg.search(&q, k)));
+                let res = match &trace {
+                    Some(t) => seg.search_traced(&q, k, t),
+                    None => seg.search(&q, k),
+                };
+                let _ = tx.send((s, res));
             });
         }
         drop(tx);
@@ -272,7 +308,12 @@ impl ShardedIndex {
         for (_, res) in parts {
             per_segment.push(res?);
         }
-        Ok(self.merge(per_segment, k))
+        let sw = Stopwatch::start();
+        let merged = self.merge(per_segment, k);
+        if let Some(t) = trace {
+            t.merge.record(sw.elapsed());
+        }
+        Ok(merged)
     }
 }
 
@@ -322,6 +363,18 @@ impl AnnIndex for ShardedIndex {
             per_segment.push(seg.search(query, k)?);
         }
         Ok(self.merge(per_segment, k))
+    }
+
+    fn search_traced(&self, query: &[f32], k: usize, trace: &SearchTrace) -> Result<Vec<Neighbor>> {
+        self.check_query(query)?;
+        let mut per_segment = Vec::with_capacity(self.segments.len());
+        for seg in &self.segments {
+            per_segment.push(seg.search_traced(query, k, trace)?);
+        }
+        let sw = Stopwatch::start();
+        let merged = self.merge(per_segment, k);
+        trace.merge.record(sw.elapsed());
+        Ok(merged)
     }
 
     fn matches_data(&self, data: &[f32]) -> bool {

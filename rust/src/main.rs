@@ -65,6 +65,7 @@ fn print_help() {
                       [--incremental | --no-incremental] [--delta-max V]\n\
                       [--mmap-cold] [--cold-dir DIR]\n\
                       [--build-workers B] [--save-index file.opdx]\n\
+                      [--metrics] [--recall-probe] [--probe-every N]\n\
            artifacts  [--dir artifacts]\n\n\
          DATASETS: {}\n",
         DatasetKind::ALL.map(|d| d.name()).join(", ")
@@ -286,6 +287,17 @@ fn cmd_serve_demo(args: &mut Args) -> Result<()> {
     }
     let cold_dir = cold_dir_flag.unwrap_or_else(|| ServeConfig::default().cold_dir);
     let save_index = args.get("save-index").map(str::to_string);
+    // Observability flags: --metrics dumps the Prometheus-style exposition
+    // after the storm; --recall-probe shadows a sampled fraction of the
+    // queries against the exact scan (--probe-every without it would be
+    // silently ignored — mirrors the TOML validation).
+    let dump_metrics = args.has("metrics");
+    let recall_probe = args.has("recall-probe");
+    let probe_every = args.get_usize("probe-every")?;
+    if !recall_probe && probe_every.is_some() {
+        return Err(OpdrError::config("serve-demo: --probe-every requires --recall-probe"));
+    }
+    let recall_probe_every = probe_every.unwrap_or(ServeConfig::default().recall_probe_every);
     args.finish()?;
 
     let index_kind = IndexKind::parse(&index_name)
@@ -311,6 +323,8 @@ fn cmd_serve_demo(args: &mut Args) -> Result<()> {
         delta_max_vectors,
         cold_tier_mmap,
         cold_dir,
+        recall_probe,
+        recall_probe_every,
         ..Default::default()
     };
     cfg.validate()?;
@@ -380,6 +394,11 @@ fn cmd_serve_demo(args: &mut Args) -> Result<()> {
         );
     }
     println!("{}", coord.stats()?);
+    if dump_metrics {
+        // Full labeled exposition: per-(verb, collection) quantiles, stage
+        // histograms, probe gauges, collection topology.
+        println!("{}", coord.metrics_text()?);
+    }
     if let Some(path) = save_index {
         coord.save_index("demo", &path)?;
         println!("saved index segment to {path}");

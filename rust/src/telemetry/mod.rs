@@ -1,12 +1,21 @@
-//! Lightweight telemetry: counters and latency histograms.
+//! Lightweight telemetry: counters, gauges, latency histograms, a labeled
+//! [`Registry`] with Prometheus-style exposition, and a live recall probe.
 //!
 //! The coordinator records per-request latencies and throughput counters
 //! here; the bench harness reads them back for its reports. Thread-safe via
 //! atomics + a mutex-guarded histogram (contention is negligible next to the
-//! work being measured).
+//! work being measured). [`registry`] holds the labeled instrument registry
+//! and exposition format, [`probe`] the background recall probe that turns
+//! the paper's order-preserving measure μ into a runtime gauge.
+
+pub mod probe;
+pub mod registry;
+
+pub use probe::{ProbeJob, RecallProbe};
+pub use registry::{Gauge, Registry};
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, MutexGuard};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Duration;
 
 /// Lock a telemetry mutex, recovering from poisoning instead of cascading:
@@ -47,7 +56,7 @@ impl Counter {
     }
 }
 
-/// Fixed-bucket log-scale latency histogram (1µs .. ~17min, 5% resolution).
+/// Fixed-bucket log-scale latency histogram (1µs .. ~13min, 5% resolution).
 #[derive(Debug)]
 pub struct LatencyHistogram {
     inner: Mutex<HistogramInner>,
@@ -65,7 +74,7 @@ struct HistogramInner {
 
 const BASE_NS: f64 = 1_000.0; // 1µs
 const GROWTH: f64 = 1.05;
-const NBUCKETS: usize = 420; // 1µs * 1.05^420 ≈ 13 min
+const NBUCKETS: usize = 420; // 1µs * 1.05^420 ≈ 798s ≈ 13.3 min
 
 impl Default for LatencyHistogram {
     fn default() -> Self {
@@ -85,6 +94,13 @@ impl LatencyHistogram {
                 min_ns: u64::MAX,
             }),
         }
+    }
+
+    /// Upper bound of the top bucket — the longest latency the histogram can
+    /// resolve before clamping (samples above it still count, attributed to
+    /// the top bucket).
+    pub fn max_tracked() -> Duration {
+        Duration::from_nanos((BASE_NS * GROWTH.powi(NBUCKETS as i32)) as u64)
     }
 
     /// Record one latency sample.
@@ -115,6 +131,12 @@ impl LatencyHistogram {
             return Duration::ZERO;
         }
         Duration::from_nanos((g.sum_ns / g.count as u128) as u64)
+    }
+
+    /// Sum of all recorded samples.
+    pub fn total(&self) -> Duration {
+        let g = lock_recover(&self.inner);
+        Duration::from_nanos(u64::try_from(g.sum_ns).unwrap_or(u64::MAX))
     }
 
     /// Approximate quantile (bucket upper bound), `q` in [0,1].
@@ -153,29 +175,150 @@ impl LatencyHistogram {
     }
 }
 
-/// Metrics bundle shared by the coordinator.
-#[derive(Debug, Default)]
+/// Per-stage histograms threaded through a query's execution path
+/// (substrate/ADC scan → rerank → shard/delta merge → delta scan). The
+/// fields are `Arc` handles so the trace clones cheaply into the `'static`
+/// closures of the shard fan-out; every clone feeds the same histograms.
+#[derive(Debug, Clone)]
+pub struct SearchTrace {
+    /// Substrate scan: flat distance sweep, IVF cell scan, HNSW graph walk,
+    /// or the ADC pass of a quantized index.
+    pub scan: Arc<LatencyHistogram>,
+    /// Full-precision rerank after an ADC pass (quantized indexes only).
+    pub rerank: Arc<LatencyHistogram>,
+    /// Cross-shard / main+delta top-k merge.
+    pub merge: Arc<LatencyHistogram>,
+    /// Exhaustive scan of the unmerged delta segment.
+    pub delta_scan: Arc<LatencyHistogram>,
+}
+
+impl SearchTrace {
+    /// A trace whose stage histograms are registered under
+    /// [`registry::STAGE_DURATION`] with `stage=` labels.
+    pub fn registered(reg: &Registry) -> Self {
+        SearchTrace {
+            scan: reg.histogram(registry::STAGE_DURATION, &[("stage", "scan")]),
+            rerank: reg.histogram(registry::STAGE_DURATION, &[("stage", "rerank")]),
+            merge: reg.histogram(registry::STAGE_DURATION, &[("stage", "merge")]),
+            delta_scan: reg.histogram(registry::STAGE_DURATION, &[("stage", "delta_scan")]),
+        }
+    }
+
+    /// A trace backed by free-standing histograms (tests, benches).
+    pub fn detached() -> Self {
+        SearchTrace {
+            scan: Arc::new(LatencyHistogram::new()),
+            rerank: Arc::new(LatencyHistogram::new()),
+            merge: Arc::new(LatencyHistogram::new()),
+            delta_scan: Arc::new(LatencyHistogram::new()),
+        }
+    }
+}
+
+impl Default for SearchTrace {
+    fn default() -> Self {
+        Self::detached()
+    }
+}
+
+/// Spans for the background write path (index rebuilds and delta
+/// compactions): time spent building the replacement index and time spent
+/// swapping it into the serving slot.
+#[derive(Debug, Clone)]
+pub struct BuildSpans {
+    /// Building the replacement index off the serving path.
+    pub build: Arc<LatencyHistogram>,
+    /// Installing the built index (generation check + delta rebase + swap).
+    pub swap: Arc<LatencyHistogram>,
+}
+
+impl BuildSpans {
+    /// Spans registered under [`registry::STAGE_DURATION`].
+    pub fn registered(reg: &Registry) -> Self {
+        BuildSpans {
+            build: reg.histogram(registry::STAGE_DURATION, &[("stage", "compaction_build")]),
+            swap: reg.histogram(registry::STAGE_DURATION, &[("stage", "swap")]),
+        }
+    }
+
+    /// Spans backed by free-standing histograms (tests).
+    pub fn detached() -> Self {
+        BuildSpans {
+            build: Arc::new(LatencyHistogram::new()),
+            swap: Arc::new(LatencyHistogram::new()),
+        }
+    }
+}
+
+/// Metrics bundle shared by the coordinator. Every instrument is an `Arc`
+/// handle registered in [`Metrics::registry`], so the legacy `stats` line and
+/// the Prometheus exposition are two views over the same storage.
+#[derive(Debug)]
 pub struct Metrics {
+    /// The labeled registry backing every instrument below (plus the
+    /// per-verb/per-collection series created on demand).
+    pub registry: Arc<Registry>,
     /// Requests accepted into the queue.
-    pub requests: Counter,
+    pub requests: Arc<Counter>,
     /// Requests completed.
-    pub completed: Counter,
+    pub completed: Arc<Counter>,
     /// Requests rejected (backpressure).
-    pub rejected: Counter,
+    pub rejected: Arc<Counter>,
     /// Batches executed.
-    pub batches: Counter,
+    pub batches: Arc<Counter>,
     /// Total vectors scored.
-    pub vectors_scored: Counter,
-    /// End-to-end request latency.
-    pub latency: LatencyHistogram,
+    pub vectors_scored: Arc<Counter>,
+    /// End-to-end request latency (all searches, all collections).
+    pub latency: Arc<LatencyHistogram>,
     /// Time spent inside batch execution.
-    pub exec_latency: LatencyHistogram,
+    pub exec_latency: Arc<LatencyHistogram>,
+    /// Time a search spent queued before its batch started executing.
+    pub queue_wait: Arc<LatencyHistogram>,
+    /// Query-path stage histograms (scan/rerank/merge/delta_scan).
+    pub trace: SearchTrace,
+    /// Appending projected rows to the delta segment.
+    pub delta_append: Arc<LatencyHistogram>,
+    /// Write-path spans (compaction build + swap).
+    pub build_spans: BuildSpans,
 }
 
 impl Metrics {
-    /// New zeroed bundle.
+    /// New bundle with every instrument registered in a fresh registry.
     pub fn new() -> Self {
-        Metrics::default()
+        let registry = Arc::new(Registry::new());
+        Metrics {
+            requests: registry.counter(registry::REQUESTS_TOTAL, &[]),
+            completed: registry.counter(registry::REQUESTS_COMPLETED_TOTAL, &[]),
+            rejected: registry.counter(registry::REQUESTS_REJECTED_TOTAL, &[]),
+            batches: registry.counter(registry::BATCHES_TOTAL, &[]),
+            vectors_scored: registry.counter(registry::VECTORS_SCORED_TOTAL, &[]),
+            latency: registry.histogram(registry::REQUEST_DURATION, &[("verb", "search")]),
+            exec_latency: registry.histogram(registry::EXEC_DURATION, &[]),
+            queue_wait: registry.histogram(registry::STAGE_DURATION, &[("stage", "queue_wait")]),
+            trace: SearchTrace::registered(&registry),
+            delta_append: registry
+                .histogram(registry::STAGE_DURATION, &[("stage", "delta_append")]),
+            build_spans: BuildSpans::registered(&registry),
+            registry,
+        }
+    }
+
+    /// Per-`(verb, collection)` request-duration histogram.
+    pub fn verb_histogram(&self, verb: &str, collection: &str) -> Arc<LatencyHistogram> {
+        self.registry
+            .histogram(registry::REQUEST_DURATION, &[("verb", verb), ("collection", collection)])
+    }
+
+    /// Per-`(verb, collection)` request counter.
+    pub fn verb_counter(&self, verb: &str, collection: &str) -> Arc<Counter> {
+        self.registry
+            .counter(registry::REQUESTS_TOTAL, &[("verb", verb), ("collection", collection)])
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new()
     }
 }
 
@@ -235,6 +378,80 @@ mod tests {
     }
 
     #[test]
+    fn top_bucket_upper_bound_pinned() {
+        // The bucket layout resolves 1µs * 1.05^420 ≈ 798s ≈ 13.3 minutes —
+        // this pins the constants against the module docs (a header once
+        // claimed "~17min").
+        let top = LatencyHistogram::max_tracked();
+        assert!(
+            top >= Duration::from_secs(12 * 60) && top <= Duration::from_secs(14 * 60),
+            "top bucket bound {top:?} not ≈13min"
+        );
+        // A sample beyond the top bucket is clamped into it, and its
+        // quantile is reported capped at the recorded max.
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_secs(3600));
+        assert_eq!(h.count(), 1);
+        assert!(h.quantile(1.0) <= Duration::from_secs(3600));
+        assert!(h.quantile(1.0) >= Duration::from_secs(12 * 60));
+    }
+
+    #[test]
+    fn quantile_monotone_over_random_samples() {
+        // Property: q1 <= q2 ⇒ quantile(q1) <= quantile(q2), over random
+        // sample sets spanning several orders of magnitude.
+        let mut rng = crate::util::Rng::new(7);
+        for trial in 0..20 {
+            let h = LatencyHistogram::new();
+            let n = 1 + rng.below(200);
+            for _ in 0..n {
+                let us = 1 + rng.below(2_000_000);
+                h.record(Duration::from_micros(us as u64));
+            }
+            let grid = [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 0.999, 1.0];
+            for w in grid.windows(2) {
+                let lo = h.quantile(w[0]);
+                let hi = h.quantile(w[1]);
+                assert!(lo <= hi, "trial {trial}: q={} -> {lo:?} > q={} -> {hi:?}", w[0], w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn single_sample_all_quantiles_equal() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_millis(5));
+        for q in [0.0, 0.5, 1.0] {
+            // The bucket upper bound is clamped to the recorded max, so a
+            // single-sample histogram reports that sample exactly.
+            assert_eq!(h.quantile(q), Duration::from_millis(5), "q={q}");
+        }
+    }
+
+    #[test]
+    fn quantile_boundaries() {
+        let h = LatencyHistogram::new();
+        for i in 1..=100u64 {
+            h.record(Duration::from_micros(i));
+        }
+        // q=0.0 resolves to the first non-empty bucket; q=1.0 to the max.
+        assert!(h.quantile(0.0) <= h.quantile(0.01));
+        assert!(h.quantile(0.0) >= Duration::from_nanos(1000));
+        assert_eq!(h.quantile(1.0), h.max());
+        // Out-of-range q clamps instead of panicking.
+        assert_eq!(h.quantile(-3.0), h.quantile(0.0));
+        assert_eq!(h.quantile(7.5), h.quantile(1.0));
+    }
+
+    #[test]
+    fn total_sums_samples() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_micros(300));
+        h.record(Duration::from_micros(700));
+        assert_eq!(h.total(), Duration::from_micros(1000));
+    }
+
+    #[test]
     fn poisoned_histogram_lock_recovers_instead_of_cascading() {
         // Regression: one panicking thread holding the histogram lock used
         // to poison the registry and cascade panics into every unrelated
@@ -255,5 +472,23 @@ mod tests {
         assert!(h.quantile(0.5) > Duration::ZERO);
         assert!(h.max() >= Duration::from_micros(7));
         assert!(h.summary().contains("n=2"));
+    }
+
+    #[test]
+    fn metrics_bundle_is_registered_in_its_registry() {
+        // The bundle handles and the registry series are the same storage —
+        // the legacy stats line and the exposition can never disagree.
+        let m = Metrics::new();
+        m.requests.add(5);
+        m.batches.inc();
+        let via_registry = m.registry.counter(registry::REQUESTS_TOTAL, &[]);
+        assert_eq!(via_registry.get(), 5);
+        m.latency.record(Duration::from_micros(120));
+        let text = m.registry.render();
+        assert!(text.contains("opdr_requests_total 5"));
+        assert!(text.contains("opdr_batches_total 1"));
+        assert!(text.contains("opdr_request_duration_seconds_count{verb=\"search\"} 1"));
+        assert!(text.contains("stage=\"queue_wait\""));
+        assert!(text.contains("stage=\"scan\""));
     }
 }

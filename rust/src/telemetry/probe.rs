@@ -1,0 +1,238 @@
+//! Background recall probe: online order-preservation monitoring.
+//!
+//! The coordinator samples every N-th completed search per collection and
+//! ships a [`ProbeJob`] — the query in both spaces, the ids actually served,
+//! and snapshots of the serving and full-dimensional data — to a single
+//! probe thread over a bounded channel. The thread shadow-executes the query
+//! as a flat exact scan in both spaces and publishes, per collection:
+//!
+//! - `recall@k` = |F ∩ E^X| / k — how much of the true full-dimensional
+//!   neighborhood the served result F retained, and
+//! - the paper's order-preserving measure `μ(F)` (Eq. 1)
+//!   = |F ∩ E^Y ∩ E^X| / k — how much of it was preserved *through* the
+//!   reduced serving space Y,
+//!
+//! as running-mean gauges ([`registry::PROBE_RECALL`], [`registry::PROBE_MU`])
+//! plus a sample counter ([`registry::PROBE_SAMPLES_TOTAL`]). Sampling is
+//! deterministic (a per-collection modulo counter, not a coin flip) so tests
+//! can replay the exact same shadow set offline. The probe never touches the
+//! serving path: jobs are dropped, not blocked on, when the channel is full,
+//! and all scans run on the probe thread against `Arc` snapshots.
+
+use super::registry::{self, Registry};
+use crate::knn::knn_indices;
+use crate::metrics::Metric;
+use std::collections::HashMap;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// One sampled query to shadow-execute, with everything needed to do so off
+/// the serving path.
+#[derive(Debug, Clone)]
+pub struct ProbeJob {
+    /// Collection the query ran against (label for the published gauges).
+    pub collection: String,
+    /// The query in the original full-dimensional space `X`.
+    pub query_full: Vec<f32>,
+    /// The query projected into the serving space `Y` (identical to
+    /// `query_full` when the collection serves unreduced).
+    pub query_serving: Vec<f32>,
+    /// Requested neighborhood size.
+    pub k: usize,
+    /// Ids the live index actually returned (the set `F`).
+    pub served: Vec<usize>,
+    /// Snapshot of the serving-space rows (`m × serving_dim`).
+    pub serving: Arc<Vec<f32>>,
+    /// Serving-space dimensionality.
+    pub serving_dim: usize,
+    /// Snapshot of the full-dimensional rows (`m × full_dim`).
+    pub full: Arc<Vec<f32>>,
+    /// Full-space dimensionality.
+    pub full_dim: usize,
+    /// Distance metric of the collection.
+    pub metric: Metric,
+}
+
+/// Per-collection running aggregates.
+#[derive(Debug, Default)]
+struct ProbeStats {
+    recall_sum: f64,
+    mu_sum: f64,
+    n: u64,
+}
+
+/// Handle to the probe thread. Dropping it (or calling
+/// [`RecallProbe::shutdown`]) closes the channel; the thread drains every
+/// queued job before exiting, so gauges are final once shutdown returns.
+#[derive(Debug)]
+pub struct RecallProbe {
+    tx: Option<SyncSender<ProbeJob>>,
+    handle: Option<JoinHandle<()>>,
+    every: u64,
+    seen: Mutex<HashMap<String, u64>>,
+}
+
+impl RecallProbe {
+    /// Start the probe thread. `every` selects every N-th query per
+    /// collection (1 = probe everything); `capacity` bounds the job queue.
+    pub fn start(registry: Arc<Registry>, every: usize, capacity: usize) -> Self {
+        let (tx, rx) = sync_channel::<ProbeJob>(capacity.max(1));
+        let handle = std::thread::Builder::new()
+            .name("opdr-recall-probe".into())
+            .spawn(move || probe_loop(rx, &registry))
+            .expect("spawn recall probe thread");
+        RecallProbe {
+            tx: Some(tx),
+            handle: Some(handle),
+            every: every.max(1) as u64,
+            seen: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Deterministic sampler: true for the 1st, (N+1)-th, (2N+1)-th, ...
+    /// completed search of each collection.
+    pub fn should_sample(&self, collection: &str) -> bool {
+        let mut g = super::lock_recover(&self.seen);
+        let c = g.entry(collection.to_string()).or_insert(0);
+        let pick = *c % self.every == 0;
+        *c += 1;
+        pick
+    }
+
+    /// Enqueue a job without blocking; returns false (dropping the job) when
+    /// the probe is saturated or shut down.
+    pub fn submit(&self, job: ProbeJob) -> bool {
+        match &self.tx {
+            Some(tx) => !matches!(
+                tx.try_send(job),
+                Err(TrySendError::Full(_) | TrySendError::Disconnected(_))
+            ),
+            None => false,
+        }
+    }
+
+    /// Close the channel and wait for every queued job to be evaluated.
+    pub fn shutdown(&mut self) {
+        self.tx.take();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for RecallProbe {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn probe_loop(rx: Receiver<ProbeJob>, registry: &Registry) {
+    let mut stats: HashMap<String, ProbeStats> = HashMap::new();
+    while let Ok(job) = rx.recv() {
+        let Some((recall, mu)) = evaluate(&job) else {
+            continue; // malformed snapshot; never panic the probe thread
+        };
+        let s = stats.entry(job.collection.clone()).or_default();
+        s.recall_sum += recall;
+        s.mu_sum += mu;
+        s.n += 1;
+        let labels = [("collection", job.collection.as_str())];
+        registry.gauge(registry::PROBE_RECALL, &labels).set(s.recall_sum / s.n as f64);
+        registry.gauge(registry::PROBE_MU, &labels).set(s.mu_sum / s.n as f64);
+        registry.counter(registry::PROBE_SAMPLES_TOTAL, &labels).inc();
+    }
+}
+
+/// Shadow-execute one job: exact KNN in both spaces, then
+/// `recall@k = |F ∩ E^X| / k` and `μ(F) = |F ∩ E^Y ∩ E^X| / k`.
+pub fn evaluate(job: &ProbeJob) -> Option<(f64, f64)> {
+    if job.full_dim == 0 || job.serving_dim == 0 {
+        return None;
+    }
+    let m = job.full.len() / job.full_dim;
+    let denom = job.k.min(m).max(1) as f64;
+    let e_x: std::collections::HashSet<usize> =
+        knn_indices(&job.query_full, &job.full, job.full_dim, job.k, job.metric)
+            .ok()?
+            .into_iter()
+            .map(|nb| nb.index)
+            .collect();
+    let e_y: std::collections::HashSet<usize> =
+        knn_indices(&job.query_serving, &job.serving, job.serving_dim, job.k, job.metric)
+            .ok()?
+            .into_iter()
+            .map(|nb| nb.index)
+            .collect();
+    let hits_x = job.served.iter().filter(|i| e_x.contains(i)).count();
+    let hits_xy =
+        job.served.iter().filter(|i| e_x.contains(i) && e_y.contains(i)).count();
+    Some((hits_x as f64 / denom, hits_xy as f64 / denom))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(
+        collection: &str,
+        served: Vec<usize>,
+        full: Vec<f32>,
+        serving: Vec<f32>,
+        k: usize,
+    ) -> ProbeJob {
+        ProbeJob {
+            collection: collection.into(),
+            query_full: vec![0.0],
+            query_serving: vec![0.0],
+            k,
+            served,
+            serving: Arc::new(serving),
+            serving_dim: 1,
+            full: Arc::new(full),
+            full_dim: 1,
+            metric: Metric::Euclidean,
+        }
+    }
+
+    #[test]
+    fn evaluate_known_sets() {
+        // Full space: rows at 0,1,2,3,4 ⇒ E^X of q=0 with k=2 is {0,1}.
+        // Serving space: rows at 0,5,0.5,9,9.5 ⇒ E^Y = {0,2}.
+        let full = vec![0.0f32, 1.0, 2.0, 3.0, 4.0];
+        let serving = vec![0.0f32, 5.0, 0.5, 9.0, 9.5];
+        // Served {0,1}: both in E^X ⇒ recall 1.0; only 0 also in E^Y ⇒ μ 0.5.
+        let (recall, mu) = evaluate(&job("c", vec![0, 1], full, serving, 2)).unwrap();
+        assert_eq!(recall, 1.0);
+        assert_eq!(mu, 0.5);
+    }
+
+    #[test]
+    fn probe_publishes_running_means_and_drains_on_shutdown() {
+        let registry = Arc::new(Registry::new());
+        let mut probe = RecallProbe::start(Arc::clone(&registry), 1, 64);
+        let full = vec![0.0f32, 1.0, 2.0, 3.0, 4.0];
+        // Identity serving space ⇒ E^Y = E^X ⇒ μ == recall.
+        assert!(probe.submit(job("c", vec![0, 3], full.clone(), full.clone(), 2))); // recall 0.5
+        assert!(probe.submit(job("c", vec![0, 1], full.clone(), full.clone(), 2))); // recall 1.0
+        probe.shutdown();
+        let labels = [("collection", "c")];
+        assert_eq!(registry.counter(registry::PROBE_SAMPLES_TOTAL, &labels).get(), 2);
+        let recall = registry.gauge(registry::PROBE_RECALL, &labels).get();
+        let mu = registry.gauge(registry::PROBE_MU, &labels).get();
+        assert!((recall - 0.75).abs() < 1e-12, "recall={recall}");
+        assert!((mu - 0.75).abs() < 1e-12, "mu={mu}");
+        // Shut-down probe rejects further jobs instead of panicking.
+        assert!(!probe.submit(job("c", vec![0], full.clone(), full, 1)));
+    }
+
+    #[test]
+    fn sampling_is_every_nth_per_collection() {
+        let registry = Arc::new(Registry::new());
+        let probe = RecallProbe::start(registry, 3, 8);
+        let picks: Vec<bool> = (0..7).map(|_| probe.should_sample("a")).collect();
+        assert_eq!(picks, vec![true, false, false, true, false, false, true]);
+        // Independent counter per collection.
+        assert!(probe.should_sample("b"));
+    }
+}

@@ -1,0 +1,327 @@
+//! Labeled metrics registry with Prometheus-style text exposition.
+//!
+//! Instruments ([`Counter`], [`Gauge`], [`LatencyHistogram`]) are keyed by
+//! `(name, sorted label pairs)` and handed out as `Arc` handles: callers on
+//! hot paths fetch a handle once and then touch only the lock-free
+//! instrument, never the registry map. The registry itself is a
+//! mutex-guarded `BTreeMap` so [`Registry::render`] walks families in a
+//! stable, deterministic order.
+//!
+//! Exposition follows the Prometheus text format: counters and gauges as
+//! plain samples, histograms as *summaries* — `quantile="0.5" / "0.99" /
+//! "0.999"` samples in seconds plus `_sum` / `_count` series — because the
+//! log-bucket [`LatencyHistogram`] already answers quantile queries directly
+//! and shipping 420 cumulative buckets per series would drown the scrape.
+//!
+//! Metric-name constants for everything the coordinator publishes live at
+//! the bottom of this module; the verb/stage/label conventions are documented
+//! in `crate::coordinator`.
+
+use super::{lock_recover, Counter, LatencyHistogram};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Last-value-wins gauge holding an `f64` (stored as raw bits in an
+/// `AtomicU64`; no locking, torn reads impossible).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    /// New gauge reading `0.0`.
+    pub fn new() -> Self {
+        Gauge::default()
+    }
+
+    /// Set the current value.
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// One registered instrument.
+#[derive(Debug, Clone)]
+enum Instrument {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<LatencyHistogram>),
+}
+
+/// Sorted `(key, value)` label pairs; part of the registry key.
+type Labels = Vec<(String, String)>;
+
+/// Labeled instrument registry. Cheap to share behind an `Arc`; get-or-create
+/// accessors return `Arc` handles that stay valid for the registry's lifetime.
+#[derive(Debug, Default)]
+pub struct Registry {
+    inner: Mutex<BTreeMap<(String, Labels), Instrument>>,
+}
+
+impl Registry {
+    /// New empty registry.
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    fn key(name: &str, labels: &[(&str, &str)]) -> (String, Labels) {
+        let mut l: Labels =
+            labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        l.sort();
+        (name.to_string(), l)
+    }
+
+    /// Get or create the counter `name{labels}`.
+    ///
+    /// If the key is already registered as a different instrument kind the
+    /// call returns a fresh *detached* counter (never a panic on the serving
+    /// path); mixing kinds under one name is a programming error.
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        let mut g = lock_recover(&self.inner);
+        let e = g
+            .entry(Self::key(name, labels))
+            .or_insert_with(|| Instrument::Counter(Arc::new(Counter::new())));
+        match e {
+            Instrument::Counter(c) => Arc::clone(c),
+            _ => {
+                debug_assert!(false, "metric {name} registered with a different kind");
+                Arc::new(Counter::new())
+            }
+        }
+    }
+
+    /// Get or create the gauge `name{labels}` (kind-mismatch behaves like
+    /// [`Registry::counter`]).
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        let mut g = lock_recover(&self.inner);
+        let e = g
+            .entry(Self::key(name, labels))
+            .or_insert_with(|| Instrument::Gauge(Arc::new(Gauge::new())));
+        match e {
+            Instrument::Gauge(v) => Arc::clone(v),
+            _ => {
+                debug_assert!(false, "metric {name} registered with a different kind");
+                Arc::new(Gauge::new())
+            }
+        }
+    }
+
+    /// Get or create the latency histogram `name{labels}` (kind-mismatch
+    /// behaves like [`Registry::counter`]).
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> Arc<LatencyHistogram> {
+        let mut g = lock_recover(&self.inner);
+        let e = g
+            .entry(Self::key(name, labels))
+            .or_insert_with(|| Instrument::Histogram(Arc::new(LatencyHistogram::new())));
+        match e {
+            Instrument::Histogram(h) => Arc::clone(h),
+            _ => {
+                debug_assert!(false, "metric {name} registered with a different kind");
+                Arc::new(LatencyHistogram::new())
+            }
+        }
+    }
+
+    /// Render every registered instrument in the Prometheus text format.
+    ///
+    /// Families are emitted in lexicographic name order with one `# TYPE`
+    /// header each; histograms render as summaries with `quantile="0.5"`,
+    /// `"0.99"`, `"0.999"` samples (seconds) plus `_sum` and `_count`.
+    pub fn render(&self) -> String {
+        // Snapshot the handles, then drop the map lock before touching the
+        // (individually locked) histograms.
+        let snapshot: Vec<((String, Labels), Instrument)> = {
+            let g = lock_recover(&self.inner);
+            g.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
+        };
+        let mut out = String::new();
+        let mut last_name = String::new();
+        for ((name, labels), inst) in snapshot {
+            if name != last_name {
+                let kind = match inst {
+                    Instrument::Counter(_) => "counter",
+                    Instrument::Gauge(_) => "gauge",
+                    Instrument::Histogram(_) => "summary",
+                };
+                let _ = writeln!(out, "# TYPE {name} {kind}");
+                last_name = name.clone();
+            }
+            match inst {
+                Instrument::Counter(c) => {
+                    let _ = writeln!(out, "{}{} {}", name, fmt_labels(&labels, None), c.get());
+                }
+                Instrument::Gauge(v) => {
+                    let _ = writeln!(out, "{}{} {}", name, fmt_labels(&labels, None), v.get());
+                }
+                Instrument::Histogram(h) => {
+                    for q in ["0.5", "0.99", "0.999"] {
+                        let qv: f64 = q.parse().unwrap_or(0.5);
+                        let _ = writeln!(
+                            out,
+                            "{}{} {}",
+                            name,
+                            fmt_labels(&labels, Some(q)),
+                            h.quantile(qv).as_secs_f64()
+                        );
+                    }
+                    let _ = writeln!(
+                        out,
+                        "{}_sum{} {}",
+                        name,
+                        fmt_labels(&labels, None),
+                        h.total().as_secs_f64()
+                    );
+                    let _ =
+                        writeln!(out, "{}_count{} {}", name, fmt_labels(&labels, None), h.count());
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Format a label set as `{k="v",...}`, optionally appending a
+/// `quantile="q"` pair; empty label sets render as nothing.
+fn fmt_labels(labels: &Labels, quantile: Option<&str>) -> String {
+    if labels.is_empty() && quantile.is_none() {
+        return String::new();
+    }
+    let mut parts: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", escape_label(v))).collect();
+    if let Some(q) = quantile {
+        parts.push(format!("quantile=\"{q}\""));
+    }
+    format!("{{{}}}", parts.join(","))
+}
+
+/// Escape a label value per the Prometheus text format.
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+// --- Metric names published by the coordinator ------------------------------
+// (see `crate::coordinator` module docs for the full table)
+
+/// Requests accepted into the queue (counter; also labeled per verb/collection).
+pub const REQUESTS_TOTAL: &str = "opdr_requests_total";
+/// Requests completed (counter).
+pub const REQUESTS_COMPLETED_TOTAL: &str = "opdr_requests_completed_total";
+/// Requests rejected by backpressure (counter).
+pub const REQUESTS_REJECTED_TOTAL: &str = "opdr_requests_rejected_total";
+/// Batches executed (counter).
+pub const BATCHES_TOTAL: &str = "opdr_batches_total";
+/// Vectors scored across all searches (counter).
+pub const VECTORS_SCORED_TOTAL: &str = "opdr_vectors_scored_total";
+/// End-to-end request duration, labeled `{verb, collection}` (summary).
+pub const REQUEST_DURATION: &str = "opdr_request_duration_seconds";
+/// Time inside batch execution (summary).
+pub const EXEC_DURATION: &str = "opdr_exec_duration_seconds";
+/// Pipeline stage duration, labeled `{stage}` (summary).
+pub const STAGE_DURATION: &str = "opdr_stage_duration_seconds";
+/// Live recall@k vs the flat exact scan, labeled `{collection}` (gauge).
+pub const PROBE_RECALL: &str = "opdr_probe_recall_at_k";
+/// Live order-preserving measure μ (paper Eq. 1), labeled `{collection}` (gauge).
+pub const PROBE_MU: &str = "opdr_probe_op_measure_mu";
+/// Shadow queries evaluated by the recall probe, labeled `{collection}` (counter).
+pub const PROBE_SAMPLES_TOTAL: &str = "opdr_probe_samples_total";
+/// Rows currently held per collection (gauge, labeled `{collection}`).
+pub const COLLECTION_ROWS: &str = "opdr_collection_rows";
+/// Shard count of the serving index (gauge, labeled `{collection}`).
+pub const COLLECTION_SHARDS: &str = "opdr_collection_shards";
+/// Rows in the unmerged delta segment (gauge, labeled `{collection}`).
+pub const COLLECTION_DELTA_ROWS: &str = "opdr_collection_delta_rows";
+/// Bytes kept on the cold tier (gauge, labeled `{collection}`).
+pub const COLLECTION_COLD_BYTES: &str = "opdr_collection_cold_bytes";
+/// Bytes memory-mapped from the cold tier (gauge, labeled `{collection}`).
+pub const COLLECTION_MAPPED_BYTES: &str = "opdr_collection_mapped_bytes";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn get_or_create_returns_same_instrument() {
+        let r = Registry::new();
+        let a = r.counter(REQUESTS_TOTAL, &[("verb", "search"), ("collection", "c")]);
+        // Label order must not matter.
+        let b = r.counter(REQUESTS_TOTAL, &[("collection", "c"), ("verb", "search")]);
+        a.inc();
+        assert_eq!(b.get(), 1);
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn distinct_labels_are_distinct_series() {
+        let r = Registry::new();
+        let a = r.counter(REQUESTS_TOTAL, &[("collection", "a")]);
+        let b = r.counter(REQUESTS_TOTAL, &[("collection", "b")]);
+        a.add(3);
+        assert_eq!(b.get(), 0);
+    }
+
+    #[test]
+    fn gauge_set_get_roundtrips_f64() {
+        let g = Gauge::new();
+        assert_eq!(g.get(), 0.0);
+        g.set(0.8125);
+        assert_eq!(g.get(), 0.8125);
+        g.set(-1.5);
+        assert_eq!(g.get(), -1.5);
+    }
+
+    #[test]
+    fn render_emits_type_lines_quantiles_sum_count() {
+        let r = Registry::new();
+        r.counter(REQUESTS_TOTAL, &[]).add(7);
+        r.gauge(PROBE_RECALL, &[("collection", "demo")]).set(0.9);
+        let h = r.histogram(REQUEST_DURATION, &[("verb", "search"), ("collection", "demo")]);
+        for _ in 0..10 {
+            h.record(Duration::from_micros(250));
+        }
+        let text = r.render();
+        assert!(text.contains("# TYPE opdr_requests_total counter"));
+        assert!(text.contains("opdr_requests_total 7"));
+        assert!(text.contains("# TYPE opdr_probe_recall_at_k gauge"));
+        assert!(text.contains("opdr_probe_recall_at_k{collection=\"demo\"} 0.9"));
+        assert!(text.contains("# TYPE opdr_request_duration_seconds summary"));
+        for q in ["0.5", "0.99", "0.999"] {
+            assert!(
+                text.contains(&format!(
+                    "opdr_request_duration_seconds{{collection=\"demo\",verb=\"search\",quantile=\"{q}\"}}"
+                )),
+                "missing quantile {q} in:\n{text}"
+            );
+        }
+        let lbl = "{collection=\"demo\",verb=\"search\"}";
+        assert!(text.contains(&format!("opdr_request_duration_seconds_count{lbl} 10")));
+        assert!(text.contains(&format!("opdr_request_duration_seconds_sum{lbl}")));
+    }
+
+    #[test]
+    fn render_order_is_deterministic() {
+        let r = Registry::new();
+        r.counter("z_metric", &[]).inc();
+        r.counter("a_metric", &[]).inc();
+        let text = r.render();
+        let a = text.find("a_metric").unwrap();
+        let z = text.find("z_metric").unwrap();
+        assert!(a < z, "families must render in name order:\n{text}");
+        assert_eq!(text, r.render());
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let r = Registry::new();
+        r.counter("m", &[("collection", "we\"ird\\name")]).inc();
+        let text = r.render();
+        assert!(text.contains("m{collection=\"we\\\"ird\\\\name\"} 1"));
+    }
+}

@@ -1,0 +1,208 @@
+//! Observability end-to-end: the labeled registry counts real work, the
+//! Prometheus exposition and the legacy `stats` line agree (they are two
+//! views over the same storage), and the background recall probe's published
+//! gauges match an offline exact recomputation bit-for-bit.
+
+use opdr::config::ServeConfig;
+use opdr::coordinator::Coordinator;
+use opdr::data::{synth, DatasetKind};
+use opdr::metrics::Metric;
+use opdr::telemetry::registry;
+
+/// Pull the integer after `key` on the line starting with `prefix`.
+fn parse_key(stats: &str, prefix: &str, key: &str) -> u64 {
+    let line = stats
+        .lines()
+        .find(|l| l.starts_with(prefix))
+        .unwrap_or_else(|| panic!("no line starting with {prefix:?} in {stats:?}"));
+    line.split(key)
+        .nth(1)
+        .and_then(|rest| rest.split_whitespace().next())
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| panic!("no {key:?} on {line:?}"))
+}
+
+/// Satellite: the once-dead pipeline counters (`vectors_scored`, `batches`,
+/// `exec_latency`) now count real work, the per-stage and per-verb series
+/// show up in the exposition, and the `Metrics` admin verb renders them.
+#[test]
+fn metrics_registry_counts_real_work() {
+    let cfg = ServeConfig { workers: 2, max_batch: 16, max_wait_ms: 1, ..Default::default() };
+    let coord = Coordinator::start(cfg).unwrap();
+    coord.create_collection("c", 32, Metric::SqEuclidean).unwrap();
+    let set = synth::generate(DatasetKind::OmniCorpus, 300, 32, 11);
+    coord.ingest("c", set.data().to_vec()).unwrap();
+    for qi in 0..30 {
+        let res = coord.search("c", set.vector(qi).to_vec(), 5).unwrap();
+        assert_eq!(res.neighbors[0].index, qi);
+    }
+
+    let m = coord.metrics();
+    assert_eq!(m.completed.get(), 30);
+    assert!(m.batches.get() > 0, "batches counter still dead");
+    assert!(
+        m.vectors_scored.get() >= 30 * 300,
+        "vectors_scored counter still dead: {}",
+        m.vectors_scored.get()
+    );
+    assert!(m.exec_latency.count() > 0, "exec_latency histogram still dead");
+    assert_eq!(m.queue_wait.count(), 30, "queue-wait span must cover every search");
+    assert_eq!(m.latency.count(), 30);
+    // Unindexed path: every query runs the flat scan stage, nothing reranks.
+    assert_eq!(m.trace.scan.count(), 30);
+    assert_eq!(m.trace.rerank.count(), 0);
+
+    // The exposition renders the same storage: summary quantiles for the
+    // per-(verb, collection) request series, the stage series, the verb
+    // counters, and the topology gauges.
+    let text = coord.metrics_text().unwrap();
+    assert!(text.contains("# TYPE opdr_request_duration_seconds summary"), "{text}");
+    let series = "opdr_request_duration_seconds{collection=\"c\",verb=\"search\"";
+    assert!(text.contains(&format!("{series},quantile=\"0.5\"}}")), "{text}");
+    assert!(text.contains(&format!("{series},quantile=\"0.999\"}}")), "{text}");
+    assert!(text.contains("opdr_requests_total{collection=\"c\",verb=\"search\"} 30"), "{text}");
+    assert!(
+        text.contains("opdr_stage_duration_seconds{stage=\"scan\",quantile=\"0.99\"}"),
+        "{text}"
+    );
+    assert!(text.contains("opdr_stage_duration_seconds{stage=\"queue_wait\""), "{text}");
+    assert!(text.contains("opdr_collection_rows{collection=\"c\"} 300"), "{text}");
+    // Admin verbs get their own series too (counted at dispatch).
+    assert!(text.contains("opdr_requests_total{collection=\"c\",verb=\"ingest\"} 1"), "{text}");
+    assert!(
+        text.contains("opdr_request_duration_seconds{collection=\"_admin\",verb=\"metrics\""),
+        "{text}"
+    );
+    coord.shutdown();
+}
+
+/// Satellite (stats backward compat): the legacy `stats` line is a view over
+/// the registry — its `shards=` / `delta=` / `n=` keys and its summary
+/// counters must agree with the gauge/counter read-back and the exposition.
+#[test]
+fn stats_line_and_registry_agree() {
+    let dim = 12;
+    let cfg = ServeConfig {
+        workers: 2,
+        max_batch: 8,
+        max_wait_ms: 1,
+        index_kind: opdr::index::IndexKind::Exact,
+        ivf_threshold: 0,
+        shards: 4,
+        shard_min_vectors: 1,
+        delta_max_vectors: 1000, // keep the delta un-compacted
+        ..Default::default()
+    };
+    let coord = Coordinator::start(cfg).unwrap();
+    coord.create_collection("c", dim, Metric::SqEuclidean).unwrap();
+    let set = synth::generate(DatasetKind::MaterialsStable, 140, dim, 23);
+    coord.ingest("c", set.data()[..120 * dim].to_vec()).unwrap();
+    coord.build_index("c").unwrap();
+    coord.ingest("c", set.data()[120 * dim..].to_vec()).unwrap();
+    for qi in 0..10 {
+        coord.search("c", set.vector(qi).to_vec(), 3).unwrap();
+    }
+
+    let stats = coord.stats().unwrap();
+    let n = parse_key(&stats, "collection c:", "n=");
+    let shards = parse_key(&stats, "collection c:", "shards=");
+    let delta = parse_key(&stats, "collection c:", "delta=");
+    assert_eq!((n, shards, delta), (140, 4, 20), "{stats}");
+
+    // Gauge read-back (refreshed by the stats call itself) agrees.
+    let reg = &coord.metrics().registry;
+    let lbl = [("collection", "c")];
+    assert_eq!(reg.gauge(registry::COLLECTION_ROWS, &lbl).get(), 140.0);
+    assert_eq!(reg.gauge(registry::COLLECTION_SHARDS, &lbl).get(), 4.0);
+    assert_eq!(reg.gauge(registry::COLLECTION_DELTA_ROWS, &lbl).get(), 20.0);
+
+    // Summary counters in the legacy line are the registered instruments.
+    let completed = parse_key(&stats, "requests=", "completed=");
+    assert_eq!(completed, coord.metrics().completed.get());
+    let requests = parse_key(&stats, "requests=", "requests=");
+    assert_eq!(requests, coord.metrics().requests.get());
+
+    // And the exposition shows the same topology values.
+    let text = coord.metrics_text().unwrap();
+    assert!(text.contains("opdr_collection_shards{collection=\"c\"} 4"), "{text}");
+    assert!(text.contains("opdr_collection_delta_rows{collection=\"c\"} 20"), "{text}");
+    assert!(text.contains("opdr_collection_rows{collection=\"c\"} 140"), "{text}");
+    coord.shutdown();
+}
+
+/// Tentpole acceptance: the background recall probe's `recall@k` gauge must
+/// equal an offline exact recomputation over the same served results —
+/// deterministic sampling (every query here) plus exact shadow scans leave
+/// no room for drift. Served without reduction, the serving space equals the
+/// full space, so the order-preserving measure μ must equal recall exactly.
+#[test]
+fn recall_probe_matches_offline_exact_computation() {
+    let dim = 24;
+    let n = 400;
+    let k = 10;
+    let cfg = ServeConfig {
+        workers: 2,
+        max_batch: 8,
+        max_wait_ms: 1,
+        ivf_threshold: 100,
+        ivf_nlist: 16,
+        ivf_nprobe: 2, // genuinely approximate → recall < 1 is expected
+        recall_probe: true,
+        recall_probe_every: 1, // shadow-execute every query
+        ..Default::default()
+    };
+    let coord = Coordinator::start(cfg).unwrap();
+    coord.create_collection("p", dim, Metric::SqEuclidean).unwrap();
+    let set = synth::generate(DatasetKind::Flickr30k, n, dim, 61);
+    coord.ingest("p", set.data().to_vec()).unwrap();
+    coord.build_index("p").unwrap();
+
+    let queries = 25;
+    let mut recall_sum = 0.0f64;
+    for qi in 0..queries {
+        let res = coord.search("p", set.vector(qi).to_vec(), k).unwrap();
+        // Offline ground truth through the same exact-KNN kernel the probe
+        // uses, over the same rows.
+        let exact: std::collections::HashSet<usize> =
+            opdr::knn::knn_indices(set.vector(qi), set.data(), dim, k, Metric::SqEuclidean)
+                .unwrap()
+                .into_iter()
+                .map(|nb| nb.index)
+                .collect();
+        let hits = res.neighbors.iter().filter(|nb| exact.contains(&nb.index)).count();
+        recall_sum += hits as f64 / k.min(n).max(1) as f64;
+    }
+    let expected = recall_sum / queries as f64;
+
+    // The probe evaluates asynchronously; its channel is drained in order,
+    // so poll until all samples landed.
+    let reg = std::sync::Arc::clone(&coord.metrics().registry);
+    let lbl = [("collection", "p")];
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+    while reg.counter(registry::PROBE_SAMPLES_TOTAL, &lbl).get() < queries as u64 {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "probe only evaluated {} of {queries} samples",
+            reg.counter(registry::PROBE_SAMPLES_TOTAL, &lbl).get()
+        );
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    let recall = reg.gauge(registry::PROBE_RECALL, &lbl).get();
+    let mu = reg.gauge(registry::PROBE_MU, &lbl).get();
+    assert!(
+        (recall - expected).abs() < 1e-12,
+        "probe recall@{k} {recall} != offline exact {expected}"
+    );
+    assert!(
+        (mu - recall).abs() < 1e-12,
+        "unreduced serving space: μ {mu} must equal recall {recall}"
+    );
+    assert!(recall > 0.0, "probe published a zero recall");
+
+    // The gauges appear in the exposition with the collection label.
+    let text = coord.metrics_text().unwrap();
+    assert!(text.contains("opdr_probe_recall_at_k{collection=\"p\"}"), "{text}");
+    assert!(text.contains("opdr_probe_op_measure_mu{collection=\"p\"}"), "{text}");
+    assert!(text.contains("opdr_probe_samples_total{collection=\"p\"} 25"), "{text}");
+    coord.shutdown();
+}
