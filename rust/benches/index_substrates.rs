@@ -46,6 +46,13 @@ fn recall_at_k(
 }
 
 fn main() {
+    // CI runs the distributed axis on its own (`-- --dist-only`): it needs
+    // no planner calibration and must stay cheap enough for a release-mode
+    // gate on every push.
+    if std::env::args().any(|a| a == "--dist-only") {
+        run_dist_axis();
+        return;
+    }
     let set = synth::generate(DatasetKind::Flickr30k, N + NQ, DIM, 42);
     let base_full = &set.data()[..N * DIM];
     let query_full = &set.data()[N * DIM..];
@@ -612,5 +619,155 @@ fn main() {
          scan over the freshly ingested tail; QPS during compaction shows the\n\
          wrapper serving at full speed while the merged index rebuilds in the\n\
          background (only the final swap is atomic)."
+    );
+
+    run_dist_axis();
+}
+
+// -------------------------------------------------------------------
+// Distributed axis: the same exact scan served direct (single process)
+// vs through the RPC gateway over 1 / 2 / 4 loopback shard workers
+// ([`opdr::dist`]). Results land in BENCH_dist.json; the floor is
+// CI-gated: 4-worker QPS must clear 1.5x the single-process QPS.
+// -------------------------------------------------------------------
+fn run_dist_axis() {
+    use opdr::config::DistConfig;
+    use opdr::dist::{Gateway, ThreadWorker, WorkerSpec};
+    use opdr::index::shard::shard_ranges;
+    use opdr::index::{ExactIndex, StorageSpec};
+    use opdr::telemetry::Registry;
+
+    const FLOOR_RATIO: f64 = 1.5;
+    let n = 32_000usize;
+    let dim = 64usize;
+    let nq = 64usize;
+    let set = synth::generate(DatasetKind::Flickr30k, n + nq, dim, 42);
+    let base = &set.data()[..n * dim];
+    let queries = &set.data()[n * dim..];
+    section(&format!(
+        "distributed axis over {n} vectors at dim {dim}: direct vs 1/2/4 shard workers"
+    ));
+
+    let whole: Arc<dyn AnnIndex> = Arc::new(
+        ExactIndex::build(base, dim, METRIC, &StorageSpec::flat(), 9).expect("build reference"),
+    );
+    let reference: Vec<Vec<(usize, u32)>> = (0..8)
+        .map(|qi| {
+            whole
+                .search(&queries[qi * dim..(qi + 1) * dim], K)
+                .unwrap()
+                .iter()
+                .map(|nb| (nb.index, nb.distance.to_bits()))
+                .collect()
+        })
+        .collect();
+
+    // Best-of-N rounds of the full query sweep: the gate compares
+    // steady-state throughput, and best-of shields the CI step from
+    // scheduler noise on shared runners.
+    let bench_qps = |f: &mut dyn FnMut()| -> f64 {
+        f(); // warmup sweep
+        let mut best = 0.0f64;
+        for _ in 0..5 {
+            let sw = Stopwatch::start();
+            f();
+            best = best.max(nq as f64 / sw.elapsed_secs().max(1e-9));
+        }
+        best
+    };
+
+    let mut dist_table = Table::new(&["mode", "workers", "qps", "vs direct"]);
+    let mut dist_json: Vec<String> = Vec::new();
+    let direct_qps = bench_qps(&mut || {
+        for qi in 0..nq {
+            let out = whole.search(&queries[qi * dim..(qi + 1) * dim], K).unwrap();
+            std::hint::black_box(out.len());
+        }
+    });
+    dist_table.row(&["direct".into(), "0".into(), format!("{direct_qps:.0}"), "1.00x".into()]);
+    dist_json.push(format!("{{\"mode\":\"direct\",\"workers\":0,\"qps\":{direct_qps:.1}}}"));
+
+    let mut four_worker_qps = 0.0f64;
+    for workers in [1usize, 2, 4] {
+        let ranges = shard_ranges(n, workers, 1);
+        let mut handles = Vec::new();
+        let mut specs = Vec::new();
+        for (i, r) in ranges.iter().enumerate() {
+            let leaf: Arc<dyn AnnIndex> = Arc::new(
+                ExactIndex::build(
+                    &base[r.start * dim..r.end * dim],
+                    dim,
+                    METRIC,
+                    &StorageSpec::flat(),
+                    9,
+                )
+                .expect("build shard"),
+            );
+            let w = ThreadWorker::spawn(leaf, r.start).expect("spawn worker");
+            specs.push(WorkerSpec::fixed(format!("w{i}"), w.addr()));
+            handles.push(w);
+        }
+        let cfg = DistConfig {
+            workers,
+            listen: "127.0.0.1:0".to_string(),
+            connect_timeout_ms: 2000,
+            request_deadline_ms: 5000,
+        };
+        let mut gw = Gateway::new(specs, cfg, Arc::new(Registry::new()));
+        // Order-exactness spot check before timing anything: the gateway
+        // must serve the reference ranking bitwise.
+        for (qi, want) in reference.iter().enumerate() {
+            let res = gw.search(&queries[qi * dim..(qi + 1) * dim], K).expect("gateway search");
+            assert!(!res.partial, "healthy bench cluster answered partial");
+            let got: Vec<(usize, u32)> =
+                res.neighbors.iter().map(|nb| (nb.index, nb.distance.to_bits())).collect();
+            assert_eq!(&got, want, "gateway diverged from the direct ranking (W={workers})");
+        }
+        let qps = bench_qps(&mut || {
+            for qi in 0..nq {
+                let res = gw.search(&queries[qi * dim..(qi + 1) * dim], K).unwrap();
+                std::hint::black_box(res.neighbors.len());
+            }
+        });
+        if workers == 4 {
+            four_worker_qps = qps;
+        }
+        dist_table.row(&[
+            "gateway".into(),
+            workers.to_string(),
+            format!("{qps:.0}"),
+            format!("{:.2}x", qps / direct_qps.max(1e-9)),
+        ]);
+        dist_json.push(format!("{{\"mode\":\"gateway\",\"workers\":{workers},\"qps\":{qps:.1}}}"));
+        for mut w in handles {
+            w.kill();
+        }
+    }
+    println!("{}", dist_table.render());
+
+    let json = format!(
+        "{{\"bench\":\"index_dist\",\"n\":{n},\"dim\":{dim},\"k\":{K},\
+         \"floor_ratio\":{FLOOR_RATIO},\"direct_qps\":{direct_qps:.1},\
+         \"four_worker_qps\":{four_worker_qps:.1},\"rows\":[\n  {}\n]}}\n",
+        dist_json.join(",\n  ")
+    );
+    std::fs::create_dir_all("bench_out").expect("bench_out dir");
+    std::fs::write("bench_out/BENCH_dist.json", json).expect("write BENCH_dist.json");
+    println!("wrote bench_out/BENCH_dist.json");
+
+    // Acceptance floor: scatter-gather over 4 workers must beat the
+    // single-process scan by 1.5x — the scan parallelizes across worker
+    // threads while the per-query RPC cost stays constant.
+    assert!(
+        four_worker_qps >= FLOOR_RATIO * direct_qps,
+        "4-worker gateway {four_worker_qps:.0} qps < {FLOOR_RATIO}x single-process {direct_qps:.0} qps"
+    );
+
+    println!(
+        "\nreading: the direct row is one thread scanning all rows per query;\n\
+         each worker row scans 1/W of the rows concurrently behind one TCP\n\
+         round-trip per shard, so QPS climbs toward the worker count until\n\
+         the constant RPC cost dominates — the gated floor (4 workers >=\n\
+         1.5x direct) is the point of the distribution layer."
     );
 }

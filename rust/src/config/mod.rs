@@ -9,5 +9,5 @@
 pub mod schema;
 pub mod toml;
 
-pub use schema::{ExperimentConfig, IndexPolicy, ServeConfig, SweepSpec};
+pub use schema::{DistConfig, ExperimentConfig, IndexPolicy, ServeConfig, SweepSpec};
 pub use toml::{parse_toml, TomlValue};

@@ -708,6 +708,106 @@ impl ServeConfig {
     }
 }
 
+/// Distributed-serving configuration: the `[dist]` table. `workers = 0`
+/// (the default) disables distribution entirely; `workers >= 1` makes
+/// `serve-demo --distributed` split the collection into that many
+/// contiguous shards, each served by a supervised worker process behind
+/// the scatter-gather [`crate::dist::Gateway`].
+#[derive(Debug, Clone)]
+pub struct DistConfig {
+    /// Shard-worker processes (0 = distribution disabled).
+    pub workers: usize,
+    /// Listen address template for spawned workers (`host:0` picks an
+    /// ephemeral port per worker).
+    pub listen: String,
+    /// Gateway→worker dial + handshake deadline.
+    pub connect_timeout_ms: u64,
+    /// Per-query per-shard RPC deadline; a shard that misses it degrades
+    /// the answer to `partial = true` instead of stalling the query.
+    pub request_deadline_ms: u64,
+}
+
+impl Default for DistConfig {
+    fn default() -> Self {
+        DistConfig {
+            workers: 0,
+            listen: "127.0.0.1:0".to_string(),
+            connect_timeout_ms: 1000,
+            request_deadline_ms: 2000,
+        }
+    }
+}
+
+impl DistConfig {
+    /// True when distribution is configured on.
+    pub fn enabled(&self) -> bool {
+        self.workers >= 1
+    }
+
+    /// Parse the `[dist]` table of a TOML doc (all keys optional). Tuning
+    /// keys given while `workers` stays 0 are rejected rather than
+    /// silently ignored.
+    pub fn from_toml_str(src: &str) -> Result<Self> {
+        let root = parse_toml(src)?;
+        let mut cfg = DistConfig::default();
+        let mut seen: Vec<String> = Vec::new();
+        if let Some(t) = root.get_path("dist").and_then(|v| v.as_table()) {
+            for (key, val) in t {
+                seen.push(key.clone());
+                match key.as_str() {
+                    "workers" => cfg.workers = pos_int(val, "dist", key)?,
+                    "listen" => {
+                        cfg.listen = val
+                            .as_str()
+                            .ok_or_else(|| OpdrError::config("dist.listen must be a string"))?
+                            .to_string()
+                    }
+                    "connect_timeout_ms" => {
+                        cfg.connect_timeout_ms = pos_int(val, "dist", key)? as u64
+                    }
+                    "request_deadline_ms" => {
+                        cfg.request_deadline_ms = pos_int(val, "dist", key)? as u64
+                    }
+                    other => {
+                        return Err(OpdrError::config(format!("dist: unknown key `{other}`")))
+                    }
+                }
+            }
+        }
+        if !cfg.enabled() {
+            if let Some(k) = seen.iter().find(|k| *k != "workers") {
+                return Err(OpdrError::config(format!(
+                    "dist: `{k}` requires workers >= 1 (it would be silently ignored)"
+                )));
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Validate invariants.
+    pub fn validate(&self) -> Result<()> {
+        if self.workers > crate::index::shard::MAX_SHARDS {
+            return Err(OpdrError::config(format!(
+                "dist.workers must be <= {}",
+                crate::index::shard::MAX_SHARDS
+            )));
+        }
+        if self.enabled() {
+            if self.listen.is_empty() {
+                return Err(OpdrError::config("dist.listen must not be empty"));
+            }
+            if self.connect_timeout_ms == 0 {
+                return Err(OpdrError::config("dist.connect_timeout_ms must be >= 1"));
+            }
+            if self.request_deadline_ms == 0 {
+                return Err(OpdrError::config("dist.request_deadline_ms must be >= 1"));
+            }
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -974,5 +1074,59 @@ k = 5
         assert!(ServeConfig::from_toml_str("[serve]\nindex_sq8 = 3").is_err());
         let p = IndexPolicy { ivf_nprobe: 0, ..Default::default() };
         assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn dist_config_defaults_and_overrides() {
+        // Default: distribution off, sane timeouts.
+        let d = DistConfig::from_toml_str("").unwrap();
+        assert!(!d.enabled());
+        assert_eq!(d.workers, 0);
+        assert_eq!(d.listen, "127.0.0.1:0");
+        assert_eq!(d.connect_timeout_ms, 1000);
+        assert_eq!(d.request_deadline_ms, 2000);
+        // Overrides parse.
+        let cfg = DistConfig::from_toml_str(
+            "[dist]\nworkers = 3\nlisten = \"127.0.0.1:0\"\nconnect_timeout_ms = 250\nrequest_deadline_ms = 500\n",
+        )
+        .unwrap();
+        assert!(cfg.enabled());
+        assert_eq!(cfg.workers, 3);
+        assert_eq!(cfg.connect_timeout_ms, 250);
+        assert_eq!(cfg.request_deadline_ms, 500);
+    }
+
+    #[test]
+    fn dist_config_dependent_and_unknown_keys_rejected() {
+        // Tuning keys without workers >= 1 are rejected, not silently
+        // ignored.
+        let e = DistConfig::from_toml_str("[dist]\nrequest_deadline_ms = 500\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("requires workers"), "{e}");
+        let e = DistConfig::from_toml_str("[dist]\nworkers = 0\nlisten = \"x:0\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("requires workers"), "{e}");
+        // Unknown keys and type errors are rejected.
+        assert!(DistConfig::from_toml_str("[dist]\nbogus = 1\n").is_err());
+        assert!(DistConfig::from_toml_str("[dist]\nworkers = \"two\"\n").is_err());
+        assert!(DistConfig::from_toml_str("[dist]\nworkers = 1\nlisten = 9\n").is_err());
+    }
+
+    #[test]
+    fn dist_config_validation() {
+        // Zero timeouts are rejected when enabled.
+        assert!(DistConfig::from_toml_str("[dist]\nworkers = 1\nconnect_timeout_ms = 0\n")
+            .is_err());
+        assert!(DistConfig::from_toml_str("[dist]\nworkers = 1\nrequest_deadline_ms = 0\n")
+            .is_err());
+        assert!(DistConfig::from_toml_str("[dist]\nworkers = 1\nlisten = \"\"\n").is_err());
+        // The shard ceiling bounds the worker count.
+        let too_many = DistConfig {
+            workers: crate::index::shard::MAX_SHARDS + 1,
+            ..Default::default()
+        };
+        assert!(too_many.validate().is_err());
     }
 }

@@ -48,6 +48,13 @@
 //! | `opdr_collection_delta_rows` | gauge | `collection` | delta rows awaiting compaction |
 //! | `opdr_collection_cold_bytes` | gauge | `collection` | resident cold-tier bytes |
 //! | `opdr_collection_mapped_bytes` | gauge | `collection` | mmap-served cold-tier bytes |
+//! | `opdr_rpc_requests_total` | counter | `worker` | gateway→worker RPC requests sent ([`crate::dist`]) |
+//! | `opdr_rpc_errors_total` | counter | `worker` | RPC transport/protocol failures (non-timeout) |
+//! | `opdr_rpc_deadline_total` | counter | `worker` | RPC requests that missed their deadline |
+//! | `opdr_rpc_partial_results_total` | counter | — | gateway queries answered degraded (`partial = true`) |
+//! | `opdr_rpc_request_duration_seconds` | summary | `worker` | gateway-side RPC round-trip latency |
+//! | `opdr_rpc_worker_up` | gauge | `worker` | worker liveness (1 healthy, 0 down) |
+//! | `opdr_rpc_worker_restarts_total` | counter | `worker` | supervisor respawns of a crashed worker |
 //!
 //! Histograms render as summaries with `quantile="0.5"`, `"0.99"`, `"0.999"`
 //! samples in seconds plus `_sum`/`_count`. The topology gauges refresh on

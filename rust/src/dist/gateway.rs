@@ -1,0 +1,346 @@
+//! The gateway: shard assignment plus order-exact scatter-gather over the
+//! worker RPC, with degraded (`partial = true`) serving when a shard is
+//! unreachable.
+//!
+//! The gateway owns the shard map: each worker slot carries a
+//! [`WorkerSpec`] naming the shard and an [`AddrCell`] the supervisor
+//! rewrites on respawn, so a worker that crashed and came back on a new
+//! ephemeral port is re-dialed transparently. Per query the gateway fans
+//! the request out to every slot concurrently, each under the configured
+//! request deadline; per-shard top-k lists (already remapped to global ids
+//! worker-side) merge through [`merge_top_k`] — the same bounded heap the
+//! in-process sharded index uses, so a fully-healthy distributed answer is
+//! **bitwise identical** to the unsharded one (machine-checked in
+//! `tests/props.rs`).
+//!
+//! ## Degraded serving
+//!
+//! A slot that misses its deadline, fails to connect, or returns a
+//! malformed frame contributes nothing to the merge; the query still
+//! returns, flagged [`DistSearchResult::partial`], with
+//! [`DistSearchResult::shards_ok`] of [`DistSearchResult::shards_total`]
+//! healthy. The failed slot's connection is dropped (the stream may be
+//! desynchronized) and re-dialed on the next query. Failures are never
+//! silent: every outcome lands in the `opdr_rpc_*` metrics and the
+//! per-worker `opdr_rpc_worker_up` liveness gauge.
+
+use crate::config::DistConfig;
+use crate::error::{OpdrError, Result};
+use crate::knn::{merge_top_k, Neighbor};
+use crate::rpc::{is_timeout, FramedTcp, Message, PROTOCOL_VERSION};
+use crate::telemetry::registry::{
+    RPC_DEADLINE_TOTAL, RPC_ERRORS_TOTAL, RPC_PARTIAL_TOTAL, RPC_REQUESTS_TOTAL,
+    RPC_REQUEST_DURATION, RPC_WORKER_UP,
+};
+use crate::telemetry::{Counter, Gauge, LatencyHistogram, Registry};
+use crate::util::timer::Stopwatch;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// A mutable worker address shared between the gateway and the supervisor:
+/// respawned workers come back on fresh ephemeral ports, and rewriting the
+/// cell is how the supervisor points the gateway at the new incarnation.
+#[derive(Debug, Default)]
+pub struct AddrCell {
+    addr: Mutex<String>,
+}
+
+impl AddrCell {
+    /// New cell holding `addr` (`host:port`).
+    pub fn new(addr: impl Into<String>) -> Arc<AddrCell> {
+        Arc::new(AddrCell { addr: Mutex::new(addr.into()) })
+    }
+
+    /// Current address.
+    pub fn get(&self) -> String {
+        self.addr.lock().unwrap_or_else(|p| p.into_inner()).clone()
+    }
+
+    /// Replace the address (supervisor respawn path).
+    pub fn set(&self, addr: impl Into<String>) {
+        *self.addr.lock().unwrap_or_else(|p| p.into_inner()) = addr.into();
+    }
+}
+
+/// One shard assignment: a stable name (metric label) plus the worker's
+/// current address.
+#[derive(Debug, Clone)]
+pub struct WorkerSpec {
+    /// Stable worker name (used as the `worker` metric label).
+    pub name: String,
+    /// Where the worker currently listens.
+    pub addr: Arc<AddrCell>,
+}
+
+impl WorkerSpec {
+    /// Spec with a fixed address.
+    pub fn fixed(name: impl Into<String>, addr: impl Into<String>) -> WorkerSpec {
+        WorkerSpec { name: name.into(), addr: AddrCell::new(addr) }
+    }
+}
+
+/// A distributed search answer: merged neighbors plus the health of the
+/// scatter that produced them. `partial == false` guarantees the neighbor
+/// list is bitwise identical to the unsharded order-exact answer;
+/// `partial == true` is the typed degraded result (never silently wrong —
+/// surviving shards are still merged order-exactly).
+#[derive(Debug, Clone)]
+pub struct DistSearchResult {
+    /// Merged top-k, ascending by (distance, global id).
+    pub neighbors: Vec<Neighbor>,
+    /// True when at least one shard contributed nothing before the
+    /// deadline.
+    pub partial: bool,
+    /// Shards that answered in time.
+    pub shards_ok: usize,
+    /// Shards in the assignment.
+    pub shards_total: usize,
+}
+
+/// Handshake-reported shard extent, kept for observability.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShardInfo {
+    /// First global row id.
+    pub start: u64,
+    /// Rows served.
+    pub len: u64,
+    /// Vector dimensionality.
+    pub dim: u32,
+}
+
+struct Slot {
+    spec: WorkerSpec,
+    conn: Option<FramedTcp>,
+    next_request_id: u64,
+    info: ShardInfo,
+    requests: Arc<Counter>,
+    errors: Arc<Counter>,
+    deadlines: Arc<Counter>,
+    up: Arc<Gauge>,
+    latency: Arc<LatencyHistogram>,
+}
+
+impl Slot {
+    fn new(spec: WorkerSpec, registry: &Registry) -> Slot {
+        let labels = [("worker", spec.name.as_str())];
+        Slot {
+            requests: registry.counter(RPC_REQUESTS_TOTAL, &labels),
+            errors: registry.counter(RPC_ERRORS_TOTAL, &labels),
+            deadlines: registry.counter(RPC_DEADLINE_TOTAL, &labels),
+            up: registry.gauge(RPC_WORKER_UP, &labels),
+            latency: registry.histogram(RPC_REQUEST_DURATION, &labels),
+            spec,
+            conn: None,
+            next_request_id: 1,
+            info: ShardInfo::default(),
+        }
+    }
+
+    fn timeout_err(what: &str) -> OpdrError {
+        OpdrError::Io(std::io::Error::new(
+            std::io::ErrorKind::TimedOut,
+            format!("rpc: {what} deadline exceeded"),
+        ))
+    }
+
+    fn ensure_connected(&mut self, connect_timeout: Duration) -> Result<()> {
+        if self.conn.is_some() {
+            return Ok(());
+        }
+        let addr_str = self.spec.addr.get();
+        let addr: SocketAddr = addr_str
+            .parse()
+            .map_err(|_| OpdrError::config(format!("rpc: bad worker address `{addr_str}`")))?;
+        let dial = connect_timeout.max(Duration::from_millis(1));
+        let stream = TcpStream::connect_timeout(&addr, dial)?;
+        let mut conn = FramedTcp::new(stream);
+        conn.set_deadline(connect_timeout)?;
+        conn.send(0, &Message::Hello { version: PROTOCOL_VERSION })?;
+        match conn.recv()? {
+            (_, Message::HelloAck { version, start, len, dim }) => {
+                if version != PROTOCOL_VERSION {
+                    return Err(OpdrError::data(format!(
+                        "rpc: worker `{}` speaks protocol {version}, gateway speaks {PROTOCOL_VERSION}",
+                        self.spec.name
+                    )));
+                }
+                self.info = ShardInfo { start, len, dim };
+            }
+            (_, Message::Error { message }) => {
+                return Err(OpdrError::coordinator(format!(
+                    "rpc: worker `{}` refused handshake: {message}",
+                    self.spec.name
+                )));
+            }
+            (_, other) => {
+                return Err(OpdrError::data(format!(
+                    "rpc: worker `{}` answered handshake with {}",
+                    self.spec.name,
+                    other.kind_name()
+                )));
+            }
+        }
+        self.conn = Some(conn);
+        Ok(())
+    }
+
+    fn try_search(
+        &mut self,
+        query: &[f32],
+        k: usize,
+        connect_timeout: Duration,
+        deadline: Duration,
+    ) -> Result<Vec<(usize, f32)>> {
+        self.ensure_connected(connect_timeout)?;
+        let id = self.next_request_id;
+        self.next_request_id += 1;
+        let started = Instant::now();
+        let conn = self.conn.as_mut().expect("connected above");
+        conn.set_deadline(deadline)?;
+        conn.send(id, &Message::Search { k: k as u32, query: query.to_vec() })?;
+        loop {
+            // Duplicated / reordered frames (and answers to requests we
+            // already timed out) are discarded by request id; the loop is
+            // bounded by the shrinking read deadline, never by frame count.
+            let remaining = deadline
+                .checked_sub(started.elapsed())
+                .filter(|d| !d.is_zero())
+                .ok_or_else(|| Slot::timeout_err("request"))?;
+            conn.set_deadline(remaining)?;
+            let (rid, msg) = conn.recv()?;
+            if rid != id {
+                continue;
+            }
+            return match msg {
+                Message::SearchOk { neighbors } => {
+                    let mut out = Vec::with_capacity(neighbors.len());
+                    for (gid, dist) in neighbors {
+                        let gid = usize::try_from(gid).map_err(|_| {
+                            OpdrError::data("rpc: neighbor id exceeds the host's usize")
+                        })?;
+                        out.push((gid, dist));
+                    }
+                    Ok(out)
+                }
+                Message::Error { message } => Err(OpdrError::coordinator(format!(
+                    "rpc: worker `{}`: {message}",
+                    self.spec.name
+                ))),
+                other => Err(OpdrError::data(format!(
+                    "rpc: worker `{}` answered search with {}",
+                    self.spec.name,
+                    other.kind_name()
+                ))),
+            };
+        }
+    }
+
+    /// One scatter leg with metrics and connection hygiene.
+    fn search(
+        &mut self,
+        query: &[f32],
+        k: usize,
+        connect_timeout: Duration,
+        deadline: Duration,
+    ) -> Result<Vec<(usize, f32)>> {
+        let sw = Stopwatch::start();
+        let out = self.try_search(query, k, connect_timeout, deadline);
+        self.latency.record(sw.elapsed());
+        self.requests.inc();
+        match &out {
+            Ok(_) => self.up.set(1.0),
+            Err(e) => {
+                // The stream may be mid-frame after any failure; drop it and
+                // re-dial (possibly a respawned worker) on the next query.
+                if let Some(conn) = self.conn.take() {
+                    conn.shutdown();
+                }
+                self.up.set(0.0);
+                if is_timeout(e) {
+                    self.deadlines.inc();
+                } else {
+                    self.errors.inc();
+                }
+            }
+        }
+        out
+    }
+}
+
+/// The scatter-gather front end over the shard workers.
+pub struct Gateway {
+    slots: Vec<Slot>,
+    cfg: DistConfig,
+    partial_total: Arc<Counter>,
+    registry: Arc<Registry>,
+}
+
+impl Gateway {
+    /// Gateway over `specs` (one slot per shard). Connections are dialed
+    /// lazily on first use, so a gateway can start before its workers.
+    pub fn new(specs: Vec<WorkerSpec>, cfg: DistConfig, registry: Arc<Registry>) -> Gateway {
+        let slots = specs.into_iter().map(|s| Slot::new(s, &registry)).collect();
+        let partial_total = registry.counter(RPC_PARTIAL_TOTAL, &[]);
+        Gateway { slots, cfg, partial_total, registry }
+    }
+
+    /// The metrics registry the gateway publishes into.
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
+    /// Number of shards in the assignment.
+    pub fn shards_total(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Per-worker health from the last scatter: `(name, healthy)`.
+    pub fn liveness(&self) -> Vec<(String, bool)> {
+        self.slots.iter().map(|s| (s.spec.name.clone(), s.conn.is_some())).collect()
+    }
+
+    /// Scatter `query` to every shard, gather surviving top-k lists and
+    /// merge them through the order-exact bounded heap. Always terminates
+    /// within roughly `connect_timeout + request_deadline`; an unreachable
+    /// shard degrades the answer to `partial = true` instead of failing or
+    /// hanging it.
+    pub fn search(&mut self, query: &[f32], k: usize) -> Result<DistSearchResult> {
+        let shards_total = self.slots.len();
+        if shards_total == 0 {
+            return Err(OpdrError::config("gateway: no workers configured"));
+        }
+        let connect_timeout = Duration::from_millis(self.cfg.connect_timeout_ms.max(1));
+        let deadline = Duration::from_millis(self.cfg.request_deadline_ms.max(1));
+        let per_shard: Vec<Result<Vec<(usize, f32)>>> = std::thread::scope(|s| {
+            let handles: Vec<_> = self
+                .slots
+                .iter_mut()
+                .map(|slot| s.spawn(move || slot.search(query, k, connect_timeout, deadline)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join().unwrap_or_else(|_| {
+                        Err(OpdrError::coordinator("rpc: scatter thread panicked"))
+                    })
+                })
+                .collect()
+        });
+        let mut shards_ok = 0usize;
+        let mut candidates: Vec<(usize, f32)> = Vec::new();
+        for hits in per_shard.into_iter().flatten() {
+            shards_ok += 1;
+            candidates.extend(hits);
+        }
+        let partial = shards_ok < shards_total;
+        if partial {
+            self.partial_total.inc();
+        }
+        let neighbors = merge_top_k(candidates, k)
+            .into_iter()
+            .map(|(index, distance)| Neighbor { index, distance })
+            .collect();
+        Ok(DistSearchResult { neighbors, partial, shards_ok, shards_total })
+    }
+}

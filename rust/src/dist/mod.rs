@@ -1,0 +1,33 @@
+//! Distributed serving: a scatter-gather gateway over shard-worker
+//! processes, with supervised respawn and degraded (`partial = true`)
+//! serving.
+//!
+//! The collection is split into contiguous global-ID ranges (the same
+//! [`crate::index::shard::shard_ranges`] arithmetic the in-process sharded
+//! index uses); each range is served by a [`worker`] — an in-process
+//! [`ThreadWorker`] in tests, a real child process ([`ProcessWorker`],
+//! spawned through the `serve-worker` CLI verb) in `serve-demo
+//! --distributed N`. Workers load their shard from a version-5 `OPDR` cold
+//! file, so a respawn remaps the mmap and is back serving in ~0 time.
+//!
+//! The [`Gateway`] owns the shard map and scatter-gathers every query
+//! through [`crate::knn::merge_top_k`]; distances cross the wire as raw
+//! little-endian f32 bits, so a fully-healthy distributed answer is
+//! **bitwise identical** to the unsharded order-exact one. When a shard
+//! misses its deadline or drops its socket the gateway returns the
+//! surviving shards' merge flagged [`DistSearchResult::partial`] — never a
+//! hang, never a silently wrong ranking. The [`Supervisor`] respawns
+//! crashed workers with exponential backoff and repoints the gateway's
+//! [`AddrCell`] at the new incarnation.
+//!
+//! The wire protocol (framing, CRC, deadlines, fault injection) lives in
+//! [`crate::rpc`]; the fault matrix these guarantees are tested under is
+//! `tests/dist_it.rs`.
+
+pub mod gateway;
+pub mod supervisor;
+pub mod worker;
+
+pub use gateway::{AddrCell, DistSearchResult, Gateway, ShardInfo, WorkerSpec};
+pub use supervisor::{ProcessWorker, Supervisor, WorkerHandle};
+pub use worker::{run_worker_from_file, serve_shard, ThreadWorker};

@@ -1,0 +1,237 @@
+//! Worker lifecycle: process spawning and a supervisor that respawns
+//! crashed workers with exponential backoff.
+//!
+//! The supervisor owns one worker (thread-backed in tests, a real child
+//! process under `serve-demo --distributed`) through the [`WorkerHandle`]
+//! trait. A monitor thread polls liveness; when the worker dies it flips
+//! the `opdr_rpc_worker_up` gauge to 0, bumps
+//! `opdr_rpc_worker_restarts_total`, sleeps an exponentially growing
+//! backoff (so a crash-looping shard can't busy-spin the box), respawns
+//! via the caller's factory closure and publishes the new address into the
+//! shared [`AddrCell`] — which is all the gateway needs: its next query
+//! re-dials the cell and the respawned worker mmap-reloads its version-5
+//! shard file, so recovery is bounded by the backoff, not by an index
+//! rebuild.
+
+use super::gateway::AddrCell;
+use crate::error::{OpdrError, Result};
+use crate::telemetry::registry::{RPC_WORKER_RESTARTS, RPC_WORKER_UP};
+use crate::telemetry::Registry;
+use std::io::BufRead;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+/// Liveness-poll interval of the monitor thread.
+const MONITOR_POLL: Duration = Duration::from_millis(20);
+/// First respawn delay; doubles per consecutive crash.
+const BACKOFF_BASE: Duration = Duration::from_millis(10);
+/// Backoff ceiling.
+const BACKOFF_CAP: Duration = Duration::from_secs(2);
+/// A worker that stayed up this long resets the backoff to the base.
+const STABLE_UPTIME: Duration = Duration::from_secs(1);
+
+/// A supervised worker incarnation: something listening on an address that
+/// can be liveness-checked and killed. Implemented by
+/// [`crate::dist::ThreadWorker`] (in-process, for tests) and
+/// [`ProcessWorker`] (a real child process).
+pub trait WorkerHandle: Send {
+    /// The worker's `host:port`.
+    fn addr(&self) -> String;
+    /// True while the worker is serving.
+    fn is_alive(&mut self) -> bool;
+    /// Tear the worker down (idempotent, best-effort).
+    fn kill(&mut self);
+}
+
+impl WorkerHandle for super::worker::ThreadWorker {
+    fn addr(&self) -> String {
+        super::worker::ThreadWorker::addr(self)
+    }
+    fn is_alive(&mut self) -> bool {
+        super::worker::ThreadWorker::is_alive(self)
+    }
+    fn kill(&mut self) {
+        super::worker::ThreadWorker::kill(self)
+    }
+}
+
+/// A shard worker running as a child process (the `serve-worker` CLI verb).
+/// The child prints `listening <addr>` on stdout once bound; spawn blocks
+/// until that line arrives so the caller always gets a dialable address.
+#[derive(Debug)]
+pub struct ProcessWorker {
+    child: Child,
+    addr: String,
+}
+
+impl ProcessWorker {
+    /// Spawn `cmd` (stdout piped, stderr inherited) and parse the
+    /// `listening <addr>` banner. A child that exits before printing it is
+    /// a typed spawn failure, not a hang.
+    pub fn spawn(mut cmd: Command) -> Result<ProcessWorker> {
+        cmd.stdout(Stdio::piped()).stdin(Stdio::null());
+        let mut child = cmd.spawn()?;
+        let stdout = child
+            .stdout
+            .take()
+            .ok_or_else(|| OpdrError::runtime("worker child has no stdout pipe"))?;
+        let mut lines = std::io::BufReader::new(stdout).lines();
+        let banner = match lines.next() {
+            Some(Ok(line)) => line,
+            Some(Err(e)) => {
+                let _ = child.kill();
+                let _ = child.wait();
+                return Err(OpdrError::Io(e));
+            }
+            None => {
+                let _ = child.kill();
+                let _ = child.wait();
+                return Err(OpdrError::runtime("worker child exited before reporting its address"));
+            }
+        };
+        let addr = match banner.strip_prefix("listening ") {
+            Some(a) if !a.trim().is_empty() => a.trim().to_string(),
+            _ => {
+                let _ = child.kill();
+                let _ = child.wait();
+                return Err(OpdrError::runtime(format!(
+                    "worker child printed `{banner}`, expected `listening <addr>`"
+                )));
+            }
+        };
+        // Nobody reads the pipe after the banner; workers print nothing
+        // else, so the pipe can never fill and stall the child.
+        drop(lines);
+        Ok(ProcessWorker { child, addr })
+    }
+}
+
+impl WorkerHandle for ProcessWorker {
+    fn addr(&self) -> String {
+        self.addr.clone()
+    }
+    fn is_alive(&mut self) -> bool {
+        matches!(self.child.try_wait(), Ok(None))
+    }
+    fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for ProcessWorker {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+/// Respawns a crashed worker with exponential backoff and keeps the
+/// gateway's [`AddrCell`] pointed at the live incarnation.
+pub struct Supervisor {
+    name: String,
+    stop: Arc<AtomicBool>,
+    restarts: Arc<AtomicU64>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Supervisor {
+    /// Spawn the first incarnation via `factory` (synchronously, so `cell`
+    /// holds a dialable address on return) and start the monitor thread.
+    /// Every respawn calls `factory` again and rewrites `cell`.
+    pub fn start(
+        name: impl Into<String>,
+        cell: Arc<AddrCell>,
+        mut factory: Box<dyn FnMut() -> Result<Box<dyn WorkerHandle>> + Send>,
+        registry: Arc<Registry>,
+    ) -> Result<Supervisor> {
+        let name = name.into();
+        let labels = [("worker", name.as_str())];
+        let up = registry.gauge(RPC_WORKER_UP, &labels);
+        let restarts_metric = registry.counter(RPC_WORKER_RESTARTS, &labels);
+        let mut worker = factory()?;
+        cell.set(worker.addr());
+        up.set(1.0);
+        let stop = Arc::new(AtomicBool::new(false));
+        let restarts = Arc::new(AtomicU64::new(0));
+        let stop2 = Arc::clone(&stop);
+        let restarts2 = Arc::clone(&restarts);
+        let handle = thread::spawn(move || {
+            let mut backoff = BACKOFF_BASE;
+            let mut born = Instant::now();
+            while !stop2.load(Ordering::Relaxed) {
+                if worker.is_alive() {
+                    if born.elapsed() >= STABLE_UPTIME {
+                        backoff = BACKOFF_BASE;
+                    }
+                    thread::sleep(MONITOR_POLL);
+                    continue;
+                }
+                // Crash detected.
+                up.set(0.0);
+                worker.kill(); // reap a half-dead incarnation
+                if interruptible_sleep(&stop2, backoff) {
+                    break;
+                }
+                backoff = (backoff * 2).min(BACKOFF_CAP);
+                match factory() {
+                    Ok(w) => {
+                        worker = w;
+                        cell.set(worker.addr());
+                        born = Instant::now();
+                        restarts_metric.inc();
+                        restarts2.fetch_add(1, Ordering::Relaxed);
+                        up.set(1.0);
+                    }
+                    Err(_) => {
+                        // Respawn itself failed (port race, missing file);
+                        // stay down and retry after the next, longer backoff.
+                    }
+                }
+            }
+            worker.kill();
+            up.set(0.0);
+        });
+        Ok(Supervisor { name, stop, restarts, handle: Some(handle) })
+    }
+
+    /// The supervised worker's name (metric label).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Respawns performed so far.
+    pub fn restarts(&self) -> u64 {
+        self.restarts.load(Ordering::Relaxed)
+    }
+
+    /// Stop monitoring and kill the current incarnation.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Supervisor {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Sleep up to `total` in short slices, returning true if `stop` was set —
+/// so a capped backoff never delays supervisor shutdown by seconds.
+fn interruptible_sleep(stop: &AtomicBool, total: Duration) -> bool {
+    let slice = Duration::from_millis(5);
+    let deadline = Instant::now() + total;
+    while Instant::now() < deadline {
+        if stop.load(Ordering::Relaxed) {
+            return true;
+        }
+        thread::sleep(slice.min(deadline.saturating_duration_since(Instant::now())));
+    }
+    stop.load(Ordering::Relaxed)
+}

@@ -1,0 +1,261 @@
+//! The shard worker: one process (or in-process thread) serving k-NN over a
+//! contiguous global-ID range of a collection.
+//!
+//! A worker owns an [`AnnIndex`] — typically loaded from a version-5 `OPDR`
+//! cold file, so a supervisor respawn remaps the mmap'd annex and is back
+//! serving in ~0 time — plus the shard's global row offset. Search hits are
+//! remapped to global ids *worker-side* (`local id + start`), so the
+//! gateway's scatter-gather is a plain [`crate::knn::merge_top_k`] over
+//! `(global id, distance)` pairs, bit-identical to an in-process shard
+//! merge.
+//!
+//! The accept loop is poll-based (non-blocking accept + a stop flag) and
+//! every connection is handled on its own thread with a short read poll, so
+//! a stalled or desynchronized client never blocks other connections and a
+//! stop request tears the worker down within one poll interval — that
+//! abrupt teardown is exactly what the crash/restart tests exercise.
+//!
+//! Protocol per connection: the client opens with [`Message::Hello`]; the
+//! worker validates the protocol version and answers [`Message::HelloAck`]
+//! carrying `(start, len, dim)`. Then each [`Message::Search`] is answered
+//! with [`Message::SearchOk`] (or a typed [`Message::Error`]) echoing the
+//! request id. A frame that fails to decode gets a best-effort typed error
+//! frame and the connection is closed — after a malformed frame the stream
+//! may be desynchronized, and reconnecting is the one safe resync.
+
+use crate::data::store;
+use crate::error::Result;
+use crate::index::AnnIndex;
+use crate::rpc::{is_timeout, FramedTcp, Message, PROTOCOL_VERSION};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+/// Read-poll interval: how often a blocked connection handler rechecks the
+/// stop flag. Bounds both shutdown latency and the window in which an
+/// abruptly killed worker still holds its sockets.
+const POLL: Duration = Duration::from_millis(50);
+
+/// Accept-poll interval for the non-blocking listener.
+const ACCEPT_POLL: Duration = Duration::from_millis(3);
+
+/// Serve `index` as the shard covering global rows `start..start+len` until
+/// `stop` is set. Runs the accept loop on the calling thread; one handler
+/// thread per connection.
+pub fn serve_shard(
+    listener: TcpListener,
+    index: Arc<dyn AnnIndex>,
+    start: usize,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    listener.set_nonblocking(true)?;
+    let mut handlers: Vec<JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let idx = Arc::clone(&index);
+                let stop2 = Arc::clone(&stop);
+                handlers.push(thread::spawn(move || {
+                    let _ = stream.set_nonblocking(false);
+                    handle_conn(stream, idx.as_ref(), start, &stop2);
+                }));
+                handlers.retain(|h| !h.is_finished());
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => break,
+        }
+    }
+    // Handlers observe the stop flag within one poll interval; join so the
+    // worker's sockets are really gone when this returns.
+    for h in handlers {
+        let _ = h.join();
+    }
+    Ok(())
+}
+
+/// One connection: handshake, then a request loop. Returns when the client
+/// disconnects, a frame fails to decode, or `stop` is set.
+fn handle_conn(stream: TcpStream, index: &dyn AnnIndex, start: usize, stop: &AtomicBool) {
+    let mut conn = FramedTcp::new(stream);
+    if conn.set_deadline(POLL).is_err() {
+        return;
+    }
+    // Handshake: the first decoded frame must be a version-matched Hello.
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        match conn.recv() {
+            Ok((rid, Message::Hello { version })) => {
+                if version != PROTOCOL_VERSION {
+                    let _ = conn.send(
+                        rid,
+                        &Message::Error {
+                            message: format!(
+                                "worker speaks rpc version {PROTOCOL_VERSION}, client sent {version}"
+                            ),
+                        },
+                    );
+                    return;
+                }
+                let ack = Message::HelloAck {
+                    version: PROTOCOL_VERSION,
+                    start: start as u64,
+                    len: index.len() as u64,
+                    dim: index.dim() as u32,
+                };
+                if conn.send(rid, &ack).is_err() {
+                    return;
+                }
+                break;
+            }
+            Ok((rid, other)) => {
+                let _ = conn.send(
+                    rid,
+                    &Message::Error {
+                        message: format!("expected hello, got {}", other.kind_name()),
+                    },
+                );
+                return;
+            }
+            Err(e) if is_timeout(&e) => continue,
+            Err(e) => {
+                // Malformed frame (bad magic/crc/kind) — answer with the
+                // typed reason, then close: the stream may be mid-frame.
+                let _ = conn.send(0, &Message::Error { message: e.to_string() });
+                return;
+            }
+        }
+    }
+    // Request loop.
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        match conn.recv() {
+            Ok((rid, Message::Search { k, query })) => {
+                let reply = match index.search(&query, k as usize) {
+                    Ok(neighbors) => Message::SearchOk {
+                        neighbors: neighbors
+                            .into_iter()
+                            .map(|nb| ((nb.index + start) as u64, nb.distance))
+                            .collect(),
+                    },
+                    Err(e) => Message::Error { message: e.to_string() },
+                };
+                if conn.send(rid, &reply).is_err() {
+                    return;
+                }
+            }
+            Ok((rid, Message::Ping)) => {
+                if conn.send(rid, &Message::Pong).is_err() {
+                    return;
+                }
+            }
+            Ok((rid, other)) => {
+                let _ = conn.send(
+                    rid,
+                    &Message::Error {
+                        message: format!("unexpected {} frame", other.kind_name()),
+                    },
+                );
+                return;
+            }
+            Err(e) if is_timeout(&e) => continue,
+            Err(e) => {
+                if matches!(&e, crate::error::OpdrError::Io(_)) {
+                    // EOF / reset: the client went away; nothing to tell it.
+                    return;
+                }
+                let _ = conn.send(0, &Message::Error { message: e.to_string() });
+                return;
+            }
+        }
+    }
+}
+
+/// An in-process shard worker on a loopback listener — the test double for
+/// a worker process (real processes go through
+/// [`crate::dist::ProcessWorker`]). `kill` is abrupt: the stop flag drops
+/// every live connection within one poll interval, which is how the
+/// crash/degraded-serving tests sever a shard mid-storm.
+#[derive(Debug)]
+pub struct ThreadWorker {
+    addr: String,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ThreadWorker {
+    /// Bind an ephemeral loopback port and serve `index` as the shard at
+    /// global offset `start`.
+    pub fn spawn(index: Arc<dyn AnnIndex>, start: usize) -> Result<ThreadWorker> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?.to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = thread::spawn(move || {
+            let _ = serve_shard(listener, index, start, stop2);
+        });
+        Ok(ThreadWorker { addr, stop, handle: Some(handle) })
+    }
+
+    /// [`ThreadWorker::spawn`] loading the shard from an `OPDR` file —
+    /// version-5 files reload via mmap, which is what makes supervised
+    /// respawn ~0 time.
+    pub fn spawn_from_file(path: &str, start: usize) -> Result<ThreadWorker> {
+        let index: Arc<dyn AnnIndex> = Arc::from(store::load_index(path)?);
+        ThreadWorker::spawn(index, start)
+    }
+
+    /// The worker's `host:port`.
+    pub fn addr(&self) -> String {
+        self.addr.clone()
+    }
+
+    /// The stop flag — lets a test kill the worker out from under its
+    /// supervisor, exactly like a crash.
+    pub fn stop_flag(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.stop)
+    }
+
+    /// True while the serve loop is running.
+    pub fn is_alive(&self) -> bool {
+        self.handle.as_ref().is_some_and(|h| !h.is_finished())
+    }
+
+    /// Stop serving and join the serve loop.
+    pub fn kill(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ThreadWorker {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+/// Process entrypoint for the `serve-worker` CLI verb: load the shard from
+/// `path` (version-5 files mmap their annex in place), bind `listen`, print
+/// `listening <addr>` on stdout (the parent parses it to learn the
+/// ephemeral port) and serve until the process is killed.
+pub fn run_worker_from_file(path: &str, start: usize, listen: &str, heap: bool) -> Result<()> {
+    let index: Arc<dyn AnnIndex> = if heap {
+        Arc::from(store::load_index_heap(path)?)
+    } else {
+        Arc::from(store::load_index(path)?)
+    };
+    let listener = TcpListener::bind(listen)?;
+    println!("listening {}", listener.local_addr()?);
+    use std::io::Write;
+    let _ = std::io::stdout().flush();
+    serve_shard(listener, index, start, Arc::new(AtomicBool::new(false)))
+}

@@ -217,6 +217,15 @@ impl ShardedIndex {
         self.offsets[s]..self.offsets[s + 1]
     }
 
+    /// Shared handle to segment `s`'s leaf index. The distribution layer
+    /// ([`crate::dist`]) serves these same leaves from shard workers, which
+    /// is what makes a gateway merge bitwise comparable to the in-process
+    /// fan-out for every substrate × storage (including segment-local SQ8
+    /// codebooks).
+    pub fn segment(&self, s: usize) -> Arc<dyn AnnIndex> {
+        Arc::clone(&self.segments[s])
+    }
+
     fn check_query(&self, query: &[f32]) -> Result<()> {
         if query.len() != self.dim {
             return Err(OpdrError::shape(format!(

@@ -49,7 +49,14 @@
 //! * the **runtime** — a PJRT engine that loads AOT-compiled HLO artifacts
 //!   produced by the build-time JAX/Pallas layer ([`runtime`], [`embed`]);
 //! * the **serving coordinator** — worker pool, dynamic batcher, router and
-//!   collection state for online multimodal KNN queries ([`coordinator`]).
+//!   collection state for online multimodal KNN queries ([`coordinator`]);
+//! * **distributed serving** — a length-prefixed binary RPC with a versioned
+//!   handshake, per-message CRC and read/write deadlines ([`rpc`]), and a
+//!   scatter-gather [`dist::Gateway`] over supervised shard-worker processes
+//!   that merges per-shard top-k lists order-exactly and degrades to typed
+//!   `partial = true` results when a shard is unreachable ([`dist`]); the
+//!   guarantees are machine-checked under a deterministic fault-injection
+//!   proxy (`tests/dist_it.rs`).
 //!
 //! Python never runs on the request path: `make artifacts` lowers the JAX/
 //! Pallas graphs to `artifacts/*.hlo.txt` once, and everything here is pure
@@ -60,6 +67,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod dist;
 pub mod embed;
 pub mod error;
 pub mod index;
@@ -70,6 +78,7 @@ pub mod opdr;
 pub mod pool;
 pub mod reduction;
 pub mod report;
+pub mod rpc;
 pub mod runtime;
 pub mod telemetry;
 pub mod testing;

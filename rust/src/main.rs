@@ -37,6 +37,7 @@ fn run() -> Result<()> {
         "figure" => cmd_figure(&mut args),
         "experiment" => cmd_experiment(&mut args),
         "serve-demo" => cmd_serve_demo(&mut args),
+        "serve-worker" => cmd_serve_worker(&mut args),
         "artifacts" => cmd_artifacts(&mut args),
         "" | "help" => {
             print_help();
@@ -57,6 +58,8 @@ fn print_help() {
            figure     --id <1..6|esc50> [--seed S]\n\
            experiment --config configs/<file>.toml\n\
            serve-demo [--n N] [--dim D] [--queries Q] [--use-runtime]\n\
+                      [--distributed W] [--dist-connect-ms MS]\n\
+                      [--dist-deadline-ms MS] [--k K]\n\
                       [--index exact|ivf|hnsw] [--sq8] [--sq8-global]\n\
                       [--pq] [--pq-m M] [--pq-ksub K] [--opq]\n\
                       [--rerank-depth R] [--hnsw-m M] [--no-hnsw-heuristic]\n\
@@ -66,6 +69,8 @@ fn print_help() {
                       [--mmap-cold] [--cold-dir DIR]\n\
                       [--build-workers B] [--save-index file.opdx]\n\
                       [--metrics] [--recall-probe] [--probe-every N]\n\
+           serve-worker --file shard.opdx [--start S] [--listen addr:port]\n\
+                      [--heap]\n\
            artifacts  [--dir artifacts]\n\n\
          DATASETS: {}\n",
         DatasetKind::ALL.map(|d| d.name()).join(", ")
@@ -224,6 +229,21 @@ fn cmd_serve_demo(args: &mut Args) -> Result<()> {
     use opdr::config::ServeConfig;
     use opdr::coordinator::Coordinator;
     use opdr::index::IndexKind;
+    // Distributed mode forks shard-worker processes and routes the storm
+    // through the scatter-gather gateway; the dist tuning flags without
+    // --distributed would be silently ignored, so reject them (mirrors the
+    // `[dist]` TOML validation).
+    let distributed = args.get_usize("distributed")?;
+    let dist_connect = args.get_usize("dist-connect-ms")?;
+    let dist_deadline = args.get_usize("dist-deadline-ms")?;
+    if distributed.is_none() && (dist_connect.is_some() || dist_deadline.is_some()) {
+        return Err(OpdrError::config(
+            "serve-demo: --dist-connect-ms/--dist-deadline-ms require --distributed",
+        ));
+    }
+    if let Some(workers) = distributed {
+        return cmd_serve_demo_distributed(args, workers, dist_connect, dist_deadline);
+    }
     let n = args.get_usize_or("n", 2000)?;
     let dim = args.get_usize_or("dim", 256)?;
     let queries = args.get_usize_or("queries", 500)?;
@@ -405,6 +425,149 @@ fn cmd_serve_demo(args: &mut Args) -> Result<()> {
     }
     coord.shutdown();
     Ok(())
+}
+
+/// `serve-demo --distributed W`: split the collection into W contiguous
+/// shards persisted as version-5 cold files, fork/exec one supervised
+/// `serve-worker` process per shard over loopback TCP, and drive the query
+/// storm through the scatter-gather gateway. The run fails loudly if the
+/// distributed answer is not bitwise identical to the unsharded exact scan.
+fn cmd_serve_demo_distributed(
+    args: &mut Args,
+    workers: usize,
+    connect_ms: Option<usize>,
+    deadline_ms: Option<usize>,
+) -> Result<()> {
+    use opdr::config::DistConfig;
+    use opdr::dist::{AddrCell, Gateway, ProcessWorker, Supervisor, WorkerHandle, WorkerSpec};
+    use opdr::index::{AnnIndex, ExactIndex, StorageSpec};
+    use opdr::telemetry::Registry;
+    use std::sync::Arc;
+    let n = args.get_usize_or("n", 2000)?;
+    let dim = args.get_usize_or("dim", 64)?;
+    let queries = args.get_usize_or("queries", 500)?;
+    let k = args.get_usize_or("k", 10)?;
+    let dump_metrics = args.has("metrics");
+    // Single-process index flags make no sense here; finish() rejects any
+    // that were passed.
+    args.finish()?;
+    let mut cfg = DistConfig { workers, ..Default::default() };
+    if let Some(ms) = connect_ms {
+        cfg.connect_timeout_ms = ms as u64;
+    }
+    if let Some(ms) = deadline_ms {
+        cfg.request_deadline_ms = ms as u64;
+    }
+    cfg.validate()?;
+
+    // Dataset, contiguous shard split, one version-5 cold file per worker
+    // (the file is what makes supervised respawn ~0 time: the annex mmaps
+    // back in place).
+    let set = synth::generate(DatasetKind::Flickr30k, n, dim, 42);
+    let metric = Metric::SqEuclidean;
+    let ranges = opdr::index::shard::shard_ranges(n, workers, 1);
+    let dir = std::env::temp_dir().join(format!("opdr-dist-{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    let exe = std::env::current_exe()?;
+    let registry = Arc::new(Registry::new());
+    let mut specs = Vec::new();
+    let mut sups = Vec::new();
+    for (i, range) in ranges.iter().enumerate() {
+        let rows = &set.data()[range.start * dim..range.end * dim];
+        let shard = ExactIndex::build(rows, dim, metric, &StorageSpec::flat(), 42)?;
+        let path = dir.join(format!("shard-{i}.opdx"));
+        store::save_index_cold(&shard, &path)?;
+        let name = format!("w{i}");
+        let cell = AddrCell::new("");
+        let exe2 = exe.clone();
+        let path2 = path.clone();
+        let start = range.start;
+        let factory = Box::new(move || -> Result<Box<dyn WorkerHandle>> {
+            let mut cmd = std::process::Command::new(&exe2);
+            cmd.arg("serve-worker")
+                .arg("--file")
+                .arg(&path2)
+                .arg("--start")
+                .arg(start.to_string())
+                .arg("--listen")
+                .arg("127.0.0.1:0");
+            Ok(Box::new(ProcessWorker::spawn(cmd)?) as Box<dyn WorkerHandle>)
+        });
+        sups.push(Supervisor::start(
+            name.clone(),
+            Arc::clone(&cell),
+            factory,
+            Arc::clone(&registry),
+        )?);
+        specs.push(WorkerSpec { name, addr: cell });
+    }
+    let mut gw = Gateway::new(specs, cfg, Arc::clone(&registry));
+    println!(
+        "distributed serving: {} worker processes over {n} rows (dim {dim})",
+        ranges.len()
+    );
+
+    // Headline guarantee, spot-checked live: gateway == unsharded scan,
+    // bitwise.
+    let reference = ExactIndex::build(set.data(), dim, metric, &StorageSpec::flat(), 42)?;
+    let sample = gw.search(set.vector(0), k)?;
+    let expect = reference.search(set.vector(0), k)?;
+    let exact = !sample.partial
+        && sample.neighbors.len() == expect.len()
+        && sample
+            .neighbors
+            .iter()
+            .zip(&expect)
+            .all(|(a, b)| a.index == b.index && a.distance.to_bits() == b.distance.to_bits());
+    println!(
+        "order-exactness spot check vs unsharded scan: {}",
+        if exact { "bitwise identical" } else { "MISMATCH" }
+    );
+
+    let sw = opdr::util::Stopwatch::start();
+    let mut ok = 0usize;
+    let mut partial = 0usize;
+    for i in 0..queries {
+        let r = gw.search(set.vector(i % n), k)?;
+        ok += 1;
+        if r.partial {
+            partial += 1;
+        }
+    }
+    let secs = sw.elapsed_secs();
+    println!(
+        "completed {ok}/{queries} gateway queries in {secs:.2}s ({:.0} qps), {partial} partial",
+        ok as f64 / secs
+    );
+    if dump_metrics {
+        println!("{}", registry.render());
+    }
+    for s in &mut sups {
+        s.shutdown();
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    if !exact {
+        return Err(OpdrError::runtime(
+            "distributed result diverged from the unsharded reference",
+        ));
+    }
+    Ok(())
+}
+
+/// `serve-worker`: the child-process entrypoint spawned by
+/// `serve-demo --distributed` (one per shard). Loads the shard's `OPDR`
+/// file (version-5 files mmap their annex), binds, prints
+/// `listening <addr>` for the parent and serves until killed.
+fn cmd_serve_worker(args: &mut Args) -> Result<()> {
+    let file = args
+        .get("file")
+        .map(str::to_string)
+        .ok_or_else(|| OpdrError::config("serve-worker: --file <shard.opdx> is required"))?;
+    let start = args.get_usize_or("start", 0)?;
+    let listen = args.get_or("listen", "127.0.0.1:0");
+    let heap = args.has("heap");
+    args.finish()?;
+    opdr::dist::run_worker_from_file(&file, start, &listen, heap)
 }
 
 fn cmd_artifacts(args: &mut Args) -> Result<()> {

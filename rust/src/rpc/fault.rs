@@ -1,0 +1,375 @@
+//! Deterministic fault injection for the RPC layer — the test double the
+//! distributed-serving correctness story is built on.
+//!
+//! Two pieces:
+//!
+//! * [`FaultyTransport`] — a framed sender that applies one scripted
+//!   [`Fault`] per outbound frame **at the byte level**: drop the frame,
+//!   forward only a prefix (then sever the connection), delay, duplicate,
+//!   reorder with the following frame, or flip a byte at a scripted offset
+//!   (header or payload). Used directly in unit / failure-injection tests
+//!   against a live worker socket.
+//! * [`FaultProxy`] — a loopback TCP proxy that relays whole frames between
+//!   a client (the gateway) and an upstream worker, applying one script per
+//!   direction. Scripts are consumed globally across reconnects, so a test
+//!   can fault exactly the first handshake (or the third response) and
+//!   assert the *next* connection heals.
+//!
+//! Faults are scripted per frame index — nothing is random — so every test
+//! in the drop/truncate/delay/duplicate/reorder/corrupt ×
+//! {handshake, request, response} matrix is reproducible.
+
+use crate::error::Result;
+use crate::rpc::frame::{encode_frame, Message, HEADER_BYTES, MAX_PAYLOAD_BYTES};
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+/// One scripted fault, applied to one outbound frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Forward the frame unchanged.
+    None,
+    /// Never deliver the frame (the connection stays up).
+    Drop,
+    /// Deliver only the first `n` bytes, then sever the connection — the
+    /// receiver sees a truncated frame followed by EOF.
+    Truncate(usize),
+    /// Sleep this many milliseconds before delivering (trips read
+    /// deadlines when longer than the receiver's budget).
+    Delay(u64),
+    /// Deliver the frame twice back-to-back.
+    Duplicate,
+    /// Hold the frame and deliver it *after* the next one (a held frame
+    /// with no successor on the same connection is never delivered).
+    Reorder,
+    /// Flip (XOR `0xFF`) the byte at this offset into the frame — offsets
+    /// under [`HEADER_BYTES`] corrupt the header, larger ones the payload
+    /// (offset is taken modulo the frame length).
+    Corrupt(usize),
+}
+
+/// A finite script of per-frame faults; frames past the end are clean.
+#[derive(Debug, Clone, Default)]
+pub struct FaultScript {
+    faults: Vec<Fault>,
+}
+
+impl FaultScript {
+    /// No faults at all.
+    pub fn clean() -> FaultScript {
+        FaultScript { faults: Vec::new() }
+    }
+
+    /// Script from an explicit per-frame list.
+    pub fn new(faults: Vec<Fault>) -> FaultScript {
+        FaultScript { faults }
+    }
+
+    /// Clean for `skip` frames, then `fault`, then clean forever — the
+    /// shape every matrix case uses (skip 0 = fault the handshake frame,
+    /// skip 1 = fault the first post-handshake frame).
+    pub fn fault_at(skip: usize, fault: Fault) -> FaultScript {
+        let mut faults = vec![Fault::None; skip];
+        faults.push(fault);
+        FaultScript { faults }
+    }
+
+    fn into_state(self) -> Arc<Mutex<VecDeque<Fault>>> {
+        Arc::new(Mutex::new(self.faults.into()))
+    }
+}
+
+fn next_fault(state: &Mutex<VecDeque<Fault>>) -> Fault {
+    let mut g = state.lock().unwrap_or_else(|p| p.into_inner());
+    g.pop_front().unwrap_or(Fault::None)
+}
+
+/// Apply `fault` to an encoded frame, returning the byte chunks to forward
+/// (in order) plus whether the connection must be severed afterwards and an
+/// optional pre-delivery delay. `held` is the reorder buffer shared across
+/// calls on one connection.
+fn apply_fault(
+    fault: Fault,
+    bytes: Vec<u8>,
+    held: &mut Option<Vec<u8>>,
+) -> (Vec<Vec<u8>>, bool, Option<Duration>) {
+    // A frame released from the reorder buffer rides behind the current one.
+    let mut out: Vec<Vec<u8>> = Vec::new();
+    let mut sever = false;
+    let mut delay = None;
+    match fault {
+        Fault::None => out.push(bytes),
+        Fault::Drop => {}
+        Fault::Truncate(n) => {
+            let n = n.min(bytes.len());
+            out.push(bytes[..n].to_vec());
+            sever = true;
+        }
+        Fault::Delay(ms) => {
+            delay = Some(Duration::from_millis(ms));
+            out.push(bytes);
+        }
+        Fault::Duplicate => {
+            out.push(bytes.clone());
+            out.push(bytes);
+        }
+        Fault::Reorder => {
+            *held = Some(bytes);
+        }
+        Fault::Corrupt(off) => {
+            let mut b = bytes;
+            if !b.is_empty() {
+                let off = off % b.len();
+                b[off] ^= 0xFF;
+            }
+            out.push(b);
+        }
+    }
+    if !matches!(fault, Fault::Reorder) {
+        if let Some(h) = held.take() {
+            out.push(h);
+        }
+    }
+    (out, sever, delay)
+}
+
+/// A framed sender over any byte stream that applies a [`FaultScript`] to
+/// its outbound frames. Receiving is passthrough (faults are injected on
+/// the way out; point two of these at each other to fault both directions).
+#[derive(Debug)]
+pub struct FaultyTransport<S: Read + Write> {
+    inner: S,
+    script: Arc<Mutex<VecDeque<Fault>>>,
+    held: Option<Vec<u8>>,
+}
+
+impl<S: Read + Write> FaultyTransport<S> {
+    /// Wrap `inner`, faulting outbound frames per `script`.
+    pub fn new(inner: S, script: FaultScript) -> FaultyTransport<S> {
+        FaultyTransport { inner, script: script.into_state(), held: None }
+    }
+
+    /// Encode and send one frame through the fault script.
+    pub fn send(&mut self, request_id: u64, msg: &Message) -> Result<()> {
+        let bytes = encode_frame(request_id, msg)?;
+        self.send_raw(bytes)
+    }
+
+    /// Send pre-encoded frame bytes through the fault script (lets fuzz
+    /// tests inject already-mangled frames on top of scripted faults).
+    pub fn send_raw(&mut self, bytes: Vec<u8>) -> Result<()> {
+        let fault = next_fault(&self.script);
+        let (chunks, sever, delay) = apply_fault(fault, bytes, &mut self.held);
+        if let Some(d) = delay {
+            thread::sleep(d);
+        }
+        for chunk in chunks {
+            self.inner.write_all(&chunk)?;
+        }
+        self.inner.flush()?;
+        if sever {
+            // Severing is stream-specific; TcpStream severs on drop of the
+            // write half — callers drop the transport after a truncation.
+            return Ok(());
+        }
+        Ok(())
+    }
+
+    /// Receive one frame from the peer (no fault injection on this path).
+    pub fn recv(&mut self) -> Result<(u64, Message)> {
+        crate::rpc::frame::read_frame(&mut self.inner)
+    }
+
+    /// The wrapped stream (to shut a socket down after a truncation).
+    pub fn inner(&self) -> &S {
+        &self.inner
+    }
+}
+
+/// A deterministic frame-relaying TCP proxy between a client and one
+/// upstream worker, with one [`FaultScript`] per direction. Listens on an
+/// ephemeral loopback port; scripts are consumed across all connections in
+/// order, so reconnects after a fault observe the remaining (usually clean)
+/// script tail.
+#[derive(Debug)]
+pub struct FaultProxy {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl FaultProxy {
+    /// Start a proxy in front of `upstream`, faulting client→upstream
+    /// frames per `request_script` and upstream→client frames per
+    /// `response_script`.
+    pub fn spawn(
+        upstream: SocketAddr,
+        request_script: FaultScript,
+        response_script: FaultScript,
+    ) -> Result<FaultProxy> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let req_state = request_script.into_state();
+        let resp_state = response_script.into_state();
+        let handle = thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((client, _)) => {
+                        let Ok(server) = TcpStream::connect_timeout(
+                            &upstream,
+                            Duration::from_millis(2000),
+                        ) else {
+                            let _ = client.shutdown(Shutdown::Both);
+                            continue;
+                        };
+                        let _ = client.set_nodelay(true);
+                        let _ = server.set_nodelay(true);
+                        spawn_relay(&client, &server, Arc::clone(&req_state));
+                        spawn_relay(&server, &client, Arc::clone(&resp_state));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(FaultProxy { addr, stop, handle: Some(handle) })
+    }
+
+    /// The proxy's listen address — point the gateway's worker spec here.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting; existing relays die with their connections.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for FaultProxy {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Relay whole frames `src` → `dst` through a shared fault-script state;
+/// exits (severing both sockets) on EOF, a malformed upstream frame, or a
+/// truncation fault.
+fn spawn_relay(src: &TcpStream, dst: &TcpStream, script: Arc<Mutex<VecDeque<Fault>>>) {
+    let (Ok(mut src), Ok(mut dst)) = (src.try_clone(), dst.try_clone()) else {
+        let _ = src.shutdown(Shutdown::Both);
+        let _ = dst.shutdown(Shutdown::Both);
+        return;
+    };
+    thread::spawn(move || {
+        let mut held: Option<Vec<u8>> = None;
+        loop {
+            let Ok(bytes) = read_raw_frame(&mut src) else { break };
+            let fault = next_fault(&script);
+            let (chunks, sever, delay) = apply_fault(fault, bytes, &mut held);
+            if let Some(d) = delay {
+                thread::sleep(d);
+            }
+            let mut write_failed = false;
+            for chunk in chunks {
+                if dst.write_all(&chunk).is_err() {
+                    write_failed = true;
+                    break;
+                }
+            }
+            if sever || write_failed {
+                break;
+            }
+        }
+        let _ = src.shutdown(Shutdown::Both);
+        let _ = dst.shutdown(Shutdown::Both);
+    });
+}
+
+/// Read one frame's raw bytes (header + payload) without decoding the
+/// payload — the relay only needs the boundary. The endpoints behind the
+/// proxy are honest, so a malformed header here means the stream is done.
+fn read_raw_frame(src: &mut TcpStream) -> std::io::Result<Vec<u8>> {
+    let mut hdr = [0u8; HEADER_BYTES];
+    src.read_exact(&mut hdr)?;
+    let len = u32::from_le_bytes(hdr[13..17].try_into().expect("4 header bytes")) as usize;
+    if len > MAX_PAYLOAD_BYTES {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "relay: frame length over cap",
+        ));
+    }
+    let mut bytes = Vec::with_capacity(HEADER_BYTES + len.min(crate::index::io::ALLOC_CHUNK));
+    bytes.extend_from_slice(&hdr);
+    let mut remaining = len;
+    let mut buf = [0u8; 8192];
+    while remaining > 0 {
+        let take = remaining.min(buf.len());
+        src.read_exact(&mut buf[..take])?;
+        bytes.extend_from_slice(&buf[..take]);
+        remaining -= take;
+    }
+    Ok(bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn apply_fault_shapes() {
+        let frame = vec![1u8, 2, 3, 4, 5];
+        let mut held = None;
+
+        let (out, sever, delay) = apply_fault(Fault::None, frame.clone(), &mut held);
+        assert_eq!(out, vec![frame.clone()]);
+        assert!(!sever && delay.is_none());
+
+        let (out, _, _) = apply_fault(Fault::Drop, frame.clone(), &mut held);
+        assert!(out.is_empty());
+
+        let (out, sever, _) = apply_fault(Fault::Truncate(2), frame.clone(), &mut held);
+        assert_eq!(out, vec![vec![1u8, 2]]);
+        assert!(sever);
+
+        let (out, _, delay) = apply_fault(Fault::Delay(7), frame.clone(), &mut held);
+        assert_eq!(out, vec![frame.clone()]);
+        assert_eq!(delay, Some(Duration::from_millis(7)));
+
+        let (out, _, _) = apply_fault(Fault::Duplicate, frame.clone(), &mut held);
+        assert_eq!(out.len(), 2);
+
+        let (out, _, _) = apply_fault(Fault::Corrupt(1), frame.clone(), &mut held);
+        assert_eq!(out[0][1], 2 ^ 0xFF);
+
+        // Reorder holds the frame, then releases it behind the next one.
+        let (out, _, _) = apply_fault(Fault::Reorder, vec![9u8], &mut held);
+        assert!(out.is_empty());
+        assert!(held.is_some());
+        let (out, _, _) = apply_fault(Fault::None, vec![8u8], &mut held);
+        assert_eq!(out, vec![vec![8u8], vec![9u8]]);
+        assert!(held.is_none());
+    }
+
+    #[test]
+    fn script_consumes_in_order_then_stays_clean() {
+        let state = FaultScript::fault_at(1, Fault::Drop).into_state();
+        assert_eq!(next_fault(&state), Fault::None);
+        assert_eq!(next_fault(&state), Fault::Drop);
+        assert_eq!(next_fault(&state), Fault::None);
+        assert_eq!(next_fault(&state), Fault::None);
+    }
+}

@@ -1,0 +1,414 @@
+//! Length-prefixed binary frame codec for the gateway ↔ shard-worker RPC.
+//!
+//! ## The frame layout
+//!
+//! Every message travels in one frame — a fixed 21-byte header followed by a
+//! length-prefixed, CRC-guarded payload (all integers little-endian):
+//!
+//! | offset | bytes | field |
+//! |-------:|------:|-------|
+//! |      0 |     4 | magic `OPRC` |
+//! |      4 |     1 | frame kind (see [`Message`] tags) |
+//! |      5 |     8 | u64 request id |
+//! |     13 |     4 | u32 payload byte length (≤ [`MAX_PAYLOAD_BYTES`]) |
+//! |     17 |     4 | u32 CRC-32 (IEEE) of the payload |
+//! |     21 |     … | payload |
+//!
+//! The request id is echoed by every response, so a gateway that sees a
+//! duplicated or reordered frame (a retransmitting proxy, a worker answering
+//! a request the gateway already timed out) can discard it by id instead of
+//! mis-pairing request and response. The CRC covers the payload; corruption
+//! of the header itself is caught by the magic / kind / length validation.
+//!
+//! ## Decoder hardening
+//!
+//! The decoder treats every header field as hostile, matching the version-5
+//! store hardening ([`crate::index::io`]):
+//!
+//! * a declared payload length above [`MAX_PAYLOAD_BYTES`] fails with a
+//!   typed error **before any allocation**;
+//! * lengths under the cap preallocate at most
+//!   [`ALLOC_CHUNK`](crate::index::io::ALLOC_CHUNK) bytes and grow only as
+//!   bytes actually arrive, so a lying length field ends in the ordinary
+//!   typed truncation error instead of an OOM abort;
+//! * a CRC mismatch, an unknown frame kind, a bad magic and trailing payload
+//!   bytes each fail with a distinct typed [`OpdrError`] — never a panic.
+
+use crate::error::{OpdrError, Result};
+use crate::index::io;
+use std::io::Read;
+
+/// RPC protocol version, exchanged in the [`Message::Hello`] /
+/// [`Message::HelloAck`] handshake. A worker speaking a different version
+/// refuses the connection with a typed error instead of misparsing frames.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Frame magic (`OPRC` = OPDR RPC).
+pub const FRAME_MAGIC: [u8; 4] = *b"OPRC";
+
+/// Fixed frame header size in bytes.
+pub const HEADER_BYTES: usize = 21;
+
+/// Cap on a frame's declared payload length. Larger declarations fail
+/// before any allocation: the biggest legitimate payload is a query or a
+/// top-k response, both far below this.
+pub const MAX_PAYLOAD_BYTES: usize = 1 << 26;
+
+/// Eager-preallocation clamp for untrusted length fields — re-exported from
+/// the store's io hardening so tests can state the shared contract.
+pub const ALLOC_CHUNK: usize = io::ALLOC_CHUNK;
+
+// CRC-32 (IEEE 802.3, reflected, polynomial 0xEDB88320), table built at
+// compile time — the offline build has no crc crate.
+const CRC_TABLE: [u32; 256] = build_crc_table();
+
+const fn build_crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut j = 0;
+        while j < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            j += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+/// CRC-32 (IEEE) of `bytes`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// One RPC message; the variant doubles as the frame kind tag.
+#[derive(Debug, Clone)]
+pub enum Message {
+    /// Client → worker: open a session at this protocol version.
+    Hello {
+        /// Client protocol version.
+        version: u32,
+    },
+    /// Worker → client: version accepted; the shard this worker serves.
+    HelloAck {
+        /// Worker protocol version.
+        version: u32,
+        /// First global row id of the shard.
+        start: u64,
+        /// Rows in the shard.
+        len: u64,
+        /// Vector dimensionality served.
+        dim: u32,
+    },
+    /// Client → worker: top-`k` nearest neighbors of `query`.
+    Search {
+        /// Neighbors requested.
+        k: u32,
+        /// Full-precision query vector.
+        query: Vec<f32>,
+    },
+    /// Worker → client: `(global id, distance)` pairs, ascending by
+    /// (distance, id). Distances travel as raw f32 bits, so the gateway
+    /// merge is bit-identical to an in-process shard merge.
+    SearchOk {
+        /// Remapped neighbor list.
+        neighbors: Vec<(u64, f32)>,
+    },
+    /// Worker → client: the request failed (or could not be parsed) with
+    /// this typed message.
+    Error {
+        /// Human-readable failure description.
+        message: String,
+    },
+    /// Liveness probe.
+    Ping,
+    /// Liveness reply.
+    Pong,
+}
+
+impl Message {
+    /// Frame kind tag (header byte 4).
+    pub fn kind_tag(&self) -> u8 {
+        match self {
+            Message::Hello { .. } => 1,
+            Message::HelloAck { .. } => 2,
+            Message::Search { .. } => 3,
+            Message::SearchOk { .. } => 4,
+            Message::Error { .. } => 5,
+            Message::Ping => 6,
+            Message::Pong => 7,
+        }
+    }
+
+    /// Short kind name for error messages.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Message::Hello { .. } => "hello",
+            Message::HelloAck { .. } => "hello-ack",
+            Message::Search { .. } => "search",
+            Message::SearchOk { .. } => "search-ok",
+            Message::Error { .. } => "error",
+            Message::Ping => "ping",
+            Message::Pong => "pong",
+        }
+    }
+
+    fn encode_payload(&self) -> Result<Vec<u8>> {
+        let mut p: Vec<u8> = Vec::new();
+        match self {
+            Message::Hello { version } => io::write_u32(&mut p, *version)?,
+            Message::HelloAck { version, start, len, dim } => {
+                io::write_u32(&mut p, *version)?;
+                io::write_u64(&mut p, *start)?;
+                io::write_u64(&mut p, *len)?;
+                io::write_u32(&mut p, *dim)?;
+            }
+            Message::Search { k, query } => {
+                io::write_u32(&mut p, *k)?;
+                io::write_u64(&mut p, query.len() as u64)?;
+                io::write_f32s(&mut p, query)?;
+            }
+            Message::SearchOk { neighbors } => {
+                io::write_u64(&mut p, neighbors.len() as u64)?;
+                for &(id, dist) in neighbors {
+                    io::write_u64(&mut p, id)?;
+                    p.extend_from_slice(&dist.to_le_bytes());
+                }
+            }
+            Message::Error { message } => {
+                let bytes = message.as_bytes();
+                io::write_u64(&mut p, bytes.len() as u64)?;
+                io::write_bytes(&mut p, bytes)?;
+            }
+            Message::Ping | Message::Pong => {}
+        }
+        Ok(p)
+    }
+
+    fn decode_payload(tag: u8, payload: &[u8]) -> Result<Message> {
+        let mut r: &[u8] = payload;
+        let msg = match tag {
+            1 => Message::Hello { version: io::read_u32(&mut r)? },
+            2 => Message::HelloAck {
+                version: io::read_u32(&mut r)?,
+                start: io::read_u64(&mut r)?,
+                len: io::read_u64(&mut r)?,
+                dim: io::read_u32(&mut r)?,
+            },
+            3 => {
+                let k = io::read_u32(&mut r)?;
+                let count = io::read_u64_usize(&mut r)?;
+                let query = io::read_f32s(&mut r, count)?;
+                Message::Search { k, query }
+            }
+            4 => {
+                let count = io::read_u64_usize(&mut r)?;
+                if count > io::MAX_ELEMS {
+                    return Err(OpdrError::data("rpc: neighbor count too large"));
+                }
+                // Bounded preallocation: `count` is an untrusted length
+                // field, so the vector grows only as bytes actually arrive.
+                let mut neighbors = Vec::with_capacity(count.min(ALLOC_CHUNK));
+                let mut b = [0u8; 4];
+                for _ in 0..count {
+                    let id = io::read_u64(&mut r)?;
+                    r.read_exact(&mut b)?;
+                    neighbors.push((id, f32::from_le_bytes(b)));
+                }
+                Message::SearchOk { neighbors }
+            }
+            5 => {
+                let len = io::read_u64_usize(&mut r)?;
+                let bytes = io::read_bytes(&mut r, len)?;
+                let message = String::from_utf8(bytes)
+                    .map_err(|_| OpdrError::data("rpc: error message is not utf-8"))?;
+                Message::Error { message }
+            }
+            6 => Message::Ping,
+            7 => Message::Pong,
+            other => return Err(OpdrError::data(format!("rpc: unknown frame kind {other}"))),
+        };
+        if !r.is_empty() {
+            return Err(OpdrError::data(format!(
+                "rpc: {} trailing bytes after the payload",
+                r.len()
+            )));
+        }
+        Ok(msg)
+    }
+}
+
+/// Encode one frame (header + payload) into a single buffer, so a frame is
+/// always written with one `write_all` and a fault proxy can treat the
+/// buffer as the frame boundary.
+pub fn encode_frame(request_id: u64, msg: &Message) -> Result<Vec<u8>> {
+    let payload = msg.encode_payload()?;
+    if payload.len() > MAX_PAYLOAD_BYTES {
+        return Err(OpdrError::data(format!(
+            "rpc: {} payload of {} bytes exceeds the {} byte frame cap",
+            msg.kind_name(),
+            payload.len(),
+            MAX_PAYLOAD_BYTES
+        )));
+    }
+    let mut buf = Vec::with_capacity(HEADER_BYTES + payload.len());
+    buf.extend_from_slice(&FRAME_MAGIC);
+    buf.push(msg.kind_tag());
+    buf.extend_from_slice(&request_id.to_le_bytes());
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&crc32(&payload).to_le_bytes());
+    buf.extend_from_slice(&payload);
+    Ok(buf)
+}
+
+/// Read and validate one frame. Every failure is a typed error: bad magic,
+/// unknown kind, an over-cap or lying length field, a CRC mismatch and
+/// trailing payload bytes are all distinguished from transport errors
+/// ([`OpdrError::Io`] — including read-deadline expiry, see
+/// [`is_timeout`](super::is_timeout)).
+pub fn read_frame(r: &mut dyn Read) -> Result<(u64, Message)> {
+    let mut hdr = [0u8; HEADER_BYTES];
+    r.read_exact(&mut hdr)?;
+    decode_header_then_payload(&hdr, r)
+}
+
+/// Decode a frame from a byte slice (tests and fuzzing): the whole frame
+/// must be present and nothing may trail it.
+pub fn decode_frame(bytes: &[u8]) -> Result<(u64, Message)> {
+    let mut r: &[u8] = bytes;
+    let out = read_frame(&mut r)?;
+    if !r.is_empty() {
+        return Err(OpdrError::data(format!("rpc: {} trailing bytes after the frame", r.len())));
+    }
+    Ok(out)
+}
+
+fn decode_header_then_payload(
+    hdr: &[u8; HEADER_BYTES],
+    r: &mut dyn Read,
+) -> Result<(u64, Message)> {
+    if hdr[..4] != FRAME_MAGIC {
+        return Err(OpdrError::data("rpc: bad frame magic"));
+    }
+    let kind = hdr[4];
+    if !(1..=7).contains(&kind) {
+        return Err(OpdrError::data(format!("rpc: unknown frame kind {kind}")));
+    }
+    let request_id = u64::from_le_bytes(hdr[5..13].try_into().expect("8 header bytes"));
+    let len = u32::from_le_bytes(hdr[13..17].try_into().expect("4 header bytes")) as usize;
+    let want_crc = u32::from_le_bytes(hdr[17..21].try_into().expect("4 header bytes"));
+    if len > MAX_PAYLOAD_BYTES {
+        // Fail before any allocation: the length field is untrusted.
+        return Err(OpdrError::data(format!(
+            "rpc: frame length {len} exceeds the {MAX_PAYLOAD_BYTES} byte cap"
+        )));
+    }
+    let payload = io::read_bytes(r, len)?;
+    let got_crc = crc32(&payload);
+    if got_crc != want_crc {
+        return Err(OpdrError::data(format!(
+            "rpc: frame crc mismatch (want {want_crc:#010x}, got {got_crc:#010x})"
+        )));
+    }
+    let msg = Message::decode_payload(kind, &payload)?;
+    Ok((request_id, msg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(id: u64, msg: &Message) {
+        let bytes = encode_frame(id, msg).expect("encode");
+        let (rid, decoded) = decode_frame(&bytes).expect("decode");
+        assert_eq!(rid, id);
+        let re = encode_frame(rid, &decoded).expect("re-encode");
+        assert_eq!(bytes, re, "frame bytes must round-trip bit-exactly");
+    }
+
+    #[test]
+    fn every_message_kind_roundtrips() {
+        roundtrip(0, &Message::Hello { version: PROTOCOL_VERSION });
+        roundtrip(1, &Message::HelloAck { version: 1, start: 7, len: 1000, dim: 64 });
+        roundtrip(u64::MAX, &Message::Search { k: 10, query: vec![1.0, -2.5, f32::NAN] });
+        roundtrip(
+            42,
+            &Message::SearchOk {
+                neighbors: vec![(0, 0.0), (u64::MAX, f32::INFINITY), (3, f32::NAN)],
+            },
+        );
+        roundtrip(3, &Message::Error { message: "shard on fire".to_string() });
+        roundtrip(4, &Message::Ping);
+        roundtrip(5, &Message::Pong);
+    }
+
+    #[test]
+    fn nan_distance_bits_survive_the_wire() {
+        // A payload NaN with a nonstandard bit pattern must round-trip
+        // bit-exactly — the gateway merge relies on raw-bits equality.
+        let weird = f32::from_bits(0x7FC0_1234);
+        let bytes =
+            encode_frame(9, &Message::SearchOk { neighbors: vec![(5, weird)] }).expect("encode");
+        match decode_frame(&bytes).expect("decode").1 {
+            Message::SearchOk { neighbors } => {
+                assert_eq!(neighbors[0].1.to_bits(), 0x7FC0_1234);
+            }
+            other => panic!("wrong kind {}", other.kind_name()),
+        }
+    }
+
+    #[test]
+    fn huge_length_field_fails_without_allocation() {
+        let mut bytes = encode_frame(1, &Message::Ping).expect("encode");
+        bytes[13..17].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = decode_frame(&bytes).expect_err("over-cap length must fail");
+        assert!(err.to_string().contains("byte cap"), "got: {err}");
+    }
+
+    #[test]
+    fn lying_length_field_fails_with_truncation_error() {
+        // Length under the cap but beyond the actual bytes: the bounded
+        // reader must hit EOF, not OOM.
+        let mut bytes =
+            encode_frame(1, &Message::Search { k: 3, query: vec![0.5; 8] }).expect("encode");
+        bytes[13..17].copy_from_slice(&((MAX_PAYLOAD_BYTES - 1) as u32).to_le_bytes());
+        assert!(decode_frame(&bytes).is_err());
+    }
+
+    #[test]
+    fn corrupt_payload_fails_crc() {
+        let mut bytes =
+            encode_frame(1, &Message::Search { k: 3, query: vec![0.5; 8] }).expect("encode");
+        let off = HEADER_BYTES + 5;
+        bytes[off] ^= 0xFF;
+        let err = decode_frame(&bytes).expect_err("corruption must fail");
+        assert!(err.to_string().contains("crc"), "got: {err}");
+    }
+
+    #[test]
+    fn bad_magic_and_bad_kind_are_typed() {
+        let mut bytes = encode_frame(1, &Message::Ping).expect("encode");
+        bytes[0] = b'X';
+        assert!(decode_frame(&bytes).unwrap_err().to_string().contains("magic"));
+        let mut bytes = encode_frame(1, &Message::Ping).expect("encode");
+        bytes[4] = 200;
+        assert!(decode_frame(&bytes).unwrap_err().to_string().contains("kind"));
+    }
+
+    #[test]
+    fn truncation_at_every_boundary_is_a_typed_error() {
+        let msg = Message::Search { k: 4, query: vec![1.0, 2.0, 3.0] };
+        let bytes = encode_frame(77, &msg).expect("encode");
+        for cut in 0..bytes.len() {
+            let err = decode_frame(&bytes[..cut]).expect_err("truncated frame must fail");
+            // Never a panic; always a typed error.
+            let _ = err.to_string();
+        }
+    }
+}

@@ -1,0 +1,101 @@
+//! Length-prefixed binary RPC between the gateway and shard workers.
+//!
+//! The distribution layer ([`crate::dist`]) splits serving into a front-end
+//! gateway and N shard-worker processes on local sockets. This module owns
+//! the wire: a versioned handshake, request-id-stamped frames with a
+//! per-message CRC ([`frame`] — the byte table lives there), read/write
+//! deadlines on the socket ([`FramedTcp`]), and the deterministic
+//! fault-injection doubles the whole correctness story is tested under
+//! ([`fault`]).
+//!
+//! Design rules, in the order they matter:
+//!
+//! 1. **Never trust a length field.** The decoder clamps preallocation to
+//!    [`frame::ALLOC_CHUNK`] and caps declared lengths at
+//!    [`frame::MAX_PAYLOAD_BYTES`], exactly like the version-5 store
+//!    hardening — a corrupt or hostile frame ends in a typed error, never
+//!    an OOM abort or a panic.
+//! 2. **Never block forever.** Every socket read and write carries a
+//!    deadline ([`FramedTcp::set_deadline`]); expiry surfaces as a typed
+//!    timeout ([`is_timeout`]) the gateway converts into degraded
+//!    (`partial = true`) serving, counted in `opdr_rpc_deadline_total`.
+//! 3. **Never mis-pair request and response.** Responses echo the request
+//!    id; a duplicated or reordered frame is discarded by id, so a faulty
+//!    transport can delay or repeat frames without ever producing a
+//!    silently wrong ranking.
+//!
+//! Distances travel as raw little-endian f32 bits (NaN payloads included),
+//! so a scatter-gathered merge through [`crate::knn::merge_top_k`] is
+//! bit-identical to the same merge in process.
+
+pub mod fault;
+pub mod frame;
+
+pub use fault::{Fault, FaultProxy, FaultScript, FaultyTransport};
+pub use frame::{
+    crc32, decode_frame, encode_frame, read_frame, Message, ALLOC_CHUNK, FRAME_MAGIC,
+    HEADER_BYTES, MAX_PAYLOAD_BYTES, PROTOCOL_VERSION,
+};
+
+use crate::error::{OpdrError, Result};
+use std::net::{Shutdown, TcpStream};
+use std::time::Duration;
+
+/// True when `e` is a socket-deadline expiry (`SO_RCVTIMEO`/`SO_SNDTIMEO`
+/// surface as `WouldBlock` on Unix, `TimedOut` elsewhere) — the gateway
+/// counts these separately from transport/protocol failures.
+pub fn is_timeout(e: &OpdrError) -> bool {
+    match e {
+        OpdrError::Io(io) => matches!(
+            io.kind(),
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+        ),
+        _ => false,
+    }
+}
+
+/// A framed RPC connection over TCP: one [`Message`] per frame, with a
+/// read/write deadline applied to the underlying socket. After any error
+/// the stream may be mid-frame (desynchronized); callers drop the
+/// connection and reconnect rather than resynchronize.
+#[derive(Debug)]
+pub struct FramedTcp {
+    stream: TcpStream,
+}
+
+impl FramedTcp {
+    /// Wrap a connected stream (enables `TCP_NODELAY`; frames are tiny and
+    /// latency-bound).
+    pub fn new(stream: TcpStream) -> FramedTcp {
+        let _ = stream.set_nodelay(true);
+        FramedTcp { stream }
+    }
+
+    /// Set the read *and* write deadline for subsequent frames. A zero
+    /// duration is clamped to 1ms (zero means "no timeout" to the OS,
+    /// which is exactly what a deadline must never silently become).
+    pub fn set_deadline(&self, d: Duration) -> Result<()> {
+        let d = d.max(Duration::from_millis(1));
+        self.stream.set_read_timeout(Some(d))?;
+        self.stream.set_write_timeout(Some(d))?;
+        Ok(())
+    }
+
+    /// Send one frame (a single `write_all` of the encoded bytes).
+    pub fn send(&mut self, request_id: u64, msg: &Message) -> Result<()> {
+        let buf = encode_frame(request_id, msg)?;
+        use std::io::Write;
+        self.stream.write_all(&buf)?;
+        Ok(())
+    }
+
+    /// Receive one frame, enforcing the configured deadline.
+    pub fn recv(&mut self) -> Result<(u64, Message)> {
+        read_frame(&mut self.stream)
+    }
+
+    /// Sever both directions (idempotent, best-effort).
+    pub fn shutdown(&self) {
+        let _ = self.stream.shutdown(Shutdown::Both);
+    }
+}

@@ -241,6 +241,21 @@ pub const COLLECTION_DELTA_ROWS: &str = "opdr_collection_delta_rows";
 pub const COLLECTION_COLD_BYTES: &str = "opdr_collection_cold_bytes";
 /// Bytes memory-mapped from the cold tier (gauge, labeled `{collection}`).
 pub const COLLECTION_MAPPED_BYTES: &str = "opdr_collection_mapped_bytes";
+/// Gateway→worker RPC requests sent, labeled `{worker}` (counter).
+pub const RPC_REQUESTS_TOTAL: &str = "opdr_rpc_requests_total";
+/// RPC transport/protocol failures (non-timeout), labeled `{worker}` (counter).
+pub const RPC_ERRORS_TOTAL: &str = "opdr_rpc_errors_total";
+/// RPC requests that missed their deadline, labeled `{worker}` (counter).
+pub const RPC_DEADLINE_TOTAL: &str = "opdr_rpc_deadline_total";
+/// Gateway queries answered degraded (`partial = true`) (counter).
+pub const RPC_PARTIAL_TOTAL: &str = "opdr_rpc_partial_results_total";
+/// Gateway-side RPC round-trip duration, labeled `{worker}` (summary).
+pub const RPC_REQUEST_DURATION: &str = "opdr_rpc_request_duration_seconds";
+/// Per-worker liveness as seen by the gateway/supervisor, labeled `{worker}`
+/// (gauge; 1 healthy, 0 down).
+pub const RPC_WORKER_UP: &str = "opdr_rpc_worker_up";
+/// Supervisor respawns of a crashed worker, labeled `{worker}` (counter).
+pub const RPC_WORKER_RESTARTS: &str = "opdr_rpc_worker_restarts_total";
 
 #[cfg(test)]
 mod tests {

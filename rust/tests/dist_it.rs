@@ -1,0 +1,352 @@
+//! Distributed-serving integration tests — the fault-injection harness the
+//! tentpole guarantee is machine-checked under.
+//!
+//! The contract: **every gateway query terminates within its deadline with
+//! either a bitwise order-exact top-k or a typed partial/degraded result —
+//! never a panic, a hang, or a silently wrong ranking.** The matrix test
+//! drives a deterministic [`FaultProxy`] through every fault kind
+//! (drop / truncate / delay / duplicate / reorder / corrupt) × every
+//! protocol stage (handshake / request / response) and asserts exactly
+//! that, plus that the very next query *heals* back to the full bitwise
+//! answer through a reconnect. The crash test kills a worker mid-storm and
+//! proves supervised respawn: degraded serving while down, mmap shard
+//! reload on restart, and a post-respawn answer bitwise identical to the
+//! pre-crash one.
+
+use opdr::config::DistConfig;
+use opdr::data::{store, synth, DatasetKind};
+use opdr::dist::{AddrCell, Gateway, Supervisor, ThreadWorker, WorkerHandle, WorkerSpec};
+use opdr::index::{AnnIndex, ExactIndex, StorageSpec};
+use opdr::knn::Neighbor;
+use opdr::metrics::Metric;
+use opdr::rpc::{Fault, FaultProxy, FaultScript};
+use opdr::telemetry::registry::{RPC_WORKER_RESTARTS, RPC_WORKER_UP};
+use opdr::telemetry::Registry;
+use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+const DIM: usize = 8;
+const N: usize = 60;
+const K: usize = 10;
+
+fn exact_over(rows: &[f32]) -> Arc<dyn AnnIndex> {
+    Arc::new(ExactIndex::build(rows, DIM, Metric::SqEuclidean, &StorageSpec::flat(), 7).unwrap())
+}
+
+fn bits(nbs: &[Neighbor]) -> Vec<(usize, u32)> {
+    nbs.iter().map(|nb| (nb.index, nb.distance.to_bits())).collect()
+}
+
+fn dist_cfg(workers: usize, connect_ms: u64, deadline_ms: u64) -> DistConfig {
+    DistConfig {
+        workers,
+        connect_timeout_ms: connect_ms,
+        request_deadline_ms: deadline_ms,
+        ..Default::default()
+    }
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("opdr_dist_it_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Healthy cluster: the gateway answer is bitwise identical to the
+/// unsharded exact scan, never partial.
+#[test]
+fn gateway_matches_unsharded_reference_when_healthy() {
+    let set = synth::generate(DatasetKind::Flickr30k, N, DIM, 42);
+    let data = set.data();
+    let ranges = opdr::index::shard::shard_ranges(N, 3, 1);
+    let workers: Vec<ThreadWorker> = ranges
+        .iter()
+        .map(|r| {
+            ThreadWorker::spawn(exact_over(&data[r.start * DIM..r.end * DIM]), r.start).unwrap()
+        })
+        .collect();
+    let specs = workers
+        .iter()
+        .enumerate()
+        .map(|(i, w)| WorkerSpec::fixed(format!("w{i}"), w.addr()))
+        .collect();
+    let reference = exact_over(data);
+    let mut gw = Gateway::new(specs, dist_cfg(3, 1000, 2000), Arc::new(Registry::new()));
+    for qi in [0usize, 7, 31, N - 1] {
+        for k in [1usize, K, N + 5] {
+            let r = gw.search(set.vector(qi), k).unwrap();
+            assert!(!r.partial, "healthy cluster answered partial");
+            assert_eq!(r.shards_ok, r.shards_total);
+            assert_eq!(
+                bits(&r.neighbors),
+                bits(&reference.search(set.vector(qi), k).unwrap()),
+                "qi={qi} k={k}: gateway diverged from the unsharded scan"
+            );
+        }
+    }
+    // A NaN query is typed empty on both sides, not a panic.
+    let nan_q = vec![f32::NAN; DIM];
+    let r = gw.search(&nan_q, K).unwrap();
+    assert!(r.neighbors.is_empty() && !r.partial);
+}
+
+/// Which protocol stage the scripted fault lands on.
+#[derive(Clone, Copy, Debug)]
+enum Target {
+    /// Client→worker frame 0: the `Hello`.
+    Handshake,
+    /// Client→worker frame 1: the first `Search`.
+    Request,
+    /// Worker→client frame 1: the first `SearchOk` (frame 0 is the
+    /// `HelloAck`).
+    Response,
+}
+
+fn scripts_for(target: Target, fault: Fault) -> (FaultScript, FaultScript) {
+    match target {
+        Target::Handshake => (FaultScript::fault_at(0, fault), FaultScript::clean()),
+        Target::Request => (FaultScript::fault_at(1, fault), FaultScript::clean()),
+        Target::Response => (FaultScript::clean(), FaultScript::fault_at(1, fault)),
+    }
+}
+
+/// The headline matrix: every fault × every stage, injected by the
+/// deterministic proxy in front of shard 0. Each query must terminate
+/// promptly with either the full bitwise answer or a typed partial one
+/// that is itself the bitwise order-exact merge of the surviving shards —
+/// and the next queries must heal back to the full answer via reconnect.
+#[test]
+fn fault_matrix_terminates_with_exact_or_typed_partial() {
+    let set = synth::generate(DatasetKind::Flickr30k, N, DIM, 42);
+    let data = set.data();
+    let ranges = opdr::index::shard::shard_ranges(N, 3, 1);
+    assert_eq!(ranges.len(), 3);
+    let q = set.vector(5);
+    let reference = exact_over(data);
+    let expect_full = bits(&reference.search(q, K).unwrap());
+    // Shard 0 is the faulted one; the only legal degraded answer is the
+    // order-exact merge of shards 1..3 = the exact scan over their rows,
+    // re-based to global ids.
+    let survivors = exact_over(&data[ranges[1].start * DIM..]);
+    let expect_survivors: Vec<(usize, u32)> = survivors
+        .search(q, K)
+        .unwrap()
+        .iter()
+        .map(|nb| (nb.index + ranges[1].start, nb.distance.to_bits()))
+        .collect();
+
+    // Frame sizes here: Hello = 26 bytes, Search(dim 8) = 66 bytes — so
+    // Truncate(5) cuts inside the header, Truncate(25) inside the payload,
+    // Corrupt(2) flips a magic byte, Corrupt(30) flips payload (CRC trips).
+    let faults = [
+        Fault::Drop,
+        Fault::Truncate(5),
+        Fault::Truncate(25),
+        Fault::Delay(700),
+        Fault::Duplicate,
+        Fault::Reorder,
+        Fault::Corrupt(2),
+        Fault::Corrupt(30),
+    ];
+    for target in [Target::Handshake, Target::Request, Target::Response] {
+        for fault in faults {
+            let case = format!("{target:?}/{fault:?}");
+            let workers: Vec<ThreadWorker> = ranges
+                .iter()
+                .map(|r| {
+                    ThreadWorker::spawn(exact_over(&data[r.start * DIM..r.end * DIM]), r.start)
+                        .unwrap()
+                })
+                .collect();
+            let (req_script, resp_script) = scripts_for(target, fault);
+            let upstream: SocketAddr = workers[0].addr().parse().unwrap();
+            let proxy = FaultProxy::spawn(upstream, req_script, resp_script).unwrap();
+            let specs = vec![
+                WorkerSpec::fixed("w0", proxy.addr().to_string()),
+                WorkerSpec::fixed("w1", workers[1].addr()),
+                WorkerSpec::fixed("w2", workers[2].addr()),
+            ];
+            // Deadlines well under Delay(700): the delayed frame must trip
+            // the deadline, not stall the query.
+            let mut gw = Gateway::new(specs, dist_cfg(3, 400, 150), Arc::new(Registry::new()));
+            let t0 = Instant::now();
+            let r = gw
+                .search(q, K)
+                .unwrap_or_else(|e| panic!("{case}: gateway returned an error: {e}"));
+            let elapsed = t0.elapsed();
+            assert!(elapsed < Duration::from_secs(5), "{case}: query took {elapsed:?}");
+            if r.partial {
+                assert_eq!(r.shards_ok, 2, "{case}: wrong surviving-shard count");
+                assert_eq!(
+                    bits(&r.neighbors),
+                    expect_survivors,
+                    "{case}: degraded answer is not the survivors' order-exact merge"
+                );
+            } else {
+                assert_eq!(
+                    bits(&r.neighbors),
+                    expect_full,
+                    "{case}: unflagged answer diverged from the unsharded scan"
+                );
+            }
+            // Heal: the script is spent, so a reconnect through the same
+            // proxy must restore the full bitwise answer promptly.
+            let heal0 = Instant::now();
+            let mut healed = false;
+            while heal0.elapsed() < Duration::from_secs(10) {
+                let r2 = gw
+                    .search(q, K)
+                    .unwrap_or_else(|e| panic!("{case}: heal query errored: {e}"));
+                if !r2.partial {
+                    assert_eq!(bits(&r2.neighbors), expect_full, "{case}: healed but inexact");
+                    healed = true;
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            assert!(healed, "{case}: never healed back to a full result");
+        }
+    }
+}
+
+/// Every shard unreachable: the query still returns — a typed degraded
+/// empty result, promptly — instead of an error or a hang.
+#[test]
+fn all_workers_down_is_typed_degraded_not_an_error() {
+    // Bind-then-drop guarantees the ports are dead (connection refused).
+    let dead: Vec<String> = (0..2)
+        .map(|_| {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        })
+        .collect();
+    let specs = dead
+        .iter()
+        .enumerate()
+        .map(|(i, a)| WorkerSpec::fixed(format!("w{i}"), a.clone()))
+        .collect();
+    let mut gw = Gateway::new(specs, dist_cfg(2, 200, 200), Arc::new(Registry::new()));
+    let q = vec![0.5f32; DIM];
+    for _ in 0..2 {
+        let t0 = Instant::now();
+        let r = gw.search(&q, K).unwrap();
+        assert!(r.partial, "all-down must be flagged partial");
+        assert_eq!(r.shards_ok, 0);
+        assert_eq!(r.shards_total, 2);
+        assert!(r.neighbors.is_empty());
+        assert!(t0.elapsed() < Duration::from_secs(5), "all-down query stalled");
+    }
+}
+
+/// Crash/restart under supervision: kill a worker mid-storm, every query
+/// still returns (degraded while down — no lost or hung client), the
+/// supervisor respawns it from its version-5 cold file (mmap reload), and
+/// the next full answer is bitwise identical to the pre-crash one.
+#[test]
+fn worker_crash_mid_storm_respawns_and_heals_bitwise() {
+    let n = 80;
+    let set = synth::generate(DatasetKind::Flickr30k, n, DIM, 17);
+    let data = set.data();
+    let ranges = opdr::index::shard::shard_ranges(n, 2, 1);
+    let dir = tmp_dir("crash");
+    let paths: Vec<PathBuf> = ranges
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            let rows = &data[r.start * DIM..r.end * DIM];
+            let shard =
+                ExactIndex::build(rows, DIM, Metric::SqEuclidean, &StorageSpec::flat(), 7)
+                    .unwrap();
+            let path = dir.join(format!("shard-{i}.opdx"));
+            store::save_index_cold(&shard, &path).unwrap();
+            path
+        })
+        .collect();
+    // The respawn path really is the mmap path: a cold reload serves its
+    // annex mapped in place, not copied to the heap.
+    let probe = store::load_index(&paths[0]).unwrap();
+    assert!(probe.mapped_bytes() > 0, "cold shard file did not mmap on load");
+    drop(probe);
+
+    let registry = Arc::new(Registry::new());
+    // The factory parks each incarnation's stop flag here so the test can
+    // kill worker 0 out from under its supervisor, exactly like a crash.
+    let current_stop: Arc<Mutex<Option<Arc<AtomicBool>>>> = Arc::new(Mutex::new(None));
+    let mut sups = Vec::new();
+    let mut specs = Vec::new();
+    for (i, range) in ranges.iter().enumerate() {
+        let name = format!("w{i}");
+        let cell = AddrCell::new("");
+        let path = paths[i].clone();
+        let start = range.start;
+        let crash_hook = (i == 0).then(|| Arc::clone(&current_stop));
+        let factory = Box::new(move || -> opdr::Result<Box<dyn WorkerHandle>> {
+            let w = ThreadWorker::spawn_from_file(path.to_str().unwrap(), start)?;
+            if let Some(hook) = &crash_hook {
+                *hook.lock().unwrap() = Some(w.stop_flag());
+            }
+            Ok(Box::new(w) as Box<dyn WorkerHandle>)
+        });
+        sups.push(
+            Supervisor::start(name.clone(), Arc::clone(&cell), factory, Arc::clone(&registry))
+                .unwrap(),
+        );
+        specs.push(WorkerSpec { name, addr: cell });
+    }
+    let mut gw = Gateway::new(specs, dist_cfg(2, 500, 500), Arc::clone(&registry));
+
+    let q = set.vector(3);
+    let pre = gw.search(q, K).unwrap();
+    assert!(!pre.partial, "cluster unhealthy before the crash");
+    let pre_bits = bits(&pre.neighbors);
+
+    // Query storm with a crash at iteration 40. Every query must return
+    // Ok — full or partial — with no hung client.
+    let mut partials = 0usize;
+    for i in 0..200 {
+        if i == 40 {
+            let flag = current_stop.lock().unwrap().clone().expect("worker 0 never spawned");
+            flag.store(true, Ordering::Relaxed);
+        }
+        let r = gw.search(set.vector(i % n), K).unwrap();
+        if r.partial {
+            assert_eq!(r.shards_ok, 1, "storm partial lost more than the crashed shard");
+            partials += 1;
+        }
+    }
+    assert!(partials >= 1, "the crash was never observed as degraded serving");
+    assert!(partials < 200, "the cluster never recovered during the storm");
+
+    // Heal: supervised respawn + gateway re-dial must restore the exact
+    // pre-crash answer, bitwise.
+    let heal0 = Instant::now();
+    let mut healed = false;
+    while heal0.elapsed() < Duration::from_secs(10) {
+        let r = gw.search(q, K).unwrap();
+        if !r.partial {
+            assert_eq!(bits(&r.neighbors), pre_bits, "post-respawn answer diverged");
+            healed = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    assert!(healed, "worker never respawned into a healthy cluster");
+    assert!(sups[0].restarts() >= 1, "supervisor recorded no respawn");
+    assert!(
+        registry.counter(RPC_WORKER_RESTARTS, &[("worker", "w0")]).get() >= 1,
+        "restart counter not published"
+    );
+    assert_eq!(
+        registry.gauge(RPC_WORKER_UP, &[("worker", "w0")]).get(),
+        1.0,
+        "liveness gauge not back up"
+    );
+
+    for s in &mut sups {
+        s.shutdown();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -135,3 +135,175 @@ fn reducer_rejects_degenerate_inputs_cleanly() {
     nan_data[5] = f32::NAN;
     assert!(ReducerKind::Pca.build(0).fit_transform(&nan_data, 4, 2).is_err());
 }
+
+// ---------------------------------------------------------------------------
+// RPC transport failure injection (distribution layer): same creed — typed
+// errors and flagged degraded answers, never a hang or silent garbage.
+// ---------------------------------------------------------------------------
+
+fn dist_exact(rows: &[f32], dim: usize) -> std::sync::Arc<dyn opdr::index::AnnIndex> {
+    use opdr::index::{ExactIndex, StorageSpec};
+    std::sync::Arc::new(
+        ExactIndex::build(rows, dim, Metric::SqEuclidean, &StorageSpec::flat(), 7).unwrap(),
+    )
+}
+
+/// A worker socket that accepts connections and then never says a word: the
+/// gateway's per-request deadline must fire (recorded in
+/// `opdr_rpc_deadline_total`, not the generic error counter), the answer
+/// must arrive promptly from the surviving shard flagged `partial`, and no
+/// thread may stay blocked — the second query is just as prompt.
+#[test]
+fn stalled_rpc_worker_socket_hits_the_deadline_and_is_counted() {
+    use opdr::config::DistConfig;
+    use opdr::dist::{Gateway, ThreadWorker, WorkerSpec};
+    use opdr::index::AnnIndex as _;
+    use opdr::telemetry::registry::{RPC_DEADLINE_TOTAL, RPC_PARTIAL_TOTAL};
+    use opdr::telemetry::Registry;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    let dim = 8;
+    let rows = synth::generate(DatasetKind::Flickr30k, 40, dim, 11).data().to_vec();
+    let index = dist_exact(&rows, dim);
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let stalled_addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let holder = std::thread::spawn(move || {
+        listener.set_nonblocking(true).unwrap();
+        let mut held = Vec::new(); // accepted, never answered
+        while !stop2.load(Ordering::Relaxed) {
+            match listener.accept() {
+                Ok((s, _)) => held.push(s),
+                Err(_) => std::thread::sleep(Duration::from_millis(3)),
+            }
+        }
+    });
+
+    let live = ThreadWorker::spawn(Arc::clone(&index), 0).unwrap();
+    let specs = vec![
+        WorkerSpec::fixed("stalled", stalled_addr),
+        WorkerSpec::fixed("live", live.addr()),
+    ];
+    let cfg = DistConfig {
+        workers: 2,
+        listen: "127.0.0.1:0".to_string(),
+        connect_timeout_ms: 150,
+        request_deadline_ms: 150,
+    };
+    let registry = Arc::new(Registry::new());
+    let mut gw = Gateway::new(specs, cfg, Arc::clone(&registry));
+
+    let q = &rows[..dim];
+    let want: Vec<(usize, u32)> =
+        index.search(q, 5).unwrap().iter().map(|nb| (nb.index, nb.distance.to_bits())).collect();
+    for round in 0..2 {
+        let t0 = Instant::now();
+        let res = gw.search(q, 5).unwrap();
+        let took = t0.elapsed();
+        assert!(took < Duration::from_secs(2), "round {round}: stalled socket blocked {took:?}");
+        assert!(res.partial, "round {round}: degraded answer must be flagged");
+        assert_eq!(res.shards_ok, 1, "round {round}");
+        let got: Vec<(usize, u32)> =
+            res.neighbors.iter().map(|nb| (nb.index, nb.distance.to_bits())).collect();
+        assert_eq!(got, want, "round {round}: surviving shard must serve bitwise");
+    }
+    assert!(
+        registry.counter(RPC_DEADLINE_TOTAL, &[("worker", "stalled")]).get() >= 2,
+        "deadline misses must land in opdr_rpc_deadline_total"
+    );
+    assert!(registry.counter(RPC_PARTIAL_TOTAL, &[]).get() >= 2);
+    stop.store(true, Ordering::Relaxed);
+    holder.join().unwrap();
+}
+
+/// A corrupted request frame must come back as a typed `Error` naming the
+/// CRC (or a clean close) — and the worker must drop the desynchronized
+/// connection instead of guessing at frame boundaries.
+#[test]
+fn corrupt_rpc_frame_gets_a_typed_error_then_a_clean_close() {
+    use opdr::dist::ThreadWorker;
+    use opdr::rpc::{Fault, FaultScript, FaultyTransport, Message, PROTOCOL_VERSION};
+    use std::time::{Duration, Instant};
+
+    let dim = 8;
+    let rows = synth::generate(DatasetKind::Flickr30k, 20, dim, 12).data().to_vec();
+    let worker = ThreadWorker::spawn(dist_exact(&rows, dim), 0).unwrap();
+
+    let stream = std::net::TcpStream::connect(worker.addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    // Frame 0 (hello) travels clean; frame 1 (search) gets a payload byte
+    // flipped in flight.
+    let mut t = FaultyTransport::new(stream, FaultScript::fault_at(1, Fault::Corrupt(30)));
+    t.send(7, &Message::Hello { version: PROTOCOL_VERSION }).unwrap();
+    let (rid, ack) = t.recv().unwrap();
+    assert_eq!(rid, 7);
+    assert!(matches!(ack, Message::HelloAck { .. }), "got {}", ack.kind_name());
+
+    t.send(8, &Message::Search { k: 3, query: vec![0.25; dim] }).unwrap();
+    match t.recv() {
+        Ok((_, Message::Error { message })) => {
+            assert!(message.contains("crc"), "typed reason expected, got: {message}");
+        }
+        Ok((_, other)) => panic!("corrupted frame answered with {}", other.kind_name()),
+        Err(_) => {} // closing before the best-effort error write is also legal
+    }
+    // The connection is dead — promptly, not after a hang.
+    let t0 = Instant::now();
+    let _ = t.send(9, &Message::Ping);
+    assert!(t.recv().is_err(), "worker must drop a desynchronized connection");
+    assert!(t0.elapsed() < Duration::from_secs(5));
+}
+
+/// A frame truncated mid-payload kills that connection only: the client
+/// sees a prompt close (no resync guessing), and the worker keeps serving
+/// fresh connections bitwise-correctly.
+#[test]
+fn truncated_rpc_frame_closes_the_connection_not_the_worker() {
+    use opdr::dist::ThreadWorker;
+    use opdr::index::AnnIndex as _;
+    use opdr::rpc::{Fault, FaultScript, FaultyTransport, FramedTcp, Message, PROTOCOL_VERSION};
+    use std::time::Duration;
+
+    let dim = 8;
+    let rows = synth::generate(DatasetKind::Flickr30k, 20, dim, 13).data().to_vec();
+    let index = dist_exact(&rows, dim);
+    let worker = ThreadWorker::spawn(std::sync::Arc::clone(&index), 0).unwrap();
+
+    let stream = std::net::TcpStream::connect(worker.addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut t = FaultyTransport::new(stream, FaultScript::fault_at(1, Fault::Truncate(30)));
+    t.send(1, &Message::Hello { version: PROTOCOL_VERSION }).unwrap();
+    assert!(matches!(t.recv().unwrap().1, Message::HelloAck { .. }));
+    // Only the first 30 of the search frame's bytes leave; sever the write
+    // half so the worker sees EOF mid-frame instead of a stall.
+    t.send(2, &Message::Search { k: 3, query: vec![0.5; dim] }).unwrap();
+    t.inner().shutdown(std::net::Shutdown::Write).unwrap();
+    assert!(t.recv().is_err(), "truncated frame cannot produce a reply");
+
+    // The worker itself is unharmed: a fresh connection serves bitwise.
+    let stream = std::net::TcpStream::connect(worker.addr()).unwrap();
+    let mut conn = FramedTcp::new(stream);
+    conn.set_deadline(Duration::from_secs(5)).unwrap();
+    conn.send(1, &Message::Hello { version: PROTOCOL_VERSION }).unwrap();
+    assert!(matches!(conn.recv().unwrap().1, Message::HelloAck { .. }));
+    let q = &rows[..dim];
+    conn.send(2, &Message::Search { k: 3, query: q.to_vec() }).unwrap();
+    match conn.recv().unwrap() {
+        (2, Message::SearchOk { neighbors }) => {
+            let want: Vec<(u64, u32)> = index
+                .search(q, 3)
+                .unwrap()
+                .iter()
+                .map(|nb| (nb.index as u64, nb.distance.to_bits()))
+                .collect();
+            let got: Vec<(u64, u32)> =
+                neighbors.iter().map(|&(id, d)| (id, d.to_bits())).collect();
+            assert_eq!(got, want);
+        }
+        (rid, other) => panic!("expected search-ok rid 2, got {} rid {rid}", other.kind_name()),
+    }
+}

@@ -998,3 +998,226 @@ fn prop_store_roundtrip() {
         },
     );
 }
+
+/// PR 7 satellite — every RPC message round-trips through the frame codec
+/// bit-exactly (NaN payloads included), and the decoder survives adversarial
+/// mutation of any frame: a huge declared length fails before allocation, a
+/// lying under-cap length ends in the typed truncation error instead of an
+/// OOM, any flipped payload byte fails the CRC, bad magic / unknown kind /
+/// trailing bytes are typed errors, and truncation at every boundary never
+/// panics.
+#[test]
+fn prop_rpc_frame_roundtrip() {
+    use opdr::rpc::{decode_frame, encode_frame, Message, HEADER_BYTES, MAX_PAYLOAD_BYTES};
+    forall(
+        PropConfig { cases: 60, seed: 7171 },
+        |rng| {
+            let rid = rng.next_u64();
+            let msg = match rng.below(7) {
+                0 => Message::Hello { version: rng.next_u64() as u32 },
+                1 => Message::HelloAck {
+                    version: rng.next_u64() as u32,
+                    start: rng.next_u64(),
+                    len: rng.next_u64(),
+                    dim: rng.next_u64() as u32,
+                },
+                2 => {
+                    let n = rng.below(64);
+                    let mut query = gen::vec_f32(rng, n);
+                    if n > 0 && rng.below(3) == 0 {
+                        // A NaN with an arbitrary mantissa must survive the
+                        // wire bit-exactly (the merge compares raw bits).
+                        let at = rng.below(n);
+                        query[at] =
+                            f32::from_bits(0x7FC0_0000 | (rng.next_u64() as u32 & 0x003F_FFFF));
+                    }
+                    Message::Search { k: rng.below(1000) as u32, query }
+                }
+                3 => Message::SearchOk {
+                    neighbors: (0..rng.below(48))
+                        .map(|_| (rng.next_u64(), f32::from_bits(rng.next_u64() as u32)))
+                        .collect(),
+                },
+                4 => Message::Error {
+                    message: (0..rng.below(40))
+                        .map(|_| char::from(b'a' + rng.below(26) as u8))
+                        .collect(),
+                },
+                5 => Message::Ping,
+                _ => Message::Pong,
+            };
+            (rid, msg, rng.below(512), rng.below(512))
+        },
+        |(rid, msg, cut, flip)| {
+            let bytes = encode_frame(*rid, msg).map_err(|e| e.to_string())?;
+            let (got_rid, decoded) = decode_frame(&bytes).map_err(|e| e.to_string())?;
+            if got_rid != *rid {
+                return Err(format!("rid {got_rid} != {rid}"));
+            }
+            let re = encode_frame(got_rid, &decoded).map_err(|e| e.to_string())?;
+            if re != bytes {
+                return Err(format!("{}: re-encode differs from the original", msg.kind_name()));
+            }
+            // Truncation at both edges and a random boundary: typed errors.
+            for cut in [0, bytes.len() - 1, cut % bytes.len()] {
+                if decode_frame(&bytes[..cut]).is_ok() {
+                    return Err(format!("truncated frame (cut at {cut}) decoded"));
+                }
+            }
+            // Over-cap length field: refused before any allocation.
+            let mut huge = bytes.clone();
+            huge[13..17].copy_from_slice(&u32::MAX.to_le_bytes());
+            let err = decode_frame(&huge).err().ok_or("over-cap length decoded")?;
+            if !err.to_string().contains("byte cap") {
+                return Err(format!("over-cap length: wrong error: {err}"));
+            }
+            // Under-cap but lying length field: bounded read hits EOF.
+            let mut lying = bytes.clone();
+            lying[13..17].copy_from_slice(&((MAX_PAYLOAD_BYTES - 1) as u32).to_le_bytes());
+            if decode_frame(&lying).is_ok() {
+                return Err("lying length field decoded".into());
+            }
+            // Any flipped payload byte fails the CRC (checked before the
+            // payload is parsed, so corruption is never misread as data).
+            let payload_len = bytes.len() - HEADER_BYTES;
+            if payload_len > 0 {
+                let mut corrupt = bytes.clone();
+                corrupt[HEADER_BYTES + flip % payload_len] ^= 0x40;
+                let err = decode_frame(&corrupt).err().ok_or("corrupt payload decoded")?;
+                if !err.to_string().contains("crc") {
+                    return Err(format!("corruption: wrong error: {err}"));
+                }
+            }
+            // Bad magic, unknown kind and trailing bytes are each typed.
+            let mut bad_magic = bytes.clone();
+            bad_magic[0] ^= 0x01;
+            let err = decode_frame(&bad_magic).err().ok_or("bad magic decoded")?;
+            if !err.to_string().contains("magic") {
+                return Err("bad magic: wrong error".into());
+            }
+            let mut bad_kind = bytes.clone();
+            bad_kind[4] = 0;
+            let err = decode_frame(&bad_kind).err().ok_or("bad kind decoded")?;
+            if !err.to_string().contains("kind") {
+                return Err("bad kind: wrong error".into());
+            }
+            let mut trailing = bytes.clone();
+            trailing.push(0);
+            if decode_frame(&trailing).is_ok() {
+                return Err("trailing byte after the frame decoded".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// PR 7 tentpole proof — a [`opdr::dist::Gateway`] fanning out over real
+/// loopback-TCP shard workers returns **bit-identical** neighbors to the
+/// in-process sharded search (itself proven equal to the unsharded index by
+/// `prop_sharded_equals_unsharded_at_exhaustive_params`) for every substrate
+/// × storage at exhaustive parameters — including duplicate rows
+/// (cross-shard ties), NaN queries (both sides empty) and k ≥ N. The
+/// workers serve the *same* leaf segments via
+/// [`opdr::index::ShardedIndex::segment`], so even segment-local compressed
+/// codebooks travel bitwise: distances cross the wire as raw f32 bits.
+#[test]
+fn prop_distributed_search_is_order_exact() {
+    use opdr::config::{DistConfig, IndexPolicy};
+    use opdr::dist::{Gateway, ThreadWorker, WorkerSpec};
+    use opdr::index::{build_index, AnnIndex as _, IndexKind};
+    use opdr::telemetry::Registry;
+    use std::sync::Arc;
+    forall(
+        PropConfig { cases: 6, seed: 8181 },
+        |rng| {
+            let (mut data, dim, m) = gen::embedding_block(rng, 8, 36, 2, 8);
+            // Duplicate rows: (distance, index) tie-breaking must survive
+            // the remap through worker-global ids.
+            for i in 1..m {
+                if rng.below(4) == 0 {
+                    let src = rng.below(i);
+                    data.copy_within(src * dim..(src + 1) * dim, i * dim);
+                }
+            }
+            let s = 2 + rng.below(3);
+            let k = rng.below(m + 3); // 0, < m and ≥ m all exercised
+            let metric = METRICS[rng.below(4)];
+            let q = if rng.below(6) == 0 {
+                vec![f32::NAN; dim]
+            } else {
+                gen::vec_f32(rng, dim)
+            };
+            let storage = rng.below(3); // flat | sq8 | pq at full depth
+            (data, dim, m, s, k, metric, q, storage)
+        },
+        |(data, dim, m, s, k, metric, q, storage)| {
+            let n = *m;
+            for kind in [IndexKind::Exact, IndexKind::Ivf, IndexKind::Hnsw] {
+                let policy = IndexPolicy {
+                    kind,
+                    exact_threshold: 0,
+                    shards: *s,
+                    shard_min_vectors: 1,
+                    ivf_nlist: n,
+                    ivf_nprobe: n,
+                    hnsw_m: n.max(2),
+                    hnsw_ef_search: 4 * n,
+                    sq8: *storage == 1,
+                    pq: *storage == 2,
+                    pq_m: 1, // one subquantizer: valid at any (odd) dim
+                    rerank_depth: n + 8,
+                    ..Default::default()
+                };
+                let built = build_index(data, *dim, *metric, &policy, 5)
+                    .map_err(|e| e.to_string())?;
+                let sharded = built
+                    .as_sharded()
+                    .ok_or_else(|| format!("{}: expected a sharded index", kind.name()))?;
+                // Serve the exact same leaf segments over loopback TCP.
+                let mut workers = Vec::new();
+                let mut specs = Vec::new();
+                for sh in 0..sharded.num_shards() {
+                    let w = ThreadWorker::spawn(
+                        sharded.segment(sh),
+                        sharded.shard_range(sh).start,
+                    )
+                    .map_err(|e| e.to_string())?;
+                    specs.push(WorkerSpec::fixed(format!("w{sh}"), w.addr()));
+                    workers.push(w);
+                }
+                let cfg = DistConfig {
+                    workers: workers.len(),
+                    listen: "127.0.0.1:0".to_string(),
+                    connect_timeout_ms: 2000,
+                    request_deadline_ms: 4000,
+                };
+                let mut gw = Gateway::new(specs, cfg, Arc::new(Registry::new()));
+                let res = gw.search(q, *k).map_err(|e| e.to_string())?;
+                if res.partial {
+                    return Err(format!("{}: healthy cluster answered partial", kind.name()));
+                }
+                let got: Vec<(usize, u32)> = res
+                    .neighbors
+                    .iter()
+                    .map(|nb| (nb.index, nb.distance.to_bits()))
+                    .collect();
+                let want: Vec<(usize, u32)> = built
+                    .search(q, *k)
+                    .map_err(|e| e.to_string())?
+                    .iter()
+                    .map(|nb| (nb.index, nb.distance.to_bits()))
+                    .collect();
+                if got != want {
+                    return Err(format!(
+                        "{} S={s} storage={storage}: gateway {got:?} != in-process {want:?}",
+                        kind.name()
+                    ));
+                }
+                for mut w in workers {
+                    w.kill();
+                }
+            }
+            Ok(())
+        },
+    );
+}
