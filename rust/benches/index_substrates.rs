@@ -53,6 +53,13 @@ fn main() {
         run_dist_axis();
         return;
     }
+    // Same deal for the observability-overhead axis (`-- --obs-only`):
+    // tracing + federation enabled vs disabled on an otherwise identical
+    // cluster, CI-gated to cost at most 10% QPS.
+    if std::env::args().any(|a| a == "--obs-only") {
+        run_obs_axis();
+        return;
+    }
     let set = synth::generate(DatasetKind::Flickr30k, N + NQ, DIM, 42);
     let base_full = &set.data()[..N * DIM];
     let query_full = &set.data()[N * DIM..];
@@ -712,6 +719,7 @@ fn run_dist_axis() {
             listen: "127.0.0.1:0".to_string(),
             connect_timeout_ms: 2000,
             request_deadline_ms: 5000,
+            ..Default::default()
         };
         let mut gw = Gateway::new(specs, cfg, Arc::new(Registry::new()));
         // Order-exactness spot check before timing anything: the gateway
@@ -769,5 +777,138 @@ fn run_dist_axis() {
          round-trip per shard, so QPS climbs toward the worker count until\n\
          the constant RPC cost dominates — the gated floor (4 workers >=\n\
          1.5x direct) is the point of the distribution layer."
+    );
+
+    run_obs_axis();
+}
+
+// -------------------------------------------------------------------
+// Observability-overhead axis: an identical 2-worker gateway cluster
+// benched with tracing OFF (`tracing = false` — v1-shaped frames, no
+// trace tails, nothing recorded) vs tracing ON (default: trace ids on
+// every query, stage histograms, flight recorder, plus one full
+// MetricsPull federation scrape per query sweep). Results land in
+// BENCH_obs.json; the floor is CI-gated: enabled must keep >= 0.9x the
+// disabled QPS, i.e. cluster-wide observability may cost at most 10%.
+// -------------------------------------------------------------------
+fn run_obs_axis() {
+    use opdr::config::DistConfig;
+    use opdr::dist::{Gateway, ThreadWorker, WorkerSpec};
+    use opdr::index::shard::shard_ranges;
+    use opdr::index::{ExactIndex, StorageSpec};
+    use opdr::telemetry::Registry;
+
+    const FLOOR_RATIO: f64 = 0.9;
+    let n = 32_000usize;
+    let dim = 64usize;
+    let nq = 64usize;
+    let workers = 2usize;
+    let set = synth::generate(DatasetKind::Flickr30k, n + nq, dim, 42);
+    let base = &set.data()[..n * dim];
+    let queries = &set.data()[n * dim..];
+    section(&format!(
+        "observability overhead over {n} vectors at dim {dim}: tracing+federation on vs off \
+         ({workers} workers)"
+    ));
+
+    let bench_qps = |f: &mut dyn FnMut()| -> f64 {
+        f(); // warmup sweep
+        let mut best = 0.0f64;
+        for _ in 0..5 {
+            let sw = Stopwatch::start();
+            f();
+            best = best.max(nq as f64 / sw.elapsed_secs().max(1e-9));
+        }
+        best
+    };
+
+    // One cluster per mode so the enabled run's recorder/histogram state
+    // never leaks into the baseline.
+    let mut run_mode = |tracing: bool| -> f64 {
+        let ranges = shard_ranges(n, workers, 1);
+        let mut handles = Vec::new();
+        let mut specs = Vec::new();
+        for (i, r) in ranges.iter().enumerate() {
+            let leaf: Arc<dyn AnnIndex> = Arc::new(
+                ExactIndex::build(
+                    &base[r.start * dim..r.end * dim],
+                    dim,
+                    METRIC,
+                    &StorageSpec::flat(),
+                    9,
+                )
+                .expect("build shard"),
+            );
+            let w = ThreadWorker::spawn(leaf, r.start).expect("spawn worker");
+            specs.push(WorkerSpec::fixed(format!("w{i}"), w.addr()));
+            handles.push(w);
+        }
+        let cfg = DistConfig {
+            workers,
+            connect_timeout_ms: 2000,
+            request_deadline_ms: 5000,
+            tracing,
+            ..Default::default()
+        };
+        let mut gw = Gateway::new(specs, cfg, Arc::new(Registry::new()));
+        let qps = bench_qps(&mut || {
+            for qi in 0..nq {
+                let res = gw.search(&queries[qi * dim..(qi + 1) * dim], K).unwrap();
+                assert!(!res.partial, "healthy bench cluster answered partial");
+                std::hint::black_box(res.neighbors.len());
+            }
+            if tracing {
+                // The enabled mode pays for the whole observability
+                // surface, federation scrape included.
+                std::hint::black_box(gw.cluster_metrics().len());
+            }
+        });
+        if tracing {
+            assert!(
+                gw.recorder().recorded_total() > 0,
+                "enabled mode benched without recording anything"
+            );
+        }
+        for mut w in handles {
+            w.kill();
+        }
+        qps
+    };
+
+    let disabled_qps = run_mode(false);
+    let enabled_qps = run_mode(true);
+    let ratio = enabled_qps / disabled_qps.max(1e-9);
+    let mut obs_table = Table::new(&["mode", "qps", "vs disabled"]);
+    obs_table.row(&["tracing off".into(), format!("{disabled_qps:.0}"), "1.00x".into()]);
+    obs_table.row(&[
+        "tracing+federation".into(),
+        format!("{enabled_qps:.0}"),
+        format!("{ratio:.2}x"),
+    ]);
+    println!("{}", obs_table.render());
+
+    let json = format!(
+        "{{\"bench\":\"index_obs\",\"n\":{n},\"dim\":{dim},\"k\":{K},\"workers\":{workers},\
+         \"floor_ratio\":{FLOOR_RATIO},\"disabled_qps\":{disabled_qps:.1},\
+         \"enabled_qps\":{enabled_qps:.1},\"ratio\":{ratio:.4}}}\n"
+    );
+    std::fs::create_dir_all("bench_out").expect("bench_out dir");
+    std::fs::write("bench_out/BENCH_obs.json", json).expect("write BENCH_obs.json");
+    println!("wrote bench_out/BENCH_obs.json");
+
+    // Acceptance floor: full observability — trace tails on every frame,
+    // four stage histograms per shard per query, the recorder ring, and a
+    // federation scrape per sweep — may cost at most 10% QPS.
+    assert!(
+        enabled_qps >= FLOOR_RATIO * disabled_qps,
+        "observability-enabled {enabled_qps:.0} qps < {FLOOR_RATIO}x disabled {disabled_qps:.0} qps"
+    );
+
+    println!(
+        "\nreading: both rows are the same 2-worker scatter-gather cluster; the\n\
+         enabled row adds the 8-byte request tail, the 40-byte response tail,\n\
+         per-stage histogram records on both sides, a flight-recorder push per\n\
+         query and one MetricsPull federation scrape per sweep. The gated\n\
+         floor (>= 0.9x) keeps always-on cluster observability honest."
     );
 }

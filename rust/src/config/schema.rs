@@ -725,6 +725,17 @@ pub struct DistConfig {
     /// Per-query per-shard RPC deadline; a shard that misses it degrades
     /// the answer to `partial = true` instead of stalling the query.
     pub request_deadline_ms: u64,
+    /// Cluster observability master switch: trace-id propagation on the v2
+    /// tails, per-shard stage histograms, and the flight recorder. Off, the
+    /// gateway sends v1-shaped frames (no tails) — the bench baseline for
+    /// the observability-overhead floor.
+    pub tracing: bool,
+    /// Flight-recorder ring capacity (complete per-query span timelines
+    /// held for the `SlowQueries` dump).
+    pub recorder_capacity: usize,
+    /// End-to-end gateway time at or above which a query is pinned in the
+    /// flight recorder (partial queries pin regardless).
+    pub slow_query_ms: u64,
 }
 
 impl Default for DistConfig {
@@ -734,6 +745,9 @@ impl Default for DistConfig {
             listen: "127.0.0.1:0".to_string(),
             connect_timeout_ms: 1000,
             request_deadline_ms: 2000,
+            tracing: true,
+            recorder_capacity: 128,
+            slow_query_ms: 250,
         }
     }
 }
@@ -768,6 +782,15 @@ impl DistConfig {
                     "request_deadline_ms" => {
                         cfg.request_deadline_ms = pos_int(val, "dist", key)? as u64
                     }
+                    "tracing" => {
+                        cfg.tracing = val
+                            .as_bool()
+                            .ok_or_else(|| OpdrError::config("dist.tracing must be a bool"))?
+                    }
+                    "recorder_capacity" => {
+                        cfg.recorder_capacity = pos_int(val, "dist", key)?
+                    }
+                    "slow_query_ms" => cfg.slow_query_ms = pos_int(val, "dist", key)? as u64,
                     other => {
                         return Err(OpdrError::config(format!("dist: unknown key `{other}`")))
                     }
@@ -802,6 +825,12 @@ impl DistConfig {
             }
             if self.request_deadline_ms == 0 {
                 return Err(OpdrError::config("dist.request_deadline_ms must be >= 1"));
+            }
+            if self.recorder_capacity == 0 {
+                return Err(OpdrError::config("dist.recorder_capacity must be >= 1"));
+            }
+            if self.slow_query_ms == 0 {
+                return Err(OpdrError::config("dist.slow_query_ms must be >= 1"));
             }
         }
         Ok(())
@@ -1094,6 +1123,30 @@ k = 5
         assert_eq!(cfg.workers, 3);
         assert_eq!(cfg.connect_timeout_ms, 250);
         assert_eq!(cfg.request_deadline_ms, 500);
+        // Observability defaults: tracing on, a real ring, a sane slow bar.
+        assert!(cfg.tracing);
+        assert_eq!(cfg.recorder_capacity, 128);
+        assert_eq!(cfg.slow_query_ms, 250);
+    }
+
+    #[test]
+    fn dist_observability_keys() {
+        let cfg = DistConfig::from_toml_str(
+            "[dist]\nworkers = 2\ntracing = false\nrecorder_capacity = 16\nslow_query_ms = 40\n",
+        )
+        .unwrap();
+        assert!(!cfg.tracing);
+        assert_eq!(cfg.recorder_capacity, 16);
+        assert_eq!(cfg.slow_query_ms, 40);
+        // Dependent-key rule applies to the new keys too.
+        let e = DistConfig::from_toml_str("[dist]\ntracing = false\n").unwrap_err().to_string();
+        assert!(e.contains("requires workers"), "{e}");
+        // Type and range errors are rejected.
+        assert!(DistConfig::from_toml_str("[dist]\nworkers = 1\ntracing = 1\n").is_err());
+        assert!(
+            DistConfig::from_toml_str("[dist]\nworkers = 1\nrecorder_capacity = 0\n").is_err()
+        );
+        assert!(DistConfig::from_toml_str("[dist]\nworkers = 1\nslow_query_ms = 0\n").is_err());
     }
 
     #[test]

@@ -55,11 +55,24 @@
 //! | `opdr_rpc_request_duration_seconds` | summary | `worker` | gateway-side RPC round-trip latency |
 //! | `opdr_rpc_worker_up` | gauge | `worker` | worker liveness (1 healthy, 0 down) |
 //! | `opdr_rpc_worker_restarts_total` | counter | `worker` | supervisor respawns of a crashed worker |
+//! | `opdr_rpc_shard_stage_seconds` | summary | (`worker`, `stage`) | worker-reported per-stage shard timing (`queue_wait`, `scan`, `rerank`, `merge`) carried back on the protocol-v2 trace tail |
+//! | `opdr_rpc_scrape_errors_total` | counter | `worker` | failed `MetricsPull` federation scrapes |
+//! | `opdr_worker_queries_total` | counter | — (worker-side) | queries a shard worker served; federates with a `worker` label |
+//! | `opdr_worker_query_duration_seconds` | summary | — (worker-side) | worker-side query latency; federates with a `worker` label |
 //!
 //! Histograms render as summaries with `quantile="0.5"`, `"0.99"`, `"0.999"`
 //! samples in seconds plus `_sum`/`_count`. The topology gauges refresh on
 //! each `Stats`/`Metrics` call; the probe gauges publish asynchronously from
 //! the probe thread ([`crate::telemetry::RecallProbe`]).
+//!
+//! With a distributed gateway attached ([`Coordinator::attach_dist`]) two
+//! more verbs exist: `ClusterMetrics` renders the **federated** cluster
+//! exposition — every worker's registry scraped over `MetricsPull`, each
+//! sample emitted once labeled `worker="<name>"` and once merged into the
+//! unlabeled aggregate, plus the gateway's own series — and `SlowQueries`
+//! dumps the slow-query flight recorder
+//! ([`crate::telemetry::FlightRecorder`]): the last K query timelines with
+//! trace ids, per-shard stage timings and fault dispositions.
 
 pub mod batcher;
 pub mod server;

@@ -3,6 +3,7 @@
 use crate::config::ServeConfig;
 use crate::coordinator::batcher::{collect_batch, BatchPolicy, CollectOutcome};
 use crate::coordinator::state::Collections;
+use crate::dist::Gateway;
 use crate::error::{OpdrError, Result};
 use crate::index::AnnIndex as _;
 use crate::knn::Neighbor;
@@ -89,6 +90,9 @@ enum Request {
         submitted: Stopwatch,
     },
     Admin(AdminOp, Sender<Result<String>>),
+    /// Attach a distributed gateway: enables the `ClusterMetrics` and
+    /// `SlowQueries` verbs for this coordinator.
+    AttachDist(Arc<Mutex<Gateway>>),
     Shutdown,
 }
 
@@ -101,6 +105,8 @@ enum AdminOp {
     LoadIndex { collection: String, path: String },
     Stats,
     Metrics,
+    ClusterMetrics,
+    SlowQueries,
 }
 
 /// `(verb, collection)` labels for an admin op — feeds the per-verb request
@@ -117,6 +123,8 @@ fn op_meta(op: &AdminOp) -> (&'static str, &str) {
         AdminOp::LoadIndex { collection, .. } => ("load_index", collection),
         AdminOp::Stats => ("stats", "_admin"),
         AdminOp::Metrics => ("metrics", "_admin"),
+        AdminOp::ClusterMetrics => ("cluster_metrics", "_admin"),
+        AdminOp::SlowQueries => ("slow_queries", "_admin"),
     }
 }
 
@@ -231,6 +239,30 @@ impl Coordinator {
         self.admin(AdminOp::Metrics)
     }
 
+    /// Attach a distributed gateway, enabling [`Coordinator::cluster_metrics`]
+    /// and [`Coordinator::slow_queries`]. The gateway is shared (the caller
+    /// keeps serving queries through its own handle); admin-side scrapes and
+    /// dumps lock it only for their own duration.
+    pub fn attach_dist(&self, gateway: Arc<Mutex<Gateway>>) -> Result<()> {
+        self.tx
+            .send(Request::AttachDist(gateway))
+            .map_err(|_| OpdrError::coordinator("coordinator stopped"))
+    }
+
+    /// Federated cluster exposition: every worker's registry scraped over
+    /// `MetricsPull` and rendered once `worker="<name>"`-labeled and once
+    /// merged into the unlabeled aggregate, plus the gateway's own series.
+    /// Requires [`Coordinator::attach_dist`].
+    pub fn cluster_metrics(&self) -> Result<String> {
+        self.admin(AdminOp::ClusterMetrics)
+    }
+
+    /// The slow-query flight recorder's dump (trace ids, per-shard stage
+    /// timings, fault dispositions). Requires [`Coordinator::attach_dist`].
+    pub fn slow_queries(&self) -> Result<String> {
+        self.admin(AdminOp::SlowQueries)
+    }
+
     /// Submit a search; blocks for the result. Fails fast with a
     /// backpressure error when the queue is full.
     pub fn search(&self, collection: &str, query: Vec<f32>, k: usize) -> Result<SearchResult> {
@@ -324,6 +356,8 @@ fn scheduler_loop(rx: Receiver<Request>, cfg: ServeConfig, metrics: Arc<Metrics>
         max_wait: Duration::from_millis(cfg.max_wait_ms),
     };
     let mut batch: Vec<Request> = Vec::with_capacity(cfg.max_batch);
+    // Distributed gateway attachment (ClusterMetrics / SlowQueries verbs).
+    let mut dist: Option<Arc<Mutex<Gateway>>> = None;
 
     loop {
         match collect_batch(&rx, policy, &mut batch) {
@@ -351,9 +385,19 @@ fn scheduler_loop(rx: Receiver<Request>, cfg: ServeConfig, metrics: Arc<Metrics>
                     metrics.verb_counter(verb, coll).inc();
                     let h = metrics.verb_histogram(verb, coll);
                     let sw = Stopwatch::start();
-                    handle_admin(op, &mut collections, &cfg, &metrics, &build_pool, builds, resp);
+                    handle_admin(
+                        op,
+                        &mut collections,
+                        &cfg,
+                        &metrics,
+                        &build_pool,
+                        builds,
+                        dist.as_ref(),
+                        resp,
+                    );
                     h.record(sw.elapsed());
                 }
+                Request::AttachDist(gw) => dist = Some(gw),
                 s @ Request::Search { .. } => searches.push(s),
             }
         }
@@ -375,6 +419,7 @@ fn scheduler_loop(rx: Receiver<Request>, cfg: ServeConfig, metrics: Arc<Metrics>
 /// scheduler keeps draining search batches at full pool parallelism (the
 /// per-collection `builds_in_flight` tracker feeds stats and the deferred
 /// responses).
+#[allow(clippy::too_many_arguments)]
 fn handle_admin(
     op: AdminOp,
     collections: &mut Collections,
@@ -382,6 +427,7 @@ fn handle_admin(
     metrics: &Metrics,
     build_pool: &ThreadPool,
     builds_in_flight: &Arc<BuildTracker>,
+    dist: Option<&Arc<Mutex<Gateway>>>,
     resp: Sender<Result<String>>,
 ) {
     match op {
@@ -462,8 +508,14 @@ fn handle_admin(
             }
         }
         other => {
-            let _ =
-                resp.send(handle_admin_sync(other, collections, cfg, metrics, builds_in_flight));
+            let _ = resp.send(handle_admin_sync(
+                other,
+                collections,
+                cfg,
+                metrics,
+                builds_in_flight,
+                dist,
+            ));
         }
     }
 }
@@ -556,6 +608,7 @@ fn handle_admin_sync(
     cfg: &ServeConfig,
     metrics: &Metrics,
     builds: &BuildTracker,
+    dist: Option<&Arc<Mutex<Gateway>>>,
 ) -> Result<String> {
     match op {
         AdminOp::CreateCollection { name, dim, metric } => {
@@ -647,6 +700,19 @@ fn handle_admin_sync(
                 refresh_collection_gauges(&name, collections.get(&name)?, metrics);
             }
             Ok(metrics.registry.render())
+        }
+        AdminOp::ClusterMetrics => {
+            let gw = dist.ok_or_else(|| {
+                OpdrError::config("cluster_metrics: no distributed gateway attached")
+            })?;
+            Ok(gw.lock().unwrap_or_else(|p| p.into_inner()).cluster_metrics())
+        }
+        AdminOp::SlowQueries => {
+            let gw = dist.ok_or_else(|| {
+                OpdrError::config("slow_queries: no distributed gateway attached")
+            })?;
+            let dump = gw.lock().unwrap_or_else(|p| p.into_inner()).recorder().dump();
+            Ok(dump)
         }
     }
 }

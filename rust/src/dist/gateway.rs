@@ -23,18 +23,47 @@
 //! desynchronized) and re-dialed on the next query. Failures are never
 //! silent: every outcome lands in the `opdr_rpc_*` metrics and the
 //! per-worker `opdr_rpc_worker_up` liveness gauge.
+//!
+//! ## Cluster-wide observability
+//!
+//! When [`DistConfig::tracing`] is on (the default) the gateway assigns
+//! every query a trace id and carries it to each shard on the protocol-v2
+//! `Search` tail; the `SearchOk` tail brings back the worker's
+//! queue-wait/scan/rerank/merge stage splits, which land in the
+//! `opdr_rpc_shard_stage_seconds{worker,stage}` histograms and — together
+//! with the gateway-observed round trip, fault disposition, and merged
+//! result checksum — in the [`FlightRecorder`] ring behind the
+//! `SlowQueries` admin verb. A v1 worker (negotiated protocol < 2) simply
+//! never sees a tail and never returns one; traces degrade to
+//! gateway-side timing only.
+//!
+//! [`Gateway::cluster_metrics`] federates metrics: it scrapes every
+//! worker's registry over `MetricsPull`/`MetricsText` (the lossless
+//! snapshot encoding, not the rendered exposition, so histogram buckets
+//! merge exactly) and renders one cluster exposition holding each sample
+//! twice — once labeled `worker="<name>"` and once merged into the
+//! unlabeled aggregate — plus the gateway's own registry. A dead worker
+//! costs `opdr_rpc_worker_up 0` and an `opdr_rpc_scrape_errors_total`
+//! tick, never a failed scrape.
 
 use crate::config::DistConfig;
 use crate::error::{OpdrError, Result};
 use crate::knn::{merge_top_k, Neighbor};
-use crate::rpc::{is_timeout, FramedTcp, Message, PROTOCOL_VERSION};
+use crate::metrics::Metric;
+use crate::rpc::{
+    crc32, is_timeout, version_supported, FramedTcp, Message, WireTrace, PROTOCOL_VERSION,
+};
 use crate::telemetry::registry::{
     RPC_DEADLINE_TOTAL, RPC_ERRORS_TOTAL, RPC_PARTIAL_TOTAL, RPC_REQUESTS_TOTAL,
-    RPC_REQUEST_DURATION, RPC_WORKER_UP,
+    RPC_REQUEST_DURATION, RPC_SCRAPE_ERRORS_TOTAL, RPC_SHARD_STAGE_DURATION, RPC_WORKER_UP,
 };
-use crate::telemetry::{Counter, Gauge, LatencyHistogram, Registry};
+use crate::telemetry::{
+    Counter, FlightRecorder, Gauge, LatencyHistogram, ProbeJob, QueryRecord, RecallProbe,
+    Registry, ShardTiming,
+};
 use crate::util::timer::Stopwatch;
 use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -109,30 +138,58 @@ pub struct ShardInfo {
     pub dim: u32,
 }
 
+/// Worker-reported stage names, in timeline order. Shared with the module
+/// docs' metrics table and the flight-recorder dump.
+const STAGES: [&str; 4] = ["queue_wait", "scan", "rerank", "merge"];
+
+/// One scatter leg's full outcome: the hits (or typed failure), the
+/// gateway-observed round trip, and the worker's v2 trace tail when the
+/// negotiated protocol carried one.
+struct ShardOutcome {
+    hits: Result<Vec<(usize, f32)>>,
+    rtt: Duration,
+    wire: Option<WireTrace>,
+}
+
 struct Slot {
     spec: WorkerSpec,
     conn: Option<FramedTcp>,
     next_request_id: u64,
+    /// Protocol version agreed at handshake (`min(worker, gateway)`).
+    negotiated: u32,
     info: ShardInfo,
     requests: Arc<Counter>,
     errors: Arc<Counter>,
     deadlines: Arc<Counter>,
+    scrape_errors: Arc<Counter>,
     up: Arc<Gauge>,
     latency: Arc<LatencyHistogram>,
+    /// `opdr_rpc_shard_stage_seconds{worker,stage}`, indexed like
+    /// [`STAGES`].
+    stage_latency: [Arc<LatencyHistogram>; 4],
 }
 
 impl Slot {
     fn new(spec: WorkerSpec, registry: &Registry) -> Slot {
         let labels = [("worker", spec.name.as_str())];
+        let stage_latency = STAGES.map(|stage| {
+            registry.histogram(
+                RPC_SHARD_STAGE_DURATION,
+                &[("worker", spec.name.as_str()), ("stage", stage)],
+            )
+        });
         Slot {
             requests: registry.counter(RPC_REQUESTS_TOTAL, &labels),
             errors: registry.counter(RPC_ERRORS_TOTAL, &labels),
             deadlines: registry.counter(RPC_DEADLINE_TOTAL, &labels),
+            scrape_errors: registry.counter(RPC_SCRAPE_ERRORS_TOTAL, &labels),
             up: registry.gauge(RPC_WORKER_UP, &labels),
             latency: registry.histogram(RPC_REQUEST_DURATION, &labels),
+            stage_latency,
             spec,
             conn: None,
             next_request_id: 1,
+            negotiated: PROTOCOL_VERSION,
             info: ShardInfo::default(),
         }
     }
@@ -159,12 +216,14 @@ impl Slot {
         conn.send(0, &Message::Hello { version: PROTOCOL_VERSION })?;
         match conn.recv()? {
             (_, Message::HelloAck { version, start, len, dim }) => {
-                if version != PROTOCOL_VERSION {
+                if !version_supported(version) {
                     return Err(OpdrError::data(format!(
-                        "rpc: worker `{}` speaks protocol {version}, gateway speaks {PROTOCOL_VERSION}",
-                        self.spec.name
+                        "rpc: worker `{}` speaks protocol {version}, gateway supports {}..={PROTOCOL_VERSION}",
+                        self.spec.name,
+                        crate::rpc::MIN_PROTOCOL_VERSION,
                     )));
                 }
+                self.negotiated = version.min(PROTOCOL_VERSION);
                 self.info = ShardInfo { start, len, dim };
             }
             (_, Message::Error { message }) => {
@@ -191,14 +250,18 @@ impl Slot {
         k: usize,
         connect_timeout: Duration,
         deadline: Duration,
-    ) -> Result<Vec<(usize, f32)>> {
+        trace_id: Option<u64>,
+    ) -> Result<(Vec<(usize, f32)>, Option<WireTrace>)> {
         self.ensure_connected(connect_timeout)?;
         let id = self.next_request_id;
         self.next_request_id += 1;
         let started = Instant::now();
+        // A v1 worker must never see a v2 tail; filtering here (not at the
+        // caller) keeps the negotiation invariant in one place.
+        let trace_id = trace_id.filter(|_| self.negotiated >= 2);
         let conn = self.conn.as_mut().expect("connected above");
         conn.set_deadline(deadline)?;
-        conn.send(id, &Message::Search { k: k as u32, query: query.to_vec() })?;
+        conn.send(id, &Message::Search { k: k as u32, query: query.to_vec(), trace_id })?;
         loop {
             // Duplicated / reordered frames (and answers to requests we
             // already timed out) are discarded by request id; the loop is
@@ -213,7 +276,7 @@ impl Slot {
                 continue;
             }
             return match msg {
-                Message::SearchOk { neighbors } => {
+                Message::SearchOk { neighbors, trace } => {
                     let mut out = Vec::with_capacity(neighbors.len());
                     for (gid, dist) in neighbors {
                         let gid = usize::try_from(gid).map_err(|_| {
@@ -221,7 +284,10 @@ impl Slot {
                         })?;
                         out.push((gid, dist));
                     }
-                    Ok(out)
+                    // A tail echoing a different trace id belongs to some
+                    // other query (a corrupt or confused worker); keep the
+                    // hits, discard the timing.
+                    Ok((out, trace.filter(|t| Some(t.trace_id) == trace_id)))
                 }
                 Message::Error { message } => Err(OpdrError::coordinator(format!(
                     "rpc: worker `{}`: {message}",
@@ -243,13 +309,23 @@ impl Slot {
         k: usize,
         connect_timeout: Duration,
         deadline: Duration,
-    ) -> Result<Vec<(usize, f32)>> {
+        trace_id: Option<u64>,
+    ) -> ShardOutcome {
         let sw = Stopwatch::start();
-        let out = self.try_search(query, k, connect_timeout, deadline);
-        self.latency.record(sw.elapsed());
+        let out = self.try_search(query, k, connect_timeout, deadline, trace_id);
+        let rtt = sw.elapsed();
+        self.latency.record(rtt);
         self.requests.inc();
-        match &out {
-            Ok(_) => self.up.set(1.0),
+        let (hits, wire) = match out {
+            Ok((hits, wire)) => {
+                self.up.set(1.0);
+                if let Some(t) = &wire {
+                    for (h, ns) in self.stage_latency.iter().zip(t.stage_ns()) {
+                        h.record(Duration::from_nanos(ns));
+                    }
+                }
+                (Ok(hits), wire)
+            }
             Err(e) => {
                 // The stream may be mid-frame after any failure; drop it and
                 // re-dial (possibly a respawned worker) on the next query.
@@ -257,15 +333,94 @@ impl Slot {
                     conn.shutdown();
                 }
                 self.up.set(0.0);
-                if is_timeout(e) {
+                if is_timeout(&e) {
                     self.deadlines.inc();
                 } else {
                     self.errors.inc();
                 }
+                (Err(e), None)
+            }
+        };
+        ShardOutcome { hits, rtt, wire }
+    }
+
+    /// Scrape the worker's metrics registry over `MetricsPull`, returning
+    /// the lossless snapshot text. Same rid-echo/deadline discipline and
+    /// connection hygiene as a search leg, but scrape outcomes land in
+    /// `opdr_rpc_scrape_errors_total` rather than the query counters.
+    fn pull_metrics(&mut self, connect_timeout: Duration, deadline: Duration) -> Result<String> {
+        let out = self.try_pull_metrics(connect_timeout, deadline);
+        match &out {
+            Ok(_) => self.up.set(1.0),
+            Err(_) => {
+                if let Some(conn) = self.conn.take() {
+                    conn.shutdown();
+                }
+                self.up.set(0.0);
+                self.scrape_errors.inc();
             }
         }
         out
     }
+
+    fn try_pull_metrics(
+        &mut self,
+        connect_timeout: Duration,
+        deadline: Duration,
+    ) -> Result<String> {
+        self.ensure_connected(connect_timeout)?;
+        if self.negotiated < 2 {
+            return Err(OpdrError::data(format!(
+                "rpc: worker `{}` speaks protocol {} (< 2), cannot scrape metrics",
+                self.spec.name, self.negotiated
+            )));
+        }
+        let id = self.next_request_id;
+        self.next_request_id += 1;
+        let started = Instant::now();
+        let conn = self.conn.as_mut().expect("connected above");
+        conn.set_deadline(deadline)?;
+        conn.send(id, &Message::MetricsPull)?;
+        loop {
+            let remaining = deadline
+                .checked_sub(started.elapsed())
+                .filter(|d| !d.is_zero())
+                .ok_or_else(|| Slot::timeout_err("scrape"))?;
+            conn.set_deadline(remaining)?;
+            let (rid, msg) = conn.recv()?;
+            if rid != id {
+                continue;
+            }
+            return match msg {
+                Message::MetricsText { text } => Ok(text),
+                Message::Error { message } => Err(OpdrError::coordinator(format!(
+                    "rpc: worker `{}`: {message}",
+                    self.spec.name
+                ))),
+                other => Err(OpdrError::data(format!(
+                    "rpc: worker `{}` answered metrics-pull with {}",
+                    self.spec.name,
+                    other.kind_name()
+                ))),
+            };
+        }
+    }
+}
+
+/// A recall probe riding the distributed path: shadow-executes sampled
+/// gateway answers against the attached corpus and publishes
+/// `opdr_recall_probe_*` gauges into the gateway's registry.
+struct ProbeAttachment {
+    probe: RecallProbe,
+    collection: String,
+    /// Row-major corpus the workers collectively serve. Distributed
+    /// serving ships unreduced vectors, so this doubles as both the
+    /// serving-tier and full-fidelity matrix (`μ == recall` by
+    /// construction — a drift between the two gauges would itself flag a
+    /// bug).
+    data: Arc<Vec<f32>>,
+    dim: usize,
+    metric: Metric,
 }
 
 /// The scatter-gather front end over the shard workers.
@@ -274,6 +429,12 @@ pub struct Gateway {
     cfg: DistConfig,
     partial_total: Arc<Counter>,
     registry: Arc<Registry>,
+    /// Monotonic trace-id source. Plain counter, not a clock: ids need to
+    /// be unique per gateway, not globally, and a counter keeps replays
+    /// deterministic.
+    trace_seq: AtomicU64,
+    recorder: Arc<FlightRecorder>,
+    probe: Option<ProbeAttachment>,
 }
 
 impl Gateway {
@@ -282,12 +443,55 @@ impl Gateway {
     pub fn new(specs: Vec<WorkerSpec>, cfg: DistConfig, registry: Arc<Registry>) -> Gateway {
         let slots = specs.into_iter().map(|s| Slot::new(s, &registry)).collect();
         let partial_total = registry.counter(RPC_PARTIAL_TOTAL, &[]);
-        Gateway { slots, cfg, partial_total, registry }
+        let recorder = Arc::new(FlightRecorder::new(
+            cfg.recorder_capacity,
+            Duration::from_millis(cfg.slow_query_ms.max(1)),
+        ));
+        Gateway {
+            slots,
+            cfg,
+            partial_total,
+            registry,
+            trace_seq: AtomicU64::new(0),
+            recorder,
+            probe: None,
+        }
     }
 
     /// The metrics registry the gateway publishes into.
     pub fn registry(&self) -> &Arc<Registry> {
         &self.registry
+    }
+
+    /// The slow-query flight recorder (the `SlowQueries` admin verb reads
+    /// it through here).
+    pub fn recorder(&self) -> &Arc<FlightRecorder> {
+        &self.recorder
+    }
+
+    /// Attach a recall probe sampling one in `every` queries: each sampled
+    /// answer is shadow-executed offline against `data` (the unreduced
+    /// corpus the shards collectively serve) and `opdr_recall_probe_*`
+    /// gauges land in the gateway registry. Replaces any prior attachment.
+    pub fn attach_probe(
+        &mut self,
+        collection: impl Into<String>,
+        data: Arc<Vec<f32>>,
+        dim: usize,
+        metric: Metric,
+        every: usize,
+    ) {
+        let probe = RecallProbe::start(Arc::clone(&self.registry), every, 64);
+        self.probe =
+            Some(ProbeAttachment { probe, collection: collection.into(), data, dim, metric });
+    }
+
+    /// Detach the recall probe, draining its queue so every submitted
+    /// sample is reflected in the gauges before this returns.
+    pub fn detach_probe(&mut self) {
+        if let Some(mut att) = self.probe.take() {
+            att.probe.shutdown();
+        }
     }
 
     /// Number of shards in the assignment.
@@ -312,35 +516,148 @@ impl Gateway {
         }
         let connect_timeout = Duration::from_millis(self.cfg.connect_timeout_ms.max(1));
         let deadline = Duration::from_millis(self.cfg.request_deadline_ms.max(1));
-        let per_shard: Vec<Result<Vec<(usize, f32)>>> = std::thread::scope(|s| {
+        // Ids start at 1 so a zero trace id on the wire always means
+        // "untraced".
+        let trace_id =
+            self.cfg.tracing.then(|| self.trace_seq.fetch_add(1, Ordering::Relaxed) + 1);
+        let sw = Stopwatch::start();
+        let outcomes: Vec<ShardOutcome> = std::thread::scope(|s| {
             let handles: Vec<_> = self
                 .slots
                 .iter_mut()
-                .map(|slot| s.spawn(move || slot.search(query, k, connect_timeout, deadline)))
+                .map(|slot| {
+                    s.spawn(move || slot.search(query, k, connect_timeout, deadline, trace_id))
+                })
                 .collect();
             handles
                 .into_iter()
                 .map(|h| {
-                    h.join().unwrap_or_else(|_| {
-                        Err(OpdrError::coordinator("rpc: scatter thread panicked"))
+                    h.join().unwrap_or_else(|_| ShardOutcome {
+                        hits: Err(OpdrError::coordinator("rpc: scatter thread panicked")),
+                        rtt: Duration::ZERO,
+                        wire: None,
                     })
                 })
                 .collect()
         });
         let mut shards_ok = 0usize;
         let mut candidates: Vec<(usize, f32)> = Vec::new();
-        for hits in per_shard.into_iter().flatten() {
-            shards_ok += 1;
-            candidates.extend(hits);
+        for o in &outcomes {
+            if let Ok(hits) = &o.hits {
+                shards_ok += 1;
+                candidates.extend_from_slice(hits);
+            }
         }
         let partial = shards_ok < shards_total;
         if partial {
             self.partial_total.inc();
         }
-        let neighbors = merge_top_k(candidates, k)
+        let neighbors: Vec<Neighbor> = merge_top_k(candidates, k)
             .into_iter()
             .map(|(index, distance)| Neighbor { index, distance })
             .collect();
+        if let Some(tid) = trace_id {
+            self.recorder.record(QueryRecord {
+                trace_id: tid,
+                k,
+                partial,
+                total: sw.elapsed(),
+                result_checksum: merged_checksum(&neighbors),
+                shards: self
+                    .slots
+                    .iter()
+                    .zip(&outcomes)
+                    .map(|(slot, o)| ShardTiming {
+                        worker: slot.spec.name.clone(),
+                        ok: o.hits.is_ok(),
+                        error: o.hits.as_ref().err().map(|e| e.to_string()),
+                        rtt: o.rtt,
+                        stages: o.wire.map(|t| {
+                            let [q, sc, re, me] = t.stage_ns().map(Duration::from_nanos);
+                            (q, sc, re, me)
+                        }),
+                    })
+                    .collect(),
+            });
+        }
+        // Sample only complete answers: a partial answer's recall deficit
+        // is a fault artifact, not a ranking-quality signal.
+        if !partial {
+            if let Some(att) = &self.probe {
+                if att.probe.should_sample(&att.collection) {
+                    att.probe.submit(ProbeJob {
+                        collection: att.collection.clone(),
+                        query_full: query.to_vec(),
+                        query_serving: query.to_vec(),
+                        k,
+                        served: neighbors.iter().map(|n| n.index).collect(),
+                        serving: Arc::clone(&att.data),
+                        serving_dim: att.dim,
+                        full: Arc::clone(&att.data),
+                        full_dim: att.dim,
+                        metric: att.metric,
+                    });
+                }
+            }
+        }
         Ok(DistSearchResult { neighbors, partial, shards_ok, shards_total })
     }
+
+    /// Scrape every worker's registry snapshot over `MetricsPull`:
+    /// `(worker name, snapshot text)` in slot order, `None` for a worker
+    /// that could not be scraped (already reflected in
+    /// `opdr_rpc_worker_up` and `opdr_rpc_scrape_errors_total`).
+    pub fn scrape_metrics(&mut self) -> Vec<(String, Option<String>)> {
+        let connect_timeout = Duration::from_millis(self.cfg.connect_timeout_ms.max(1));
+        let deadline = Duration::from_millis(self.cfg.request_deadline_ms.max(1));
+        self.slots
+            .iter_mut()
+            .map(|slot| {
+                (slot.spec.name.clone(), slot.pull_metrics(connect_timeout, deadline).ok())
+            })
+            .collect()
+    }
+
+    /// Federate the cluster's metrics into one Prometheus exposition: every
+    /// reachable worker's samples appear once labeled `worker="<name>"` and
+    /// once merged into the unlabeled cluster aggregate, alongside the
+    /// gateway's own registry (whose `opdr_rpc_worker_up` gauges report any
+    /// worker the scrape could not reach). Never fails: a dead worker is a
+    /// gauge flip, not an error.
+    pub fn cluster_metrics(&mut self) -> String {
+        let scraped = self.scrape_metrics();
+        let cluster = Registry::new();
+        for (i, (name, snap)) in scraped.iter().enumerate() {
+            let Some(snap) = snap else { continue };
+            let loaded = cluster
+                .load_snapshot(snap, &[("worker", name.as_str())])
+                .and_then(|()| cluster.load_snapshot(snap, &[]));
+            if loaded.is_err() {
+                // A malformed snapshot is a scrape failure discovered
+                // after the transport succeeded; account for it the same
+                // way and drop the (suspect) connection.
+                let slot = &mut self.slots[i];
+                if let Some(conn) = slot.conn.take() {
+                    conn.shutdown();
+                }
+                slot.up.set(0.0);
+                slot.scrape_errors.inc();
+            }
+        }
+        // The gateway's own series (rpc_* health, probe gauges, liveness)
+        // merge after the scrape so the worker_up flips above are visible.
+        let _ = cluster.load_snapshot(&self.registry.encode_snapshot(), &[]);
+        cluster.render()
+    }
+}
+
+/// CRC-32 over the merged `(global id LE, distance-bits LE)` list — the
+/// flight recorder's result fingerprint.
+fn merged_checksum(neighbors: &[Neighbor]) -> u32 {
+    let mut bytes = Vec::with_capacity(neighbors.len() * 12);
+    for n in neighbors {
+        bytes.extend_from_slice(&(n.index as u64).to_le_bytes());
+        bytes.extend_from_slice(&n.distance.to_bits().to_le_bytes());
+    }
+    crc32(&bytes)
 }

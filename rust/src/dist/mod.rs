@@ -23,6 +23,15 @@
 //! The wire protocol (framing, CRC, deadlines, fault injection) lives in
 //! [`crate::rpc`]; the fault matrix these guarantees are tested under is
 //! `tests/dist_it.rs`.
+//!
+//! Cluster-wide observability rides the same protocol: protocol-v2 trace
+//! tails carry a gateway-assigned trace id to every shard and bring back
+//! per-stage worker timings (see [`Gateway`]'s module docs), the
+//! `MetricsPull` frame federates every worker's registry into one
+//! exposition ([`Gateway::cluster_metrics`]), and the last K query
+//! timelines are held in a [`crate::telemetry::FlightRecorder`] for the
+//! `SlowQueries` admin verb. The observability fault matrix is
+//! `tests/dist_observability_it.rs`.
 
 pub mod gateway;
 pub mod supervisor;
@@ -30,4 +39,4 @@ pub mod worker;
 
 pub use gateway::{AddrCell, DistSearchResult, Gateway, ShardInfo, WorkerSpec};
 pub use supervisor::{ProcessWorker, Supervisor, WorkerHandle};
-pub use worker::{run_worker_from_file, serve_shard, ThreadWorker};
+pub use worker::{run_worker_from_file, serve_shard, serve_shard_observed, ThreadWorker};

@@ -16,22 +16,37 @@
 //! abrupt teardown is exactly what the crash/restart tests exercise.
 //!
 //! Protocol per connection: the client opens with [`Message::Hello`]; the
-//! worker validates the protocol version and answers [`Message::HelloAck`]
-//! carrying `(start, len, dim)`. Then each [`Message::Search`] is answered
-//! with [`Message::SearchOk`] (or a typed [`Message::Error`]) echoing the
-//! request id. A frame that fails to decode gets a best-effort typed error
-//! frame and the connection is closed — after a malformed frame the stream
-//! may be desynchronized, and reconnecting is the one safe resync.
+//! worker validates the protocol version (accepting the whole
+//! [`MIN_PROTOCOL_VERSION`]..=[`PROTOCOL_VERSION`] window and negotiating
+//! down to the client's) and answers [`Message::HelloAck`] carrying
+//! `(start, len, dim)`. Then each [`Message::Search`] is answered with
+//! [`Message::SearchOk`] (or a typed [`Message::Error`]) echoing the
+//! request id; on a v2 connection a request carrying a trace id gets the
+//! per-query stage timings back in the response tail. A frame that fails
+//! to decode gets a best-effort typed error frame and the connection is
+//! closed — after a malformed frame the stream may be desynchronized, and
+//! reconnecting is the one safe resync.
+//!
+//! Every worker owns a private metrics [`Registry`] — query counters,
+//! end-to-end query duration, per-stage histograms — which the gateway
+//! federates over the v2 `MetricsPull`/`MetricsText` frames. A metrics
+//! scrape deliberately bumps no query counters: the scraped snapshot must
+//! equal the worker's own registry bit-for-bit.
 
 use crate::data::store;
 use crate::error::Result;
 use crate::index::AnnIndex;
-use crate::rpc::{is_timeout, FramedTcp, Message, PROTOCOL_VERSION};
+use crate::rpc::{
+    is_timeout, version_supported, FramedTcp, Message, WireTrace, MIN_PROTOCOL_VERSION,
+    PROTOCOL_VERSION,
+};
+use crate::telemetry::{registry, Registry, SearchTrace};
+use crate::util::timer::Stopwatch;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::{self, JoinHandle};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Read-poll interval: how often a blocked connection handler rechecks the
 /// stop flag. Bounds both shutdown latency and the window in which an
@@ -42,13 +57,26 @@ const POLL: Duration = Duration::from_millis(50);
 const ACCEPT_POLL: Duration = Duration::from_millis(3);
 
 /// Serve `index` as the shard covering global rows `start..start+len` until
-/// `stop` is set. Runs the accept loop on the calling thread; one handler
-/// thread per connection.
+/// `stop` is set, recording into a private registry (discarded on return —
+/// use [`serve_shard_observed`] to keep a handle for federation). Runs the
+/// accept loop on the calling thread; one handler thread per connection.
 pub fn serve_shard(
     listener: TcpListener,
     index: Arc<dyn AnnIndex>,
     start: usize,
     stop: Arc<AtomicBool>,
+) -> Result<()> {
+    serve_shard_observed(listener, index, start, stop, Arc::new(Registry::new()))
+}
+
+/// [`serve_shard`] publishing into a caller-owned `registry` — the one the
+/// worker answers `MetricsPull` scrapes from.
+pub fn serve_shard_observed(
+    listener: TcpListener,
+    index: Arc<dyn AnnIndex>,
+    start: usize,
+    stop: Arc<AtomicBool>,
+    registry: Arc<Registry>,
 ) -> Result<()> {
     listener.set_nonblocking(true)?;
     let mut handlers: Vec<JoinHandle<()>> = Vec::new();
@@ -57,9 +85,10 @@ pub fn serve_shard(
             Ok((stream, _peer)) => {
                 let idx = Arc::clone(&index);
                 let stop2 = Arc::clone(&stop);
+                let reg = Arc::clone(&registry);
                 handlers.push(thread::spawn(move || {
                     let _ = stream.set_nonblocking(false);
-                    handle_conn(stream, idx.as_ref(), start, &stop2);
+                    handle_conn(stream, idx.as_ref(), start, &stop2, &reg);
                 }));
                 handlers.retain(|h| !h.is_finished());
             }
@@ -77,33 +106,66 @@ pub fn serve_shard(
     Ok(())
 }
 
+/// The worker-side instruments one connection handler touches.
+struct WorkerMetrics {
+    queries: Arc<crate::telemetry::Counter>,
+    duration: Arc<crate::telemetry::LatencyHistogram>,
+    queue_wait: Arc<crate::telemetry::LatencyHistogram>,
+    scan: Arc<crate::telemetry::LatencyHistogram>,
+    rerank: Arc<crate::telemetry::LatencyHistogram>,
+    merge: Arc<crate::telemetry::LatencyHistogram>,
+}
+
+impl WorkerMetrics {
+    fn new(reg: &Registry) -> WorkerMetrics {
+        WorkerMetrics {
+            queries: reg.counter(registry::WORKER_QUERIES_TOTAL, &[]),
+            duration: reg.histogram(registry::WORKER_QUERY_DURATION, &[]),
+            queue_wait: reg.histogram(registry::STAGE_DURATION, &[("stage", "queue_wait")]),
+            scan: reg.histogram(registry::STAGE_DURATION, &[("stage", "scan")]),
+            rerank: reg.histogram(registry::STAGE_DURATION, &[("stage", "rerank")]),
+            merge: reg.histogram(registry::STAGE_DURATION, &[("stage", "merge")]),
+        }
+    }
+}
+
 /// One connection: handshake, then a request loop. Returns when the client
 /// disconnects, a frame fails to decode, or `stop` is set.
-fn handle_conn(stream: TcpStream, index: &dyn AnnIndex, start: usize, stop: &AtomicBool) {
+fn handle_conn(
+    stream: TcpStream,
+    index: &dyn AnnIndex,
+    start: usize,
+    stop: &AtomicBool,
+    registry: &Arc<Registry>,
+) {
     let mut conn = FramedTcp::new(stream);
     if conn.set_deadline(POLL).is_err() {
         return;
     }
-    // Handshake: the first decoded frame must be a version-matched Hello.
+    // Handshake: the first decoded frame must be a Hello inside the
+    // supported version window; the connection then speaks the client's
+    // version (a v1 client never sees tails or metrics frames).
+    let mut negotiated = PROTOCOL_VERSION;
     loop {
         if stop.load(Ordering::Relaxed) {
             return;
         }
         match conn.recv() {
             Ok((rid, Message::Hello { version })) => {
-                if version != PROTOCOL_VERSION {
+                if !version_supported(version) {
                     let _ = conn.send(
                         rid,
                         &Message::Error {
                             message: format!(
-                                "worker speaks rpc version {PROTOCOL_VERSION}, client sent {version}"
+                                "worker speaks rpc versions {MIN_PROTOCOL_VERSION}..={PROTOCOL_VERSION}, client sent {version}"
                             ),
                         },
                     );
                     return;
                 }
+                negotiated = version.min(PROTOCOL_VERSION);
                 let ack = Message::HelloAck {
-                    version: PROTOCOL_VERSION,
+                    version: negotiated,
                     start: start as u64,
                     len: index.len() as u64,
                     dim: index.dim() as u32,
@@ -131,22 +193,59 @@ fn handle_conn(stream: TcpStream, index: &dyn AnnIndex, start: usize, stop: &Ato
             }
         }
     }
+    let wm = WorkerMetrics::new(registry);
     // Request loop.
     loop {
         if stop.load(Ordering::Relaxed) {
             return;
         }
         match conn.recv() {
-            Ok((rid, Message::Search { k, query })) => {
-                let reply = match index.search(&query, k as usize) {
-                    Ok(neighbors) => Message::SearchOk {
-                        neighbors: neighbors
-                            .into_iter()
-                            .map(|nb| ((nb.index + start) as u64, nb.distance))
-                            .collect(),
-                    },
+            Ok((rid, Message::Search { k, query, trace_id })) => {
+                let decoded_at = Instant::now();
+                let sw = Stopwatch::start();
+                // Per-query stage splits come from a detached trace; its
+                // totals feed both the response tail and the worker's own
+                // registry histograms.
+                let trace = SearchTrace::detached();
+                let queue_wait = decoded_at.elapsed();
+                let reply = match index.search_traced(&query, k as usize, &trace) {
+                    Ok(neighbors) => {
+                        let (scan, rerank, merge) =
+                            (trace.scan.total(), trace.rerank.total(), trace.merge.total());
+                        wm.queue_wait.record(queue_wait);
+                        wm.scan.record(scan);
+                        wm.rerank.record(rerank);
+                        wm.merge.record(merge);
+                        Message::SearchOk {
+                            neighbors: neighbors
+                                .into_iter()
+                                .map(|nb| ((nb.index + start) as u64, nb.distance))
+                                .collect(),
+                            // The tail travels only on v2 connections and
+                            // only when the request carried a trace id.
+                            trace: trace_id
+                                .filter(|_| negotiated >= 2)
+                                .map(|tid| WireTrace {
+                                    trace_id: tid,
+                                    queue_ns: queue_wait.as_nanos() as u64,
+                                    scan_ns: scan.as_nanos() as u64,
+                                    rerank_ns: rerank.as_nanos() as u64,
+                                    merge_ns: merge.as_nanos() as u64,
+                                }),
+                        }
+                    }
                     Err(e) => Message::Error { message: e.to_string() },
                 };
+                wm.queries.inc();
+                wm.duration.record(sw.elapsed());
+                if conn.send(rid, &reply).is_err() {
+                    return;
+                }
+            }
+            Ok((rid, Message::MetricsPull)) => {
+                // A scrape bumps no query counters: the snapshot must stay
+                // bit-for-bit equal to the registry it copies.
+                let reply = Message::MetricsText { text: registry.encode_snapshot() };
                 if conn.send(rid, &reply).is_err() {
                     return;
                 }
@@ -187,6 +286,7 @@ fn handle_conn(stream: TcpStream, index: &dyn AnnIndex, start: usize, stop: &Ato
 pub struct ThreadWorker {
     addr: String,
     stop: Arc<AtomicBool>,
+    registry: Arc<Registry>,
     handle: Option<JoinHandle<()>>,
 }
 
@@ -198,10 +298,18 @@ impl ThreadWorker {
         let addr = listener.local_addr()?.to_string();
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = Arc::clone(&stop);
+        let registry = Arc::new(Registry::new());
+        let reg2 = Arc::clone(&registry);
         let handle = thread::spawn(move || {
-            let _ = serve_shard(listener, index, start, stop2);
+            let _ = serve_shard_observed(listener, index, start, stop2, reg2);
         });
-        Ok(ThreadWorker { addr, stop, handle: Some(handle) })
+        Ok(ThreadWorker { addr, stop, registry, handle: Some(handle) })
+    }
+
+    /// The worker's own metrics registry — the storage its `MetricsPull`
+    /// snapshots copy, so federation tests can compare bit-for-bit.
+    pub fn registry(&self) -> Arc<Registry> {
+        Arc::clone(&self.registry)
     }
 
     /// [`ThreadWorker::spawn`] loading the shard from an `OPDR` file —
@@ -257,5 +365,13 @@ pub fn run_worker_from_file(path: &str, start: usize, listen: &str, heap: bool) 
     println!("listening {}", listener.local_addr()?);
     use std::io::Write;
     let _ = std::io::stdout().flush();
-    serve_shard(listener, index, start, Arc::new(AtomicBool::new(false)))
+    // A process worker's registry is reachable only over `MetricsPull`, so
+    // it lives here and dies with the process.
+    serve_shard_observed(
+        listener,
+        index,
+        start,
+        Arc::new(AtomicBool::new(false)),
+        Arc::new(Registry::new()),
+    )
 }

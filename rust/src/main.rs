@@ -60,6 +60,9 @@ fn print_help() {
            serve-demo [--n N] [--dim D] [--queries Q] [--use-runtime]\n\
                       [--distributed W] [--dist-connect-ms MS]\n\
                       [--dist-deadline-ms MS] [--k K]\n\
+                      (with --distributed, --metrics prints the federated\n\
+                      cluster exposition and the demo ends with a faulted\n\
+                      worker + slow-query flight-recorder dump)\n\
                       [--index exact|ivf|hnsw] [--sq8] [--sq8-global]\n\
                       [--pq] [--pq-m M] [--pq-ksub K] [--opq]\n\
                       [--rerank-depth R] [--hnsw-m M] [--no-hnsw-heuristic]\n\
@@ -502,6 +505,10 @@ fn cmd_serve_demo_distributed(
         specs.push(WorkerSpec { name, addr: cell });
     }
     let mut gw = Gateway::new(specs, cfg, Arc::clone(&registry));
+    // Recall probe over the distributed path: sampled gateway answers are
+    // shadow-executed against the unreduced corpus; distributed serving is
+    // unreduced, so the recall@k and μ gauges must both read 1.0.
+    gw.attach_probe("demo", Arc::new(set.data().to_vec()), dim, metric, 10);
     println!(
         "distributed serving: {} worker processes over {n} rows (dim {dim})",
         ranges.len()
@@ -539,8 +546,39 @@ fn cmd_serve_demo_distributed(
         "completed {ok}/{queries} gateway queries in {secs:.2}s ({:.0} qps), {partial} partial",
         ok as f64 / secs
     );
+    // Drain the probe so its gauges cover every sampled query before any
+    // exposition is rendered.
+    gw.detach_probe();
     if dump_metrics {
-        println!("{}", registry.render());
+        // Federated cluster exposition: every worker's registry scraped
+        // over MetricsPull, each sample once `worker="wN"`-labeled and once
+        // merged into the unlabeled aggregate, plus the gateway's own
+        // series.
+        println!("{}", gw.cluster_metrics());
+    }
+    // Flight-recorder demo: fault one worker, issue a query that degrades
+    // to partial, and show the slow-query dump naming the faulted shard.
+    if let Some(s) = sups.last_mut() {
+        s.shutdown();
+        let r = gw.search(set.vector(0), k)?;
+        println!(
+            "faulted worker `w{}`: query degraded to partial={} ({}/{} shards)",
+            sups.len() - 1,
+            r.partial,
+            r.shards_ok,
+            r.shards_total
+        );
+        let dump = gw.recorder().dump();
+        let mut entries = 0;
+        for line in dump.lines() {
+            if line.starts_with("trace=") {
+                entries += 1;
+                if entries > 1 {
+                    break; // header + the newest pinned (partial) entry only
+                }
+            }
+            println!("{line}");
+        }
     }
     for s in &mut sups {
         s.shutdown();

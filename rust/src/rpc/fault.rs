@@ -18,6 +18,11 @@
 //! Faults are scripted per frame index — nothing is random — so every test
 //! in the drop/truncate/delay/duplicate/reorder/corrupt ×
 //! {handshake, request, response} matrix is reproducible.
+//!
+//! Both pieces work on raw header-delimited bytes, never on decoded
+//! [`Message`]s, so they are kind-agnostic: protocol-v2 frames (trace
+//! tails on `Search`/`SearchOk`, `MetricsPull`/`MetricsText`) relay and
+//! fault exactly like v1 frames with no proxy changes.
 
 use crate::error::Result;
 use crate::rpc::frame::{encode_frame, Message, HEADER_BYTES, MAX_PAYLOAD_BYTES};

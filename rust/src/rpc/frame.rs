@@ -20,6 +20,29 @@
 //! mis-pairing request and response. The CRC covers the payload; corruption
 //! of the header itself is caught by the magic / kind / length validation.
 //!
+//! ## Protocol v2: trace tails and metrics frames
+//!
+//! Version 2 (negotiated in the `Hello`/`HelloAck` handshake; v1 peers are
+//! still accepted) adds observability without disturbing the v1 byte
+//! layout. Because every variable-length body is count-delimited, a v2
+//! sender appends a fixed-size **tail** after the v1 payload and the
+//! decoder discriminates by the exact number of remaining bytes — zero
+//! remaining is a v1 frame, the tail size is a v2 frame, anything else is
+//! the usual trailing-bytes error:
+//!
+//! | frame | v1 payload | optional v2 tail |
+//! |-------|------------|------------------|
+//! | `Search` | `k u32 · count u64 · count × f32` | `trace_id u64` (8 bytes) |
+//! | `SearchOk` | `count u64 · count × (id u64 · dist f32)` | `trace_id u64 · queue_ns u64 · scan_ns u64 · rerank_ns u64 · merge_ns u64` (40 bytes) |
+//!
+//! v2 also adds two frame kinds for metrics federation: `MetricsPull`
+//! (kind 8, empty payload) asks a worker for its registry; `MetricsText`
+//! (kind 9, `len u64 · utf-8 bytes` — the [`Message::Error`] shape) carries
+//! the worker's lossless registry snapshot back (see
+//! `telemetry::registry::Registry::encode_snapshot`). A v1 peer never sees
+//! either: the gateway only sends tails and pulls after the handshake
+//! negotiated version 2.
+//!
 //! ## Decoder hardening
 //!
 //! The decoder treats every header field as hostile, matching the version-5
@@ -39,9 +62,53 @@ use crate::index::io;
 use std::io::Read;
 
 /// RPC protocol version, exchanged in the [`Message::Hello`] /
-/// [`Message::HelloAck`] handshake. A worker speaking a different version
-/// refuses the connection with a typed error instead of misparsing frames.
-pub const PROTOCOL_VERSION: u32 = 1;
+/// [`Message::HelloAck`] handshake. Version 2 adds the observability tails
+/// and metrics frames (see the module docs); peers still speaking
+/// [`MIN_PROTOCOL_VERSION`] are accepted and simply never sent a tail. A
+/// peer outside the supported range refuses the connection with a typed
+/// error instead of misparsing frames.
+pub const PROTOCOL_VERSION: u32 = 2;
+
+/// Oldest protocol version both sides still accept (v1: no trace tails, no
+/// metrics frames).
+pub const MIN_PROTOCOL_VERSION: u32 = 1;
+
+/// True when `version` is one this build can speak.
+pub fn version_supported(version: u32) -> bool {
+    (MIN_PROTOCOL_VERSION..=PROTOCOL_VERSION).contains(&version)
+}
+
+/// Per-query stage timings carried in the v2 `SearchOk` tail: the worker's
+/// queue wait (decode → execution) and its [`SearchTrace`] stage totals, in
+/// nanoseconds, echoing the query's trace id. Fixed 40-byte wire layout.
+///
+/// [`SearchTrace`]: crate::telemetry::SearchTrace
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct WireTrace {
+    /// Gateway-assigned query trace id, echoed back.
+    pub trace_id: u64,
+    /// Time between frame decode and search execution start.
+    pub queue_ns: u64,
+    /// Substrate scan time.
+    pub scan_ns: u64,
+    /// Full-precision rerank time (0 for unquantized indexes).
+    pub rerank_ns: u64,
+    /// Shard/delta merge time.
+    pub merge_ns: u64,
+}
+
+impl WireTrace {
+    /// Stage durations in timeline order: queue wait, scan, rerank, merge.
+    pub fn stage_ns(&self) -> [u64; 4] {
+        [self.queue_ns, self.scan_ns, self.rerank_ns, self.merge_ns]
+    }
+}
+
+/// Byte length of the `SearchOk` v2 tail.
+const SEARCH_OK_TAIL_BYTES: usize = 40;
+
+/// Byte length of the `Search` v2 tail.
+const SEARCH_TAIL_BYTES: usize = 8;
 
 /// Frame magic (`OPRC` = OPDR RPC).
 pub const FRAME_MAGIC: [u8; 4] = *b"OPRC";
@@ -112,6 +179,9 @@ pub enum Message {
         k: u32,
         /// Full-precision query vector.
         query: Vec<f32>,
+        /// v2 tail: the gateway's trace id for this query (`None` on v1
+        /// connections — the frame then encodes byte-identically to v1).
+        trace_id: Option<u64>,
     },
     /// Worker → client: `(global id, distance)` pairs, ascending by
     /// (distance, id). Distances travel as raw f32 bits, so the gateway
@@ -119,6 +189,9 @@ pub enum Message {
     SearchOk {
         /// Remapped neighbor list.
         neighbors: Vec<(u64, f32)>,
+        /// v2 tail: echoed trace id + per-stage timings (`None` on v1
+        /// connections or when the request carried no trace id).
+        trace: Option<WireTrace>,
     },
     /// Worker → client: the request failed (or could not be parsed) with
     /// this typed message.
@@ -130,6 +203,14 @@ pub enum Message {
     Ping,
     /// Liveness reply.
     Pong,
+    /// Client → worker (v2): request the worker's metrics-registry snapshot.
+    MetricsPull,
+    /// Worker → client (v2): the lossless registry snapshot (see
+    /// `telemetry::registry::Registry::encode_snapshot`).
+    MetricsText {
+        /// Snapshot text (utf-8).
+        text: String,
+    },
 }
 
 impl Message {
@@ -143,6 +224,8 @@ impl Message {
             Message::Error { .. } => 5,
             Message::Ping => 6,
             Message::Pong => 7,
+            Message::MetricsPull => 8,
+            Message::MetricsText { .. } => 9,
         }
     }
 
@@ -156,6 +239,8 @@ impl Message {
             Message::Error { .. } => "error",
             Message::Ping => "ping",
             Message::Pong => "pong",
+            Message::MetricsPull => "metrics-pull",
+            Message::MetricsText { .. } => "metrics-text",
         }
     }
 
@@ -169,16 +254,26 @@ impl Message {
                 io::write_u64(&mut p, *len)?;
                 io::write_u32(&mut p, *dim)?;
             }
-            Message::Search { k, query } => {
+            Message::Search { k, query, trace_id } => {
                 io::write_u32(&mut p, *k)?;
                 io::write_u64(&mut p, query.len() as u64)?;
                 io::write_f32s(&mut p, query)?;
+                if let Some(tid) = trace_id {
+                    io::write_u64(&mut p, *tid)?;
+                }
             }
-            Message::SearchOk { neighbors } => {
+            Message::SearchOk { neighbors, trace } => {
                 io::write_u64(&mut p, neighbors.len() as u64)?;
                 for &(id, dist) in neighbors {
                     io::write_u64(&mut p, id)?;
                     p.extend_from_slice(&dist.to_le_bytes());
+                }
+                if let Some(t) = trace {
+                    io::write_u64(&mut p, t.trace_id)?;
+                    io::write_u64(&mut p, t.queue_ns)?;
+                    io::write_u64(&mut p, t.scan_ns)?;
+                    io::write_u64(&mut p, t.rerank_ns)?;
+                    io::write_u64(&mut p, t.merge_ns)?;
                 }
             }
             Message::Error { message } => {
@@ -186,7 +281,12 @@ impl Message {
                 io::write_u64(&mut p, bytes.len() as u64)?;
                 io::write_bytes(&mut p, bytes)?;
             }
-            Message::Ping | Message::Pong => {}
+            Message::MetricsText { text } => {
+                let bytes = text.as_bytes();
+                io::write_u64(&mut p, bytes.len() as u64)?;
+                io::write_bytes(&mut p, bytes)?;
+            }
+            Message::Ping | Message::Pong | Message::MetricsPull => {}
         }
         Ok(p)
     }
@@ -205,7 +305,12 @@ impl Message {
                 let k = io::read_u32(&mut r)?;
                 let count = io::read_u64_usize(&mut r)?;
                 let query = io::read_f32s(&mut r, count)?;
-                Message::Search { k, query }
+                // The body is count-delimited, so the remaining bytes are
+                // the optional v2 tail: exactly 0 (v1) or the tail size;
+                // anything else falls through to the trailing-bytes error.
+                let trace_id =
+                    if r.len() == SEARCH_TAIL_BYTES { Some(io::read_u64(&mut r)?) } else { None };
+                Message::Search { k, query, trace_id }
             }
             4 => {
                 let count = io::read_u64_usize(&mut r)?;
@@ -221,7 +326,18 @@ impl Message {
                     r.read_exact(&mut b)?;
                     neighbors.push((id, f32::from_le_bytes(b)));
                 }
-                Message::SearchOk { neighbors }
+                let trace = if r.len() == SEARCH_OK_TAIL_BYTES {
+                    Some(WireTrace {
+                        trace_id: io::read_u64(&mut r)?,
+                        queue_ns: io::read_u64(&mut r)?,
+                        scan_ns: io::read_u64(&mut r)?,
+                        rerank_ns: io::read_u64(&mut r)?,
+                        merge_ns: io::read_u64(&mut r)?,
+                    })
+                } else {
+                    None
+                };
+                Message::SearchOk { neighbors, trace }
             }
             5 => {
                 let len = io::read_u64_usize(&mut r)?;
@@ -232,6 +348,14 @@ impl Message {
             }
             6 => Message::Ping,
             7 => Message::Pong,
+            8 => Message::MetricsPull,
+            9 => {
+                let len = io::read_u64_usize(&mut r)?;
+                let bytes = io::read_bytes(&mut r, len)?;
+                let text = String::from_utf8(bytes)
+                    .map_err(|_| OpdrError::data("rpc: metrics text is not utf-8"))?;
+                Message::MetricsText { text }
+            }
             other => return Err(OpdrError::data(format!("rpc: unknown frame kind {other}"))),
         };
         if !r.is_empty() {
@@ -297,7 +421,7 @@ fn decode_header_then_payload(
         return Err(OpdrError::data("rpc: bad frame magic"));
     }
     let kind = hdr[4];
-    if !(1..=7).contains(&kind) {
+    if !(1..=9).contains(&kind) {
         return Err(OpdrError::data(format!("rpc: unknown frame kind {kind}")));
     }
     let request_id = u64::from_le_bytes(hdr[5..13].try_into().expect("8 header bytes"));
@@ -336,16 +460,105 @@ mod tests {
     fn every_message_kind_roundtrips() {
         roundtrip(0, &Message::Hello { version: PROTOCOL_VERSION });
         roundtrip(1, &Message::HelloAck { version: 1, start: 7, len: 1000, dim: 64 });
-        roundtrip(u64::MAX, &Message::Search { k: 10, query: vec![1.0, -2.5, f32::NAN] });
+        roundtrip(
+            u64::MAX,
+            &Message::Search { k: 10, query: vec![1.0, -2.5, f32::NAN], trace_id: None },
+        );
         roundtrip(
             42,
             &Message::SearchOk {
                 neighbors: vec![(0, 0.0), (u64::MAX, f32::INFINITY), (3, f32::NAN)],
+                trace: None,
             },
         );
         roundtrip(3, &Message::Error { message: "shard on fire".to_string() });
         roundtrip(4, &Message::Ping);
         roundtrip(5, &Message::Pong);
+        roundtrip(6, &Message::MetricsPull);
+        roundtrip(7, &Message::MetricsText { text: "# TYPE x counter\nx 1\n".to_string() });
+    }
+
+    #[test]
+    fn v2_trace_tails_roundtrip() {
+        roundtrip(
+            11,
+            &Message::Search { k: 5, query: vec![0.25; 16], trace_id: Some(u64::MAX - 3) },
+        );
+        roundtrip(
+            12,
+            &Message::SearchOk {
+                neighbors: vec![(9, 1.5), (2, f32::NAN)],
+                trace: Some(WireTrace {
+                    trace_id: 77,
+                    queue_ns: 1,
+                    scan_ns: u64::MAX,
+                    rerank_ns: 0,
+                    merge_ns: 42,
+                }),
+            },
+        );
+        // An empty neighbor list with a tail must not be mistaken for a
+        // five-neighbor v1 frame (count is explicit, so it can't be).
+        roundtrip(
+            13,
+            &Message::SearchOk { neighbors: vec![], trace: Some(WireTrace::default()) },
+        );
+    }
+
+    #[test]
+    fn v1_frames_without_tails_are_byte_identical_to_v1_layout() {
+        // A `None`-tail Search encodes exactly the v1 payload: k u32,
+        // count u64, count × f32 — nothing after. This is the downgrade
+        // guarantee: v1 peers receive frames their decoder fully consumes.
+        let msg = Message::Search { k: 3, query: vec![1.0, 2.0], trace_id: None };
+        let bytes = encode_frame(1, &msg).expect("encode");
+        assert_eq!(bytes.len() - HEADER_BYTES, 4 + 8 + 2 * 4);
+        match decode_frame(&bytes).expect("decode").1 {
+            Message::Search { trace_id, .. } => assert_eq!(trace_id, None),
+            other => panic!("wrong kind {}", other.kind_name()),
+        }
+        let msg = Message::SearchOk { neighbors: vec![(1, 0.5)], trace: None };
+        let bytes = encode_frame(2, &msg).expect("encode");
+        assert_eq!(bytes.len() - HEADER_BYTES, 8 + 12);
+        match decode_frame(&bytes).expect("decode").1 {
+            Message::SearchOk { trace, .. } => assert_eq!(trace, None),
+            other => panic!("wrong kind {}", other.kind_name()),
+        }
+    }
+
+    #[test]
+    fn partial_tail_is_a_typed_trailing_bytes_error() {
+        // Remaining bytes that are neither 0 nor the exact tail size must
+        // fail typed, not be half-consumed as a tail.
+        let msg = Message::Search { k: 3, query: vec![1.0, 2.0], trace_id: None };
+        let payload_garbage = |extra: usize| {
+            let mut bytes = encode_frame(1, &msg).expect("encode");
+            let mut payload = bytes.split_off(HEADER_BYTES);
+            payload.resize(payload.len() + extra, 0xAB);
+            bytes[13..17].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+            bytes[17..21].copy_from_slice(&crc32(&payload).to_le_bytes());
+            bytes.extend_from_slice(&payload);
+            bytes
+        };
+        for extra in [1usize, 7, 9, 40] {
+            let err = decode_frame(&payload_garbage(extra)).expect_err("bad tail must fail");
+            assert!(err.to_string().contains("trailing"), "extra={extra}: {err}");
+        }
+        // Exactly 8 extra bytes IS the v2 tail — decodes as a trace id.
+        match decode_frame(&payload_garbage(8)).expect("v2 tail").1 {
+            Message::Search { trace_id, .. } => {
+                assert_eq!(trace_id, Some(u64::from_le_bytes([0xAB; 8])));
+            }
+            other => panic!("wrong kind {}", other.kind_name()),
+        }
+    }
+
+    #[test]
+    fn version_window_accepts_v1_and_v2_only() {
+        assert!(version_supported(MIN_PROTOCOL_VERSION));
+        assert!(version_supported(PROTOCOL_VERSION));
+        assert!(!version_supported(0));
+        assert!(!version_supported(PROTOCOL_VERSION + 1));
     }
 
     #[test]
@@ -353,10 +566,13 @@ mod tests {
         // A payload NaN with a nonstandard bit pattern must round-trip
         // bit-exactly — the gateway merge relies on raw-bits equality.
         let weird = f32::from_bits(0x7FC0_1234);
-        let bytes =
-            encode_frame(9, &Message::SearchOk { neighbors: vec![(5, weird)] }).expect("encode");
+        let bytes = encode_frame(
+            9,
+            &Message::SearchOk { neighbors: vec![(5, weird)], trace: None },
+        )
+        .expect("encode");
         match decode_frame(&bytes).expect("decode").1 {
-            Message::SearchOk { neighbors } => {
+            Message::SearchOk { neighbors, .. } => {
                 assert_eq!(neighbors[0].1.to_bits(), 0x7FC0_1234);
             }
             other => panic!("wrong kind {}", other.kind_name()),
@@ -375,16 +591,16 @@ mod tests {
     fn lying_length_field_fails_with_truncation_error() {
         // Length under the cap but beyond the actual bytes: the bounded
         // reader must hit EOF, not OOM.
-        let mut bytes =
-            encode_frame(1, &Message::Search { k: 3, query: vec![0.5; 8] }).expect("encode");
+        let msg = Message::Search { k: 3, query: vec![0.5; 8], trace_id: None };
+        let mut bytes = encode_frame(1, &msg).expect("encode");
         bytes[13..17].copy_from_slice(&((MAX_PAYLOAD_BYTES - 1) as u32).to_le_bytes());
         assert!(decode_frame(&bytes).is_err());
     }
 
     #[test]
     fn corrupt_payload_fails_crc() {
-        let mut bytes =
-            encode_frame(1, &Message::Search { k: 3, query: vec![0.5; 8] }).expect("encode");
+        let msg = Message::Search { k: 3, query: vec![0.5; 8], trace_id: None };
+        let mut bytes = encode_frame(1, &msg).expect("encode");
         let off = HEADER_BYTES + 5;
         bytes[off] ^= 0xFF;
         let err = decode_frame(&bytes).expect_err("corruption must fail");
@@ -403,7 +619,7 @@ mod tests {
 
     #[test]
     fn truncation_at_every_boundary_is_a_typed_error() {
-        let msg = Message::Search { k: 4, query: vec![1.0, 2.0, 3.0] };
+        let msg = Message::Search { k: 4, query: vec![1.0, 2.0, 3.0], trace_id: Some(7) };
         let bytes = encode_frame(77, &msg).expect("encode");
         for cut in 0..bytes.len() {
             let err = decode_frame(&bytes[..cut]).expect_err("truncated frame must fail");

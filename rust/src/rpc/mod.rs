@@ -33,8 +33,9 @@ pub mod frame;
 
 pub use fault::{Fault, FaultProxy, FaultScript, FaultyTransport};
 pub use frame::{
-    crc32, decode_frame, encode_frame, read_frame, Message, ALLOC_CHUNK, FRAME_MAGIC,
-    HEADER_BYTES, MAX_PAYLOAD_BYTES, PROTOCOL_VERSION,
+    crc32, decode_frame, encode_frame, read_frame, version_supported, Message, WireTrace,
+    ALLOC_CHUNK, FRAME_MAGIC, HEADER_BYTES, MAX_PAYLOAD_BYTES, MIN_PROTOCOL_VERSION,
+    PROTOCOL_VERSION,
 };
 
 use crate::error::{OpdrError, Result};

@@ -9,9 +9,11 @@
 //! the paper's order-preserving measure μ into a runtime gauge.
 
 pub mod probe;
+pub mod recorder;
 pub mod registry;
 
 pub use probe::{ProbeJob, RecallProbe};
+pub use recorder::{FlightRecorder, QueryRecord, ShardTiming};
 pub use registry::{Gauge, Registry};
 
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -75,6 +77,25 @@ struct HistogramInner {
 const BASE_NS: f64 = 1_000.0; // 1µs
 const GROWTH: f64 = 1.05;
 const NBUCKETS: usize = 420; // 1µs * 1.05^420 ≈ 798s ≈ 13.3 min
+
+/// A consistent copy of a histogram's full state — every bucket plus the
+/// exact `count` / `sum_ns` / extrema. Because the buckets travel whole
+/// (not as pre-rendered quantiles), two snapshots merge losslessly by
+/// bucket-wise addition, which is what makes cluster-level federation of
+/// per-worker histograms possible.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    /// Per-bucket sample counts (length [`LatencyHistogram::bucket_count`]).
+    pub buckets: Vec<u64>,
+    /// Total samples.
+    pub count: u64,
+    /// Exact sum of all samples in nanoseconds.
+    pub sum_ns: u128,
+    /// Largest recorded sample (ns).
+    pub max_ns: u64,
+    /// Smallest recorded sample (ns; `u64::MAX` when empty).
+    pub min_ns: u64,
+}
 
 impl Default for LatencyHistogram {
     fn default() -> Self {
@@ -160,6 +181,45 @@ impl LatencyHistogram {
     /// Max recorded sample.
     pub fn max(&self) -> Duration {
         Duration::from_nanos(lock_recover(&self.inner).max_ns)
+    }
+
+    /// Number of buckets a snapshot must carry.
+    pub const fn bucket_count() -> usize {
+        NBUCKETS
+    }
+
+    /// Consistent full-state copy (one lock acquisition).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let g = lock_recover(&self.inner);
+        HistogramSnapshot {
+            buckets: g.buckets.clone(),
+            count: g.count,
+            sum_ns: g.sum_ns,
+            max_ns: g.max_ns,
+            min_ns: g.min_ns,
+        }
+    }
+
+    /// Bucket-wise merge of `s` into this histogram: every bucket adds,
+    /// `count` / `sum_ns` add exactly, and the extrema fold (an empty
+    /// snapshot is a no-op — its `min_ns` sentinel and zero `max_ns` fold
+    /// away). Merging N worker snapshots into a fresh histogram yields
+    /// exactly the histogram a single process recording all N sample
+    /// streams would hold.
+    pub fn merge_snapshot(&self, s: &HistogramSnapshot) {
+        let mut g = lock_recover(&self.inner);
+        for (b, &sb) in g.buckets.iter_mut().zip(s.buckets.iter()) {
+            *b = b.saturating_add(sb);
+        }
+        g.count = g.count.saturating_add(s.count);
+        g.sum_ns = g.sum_ns.saturating_add(s.sum_ns);
+        g.max_ns = g.max_ns.max(s.max_ns);
+        g.min_ns = g.min_ns.min(s.min_ns);
+    }
+
+    /// [`LatencyHistogram::merge_snapshot`] from a live histogram.
+    pub fn merge_from(&self, other: &LatencyHistogram) {
+        self.merge_snapshot(&other.snapshot());
     }
 
     /// Human summary line.
@@ -449,6 +509,64 @@ mod tests {
         h.record(Duration::from_micros(300));
         h.record(Duration::from_micros(700));
         assert_eq!(h.total(), Duration::from_micros(1000));
+    }
+
+    #[test]
+    fn histogram_merge_is_exact_on_count_sum_extrema() {
+        let a = LatencyHistogram::new();
+        let b = LatencyHistogram::new();
+        a.record(Duration::from_micros(100));
+        a.record(Duration::from_micros(300));
+        b.record(Duration::from_millis(20));
+        let m = LatencyHistogram::new();
+        m.merge_from(&a);
+        m.merge_from(&b);
+        assert_eq!(m.count(), 3);
+        assert_eq!(m.total(), a.total() + b.total());
+        assert_eq!(m.max(), b.max());
+        // Merging an empty histogram is a no-op (the min/max sentinels of
+        // the empty side must fold away, not poison the extrema).
+        let before = m.snapshot();
+        m.merge_from(&LatencyHistogram::new());
+        assert_eq!(m.snapshot(), before);
+    }
+
+    #[test]
+    fn prop_histogram_merge_preserves_total_and_bounds_quantiles() {
+        // Property (PR 8 satellite): bucket-wise merge preserves `total()`
+        // and `count()` exactly, and every quantile of the merge lies
+        // between the inputs' min/max quantiles — the lower bound exactly,
+        // the upper within one bucket width (GROWTH = 1.05): the merge can
+        // lift a component's max-clamp, exposing up to the full bucket
+        // upper bound where the component reported its clamped max.
+        let mut rng = crate::util::Rng::new(4141);
+        for trial in 0..30 {
+            let a = LatencyHistogram::new();
+            let b = LatencyHistogram::new();
+            for _ in 0..rng.below(300) {
+                a.record(Duration::from_micros(1 + rng.below(5_000_000) as u64));
+            }
+            // b is sometimes empty, sometimes on a different scale.
+            for _ in 0..rng.below(60) {
+                b.record(Duration::from_nanos(100 + rng.below(80_000_000) as u64));
+            }
+            let m = LatencyHistogram::new();
+            m.merge_from(&a);
+            m.merge_from(&b);
+            assert_eq!(m.count(), a.count() + b.count(), "trial {trial}");
+            assert_eq!(m.total(), a.total() + b.total(), "trial {trial}");
+            if a.count() == 0 || b.count() == 0 {
+                continue; // an empty side contributes quantile 0 — vacuous
+            }
+            for q in [0.0, 0.1, 0.5, 0.9, 0.99, 1.0] {
+                let (qa, qb, qm) =
+                    (a.quantile(q).as_nanos(), b.quantile(q).as_nanos(), m.quantile(q).as_nanos());
+                let (lo, hi) = (qa.min(qb), qa.max(qb));
+                assert!(qm >= lo, "trial {trial} q={q}: merged {qm} < min({qa}, {qb})");
+                let hi_tol = (hi as f64 * 1.0501).ceil() as u128;
+                assert!(qm <= hi_tol, "trial {trial} q={q}: merged {qm} > max({qa}, {qb})+5%");
+            }
+        }
     }
 
     #[test]

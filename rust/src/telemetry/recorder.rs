@@ -1,0 +1,272 @@
+//! The slow-query flight recorder: a bounded ring of the last K complete
+//! per-query span timelines, pinned preferentially for the queries worth
+//! keeping (slow or `partial = true`).
+//!
+//! Every distributed query leaves one [`QueryRecord`]: its trace id, the
+//! chosen `k`, per-shard RPC timing (gateway-observed round trip plus the
+//! worker-reported queue/scan/rerank/merge stage splits from the v2 trace
+//! tail), each shard's fault disposition, and a checksum of the merged
+//! result. When a deadline miss or a fault-injected partial answer needs a
+//! forensic artifact, the `SlowQueries` admin verb dumps the ring as
+//! structured text — no re-run, no log spelunking.
+//!
+//! The ring is lock-cheap by construction: recording is one short
+//! mutex-guarded `VecDeque` push (no allocation beyond the record itself,
+//! no I/O), negligible next to the RPC round trip it describes. Eviction
+//! prefers the oldest *unpinned* entry, so a burst of healthy traffic
+//! cannot flush the one partial query that needs investigating; only when
+//! every entry is pinned does the oldest pinned entry fall out.
+
+use crate::util::timer::fmt_duration;
+use std::collections::VecDeque;
+use std::fmt::Write as _;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// One shard's leg of a distributed query.
+#[derive(Debug, Clone)]
+pub struct ShardTiming {
+    /// Worker name (the `worker` metric label).
+    pub worker: String,
+    /// True when the shard contributed to the merge.
+    pub ok: bool,
+    /// Typed failure reason when `ok` is false (deadline, transport,
+    /// protocol — the fault disposition).
+    pub error: Option<String>,
+    /// Gateway-observed round trip for this leg.
+    pub rtt: Duration,
+    /// Worker-reported stage splits from the v2 trace tail, when present:
+    /// `(queue_wait, scan, rerank, merge)`.
+    pub stages: Option<(Duration, Duration, Duration, Duration)>,
+}
+
+/// One complete query timeline.
+#[derive(Debug, Clone)]
+pub struct QueryRecord {
+    /// Gateway-assigned trace id (carried on the wire to every shard).
+    pub trace_id: u64,
+    /// Neighbors requested.
+    pub k: usize,
+    /// True when at least one shard contributed nothing.
+    pub partial: bool,
+    /// End-to-end gateway time (scatter through merge).
+    pub total: Duration,
+    /// CRC-32 over the merged `(id, distance-bits)` list — lets two runs
+    /// of the same query be compared without storing the neighbors.
+    pub result_checksum: u32,
+    /// Per-shard legs, in slot order.
+    pub shards: Vec<ShardTiming>,
+}
+
+#[derive(Debug)]
+struct Entry {
+    rec: QueryRecord,
+    pinned: bool,
+}
+
+#[derive(Debug, Default)]
+struct RingState {
+    ring: VecDeque<Entry>,
+    recorded: u64,
+    evicted_pinned: u64,
+}
+
+/// Bounded ring of [`QueryRecord`]s with pinned-preferential eviction.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    state: Mutex<RingState>,
+    capacity: usize,
+    slow_threshold: Duration,
+}
+
+impl FlightRecorder {
+    /// Ring holding at most `capacity` records; a query is pinned when it
+    /// is `partial` or its end-to-end time reaches `slow_threshold`.
+    pub fn new(capacity: usize, slow_threshold: Duration) -> FlightRecorder {
+        FlightRecorder {
+            state: Mutex::new(RingState::default()),
+            capacity: capacity.max(1),
+            slow_threshold,
+        }
+    }
+
+    /// Ring capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Record one completed query.
+    pub fn record(&self, rec: QueryRecord) {
+        let pinned = rec.partial || rec.total >= self.slow_threshold;
+        let mut g = super::lock_recover(&self.state);
+        g.recorded += 1;
+        if g.ring.len() >= self.capacity {
+            // Oldest unpinned first; only an all-pinned ring evicts a
+            // pinned entry (the oldest), so healthy traffic can never
+            // flush a degraded query's timeline.
+            match g.ring.iter().position(|e| !e.pinned) {
+                Some(i) => {
+                    g.ring.remove(i);
+                }
+                None => {
+                    g.ring.pop_front();
+                    g.evicted_pinned += 1;
+                }
+            }
+        }
+        g.ring.push_back(Entry { rec, pinned });
+    }
+
+    /// Records currently held (oldest first).
+    pub fn entries(&self) -> Vec<QueryRecord> {
+        super::lock_recover(&self.state).ring.iter().map(|e| e.rec.clone()).collect()
+    }
+
+    /// The held record with this trace id, if any.
+    pub fn find(&self, trace_id: u64) -> Option<QueryRecord> {
+        super::lock_recover(&self.state)
+            .ring
+            .iter()
+            .rev()
+            .find(|e| e.rec.trace_id == trace_id)
+            .map(|e| e.rec.clone())
+    }
+
+    /// Queries recorded over the recorder's lifetime (not just those still
+    /// held).
+    pub fn recorded_total(&self) -> u64 {
+        super::lock_recover(&self.state).recorded
+    }
+
+    /// Structured text dump — the `SlowQueries` admin verb's payload.
+    /// Pinned (slow/partial) entries print first, then the healthy tail,
+    /// each newest-first within its group.
+    pub fn dump(&self) -> String {
+        let g = super::lock_recover(&self.state);
+        let pinned_count = g.ring.iter().filter(|e| e.pinned).count();
+        let mut out = format!(
+            "flight-recorder: {} of {} entries held ({} pinned, {} recorded, {} pinned evicted); slow threshold {}\n",
+            g.ring.len(),
+            self.capacity,
+            pinned_count,
+            g.recorded,
+            g.evicted_pinned,
+            fmt_duration(self.slow_threshold),
+        );
+        for want_pinned in [true, false] {
+            for e in g.ring.iter().rev().filter(|e| e.pinned == want_pinned) {
+                let r = &e.rec;
+                let disposition = if r.partial { "PARTIAL" } else { "ok" };
+                let _ = writeln!(
+                    out,
+                    "trace={:#018x} k={} {} total={} shards_ok={}/{} checksum={:#010x}{}",
+                    r.trace_id,
+                    r.k,
+                    disposition,
+                    fmt_duration(r.total),
+                    r.shards.iter().filter(|s| s.ok).count(),
+                    r.shards.len(),
+                    r.result_checksum,
+                    if e.pinned { " [pinned]" } else { "" },
+                );
+                for s in &r.shards {
+                    let _ = write!(
+                        out,
+                        "  shard worker={} {} rtt={}",
+                        s.worker,
+                        if s.ok { "ok" } else { "FAIL" },
+                        fmt_duration(s.rtt),
+                    );
+                    if let Some((queue, scan, rerank, merge)) = s.stages {
+                        let _ = write!(
+                            out,
+                            " queue_wait={} scan={} rerank={} merge={}",
+                            fmt_duration(queue),
+                            fmt_duration(scan),
+                            fmt_duration(rerank),
+                            fmt_duration(merge),
+                        );
+                    }
+                    if let Some(err) = &s.error {
+                        let _ = write!(out, " — {err}");
+                    }
+                    out.push('\n');
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(trace_id: u64, partial: bool, total_ms: u64) -> QueryRecord {
+        QueryRecord {
+            trace_id,
+            k: 5,
+            partial,
+            total: Duration::from_millis(total_ms),
+            result_checksum: 0xABCD,
+            shards: vec![ShardTiming {
+                worker: "0".into(),
+                ok: !partial,
+                error: partial.then(|| "rpc: request deadline exceeded".to_string()),
+                rtt: Duration::from_millis(total_ms),
+                stages: (!partial).then_some((
+                    Duration::from_micros(2),
+                    Duration::from_micros(40),
+                    Duration::ZERO,
+                    Duration::from_micros(1),
+                )),
+            }],
+        }
+    }
+
+    #[test]
+    fn ring_is_bounded_and_prefers_evicting_unpinned() {
+        let fr = FlightRecorder::new(4, Duration::from_millis(100));
+        fr.record(rec(1, true, 5)); // pinned: partial
+        fr.record(rec(2, false, 1));
+        fr.record(rec(3, false, 200)); // pinned: slow
+        fr.record(rec(4, false, 1));
+        fr.record(rec(5, false, 1)); // evicts 2 (oldest unpinned), not 1
+        let held: Vec<u64> = fr.entries().iter().map(|r| r.trace_id).collect();
+        assert_eq!(held, vec![1, 3, 4, 5]);
+        fr.record(rec(6, true, 5)); // evicts 4
+        fr.record(rec(7, true, 5)); // evicts 5
+        let held: Vec<u64> = fr.entries().iter().map(|r| r.trace_id).collect();
+        assert_eq!(held, vec![1, 3, 6, 7], "pinned entries must survive healthy churn");
+        // All pinned now: the oldest pinned entry finally falls out.
+        fr.record(rec(8, true, 5));
+        let held: Vec<u64> = fr.entries().iter().map(|r| r.trace_id).collect();
+        assert_eq!(held, vec![3, 6, 7, 8]);
+        assert_eq!(fr.recorded_total(), 8);
+    }
+
+    #[test]
+    fn find_returns_the_newest_match() {
+        let fr = FlightRecorder::new(8, Duration::from_secs(1));
+        fr.record(rec(9, false, 1));
+        fr.record(rec(9, true, 2));
+        assert!(fr.find(9).expect("held").partial, "newest record must win");
+        assert!(fr.find(404).is_none());
+    }
+
+    #[test]
+    fn dump_names_the_faulted_shard_and_pins_first() {
+        let fr = FlightRecorder::new(8, Duration::from_millis(100));
+        fr.record(rec(0x10, false, 1));
+        fr.record(rec(0x42, true, 7));
+        let dump = fr.dump();
+        assert!(dump.contains("trace=0x0000000000000042 k=5 PARTIAL"), "{dump}");
+        assert!(dump.contains("[pinned]"), "{dump}");
+        assert!(dump.contains("shard worker=0 FAIL"), "{dump}");
+        assert!(dump.contains("deadline exceeded"), "{dump}");
+        assert!(dump.contains("queue_wait="), "{dump}");
+        let partial_at = dump.find("0x0000000000000042").expect("partial entry");
+        let healthy_at = dump.find("0x0000000000000010").expect("healthy entry");
+        assert!(partial_at < healthy_at, "pinned entries must print first:\n{dump}");
+    }
+}

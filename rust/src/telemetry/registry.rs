@@ -17,7 +17,8 @@
 //! the bottom of this module; the verb/stage/label conventions are documented
 //! in `crate::coordinator`.
 
-use super::{lock_recover, Counter, LatencyHistogram};
+use super::{lock_recover, Counter, HistogramSnapshot, LatencyHistogram};
+use crate::error::{OpdrError, Result};
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -185,6 +186,185 @@ impl Registry {
         }
         out
     }
+
+    /// Encode every instrument as a **lossless** text snapshot — the wire
+    /// format of the `MetricsText` RPC frame.
+    ///
+    /// Unlike [`Registry::render`], nothing is summarized away: gauges
+    /// travel as raw f64 bits, histogram sums as exact nanosecond u128s and
+    /// histograms as their full (sparse) bucket vectors, so a snapshot
+    /// loaded into a fresh registry renders **bit-for-bit** identically to
+    /// the source and snapshots from N workers merge exactly
+    /// (bucket-wise / counter-wise addition). Lines are
+    /// space-separated tokens with `\` / space / newline escaped inside
+    /// names and label strings.
+    pub fn encode_snapshot(&self) -> String {
+        let snapshot: Vec<((String, Labels), Instrument)> = {
+            let g = lock_recover(&self.inner);
+            g.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
+        };
+        let mut out = String::from("opdr-metrics-snapshot v1\n");
+        for ((name, labels), inst) in snapshot {
+            let mut line = String::new();
+            let _ = write!(line, "{} {}", snap_esc(&name), labels.len());
+            for (k, v) in &labels {
+                let _ = write!(line, " {} {}", snap_esc(k), snap_esc(v));
+            }
+            match inst {
+                Instrument::Counter(c) => {
+                    let _ = writeln!(out, "c {line} {}", c.get());
+                }
+                Instrument::Gauge(v) => {
+                    let _ = writeln!(out, "g {line} {:016x}", v.get().to_bits());
+                }
+                Instrument::Histogram(h) => {
+                    let s = h.snapshot();
+                    let _ = write!(
+                        out,
+                        "h {line} {} {} {} {}",
+                        s.count, s.sum_ns, s.max_ns, s.min_ns
+                    );
+                    for (i, &b) in s.buckets.iter().enumerate() {
+                        if b != 0 {
+                            let _ = write!(out, " {i}:{b}");
+                        }
+                    }
+                    out.push('\n');
+                }
+            }
+        }
+        out
+    }
+
+    /// Merge a [`Registry::encode_snapshot`] text into this registry,
+    /// appending `extra` label pairs to every series (the federation path
+    /// passes `[("worker", "N")]` for the per-worker view and `[]` for the
+    /// aggregated totals). Counters and histogram buckets add; gauges are
+    /// last-write-wins. Loading one snapshot into a fresh registry
+    /// reproduces the source exactly. Malformed input fails typed without
+    /// partially applying the bad line's instrument.
+    pub fn load_snapshot(&self, text: &str, extra: &[(&str, &str)]) -> Result<()> {
+        let mut lines = text.lines();
+        if lines.next().map(str::trim) != Some("opdr-metrics-snapshot v1") {
+            return Err(OpdrError::data("metrics snapshot: bad or missing header"));
+        }
+        let bad = |what: &str, line: &str| {
+            OpdrError::data(format!("metrics snapshot: {what} in line `{line}`"))
+        };
+        for line in lines {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let mut t = line.split(' ');
+            let kind = t.next().ok_or_else(|| bad("empty line", line))?;
+            let name = snap_unesc(t.next().ok_or_else(|| bad("missing name", line))?)
+                .ok_or_else(|| bad("bad name escape", line))?;
+            let nlabels: usize = t
+                .next()
+                .and_then(|v| v.parse().ok())
+                .ok_or_else(|| bad("bad label count", line))?;
+            if nlabels > 64 {
+                return Err(bad("label count too large", line));
+            }
+            let mut labels: Vec<(String, String)> = Vec::with_capacity(nlabels + extra.len());
+            for _ in 0..nlabels {
+                let k = snap_unesc(t.next().ok_or_else(|| bad("missing label key", line))?)
+                    .ok_or_else(|| bad("bad label escape", line))?;
+                let v = snap_unesc(t.next().ok_or_else(|| bad("missing label value", line))?)
+                    .ok_or_else(|| bad("bad label escape", line))?;
+                labels.push((k, v));
+            }
+            for (k, v) in extra {
+                labels.push((k.to_string(), v.to_string()));
+            }
+            let label_refs: Vec<(&str, &str)> =
+                labels.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+            match kind {
+                "c" => {
+                    let v: u64 = t
+                        .next()
+                        .and_then(|v| v.parse().ok())
+                        .ok_or_else(|| bad("bad counter value", line))?;
+                    if t.next().is_some() {
+                        return Err(bad("trailing tokens", line));
+                    }
+                    self.counter(&name, &label_refs).add(v);
+                }
+                "g" => {
+                    let bits = t
+                        .next()
+                        .and_then(|v| u64::from_str_radix(v, 16).ok())
+                        .ok_or_else(|| bad("bad gauge bits", line))?;
+                    if t.next().is_some() {
+                        return Err(bad("trailing tokens", line));
+                    }
+                    self.gauge(&name, &label_refs).set(f64::from_bits(bits));
+                }
+                "h" => {
+                    let mut next_u128 = |what| {
+                        t.next()
+                            .and_then(|v| v.parse::<u128>().ok())
+                            .ok_or_else(|| bad(what, line))
+                    };
+                    let count = next_u128("bad histogram count")?;
+                    let sum_ns = next_u128("bad histogram sum")?;
+                    let max_ns = next_u128("bad histogram max")?;
+                    let min_ns = next_u128("bad histogram min")?;
+                    let mut buckets = vec![0u64; LatencyHistogram::bucket_count()];
+                    for pair in t.by_ref() {
+                        let (i, b) = pair
+                            .split_once(':')
+                            .and_then(|(i, b)| {
+                                Some((i.parse::<usize>().ok()?, b.parse::<u64>().ok()?))
+                            })
+                            .ok_or_else(|| bad("bad bucket pair", line))?;
+                        if i >= buckets.len() {
+                            return Err(bad("bucket index out of range", line));
+                        }
+                        buckets[i] = b;
+                    }
+                    let snap = HistogramSnapshot {
+                        buckets,
+                        count: u64::try_from(count)
+                            .map_err(|_| bad("histogram count overflow", line))?,
+                        sum_ns,
+                        max_ns: u64::try_from(max_ns)
+                            .map_err(|_| bad("histogram max overflow", line))?,
+                        min_ns: u64::try_from(min_ns)
+                            .map_err(|_| bad("histogram min overflow", line))?,
+                    };
+                    self.histogram(&name, &label_refs).merge_snapshot(&snap);
+                }
+                other => return Err(bad(&format!("unknown instrument kind `{other}`"), line)),
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Escape a snapshot token: `\` → `\\`, space → `\s`, newline → `\n` (the
+/// snapshot grammar is space- and line-delimited).
+fn snap_esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace(' ', "\\s").replace('\n', "\\n")
+}
+
+/// Inverse of [`snap_esc`]; `None` on a dangling or unknown escape.
+fn snap_unesc(s: &str) -> Option<String> {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next()? {
+            '\\' => out.push('\\'),
+            's' => out.push(' '),
+            'n' => out.push('\n'),
+            _ => return None,
+        }
+    }
+    Some(out)
 }
 
 /// Format a label set as `{k="v",...}`, optionally appending a
@@ -256,6 +436,19 @@ pub const RPC_REQUEST_DURATION: &str = "opdr_rpc_request_duration_seconds";
 pub const RPC_WORKER_UP: &str = "opdr_rpc_worker_up";
 /// Supervisor respawns of a crashed worker, labeled `{worker}` (counter).
 pub const RPC_WORKER_RESTARTS: &str = "opdr_rpc_worker_restarts_total";
+/// Per-shard stage timings reported in the v2 `SearchOk` trace tail and
+/// recorded gateway-side, labeled `{worker, stage}` with stages
+/// `queue_wait` / `scan` / `rerank` / `merge` (summary).
+pub const RPC_SHARD_STAGE_DURATION: &str = "opdr_rpc_shard_stage_seconds";
+/// Queries a shard worker answered, recorded in the worker's own registry
+/// and federated with a `{worker}` label (counter).
+pub const WORKER_QUERIES_TOTAL: &str = "opdr_worker_queries_total";
+/// Worker-side end-to-end query duration (decode → reply encoded), in the
+/// worker's own registry (summary).
+pub const WORKER_QUERY_DURATION: &str = "opdr_worker_query_duration_seconds";
+/// Metrics-federation scrapes that failed (dead/unreachable worker),
+/// labeled `{worker}` (counter).
+pub const RPC_SCRAPE_ERRORS_TOTAL: &str = "opdr_rpc_scrape_errors_total";
 
 #[cfg(test)]
 mod tests {
@@ -338,5 +531,94 @@ mod tests {
         r.counter("m", &[("collection", "we\"ird\\name")]).inc();
         let text = r.render();
         assert!(text.contains("m{collection=\"we\\\"ird\\\\name\"} 1"));
+    }
+
+    #[test]
+    fn label_newlines_do_not_corrupt_the_exposition() {
+        // Regression (PR 8 satellite): a label value carrying a newline must
+        // render as the two-character escape `\n`, not a raw line break —
+        // a raw break would end the sample line mid-value and corrupt the
+        // scrape. Backslash must be escaped first (never double-escaped).
+        let r = Registry::new();
+        r.counter("m", &[("collection", "line1\nline2")]).inc();
+        r.gauge("n", &[("path", "a\\nb")]).set(1.0);
+        let text = r.render();
+        assert!(text.contains("m{collection=\"line1\\nline2\"} 1"), "{text}");
+        assert!(text.contains("n{path=\"a\\\\nb\"} 1"), "{text}");
+        // Every emitted line is a comment, a `# TYPE` header, or a sample —
+        // no line may start inside a label value.
+        for line in text.lines() {
+            assert!(
+                line.starts_with('#') || line.starts_with('m') || line.starts_with('n'),
+                "corrupted exposition line: {line:?}\n{text}"
+            );
+        }
+    }
+
+    #[test]
+    fn snapshot_roundtrips_bit_for_bit() {
+        let src = Registry::new();
+        src.counter(REQUESTS_TOTAL, &[("verb", "search"), ("collection", "c c")]).add(17);
+        // 0.1 + 0.2 is deliberately a non-terminating f64.
+        src.gauge(PROBE_MU, &[("collection", "weird\\ name\nx")]).set(0.1 + 0.2);
+        let h = src.histogram(REQUEST_DURATION, &[]);
+        for i in 1..=500u64 {
+            h.record(Duration::from_micros(i * 7));
+        }
+        let copy = Registry::new();
+        copy.load_snapshot(&src.encode_snapshot(), &[]).expect("load");
+        assert_eq!(copy.render(), src.render(), "snapshot must reproduce the render exactly");
+        // And the histogram state itself is identical, not just the render.
+        assert_eq!(copy.histogram(REQUEST_DURATION, &[]).snapshot(), h.snapshot());
+    }
+
+    #[test]
+    fn snapshot_load_with_extra_labels_and_merge_sums() {
+        // Two "workers" federate into one cluster registry: the worker
+        // label separates the per-worker series, the unlabeled pass
+        // aggregates counter values and histogram _sum/_count exactly.
+        let w0 = Registry::new();
+        let w1 = Registry::new();
+        w0.counter(WORKER_QUERIES_TOTAL, &[]).add(3);
+        w1.counter(WORKER_QUERIES_TOTAL, &[]).add(5);
+        w0.histogram(WORKER_QUERY_DURATION, &[]).record(Duration::from_micros(100));
+        w1.histogram(WORKER_QUERY_DURATION, &[]).record(Duration::from_micros(300));
+        let cluster = Registry::new();
+        for (i, w) in [&w0, &w1].into_iter().enumerate() {
+            let snap = w.encode_snapshot();
+            cluster.load_snapshot(&snap, &[("worker", &i.to_string())]).expect("labeled");
+            cluster.load_snapshot(&snap, &[]).expect("aggregate");
+        }
+        assert_eq!(cluster.counter(WORKER_QUERIES_TOTAL, &[("worker", "0")]).get(), 3);
+        assert_eq!(cluster.counter(WORKER_QUERIES_TOTAL, &[("worker", "1")]).get(), 5);
+        assert_eq!(cluster.counter(WORKER_QUERIES_TOTAL, &[]).get(), 8);
+        let agg = cluster.histogram(WORKER_QUERY_DURATION, &[]);
+        assert_eq!(agg.count(), 2);
+        assert_eq!(agg.total(), Duration::from_micros(400));
+        let text = cluster.render();
+        assert!(text.contains("opdr_worker_queries_total{worker=\"0\"} 3"), "{text}");
+        assert!(text.contains("opdr_worker_queries_total{worker=\"1\"} 5"), "{text}");
+        assert!(text.contains("opdr_worker_queries_total 8"), "{text}");
+    }
+
+    #[test]
+    fn snapshot_rejects_malformed_input_typed() {
+        let r = Registry::new();
+        assert!(r.load_snapshot("not a snapshot", &[]).is_err());
+        let hdr = "opdr-metrics-snapshot v1\n";
+        for bad in [
+            "c only_two_tokens\n",
+            "c m 0 notanumber\n",
+            "g m 0 zzzz\n",
+            "h m 0 1 100 100 100 99999:1\n", // bucket index out of range
+            "x m 0 1\n",                     // unknown kind
+            "c m 1 key\n",                   // missing label value
+            "c m 0 1 extra\n",               // trailing tokens
+        ] {
+            let text = format!("{hdr}{bad}");
+            assert!(r.load_snapshot(&text, &[]).is_err(), "accepted malformed: {bad:?}");
+        }
+        // Nothing of the failed loads leaked into the registry.
+        assert_eq!(r.render(), "");
     }
 }

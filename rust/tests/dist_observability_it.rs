@@ -1,0 +1,364 @@
+//! Cluster-wide observability integration tests.
+//!
+//! Three guarantees are machine-checked here:
+//!
+//! 1. **Federation is lossless.** A worker registry scraped over
+//!    `MetricsPull` and reloaded from its snapshot renders **bit-for-bit**
+//!    identically to the worker's own exposition, and the federated
+//!    cluster exposition's unlabeled aggregates equal the per-worker sums
+//!    exactly (`_count`) / to float tolerance (`_sum`).
+//! 2. **Trace ids survive the fault matrix.** Under every fault kind ×
+//!    protocol stage the traced query lands in the flight recorder with
+//!    its trace id, per-shard stage timings for every surviving shard,
+//!    and — for every partial answer — a FAIL disposition naming the
+//!    faulted shard.
+//! 3. **The recall probe rides the distributed path deterministically.**
+//!    Sampled gateway answers shadow-executed against the unreduced corpus
+//!    publish recall@k and μ gauges; two identical runs publish identical
+//!    bits, and unreduced serving forces μ == recall.
+
+use opdr::config::DistConfig;
+use opdr::data::{synth, DatasetKind};
+use opdr::dist::{Gateway, ThreadWorker, WorkerSpec};
+use opdr::index::{AnnIndex, ExactIndex, StorageSpec};
+use opdr::metrics::Metric;
+use opdr::rpc::{crc32, Fault, FaultProxy, FaultScript};
+use opdr::telemetry::registry::{
+    PROBE_MU, PROBE_RECALL, PROBE_SAMPLES_TOTAL, WORKER_QUERIES_TOTAL,
+};
+use opdr::telemetry::Registry;
+use std::net::SocketAddr;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const DIM: usize = 8;
+const N: usize = 60;
+const K: usize = 10;
+
+fn exact_over(rows: &[f32]) -> Arc<dyn AnnIndex> {
+    Arc::new(ExactIndex::build(rows, DIM, Metric::SqEuclidean, &StorageSpec::flat(), 7).unwrap())
+}
+
+fn dist_cfg(workers: usize, connect_ms: u64, deadline_ms: u64) -> DistConfig {
+    DistConfig {
+        workers,
+        connect_timeout_ms: connect_ms,
+        request_deadline_ms: deadline_ms,
+        ..Default::default()
+    }
+}
+
+fn spawn_workers(data: &[f32], n: usize, shards: usize) -> (Vec<ThreadWorker>, Vec<WorkerSpec>) {
+    let ranges = opdr::index::shard::shard_ranges(n, shards, 1);
+    let workers: Vec<ThreadWorker> = ranges
+        .iter()
+        .map(|r| {
+            ThreadWorker::spawn(exact_over(&data[r.start * DIM..r.end * DIM]), r.start).unwrap()
+        })
+        .collect();
+    let specs = workers
+        .iter()
+        .enumerate()
+        .map(|(i, w)| WorkerSpec::fixed(format!("w{i}"), w.addr()))
+        .collect();
+    (workers, specs)
+}
+
+/// The value of the exposition sample whose `name{labels}` key is exactly
+/// `key`.
+fn sample(exposition: &str, key: &str) -> Option<f64> {
+    exposition.lines().find_map(|l| {
+        let (k, v) = l.rsplit_once(' ')?;
+        if k == key {
+            v.parse().ok()
+        } else {
+            None
+        }
+    })
+}
+
+/// Scraped snapshots reload bit-for-bit, and the federated exposition's
+/// unlabeled aggregates are the exact per-worker sums.
+#[test]
+fn federated_exposition_matches_per_worker_registries_bit_for_bit() {
+    let set = synth::generate(DatasetKind::Flickr30k, N, DIM, 42);
+    let (workers, specs) = spawn_workers(set.data(), N, 2);
+    let mut gw = Gateway::new(specs, dist_cfg(2, 1000, 2000), Arc::new(Registry::new()));
+    let queries = 20usize;
+    for i in 0..queries {
+        let r = gw.search(set.vector(i % N), K).unwrap();
+        assert!(!r.partial, "healthy cluster answered partial");
+    }
+
+    // Lossless scrape: reload each worker's snapshot into a fresh registry
+    // and compare the rendered exposition bit-for-bit. MetricsPull itself
+    // must not perturb the counters it reports, so this also pins the
+    // scrape to be a pure read.
+    let scraped = gw.scrape_metrics();
+    assert_eq!(scraped.len(), 2);
+    for (i, (name, snap)) in scraped.iter().enumerate() {
+        assert_eq!(name, &format!("w{i}"));
+        let snap = snap.as_ref().expect("healthy worker failed the scrape");
+        let reloaded = Registry::new();
+        reloaded.load_snapshot(snap, &[]).unwrap();
+        let local = workers[i].registry().render();
+        assert!(!local.is_empty(), "worker registry rendered empty");
+        assert_eq!(
+            reloaded.render(),
+            local,
+            "snapshot of w{i} did not reload bit-for-bit"
+        );
+    }
+
+    // Federated exposition: per-worker labeled series plus exact unlabeled
+    // aggregates. Every query fans out to both shards, so each worker
+    // served `queries` and the cluster total is their sum.
+    let cluster = gw.cluster_metrics();
+    let w0 = sample(&cluster, &format!("{WORKER_QUERIES_TOTAL}{{worker=\"w0\"}}"))
+        .expect("w0-labeled sample missing");
+    let w1 = sample(&cluster, &format!("{WORKER_QUERIES_TOTAL}{{worker=\"w1\"}}"))
+        .expect("w1-labeled sample missing");
+    let agg = sample(&cluster, WORKER_QUERIES_TOTAL).expect("aggregate sample missing");
+    assert_eq!(w0 as usize, queries);
+    assert_eq!(w1 as usize, queries);
+    assert_eq!(agg, w0 + w1, "aggregate counter must equal the per-worker sum");
+
+    // Federated histogram `_count` is the exact sum; `_sum` merges as
+    // exact nanoseconds worker-side, so the rendered seconds agree with
+    // the per-worker float sum to rounding.
+    let dur = "opdr_worker_query_duration_seconds";
+    let c0 = sample(&cluster, &format!("{dur}_count{{worker=\"w0\"}}")).unwrap();
+    let c1 = sample(&cluster, &format!("{dur}_count{{worker=\"w1\"}}")).unwrap();
+    let cagg = sample(&cluster, &format!("{dur}_count")).unwrap();
+    assert_eq!(cagg, c0 + c1, "federated _count must equal the per-worker sum");
+    assert_eq!(cagg as usize, 2 * queries);
+    let s0 = sample(&cluster, &format!("{dur}_sum{{worker=\"w0\"}}")).unwrap();
+    let s1 = sample(&cluster, &format!("{dur}_sum{{worker=\"w1\"}}")).unwrap();
+    let sagg = sample(&cluster, &format!("{dur}_sum")).unwrap();
+    assert!(
+        (sagg - (s0 + s1)).abs() <= 1e-9 * (1.0 + sagg.abs()),
+        "federated _sum {sagg} diverged from per-worker sum {}",
+        s0 + s1
+    );
+
+    // The gateway's own series federate too.
+    assert!(
+        sample(&cluster, "opdr_rpc_worker_up{worker=\"w0\"}") == Some(1.0),
+        "gateway liveness gauge missing from the cluster exposition"
+    );
+    drop(workers);
+}
+
+/// A dead worker degrades the scrape — `worker_up 0`, a scrape-error tick,
+/// the live workers' samples intact — instead of failing it.
+#[test]
+fn dead_worker_degrades_the_scrape_not_the_exposition() {
+    let set = synth::generate(DatasetKind::Flickr30k, N, DIM, 42);
+    let (mut workers, specs) = spawn_workers(set.data(), N, 2);
+    let mut gw = Gateway::new(specs, dist_cfg(2, 200, 400), Arc::new(Registry::new()));
+    for i in 0..4 {
+        let r = gw.search(set.vector(i), K).unwrap();
+        assert!(!r.partial);
+    }
+    workers[1].kill();
+    let cluster = gw.cluster_metrics();
+    assert_eq!(
+        sample(&cluster, "opdr_rpc_worker_up{worker=\"w1\"}"),
+        Some(0.0),
+        "dead worker must read worker_up 0:\n{cluster}"
+    );
+    assert_eq!(
+        sample(&cluster, "opdr_rpc_scrape_errors_total{worker=\"w1\"}"),
+        Some(1.0),
+        "failed scrape must be counted:\n{cluster}"
+    );
+    // The surviving worker's samples still federate.
+    assert_eq!(
+        sample(&cluster, &format!("{WORKER_QUERIES_TOTAL}{{worker=\"w0\"}}")),
+        Some(4.0),
+        "live worker's samples missing:\n{cluster}"
+    );
+}
+
+/// Which protocol stage the scripted fault lands on (same matrix as
+/// `dist_it.rs`).
+#[derive(Clone, Copy, Debug)]
+enum Target {
+    Handshake,
+    Request,
+    Response,
+}
+
+fn scripts_for(target: Target, fault: Fault) -> (FaultScript, FaultScript) {
+    match target {
+        Target::Handshake => (FaultScript::fault_at(0, fault), FaultScript::clean()),
+        Target::Request => (FaultScript::fault_at(1, fault), FaultScript::clean()),
+        Target::Response => (FaultScript::clean(), FaultScript::fault_at(1, fault)),
+    }
+}
+
+/// Trace ids survive every fault × stage: the traced query always lands in
+/// the flight recorder with per-shard stage timings from the surviving
+/// shards, and every partial answer's entry names the faulted shard.
+#[test]
+fn trace_ids_survive_the_fault_matrix_and_partials_name_the_faulted_shard() {
+    let set = synth::generate(DatasetKind::Flickr30k, N, DIM, 42);
+    let data = set.data();
+    let ranges = opdr::index::shard::shard_ranges(N, 3, 1);
+    let q = set.vector(5);
+    let faults = [
+        Fault::Drop,
+        Fault::Truncate(5),
+        Fault::Truncate(25),
+        Fault::Delay(700),
+        Fault::Duplicate,
+        Fault::Reorder,
+        Fault::Corrupt(2),
+        Fault::Corrupt(30),
+    ];
+    for target in [Target::Handshake, Target::Request, Target::Response] {
+        for fault in faults {
+            let case = format!("{target:?}/{fault:?}");
+            let workers: Vec<ThreadWorker> = ranges
+                .iter()
+                .map(|r| {
+                    ThreadWorker::spawn(exact_over(&data[r.start * DIM..r.end * DIM]), r.start)
+                        .unwrap()
+                })
+                .collect();
+            let (req_script, resp_script) = scripts_for(target, fault);
+            let upstream: SocketAddr = workers[0].addr().parse().unwrap();
+            let proxy = FaultProxy::spawn(upstream, req_script, resp_script).unwrap();
+            let specs = vec![
+                WorkerSpec::fixed("w0", proxy.addr().to_string()),
+                WorkerSpec::fixed("w1", workers[1].addr()),
+                WorkerSpec::fixed("w2", workers[2].addr()),
+            ];
+            let mut gw = Gateway::new(specs, dist_cfg(3, 400, 150), Arc::new(Registry::new()));
+            let t0 = Instant::now();
+            let r = gw
+                .search(q, K)
+                .unwrap_or_else(|e| panic!("{case}: gateway returned an error: {e}"));
+            assert!(t0.elapsed() < Duration::from_secs(5), "{case}: query stalled");
+
+            // Trace ids are a per-gateway sequence starting at 1, so the
+            // first query's record is addressable without plumbing the id
+            // out-of-band.
+            let rec = gw
+                .recorder()
+                .find(1)
+                .unwrap_or_else(|| panic!("{case}: traced query never reached the recorder"));
+            assert_eq!(rec.k, K, "{case}");
+            assert_eq!(rec.shards.len(), 3, "{case}");
+            assert_eq!(rec.partial, r.partial, "{case}: recorder disagrees on disposition");
+
+            // The result fingerprint is recomputable from the answer.
+            let mut bytes = Vec::new();
+            for nb in &r.neighbors {
+                bytes.extend_from_slice(&(nb.index as u64).to_le_bytes());
+                bytes.extend_from_slice(&nb.distance.to_bits().to_le_bytes());
+            }
+            assert_eq!(rec.result_checksum, crc32(&bytes), "{case}: checksum mismatch");
+
+            // Surviving shards answered over protocol v2, so their legs
+            // must carry worker-reported stage splits; w1/w2 are never
+            // faulted.
+            for leg in &rec.shards[1..] {
+                assert!(leg.ok, "{case}: unfaulted shard {} failed", leg.worker);
+                assert!(
+                    leg.stages.is_some(),
+                    "{case}: surviving shard {} lost its stage timings",
+                    leg.worker
+                );
+            }
+            if r.partial {
+                // Partial answers must be pinned with the faulted shard
+                // named — both in the record and in the dump text.
+                let leg = &rec.shards[0];
+                assert!(!leg.ok, "{case}: partial answer but shard w0 marked ok");
+                assert_eq!(leg.worker, "w0", "{case}");
+                assert!(leg.error.is_some(), "{case}: fault disposition missing");
+                let dump = gw.recorder().dump();
+                assert!(
+                    dump.contains("shard worker=w0 FAIL"),
+                    "{case}: dump does not name the faulted shard:\n{dump}"
+                );
+                assert!(dump.contains("[pinned]"), "{case}: partial entry not pinned");
+                assert!(
+                    dump.contains(&format!("{:#018x}", 1)),
+                    "{case}: trace id missing from the dump"
+                );
+            } else {
+                assert!(
+                    rec.shards.iter().all(|leg| leg.ok),
+                    "{case}: full answer with a failed leg recorded"
+                );
+            }
+            drop(proxy);
+            drop(workers);
+        }
+    }
+}
+
+/// With `tracing = false` the gateway sends v1-shaped frames: queries still
+/// merge bitwise-exactly, and nothing reaches the recorder.
+#[test]
+fn tracing_off_sends_v1_frames_and_records_nothing() {
+    let set = synth::generate(DatasetKind::Flickr30k, N, DIM, 42);
+    let (workers, specs) = spawn_workers(set.data(), N, 2);
+    let cfg = DistConfig { tracing: false, ..dist_cfg(2, 1000, 2000) };
+    let mut gw = Gateway::new(specs, cfg, Arc::new(Registry::new()));
+    let reference = exact_over(set.data());
+    for i in 0..5 {
+        let r = gw.search(set.vector(i), K).unwrap();
+        assert!(!r.partial);
+        let expect = reference.search(set.vector(i), K).unwrap();
+        assert!(r
+            .neighbors
+            .iter()
+            .zip(&expect)
+            .all(|(a, b)| a.index == b.index && a.distance.to_bits() == b.distance.to_bits()));
+    }
+    assert_eq!(gw.recorder().recorded_total(), 0, "untraced queries were recorded");
+    drop(workers);
+}
+
+/// The recall probe over a 2-worker gateway: deterministic sampling, gauges
+/// recomputed identically across two identical runs, and μ == recall
+/// bit-for-bit because distributed serving is unreduced.
+#[test]
+fn recall_probe_is_deterministic_through_a_two_worker_gateway() {
+    let run = || {
+        let set = synth::generate(DatasetKind::Flickr30k, N, DIM, 42);
+        let (workers, specs) = spawn_workers(set.data(), N, 2);
+        let registry = Arc::new(Registry::new());
+        let mut gw = Gateway::new(specs, dist_cfg(2, 1000, 2000), Arc::clone(&registry));
+        gw.attach_probe("demo", Arc::new(set.data().to_vec()), DIM, Metric::SqEuclidean, 3);
+        for i in 0..30 {
+            let r = gw.search(set.vector(i % N), K).unwrap();
+            assert!(!r.partial);
+        }
+        // Drain the probe queue so the gauges are final.
+        gw.detach_probe();
+        let labels = [("collection", "demo")];
+        let samples = registry.counter(PROBE_SAMPLES_TOTAL, &labels).get();
+        let recall = registry.gauge(PROBE_RECALL, &labels).get();
+        let mu = registry.gauge(PROBE_MU, &labels).get();
+        drop(workers);
+        (samples, recall, mu)
+    };
+    let (samples, recall, mu) = run();
+    assert_eq!(samples, 10, "every=3 over 30 queries must sample exactly 10");
+    assert_eq!(recall, 1.0, "exact distributed serving must have recall 1");
+    assert_eq!(
+        mu.to_bits(),
+        recall.to_bits(),
+        "unreduced serving must force μ == recall bit-for-bit"
+    );
+    let rerun = run();
+    assert_eq!(
+        (samples, recall.to_bits(), mu.to_bits()),
+        (rerun.0, rerun.1.to_bits(), rerun.2.to_bits()),
+        "probe gauges diverged across identical runs"
+    );
+}

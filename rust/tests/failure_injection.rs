@@ -193,6 +193,7 @@ fn stalled_rpc_worker_socket_hits_the_deadline_and_is_counted() {
         listen: "127.0.0.1:0".to_string(),
         connect_timeout_ms: 150,
         request_deadline_ms: 150,
+        ..Default::default()
     };
     let registry = Arc::new(Registry::new());
     let mut gw = Gateway::new(specs, cfg, Arc::clone(&registry));
@@ -243,7 +244,7 @@ fn corrupt_rpc_frame_gets_a_typed_error_then_a_clean_close() {
     assert_eq!(rid, 7);
     assert!(matches!(ack, Message::HelloAck { .. }), "got {}", ack.kind_name());
 
-    t.send(8, &Message::Search { k: 3, query: vec![0.25; dim] }).unwrap();
+    t.send(8, &Message::Search { k: 3, query: vec![0.25; dim], trace_id: None }).unwrap();
     match t.recv() {
         Ok((_, Message::Error { message })) => {
             assert!(message.contains("crc"), "typed reason expected, got: {message}");
@@ -280,7 +281,7 @@ fn truncated_rpc_frame_closes_the_connection_not_the_worker() {
     assert!(matches!(t.recv().unwrap().1, Message::HelloAck { .. }));
     // Only the first 30 of the search frame's bytes leave; sever the write
     // half so the worker sees EOF mid-frame instead of a stall.
-    t.send(2, &Message::Search { k: 3, query: vec![0.5; dim] }).unwrap();
+    t.send(2, &Message::Search { k: 3, query: vec![0.5; dim], trace_id: None }).unwrap();
     t.inner().shutdown(std::net::Shutdown::Write).unwrap();
     assert!(t.recv().is_err(), "truncated frame cannot produce a reply");
 
@@ -291,9 +292,9 @@ fn truncated_rpc_frame_closes_the_connection_not_the_worker() {
     conn.send(1, &Message::Hello { version: PROTOCOL_VERSION }).unwrap();
     assert!(matches!(conn.recv().unwrap().1, Message::HelloAck { .. }));
     let q = &rows[..dim];
-    conn.send(2, &Message::Search { k: 3, query: q.to_vec() }).unwrap();
+    conn.send(2, &Message::Search { k: 3, query: q.to_vec(), trace_id: None }).unwrap();
     match conn.recv().unwrap() {
-        (2, Message::SearchOk { neighbors }) => {
+        (2, Message::SearchOk { neighbors, .. }) => {
             let want: Vec<(u64, u32)> = index
                 .search(q, 3)
                 .unwrap()

@@ -1008,12 +1008,14 @@ fn prop_store_roundtrip() {
 /// panics.
 #[test]
 fn prop_rpc_frame_roundtrip() {
-    use opdr::rpc::{decode_frame, encode_frame, Message, HEADER_BYTES, MAX_PAYLOAD_BYTES};
+    use opdr::rpc::{
+        decode_frame, encode_frame, Message, WireTrace, HEADER_BYTES, MAX_PAYLOAD_BYTES,
+    };
     forall(
         PropConfig { cases: 60, seed: 7171 },
         |rng| {
             let rid = rng.next_u64();
-            let msg = match rng.below(7) {
+            let msg = match rng.below(9) {
                 0 => Message::Hello { version: rng.next_u64() as u32 },
                 1 => Message::HelloAck {
                     version: rng.next_u64() as u32,
@@ -1031,12 +1033,25 @@ fn prop_rpc_frame_roundtrip() {
                         query[at] =
                             f32::from_bits(0x7FC0_0000 | (rng.next_u64() as u32 & 0x003F_FFFF));
                     }
-                    Message::Search { k: rng.below(1000) as u32, query }
+                    // Half the cases carry the v2 trace tail.
+                    let trace_id = if rng.below(2) == 0 { None } else { Some(rng.next_u64()) };
+                    Message::Search { k: rng.below(1000) as u32, query, trace_id }
                 }
                 3 => Message::SearchOk {
                     neighbors: (0..rng.below(48))
                         .map(|_| (rng.next_u64(), f32::from_bits(rng.next_u64() as u32)))
                         .collect(),
+                    trace: if rng.below(2) == 0 {
+                        None
+                    } else {
+                        Some(WireTrace {
+                            trace_id: rng.next_u64(),
+                            queue_ns: rng.next_u64(),
+                            scan_ns: rng.next_u64(),
+                            rerank_ns: rng.next_u64(),
+                            merge_ns: rng.next_u64(),
+                        })
+                    },
                 },
                 4 => Message::Error {
                     message: (0..rng.below(40))
@@ -1044,6 +1059,12 @@ fn prop_rpc_frame_roundtrip() {
                         .collect(),
                 },
                 5 => Message::Ping,
+                6 => Message::MetricsPull,
+                7 => Message::MetricsText {
+                    text: (0..rng.below(60))
+                        .map(|_| char::from(b' ' + rng.below(90) as u8))
+                        .collect(),
+                },
                 _ => Message::Pong,
             };
             (rid, msg, rng.below(512), rng.below(512))
@@ -1190,6 +1211,7 @@ fn prop_distributed_search_is_order_exact() {
                     listen: "127.0.0.1:0".to_string(),
                     connect_timeout_ms: 2000,
                     request_deadline_ms: 4000,
+                    ..Default::default()
                 };
                 let mut gw = Gateway::new(specs, cfg, Arc::new(Registry::new()));
                 let res = gw.search(q, *k).map_err(|e| e.to_string())?;
