@@ -1,4 +1,60 @@
 //! Typed, validated configuration structs on top of the TOML-subset parser.
+//!
+//! # Key reference
+//!
+//! The tables below list every key the parsers accept; `opdr-lint`'s
+//! `config-docs-sync` rule checks them against the match arms in
+//! `from_toml_str` in both directions, so a key cannot be added, renamed,
+//! or removed without this reference moving with it. All keys are optional;
+//! defaults in parentheses.
+//!
+//! Keys of the `[serve]` table ([`ServeConfig`]):
+//!
+//! | key | type | meaning |
+//! |-----|------|---------|
+//! | `workers` | int | worker threads in the search pool (4) |
+//! | `max_batch` | int | dynamic batcher: max requests per batch (32) |
+//! | `max_wait_ms` | int | dynamic batcher: max wait before a partial flush (2) |
+//! | `queue_capacity` | int | request queue backpressure bound (1024) |
+//! | `default_k` | int | default top-k for searches (10) |
+//! | `use_runtime` | bool | PJRT accelerated distance path when artifacts exist (false) |
+//! | `artifacts_dir` | string | artifacts directory ("artifacts") |
+//! | `ivf_threshold` | int | collection size above which the ANN index serves (4096) |
+//! | `ivf_nlist` | int | IVF cells (64) |
+//! | `ivf_nprobe` | int | IVF cells probed per query (8) |
+//! | `index_kind` | string | ANN structure: "exact" \| "ivf" \| "hnsw" ("ivf") |
+//! | `index_sq8` | bool | SQ8-quantized vector storage (false) |
+//! | `sq8_global_codebook` | bool | one SQ8 codebook per collection, not per shard (false) |
+//! | `index_pq` | bool | product-quantized storage, ADC + rerank search (false) |
+//! | `index_pq_m` | int | PQ subquantizers, 0 = auto dim/2 (0) |
+//! | `index_pq_ksub` | int | PQ centroids per subspace (16) |
+//! | `index_pq_opq` | bool | train an OPQ rotation before encoding (false) |
+//! | `rerank_depth` | int | ADC candidates re-scored at full precision (64) |
+//! | `hnsw_m` | int | HNSW max links per node (16) |
+//! | `hnsw_ef_construction` | int | HNSW construction beam width (100) |
+//! | `hnsw_ef_search` | int | HNSW search beam width (64) |
+//! | `hnsw_heuristic` | bool | Malkov Algorithm 4 neighbor selection (true) |
+//! | `shards` | int | index segments per collection (1) |
+//! | `shard_min_vectors` | int | minimum rows per index segment (1024) |
+//! | `build_workers` | int | dedicated index-build pool size (2) |
+//! | `incremental_ingest` | bool | absorb appends into the delta segment (true) |
+//! | `delta_max_vectors` | int | delta rows that trigger background compaction (2048) |
+//! | `cold_tier` | string | full-precision row home: "ram" \| "mmap" ("ram") |
+//! | `cold_dir` | string | directory for cold-tier vector files ("cold") |
+//! | `recall_probe` | bool | background recall/μ probe on sampled queries (false) |
+//! | `recall_probe_every` | int | probe sampling stride, 1 = every query (16) |
+//!
+//! Keys of the `[dist]` table ([`DistConfig`]):
+//!
+//! | key | type | meaning |
+//! |-----|------|---------|
+//! | `workers` | int | shard-worker processes, 0 = distribution off (0) |
+//! | `listen` | string | worker listen template, port 0 = ephemeral ("127.0.0.1:0") |
+//! | `connect_timeout_ms` | int | gateway→worker dial + handshake deadline (1000) |
+//! | `request_deadline_ms` | int | per-query per-shard deadline before partial (2000) |
+//! | `tracing` | bool | trace tails + stage histograms + flight recorder (true) |
+//! | `recorder_capacity` | int | flight-recorder ring capacity (128) |
+//! | `slow_query_ms` | int | gateway latency that pins a query in the recorder (250) |
 
 use crate::config::toml::{parse_toml, TomlValue};
 use crate::data::DatasetKind;

@@ -11,7 +11,7 @@ use crate::metrics::Metric;
 use crate::pool::ThreadPool;
 use crate::runtime::Engine;
 use crate::telemetry::{registry, Metrics, ProbeJob, RecallProbe};
-use crate::util::Stopwatch;
+use crate::util::{lock_recover, Stopwatch};
 use std::collections::HashMap;
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
@@ -34,24 +34,24 @@ pub struct BuildTracker {
 impl BuildTracker {
     /// Record a build starting for `collection`.
     pub fn begin(&self, collection: &str) {
-        *self.inner.lock().unwrap().entry(collection.to_string()).or_insert(0) += 1;
+        *lock_recover(&self.inner).entry(collection.to_string()).or_insert(0) += 1;
     }
 
     /// Record a completed (installed) delta compaction for `collection`.
     pub fn record_compaction(&self, collection: &str) {
-        *self.compactions.lock().unwrap().entry(collection.to_string()).or_insert(0) += 1;
+        *lock_recover(&self.compactions).entry(collection.to_string()).or_insert(0) += 1;
     }
 
     /// Delta compactions completed for `collection` since startup.
     pub fn compactions(&self, collection: &str) -> u64 {
-        self.compactions.lock().unwrap().get(collection).copied().unwrap_or(0)
+        lock_recover(&self.compactions).get(collection).copied().unwrap_or(0)
     }
 
     /// Record a build finishing for `collection` (saturating; entries drop
     /// at zero so the map stays bounded by the set of rebuilding
     /// collections).
     pub fn finish(&self, collection: &str) {
-        let mut map = self.inner.lock().unwrap();
+        let mut map = lock_recover(&self.inner);
         if let Some(count) = map.get_mut(collection) {
             *count = count.saturating_sub(1);
             if *count == 0 {
@@ -62,13 +62,13 @@ impl BuildTracker {
 
     /// Builds currently in flight for `collection`.
     pub fn in_flight(&self, collection: &str) -> usize {
-        self.inner.lock().unwrap().get(collection).copied().unwrap_or(0)
+        lock_recover(&self.inner).get(collection).copied().unwrap_or(0)
     }
 
     /// Total builds in flight across all collections (the stats summary
     /// line reports it).
     pub fn total(&self) -> usize {
-        self.inner.lock().unwrap().values().sum()
+        lock_recover(&self.inner).values().sum()
     }
 }
 
@@ -1341,5 +1341,39 @@ mod tests {
             assert_eq!(got, want, "query {qi} diverged under pq");
         }
         coord.shutdown();
+    }
+
+    #[test]
+    fn poisoned_build_tracker_keeps_counting() {
+        // Regression companion to the state-layer poison tests: a panic in
+        // a build worker holding a tracker lock must not take down stats
+        // reporting or the deferred-build bookkeeping on other threads.
+        let t = BuildTracker::default();
+        t.begin("c");
+        t.begin("c");
+        t.record_compaction("c");
+        fn poison<T: Send>(m: &Mutex<T>) {
+            std::thread::scope(|s| {
+                let r = s
+                    .spawn(|| {
+                        // lint:allow(no-naked-lock-unwrap: deliberately poisoning the lock)
+                        let _g = m.lock().unwrap();
+                        panic!("poison");
+                    })
+                    .join();
+                assert!(r.is_err(), "the poisoning thread must have panicked");
+            });
+            assert!(m.is_poisoned());
+        }
+        poison(&t.inner);
+        poison(&t.compactions);
+
+        // Reads and writes keep working across both poisoned locks.
+        assert_eq!(t.in_flight("c"), 2);
+        assert_eq!(t.total(), 2);
+        t.finish("c");
+        assert_eq!(t.in_flight("c"), 1);
+        t.record_compaction("c");
+        assert_eq!(t.compactions("c"), 2);
     }
 }

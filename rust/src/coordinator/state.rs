@@ -10,7 +10,7 @@ use crate::opdr::Planner;
 use crate::pool::ThreadPool;
 use crate::reduction::{Pca, PcaModel, ReducerKind};
 use crate::telemetry::BuildSpans;
-use crate::util::Stopwatch;
+use crate::util::{lock_recover, Stopwatch};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
@@ -34,17 +34,17 @@ pub struct IndexSlot {
 impl IndexSlot {
     /// Snapshot the current index (if any).
     pub fn load(&self) -> Option<Arc<dyn AnnIndex>> {
-        self.inner.lock().unwrap().1.clone()
+        lock_recover(&self.inner).1.clone()
     }
 
     /// Current generation (captured before a build, checked at install).
     pub fn generation(&self) -> u64 {
-        self.inner.lock().unwrap().0
+        lock_recover(&self.inner).0
     }
 
     /// Drop the index and bump the generation (serving state changed).
     pub fn invalidate(&self) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_recover(&self.inner);
         g.0 += 1;
         g.1 = None;
     }
@@ -55,7 +55,7 @@ impl IndexSlot {
     /// so an explicitly built or loaded index is never silently replaced by
     /// a stale rebuild finishing afterwards.
     pub fn replace(&self, index: Arc<dyn AnnIndex>) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_recover(&self.inner);
         g.0 += 1;
         g.1 = Some(index);
     }
@@ -73,7 +73,7 @@ impl IndexSlot {
     /// [`invalidate`](IndexSlot::invalidate) — ensuring an in-flight build
     /// covering fewer rows can never install.
     pub fn append_delta(&self, rows: &[f32]) -> bool {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_recover(&self.inner);
         let Some(cur) = g.1.clone() else {
             g.0 += 1;
             return false;
@@ -117,7 +117,7 @@ impl IndexSlot {
         covered: usize,
         generation: u64,
     ) -> bool {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_recover(&self.inner);
         if g.0 != generation {
             return false;
         }
@@ -311,15 +311,15 @@ impl Collection {
     }
 
     fn invalidate_caches(&self) {
-        *self.serving_cache.lock().unwrap() = None;
-        *self.full_cache.lock().unwrap() = None;
-        *self.padded_cache.lock().unwrap() = None;
+        *lock_recover(&self.serving_cache) = None;
+        *lock_recover(&self.full_cache) = None;
+        *lock_recover(&self.padded_cache) = None;
     }
 
     /// Shared snapshot of the serving vectors (built lazily, invalidated on
     /// state changes). Worker threads score against this without copying.
     pub fn serving_arc(&self) -> Arc<Vec<f32>> {
-        let mut guard = self.serving_cache.lock().unwrap();
+        let mut guard = lock_recover(&self.serving_cache);
         if let Some(arc) = guard.as_ref() {
             return Arc::clone(arc);
         }
@@ -333,7 +333,7 @@ impl Collection {
     /// [`Collection::serving_arc`]). The recall probe scans this off-thread
     /// for the exact full-space neighbor sets.
     pub fn full_arc(&self) -> Arc<Vec<f32>> {
-        let mut guard = self.full_cache.lock().unwrap();
+        let mut guard = lock_recover(&self.full_cache);
         if let Some(arc) = guard.as_ref() {
             return Arc::clone(arc);
         }
@@ -344,7 +344,7 @@ impl Collection {
 
     /// Cached zero-padded serving block for the PJRT artifact path.
     pub fn padded_base(&self, n_cap: usize, d_cap: usize) -> Result<Arc<PaddedBase>> {
-        let mut guard = self.padded_cache.lock().unwrap();
+        let mut guard = lock_recover(&self.padded_cache);
         if let Some((key, arc)) = guard.as_ref() {
             if *key == (n_cap, d_cap) {
                 return Ok(Arc::clone(arc));
@@ -1205,5 +1205,71 @@ mod tests {
         let mut c = Collection::new("tiny", 8, Metric::Euclidean).unwrap();
         c.ingest(&[0.0; 16]).unwrap(); // 2 vectors
         assert!(c.build_reduced(0.8, 5, 10, 1).is_err());
+    }
+
+    /// Poison `m` the way a real incident would: a thread panics while
+    /// holding the guard.
+    fn poison<T: Send>(m: &Mutex<T>) {
+        std::thread::scope(|s| {
+            let r = s
+                .spawn(|| {
+                    // lint:allow(no-naked-lock-unwrap: deliberately poisoning the lock)
+                    let _g = m.lock().unwrap();
+                    panic!("poison");
+                })
+                .join();
+            assert!(r.is_err(), "the poisoning thread must have panicked");
+        });
+        assert!(m.is_poisoned());
+    }
+
+    #[test]
+    fn poisoned_serving_cache_keeps_serving() {
+        // Regression (PR 4 only covered telemetry): a panic while holding a
+        // collection cache lock must not turn every later search on other
+        // threads into a poison panic. The caches hold idempotently
+        // rebuildable snapshots, so recovery is always sound.
+        let mut c = seeded_collection(50, 16);
+        let before = c.search_projected(&c.data()[..16].to_vec(), 5).unwrap();
+        poison(&c.serving_cache);
+        poison(&c.full_cache);
+        poison(&c.padded_cache);
+
+        // Cache reads, rebuilds, and invalidation all keep working …
+        let arc = c.serving_arc();
+        assert_eq!(arc.len(), 50 * 16);
+        assert_eq!(c.full_arc().len(), 50 * 16);
+        let after = c.search_projected(&c.data()[..16].to_vec(), 5).unwrap();
+        crate::testing::assert_same_neighbors(&before, &after);
+
+        // … including the invalidate-on-ingest path across the same locks.
+        c.ingest_incremental(&vec![0.25; 16]).unwrap();
+        assert_eq!(c.serving_arc().len(), 51 * 16);
+    }
+
+    #[test]
+    fn poisoned_index_slot_keeps_swapping() {
+        let slot = IndexSlot::default();
+        let set = synth::generate(DatasetKind::MaterialsObservable, 30, 8, 3);
+        let ix: Arc<dyn AnnIndex> = Arc::from(
+            crate::index::build_index(set.data(), 8, Metric::SqEuclidean, &IndexPolicy::default(), 7)
+                .unwrap(),
+        );
+        slot.replace(Arc::clone(&ix));
+        let gen_before = slot.generation();
+        poison(&slot.inner);
+
+        // Every slot operation still works on the poisoned mutex: loads,
+        // generation reads, delta appends, and the rebase-guarded install.
+        assert!(slot.load().is_some());
+        assert_eq!(slot.generation(), gen_before);
+        assert!(slot.append_delta(&[0.5; 8]));
+        assert!(slot.load().unwrap().as_delta().is_some());
+        // The compaction snapshotted 30 rows; the raced-in append survives
+        // the install as the re-parented delta — poison changed nothing.
+        assert!(slot.install_rebased(ix, 30, gen_before));
+        let installed = slot.load().unwrap();
+        assert_eq!(installed.len(), 31);
+        assert!(installed.as_delta().is_some());
     }
 }

@@ -518,6 +518,7 @@ pub(crate) fn write_cold_framed(
     header.write(w)?;
     w.write_all(body)?;
     let pad = header.annex_offset - HEADER_BYTES - body.len();
+    // lint:allow(bounded-prealloc: write path; pad < ALIGN by construction, not wire data)
     w.write_all(&vec![0u8; pad])?;
     io::write_f32s(w, &annex.rows)?;
     Ok(())

@@ -55,7 +55,7 @@
 use crate::data::mapped::{self, AnnexWriter, ColdContext, VectorFile};
 use crate::data::EmbeddingSet;
 use crate::error::{OpdrError, Result};
-use crate::index::io::{read_u32, read_u64};
+use crate::index::io::{read_bytes, read_u32, read_u64};
 use crate::index::AnnIndex;
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::Path;
@@ -109,8 +109,9 @@ pub fn read_embeddings<R: Read>(r: &mut R) -> Result<EmbeddingSet> {
     if label_len > 1 << 20 {
         return Err(OpdrError::data("store: unreasonable label length"));
     }
-    let mut label_bytes = vec![0u8; label_len];
-    r.read_exact(&mut label_bytes)?;
+    // Bounded preallocation (ALLOC_CHUNK contract): the length came off the
+    // wire, so the buffer grows only as bytes actually arrive.
+    let label_bytes = read_bytes(r, label_len)?;
     let label = String::from_utf8(label_bytes)
         .map_err(|_| OpdrError::data("store: label not UTF-8"))?;
     let n = read_u64(r)? as usize;
@@ -360,8 +361,9 @@ fn load_index_impl(path: &Path, prefer_mmap: bool) -> Result<Box<dyn AnnIndex>> 
     let header = file.header().clone();
     let mut f = std::fs::File::open(path)?;
     f.seek(SeekFrom::Start(mapped::HEADER_BYTES as u64))?;
-    let mut body = vec![0u8; header.body_len];
-    f.read_exact(&mut body)?;
+    // Bounded preallocation (ALLOC_CHUNK contract): `body_len` is a header
+    // field off disk; read_bytes clamps the upfront allocation.
+    let body = read_bytes(&mut f, header.body_len)?;
     parse_cold_body(header.inner_version, &body, &ColdContext { file: Arc::new(file) })
 }
 

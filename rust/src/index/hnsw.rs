@@ -63,7 +63,9 @@ impl Default for HnswParams {
     }
 }
 
-/// f32 with a total order (NaN compares equal; indexed data is finite).
+/// f32 with the IEEE-754 `totalOrder` (indexed data is finite, but a NaN
+/// that ever leaked in would sort to the ends instead of silently comparing
+/// equal to everything and scrambling the candidate heaps).
 #[derive(Debug, Clone, Copy, PartialEq)]
 struct OrdF32(f32);
 
@@ -77,7 +79,7 @@ impl PartialOrd for OrdF32 {
 
 impl Ord for OrdF32 {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.0.partial_cmp(&other.0).unwrap_or(std::cmp::Ordering::Equal)
+        self.0.total_cmp(&other.0)
     }
 }
 

@@ -23,11 +23,12 @@ impl PartialOrd for HeapItem {
 }
 impl Ord for HeapItem {
     fn cmp(&self, other: &Self) -> Ordering {
-        // Ties broken by index for full determinism.
-        self.dist
-            .partial_cmp(&other.dist)
-            .unwrap_or(Ordering::Equal)
-            .then(self.idx.cmp(&other.idx))
+        // Ties broken by index for full determinism. `total_cmp` (not
+        // `partial_cmp(..).unwrap_or(Equal)`): NaNs are filtered before
+        // insertion, but the silent-Equal fallback would still desync this
+        // ordering from the `total_cmp` oracle the property tests sort with
+        // (-0.0 < +0.0 under total order), and it hides any future NaN leak.
+        self.dist.total_cmp(&other.dist).then(self.idx.cmp(&other.idx))
     }
 }
 
@@ -53,14 +54,16 @@ where
         if heap.len() < k {
             heap.push(HeapItem { dist, idx });
         } else if let Some(worst) = heap.peek() {
-            if (dist, idx) < (worst.dist, worst.idx) {
+            // Same total order as the heap itself, so insertion and eviction
+            // can never disagree on ties or signed zeros.
+            if (HeapItem { dist, idx }) < *worst {
                 heap.pop();
                 heap.push(HeapItem { dist, idx });
             }
         }
     }
     let mut out: Vec<(usize, f32)> = heap.into_iter().map(|h| (h.idx, h.dist)).collect();
-    out.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(Ordering::Equal).then(a.0.cmp(&b.0)));
+    out.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
     out
 }
 
@@ -137,6 +140,25 @@ mod tests {
         assert!(merge_top_k(a.iter().copied(), 0).is_empty());
         // k larger than the candidate set returns all finite entries.
         assert_eq!(merge_top_k(a.iter().copied(), 10).len(), 2);
+    }
+
+    #[test]
+    fn signed_zeros_follow_total_order() {
+        // total_cmp puts -0.0 strictly before +0.0, so equal-magnitude zero
+        // distances order by sign first, then by index — bit-identical to
+        // the total_cmp oracle the property tests use.
+        let d = [0.0f32, -0.0, 0.0, -0.0];
+        let t = top_k_smallest(&d, 4);
+        assert_eq!(t.iter().map(|x| x.0).collect::<Vec<_>>(), vec![1, 3, 0, 2]);
+        // And the bounded heap agrees with the exhaustive sort at every k.
+        for k in 1..=4 {
+            let bounded = top_k_smallest(&d, k);
+            assert_eq!(
+                bounded.iter().map(|x| x.0).collect::<Vec<_>>(),
+                [1usize, 3, 0, 2][..k].to_vec(),
+                "k={k}"
+            );
+        }
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! ([`crate::index::shard`]) run on it; the coordinator re-exports it for
 //! compatibility.
 
+use crate::util::lock_recover;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -38,7 +39,7 @@ impl ThreadPool {
                     .name(format!("opdr-worker-{i}"))
                     .spawn(move || loop {
                         let job = {
-                            let guard = rx.lock().unwrap();
+                            let guard = lock_recover(&rx);
                             guard.recv()
                         };
                         match job {

@@ -79,6 +79,7 @@ impl FaultScript {
     /// shape every matrix case uses (skip 0 = fault the handshake frame,
     /// skip 1 = fault the first post-handshake frame).
     pub fn fault_at(skip: usize, fault: Fault) -> FaultScript {
+        // lint:allow(bounded-prealloc: `skip` is a test-script position (0 or 1), not wire data)
         let mut faults = vec![Fault::None; skip];
         faults.push(fault);
         FaultScript { faults }

@@ -381,6 +381,7 @@ pub fn encode_frame(request_id: u64, msg: &Message) -> Result<Vec<u8>> {
             MAX_PAYLOAD_BYTES
         )));
     }
+    // lint:allow(bounded-prealloc: encode path; payload.len() was cap-checked above)
     let mut buf = Vec::with_capacity(HEADER_BYTES + payload.len());
     buf.extend_from_slice(&FRAME_MAGIC);
     buf.push(msg.kind_tag());

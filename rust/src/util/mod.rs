@@ -1,8 +1,10 @@
-//! Small shared utilities: seeded RNG, timing, float helpers.
+//! Small shared utilities: seeded RNG, timing, float helpers, lock hygiene.
 
 pub mod float;
 pub mod rng;
+pub mod sync;
 pub mod timer;
 
 pub use rng::Rng;
+pub use sync::lock_recover;
 pub use timer::Stopwatch;

@@ -1,0 +1,38 @@
+//! Poison-recovering lock acquisition — the repo-wide convention for every
+//! `Mutex` guard (machine-checked by `opdr-lint`'s `no-naked-lock-unwrap`).
+
+use std::sync::{Mutex, MutexGuard};
+
+/// Acquire `m`, recovering the data if a previous holder panicked.
+///
+/// A naked `.lock().unwrap()` turns one panicked thread into a cascade:
+/// every later acquirer dies on the poison flag even though the protected
+/// data (counters, caches, histogram buckets) is still structurally sound.
+/// Everything this repo guards with a `Mutex` is either idempotently
+/// rebuildable (index-slot caches are invalidated wholesale, never patched)
+/// or monotonic (telemetry counters), so serving degraded data beats
+/// killing the serving thread. Callers whose critical sections could leave
+/// *semantically* torn state must not use this — they should hold the guard
+/// only around already-computed values (the pattern the coordinator uses).
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    #[test]
+    fn recovers_after_a_poisoning_panic() {
+        let m = Mutex::new(7u32);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = m.lock().unwrap(); // lint:allow(no-naked-lock-unwrap: deliberately poisoning)
+            panic!("poison it");
+        }));
+        assert!(res.is_err());
+        assert!(m.is_poisoned());
+        *lock_recover(&m) += 1;
+        assert_eq!(*lock_recover(&m), 8);
+    }
+}

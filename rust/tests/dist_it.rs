@@ -286,7 +286,7 @@ fn worker_crash_mid_storm_respawns_and_heals_bitwise() {
         let factory = Box::new(move || -> opdr::Result<Box<dyn WorkerHandle>> {
             let w = ThreadWorker::spawn_from_file(path.to_str().unwrap(), start)?;
             if let Some(hook) = &crash_hook {
-                *hook.lock().unwrap() = Some(w.stop_flag());
+                *opdr::util::lock_recover(hook) = Some(w.stop_flag());
             }
             Ok(Box::new(w) as Box<dyn WorkerHandle>)
         });
@@ -308,7 +308,8 @@ fn worker_crash_mid_storm_respawns_and_heals_bitwise() {
     let mut partials = 0usize;
     for i in 0..200 {
         if i == 40 {
-            let flag = current_stop.lock().unwrap().clone().expect("worker 0 never spawned");
+            let flag =
+                opdr::util::lock_recover(&current_stop).clone().expect("worker 0 never spawned");
             flag.store(true, Ordering::Relaxed);
         }
         let r = gw.search(set.vector(i % n), K).unwrap();

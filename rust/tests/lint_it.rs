@@ -1,0 +1,343 @@
+//! The lint gate, as a test: `opdr-lint` must pass clean on the live tree,
+//! and every rule must both fire on a bad fixture and stay silent on a good
+//! one (with the `// lint:allow(rule)` escape hatch exercised). CI runs the
+//! standalone binary as a blocking step; this suite is the same engine
+//! in-process, so `cargo test` alone catches a violation or a regressed
+//! rule. Removing a rule's fixture here trips the fixture-presence guard in
+//! `.github/workflows/ci.yml`.
+
+use std::path::PathBuf;
+
+use opdr_lint::{lint_sources, Finding};
+
+/// Lint one synthetic file at `path` with the given source.
+fn lint_one(path: &str, src: &str) -> Vec<Finding> {
+    lint_sources(&[(PathBuf::from(path), src.to_string())])
+}
+
+fn rule_names(findings: &[Finding]) -> Vec<&'static str> {
+    findings.iter().map(|f| f.rule).collect()
+}
+
+// ---------------------------------------------------------------------------
+// the gate itself: the live tree must be clean
+// ---------------------------------------------------------------------------
+
+#[test]
+fn live_tree_is_clean() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let scope: Vec<PathBuf> =
+        ["src", "tests", "benches"].iter().map(|d| root.join(d)).collect();
+    let findings = opdr_lint::lint_paths(&scope).expect("walking the live tree");
+    assert!(
+        findings.is_empty(),
+        "opdr-lint must pass clean on the tree; violations:\n{}",
+        findings.iter().map(|f| format!("  {f}\n")).collect::<String>()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// per-rule fixture matrix: each rule fires on bad, stays silent on good
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fixture_no_partial_cmp_ordering() {
+    let bad = r#"
+fn worst(xs: &mut Vec<(usize, f32)>) {
+    xs.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal));
+    let _ = xs[0].1.partial_cmp(&xs[1].1).unwrap();
+}
+"#;
+    let findings = lint_one("rust/src/knn/fixture.rs", bad);
+    assert_eq!(rule_names(&findings), ["no-partial-cmp-ordering"; 2]);
+    assert_eq!(findings[0].line, 3, "diagnostic must carry the offending line");
+
+    let good = r#"
+fn worst(xs: &mut Vec<(usize, f32)>) {
+    xs.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+}
+impl PartialOrd for Item {
+    // Definitions (not call chains) of partial_cmp are fine.
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+"#;
+    assert!(lint_one("rust/src/knn/fixture.rs", good).is_empty());
+
+    // Content inside string literals and comments never fires.
+    let quoted = r##"
+// a.partial_cmp(&b).unwrap() used to live here
+const DOC: &str = "a.partial_cmp(&b).unwrap()";
+"##;
+    assert!(lint_one("rust/src/knn/fixture.rs", quoted).is_empty());
+}
+
+#[test]
+fn fixture_no_naked_lock_unwrap() {
+    let bad = r#"
+fn stats(m: &std::sync::Mutex<u64>) -> u64 {
+    *m.lock().unwrap()
+}
+fn stats2(m: &std::sync::Mutex<u64>) -> u64 {
+    *m.lock().expect("poisoned")
+}
+"#;
+    let findings = lint_one("rust/src/coordinator/fixture.rs", bad);
+    assert_eq!(rule_names(&findings), ["no-naked-lock-unwrap"; 2]);
+    assert_eq!(findings[0].line, 3);
+
+    // lock_recover (and its own unwrap_or_else implementation) are clean.
+    let good = r#"
+fn stats(m: &std::sync::Mutex<u64>) -> u64 {
+    *crate::util::lock_recover(m)
+}
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+"#;
+    assert!(lint_one("rust/src/coordinator/fixture.rs", good).is_empty());
+}
+
+#[test]
+fn fixture_bounded_prealloc() {
+    // Wire-decoded sizes handed straight to allocation, in a decode path.
+    let bad = r#"
+fn decode(r: &mut dyn Read) -> Vec<u8> {
+    let n = read_u32(r).unwrap() as usize;
+    let mut header = Vec::with_capacity(n);
+    let mut body = vec![0u8; n];
+    body
+}
+"#;
+    let findings = lint_one("rust/src/rpc/frame.rs", bad);
+    assert_eq!(rule_names(&findings), ["bounded-prealloc"; 2]);
+    assert_eq!(findings[0].line, 4);
+    assert_eq!(findings[1].line, 5);
+
+    // Clamped through ALLOC_CHUNK or literal-sized: clean.
+    let good = r#"
+fn decode(r: &mut dyn Read) -> Vec<u8> {
+    let n = read_u32(r).unwrap() as usize;
+    let mut out = Vec::with_capacity(n.min(ALLOC_CHUNK));
+    let scratch = vec![0u8; 8192];
+    let reader = BufReader::with_capacity(1 << 20, file);
+    out
+}
+"#;
+    assert!(lint_one("rust/src/rpc/frame.rs", good).is_empty());
+
+    // The rule is scoped: the same bad code outside the decode paths is the
+    // responsibility of review, not this rule.
+    assert!(lint_one("rust/src/knn/topk.rs", bad).is_empty());
+}
+
+#[test]
+fn fixture_unsafe_needs_safety_comment() {
+    let bad = r#"
+fn read(p: *const u8) -> u8 {
+    unsafe { *p }
+}
+"#;
+    let findings = lint_one("rust/src/data/fixture.rs", bad);
+    assert_eq!(rule_names(&findings), ["unsafe-needs-safety-comment"]);
+    assert_eq!(findings[0].line, 3);
+
+    let good = r#"
+// SAFETY: callers pass a pointer into the validated, mapped region; the
+// header check guarantees it is in bounds and aligned.
+fn read(p: *const u8) -> u8 {
+    unsafe { *p }
+}
+"#;
+    assert!(lint_one("rust/src/data/fixture.rs", good).is_empty());
+
+    // A SAFETY comment far above the unsafe does not cover it.
+    let stale = format!("// SAFETY: stale\n{}fn f(p: *const u8) -> u8 {{ unsafe {{ *p }} }}\n", "\n".repeat(8));
+    assert_eq!(rule_names(&lint_one("rust/src/data/fixture.rs", &stale)), ["unsafe-needs-safety-comment"]);
+}
+
+#[test]
+fn fixture_metric_docs_sync() {
+    let registry = r#"
+pub const REQUESTS: &str = "opdr_requests_total";
+pub const PARTIALS: &str = "opdr_rpc_partial_total";
+"#;
+    let docs_synced = "//! | `opdr_requests_total` | counter | served requests |\n\
+                       //! | `opdr_rpc_partial_total{worker}` | counter | degraded answers |\n";
+    let corpus_ok = vec![
+        (PathBuf::from("rust/src/telemetry/registry.rs"), registry.to_string()),
+        (PathBuf::from("rust/src/coordinator/mod.rs"), docs_synced.to_string()),
+    ];
+    assert!(lint_sources(&corpus_ok).is_empty());
+
+    // Direction 1: a constant the table does not document.
+    let docs_short = "//! | `opdr_requests_total` | counter | served requests |\n";
+    let corpus = vec![
+        (PathBuf::from("rust/src/telemetry/registry.rs"), registry.to_string()),
+        (PathBuf::from("rust/src/coordinator/mod.rs"), docs_short.to_string()),
+    ];
+    let findings = lint_sources(&corpus);
+    assert_eq!(rule_names(&findings), ["metric-docs-sync"]);
+    assert!(findings[0].file.ends_with("registry.rs"));
+    assert!(findings[0].msg.contains("opdr_rpc_partial_total"));
+
+    // Direction 2: a documented metric with no constant behind it.
+    let docs_ghost = "//! | `opdr_requests_total` | counter | served requests |\n\
+                      //! | `opdr_rpc_partial_total` | counter | degraded answers |\n\
+                      //! | `opdr_ghost_metric` | gauge | removed last PR |\n";
+    let corpus = vec![
+        (PathBuf::from("rust/src/telemetry/registry.rs"), registry.to_string()),
+        (PathBuf::from("rust/src/coordinator/mod.rs"), docs_ghost.to_string()),
+    ];
+    let findings = lint_sources(&corpus);
+    assert_eq!(rule_names(&findings), ["metric-docs-sync"]);
+    assert!(findings[0].file.ends_with("coordinator/mod.rs"));
+    assert_eq!(findings[0].line, 3);
+    assert!(findings[0].msg.contains("opdr_ghost_metric"));
+}
+
+#[test]
+fn fixture_config_docs_sync() {
+    let synced = r#"//! Fixture schema.
+//!
+//! Keys of the `[serve]` table:
+//!
+//! | key | type | meaning |
+//! |-----|------|---------|
+//! | `workers` | int | pool size |
+//!
+//! Keys of the `[dist]` table:
+//!
+//! | key | type | meaning |
+//! |-----|------|---------|
+//! | `workers` | int | shard workers |
+
+fn parse(root: &Value) -> Config {
+    let mut cfg = Config::default();
+    if let Some(t) = root.get_path("serve") {
+        for (key, val) in t {
+            match key.as_str() {
+                "workers" => cfg.workers = pos_int(val)?,
+                other => return err(other),
+            }
+        }
+    }
+    if let Some(t) = root.get_path("dist") {
+        for (key, val) in t {
+            match key.as_str() {
+                "workers" => cfg.dist_workers = pos_int(val)?,
+                other => return err(other),
+            }
+        }
+    }
+    cfg
+}
+"#;
+    assert!(lint_one("rust/src/config/schema.rs", synced).is_empty());
+
+    // An accepted key missing from the docs table fires at the match arm …
+    let undocumented = synced.replace(
+        "\"workers\" => cfg.dist_workers = pos_int(val)?,",
+        "\"workers\" => cfg.dist_workers = pos_int(val)?,\n                \"listen\" => cfg.listen = val.to_string(),",
+    );
+    let findings = lint_one("rust/src/config/schema.rs", &undocumented);
+    assert_eq!(rule_names(&findings), ["config-docs-sync"]);
+    assert!(findings[0].msg.contains("`listen`"));
+    assert!(findings[0].msg.contains("[dist]"));
+
+    // … and a documented key the parser rejects fires at the table row.
+    let ghost = synced.replace(
+        "//! | `workers` | int | shard workers |",
+        "//! | `workers` | int | shard workers |\n//! | `ghost` | int | removed |",
+    );
+    let findings = lint_one("rust/src/config/schema.rs", &ghost);
+    assert_eq!(rule_names(&findings), ["config-docs-sync"]);
+    assert!(findings[0].msg.contains("`ghost`"));
+
+    // Sections are independent: a [serve] row never documents a [dist] key.
+    // (The fixture's two `workers` arms prove the converse already.)
+    let value_arms_only = synced.replace(
+        "\"workers\" => cfg.workers = pos_int(val)?,",
+        "\"workers\" => cfg.workers = match val.as_str() { \"ram\" => 1, \"mmap\" => 2, _ => 0 },",
+    );
+    assert!(lint_one("rust/src/config/schema.rs", &value_arms_only).is_empty());
+}
+
+#[test]
+fn fixture_no_blanket_allow() {
+    let bad = "#![allow(dead_code)]\nfn f() {}\n";
+    assert_eq!(rule_names(&lint_one("rust/src/lib.rs", bad)), ["no-blanket-allow"]);
+
+    let bad_item = "#[allow(clippy::all)]\nfn f() {}\n";
+    assert_eq!(rule_names(&lint_one("rust/src/x.rs", bad_item)), ["no-blanket-allow"]);
+
+    let bad_warnings = "#[allow(warnings)]\nfn f() {}\n";
+    assert_eq!(rule_names(&lint_one("rust/src/x.rs", bad_warnings)), ["no-blanket-allow"]);
+
+    // Narrow, item-scoped allows stay allowed (the repo's six
+    // too_many_arguments sites are the canonical example).
+    let scoped = "#[allow(clippy::too_many_arguments)]\nfn f(a: u8, b: u8, c: u8) {}\n";
+    assert!(lint_one("rust/src/x.rs", scoped).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// escape hatch
+// ---------------------------------------------------------------------------
+
+#[test]
+fn escape_hatch_lint_allow() {
+    // Same line, with a reason.
+    let same = "fn f(m: &Mutex<u8>) { let _ = m.lock().unwrap(); } // lint:allow(no-naked-lock-unwrap: fixture)\n";
+    assert!(lint_one("rust/src/x.rs", same).is_empty());
+
+    // Line above, bare form.
+    let above = "// lint:allow(no-naked-lock-unwrap)\nfn f(m: &Mutex<u8>) { let _ = m.lock().unwrap(); }\n";
+    assert!(lint_one("rust/src/x.rs", above).is_empty());
+
+    // The allow names a rule, not a site: another rule still fires there.
+    let wrong = "// lint:allow(bounded-prealloc: wrong rule)\nfn f(m: &Mutex<u8>) { let _ = m.lock().unwrap(); }\n";
+    assert_eq!(rule_names(&lint_one("rust/src/x.rs", wrong)), ["no-naked-lock-unwrap"]);
+
+    // Reach is bounded: an allow three lines up no longer covers.
+    let far = "// lint:allow(no-naked-lock-unwrap)\n\n\nfn f(m: &Mutex<u8>) { let _ = m.lock().unwrap(); }\n";
+    assert_eq!(rule_names(&lint_one("rust/src/x.rs", far)), ["no-naked-lock-unwrap"]);
+
+    // An allow hidden inside a string literal is not an annotation.
+    let quoted = "const S: &str = \"lint:allow(no-naked-lock-unwrap)\";\nfn f(m: &Mutex<u8>) { let _ = m.lock().unwrap(); }\n";
+    assert_eq!(rule_names(&lint_one("rust/src/x.rs", quoted)), ["no-naked-lock-unwrap"]);
+}
+
+// ---------------------------------------------------------------------------
+// diagnostics shape
+// ---------------------------------------------------------------------------
+
+#[test]
+fn diagnostics_carry_file_line_and_rule() {
+    let findings = lint_one("rust/src/coordinator/fx.rs", "fn f(m: &Mutex<u8>) { m.lock().unwrap(); }\n");
+    assert_eq!(findings.len(), 1);
+    let shown = findings[0].to_string();
+    assert!(
+        shown.starts_with("rust/src/coordinator/fx.rs:1: [no-naked-lock-unwrap]"),
+        "diagnostic format regressed: {shown}"
+    );
+}
+
+#[test]
+fn every_rule_is_catalogued() {
+    // The rule list is the contract between this matrix, the CI guard, and
+    // the README catalogue; a rule must not exist without a summary.
+    let names: Vec<&str> = opdr_lint::RULES.iter().map(|(n, _)| *n).collect();
+    for expected in [
+        "no-partial-cmp-ordering",
+        "no-naked-lock-unwrap",
+        "bounded-prealloc",
+        "unsafe-needs-safety-comment",
+        "metric-docs-sync",
+        "config-docs-sync",
+        "no-blanket-allow",
+    ] {
+        assert!(names.contains(&expected), "rule {expected} missing from RULES");
+    }
+    assert!(opdr_lint::RULES.iter().all(|(_, s)| !s.is_empty()));
+}

@@ -1,0 +1,409 @@
+//! A minimal token-level Rust lexer.
+//!
+//! `opdr-lint` must build offline with zero registry dependencies (like the
+//! vendored `xla` stub), so it cannot use `syn`. The rules it enforces are
+//! all expressible over a token stream — method-call chains, attribute
+//! shapes, match arms, string-literal constants — so a full parse is not
+//! needed. What *is* needed, and what a grep-based checker cannot provide,
+//! is correct handling of comments, string/char literals, raw strings, and
+//! lifetimes, so that a forbidden pattern inside a doc comment or a test
+//! fixture string never fires and a `// SAFETY:` comment is reliably
+//! distinguished from code.
+//!
+//! The lexer produces two streams: code tokens (with the comments stripped)
+//! and the comments themselves, both carrying 1-based line numbers. Rules
+//! match on the token stream and consult the comment stream for `SAFETY:`
+//! annotations and `lint:allow(..)` escape hatches.
+
+/// Kinds of code tokens. Comments are reported separately (see [`Comment`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (the lexer does not distinguish them).
+    Ident,
+    /// Lifetime such as `'a` or `'static` (leading `'` included in text).
+    Lifetime,
+    /// Integer or float literal, including suffix (`1_000`, `1.5e-3f32`).
+    Number,
+    /// String literal of any flavour (`"…"`, `r#"…"#`, `b"…"`), with the
+    /// text field holding the *unquoted* contents (escapes left as written).
+    Str,
+    /// Character or byte literal (`'x'`, `b'\n'`), quotes stripped.
+    Char,
+    /// A single punctuation character (`.`, `(`, `=`, `>`, …). Multi-char
+    /// operators arrive as consecutive tokens; rules that care check
+    /// adjacency, which is sufficient for valid Rust input.
+    Punct,
+}
+
+/// One code token.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    /// 1-based line on which the token starts.
+    pub line: usize,
+}
+
+/// One comment (line or block), reported out-of-band from the code tokens.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    /// Full comment text including the `//` / `/*` markers.
+    pub text: String,
+    /// 1-based line on which the comment starts.
+    pub line: usize,
+}
+
+/// Lexer output: code tokens plus retained comments.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Tok>,
+    pub comments: Vec<Comment>,
+}
+
+/// Tokenize `src`. Never fails: unterminated literals are closed at EOF so
+/// the linter degrades gracefully on malformed input instead of panicking.
+pub fn lex(src: &str) -> Lexed {
+    Lexer { chars: src.chars().collect(), pos: 0, line: 1, out: Lexed::default() }.run()
+}
+
+struct Lexer {
+    chars: Vec<char>,
+    pos: usize,
+    line: usize,
+    out: Lexed,
+}
+
+impl Lexer {
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.pos + ahead).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.chars.get(self.pos).copied();
+        if let Some(c) = c {
+            self.pos += 1;
+            if c == '\n' {
+                self.line += 1;
+            }
+        }
+        c
+    }
+
+    fn push(&mut self, kind: TokKind, text: String, line: usize) {
+        self.out.tokens.push(Tok { kind, text, line });
+    }
+
+    fn run(mut self) -> Lexed {
+        while let Some(c) = self.peek(0) {
+            let line = self.line;
+            match c {
+                c if c.is_whitespace() => {
+                    self.bump();
+                }
+                '/' if self.peek(1) == Some('/') => self.line_comment(line),
+                '/' if self.peek(1) == Some('*') => self.block_comment(line),
+                '"' => {
+                    self.bump();
+                    self.quoted_string(line);
+                }
+                'r' | 'b' => self.ident_or_prefixed_literal(line),
+                '\'' => self.char_or_lifetime(line),
+                c if c.is_alphabetic() || c == '_' => self.ident(line),
+                c if c.is_ascii_digit() => self.number(line),
+                _ => {
+                    self.bump();
+                    self.push(TokKind::Punct, c.to_string(), line);
+                }
+            }
+        }
+        self.out
+    }
+
+    fn line_comment(&mut self, line: usize) {
+        let mut text = String::new();
+        while let Some(c) = self.peek(0) {
+            if c == '\n' {
+                break;
+            }
+            text.push(c);
+            self.bump();
+        }
+        self.out.comments.push(Comment { text, line });
+    }
+
+    fn block_comment(&mut self, line: usize) {
+        let mut text = String::new();
+        let mut depth = 0usize;
+        while let Some(c) = self.peek(0) {
+            if c == '/' && self.peek(1) == Some('*') {
+                depth += 1;
+                text.push_str("/*");
+                self.bump();
+                self.bump();
+            } else if c == '*' && self.peek(1) == Some('/') {
+                depth -= 1;
+                text.push_str("*/");
+                self.bump();
+                self.bump();
+                if depth == 0 {
+                    break;
+                }
+            } else {
+                text.push(c);
+                self.bump();
+            }
+        }
+        self.out.comments.push(Comment { text, line });
+    }
+
+    /// Consume a `"…"` body; the opening quote is already consumed.
+    fn quoted_string(&mut self, line: usize) {
+        let mut text = String::new();
+        while let Some(c) = self.bump() {
+            match c {
+                '"' => break,
+                '\\' => {
+                    text.push(c);
+                    if let Some(esc) = self.bump() {
+                        text.push(esc);
+                    }
+                }
+                _ => text.push(c),
+            }
+        }
+        self.push(TokKind::Str, text, line);
+    }
+
+    /// `r` / `b` can start raw strings (`r"`, `r#"`), byte strings (`b"`,
+    /// `br"`), byte chars (`b'`), raw identifiers (`r#ident`), or a plain
+    /// identifier. Disambiguate by lookahead.
+    fn ident_or_prefixed_literal(&mut self, line: usize) {
+        let c0 = self.peek(0).unwrap();
+        // Raw string prefixes: r"  r#"  br"  br#"  (and b" / b' handled below)
+        let (raw_at, is_raw) = match (c0, self.peek(1)) {
+            ('r', Some('"')) | ('r', Some('#')) => (1, true),
+            ('b', Some('r')) if matches!(self.peek(2), Some('"') | Some('#')) => (2, true),
+            _ => (0, false),
+        };
+        if is_raw {
+            // Count `#`s after the prefix; raw string iff they end in `"`.
+            let mut hashes = 0;
+            while self.peek(raw_at + hashes) == Some('#') {
+                hashes += 1;
+            }
+            if self.peek(raw_at + hashes) == Some('"') {
+                for _ in 0..raw_at + hashes + 1 {
+                    self.bump();
+                }
+                self.raw_string_body(hashes, line);
+                return;
+            }
+            // `r#ident` raw identifier falls through to ident lexing below.
+        }
+        if c0 == 'b' && self.peek(1) == Some('"') {
+            self.bump();
+            self.bump();
+            self.quoted_string(line);
+            return;
+        }
+        if c0 == 'b' && self.peek(1) == Some('\'') {
+            self.bump();
+            self.bump();
+            self.char_body(line);
+            return;
+        }
+        self.ident(line);
+    }
+
+    fn raw_string_body(&mut self, hashes: usize, line: usize) {
+        let mut text = String::new();
+        while let Some(c) = self.bump() {
+            if c == '"' {
+                let mut n = 0;
+                while n < hashes && self.peek(n) == Some('#') {
+                    n += 1;
+                }
+                if n == hashes {
+                    for _ in 0..hashes {
+                        self.bump();
+                    }
+                    break;
+                }
+            }
+            text.push(c);
+        }
+        self.push(TokKind::Str, text, line);
+    }
+
+    /// `'` starts either a lifetime (`'a`, `'static`) or a char literal
+    /// (`'x'`, `'\n'`). Lifetime iff the next char starts an identifier and
+    /// the char after it is not a closing `'`.
+    fn char_or_lifetime(&mut self, line: usize) {
+        let next = self.peek(1);
+        let is_lifetime = matches!(next, Some(c) if c.is_alphabetic() || c == '_')
+            && self.peek(2) != Some('\'');
+        self.bump(); // the `'`
+        if is_lifetime {
+            let mut text = String::from("'");
+            while let Some(c) = self.peek(0) {
+                if c.is_alphanumeric() || c == '_' {
+                    text.push(c);
+                    self.bump();
+                } else {
+                    break;
+                }
+            }
+            self.push(TokKind::Lifetime, text, line);
+        } else {
+            self.char_body(line);
+        }
+    }
+
+    /// Consume a char-literal body; the opening `'` is already consumed.
+    fn char_body(&mut self, line: usize) {
+        let mut text = String::new();
+        while let Some(c) = self.bump() {
+            match c {
+                '\'' => break,
+                '\\' => {
+                    text.push(c);
+                    if let Some(esc) = self.bump() {
+                        text.push(esc);
+                    }
+                }
+                _ => text.push(c),
+            }
+        }
+        self.push(TokKind::Char, text, line);
+    }
+
+    fn ident(&mut self, line: usize) {
+        let mut text = String::new();
+        // Accept the `r#` of raw identifiers, then ident chars.
+        if self.peek(0) == Some('r') && self.peek(1) == Some('#') {
+            self.bump();
+            self.bump();
+        }
+        while let Some(c) = self.peek(0) {
+            if c.is_alphanumeric() || c == '_' {
+                text.push(c);
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        self.push(TokKind::Ident, text, line);
+    }
+
+    fn number(&mut self, line: usize) {
+        let mut text = String::new();
+        while let Some(c) = self.peek(0) {
+            if c.is_alphanumeric() || c == '_' {
+                text.push(c);
+                self.bump();
+            } else if c == '.' {
+                // Consume the dot only when a fractional digit follows, so
+                // `0.partial_cmp`, `0..n`, and tuple indices stay separate
+                // tokens while `1.5` stays one.
+                match self.peek(1) {
+                    Some(d) if d.is_ascii_digit() => {
+                        text.push(c);
+                        self.bump();
+                    }
+                    _ => break,
+                }
+            } else if (c == '+' || c == '-')
+                && matches!(text.chars().last(), Some('e') | Some('E'))
+            {
+                text.push(c);
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        self.push(TokKind::Number, text, line);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).tokens.into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn comments_are_stripped_and_retained() {
+        let l = lex("a // trailing\n/* block\nspans */ b");
+        let idents: Vec<_> = l.tokens.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(idents, ["a", "b"]);
+        assert_eq!(l.comments.len(), 2);
+        assert_eq!(l.comments[0].line, 1);
+        assert_eq!(l.comments[1].line, 2);
+        assert!(l.comments[1].text.contains("spans"));
+        assert_eq!(l.tokens[1].line, 3);
+    }
+
+    #[test]
+    fn nested_block_comment() {
+        let l = lex("/* outer /* inner */ still comment */ x");
+        assert_eq!(l.tokens.len(), 1);
+        assert_eq!(l.tokens[0].text, "x");
+    }
+
+    #[test]
+    fn strings_hide_code_like_content() {
+        let l = lex(r#"let s = "a.lock().unwrap() // not a comment";"#);
+        assert_eq!(l.comments.len(), 0);
+        let strs: Vec<_> =
+            l.tokens.iter().filter(|t| t.kind == TokKind::Str).map(|t| t.text.clone()).collect();
+        assert_eq!(strs, ["a.lock().unwrap() // not a comment"]);
+    }
+
+    #[test]
+    fn raw_and_byte_strings() {
+        let l = lex(r###"let a = r#"raw "quoted" body"#; let b = b"bytes"; let c = br"rb";"###);
+        let strs: Vec<_> =
+            l.tokens.iter().filter(|t| t.kind == TokKind::Str).map(|t| t.text.clone()).collect();
+        assert_eq!(strs, [r#"raw "quoted" body"#, "bytes", "rb"]);
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let toks = kinds("fn f<'a>(x: &'a str) { let c = 'x'; let n = '\\n'; let s: &'static str; }");
+        let lifetimes: Vec<_> =
+            toks.iter().filter(|(k, _)| *k == TokKind::Lifetime).map(|(_, t)| t.clone()).collect();
+        assert_eq!(lifetimes, ["'a", "'a", "'static"]);
+        let chars: Vec<_> =
+            toks.iter().filter(|(k, _)| *k == TokKind::Char).map(|(_, t)| t.clone()).collect();
+        assert_eq!(chars, ["x", "\\n"]);
+    }
+
+    #[test]
+    fn numbers_do_not_swallow_method_calls() {
+        let toks = kinds("self.0.partial_cmp(&x); 1.5e-3f32; 0..n; vec![0u8; 64]");
+        let texts: Vec<_> = toks.iter().map(|(_, t)| t.as_str()).collect();
+        assert!(texts.contains(&"partial_cmp"));
+        assert!(texts.contains(&"1.5e-3f32"));
+        assert!(texts.contains(&"0u8"));
+        // `0..n` lexes as number, dot, dot, ident.
+        let i = texts.iter().position(|t| *t == "0").unwrap();
+        assert_eq!(texts[i + 1], ".");
+        assert_eq!(texts[i + 2], ".");
+        assert_eq!(texts[i + 3], "n");
+    }
+
+    #[test]
+    fn raw_identifiers() {
+        let toks = kinds("let r#type = 1;");
+        assert!(toks.iter().any(|(k, t)| *k == TokKind::Ident && t == "type"));
+    }
+
+    #[test]
+    fn line_numbers_are_one_based_and_track_newlines() {
+        let l = lex("a\nb\n\nc");
+        let lines: Vec<_> = l.tokens.iter().map(|t| t.line).collect();
+        assert_eq!(lines, [1, 2, 4]);
+    }
+}

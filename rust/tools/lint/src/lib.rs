@@ -1,0 +1,102 @@
+//! `opdr-lint`: repo-invariant static analysis for the opdr tree.
+//!
+//! PRs 1–8 hardened the serving stack by hand: `total_cmp`-only comparators
+//! (PR 4/5 NaN sweeps), `ALLOC_CHUNK`-clamped decoder preallocation
+//! (PR 5/7), poison-recovering locks (PR 4), `// SAFETY:`-annotated
+//! `unsafe` (PR 5 mmap), and docs-synced metric/config tables (PR 6/8).
+//! This crate promotes those conventions from reviewer memory to a CI-gated
+//! check: a dependency-free, token-level scanner (no `syn` — the workspace
+//! builds offline) that walks `rust/src` + `rust/tests` + `rust/benches`
+//! and reports named, allowlist-aware rules with `file:line` diagnostics.
+//!
+//! Library surface:
+//! - [`lint_sources`] lints an in-memory corpus (what the fixture tests use);
+//! - [`lint_paths`] walks directories/files and lints what it finds
+//!   (what the CLI and the live-tree test use);
+//! - [`RULES`] names every rule; `// lint:allow(rule: reason)` on the
+//!   flagged line or the two lines above it suppresses a finding.
+
+pub mod lexer;
+pub mod rules;
+
+pub use rules::{lint_sources, Finding, RULES};
+
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Recursively collect `.rs` files under each of `paths` (files are taken
+/// as-is). `target/` subtrees are skipped. The result is sorted so runs are
+/// deterministic.
+pub fn collect_rs_files(paths: &[PathBuf]) -> io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    for p in paths {
+        walk(p, &mut out)?;
+    }
+    out.sort();
+    out.dedup();
+    Ok(out)
+}
+
+fn walk(p: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let meta = std::fs::metadata(p)?;
+    if meta.is_file() {
+        if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(p.to_path_buf());
+        }
+        return Ok(());
+    }
+    if p.file_name().map(|n| n == "target").unwrap_or(false) {
+        return Ok(());
+    }
+    let mut entries: Vec<PathBuf> =
+        std::fs::read_dir(p)?.map(|e| e.map(|e| e.path())).collect::<io::Result<_>>()?;
+    entries.sort();
+    for e in entries {
+        walk(&e, out)?;
+    }
+    Ok(())
+}
+
+/// Walk `paths`, read every `.rs` file, and lint the corpus.
+pub fn lint_paths(paths: &[PathBuf]) -> io::Result<Vec<Finding>> {
+    let files = collect_rs_files(paths)?;
+    let mut corpus = Vec::with_capacity(files.len());
+    for f in files {
+        let src = std::fs::read_to_string(&f)?;
+        corpus.push((f, src));
+    }
+    Ok(lint_sources(&corpus))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn walker_finds_rs_files_and_skips_target() {
+        let dir = std::env::temp_dir().join(format!("opdr_lint_walk_{}", std::process::id()));
+        let sub = dir.join("src");
+        let tgt = dir.join("target");
+        std::fs::create_dir_all(&sub).unwrap();
+        std::fs::create_dir_all(&tgt).unwrap();
+        std::fs::write(sub.join("a.rs"), "fn a() {}").unwrap();
+        std::fs::write(sub.join("b.txt"), "not rust").unwrap();
+        std::fs::write(tgt.join("gen.rs"), "fn hidden() {}").unwrap();
+        let files = collect_rs_files(&[dir.clone()]).unwrap();
+        assert_eq!(files, vec![sub.join("a.rs")]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn lint_paths_reports_with_real_file_path() {
+        let dir = std::env::temp_dir().join(format!("opdr_lint_paths_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = dir.join("bad.rs");
+        std::fs::write(&bad, "fn f() { let g = m.lock().unwrap(); }").unwrap();
+        let findings = lint_paths(&[dir.clone()]).unwrap();
+        assert_eq!(findings.len(), 1);
+        assert_eq!(findings[0].file, bad);
+        assert_eq!(findings[0].line, 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

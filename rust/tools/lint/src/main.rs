@@ -1,0 +1,78 @@
+//! CLI for `opdr-lint`. Usage:
+//!
+//! ```text
+//! opdr-lint [--list-rules] [PATH ...]
+//! ```
+//!
+//! With no paths, lints the repo's default scope — `rust/src`, `rust/tests`,
+//! `rust/benches` — resolved against the current directory (also works when
+//! invoked from inside `rust/`). Exits non-zero when any rule fires; every
+//! finding is printed as `file:line: [rule] message`.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn default_scope() -> Vec<PathBuf> {
+    let roots = ["rust/src", "rust/tests", "rust/benches"];
+    let here: Vec<PathBuf> = roots.iter().map(PathBuf::from).collect();
+    if here[0].is_dir() {
+        return here;
+    }
+    // Invoked from inside rust/ (e.g. `cargo run` with rust/ as cwd).
+    let nested: Vec<PathBuf> = ["src", "tests", "benches"].iter().map(PathBuf::from).collect();
+    if nested[0].is_dir() {
+        return nested;
+    }
+    here
+}
+
+fn main() -> ExitCode {
+    let mut paths: Vec<PathBuf> = Vec::new();
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--list-rules" => {
+                for (name, summary) in opdr_lint::RULES {
+                    println!("{name}: {summary}");
+                }
+                return ExitCode::SUCCESS;
+            }
+            "--help" | "-h" => {
+                println!("usage: opdr-lint [--list-rules] [PATH ...]");
+                println!("lints PATHs (default: rust/src rust/tests rust/benches);");
+                println!("exits 1 if any repo-invariant rule fires.");
+                return ExitCode::SUCCESS;
+            }
+            _ => paths.push(PathBuf::from(arg)),
+        }
+    }
+    if paths.is_empty() {
+        paths = default_scope();
+    }
+    // Tolerate a missing bench/test dir, but not a typoed explicit path.
+    let existing: Vec<PathBuf> = paths.iter().filter(|p| p.exists()).cloned().collect();
+    if existing.is_empty() {
+        eprintln!("opdr-lint: no such paths: {paths:?}");
+        return ExitCode::FAILURE;
+    }
+    for missing in paths.iter().filter(|p| !p.exists()) {
+        eprintln!("opdr-lint: warning: skipping missing path {}", missing.display());
+    }
+
+    match opdr_lint::lint_paths(&existing) {
+        Ok(findings) if findings.is_empty() => {
+            println!("opdr-lint: clean ({} rules)", opdr_lint::RULES.len());
+            ExitCode::SUCCESS
+        }
+        Ok(findings) => {
+            for f in &findings {
+                println!("{f}");
+            }
+            println!("opdr-lint: {} violation(s)", findings.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("opdr-lint: io error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,955 @@
+//! The opdr repo-invariant rules.
+//!
+//! Each rule is a named check over the token/comment streams of one file
+//! (or, for the doc-sync rules, a pair of files). Every rule honours the
+//! `// lint:allow(rule-name)` / `// lint:allow(rule-name: reason)` escape
+//! hatch placed on the flagged line or up to two lines above it; the reason
+//! clause is free text and is encouraged.
+//!
+//! See `rust/tools/lint/README.md` for the rule catalogue with the PR that
+//! established each invariant.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::path::PathBuf;
+
+use crate::lexer::{lex, Comment, Lexed, Tok, TokKind};
+
+/// One diagnostic. Rendered as `file:line: [rule] message`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: PathBuf,
+    /// 1-based line.
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file.display(), self.line, self.rule, self.msg)
+    }
+}
+
+pub const NO_PARTIAL_CMP_ORDERING: &str = "no-partial-cmp-ordering";
+pub const NO_NAKED_LOCK_UNWRAP: &str = "no-naked-lock-unwrap";
+pub const BOUNDED_PREALLOC: &str = "bounded-prealloc";
+pub const UNSAFE_NEEDS_SAFETY_COMMENT: &str = "unsafe-needs-safety-comment";
+pub const METRIC_DOCS_SYNC: &str = "metric-docs-sync";
+pub const CONFIG_DOCS_SYNC: &str = "config-docs-sync";
+pub const NO_BLANKET_ALLOW: &str = "no-blanket-allow";
+
+/// Every rule, with a one-line summary (surfaced by `opdr-lint --list-rules`).
+pub const RULES: &[(&str, &str)] = &[
+    (
+        NO_PARTIAL_CMP_ORDERING,
+        "comparators must use total_cmp; partial_cmp(..).unwrap*() hides NaN ordering (PR 4/5)",
+    ),
+    (
+        NO_NAKED_LOCK_UNWRAP,
+        ".lock().unwrap() poisons-cascade across threads; use util::lock_recover (PR 4)",
+    ),
+    (
+        BOUNDED_PREALLOC,
+        "decode-path allocations sized by wire data must go through the ALLOC_CHUNK-bounded io helpers (PR 5/7)",
+    ),
+    (
+        UNSAFE_NEEDS_SAFETY_COMMENT,
+        "every `unsafe` needs a // SAFETY: comment within the 6 preceding lines (PR 5)",
+    ),
+    (
+        METRIC_DOCS_SYNC,
+        "telemetry opdr_* name constants and the coordinator module-docs metrics table must agree both ways (PR 6/8)",
+    ),
+    (
+        CONFIG_DOCS_SYNC,
+        "every [serve]/[dist] key accepted by config/schema.rs must appear in its module-docs key tables",
+    ),
+    (
+        NO_BLANKET_ALLOW,
+        "no #![allow(..)] or blanket #[allow(warnings|clippy::all|dead_code|unused)]; scope narrow allows per item",
+    ),
+];
+
+/// A lexed source file plus its escape-hatch annotations.
+pub struct SourceFile {
+    pub path: PathBuf,
+    /// Path with `/` separators, for suffix-based scoping.
+    norm: String,
+    lexed: Lexed,
+    /// rule name -> comment lines carrying a `lint:allow` for it.
+    allows: HashMap<String, Vec<usize>>,
+}
+
+impl SourceFile {
+    pub fn new(path: PathBuf, src: &str) -> Self {
+        let lexed = lex(src);
+        let allows = parse_allows(&lexed.comments);
+        let norm = path
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy().into_owned())
+            .collect::<Vec<_>>()
+            .join("/");
+        SourceFile { path, norm, lexed, allows }
+    }
+
+    fn toks(&self) -> &[Tok] {
+        &self.lexed.tokens
+    }
+
+    /// Is a finding of `rule` at `line` suppressed by a `lint:allow` on the
+    /// same line or within the two lines above it?
+    fn allowed(&self, rule: &str, line: usize) -> bool {
+        self.allows
+            .get(rule)
+            .map(|lines| lines.iter().any(|&l| l <= line && line <= l + 2))
+            .unwrap_or(false)
+    }
+}
+
+/// Extract `lint:allow(rule)` / `lint:allow(rule: reason)` escape hatches.
+/// One comment may carry several.
+fn parse_allows(comments: &[Comment]) -> HashMap<String, Vec<usize>> {
+    let mut out: HashMap<String, Vec<usize>> = HashMap::new();
+    for c in comments {
+        let mut rest = c.text.as_str();
+        while let Some(at) = rest.find("lint:allow(") {
+            rest = &rest[at + "lint:allow(".len()..];
+            let end = match rest.find(')') {
+                Some(e) => e,
+                None => break,
+            };
+            let inner = &rest[..end];
+            let rule = inner.split(':').next().unwrap_or("").trim();
+            if !rule.is_empty() {
+                out.entry(rule.to_string()).or_default().push(c.line);
+            }
+            rest = &rest[end + 1..];
+        }
+    }
+    out
+}
+
+/// Lint an in-memory corpus of `(path, source)` pairs. Pure — this is what
+/// the fixture tests drive; `lint_paths` in `lib.rs` wraps it with the
+/// filesystem walk. Findings come back sorted by (file, line, rule).
+pub fn lint_sources(files: &[(PathBuf, String)]) -> Vec<Finding> {
+    let parsed: Vec<SourceFile> =
+        files.iter().map(|(p, s)| SourceFile::new(p.clone(), s)).collect();
+    let mut findings = Vec::new();
+    for f in &parsed {
+        findings.extend(no_partial_cmp_ordering(f));
+        findings.extend(no_naked_lock_unwrap(f));
+        findings.extend(bounded_prealloc(f));
+        findings.extend(unsafe_needs_safety_comment(f));
+        findings.extend(no_blanket_allow(f));
+    }
+    findings.extend(metric_docs_sync(&parsed));
+    findings.extend(config_docs_sync(&parsed));
+
+    // Apply the escape hatch uniformly, including to doc-sync findings.
+    let by_path: HashMap<&str, &SourceFile> =
+        parsed.iter().map(|f| (f.norm.as_str(), f)).collect();
+    findings.retain(|fi| {
+        let norm: String = fi
+            .file
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy().into_owned())
+            .collect::<Vec<_>>()
+            .join("/");
+        by_path.get(norm.as_str()).map(|sf| !sf.allowed(fi.rule, fi.line)).unwrap_or(true)
+    });
+    findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    findings
+}
+
+// ---------------------------------------------------------------------------
+// token helpers
+// ---------------------------------------------------------------------------
+
+fn is_punct(t: Option<&Tok>, c: &str) -> bool {
+    matches!(t, Some(t) if t.kind == TokKind::Punct && t.text == c)
+}
+
+fn is_ident(t: Option<&Tok>, name: &str) -> bool {
+    matches!(t, Some(t) if t.kind == TokKind::Ident && t.text == name)
+}
+
+fn ident_text(t: Option<&Tok>) -> Option<&str> {
+    match t {
+        Some(t) if t.kind == TokKind::Ident => Some(&t.text),
+        _ => None,
+    }
+}
+
+/// Index of the `)`/`]`/`}` matching the opener at `open`, if any.
+fn matching_close(toks: &[Tok], open: usize) -> Option<usize> {
+    let (o, c) = match toks[open].text.as_str() {
+        "(" => ("(", ")"),
+        "[" => ("[", "]"),
+        "{" => ("{", "}"),
+        _ => return None,
+    };
+    let mut depth = 0usize;
+    for (i, t) in toks.iter().enumerate().skip(open) {
+        if t.kind == TokKind::Punct {
+            if t.text == o {
+                depth += 1;
+            } else if t.text == c {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(i);
+                }
+            }
+        }
+    }
+    None
+}
+
+/// Nesting delta contributed by a punct token (any bracket flavour).
+fn depth_delta(t: &Tok) -> isize {
+    if t.kind != TokKind::Punct {
+        return 0;
+    }
+    match t.text.as_str() {
+        "(" | "[" | "{" => 1,
+        ")" | "]" | "}" => -1,
+        _ => 0,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// rule: no-partial-cmp-ordering
+// ---------------------------------------------------------------------------
+
+fn no_partial_cmp_ordering(f: &SourceFile) -> Vec<Finding> {
+    let toks = f.toks();
+    let mut out = Vec::new();
+    for i in 0..toks.len() {
+        if !is_ident(toks.get(i), "partial_cmp") || !is_punct(i.checked_sub(1).and_then(|j| toks.get(j)), ".") {
+            continue; // `fn partial_cmp` definitions are fine; only call sites count
+        }
+        if !is_punct(toks.get(i + 1), "(") {
+            continue;
+        }
+        let close = match matching_close(toks, i + 1) {
+            Some(c) => c,
+            None => continue,
+        };
+        if is_punct(toks.get(close + 1), ".") {
+            if let Some(next) = ident_text(toks.get(close + 2)) {
+                if matches!(
+                    next,
+                    "unwrap" | "expect" | "unwrap_or" | "unwrap_or_else" | "unwrap_or_default"
+                ) {
+                    out.push(Finding {
+                        rule: NO_PARTIAL_CMP_ORDERING,
+                        file: f.path.clone(),
+                        line: toks[i].line,
+                        msg: format!(
+                            "`.partial_cmp(..).{next}(..)` panics or silently reorders on NaN; \
+                             use `total_cmp` (PR 4/5 NaN sweeps), or pre-filter NaNs and \
+                             `// lint:allow({NO_PARTIAL_CMP_ORDERING}: ..)` with a NaN test"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// rule: no-naked-lock-unwrap
+// ---------------------------------------------------------------------------
+
+fn no_naked_lock_unwrap(f: &SourceFile) -> Vec<Finding> {
+    let toks = f.toks();
+    let mut out = Vec::new();
+    for i in 0..toks.len() {
+        if !is_ident(toks.get(i), "lock") || !is_punct(i.checked_sub(1).and_then(|j| toks.get(j)), ".") {
+            continue;
+        }
+        if !(is_punct(toks.get(i + 1), "(") && is_punct(toks.get(i + 2), ")")) {
+            continue;
+        }
+        if is_punct(toks.get(i + 3), ".") {
+            if let Some(next) = ident_text(toks.get(i + 4)) {
+                if next == "unwrap" || next == "expect" {
+                    out.push(Finding {
+                        rule: NO_NAKED_LOCK_UNWRAP,
+                        file: f.path.clone(),
+                        line: toks[i].line,
+                        msg: format!(
+                            "`.lock().{next}()` turns one poisoned panic into a cascade; \
+                             use `crate::util::lock_recover` (PR 4 poison-recovery convention)"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// rule: bounded-prealloc
+// ---------------------------------------------------------------------------
+
+/// Decode-path files where allocation sizes can come off the wire/disk.
+const PREALLOC_SCOPE: &[&str] =
+    &["data/store.rs", "data/mapped.rs", "rpc/frame.rs", "rpc/fault.rs"];
+
+/// A size expression is considered bounded when it routes through
+/// `ALLOC_CHUNK` (e.g. `n.min(ALLOC_CHUNK)`) or contains no runtime
+/// identifiers at all (literals and SCREAMING_CASE consts only).
+fn size_expr_is_bounded(arg: &[Tok]) -> bool {
+    let mut saw_runtime_ident = false;
+    for t in arg {
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        if t.text == "ALLOC_CHUNK" {
+            return true;
+        }
+        if t.text.chars().any(|c| c.is_lowercase()) {
+            saw_runtime_ident = true;
+        }
+    }
+    !saw_runtime_ident
+}
+
+fn bounded_prealloc(f: &SourceFile) -> Vec<Finding> {
+    if !PREALLOC_SCOPE.iter().any(|s| f.norm.ends_with(s)) {
+        return Vec::new();
+    }
+    let toks = f.toks();
+    let mut out = Vec::new();
+    let mut flag = |line: usize, what: &str| {
+        out.push(Finding {
+            rule: BOUNDED_PREALLOC,
+            file: f.path.clone(),
+            line,
+            msg: format!(
+                "{what} sized by a runtime value in a decode path; clamp via the \
+                 `ALLOC_CHUNK`-bounded `crate::index::io` helpers \
+                 (read_bytes/read_f32s/read_u32s) so corrupt length fields cannot \
+                 force huge allocations (PR 5/7 hardening)"
+            ),
+        });
+    };
+    for i in 0..toks.len() {
+        // Vec::with_capacity / String::with_capacity / BufReader::with_capacity …
+        if is_ident(toks.get(i), "with_capacity") && is_punct(toks.get(i + 1), "(") {
+            if let Some(close) = matching_close(toks, i + 1) {
+                // First top-level argument is the capacity.
+                let mut end = close;
+                let mut depth = 0isize;
+                for (j, t) in toks.iter().enumerate().take(close).skip(i + 2) {
+                    depth += depth_delta(t);
+                    if depth == 0 && t.kind == TokKind::Punct && t.text == "," {
+                        end = j;
+                        break;
+                    }
+                }
+                if !size_expr_is_bounded(&toks[i + 2..end]) {
+                    flag(toks[i].line, "`with_capacity(..)`");
+                }
+            }
+        }
+        // vec![elem; n] repeat form.
+        if is_ident(toks.get(i), "vec")
+            && is_punct(toks.get(i + 1), "!")
+            && is_punct(toks.get(i + 2), "[")
+        {
+            if let Some(close) = matching_close(toks, i + 2) {
+                let mut depth = 0isize;
+                let mut semi = None;
+                for (j, t) in toks.iter().enumerate().take(close).skip(i + 3) {
+                    depth += depth_delta(t);
+                    if depth == 0 && t.kind == TokKind::Punct && t.text == ";" {
+                        semi = Some(j);
+                        break;
+                    }
+                }
+                if let Some(semi) = semi {
+                    if !size_expr_is_bounded(&toks[semi + 1..close]) {
+                        flag(toks[i].line, "`vec![..; n]`");
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// rule: unsafe-needs-safety-comment
+// ---------------------------------------------------------------------------
+
+/// How many lines above an `unsafe` the `// SAFETY:` comment may start.
+const SAFETY_WINDOW: usize = 6;
+
+fn unsafe_needs_safety_comment(f: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for t in f.toks() {
+        if !(t.kind == TokKind::Ident && t.text == "unsafe") {
+            continue;
+        }
+        let covered = f.lexed.comments.iter().any(|c| {
+            c.text.contains("SAFETY:") && c.line <= t.line && t.line - c.line <= SAFETY_WINDOW
+        });
+        if !covered {
+            out.push(Finding {
+                rule: UNSAFE_NEEDS_SAFETY_COMMENT,
+                file: f.path.clone(),
+                line: t.line,
+                msg: format!(
+                    "`unsafe` without a `// SAFETY:` comment in the {SAFETY_WINDOW} lines \
+                     above it; state the invariant that makes this sound (PR 5 mmap convention)"
+                ),
+            });
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// rule: no-blanket-allow
+// ---------------------------------------------------------------------------
+
+fn no_blanket_allow(f: &SourceFile) -> Vec<Finding> {
+    let toks = f.toks();
+    let mut out = Vec::new();
+    for i in 0..toks.len() {
+        if !is_punct(toks.get(i), "#") {
+            continue;
+        }
+        let inner = is_punct(toks.get(i + 1), "!");
+        let open = if inner { i + 2 } else { i + 1 };
+        if !is_punct(toks.get(open), "[") || !is_ident(toks.get(open + 1), "allow") {
+            continue;
+        }
+        if inner {
+            out.push(Finding {
+                rule: NO_BLANKET_ALLOW,
+                file: f.path.clone(),
+                line: toks[i].line,
+                msg: "crate/module-wide `#![allow(..)]` hides future violations; \
+                      scope the allow to the specific item"
+                    .to_string(),
+            });
+            continue;
+        }
+        // Item-level: flag only the blanket classes.
+        let close = match matching_close(toks, open) {
+            Some(c) => c,
+            None => continue,
+        };
+        let content = &toks[open + 1..close];
+        let has = |name: &str| content.iter().any(|t| t.kind == TokKind::Ident && t.text == name);
+        let blanket = has("warnings")
+            || has("dead_code")
+            || has("unused")
+            || (has("clippy") && has("all"));
+        if blanket {
+            out.push(Finding {
+                rule: NO_BLANKET_ALLOW,
+                file: f.path.clone(),
+                line: toks[i].line,
+                msg: "blanket `#[allow(warnings|unused|dead_code|clippy::all)]` defeats the \
+                      `-D warnings` CI gate; allow the one specific lint instead"
+                    .to_string(),
+            });
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// rule: metric-docs-sync
+// ---------------------------------------------------------------------------
+
+const METRIC_CONSTS_FILE: &str = "telemetry/registry.rs";
+const METRIC_DOCS_FILE: &str = "coordinator/mod.rs";
+
+/// `pub const NAME: &str = "opdr_…";` declarations, as (value, line).
+fn metric_name_consts(f: &SourceFile) -> Vec<(String, usize)> {
+    let toks = f.toks();
+    let mut out = Vec::new();
+    for i in 0..toks.len() {
+        if is_ident(toks.get(i), "const")
+            && toks.get(i + 1).map(|t| t.kind == TokKind::Ident).unwrap_or(false)
+            && is_punct(toks.get(i + 2), ":")
+            && is_punct(toks.get(i + 3), "&")
+            && is_ident(toks.get(i + 4), "str")
+            && is_punct(toks.get(i + 5), "=")
+        {
+            if let Some(t) = toks.get(i + 6) {
+                if t.kind == TokKind::Str && t.text.starts_with("opdr_") {
+                    out.push((t.text.clone(), t.line));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// First `` `cell` `` of each `//! | … |` table row, as (cell, line).
+fn doc_table_cells(f: &SourceFile) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    for c in &f.lexed.comments {
+        if !c.text.starts_with("//!") {
+            continue;
+        }
+        let body = c.text.trim_start_matches("//!").trim();
+        if !body.starts_with('|') {
+            continue;
+        }
+        if let Some(cell) = backticked(body) {
+            out.push((cell, c.line));
+        }
+    }
+    out
+}
+
+/// Contents of the first `` `…` `` span in `s`.
+fn backticked(s: &str) -> Option<String> {
+    let start = s.find('`')? + 1;
+    let len = s[start..].find('`')?;
+    Some(s[start..start + len].to_string())
+}
+
+/// Strip a `{label,..}` suffix: docs rows show `opdr_x{worker}`, constants
+/// hold the bare family name.
+fn metric_family(cell: &str) -> &str {
+    cell.split('{').next().unwrap_or(cell)
+}
+
+fn metric_docs_sync(files: &[SourceFile]) -> Vec<Finding> {
+    let consts_file = files.iter().find(|f| f.norm.ends_with(METRIC_CONSTS_FILE));
+    let docs_file = files.iter().find(|f| f.norm.ends_with(METRIC_DOCS_FILE));
+    if consts_file.is_none() && docs_file.is_none() {
+        return Vec::new(); // corpus doesn't contain the telemetry layer
+    }
+    let consts = consts_file.map(metric_name_consts).unwrap_or_default();
+    let rows: Vec<(String, usize)> = docs_file
+        .map(|f| {
+            doc_table_cells(f)
+                .into_iter()
+                .filter(|(c, _)| c.starts_with("opdr_"))
+                .map(|(c, l)| (metric_family(&c).to_string(), l))
+                .collect()
+        })
+        .unwrap_or_default();
+
+    let const_names: BTreeSet<&str> = consts.iter().map(|(n, _)| n.as_str()).collect();
+    let row_names: BTreeSet<&str> = rows.iter().map(|(n, _)| n.as_str()).collect();
+
+    let mut out = Vec::new();
+    for (name, line) in &consts {
+        if !row_names.contains(name.as_str()) {
+            out.push(Finding {
+                rule: METRIC_DOCS_SYNC,
+                file: consts_file.unwrap().path.clone(),
+                line: *line,
+                msg: format!(
+                    "metric `{name}` has no row in the {METRIC_DOCS_FILE} module-docs \
+                     metrics table (PR 6/8 keep the table authoritative)"
+                ),
+            });
+        }
+    }
+    for (name, line) in &rows {
+        if !const_names.contains(name.as_str()) {
+            out.push(Finding {
+                rule: METRIC_DOCS_SYNC,
+                file: docs_file.unwrap().path.clone(),
+                line: *line,
+                msg: format!(
+                    "documented metric `{name}` has no name constant in \
+                     {METRIC_CONSTS_FILE}; remove the row or add the constant"
+                ),
+            });
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// rule: config-docs-sync
+// ---------------------------------------------------------------------------
+
+const CONFIG_FILE: &str = "config/schema.rs";
+
+/// `[serve]`/`[dist]` keys accepted by the parser: string-literal match arms
+/// whose arm body assigns into `cfg`. The arms live after the
+/// `get_path("serve")` / `get_path("dist")` section markers, which is how a
+/// key is attributed to its table.
+fn config_code_keys(f: &SourceFile) -> BTreeMap<&'static str, Vec<(String, usize)>> {
+    let toks = f.toks();
+    let first_str = |s: &str| {
+        toks.iter().position(|t| t.kind == TokKind::Str && t.text == s).unwrap_or(usize::MAX)
+    };
+    let serve_at = first_str("serve");
+    let dist_at = first_str("dist");
+    let mut out: BTreeMap<&'static str, Vec<(String, usize)>> = BTreeMap::new();
+    for i in 0..toks.len() {
+        let t = match toks.get(i) {
+            Some(t) if t.kind == TokKind::Str => t,
+            _ => continue,
+        };
+        if !(is_punct(toks.get(i + 1), "=") && is_punct(toks.get(i + 2), ">")) {
+            continue; // not a match arm
+        }
+        let section = if dist_at != usize::MAX && i > dist_at {
+            "dist"
+        } else if serve_at != usize::MAX && i > serve_at {
+            "serve"
+        } else {
+            continue;
+        };
+        if arm_body_mentions(toks, i + 3, "cfg") {
+            out.entry(section).or_default().push((t.text.clone(), t.line));
+        }
+    }
+    out
+}
+
+/// Does the match-arm body starting at `start` (just past `=>`) contain the
+/// identifier `name`? The body is either a braced block or an expression
+/// running to the next top-level `,` (or the `}` closing the match).
+fn arm_body_mentions(toks: &[Tok], start: usize, name: &str) -> bool {
+    if is_punct(toks.get(start), "{") {
+        if let Some(close) = matching_close(toks, start) {
+            return toks[start..close].iter().any(|t| t.kind == TokKind::Ident && t.text == name);
+        }
+        return false;
+    }
+    let mut depth = 0isize;
+    for t in toks.iter().skip(start) {
+        depth += depth_delta(t);
+        if depth < 0 || (depth == 0 && t.kind == TokKind::Punct && t.text == ",") {
+            return false;
+        }
+        if depth >= 0 && t.kind == TokKind::Ident && t.text == name {
+            return true;
+        }
+    }
+    false
+}
+
+/// Keys documented in the module docs: `//! | `key` | …` rows, sectioned by
+/// the nearest preceding `[serve]` / `[dist]` heading line.
+fn config_doc_keys(f: &SourceFile) -> BTreeMap<&'static str, Vec<(String, usize)>> {
+    let mut out: BTreeMap<&'static str, Vec<(String, usize)>> = BTreeMap::new();
+    let mut section: Option<&'static str> = None;
+    for c in &f.lexed.comments {
+        if !c.text.starts_with("//!") {
+            continue;
+        }
+        let body = c.text.trim_start_matches("//!").trim();
+        if body.contains("[serve]") {
+            section = Some("serve");
+        } else if body.contains("[dist]") {
+            section = Some("dist");
+        }
+        if let (Some(sec), true) = (section, body.starts_with('|')) {
+            if let Some(cell) = backticked(body) {
+                out.entry(sec).or_default().push((cell, c.line));
+            }
+        }
+    }
+    out
+}
+
+fn config_docs_sync(files: &[SourceFile]) -> Vec<Finding> {
+    let f = match files.iter().find(|f| f.norm.ends_with(CONFIG_FILE)) {
+        Some(f) => f,
+        None => return Vec::new(),
+    };
+    let code = config_code_keys(f);
+    let docs = config_doc_keys(f);
+    let mut out = Vec::new();
+    for section in ["serve", "dist"] {
+        let code_keys = code.get(section).cloned().unwrap_or_default();
+        let doc_keys = docs.get(section).cloned().unwrap_or_default();
+        let code_set: BTreeSet<&str> = code_keys.iter().map(|(k, _)| k.as_str()).collect();
+        let doc_set: BTreeSet<&str> = doc_keys.iter().map(|(k, _)| k.as_str()).collect();
+        for (key, line) in &code_keys {
+            if !doc_set.contains(key.as_str()) {
+                out.push(Finding {
+                    rule: CONFIG_DOCS_SYNC,
+                    file: f.path.clone(),
+                    line: *line,
+                    msg: format!(
+                        "`[{section}]` key `{key}` is accepted by the parser but missing \
+                         from the module-docs key table"
+                    ),
+                });
+            }
+        }
+        for (key, line) in &doc_keys {
+            if !code_set.contains(key.as_str()) {
+                out.push(Finding {
+                    rule: CONFIG_DOCS_SYNC,
+                    file: f.path.clone(),
+                    line: *line,
+                    msg: format!(
+                        "`[{section}]` key `{key}` is documented but not accepted by the \
+                         parser; remove the row or wire the key"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_one(path: &str, src: &str) -> Vec<Finding> {
+        lint_sources(&[(PathBuf::from(path), src.to_string())])
+    }
+
+    fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn partial_cmp_unwrap_fires_and_total_cmp_is_clean() {
+        let bad = "fn f(xs: &mut [f32]) { xs.sort_by(|a, b| a.partial_cmp(b).unwrap()); }";
+        let f = run_one("src/knn/topk.rs", bad);
+        assert_eq!(rules_of(&f), [NO_PARTIAL_CMP_ORDERING]);
+        assert_eq!(f[0].line, 1);
+
+        let bad2 = "let o = x.partial_cmp(&y).unwrap_or(std::cmp::Ordering::Equal);";
+        assert_eq!(rules_of(&run_one("src/a.rs", bad2)), [NO_PARTIAL_CMP_ORDERING]);
+
+        let good = "fn f(xs: &mut [f32]) { xs.sort_by(|a, b| a.total_cmp(b)); }";
+        assert!(run_one("src/a.rs", good).is_empty());
+
+        // A PartialOrd *impl* delegating to cmp must not fire.
+        let impl_ok = "impl PartialOrd for T { fn partial_cmp(&self, o: &T) -> Option<Ordering> { Some(self.cmp(o)) } }";
+        assert!(run_one("src/a.rs", impl_ok).is_empty());
+
+        // Checked use without unwrap is fine.
+        let checked = "if let Some(o) = a.partial_cmp(&b) { use_it(o); }";
+        assert!(run_one("src/a.rs", checked).is_empty());
+    }
+
+    #[test]
+    fn lock_unwrap_fires_and_lock_recover_is_clean() {
+        let bad = "let g = m.lock().unwrap();";
+        let f = run_one("src/x.rs", bad);
+        assert_eq!(rules_of(&f), [NO_NAKED_LOCK_UNWRAP]);
+
+        let bad_expect = "let g = m.lock().expect(\"poisoned\");";
+        assert_eq!(rules_of(&run_one("src/x.rs", bad_expect)), [NO_NAKED_LOCK_UNWRAP]);
+
+        let good = "let g = lock_recover(&m);";
+        assert!(run_one("src/x.rs", good).is_empty());
+
+        // The lock_recover implementation itself uses unwrap_or_else: clean.
+        let implem = "m.lock().unwrap_or_else(|p| p.into_inner())";
+        assert!(run_one("src/x.rs", implem).is_empty());
+
+        // Mentions inside strings and comments never fire.
+        let quoted = "// m.lock().unwrap() is forbidden\nlet s = \"m.lock().unwrap()\";";
+        assert!(run_one("src/x.rs", quoted).is_empty());
+    }
+
+    #[test]
+    fn bounded_prealloc_scoped_to_decode_paths() {
+        let bad = "let n = read_u32(r)? as usize; let mut buf = vec![0u8; n];";
+        let f = run_one("rust/src/data/store.rs", bad);
+        assert_eq!(rules_of(&f), [BOUNDED_PREALLOC]);
+
+        let bad_cap = "let mut v = Vec::with_capacity(header.body_len);";
+        assert_eq!(rules_of(&run_one("rust/src/rpc/frame.rs", bad_cap)), [BOUNDED_PREALLOC]);
+
+        // Clamped through ALLOC_CHUNK: clean.
+        let good = "let mut v = Vec::with_capacity(n.min(ALLOC_CHUNK));";
+        assert!(run_one("rust/src/data/store.rs", good).is_empty());
+
+        // Literal / const-only sizes: clean.
+        let lit = "let r = BufReader::with_capacity(1 << 20, f); let z = vec![0u8; 64];";
+        assert!(run_one("rust/src/data/mapped.rs", lit).is_empty());
+
+        // Same code outside the decode-path scope: not this rule's business.
+        let elsewhere = "let mut buf = vec![0u8; n];";
+        assert!(run_one("rust/src/knn/topk.rs", elsewhere).is_empty());
+    }
+
+    #[test]
+    fn unsafe_requires_nearby_safety_comment() {
+        let bad = "fn f(p: *const u8) -> u8 { unsafe { *p } }";
+        let f = run_one("src/x.rs", bad);
+        assert_eq!(rules_of(&f), [UNSAFE_NEEDS_SAFETY_COMMENT]);
+
+        let good = "// SAFETY: p is valid for reads by contract.\nfn f(p: *const u8) -> u8 { unsafe { *p } }";
+        assert!(run_one("src/x.rs", good).is_empty());
+
+        // A SAFETY comment too far above does not count.
+        let far = format!("// SAFETY: stale\n{}unsafe fn g() {{}}", "\n".repeat(SAFETY_WINDOW + 1));
+        assert_eq!(rules_of(&run_one("src/x.rs", &far)), [UNSAFE_NEEDS_SAFETY_COMMENT]);
+
+        // `unsafe` in a doc comment or string is not code.
+        let quoted = "//! unsafe is discussed here\nlet s = \"unsafe\";";
+        assert!(run_one("src/x.rs", quoted).is_empty());
+    }
+
+    #[test]
+    fn blanket_allow_fires_but_scoped_allow_is_clean() {
+        assert_eq!(
+            rules_of(&run_one("src/lib.rs", "#![allow(dead_code)]\nfn f() {}")),
+            [NO_BLANKET_ALLOW]
+        );
+        assert_eq!(
+            rules_of(&run_one("src/x.rs", "#[allow(clippy::all)]\nfn f() {}")),
+            [NO_BLANKET_ALLOW]
+        );
+        assert_eq!(
+            rules_of(&run_one("src/x.rs", "#[allow(warnings)]\nfn f() {}")),
+            [NO_BLANKET_ALLOW]
+        );
+        let scoped = "#[allow(clippy::too_many_arguments)]\nfn f(a: u8, b: u8) {}";
+        assert!(run_one("src/x.rs", scoped).is_empty());
+    }
+
+    #[test]
+    fn escape_hatch_suppresses_on_same_and_next_two_lines() {
+        let same_line = "let g = m.lock().unwrap(); // lint:allow(no-naked-lock-unwrap: test poisons deliberately)";
+        assert!(run_one("src/x.rs", same_line).is_empty());
+
+        let above = "// lint:allow(no-naked-lock-unwrap)\nlet g = m.lock().unwrap();";
+        assert!(run_one("src/x.rs", above).is_empty());
+
+        // The allow is rule-specific: a different rule's allow does not help.
+        let wrong_rule = "// lint:allow(bounded-prealloc)\nlet g = m.lock().unwrap();";
+        assert_eq!(rules_of(&run_one("src/x.rs", wrong_rule)), [NO_NAKED_LOCK_UNWRAP]);
+
+        // And it has a bounded reach: three lines above is too far.
+        let too_far = "// lint:allow(no-naked-lock-unwrap)\n\n\nlet g = m.lock().unwrap();";
+        assert_eq!(rules_of(&run_one("src/x.rs", too_far)), [NO_NAKED_LOCK_UNWRAP]);
+    }
+
+    #[test]
+    fn metric_docs_sync_both_directions() {
+        let registry = r#"
+            pub const REQUESTS_TOTAL: &str = "opdr_requests_total";
+            pub const ERRORS_TOTAL: &str = "opdr_errors_total";
+        "#;
+        let docs_ok = "//! | `opdr_requests_total` | counter | requests |\n//! | `opdr_errors_total{kind}` | counter | errors |\n";
+        let clean = lint_sources(&[
+            (PathBuf::from("src/telemetry/registry.rs"), registry.to_string()),
+            (PathBuf::from("src/coordinator/mod.rs"), docs_ok.to_string()),
+        ]);
+        assert!(clean.is_empty(), "expected clean, got {clean:?}");
+
+        // Constant missing from the table -> flagged at the constant.
+        let docs_missing = "//! | `opdr_requests_total` | counter | requests |\n";
+        let f = lint_sources(&[
+            (PathBuf::from("src/telemetry/registry.rs"), registry.to_string()),
+            (PathBuf::from("src/coordinator/mod.rs"), docs_missing.to_string()),
+        ]);
+        assert_eq!(rules_of(&f), [METRIC_DOCS_SYNC]);
+        assert!(f[0].file.ends_with("registry.rs"));
+        assert!(f[0].msg.contains("opdr_errors_total"));
+
+        // Table row without a constant -> flagged at the row.
+        let docs_extra = "//! | `opdr_requests_total` | c | r |\n//! | `opdr_errors_total` | c | e |\n//! | `opdr_ghost` | g | gone |\n";
+        let f = lint_sources(&[
+            (PathBuf::from("src/telemetry/registry.rs"), registry.to_string()),
+            (PathBuf::from("src/coordinator/mod.rs"), docs_extra.to_string()),
+        ]);
+        assert_eq!(rules_of(&f), [METRIC_DOCS_SYNC]);
+        assert!(f[0].file.ends_with("mod.rs"));
+        assert_eq!(f[0].line, 3);
+    }
+
+    #[test]
+    fn config_docs_sync_sections_and_both_directions() {
+        let schema_ok = r#"//! Config schema.
+//!
+//! `[serve]` keys:
+//!
+//! | key | meaning |
+//! |-----|---------|
+//! | `workers` | pool size |
+//!
+//! `[dist]` keys:
+//!
+//! | key | meaning |
+//! |-----|---------|
+//! | `listen` | bind address |
+
+fn parse(root: &Value) -> ServeConfig {
+    let t = root.get_path("serve");
+    for (key, val) in t {
+        match key.as_str() {
+            "workers" => cfg.workers = pos_int(val),
+            other => panic!("unknown {other}"),
+        }
+    }
+    let t = root.get_path("dist");
+    for (key, val) in t {
+        match key.as_str() {
+            "listen" => cfg.listen = val.to_string(),
+            other => panic!("unknown {other}"),
+        }
+    }
+    cfg
+}
+"#;
+        assert!(run_one("rust/src/config/schema.rs", schema_ok).is_empty());
+
+        // Key accepted by the parser but undocumented -> flagged at the arm.
+        let undocumented = schema_ok.replace(
+            "\"workers\" => cfg.workers = pos_int(val),",
+            "\"workers\" => cfg.workers = pos_int(val),\n            \"burst\" => cfg.burst = pos_int(val),",
+        );
+        let f = run_one("rust/src/config/schema.rs", &undocumented);
+        assert_eq!(rules_of(&f), [CONFIG_DOCS_SYNC]);
+        assert!(f[0].msg.contains("`burst`"));
+        assert!(f[0].msg.contains("[serve]"));
+
+        // Documented key the parser rejects -> flagged at the row.
+        let ghost_row =
+            schema_ok.replace("//! | `listen` | bind address |", "//! | `listen` | bind address |\n//! | `ghost` | gone |");
+        let f = run_one("rust/src/config/schema.rs", &ghost_row);
+        assert_eq!(rules_of(&f), [CONFIG_DOCS_SYNC]);
+        assert!(f[0].msg.contains("`ghost`"));
+        assert!(f[0].msg.contains("[dist]"));
+
+        // Same key name in both sections stays section-scoped: documenting
+        // `workers` under [serve] does not cover a [dist] `workers` arm.
+        let dist_workers = schema_ok.replace(
+            "\"listen\" => cfg.listen = val.to_string(),",
+            "\"listen\" => cfg.listen = val.to_string(),\n            \"workers\" => cfg.workers = pos_int(val),",
+        );
+        let f = run_one("rust/src/config/schema.rs", &dist_workers);
+        assert_eq!(rules_of(&f), [CONFIG_DOCS_SYNC]);
+        assert!(f[0].msg.contains("[dist]"));
+        assert!(f[0].msg.contains("`workers`"));
+
+        // Match arms that don't assign into cfg (value enums) are not keys.
+        let value_arm = schema_ok.replace(
+            "\"workers\" => cfg.workers = pos_int(val),",
+            "\"workers\" => cfg.workers = match val.as_str() { \"ram\" => 1, \"mmap\" => 2, _ => 0 },",
+        );
+        assert!(run_one("rust/src/config/schema.rs", &value_arm).is_empty());
+    }
+
+    #[test]
+    fn findings_are_sorted_and_display_with_file_line_rule() {
+        let src = "let a = m.lock().unwrap();\nlet b = x.partial_cmp(&y).unwrap();";
+        let f = run_one("src/z.rs", src);
+        assert_eq!(f.len(), 2);
+        assert!(f[0].line <= f[1].line);
+        let shown = f[0].to_string();
+        assert!(shown.contains("src/z.rs:1:"), "{shown}");
+        assert!(shown.contains("[no-naked-lock-unwrap]"), "{shown}");
+    }
+}

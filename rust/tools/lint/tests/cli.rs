@@ -1,0 +1,100 @@
+//! End-to-end checks of the `opdr-lint` binary: exit codes and diagnostic
+//! shape, driven through a real process the way CI invokes it. Library-level
+//! rule behavior is covered by the fixture matrix in
+//! `rust/tests/lint_it.rs`; this file only pins the CLI contract.
+
+use std::fs;
+use std::path::PathBuf;
+use std::process::Command;
+
+/// A scratch dir under the system temp root, removed on drop.
+struct Scratch(PathBuf);
+
+impl Scratch {
+    fn new(tag: &str) -> Self {
+        let dir = std::env::temp_dir()
+            .join(format!("opdr-lint-cli-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).expect("creating scratch dir");
+        Scratch(dir)
+    }
+}
+
+impl Drop for Scratch {
+    fn drop(&mut self) {
+        let _ = fs::remove_dir_all(&self.0);
+    }
+}
+
+fn run(args: &[&str]) -> (bool, String, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_opdr-lint"))
+        .args(args)
+        .output()
+        .expect("spawning opdr-lint");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+#[test]
+fn clean_tree_exits_zero() {
+    let s = Scratch::new("clean");
+    fs::write(
+        s.0.join("ok.rs"),
+        "fn main() {\n    let xs = [3.0f32, 1.0];\n    let _ = xs[0].total_cmp(&xs[1]);\n}\n",
+    )
+    .unwrap();
+    let (ok, stdout, stderr) = run(&[s.0.to_str().unwrap()]);
+    assert!(ok, "clean dir must exit 0; stdout={stdout} stderr={stderr}");
+    assert!(stdout.contains("clean"), "summary line missing: {stdout}");
+}
+
+#[test]
+fn violation_exits_nonzero_with_file_line_diagnostic() {
+    let s = Scratch::new("dirty");
+    let bad = s.0.join("bad.rs");
+    fs::write(
+        &bad,
+        "fn f(m: &std::sync::Mutex<u8>) -> u8 {\n    *m.lock().unwrap()\n}\n",
+    )
+    .unwrap();
+    let (ok, stdout, _) = run(&[s.0.to_str().unwrap()]);
+    assert!(!ok, "violations must exit non-zero; stdout={stdout}");
+    // CI greps for this exact `file:line: [rule]` shape.
+    let want = format!("{}:2: [no-naked-lock-unwrap]", bad.display());
+    assert!(stdout.contains(&want), "missing `{want}` in:\n{stdout}");
+    assert!(stdout.contains("1 violation"), "summary count missing: {stdout}");
+}
+
+#[test]
+fn lint_allow_silences_the_cli_too() {
+    let s = Scratch::new("allowed");
+    fs::write(
+        s.0.join("allowed.rs"),
+        "// lint:allow(no-naked-lock-unwrap: fixture exercising the escape hatch)\n\
+         fn f(m: &std::sync::Mutex<u8>) -> u8 {\n    *m.lock().unwrap()\n}\n",
+    )
+    .unwrap();
+    let (ok, stdout, stderr) = run(&[s.0.to_str().unwrap()]);
+    assert!(ok, "allowed violation must exit 0; stdout={stdout} stderr={stderr}");
+}
+
+#[test]
+fn list_rules_names_every_rule() {
+    let (ok, stdout, _) = run(&["--list-rules"]);
+    assert!(ok);
+    for (name, _) in opdr_lint::RULES {
+        assert!(stdout.contains(name), "--list-rules missing {name}: {stdout}");
+    }
+}
+
+#[test]
+fn missing_paths_fail_loudly() {
+    let s = Scratch::new("missing");
+    let ghost = s.0.join("does-not-exist");
+    let (ok, _, stderr) = run(&[ghost.to_str().unwrap()]);
+    assert!(!ok, "nonexistent explicit path must not silently pass");
+    assert!(!stderr.is_empty(), "expected an error message on stderr");
+}
