@@ -11,9 +11,9 @@ use crate::metrics::Metric;
 use crate::pool::ThreadPool;
 use crate::runtime::Engine;
 use crate::telemetry::{registry, Metrics, ProbeJob, RecallProbe};
-use crate::util::{lock_recover, Stopwatch};
+use crate::util::{lock_recover_ranked, ranks, Stopwatch};
 use std::collections::HashMap;
-use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -34,24 +34,31 @@ pub struct BuildTracker {
 impl BuildTracker {
     /// Record a build starting for `collection`.
     pub fn begin(&self, collection: &str) {
-        *lock_recover(&self.inner).entry(collection.to_string()).or_insert(0) += 1;
+        *lock_recover_ranked(&self.inner, ranks::COORDINATOR_BUILDS)
+            .entry(collection.to_string())
+            .or_insert(0) += 1;
     }
 
     /// Record a completed (installed) delta compaction for `collection`.
     pub fn record_compaction(&self, collection: &str) {
-        *lock_recover(&self.compactions).entry(collection.to_string()).or_insert(0) += 1;
+        *lock_recover_ranked(&self.compactions, ranks::COORDINATOR_COMPACTIONS)
+            .entry(collection.to_string())
+            .or_insert(0) += 1;
     }
 
     /// Delta compactions completed for `collection` since startup.
     pub fn compactions(&self, collection: &str) -> u64 {
-        lock_recover(&self.compactions).get(collection).copied().unwrap_or(0)
+        lock_recover_ranked(&self.compactions, ranks::COORDINATOR_COMPACTIONS)
+            .get(collection)
+            .copied()
+            .unwrap_or(0)
     }
 
     /// Record a build finishing for `collection` (saturating; entries drop
     /// at zero so the map stays bounded by the set of rebuilding
     /// collections).
     pub fn finish(&self, collection: &str) {
-        let mut map = lock_recover(&self.inner);
+        let mut map = lock_recover_ranked(&self.inner, ranks::COORDINATOR_BUILDS);
         if let Some(count) = map.get_mut(collection) {
             *count = count.saturating_sub(1);
             if *count == 0 {
@@ -62,13 +69,16 @@ impl BuildTracker {
 
     /// Builds currently in flight for `collection`.
     pub fn in_flight(&self, collection: &str) -> usize {
-        lock_recover(&self.inner).get(collection).copied().unwrap_or(0)
+        lock_recover_ranked(&self.inner, ranks::COORDINATOR_BUILDS)
+            .get(collection)
+            .copied()
+            .unwrap_or(0)
     }
 
     /// Total builds in flight across all collections (the stats summary
     /// line reports it).
     pub fn total(&self) -> usize {
-        lock_recover(&self.inner).values().sum()
+        lock_recover_ranked(&self.inner, ranks::COORDINATOR_BUILDS).values().sum()
     }
 }
 
@@ -86,10 +96,10 @@ enum Request {
         collection: String,
         query: Vec<f32>,
         k: usize,
-        resp: Sender<Result<SearchResult>>,
+        resp: SyncSender<Result<SearchResult>>,
         submitted: Stopwatch,
     },
-    Admin(AdminOp, Sender<Result<String>>),
+    Admin(AdminOp, SyncSender<Result<String>>),
     /// Attach a distributed gateway: enables the `ClusterMetrics` and
     /// `SlowQueries` verbs for this coordinator.
     AttachDist(Arc<Mutex<Gateway>>),
@@ -172,7 +182,10 @@ impl Coordinator {
     }
 
     fn admin(&self, op: AdminOp) -> Result<String> {
-        let (tx, rx) = std::sync::mpsc::channel();
+        // Exactly one response per op, so a capacity-1 bounded channel can
+        // never block the scheduler — and nothing on the serving path hands
+        // out an unbounded queue.
+        let (tx, rx) = sync_channel(1);
         self.tx
             .send(Request::Admin(op, tx))
             .map_err(|_| OpdrError::coordinator("coordinator stopped"))?;
@@ -279,7 +292,9 @@ impl Coordinator {
         query: Vec<f32>,
         k: usize,
     ) -> Result<Receiver<Result<SearchResult>>> {
-        let (tx, rx) = std::sync::mpsc::channel();
+        // One response per search; capacity 1 means the worker's send never
+        // blocks even when the caller pipelines and reads late.
+        let (tx, rx) = sync_channel(1);
         let req = Request::Search {
             collection: collection.into(),
             query,
@@ -376,7 +391,6 @@ fn scheduler_loop(rx: Receiver<Request>, cfg: ServeConfig, metrics: Arc<Metrics>
             match req {
                 Request::Shutdown => stop = true,
                 Request::Admin(op, resp) => {
-                    let builds = &builds_in_flight;
                     // Per-verb observability: count the op and time its
                     // scheduler-side execution (deferred builds only spend
                     // their dispatch here; the build itself feeds the
@@ -385,16 +399,15 @@ fn scheduler_loop(rx: Receiver<Request>, cfg: ServeConfig, metrics: Arc<Metrics>
                     metrics.verb_counter(verb, coll).inc();
                     let h = metrics.verb_histogram(verb, coll);
                     let sw = Stopwatch::start();
-                    handle_admin(
-                        op,
-                        &mut collections,
-                        &cfg,
-                        &metrics,
-                        &build_pool,
-                        builds,
-                        dist.as_ref(),
-                        resp,
-                    );
+                    let mut ctx = AdminCtx {
+                        collections: &mut collections,
+                        cfg: &cfg,
+                        metrics: &metrics,
+                        build_pool: &build_pool,
+                        builds_in_flight: &builds_in_flight,
+                        dist: dist.as_ref(),
+                    };
+                    handle_admin(op, &mut ctx, resp);
                     h.record(sw.elapsed());
                 }
                 Request::AttachDist(gw) => dist = Some(gw),
@@ -411,6 +424,20 @@ fn scheduler_loop(rx: Receiver<Request>, cfg: ServeConfig, metrics: Arc<Metrics>
     }
 }
 
+/// Everything an admin op needs besides the op itself and its response
+/// channel: the scheduler-owned collection table plus the shared serving
+/// and build infrastructure. One struct instead of a seven-way parameter
+/// fan-out — this is what retired the `clippy::too_many_arguments` allows
+/// that used to sit on [`handle_admin`] and [`spawn_build`].
+struct AdminCtx<'a> {
+    collections: &'a mut Collections,
+    cfg: &'a ServeConfig,
+    metrics: &'a Arc<Metrics>,
+    build_pool: &'a ThreadPool,
+    builds_in_flight: &'a Arc<BuildTracker>,
+    dist: Option<&'a Arc<Mutex<Gateway>>>,
+}
+
 /// Execute one admin op and answer `resp`. Most ops run synchronously on
 /// the scheduler thread; index (re)builds never do — `BuildIndex` (and the
 /// re-index step of `BuildReduced`) snapshot the collection, fan
@@ -419,22 +446,10 @@ fn scheduler_loop(rx: Receiver<Request>, cfg: ServeConfig, metrics: Arc<Metrics>
 /// scheduler keeps draining search batches at full pool parallelism (the
 /// per-collection `builds_in_flight` tracker feeds stats and the deferred
 /// responses).
-#[allow(clippy::too_many_arguments)]
-fn handle_admin(
-    op: AdminOp,
-    collections: &mut Collections,
-    cfg: &ServeConfig,
-    metrics: &Metrics,
-    build_pool: &ThreadPool,
-    builds_in_flight: &Arc<BuildTracker>,
-    dist: Option<&Arc<Mutex<Gateway>>>,
-    resp: Sender<Result<String>>,
-) {
+fn handle_admin(op: AdminOp, ctx: AdminCtx<'_>, resp: SyncSender<Result<String>>) {
     match op {
         AdminOp::BuildIndex { collection } => {
-            let b = builds_in_flight;
-            let m = metrics;
-            spawn_build(collections, &collection, "ok".into(), false, cfg, m, build_pool, b, resp);
+            spawn_build(&ctx, &collection, "ok".into(), false, resp);
         }
         AdminOp::Ingest { collection, vectors } => {
             // Incremental mode (the default) absorbs the rows into the
@@ -443,13 +458,15 @@ fn handle_admin(
             // background compaction folds it into a rebuilt main index on
             // the build pool. The response is the row count either way —
             // compaction is fire-and-forget behind the rebased atomic swap.
-            let out = collections.get_mut(&collection).and_then(|c| {
-                if cfg.incremental_ingest {
+            let incremental = ctx.cfg.incremental_ingest;
+            let delta_append = &ctx.metrics.delta_append;
+            let out = ctx.collections.get_mut(&collection).and_then(|c| {
+                if incremental {
                     // Write-path span: the delta absorb (projection +
                     // wrapper swap) is the synchronous cost of an ingest.
                     let sw = Stopwatch::start();
                     let r = c.ingest_incremental(&vectors);
-                    metrics.delta_append.record(sw.elapsed());
+                    delta_append.record(sw.elapsed());
                     r
                 } else {
                     c.ingest(&vectors)
@@ -457,15 +474,8 @@ fn handle_admin(
             });
             match out {
                 Ok(n) => {
-                    if cfg.incremental_ingest {
-                        maybe_spawn_compaction(
-                            collections,
-                            &collection,
-                            cfg,
-                            metrics,
-                            build_pool,
-                            builds_in_flight,
-                        );
+                    if incremental {
+                        maybe_spawn_compaction(&ctx, &collection);
                     }
                     let _ = resp.send(Ok(n.to_string()));
                 }
@@ -478,26 +488,16 @@ fn handle_admin(
             // The reduction itself (planner calibration + PCA projection)
             // mutates the collection and runs here; the follow-up re-index
             // goes through the build pool like any other build.
-            let reduced = collections.get_mut(&collection).and_then(|c| {
+            let reduced = ctx.collections.get_mut(&collection).and_then(|c| {
                 c.build_reduced(target_accuracy, k, 64, 0xC0DE).map(|r| r.model.target_dim())
             });
             match reduced {
                 Ok(dim) => {
-                    let big_enough =
-                        collections.get(&collection).map_or(0, |c| c.len()) >= cfg.ivf_threshold;
+                    let big_enough = ctx.collections.get(&collection).map_or(0, |c| c.len())
+                        >= ctx.cfg.ivf_threshold;
                     if big_enough {
                         let msg = dim.to_string();
-                        spawn_build(
-                            collections,
-                            &collection,
-                            msg,
-                            true,
-                            cfg,
-                            metrics,
-                            build_pool,
-                            builds_in_flight,
-                            resp,
-                        );
+                        spawn_build(&ctx, &collection, msg, true, resp);
                     } else {
                         let _ = resp.send(Ok(dim.to_string()));
                     }
@@ -508,14 +508,7 @@ fn handle_admin(
             }
         }
         other => {
-            let _ = resp.send(handle_admin_sync(
-                other,
-                collections,
-                cfg,
-                metrics,
-                builds_in_flight,
-                dist,
-            ));
+            let _ = resp.send(handle_admin_sync(other, ctx));
         }
     }
 }
@@ -528,25 +521,21 @@ fn handle_admin(
 /// discarded; `stale_ok` decides whether that still answers `ok_msg`
 /// (BuildReduced: the reduction itself succeeded and serving falls back to
 /// the exact scan) or reports the discarded build (explicit BuildIndex).
-#[allow(clippy::too_many_arguments)]
 fn spawn_build(
-    collections: &Collections,
+    ctx: &AdminCtx<'_>,
     collection: &str,
     ok_msg: String,
     stale_ok: bool,
-    cfg: &ServeConfig,
-    metrics: &Metrics,
-    build_pool: &ThreadPool,
-    builds_in_flight: &Arc<BuildTracker>,
-    resp: Sender<Result<String>>,
+    resp: SyncSender<Result<String>>,
 ) {
-    match collections.get(collection) {
+    match ctx.collections.get(collection) {
         Ok(c) => {
-            builds_in_flight.begin(collection);
-            let builds = Arc::clone(builds_in_flight);
+            ctx.builds_in_flight.begin(collection);
+            let builds = Arc::clone(ctx.builds_in_flight);
             let name = collection.to_string();
-            let spans = Some(metrics.build_spans.clone());
-            c.spawn_index_build_traced(&cfg.index_policy(), 0xC0DE, build_pool, spans, move |r| {
+            let spans = Some(ctx.metrics.build_spans.clone());
+            let pool = ctx.build_pool;
+            c.spawn_index_build_traced(&ctx.cfg.index_policy(), 0xC0DE, pool, spans, move |r| {
                 builds.finish(&name);
                 let out = match r {
                     Ok(installed) if installed || stale_ok => Ok(ok_msg),
@@ -572,23 +561,17 @@ fn spawn_build(
 /// ordinary pool rebuild over the merged `{main, delta}` snapshot; the swap
 /// goes through the rebase-aware install, so rows ingested while it runs
 /// land in the new index's delta.
-fn maybe_spawn_compaction(
-    collections: &Collections,
-    collection: &str,
-    cfg: &ServeConfig,
-    metrics: &Metrics,
-    build_pool: &ThreadPool,
-    builds_in_flight: &Arc<BuildTracker>,
-) {
-    let Ok(c) = collections.get(collection) else { return };
-    if c.delta_len() <= cfg.delta_max_vectors || builds_in_flight.in_flight(collection) > 0 {
+fn maybe_spawn_compaction(ctx: &AdminCtx<'_>, collection: &str) {
+    let Ok(c) = ctx.collections.get(collection) else { return };
+    if c.delta_len() <= ctx.cfg.delta_max_vectors || ctx.builds_in_flight.in_flight(collection) > 0
+    {
         return;
     }
-    builds_in_flight.begin(collection);
-    let builds = Arc::clone(builds_in_flight);
+    ctx.builds_in_flight.begin(collection);
+    let builds = Arc::clone(ctx.builds_in_flight);
     let name = collection.to_string();
-    let spans = Some(metrics.build_spans.clone());
-    c.spawn_index_build_traced(&cfg.index_policy(), 0xC0DE, build_pool, spans, move |r| {
+    let spans = Some(ctx.metrics.build_spans.clone());
+    c.spawn_index_build_traced(&ctx.cfg.index_policy(), 0xC0DE, ctx.build_pool, spans, move |r| {
         builds.finish(&name);
         match r {
             Ok(true) => builds.record_compaction(&name),
@@ -602,14 +585,8 @@ fn maybe_spawn_compaction(
     });
 }
 
-fn handle_admin_sync(
-    op: AdminOp,
-    collections: &mut Collections,
-    cfg: &ServeConfig,
-    metrics: &Metrics,
-    builds: &BuildTracker,
-    dist: Option<&Arc<Mutex<Gateway>>>,
-) -> Result<String> {
+fn handle_admin_sync(op: AdminOp, ctx: AdminCtx<'_>) -> Result<String> {
+    let AdminCtx { collections, cfg, metrics, builds_in_flight: builds, dist, .. } = ctx;
     match op {
         AdminOp::CreateCollection { name, dim, metric } => {
             collections.create(&name, dim, metric)?;
@@ -705,13 +682,13 @@ fn handle_admin_sync(
             let gw = dist.ok_or_else(|| {
                 OpdrError::config("cluster_metrics: no distributed gateway attached")
             })?;
-            Ok(gw.lock().unwrap_or_else(|p| p.into_inner()).cluster_metrics())
+            Ok(lock_recover_ranked(gw, ranks::DIST_GATEWAY).cluster_metrics())
         }
         AdminOp::SlowQueries => {
             let gw = dist.ok_or_else(|| {
                 OpdrError::config("slow_queries: no distributed gateway attached")
             })?;
-            let dump = gw.lock().unwrap_or_else(|p| p.into_inner()).recorder().dump();
+            let dump = lock_recover_ranked(gw, ranks::DIST_GATEWAY).recorder().dump();
             Ok(dump)
         }
     }
@@ -777,7 +754,7 @@ fn execute_search_batch(
     struct Item {
         query: Vec<f32>,
         k: usize,
-        resp: Sender<Result<SearchResult>>,
+        resp: SyncSender<Result<SearchResult>>,
         submitted: Stopwatch,
     }
     let mut groups: HashMap<String, Vec<Item>> = HashMap::new();

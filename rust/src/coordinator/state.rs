@@ -10,7 +10,7 @@ use crate::opdr::Planner;
 use crate::pool::ThreadPool;
 use crate::reduction::{Pca, PcaModel, ReducerKind};
 use crate::telemetry::BuildSpans;
-use crate::util::{lock_recover, Stopwatch};
+use crate::util::{lock_recover_ranked, ranks, Stopwatch};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
@@ -34,17 +34,17 @@ pub struct IndexSlot {
 impl IndexSlot {
     /// Snapshot the current index (if any).
     pub fn load(&self) -> Option<Arc<dyn AnnIndex>> {
-        lock_recover(&self.inner).1.clone()
+        lock_recover_ranked(&self.inner, ranks::COORDINATOR_STATE).1.clone()
     }
 
     /// Current generation (captured before a build, checked at install).
     pub fn generation(&self) -> u64 {
-        lock_recover(&self.inner).0
+        lock_recover_ranked(&self.inner, ranks::COORDINATOR_STATE).0
     }
 
     /// Drop the index and bump the generation (serving state changed).
     pub fn invalidate(&self) {
-        let mut g = lock_recover(&self.inner);
+        let mut g = lock_recover_ranked(&self.inner, ranks::COORDINATOR_STATE);
         g.0 += 1;
         g.1 = None;
     }
@@ -55,7 +55,7 @@ impl IndexSlot {
     /// so an explicitly built or loaded index is never silently replaced by
     /// a stale rebuild finishing afterwards.
     pub fn replace(&self, index: Arc<dyn AnnIndex>) {
-        let mut g = lock_recover(&self.inner);
+        let mut g = lock_recover_ranked(&self.inner, ranks::COORDINATOR_STATE);
         g.0 += 1;
         g.1 = Some(index);
     }
@@ -73,7 +73,7 @@ impl IndexSlot {
     /// [`invalidate`](IndexSlot::invalidate) — ensuring an in-flight build
     /// covering fewer rows can never install.
     pub fn append_delta(&self, rows: &[f32]) -> bool {
-        let mut g = lock_recover(&self.inner);
+        let mut g = lock_recover_ranked(&self.inner, ranks::COORDINATOR_STATE);
         let Some(cur) = g.1.clone() else {
             g.0 += 1;
             return false;
@@ -117,7 +117,7 @@ impl IndexSlot {
         covered: usize,
         generation: u64,
     ) -> bool {
-        let mut g = lock_recover(&self.inner);
+        let mut g = lock_recover_ranked(&self.inner, ranks::COORDINATOR_STATE);
         if g.0 != generation {
             return false;
         }
@@ -311,15 +311,15 @@ impl Collection {
     }
 
     fn invalidate_caches(&self) {
-        *lock_recover(&self.serving_cache) = None;
-        *lock_recover(&self.full_cache) = None;
-        *lock_recover(&self.padded_cache) = None;
+        *lock_recover_ranked(&self.serving_cache, ranks::CACHE_SERVING) = None;
+        *lock_recover_ranked(&self.full_cache, ranks::CACHE_FULL) = None;
+        *lock_recover_ranked(&self.padded_cache, ranks::CACHE_PADDED) = None;
     }
 
     /// Shared snapshot of the serving vectors (built lazily, invalidated on
     /// state changes). Worker threads score against this without copying.
     pub fn serving_arc(&self) -> Arc<Vec<f32>> {
-        let mut guard = lock_recover(&self.serving_cache);
+        let mut guard = lock_recover_ranked(&self.serving_cache, ranks::CACHE_SERVING);
         if let Some(arc) = guard.as_ref() {
             return Arc::clone(arc);
         }
@@ -333,7 +333,7 @@ impl Collection {
     /// [`Collection::serving_arc`]). The recall probe scans this off-thread
     /// for the exact full-space neighbor sets.
     pub fn full_arc(&self) -> Arc<Vec<f32>> {
-        let mut guard = lock_recover(&self.full_cache);
+        let mut guard = lock_recover_ranked(&self.full_cache, ranks::CACHE_FULL);
         if let Some(arc) = guard.as_ref() {
             return Arc::clone(arc);
         }
@@ -344,7 +344,7 @@ impl Collection {
 
     /// Cached zero-padded serving block for the PJRT artifact path.
     pub fn padded_base(&self, n_cap: usize, d_cap: usize) -> Result<Arc<PaddedBase>> {
-        let mut guard = lock_recover(&self.padded_cache);
+        let mut guard = lock_recover_ranked(&self.padded_cache, ranks::CACHE_PADDED);
         if let Some((key, arc)) = guard.as_ref() {
             if *key == (n_cap, d_cap) {
                 return Ok(Arc::clone(arc));

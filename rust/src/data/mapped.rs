@@ -397,6 +397,9 @@ impl VectorFile {
     /// built over them.
     pub fn spill(dir: &Path, rows: &[f32], dim: usize) -> Result<VectorFile> {
         std::fs::create_dir_all(dir)?;
+        // ORDERING: Relaxed — the sequence only needs per-process
+        // uniqueness (fetch_add is atomic at any ordering); no other
+        // memory is published through the file-name counter.
         let path = dir.join(format!(
             "cold-{}-{}.opdr",
             std::process::id(),

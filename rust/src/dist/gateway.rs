@@ -62,6 +62,7 @@ use crate::telemetry::{
     Registry, ShardTiming,
 };
 use crate::util::timer::Stopwatch;
+use crate::util::{lock_recover_ranked, ranks};
 use std::net::{SocketAddr, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -82,13 +83,13 @@ impl AddrCell {
     }
 
     /// Current address.
-    pub fn get(&self) -> String {
-        self.addr.lock().unwrap_or_else(|p| p.into_inner()).clone()
+    pub fn read_addr(&self) -> String {
+        lock_recover_ranked(&self.addr, ranks::DIST_SLOT).clone()
     }
 
     /// Replace the address (supervisor respawn path).
-    pub fn set(&self, addr: impl Into<String>) {
-        *self.addr.lock().unwrap_or_else(|p| p.into_inner()) = addr.into();
+    pub fn write_addr(&self, addr: impl Into<String>) {
+        *lock_recover_ranked(&self.addr, ranks::DIST_SLOT) = addr.into();
     }
 }
 
@@ -205,7 +206,7 @@ impl Slot {
         if self.conn.is_some() {
             return Ok(());
         }
-        let addr_str = self.spec.addr.get();
+        let addr_str = self.spec.addr.read_addr();
         let addr: SocketAddr = addr_str
             .parse()
             .map_err(|_| OpdrError::config(format!("rpc: bad worker address `{addr_str}`")))?;
@@ -518,6 +519,9 @@ impl Gateway {
         let deadline = Duration::from_millis(self.cfg.request_deadline_ms.max(1));
         // Ids start at 1 so a zero trace id on the wire always means
         // "untraced".
+        // ORDERING: Relaxed — the counter only needs per-id uniqueness
+        // (fetch_add is atomic at any ordering); no other memory is
+        // published through the trace id.
         let trace_id =
             self.cfg.tracing.then(|| self.trace_seq.fetch_add(1, Ordering::Relaxed) + 1);
         let sw = Stopwatch::start();

@@ -152,7 +152,7 @@ impl Supervisor {
         let up = registry.gauge(RPC_WORKER_UP, &labels);
         let restarts_metric = registry.counter(RPC_WORKER_RESTARTS, &labels);
         let mut worker = factory()?;
-        cell.set(worker.addr());
+        cell.write_addr(worker.addr());
         up.set(1.0);
         let stop = Arc::new(AtomicBool::new(false));
         let restarts = Arc::new(AtomicU64::new(0));
@@ -161,6 +161,9 @@ impl Supervisor {
         let handle = thread::spawn(move || {
             let mut backoff = BACKOFF_BASE;
             let mut born = Instant::now();
+            // ORDERING: Relaxed — a plain stop flag; the monitor only needs
+            // to observe the store eventually (within one poll slice), and
+            // shutdown synchronizes through the join, not this load.
             while !stop2.load(Ordering::Relaxed) {
                 if worker.is_alive() {
                     if born.elapsed() >= STABLE_UPTIME {
@@ -179,9 +182,12 @@ impl Supervisor {
                 match factory() {
                     Ok(w) => {
                         worker = w;
-                        cell.set(worker.addr());
+                        cell.write_addr(worker.addr());
                         born = Instant::now();
                         restarts_metric.inc();
+                        // ORDERING: Relaxed — monotonic restart counter;
+                        // readers tolerate a stale total, nothing else is
+                        // published through it.
                         restarts2.fetch_add(1, Ordering::Relaxed);
                         up.set(1.0);
                     }
@@ -204,11 +210,15 @@ impl Supervisor {
 
     /// Respawns performed so far.
     pub fn restarts(&self) -> u64 {
+        // ORDERING: Relaxed — see the monitor's `fetch_add`; a stale
+        // read of the counter is acceptable.
         self.restarts.load(Ordering::Relaxed)
     }
 
     /// Stop monitoring and kill the current incarnation.
     pub fn shutdown(&mut self) {
+        // ORDERING: Relaxed — stop flag; `join` below is the real
+        // synchronization point with the monitor thread.
         self.stop.store(true, Ordering::Relaxed);
         if let Some(h) = self.handle.take() {
             let _ = h.join();
@@ -228,10 +238,13 @@ fn interruptible_sleep(stop: &AtomicBool, total: Duration) -> bool {
     let slice = Duration::from_millis(5);
     let deadline = Instant::now() + total;
     while Instant::now() < deadline {
+        // ORDERING: Relaxed — stop flag polled every slice; eventual
+        // visibility is all shutdown latency depends on.
         if stop.load(Ordering::Relaxed) {
             return true;
         }
         thread::sleep(slice.min(deadline.saturating_duration_since(Instant::now())));
     }
+    // ORDERING: Relaxed — same stop flag as above.
     stop.load(Ordering::Relaxed)
 }

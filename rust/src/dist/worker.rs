@@ -80,6 +80,8 @@ pub fn serve_shard_observed(
 ) -> Result<()> {
     listener.set_nonblocking(true)?;
     let mut handlers: Vec<JoinHandle<()>> = Vec::new();
+    // ORDERING: Relaxed — stop flag polled once per accept slice; shutdown
+    // synchronizes through the join in `kill`, not through this load.
     while !stop.load(Ordering::Relaxed) {
         match listener.accept() {
             Ok((stream, _peer)) => {
@@ -147,6 +149,8 @@ fn handle_conn(
     // version (a v1 client never sees tails or metrics frames).
     let mut negotiated = PROTOCOL_VERSION;
     loop {
+        // ORDERING: Relaxed — stop flag; eventual visibility within one
+        // read-timeout slice is all shutdown latency depends on.
         if stop.load(Ordering::Relaxed) {
             return;
         }
@@ -196,6 +200,7 @@ fn handle_conn(
     let wm = WorkerMetrics::new(registry);
     // Request loop.
     loop {
+        // ORDERING: Relaxed — same stop flag as the handshake loop above.
         if stop.load(Ordering::Relaxed) {
             return;
         }
@@ -338,6 +343,8 @@ impl ThreadWorker {
 
     /// Stop serving and join the serve loop.
     pub fn kill(&mut self) {
+        // ORDERING: Relaxed — stop flag; the join below is the real
+        // synchronization point with the serve loop.
         self.stop.store(true, Ordering::Relaxed);
         if let Some(h) = self.handle.take() {
             let _ = h.join();

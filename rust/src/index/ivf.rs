@@ -21,6 +21,19 @@ use crate::util::timer::Stopwatch;
 use crate::util::Rng;
 use std::io::{Read, Write};
 
+/// Coarse-quantizer shape for [`IvfIndex::build`]: cell count, k-means
+/// training iterations, and the default probe width baked into the built
+/// index (the trait-level [`AnnIndex::search`] stays parameter-free).
+#[derive(Debug, Clone, Copy)]
+pub struct IvfParams {
+    /// Number of inverted lists (clamped to `[1, n]` at build time).
+    pub nlist: usize,
+    /// Lloyd iterations for the coarse k-means.
+    pub train_iters: usize,
+    /// Default cells probed per query (clamped to `[1, nlist]`).
+    pub nprobe: usize,
+}
+
 /// Inverted-file index with a k-means coarse quantizer.
 #[derive(Debug, Clone)]
 pub struct IvfIndex {
@@ -35,18 +48,14 @@ pub struct IvfIndex {
 }
 
 impl IvfIndex {
-    /// Build with `nlist` cells (clamped to `[1, n]`) and a default probe
-    /// width `nprobe` (clamped to `[1, nlist]`), deterministic from `seed`.
-    /// `storage` picks flat/SQ8/PQ for the scanned copy; the coarse
+    /// Build with the [`IvfParams`] coarse shape, deterministic from
+    /// `seed`. `storage` picks flat/SQ8/PQ for the scanned copy; the coarse
     /// quantizer always trains on the raw full-precision rows.
-    #[allow(clippy::too_many_arguments)]
     pub fn build(
         data: &[f32],
         dim: usize,
         metric: Metric,
-        nlist: usize,
-        train_iters: usize,
-        nprobe: usize,
+        params: IvfParams,
         storage: &StorageSpec,
         seed: u64,
     ) -> Result<IvfIndex> {
@@ -57,11 +66,11 @@ impl IvfIndex {
         if n == 0 {
             return Err(OpdrError::data("ivf index: empty data"));
         }
-        let nlist = nlist.clamp(1, n);
-        let nprobe = nprobe.clamp(1, nlist);
+        let nlist = params.nlist.clamp(1, n);
+        let nprobe = params.nprobe.clamp(1, nlist);
 
         let mut rng = Rng::new(seed);
-        let centroids = kmeans_train(data, dim, metric, nlist, train_iters, &mut rng);
+        let centroids = kmeans_train(data, dim, metric, nlist, params.train_iters, &mut rng);
         let mut lists = vec![Vec::new(); nlist];
         for i in 0..n {
             let c = nearest_centroid(&data[i * dim..(i + 1) * dim], &centroids, dim, metric);
@@ -277,17 +286,10 @@ mod tests {
     fn full_probe_matches_exact() {
         let dim = 4;
         let data = blobs(20, dim, 3);
-        let idx = IvfIndex::build(
-            &data,
-            dim,
-            Metric::SqEuclidean,
-            8,
-            10,
-            8,
-            &StorageSpec::flat(),
-            7,
-        )
-        .unwrap();
+        let params = IvfParams { nlist: 8, train_iters: 10, nprobe: 8 };
+        let idx =
+            IvfIndex::build(&data, dim, Metric::SqEuclidean, params, &StorageSpec::flat(), 7)
+                .unwrap();
         let mut rng = Rng::new(11);
         let q = rng.normal_vec_f32(dim);
         let got = idx.search(&q, 5).unwrap();
@@ -302,17 +304,9 @@ mod tests {
     fn all_points_indexed_and_params_clamped() {
         let dim = 4;
         let data = blobs(5, dim, 2); // 20 points
-        let idx = IvfIndex::build(
-            &data,
-            dim,
-            Metric::Euclidean,
-            500,
-            4,
-            900,
-            &StorageSpec::flat(),
-            1,
-        )
-        .unwrap();
+        let params = IvfParams { nlist: 500, train_iters: 4, nprobe: 900 };
+        let idx = IvfIndex::build(&data, dim, Metric::Euclidean, params, &StorageSpec::flat(), 1)
+            .unwrap();
         assert!(idx.nlist() <= 20);
         assert!(idx.nprobe() <= idx.nlist());
         let total: usize = idx.lists.iter().map(|l| l.len()).sum();
@@ -324,12 +318,12 @@ mod tests {
     fn sq8_shrinks_memory_with_usable_recall() {
         let dim = 8;
         let data = blobs(50, dim, 5);
+        let p888 = IvfParams { nlist: 8, train_iters: 8, nprobe: 8 };
         let flat =
-            IvfIndex::build(&data, dim, Metric::SqEuclidean, 8, 8, 8, &StorageSpec::flat(), 9)
+            IvfIndex::build(&data, dim, Metric::SqEuclidean, p888, &StorageSpec::flat(), 9)
                 .unwrap();
-        let sq8 =
-            IvfIndex::build(&data, dim, Metric::SqEuclidean, 8, 8, 8, &StorageSpec::sq8(), 9)
-                .unwrap();
+        let sq8 = IvfIndex::build(&data, dim, Metric::SqEuclidean, p888, &StorageSpec::sq8(), 9)
+            .unwrap();
         assert!(sq8.memory_bytes() < flat.memory_bytes() / 2);
         let mut hits = 0;
         let k = 5;
@@ -349,8 +343,9 @@ mod tests {
         let dim = 6;
         let data = blobs(25, dim, 8);
         for spec in [StorageSpec::flat(), StorageSpec::sq8(), StorageSpec::pq()] {
+            let params = IvfParams { nlist: 6, train_iters: 6, nprobe: 3 };
             let idx =
-                IvfIndex::build(&data, dim, Metric::SqEuclidean, 6, 6, 3, &spec, 4).unwrap();
+                IvfIndex::build(&data, dim, Metric::SqEuclidean, params, &spec, 4).unwrap();
             let mut buf = Vec::new();
             idx.write_to(&mut buf).unwrap();
             let back = IvfIndex::read_from(&mut buf.as_slice()).unwrap();
@@ -373,8 +368,15 @@ mod tests {
         let dim = 4;
         let data = blobs(5, dim, 1);
         let idx =
-            IvfIndex::build(&data, dim, Metric::Euclidean, 4, 4, 2, &StorageSpec::flat(), 3)
-                .unwrap();
+            IvfIndex::build(
+                &data,
+                dim,
+                Metric::Euclidean,
+                IvfParams { nlist: 4, train_iters: 4, nprobe: 2 },
+                &StorageSpec::flat(),
+                3,
+            )
+            .unwrap();
         let mut buf = Vec::new();
         idx.write_to(&mut buf).unwrap();
         // Truncation.
@@ -390,8 +392,15 @@ mod tests {
         let dim = 4;
         let data = blobs(5, dim, 1);
         let idx =
-            IvfIndex::build(&data, dim, Metric::Euclidean, 4, 4, 2, &StorageSpec::flat(), 3)
-                .unwrap();
+            IvfIndex::build(
+                &data,
+                dim,
+                Metric::Euclidean,
+                IvfParams { nlist: 4, train_iters: 4, nprobe: 2 },
+                &StorageSpec::flat(),
+                3,
+            )
+            .unwrap();
         assert!(idx.search(&[0.0; 5], 2).is_err());
     }
 }

@@ -62,7 +62,7 @@ pub mod sq8;
 pub use delta::DeltaIndex;
 pub use exact::ExactIndex;
 pub use hnsw::{HnswIndex, HnswParams};
-pub use ivf::IvfIndex;
+pub use ivf::{IvfIndex, IvfParams};
 pub use pq::{AdcTable, PqParams, PqStorage};
 pub use shard::ShardedIndex;
 pub use sq8::{Sq8Bounds, Sq8Storage};
@@ -360,9 +360,11 @@ pub fn build_index(
             data,
             dim,
             metric,
-            policy.ivf_nlist,
-            policy.ivf_train_iters,
-            policy.ivf_nprobe,
+            IvfParams {
+                nlist: policy.ivf_nlist,
+                train_iters: policy.ivf_train_iters,
+                nprobe: policy.ivf_nprobe,
+            },
             &storage,
             seed,
         )?)),

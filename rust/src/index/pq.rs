@@ -137,14 +137,13 @@ impl PqStorage {
         let rerank_depth = params.rerank_depth.max(1);
         let mut rng = Rng::new(seed);
 
+        let shape = PqShape { m, dsub, ksub };
         let rotation = if params.opq && dim > 1 {
             train_opq_rotation(
                 data,
                 dim,
                 n,
-                m,
-                dsub,
-                ksub,
+                shape,
                 train_iters.min(4),
                 params.opq_iters.max(1),
                 &mut rng,
@@ -161,8 +160,8 @@ impl PqStorage {
             }
             None => data,
         };
-        let codebooks = train_codebooks(y, n, dim, m, dsub, ksub, train_iters, &mut rng);
-        let codes = encode_all(y, n, dim, m, dsub, ksub, &codebooks);
+        let codebooks = train_codebooks(y, n, dim, shape, train_iters, &mut rng);
+        let codes = encode_all(y, n, dim, shape, &codebooks);
         Ok(PqStorage {
             n,
             dim,
@@ -496,18 +495,26 @@ fn rotate_rows(data: &[f32], dim: usize, r: &[f32]) -> Vec<f32> {
     out
 }
 
+/// Subspace geometry threaded through the raw training/encoding helpers
+/// (before a [`PqStorage`] exists to carry it): subquantizer count, dims
+/// per subspace, centroids per subspace.
+#[derive(Debug, Clone, Copy)]
+struct PqShape {
+    m: usize,
+    dsub: usize,
+    ksub: usize,
+}
+
 /// Train one k-means codebook per subspace over (possibly rotated) rows `y`.
-#[allow(clippy::too_many_arguments)]
 fn train_codebooks(
     y: &[f32],
     n: usize,
     dim: usize,
-    m: usize,
-    dsub: usize,
-    ksub: usize,
+    shape: PqShape,
     iters: usize,
     rng: &mut Rng,
 ) -> Vec<f32> {
+    let PqShape { m, dsub, ksub } = shape;
     let mut codebooks = Vec::with_capacity(m * ksub * dsub);
     let mut sub = vec![0.0f32; n * dsub];
     for s in 0..m {
@@ -530,15 +537,8 @@ fn train_codebooks(
 }
 
 /// Assign every row to its nearest centroid per subspace and pack the codes.
-fn encode_all(
-    y: &[f32],
-    n: usize,
-    dim: usize,
-    m: usize,
-    dsub: usize,
-    ksub: usize,
-    codebooks: &[f32],
-) -> Vec<u8> {
+fn encode_all(y: &[f32], n: usize, dim: usize, shape: PqShape, codebooks: &[f32]) -> Vec<u8> {
+    let PqShape { m, dsub, ksub } = shape;
     let packed = ksub <= 16;
     let row_bytes = row_bytes_for(m, ksub);
     let mut codes = vec![0u8; n * row_bytes];
@@ -560,16 +560,8 @@ fn encode_all(
 
 /// Decode one row from raw codebooks/codes (used during OPQ training before
 /// a `PqStorage` exists).
-#[allow(clippy::too_many_arguments)]
-fn decode_raw(
-    codes: &[u8],
-    codebooks: &[f32],
-    id: usize,
-    m: usize,
-    dsub: usize,
-    ksub: usize,
-    out: &mut [f32],
-) {
+fn decode_raw(codes: &[u8], codebooks: &[f32], id: usize, shape: PqShape, out: &mut [f32]) {
+    let PqShape { m, dsub, ksub } = shape;
     let packed = ksub <= 16;
     let row_bytes = row_bytes_for(m, ksub);
     for s in 0..m {
@@ -584,14 +576,11 @@ fn decode_raw(
 /// SVD of `M = X̂ᵀX` (computed via [`eigh`] of `MᵀM`: `MᵀM = V Σ² Vᵀ`,
 /// `U = M V Σ⁻¹`). A rank-deficient `M` (degenerate data) keeps the last
 /// well-defined rotation instead of dividing by ~0 singular values.
-#[allow(clippy::too_many_arguments)]
 fn train_opq_rotation(
     data: &[f32],
     dim: usize,
     n: usize,
-    m: usize,
-    dsub: usize,
-    ksub: usize,
+    shape: PqShape,
     kmeans_iters: usize,
     opq_iters: usize,
     rng: &mut Rng,
@@ -604,12 +593,12 @@ fn train_opq_rotation(
     let mut decoded = vec![0.0f32; dim];
     for _ in 0..opq_iters {
         let y = rotate_rows(data, dim, &r);
-        let codebooks = train_codebooks(&y, n, dim, m, dsub, ksub, kmeans_iters, rng);
-        let codes = encode_all(&y, n, dim, m, dsub, ksub, &codebooks);
+        let codebooks = train_codebooks(&y, n, dim, shape, kmeans_iters, rng);
+        let codes = encode_all(&y, n, dim, shape, &codebooks);
         // M[a][b] = Σ_i x̂_i[a] · x_i[b]  (reconstructions vs raw rows).
         let mut mdat = vec![0.0f64; dim * dim];
         for i in 0..n {
-            decode_raw(&codes, &codebooks, i, m, dsub, ksub, &mut decoded);
+            decode_raw(&codes, &codebooks, i, shape, &mut decoded);
             let x = &data[i * dim..(i + 1) * dim];
             for a in 0..dim {
                 let xa = decoded[a] as f64;

@@ -49,7 +49,7 @@ use crate::telemetry::SearchTrace;
 use crate::util::timer::Stopwatch;
 use std::io::{Read, Write};
 use std::ops::Range;
-use std::sync::mpsc::channel;
+use std::sync::mpsc::sync_channel;
 use std::sync::Arc;
 
 /// Upper bound on the segment count accepted from disk (a corrupt header
@@ -290,7 +290,9 @@ impl ShardedIndex {
         }
         self.check_query(query)?;
         let q = Arc::new(query.to_vec());
-        let (tx, rx) = channel::<(usize, Result<Vec<Neighbor>>)>();
+        // One slot per segment: every worker's send succeeds immediately
+        // even before this thread starts draining (bounded, never blocks).
+        let (tx, rx) = sync_channel::<(usize, Result<Vec<Neighbor>>)>(self.segments.len());
         for (s, seg) in self.segments.iter().enumerate() {
             let seg = Arc::clone(seg);
             let q = Arc::clone(&q);
@@ -573,7 +575,9 @@ pub fn build_on_pool(
                     return;
                 }
             };
-            let (tx, rx) = channel::<(usize, Result<Box<dyn AnnIndex>>)>();
+            // One slot per segment job, so build workers never block on the
+            // collector no matter when it drains.
+            let (tx, rx) = sync_channel::<(usize, Result<Box<dyn AnnIndex>>)>(ranges.len());
             for (s, range) in ranges.into_iter().enumerate() {
                 let data = Arc::clone(&data);
                 let leaf = leaf.clone();
@@ -717,7 +721,7 @@ mod tests {
         };
         let serial = ShardedIndex::build(&data, dim, Metric::SqEuclidean, &policy, 5).unwrap();
         let pool = ThreadPool::new(2);
-        let (tx, rx) = channel();
+        let (tx, rx) = sync_channel(1);
         build_on_pool(Arc::clone(&data), dim, Metric::SqEuclidean, &policy, 5, &pool, move |r| {
             let _ = tx.send(r);
         });
@@ -737,7 +741,7 @@ mod tests {
         let dim = 4;
         let data = Arc::new(rng.normal_vec_f32(20 * dim));
         let pool = ThreadPool::new(2);
-        let (tx, rx) = channel();
+        let (tx, rx) = sync_channel(1);
         build_on_pool(
             Arc::clone(&data),
             dim,
@@ -754,7 +758,7 @@ mod tests {
         assert_eq!(built.kind(), IndexKind::Exact);
 
         // Errors surface through `done` too (empty data).
-        let (tx, rx) = channel();
+        let (tx, rx) = sync_channel(1);
         let empty = Arc::new(Vec::new());
         build_on_pool(empty, dim, Metric::Euclidean, &exact_policy(1), 1, &pool, move |r| {
             let _ = tx.send(r);

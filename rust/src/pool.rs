@@ -1,22 +1,36 @@
 //! Minimal worker thread pool (no `tokio`/`rayon` offline).
 //!
-//! Fixed worker count, bounded in-flight via the job channel, `scope`-style
-//! chunked parallel map for the scoring hot path. Lives at the crate root
-//! (not under [`crate::coordinator`]) because both the coordinator's
-//! scoring path and the index subsystem's shard builds / query fan-out
-//! ([`crate::index::shard`]) run on it; the coordinator re-exports it for
-//! compatibility.
+//! Fixed worker count, bounded job queue with caller-runs overflow,
+//! `scope`-style chunked parallel map for the scoring hot path. Lives at
+//! the crate root (not under [`crate::coordinator`]) because both the
+//! coordinator's scoring path and the index subsystem's shard builds /
+//! query fan-out ([`crate::index::shard`]) run on it; the coordinator
+//! re-exports it for compatibility.
+//!
+//! The queue is a `sync_channel`, never the unbounded `mpsc::channel`: a
+//! submission burst can't grow an invisible heap of boxed closures. When
+//! the queue is full the submitting thread runs the job *inline*
+//! (caller-runs). That keeps every job's completion guarantee — nothing is
+//! dropped, so [`ThreadPool::map_chunks`] stays complete — while applying
+//! backpressure at the source: a producer that outruns the workers ends up
+//! doing the work itself instead of queueing more.
 
-use crate::util::lock_recover;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use crate::util::{lock_recover_ranked, ranks};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Queue slots per worker when the capacity isn't given explicitly
+/// ([`ThreadPool::new`]). Deep enough that chunked fan-outs (one job per
+/// chunk, chunks ≈ workers) never trip caller-runs in the common case,
+/// shallow enough that a runaway producer is throttled within one burst.
+const DEFAULT_QUEUE_DEPTH_PER_WORKER: usize = 64;
+
 /// A fixed-size thread pool.
 pub struct ThreadPool {
-    tx: Option<Sender<Job>>,
+    tx: Option<SyncSender<Job>>,
     workers: Vec<JoinHandle<()>>,
 }
 
@@ -27,10 +41,19 @@ impl std::fmt::Debug for ThreadPool {
 }
 
 impl ThreadPool {
-    /// Spawn `size` workers (at least 1).
+    /// Spawn `size` workers (at least 1) with the default queue depth.
     pub fn new(size: usize) -> ThreadPool {
         let size = size.max(1);
-        let (tx, rx) = channel::<Job>();
+        ThreadPool::with_queue_capacity(size, size * DEFAULT_QUEUE_DEPTH_PER_WORKER)
+    }
+
+    /// Spawn `size` workers (at least 1) over a job queue bounded at
+    /// `capacity` (at least 1). Submissions beyond the bound run inline on
+    /// the submitting thread (caller-runs) instead of blocking or growing
+    /// an unbounded queue.
+    pub fn with_queue_capacity(size: usize, capacity: usize) -> ThreadPool {
+        let size = size.max(1);
+        let (tx, rx) = sync_channel::<Job>(capacity.max(1));
         let rx = Arc::new(Mutex::new(rx));
         let workers = (0..size)
             .map(|i| {
@@ -39,7 +62,7 @@ impl ThreadPool {
                     .name(format!("opdr-worker-{i}"))
                     .spawn(move || loop {
                         let job = {
-                            let guard = lock_recover(&rx);
+                            let guard = lock_recover_ranked(&rx, ranks::POOL_QUEUE);
                             guard.recv()
                         };
                         match job {
@@ -58,13 +81,18 @@ impl ThreadPool {
         self.workers.len()
     }
 
-    /// Submit a job.
+    /// Submit a job. If the queue is full the job runs inline on the
+    /// calling thread — submission never blocks and never drops work.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.tx
-            .as_ref()
-            .expect("pool not shut down")
-            .send(Box::new(f))
-            .expect("worker channel open");
+        let tx = self.tx.as_ref().expect("pool not shut down");
+        match tx.try_send(Box::new(f)) {
+            Ok(()) => {}
+            Err(TrySendError::Full(job)) => job(),
+            // Workers only exit once the sending side is closed, and the
+            // pool holds a sender for its whole lifetime — mirror the old
+            // unbounded-send invariant.
+            Err(TrySendError::Disconnected(_)) => panic!("worker channel open"),
+        }
     }
 
     /// A cheap cloneable `'static` submit handle onto the same workers, for
@@ -90,7 +118,9 @@ impl ThreadPool {
         }
         let chunk = chunk.max(1);
         let f = Arc::new(f);
-        let (tx, rx) = channel();
+        // One slot per chunk: every worker's result send succeeds without
+        // blocking even if this thread hasn't started draining yet.
+        let (tx, rx) = sync_channel(n.div_ceil(chunk));
         let mut count = 0usize;
         let mut start = 0usize;
         while start < n {
@@ -126,7 +156,7 @@ impl Drop for ThreadPool {
 /// Detached submit handle created by [`ThreadPool::handle`].
 #[derive(Clone)]
 pub struct PoolHandle {
-    tx: Sender<Job>,
+    tx: SyncSender<Job>,
 }
 
 impl std::fmt::Debug for PoolHandle {
@@ -136,9 +166,15 @@ impl std::fmt::Debug for PoolHandle {
 }
 
 impl PoolHandle {
-    /// Submit a job; silently dropped if every worker has exited.
+    /// Submit a job; runs inline when the queue is full (caller-runs, same
+    /// as [`ThreadPool::execute`]); silently dropped if every worker has
+    /// exited.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        let _ = self.tx.send(Box::new(f));
+        match self.tx.try_send(Box::new(f)) {
+            Ok(()) => {}
+            Err(TrySendError::Full(job)) => job(),
+            Err(TrySendError::Disconnected(_)) => {}
+        }
     }
 }
 
@@ -151,7 +187,7 @@ mod tests {
     fn executes_all_jobs() {
         let pool = ThreadPool::new(4);
         let counter = Arc::new(AtomicUsize::new(0));
-        let (tx, rx) = channel();
+        let (tx, rx) = sync_channel(100);
         for _ in 0..100 {
             let c = Arc::clone(&counter);
             let tx = tx.clone();
@@ -197,7 +233,7 @@ mod tests {
     fn handle_submits_from_detached_thread() {
         let pool = ThreadPool::new(2);
         let handle = pool.handle();
-        let (tx, rx) = channel();
+        let (tx, rx) = sync_channel(10);
         std::thread::spawn(move || {
             for i in 0..10 {
                 let tx = tx.clone();
@@ -211,5 +247,50 @@ mod tests {
         let mut got: Vec<i32> = rx.iter().take(10).collect();
         got.sort_unstable();
         assert_eq!(got, (0..10).collect::<Vec<_>>());
+    }
+
+    /// Backpressure regression: a full queue must neither block the
+    /// submitter nor drop jobs — overflow runs inline (caller-runs).
+    #[test]
+    fn full_queue_runs_job_on_submitter_without_blocking_or_dropping() {
+        // One worker, one queue slot. Park the worker on a gate so the
+        // queue stays full for the whole submission burst.
+        let pool = ThreadPool::with_queue_capacity(1, 1);
+        let gate = Arc::new(Mutex::new(()));
+        // lint:allow(no-naked-lock-unwrap: test-owned gate, never poisoned)
+        let held = gate.lock().unwrap();
+        {
+            let gate = Arc::clone(&gate);
+            pool.execute(move || {
+                // lint:allow(no-naked-lock-unwrap: test-owned gate, never poisoned)
+                drop(gate.lock().unwrap());
+            });
+        }
+        // Give the worker a beat to take the gate job off the queue.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+
+        let counter = Arc::new(AtomicUsize::new(0));
+        let submitter = std::thread::current().id();
+        let inline_runs = Arc::new(AtomicUsize::new(0));
+        // Slot 1 fills the queue; jobs 2..=8 overflow and must run inline
+        // right here, on this thread, while the worker is still parked.
+        for _ in 0..8 {
+            let c = Arc::clone(&counter);
+            let inline = Arc::clone(&inline_runs);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                if std::thread::current().id() == submitter {
+                    inline.fetch_add(1, Ordering::SeqCst);
+                }
+            });
+        }
+        // Overflow jobs already ran (submission did not block on the full
+        // queue), and at least one provably ran on the submitting thread.
+        assert!(counter.load(Ordering::SeqCst) >= 7);
+        assert!(inline_runs.load(Ordering::SeqCst) >= 7);
+
+        drop(held); // release the worker; the queued job drains
+        drop(pool); // joins workers
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
     }
 }

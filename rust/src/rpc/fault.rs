@@ -26,6 +26,7 @@
 
 use crate::error::Result;
 use crate::rpc::frame::{encode_frame, Message, HEADER_BYTES, MAX_PAYLOAD_BYTES};
+use crate::util::{lock_recover_ranked, ranks};
 use std::collections::VecDeque;
 use std::io::{Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
@@ -91,7 +92,7 @@ impl FaultScript {
 }
 
 fn next_fault(state: &Mutex<VecDeque<Fault>>) -> Fault {
-    let mut g = state.lock().unwrap_or_else(|p| p.into_inner());
+    let mut g = lock_recover_ranked(state, ranks::RPC_FAULTS);
     g.pop_front().unwrap_or(Fault::None)
 }
 
@@ -226,6 +227,8 @@ impl FaultProxy {
         let req_state = request_script.into_state();
         let resp_state = response_script.into_state();
         let handle = thread::spawn(move || {
+            // ORDERING: Relaxed — stop flag polled once per accept slice;
+            // shutdown synchronizes through the join, not this load.
             while !stop2.load(Ordering::Relaxed) {
                 match listener.accept() {
                     Ok((client, _)) => {
@@ -258,6 +261,8 @@ impl FaultProxy {
 
     /// Stop accepting; existing relays die with their connections.
     pub fn shutdown(&mut self) {
+        // ORDERING: Relaxed — stop flag; the accept thread observes it on
+        // its next slice and the join provides the synchronization.
         self.stop.store(true, Ordering::Relaxed);
         if let Some(h) = self.handle.take() {
             let _ = h.join();

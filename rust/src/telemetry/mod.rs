@@ -29,6 +29,7 @@ use std::time::Duration;
 // and pool share one audited implementation (enforced by opdr-lint's
 // `no-naked-lock-unwrap` rule).
 pub use crate::util::lock_recover;
+use crate::util::{lock_recover_ranked, ranks};
 
 /// Monotonic named counter.
 #[derive(Debug, Default)]
@@ -44,6 +45,8 @@ impl Counter {
 
     /// Add `n`.
     pub fn add(&self, n: u64) {
+        // ORDERING: monotonic counter; readers only need an eventually
+        // consistent total, nothing is published through this value.
         self.value.fetch_add(n, Ordering::Relaxed);
     }
 
@@ -54,6 +57,7 @@ impl Counter {
 
     /// Current value.
     pub fn get(&self) -> u64 {
+        // ORDERING: see `add` — a stale read is fine for telemetry.
         self.value.load(Ordering::Relaxed)
     }
 }
@@ -132,7 +136,7 @@ impl LatencyHistogram {
         } else {
             (((ns as f64 / BASE_NS).ln() / GROWTH.ln()) as usize).min(NBUCKETS - 1)
         };
-        let mut g = lock_recover(&self.inner);
+        let mut g = lock_recover_ranked(&self.inner, ranks::TELEMETRY_HISTOGRAM);
         g.buckets[idx] += 1;
         g.count += 1;
         g.sum_ns += ns as u128;
@@ -142,12 +146,12 @@ impl LatencyHistogram {
 
     /// Number of samples.
     pub fn count(&self) -> u64 {
-        lock_recover(&self.inner).count
+        lock_recover_ranked(&self.inner, ranks::TELEMETRY_HISTOGRAM).count
     }
 
     /// Mean latency.
     pub fn mean(&self) -> Duration {
-        let g = lock_recover(&self.inner);
+        let g = lock_recover_ranked(&self.inner, ranks::TELEMETRY_HISTOGRAM);
         if g.count == 0 {
             return Duration::ZERO;
         }
@@ -156,13 +160,13 @@ impl LatencyHistogram {
 
     /// Sum of all recorded samples.
     pub fn total(&self) -> Duration {
-        let g = lock_recover(&self.inner);
+        let g = lock_recover_ranked(&self.inner, ranks::TELEMETRY_HISTOGRAM);
         Duration::from_nanos(u64::try_from(g.sum_ns).unwrap_or(u64::MAX))
     }
 
     /// Approximate quantile (bucket upper bound), `q` in [0,1].
     pub fn quantile(&self, q: f64) -> Duration {
-        let g = lock_recover(&self.inner);
+        let g = lock_recover_ranked(&self.inner, ranks::TELEMETRY_HISTOGRAM);
         if g.count == 0 {
             return Duration::ZERO;
         }
@@ -180,7 +184,7 @@ impl LatencyHistogram {
 
     /// Max recorded sample.
     pub fn max(&self) -> Duration {
-        Duration::from_nanos(lock_recover(&self.inner).max_ns)
+        Duration::from_nanos(lock_recover_ranked(&self.inner, ranks::TELEMETRY_HISTOGRAM).max_ns)
     }
 
     /// Number of buckets a snapshot must carry.
@@ -190,7 +194,7 @@ impl LatencyHistogram {
 
     /// Consistent full-state copy (one lock acquisition).
     pub fn snapshot(&self) -> HistogramSnapshot {
-        let g = lock_recover(&self.inner);
+        let g = lock_recover_ranked(&self.inner, ranks::TELEMETRY_HISTOGRAM);
         HistogramSnapshot {
             buckets: g.buckets.clone(),
             count: g.count,
@@ -207,7 +211,7 @@ impl LatencyHistogram {
     /// exactly the histogram a single process recording all N sample
     /// streams would hold.
     pub fn merge_snapshot(&self, s: &HistogramSnapshot) {
-        let mut g = lock_recover(&self.inner);
+        let mut g = lock_recover_ranked(&self.inner, ranks::TELEMETRY_HISTOGRAM);
         for (b, &sb) in g.buckets.iter_mut().zip(s.buckets.iter()) {
             *b = b.saturating_add(sb);
         }

@@ -22,6 +22,7 @@
 use super::registry::{self, Registry};
 use crate::knn::knn_indices;
 use crate::metrics::Metric;
+use crate::util::{lock_recover_ranked, ranks};
 use std::collections::HashMap;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
@@ -93,7 +94,7 @@ impl RecallProbe {
     /// Deterministic sampler: true for the 1st, (N+1)-th, (2N+1)-th, ...
     /// completed search of each collection.
     pub fn should_sample(&self, collection: &str) -> bool {
-        let mut g = super::lock_recover(&self.seen);
+        let mut g = lock_recover_ranked(&self.seen, ranks::PROBE_SEEN);
         let c = g.entry(collection.to_string()).or_insert(0);
         let pick = *c % self.every == 0;
         *c += 1;

@@ -18,6 +18,7 @@
 //! every entry is pinned does the oldest pinned entry fall out.
 
 use crate::util::timer::fmt_duration;
+use crate::util::{lock_recover_ranked, ranks};
 use std::collections::VecDeque;
 use std::fmt::Write as _;
 use std::sync::Mutex;
@@ -98,7 +99,7 @@ impl FlightRecorder {
     /// Record one completed query.
     pub fn record(&self, rec: QueryRecord) {
         let pinned = rec.partial || rec.total >= self.slow_threshold;
-        let mut g = super::lock_recover(&self.state);
+        let mut g = lock_recover_ranked(&self.state, ranks::RECORDER_RING);
         g.recorded += 1;
         if g.ring.len() >= self.capacity {
             // Oldest unpinned first; only an all-pinned ring evicts a
@@ -119,12 +120,12 @@ impl FlightRecorder {
 
     /// Records currently held (oldest first).
     pub fn entries(&self) -> Vec<QueryRecord> {
-        super::lock_recover(&self.state).ring.iter().map(|e| e.rec.clone()).collect()
+        lock_recover_ranked(&self.state, ranks::RECORDER_RING).ring.iter().map(|e| e.rec.clone()).collect()
     }
 
     /// The held record with this trace id, if any.
     pub fn find(&self, trace_id: u64) -> Option<QueryRecord> {
-        super::lock_recover(&self.state)
+        lock_recover_ranked(&self.state, ranks::RECORDER_RING)
             .ring
             .iter()
             .rev()
@@ -135,14 +136,14 @@ impl FlightRecorder {
     /// Queries recorded over the recorder's lifetime (not just those still
     /// held).
     pub fn recorded_total(&self) -> u64 {
-        super::lock_recover(&self.state).recorded
+        lock_recover_ranked(&self.state, ranks::RECORDER_RING).recorded
     }
 
     /// Structured text dump — the `SlowQueries` admin verb's payload.
     /// Pinned (slow/partial) entries print first, then the healthy tail,
     /// each newest-first within its group.
     pub fn dump(&self) -> String {
-        let g = super::lock_recover(&self.state);
+        let g = lock_recover_ranked(&self.state, ranks::RECORDER_RING);
         let pinned_count = g.ring.iter().filter(|e| e.pinned).count();
         let mut out = format!(
             "flight-recorder: {} of {} entries held ({} pinned, {} recorded, {} pinned evicted); slow threshold {}\n",

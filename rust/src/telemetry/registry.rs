@@ -17,7 +17,8 @@
 //! the bottom of this module; the verb/stage/label conventions are documented
 //! in `crate::coordinator`.
 
-use super::{lock_recover, Counter, HistogramSnapshot, LatencyHistogram};
+use super::{Counter, HistogramSnapshot, LatencyHistogram};
+use crate::util::{lock_recover_ranked, ranks};
 use crate::error::{OpdrError, Result};
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -39,11 +40,14 @@ impl Gauge {
 
     /// Set the current value.
     pub fn set(&self, v: f64) {
+        // ORDERING: last-value-wins gauge; the store is the whole payload
+        // (raw f64 bits), no other memory is published alongside it.
         self.bits.store(v.to_bits(), Ordering::Relaxed);
     }
 
     /// Current value.
     pub fn get(&self) -> f64 {
+        // ORDERING: see `set` — a stale gauge read is fine for telemetry.
         f64::from_bits(self.bits.load(Ordering::Relaxed))
     }
 }
@@ -85,7 +89,7 @@ impl Registry {
     /// call returns a fresh *detached* counter (never a panic on the serving
     /// path); mixing kinds under one name is a programming error.
     pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
-        let mut g = lock_recover(&self.inner);
+        let mut g = lock_recover_ranked(&self.inner, ranks::TELEMETRY_REGISTRY);
         let e = g
             .entry(Self::key(name, labels))
             .or_insert_with(|| Instrument::Counter(Arc::new(Counter::new())));
@@ -101,7 +105,7 @@ impl Registry {
     /// Get or create the gauge `name{labels}` (kind-mismatch behaves like
     /// [`Registry::counter`]).
     pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
-        let mut g = lock_recover(&self.inner);
+        let mut g = lock_recover_ranked(&self.inner, ranks::TELEMETRY_REGISTRY);
         let e = g
             .entry(Self::key(name, labels))
             .or_insert_with(|| Instrument::Gauge(Arc::new(Gauge::new())));
@@ -117,7 +121,7 @@ impl Registry {
     /// Get or create the latency histogram `name{labels}` (kind-mismatch
     /// behaves like [`Registry::counter`]).
     pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> Arc<LatencyHistogram> {
-        let mut g = lock_recover(&self.inner);
+        let mut g = lock_recover_ranked(&self.inner, ranks::TELEMETRY_REGISTRY);
         let e = g
             .entry(Self::key(name, labels))
             .or_insert_with(|| Instrument::Histogram(Arc::new(LatencyHistogram::new())));
@@ -139,7 +143,7 @@ impl Registry {
         // Snapshot the handles, then drop the map lock before touching the
         // (individually locked) histograms.
         let snapshot: Vec<((String, Labels), Instrument)> = {
-            let g = lock_recover(&self.inner);
+            let g = lock_recover_ranked(&self.inner, ranks::TELEMETRY_REGISTRY);
             g.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
         };
         let mut out = String::new();
@@ -200,7 +204,7 @@ impl Registry {
     /// names and label strings.
     pub fn encode_snapshot(&self) -> String {
         let snapshot: Vec<((String, Labels), Instrument)> = {
-            let g = lock_recover(&self.inner);
+            let g = lock_recover_ranked(&self.inner, ranks::TELEMETRY_REGISTRY);
             g.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
         };
         let mut out = String::from("opdr-metrics-snapshot v1\n");

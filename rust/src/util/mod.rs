@@ -6,5 +6,5 @@ pub mod sync;
 pub mod timer;
 
 pub use rng::Rng;
-pub use sync::lock_recover;
+pub use sync::{lock_recover, lock_recover_ranked, ranks, LockRank, RankedGuard, LOCK_RANK_TABLE};
 pub use timer::Stopwatch;

@@ -1,5 +1,47 @@
-//! Poison-recovering lock acquisition — the repo-wide convention for every
-//! `Mutex` guard (machine-checked by `opdr-lint`'s `no-naked-lock-unwrap`).
+//! Poison-recovering lock acquisition and the lock-rank sentinel — the
+//! repo-wide conventions for every `Mutex` guard (machine-checked by
+//! `opdr-lint`'s `no-naked-lock-unwrap` and the `opdr-lint analyze`
+//! concurrency pass).
+//!
+//! # Lock-rank table
+//!
+//! Every long-lived `Mutex` in the tree is a named *site* with a numeric
+//! rank. Locks must be acquired in **strictly increasing rank order** within
+//! a thread; the table below is the canonical total order, mirrored in
+//! `rust/tools/lint/README.md` and enforced twice:
+//!
+//! - statically, by `opdr-lint analyze` (`lock-order` builds the
+//!   acquired-while-holding graph across files; `rank-table-sync` checks
+//!   every edge between ranked sites is rank-increasing and every constant
+//!   below is actually used at a call site), and
+//! - at runtime, by [`lock_recover_ranked`], whose debug-only thread-local
+//!   held-rank stack panics on out-of-order acquisition before the lock is
+//!   taken (a panic with a site name beats a silent deadlock). Release
+//!   builds compile the checks out entirely.
+//!
+//! | site                        | rank | defining module            |
+//! |-----------------------------|------|----------------------------|
+//! | `coordinator.builds`        | 10   | `coordinator/server.rs`    |
+//! | `coordinator.compactions`   | 15   | `coordinator/server.rs`    |
+//! | `coordinator.state`         | 20   | `coordinator/state.rs`     |
+//! | `coordinator.cache.serving` | 25   | `coordinator/state.rs`     |
+//! | `coordinator.cache.full`    | 26   | `coordinator/state.rs`     |
+//! | `coordinator.cache.padded`  | 27   | `coordinator/state.rs`     |
+//! | `pool.queue`                | 30   | `pool.rs`                  |
+//! | `dist.gateway`              | 40   | `coordinator/server.rs`    |
+//! | `dist.slot`                 | 45   | `dist/gateway.rs`          |
+//! | `rpc.faults`                | 50   | `rpc/fault.rs`             |
+//! | `telemetry.registry`        | 60   | `telemetry/registry.rs`    |
+//! | `recorder.ring`             | 65   | `telemetry/recorder.rs`    |
+//! | `telemetry.histogram`       | 70   | `telemetry/mod.rs`         |
+//! | `probe.seen`                | 75   | `telemetry/probe.rs`       |
+//!
+//! Rank gaps are deliberate: a new site slots between its neighbors without
+//! renumbering. The ordering itself encodes the serving stack's call
+//! direction — coordinator state machinery (which may publish into
+//! telemetry) ranks *below* telemetry sinks (which never call back out), and
+//! the gateway (which walks its slots and renders cluster metrics under its
+//! own guard) ranks below both the slots and every telemetry site.
 
 use std::sync::{Mutex, MutexGuard};
 
@@ -18,6 +60,150 @@ pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
+/// A named lock site with its position in the repo's total acquisition
+/// order (see the module docs for the canonical table).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LockRank {
+    /// Site name as it appears in `opdr-lint analyze` diagnostics.
+    pub name: &'static str,
+    /// Position in the total order; lower ranks are acquired first.
+    pub rank: u16,
+}
+
+impl LockRank {
+    /// Define a ranked site (used by the [`ranks`] constants).
+    pub const fn new(name: &'static str, rank: u16) -> LockRank {
+        LockRank { name, rank }
+    }
+}
+
+/// The canonical ranked sites. One constant per long-lived `Mutex`;
+/// `opdr-lint analyze`'s `rank-table-sync` rule fails CI if a constant here
+/// is never passed to [`lock_recover_ranked`] or if a static
+/// acquired-while-holding edge contradicts these numbers.
+pub mod ranks {
+    use super::LockRank;
+
+    /// `BuildTracker.inner` — in-flight build counts (`coordinator/server.rs`).
+    pub const COORDINATOR_BUILDS: LockRank = LockRank::new("coordinator.builds", 10);
+    /// `BuildTracker.compactions` — per-collection compaction totals.
+    pub const COORDINATOR_COMPACTIONS: LockRank = LockRank::new("coordinator.compactions", 15);
+    /// `IndexSlot.inner` — the generation-guarded index swap (`coordinator/state.rs`).
+    pub const COORDINATOR_STATE: LockRank = LockRank::new("coordinator.state", 20);
+    /// Serving-rows cache behind the slot (`coordinator/state.rs`).
+    pub const CACHE_SERVING: LockRank = LockRank::new("coordinator.cache.serving", 25);
+    /// Full-precision rows cache (`coordinator/state.rs`).
+    pub const CACHE_FULL: LockRank = LockRank::new("coordinator.cache.full", 26);
+    /// Padded 2-D array cache (`coordinator/state.rs`).
+    pub const CACHE_PADDED: LockRank = LockRank::new("coordinator.cache.padded", 27);
+    /// Worker job-queue receiver (`pool.rs`).
+    pub const POOL_QUEUE: LockRank = LockRank::new("pool.queue", 30);
+    /// The admin path's `Mutex<Gateway>` (`coordinator/server.rs`).
+    pub const DIST_GATEWAY: LockRank = LockRank::new("dist.gateway", 40);
+    /// `AddrCell.addr` — a shard slot's dialable address (`dist/gateway.rs`).
+    pub const DIST_SLOT: LockRank = LockRank::new("dist.slot", 45);
+    /// Fault-injection script position (`rpc/fault.rs`).
+    pub const RPC_FAULTS: LockRank = LockRank::new("rpc.faults", 50);
+    /// Registry instrument map (`telemetry/registry.rs`).
+    pub const TELEMETRY_REGISTRY: LockRank = LockRank::new("telemetry.registry", 60);
+    /// Flight-recorder ring state (`telemetry/recorder.rs`).
+    pub const RECORDER_RING: LockRank = LockRank::new("recorder.ring", 65);
+    /// Latency-histogram buckets (`telemetry/mod.rs`).
+    pub const TELEMETRY_HISTOGRAM: LockRank = LockRank::new("telemetry.histogram", 70);
+    /// Recall-probe dedup map (`telemetry/probe.rs`).
+    pub const PROBE_SEEN: LockRank = LockRank::new("probe.seen", 75);
+}
+
+/// Every ranked site, in rank order. Kept exhaustive by the
+/// `table_lists_every_rank_constant_in_order` test below; the README table
+/// and the `rank-table-sync` lint keep the other mirrors honest.
+pub const LOCK_RANK_TABLE: &[LockRank] = &[
+    ranks::COORDINATOR_BUILDS,
+    ranks::COORDINATOR_COMPACTIONS,
+    ranks::COORDINATOR_STATE,
+    ranks::CACHE_SERVING,
+    ranks::CACHE_FULL,
+    ranks::CACHE_PADDED,
+    ranks::POOL_QUEUE,
+    ranks::DIST_GATEWAY,
+    ranks::DIST_SLOT,
+    ranks::RPC_FAULTS,
+    ranks::TELEMETRY_REGISTRY,
+    ranks::RECORDER_RING,
+    ranks::TELEMETRY_HISTOGRAM,
+    ranks::PROBE_SEEN,
+];
+
+#[cfg(debug_assertions)]
+thread_local! {
+    /// Ranks this thread currently holds, in acquisition order. Guards may
+    /// drop out of LIFO order, so release removes the *last* matching entry
+    /// rather than popping blindly.
+    static HELD: std::cell::RefCell<Vec<LockRank>> = const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// Guard returned by [`lock_recover_ranked`]. Dereferences like a plain
+/// `MutexGuard`; in debug builds its drop unwinds the thread-local rank
+/// stack. In release builds it is a zero-cost newtype.
+pub struct RankedGuard<'a, T> {
+    guard: MutexGuard<'a, T>,
+    #[cfg(debug_assertions)]
+    rank: LockRank,
+}
+
+impl<T> std::ops::Deref for RankedGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.guard
+    }
+}
+
+impl<T> std::ops::DerefMut for RankedGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.guard
+    }
+}
+
+#[cfg(debug_assertions)]
+impl<T> Drop for RankedGuard<'_, T> {
+    fn drop(&mut self) {
+        HELD.with(|held| {
+            let mut held = held.borrow_mut();
+            if let Some(i) = held.iter().rposition(|h| *h == self.rank) {
+                held.remove(i);
+            }
+        });
+    }
+}
+
+/// [`lock_recover`] for a ranked site: in debug builds, panic if this
+/// thread already holds a lock of equal or higher rank — *before* taking
+/// `m`, so a genuine inversion surfaces as a named panic in every test run
+/// instead of a once-in-a-blue-moon deadlock in production. Release builds
+/// skip the bookkeeping entirely (`rank` is unused and [`RankedGuard`] is a
+/// plain newtype), so the serving path pays nothing.
+pub fn lock_recover_ranked<T>(m: &Mutex<T>, rank: LockRank) -> RankedGuard<'_, T> {
+    #[cfg(debug_assertions)]
+    HELD.with(|held| {
+        let mut held = held.borrow_mut();
+        if let Some(worst) = held.iter().find(|h| h.rank >= rank.rank) {
+            panic!(
+                "lock-rank inversion: acquiring {} (rank {}) while holding {} (rank {}) — \
+                 see the lock-rank table in util::sync",
+                rank.name, rank.rank, worst.name, worst.rank
+            );
+        }
+        held.push(rank);
+    });
+    #[cfg(not(debug_assertions))]
+    let _ = rank;
+    RankedGuard {
+        guard: lock_recover(m),
+        #[cfg(debug_assertions)]
+        rank,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -34,5 +220,104 @@ mod tests {
         assert!(m.is_poisoned());
         *lock_recover(&m) += 1;
         assert_eq!(*lock_recover(&m), 8);
+    }
+
+    #[test]
+    fn table_lists_every_rank_constant_in_order() {
+        assert!(!LOCK_RANK_TABLE.is_empty());
+        for pair in LOCK_RANK_TABLE.windows(2) {
+            assert!(
+                pair[0].rank < pair[1].rank,
+                "table not strictly increasing: {} ({}) before {} ({})",
+                pair[0].name,
+                pair[0].rank,
+                pair[1].name,
+                pair[1].rank
+            );
+        }
+        let mut names: Vec<&str> = LOCK_RANK_TABLE.iter().map(|r| r.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), LOCK_RANK_TABLE.len(), "duplicate site name in table");
+    }
+
+    #[test]
+    fn ranked_guard_derefs_like_a_plain_guard() {
+        let m = Mutex::new(3u32);
+        {
+            let mut g = lock_recover_ranked(&m, ranks::COORDINATOR_STATE);
+            *g += 1;
+        }
+        assert_eq!(*lock_recover(&m), 4);
+    }
+
+    #[test]
+    fn in_order_acquisition_is_silent() {
+        let a = Mutex::new(());
+        let b = Mutex::new(());
+        let _ga = lock_recover_ranked(&a, ranks::COORDINATOR_STATE);
+        let _gb = lock_recover_ranked(&b, ranks::TELEMETRY_REGISTRY);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn sentinel_panics_on_inversion() {
+        let lo = Mutex::new(());
+        let hi = Mutex::new(());
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _hi = lock_recover_ranked(&hi, ranks::TELEMETRY_REGISTRY);
+            let _lo = lock_recover_ranked(&lo, ranks::COORDINATOR_STATE);
+        }));
+        let err = res.expect_err("inversion must panic in debug builds");
+        let msg = err.downcast_ref::<String>().expect("panic carries a message");
+        assert!(msg.contains("lock-rank inversion"), "unexpected message: {msg}");
+        assert!(msg.contains("coordinator.state") && msg.contains("telemetry.registry"));
+        // The unwind released everything: the same order still trips, and
+        // the correct order is silent.
+        let res2 = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _hi = lock_recover_ranked(&hi, ranks::TELEMETRY_REGISTRY);
+            let _lo = lock_recover_ranked(&lo, ranks::COORDINATOR_STATE);
+        }));
+        assert!(res2.is_err());
+        let _lo = lock_recover_ranked(&lo, ranks::COORDINATOR_STATE);
+        let _hi = lock_recover_ranked(&hi, ranks::TELEMETRY_REGISTRY);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn sentinel_panics_on_equal_rank_reacquisition() {
+        let a = Mutex::new(());
+        let b = Mutex::new(());
+        let _ga = lock_recover_ranked(&a, ranks::POOL_QUEUE);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _gb = lock_recover_ranked(&b, ranks::POOL_QUEUE);
+        }));
+        assert!(res.is_err(), "equal-rank nesting must panic (it could self-deadlock)");
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn out_of_lifo_release_unwinds_correctly() {
+        let a = Mutex::new(());
+        let b = Mutex::new(());
+        let ga = lock_recover_ranked(&a, ranks::COORDINATOR_STATE);
+        let gb = lock_recover_ranked(&b, ranks::TELEMETRY_REGISTRY);
+        drop(ga); // release the *outer* guard first
+        drop(gb);
+        // Stack is empty again: low-rank acquisition is silent.
+        let _ga = lock_recover_ranked(&a, ranks::COORDINATOR_BUILDS);
+    }
+
+    #[test]
+    fn ranks_are_thread_local() {
+        let hi = Mutex::new(());
+        let lo = Mutex::new(());
+        let _hi = lock_recover_ranked(&hi, ranks::TELEMETRY_REGISTRY);
+        // Another thread's rank stack is independent of ours.
+        std::thread::spawn(move || {
+            let _lo = lock_recover_ranked(&lo, ranks::COORDINATOR_STATE);
+        })
+        .join()
+        .unwrap();
     }
 }

@@ -275,10 +275,251 @@ fn fixture_no_blanket_allow() {
     let bad_warnings = "#[allow(warnings)]\nfn f() {}\n";
     assert_eq!(rule_names(&lint_one("rust/src/x.rs", bad_warnings)), ["no-blanket-allow"]);
 
-    // Narrow, item-scoped allows stay allowed (the repo's six
-    // too_many_arguments sites are the canonical example).
-    let scoped = "#[allow(clippy::too_many_arguments)]\nfn f(a: u8, b: u8, c: u8) {}\n";
+    // The retired class: every tracked `too_many_arguments` allow was
+    // removed via params-struct refactors, and new ones are rejected.
+    let retired = "#[allow(clippy::too_many_arguments)]\nfn f(a: u8, b: u8, c: u8) {}\n";
+    assert_eq!(rule_names(&lint_one("rust/src/x.rs", retired)), ["no-blanket-allow"]);
+
+    // Narrow, item-scoped allows of other lints stay allowed.
+    let scoped = "#[allow(clippy::needless_range_loop)]\nfn f() {}\n";
     assert!(lint_one("rust/src/x.rs", scoped).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// concurrency pass (`opdr-lint analyze`): the live tree must be clean too
+// ---------------------------------------------------------------------------
+
+/// Run the concurrency pass over a synthetic corpus of (path, source) pairs.
+fn analyze(files: &[(&str, &str)]) -> Vec<Finding> {
+    let corpus: Vec<(PathBuf, String)> =
+        files.iter().map(|(p, s)| (PathBuf::from(p), s.to_string())).collect();
+    opdr_lint::analyze_sources(&corpus)
+}
+
+#[test]
+fn live_tree_passes_analyze() {
+    // Same scope as the CLI's `opdr-lint analyze`: `src` only — integration
+    // tests exercise deliberate inversions at runtime (sync_sentinel_it.rs)
+    // and must not have to satisfy the static pass to do so.
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let findings = opdr_lint::analyze_paths(&[root.join("src")]).expect("walking the live tree");
+    assert!(
+        findings.is_empty(),
+        "opdr-lint analyze must pass clean on the tree; violations:\n{}",
+        findings.iter().map(|f| format!("  {f}\n")).collect::<String>()
+    );
+}
+
+#[test]
+fn fixture_lock_order() {
+    // Two functions taking the same pair of plain locks in opposite orders:
+    // a textbook AB/BA deadlock, reported once with the full cycle path.
+    let bad = r#"
+fn fwd(s: &S) {
+    let a = crate::util::lock_recover(&s.alpha);
+    let b = crate::util::lock_recover(&s.beta);
+    b.push(*a);
+}
+fn rev(s: &S) {
+    let b = crate::util::lock_recover(&s.beta);
+    let a = crate::util::lock_recover(&s.alpha);
+    a.push(*b);
+}
+"#;
+    let findings = analyze(&[("rust/src/coordinator/fx.rs", bad)]);
+    assert_eq!(rule_names(&findings), ["lock-order"]);
+    assert!(
+        findings[0].msg.contains("fx.alpha -> fx.beta -> fx.alpha"),
+        "cycle path missing from: {}",
+        findings[0].msg
+    );
+
+    // Same order in both functions: a consistent discipline, no finding.
+    let good = bad.replace(
+        "    let b = crate::util::lock_recover(&s.beta);\n    let a = crate::util::lock_recover(&s.alpha);",
+        "    let a = crate::util::lock_recover(&s.alpha);\n    let b = crate::util::lock_recover(&s.beta);",
+    );
+    assert!(analyze(&[("rust/src/coordinator/fx.rs", &good)]).is_empty());
+
+    // Guard lifetimes are brace-scoped: if `fwd` drops alpha before taking
+    // beta, the locks are never held together and no edge exists.
+    let scoped = bad.replace(
+        "    let a = crate::util::lock_recover(&s.alpha);\n    let b = crate::util::lock_recover(&s.beta);\n    b.push(*a);",
+        "    { let a = crate::util::lock_recover(&s.alpha); a.poke(); }\n    let b = crate::util::lock_recover(&s.beta);\n    b.poke();",
+    );
+    assert!(analyze(&[("rust/src/coordinator/fx.rs", &scoped)]).is_empty());
+
+    // An explicit `drop(guard)` releases early, same effect.
+    let dropped = bad.replace(
+        "    let a = crate::util::lock_recover(&s.alpha);\n    let b = crate::util::lock_recover(&s.beta);\n    b.push(*a);",
+        "    let a = crate::util::lock_recover(&s.alpha);\n    drop(a);\n    let b = crate::util::lock_recover(&s.beta);\n    b.poke();",
+    );
+    assert!(analyze(&[("rust/src/coordinator/fx.rs", &dropped)]).is_empty());
+
+    // The graph is interprocedural: holding alpha across a call into a
+    // function that takes beta is the same edge as taking both inline.
+    let via_call = r#"
+fn outer(s: &S) {
+    let a = crate::util::lock_recover(&s.alpha);
+    helper(s);
+    a.poke();
+}
+fn helper(s: &S) {
+    let b = crate::util::lock_recover(&s.beta);
+    b.poke();
+}
+fn rev(s: &S) {
+    let b = crate::util::lock_recover(&s.beta);
+    let a = crate::util::lock_recover(&s.alpha);
+    a.push(*b);
+}
+"#;
+    let findings = analyze(&[("rust/src/coordinator/fx.rs", via_call)]);
+    assert_eq!(rule_names(&findings), ["lock-order"]);
+
+    // ... and cross-file: the rank table gives ranked sites global names,
+    // so the two halves of an inversion in different modules still close
+    // the loop. Each half alone is clean; together they cycle, and the
+    // downhill half additionally violates the table's order.
+    let table = "pub const ALPHA: LockRank = LockRank::new(\"fx.alpha\", 10);\npub const BETA: LockRank = LockRank::new(\"fx.beta\", 20);\n";
+    let fwd_file = "fn fwd(s: &S) {\n    let a = lock_recover_ranked(&s.alpha, ranks::ALPHA);\n    let b = lock_recover_ranked(&s.beta, ranks::BETA);\n    b.push(*a);\n}\n";
+    let rev_file = "fn rev(s: &S) {\n    let b = lock_recover_ranked(&s.beta, ranks::BETA);\n    let a = lock_recover_ranked(&s.alpha, ranks::ALPHA);\n    a.push(*b);\n}\n";
+    assert!(analyze(&[("rust/src/util/sync.rs", table), ("rust/src/coordinator/one.rs", fwd_file)])
+        .is_empty());
+    let findings = analyze(&[
+        ("rust/src/util/sync.rs", table),
+        ("rust/src/coordinator/one.rs", fwd_file),
+        ("rust/src/coordinator/two.rs", rev_file),
+    ]);
+    let names = rule_names(&findings);
+    assert!(names.contains(&"lock-order"), "cross-file cycle missed: {names:?}");
+    assert!(names.contains(&"rank-table-sync"), "downhill edge missed: {names:?}");
+
+    // Bodies under `mod tests` are exempt: deliberate inversions live there
+    // and are exercised by the runtime sentinel.
+    let in_tests = format!("mod tests {{\n{bad}\n}}\n");
+    assert!(analyze(&[("rust/src/coordinator/fx.rs", &in_tests)]).is_empty());
+}
+
+#[test]
+fn fixture_atomic_ordering() {
+    let bad = r#"
+fn bump(c: &AtomicU64) {
+    c.fetch_add(1, Ordering::Relaxed);
+}
+"#;
+    let findings = analyze(&[("rust/src/telemetry/fx.rs", bad)]);
+    assert_eq!(rule_names(&findings), ["atomic-ordering"]);
+    assert_eq!(findings[0].line, 3);
+
+    let good = r#"
+fn bump(c: &AtomicU64) {
+    // ORDERING: monotonic stat counter; no other memory is published by
+    // this add, so Relaxed cannot reorder anything that matters.
+    c.fetch_add(1, Ordering::Relaxed);
+}
+"#;
+    assert!(analyze(&[("rust/src/telemetry/fx.rs", good)]).is_empty());
+
+    // The justification must be close: a comment 8 lines up has drifted.
+    let stale = format!(
+        "// ORDERING: stale\n{}fn f(c: &AtomicU64) {{ c.fetch_add(1, Ordering::Relaxed); }}\n",
+        "\n".repeat(8)
+    );
+    assert_eq!(rule_names(&analyze(&[("rust/src/telemetry/fx.rs", &stale)])), ["atomic-ordering"]);
+
+    // Non-Relaxed orderings carry their own semantics and need no comment.
+    let acq = "fn f(c: &AtomicU64) -> u64 { c.load(Ordering::Acquire) }\n";
+    assert!(analyze(&[("rust/src/telemetry/fx.rs", acq)]).is_empty());
+}
+
+#[test]
+fn fixture_rank_table_sync() {
+    let table = r#"
+pub const ALPHA: LockRank = LockRank::new("fx.alpha", 10);
+pub const BETA: LockRank = LockRank::new("fx.beta", 20);
+"#;
+    let user = r#"
+fn f(s: &S) {
+    let a = lock_recover_ranked(&s.alpha, ranks::ALPHA);
+    let b = lock_recover_ranked(&s.beta, ranks::BETA);
+    b.push(*a);
+}
+"#;
+    // Table and call sites agree, acquisition order is rank-increasing.
+    assert!(analyze(&[("rust/src/util/sync.rs", table), ("rust/src/coordinator/fx.rs", user)])
+        .is_empty());
+
+    // Direction 1: a declared constant no call site uses.
+    let wide = format!("{table}pub const GAMMA: LockRank = LockRank::new(\"fx.gamma\", 30);\n");
+    let findings = analyze(&[("rust/src/util/sync.rs", &wide), ("rust/src/coordinator/fx.rs", user)]);
+    assert_eq!(rule_names(&findings), ["rank-table-sync"]);
+    assert!(findings[0].file.ends_with("util/sync.rs"));
+    assert!(findings[0].msg.contains("GAMMA"));
+
+    // Direction 2: a call site naming a constant the table lacks — which
+    // also leaves the real `BETA` constant unused, so both directions fire.
+    let ghost = user.replace("ranks::BETA", "ranks::DELTA");
+    let findings = analyze(&[("rust/src/util/sync.rs", table), ("rust/src/coordinator/fx.rs", &ghost)]);
+    assert_eq!(rule_names(&findings), ["rank-table-sync"; 2]);
+    assert!(findings[0].file.ends_with("coordinator/fx.rs"));
+    assert!(findings[0].msg.contains("DELTA"));
+    assert!(findings[1].file.ends_with("util/sync.rs"));
+    assert!(findings[1].msg.contains("BETA"));
+
+    // Direction 3: an edge that runs against the table's order — exactly
+    // what the runtime sentinel would panic on, caught at lint time.
+    let inverted = r#"
+fn f(s: &S) {
+    let b = lock_recover_ranked(&s.beta, ranks::BETA);
+    let a = lock_recover_ranked(&s.alpha, ranks::ALPHA);
+    a.push(*b);
+}
+"#;
+    let findings =
+        analyze(&[("rust/src/util/sync.rs", table), ("rust/src/coordinator/fx.rs", inverted)]);
+    assert_eq!(rule_names(&findings), ["rank-table-sync"]);
+    assert!(findings[0].msg.contains("strictly increasing"), "got: {}", findings[0].msg);
+
+    // The table itself must be a total order: duplicate ranks and names fire.
+    let dup_rank = r#"
+pub const ALPHA: LockRank = LockRank::new("fx.alpha", 10);
+pub const BETA: LockRank = LockRank::new("fx.beta", 10);
+"#;
+    let findings = analyze(&[("rust/src/util/sync.rs", dup_rank)]);
+    assert!(findings.iter().any(|f| f.msg.contains("ranks must be unique")));
+
+    let dup_name = r#"
+pub const ALPHA: LockRank = LockRank::new("fx.alpha", 10);
+pub const ALPHA2: LockRank = LockRank::new("fx.alpha", 20);
+"#;
+    let findings = analyze(&[("rust/src/util/sync.rs", dup_name)]);
+    assert!(findings.iter().any(|f| f.msg.contains("duplicate site name")));
+}
+
+#[test]
+fn fixture_unbounded_channel() {
+    // On a serving/build path, an unbounded channel is a backpressure bug.
+    let bad = "fn f() {\n    let (tx, rx) = std::sync::mpsc::channel();\n    tx.send(1).ok();\n}\n";
+    let findings = analyze(&[("rust/src/pool.rs", bad)]);
+    assert_eq!(rule_names(&findings), ["unbounded-channel"]);
+    assert_eq!(findings[0].line, 2);
+
+    // The turbofish form is the same call.
+    let turbo = "fn f() { let (tx, rx) = channel::<u64>(); }\n";
+    assert_eq!(rule_names(&analyze(&[("rust/src/index/shard.rs", turbo)])), ["unbounded-channel"]);
+
+    // Bounded channels are the fix, not a violation.
+    let good = "fn f() { let (tx, rx) = std::sync::mpsc::sync_channel(8); }\n";
+    assert!(analyze(&[("rust/src/pool.rs", good)]).is_empty());
+
+    // The rule is scoped to the serving/build paths, like bounded-prealloc.
+    let elsewhere = "fn f() { let (tx, rx) = std::sync::mpsc::channel(); }\n";
+    assert!(analyze(&[("rust/src/knn/topk.rs", elsewhere)]).is_empty());
+
+    // The escape hatch reaches analyze rules too.
+    let allowed = "fn f() {\n    // lint:allow(unbounded-channel: fixture)\n    let (tx, rx) = std::sync::mpsc::channel();\n}\n";
+    assert!(analyze(&[("rust/src/pool.rs", allowed)]).is_empty());
 }
 
 // ---------------------------------------------------------------------------
@@ -340,4 +581,13 @@ fn every_rule_is_catalogued() {
         assert!(names.contains(&expected), "rule {expected} missing from RULES");
     }
     assert!(opdr_lint::RULES.iter().all(|(_, s)| !s.is_empty()));
+
+    let analyze_names: Vec<&str> = opdr_lint::ANALYZE_RULES.iter().map(|(n, _)| *n).collect();
+    for expected in ["lock-order", "atomic-ordering", "rank-table-sync", "unbounded-channel"] {
+        assert!(
+            analyze_names.contains(&expected),
+            "rule {expected} missing from ANALYZE_RULES"
+        );
+    }
+    assert!(opdr_lint::ANALYZE_RULES.iter().all(|(_, s)| !s.is_empty()));
 }

@@ -1,0 +1,93 @@
+//! The lock-rank sentinel, end to end: a deliberate two-lock inversion is
+//! caught **twice** — at runtime by the debug-only thread-local rank stack
+//! in `util::sync` (a named panic before the deadlock can form), and at
+//! lint time by `opdr-lint analyze`, which flags the same source shape as
+//! a rank-table violation. CI runs this suite in a debug (non-release)
+//! job; in release builds the runtime half compiles out, exactly like the
+//! sentinel itself.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Mutex;
+
+use opdr::util::{lock_recover_ranked, ranks, LOCK_RANK_TABLE};
+
+/// The inversion the static pass and the sentinel must both reject:
+/// `coordinator.state` (rank 20) acquired while `dist.gateway` (rank 40)
+/// is held. The rank table says state-before-gateway, so this is the
+/// downhill half of an AB/BA deadlock.
+#[cfg(debug_assertions)]
+#[test]
+fn sentinel_catches_a_two_lock_inversion_at_runtime() {
+    let state = Mutex::new(0u64);
+    let gateway = Mutex::new(0u64);
+
+    let res = catch_unwind(AssertUnwindSafe(|| {
+        let g = lock_recover_ranked(&gateway, ranks::DIST_GATEWAY);
+        let s = lock_recover_ranked(&state, ranks::COORDINATOR_STATE);
+        *s + *g
+    }));
+    let err = res.expect_err("the inversion must panic before deadlocking");
+    let msg = err.downcast_ref::<String>().expect("panic carries a message");
+    assert!(msg.contains("lock-rank inversion"), "unexpected message: {msg}");
+    assert!(
+        msg.contains("coordinator.state") && msg.contains("dist.gateway"),
+        "the panic must name both sites: {msg}"
+    );
+
+    // The unwound stack is consistent: the same thread can immediately take
+    // the locks in the table's order.
+    let ok = catch_unwind(AssertUnwindSafe(|| {
+        let s = lock_recover_ranked(&state, ranks::COORDINATOR_STATE);
+        let g = lock_recover_ranked(&gateway, ranks::DIST_GATEWAY);
+        *s + *g
+    }));
+    assert!(ok.is_ok(), "in-order acquisition must succeed after the panic");
+}
+
+/// The same inversion, fed to the static pass against the *live* rank
+/// table — `opdr-lint analyze` flags it without running anything.
+#[test]
+fn analyzer_flags_the_same_inversion_statically() {
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let table_src = std::fs::read_to_string(root.join("src/util/sync.rs"))
+        .expect("reading the live rank table");
+
+    let inverted = r#"
+fn refresh(s: &S) {
+    let g = lock_recover_ranked(&s.gateway, ranks::DIST_GATEWAY);
+    let st = lock_recover_ranked(&s.state, ranks::COORDINATOR_STATE);
+    st.merge(&g);
+}
+"#;
+    let findings = opdr_lint::analyze_sources(&[
+        (std::path::PathBuf::from("rust/src/util/sync.rs"), table_src),
+        (std::path::PathBuf::from("rust/src/coordinator/fixture.rs"), inverted.to_string()),
+    ]);
+    assert!(
+        findings.iter().any(|f| f.rule == "rank-table-sync"
+            && f.msg.contains("strictly increasing")
+            && f.msg.contains("coordinator.state")
+            && f.msg.contains("dist.gateway")),
+        "the static pass must flag the inversion; got:\n{}",
+        findings.iter().map(|f| format!("  {f}\n")).collect::<String>()
+    );
+}
+
+/// The public table constant and the `ranks::` module agree — the docs
+/// table readers see is the same data the sentinel enforces.
+#[test]
+fn rank_table_is_strictly_increasing_and_unique() {
+    assert!(!LOCK_RANK_TABLE.is_empty());
+    for pair in LOCK_RANK_TABLE.windows(2) {
+        assert!(
+            pair[0].rank < pair[1].rank,
+            "LOCK_RANK_TABLE must be sorted strictly by rank: {} vs {}",
+            pair[0].name,
+            pair[1].name
+        );
+    }
+    let mut names: Vec<&str> = LOCK_RANK_TABLE.iter().map(|r| r.name).collect();
+    names.sort_unstable();
+    names.dedup();
+    assert_eq!(names.len(), LOCK_RANK_TABLE.len(), "site names must be unique");
+}

@@ -1,0 +1,946 @@
+//! The `opdr-lint analyze` concurrency pass.
+//!
+//! Where `rules.rs` checks *local* syntactic invariants, this module builds
+//! a small cross-file model of the tree's locking behaviour from the same
+//! token streams and checks *global* ones:
+//!
+//! - **`lock-order`** — track `lock_recover(..)` / `lock_recover_ranked(..)`
+//!   guard bindings and their brace-scoped lifetimes per function, resolve
+//!   each lock to a named site (ranked sites come from the rank table in
+//!   `util/sync.rs`; plain `lock_recover` sites are named after the guarded
+//!   field, prefixed by the file stem), propagate acquisitions through
+//!   direct calls with an interprocedural fixpoint, and fail on any cycle
+//!   in the acquired-while-holding graph (`A -> B -> A`).
+//! - **`rank-table-sync`** — both directions, like `metric-docs-sync`:
+//!   every rank constant declared in `util/sync.rs` must be used at some
+//!   `lock_recover_ranked` call site, every ranked call site must name a
+//!   declared constant, the table must have unique names and ranks, and
+//!   every statically observed edge between two *ranked* sites must go
+//!   from a lower rank to a strictly higher one — so the static graph and
+//!   the runtime sentinel can never drift apart.
+//! - **`atomic-ordering`** — every `Ordering::Relaxed` needs an
+//!   `// ORDERING:` justification comment within the 6 preceding lines
+//!   (same shape as `unsafe-needs-safety-comment`): Relaxed is correct for
+//!   monotonic counters and advisory flags, but silently wrong for
+//!   cross-thread publication, so the claim must be written down.
+//! - **`unbounded-channel`** — `std::sync::mpsc::channel()` on the serving
+//!   and build paths (see [`CHANNEL_SCOPE`]) is flagged; those paths must
+//!   use `sync_channel` + `try_send` and degrade (drop, run inline, or
+//!   report a typed error) instead of growing an unbounded queue.
+//!
+//! Approximations, all deliberate and all conservative (they can over-hold
+//! a guard, never under-hold it): a `let`-bound guard lives to the end of
+//! its enclosing brace scope or an explicit `drop(name)`; a non-`let`
+//! acquisition is a statement temporary living to the next `;`; closures
+//! passed to `spawn` / `execute` / `map_chunks` run on other threads, so
+//! they are analyzed as fresh contexts with an empty held stack and do not
+//! contribute to the enclosing function's summary; calls whose arguments
+//! mention `Ordering` are atomic operations, not lock-taking calls; bodies
+//! of `mod tests` are skipped entirely (the tree's poisoning and deliberate
+//! inversion tests live there and are exercised at runtime by the sentinel
+//! instead). Interprocedural propagation is restricted to calls whose
+//! callee is unambiguous at token level — bare calls (`helper(..)`) and
+//! `self.method(..)` — because a dotted call on an arbitrary receiver
+//! (`guard.recv()`) or a path-qualified call (`Arc::new(..)`) merging by
+//! simple name with unrelated `fn recv` / `fn new` definitions fabricates
+//! edges the code cannot take; within that restriction summaries merge by
+//! simple name, which can only add edges, never hide one.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::PathBuf;
+
+use crate::lexer::{Tok, TokKind};
+use crate::rules::{
+    depth_delta, ident_text, is_ident, is_punct, matching_close, Finding, SourceFile,
+};
+
+pub const LOCK_ORDER: &str = "lock-order";
+pub const ATOMIC_ORDERING: &str = "atomic-ordering";
+pub const RANK_TABLE_SYNC: &str = "rank-table-sync";
+pub const UNBOUNDED_CHANNEL: &str = "unbounded-channel";
+
+/// Every analyze rule, with a one-line summary (`opdr-lint --list-rules`).
+pub const ANALYZE_RULES: &[(&str, &str)] = &[
+    (
+        LOCK_ORDER,
+        "cycle in the cross-file acquired-while-holding lock graph; a deadlock waiting for the right interleaving",
+    ),
+    (
+        ATOMIC_ORDERING,
+        "Ordering::Relaxed needs an // ORDERING: justification comment within the 6 preceding lines",
+    ),
+    (
+        RANK_TABLE_SYNC,
+        "the util::sync rank table and the statically observed acquisition order must agree both ways",
+    ),
+    (
+        UNBOUNDED_CHANNEL,
+        "serving/build paths must use sync_channel + try_send (drop/degrade), never an unbounded mpsc::channel()",
+    ),
+];
+
+/// File whose `LockRank::new("site", rank)` constants define the rank table.
+const RANK_TABLE_FILE: &str = "util/sync.rs";
+
+/// Serving/build-path files where an unbounded `mpsc::channel()` is a
+/// backpressure bug (scoped like `bounded-prealloc`, so token matching has
+/// no false positives elsewhere).
+const CHANNEL_SCOPE: &[&str] =
+    &["pool.rs", "index/shard.rs", "coordinator/server.rs", "telemetry/probe.rs"];
+
+/// How many lines above an `Ordering::Relaxed` the `// ORDERING:` comment
+/// may start (mirrors `SAFETY_WINDOW`).
+const ORDERING_WINDOW: usize = 6;
+
+/// Calls whose closure arguments run on another thread: analyzed as fresh
+/// contexts, excluded from the enclosing function's summary.
+const SPAWN_LIKE: &[&str] = &["spawn", "execute", "map_chunks"];
+
+/// Idents that look like calls (`if (..)`, `match (..)`) but are keywords.
+const KEYWORDS: &[&str] = &[
+    "if", "else", "while", "match", "for", "loop", "return", "let", "in", "as", "move", "ref",
+    "break", "continue", "unsafe", "where", "impl", "fn", "pub", "use", "mod", "struct", "enum",
+    "trait", "type", "const", "static", "crate", "super", "dyn", "box", "await", "Some", "Ok",
+    "Err", "None",
+];
+
+// ---------------------------------------------------------------------------
+// rank table
+// ---------------------------------------------------------------------------
+
+struct RankTable {
+    /// const name -> (site name, rank, declaration line).
+    consts: BTreeMap<String, (String, u16, usize)>,
+    /// site name -> rank.
+    ranks: BTreeMap<String, u16>,
+    file: PathBuf,
+}
+
+/// Parse `const NAME: LockRank = LockRank::new("site", rank);` declarations.
+fn parse_rank_table(f: &SourceFile) -> (RankTable, Vec<Finding>) {
+    let toks = f.toks();
+    let mut table = RankTable {
+        consts: BTreeMap::new(),
+        ranks: BTreeMap::new(),
+        file: f.path.clone(),
+    };
+    let mut findings = Vec::new();
+    for i in 0..toks.len() {
+        if !is_ident(toks.get(i), "const") {
+            continue;
+        }
+        let name = match ident_text(toks.get(i + 1)) {
+            Some(n) => n.to_string(),
+            None => continue,
+        };
+        // const NAME : LockRank = LockRank :: new ( "site" , rank )
+        if !(is_punct(toks.get(i + 2), ":")
+            && is_ident(toks.get(i + 3), "LockRank")
+            && is_punct(toks.get(i + 4), "=")
+            && is_ident(toks.get(i + 5), "LockRank")
+            && is_punct(toks.get(i + 6), ":")
+            && is_punct(toks.get(i + 7), ":")
+            && is_ident(toks.get(i + 8), "new")
+            && is_punct(toks.get(i + 9), "("))
+        {
+            continue;
+        }
+        let (site, rank) = match (toks.get(i + 10), toks.get(i + 12)) {
+            (Some(s), Some(r))
+                if s.kind == TokKind::Str
+                    && is_punct(toks.get(i + 11), ",")
+                    && r.kind == TokKind::Number =>
+            {
+                match r.text.parse::<u16>() {
+                    Ok(v) => (s.text.clone(), v),
+                    Err(_) => continue,
+                }
+            }
+            _ => continue,
+        };
+        let line = toks[i].line;
+        if let Some((prev_site, prev_rank, _)) = table.consts.get(&name) {
+            findings.push(Finding {
+                rule: RANK_TABLE_SYNC,
+                file: f.path.clone(),
+                line,
+                msg: format!(
+                    "duplicate rank constant `{name}` (already `{prev_site}` = {prev_rank})"
+                ),
+            });
+            continue;
+        }
+        if let Some(other) = table.consts.iter().find(|(_, v)| v.0 == site).map(|(k, _)| k.clone())
+        {
+            findings.push(Finding {
+                rule: RANK_TABLE_SYNC,
+                file: f.path.clone(),
+                line,
+                msg: format!("duplicate site name `{site}` (also declared by `{other}`)"),
+            });
+        }
+        if let Some(other_name) =
+            table.consts.iter().find(|(_, v)| v.1 == rank).map(|(k, _)| k.clone())
+        {
+            findings.push(Finding {
+                rule: RANK_TABLE_SYNC,
+                file: f.path.clone(),
+                line,
+                msg: format!(
+                    "rank {rank} assigned to both `{other_name}` and `{name}`; ranks must be \
+                     unique for a total order"
+                ),
+            });
+        }
+        table.ranks.insert(site.clone(), rank);
+        table.consts.insert(name, (site, rank, line));
+    }
+    (table, findings)
+}
+
+// ---------------------------------------------------------------------------
+// per-function scan
+// ---------------------------------------------------------------------------
+
+/// Everything the scan learns, before the interprocedural expansion.
+#[derive(Default)]
+struct Analysis {
+    /// context name -> sites it acquires directly (normal thread context).
+    direct: BTreeMap<String, BTreeSet<String>>,
+    /// context name -> callees invoked in normal context.
+    callees: BTreeMap<String, BTreeSet<String>>,
+    /// (held site -> acquired site) -> first location observed.
+    edges: BTreeMap<(String, String), (PathBuf, usize)>,
+    /// Calls made while holding guards: (held sites, callee, file, line).
+    pending_calls: Vec<(Vec<String>, String, PathBuf, usize)>,
+    /// Rank constants referenced at `lock_recover_ranked` call sites.
+    used_consts: BTreeSet<String>,
+    /// `lock_recover_ranked` call sites whose constant the table lacks.
+    unknown_consts: Vec<(String, PathBuf, usize)>,
+}
+
+struct Guard {
+    /// Binding name when `let`-bound; `None` for statement temporaries.
+    name: Option<String>,
+    site: String,
+    /// Token index past which the guard is no longer held.
+    dies_at: usize,
+    alive: bool,
+}
+
+/// Scan one function (or closure) body for acquisitions, guard lifetimes,
+/// calls-under-guard and nested fresh contexts.
+fn scan_body(
+    sf: &SourceFile,
+    start: usize,
+    end: usize,
+    ctx: &str,
+    table: Option<&RankTable>,
+    an: &mut Analysis,
+) {
+    let toks = sf.toks();
+    let stem = file_stem(&sf.norm);
+    let mut guards: Vec<Guard> = Vec::new();
+    // Stack of `}` indices for the brace scopes currently open inside the
+    // body; a `let`-bound guard dies at the top of this stack.
+    let mut scopes: Vec<usize> = Vec::new();
+    let mut i = start;
+    while i < end {
+        for g in guards.iter_mut() {
+            if g.alive && g.dies_at <= i {
+                g.alive = false;
+            }
+        }
+        let t = &toks[i];
+        if t.kind == TokKind::Punct && t.text == "{" {
+            if let Some(close) = matching_close(toks, i) {
+                scopes.push(close);
+            }
+            i += 1;
+            continue;
+        }
+        if t.kind == TokKind::Punct && t.text == "}" {
+            if scopes.last() == Some(&i) {
+                scopes.pop();
+            }
+            i += 1;
+            continue;
+        }
+        if t.kind != TokKind::Ident {
+            i += 1;
+            continue;
+        }
+
+        // Nested `fn` definitions are their own context.
+        if t.text == "fn" {
+            if let Some((name, body_open, body_close)) = fn_def_at(toks, i, end) {
+                scan_body(sf, body_open + 1, body_close, &name, table, an);
+                i = body_close + 1;
+                continue;
+            }
+            i += 1;
+            continue;
+        }
+
+        // `drop(name)` releases a let-bound guard early.
+        if t.text == "drop" && is_punct(toks.get(i + 1), "(") {
+            if let (Some(name), true) = (ident_text(toks.get(i + 2)), is_punct(toks.get(i + 3), ")"))
+            {
+                if let Some(g) = guards
+                    .iter_mut()
+                    .rev()
+                    .find(|g| g.alive && g.name.as_deref() == Some(name))
+                {
+                    g.alive = false;
+                }
+                i += 4;
+                continue;
+            }
+        }
+
+        // Closures handed to another thread: fresh context, no summary leak.
+        if SPAWN_LIKE.contains(&t.text.as_str())
+            && is_punct(toks.get(i + 1), "(")
+            && !is_ident(i.checked_sub(1).and_then(|j| toks.get(j)), "fn")
+        {
+            if let Some(close) = matching_close(toks, i + 1) {
+                if unambiguous_callee(toks, i) {
+                    record_call(ctx, t, &guards, sf, an);
+                }
+                let fresh = format!("{ctx}@{}", t.line);
+                scan_body(sf, i + 2, close, &fresh, table, an);
+                i = close + 1;
+                continue;
+            }
+        }
+
+        // Acquisition.
+        if (t.text == "lock_recover" || t.text == "lock_recover_ranked")
+            && is_punct(toks.get(i + 1), "(")
+            && !is_ident(i.checked_sub(1).and_then(|j| toks.get(j)), "fn")
+        {
+            let close = match matching_close(toks, i + 1) {
+                Some(c) => c,
+                None => {
+                    i += 1;
+                    continue;
+                }
+            };
+            let site = if t.text == "lock_recover_ranked" {
+                match ranked_site(toks, i + 1, close, table) {
+                    RankedSite::Known(cname, site) => {
+                        an.used_consts.insert(cname);
+                        site
+                    }
+                    RankedSite::Unknown(cname) => {
+                        an.unknown_consts.push((cname.clone(), sf.path.clone(), t.line));
+                        cname
+                    }
+                    RankedSite::Unresolved => format!("{stem}.?ranked"),
+                }
+            } else {
+                format!("{stem}.{}", plain_site(toks, i + 1, close))
+            };
+            for g in guards.iter().filter(|g| g.alive) {
+                an.edges
+                    .entry((g.site.clone(), site.clone()))
+                    .or_insert_with(|| (sf.path.clone(), t.line));
+            }
+            an.direct.entry(ctx.to_string()).or_default().insert(site.clone());
+            let (name, dies_at) = guard_lifetime(toks, i, close, &scopes, end);
+            guards.push(Guard { name, site, dies_at, alive: true });
+            i += 1;
+            continue;
+        }
+
+        // Plain call.
+        if is_punct(toks.get(i + 1), "(")
+            && !KEYWORDS.contains(&t.text.as_str())
+            && !is_ident(i.checked_sub(1).and_then(|j| toks.get(j)), "fn")
+        {
+            if let Some(close) = matching_close(toks, i + 1) {
+                // Atomic ops (`.load(Ordering::..)`, `fetch_add(1, Ordering::..)`)
+                // are not lock-taking calls.
+                let atomic =
+                    toks[i + 2..close].iter().any(|a| a.kind == TokKind::Ident && a.text == "Ordering");
+                if !atomic && unambiguous_callee(toks, i) {
+                    record_call(ctx, t, &guards, sf, an);
+                }
+            }
+        }
+        i += 1;
+    }
+}
+
+/// Should a call at token `i` propagate through function summaries? Only
+/// when the callee name is unambiguous at token level: a bare call
+/// (`helper(..)`) names a local free function, and `self.method(..)` names
+/// a method of the enclosing type. A dotted call on any other receiver
+/// (`guard.recv()`, `g.ring.len()`) or a path-qualified call
+/// (`Arc::new(..)`, `DeltaIndex::from_parts(..)`) would merge by simple
+/// name with unrelated `fn recv` / `fn len` / `fn new` definitions
+/// elsewhere in the corpus and fabricate edges the code cannot take.
+fn unambiguous_callee(toks: &[Tok], i: usize) -> bool {
+    let prev = i.checked_sub(1).and_then(|j| toks.get(j));
+    if is_punct(prev, ".") {
+        return is_ident(i.checked_sub(2).and_then(|j| toks.get(j)), "self");
+    }
+    if is_punct(prev, ":") {
+        return false;
+    }
+    true
+}
+
+fn record_call(ctx: &str, callee: &Tok, guards: &[Guard], sf: &SourceFile, an: &mut Analysis) {
+    an.callees.entry(ctx.to_string()).or_default().insert(callee.text.clone());
+    let held: Vec<String> =
+        guards.iter().filter(|g| g.alive).map(|g| g.site.clone()).collect();
+    if !held.is_empty() {
+        an.pending_calls.push((held, callee.text.clone(), sf.path.clone(), callee.line));
+    }
+}
+
+enum RankedSite {
+    /// (const name, site name) — the constant exists in the table.
+    Known(String, String),
+    /// Constant name not declared in the table.
+    Unknown(String),
+    /// Second argument had no identifier at all.
+    Unresolved,
+}
+
+/// Resolve the rank argument of `lock_recover_ranked(&m, ranks::NAME)`:
+/// the last identifier of the expression after the first top-level comma.
+fn ranked_site(toks: &[Tok], open: usize, close: usize, table: Option<&RankTable>) -> RankedSite {
+    let mut depth = 0isize;
+    let mut comma = None;
+    for (j, t) in toks.iter().enumerate().take(close).skip(open + 1) {
+        depth += depth_delta(t);
+        if depth == 0 && t.kind == TokKind::Punct && t.text == "," {
+            comma = Some(j);
+            break;
+        }
+    }
+    let comma = match comma {
+        Some(c) => c,
+        None => return RankedSite::Unresolved,
+    };
+    let cname = toks[comma + 1..close]
+        .iter()
+        .rev()
+        .find(|t| t.kind == TokKind::Ident)
+        .map(|t| t.text.clone());
+    match cname {
+        Some(cname) => match table.and_then(|tb| tb.consts.get(&cname)) {
+            Some((site, _, _)) => RankedSite::Known(cname, site.clone()),
+            None if table.is_some() => RankedSite::Unknown(cname),
+            None => RankedSite::Known(cname.clone(), cname),
+        },
+        None => RankedSite::Unresolved,
+    }
+}
+
+/// Site name for a plain `lock_recover(&self.field)` acquisition: the last
+/// identifier of the argument expression.
+fn plain_site(toks: &[Tok], open: usize, close: usize) -> String {
+    toks[open + 1..close]
+        .iter()
+        .rev()
+        .find(|t| t.kind == TokKind::Ident)
+        .map(|t| t.text.clone())
+        .unwrap_or_else(|| "?".to_string())
+}
+
+/// Determine how long the guard born at token `acq` (call close paren at
+/// `close`) lives: `let`-bound guards live to the end of the innermost open
+/// brace scope; otherwise the acquisition is a statement temporary living
+/// to the next `;` at relative bracket depth zero.
+fn guard_lifetime(
+    toks: &[Tok],
+    acq: usize,
+    close: usize,
+    scopes: &[usize],
+    end: usize,
+) -> (Option<String>, usize) {
+    // Walk back over a `path::to::` prefix.
+    let mut j = acq;
+    while j >= 3
+        && is_punct(toks.get(j - 1), ":")
+        && is_punct(toks.get(j - 2), ":")
+        && toks.get(j - 3).map(|t| t.kind == TokKind::Ident).unwrap_or(false)
+    {
+        j -= 3;
+    }
+    if j >= 1 && is_punct(toks.get(j - 1), "=") {
+        // Search back to the statement boundary for `let name =`.
+        let mut k = j - 1;
+        let mut steps = 0;
+        while k > 0 && steps < 16 {
+            let t = &toks[k - 1];
+            if t.kind == TokKind::Punct && matches!(t.text.as_str(), ";" | "{" | "}") {
+                break;
+            }
+            if t.kind == TokKind::Ident && t.text == "let" {
+                let name = toks[k..j]
+                    .iter()
+                    .find(|t| t.kind == TokKind::Ident && t.text != "mut")
+                    .map(|t| t.text.clone());
+                let dies_at = scopes.last().copied().unwrap_or(end);
+                return (name, dies_at);
+            }
+            k -= 1;
+            steps += 1;
+        }
+    }
+    // Statement temporary: next `;` at relative depth 0, or expression end.
+    let mut depth = 0isize;
+    for (k, t) in toks.iter().enumerate().take(end).skip(close + 1) {
+        depth += depth_delta(t);
+        if depth < 0 {
+            return (None, k);
+        }
+        if depth == 0 && t.kind == TokKind::Punct && t.text == ";" {
+            return (None, k);
+        }
+    }
+    (None, end)
+}
+
+/// `fn NAME .. { .. }` starting at the `fn` keyword: returns the name and
+/// the body's brace span. `None` for bodyless trait-method declarations.
+fn fn_def_at(toks: &[Tok], at: usize, end: usize) -> Option<(String, usize, usize)> {
+    let name = ident_text(toks.get(at + 1))?.to_string();
+    let mut paren = 0isize;
+    let mut j = at + 2;
+    while j < end {
+        let t = &toks[j];
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "(" | "[" => paren += 1,
+                ")" | "]" => paren -= 1,
+                "{" if paren == 0 => {
+                    let close = matching_close(toks, j)?;
+                    return Some((name, j, close));
+                }
+                ";" if paren == 0 => return None,
+                _ => {}
+            }
+        }
+        j += 1;
+    }
+    None
+}
+
+fn file_stem(norm: &str) -> String {
+    norm.rsplit('/')
+        .next()
+        .unwrap_or(norm)
+        .trim_end_matches(".rs")
+        .to_string()
+}
+
+/// Token spans the top-level walker must not enter: `mod tests { .. }`
+/// bodies and the `lock_recover` / `lock_recover_ranked` definitions
+/// themselves (they are the acquisition primitives, not users).
+fn skip_ranges(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    for i in 0..toks.len() {
+        if is_ident(toks.get(i), "mod")
+            && is_ident(toks.get(i + 1), "tests")
+            && is_punct(toks.get(i + 2), "{")
+        {
+            if let Some(close) = matching_close(toks, i + 2) {
+                out.push((i, close));
+            }
+        }
+        if is_ident(toks.get(i), "fn")
+            && (is_ident(toks.get(i + 1), "lock_recover")
+                || is_ident(toks.get(i + 1), "lock_recover_ranked"))
+        {
+            if let Some((_, _, close)) = fn_def_at(toks, i, toks.len()) {
+                out.push((i, close));
+            }
+        }
+    }
+    out
+}
+
+fn scan_file(sf: &SourceFile, table: Option<&RankTable>, an: &mut Analysis) {
+    let toks = sf.toks();
+    let skips = skip_ranges(toks);
+    let mut i = 0usize;
+    while i < toks.len() {
+        if let Some(&(_, close)) = skips.iter().find(|&&(s, e)| s <= i && i <= e) {
+            i = close + 1;
+            continue;
+        }
+        if is_ident(toks.get(i), "fn") {
+            if let Some((name, open, close)) = fn_def_at(toks, i, toks.len()) {
+                if !skips.iter().any(|&(s, e)| s <= open && open <= e) {
+                    scan_body(sf, open + 1, close, &name, table, an);
+                    i = close + 1;
+                    continue;
+                }
+            }
+        }
+        i += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// interprocedural expansion + cycle detection
+// ---------------------------------------------------------------------------
+
+/// summary(f) = direct(f) ∪ ⋃ summary(callees(f)), to fixpoint.
+fn summaries(an: &Analysis) -> BTreeMap<String, BTreeSet<String>> {
+    let mut sum = an.direct.clone();
+    loop {
+        let mut changed = false;
+        for (ctx, callees) in &an.callees {
+            let mut add: BTreeSet<String> = BTreeSet::new();
+            for c in callees {
+                if let Some(s) = sum.get(c) {
+                    add.extend(s.iter().cloned());
+                }
+            }
+            if !add.is_empty() {
+                let entry = sum.entry(ctx.clone()).or_default();
+                let before = entry.len();
+                entry.extend(add);
+                changed |= entry.len() != before;
+            }
+        }
+        if !changed {
+            return sum;
+        }
+    }
+}
+
+/// Expand calls-under-guard through the summaries into extra edges.
+fn expand_edges(an: &mut Analysis) {
+    let sums = summaries(an);
+    let pending = std::mem::take(&mut an.pending_calls);
+    for (held, callee, file, line) in pending {
+        if let Some(sites) = sums.get(&callee) {
+            for s in sites {
+                for h in &held {
+                    an.edges
+                        .entry((h.clone(), s.clone()))
+                        .or_insert_with(|| (file.clone(), line));
+                }
+            }
+        }
+    }
+}
+
+/// DFS cycle detection; one finding per distinct cycle, anchored at the
+/// recorded location of the edge that closes it.
+fn find_cycles(edges: &BTreeMap<(String, String), (PathBuf, usize)>) -> Vec<Finding> {
+    let mut adj: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
+    for (from, to) in edges.keys() {
+        adj.entry(from.as_str()).or_default().push(to.as_str());
+        adj.entry(to.as_str()).or_default();
+    }
+    #[derive(Clone, Copy, PartialEq)]
+    enum Color {
+        White,
+        Gray,
+        Black,
+    }
+    let mut color: BTreeMap<&str, Color> =
+        adj.keys().map(|&n| (n, Color::White)).collect();
+    let mut stack: Vec<&str> = Vec::new();
+    let mut seen_cycles: BTreeSet<Vec<String>> = BTreeSet::new();
+    let mut out = Vec::new();
+
+    fn dfs<'a>(
+        node: &'a str,
+        adj: &BTreeMap<&'a str, Vec<&'a str>>,
+        color: &mut BTreeMap<&'a str, Color>,
+        stack: &mut Vec<&'a str>,
+        edges: &BTreeMap<(String, String), (PathBuf, usize)>,
+        seen: &mut BTreeSet<Vec<String>>,
+        out: &mut Vec<Finding>,
+    ) {
+        color.insert(node, Color::Gray);
+        stack.push(node);
+        for &next in adj.get(node).map(|v| v.as_slice()).unwrap_or(&[]) {
+            match color.get(next).copied().unwrap_or(Color::White) {
+                Color::White => dfs(next, adj, color, stack, edges, seen, out),
+                Color::Gray => {
+                    let from = stack.iter().position(|&n| n == next).unwrap_or(0);
+                    let mut cycle: Vec<String> =
+                        stack[from..].iter().map(|s| s.to_string()).collect();
+                    cycle.push(next.to_string());
+                    // Canonical signature: rotate so the smallest node leads.
+                    let body = &cycle[..cycle.len() - 1];
+                    let min = body.iter().enumerate().min_by_key(|(_, s)| s.clone());
+                    let rot = min.map(|(i, _)| i).unwrap_or(0);
+                    let mut sig: Vec<String> = body[rot..].to_vec();
+                    sig.extend_from_slice(&body[..rot]);
+                    if seen.insert(sig) {
+                        let (file, line) = edges
+                            .get(&(node.to_string(), next.to_string()))
+                            .cloned()
+                            .unwrap_or((PathBuf::from("?"), 0));
+                        out.push(Finding {
+                            rule: LOCK_ORDER,
+                            file,
+                            line,
+                            msg: format!(
+                                "{} — acquiring these locks in both orders deadlocks under \
+                                 the right interleaving; pick one order and encode it in the \
+                                 util::sync rank table",
+                                cycle.join(" -> ")
+                            ),
+                        });
+                    }
+                }
+                Color::Black => {}
+            }
+        }
+        stack.pop();
+        color.insert(node, Color::Black);
+    }
+
+    let nodes: Vec<&str> = adj.keys().copied().collect();
+    for n in nodes {
+        if color.get(n).copied() == Some(Color::White) {
+            dfs(n, &adj, &mut color, &mut stack, edges, &mut seen_cycles, &mut out);
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// per-file rules: atomic-ordering, unbounded-channel
+// ---------------------------------------------------------------------------
+
+fn atomic_ordering(f: &SourceFile) -> Vec<Finding> {
+    let toks = f.toks();
+    let mut out = Vec::new();
+    for i in 0..toks.len() {
+        if !(is_ident(toks.get(i), "Ordering")
+            && is_punct(toks.get(i + 1), ":")
+            && is_punct(toks.get(i + 2), ":")
+            && is_ident(toks.get(i + 3), "Relaxed"))
+        {
+            continue;
+        }
+        let line = toks[i].line;
+        let covered = f.lexed.comments.iter().any(|c| {
+            c.text.contains("ORDERING:") && c.line <= line && line - c.line <= ORDERING_WINDOW
+        });
+        if !covered {
+            out.push(Finding {
+                rule: ATOMIC_ORDERING,
+                file: f.path.clone(),
+                line,
+                msg: format!(
+                    "`Ordering::Relaxed` without an `// ORDERING:` comment in the \
+                     {ORDERING_WINDOW} lines above it; state why no cross-thread \
+                     publication depends on this operation's ordering"
+                ),
+            });
+        }
+    }
+    out
+}
+
+fn unbounded_channel(f: &SourceFile) -> Vec<Finding> {
+    if !CHANNEL_SCOPE.iter().any(|s| f.norm.ends_with(s)) {
+        return Vec::new();
+    }
+    let toks = f.toks();
+    let mut out = Vec::new();
+    for i in 0..toks.len() {
+        if !is_ident(toks.get(i), "channel") {
+            continue;
+        }
+        // Skip an optional `::<T>` turbofish.
+        let mut j = i + 1;
+        if is_punct(toks.get(j), ":") && is_punct(toks.get(j + 1), ":") && is_punct(toks.get(j + 2), "<")
+        {
+            let mut depth = 0isize;
+            let mut k = j + 2;
+            while k < toks.len() {
+                match toks[k].text.as_str() {
+                    "<" => depth += 1,
+                    ">" => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                k += 1;
+            }
+            j = k + 1;
+        }
+        if is_punct(toks.get(j), "(") && is_punct(toks.get(j + 1), ")") {
+            out.push(Finding {
+                rule: UNBOUNDED_CHANNEL,
+                file: f.path.clone(),
+                line: toks[i].line,
+                msg: "unbounded `mpsc::channel()` on a serving/build path; use \
+                      `sync_channel(cap)` + `try_send` and degrade on `Full` \
+                      (drop, run inline, or return a typed error) so a slow \
+                      consumer applies backpressure instead of growing the heap"
+                    .to_string(),
+            });
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// entry points
+// ---------------------------------------------------------------------------
+
+/// Analyze an in-memory corpus of `(path, source)` pairs. Pure — the
+/// fixture tests drive this; `analyze_paths` in `lib.rs` wraps it with the
+/// filesystem walk. Findings come back sorted by (file, line, rule).
+pub fn analyze_sources(files: &[(PathBuf, String)]) -> Vec<Finding> {
+    let parsed: Vec<SourceFile> =
+        files.iter().map(|(p, s)| SourceFile::new(p.clone(), s)).collect();
+    let mut findings = Vec::new();
+
+    let table_file = parsed.iter().find(|f| f.norm.ends_with(RANK_TABLE_FILE));
+    let table = table_file.map(|f| {
+        let (table, table_findings) = parse_rank_table(f);
+        findings.extend(table_findings);
+        table
+    });
+
+    let mut an = Analysis::default();
+    for f in &parsed {
+        scan_file(f, table.as_ref(), &mut an);
+        findings.extend(atomic_ordering(f));
+        findings.extend(unbounded_channel(f));
+    }
+    expand_edges(&mut an);
+
+    findings.extend(find_cycles(&an.edges));
+
+    if let Some(table) = &table {
+        // Direction 1: every declared constant is used at some call site.
+        for (cname, (site, _, line)) in &table.consts {
+            if !an.used_consts.contains(cname) {
+                findings.push(Finding {
+                    rule: RANK_TABLE_SYNC,
+                    file: table.file.clone(),
+                    line: *line,
+                    msg: format!(
+                        "rank constant `{cname}` (`{site}`) is never passed to \
+                         `lock_recover_ranked`; remove it or rank the lock it names"
+                    ),
+                });
+            }
+        }
+        // Direction 2: every ranked call site names a declared constant.
+        for (cname, file, line) in &an.unknown_consts {
+            findings.push(Finding {
+                rule: RANK_TABLE_SYNC,
+                file: file.clone(),
+                line: *line,
+                msg: format!(
+                    "`lock_recover_ranked` uses `{cname}`, which is not declared in the \
+                     {RANK_TABLE_FILE} rank table"
+                ),
+            });
+        }
+        // Direction 3: observed edges between ranked sites must be
+        // rank-increasing — the static order and the runtime sentinel agree.
+        for ((from, to), (file, line)) in &an.edges {
+            if let (Some(&rf), Some(&rt)) = (table.ranks.get(from), table.ranks.get(to)) {
+                if rf >= rt {
+                    findings.push(Finding {
+                        rule: RANK_TABLE_SYNC,
+                        file: file.clone(),
+                        line: *line,
+                        msg: format!(
+                            "`{to}` (rank {rt}) acquired while holding `{from}` (rank {rf}); \
+                             the rank table requires strictly increasing acquisition — \
+                             reorder the code or renumber the table"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    // Escape hatch + deterministic order, same as `lint_sources`.
+    let by_path: BTreeMap<&str, &SourceFile> =
+        parsed.iter().map(|f| (f.norm.as_str(), f)).collect();
+    findings.retain(|fi| {
+        let norm: String = fi
+            .file
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy().into_owned())
+            .collect::<Vec<_>>()
+            .join("/");
+        by_path.get(norm.as_str()).map(|sf| !sf.allowed(fi.rule, fi.line)).unwrap_or(true)
+    });
+    findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    findings
+}
+
+#[cfg(test)]
+mod unit {
+    use super::*;
+
+    fn run(files: &[(&str, &str)]) -> Vec<Finding> {
+        let corpus: Vec<(PathBuf, String)> =
+            files.iter().map(|(p, s)| (PathBuf::from(p), s.to_string())).collect();
+        analyze_sources(&corpus)
+    }
+
+    #[test]
+    fn ab_ba_inversion_is_a_cycle() {
+        let src = "fn a(s: &S) { let x = lock_recover(&s.p); let y = lock_recover(&s.q); y.t(*x); }\n\
+                   fn b(s: &S) { let y = lock_recover(&s.q); let x = lock_recover(&s.p); x.t(*y); }\n";
+        let f = run(&[("rust/src/m/fx.rs", src)]);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, LOCK_ORDER);
+        assert!(f[0].msg.contains("fx.p -> fx.q -> fx.p"), "{}", f[0].msg);
+    }
+
+    #[test]
+    fn receiver_ambiguous_calls_do_not_propagate() {
+        // `fn recv` in the corpus takes a lock; a *dotted* call `g.recv()`
+        // under another guard must not inherit its acquisitions — only a
+        // bare call or `self.recv()` names that function unambiguously.
+        let src = "fn recv(s: &S) { let q = lock_recover(&s.q); q.t(); }\n\
+                   fn b(s: &S) { let y = lock_recover(&s.q); let x = lock_recover(&s.p); x.t(*y); }\n\
+                   fn dotted(s: &S, g: &G) { let x = lock_recover(&s.p); g.recv(); x.t(); }\n";
+        assert!(run(&[("rust/src/m/fx.rs", src)]).is_empty());
+
+        let bare = src.replace("g.recv();", "recv(s);");
+        let f = run(&[("rust/src/m/fx.rs", &bare)]);
+        assert_eq!(f.len(), 1, "bare call must close the cycle: {f:?}");
+        assert_eq!(f[0].rule, LOCK_ORDER);
+
+        let self_call = src.replace("g.recv();", "self.recv();");
+        let f = run(&[("rust/src/m/fx.rs", &self_call)]);
+        assert_eq!(f.len(), 1, "self call must close the cycle: {f:?}");
+    }
+
+    #[test]
+    fn statement_temporary_dies_at_semicolon() {
+        // Non-let acquisitions live to the end of the statement only, so
+        // two consecutive statement temporaries never overlap.
+        let src = "fn a(s: &S) { *lock_recover(&s.p) += 1; *lock_recover(&s.q) += 1; }\n\
+                   fn b(s: &S) { *lock_recover(&s.q) += 1; *lock_recover(&s.p) += 1; }\n";
+        assert!(run(&[("rust/src/m/fx.rs", src)]).is_empty());
+    }
+
+    #[test]
+    fn spawned_closures_are_fresh_contexts() {
+        // The closure body runs on another thread: a lock taken inside it
+        // is not acquired-while-holding the spawner's guard.
+        let src = "fn a(s: &S) { let x = lock_recover(&s.p); spawn(move || { let y = lock_recover(&s.q); y.t(); }); x.t(); }\n\
+                   fn b(s: &S) { let y = lock_recover(&s.q); let x = lock_recover(&s.p); x.t(*y); }\n";
+        assert!(run(&[("rust/src/m/fx.rs", src)]).is_empty());
+    }
+}

@@ -16,9 +16,11 @@
 //! - [`RULES`] names every rule; `// lint:allow(rule: reason)` on the
 //!   flagged line or the two lines above it suppresses a finding.
 
+pub mod analyze;
 pub mod lexer;
 pub mod rules;
 
+pub use analyze::{analyze_sources, ANALYZE_RULES};
 pub use rules::{lint_sources, Finding, RULES};
 
 use std::io;
@@ -66,6 +68,19 @@ pub fn lint_paths(paths: &[PathBuf]) -> io::Result<Vec<Finding>> {
         corpus.push((f, src));
     }
     Ok(lint_sources(&corpus))
+}
+
+/// Walk `paths`, read every `.rs` file, and run the concurrency pass
+/// (`opdr-lint analyze`: lock-order, rank-table-sync, atomic-ordering,
+/// unbounded-channel) over the corpus.
+pub fn analyze_paths(paths: &[PathBuf]) -> io::Result<Vec<Finding>> {
+    let files = collect_rs_files(paths)?;
+    let mut corpus = Vec::with_capacity(files.len());
+    for f in files {
+        let src = std::fs::read_to_string(&f)?;
+        corpus.push((f, src));
+    }
+    Ok(analyze_sources(&corpus))
 }
 
 #[cfg(test)]

@@ -2,12 +2,17 @@
 //!
 //! ```text
 //! opdr-lint [--list-rules] [PATH ...]
+//! opdr-lint analyze [PATH ...]
 //! ```
 //!
-//! With no paths, lints the repo's default scope — `rust/src`, `rust/tests`,
-//! `rust/benches` — resolved against the current directory (also works when
-//! invoked from inside `rust/`). Exits non-zero when any rule fires; every
-//! finding is printed as `file:line: [rule] message`.
+//! With no paths, the default lint scope is `rust/src`, `rust/tests`,
+//! `rust/benches` resolved against the current directory (also works when
+//! invoked from inside `rust/`). `analyze` runs the concurrency pass
+//! (lock-order, rank-table-sync, atomic-ordering, unbounded-channel); its
+//! default scope is `rust/src` only — the test suites deliberately
+//! construct inversions and poisonings for the runtime sentinel to catch.
+//! Exits non-zero when any rule fires; every finding is printed as
+//! `file:line: [rule] message`.
 
 use std::path::PathBuf;
 use std::process::ExitCode;
@@ -26,19 +31,38 @@ fn default_scope() -> Vec<PathBuf> {
     here
 }
 
+fn analyze_scope() -> Vec<PathBuf> {
+    let here = PathBuf::from("rust/src");
+    if here.is_dir() {
+        return vec![here];
+    }
+    let nested = PathBuf::from("src");
+    if nested.is_dir() {
+        return vec![nested];
+    }
+    vec![here]
+}
+
 fn main() -> ExitCode {
     let mut paths: Vec<PathBuf> = Vec::new();
-    for arg in std::env::args().skip(1) {
+    let mut analyze = false;
+    for (i, arg) in std::env::args().skip(1).enumerate() {
         match arg.as_str() {
+            "analyze" if i == 0 => analyze = true,
             "--list-rules" => {
                 for (name, summary) in opdr_lint::RULES {
                     println!("{name}: {summary}");
+                }
+                for (name, summary) in opdr_lint::ANALYZE_RULES {
+                    println!("{name}: {summary} (via `opdr-lint analyze`)");
                 }
                 return ExitCode::SUCCESS;
             }
             "--help" | "-h" => {
                 println!("usage: opdr-lint [--list-rules] [PATH ...]");
+                println!("       opdr-lint analyze [PATH ...]");
                 println!("lints PATHs (default: rust/src rust/tests rust/benches);");
+                println!("`analyze` runs the concurrency pass (default: rust/src);");
                 println!("exits 1 if any repo-invariant rule fires.");
                 return ExitCode::SUCCESS;
             }
@@ -46,7 +70,7 @@ fn main() -> ExitCode {
         }
     }
     if paths.is_empty() {
-        paths = default_scope();
+        paths = if analyze { analyze_scope() } else { default_scope() };
     }
     // Tolerate a missing bench/test dir, but not a typoed explicit path.
     let existing: Vec<PathBuf> = paths.iter().filter(|p| p.exists()).cloned().collect();
@@ -58,9 +82,14 @@ fn main() -> ExitCode {
         eprintln!("opdr-lint: warning: skipping missing path {}", missing.display());
     }
 
-    match opdr_lint::lint_paths(&existing) {
+    let (result, nrules) = if analyze {
+        (opdr_lint::analyze_paths(&existing), opdr_lint::ANALYZE_RULES.len())
+    } else {
+        (opdr_lint::lint_paths(&existing), opdr_lint::RULES.len())
+    };
+    match result {
         Ok(findings) if findings.is_empty() => {
-            println!("opdr-lint: clean ({} rules)", opdr_lint::RULES.len());
+            println!("opdr-lint: clean ({nrules} rules)");
             ExitCode::SUCCESS
         }
         Ok(findings) => {

@@ -74,8 +74,8 @@ pub const RULES: &[(&str, &str)] = &[
 pub struct SourceFile {
     pub path: PathBuf,
     /// Path with `/` separators, for suffix-based scoping.
-    norm: String,
-    lexed: Lexed,
+    pub(crate) norm: String,
+    pub(crate) lexed: Lexed,
     /// rule name -> comment lines carrying a `lint:allow` for it.
     allows: HashMap<String, Vec<usize>>,
 }
@@ -92,13 +92,13 @@ impl SourceFile {
         SourceFile { path, norm, lexed, allows }
     }
 
-    fn toks(&self) -> &[Tok] {
+    pub(crate) fn toks(&self) -> &[Tok] {
         &self.lexed.tokens
     }
 
     /// Is a finding of `rule` at `line` suppressed by a `lint:allow` on the
     /// same line or within the two lines above it?
-    fn allowed(&self, rule: &str, line: usize) -> bool {
+    pub(crate) fn allowed(&self, rule: &str, line: usize) -> bool {
         self.allows
             .get(rule)
             .map(|lines| lines.iter().any(|&l| l <= line && line <= l + 2))
@@ -166,15 +166,15 @@ pub fn lint_sources(files: &[(PathBuf, String)]) -> Vec<Finding> {
 // token helpers
 // ---------------------------------------------------------------------------
 
-fn is_punct(t: Option<&Tok>, c: &str) -> bool {
+pub(crate) fn is_punct(t: Option<&Tok>, c: &str) -> bool {
     matches!(t, Some(t) if t.kind == TokKind::Punct && t.text == c)
 }
 
-fn is_ident(t: Option<&Tok>, name: &str) -> bool {
+pub(crate) fn is_ident(t: Option<&Tok>, name: &str) -> bool {
     matches!(t, Some(t) if t.kind == TokKind::Ident && t.text == name)
 }
 
-fn ident_text(t: Option<&Tok>) -> Option<&str> {
+pub(crate) fn ident_text(t: Option<&Tok>) -> Option<&str> {
     match t {
         Some(t) if t.kind == TokKind::Ident => Some(&t.text),
         _ => None,
@@ -182,7 +182,7 @@ fn ident_text(t: Option<&Tok>) -> Option<&str> {
 }
 
 /// Index of the `)`/`]`/`}` matching the opener at `open`, if any.
-fn matching_close(toks: &[Tok], open: usize) -> Option<usize> {
+pub(crate) fn matching_close(toks: &[Tok], open: usize) -> Option<usize> {
     let (o, c) = match toks[open].text.as_str() {
         "(" => ("(", ")"),
         "[" => ("[", "]"),
@@ -206,7 +206,7 @@ fn matching_close(toks: &[Tok], open: usize) -> Option<usize> {
 }
 
 /// Nesting delta contributed by a punct token (any bracket flavour).
-fn depth_delta(t: &Tok) -> isize {
+pub(crate) fn depth_delta(t: &Tok) -> isize {
     if t.kind != TokKind::Punct {
         return 0;
     }
@@ -458,6 +458,19 @@ fn no_blanket_allow(f: &SourceFile) -> Vec<Finding> {
                 line: toks[i].line,
                 msg: "blanket `#[allow(warnings|unused|dead_code|clippy::all)]` defeats the \
                       `-D warnings` CI gate; allow the one specific lint instead"
+                    .to_string(),
+            });
+        }
+        // The tracked `too_many_arguments` allows were all retired via
+        // params-struct refactors (AdminCtx / IvfParams / PqShape); new
+        // ones are rejected — bundle the arguments instead.
+        if has("too_many_arguments") {
+            out.push(Finding {
+                rule: NO_BLANKET_ALLOW,
+                file: f.path.clone(),
+                line: toks[i].line,
+                msg: "`#[allow(clippy::too_many_arguments)]` is retired in this tree; \
+                      group the parameters into a context/params struct instead"
                     .to_string(),
             });
         }
@@ -814,7 +827,17 @@ mod tests {
             rules_of(&run_one("src/x.rs", "#[allow(warnings)]\nfn f() {}")),
             [NO_BLANKET_ALLOW]
         );
-        let scoped = "#[allow(clippy::too_many_arguments)]\nfn f(a: u8, b: u8) {}";
+        // The retired-lint class: every tracked `too_many_arguments` allow
+        // was removed via params-struct refactors, and new ones are rejected.
+        assert_eq!(
+            rules_of(&run_one(
+                "src/x.rs",
+                "#[allow(clippy::too_many_arguments)]\nfn f(a: u8, b: u8) {}"
+            )),
+            [NO_BLANKET_ALLOW]
+        );
+        // Other item-scoped allows stay clean.
+        let scoped = "#[allow(clippy::needless_range_loop)]\nfn f(a: u8, b: u8) {}";
         assert!(run_one("src/x.rs", scoped).is_empty());
     }
 
